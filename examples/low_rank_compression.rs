@@ -1,0 +1,56 @@
+//! Model compression by per-frequency low-rank truncation (§II-c:
+//! Jaderberg / Zhang / Denton line of work, done exactly via the LFA SVD).
+//!
+//! Sweeps the rank of every conv layer of a VGG-style model and prints the
+//! storage-vs-accuracy trade-off curve (Eckart–Young-optimal per rank).
+//!
+//! ```sh
+//! cargo run --release --example low_rank_compression
+//! ```
+
+use conv_svd_lfa::lfa::LfaOptions;
+use conv_svd_lfa::model::zoo;
+use conv_svd_lfa::report::Table;
+use conv_svd_lfa::spectral::lowrank;
+
+fn main() {
+    let model = zoo::vgg_small();
+    println!("rank sweep over `{}` ({} layers)\n", model.name, model.layers.len());
+
+    let mut table = Table::new(["layer", "c_in→c_out", "rank", "rel. error", "storage ratio"]);
+    let mut chosen = Vec::new();
+    for layer in &model.layers {
+        let kernel = layer.materialize(model.seed);
+        let sweep = lowrank::rank_sweep(&kernel, layer.height, layer.width, LfaOptions::default());
+        // Pick the smallest rank with ≤ 5% relative error — a typical
+        // compression operating point.
+        let pick = sweep.iter().find(|(_, err, _)| *err <= 0.05).unwrap_or(sweep.last().unwrap());
+        for &(r, err, storage) in &sweep {
+            let marker = if r == pick.0 { "*" } else { "" };
+            table.row([
+                format!("{}{marker}", layer.name),
+                format!("{}→{}", layer.c_in, layer.c_out),
+                r.to_string(),
+                format!("{err:.4}"),
+                format!("{storage:.3}"),
+            ]);
+        }
+        chosen.push((layer.name.clone(), pick.0, pick.1, pick.2));
+    }
+    print!("{}", table.render());
+
+    println!("\nchosen operating points (≤5% relative error):");
+    let mut total_ratio = 0.0;
+    for (name, rank, err, storage) in &chosen {
+        println!("  {name:<10} rank {rank:>2}  err {err:.3}  storage {storage:.3}");
+        total_ratio += storage;
+    }
+    let mean = total_ratio / chosen.len() as f64;
+    println!("mean storage ratio at the operating points: {mean:.3} (1.0 = dense symbols)");
+    // Random He-init layers are near-isotropic, so aggressive compression
+    // needs most of the spectrum; trained CNNs (low-rank-biased) compress
+    // far better — this example validates the machinery + the trade-off
+    // curve shape, not a specific compression factor.
+    assert!(chosen.iter().all(|(_, _, err, _)| *err <= 0.05 + 1e-12));
+    println!("\nlow_rank_compression OK");
+}

@@ -1,0 +1,88 @@
+//! Exact pseudo-inversion of a convolution via the LFA SVD — the
+//! pseudo-invertible-network application (§II-c, Bolluyt & Comaniciu 2024):
+//! instead of their approximate layer restructuring, `A⁺ = V Σ⁺ Uᴴ` per
+//! frequency gives the exact Moore–Penrose inverse.
+//!
+//! Demonstrated as image deconvolution: blur a synthetic image with a
+//! random conv, recover it with `A⁺`, report PSNR; plus the channel-lifting
+//! round-trip (`A⁺A = I` for tall operators).
+//!
+//! ```sh
+//! cargo run --release --example pseudo_inverse
+//! ```
+
+use conv_svd_lfa::conv::{Boundary, ConvKernel, ConvOp};
+use conv_svd_lfa::lfa::LfaOptions;
+use conv_svd_lfa::numeric::Pcg64;
+use conv_svd_lfa::spectral::{pinv, FreqOperator};
+
+fn main() {
+    // --- deconvolution: square full-rank 3-channel "image" operator ---
+    let (n, c) = (32, 3);
+    let mut rng = Pcg64::seeded(11);
+    let blur = ConvKernel::random_he(c, c, 3, 3, &mut rng);
+
+    // Synthetic image: smooth gradient + checker pattern per channel.
+    let mut image = vec![0.0f64; n * n * c];
+    for y in 0..n {
+        for x in 0..n {
+            for ch in 0..c {
+                let v = (y as f64 / n as f64)
+                    + 0.3 * (((x / 4 + y / 4) % 2) as f64)
+                    + 0.1 * ch as f64;
+                image[(y * n + x) * c + ch] = v;
+            }
+        }
+    }
+
+    let op = ConvOp::new(&blur, n, n, Boundary::Periodic);
+    let blurred = op.forward(&image);
+
+    let inv = pinv::pseudo_inverse(&blur, n, n, 1e-10, LfaOptions::default());
+    println!(
+        "pseudo-inverse built: {} singular values zeroed at rcond {:.0e}",
+        inv.null_count, inv.rcond
+    );
+    let recovered = FreqOperator::new(&inv.grid).apply(&blurred);
+
+    let mse: f64 = image
+        .iter()
+        .zip(&recovered)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        / image.len() as f64;
+    let peak = image.iter().cloned().fold(0.0, f64::max);
+    let psnr = 10.0 * (peak * peak / mse).log10();
+    println!("deconvolution PSNR: {psnr:.1} dB (exact inverse: limited only by FP)");
+    assert!(psnr > 100.0, "exact pseudo-inverse should be FP-exact; got {psnr} dB");
+
+    // --- channel lifting: tall operator (3 → 8 channels), A⁺A = I ---
+    let lift = ConvKernel::random_he(8, 3, 3, 3, &mut rng);
+    let lop = ConvOp::new(&lift, n, n, Boundary::Periodic);
+    let lifted = lop.forward(&image);
+    let lift_inv = pinv::pseudo_inverse(&lift, n, n, 1e-10, LfaOptions::default());
+    let back = FreqOperator::new(&lift_inv.grid).apply(&lifted);
+    let worst = image.iter().zip(&back).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+    println!("channel-lift round-trip (3→8→3): max |Δ| = {worst:.2e}");
+    assert!(worst < 1e-8);
+
+    // --- rank-deficient case: rcond actually guards the inversion ---
+    let mut degenerate = ConvKernel::random_he(2, 2, 3, 3, &mut rng);
+    for i in 0..2 {
+        for r in 0..3 {
+            for cc in 0..3 {
+                let v = degenerate.get(0, i, r, cc);
+                degenerate.set(1, i, r, cc, v); // duplicate output channel
+            }
+        }
+    }
+    let dinv = pinv::pseudo_inverse(&degenerate, 8, 8, 1e-8, LfaOptions::default());
+    println!(
+        "degenerate operator: {} of {} values treated as null (pinv stays bounded)",
+        dinv.null_count,
+        8 * 8 * 2
+    );
+    assert_eq!(dinv.null_count, 64, "one null direction per frequency");
+
+    println!("\npseudo_inverse OK");
+}

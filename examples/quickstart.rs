@@ -1,0 +1,57 @@
+//! Quickstart: compute the full SVD spectrum of one convolutional layer
+//! with LFA and sanity-check it against the FFT baseline and the
+//! Frobenius identity.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use conv_svd_lfa::baselines::fft_svd::{self, FftLayoutPolicy};
+use conv_svd_lfa::conv::ConvKernel;
+use conv_svd_lfa::lfa::{self, LfaOptions};
+use conv_svd_lfa::numeric::Pcg64;
+use conv_svd_lfa::report::{commas, secs};
+
+fn main() {
+    // A 16→16-channel 3×3 convolution on a 64×64 feature map — the paper's
+    // benchmark shape (§IV).
+    let (n, c) = (64, 16);
+    let mut rng = Pcg64::seeded(2025);
+    let kernel = ConvKernel::random_he(c, c, 3, 3, &mut rng);
+
+    println!("LFA SVD of a {c}x{c}x3x3 convolution on a {n}x{n} grid");
+    println!("(the unrolled matrix would be {} x {} — never materialized)\n",
+        commas((n * n * c) as u128), commas((n * n * c) as u128));
+
+    // --- the one-call API ---
+    let t0 = std::time::Instant::now();
+    let spectrum = lfa::singular_values(&kernel, n, n, LfaOptions::default());
+    let t_lfa = t0.elapsed();
+
+    println!("{} singular values in {}", commas(spectrum.num_values() as u128), secs(t_lfa));
+    println!("  σ_max     = {:.6}  (spectral norm / Lipschitz constant)", spectrum.sigma_max());
+    println!("  σ_min     = {:.6}", spectrum.sigma_min());
+    println!("  condition = {:.2}", spectrum.condition_number());
+
+    let sorted = spectrum.sorted_desc();
+    println!("  largest 5: {:?}", &sorted[..5].iter().map(|v| (v * 1e4).round() / 1e4).collect::<Vec<_>>());
+
+    // --- cross-check vs the FFT route (Sedghi et al. 2019) ---
+    let t0 = std::time::Instant::now();
+    let fft = fft_svd::singular_values(&kernel, n, n, FftLayoutPolicy::Natural, 1);
+    let t_fft = t0.elapsed();
+    let worst = spectrum
+        .sorted_desc()
+        .iter()
+        .zip(fft.sorted_desc())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max);
+    println!("\nFFT baseline: {} (LFA {}) — max |Δσ| = {worst:.2e}", secs(t_fft), secs(t_lfa));
+
+    // --- invariant: Σσ² == n²·‖W‖²_F ---
+    let defect = lfa::svd::frobenius_check(&kernel, n, n, &spectrum);
+    println!("Frobenius identity defect: {defect:.2e}");
+    assert!(defect < 1e-10);
+    assert!(worst < 1e-9);
+    println!("\nquickstart OK");
+}

@@ -1,0 +1,89 @@
+"""AOT lowering: JAX/Pallas pipeline -> HLO *text* artifacts for the rust
+PJRT runtime.
+
+HLO text (NOT ``lowered.compile()`` / ``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser on
+the rust side reassigns ids and round-trips cleanly.  Same recipe as
+/opt/xla-example/gen_hlo.py.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+Emits one ``<name>.hlo.txt`` per config plus ``manifest.txt`` with the
+static shapes the rust runtime needs.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import SpectrumConfig, spectrum_fn
+
+# Artifact configs. tile_rows > 0 makes the artifact cover one frequency-row
+# tile per execution (the coordinator fans these out across workers);
+# tile_rows == 0 bakes the whole grid into a single call.
+CONFIGS = [
+    SpectrumConfig(n=8, m=8, c_out=4, c_in=4),
+    SpectrumConfig(n=16, m=16, c_out=8, c_in=8),
+    SpectrumConfig(n=16, m=16, c_out=16, c_in=16),
+    SpectrumConfig(n=32, m=32, c_out=16, c_in=16),
+    # Tiled variant: 4 frequency rows per execution, shardable across workers.
+    SpectrumConfig(n=32, m=32, c_out=16, c_in=16, tile_rows=4),
+    SpectrumConfig(n=64, m=64, c_out=16, c_in=16, tile_rows=8),
+    # Non-square channel counts exercise the Gram-side swap.
+    SpectrumConfig(n=16, m=16, c_out=8, c_in=16),
+    SpectrumConfig(n=16, m=16, c_out=16, c_in=8),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: the default HLO printer elides constants with >= 16 elements
+    # as "{...}", and xla_extension 0.5.1's text parser silently reads those
+    # as ZEROS (no error!). Any traced constant table -- e.g. the Jacobi
+    # pair schedule -- would be corrupted. print_metadata must be off too:
+    # the new printer emits source_end_line attributes the old parser
+    # rejects.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def lower_config(cfg: SpectrumConfig) -> str:
+    w_spec = jax.ShapeDtypeStruct((cfg.c_out, cfg.c_in, cfg.kh, cfg.kw), jnp.float32)
+    off_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    lowered = jax.jit(spectrum_fn(cfg, interpret=True)).lower(w_spec, off_spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest_lines = []
+    for cfg in CONFIGS:
+        fname = cfg.name + ".hlo.txt"
+        path = os.path.join(args.out, fname)
+        text = lower_config(cfg)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(
+            f"{cfg.name} n={cfg.n} m={cfg.m} c_out={cfg.c_out} c_in={cfg.c_in} "
+            f"kh={cfg.kh} kw={cfg.kw} tile_rows={cfg.rows} rank={cfg.rank} "
+            f"sweeps={cfg.sweeps} file={fname}"
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote manifest with {len(manifest_lines)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

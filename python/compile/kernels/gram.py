@@ -1,0 +1,75 @@
+"""Layer-1 Pallas kernel: batched Hermitian Gram matrices.
+
+Given per-frequency symbols ``B_k`` (``c_out x c_in``, complex as re/im
+planes), compute ``G_k = B_k^H B_k`` (or ``B_k B_k^H`` when ``c_out < c_in``
+— the smaller Gram side).  ``G_k`` is Hermitian PSD with ``sigma(B_k) =
+sqrt(lambda(G_k))``; the L2 model feeds it to the pure-HLO Jacobi
+eigensolver.
+
+Complex expansion with real matmuls (weights of the MXU):
+  Re(G) = Br^T Br + Bi^T Bi
+  Im(G) = Br^T Bi - Bi^T Br
+
+The frequency axis is the batch; each grid step processes ``TILE_B``
+frequencies with all four small matmuls fused in VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_B = 64
+
+
+def _gram_kernel(b_re_ref, b_im_ref, g_re_ref, g_im_ref):
+    br = b_re_ref[...]  # [TB, co, ci]
+    bi = b_im_ref[...]
+    # Batched B^H B via dot_general over the batch dim.
+    dn = (((1,), (1,)), ((0,), (0,)))  # contract co, batch TB
+    rr = jax.lax.dot_general(br, br, dn, preferred_element_type=jnp.float32)
+    ii = jax.lax.dot_general(bi, bi, dn, preferred_element_type=jnp.float32)
+    ri = jax.lax.dot_general(br, bi, dn, preferred_element_type=jnp.float32)
+    ir = jax.lax.dot_general(bi, br, dn, preferred_element_type=jnp.float32)
+    g_re_ref[...] = rr + ii
+    g_im_ref[...] = ri - ir
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_b"))
+def gram(b_re, b_im, *, interpret=True, tile_b=TILE_B):
+    """Batched Hermitian Gram ``G = B^H B``.
+
+    Args:
+      b_re, b_im: ``[F, c_out, c_in]`` symbol planes.
+
+    Returns:
+      ``(g_re, g_im)`` of shape ``[F, c_in, c_in]``.
+    """
+    f, co, ci = b_re.shape
+    tile = min(tile_b, f)
+    f_pad = -(-f // tile) * tile
+    if f_pad != f:
+        pad = ((0, f_pad - f), (0, 0), (0, 0))
+        b_re = jnp.pad(b_re, pad)
+        b_im = jnp.pad(b_im, pad)
+    grid = (f_pad // tile,)
+    out_shape = [
+        jax.ShapeDtypeStruct((f_pad, ci, ci), jnp.float32),
+        jax.ShapeDtypeStruct((f_pad, ci, ci), jnp.float32),
+    ]
+    g_re, g_im = pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, co, ci), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile, co, ci), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, ci, ci), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile, ci, ci), lambda i: (i, 0, 0)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(b_re, b_im)
+    return g_re[:f], g_im[:f]

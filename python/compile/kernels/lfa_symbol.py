@@ -1,0 +1,86 @@
+"""Layer-1 Pallas kernel: LFA symbol construction.
+
+The symbol of a convolution at frequency ``k`` is
+``A_k = sum_y M_y e^{2 pi i <k, y>}``.  Stacking all ``F = n*m`` frequencies
+and flattening the taps, this is a single real-valued contraction
+
+    B[f, p] = sum_t P[f, t] * W[p, t]        (p = o*c_in + i, t = tap index)
+
+split into real/imaginary planes (the CPU PJRT plugin is happiest with f32,
+and on TPU this shape feeds the MXU directly: an ``F x T`` by ``T x C``
+matmul tiled along ``F``).
+
+Hardware adaptation (DESIGN.md section Hardware-Adaptation): the paper runs
+on CPU/NumPy; here the frequency grid is tiled via ``BlockSpec`` so each
+grid step holds ``TILE_F x T`` phases + the full ``C x T`` weight panel in
+VMEM, and the contraction is MXU-shaped.  ``interpret=True`` everywhere on
+CPU (Mosaic custom-calls cannot run on the CPU plugin).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default frequency-tile height. 128 rows x (T<=25 taps) x 4 bytes is tiny;
+# the tile is sized so that B-tiles (TILE_F x C) stay well under VMEM even
+# for c=64 (128*4096*4 = 2 MiB/plane).
+TILE_F = 128
+
+
+def _symbol_kernel(p_re_ref, p_im_ref, w_ref, b_re_ref, b_im_ref):
+    """One frequency tile: B_tile = P_tile @ W^T (re and im planes)."""
+    p_re = p_re_ref[...]
+    p_im = p_im_ref[...]
+    w = w_ref[...]  # [C, T]
+    # Real contraction twice: weights are real, so re/im separate cleanly.
+    b_re_ref[...] = jnp.dot(p_re, w.T, preferred_element_type=jnp.float32)
+    b_im_ref[...] = jnp.dot(p_im, w.T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_f"))
+def lfa_symbol(p_re, p_im, w_flat, *, interpret=True, tile_f=TILE_F):
+    """Compute symbol planes.
+
+    Args:
+      p_re, p_im: ``[F, T]`` phase tables ``e^{2 pi i <k, y_t>}`` split into
+        real/imag parts.
+      w_flat: ``[C, T]`` weight tensor flattened to (c_out*c_in, taps).
+      interpret: run the Pallas kernel in interpret mode (required on CPU).
+      tile_f: frequency-tile height (static).
+
+    Returns:
+      ``(b_re, b_im)`` of shape ``[F, C]``.
+    """
+    f, t = p_re.shape
+    c = w_flat.shape[0]
+    assert w_flat.shape[1] == t, (w_flat.shape, t)
+    tile = min(tile_f, f)
+    # Pad F to a multiple of the tile so the grid divides evenly.
+    f_pad = -(-f // tile) * tile
+    if f_pad != f:
+        pad = ((0, f_pad - f), (0, 0))
+        p_re = jnp.pad(p_re, pad)
+        p_im = jnp.pad(p_im, pad)
+    grid = (f_pad // tile,)
+    out_shape = [
+        jax.ShapeDtypeStruct((f_pad, c), jnp.float32),
+        jax.ShapeDtypeStruct((f_pad, c), jnp.float32),
+    ]
+    b_re, b_im = pl.pallas_call(
+        _symbol_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, t), lambda i: (i, 0)),
+            pl.BlockSpec((tile, t), lambda i: (i, 0)),
+            pl.BlockSpec((c, t), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, c), lambda i: (i, 0)),
+            pl.BlockSpec((tile, c), lambda i: (i, 0)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(p_re, p_im, w_flat)
+    return b_re[:f], b_im[:f]

@@ -1,0 +1,83 @@
+"""Pure-jnp/numpy correctness oracles for the Pallas kernels and L2 pipeline.
+
+Everything here may use ``np.linalg`` freely: references run only at build
+time under pytest, never inside an AOT artifact (jax>=0.5 lowers linalg to
+``lapack_*_ffi`` custom calls that xla_extension 0.5.1 cannot execute).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def phase_matrix(n, m, kh, kw, anchor=None, row_offset=0, rows=None):
+    """``[rows*m, kh*kw]`` complex phase table ``e^{2 pi i <k, y_t>}``.
+
+    Frequencies are ``k = (i/n, j/m)`` for grid rows ``i`` in
+    ``[row_offset, row_offset+rows)`` and all ``j``; taps are row-major with
+    displacements relative to ``anchor`` (default: centered).
+    """
+    if anchor is None:
+        anchor = (kh // 2, kw // 2)
+    if rows is None:
+        rows = n
+    ar, ac = anchor
+    ii = np.arange(row_offset, row_offset + rows)
+    jj = np.arange(m)
+    dy = np.arange(kh) - ar
+    dx = np.arange(kw) - ac
+    # [rows, kh] and [m, kw] separable phases
+    py = np.exp(2j * np.pi * np.outer(ii, dy) / n)
+    px = np.exp(2j * np.pi * np.outer(jj, dx) / m)
+    # combine: [rows, m, kh, kw] -> [rows*m, kh*kw]
+    p = py[:, None, :, None] * px[None, :, None, :]
+    return p.reshape(rows * m, kh * kw)
+
+
+def symbol_ref(w, n, m, row_offset=0, rows=None):
+    """Reference symbols ``[F, c_out, c_in]`` (complex) for OIHW weights."""
+    c_out, c_in, kh, kw = w.shape
+    p = phase_matrix(n, m, kh, kw, row_offset=row_offset, rows=rows)
+    w_flat = np.asarray(w).reshape(c_out * c_in, kh * kw)
+    b = p @ w_flat.T  # [F, C]
+    return b.reshape(p.shape[0], c_out, c_in)
+
+
+def gram_ref(b):
+    """Reference Gram ``B^H B`` for ``[F, c_out, c_in]`` complex symbols."""
+    return np.einsum("foi,foj->fij", np.conj(b), b)
+
+
+def singular_values_ref(w, n, m):
+    """Reference spectrum via numpy SVD of the symbols: ``[F, r]`` desc."""
+    b = symbol_ref(w, n, m)
+    return np.linalg.svd(b, compute_uv=False)  # numpy returns descending
+
+
+def singular_values_explicit(w, n, m, periodic=True):
+    """Ground truth from the explicit unrolled matrix (small sizes only)."""
+    c_out, c_in, kh, kw = w.shape
+    ar, ac = kh // 2, kw // 2
+    a = np.zeros((n * m * c_out, n * m * c_in))
+    for xr in range(n):
+        for xc in range(m):
+            for r in range(kh):
+                for c in range(kw):
+                    sr, sc = xr + r - ar, xc + c - ac
+                    if periodic:
+                        sr, sc = sr % n, sc % m
+                    elif not (0 <= sr < n and 0 <= sc < m):
+                        continue
+                    dst = xr * m + xc
+                    src = sr * m + sc
+                    a[dst * c_out:(dst + 1) * c_out,
+                      src * c_in:(src + 1) * c_in] += w[:, :, r, c]
+    return np.linalg.svd(a, compute_uv=False)
+
+
+def jacobi_eigvals_ref(g):
+    """Reference eigenvalues (descending) of batched Hermitian ``g``."""
+    return np.linalg.eigvalsh(g)[..., ::-1]
+
+
+def as_f32(x):
+    return jnp.asarray(x, dtype=jnp.float32)

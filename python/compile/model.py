@@ -1,0 +1,215 @@
+"""Layer-2 JAX model: the LFA spectrum pipeline that gets AOT-lowered.
+
+Pipeline (all shapes static, chosen at lowering time):
+
+    weights [c_out, c_in, kh, kw] f32, row_offset i32
+      -> traced phase tables for the frequency-row tile
+      -> Pallas symbol kernel      (kernels.lfa_symbol)
+      -> Pallas Gram kernel        (kernels.gram)
+      -> pure-HLO batched Hermitian Jacobi eigensolver (below)
+      -> singular values [tile_rows*m, r] f32, descending per frequency
+
+Constraints honoured here (see DESIGN.md):
+  * NO ``jnp.linalg.*`` / ``jnp.fft`` — those lower to jaxlib FFI custom
+    calls that xla_extension 0.5.1 (the rust runtime) cannot execute. The
+    eigensolver is hand-written from rotations, so the artifact is plain HLO.
+  * Complex numbers are carried as (re, im) f32 pairs end-to-end.
+  * ``row_offset`` makes the artifact *tileable*: the rust coordinator runs
+    the same executable for each frequency-row tile of the grid
+    ("embarrassingly parallel", paper section V).
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.gram import gram
+from .kernels.lfa_symbol import lfa_symbol
+
+
+class SpectrumConfig(NamedTuple):
+    """Static configuration of one AOT artifact."""
+
+    n: int
+    m: int
+    c_out: int
+    c_in: int
+    kh: int = 3
+    kw: int = 3
+    tile_rows: int = 0  # 0 = whole grid in one call
+    sweeps: int = 12
+
+    @property
+    def rows(self):
+        return self.tile_rows if self.tile_rows else self.n
+
+    @property
+    def freqs(self):
+        return self.rows * self.m
+
+    @property
+    def rank(self):
+        return min(self.c_out, self.c_in)
+
+    @property
+    def name(self):
+        return (
+            f"lfa_spectrum_n{self.n}x{self.m}_c{self.c_out}x{self.c_in}"
+            f"_k{self.kh}x{self.kw}_t{self.rows}"
+        )
+
+
+def _cmul(ar, ai, br, bi):
+    """Complex multiply on (re, im) pairs."""
+    return ar * br - ai * bi, ar * bi + ai * br
+
+
+def traced_phases(cfg: SpectrumConfig, row_offset):
+    """Phase tables ``[F, T]`` (re, im) for frequency rows
+    ``[row_offset, row_offset + rows)`` — built from iota so the artifact can
+    be re-targeted at any tile at runtime."""
+    ar, ac = cfg.kh // 2, cfg.kw // 2
+    ii = row_offset.astype(jnp.float32) + jnp.arange(cfg.rows, dtype=jnp.float32)
+    jj = jnp.arange(cfg.m, dtype=jnp.float32)
+    dy = jnp.arange(cfg.kh, dtype=jnp.float32) - ar
+    dx = jnp.arange(cfg.kw, dtype=jnp.float32) - ac
+    ay = 2.0 * jnp.pi * jnp.outer(ii, dy) / cfg.n  # [rows, kh]
+    axx = 2.0 * jnp.pi * jnp.outer(jj, dx) / cfg.m  # [m, kw]
+    py_re, py_im = jnp.cos(ay), jnp.sin(ay)
+    px_re, px_im = jnp.cos(axx), jnp.sin(axx)
+    # outer complex product -> [rows, m, kh, kw]
+    pre = (
+        py_re[:, None, :, None] * px_re[None, :, None, :]
+        - py_im[:, None, :, None] * px_im[None, :, None, :]
+    )
+    pim = (
+        py_re[:, None, :, None] * px_im[None, :, None, :]
+        + py_im[:, None, :, None] * px_re[None, :, None, :]
+    )
+    t = cfg.kh * cfg.kw
+    return pre.reshape(cfg.freqs, t), pim.reshape(cfg.freqs, t)
+
+
+def _pair_schedule(r):
+    """Static cyclic pair schedule [(p, q) ...] for r x r Jacobi."""
+    return np.array([(p, q) for p in range(r - 1) for q in range(p + 1, r)], dtype=np.int32)
+
+
+def jacobi_eigvals(g_re, g_im, sweeps):
+    """Batched Hermitian Jacobi eigenvalues in pure HLO.
+
+    Compact rotation loop (`lax.fori_loop` over sweeps x pairs) with
+    dynamic-index row/column updates. Two artifact-portability constraints
+    (discovered by stage-isolated debugging against xla_extension 0.5.1):
+
+    * no ``jnp.linalg`` (lowers to lapack FFI custom calls), and
+    * the AOT path must print HLO text with ``print_large_constants=True``
+      -- the default printer elides >=16-element constants as ``{...}``,
+      which the old HLO text parser silently reads as zeros (the pair
+      tables below are exactly such constants). See ``aot.to_hlo_text``.
+
+    Args:
+      g_re, g_im: ``[F, r, r]`` Hermitian matrices (im antisymmetric).
+      sweeps: fixed number of cyclic sweeps (static; 8-12 suffices for
+        r <= 32 in f32).
+
+    Returns:
+      ``[F, r]`` eigenvalues, descending.
+    """
+    f, r, _ = g_re.shape
+    if r == 1:
+        return g_re[:, :, 0]
+    schedule = _pair_schedule(r)
+    pairs = jnp.asarray(schedule)
+    npairs = schedule.shape[0]
+    tiny = jnp.float32(1e-30)
+
+    def rotate(t, carry):
+        g_re, g_im = carry
+        idx = t % npairs
+        p = pairs[idx, 0]
+        q = pairs[idx, 1]
+        app = g_re[:, p, p]
+        aqq = g_re[:, q, q]
+        apq_re = g_re[:, p, q]
+        apq_im = g_im[:, p, q]
+        mag = jnp.sqrt(apq_re * apq_re + apq_im * apq_im)
+        safe = mag > (jnp.abs(app) + jnp.abs(aqq)) * jnp.float32(1e-9) + tiny
+        inv_mag = jnp.where(safe, 1.0 / jnp.maximum(mag, tiny), 0.0)
+        ph_re = jnp.where(safe, apq_re * inv_mag, 1.0)  # e^{i phi}
+        ph_im = jnp.where(safe, apq_im * inv_mag, 0.0)
+        tau = (aqq - app) * 0.5 * inv_mag
+        tt = jnp.sign(tau) / (jnp.abs(tau) + jnp.sqrt(1.0 + tau * tau))
+        tt = jnp.where(safe, tt, 0.0)
+        c = 1.0 / jnp.sqrt(1.0 + tt * tt)
+        s = c * tt
+        cb = c[:, None]
+        sb = s[:, None]
+        php = (ph_re[:, None], ph_im[:, None])  # e^{+i phi}
+        phm = (ph_re[:, None], -ph_im[:, None])  # e^{-i phi}
+
+        # Right-multiply by R2 = [[c, s e^{i phi}], [-s e^{-i phi}, c]]:
+        #   col_p' = c col_p - s e^{-i phi} col_q
+        #   col_q' = s e^{+i phi} col_p + c col_q
+        colp_re, colp_im = g_re[:, :, p], g_im[:, :, p]
+        colq_re, colq_im = g_re[:, :, q], g_im[:, :, q]
+        mq_re, mq_im = _cmul(phm[0], phm[1], colq_re, colq_im)
+        mp_re, mp_im = _cmul(php[0], php[1], colp_re, colp_im)
+        new_p_re = cb * colp_re - sb * mq_re
+        new_p_im = cb * colp_im - sb * mq_im
+        new_q_re = sb * mp_re + cb * colq_re
+        new_q_im = sb * mp_im + cb * colq_im
+        g_re = g_re.at[:, :, p].set(new_p_re).at[:, :, q].set(new_q_re)
+        g_im = g_im.at[:, :, p].set(new_p_im).at[:, :, q].set(new_q_im)
+
+        # Left-multiply by R2^H:
+        #   row_p' = c row_p - s e^{+i phi} row_q
+        #   row_q' = s e^{-i phi} row_p + c row_q
+        rowp_re, rowp_im = g_re[:, p, :], g_im[:, p, :]
+        rowq_re, rowq_im = g_re[:, q, :], g_im[:, q, :]
+        mq_re, mq_im = _cmul(php[0], php[1], rowq_re, rowq_im)
+        mp_re, mp_im = _cmul(phm[0], phm[1], rowp_re, rowp_im)
+        new_p_re = cb * rowp_re - sb * mq_re
+        new_p_im = cb * rowp_im - sb * mq_im
+        new_q_re = sb * mp_re + cb * rowq_re
+        new_q_im = sb * mp_im + cb * rowq_im
+        g_re = g_re.at[:, p, :].set(new_p_re).at[:, q, :].set(new_q_re)
+        g_im = g_im.at[:, p, :].set(new_p_im).at[:, q, :].set(new_q_im)
+        return g_re, g_im
+
+    g_re, g_im = jax.lax.fori_loop(0, sweeps * npairs, rotate, (g_re, g_im))
+    lam = jnp.sum(g_re * jnp.eye(r, dtype=g_re.dtype)[None], axis=2)
+    return -jnp.sort(-lam, axis=-1)
+
+
+def spectrum_fn(cfg: SpectrumConfig, interpret=True):
+    """Build the traced pipeline for a config. Returns ``f(w, row_offset)``
+    mapping OIHW weights + tile row offset to ``(sv [F, r],)``."""
+
+    def fn(w, row_offset):
+        t = cfg.kh * cfg.kw
+        p_re, p_im = traced_phases(cfg, row_offset)
+        w_flat = w.reshape(cfg.c_out * cfg.c_in, t).astype(jnp.float32)
+        b_re, b_im = lfa_symbol(p_re, p_im, w_flat, interpret=interpret)
+        b_re = b_re.reshape(cfg.freqs, cfg.c_out, cfg.c_in)
+        b_im = b_im.reshape(cfg.freqs, cfg.c_out, cfg.c_in)
+        if cfg.c_out < cfg.c_in:
+            # Use the smaller Gram side: G = B B^H = (B^H)^H (B^H) with
+            # B^H carried as (re^T, -im^T).
+            b_re = jnp.swapaxes(b_re, 1, 2)
+            b_im = -jnp.swapaxes(b_im, 1, 2)
+        g_re, g_im = gram(b_re, b_im, interpret=interpret)
+        lam = jacobi_eigvals(g_re, g_im, cfg.sweeps)
+        sv = jnp.sqrt(jnp.maximum(lam, 0.0))
+        return (sv,)
+
+    return fn
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def spectrum(w, row_offset, cfg: SpectrumConfig, interpret=True):
+    """Jitted convenience wrapper used by the pytest suite."""
+    return spectrum_fn(cfg, interpret=interpret)(w, row_offset)[0]

@@ -1,0 +1,63 @@
+"""AOT artifact regression tests.
+
+Guards the two interchange constraints that cost real debugging time (see
+EXPERIMENTS.md section Perf / artifact-format findings):
+  1. artifacts must not contain elided constants ("{...}" placeholders) --
+     xla_extension 0.5.1's parser silently reads them as ZEROS;
+  2. artifacts must not contain jaxlib FFI custom-calls (lapack_*_ffi,
+     ducc_fft) -- unexecutable on the rust runtime;
+  3. metadata attributes must be stripped (the old parser rejects
+     source_end_line).
+"""
+
+import re
+
+import pytest
+
+from compile.aot import lower_config, CONFIGS
+from compile.model import SpectrumConfig
+
+
+@pytest.fixture(scope="module")
+def small_artifact():
+    return lower_config(SpectrumConfig(n=8, m=8, c_out=4, c_in=4))
+
+
+def test_no_elided_constants(small_artifact):
+    assert "{...}" not in small_artifact, (
+        "HLO printer elided a large constant; xla_extension 0.5.1 parses it "
+        "as zeros. to_hlo_text must set print_large_constants=True."
+    )
+
+
+def test_no_ffi_custom_calls(small_artifact):
+    for pattern in ("custom-call", "lapack", "ducc"):
+        assert pattern not in small_artifact.lower(), (
+            f"artifact contains {pattern!r}: jnp.linalg/jnp.fft leaked into "
+            "the lowered pipeline"
+        )
+
+
+def test_no_metadata_attributes(small_artifact):
+    assert "source_end_line" not in small_artifact
+    assert "metadata=" not in small_artifact
+
+
+def test_artifact_is_parseable_hlo(small_artifact):
+    # Structural sanity: an entry computation with our parameter signature.
+    assert small_artifact.startswith("HloModule")
+    assert re.search(r"ENTRY\s", small_artifact)
+    assert "f32[4,4,3,3]" in small_artifact, "weights parameter"
+    assert "s32[]" in small_artifact, "row_offset parameter"
+
+
+def test_all_configs_have_unique_names():
+    names = [c.name for c in CONFIGS]
+    assert len(names) == len(set(names))
+
+
+def test_tiled_config_shapes():
+    tiled = [c for c in CONFIGS if c.tile_rows]
+    assert tiled, "manifest should include tiled artifacts for the scheduler"
+    for c in tiled:
+        assert c.n % c.tile_rows == 0, f"{c.name}: tile must divide grid"

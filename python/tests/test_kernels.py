@@ -1,0 +1,96 @@
+"""Pallas kernels vs pure-numpy oracles (the core L1 correctness signal)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gram import gram
+from compile.kernels.lfa_symbol import lfa_symbol
+
+
+def rand_weights(rng, c_out, c_in, kh=3, kw=3):
+    return rng.standard_normal((c_out, c_in, kh, kw)).astype(np.float32)
+
+
+@pytest.mark.parametrize("n,m,c_out,c_in", [(4, 4, 2, 2), (8, 8, 4, 4), (8, 6, 3, 5), (16, 16, 8, 8)])
+def test_symbol_kernel_matches_ref(n, m, c_out, c_in):
+    rng = np.random.default_rng(0)
+    w = rand_weights(rng, c_out, c_in)
+    p = ref.phase_matrix(n, m, 3, 3)
+    b_re, b_im = lfa_symbol(
+        ref.as_f32(p.real), ref.as_f32(p.imag), ref.as_f32(w.reshape(c_out * c_in, 9))
+    )
+    want = ref.symbol_ref(w, n, m).reshape(n * m, c_out * c_in)
+    np.testing.assert_allclose(np.asarray(b_re), want.real, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(b_im), want.imag, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 12),
+    m=st.integers(2, 12),
+    c_out=st.integers(1, 6),
+    c_in=st.integers(1, 6),
+    kh=st.sampled_from([1, 3, 5]),
+    kw=st.sampled_from([1, 3, 5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_symbol_kernel_hypothesis(n, m, c_out, c_in, kh, kw, seed):
+    """Shape/dtype sweep: pallas symbol == oracle for arbitrary configs."""
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((c_out, c_in, kh, kw)).astype(np.float32)
+    p = ref.phase_matrix(n, m, kh, kw)
+    b_re, b_im = lfa_symbol(
+        ref.as_f32(p.real), ref.as_f32(p.imag), ref.as_f32(w.reshape(c_out * c_in, kh * kw))
+    )
+    want = ref.symbol_ref(w, n, m).reshape(n * m, c_out * c_in)
+    scale = max(1.0, np.abs(want).max())
+    np.testing.assert_allclose(np.asarray(b_re), want.real, atol=3e-5 * scale)
+    np.testing.assert_allclose(np.asarray(b_im), want.imag, atol=3e-5 * scale)
+
+
+@pytest.mark.parametrize("f,c_out,c_in", [(16, 4, 4), (64, 8, 8), (10, 3, 5), (100, 5, 3)])
+def test_gram_kernel_matches_ref(f, c_out, c_in):
+    rng = np.random.default_rng(1)
+    b = rng.standard_normal((f, c_out, c_in)) + 1j * rng.standard_normal((f, c_out, c_in))
+    b = b.astype(np.complex64)
+    g_re, g_im = gram(ref.as_f32(b.real), ref.as_f32(b.imag))
+    want = ref.gram_ref(b)
+    np.testing.assert_allclose(np.asarray(g_re), want.real, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(g_im), want.imag, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    f=st.integers(1, 130),
+    c_out=st.integers(1, 8),
+    c_in=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_kernel_hypothesis(f, c_out, c_in, seed):
+    rng = np.random.default_rng(seed)
+    b = rng.standard_normal((f, c_out, c_in)) + 1j * rng.standard_normal((f, c_out, c_in))
+    g_re, g_im = gram(ref.as_f32(b.real), ref.as_f32(b.imag))
+    want = ref.gram_ref(b.astype(np.complex64))
+    scale = max(1.0, np.abs(want).max())
+    np.testing.assert_allclose(np.asarray(g_re), want.real, atol=2e-5 * scale)
+    np.testing.assert_allclose(np.asarray(g_im), want.imag, atol=2e-5 * scale)
+
+
+def test_gram_is_hermitian_psd():
+    rng = np.random.default_rng(2)
+    b = rng.standard_normal((32, 6, 6)) + 1j * rng.standard_normal((32, 6, 6))
+    g_re, g_im = gram(ref.as_f32(b.real), ref.as_f32(b.imag))
+    g = np.asarray(g_re) + 1j * np.asarray(g_im)
+    np.testing.assert_allclose(g, np.conj(np.swapaxes(g, 1, 2)), atol=1e-5)
+    evals = np.linalg.eigvalsh(g)
+    assert (evals > -1e-4).all()
+
+
+def test_phase_matrix_tiling():
+    """Tiled phase tables stitch to the full table."""
+    full = ref.phase_matrix(8, 6, 3, 3)
+    t0 = ref.phase_matrix(8, 6, 3, 3, row_offset=0, rows=3)
+    t1 = ref.phase_matrix(8, 6, 3, 3, row_offset=3, rows=5)
+    np.testing.assert_allclose(np.vstack([t0, t1]), full)

@@ -1,0 +1,87 @@
+//! Fig. 6 regenerator: effect of boundary conditions (Dirichlet vs
+//! periodic) on the singular-value distribution, for increasing input
+//! sizes with c = 16 fixed.
+//!
+//! The paper plots the sorted spectra of 3 random weight tensors at
+//! n ∈ {4, 8, 32}; the observable is that the periodic (LFA) spectrum
+//! converges to the zero-padded (explicit) one as n grows. We print the
+//! spectral series quantiles + the divergence metric per n, and write the
+//! full series to CSV for plotting.
+
+use conv_svd_lfa::baselines::explicit_svd;
+use conv_svd_lfa::conv::{Boundary, ConvKernel};
+use conv_svd_lfa::lfa::{self, LfaOptions, Spectrum};
+use conv_svd_lfa::numeric::Pcg64;
+use conv_svd_lfa::report::Table;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let c = 16;
+    // Explicit (Dirichlet) SVD is the cost ceiling here: n=32·c=16 means a
+    // 16,384² dense matrix — include it only with --full. Default matches
+    // the paper's n ∈ {4, 8} + a reduced-c n=32 point.
+    // Explicit-SVD cost gates the sizes: (16,16) is a 4096² dense SVD
+    // (~80 s/tensor on this box), so it is --full only; the default keeps
+    // the paper's n ∈ {4,8} panels at c=16 and adds a reduced-c n=16 point.
+    let cases: Vec<(usize, usize)> = if full {
+        vec![(4, c), (8, c), (16, c), (32, 4)]
+    } else {
+        vec![(4, c), (8, c), (16, 8)]
+    };
+
+    println!("# Fig. 6 — boundary-condition effect on the spectrum (c varies per row)");
+    let mut table = Table::new([
+        "n", "c", "#σ", "divergence", "σmax per.", "σmax Dir.", "median per.", "median Dir.",
+    ]);
+    let mut csv = Table::new(["tensor", "n", "c", "idx", "periodic", "dirichlet"]);
+
+    for &(n, c) in &cases {
+        // Three random tensors, like the paper's three panels-worth.
+        let mut divs = Vec::new();
+        for tensor in 0..3u64 {
+            let mut rng = Pcg64::seeded(600 + tensor);
+            let k = ConvKernel::random_he(c, c, 3, 3, &mut rng);
+            let periodic = lfa::singular_values(&k, n, n, LfaOptions::default()).sorted_desc();
+            let dirichlet = explicit_svd::singular_values(&k, n, n, Boundary::Dirichlet).values;
+            let div = Spectrum::divergence(&periodic, &dirichlet);
+            divs.push(div);
+            // Sampled series for the plot (64 quantile points).
+            let len = periodic.len().max(dirichlet.len());
+            let points = 64.min(len);
+            for s in 0..points {
+                let q = s as f64 / (points - 1).max(1) as f64;
+                let pi = ((periodic.len() - 1) as f64 * q) as usize;
+                let di = ((dirichlet.len() - 1) as f64 * q) as usize;
+                csv.row([
+                    tensor.to_string(),
+                    n.to_string(),
+                    c.to_string(),
+                    s.to_string(),
+                    format!("{:.6}", periodic[pi]),
+                    format!("{:.6}", dirichlet[di]),
+                ]);
+            }
+            if tensor == 0 {
+                let med = |xs: &[f64]| xs[xs.len() / 2];
+                table.row([
+                    n.to_string(),
+                    c.to_string(),
+                    periodic.len().to_string(),
+                    format!("{div:.4}"),
+                    format!("{:.4}", periodic[0]),
+                    format!("{:.4}", dirichlet[0]),
+                    format!("{:.4}", med(&periodic)),
+                    format!("{:.4}", med(&dirichlet)),
+                ]);
+            }
+        }
+        let mean = divs.iter().sum::<f64>() / divs.len() as f64;
+        println!("n={n:<3} c={c:<3} mean divergence over 3 tensors: {mean:.4}");
+    }
+    print!("{}", table.render());
+    match csv.save_csv("fig6_boundary") {
+        Ok(p) => println!("series CSV: {}", p.display()),
+        Err(e) => eprintln!("csv write failed: {e}"),
+    }
+    println!("expected shape: divergence shrinks monotonically with n (boundary has\nvanishing influence for growing lattice sizes — paper §IV-a)");
+}

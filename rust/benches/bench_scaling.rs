@@ -1,0 +1,104 @@
+//! Table I regenerator (complexity): measured scaling exponents of the
+//! three methods vs their theoretical orders, by log–log slope fitting
+//! over a geometric n-sweep.
+//!
+//!   explicit  O(n⁶)  (we fit on the SVD of the n²c × n²c dense matrix)
+//!   FFT       O(n² (c + log n) c²) ≈ slope 2 in n (plus log factor)
+//!   LFA       O(n² c³)            = slope exactly 2 in n
+//!
+//! Also channel scaling at fixed n: both fast methods are O(c³)-dominated.
+
+use conv_svd_lfa::baselines::{explicit_svd, fft_svd, FftLayoutPolicy};
+use conv_svd_lfa::bench_util::bench_args;
+use conv_svd_lfa::conv::{Boundary, ConvKernel};
+use conv_svd_lfa::lfa::{self, LfaOptions};
+use conv_svd_lfa::numeric::Pcg64;
+use conv_svd_lfa::report::Table;
+
+fn slope(points: &[(f64, f64)]) -> f64 {
+    // least-squares slope in log-log space
+    let n = points.len() as f64;
+    let (mut sx, mut sy, mut sxx, mut sxy) = (0.0, 0.0, 0.0, 0.0);
+    for &(x, y) in points {
+        let (lx, ly) = (x.ln(), y.ln());
+        sx += lx;
+        sy += ly;
+        sxx += lx * lx;
+        sxy += lx * ly;
+    }
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}
+
+fn main() {
+    let (bench, full) = bench_args();
+    let c = 8;
+    let mut rng = Pcg64::seeded(1000);
+    let kernel = ConvKernel::random_he(c, c, 3, 3, &mut rng);
+
+    // --- n-scaling ---
+    let ns_fast: Vec<usize> = if full { vec![32, 64, 128, 256] } else { vec![32, 64, 128] };
+    let ns_explicit: Vec<usize> = vec![4, 6, 8, 12];
+    let mut lfa_pts = Vec::new();
+    let mut fft_pts = Vec::new();
+    let mut exp_pts = Vec::new();
+    for &n in &ns_fast {
+        let t = bench
+            .measure("lfa", || lfa::singular_values(&kernel, n, n, LfaOptions::default()))
+            .min()
+            .as_secs_f64();
+        lfa_pts.push((n as f64, t));
+        let t = bench
+            .measure("fft", || {
+                fft_svd::singular_values(&kernel, n, n, FftLayoutPolicy::Natural, 1)
+            })
+            .min()
+            .as_secs_f64();
+        fft_pts.push((n as f64, t));
+    }
+    for &n in &ns_explicit {
+        let t = bench
+            .measure("explicit", || {
+                explicit_svd::singular_values(&kernel, n, n, Boundary::Periodic)
+            })
+            .min()
+            .as_secs_f64();
+        exp_pts.push((n as f64, t));
+    }
+
+    // --- c-scaling at fixed n ---
+    let n_fixed = 32;
+    let mut lfa_c = Vec::new();
+    for &cc in &[4usize, 8, 16, 32] {
+        let mut rng = Pcg64::seeded(1001 + cc as u64);
+        let k = ConvKernel::random_he(cc, cc, 3, 3, &mut rng);
+        let t = bench
+            .measure("lfa-c", || lfa::singular_values(&k, n_fixed, n_fixed, LfaOptions::default()))
+            .min()
+            .as_secs_f64();
+        lfa_c.push((cc as f64, t));
+    }
+
+    println!("# Table I — measured scaling exponents vs theory");
+    let mut table = Table::new(["series", "fit slope", "theory", "verdict"]);
+    let rows: Vec<(&str, f64, f64, f64)> = vec![
+        ("LFA vs n", slope(&lfa_pts), 2.0, 0.5),
+        ("FFT vs n", slope(&fft_pts), 2.0, 0.7), // +log factor pushes it up
+        ("explicit vs n", slope(&exp_pts), 6.0, 1.6),
+        ("LFA vs c", slope(&lfa_c), 3.0, 0.8),
+    ];
+    for (name, got, want, tol) in rows {
+        let ok = (got - want).abs() <= tol || (name.contains("FFT") && got >= want - tol);
+        table.row([
+            name.to_string(),
+            format!("{got:.2}"),
+            format!("{want:.1}"),
+            if ok { "ok".into() } else { format!("OFF by {:.2}", got - want) },
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "notes: explicit slope < 6 at tiny n (LAPACK-style constants dominate);\n\
+         LFA-vs-c < 3 until c is large enough for the O(c³) SVD to dominate the\n\
+         O(c²k²) transform. Trends, not exact asymptotics, at these sizes."
+    );
+}

@@ -1,0 +1,75 @@
+//! Table III regenerator: total runtime split into transform time `s_F`
+//! and SVD time `s_SVD` for the FFT and LFA routes.
+//!
+//! Paper observation: `s_F` is dramatically smaller for LFA (O(1) vs
+//! O(log n) per frequency *and* better constants), and `s_SVD` is also
+//! smaller because LFA's output layout is block-contiguous.
+
+use conv_svd_lfa::baselines::{fft_svd, FftLayoutPolicy};
+use conv_svd_lfa::bench_util::bench_args;
+use conv_svd_lfa::conv::ConvKernel;
+use conv_svd_lfa::lfa::{self, LfaOptions};
+use conv_svd_lfa::numeric::Pcg64;
+use conv_svd_lfa::report::{commas, secs, Table};
+
+fn main() {
+    let (bench, full) = bench_args();
+    let c = 16;
+    let ns: Vec<usize> = if full { vec![64, 128, 256, 512] } else { vec![64, 128, 256] };
+    let mut rng = Pcg64::seeded(702);
+    let kernel = ConvKernel::random_he(c, c, 3, 3, &mut rng);
+    let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+
+    println!("# Table III — s_F vs s_SVD split (c = {c}, {threads} thread(s))");
+    let mut table = Table::new(["n", "no. of SVs", "method", "s_F", "s_SVD", "s_total"]);
+    let mut csv = Table::new(["n", "method", "transform_s", "svd_s", "total_s"]);
+    for &n in &ns {
+        // Median-of-samples for each stage: rerun the timed pipelines.
+        let fft = bench.measure("fft", || {
+            fft_svd::singular_values_timed(&kernel, n, n, FftLayoutPolicy::Natural, threads).1
+        });
+        let lfa_t = bench.measure("lfa", || {
+            lfa::singular_values_timed(
+                &kernel,
+                n,
+                n,
+                LfaOptions { threads, ..Default::default() },
+            )
+            .1
+        });
+        // The measurement samples are StageTimings; take the last run's split
+        // (representative) but the median total.
+        let fft_last = fft_svd::singular_values_timed(&kernel, n, n, FftLayoutPolicy::Natural, threads).1;
+        let lfa_last =
+            lfa::singular_values_timed(&kernel, n, n, LfaOptions { threads, ..Default::default() }).1;
+        for (name, split, total_med) in [
+            ("FFT", fft_last, fft.median()),
+            ("LFA", lfa_last, lfa_t.median()),
+        ] {
+            table.row([
+                n.to_string(),
+                commas((n * n * c) as u128),
+                name.to_string(),
+                secs(split.transform),
+                secs(split.svd),
+                secs(total_med),
+            ]);
+            csv.row([
+                n.to_string(),
+                name.to_string(),
+                format!("{:.6}", split.transform.as_secs_f64()),
+                format!("{:.6}", split.svd.as_secs_f64()),
+                format!("{:.6}", total_med.as_secs_f64()),
+            ]);
+        }
+    }
+    print!("{}", table.render());
+    match csv.save_csv("table3_split") {
+        Ok(p) => println!("CSV: {}", p.display()),
+        Err(e) => eprintln!("csv write failed: {e}"),
+    }
+    println!(
+        "expected shape: s_F(LFA) ≪ s_F(FFT) (paper: 82s vs 318s at n=8192);\n\
+         s_SVD comparable-or-better for LFA thanks to the contiguous layout."
+    );
+}

@@ -1,0 +1,130 @@
+//! Table IV regenerator: effect of memory layout on `s_F`, `s_copy` and
+//! `s_SVD`.
+//!
+//! Four configurations per n, mirroring the paper's rows:
+//!   FFT  natural layout      (planar/strided blocks; no conversion)
+//!   FFT  + convert           (pay `s_copy` to make blocks contiguous)
+//!   LFA  block-contiguous    (the natural LFA layout — "row-major")
+//!   LFA  planar (+ convert)  (force the bad layout, then convert back)
+//!
+//! Paper findings to reproduce in shape: contiguous blocks make `s_SVD`
+//! fastest; the conversion cost outweighs its benefit for the FFT; LFA gets
+//! the good layout for free.
+
+use conv_svd_lfa::baselines::{fft_svd, FftLayoutPolicy};
+use conv_svd_lfa::bench_util::bench_args;
+use conv_svd_lfa::conv::ConvKernel;
+use conv_svd_lfa::lfa::{self, svd::svd_pass, BlockLayout, LfaOptions};
+use conv_svd_lfa::numeric::Pcg64;
+use conv_svd_lfa::report::{secs, Table};
+use std::time::{Duration, Instant};
+
+fn main() {
+    let (bench, full) = bench_args();
+    let c = 16;
+    let ns: Vec<usize> = if full { vec![64, 128, 256] } else { vec![64, 128] };
+    let mut rng = Pcg64::seeded(703);
+    let kernel = ConvKernel::random_he(c, c, 3, 3, &mut rng);
+
+    println!("# Table IV — memory-layout effects (c = {c}, single thread: layout effects\n# are per-core cache behaviour)");
+    let mut table = Table::new(["n", "method", "layout", "s_F", "s_copy", "s_SVD", "s_total"]);
+    let mut csv =
+        Table::new(["n", "method", "layout", "transform_s", "copy_s", "svd_s", "total_s"]);
+
+    for &n in &ns {
+        // --- FFT natural (strided blocks) ---
+        let m1 = bench.measure("fft-nat", || {
+            fft_svd::singular_values_timed(&kernel, n, n, FftLayoutPolicy::Natural, 1).1
+        });
+        let s1 = fft_svd::singular_values_timed(&kernel, n, n, FftLayoutPolicy::Natural, 1).1;
+        emit(&mut table, &mut csv, n, "FFT", "planar (native)", s1.transform, s1.copy, s1.svd, m1.median());
+
+        // --- FFT + conversion ---
+        let m2 = bench.measure("fft-conv", || {
+            fft_svd::singular_values_timed(&kernel, n, n, FftLayoutPolicy::ConvertToContiguous, 1)
+                .1
+        });
+        let s2 =
+            fft_svd::singular_values_timed(&kernel, n, n, FftLayoutPolicy::ConvertToContiguous, 1).1;
+        emit(&mut table, &mut csv, n, "FFT", "→ contiguous", s2.transform, s2.copy, s2.svd, m2.median());
+
+        // --- LFA block-contiguous (the default) ---
+        let m3 = bench.measure("lfa-cont", || {
+            lfa::singular_values_timed(&kernel, n, n, LfaOptions::default()).1
+        });
+        let s3 = lfa::singular_values_timed(&kernel, n, n, LfaOptions::default()).1;
+        emit(&mut table, &mut csv, n, "LFA", "contiguous (native)", s3.transform, s3.copy, s3.svd, m3.median());
+
+        // --- LFA forced planar, then converted back (the paper's ✗ row) ---
+        let lfa_planar = || {
+            let t0 = Instant::now();
+            let grid = lfa::compute_symbols(&kernel, n, n, BlockLayout::PlanarStrided);
+            let t_f = t0.elapsed();
+            let t0 = Instant::now();
+            let grid = grid.to_layout(BlockLayout::BlockContiguous);
+            let t_copy = t0.elapsed();
+            let t0 = Instant::now();
+            let v = svd_pass(&grid, LfaOptions::default());
+            let t_svd = t0.elapsed();
+            (v, t_f, t_copy, t_svd)
+        };
+        let m4 = bench.measure("lfa-planar", || lfa_planar().0);
+        let (_, t_f, t_copy, t_svd) = lfa_planar();
+        emit(&mut table, &mut csv, n, "LFA", "planar → contiguous", t_f, t_copy, t_svd, m4.median());
+
+        // --- LFA planar, SVD directly on strided blocks (no conversion) ---
+        let lfa_strided = || {
+            let t0 = Instant::now();
+            let grid = lfa::compute_symbols(&kernel, n, n, BlockLayout::PlanarStrided);
+            let t_f = t0.elapsed();
+            let t0 = Instant::now();
+            let v = svd_pass(&grid, LfaOptions { layout: BlockLayout::PlanarStrided, ..Default::default() });
+            let t_svd = t0.elapsed();
+            (v, t_f, t_svd)
+        };
+        let m5 = bench.measure("lfa-strided", || lfa_strided().0);
+        let (_, t_f5, t_svd5) = lfa_strided();
+        emit(&mut table, &mut csv, n, "LFA", "planar (no conv.)", t_f5, Duration::ZERO, t_svd5, m5.median());
+    }
+    print!("{}", table.render());
+    match csv.save_csv("table4_layout") {
+        Ok(p) => println!("CSV: {}", p.display()),
+        Err(e) => eprintln!("csv write failed: {e}"),
+    }
+    println!(
+        "expected shape (paper Table IV): contiguous-block SVD is fastest;\n\
+         explicit conversion costs more than it saves; LFA's native layout wins."
+    );
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit(
+    table: &mut Table,
+    csv: &mut Table,
+    n: usize,
+    method: &str,
+    layout: &str,
+    t_f: Duration,
+    t_copy: Duration,
+    t_svd: Duration,
+    total: Duration,
+) {
+    table.row([
+        n.to_string(),
+        method.to_string(),
+        layout.to_string(),
+        secs(t_f),
+        if t_copy == Duration::ZERO { "-".into() } else { secs(t_copy) },
+        secs(t_svd),
+        secs(total),
+    ]);
+    csv.row([
+        n.to_string(),
+        method.to_string(),
+        layout.to_string(),
+        format!("{:.6}", t_f.as_secs_f64()),
+        format!("{:.6}", t_copy.as_secs_f64()),
+        format!("{:.6}", t_svd.as_secs_f64()),
+        format!("{:.6}", total.as_secs_f64()),
+    ]);
+}

@@ -1,0 +1,81 @@
+//! The *naive explicit* baseline: unroll the convolution into its dense
+//! `(n·m·c_out)×(n·m·c_in)` matrix and run a dense SVD — `O(n⁶c³)` for
+//! square inputs (Table I, row "explicit"). Practical only for tiny `n`;
+//! the benches use it exactly the way the paper does (Fig. 7a, up to the
+//! memory/time wall).
+
+use crate::conv::{unroll_dense, Boundary, ConvKernel};
+use crate::lfa::Spectrum;
+use crate::linalg::gk_svd;
+use std::time::{Duration, Instant};
+
+/// Singular values of the convolution via the explicit dense matrix.
+pub fn singular_values(kernel: &ConvKernel, n: usize, m: usize, boundary: Boundary) -> Spectrum {
+    singular_values_timed(kernel, n, m, boundary).0
+}
+
+/// Timed variant: `(unroll time, svd time)` — the "transform" analogue.
+pub fn singular_values_timed(
+    kernel: &ConvKernel,
+    n: usize,
+    m: usize,
+    boundary: Boundary,
+) -> (Spectrum, (Duration, Duration)) {
+    let t0 = Instant::now();
+    let a = unroll_dense(kernel, n, m, boundary);
+    let unroll = t0.elapsed();
+    let t1 = Instant::now();
+    let mut values = gk_svd::singular_values(&a);
+    let svd = t1.elapsed();
+    // Keep descending global order; the per-frequency association is lost in
+    // the explicit route (the paper's too) — Spectrum stores the flat list.
+    values.sort_by(|x, y| y.partial_cmp(x).unwrap());
+    (
+        Spectrum { n, m, c_out: kernel.c_out, c_in: kernel.c_in, values },
+        (unroll, svd),
+    )
+}
+
+/// Memory footprint (bytes) of the dense unrolled matrix — the "memory
+/// capacity becomes quickly a limiting factor" wall of §IV-b.
+pub fn dense_bytes(kernel: &ConvKernel, n: usize, m: usize) -> usize {
+    n * m * kernel.c_out * n * m * kernel.c_in * std::mem::size_of::<f64>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lfa::{self, LfaOptions};
+    use crate::numeric::Pcg64;
+
+    #[test]
+    fn explicit_periodic_matches_lfa() {
+        let mut rng = Pcg64::seeded(120);
+        let k = ConvKernel::random_he(2, 2, 3, 3, &mut rng);
+        let (n, m) = (4, 4);
+        let explicit = singular_values(&k, n, m, Boundary::Periodic);
+        let lfa_spec = lfa::singular_values(&k, n, m, LfaOptions::default());
+        let lfa_sorted = lfa_spec.sorted_desc();
+        assert_eq!(explicit.values.len(), lfa_sorted.len());
+        for (a, b) in explicit.values.iter().zip(&lfa_sorted) {
+            assert!((a - b).abs() < 1e-8, "explicit {a} vs lfa {b}");
+        }
+    }
+
+    #[test]
+    fn dirichlet_differs_from_periodic_for_small_n() {
+        let mut rng = Pcg64::seeded(121);
+        let k = ConvKernel::random_he(2, 2, 3, 3, &mut rng);
+        let p = singular_values(&k, 4, 4, Boundary::Periodic);
+        let d = singular_values(&k, 4, 4, Boundary::Dirichlet);
+        let div = Spectrum::divergence(&p.values, &d.values);
+        assert!(div > 1e-3, "boundary effect should be visible at n=4: {div}");
+    }
+
+    #[test]
+    fn memory_model() {
+        let k = ConvKernel::zeros(16, 16, 3, 3);
+        // n=64, c=16 → 65,536² doubles = 32 GiB
+        assert_eq!(dense_bytes(&k, 64, 64), 65536usize * 65536 * 8);
+    }
+}

@@ -1,0 +1,175 @@
+//! The FFT baseline of Sedghi, Gupta & Long (ICLR 2019): transform each of
+//! the `c_out·c_in` filter planes with a 2-D FFT of size `n×m`
+//! (`O(n·m·log(nm))` each), gather the per-frequency `c_out×c_in` blocks,
+//! and SVD them — total `O(n²c²(c + log n))` (Table I, row "FFT").
+//!
+//! Two fidelity details matter for the paper's Tables III/IV:
+//!
+//! 1. The FFT writes its output *plane by plane* — each `(o,i)` pair's
+//!    spectrum is contiguous, so the per-frequency blocks are **strided**
+//!    (`PlanarStrided`). That is the "memory layout produced by the FFT"
+//!    whose SVD stage runs slower than LFA's block-contiguous one.
+//! 2. Optionally converting to block-contiguous before the SVD reproduces
+//!    the `s_copy` experiment of Table IV.
+
+use crate::conv::ConvKernel;
+use crate::fft::FftPlan;
+use crate::fft::Direction;
+use crate::lfa::svd::{svd_pass, LfaOptions};
+use crate::lfa::{BlockLayout, Spectrum, StageTiming, SymbolGrid};
+use crate::numeric::C64;
+use std::time::Instant;
+
+/// Layout policy for the FFT route (Table IV's knob).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FftLayoutPolicy {
+    /// SVD directly on the FFT's natural (strided) layout — what the paper
+    /// found fastest overall for large `n`.
+    Natural,
+    /// Pay an explicit conversion to block-contiguous first (`s_copy`).
+    ConvertToContiguous,
+}
+
+/// Compute the symbol grid via 2-D FFTs of the zero-padded, wrap-embedded
+/// filter planes. Mathematically identical to `lfa::compute_symbols` for
+/// periodic boundary conditions (up to FP roundoff).
+pub fn fft_symbols(kernel: &ConvKernel, n: usize, m: usize) -> SymbolGrid {
+    let mut grid =
+        SymbolGrid::zeros(n, m, kernel.c_out, kernel.c_in, BlockLayout::PlanarStrided);
+    let nm = n * m;
+    let (ar, ac) = (kernel.anchor.0 as isize, kernel.anchor.1 as isize);
+    let row_plan = FftPlan::new(m);
+    let col_plan = FftPlan::new(n);
+    let mut plane = vec![C64::ZERO; nm];
+    for o in 0..kernel.c_out {
+        for i in 0..kernel.c_in {
+            // Embed taps at wrapped displacement positions.
+            plane.iter_mut().for_each(|z| *z = C64::ZERO);
+            for r in 0..kernel.kh {
+                for c in 0..kernel.kw {
+                    let w = kernel.get(o, i, r, c);
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let dy = (r as isize - ar).rem_euclid(n as isize) as usize;
+                    let dx = (c as isize - ac).rem_euclid(m as isize) as usize;
+                    plane[dy * m + dx] += C64::real(w);
+                }
+            }
+            // 2-D FFT in place (rows then columns).
+            for rr in 0..n {
+                row_plan.transform(&mut plane[rr * m..(rr + 1) * m], Direction::Forward);
+            }
+            let mut scratch = vec![C64::ZERO; n];
+            for cc in 0..m {
+                for rr in 0..n {
+                    scratch[rr] = plane[rr * m + cc];
+                }
+                col_plan.transform(&mut scratch, Direction::Forward);
+                for rr in 0..n {
+                    plane[rr * m + cc] = scratch[rr];
+                }
+            }
+            // DFT uses e^{−2πi…}; the symbol convention is e^{+2πi…}. For
+            // real weights the two are complex conjugates, so conjugate here
+            // to make the grids comparable entry-for-entry with LFA.
+            let base = (o * kernel.c_in + i) * nm;
+            for (dst, &src) in grid.data[base..base + nm].iter_mut().zip(plane.iter()) {
+                *dst = src.conj();
+            }
+        }
+    }
+    grid
+}
+
+/// Singular values via the FFT baseline.
+pub fn singular_values(
+    kernel: &ConvKernel,
+    n: usize,
+    m: usize,
+    policy: FftLayoutPolicy,
+    threads: usize,
+) -> Spectrum {
+    singular_values_timed(kernel, n, m, policy, threads).0
+}
+
+/// Timed FFT baseline: `s_F` (FFT), `s_copy` (layout conversion, if any),
+/// `s_SVD` — the exact decomposition of Tables III/IV.
+pub fn singular_values_timed(
+    kernel: &ConvKernel,
+    n: usize,
+    m: usize,
+    policy: FftLayoutPolicy,
+    threads: usize,
+) -> (Spectrum, StageTiming) {
+    let t0 = Instant::now();
+    let grid = fft_symbols(kernel, n, m);
+    let transform = t0.elapsed();
+
+    let t1 = Instant::now();
+    let grid = match policy {
+        FftLayoutPolicy::Natural => grid,
+        FftLayoutPolicy::ConvertToContiguous => grid.to_layout(BlockLayout::BlockContiguous),
+    };
+    let copy = t1.elapsed();
+
+    let t2 = Instant::now();
+    let values = svd_pass(&grid, LfaOptions { threads, layout: grid.layout, ..Default::default() });
+    let svd = t2.elapsed();
+    (
+        Spectrum { n, m, c_out: kernel.c_out, c_in: kernel.c_in, values },
+        StageTiming { transform, copy, svd },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lfa;
+    use crate::numeric::Pcg64;
+
+    #[test]
+    fn fft_symbols_match_lfa_symbols() {
+        let mut rng = Pcg64::seeded(130);
+        let k = ConvKernel::random_he(3, 2, 3, 3, &mut rng);
+        for (n, m) in [(4usize, 4usize), (8, 8), (6, 10), (5, 7)] {
+            let lfa_grid = lfa::compute_symbols(&k, n, m, BlockLayout::BlockContiguous);
+            let fft_grid = fft_symbols(&k, n, m);
+            let diff = lfa_grid.max_abs_diff(&fft_grid);
+            assert!(diff < 1e-10, "({n},{m}): {diff}");
+        }
+    }
+
+    #[test]
+    fn fft_values_match_lfa_values() {
+        let mut rng = Pcg64::seeded(131);
+        let k = ConvKernel::random_he(4, 4, 3, 3, &mut rng);
+        let (n, m) = (8, 8);
+        let s_lfa = lfa::singular_values(&k, n, m, Default::default());
+        for policy in [FftLayoutPolicy::Natural, FftLayoutPolicy::ConvertToContiguous] {
+            let s_fft = singular_values(&k, n, m, policy, 1);
+            for (a, b) in s_lfa.values.iter().zip(&s_fft.values) {
+                assert!((a - b).abs() < 1e-9, "{policy:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn nonsquare_kernel_counts() {
+        let mut rng = Pcg64::seeded(132);
+        let k = ConvKernel::random_he(5, 3, 3, 3, &mut rng);
+        let s = singular_values(&k, 4, 6, FftLayoutPolicy::Natural, 1);
+        assert_eq!(s.values.len(), 4 * 6 * 3);
+    }
+
+    #[test]
+    fn timing_split_reports_copy_only_when_converting() {
+        let mut rng = Pcg64::seeded(133);
+        let k = ConvKernel::random_he(2, 2, 3, 3, &mut rng);
+        let (_, t_nat) = singular_values_timed(&k, 8, 8, FftLayoutPolicy::Natural, 1);
+        assert!(t_nat.copy.as_nanos() < t_nat.total().as_nanos());
+        let (_, t_conv) =
+            singular_values_timed(&k, 8, 8, FftLayoutPolicy::ConvertToContiguous, 1);
+        assert!(t_conv.copy.as_nanos() > 0);
+    }
+}

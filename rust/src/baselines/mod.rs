@@ -1,0 +1,7 @@
+//! The two baselines the paper compares against (Table I / Fig. 7):
+//! the naive explicit dense SVD and the FFT route of Sedghi et al. (2019).
+
+pub mod explicit_svd;
+pub mod fft_svd;
+
+pub use fft_svd::FftLayoutPolicy;

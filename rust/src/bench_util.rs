@@ -1,0 +1,141 @@
+//! Minimal statistical benchmarking harness (criterion is not in the
+//! offline crate set). Each paper-table bench is a `harness = false`
+//! binary built on this module.
+//!
+//! Method: warmup runs, then `samples` timed runs; report median and MAD
+//! (median absolute deviation) — robust against scheduler noise on the
+//! single-core CI box.
+
+use std::time::{Duration, Instant};
+
+/// One measurement series.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<Duration>,
+}
+
+impl Measurement {
+    pub fn median(&self) -> Duration {
+        let mut v: Vec<Duration> = self.samples.clone();
+        v.sort();
+        v[v.len() / 2]
+    }
+
+    /// Median absolute deviation.
+    pub fn mad(&self) -> Duration {
+        let med = self.median();
+        let mut devs: Vec<Duration> = self
+            .samples
+            .iter()
+            .map(|&s| if s > med { s - med } else { med - s })
+            .collect();
+        devs.sort();
+        devs[devs.len() / 2]
+    }
+
+    pub fn min(&self) -> Duration {
+        *self.samples.iter().min().unwrap()
+    }
+}
+
+/// Benchmark runner with a global time budget per measurement.
+pub struct Bench {
+    pub warmup: usize,
+    pub samples: usize,
+    /// Skip additional samples once a measurement exceeds this budget
+    /// (long-running points get fewer repetitions, like criterion's
+    /// adaptive sampling).
+    pub sample_budget: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup: 1, samples: 5, sample_budget: Duration::from_secs(20) }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self { warmup: 1, samples: 3, sample_budget: Duration::from_secs(10) }
+    }
+
+    /// Measure a closure. The closure's return value is passed to a sink to
+    /// prevent the optimizer from eliding the work.
+    pub fn measure<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Measurement {
+        for _ in 0..self.warmup {
+            sink(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        let mut spent = Duration::ZERO;
+        for i in 0..self.samples {
+            let t0 = Instant::now();
+            sink(f());
+            let dt = t0.elapsed();
+            spent += dt;
+            samples.push(dt);
+            if spent > self.sample_budget && i >= 1 {
+                break;
+            }
+        }
+        Measurement { name: name.to_string(), samples }
+    }
+}
+
+/// Opaque value sink (black_box substitute on stable).
+#[inline]
+pub fn sink<T>(value: T) -> T {
+    std::hint::black_box(value)
+}
+
+/// Parse common bench CLI flags: `--quick` (fewer samples) and `--full`
+/// (extended problem sizes). Returns (bench, full).
+pub fn bench_args() -> (Bench, bool) {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    // `cargo bench` passes --bench; ignore unknown flags.
+    let full = args.iter().any(|a| a == "--full");
+    (if quick { Bench::quick() } else { Bench::default() }, full)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_and_mad() {
+        let m = Measurement {
+            name: "x".into(),
+            samples: vec![
+                Duration::from_millis(10),
+                Duration::from_millis(12),
+                Duration::from_millis(11),
+                Duration::from_millis(100), // outlier
+                Duration::from_millis(11),
+            ],
+        };
+        assert_eq!(m.median(), Duration::from_millis(11));
+        assert!(m.mad() <= Duration::from_millis(1));
+        assert_eq!(m.min(), Duration::from_millis(10));
+    }
+
+    #[test]
+    fn measure_runs_and_counts() {
+        let b = Bench { warmup: 1, samples: 4, sample_budget: Duration::from_secs(5) };
+        let mut count = 0;
+        let m = b.measure("inc", || {
+            count += 1;
+            count
+        });
+        assert_eq!(count, 5); // 1 warmup + 4 samples
+        assert_eq!(m.samples.len(), 4);
+    }
+
+    #[test]
+    fn budget_cuts_long_measurements() {
+        let b = Bench { warmup: 0, samples: 10, sample_budget: Duration::from_millis(1) };
+        let m = b.measure("sleepy", || std::thread::sleep(Duration::from_millis(2)));
+        assert!(m.samples.len() < 10);
+        assert!(m.samples.len() >= 2);
+    }
+}

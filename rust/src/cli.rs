@@ -1,0 +1,114 @@
+//! Hand-rolled CLI argument parsing (no clap in the offline crate set).
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand, positionals, `--key value` / `--flag`
+/// options.
+pub struct Cli {
+    pub command: String,
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Cli {
+    /// Parse `std::env::args()`.
+    pub fn from_env(flag_names: &[&str]) -> Result<Cli> {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&args, flag_names)
+    }
+
+    /// Parse an argument list. `flag_names` lists boolean options (no
+    /// value); anything else starting with `--` takes a value.
+    pub fn parse(args: &[String], flag_names: &[&str]) -> Result<Cli> {
+        let mut command = String::new();
+        let mut positional = Vec::new();
+        let mut options = HashMap::new();
+        let mut flags = Vec::new();
+        let mut it = args.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                if flag_names.contains(&name) {
+                    if inline.is_some() {
+                        bail!("flag --{name} does not take a value");
+                    }
+                    flags.push(name.to_string());
+                } else {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow!("option --{name} needs a value"))?
+                            .clone(),
+                    };
+                    options.insert(name.to_string(), value);
+                }
+            } else if command.is_empty() {
+                command = a.clone();
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Cli { command, positional, options, flags })
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse::<T>().map_err(|_| anyhow!("--{name}: cannot parse {v:?}"))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let c = Cli::parse(&args("analyze --n 32 --threads 4 --verbose layer.toml"), &["verbose"])
+            .unwrap();
+        assert_eq!(c.command, "analyze");
+        assert_eq!(c.positional, vec!["layer.toml"]);
+        assert_eq!(c.opt("n"), Some("32"));
+        assert_eq!(c.opt_parse::<usize>("threads", 1).unwrap(), 4);
+        assert!(c.flag("verbose"));
+        assert!(!c.flag("quiet"));
+    }
+
+    #[test]
+    fn inline_values() {
+        let c = Cli::parse(&args("bench --n=64"), &[]).unwrap();
+        assert_eq!(c.opt("n"), Some("64"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Cli::parse(&args("x --n"), &[]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let c = Cli::parse(&args("x"), &[]).unwrap();
+        assert_eq!(c.opt_parse::<usize>("n", 16).unwrap(), 16);
+    }
+}

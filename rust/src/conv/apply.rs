@@ -1,0 +1,227 @@
+//! Direct application of a convolution as a linear operator — without ever
+//! materializing the unrolled matrix.
+//!
+//! Feature maps are flat vectors in spatial-major, channel-minor order:
+//! `f[(x_row·width + x_col)·channels + ch]`, the same order the unrolled
+//! matrices of [`super::unroll`] use, so the two agree index-for-index.
+
+use super::kernel::ConvKernel;
+use crate::linalg::power::LinOp;
+
+/// Boundary condition of the convolution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Boundary {
+    /// Periodic wrap-around — the assumption under which LFA/FFT are exact.
+    Periodic,
+    /// Zero padding (Dirichlet) — the CNN default the paper compares against.
+    Dirichlet,
+}
+
+/// A convolution operator `A : R^{h×w×c_in} → R^{h×w×c_out}` over a fixed
+/// grid with a fixed boundary condition.
+pub struct ConvOp<'a> {
+    pub kernel: &'a ConvKernel,
+    pub height: usize,
+    pub width: usize,
+    pub boundary: Boundary,
+}
+
+impl<'a> ConvOp<'a> {
+    pub fn new(kernel: &'a ConvKernel, height: usize, width: usize, boundary: Boundary) -> Self {
+        Self { kernel, height, width, boundary }
+    }
+
+    /// Apply the convolution: `out[x, o] = Σ_i Σ_y W[o,i,y] · f[x+y, i]`.
+    pub fn forward(&self, f: &[f64]) -> Vec<f64> {
+        let k = self.kernel;
+        let (h, w) = (self.height, self.width);
+        assert_eq!(f.len(), h * w * k.c_in, "input length mismatch");
+        let mut out = vec![0.0; h * w * k.c_out];
+        let (ar, ac) = (k.anchor.0 as isize, k.anchor.1 as isize);
+        for xr in 0..h as isize {
+            for xc in 0..w as isize {
+                for r in 0..k.kh as isize {
+                    for c in 0..k.kw as isize {
+                        let (sr, sc) = (xr + r - ar, xc + c - ac);
+                        let Some(src) = self.resolve(sr, sc) else { continue };
+                        let in_base = src * k.c_in;
+                        let out_base = (xr as usize * w + xc as usize) * k.c_out;
+                        for o in 0..k.c_out {
+                            let mut acc = 0.0;
+                            for i in 0..k.c_in {
+                                acc += k.get(o, i, r as usize, c as usize) * f[in_base + i];
+                            }
+                            out[out_base + o] += acc;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Apply the transposed operator `Aᵀ`.
+    pub fn transpose_apply(&self, g: &[f64]) -> Vec<f64> {
+        let k = self.kernel;
+        let (h, w) = (self.height, self.width);
+        assert_eq!(g.len(), h * w * k.c_out, "input length mismatch");
+        let mut out = vec![0.0; h * w * k.c_in];
+        let (ar, ac) = (k.anchor.0 as isize, k.anchor.1 as isize);
+        // (Aᵀ g)[x', i] = Σ_o Σ_y W[o,i,y] g[x, o] where x' = x + y.
+        for xr in 0..h as isize {
+            for xc in 0..w as isize {
+                for r in 0..k.kh as isize {
+                    for c in 0..k.kw as isize {
+                        let (sr, sc) = (xr + r - ar, xc + c - ac);
+                        let Some(dst) = self.resolve(sr, sc) else { continue };
+                        let g_base = (xr as usize * w + xc as usize) * k.c_out;
+                        let out_base = dst * k.c_in;
+                        for i in 0..k.c_in {
+                            let mut acc = 0.0;
+                            for o in 0..k.c_out {
+                                acc += k.get(o, i, r as usize, c as usize) * g[g_base + o];
+                            }
+                            out[out_base + i] += acc;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Resolve a (possibly out-of-range) spatial coordinate to a flat index.
+    #[inline(always)]
+    fn resolve(&self, r: isize, c: isize) -> Option<usize> {
+        let (h, w) = (self.height as isize, self.width as isize);
+        match self.boundary {
+            Boundary::Periodic => {
+                let rr = r.rem_euclid(h) as usize;
+                let cc = c.rem_euclid(w) as usize;
+                Some(rr * self.width + cc)
+            }
+            Boundary::Dirichlet => {
+                if r < 0 || r >= h || c < 0 || c >= w {
+                    None
+                } else {
+                    Some(r as usize * self.width + c as usize)
+                }
+            }
+        }
+    }
+}
+
+impl LinOp for ConvOp<'_> {
+    fn in_dim(&self) -> usize {
+        self.height * self.width * self.kernel.c_in
+    }
+    fn out_dim(&self) -> usize {
+        self.height * self.width * self.kernel.c_out
+    }
+    fn apply(&self, x: &[f64]) -> Vec<f64> {
+        self.forward(x)
+    }
+    fn apply_t(&self, x: &[f64]) -> Vec<f64> {
+        self.transpose_apply(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::Pcg64;
+
+    #[test]
+    fn identity_kernel_is_identity() {
+        let mut k = ConvKernel::zeros(1, 1, 3, 3);
+        k.set(0, 0, 1, 1, 1.0); // center tap
+        let op = ConvOp::new(&k, 4, 5, Boundary::Periodic);
+        let mut rng = Pcg64::seeded(80);
+        let f = rng.normal_vec(20);
+        let g = op.forward(&f);
+        assert_eq!(f, g);
+    }
+
+    #[test]
+    fn shift_kernel_wraps_periodically() {
+        // Tap at displacement (0, +1) reads the right neighbor.
+        let mut k = ConvKernel::zeros(1, 1, 3, 3);
+        k.set(0, 0, 1, 2, 1.0);
+        let op = ConvOp::new(&k, 1, 4, Boundary::Periodic);
+        let f = vec![1.0, 2.0, 3.0, 4.0];
+        let g = op.forward(&f);
+        assert_eq!(g, vec![2.0, 3.0, 4.0, 1.0]);
+    }
+
+    #[test]
+    fn shift_kernel_dirichlet_drops_boundary() {
+        let mut k = ConvKernel::zeros(1, 1, 3, 3);
+        k.set(0, 0, 1, 2, 1.0);
+        let op = ConvOp::new(&k, 1, 4, Boundary::Dirichlet);
+        let f = vec![1.0, 2.0, 3.0, 4.0];
+        let g = op.forward(&f);
+        assert_eq!(g, vec![2.0, 3.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn channel_mixing() {
+        // 1x1 kernel = pure channel map.
+        let mut k = ConvKernel::zeros(2, 2, 1, 1);
+        k.set(0, 0, 0, 0, 1.0);
+        k.set(0, 1, 0, 0, 2.0);
+        k.set(1, 0, 0, 0, 3.0);
+        k.set(1, 1, 0, 0, 4.0);
+        let op = ConvOp::new(&k, 1, 1, Boundary::Periodic);
+        let g = op.forward(&[1.0, 1.0]);
+        assert_eq!(g, vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_is_adjoint() {
+        // ⟨A f, g⟩ == ⟨f, Aᵀ g⟩ for both boundary conditions.
+        let mut rng = Pcg64::seeded(81);
+        let k = ConvKernel::random_he(3, 2, 3, 3, &mut rng);
+        for bc in [Boundary::Periodic, Boundary::Dirichlet] {
+            let op = ConvOp::new(&k, 5, 6, bc);
+            let f = rng.normal_vec(op.in_dim());
+            let g = rng.normal_vec(op.out_dim());
+            let af = op.forward(&f);
+            let atg = op.transpose_apply(&g);
+            let lhs: f64 = af.iter().zip(&g).map(|(a, b)| a * b).sum();
+            let rhs: f64 = f.iter().zip(&atg).map(|(a, b)| a * b).sum();
+            assert!((lhs - rhs).abs() < 1e-10, "{bc:?}: {lhs} vs {rhs}");
+        }
+    }
+
+    #[test]
+    fn transpose_apply_matches_transposed_kernel_periodic() {
+        // Aᵀ as an operator == conv with transpose_kernel() under periodic BC.
+        let mut rng = Pcg64::seeded(82);
+        let k = ConvKernel::random_he(3, 2, 3, 3, &mut rng);
+        let kt = k.transpose_kernel();
+        let op = ConvOp::new(&k, 4, 4, Boundary::Periodic);
+        let opt = ConvOp::new(&kt, 4, 4, Boundary::Periodic);
+        let g = rng.normal_vec(op.out_dim());
+        let a = op.transpose_apply(&g);
+        let b = opt.forward(&g);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn linearity() {
+        let mut rng = Pcg64::seeded(83);
+        let k = ConvKernel::random_he(2, 2, 3, 3, &mut rng);
+        let op = ConvOp::new(&k, 3, 3, Boundary::Dirichlet);
+        let f1 = rng.normal_vec(op.in_dim());
+        let f2 = rng.normal_vec(op.in_dim());
+        let sum: Vec<f64> = f1.iter().zip(&f2).map(|(a, b)| a + b).collect();
+        let g1 = op.forward(&f1);
+        let g2 = op.forward(&f2);
+        let gs = op.forward(&sum);
+        for i in 0..gs.len() {
+            assert!((gs[i] - g1[i] - g2[i]).abs() < 1e-12);
+        }
+    }
+}

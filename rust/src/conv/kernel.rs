@@ -1,0 +1,206 @@
+//! Convolutional weight tensors.
+//!
+//! Layout is channel-first **OIHW** (`[c_out, c_in, k_h, k_w]`), matching the
+//! PyTorch tensors the paper operates on. A kernel also carries its *anchor*
+//! (the tap that sits on the output pixel), so that the displacement set
+//! `N = {y = (r,c) − anchor}` of the multiplication operators `M_y` in
+//! `(A∗f)(x) = Σ_y M_y f(x+y)` is explicit. Cross-correlation convention
+//! (what deep-learning frameworks call "convolution").
+
+use crate::numeric::{Mat, Pcg64};
+
+/// A dense convolution kernel in OIHW layout.
+#[derive(Clone, Debug)]
+pub struct ConvKernel {
+    pub c_out: usize,
+    pub c_in: usize,
+    pub kh: usize,
+    pub kw: usize,
+    /// Anchor tap (row, col). For odd kernels this is the center.
+    pub anchor: (usize, usize),
+    /// OIHW data: `data[((o·c_in + i)·kh + r)·kw + c]`.
+    pub data: Vec<f64>,
+}
+
+impl ConvKernel {
+    /// Zero-initialized kernel with centered anchor.
+    pub fn zeros(c_out: usize, c_in: usize, kh: usize, kw: usize) -> Self {
+        Self {
+            c_out,
+            c_in,
+            kh,
+            kw,
+            anchor: (kh / 2, kw / 2),
+            data: vec![0.0; c_out * c_in * kh * kw],
+        }
+    }
+
+    /// He/Kaiming-normal initialization — std `√(2 / (c_in·kh·kw))`,
+    /// the standard for ReLU CNNs and what the paper's "random weight
+    /// tensors" look like in practice.
+    pub fn random_he(c_out: usize, c_in: usize, kh: usize, kw: usize, rng: &mut Pcg64) -> Self {
+        let std = (2.0 / (c_in * kh * kw) as f64).sqrt();
+        let mut k = Self::zeros(c_out, c_in, kh, kw);
+        for v in k.data.iter_mut() {
+            *v = rng.normal_with(0.0, std);
+        }
+        k
+    }
+
+    /// Glorot/Xavier-uniform initialization.
+    pub fn random_glorot(c_out: usize, c_in: usize, kh: usize, kw: usize, rng: &mut Pcg64) -> Self {
+        let fan_in = (c_in * kh * kw) as f64;
+        let fan_out = (c_out * kh * kw) as f64;
+        let bound = (6.0 / (fan_in + fan_out)).sqrt();
+        let mut k = Self::zeros(c_out, c_in, kh, kw);
+        for v in k.data.iter_mut() {
+            *v = rng.uniform_in(-bound, bound);
+        }
+        k
+    }
+
+    #[inline(always)]
+    pub fn idx(&self, o: usize, i: usize, r: usize, c: usize) -> usize {
+        debug_assert!(o < self.c_out && i < self.c_in && r < self.kh && c < self.kw);
+        ((o * self.c_in + i) * self.kh + r) * self.kw + c
+    }
+
+    #[inline(always)]
+    pub fn get(&self, o: usize, i: usize, r: usize, c: usize) -> f64 {
+        self.data[self.idx(o, i, r, c)]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, o: usize, i: usize, r: usize, c: usize, v: f64) {
+        let idx = self.idx(o, i, r, c);
+        self.data[idx] = v;
+    }
+
+    /// Displacements `y = (dy, dx)` of every tap relative to the anchor,
+    /// in row-major tap order.
+    pub fn displacements(&self) -> Vec<(isize, isize)> {
+        let (ar, ac) = (self.anchor.0 as isize, self.anchor.1 as isize);
+        let mut ys = Vec::with_capacity(self.kh * self.kw);
+        for r in 0..self.kh as isize {
+            for c in 0..self.kw as isize {
+                ys.push((r - ar, c - ac));
+            }
+        }
+        ys
+    }
+
+    /// The Yoshida–Miyato reshape: `c_out × (c_in·kh·kw)` dense matrix whose
+    /// largest singular value is the (loose) spectral-norm proxy of §II-b.
+    pub fn reshaped_matrix(&self) -> Mat {
+        let cols = self.c_in * self.kh * self.kw;
+        let mut m = Mat::zeros(self.c_out, cols);
+        for o in 0..self.c_out {
+            for i in 0..self.c_in {
+                for r in 0..self.kh {
+                    for c in 0..self.kw {
+                        m[(o, (i * self.kh + r) * self.kw + c)] = self.get(o, i, r, c);
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    /// Total number of parameters.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Frobenius norm of the weight tensor.
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Flip spatially and swap in/out channels: the kernel of the transposed
+    /// operator `Aᵀ` (used by power iteration and the pseudo-inverse checks).
+    pub fn transpose_kernel(&self) -> ConvKernel {
+        let mut t = ConvKernel::zeros(self.c_in, self.c_out, self.kh, self.kw);
+        // Aᵀ has taps W'[i,o,r',c'] = W[o,i,kh−1−r', kw−1−c'] with anchor
+        // mirrored so that displacements negate.
+        t.anchor = (self.kh - 1 - self.anchor.0, self.kw - 1 - self.anchor.1);
+        for o in 0..self.c_out {
+            for i in 0..self.c_in {
+                for r in 0..self.kh {
+                    for c in 0..self.kw {
+                        t.set(i, o, self.kh - 1 - r, self.kw - 1 - c, self.get(o, i, r, c));
+                    }
+                }
+            }
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_roundtrip() {
+        let mut k = ConvKernel::zeros(2, 3, 3, 3);
+        k.set(1, 2, 0, 2, 7.5);
+        assert_eq!(k.get(1, 2, 0, 2), 7.5);
+        assert_eq!(k.data.iter().filter(|&&v| v != 0.0).count(), 1);
+    }
+
+    #[test]
+    fn displacements_centered_3x3() {
+        let k = ConvKernel::zeros(1, 1, 3, 3);
+        let ys = k.displacements();
+        assert_eq!(ys.len(), 9);
+        assert_eq!(ys[0], (-1, -1));
+        assert_eq!(ys[4], (0, 0));
+        assert_eq!(ys[8], (1, 1));
+    }
+
+    #[test]
+    fn he_init_statistics() {
+        let mut rng = Pcg64::seeded(71);
+        let k = ConvKernel::random_he(32, 32, 3, 3, &mut rng);
+        let n = k.data.len() as f64;
+        let mean = k.data.iter().sum::<f64>() / n;
+        let var = k.data.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n;
+        let want = 2.0 / (32.0 * 9.0);
+        assert!(mean.abs() < 0.002, "mean {mean}");
+        assert!((var - want).abs() / want < 0.1, "var {var} want {want}");
+    }
+
+    #[test]
+    fn reshaped_matrix_shape() {
+        let mut rng = Pcg64::seeded(72);
+        let k = ConvKernel::random_he(4, 5, 3, 3, &mut rng);
+        let m = k.reshaped_matrix();
+        assert_eq!((m.rows, m.cols), (4, 45));
+        assert!((m.frobenius_norm() - k.frobenius_norm()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transpose_displacements_negate() {
+        let k = ConvKernel::zeros(2, 3, 3, 5);
+        let t = k.transpose_kernel();
+        let mut ys = k.displacements();
+        let mut yts: Vec<(isize, isize)> = t.displacements().iter().map(|&(a, b)| (-a, -b)).collect();
+        ys.sort_unstable();
+        yts.sort_unstable();
+        assert_eq!(ys, yts);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::seeded(73);
+        let k = ConvKernel::random_he(3, 4, 3, 3, &mut rng);
+        let tt = k.transpose_kernel().transpose_kernel();
+        assert_eq!(tt.c_out, k.c_out);
+        assert_eq!(tt.data, k.data);
+        assert_eq!(tt.anchor, k.anchor);
+    }
+}

@@ -1,0 +1,11 @@
+//! Convolution substrate: weight tensors (OIHW), direct operator
+//! application under periodic/Dirichlet boundary conditions, and explicit
+//! unrolled matrices (dense + CSR) — the paper's Fig. 1a objects.
+
+pub mod apply;
+pub mod kernel;
+pub mod unroll;
+
+pub use apply::{Boundary, ConvOp};
+pub use kernel::ConvKernel;
+pub use unroll::{unroll_csr, unroll_dense, CsrMatrix};

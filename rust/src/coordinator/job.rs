@@ -1,0 +1,128 @@
+//! Job and tile descriptions for the spectral-analysis coordinator.
+
+use crate::conv::ConvKernel;
+use crate::lfa::BlockSolver;
+use std::sync::Arc;
+
+/// Which backend executes the per-tile work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Native rust LFA pipeline (symbol + Jacobi per block).
+    Native,
+    /// AOT-compiled JAX/Pallas artifact via PJRT.
+    Pjrt,
+    /// Prefer PJRT when an artifact matches the layer shape, else native.
+    Auto,
+}
+
+/// A spectral-analysis job: one convolution layer on an `n×m` grid.
+#[derive(Clone)]
+pub struct JobSpec {
+    /// Stable identifier for reporting.
+    pub id: String,
+    pub kernel: Arc<ConvKernel>,
+    pub n: usize,
+    pub m: usize,
+    pub solver: BlockSolver,
+    pub backend: Backend,
+    /// Frequency rows per tile (0 = pick automatically).
+    pub tile_rows: usize,
+}
+
+impl JobSpec {
+    pub fn new(id: impl Into<String>, kernel: ConvKernel, n: usize, m: usize) -> Self {
+        Self {
+            id: id.into(),
+            kernel: Arc::new(kernel),
+            n,
+            m,
+            solver: BlockSolver::Jacobi,
+            backend: Backend::Auto,
+            tile_rows: 0,
+        }
+    }
+
+    pub fn with_backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn with_solver(mut self, solver: BlockSolver) -> Self {
+        self.solver = solver;
+        self
+    }
+
+    pub fn with_tile_rows(mut self, rows: usize) -> Self {
+        self.tile_rows = rows;
+        self
+    }
+
+    /// Values per frequency.
+    pub fn rank(&self) -> usize {
+        self.kernel.c_out.min(self.kernel.c_in)
+    }
+
+    /// Total singular values of the full grid.
+    pub fn total_values(&self) -> usize {
+        self.n * self.m * self.rank()
+    }
+
+    /// Tile size heuristic: aim for ≥ 8 tiles per worker for load balance
+    /// while keeping tiles ≥ 1 row.
+    pub fn effective_tile_rows(&self, workers: usize) -> usize {
+        if self.tile_rows > 0 {
+            return self.tile_rows.min(self.n);
+        }
+        let target_tiles = (workers * 8).max(1);
+        (self.n.div_ceil(target_tiles)).max(1)
+    }
+}
+
+/// One unit of scheduled work: frequency rows `[row_lo, row_hi)` of a job.
+#[derive(Clone)]
+pub struct Tile {
+    pub job: Arc<JobSpec>,
+    pub row_lo: usize,
+    pub row_hi: usize,
+}
+
+impl Tile {
+    pub fn num_values(&self) -> usize {
+        (self.row_hi - self.row_lo) * self.job.m * self.job.rank()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::Pcg64;
+
+    fn job(n: usize) -> JobSpec {
+        let mut rng = Pcg64::seeded(1);
+        JobSpec::new("t", ConvKernel::random_he(4, 3, 3, 3, &mut rng), n, n)
+    }
+
+    #[test]
+    fn totals() {
+        let j = job(8);
+        assert_eq!(j.rank(), 3);
+        assert_eq!(j.total_values(), 8 * 8 * 3);
+    }
+
+    #[test]
+    fn tile_heuristic_bounds() {
+        let j = job(64);
+        let t = j.effective_tile_rows(4);
+        assert!(t >= 1 && t <= 64);
+        assert!(64usize.div_ceil(t) >= 16, "enough tiles for 4 workers");
+        // explicit override wins
+        let j2 = job(64).with_tile_rows(5);
+        assert_eq!(j2.effective_tile_rows(4), 5);
+    }
+
+    #[test]
+    fn tiny_grids_get_one_row_tiles() {
+        let j = job(2);
+        assert!(j.effective_tile_rows(16) >= 1);
+    }
+}

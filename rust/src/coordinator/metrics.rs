@@ -1,0 +1,82 @@
+//! Lightweight atomic metrics for the coordinator (no external deps).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Shared counters. All methods are lock-free; snapshot with [`Metrics::snapshot`].
+#[derive(Default)]
+pub struct Metrics {
+    pub jobs_submitted: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    pub tiles_dispatched: AtomicU64,
+    pub tiles_completed: AtomicU64,
+    pub values_computed: AtomicU64,
+    /// Nanoseconds spent inside per-tile work, summed over workers.
+    pub tile_work_nanos: AtomicU64,
+    /// Tiles executed on the PJRT backend.
+    pub pjrt_tiles: AtomicU64,
+    /// Tiles executed natively.
+    pub native_tiles: AtomicU64,
+}
+
+/// A point-in-time copy of the counters.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    pub jobs_failed: u64,
+    pub tiles_dispatched: u64,
+    pub tiles_completed: u64,
+    pub values_computed: u64,
+    pub tile_work: Duration,
+    pub pjrt_tiles: u64,
+    pub native_tiles: u64,
+}
+
+impl Metrics {
+    pub fn record_tile(&self, values: usize, elapsed: Duration, pjrt: bool) {
+        self.tiles_completed.fetch_add(1, Ordering::Relaxed);
+        self.values_computed.fetch_add(values as u64, Ordering::Relaxed);
+        self.tile_work_nanos.fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+        if pjrt {
+            self.pjrt_tiles.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.native_tiles.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
+            jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
+            jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
+            tiles_dispatched: self.tiles_dispatched.load(Ordering::Relaxed),
+            tiles_completed: self.tiles_completed.load(Ordering::Relaxed),
+            values_computed: self.values_computed.load(Ordering::Relaxed),
+            tile_work: Duration::from_nanos(self.tile_work_nanos.load(Ordering::Relaxed)),
+            pjrt_tiles: self.pjrt_tiles.load(Ordering::Relaxed),
+            native_tiles: self.native_tiles.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::default();
+        m.jobs_submitted.fetch_add(2, Ordering::Relaxed);
+        m.record_tile(64, Duration::from_millis(3), true);
+        m.record_tile(64, Duration::from_millis(2), false);
+        let s = m.snapshot();
+        assert_eq!(s.jobs_submitted, 2);
+        assert_eq!(s.tiles_completed, 2);
+        assert_eq!(s.values_computed, 128);
+        assert_eq!(s.pjrt_tiles, 1);
+        assert_eq!(s.native_tiles, 1);
+        assert_eq!(s.tile_work, Duration::from_millis(5));
+    }
+}

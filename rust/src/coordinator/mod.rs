@@ -1,0 +1,15 @@
+//! L3 coordinator: frequency-tile scheduling across a worker pool, with
+//! native and PJRT backends, metrics, and the high-level
+//! [`SpectralService`] API. This is the system expression of the paper's
+//! "embarrassingly parallel" remark (§V): tiles of the dual grid are
+//! independent, so the spectrum of a layer scales out trivially.
+
+pub mod job;
+pub mod metrics;
+pub mod scheduler;
+pub mod service;
+
+pub use job::{Backend, JobSpec, Tile};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use scheduler::{JobResult, Scheduler, SchedulerConfig};
+pub use service::{analyze, LayerReport, ServiceConfig, SpectralService};

@@ -1,0 +1,302 @@
+//! Frequency-tile scheduler: the L3 realization of the paper's closing
+//! observation — *"unlike the FFT, the LFA is embarrassingly parallel."*
+//!
+//! A job's `n×m` frequency grid is cut into row tiles; a pool of worker
+//! threads pulls tiles from a shared queue (work stealing by construction),
+//! computes each tile's singular values — natively or through the PJRT
+//! executor — and writes them into the job's result buffer. A bounded
+//! submission channel provides backpressure when jobs arrive faster than
+//! workers drain them.
+
+use super::job::{Backend, JobSpec, Tile};
+use super::metrics::Metrics;
+use crate::lfa;
+use crate::runtime::{ArtifactSpec, PjrtExecutor};
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+/// Scheduler configuration.
+#[derive(Clone)]
+pub struct SchedulerConfig {
+    /// Worker threads for native tiles.
+    pub workers: usize,
+    /// Bounded queue depth for submitted jobs (backpressure).
+    pub queue_depth: usize,
+    /// Artifact manifest (empty = native only).
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self {
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            queue_depth: 16,
+            artifacts: Vec::new(),
+        }
+    }
+}
+
+/// Result of one job.
+pub struct JobResult {
+    pub id: String,
+    pub spectrum: lfa::Spectrum,
+    /// Wall-clock for the whole job.
+    pub elapsed: std::time::Duration,
+    /// Tiles executed via PJRT / natively.
+    pub pjrt_tiles: usize,
+    pub native_tiles: usize,
+}
+
+struct JobState {
+    spec: Arc<JobSpec>,
+    values: Mutex<Vec<f64>>,
+    remaining: AtomicUsize,
+    pjrt_tiles: AtomicUsize,
+    native_tiles: AtomicUsize,
+    started: Instant,
+    done_tx: mpsc::Sender<Result<JobResult>>,
+    /// Artifact chosen for this job (None = native).
+    artifact: Option<ArtifactSpec>,
+    /// Pre-converted f32 weights for the PJRT path.
+    weights_f32: Vec<f32>,
+}
+
+enum Work {
+    Tile { state: Arc<JobState>, tile: Tile },
+    Shutdown,
+}
+
+/// The tile scheduler & worker pool.
+pub struct Scheduler {
+    work_tx: mpsc::SyncSender<Work>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    config: SchedulerConfig,
+    executor: Option<PjrtExecutor>,
+}
+
+impl Scheduler {
+    /// Start the pool. If `executor` is `Some`, jobs whose shape matches an
+    /// artifact may run on PJRT (per their backend policy).
+    pub fn start(config: SchedulerConfig, executor: Option<PjrtExecutor>) -> Self {
+        let (work_tx, work_rx) = mpsc::sync_channel::<Work>(config.queue_depth.max(1) * 4);
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let metrics = Arc::new(Metrics::default());
+        let mut workers = Vec::with_capacity(config.workers);
+        for w in 0..config.workers.max(1) {
+            let rx = Arc::clone(&work_rx);
+            let metrics = Arc::clone(&metrics);
+            let executor = executor.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("lfa-worker-{w}"))
+                    .spawn(move || worker_loop(rx, metrics, executor))
+                    .expect("spawning worker"),
+            );
+        }
+        Self { work_tx, workers, metrics, config, executor }
+    }
+
+    /// Convenience: native-only scheduler.
+    pub fn native(workers: usize) -> Self {
+        Self::start(
+            SchedulerConfig { workers, ..Default::default() },
+            None,
+        )
+    }
+
+    /// Submit a job; returns a receiver for its result. Blocks (backpressure)
+    /// if the work queue is full.
+    pub fn submit(&self, spec: JobSpec) -> mpsc::Receiver<Result<JobResult>> {
+        let (done_tx, done_rx) = mpsc::channel();
+        self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        let spec = Arc::new(spec);
+        let artifact = self.pick_artifact(&spec);
+        let tile_rows = match &artifact {
+            Some(a) if !a.is_whole_grid() => a.tile_rows,
+            Some(a) => a.tile_rows, // whole grid = single tile
+            None => spec.effective_tile_rows(self.config.workers),
+        };
+        let tiles: Vec<(usize, usize)> = {
+            let mut v = Vec::new();
+            let mut lo = 0;
+            while lo < spec.n {
+                v.push((lo, (lo + tile_rows).min(spec.n)));
+                lo += tile_rows;
+            }
+            v
+        };
+        let weights_f32 = if artifact.is_some() {
+            spec.kernel.data.iter().map(|&v| v as f32).collect()
+        } else {
+            Vec::new()
+        };
+        let state = Arc::new(JobState {
+            spec: Arc::clone(&spec),
+            values: Mutex::new(vec![0.0; spec.total_values()]),
+            remaining: AtomicUsize::new(tiles.len()),
+            pjrt_tiles: AtomicUsize::new(0),
+            native_tiles: AtomicUsize::new(0),
+            started: Instant::now(),
+            done_tx,
+            artifact,
+            weights_f32,
+        });
+        for (lo, hi) in tiles {
+            self.metrics.tiles_dispatched.fetch_add(1, Ordering::Relaxed);
+            let tile = Tile { job: Arc::clone(&spec), row_lo: lo, row_hi: hi };
+            // SyncSender blocks when full — this is the backpressure point.
+            self.work_tx
+                .send(Work::Tile { state: Arc::clone(&state), tile })
+                .expect("worker pool is gone");
+        }
+        done_rx
+    }
+
+    /// Submit and wait.
+    pub fn run(&self, spec: JobSpec) -> Result<JobResult> {
+        let rx = self.submit(spec);
+        rx.recv().map_err(|_| anyhow!("job dropped without a result"))?
+    }
+
+    fn pick_artifact(&self, spec: &JobSpec) -> Option<ArtifactSpec> {
+        if self.executor.is_none() || spec.backend == Backend::Native {
+            return None;
+        }
+        let k = &spec.kernel;
+        let found = crate::runtime::select(
+            &self.config.artifacts,
+            spec.n,
+            spec.m,
+            k.c_out,
+            k.c_in,
+            k.kh,
+            k.kw,
+            true,
+        )
+        .cloned();
+        if found.is_none() && spec.backend == Backend::Pjrt {
+            // Explicit PJRT requested but no artifact: the job will fail in
+            // the worker; surfacing it here keeps submit() infallible.
+        }
+        found
+    }
+
+    /// Graceful shutdown: waits for queued work to finish.
+    pub fn shutdown(self) {
+        for _ in &self.workers {
+            let _ = self.work_tx.send(Work::Shutdown);
+        }
+        drop(self.work_tx);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<mpsc::Receiver<Work>>>,
+    metrics: Arc<Metrics>,
+    executor: Option<PjrtExecutor>,
+) {
+    loop {
+        let work = {
+            let guard = rx.lock().expect("queue poisoned");
+            guard.recv()
+        };
+        match work {
+            Ok(Work::Tile { state, tile }) => {
+                let t0 = Instant::now();
+                let outcome = run_tile(&state, &tile, executor.as_ref());
+                let used_pjrt = matches!(outcome, Ok(true));
+                match outcome {
+                    Ok(_) => {
+                        metrics.record_tile(tile.num_values(), t0.elapsed(), used_pjrt);
+                        if used_pjrt {
+                            state.pjrt_tiles.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            state.native_tiles.fetch_add(1, Ordering::Relaxed);
+                        }
+                        if state.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                            finish_job(&state, &metrics);
+                        }
+                    }
+                    Err(e) => {
+                        metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                        let _ = state.done_tx.send(Err(e));
+                    }
+                }
+            }
+            Ok(Work::Shutdown) | Err(_) => return,
+        }
+    }
+}
+
+/// Execute one tile. Returns Ok(true) if it ran via PJRT.
+fn run_tile(state: &JobState, tile: &Tile, executor: Option<&PjrtExecutor>) -> Result<bool> {
+    let spec = &state.spec;
+    let r = spec.rank();
+    let (values, used_pjrt): (Vec<f64>, bool) = match (&state.artifact, executor) {
+        (Some(art), Some(exec)) => {
+            // PJRT path: the artifact computes `art.tile_rows` rows per call.
+            let mut vals = Vec::with_capacity(tile.num_values());
+            let mut row = tile.row_lo;
+            while row < tile.row_hi {
+                let reply = exec.run_tile(art, &state.weights_f32, row as i32)?;
+                let take = ((tile.row_hi - row).min(art.tile_rows)) * spec.m * r;
+                vals.extend(reply.values[..take].iter().map(|&v| v as f64));
+                row += art.tile_rows;
+            }
+            (vals, true)
+        }
+        _ => {
+            if state.artifact.is_none() && spec.backend == Backend::Pjrt {
+                return Err(anyhow!(
+                    "job {}: PJRT backend requested but no artifact matches \
+                     (n={}, c_out={}, c_in={}); run `make artifacts` or use Backend::Auto",
+                    spec.id,
+                    spec.n,
+                    spec.kernel.c_out,
+                    spec.kernel.c_in
+                ));
+            }
+            (
+                lfa::tile_singular_values(
+                    &spec.kernel,
+                    spec.n,
+                    spec.m,
+                    tile.row_lo,
+                    tile.row_hi,
+                    spec.solver,
+                ),
+                false,
+            )
+        }
+    };
+    let base = tile.row_lo * spec.m * r;
+    let mut buf = state.values.lock().expect("values poisoned");
+    buf[base..base + values.len()].copy_from_slice(&values);
+    Ok(used_pjrt)
+}
+
+fn finish_job(state: &JobState, metrics: &Metrics) {
+    let spec = &state.spec;
+    let values = std::mem::take(&mut *state.values.lock().expect("values poisoned"));
+    let spectrum = lfa::Spectrum {
+        n: spec.n,
+        m: spec.m,
+        c_out: spec.kernel.c_out,
+        c_in: spec.kernel.c_in,
+        values,
+    };
+    metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+    let _ = state.done_tx.send(Ok(JobResult {
+        id: spec.id.clone(),
+        spectrum,
+        elapsed: state.started.elapsed(),
+        pjrt_tiles: state.pjrt_tiles.load(Ordering::Relaxed),
+        native_tiles: state.native_tiles.load(Ordering::Relaxed),
+    }));
+}

@@ -1,0 +1,195 @@
+//! High-level spectral-analysis service: the API the CLI and examples use.
+//!
+//! Wraps the scheduler + PJRT executor + artifact manifest into a single
+//! object that analyzes layers and whole models, verifies results against
+//! the Frobenius identity, and reports per-layer spectral summaries.
+
+use super::job::{Backend, JobSpec};
+use super::metrics::MetricsSnapshot;
+use super::scheduler::{JobResult, Scheduler, SchedulerConfig};
+use crate::conv::ConvKernel;
+use crate::lfa::{self, BlockSolver};
+use crate::model::config::ModelConfig;
+use crate::runtime::{load_manifest, PjrtExecutor};
+use anyhow::Result;
+use std::path::Path;
+use std::time::Duration;
+
+/// Service configuration.
+#[derive(Clone)]
+pub struct ServiceConfig {
+    pub workers: usize,
+    pub backend: Backend,
+    pub solver: BlockSolver,
+    /// Artifacts directory (None = native only).
+    pub artifacts_dir: Option<std::path::PathBuf>,
+    /// Verify each spectrum against the Frobenius identity.
+    pub verify: bool,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            backend: Backend::Auto,
+            solver: BlockSolver::Jacobi,
+            artifacts_dir: None,
+            verify: true,
+        }
+    }
+}
+
+/// Per-layer analysis report.
+pub struct LayerReport {
+    pub name: String,
+    pub n: usize,
+    pub m: usize,
+    pub c_out: usize,
+    pub c_in: usize,
+    pub num_values: usize,
+    pub sigma_max: f64,
+    pub sigma_min: f64,
+    pub condition: f64,
+    pub elapsed: Duration,
+    pub pjrt_tiles: usize,
+    pub native_tiles: usize,
+    /// Relative Frobenius-identity defect (NaN when verification is off).
+    pub frobenius_defect: f64,
+    pub spectrum: lfa::Spectrum,
+}
+
+/// The spectral-analysis service.
+pub struct SpectralService {
+    scheduler: Scheduler,
+    config: ServiceConfig,
+}
+
+impl SpectralService {
+    /// Start the service. Loads the artifact manifest and spawns the PJRT
+    /// executor when an artifacts directory is configured; falls back to
+    /// native-only (with a warning) when PJRT cannot start.
+    pub fn start(config: ServiceConfig) -> Result<Self> {
+        let (artifacts, executor) = match &config.artifacts_dir {
+            Some(dir) if dir.join("manifest.txt").exists() => {
+                let specs = load_manifest(dir)?;
+                match PjrtExecutor::spawn() {
+                    Ok(exec) => (specs, Some(exec)),
+                    Err(e) => {
+                        eprintln!("warning: PJRT unavailable ({e}); native only");
+                        (Vec::new(), None)
+                    }
+                }
+            }
+            Some(dir) => {
+                eprintln!(
+                    "warning: no manifest at {}; run `make artifacts`. native only",
+                    dir.display()
+                );
+                (Vec::new(), None)
+            }
+            None => (Vec::new(), None),
+        };
+        let scheduler = Scheduler::start(
+            SchedulerConfig { workers: config.workers, queue_depth: 16, artifacts },
+            executor,
+        );
+        Ok(Self { scheduler, config })
+    }
+
+    /// Native-only service with `workers` threads.
+    pub fn native(workers: usize) -> Self {
+        Self {
+            scheduler: Scheduler::native(workers),
+            config: ServiceConfig { workers, ..Default::default() },
+        }
+    }
+
+    /// Analyze a single layer.
+    pub fn analyze_layer(
+        &self,
+        name: &str,
+        kernel: &ConvKernel,
+        n: usize,
+        m: usize,
+    ) -> Result<LayerReport> {
+        let spec = JobSpec::new(name, kernel.clone(), n, m)
+            .with_backend(self.config.backend)
+            .with_solver(self.config.solver);
+        let result = self.scheduler.run(spec)?;
+        Ok(self.report(name, kernel, n, m, result))
+    }
+
+    /// Analyze every conv layer of a model config (weights He-initialized
+    /// from the config's seed — the paper's "random weight tensors").
+    pub fn audit_model(&self, model: &ModelConfig) -> Result<Vec<LayerReport>> {
+        // Submit all layers first (the queue pipelines them), then collect.
+        let mut pending = Vec::new();
+        for layer in &model.layers {
+            let kernel = layer.materialize(model.seed);
+            let spec = JobSpec::new(&layer.name, kernel.clone(), layer.height, layer.width)
+                .with_backend(self.config.backend)
+                .with_solver(self.config.solver);
+            let rx = self.scheduler.submit(spec);
+            pending.push((layer.clone(), kernel, rx));
+        }
+        let mut reports = Vec::new();
+        for (layer, kernel, rx) in pending {
+            let result = rx.recv().map_err(|_| anyhow::anyhow!("job dropped"))??;
+            reports.push(self.report(&layer.name, &kernel, layer.height, layer.width, result));
+        }
+        Ok(reports)
+    }
+
+    fn report(
+        &self,
+        name: &str,
+        kernel: &ConvKernel,
+        n: usize,
+        m: usize,
+        result: JobResult,
+    ) -> LayerReport {
+        let defect = if self.config.verify {
+            lfa::svd::frobenius_check(kernel, n, m, &result.spectrum)
+        } else {
+            f64::NAN
+        };
+        LayerReport {
+            name: name.to_string(),
+            n,
+            m,
+            c_out: kernel.c_out,
+            c_in: kernel.c_in,
+            num_values: result.spectrum.num_values(),
+            sigma_max: result.spectrum.sigma_max(),
+            sigma_min: result.spectrum.sigma_min(),
+            condition: result.spectrum.condition_number(),
+            elapsed: result.elapsed,
+            pjrt_tiles: result.pjrt_tiles,
+            native_tiles: result.native_tiles,
+            frobenius_defect: defect,
+            spectrum: result.spectrum,
+        }
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.scheduler.metrics.snapshot()
+    }
+
+    pub fn shutdown(self) {
+        self.scheduler.shutdown();
+    }
+
+    /// Helper used by examples: discover the default artifacts directory
+    /// relative to the crate root.
+    pub fn default_artifacts_dir() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+}
+
+/// Convenience free function mirroring the paper's Algorithm 1 entry point.
+pub fn analyze(kernel: &ConvKernel, n: usize, m: usize, workers: usize) -> Result<LayerReport> {
+    let svc = SpectralService::native(workers);
+    let rep = svc.analyze_layer("layer", kernel, n, m)?;
+    svc.shutdown();
+    Ok(rep)
+}

@@ -1,0 +1,223 @@
+//! Fast Fourier transform substrate (no rustfft in the offline crate set).
+//!
+//! Provides an in-place iterative radix-2 Cooley–Tukey FFT with precomputed
+//! twiddle tables, a Bluestein (chirp-z) fallback for arbitrary lengths, and
+//! row–column 2-D transforms. This is the engine of the *FFT baseline*
+//! (Sedghi et al. 2019): pad each `c_out×c_in` filter plane to `n×m`,
+//! transform, and SVD the per-frequency blocks.
+
+pub mod plan;
+
+pub use plan::FftPlan;
+
+use crate::numeric::C64;
+
+/// Direction of the transform.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    Forward,
+    Inverse,
+}
+
+/// One-shot forward FFT of arbitrary length (plan cached internally per call).
+pub fn fft(data: &mut [C64]) {
+    FftPlan::new(data.len()).forward(data);
+}
+
+/// One-shot inverse FFT (normalized by `1/n`).
+pub fn ifft(data: &mut [C64]) {
+    FftPlan::new(data.len()).inverse(data);
+}
+
+/// Naive `O(n²)` DFT — the correctness oracle for tests.
+pub fn dft_reference(data: &[C64], dir: Direction) -> Vec<C64> {
+    let n = data.len();
+    let sign = match dir {
+        Direction::Forward => -1.0,
+        Direction::Inverse => 1.0,
+    };
+    let mut out = vec![C64::ZERO; n];
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut acc = C64::ZERO;
+        for (j, &x) in data.iter().enumerate() {
+            let theta = sign * 2.0 * std::f64::consts::PI * (k * j % n) as f64 / n as f64;
+            acc = acc.mul_add(x, C64::cis(theta));
+        }
+        *o = if dir == Direction::Inverse { acc.scale(1.0 / n as f64) } else { acc };
+    }
+    out
+}
+
+/// 2-D forward FFT over a row-major `rows×cols` grid, in place.
+pub fn fft2(data: &mut [C64], rows: usize, cols: usize) {
+    fft2_dir(data, rows, cols, Direction::Forward);
+}
+
+/// 2-D inverse FFT (normalized), in place.
+pub fn ifft2(data: &mut [C64], rows: usize, cols: usize) {
+    fft2_dir(data, rows, cols, Direction::Inverse);
+}
+
+fn fft2_dir(data: &mut [C64], rows: usize, cols: usize, dir: Direction) {
+    assert_eq!(data.len(), rows * cols, "grid shape mismatch");
+    let row_plan = FftPlan::new(cols);
+    let col_plan = FftPlan::new(rows);
+    // Transform rows (contiguous).
+    for r in 0..rows {
+        let row = &mut data[r * cols..(r + 1) * cols];
+        row_plan.transform(row, dir);
+    }
+    // Transform columns via gather/scatter through a scratch buffer.
+    let mut scratch = vec![C64::ZERO; rows];
+    for c in 0..cols {
+        for r in 0..rows {
+            scratch[r] = data[r * cols + c];
+        }
+        col_plan.transform(&mut scratch, dir);
+        for r in 0..rows {
+            data[r * cols + c] = scratch[r];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::{c64, Pcg64};
+
+    fn rand_signal(n: usize, seed: u64) -> Vec<C64> {
+        let mut rng = Pcg64::seeded(seed);
+        (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect()
+    }
+
+    fn max_err(a: &[C64], b: &[C64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (*x - *y).abs()).fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn matches_dft_power_of_two() {
+        for &n in &[1usize, 2, 4, 8, 64, 256] {
+            let x = rand_signal(n, 100 + n as u64);
+            let want = dft_reference(&x, Direction::Forward);
+            let mut got = x.clone();
+            fft(&mut got);
+            assert!(max_err(&got, &want) < 1e-9 * (n as f64), "n={n}");
+        }
+    }
+
+    #[test]
+    fn matches_dft_arbitrary_lengths() {
+        for &n in &[3usize, 5, 6, 7, 12, 15, 17, 31, 100] {
+            let x = rand_signal(n, 200 + n as u64);
+            let want = dft_reference(&x, Direction::Forward);
+            let mut got = x.clone();
+            fft(&mut got);
+            assert!(max_err(&got, &want) < 1e-8 * (n as f64).max(1.0), "n={n}");
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        for &n in &[8usize, 12, 17, 64, 100] {
+            let x = rand_signal(n, 300 + n as u64);
+            let mut y = x.clone();
+            fft(&mut y);
+            ifft(&mut y);
+            assert!(max_err(&x, &y) < 1e-10 * (n as f64), "n={n}");
+        }
+    }
+
+    #[test]
+    fn impulse_is_flat() {
+        let n = 16;
+        let mut x = vec![C64::ZERO; n];
+        x[0] = C64::ONE;
+        fft(&mut x);
+        for v in &x {
+            assert!((v.re - 1.0).abs() < 1e-12 && v.im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn parseval() {
+        let n = 128;
+        let x = rand_signal(n, 7);
+        let mut y = x.clone();
+        fft(&mut y);
+        let e_time: f64 = x.iter().map(|v| v.norm_sqr()).sum();
+        let e_freq: f64 = y.iter().map(|v| v.norm_sqr()).sum::<f64>() / n as f64;
+        assert!((e_time - e_freq).abs() < 1e-8 * e_time);
+    }
+
+    #[test]
+    fn linearity() {
+        let n = 32;
+        let a = rand_signal(n, 8);
+        let b = rand_signal(n, 9);
+        let sum: Vec<C64> = a.iter().zip(&b).map(|(x, y)| *x + *y).collect();
+        let mut fa = a.clone();
+        let mut fb = b.clone();
+        let mut fs = sum.clone();
+        fft(&mut fa);
+        fft(&mut fb);
+        fft(&mut fs);
+        let lin: Vec<C64> = fa.iter().zip(&fb).map(|(x, y)| *x + *y).collect();
+        assert!(max_err(&fs, &lin) < 1e-10);
+    }
+
+    #[test]
+    fn fft2_matches_row_col_dft() {
+        let (r, c) = (6usize, 8usize);
+        let x = rand_signal(r * c, 10);
+        // Reference: DFT rows then cols.
+        let mut want = x.clone();
+        for i in 0..r {
+            let row: Vec<C64> = want[i * c..(i + 1) * c].to_vec();
+            let f = dft_reference(&row, Direction::Forward);
+            want[i * c..(i + 1) * c].copy_from_slice(&f);
+        }
+        for j in 0..c {
+            let col: Vec<C64> = (0..r).map(|i| want[i * c + j]).collect();
+            let f = dft_reference(&col, Direction::Forward);
+            for i in 0..r {
+                want[i * c + j] = f[i];
+            }
+        }
+        let mut got = x.clone();
+        fft2(&mut got, r, c);
+        assert!(max_err(&got, &want) < 1e-9);
+    }
+
+    #[test]
+    fn fft2_roundtrip() {
+        let (r, c) = (16usize, 12usize);
+        let x = rand_signal(r * c, 11);
+        let mut y = x.clone();
+        fft2(&mut y, r, c);
+        ifft2(&mut y, r, c);
+        assert!(max_err(&x, &y) < 1e-9);
+    }
+
+    #[test]
+    fn shift_theorem() {
+        // x[(j+1) mod n] ↦ X[k]·e^{2πik/n}
+        let n = 64;
+        let x = rand_signal(n, 12);
+        let mut shifted: Vec<C64> = (0..n).map(|j| x[(j + 1) % n]).collect();
+        let mut fx = x.clone();
+        fft(&mut fx);
+        fft(&mut shifted);
+        for k in 0..n {
+            let phase = C64::cis(2.0 * std::f64::consts::PI * k as f64 / n as f64);
+            let want = fx[k] * phase;
+            assert!((shifted[k] - want).abs() < 1e-9, "k={k}");
+        }
+    }
+
+    #[test]
+    fn single_element() {
+        let mut x = vec![c64(3.0, -2.0)];
+        fft(&mut x);
+        assert_eq!(x[0], c64(3.0, -2.0));
+    }
+}

@@ -1,0 +1,169 @@
+//! FFT execution plans: precomputed twiddles + bit-reversal for radix-2,
+//! Bluestein chirp-z machinery for arbitrary lengths.
+
+use super::Direction;
+use crate::numeric::C64;
+use std::f64::consts::PI;
+
+enum Algo {
+    /// Iterative radix-2 Cooley–Tukey (n = 2^k).
+    Radix2 {
+        /// Bit-reversal permutation.
+        rev: Vec<u32>,
+        /// Forward twiddles, grouped per stage: for stage length `len`,
+        /// `len/2` factors `e^{-2πi j/len}`, stages concatenated.
+        twiddles: Vec<C64>,
+    },
+    /// Bluestein chirp-z: any n via a radix-2 convolution of length m ≥ 2n−1.
+    Bluestein {
+        m: usize,
+        inner: Box<FftPlan>,
+        /// Chirp `e^{-iπ j²/n}` for j in 0..n (forward convention).
+        chirp: Vec<C64>,
+        /// FFT of the zero-padded conjugate-chirp filter, forward direction.
+        filter_fft: Vec<C64>,
+    },
+}
+
+/// A reusable transform plan for a fixed length.
+pub struct FftPlan {
+    n: usize,
+    algo: Algo,
+}
+
+impl FftPlan {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0, "FFT length must be positive");
+        let algo = if n.is_power_of_two() {
+            Algo::Radix2 { rev: bit_reversal(n), twiddles: stage_twiddles(n) }
+        } else {
+            let m = (2 * n - 1).next_power_of_two();
+            let inner = Box::new(FftPlan::new(m));
+            let chirp: Vec<C64> = (0..n)
+                .map(|j| {
+                    // j² mod 2n keeps the angle argument small for huge n.
+                    let jj = (j * j) % (2 * n);
+                    C64::cis(-PI * jj as f64 / n as f64)
+                })
+                .collect();
+            // Filter b[j] = conj(chirp[|j|]) wrapped into length m.
+            let mut b = vec![C64::ZERO; m];
+            b[0] = chirp[0].conj();
+            for j in 1..n {
+                b[j] = chirp[j].conj();
+                b[m - j] = chirp[j].conj();
+            }
+            inner.transform(&mut b, Direction::Forward);
+            Algo::Bluestein { m, inner, chirp, filter_fft: b }
+        };
+        FftPlan { n, algo }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn forward(&self, data: &mut [C64]) {
+        self.transform(data, Direction::Forward);
+    }
+
+    /// Inverse transform, normalized by `1/n`.
+    pub fn inverse(&self, data: &mut [C64]) {
+        self.transform(data, Direction::Inverse);
+    }
+
+    /// Run the plan in the given direction (inverse includes the `1/n`).
+    pub fn transform(&self, data: &mut [C64], dir: Direction) {
+        assert_eq!(data.len(), self.n, "plan length mismatch");
+        match &self.algo {
+            Algo::Radix2 { rev, twiddles } => {
+                // Inverse via conjugation: IFFT(x) = conj(FFT(conj(x)))/n.
+                if dir == Direction::Inverse {
+                    for v in data.iter_mut() {
+                        *v = v.conj();
+                    }
+                }
+                radix2_forward(data, rev, twiddles);
+                if dir == Direction::Inverse {
+                    let s = 1.0 / self.n as f64;
+                    for v in data.iter_mut() {
+                        *v = v.conj().scale(s);
+                    }
+                }
+            }
+            Algo::Bluestein { m, inner, chirp, filter_fft } => {
+                let n = self.n;
+                let conj_in = dir == Direction::Inverse;
+                let mut a = vec![C64::ZERO; *m];
+                for j in 0..n {
+                    let x = if conj_in { data[j].conj() } else { data[j] };
+                    a[j] = x * chirp[j];
+                }
+                inner.transform(&mut a, Direction::Forward);
+                for (av, bv) in a.iter_mut().zip(filter_fft.iter()) {
+                    *av = *av * *bv;
+                }
+                inner.transform(&mut a, Direction::Inverse);
+                for j in 0..n {
+                    let y = a[j] * chirp[j];
+                    data[j] = if conj_in { y.conj().scale(1.0 / n as f64) } else { y };
+                }
+            }
+        }
+    }
+}
+
+fn bit_reversal(n: usize) -> Vec<u32> {
+    let bits = n.trailing_zeros();
+    (0..n as u32).map(|i| i.reverse_bits() >> (32 - bits.max(1)) as u32).collect()
+}
+
+fn stage_twiddles(n: usize) -> Vec<C64> {
+    let mut tw = Vec::with_capacity(n.max(1));
+    let mut len = 2;
+    while len <= n {
+        let half = len / 2;
+        for j in 0..half {
+            tw.push(C64::cis(-2.0 * PI * j as f64 / len as f64));
+        }
+        len <<= 1;
+    }
+    tw
+}
+
+fn radix2_forward(data: &mut [C64], rev: &[u32], twiddles: &[C64]) {
+    let n = data.len();
+    if n == 1 {
+        return;
+    }
+    // Bit-reverse permutation.
+    for i in 0..n {
+        let j = rev[i] as usize;
+        if i < j {
+            data.swap(i, j);
+        }
+    }
+    // Butterfly stages with precomputed twiddles.
+    let mut len = 2;
+    let mut tw_off = 0;
+    while len <= n {
+        let half = len / 2;
+        let tws = &twiddles[tw_off..tw_off + half];
+        let mut base = 0;
+        while base < n {
+            for j in 0..half {
+                let u = data[base + j];
+                let v = data[base + j + half] * tws[j];
+                data[base + j] = u + v;
+                data[base + j + half] = u - v;
+            }
+            base += len;
+        }
+        tw_off += half;
+        len <<= 1;
+    }
+}

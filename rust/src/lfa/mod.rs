@@ -1,0 +1,24 @@
+//! Local Fourier Analysis of convolutional mappings — the paper's core
+//! contribution.
+//!
+//! - [`symbol`]: symbol computation `A_k = Σ_y M_y e^{2πi⟨k,y⟩}` (Algorithm
+//!   1 line 5), phase-factored, tile-shardable, with layout control.
+//! - [`spectrum`]: spectra and full per-frequency SVD containers.
+//! - [`svd`]: the end-to-end pipeline with stage timing (Tables II–IV) and
+//!   spectral transfer functions for the application modules.
+
+pub mod spectrum;
+pub mod stride;
+pub mod svd;
+pub mod symbol;
+
+pub use spectrum::{FullSvd, Spectrum};
+pub use stride::{strided_singular_values, strided_symbol_at};
+pub use svd::{
+    singular_values, singular_values_timed, svd_full, tile_singular_values, BlockSolver,
+    LfaOptions, StageTiming,
+};
+pub use symbol::{
+    compute_symbols, compute_symbols_parallel, symbol_at, taps_from_symbols, BlockLayout,
+    SymbolGrid,
+};

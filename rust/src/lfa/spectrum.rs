@@ -1,0 +1,192 @@
+//! The spectrum of a convolutional mapping: per-frequency singular values
+//! and (optionally) per-frequency singular vector factors.
+
+use crate::numeric::CMat;
+
+/// Singular values of a convolution, grouped by frequency.
+///
+/// Frequency `f = i·m + j` contributes `min(c_out, c_in)` values; the full
+/// operator has `n·m·min(c_out, c_in)` nonzero-capable singular values
+/// (`n·m·c` for square channel counts, matching the paper's counts — e.g.
+/// `n=256, c=16 → 1,048,576`).
+#[derive(Clone, Debug)]
+pub struct Spectrum {
+    pub n: usize,
+    pub m: usize,
+    pub c_out: usize,
+    pub c_in: usize,
+    /// `values[f·r .. (f+1)·r]` are the descending singular values at
+    /// frequency `f`, with `r = min(c_out, c_in)`.
+    pub values: Vec<f64>,
+}
+
+impl Spectrum {
+    pub fn rank_per_freq(&self) -> usize {
+        self.c_out.min(self.c_in)
+    }
+
+    pub fn num_values(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Values at one frequency (descending).
+    pub fn at(&self, f: usize) -> &[f64] {
+        let r = self.rank_per_freq();
+        &self.values[f * r..(f + 1) * r]
+    }
+
+    /// Largest singular value — the spectral norm / Lipschitz constant of
+    /// the (periodic) convolution.
+    pub fn sigma_max(&self) -> f64 {
+        self.values.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Smallest singular value across all frequencies.
+    pub fn sigma_min(&self) -> f64 {
+        self.values.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Condition number `σ_max/σ_min` (∞ if singular).
+    pub fn condition_number(&self) -> f64 {
+        let lo = self.sigma_min();
+        if lo == 0.0 {
+            f64::INFINITY
+        } else {
+            self.sigma_max() / lo
+        }
+    }
+
+    /// All values sorted descending (the series plotted in Fig. 6).
+    pub fn sorted_desc(&self) -> Vec<f64> {
+        let mut v = self.values.clone();
+        v.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        v
+    }
+
+    /// Frobenius norm of the operator: `√(Σ σ²)`. For a periodic convolution
+    /// this equals `√(n·m)·‖W‖_F` — a cheap internal consistency check.
+    pub fn frobenius_norm(&self) -> f64 {
+        self.values.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Effective rank at tolerance `tol·σ_max`.
+    pub fn rank(&self, tol: f64) -> usize {
+        let cutoff = self.sigma_max() * tol;
+        self.values.iter().filter(|&&v| v > cutoff).count()
+    }
+
+    /// Symmetric divergence between two *sorted* spectra: mean relative
+    /// pointwise gap. Used for the Fig. 6 boundary-condition comparison
+    /// (spectra may have slightly different lengths for Dirichlet vs
+    /// periodic — compare by quantile).
+    pub fn divergence(sorted_a: &[f64], sorted_b: &[f64]) -> f64 {
+        assert!(!sorted_a.is_empty() && !sorted_b.is_empty());
+        let len = sorted_a.len().max(sorted_b.len());
+        let sample = |xs: &[f64], q: f64| -> f64 {
+            let pos = q * (xs.len() - 1) as f64;
+            let lo = pos.floor() as usize;
+            let hi = pos.ceil() as usize;
+            let t = pos - lo as f64;
+            xs[lo] * (1.0 - t) + xs[hi] * t
+        };
+        let scale = sorted_a[0].max(sorted_b[0]).max(1e-300);
+        let mut acc = 0.0;
+        for s in 0..len {
+            let q = s as f64 / (len - 1).max(1) as f64;
+            acc += (sample(sorted_a, q) - sample(sorted_b, q)).abs() / scale;
+        }
+        acc / len as f64
+    }
+}
+
+/// Full SVD of a convolution: per-frequency factors
+/// `A_k = U_k Σ_k V_kᴴ`. The *global* singular vectors
+/// `F_k^{c_out} U_k`, `F_k^{c_in} V_k` are never materialized (that's the
+/// point of the method); [`crate::spectral::FreqOperator`] applies them
+/// implicitly via FFTs when an operator is needed in the spatial domain.
+pub struct FullSvd {
+    pub n: usize,
+    pub m: usize,
+    pub c_out: usize,
+    pub c_in: usize,
+    /// Per-frequency left factors (`c_out×r`).
+    pub u: Vec<CMat>,
+    /// Per-frequency singular values, same layout as [`Spectrum::values`].
+    pub sigma: Spectrum,
+    /// Per-frequency right factors (`c_in×r`).
+    pub v: Vec<CMat>,
+}
+
+impl FullSvd {
+    /// Reconstruct the symbol at frequency `f` from its factors.
+    pub fn symbol(&self, f: usize) -> CMat {
+        let r = self.sigma.rank_per_freq();
+        let s = self.sigma.at(f);
+        let u = &self.u[f];
+        let v = &self.v[f];
+        let mut us = CMat::zeros(u.rows, r);
+        for i in 0..u.rows {
+            for j in 0..r {
+                us[(i, j)] = u[(i, j)].scale(s[j]);
+            }
+        }
+        us.matmul(&v.hermitian())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spectrum(values: Vec<f64>, r: usize) -> Spectrum {
+        let f = values.len() / r;
+        Spectrum { n: f, m: 1, c_out: r, c_in: r, values }
+    }
+
+    #[test]
+    fn extremes_and_condition() {
+        let s = spectrum(vec![3.0, 1.0, 4.0, 2.0], 2);
+        assert_eq!(s.sigma_max(), 4.0);
+        assert_eq!(s.sigma_min(), 1.0);
+        assert_eq!(s.condition_number(), 4.0);
+    }
+
+    #[test]
+    fn singular_operator_condition_infinite() {
+        let s = spectrum(vec![1.0, 0.0], 1);
+        assert!(s.condition_number().is_infinite());
+    }
+
+    #[test]
+    fn sorted_desc() {
+        let s = spectrum(vec![1.0, 3.0, 2.0, 0.5], 2);
+        assert_eq!(s.sorted_desc(), vec![3.0, 2.0, 1.0, 0.5]);
+    }
+
+    #[test]
+    fn rank_with_tolerance() {
+        let s = spectrum(vec![10.0, 1.0, 1e-12, 5.0], 2);
+        assert_eq!(s.rank(1e-10), 3);
+    }
+
+    #[test]
+    fn divergence_zero_for_identical() {
+        let a = vec![5.0, 3.0, 1.0];
+        assert_eq!(Spectrum::divergence(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn divergence_scales() {
+        let a = vec![2.0, 2.0, 2.0, 2.0];
+        let b = vec![1.0, 1.0, 1.0, 1.0];
+        // gap = 1.0 everywhere, scale = 2 → 0.5
+        assert!((Spectrum::divergence(&a, &b) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn divergence_handles_different_lengths() {
+        let a = vec![1.0; 100];
+        let b = vec![1.0; 73];
+        assert!(Spectrum::divergence(&a, &b) < 1e-12);
+    }
+}

@@ -1,0 +1,517 @@
+//! Symbol computation — the heart of the LFA approach (Algorithm 1).
+//!
+//! For each frequency `k = (i/n, j/m)` on the dual torus `T*_{n,m}`, the
+//! symbol of the convolution `A` is the `c_out×c_in` complex matrix
+//!
+//! ```text
+//!   A_k = Σ_{y∈N} M_y · e^{2πi⟨k,y⟩}
+//! ```
+//!
+//! computed in `O(c_out·c_in·k_h·k_w)` per frequency — **independent of
+//! `n, m`** — versus the FFT route's `O(log(nm))` amortized per entry. Two
+//! structural optimizations (both recorded in DESIGN.md §Perf):
+//!
+//! 1. **Phase separability**: `e^{2πi(i·dy/n + j·dx/m)}` factors into two
+//!    1-D phase tables (`n·kh + m·kw` trig evaluations total instead of
+//!    `n·m·kh·kw`), leaving only complex multiplies in the inner loop.
+//! 2. **Block-contiguous output**: symbols are written row-major per block,
+//!    which Table IV shows is exactly the layout the downstream SVD wants —
+//!    LFA gets it for free, the FFT does not.
+
+use crate::conv::ConvKernel;
+use crate::numeric::{C64, CMat};
+use std::f64::consts::PI;
+
+/// Memory layout of a [`SymbolGrid`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockLayout {
+    /// `[freq][c_out][c_in]` — each block contiguous, row-major (LFA-natural).
+    BlockContiguous,
+    /// `[c_out][c_in][freq]` — planar, block elements strided by `n·m`
+    /// (FFT-natural: each channel pair's transformed plane is contiguous).
+    PlanarStrided,
+}
+
+/// All `n·m` symbols of a convolution on an `n×m` grid.
+pub struct SymbolGrid {
+    pub n: usize,
+    pub m: usize,
+    pub c_out: usize,
+    pub c_in: usize,
+    pub layout: BlockLayout,
+    pub data: Vec<C64>,
+}
+
+impl SymbolGrid {
+    pub fn zeros(n: usize, m: usize, c_out: usize, c_in: usize, layout: BlockLayout) -> Self {
+        Self { n, m, c_out, c_in, layout, data: vec![C64::ZERO; n * m * c_out * c_in] }
+    }
+
+    /// Number of frequencies (= blocks).
+    #[inline]
+    pub fn freqs(&self) -> usize {
+        self.n * self.m
+    }
+
+    /// Flat element index for frequency `f = i·m + j`, entry `(o, ic)`.
+    #[inline(always)]
+    pub fn idx(&self, f: usize, o: usize, ic: usize) -> usize {
+        match self.layout {
+            BlockLayout::BlockContiguous => (f * self.c_out + o) * self.c_in + ic,
+            BlockLayout::PlanarStrided => (o * self.c_in + ic) * (self.n * self.m) + f,
+        }
+    }
+
+    #[inline(always)]
+    pub fn get(&self, f: usize, o: usize, ic: usize) -> C64 {
+        self.data[self.idx(f, o, ic)]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, f: usize, o: usize, ic: usize, v: C64) {
+        let i = self.idx(f, o, ic);
+        self.data[i] = v;
+    }
+
+    /// Copy the block at frequency `f` into a dense matrix.
+    pub fn block(&self, f: usize) -> CMat {
+        let mut b = CMat::zeros(self.c_out, self.c_in);
+        match self.layout {
+            BlockLayout::BlockContiguous => {
+                let base = f * self.c_out * self.c_in;
+                b.data.copy_from_slice(&self.data[base..base + self.c_out * self.c_in]);
+            }
+            BlockLayout::PlanarStrided => {
+                for o in 0..self.c_out {
+                    for ic in 0..self.c_in {
+                        b[(o, ic)] = self.get(f, o, ic);
+                    }
+                }
+            }
+        }
+        b
+    }
+
+    /// Copy the block at frequency `f` into a caller-provided scratch slice
+    /// (`c_out·c_in` long, row-major) without allocating.
+    #[inline]
+    pub fn block_into(&self, f: usize, out: &mut [C64]) {
+        debug_assert_eq!(out.len(), self.c_out * self.c_in);
+        match self.layout {
+            BlockLayout::BlockContiguous => {
+                let base = f * self.c_out * self.c_in;
+                out.copy_from_slice(&self.data[base..base + out.len()]);
+            }
+            BlockLayout::PlanarStrided => {
+                let nm = self.n * self.m;
+                for (p, o) in out.iter_mut().enumerate() {
+                    *o = self.data[p * nm + f];
+                }
+            }
+        }
+    }
+
+    /// Write a block (row-major `c_out×c_in`) into frequency `f`.
+    pub fn set_block(&mut self, f: usize, block: &CMat) {
+        assert_eq!((block.rows, block.cols), (self.c_out, self.c_in));
+        for o in 0..self.c_out {
+            for ic in 0..self.c_in {
+                self.set(f, o, ic, block[(o, ic)]);
+            }
+        }
+    }
+
+    /// Convert to the requested layout (the `s_copy` cost of Table IV).
+    pub fn to_layout(&self, layout: BlockLayout) -> SymbolGrid {
+        if layout == self.layout {
+            return SymbolGrid {
+                n: self.n,
+                m: self.m,
+                c_out: self.c_out,
+                c_in: self.c_in,
+                layout,
+                data: self.data.clone(),
+            };
+        }
+        let mut out = SymbolGrid::zeros(self.n, self.m, self.c_out, self.c_in, layout);
+        for f in 0..self.freqs() {
+            for o in 0..self.c_out {
+                for ic in 0..self.c_in {
+                    out.set(f, o, ic, self.get(f, o, ic));
+                }
+            }
+        }
+        out
+    }
+
+    /// Max entrywise distance to another grid (layout-independent).
+    pub fn max_abs_diff(&self, other: &SymbolGrid) -> f64 {
+        assert_eq!(
+            (self.n, self.m, self.c_out, self.c_in),
+            (other.n, other.m, other.c_out, other.c_in)
+        );
+        let mut worst = 0.0f64;
+        for f in 0..self.freqs() {
+            for o in 0..self.c_out {
+                for ic in 0..self.c_in {
+                    worst = worst.max((self.get(f, o, ic) - other.get(f, o, ic)).abs());
+                }
+            }
+        }
+        worst
+    }
+}
+
+/// 1-D phase tables: `table[d][i] = e^{2πi · i·y_d / n}` for each distinct
+/// tap offset `y_d` along one axis.
+fn phase_table(n: usize, offsets: &[isize]) -> Vec<Vec<C64>> {
+    offsets
+        .iter()
+        .map(|&dy| {
+            (0..n)
+                .map(|i| C64::cis(2.0 * PI * (i as f64) * (dy as f64) / (n as f64)))
+                .collect()
+        })
+        .collect()
+}
+
+/// Compute the symbol at a single frequency `k = (ki/n, kj/m)` — line 5 of
+/// Algorithm 1. `O(c_out·c_in·kh·kw)`, no dependence on `n, m`.
+pub fn symbol_at(kernel: &ConvKernel, n: usize, m: usize, ki: usize, kj: usize) -> CMat {
+    let (ar, ac) = (kernel.anchor.0 as isize, kernel.anchor.1 as isize);
+    let mut b = CMat::zeros(kernel.c_out, kernel.c_in);
+    for r in 0..kernel.kh {
+        let dy = r as isize - ar;
+        let py = C64::cis(2.0 * PI * (ki as f64) * (dy as f64) / (n as f64));
+        for c in 0..kernel.kw {
+            let dx = c as isize - ac;
+            let px = C64::cis(2.0 * PI * (kj as f64) * (dx as f64) / (m as f64));
+            let phase = py * px;
+            for o in 0..kernel.c_out {
+                for ic in 0..kernel.c_in {
+                    let w = kernel.get(o, ic, r, c);
+                    if w != 0.0 {
+                        let v = b[(o, ic)];
+                        b[(o, ic)] = v + phase.scale(w);
+                    }
+                }
+            }
+        }
+    }
+    b
+}
+
+/// Compute all `n·m` symbols (single-threaded). See
+/// [`compute_symbols_parallel`] for the multi-core version the coordinator
+/// uses.
+pub fn compute_symbols(kernel: &ConvKernel, n: usize, m: usize, layout: BlockLayout) -> SymbolGrid {
+    let mut grid = SymbolGrid::zeros(n, m, kernel.c_out, kernel.c_in, layout);
+    let shard = compute_symbols_shard(kernel, n, m, 0, n);
+    scatter_shard(&mut grid, 0, n, &shard);
+    grid
+}
+
+/// Compute the symbols for frequency rows `[row_lo, row_hi)` into a
+/// block-contiguous shard buffer of length `(row_hi−row_lo)·m·c_out·c_in`.
+/// This is the unit of work the tile scheduler shards — frequencies are
+/// independent ("embarrassingly parallel", §V).
+pub fn compute_symbols_shard(
+    kernel: &ConvKernel,
+    n: usize,
+    m: usize,
+    row_lo: usize,
+    row_hi: usize,
+) -> Vec<C64> {
+    let (kh, kw) = (kernel.kh, kernel.kw);
+    let (cout, cin) = (kernel.c_out, kernel.c_in);
+    let (ar, ac) = (kernel.anchor.0 as isize, kernel.anchor.1 as isize);
+    let row_offsets: Vec<isize> = (0..kh as isize).map(|r| r - ar).collect();
+    let col_offsets: Vec<isize> = (0..kw as isize).map(|c| c - ac).collect();
+    // Phase separability: 1-D tables once per call, O(n·kh + m·kw) trig.
+    let py = phase_table(n, &row_offsets);
+    let px = phase_table(m, &col_offsets);
+
+    // Per-tap phase scratch, reused across frequencies.
+    let ntaps = kh * kw;
+    let mut tap_phase = vec![C64::ZERO; ntaps];
+    let block_len = cout * cin;
+    let mut out = vec![C64::ZERO; (row_hi - row_lo) * m * block_len];
+
+    for i in row_lo..row_hi {
+        for j in 0..m {
+            // Combine the two 1-D tables into per-tap phases.
+            for r in 0..kh {
+                let pyr = py[r][i];
+                for c in 0..kw {
+                    tap_phase[r * kw + c] = pyr * px[c][j];
+                }
+            }
+            let f_local = (i - row_lo) * m + j;
+            let block = &mut out[f_local * block_len..(f_local + 1) * block_len];
+            // Contract taps against the weight tensor. The kernel's OIHW
+            // layout makes `taps` the innermost stride — walk it linearly.
+            for (p, bv) in block.iter_mut().enumerate() {
+                // p = o·c_in + ic; weights for this (o, ic) are contiguous.
+                let w = &kernel.data[p * ntaps..(p + 1) * ntaps];
+                let mut acc = C64::ZERO;
+                for (wv, ph) in w.iter().zip(tap_phase.iter()) {
+                    acc.re += wv * ph.re;
+                    acc.im += wv * ph.im;
+                }
+                *bv = acc;
+            }
+        }
+    }
+    out
+}
+
+/// Write a block-contiguous shard covering rows `[row_lo, row_hi)` into a
+/// grid of either layout.
+pub fn scatter_shard(grid: &mut SymbolGrid, row_lo: usize, row_hi: usize, shard: &[C64]) {
+    let block_len = grid.c_out * grid.c_in;
+    let m = grid.m;
+    debug_assert_eq!(shard.len(), (row_hi - row_lo) * m * block_len);
+    match grid.layout {
+        BlockLayout::BlockContiguous => {
+            let base = row_lo * m * block_len;
+            grid.data[base..base + shard.len()].copy_from_slice(shard);
+        }
+        BlockLayout::PlanarStrided => {
+            let nm = grid.n * grid.m;
+            for f_local in 0..(row_hi - row_lo) * m {
+                let f = row_lo * m + f_local;
+                for p in 0..block_len {
+                    grid.data[p * nm + f] = shard[f_local * block_len + p];
+                }
+            }
+        }
+    }
+}
+
+/// Multi-threaded symbol computation: shards frequency rows across
+/// `threads` workers with `std::thread::scope` (no runtime dependencies).
+pub fn compute_symbols_parallel(
+    kernel: &ConvKernel,
+    n: usize,
+    m: usize,
+    layout: BlockLayout,
+    threads: usize,
+) -> SymbolGrid {
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 {
+        return compute_symbols(kernel, n, m, layout);
+    }
+    let mut grid = SymbolGrid::zeros(n, m, kernel.c_out, kernel.c_in, layout);
+    let rows_per = n.div_ceil(threads);
+    let mut bounds = Vec::new();
+    let mut lo = 0usize;
+    while lo < n {
+        let hi = (lo + rows_per).min(n);
+        bounds.push((lo, hi));
+        lo = hi;
+    }
+    let mut shards: Vec<(usize, usize, Vec<C64>)> = Vec::with_capacity(bounds.len());
+    std::thread::scope(|s| {
+        let handles: Vec<_> = bounds
+            .iter()
+            .map(|&(lo, hi)| {
+                s.spawn(move || (lo, hi, compute_symbols_shard(kernel, n, m, lo, hi)))
+            })
+            .collect();
+        for h in handles {
+            shards.push(h.join().expect("symbol worker panicked"));
+        }
+    });
+    for (lo, hi, shard) in shards {
+        scatter_shard(&mut grid, lo, hi, &shard);
+    }
+    grid
+}
+
+/// Inverse transform: recover the multiplication operators `M_y` (i.e. the
+/// weight taps) from a symbol grid by evaluating the inverse Fourier sum at
+/// each displacement:
+///
+/// ```text
+///   M_y = (1/nm) Σ_k A_k e^{−2πi⟨k,y⟩}
+/// ```
+///
+/// If the grid came from a genuine `kh×kw` convolution this is exact; for a
+/// modified grid (clipped/truncated spectrum) it is the least-squares
+/// projection onto kernels of that support — the standard way to pull
+/// spectral edits back into weight space.
+pub fn taps_from_symbols(
+    grid: &SymbolGrid,
+    kh: usize,
+    kw: usize,
+    anchor: (usize, usize),
+) -> ConvKernel {
+    let (n, m) = (grid.n, grid.m);
+    let mut kernel = ConvKernel::zeros(grid.c_out, grid.c_in, kh, kw);
+    kernel.anchor = anchor;
+    let (ar, ac) = (anchor.0 as isize, anchor.1 as isize);
+    let row_offsets: Vec<isize> = (0..kh as isize).map(|r| r - ar).collect();
+    let col_offsets: Vec<isize> = (0..kw as isize).map(|c| c - ac).collect();
+    // Conjugate tables give e^{−2πi…}.
+    let py = phase_table(n, &row_offsets);
+    let px = phase_table(m, &col_offsets);
+    let scale = 1.0 / (n * m) as f64;
+    for r in 0..kh {
+        for c in 0..kw {
+            for o in 0..grid.c_out {
+                for ic in 0..grid.c_in {
+                    let mut acc = C64::ZERO;
+                    for i in 0..n {
+                        let pyv = py[r][i].conj();
+                        for j in 0..m {
+                            let phase = pyv * px[c][j].conj();
+                            acc = acc.mul_add(grid.get(i * m + j, o, ic), phase);
+                        }
+                    }
+                    // Real weights: imaginary residue is numerical noise for
+                    // grids originating from real kernels.
+                    kernel.set(o, ic, r, c, acc.re * scale);
+                }
+            }
+        }
+    }
+    kernel
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::Pcg64;
+
+    #[test]
+    fn zero_frequency_is_tap_sum() {
+        let mut rng = Pcg64::seeded(100);
+        let k = ConvKernel::random_he(3, 2, 3, 3, &mut rng);
+        let b = symbol_at(&k, 8, 8, 0, 0);
+        for o in 0..3 {
+            for i in 0..2 {
+                let want: f64 = (0..3).flat_map(|r| (0..3).map(move |c| (r, c)))
+                    .map(|(r, c)| k.get(o, i, r, c))
+                    .sum();
+                assert!((b[(o, i)].re - want).abs() < 1e-12);
+                assert!(b[(o, i)].im.abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn identity_kernel_has_unit_symbols() {
+        let mut k = ConvKernel::zeros(2, 2, 3, 3);
+        k.set(0, 0, 1, 1, 1.0);
+        k.set(1, 1, 1, 1, 1.0);
+        let g = compute_symbols(&k, 4, 4, BlockLayout::BlockContiguous);
+        for f in 0..16 {
+            let b = g.block(f);
+            assert!(b.max_abs_diff(&CMat::eye(2)) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn grid_matches_symbol_at() {
+        let mut rng = Pcg64::seeded(101);
+        let k = ConvKernel::random_he(2, 3, 3, 3, &mut rng);
+        let (n, m) = (5, 7);
+        let g = compute_symbols(&k, n, m, BlockLayout::BlockContiguous);
+        for i in 0..n {
+            for j in 0..m {
+                let want = symbol_at(&k, n, m, i, j);
+                let got = g.block(i * m + j);
+                assert!(got.max_abs_diff(&want) < 1e-12, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn layouts_agree() {
+        let mut rng = Pcg64::seeded(102);
+        let k = ConvKernel::random_he(3, 3, 3, 3, &mut rng);
+        let a = compute_symbols(&k, 6, 4, BlockLayout::BlockContiguous);
+        let b = compute_symbols(&k, 6, 4, BlockLayout::PlanarStrided);
+        assert!(a.max_abs_diff(&b) < 1e-14);
+        let c = b.to_layout(BlockLayout::BlockContiguous);
+        assert_eq!(c.layout, BlockLayout::BlockContiguous);
+        assert!(a.max_abs_diff(&c) < 1e-14);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Pcg64::seeded(103);
+        let k = ConvKernel::random_he(4, 4, 3, 3, &mut rng);
+        for layout in [BlockLayout::BlockContiguous, BlockLayout::PlanarStrided] {
+            let serial = compute_symbols(&k, 16, 16, layout);
+            for threads in [2, 3, 8] {
+                let par = compute_symbols_parallel(&k, 16, 16, layout, threads);
+                assert!(serial.max_abs_diff(&par) < 1e-15, "{layout:?} x{threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn symbols_roundtrip_to_taps() {
+        let mut rng = Pcg64::seeded(104);
+        let k = ConvKernel::random_he(2, 2, 3, 3, &mut rng);
+        let g = compute_symbols(&k, 8, 8, BlockLayout::BlockContiguous);
+        let k2 = taps_from_symbols(&g, 3, 3, k.anchor);
+        for (a, b) in k.data.iter().zip(&k2.data) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn conjugate_symmetry_for_real_kernels() {
+        // Real weights ⇒ A_{−k} = conj(A_k).
+        let mut rng = Pcg64::seeded(105);
+        let k = ConvKernel::random_he(2, 2, 3, 3, &mut rng);
+        let (n, m) = (6, 6);
+        let g = compute_symbols(&k, n, m, BlockLayout::BlockContiguous);
+        for i in 0..n {
+            for j in 0..m {
+                let f = i * m + j;
+                let fneg = ((n - i) % n) * m + (m - j) % m;
+                let b = g.block(f);
+                let bneg = g.block(fneg);
+                for o in 0..2 {
+                    for ic in 0..2 {
+                        assert!((b[(o, ic)] - bneg[(o, ic)].conj()).abs() < 1e-12);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_into_matches_block() {
+        let mut rng = Pcg64::seeded(106);
+        let k = ConvKernel::random_he(3, 2, 3, 3, &mut rng);
+        for layout in [BlockLayout::BlockContiguous, BlockLayout::PlanarStrided] {
+            let g = compute_symbols(&k, 4, 4, layout);
+            let mut scratch = vec![C64::ZERO; 6];
+            for f in 0..16 {
+                g.block_into(f, &mut scratch);
+                let b = g.block(f);
+                for o in 0..3 {
+                    for ic in 0..2 {
+                        assert_eq!(scratch[o * 2 + ic], b[(o, ic)]);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn non_square_grid() {
+        let mut rng = Pcg64::seeded(107);
+        let k = ConvKernel::random_he(2, 2, 3, 3, &mut rng);
+        let g = compute_symbols(&k, 3, 9, BlockLayout::BlockContiguous);
+        assert_eq!(g.freqs(), 27);
+        let k2 = taps_from_symbols(&g, 3, 3, k.anchor);
+        for (a, b) in k.data.iter().zip(&k2.data) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! # conv-svd-lfa
+//!
+//! Efficient singular value decomposition of convolutional mappings by
+//! **Local Fourier Analysis** (LFA) — a reproduction of van Betteray,
+//! Rottmann & Kahl (2025) as a three-layer Rust + JAX + Pallas system.
+//!
+//! A convolution `A : R^{m×n×c_in} → R^{m×n×c_out}` with periodic boundary
+//! conditions block-diagonalizes in the Fourier basis: for each frequency
+//! `k` the *symbol* `A_k = Σ_y M_y e^{2πi⟨k,y⟩}` is a small `c_out×c_in`
+//! complex matrix, and the SVDs of all `n·m` symbols together form the full
+//! SVD of `A` in `O(n·m·c³)` — a `log n` factor better than the FFT route
+//! (Sedghi et al. 2019) and embarrassingly parallel across frequencies.
+
+pub mod cli;
+pub mod numeric;
+pub mod linalg;
+pub mod fft;
+pub mod conv;
+pub mod lfa;
+pub mod baselines;
+pub mod spectral;
+pub mod runtime;
+pub mod coordinator;
+pub mod model;
+pub mod report;
+pub mod bench_util;
+pub mod testing;
+
+pub use numeric::{c64, C64, CMat, Layout, Mat, Pcg64};

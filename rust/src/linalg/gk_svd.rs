@@ -1,0 +1,487 @@
+//! Dense real SVD via Golub–Kahan bidiagonalization + implicit-shift QR
+//! (the classic Golub–Reinsch algorithm).
+//!
+//! This is the engine behind the paper's *explicit* baseline: unroll the
+//! convolution into its `(m·n·c_out) × (m·n·c_in)` matrix and decompose it
+//! directly — the `O(n⁶c³)` approach of Table I that the LFA route obsoletes.
+//! `compute_uv = false` mirrors `numpy.linalg.svd(..., compute_uv=False)`
+//! used by the paper and skips all U/V accumulation work.
+
+use crate::numeric::{Layout, Mat};
+
+/// Result of [`svd`]: `A = U · diag(s) · Vᵀ` with `s` sorted descending.
+pub struct SvdResult {
+    /// `m×n` left singular vectors (thin), if requested.
+    pub u: Option<Mat>,
+    /// Singular values, descending.
+    pub s: Vec<f64>,
+    /// `n×n` transposed right singular vectors, if requested.
+    pub vt: Option<Mat>,
+}
+
+#[inline]
+fn pythag(a: f64, b: f64) -> f64 {
+    a.hypot(b)
+}
+
+#[inline]
+fn sign_of(a: f64, b: f64) -> f64 {
+    if b >= 0.0 {
+        a.abs()
+    } else {
+        -a.abs()
+    }
+}
+
+/// Singular value decomposition of a real dense matrix.
+///
+/// Handles `m < n` by decomposing the transpose and swapping factors.
+/// Iteration cap is 60 sweeps per singular value (well above the ~30 the
+/// literature suggests); convergence failures panic loudly rather than
+/// returning garbage.
+pub fn svd(a: &Mat, compute_uv: bool) -> SvdResult {
+    if a.rows < a.cols {
+        let at = a.transpose();
+        let r = svd(&at, compute_uv);
+        return SvdResult {
+            u: r.vt.map(|vt| vt.transpose()),
+            s: r.s,
+            vt: r.u.map(|u| u.transpose()),
+        };
+    }
+    let m = a.rows;
+    let n = a.cols;
+    // Working copy holds U progressively (Golub–Reinsch accumulates in place).
+    let mut u = a.to_layout(Layout::RowMajor);
+    let mut w = vec![0.0f64; n];
+    let mut rv1 = vec![0.0f64; n];
+    let mut v = Mat::zeros(n, n);
+
+    // --- Householder bidiagonalization ---
+    let mut g = 0.0f64;
+    let mut scale = 0.0f64;
+    let mut anorm = 0.0f64;
+    for i in 0..n {
+        let l = i + 1;
+        rv1[i] = scale * g;
+        g = 0.0;
+        let mut s;
+        scale = 0.0;
+        if i < m {
+            for k in i..m {
+                scale += u[(k, i)].abs();
+            }
+            if scale != 0.0 {
+                s = 0.0;
+                for k in i..m {
+                    u[(k, i)] /= scale;
+                    s += u[(k, i)] * u[(k, i)];
+                }
+                let f = u[(i, i)];
+                g = -sign_of(s.sqrt(), f);
+                let h = f * g - s;
+                u[(i, i)] = f - g;
+                // Column-Householder applied to the trailing block with
+                // row-contiguous access (PERF: the original j-outer/k-inner
+                // order walks n-strided columns and thrashes the cache —
+                // 5-10x slower at n ≥ 1024; see EXPERIMENTS.md §Perf).
+                if l < n {
+                    // dots[j] = Σ_k v_k · A[k, j], accumulated row-wise.
+                    let mut dots = vec![0.0f64; n - l];
+                    for k in i..m {
+                        let vk = u[(k, i)];
+                        if vk == 0.0 {
+                            continue;
+                        }
+                        let row = k * n;
+                        let (row_l, row_n) = (row + l, row + n);
+                        for (d, a) in dots.iter_mut().zip(&u.data[row_l..row_n]) {
+                            *d += vk * a;
+                        }
+                    }
+                    let hinv = 1.0 / h;
+                    for d in dots.iter_mut() {
+                        *d *= hinv;
+                    }
+                    for k in i..m {
+                        let vk = u[(k, i)];
+                        if vk == 0.0 {
+                            continue;
+                        }
+                        let row = k * n;
+                        for (d, a) in dots.iter().zip(&mut u.data[row + l..row + n]) {
+                            *a += vk * d;
+                        }
+                    }
+                }
+                for k in i..m {
+                    u[(k, i)] *= scale;
+                }
+            }
+        }
+        w[i] = scale * g;
+        g = 0.0;
+        s = 0.0;
+        scale = 0.0;
+        if i < m && i != n - 1 {
+            for k in l..n {
+                scale += u[(i, k)].abs();
+            }
+            if scale != 0.0 {
+                for k in l..n {
+                    u[(i, k)] /= scale;
+                    s += u[(i, k)] * u[(i, k)];
+                }
+                let f = u[(i, l)];
+                g = -sign_of(s.sqrt(), f);
+                let h = f * g - s;
+                u[(i, l)] = f - g;
+                for k in l..n {
+                    rv1[k] = u[(i, k)] / h;
+                }
+                for j in l..m {
+                    s = 0.0;
+                    for k in l..n {
+                        s += u[(j, k)] * u[(i, k)];
+                    }
+                    for k in l..n {
+                        let d = s * rv1[k];
+                        u[(j, k)] += d;
+                    }
+                }
+                for k in l..n {
+                    u[(i, k)] *= scale;
+                }
+            }
+        }
+        anorm = anorm.max(w[i].abs() + rv1[i].abs());
+    }
+
+    // --- Accumulate right-hand transformations (V) ---
+    if compute_uv {
+        let mut l = n; // l tracks i+1 from the previous iteration
+        let mut gprev = 0.0;
+        for i in (0..n).rev() {
+            if i < n - 1 {
+                if gprev != 0.0 {
+                    for j in l..n {
+                        v[(j, i)] = (u[(i, j)] / u[(i, l)]) / gprev;
+                    }
+                    for j in l..n {
+                        let mut s = 0.0;
+                        for k in l..n {
+                            s += u[(i, k)] * v[(k, j)];
+                        }
+                        for k in l..n {
+                            let d = s * v[(k, i)];
+                            v[(k, j)] += d;
+                        }
+                    }
+                }
+                for j in l..n {
+                    v[(i, j)] = 0.0;
+                    v[(j, i)] = 0.0;
+                }
+            }
+            v[(i, i)] = 1.0;
+            gprev = rv1[i];
+            l = i;
+        }
+    }
+
+    // --- Accumulate left-hand transformations (U) ---
+    if compute_uv {
+        for i in (0..n.min(m)).rev() {
+            let l = i + 1;
+            let g = w[i];
+            for j in l..n {
+                u[(i, j)] = 0.0;
+            }
+            if g != 0.0 {
+                let ginv = 1.0 / g;
+                for j in l..n {
+                    let mut s = 0.0;
+                    for k in l..m {
+                        s += u[(k, i)] * u[(k, j)];
+                    }
+                    let f = (s / u[(i, i)]) * ginv;
+                    for k in i..m {
+                        let d = f * u[(k, i)];
+                        u[(k, j)] += d;
+                    }
+                }
+                for j in i..m {
+                    u[(j, i)] *= ginv;
+                }
+            } else {
+                for j in i..m {
+                    u[(j, i)] = 0.0;
+                }
+            }
+            u[(i, i)] += 1.0;
+        }
+    }
+
+    // --- Diagonalize the bidiagonal form: implicit-shift QR with deflation ---
+    for k in (0..n).rev() {
+        let mut its = 0;
+        loop {
+            its += 1;
+            let mut flag = true;
+            let mut l = k;
+            let mut nm = 0usize;
+            // Test for splitting.
+            while l > 0 {
+                nm = l - 1;
+                if rv1[l].abs() + anorm == anorm {
+                    flag = false;
+                    break;
+                }
+                if w[nm].abs() + anorm == anorm {
+                    break;
+                }
+                l -= 1;
+            }
+            if l == 0 {
+                // rv1[0] is always zero by construction
+                flag = false;
+            }
+            if flag {
+                // Cancel rv1[l] if w[l-1] is negligible.
+                let mut c = 0.0;
+                let mut s = 1.0;
+                for i in l..=k {
+                    let f = s * rv1[i];
+                    rv1[i] = c * rv1[i];
+                    if f.abs() + anorm == anorm {
+                        break;
+                    }
+                    let g = w[i];
+                    let h = pythag(f, g);
+                    w[i] = h;
+                    let hinv = 1.0 / h;
+                    c = g * hinv;
+                    s = -f * hinv;
+                    if compute_uv {
+                        for j in 0..m {
+                            let y = u[(j, nm)];
+                            let z = u[(j, i)];
+                            u[(j, nm)] = y * c + z * s;
+                            u[(j, i)] = z * c - y * s;
+                        }
+                    }
+                }
+            }
+            let z = w[k];
+            if l == k {
+                // Converged; enforce non-negative singular value.
+                if z < 0.0 {
+                    w[k] = -z;
+                    if compute_uv {
+                        for j in 0..n {
+                            v[(j, k)] = -v[(j, k)];
+                        }
+                    }
+                }
+                break;
+            }
+            assert!(
+                its <= 60,
+                "gk_svd: no convergence after 60 iterations (k={k}, n={n})"
+            );
+            // Shift from bottom 2x2 minor.
+            let mut x = w[l];
+            let nm = k - 1;
+            let mut y = w[nm];
+            let mut g = rv1[nm];
+            let mut h = rv1[k];
+            let mut f = ((y - z) * (y + z) + (g - h) * (g + h)) / (2.0 * h * y);
+            g = pythag(f, 1.0);
+            f = ((x - z) * (x + z) + h * ((y / (f + sign_of(g, f))) - h)) / x;
+            // Next QR transformation.
+            let mut c = 1.0;
+            let mut s = 1.0;
+            for j in l..=nm {
+                let i = j + 1;
+                g = rv1[i];
+                y = w[i];
+                h = s * g;
+                g = c * g;
+                let mut zz = pythag(f, h);
+                rv1[j] = zz;
+                let zinv = 1.0 / zz;
+                c = f * zinv;
+                s = h * zinv;
+                f = x * c + g * s;
+                g = g * c - x * s;
+                h = y * s;
+                y *= c;
+                if compute_uv {
+                    for jj in 0..n {
+                        let xx = v[(jj, j)];
+                        let z2 = v[(jj, i)];
+                        v[(jj, j)] = xx * c + z2 * s;
+                        v[(jj, i)] = z2 * c - xx * s;
+                    }
+                }
+                zz = pythag(f, h);
+                w[j] = zz;
+                if zz != 0.0 {
+                    let zi = 1.0 / zz;
+                    c = f * zi;
+                    s = h * zi;
+                }
+                f = c * g + s * y;
+                x = c * y - s * g;
+                if compute_uv {
+                    for jj in 0..m {
+                        let yy = u[(jj, j)];
+                        let z2 = u[(jj, i)];
+                        u[(jj, j)] = yy * c + z2 * s;
+                        u[(jj, i)] = z2 * c - yy * s;
+                    }
+                }
+            }
+            rv1[l] = 0.0;
+            rv1[k] = f;
+            w[k] = x;
+        }
+    }
+
+    // --- Sort descending (and permute U, V consistently) ---
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| w[b].partial_cmp(&w[a]).unwrap());
+    let s_sorted: Vec<f64> = order.iter().map(|&i| w[i]).collect();
+    if !compute_uv {
+        return SvdResult { u: None, s: s_sorted, vt: None };
+    }
+    let mut u_sorted = Mat::zeros(m, n);
+    let mut vt_sorted = Mat::zeros(n, n);
+    for (newj, &oldj) in order.iter().enumerate() {
+        for i in 0..m {
+            u_sorted[(i, newj)] = u[(i, oldj)];
+        }
+        for i in 0..n {
+            vt_sorted[(newj, i)] = v[(i, oldj)];
+        }
+    }
+    SvdResult { u: Some(u_sorted), s: s_sorted, vt: Some(vt_sorted) }
+}
+
+/// Convenience: singular values only, descending.
+pub fn singular_values(a: &Mat) -> Vec<f64> {
+    svd(a, false).s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::orthonormality_defect;
+    use crate::numeric::Pcg64;
+
+    fn reconstruct(r: &SvdResult, m: usize, _n: usize) -> Mat {
+        let u = r.u.as_ref().unwrap();
+        let vt = r.vt.as_ref().unwrap();
+        let rank = r.s.len();
+        let mut us = Mat::zeros(m, rank);
+        for i in 0..m {
+            for j in 0..rank {
+                us[(i, j)] = u[(i, j)] * r.s[j];
+            }
+        }
+        us.matmul(vt)
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Mat::from_rows(&[&[3.0, 0.0], &[0.0, 7.0]]);
+        let s = singular_values(&a);
+        assert!((s[0] - 7.0).abs() < 1e-12);
+        assert!((s[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // A = [[1, 1], [0, 1]] has σ = golden-ratio-ish values: sqrt((3±sqrt5)/2)
+        let a = Mat::from_rows(&[&[1.0, 1.0], &[0.0, 1.0]]);
+        let s = singular_values(&a);
+        let want0 = ((3.0 + 5.0f64.sqrt()) / 2.0).sqrt();
+        let want1 = ((3.0 - 5.0f64.sqrt()) / 2.0).sqrt();
+        assert!((s[0] - want0).abs() < 1e-12);
+        assert!((s[1] - want1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction_square_and_tall_and_wide() {
+        let mut rng = Pcg64::seeded(21);
+        for &(m, n) in &[(6usize, 6usize), (10, 4), (4, 10), (1, 5), (5, 1), (16, 16)] {
+            let a = Mat::random_normal(m, n, &mut rng);
+            let r = svd(&a, true);
+            let recon = reconstruct(&r, m, n);
+            let err = recon.max_abs_diff(&a);
+            assert!(err < 1e-9, "{m}x{n}: reconstruction err {err}");
+            // Orthonormality
+            assert!(orthonormality_defect(r.u.as_ref().unwrap()) < 1e-9, "{m}x{n} U");
+            assert!(
+                orthonormality_defect(&r.vt.as_ref().unwrap().transpose()) < 1e-9,
+                "{m}x{n} V"
+            );
+        }
+    }
+
+    #[test]
+    fn values_sorted_nonnegative() {
+        let mut rng = Pcg64::seeded(22);
+        let a = Mat::random_normal(12, 9, &mut rng);
+        let s = singular_values(&a);
+        for w in s.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        assert!(s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn rank_deficient() {
+        // rank-1 matrix: one nonzero singular value = ‖u‖·‖v‖
+        let u = [1.0, 2.0, 3.0];
+        let v = [4.0, 5.0];
+        let mut a = Mat::zeros(3, 2);
+        for i in 0..3 {
+            for j in 0..2 {
+                a[(i, j)] = u[i] * v[j];
+            }
+        }
+        let s = singular_values(&a);
+        let want = (14.0f64).sqrt() * (41.0f64).sqrt();
+        assert!((s[0] - want).abs() < 1e-10, "{} vs {want}", s[0]);
+        assert!(s[1].abs() < 1e-10);
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let a = Mat::zeros(4, 3);
+        let s = singular_values(&a);
+        assert!(s.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn frobenius_identity() {
+        // ‖A‖_F² = Σ σᵢ²
+        let mut rng = Pcg64::seeded(23);
+        let a = Mat::random_normal(8, 8, &mut rng);
+        let s = singular_values(&a);
+        let fro2: f64 = s.iter().map(|x| x * x).sum();
+        assert!((fro2 - a.frobenius_norm().powi(2)).abs() < 1e-8);
+    }
+
+    #[test]
+    fn values_match_uv_mode() {
+        let mut rng = Pcg64::seeded(24);
+        let a = Mat::random_normal(9, 7, &mut rng);
+        let s1 = svd(&a, false).s;
+        let s2 = svd(&a, true).s;
+        for (a, b) in s1.iter().zip(&s2) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+}

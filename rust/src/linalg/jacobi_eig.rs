@@ -1,0 +1,206 @@
+//! Two-sided Jacobi eigendecomposition for Hermitian matrices.
+//!
+//! The *Gram route* to singular values: `σ(A) = √λ(AᴴA)`. Forming the Gram
+//! matrix squares the condition number, so the one-sided Jacobi SVD
+//! (`jacobi_svd`) is the default in the LFA pipeline — this solver exists as
+//! an ablation (`bench_ablation_svd`) and because the PJRT artifact uses the
+//! same algorithm in pure-HLO form (where one-sidedness is awkward to batch).
+
+use crate::numeric::CMat;
+
+const MAX_SWEEPS: usize = 40;
+const TOL: f64 = 1e-15;
+
+/// Eigendecomposition of a Hermitian matrix: `H = Q diag(λ) Qᴴ`,
+/// eigenvalues descending.
+pub struct HEig {
+    pub lambda: Vec<f64>,
+    pub q: CMat,
+}
+
+/// Eigenvalues (descending) of a Hermitian matrix.
+pub fn eigenvalues(h: &CMat) -> Vec<f64> {
+    decompose(h, false).lambda
+}
+
+/// Full Hermitian eigendecomposition via cyclic two-sided Jacobi rotations.
+pub fn eigh(h: &CMat) -> HEig {
+    decompose(h, true)
+}
+
+fn decompose(h: &CMat, compute_q: bool) -> HEig {
+    let n = h.rows;
+    assert_eq!(h.rows, h.cols, "eigh requires a square matrix");
+    debug_assert!(hermitian_defect(h) < 1e-10, "input must be Hermitian");
+    let mut a = h.clone();
+    let mut q = CMat::eye(n);
+
+    for _sweep in 0..MAX_SWEEPS {
+        let mut off = 0.0f64;
+        for p in 0..n.saturating_sub(1) {
+            for qi in p + 1..n {
+                let apq = a[(p, qi)];
+                let mag = apq.abs();
+                let scale = (a[(p, p)].re.abs() + a[(qi, qi)].re.abs()).max(1e-300);
+                if mag / scale <= TOL {
+                    continue;
+                }
+                off = off.max(mag / scale);
+                // Phase-align then real Jacobi rotation.
+                let phase = apq.scale(1.0 / mag); // e^{iφ}
+                let app = a[(p, p)].re;
+                let aqq = a[(qi, qi)].re;
+                let tau = (aqq - app) / (2.0 * mag);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                // Unitary R: columns (p,q) mix with
+                //   R = [[c, s·e^{iφ}], [−s·e^{−iφ}, c]]  (R acting on the right)
+                let se_pos = phase.scale(s); // s·e^{iφ}
+                let se_neg = phase.conj().scale(s); // s·e^{−iφ}
+                // A ← Rᴴ A R : update columns then rows.
+                for i in 0..n {
+                    let aip = a[(i, p)];
+                    let aiq = a[(i, qi)];
+                    a[(i, p)] = aip.scale(c) - aiq * se_neg;
+                    a[(i, qi)] = aip * se_pos + aiq.scale(c);
+                }
+                for j in 0..n {
+                    let apj = a[(p, j)];
+                    let aqj = a[(qi, j)];
+                    // Rᴴ acting from the left: row_p ← c·row_p − s·e^{iφ}·row_q,
+                    // row_q ← s·e^{−iφ}·row_p + c·row_q.
+                    a[(p, j)] = apj.scale(c) - aqj * se_pos;
+                    a[(qi, j)] = apj * se_neg + aqj.scale(c);
+                }
+                if compute_q {
+                    for i in 0..n {
+                        let qip = q[(i, p)];
+                        let qiq = q[(i, qi)];
+                        q[(i, p)] = qip.scale(c) - qiq * se_neg;
+                        q[(i, qi)] = qip * se_pos + qiq.scale(c);
+                    }
+                }
+            }
+        }
+        if off <= TOL {
+            break;
+        }
+    }
+
+    let mut idx: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| a[(i, i)].re).collect();
+    idx.sort_by(|&i, &j| diag[j].partial_cmp(&diag[i]).unwrap());
+    let lambda = idx.iter().map(|&i| diag[i]).collect();
+    let mut q_sorted = CMat::zeros(n, n);
+    if compute_q {
+        for (newj, &oldj) in idx.iter().enumerate() {
+            for i in 0..n {
+                q_sorted[(i, newj)] = q[(i, oldj)];
+            }
+        }
+    }
+    HEig { lambda, q: q_sorted }
+}
+
+/// Singular values of `A` via eigenvalues of its Gram matrix.
+pub fn singular_values_gram(a: &CMat) -> Vec<f64> {
+    let g = if a.rows >= a.cols { a.gram() } else { a.hermitian().gram() };
+    eigenvalues(&g).into_iter().map(|l| l.max(0.0).sqrt()).collect()
+}
+
+fn hermitian_defect(h: &CMat) -> f64 {
+    let mut worst = 0.0f64;
+    for i in 0..h.rows {
+        for j in 0..h.cols {
+            worst = worst.max((h[(i, j)] - h[(j, i)].conj()).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::{c64, Pcg64};
+
+    fn random_hermitian(n: usize, rng: &mut Pcg64) -> CMat {
+        let a = CMat::random_normal(n, n, rng);
+        let mut h = CMat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                h[(i, j)] = (a[(i, j)] + a[(j, i)].conj()).scale(0.5);
+            }
+        }
+        h
+    }
+
+    #[test]
+    fn real_diagonal() {
+        let mut h = CMat::zeros(3, 3);
+        h[(0, 0)] = c64(1.0, 0.0);
+        h[(1, 1)] = c64(-2.0, 0.0);
+        h[(2, 2)] = c64(5.0, 0.0);
+        let l = eigenvalues(&h);
+        assert!((l[0] - 5.0).abs() < 1e-12);
+        assert!((l[1] - 1.0).abs() < 1e-12);
+        assert!((l[2] + 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pauli_y_eigenvalues() {
+        // σ_y = [[0, -i], [i, 0]] has eigenvalues ±1.
+        let mut h = CMat::zeros(2, 2);
+        h[(0, 1)] = c64(0.0, -1.0);
+        h[(1, 0)] = c64(0.0, 1.0);
+        let l = eigenvalues(&h);
+        assert!((l[0] - 1.0).abs() < 1e-12);
+        assert!((l[1] + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decomposition_reconstructs() {
+        let mut rng = Pcg64::seeded(41);
+        for &n in &[2usize, 3, 5, 8] {
+            let h = random_hermitian(n, &mut rng);
+            let e = eigh(&h);
+            // Q diag(λ) Qᴴ == H
+            let mut ql = CMat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    ql[(i, j)] = e.q[(i, j)].scale(e.lambda[j]);
+                }
+            }
+            let recon = ql.matmul(&e.q.hermitian());
+            assert!(recon.max_abs_diff(&h) < 1e-9, "n={n}");
+            assert!(e.q.orthonormality_defect() < 1e-10, "n={n}");
+        }
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let mut rng = Pcg64::seeded(42);
+        let h = random_hermitian(6, &mut rng);
+        let tr: f64 = (0..6).map(|i| h[(i, i)].re).sum();
+        let l = eigenvalues(&h);
+        assert!((l.iter().sum::<f64>() - tr).abs() < 1e-10);
+    }
+
+    #[test]
+    fn gram_route_matches_one_sided() {
+        use crate::linalg::jacobi_svd;
+        let mut rng = Pcg64::seeded(43);
+        for &(m, n) in &[(5usize, 5usize), (7, 4), (4, 7)] {
+            let a = CMat::random_normal(m, n, &mut rng);
+            let s1 = jacobi_svd::singular_values(&a);
+            let s2 = singular_values_gram(&a);
+            for (x, y) in s1.iter().zip(&s2) {
+                assert!((x - y).abs() < 1e-8, "{m}x{n}: {x} vs {y}");
+            }
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Linear-algebra substrate built from scratch (no LAPACK in this image):
+//! Householder QR, Golub–Reinsch dense SVD, one-sided Jacobi SVD for the
+//! per-frequency complex blocks, Hermitian Jacobi eigensolver (Gram-route
+//! ablation), power iteration, and induced-norm bounds.
+
+pub mod gk_svd;
+pub mod jacobi_eig;
+pub mod jacobi_svd;
+pub mod norms;
+pub mod power;
+pub mod qr;
+
+pub use gk_svd::SvdResult;
+pub use jacobi_svd::CSvd;
+pub use power::LinOp;

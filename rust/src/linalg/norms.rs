@@ -1,0 +1,74 @@
+//! Induced matrix norms and the Gouk et al. spectral-norm bound.
+//!
+//! §II-b of the paper cites Gouk et al. (2021): `‖A‖₂ ≤ √(‖A‖₁ · ‖A‖_∞)`
+//! (Hölder interpolation), where for the unrolled convolution both one-norms
+//! are cheap — with periodic boundary conditions every row (resp. column)
+//! has the same absolute sum, so they reduce to sums over the weight tensor.
+
+use crate::numeric::Mat;
+
+/// `‖A‖₁` — maximum absolute column sum.
+pub fn norm_1(a: &Mat) -> f64 {
+    let mut worst = 0.0f64;
+    for j in 0..a.cols {
+        let mut s = 0.0;
+        for i in 0..a.rows {
+            s += a[(i, j)].abs();
+        }
+        worst = worst.max(s);
+    }
+    worst
+}
+
+/// `‖A‖_∞` — maximum absolute row sum.
+pub fn norm_inf(a: &Mat) -> f64 {
+    let mut worst = 0.0f64;
+    for i in 0..a.rows {
+        let mut s = 0.0;
+        for j in 0..a.cols {
+            s += a[(i, j)].abs();
+        }
+        worst = worst.max(s);
+    }
+    worst
+}
+
+/// Hölder bound on the spectral norm: `√(‖A‖₁ ‖A‖_∞)`.
+pub fn holder_bound(a: &Mat) -> f64 {
+    (norm_1(a) * norm_inf(a)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gk_svd;
+    use crate::numeric::Pcg64;
+
+    #[test]
+    fn norms_on_known_matrix() {
+        let a = Mat::from_rows(&[&[1.0, -2.0], &[3.0, 4.0]]);
+        assert_eq!(norm_1(&a), 6.0); // col sums: 4, 6
+        assert_eq!(norm_inf(&a), 7.0); // row sums: 3, 7
+    }
+
+    #[test]
+    fn holder_bounds_spectral_norm() {
+        let mut rng = Pcg64::seeded(61);
+        for _ in 0..10 {
+            let a = Mat::random_normal(9, 7, &mut rng);
+            let sigma = gk_svd::singular_values(&a)[0];
+            let bound = holder_bound(&a);
+            assert!(sigma <= bound + 1e-10, "σ={sigma} bound={bound}");
+        }
+    }
+
+    #[test]
+    fn tight_on_nonnegative_rank_one() {
+        // For A = 1·1ᵀ (all ones, n×n): σ_max = n = √(n·n).
+        let n = 5;
+        let mut a = Mat::zeros(n, n);
+        a.data.iter_mut().for_each(|v| *v = 1.0);
+        let sigma = gk_svd::singular_values(&a)[0];
+        assert!((holder_bound(&a) - sigma).abs() < 1e-9);
+    }
+}

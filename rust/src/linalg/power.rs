@@ -1,0 +1,128 @@
+//! Power iteration for the spectral norm (largest singular value).
+//!
+//! The Yoshida–Miyato baseline (§II-b of the paper): approximate only σ_max,
+//! either on the *true* convolution operator (via `LinOp`) or on the loose
+//! reshaped `c_out × c_in·k²` matrix. Used as a comparison point for the
+//! full-spectrum methods.
+
+use crate::numeric::{Mat, Pcg64};
+
+/// A real linear operator `A : R^in → R^out` exposing the two matvecs the
+/// power method needs. Implemented by dense matrices and by the convolution
+/// operator (`conv::apply`) without ever materializing the unrolled matrix.
+pub trait LinOp {
+    fn in_dim(&self) -> usize;
+    fn out_dim(&self) -> usize;
+    /// `y = A x`
+    fn apply(&self, x: &[f64]) -> Vec<f64>;
+    /// `y = Aᵀ x`
+    fn apply_t(&self, x: &[f64]) -> Vec<f64>;
+}
+
+impl LinOp for Mat {
+    fn in_dim(&self) -> usize {
+        self.cols
+    }
+    fn out_dim(&self) -> usize {
+        self.rows
+    }
+    fn apply(&self, x: &[f64]) -> Vec<f64> {
+        self.matvec(x)
+    }
+    fn apply_t(&self, x: &[f64]) -> Vec<f64> {
+        self.matvec_t(x)
+    }
+}
+
+/// Outcome of [`spectral_norm`].
+pub struct PowerResult {
+    /// Estimated largest singular value.
+    pub sigma_max: f64,
+    /// Iterations actually run.
+    pub iterations: usize,
+    /// Final relative change — convergence indicator.
+    pub residual: f64,
+}
+
+/// Estimate `σ_max(A)` by power iteration on `AᵀA`.
+pub fn spectral_norm<O: LinOp>(op: &O, max_iters: usize, tol: f64, rng: &mut Pcg64) -> PowerResult {
+    let n = op.in_dim();
+    let mut x = rng.normal_vec(n);
+    normalize(&mut x);
+    let mut sigma = 0.0f64;
+    let mut last = f64::INFINITY;
+    let mut iters = 0;
+    let mut residual = f64::INFINITY;
+    while iters < max_iters {
+        iters += 1;
+        let y = op.apply(&x);
+        sigma = norm(&y);
+        if sigma == 0.0 {
+            return PowerResult { sigma_max: 0.0, iterations: iters, residual: 0.0 };
+        }
+        x = op.apply_t(&y);
+        normalize(&mut x);
+        residual = ((sigma - last) / sigma).abs();
+        if residual < tol {
+            break;
+        }
+        last = sigma;
+    }
+    PowerResult { sigma_max: sigma, iterations: iters, residual }
+}
+
+fn norm(x: &[f64]) -> f64 {
+    x.iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+fn normalize(x: &mut [f64]) {
+    let n = norm(x);
+    if n > 0.0 {
+        for v in x.iter_mut() {
+            *v /= n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gk_svd;
+
+    #[test]
+    fn matches_svd_on_dense() {
+        let mut rng = Pcg64::seeded(51);
+        let a = Mat::random_normal(12, 8, &mut rng);
+        let want = gk_svd::singular_values(&a)[0];
+        let got = spectral_norm(&a, 500, 1e-12, &mut rng);
+        assert!(
+            (got.sigma_max - want).abs() / want < 1e-8,
+            "power {} vs svd {want}",
+            got.sigma_max
+        );
+    }
+
+    #[test]
+    fn exact_on_diagonal() {
+        let a = Mat::from_rows(&[&[3.0, 0.0], &[0.0, 9.0]]);
+        let mut rng = Pcg64::seeded(52);
+        let got = spectral_norm(&a, 200, 1e-14, &mut rng);
+        assert!((got.sigma_max - 9.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn zero_operator() {
+        let a = Mat::zeros(4, 4);
+        let mut rng = Pcg64::seeded(53);
+        let got = spectral_norm(&a, 100, 1e-10, &mut rng);
+        assert_eq!(got.sigma_max, 0.0);
+    }
+
+    #[test]
+    fn converges_within_budget() {
+        let mut rng = Pcg64::seeded(54);
+        let a = Mat::random_normal(20, 20, &mut rng);
+        let got = spectral_norm(&a, 2000, 1e-10, &mut rng);
+        assert!(got.residual < 1e-10, "residual {}", got.residual);
+    }
+}

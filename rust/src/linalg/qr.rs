@@ -1,0 +1,179 @@
+//! Householder QR decomposition for real dense matrices.
+//!
+//! Substrate for the Golub–Kahan SVD (bidiagonalization uses the same
+//! reflector machinery) and for orthogonality checks in tests.
+
+use crate::numeric::{Layout, Mat};
+
+/// Result of a QR decomposition: `A = Q · R` with `Q` having orthonormal
+/// columns (thin factorization, `Q: m×n`, `R: n×n` for `m ≥ n`).
+pub struct Qr {
+    pub q: Mat,
+    pub r: Mat,
+}
+
+/// Compute a Householder reflector `v, β` such that
+/// `(I − β v vᵀ) x = ∓‖x‖ e₁`, with `v[0] = 1` implicit.
+/// Returns `(v, beta, alpha)` where `alpha` is the resulting leading entry.
+pub(crate) fn householder(x: &[f64]) -> (Vec<f64>, f64, f64) {
+    let n = x.len();
+    let mut v = x.to_vec();
+    if n == 0 {
+        return (v, 0.0, 0.0);
+    }
+    let sigma: f64 = x[1..].iter().map(|a| a * a).sum();
+    let x0 = x[0];
+    if sigma == 0.0 && x0 >= 0.0 {
+        v[0] = 1.0;
+        return (v, 0.0, x0);
+    }
+    let mu = (x0 * x0 + sigma).sqrt();
+    let v0 = if x0 <= 0.0 { x0 - mu } else { -sigma / (x0 + mu) };
+    let beta = 2.0 * v0 * v0 / (sigma + v0 * v0);
+    for vi in v.iter_mut().skip(1) {
+        *vi /= v0;
+    }
+    v[0] = 1.0;
+    // Both branches of v0 equal x0 − mu (the second computed stably), so the
+    // reflection always maps x ↦ +‖x‖·e₁.
+    (v, beta, mu)
+}
+
+/// Thin QR via Householder reflectors. Requires `m ≥ n`.
+pub fn qr(a: &Mat) -> Qr {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "qr requires rows >= cols (got {m}x{n})");
+    let mut r = a.to_layout(Layout::RowMajor);
+    // Store reflectors (v, beta) to build Q afterwards.
+    let mut reflectors: Vec<(Vec<f64>, f64)> = Vec::with_capacity(n);
+
+    for k in 0..n {
+        let col: Vec<f64> = (k..m).map(|i| r[(i, k)]).collect();
+        let (v, beta, alpha) = householder(&col);
+        // Apply (I - beta v vT) to R[k.., k..]
+        if beta != 0.0 {
+            for j in k..n {
+                let mut dot = 0.0;
+                for i in k..m {
+                    dot += v[i - k] * r[(i, j)];
+                }
+                let bd = beta * dot;
+                for i in k..m {
+                    r[(i, j)] -= bd * v[i - k];
+                }
+            }
+        }
+        r[(k, k)] = alpha;
+        for i in k + 1..m {
+            r[(i, k)] = 0.0;
+        }
+        reflectors.push((v, beta));
+    }
+
+    // Accumulate thin Q by applying reflectors to I (m×n), backwards.
+    let mut q = Mat::zeros(m, n);
+    for i in 0..n {
+        q[(i, i)] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let (v, beta) = &reflectors[k];
+        if *beta == 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i - k] * q[(i, j)];
+            }
+            let bd = beta * dot;
+            for i in k..m {
+                q[(i, j)] -= bd * v[i - k];
+            }
+        }
+    }
+
+    // Keep R upper-triangular n×n
+    let mut rn = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            rn[(i, j)] = r[(i, j)];
+        }
+    }
+    Qr { q, r: rn }
+}
+
+/// Orthonormality defect `‖QᵀQ − I‖_max` of a real matrix.
+pub fn orthonormality_defect(q: &Mat) -> f64 {
+    let mut worst = 0.0f64;
+    for i in 0..q.cols {
+        for j in 0..q.cols {
+            let mut dot = 0.0;
+            for r in 0..q.rows {
+                dot += q[(r, i)] * q[(r, j)];
+            }
+            let want = if i == j { 1.0 } else { 0.0 };
+            worst = worst.max((dot - want).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::Pcg64;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Pcg64::seeded(10);
+        for &(m, n) in &[(4usize, 4usize), (8, 5), (12, 3), (6, 6)] {
+            let a = Mat::random_normal(m, n, &mut rng);
+            let f = qr(&a);
+            let recon = f.q.matmul(&f.r);
+            assert!(recon.max_abs_diff(&a) < 1e-10, "{m}x{n}: {}", recon.max_abs_diff(&a));
+        }
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let mut rng = Pcg64::seeded(11);
+        let a = Mat::random_normal(10, 6, &mut rng);
+        let f = qr(&a);
+        assert!(orthonormality_defect(&f.q) < 1e-12);
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Pcg64::seeded(12);
+        let a = Mat::random_normal(7, 7, &mut rng);
+        let f = qr(&a);
+        for i in 0..7 {
+            for j in 0..i {
+                assert_eq!(f.r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_deficient_ok() {
+        // Two identical columns — still reconstructs.
+        let a = Mat::from_rows(&[&[1.0, 1.0], &[2.0, 2.0], &[3.0, 3.0]]);
+        let f = qr(&a);
+        assert!(f.q.matmul(&f.r).max_abs_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    fn householder_annihilates() {
+        let x = vec![3.0, 1.0, 5.0, 1.0];
+        let (v, beta, alpha) = householder(&x);
+        // y = (I - beta v v^T) x should be (alpha, 0, 0, 0)
+        let dot: f64 = v.iter().zip(&x).map(|(a, b)| a * b).sum();
+        let y: Vec<f64> = x.iter().zip(&v).map(|(xi, vi)| xi - beta * dot * vi).collect();
+        assert!((y[0] - alpha).abs() < 1e-12);
+        for yi in &y[1..] {
+            assert!(yi.abs() < 1e-12);
+        }
+        let norm: f64 = x.iter().map(|a| a * a).sum::<f64>().sqrt();
+        assert!((alpha.abs() - norm).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,287 @@
+//! `conv-svd-lfa` — CLI for the LFA convolutional-SVD system.
+//!
+//! Subcommands:
+//!   analyze    spectrum of one random conv layer (LFA, FFT or explicit)
+//!   audit      analyze every layer of a builtin or TOML model
+//!   compare    LFA vs FFT vs explicit on one layer, with timings
+//!   artifacts  list AOT artifacts and smoke-run one through PJRT
+//!   help       this text
+
+use anyhow::{anyhow, bail, Result};
+use conv_svd_lfa::baselines::{explicit_svd, fft_svd, FftLayoutPolicy};
+use conv_svd_lfa::cli::Cli;
+use conv_svd_lfa::conv::{Boundary, ConvKernel};
+use conv_svd_lfa::coordinator::{Backend, ServiceConfig, SpectralService};
+use conv_svd_lfa::lfa::{self, LfaOptions};
+use conv_svd_lfa::model::zoo;
+use conv_svd_lfa::model::ModelConfig;
+use conv_svd_lfa::numeric::Pcg64;
+use conv_svd_lfa::report::{commas, secs, Table};
+use conv_svd_lfa::runtime::{load_manifest, PjrtEngine};
+
+const HELP: &str = "\
+conv-svd-lfa — efficient SVD of convolutional mappings by Local Fourier Analysis
+
+USAGE: conv-svd-lfa <command> [options]
+
+COMMANDS
+  analyze   --n <N> [--m M] [--c-in C] [--c-out C] [--k K] [--threads T]
+            [--seed S] [--method lfa|fft|explicit] [--top J]
+            Compute the spectrum of a random conv layer.
+  audit     <builtin-or-config.toml> [--threads T] [--backend auto|native|pjrt]
+            [--artifacts DIR] [--csv]
+            Analyze all conv layers of a model. Builtins: lenet, vgg-small,
+            resnet20ish, paper-c16-n<N>.
+  compare   --n <N> [--c C] [--threads T] [--with-explicit]
+            LFA vs FFT (vs explicit) runtimes + agreement on one layer.
+  artifacts [--dir DIR] [--run NAME]
+            List AOT artifacts; optionally execute one via PJRT.
+  help      Show this text.
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let cli = Cli::from_env(&["with-explicit", "verbose", "csv"])?;
+    match cli.command.as_str() {
+        "analyze" => cmd_analyze(&cli),
+        "audit" => cmd_audit(&cli),
+        "compare" => cmd_compare(&cli),
+        "artifacts" => cmd_artifacts(&cli),
+        "" | "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; try `conv-svd-lfa help`"),
+    }
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+fn cmd_analyze(cli: &Cli) -> Result<()> {
+    let n: usize = cli.opt_parse("n", 32)?;
+    let m: usize = cli.opt_parse("m", n)?;
+    let c_in: usize = cli.opt_parse("c-in", cli.opt_parse("c", 16)?)?;
+    let c_out: usize = cli.opt_parse("c-out", cli.opt_parse("c", 16)?)?;
+    let k: usize = cli.opt_parse("k", 3)?;
+    let threads: usize = cli.opt_parse("threads", default_threads())?;
+    let seed: u64 = cli.opt_parse("seed", 2025)?;
+    let top: usize = cli.opt_parse("top", 8)?;
+    let method = cli.opt("method").unwrap_or("lfa");
+
+    let mut rng = Pcg64::seeded(seed);
+    let kernel = ConvKernel::random_he(c_out, c_in, k, k, &mut rng);
+    let t0 = std::time::Instant::now();
+    let spectrum = match method {
+        "lfa" => lfa::singular_values(
+            &kernel,
+            n,
+            m,
+            LfaOptions { threads, ..Default::default() },
+        ),
+        "fft" => fft_svd::singular_values(&kernel, n, m, FftLayoutPolicy::Natural, threads),
+        "explicit" => explicit_svd::singular_values(&kernel, n, m, Boundary::Periodic),
+        other => bail!("unknown method {other:?} (lfa|fft|explicit)"),
+    };
+    let dt = t0.elapsed();
+    let sorted = spectrum.sorted_desc();
+    println!(
+        "layer {c_out}x{c_in}x{k}x{k} on {n}x{m} grid — {} singular values via {method} in {}",
+        commas(sorted.len() as u128),
+        secs(dt)
+    );
+    println!("  σ_max = {:.6}", spectrum.sigma_max());
+    println!("  σ_min = {:.6}", spectrum.sigma_min());
+    println!("  cond  = {:.3}", spectrum.condition_number());
+    let shown: Vec<String> = sorted.iter().take(top).map(|v| format!("{v:.4}")).collect();
+    println!("  top {top}: [{}]", shown.join(", "));
+    Ok(())
+}
+
+fn load_model(name_or_path: &str) -> Result<ModelConfig> {
+    if let Some(m) = zoo::builtin(name_or_path) {
+        return Ok(m);
+    }
+    let path = std::path::Path::new(name_or_path);
+    if path.exists() {
+        return ModelConfig::load(path);
+    }
+    Err(anyhow!(
+        "no builtin model {name_or_path:?} (have {:?}) and no such file",
+        zoo::builtin_names()
+    ))
+}
+
+fn cmd_audit(cli: &Cli) -> Result<()> {
+    let target = cli
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("audit needs a builtin name or config path"))?;
+    let model = load_model(target)?;
+    let threads: usize = cli.opt_parse("threads", default_threads())?;
+    let backend = match cli.opt("backend").unwrap_or("auto") {
+        "auto" => Backend::Auto,
+        "native" => Backend::Native,
+        "pjrt" => Backend::Pjrt,
+        other => bail!("unknown backend {other:?}"),
+    };
+    let artifacts_dir = match cli.opt("artifacts") {
+        Some(d) => Some(std::path::PathBuf::from(d)),
+        None if backend != Backend::Native => Some(SpectralService::default_artifacts_dir()),
+        None => None,
+    };
+    let svc = SpectralService::start(ServiceConfig {
+        workers: threads,
+        backend,
+        artifacts_dir,
+        ..Default::default()
+    })?;
+    let reports = svc.audit_model(&model)?;
+    let mut table = Table::new([
+        "layer", "grid", "c_out", "c_in", "#σ", "σ_max", "σ_min", "cond", "fro-defect", "time",
+        "backend",
+    ]);
+    for r in &reports {
+        table.row([
+            r.name.clone(),
+            format!("{}x{}", r.n, r.m),
+            r.c_out.to_string(),
+            r.c_in.to_string(),
+            commas(r.num_values as u128),
+            format!("{:.4}", r.sigma_max),
+            format!("{:.4}", r.sigma_min),
+            format!("{:.2}", r.condition),
+            format!("{:.1e}", r.frobenius_defect),
+            secs(r.elapsed),
+            if r.pjrt_tiles > 0 { format!("pjrt x{}", r.pjrt_tiles) } else { "native".into() },
+        ]);
+    }
+    println!(
+        "model {} ({} layers, {} singular values total)",
+        model.name,
+        model.layers.len(),
+        commas(model.total_values() as u128)
+    );
+    print!("{}", table.render());
+    let m = svc.metrics();
+    println!(
+        "metrics: {} jobs, {} tiles ({} pjrt / {} native), {} values, Σ tile work {}",
+        m.jobs_completed,
+        m.tiles_completed,
+        m.pjrt_tiles,
+        m.native_tiles,
+        commas(m.values_computed as u128),
+        secs(m.tile_work)
+    );
+    if cli.flag("csv") {
+        let path = table.save_csv(&format!("audit_{}", model.name))?;
+        println!("csv: {}", path.display());
+    }
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_compare(cli: &Cli) -> Result<()> {
+    let n: usize = cli.opt_parse("n", 32)?;
+    let c: usize = cli.opt_parse("c", 16)?;
+    let threads: usize = cli.opt_parse("threads", default_threads())?;
+    let seed: u64 = cli.opt_parse("seed", 2025)?;
+    let mut rng = Pcg64::seeded(seed);
+    let kernel = ConvKernel::random_he(c, c, 3, 3, &mut rng);
+
+    let t0 = std::time::Instant::now();
+    let s_lfa = lfa::singular_values(&kernel, n, n, LfaOptions { threads, ..Default::default() });
+    let t_lfa = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let s_fft = fft_svd::singular_values(&kernel, n, n, FftLayoutPolicy::Natural, threads);
+    let t_fft = t0.elapsed();
+
+    let mut table = Table::new(["method", "#σ", "σ_max", "time", "vs LFA"]);
+    table.row([
+        "LFA".to_string(),
+        commas(s_lfa.num_values() as u128),
+        format!("{:.6}", s_lfa.sigma_max()),
+        secs(t_lfa),
+        "1.00x".into(),
+    ]);
+    table.row([
+        "FFT".to_string(),
+        commas(s_fft.num_values() as u128),
+        format!("{:.6}", s_fft.sigma_max()),
+        secs(t_fft),
+        format!("{:.2}x", t_fft.as_secs_f64() / t_lfa.as_secs_f64()),
+    ]);
+    if cli.flag("with-explicit") {
+        let t0 = std::time::Instant::now();
+        let s_exp = explicit_svd::singular_values(&kernel, n, n, Boundary::Periodic);
+        let t_exp = t0.elapsed();
+        table.row([
+            "explicit".to_string(),
+            commas(s_exp.num_values() as u128),
+            format!("{:.6}", s_exp.sigma_max()),
+            secs(t_exp),
+            format!("{:.2}x", t_exp.as_secs_f64() / t_lfa.as_secs_f64()),
+        ]);
+    }
+    let agree = {
+        let a = s_lfa.sorted_desc();
+        let b = s_fft.sorted_desc();
+        a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+    };
+    print!("{}", table.render());
+    println!("LFA vs FFT max |Δσ| = {agree:.3e}");
+    Ok(())
+}
+
+fn cmd_artifacts(cli: &Cli) -> Result<()> {
+    let dir = cli
+        .opt("dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(SpectralService::default_artifacts_dir);
+    let specs = load_manifest(&dir)?;
+    let mut table = Table::new(["name", "grid", "channels", "tile_rows", "σ/call", "file"]);
+    for s in &specs {
+        table.row([
+            s.name.clone(),
+            format!("{}x{}", s.n, s.m),
+            format!("{}x{}", s.c_out, s.c_in),
+            s.tile_rows.to_string(),
+            s.out_len().to_string(),
+            s.file.file_name().unwrap().to_string_lossy().to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+    if let Some(name) = cli.opt("run") {
+        let spec = specs
+            .iter()
+            .find(|s| s.name == name)
+            .ok_or_else(|| anyhow!("no artifact named {name:?}"))?;
+        let mut rng = Pcg64::seeded(7);
+        let kernel = ConvKernel::random_he(spec.c_out, spec.c_in, spec.kh, spec.kw, &mut rng);
+        let w: Vec<f32> = kernel.data.iter().map(|&v| v as f32).collect();
+        let mut engine = PjrtEngine::cpu()?;
+        let t0 = std::time::Instant::now();
+        let values = engine.run_grid(spec, &w)?;
+        let dt = t0.elapsed();
+        let native = lfa::singular_values(&kernel, spec.n, spec.m, LfaOptions::default());
+        let worst = values
+            .iter()
+            .zip(&native.values)
+            .map(|(a, b)| (*a as f64 - b).abs())
+            .fold(0.0, f64::max);
+        println!(
+            "ran {name} on {}: {} values in {}, max |Δσ| vs native = {worst:.2e}",
+            engine.platform(),
+            commas(values.len() as u128),
+            secs(dt)
+        );
+    }
+    Ok(())
+}

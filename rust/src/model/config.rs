@@ -1,0 +1,272 @@
+//! Model configuration: a TOML-subset parser (no serde/toml in the offline
+//! crate set) describing the conv layers of a CNN to audit.
+//!
+//! Format:
+//!
+//! ```toml
+//! name = "resnet-ish"
+//! seed = 42
+//!
+//! [[layer]]
+//! name   = "conv1"
+//! c_in   = 3
+//! c_out  = 16
+//! kernel = 3        # kh = kw
+//! height = 32
+//! width  = 32
+//! init   = "he"     # he | glorot
+//! ```
+
+use crate::conv::ConvKernel;
+use crate::numeric::Pcg64;
+use anyhow::{bail, Context, Result};
+
+/// Weight initialization scheme.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Init {
+    He,
+    Glorot,
+}
+
+/// One conv layer to analyze.
+#[derive(Clone, Debug)]
+pub struct LayerConfig {
+    pub name: String,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub height: usize,
+    pub width: usize,
+    pub init: Init,
+}
+
+impl LayerConfig {
+    /// Create the weight tensor for this layer. The stream id is derived
+    /// from the layer name so layers are independent but reproducible.
+    pub fn materialize(&self, seed: u64) -> ConvKernel {
+        let stream = self.name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x100000001b3)
+        });
+        let mut rng = Pcg64::new(seed, stream);
+        match self.init {
+            Init::He => ConvKernel::random_he(self.c_out, self.c_in, self.kh, self.kw, &mut rng),
+            Init::Glorot => {
+                ConvKernel::random_glorot(self.c_out, self.c_in, self.kh, self.kw, &mut rng)
+            }
+        }
+    }
+
+    /// Number of singular values this layer's mapping has.
+    pub fn num_values(&self) -> usize {
+        self.height * self.width * self.c_out.min(self.c_in)
+    }
+}
+
+/// A model: an ordered list of conv layers.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub seed: u64,
+    pub layers: Vec<LayerConfig>,
+}
+
+impl ModelConfig {
+    /// Parse the TOML-subset format above.
+    pub fn parse(text: &str) -> Result<ModelConfig> {
+        let mut name = "model".to_string();
+        let mut seed = 0u64;
+        let mut layers: Vec<LayerConfig> = Vec::new();
+        let mut in_layer = false;
+
+        // Current layer fields.
+        let mut cur: Option<PartialLayer> = None;
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line == "[[layer]]" {
+                if let Some(p) = cur.take() {
+                    layers.push(p.build(lineno)?);
+                }
+                cur = Some(PartialLayer::default());
+                in_layer = true;
+                continue;
+            }
+            if line.starts_with('[') {
+                bail!("line {}: unknown section {line}", lineno + 1);
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let k = k.trim();
+            let v = v.trim().trim_matches('"');
+            if !in_layer {
+                match k {
+                    "name" => name = v.to_string(),
+                    "seed" => seed = v.parse().with_context(|| format!("line {}: bad seed", lineno + 1))?,
+                    _ => bail!("line {}: unknown top-level key {k}", lineno + 1),
+                }
+            } else {
+                let p = cur.as_mut().expect("in_layer implies cur");
+                match k {
+                    "name" => p.name = Some(v.to_string()),
+                    "c_in" => p.c_in = Some(parse_usize(v, lineno)?),
+                    "c_out" => p.c_out = Some(parse_usize(v, lineno)?),
+                    "kernel" => {
+                        let kk = parse_usize(v, lineno)?;
+                        p.kh = Some(kk);
+                        p.kw = Some(kk);
+                    }
+                    "kh" => p.kh = Some(parse_usize(v, lineno)?),
+                    "kw" => p.kw = Some(parse_usize(v, lineno)?),
+                    "height" => p.height = Some(parse_usize(v, lineno)?),
+                    "width" => p.width = Some(parse_usize(v, lineno)?),
+                    "init" => {
+                        p.init = Some(match v {
+                            "he" => Init::He,
+                            "glorot" => Init::Glorot,
+                            _ => bail!("line {}: unknown init {v}", lineno + 1),
+                        })
+                    }
+                    _ => bail!("line {}: unknown layer key {k}", lineno + 1),
+                }
+            }
+        }
+        if let Some(p) = cur.take() {
+            layers.push(p.build(text.lines().count())?);
+        }
+        if layers.is_empty() {
+            bail!("model config has no [[layer]] sections");
+        }
+        Ok(ModelConfig { name, seed, layers })
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &std::path::Path) -> Result<ModelConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading model config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Total singular values across all layers.
+    pub fn total_values(&self) -> usize {
+        self.layers.iter().map(|l| l.num_values()).sum()
+    }
+}
+
+fn parse_usize(v: &str, lineno: usize) -> Result<usize> {
+    v.parse::<usize>().with_context(|| format!("line {}: bad integer {v}", lineno + 1))
+}
+
+#[derive(Default)]
+struct PartialLayer {
+    name: Option<String>,
+    c_in: Option<usize>,
+    c_out: Option<usize>,
+    kh: Option<usize>,
+    kw: Option<usize>,
+    height: Option<usize>,
+    width: Option<usize>,
+    init: Option<Init>,
+}
+
+impl PartialLayer {
+    fn build(self, lineno: usize) -> Result<LayerConfig> {
+        let get = |o: Option<usize>, what: &str| {
+            o.with_context(|| format!("layer before line {}: missing {what}", lineno + 1))
+        };
+        let c_in = get(self.c_in, "c_in")?;
+        let c_out = get(self.c_out, "c_out")?;
+        let height = get(self.height, "height")?;
+        let width = get(self.width, "width")?;
+        let kh = self.kh.unwrap_or(3);
+        let kw = self.kw.unwrap_or(3);
+        if c_in == 0 || c_out == 0 || height == 0 || width == 0 || kh == 0 || kw == 0 {
+            bail!("layer before line {}: zero-sized dimension", lineno + 1);
+        }
+        Ok(LayerConfig {
+            name: self.name.unwrap_or_else(|| format!("layer{}", lineno)),
+            c_in,
+            c_out,
+            kh,
+            kw,
+            height,
+            width,
+            init: self.init.unwrap_or(Init::He),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+name = "tiny"
+seed = 7
+
+[[layer]]
+name   = "conv1"
+c_in   = 3
+c_out  = 8
+kernel = 3
+height = 16
+width  = 16
+
+[[layer]]
+name   = "conv2"
+c_in   = 8
+c_out  = 8
+kernel = 3
+height = 8
+width  = 8
+init   = "glorot"
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ModelConfig::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "tiny");
+        assert_eq!(m.seed, 7);
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(m.layers[0].c_out, 8);
+        assert_eq!(m.layers[1].init, Init::Glorot);
+        assert_eq!(m.total_values(), 16 * 16 * 3 + 8 * 8 * 8);
+    }
+
+    #[test]
+    fn materialize_is_deterministic_and_layer_distinct() {
+        let m = ModelConfig::parse(SAMPLE).unwrap();
+        let k1 = m.layers[0].materialize(m.seed);
+        let k2 = m.layers[0].materialize(m.seed);
+        assert_eq!(k1.data, k2.data);
+        let mut cfg2 = m.layers[0].clone();
+        cfg2.name = "other".to_string();
+        let k3 = cfg2.materialize(m.seed);
+        assert_ne!(k1.data, k3.data);
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(ModelConfig::parse("[[layer]]\nname = \"x\"\n").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(ModelConfig::parse("nonsense without equals\n[[layer]]").is_err());
+        assert!(ModelConfig::parse("").is_err());
+    }
+
+    #[test]
+    fn comments_and_defaults() {
+        let m = ModelConfig::parse(
+            "# top\n[[layer]]\nc_in = 1 # inline\nc_out = 2\nheight = 4\nwidth = 4\n",
+        )
+        .unwrap();
+        assert_eq!(m.layers[0].kh, 3, "kernel defaults to 3");
+        assert_eq!(m.layers[0].init, Init::He);
+    }
+}

@@ -1,0 +1,7 @@
+//! Model configs (TOML-lite) and the builtin zoo used by the audit
+//! example, the CLI and the benches.
+
+pub mod config;
+pub mod zoo;
+
+pub use config::{Init, LayerConfig, ModelConfig};

@@ -1,0 +1,370 @@
+//! Double-precision complex arithmetic.
+//!
+//! The offline crate set has no `num-complex`, so we carry our own small,
+//! `#[repr(C)]`, `Copy` complex type. Layout is `[re, im]`, compatible with
+//! the interleaved representation used by the FFT substrate and by the
+//! real/imag plane pairs exchanged with the PJRT artifacts.
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// A complex number over `f64`.
+#[derive(Clone, Copy, PartialEq, Default)]
+#[repr(C)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+/// Shorthand constructor.
+#[inline(always)]
+pub const fn c64(re: f64, im: f64) -> C64 {
+    C64 { re, im }
+}
+
+impl C64 {
+    pub const ZERO: C64 = c64(0.0, 0.0);
+    pub const ONE: C64 = c64(1.0, 0.0);
+    pub const I: C64 = c64(0.0, 1.0);
+
+    #[inline(always)]
+    pub const fn new(re: f64, im: f64) -> Self {
+        Self { re, im }
+    }
+
+    /// Purely real complex number.
+    #[inline(always)]
+    pub const fn real(re: f64) -> Self {
+        Self { re, im: 0.0 }
+    }
+
+    /// `e^{iθ} = cos θ + i sin θ`.
+    #[inline]
+    pub fn cis(theta: f64) -> Self {
+        let (s, c) = theta.sin_cos();
+        Self { re: c, im: s }
+    }
+
+    /// Complex conjugate.
+    #[inline(always)]
+    pub fn conj(self) -> Self {
+        Self { re: self.re, im: -self.im }
+    }
+
+    /// Squared magnitude `|z|²` (cheaper than `abs`).
+    #[inline(always)]
+    pub fn norm_sqr(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    /// Magnitude `|z|`, overflow-safe via `hypot`.
+    #[inline]
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+
+    /// Argument (phase) in `(-π, π]`.
+    #[inline]
+    pub fn arg(self) -> f64 {
+        self.im.atan2(self.re)
+    }
+
+    /// Multiplicative inverse. `1/0` produces infinities like `f64`.
+    #[inline]
+    pub fn inv(self) -> Self {
+        let d = self.norm_sqr();
+        Self { re: self.re / d, im: -self.im / d }
+    }
+
+    /// `self * other.conj()` — the building block of Hermitian inner products.
+    #[inline(always)]
+    pub fn mul_conj(self, other: Self) -> Self {
+        Self {
+            re: self.re * other.re + self.im * other.im,
+            im: self.im * other.re - self.re * other.im,
+        }
+    }
+
+    /// Fused multiply-add: `self + a * b`. The inner loop of every kernel in
+    /// this crate; kept in one place so it can be re-tuned centrally.
+    #[inline(always)]
+    pub fn mul_add(self, a: Self, b: Self) -> Self {
+        Self {
+            re: self.re + a.re * b.re - a.im * b.im,
+            im: self.im + a.re * b.im + a.im * b.re,
+        }
+    }
+
+    /// Scale by a real factor.
+    #[inline(always)]
+    pub fn scale(self, s: f64) -> Self {
+        Self { re: self.re * s, im: self.im * s }
+    }
+
+    /// Principal square root.
+    pub fn sqrt(self) -> Self {
+        if self.re == 0.0 && self.im == 0.0 {
+            return Self::ZERO;
+        }
+        let m = self.abs();
+        let re = ((m + self.re) * 0.5).sqrt();
+        let im_mag = ((m - self.re) * 0.5).sqrt();
+        Self { re, im: if self.im >= 0.0 { im_mag } else { -im_mag } }
+    }
+
+    /// True if either component is NaN.
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        self.re.is_nan() || self.im.is_nan()
+    }
+
+    /// True if both components are finite.
+    #[inline]
+    pub fn is_finite(self) -> bool {
+        self.re.is_finite() && self.im.is_finite()
+    }
+}
+
+impl Add for C64 {
+    type Output = C64;
+    #[inline(always)]
+    fn add(self, rhs: C64) -> C64 {
+        c64(self.re + rhs.re, self.im + rhs.im)
+    }
+}
+
+impl Sub for C64 {
+    type Output = C64;
+    #[inline(always)]
+    fn sub(self, rhs: C64) -> C64 {
+        c64(self.re - rhs.re, self.im - rhs.im)
+    }
+}
+
+impl Mul for C64 {
+    type Output = C64;
+    #[inline(always)]
+    fn mul(self, rhs: C64) -> C64 {
+        c64(
+            self.re * rhs.re - self.im * rhs.im,
+            self.re * rhs.im + self.im * rhs.re,
+        )
+    }
+}
+
+impl Div for C64 {
+    type Output = C64;
+    #[inline]
+    fn div(self, rhs: C64) -> C64 {
+        // Smith's algorithm: avoids overflow for large components.
+        if rhs.re.abs() >= rhs.im.abs() {
+            let r = rhs.im / rhs.re;
+            let d = rhs.re + rhs.im * r;
+            c64((self.re + self.im * r) / d, (self.im - self.re * r) / d)
+        } else {
+            let r = rhs.re / rhs.im;
+            let d = rhs.re * r + rhs.im;
+            c64((self.re * r + self.im) / d, (self.im * r - self.re) / d)
+        }
+    }
+}
+
+impl Neg for C64 {
+    type Output = C64;
+    #[inline(always)]
+    fn neg(self) -> C64 {
+        c64(-self.re, -self.im)
+    }
+}
+
+impl Mul<f64> for C64 {
+    type Output = C64;
+    #[inline(always)]
+    fn mul(self, rhs: f64) -> C64 {
+        self.scale(rhs)
+    }
+}
+
+impl Mul<C64> for f64 {
+    type Output = C64;
+    #[inline(always)]
+    fn mul(self, rhs: C64) -> C64 {
+        rhs.scale(self)
+    }
+}
+
+impl Div<f64> for C64 {
+    type Output = C64;
+    #[inline(always)]
+    fn div(self, rhs: f64) -> C64 {
+        c64(self.re / rhs, self.im / rhs)
+    }
+}
+
+impl AddAssign for C64 {
+    #[inline(always)]
+    fn add_assign(&mut self, rhs: C64) {
+        self.re += rhs.re;
+        self.im += rhs.im;
+    }
+}
+
+impl SubAssign for C64 {
+    #[inline(always)]
+    fn sub_assign(&mut self, rhs: C64) {
+        self.re -= rhs.re;
+        self.im -= rhs.im;
+    }
+}
+
+impl MulAssign for C64 {
+    #[inline(always)]
+    fn mul_assign(&mut self, rhs: C64) {
+        *self = *self * rhs;
+    }
+}
+
+impl DivAssign for C64 {
+    #[inline]
+    fn div_assign(&mut self, rhs: C64) {
+        *self = *self / rhs;
+    }
+}
+
+impl From<f64> for C64 {
+    #[inline(always)]
+    fn from(re: f64) -> Self {
+        c64(re, 0.0)
+    }
+}
+
+impl Sum for C64 {
+    fn sum<I: Iterator<Item = C64>>(iter: I) -> C64 {
+        iter.fold(C64::ZERO, |a, b| a + b)
+    }
+}
+
+impl fmt::Debug for C64 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.im >= 0.0 {
+            write!(f, "{:+.6}{:+.6}i", self.re, self.im)
+        } else {
+            write!(f, "{:+.6}{:+.6}i", self.re, self.im)
+        }
+    }
+}
+
+impl fmt::Display for C64 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EPS: f64 = 1e-12;
+
+    fn close(a: C64, b: C64) -> bool {
+        (a - b).abs() < EPS
+    }
+
+    #[test]
+    fn add_sub_mul() {
+        let a = c64(1.0, 2.0);
+        let b = c64(3.0, -4.0);
+        assert!(close(a + b, c64(4.0, -2.0)));
+        assert!(close(a - b, c64(-2.0, 6.0)));
+        // (1+2i)(3-4i) = 3 -4i +6i -8i² = 11 + 2i
+        assert!(close(a * b, c64(11.0, 2.0)));
+    }
+
+    #[test]
+    fn div_matches_mul_inv() {
+        let a = c64(1.5, -0.25);
+        let b = c64(-2.0, 0.75);
+        assert!(close(a / b, a * b.inv()));
+        assert!(close((a / b) * b, a));
+    }
+
+    #[test]
+    fn div_extreme_magnitudes() {
+        // Smith's algorithm keeps this finite where the naive formula overflows.
+        let a = c64(1e300, 1e300);
+        let b = c64(1e300, 1e-300);
+        let q = a / b;
+        assert!(q.is_finite());
+        assert!((q.re - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cis_is_unit() {
+        for k in 0..100 {
+            let t = k as f64 * 0.1 - 5.0;
+            let z = C64::cis(t);
+            assert!((z.abs() - 1.0).abs() < EPS);
+            assert!((z.arg() - t.sin().atan2(t.cos())).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn conj_mul_is_norm() {
+        let a = c64(3.0, 4.0);
+        let n = a * a.conj();
+        assert!(close(n, c64(25.0, 0.0)));
+        assert_eq!(a.norm_sqr(), 25.0);
+        assert_eq!(a.abs(), 5.0);
+    }
+
+    #[test]
+    fn mul_conj_matches() {
+        let a = c64(1.0, 2.0);
+        let b = c64(3.0, -4.0);
+        assert!(close(a.mul_conj(b), a * b.conj()));
+    }
+
+    #[test]
+    fn mul_add_matches() {
+        let acc = c64(0.5, -0.5);
+        let a = c64(1.0, 2.0);
+        let b = c64(-3.0, 1.0);
+        assert!(close(acc.mul_add(a, b), acc + a * b));
+    }
+
+    #[test]
+    fn sqrt_squares_back() {
+        for &z in &[c64(4.0, 0.0), c64(-4.0, 0.0), c64(3.0, 4.0), c64(-1.0, -1.0)] {
+            let r = z.sqrt();
+            assert!(close(r * r, z), "sqrt({z:?}) = {r:?}");
+            assert!(r.re >= 0.0, "principal branch");
+        }
+    }
+
+    #[test]
+    fn sqrt_zero() {
+        assert_eq!(C64::ZERO.sqrt(), C64::ZERO);
+    }
+
+    #[test]
+    fn scalar_ops() {
+        let a = c64(2.0, -6.0);
+        assert!(close(a * 0.5, c64(1.0, -3.0)));
+        assert!(close(0.5 * a, c64(1.0, -3.0)));
+        assert!(close(a / 2.0, c64(1.0, -3.0)));
+    }
+
+    #[test]
+    fn sum_iterator() {
+        let v = vec![c64(1.0, 1.0); 10];
+        let s: C64 = v.into_iter().sum();
+        assert!(close(s, c64(10.0, 10.0)));
+    }
+
+    #[test]
+    fn abs_overflow_safe() {
+        let z = c64(1e200, 1e200);
+        assert!(z.abs().is_finite());
+    }
+}

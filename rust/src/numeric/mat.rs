@@ -1,0 +1,496 @@
+//! Dense real and complex matrices with explicit memory-layout control.
+//!
+//! The paper's Table IV shows that whether the per-frequency blocks are
+//! stored row-major (contiguous) or in the FFT's natural planar layout has a
+//! first-order effect on SVD runtime. Layout is therefore a visible property
+//! of the matrix types here, not an implementation detail.
+
+use crate::numeric::complex::C64;
+use crate::numeric::rng::Pcg64;
+use std::fmt;
+
+/// Element-storage order of a dense matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    /// C order — rows are contiguous.
+    RowMajor,
+    /// Fortran order — columns are contiguous.
+    ColMajor,
+}
+
+impl Layout {
+    #[inline]
+    pub fn index(self, rows: usize, cols: usize, r: usize, c: usize) -> usize {
+        match self {
+            Layout::RowMajor => r * cols + c,
+            Layout::ColMajor => c * rows + r,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Real dense matrix
+// ---------------------------------------------------------------------------
+
+/// Dense `f64` matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub layout: Layout,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, layout: Layout::RowMajor, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn zeros_with(rows: usize, cols: usize, layout: Layout) -> Self {
+        Self { rows, cols, layout, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut m = Self::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c, "ragged rows");
+            for (j, &v) in row.iter().enumerate() {
+                m[(i, j)] = v;
+            }
+        }
+        m
+    }
+
+    pub fn random_normal(rows: usize, cols: usize, rng: &mut Pcg64) -> Self {
+        Self { rows, cols, layout: Layout::RowMajor, data: rng.normal_vec(rows * cols) }
+    }
+
+    #[inline(always)]
+    pub fn idx(&self, r: usize, c: usize) -> usize {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.layout.index(self.rows, self.cols, r, c)
+    }
+
+    /// Return a copy in the requested layout (no-op clone if it matches).
+    pub fn to_layout(&self, layout: Layout) -> Self {
+        if layout == self.layout {
+            return self.clone();
+        }
+        let mut out = Self::zeros_with(self.rows, self.cols, layout);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[(r, c)] = self[(r, c)];
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Self {
+        let mut out = Self::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[(c, r)] = self[(r, c)];
+            }
+        }
+        out
+    }
+
+    /// Plain triple-loop matmul (used by tests and small problems only).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "dim mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out[(i, j)] += a * other[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        let mut y = vec![0.0; self.rows];
+        match self.layout {
+            Layout::RowMajor => {
+                for (i, yi) in y.iter_mut().enumerate() {
+                    let row = &self.data[i * self.cols..(i + 1) * self.cols];
+                    *yi = row.iter().zip(x).map(|(a, b)| a * b).sum();
+                }
+            }
+            Layout::ColMajor => {
+                for (j, &xj) in x.iter().enumerate() {
+                    if xj == 0.0 {
+                        continue;
+                    }
+                    let col = &self.data[j * self.rows..(j + 1) * self.rows];
+                    for (yi, &a) in y.iter_mut().zip(col) {
+                        *yi += a * xj;
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    /// Transposed matrix–vector product `Aᵀ x`.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, x.len());
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            for j in 0..self.cols {
+                y[j] += self[(i, j)] * xi;
+            }
+        }
+        y
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut m = 0.0f64;
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                m = m.max((self[(r, c)] - other[(r, c)]).abs());
+            }
+        }
+        m
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline(always)]
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        &self.data[self.idx(r, c)]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline(always)]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        let i = self.idx(r, c);
+        &mut self.data[i]
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} ({:?})", self.rows, self.cols, self.layout)?;
+        let rmax = self.rows.min(8);
+        let cmax = self.cols.min(8);
+        for r in 0..rmax {
+            write!(f, "  [")?;
+            for c in 0..cmax {
+                write!(f, "{:>10.4}", self[(r, c)])?;
+            }
+            writeln!(f, "{}]", if cmax < self.cols { " …" } else { "" })?;
+        }
+        if rmax < self.rows {
+            writeln!(f, "  …")?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Complex dense matrix
+// ---------------------------------------------------------------------------
+
+/// Dense complex matrix over [`C64`].
+#[derive(Clone, PartialEq)]
+pub struct CMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub layout: Layout,
+    pub data: Vec<C64>,
+}
+
+impl CMat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, layout: Layout::RowMajor, data: vec![C64::ZERO; rows * cols] }
+    }
+
+    pub fn zeros_with(rows: usize, cols: usize, layout: Layout) -> Self {
+        Self { rows, cols, layout, data: vec![C64::ZERO; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = C64::ONE;
+        }
+        m
+    }
+
+    pub fn from_real(m: &Mat) -> Self {
+        let mut out = Self::zeros_with(m.rows, m.cols, m.layout);
+        for (dst, &src) in out.data.iter_mut().zip(&m.data) {
+            *dst = C64::real(src);
+        }
+        out
+    }
+
+    pub fn random_normal(rows: usize, cols: usize, rng: &mut Pcg64) -> Self {
+        let data = (0..rows * cols).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+        Self { rows, cols, layout: Layout::RowMajor, data }
+    }
+
+    #[inline(always)]
+    pub fn idx(&self, r: usize, c: usize) -> usize {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.layout.index(self.rows, self.cols, r, c)
+    }
+
+    pub fn to_layout(&self, layout: Layout) -> Self {
+        if layout == self.layout {
+            return self.clone();
+        }
+        let mut out = Self::zeros_with(self.rows, self.cols, layout);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[(r, c)] = self[(r, c)];
+            }
+        }
+        out
+    }
+
+    /// Hermitian (conjugate) transpose.
+    pub fn hermitian(&self) -> CMat {
+        let mut out = CMat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[(c, r)] = self[(r, c)].conj();
+            }
+        }
+        out
+    }
+
+    pub fn matmul(&self, other: &CMat) -> CMat {
+        assert_eq!(self.cols, other.rows, "dim mismatch");
+        let mut out = CMat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                for j in 0..other.cols {
+                    let o = out.idx(i, j);
+                    out.data[o] = out.data[o].mul_add(a, other[(k, j)]);
+                }
+            }
+        }
+        out
+    }
+
+    /// `Aᴴ A` — the Gram matrix (Hermitian positive semidefinite).
+    pub fn gram(&self) -> CMat {
+        let n = self.cols;
+        let mut g = CMat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let mut s = C64::ZERO;
+                for r in 0..self.rows {
+                    s = s.mul_add(self[(r, i)].conj(), self[(r, j)]);
+                }
+                g[(i, j)] = s;
+                g[(j, i)] = s.conj();
+            }
+        }
+        g
+    }
+
+    pub fn matvec(&self, x: &[C64]) -> Vec<C64> {
+        assert_eq!(self.cols, x.len());
+        let mut y = vec![C64::ZERO; self.rows];
+        for r in 0..self.rows {
+            let mut s = C64::ZERO;
+            for c in 0..self.cols {
+                s = s.mul_add(self[(r, c)], x[c]);
+            }
+            y[r] = s;
+        }
+        y
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|v| v.norm_sqr()).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &CMat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut m = 0.0f64;
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                m = m.max((self[(r, c)] - other[(r, c)]).abs());
+            }
+        }
+        m
+    }
+
+    /// `‖AᴴA − I‖_∞` — deviation from having orthonormal columns.
+    pub fn orthonormality_defect(&self) -> f64 {
+        let g = self.gram();
+        let mut m = 0.0f64;
+        for r in 0..g.rows {
+            for c in 0..g.cols {
+                let want = if r == c { C64::ONE } else { C64::ZERO };
+                m = m.max((g[(r, c)] - want).abs());
+            }
+        }
+        m
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for CMat {
+    type Output = C64;
+    #[inline(always)]
+    fn index(&self, (r, c): (usize, usize)) -> &C64 {
+        &self.data[self.idx(r, c)]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for CMat {
+    #[inline(always)]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut C64 {
+        let i = self.idx(r, c);
+        &mut self.data[i]
+    }
+}
+
+impl fmt::Debug for CMat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "CMat {}x{} ({:?})", self.rows, self.cols, self.layout)?;
+        let rmax = self.rows.min(6);
+        let cmax = self.cols.min(6);
+        for r in 0..rmax {
+            write!(f, "  [")?;
+            for c in 0..cmax {
+                write!(f, " {}", self[(r, c)])?;
+            }
+            writeln!(f, "{}]", if cmax < self.cols { " …" } else { "" })?;
+        }
+        if rmax < self.rows {
+            writeln!(f, "  …")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::complex::c64;
+
+    #[test]
+    fn layout_roundtrip_real() {
+        let mut rng = Pcg64::seeded(1);
+        let a = Mat::random_normal(5, 7, &mut rng);
+        let b = a.to_layout(Layout::ColMajor);
+        assert_eq!(b.layout, Layout::ColMajor);
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+        let c = b.to_layout(Layout::RowMajor);
+        assert_eq!(a.data, c.data);
+    }
+
+    #[test]
+    fn matvec_agrees_across_layouts() {
+        let mut rng = Pcg64::seeded(2);
+        let a = Mat::random_normal(6, 4, &mut rng);
+        let x = rng.normal_vec(4);
+        let y1 = a.matvec(&x);
+        let y2 = a.to_layout(Layout::ColMajor).matvec(&x);
+        for (u, v) in y1.iter().zip(&y2) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn real_matmul_identity() {
+        let mut rng = Pcg64::seeded(3);
+        let a = Mat::random_normal(4, 4, &mut rng);
+        let i = Mat::eye(4);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-15);
+        assert!(i.matmul(&a).max_abs_diff(&a) < 1e-15);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::seeded(4);
+        let a = Mat::random_normal(3, 5, &mut rng);
+        assert_eq!(a.transpose().transpose().data, a.data);
+    }
+
+    #[test]
+    fn matvec_t_matches_transpose() {
+        let mut rng = Pcg64::seeded(5);
+        let a = Mat::random_normal(5, 3, &mut rng);
+        let x = rng.normal_vec(5);
+        let y1 = a.matvec_t(&x);
+        let y2 = a.transpose().matvec(&x);
+        for (u, v) in y1.iter().zip(&y2) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn hermitian_transpose() {
+        let mut a = CMat::zeros(2, 3);
+        a[(0, 1)] = c64(1.0, 2.0);
+        let h = a.hermitian();
+        assert_eq!(h.rows, 3);
+        assert_eq!(h[(1, 0)], c64(1.0, -2.0));
+    }
+
+    #[test]
+    fn complex_matmul_assoc_with_identity() {
+        let mut rng = Pcg64::seeded(6);
+        let a = CMat::random_normal(4, 4, &mut rng);
+        let i = CMat::eye(4);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-14);
+    }
+
+    #[test]
+    fn gram_is_hermitian_psd_diag() {
+        let mut rng = Pcg64::seeded(7);
+        let a = CMat::random_normal(6, 4, &mut rng);
+        let g = a.gram();
+        for i in 0..4 {
+            assert!(g[(i, i)].im.abs() < 1e-12);
+            assert!(g[(i, i)].re >= 0.0);
+            for j in 0..4 {
+                assert!((g[(i, j)] - g[(j, i)].conj()).abs() < 1e-12);
+            }
+        }
+        // gram equals explicit AᴴA
+        let g2 = a.hermitian().matmul(&a);
+        assert!(g.max_abs_diff(&g2) < 1e-12);
+    }
+
+    #[test]
+    fn frobenius_matches_manual() {
+        let a = Mat::from_rows(&[&[3.0, 0.0], &[0.0, 4.0]]);
+        assert!((a.frobenius_norm() - 5.0).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,10 @@
+//! Numeric substrate: complex arithmetic, dense matrices with explicit
+//! memory layout, and a deterministic PRNG.
+
+pub mod complex;
+pub mod mat;
+pub mod rng;
+
+pub use complex::{c64, C64};
+pub use mat::{CMat, Layout, Mat};
+pub use rng::Pcg64;

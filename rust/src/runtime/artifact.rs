@@ -1,0 +1,176 @@
+//! Artifact manifest: maps static pipeline configurations to the AOT HLO
+//! text files emitted by `python/compile/aot.py`.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Static description of one AOT artifact (mirrors
+/// `python/compile/model.py::SpectrumConfig`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub n: usize,
+    pub m: usize,
+    pub c_out: usize,
+    pub c_in: usize,
+    pub kh: usize,
+    pub kw: usize,
+    /// Frequency rows computed per execution (== n for whole-grid artifacts).
+    pub tile_rows: usize,
+    /// `min(c_out, c_in)` — singular values per frequency.
+    pub rank: usize,
+    pub sweeps: usize,
+    /// HLO text file, relative to the manifest directory.
+    pub file: PathBuf,
+}
+
+impl ArtifactSpec {
+    /// Number of frequencies per execution.
+    pub fn freqs_per_call(&self) -> usize {
+        self.tile_rows * self.m
+    }
+
+    /// Output length (f32 count) per execution.
+    pub fn out_len(&self) -> usize {
+        self.freqs_per_call() * self.rank
+    }
+
+    /// Whether this artifact covers the whole grid in one call.
+    pub fn is_whole_grid(&self) -> bool {
+        self.tile_rows == self.n
+    }
+
+    /// Executions needed to cover the full grid.
+    pub fn calls_for_grid(&self) -> usize {
+        self.n.div_ceil(self.tile_rows)
+    }
+}
+
+/// Parse `manifest.txt` lines of the form
+/// `name key=value key=value ... file=<rel-path>`.
+pub fn parse_manifest(text: &str, dir: &Path) -> Result<Vec<ArtifactSpec>> {
+    let mut specs = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let name = parts.next().context("empty manifest line")?.to_string();
+        let mut kv = std::collections::HashMap::new();
+        for part in parts {
+            let (k, v) = part
+                .split_once('=')
+                .with_context(|| format!("manifest line {}: bad token {part}", lineno + 1))?;
+            kv.insert(k.to_string(), v.to_string());
+        }
+        let get = |k: &str| -> Result<usize> {
+            kv.get(k)
+                .with_context(|| format!("manifest line {}: missing {k}", lineno + 1))?
+                .parse::<usize>()
+                .with_context(|| format!("manifest line {}: bad {k}", lineno + 1))
+        };
+        let file = kv
+            .get("file")
+            .with_context(|| format!("manifest line {}: missing file", lineno + 1))?;
+        let spec = ArtifactSpec {
+            name,
+            n: get("n")?,
+            m: get("m")?,
+            c_out: get("c_out")?,
+            c_in: get("c_in")?,
+            kh: get("kh")?,
+            kw: get("kw")?,
+            tile_rows: get("tile_rows")?,
+            rank: get("rank")?,
+            sweeps: get("sweeps")?,
+            file: dir.join(file),
+        };
+        if spec.tile_rows == 0 || spec.tile_rows > spec.n {
+            bail!("manifest line {}: invalid tile_rows", lineno + 1);
+        }
+        specs.push(spec);
+    }
+    Ok(specs)
+}
+
+/// Load the manifest from an artifacts directory.
+pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
+    let path = dir.join("manifest.txt");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}; run `make artifacts` first", path.display()))?;
+    parse_manifest(&text, dir)
+}
+
+/// Pick the best artifact for a layer shape: exact channel/kernel match and
+/// grid match, preferring tiled artifacts (shardable) over whole-grid ones
+/// when `prefer_tiled` is set.
+pub fn select<'a>(
+    specs: &'a [ArtifactSpec],
+    n: usize,
+    m: usize,
+    c_out: usize,
+    c_in: usize,
+    kh: usize,
+    kw: usize,
+    prefer_tiled: bool,
+) -> Option<&'a ArtifactSpec> {
+    let mut candidates: Vec<&ArtifactSpec> = specs
+        .iter()
+        .filter(|s| {
+            s.n == n && s.m == m && s.c_out == c_out && s.c_in == c_in && s.kh == kh && s.kw == kw
+        })
+        .collect();
+    candidates.sort_by_key(|s| s.tile_rows);
+    if prefer_tiled {
+        candidates.into_iter().find(|s| !s.is_whole_grid()).or_else(|| {
+            select(specs, n, m, c_out, c_in, kh, kw, false)
+        })
+    } else {
+        candidates.into_iter().last()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+lfa_spectrum_n8x8_c4x4_k3x3_t8 n=8 m=8 c_out=4 c_in=4 kh=3 kw=3 tile_rows=8 rank=4 sweeps=12 file=a.hlo.txt
+lfa_spectrum_n32x32_c16x16_k3x3_t4 n=32 m=32 c_out=16 c_in=16 kh=3 kw=3 tile_rows=4 rank=16 sweeps=12 file=b.hlo.txt
+lfa_spectrum_n32x32_c16x16_k3x3_t32 n=32 m=32 c_out=16 c_in=16 kh=3 kw=3 tile_rows=32 rank=16 sweeps=12 file=c.hlo.txt
+";
+
+    #[test]
+    fn parses_sample() {
+        let specs = parse_manifest(SAMPLE, Path::new("/art")).unwrap();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[0].n, 8);
+        assert_eq!(specs[1].tile_rows, 4);
+        assert_eq!(specs[1].calls_for_grid(), 8);
+        assert_eq!(specs[1].out_len(), 4 * 32 * 16);
+        assert!(specs[2].is_whole_grid());
+        assert_eq!(specs[0].file, Path::new("/art/a.hlo.txt"));
+    }
+
+    #[test]
+    fn selection_prefers_tiled_when_asked() {
+        let specs = parse_manifest(SAMPLE, Path::new("/art")).unwrap();
+        let tiled = select(&specs, 32, 32, 16, 16, 3, 3, true).unwrap();
+        assert_eq!(tiled.tile_rows, 4);
+        let whole = select(&specs, 32, 32, 16, 16, 3, 3, false).unwrap();
+        assert_eq!(whole.tile_rows, 32);
+    }
+
+    #[test]
+    fn selection_misses_unknown_shape() {
+        let specs = parse_manifest(SAMPLE, Path::new("/art")).unwrap();
+        assert!(select(&specs, 8, 8, 2, 2, 3, 3, true).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_tile_rows() {
+        let bad = "x n=8 m=8 c_out=4 c_in=4 kh=3 kw=3 tile_rows=0 rank=4 sweeps=12 file=x.hlo.txt";
+        assert!(parse_manifest(bad, Path::new("/")).is_err());
+    }
+}

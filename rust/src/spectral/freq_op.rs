@@ -1,0 +1,140 @@
+//! Apply a frequency-domain operator (a symbol grid) to spatial feature
+//! maps: `g = F⁻¹ · diag(A_k) · F f`.
+//!
+//! This is how spectrally-edited operators (clipped, truncated, inverted)
+//! act on data without ever leaving the `O(n·m·c²)`-per-application regime —
+//! the global singular vectors `F_k U_k` are applied implicitly via FFTs.
+
+use crate::fft::{Direction, FftPlan};
+use crate::lfa::SymbolGrid;
+use crate::numeric::C64;
+
+/// A convolution-like operator given by its per-frequency symbols.
+pub struct FreqOperator<'a> {
+    pub grid: &'a SymbolGrid,
+}
+
+impl<'a> FreqOperator<'a> {
+    pub fn new(grid: &'a SymbolGrid) -> Self {
+        Self { grid }
+    }
+
+    pub fn in_len(&self) -> usize {
+        self.grid.n * self.grid.m * self.grid.c_in
+    }
+
+    pub fn out_len(&self) -> usize {
+        self.grid.n * self.grid.m * self.grid.c_out
+    }
+
+    /// Apply to a real feature map in spatial-major channel-minor order
+    /// (same convention as [`crate::conv::ConvOp::forward`]). Exact for
+    /// periodic boundary conditions.
+    pub fn apply(&self, f: &[f64]) -> Vec<f64> {
+        let (n, m) = (self.grid.n, self.grid.m);
+        let (cin, cout) = (self.grid.c_in, self.grid.c_out);
+        assert_eq!(f.len(), n * m * cin, "input length mismatch");
+        let nm = n * m;
+        // Per-channel forward FFT of the input.
+        let mut fhat = vec![C64::ZERO; nm * cin];
+        let row_plan = FftPlan::new(m);
+        let col_plan = FftPlan::new(n);
+        let mut plane = vec![C64::ZERO; nm];
+        let mut scratch = vec![C64::ZERO; n];
+        for i in 0..cin {
+            for x in 0..nm {
+                plane[x] = C64::real(f[x * cin + i]);
+            }
+            fft2_inplace(&mut plane, n, m, &row_plan, &col_plan, &mut scratch, Direction::Forward);
+            for x in 0..nm {
+                fhat[x * cin + i] = plane[x];
+            }
+        }
+        // Per-frequency block matvec: ĝ_k = A_k f̂_k.
+        let mut ghat = vec![C64::ZERO; nm * cout];
+        for k in 0..nm {
+            for o in 0..cout {
+                let mut acc = C64::ZERO;
+                for i in 0..cin {
+                    acc = acc.mul_add(self.grid.get(k, o, i), fhat[k * cin + i]);
+                }
+                ghat[k * cout + o] = acc;
+            }
+        }
+        // Per-channel inverse FFT.
+        let mut out = vec![0.0f64; nm * cout];
+        for o in 0..cout {
+            for x in 0..nm {
+                plane[x] = ghat[x * cout + o];
+            }
+            fft2_inplace(&mut plane, n, m, &row_plan, &col_plan, &mut scratch, Direction::Inverse);
+            for x in 0..nm {
+                out[x * cout + o] = plane[x].re;
+            }
+        }
+        out
+    }
+}
+
+fn fft2_inplace(
+    plane: &mut [C64],
+    n: usize,
+    m: usize,
+    row_plan: &FftPlan,
+    col_plan: &FftPlan,
+    scratch: &mut [C64],
+    dir: Direction,
+) {
+    for r in 0..n {
+        row_plan.transform(&mut plane[r * m..(r + 1) * m], dir);
+    }
+    for c in 0..m {
+        for r in 0..n {
+            scratch[r] = plane[r * m + c];
+        }
+        col_plan.transform(scratch, dir);
+        for r in 0..n {
+            plane[r * m + c] = scratch[r];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::{Boundary, ConvKernel, ConvOp};
+    use crate::lfa::{compute_symbols, BlockLayout};
+    use crate::numeric::Pcg64;
+
+    #[test]
+    fn matches_direct_periodic_convolution() {
+        let mut rng = Pcg64::seeded(140);
+        let k = ConvKernel::random_he(3, 2, 3, 3, &mut rng);
+        for (n, m) in [(4usize, 4usize), (8, 6), (5, 5)] {
+            let grid = compute_symbols(&k, n, m, BlockLayout::BlockContiguous);
+            let fop = FreqOperator::new(&grid);
+            let op = ConvOp::new(&k, n, m, Boundary::Periodic);
+            let f = rng.normal_vec(n * m * 2);
+            let g1 = op.forward(&f);
+            let g2 = fop.apply(&f);
+            for (a, b) in g1.iter().zip(&g2) {
+                assert!((a - b).abs() < 1e-10, "({n},{m}): {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn identity_grid_is_identity() {
+        let mut k = ConvKernel::zeros(2, 2, 1, 1);
+        k.set(0, 0, 0, 0, 1.0);
+        k.set(1, 1, 0, 0, 1.0);
+        let grid = compute_symbols(&k, 4, 4, BlockLayout::BlockContiguous);
+        let fop = FreqOperator::new(&grid);
+        let mut rng = Pcg64::seeded(141);
+        let f = rng.normal_vec(32);
+        let g = fop.apply(&f);
+        for (a, b) in f.iter().zip(&g) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Applications of the convolutional SVD (§II-c of the paper): spectral
+//! clipping for regularization/robustness, low-rank compression,
+//! Moore–Penrose pseudo-inverse, and spectral-norm estimator comparisons.
+
+pub mod clip;
+pub mod freq_op;
+pub mod lipschitz;
+pub mod lowrank;
+pub mod pinv;
+
+pub use clip::{clip_spectral_norm, ClipResult};
+pub use freq_op::FreqOperator;
+pub use lipschitz::{spectral_report, SpectralNormReport};
+pub use lowrank::{compress, rank_sweep, LowRankConv};
+pub use pinv::{pseudo_inverse, PseudoInverse};

@@ -1,0 +1,141 @@
+//! Pseudo-inverse of a convolutional mapping via its LFA SVD —
+//! the application highlighted by the paper for pseudo-invertible networks
+//! (Bolluyt & Comaniciu 2024): instead of their approximate restructuring,
+//! the exact Moore–Penrose inverse `B = A⁺` drops out of the per-frequency
+//! SVD as `B_k = V_k Σ_k⁺ U_kᴴ`.
+
+use crate::conv::ConvKernel;
+use crate::lfa::{self, BlockLayout, FullSvd, LfaOptions, SymbolGrid};
+use crate::numeric::CMat;
+
+/// The pseudo-inverse operator in frequency space.
+pub struct PseudoInverse {
+    /// Symbols of `A⁺` (`c_in×c_out` blocks).
+    pub grid: SymbolGrid,
+    /// Relative tolerance below which singular values are treated as zero.
+    pub rcond: f64,
+    /// Number of singular values zeroed by `rcond`.
+    pub null_count: usize,
+}
+
+/// Build `A⁺` from a kernel on an `n×m` periodic grid.
+pub fn pseudo_inverse(
+    kernel: &ConvKernel,
+    n: usize,
+    m: usize,
+    rcond: f64,
+    opts: LfaOptions,
+) -> PseudoInverse {
+    let svd = lfa::svd_full(kernel, n, m, opts);
+    pseudo_inverse_from_svd(&svd, rcond)
+}
+
+/// Build `A⁺` from an existing full SVD.
+pub fn pseudo_inverse_from_svd(svd: &FullSvd, rcond: f64) -> PseudoInverse {
+    let freqs = svd.sigma.n * svd.sigma.m;
+    let r = svd.sigma.rank_per_freq();
+    let cutoff = svd.sigma.sigma_max() * rcond;
+    let mut null_count = 0usize;
+    // Note the swap: blocks of A⁺ are c_in×c_out.
+    let mut grid = SymbolGrid::zeros(
+        svd.n,
+        svd.m,
+        svd.c_in,
+        svd.c_out,
+        BlockLayout::BlockContiguous,
+    );
+    for f in 0..freqs {
+        let s = svd.sigma.at(f);
+        let u = &svd.u[f];
+        let v = &svd.v[f];
+        // V Σ⁺ Uᴴ
+        let mut vs = CMat::zeros(v.rows, r);
+        for i in 0..v.rows {
+            for j in 0..r {
+                let inv = if s[j] > cutoff { 1.0 / s[j] } else { 0.0 };
+                vs[(i, j)] = v[(i, j)].scale(inv);
+            }
+        }
+        null_count += s.iter().filter(|&&x| x <= cutoff).count();
+        let block = vs.matmul(&u.hermitian());
+        grid.set_block(f, &block);
+    }
+    PseudoInverse { grid, rcond, null_count }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lfa::compute_symbols;
+    use crate::numeric::Pcg64;
+    use crate::spectral::freq_op::FreqOperator;
+
+    #[test]
+    fn pinv_of_full_rank_square_is_inverse() {
+        let mut rng = Pcg64::seeded(170);
+        let k = ConvKernel::random_he(3, 3, 3, 3, &mut rng);
+        let (n, m) = (6, 6);
+        let pinv = pseudo_inverse(&k, n, m, 1e-12, Default::default());
+        assert_eq!(pinv.null_count, 0, "He-random 3x3 conv is a.s. full-rank");
+        // A⁺ A f == f
+        let grid = compute_symbols(&k, n, m, BlockLayout::BlockContiguous);
+        let a = FreqOperator::new(&grid);
+        let ap = FreqOperator::new(&pinv.grid);
+        let f = rng.normal_vec(n * m * 3);
+        let back = ap.apply(&a.apply(&f));
+        for (x, y) in f.iter().zip(&back) {
+            assert!((x - y).abs() < 1e-8, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn pinv_of_wide_conv_is_right_inverse() {
+        // c_out < c_in: A A⁺ = I on the output space.
+        let mut rng = Pcg64::seeded(171);
+        let k = ConvKernel::random_he(2, 4, 3, 3, &mut rng);
+        let (n, m) = (4, 4);
+        let pinv = pseudo_inverse(&k, n, m, 1e-12, Default::default());
+        let grid = compute_symbols(&k, n, m, BlockLayout::BlockContiguous);
+        let a = FreqOperator::new(&grid);
+        let ap = FreqOperator::new(&pinv.grid);
+        let g = rng.normal_vec(n * m * 2);
+        let again = a.apply(&ap.apply(&g));
+        for (x, y) in g.iter().zip(&again) {
+            assert!((x - y).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn pinv_projects_for_tall_conv() {
+        // c_out > c_in: A⁺ A = I on the input space.
+        let mut rng = Pcg64::seeded(172);
+        let k = ConvKernel::random_he(5, 2, 3, 3, &mut rng);
+        let (n, m) = (4, 4);
+        let pinv = pseudo_inverse(&k, n, m, 1e-12, Default::default());
+        let grid = compute_symbols(&k, n, m, BlockLayout::BlockContiguous);
+        let a = FreqOperator::new(&grid);
+        let ap = FreqOperator::new(&pinv.grid);
+        let f = rng.normal_vec(n * m * 2);
+        let back = ap.apply(&a.apply(&f));
+        for (x, y) in f.iter().zip(&back) {
+            assert!((x - y).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn rcond_zeroes_small_values() {
+        // Rank-deficient by construction: second output channel = first.
+        let mut rng = Pcg64::seeded(173);
+        let mut k = ConvKernel::random_he(2, 2, 3, 3, &mut rng);
+        for i in 0..2 {
+            for r in 0..3 {
+                for c in 0..3 {
+                    let v = k.get(0, i, r, c);
+                    k.set(1, i, r, c, v);
+                }
+            }
+        }
+        let pinv = pseudo_inverse(&k, 4, 4, 1e-10, Default::default());
+        assert_eq!(pinv.null_count, 16, "one zero σ per frequency");
+    }
+}

@@ -1,0 +1,129 @@
+//! Minimal property-testing harness (proptest is not in the offline crate
+//! set). Runs a property against many seeded random cases and reports the
+//! first failing case with its seed so it can be replayed.
+//!
+//! ```
+//! use conv_svd_lfa::testing::{prop_assert, prop_check, Gen};
+//! prop_check("abs is nonnegative", 100, |g: &mut Gen| {
+//!     let x = g.f64_in(-100.0, 100.0);
+//!     prop_assert(x.abs() >= 0.0, format!("abs({x}) < 0"))
+//! });
+//! ```
+
+use crate::numeric::Pcg64;
+
+/// Case generator handed to each property invocation.
+pub struct Gen {
+    pub rng: Pcg64,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.below(xs.len() as u64) as usize;
+        &xs[i]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+}
+
+/// Property outcome: `Ok(())` or a failure message.
+pub type PropResult = Result<(), String>;
+
+/// Assert inside a property.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Assert two floats are close (relative to scale).
+pub fn prop_close(a: f64, b: f64, tol: f64, what: &str) -> PropResult {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol}, scale {scale})"))
+    }
+}
+
+/// Run `cases` random cases of a property. Panics (test failure) on the
+/// first failing case, printing the case index and seed for replay.
+/// Honors `PROP_SEED` (base seed) and `PROP_CASES` env overrides.
+pub fn prop_check<F: FnMut(&mut Gen) -> PropResult>(name: &str, cases: usize, mut prop: F) {
+    let base_seed: u64 = std::env::var("PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(
+        0x5EED_0000_0000_0000 | name.bytes().fold(0u64, |h, b| h.wrapping_mul(31).wrapping_add(b as u64)) & 0xFFFF_FFFF,
+    );
+    let cases: usize =
+        std::env::var("PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(cases);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut g = Gen { rng: Pcg64::seeded(seed), case };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed on case {case}/{cases} \
+                 (replay with PROP_SEED={base_seed} PROP_CASES={}): {msg}",
+                case + 1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0;
+        prop_check("trivial", 25, |g| {
+            ran += 1;
+            prop_assert(g.usize_in(0, 10) <= 10, "range")
+        });
+        assert_eq!(ran, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'failing'")]
+    fn failing_property_panics_with_seed() {
+        prop_check("failing", 10, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            prop_assert(x < 0.5, format!("x = {x}"))
+        });
+    }
+
+    #[test]
+    fn close_helper() {
+        assert!(prop_close(1.0, 1.0 + 1e-12, 1e-9, "eq").is_ok());
+        assert!(prop_close(1.0, 2.0, 1e-9, "neq").is_err());
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut g = Gen { rng: Pcg64::seeded(1), case: 0 };
+        for _ in 0..100 {
+            let v = g.usize_in(3, 7);
+            assert!((3..=7).contains(&v));
+        }
+        assert!([true, false].contains(&g.bool()));
+        let xs = [1, 2, 3];
+        assert!(xs.contains(g.pick(&xs)));
+    }
+}

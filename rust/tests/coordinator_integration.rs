@@ -1,0 +1,141 @@
+//! Integration tests for the L3 coordinator: tile scheduling correctness,
+//! backpressure, PJRT/native routing, model audits and metrics.
+
+use conv_svd_lfa::conv::ConvKernel;
+use conv_svd_lfa::coordinator::{
+    Backend, JobSpec, Scheduler, SchedulerConfig, ServiceConfig, SpectralService,
+};
+use conv_svd_lfa::lfa::{self, LfaOptions};
+use conv_svd_lfa::model::zoo;
+use conv_svd_lfa::numeric::Pcg64;
+use std::path::PathBuf;
+
+fn kernel(c_out: usize, c_in: usize, seed: u64) -> ConvKernel {
+    let mut rng = Pcg64::seeded(seed);
+    ConvKernel::random_he(c_out, c_in, 3, 3, &mut rng)
+}
+
+#[test]
+fn scheduler_matches_direct_lfa() {
+    let k = kernel(4, 3, 1);
+    let sched = Scheduler::native(3);
+    let result = sched.run(JobSpec::new("t", k.clone(), 16, 16)).unwrap();
+    let direct = lfa::singular_values(&k, 16, 16, LfaOptions::default());
+    assert_eq!(result.spectrum.values.len(), direct.values.len());
+    for (a, b) in result.spectrum.values.iter().zip(&direct.values) {
+        assert!((a - b).abs() < 1e-12);
+    }
+    assert!(result.native_tiles > 0);
+    assert_eq!(result.pjrt_tiles, 0);
+    sched.shutdown();
+}
+
+#[test]
+fn many_jobs_pipeline_through_bounded_queue() {
+    let sched = Scheduler::start(
+        SchedulerConfig { workers: 2, queue_depth: 2, artifacts: vec![] },
+        None,
+    );
+    // More jobs than queue depth: backpressure must not deadlock.
+    let mut rxs = Vec::new();
+    for j in 0..12 {
+        let k = kernel(3, 3, 100 + j);
+        rxs.push((j, k.clone(), sched.submit(JobSpec::new(format!("job{j}"), k, 8, 8))));
+    }
+    for (j, k, rx) in rxs {
+        let res = rx.recv().unwrap().unwrap();
+        let want = lfa::singular_values(&k, 8, 8, LfaOptions::default());
+        for (a, b) in res.spectrum.values.iter().zip(&want.values) {
+            assert!((a - b).abs() < 1e-12, "job{j}");
+        }
+    }
+    let m = sched.metrics.snapshot();
+    assert_eq!(m.jobs_completed, 12);
+    assert_eq!(m.jobs_submitted, 12);
+    sched.shutdown();
+}
+
+#[test]
+fn explicit_tile_rows_respected() {
+    let k = kernel(2, 2, 5);
+    let sched = Scheduler::native(2);
+    let res = sched.run(JobSpec::new("t", k, 12, 12).with_tile_rows(5)).unwrap();
+    // 12 rows / 5 per tile = 3 tiles
+    assert_eq!(res.native_tiles, 3);
+    sched.shutdown();
+}
+
+#[test]
+fn pjrt_backend_requires_artifact() {
+    let k = kernel(2, 2, 6); // no artifact for 2x2 channels
+    let sched = Scheduler::native(1);
+    let err = sched.run(JobSpec::new("t", k, 8, 8).with_backend(Backend::Pjrt));
+    assert!(err.is_err(), "explicit PJRT without artifact must fail");
+    sched.shutdown();
+}
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping PJRT part: run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn service_auto_routes_to_pjrt_when_artifact_matches() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = SpectralService::start(ServiceConfig {
+        workers: 2,
+        backend: Backend::Auto,
+        artifacts_dir: Some(dir),
+        ..Default::default()
+    })
+    .unwrap();
+    // 32x32 c16 matches the tiled artifact.
+    let k = kernel(16, 16, 7);
+    let rep = svc.analyze_layer("conv", &k, 32, 32).unwrap();
+    assert!(rep.pjrt_tiles > 0, "should route via PJRT");
+    // Verify against native.
+    let want = lfa::singular_values(&k, 32, 32, LfaOptions::default());
+    let scale = want.sigma_max();
+    for (a, b) in rep.spectrum.values.iter().zip(&want.values) {
+        assert!((a - b).abs() < 2e-4 * scale.max(1.0), "{a} vs {b}");
+    }
+    assert!(rep.frobenius_defect < 1e-3, "defect {}", rep.frobenius_defect);
+    // Unmatched shape falls back to native.
+    let k2 = kernel(5, 5, 8);
+    let rep2 = svc.analyze_layer("odd", &k2, 8, 8).unwrap();
+    assert_eq!(rep2.pjrt_tiles, 0);
+    assert!(rep2.frobenius_defect < 1e-10);
+    svc.shutdown();
+}
+
+#[test]
+fn audit_lenet_native() {
+    let svc = SpectralService::native(2);
+    let reports = svc.audit_model(&zoo::lenet()).unwrap();
+    assert_eq!(reports.len(), 2);
+    for r in &reports {
+        assert!(r.sigma_max > 0.0);
+        assert!(r.frobenius_defect < 1e-10, "{}: {}", r.name, r.frobenius_defect);
+        assert_eq!(r.num_values, r.n * r.m * r.c_out.min(r.c_in));
+    }
+    let m = svc.metrics();
+    assert_eq!(m.jobs_completed, 2);
+    assert_eq!(m.values_computed as usize, zoo::lenet().total_values());
+    svc.shutdown();
+}
+
+#[test]
+fn audit_is_deterministic() {
+    let svc = SpectralService::native(2);
+    let r1 = svc.audit_model(&zoo::lenet()).unwrap();
+    let r2 = svc.audit_model(&zoo::lenet()).unwrap();
+    for (a, b) in r1.iter().zip(&r2) {
+        assert_eq!(a.sigma_max, b.sigma_max);
+    }
+    svc.shutdown();
+}

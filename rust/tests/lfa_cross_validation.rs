@@ -1,0 +1,139 @@
+//! Cross-validation of the three routes to the spectrum (the paper's core
+//! correctness claim): LFA == FFT == explicit under periodic boundary
+//! conditions, plus the Fig. 6 boundary-condition behaviour in miniature.
+
+use conv_svd_lfa::baselines::{explicit_svd, fft_svd, FftLayoutPolicy};
+use conv_svd_lfa::conv::{Boundary, ConvKernel};
+use conv_svd_lfa::lfa::{self, BlockSolver, LfaOptions, Spectrum};
+use conv_svd_lfa::numeric::Pcg64;
+
+fn max_gap(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+#[test]
+fn three_routes_agree_periodic() {
+    let mut rng = Pcg64::seeded(11);
+    for &(n, c_out, c_in) in &[(4usize, 3usize, 3usize), (6, 2, 4), (8, 4, 2)] {
+        let k = ConvKernel::random_he(c_out, c_in, 3, 3, &mut rng);
+        let lfa_sorted =
+            lfa::singular_values(&k, n, n, LfaOptions::default()).sorted_desc();
+        let fft_sorted =
+            fft_svd::singular_values(&k, n, n, FftLayoutPolicy::Natural, 1).sorted_desc();
+        let exp = explicit_svd::singular_values(&k, n, n, Boundary::Periodic);
+        // explicit has n²·c_out values incl. zeros when c_out > c_in; compare
+        // the top n²·min values.
+        let top = lfa_sorted.len();
+        assert!(max_gap(&lfa_sorted, &fft_sorted) < 1e-10, "lfa vs fft n={n}");
+        assert!(
+            max_gap(&lfa_sorted, &exp.values[..top]) < 1e-7,
+            "lfa vs explicit n={n}: {}",
+            max_gap(&lfa_sorted, &exp.values[..top])
+        );
+        // Values the explicit route has beyond min(c_in,c_out) per frequency
+        // must be (numerically) zero.
+        for &v in &exp.values[top..] {
+            assert!(v < 1e-8, "trailing explicit σ = {v}");
+        }
+    }
+}
+
+#[test]
+fn solver_choice_is_equivalent() {
+    let mut rng = Pcg64::seeded(12);
+    let k = ConvKernel::random_he(5, 5, 3, 3, &mut rng);
+    let a = lfa::singular_values(
+        &k,
+        10,
+        10,
+        LfaOptions { solver: BlockSolver::Jacobi, ..Default::default() },
+    );
+    let b = lfa::singular_values(
+        &k,
+        10,
+        10,
+        LfaOptions { solver: BlockSolver::GramEigen, ..Default::default() },
+    );
+    assert!(max_gap(&a.values, &b.values) < 1e-7);
+}
+
+#[test]
+fn fig6_boundary_divergence_shrinks_with_n() {
+    // Fig. 6: Dirichlet vs periodic spectra converge as n grows.
+    let mut rng = Pcg64::seeded(13);
+    let k = ConvKernel::random_he(4, 4, 3, 3, &mut rng);
+    let mut divs = Vec::new();
+    for &n in &[4usize, 8, 16] {
+        let periodic = lfa::singular_values(&k, n, n, LfaOptions::default()).sorted_desc();
+        let dirichlet = explicit_svd::singular_values(&k, n, n, Boundary::Dirichlet);
+        let div = Spectrum::divergence(&periodic, &dirichlet.values);
+        divs.push((n, div));
+    }
+    assert!(
+        divs[0].1 > divs[2].1,
+        "divergence should shrink: {divs:?}"
+    );
+    assert!(divs[2].1 < 0.05, "n=16 divergence should be small: {divs:?}");
+}
+
+#[test]
+fn kernel_anchor_only_changes_phases() {
+    // Shifting the anchor multiplies symbols by a unit phase — singular
+    // values are invariant (translation invariance, the property LFA
+    // exploits).
+    let mut rng = Pcg64::seeded(14);
+    let mut k1 = ConvKernel::random_he(3, 3, 3, 3, &mut rng);
+    k1.anchor = (1, 1);
+    let mut k2 = k1.clone();
+    k2.anchor = (0, 2);
+    let s1 = lfa::singular_values(&k1, 8, 8, LfaOptions::default());
+    let s2 = lfa::singular_values(&k2, 8, 8, LfaOptions::default());
+    assert!(max_gap(&s1.values, &s2.values) < 1e-10);
+}
+
+#[test]
+fn one_by_one_kernels_and_large_kernels() {
+    let mut rng = Pcg64::seeded(15);
+    // 1x1 and 5x5 kernels through both fast routes.
+    for (kh, kw) in [(1usize, 1usize), (5, 5), (1, 3), (3, 5)] {
+        let k = ConvKernel::random_he(3, 2, kh, kw, &mut rng);
+        let a = lfa::singular_values(&k, 8, 8, LfaOptions::default()).sorted_desc();
+        let b = fft_svd::singular_values(&k, 8, 8, FftLayoutPolicy::Natural, 1).sorted_desc();
+        assert!(max_gap(&a, &b) < 1e-10, "{kh}x{kw}");
+    }
+}
+
+#[test]
+fn wrap_around_kernels_larger_than_grid() {
+    // 5x5 kernel on a 4x4 grid: taps wrap and accumulate. LFA and FFT must
+    // agree on this degenerate (but well-defined) case too.
+    let mut rng = Pcg64::seeded(16);
+    let k = ConvKernel::random_he(2, 2, 5, 5, &mut rng);
+    let a = lfa::singular_values(&k, 4, 4, LfaOptions::default()).sorted_desc();
+    let b = fft_svd::singular_values(&k, 4, 4, FftLayoutPolicy::Natural, 1).sorted_desc();
+    let c = explicit_svd::singular_values(&k, 4, 4, Boundary::Periodic);
+    assert!(max_gap(&a, &b) < 1e-10);
+    assert!(max_gap(&a, &c.values[..a.len()]) < 1e-8);
+}
+
+#[test]
+fn layout_policy_does_not_change_values() {
+    let mut rng = Pcg64::seeded(17);
+    let k = ConvKernel::random_he(4, 4, 3, 3, &mut rng);
+    let nat = fft_svd::singular_values(&k, 12, 12, FftLayoutPolicy::Natural, 1);
+    let conv = fft_svd::singular_values(&k, 12, 12, FftLayoutPolicy::ConvertToContiguous, 1);
+    assert!(max_gap(&nat.values, &conv.values) < 1e-12);
+}
+
+#[test]
+fn non_square_grids() {
+    let mut rng = Pcg64::seeded(18);
+    let k = ConvKernel::random_he(3, 3, 3, 3, &mut rng);
+    for (n, m) in [(4usize, 12usize), (5, 7), (16, 2)] {
+        let a = lfa::singular_values(&k, n, m, LfaOptions::default()).sorted_desc();
+        let b = fft_svd::singular_values(&k, n, m, FftLayoutPolicy::Natural, 1).sorted_desc();
+        assert!(max_gap(&a, &b) < 1e-10, "({n},{m})");
+        assert_eq!(a.len(), n * m * 3);
+    }
+}

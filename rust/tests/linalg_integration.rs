@@ -1,0 +1,145 @@
+//! Cross-algorithm linear-algebra consistency at sizes larger than the
+//! unit tests: Golub–Kahan vs Jacobi vs Gram-eigen vs power iteration.
+
+use conv_svd_lfa::linalg::{gk_svd, jacobi_eig, jacobi_svd, norms, power, qr};
+use conv_svd_lfa::numeric::{CMat, Mat, Pcg64};
+
+#[test]
+fn four_solvers_agree_on_real_matrices() {
+    let mut rng = Pcg64::seeded(100);
+    for &(m, n) in &[(24usize, 24usize), (40, 17), (17, 40)] {
+        let a = Mat::random_normal(m, n, &mut rng);
+        let s_gk = gk_svd::singular_values(&a);
+        let ac = CMat::from_real(&a);
+        let s_j = jacobi_svd::singular_values(&ac);
+        let s_g = jacobi_eig::singular_values_gram(&ac);
+        for i in 0..n.min(m) {
+            assert!((s_gk[i] - s_j[i]).abs() < 1e-8, "{m}x{n} gk/jacobi idx {i}");
+            assert!((s_gk[i] - s_g[i]).abs() < 1e-6, "{m}x{n} gk/gram idx {i}");
+        }
+        let p = power::spectral_norm(&a, 3000, 1e-12, &mut rng);
+        assert!(
+            (p.sigma_max - s_gk[0]).abs() / s_gk[0] < 1e-6,
+            "{m}x{n} power {} vs {}",
+            p.sigma_max,
+            s_gk[0]
+        );
+        assert!(norms::holder_bound(&a) >= s_gk[0] * (1.0 - 1e-12));
+    }
+}
+
+#[test]
+fn graded_singular_values_resolved() {
+    // Matrix with exponentially graded spectrum: σ_i = 2^-i, built from
+    // random orthogonal factors; all solvers must resolve the grading.
+    let n = 12;
+    let mut rng = Pcg64::seeded(101);
+    let qa = qr::qr(&Mat::random_normal(n, n, &mut rng)).q;
+    let qb = qr::qr(&Mat::random_normal(n, n, &mut rng)).q;
+    let mut a = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for k in 0..n {
+                acc += qa[(i, k)] * 0.5f64.powi(k as i32) * qb[(j, k)];
+            }
+            a[(i, j)] = acc;
+        }
+    }
+    let s = gk_svd::singular_values(&a);
+    let sj = jacobi_svd::singular_values(&CMat::from_real(&a));
+    for i in 0..n {
+        let want = 0.5f64.powi(i as i32);
+        assert!((s[i] - want).abs() / want < 1e-8, "gk idx {i}: {} vs {want}", s[i]);
+        assert!((sj[i] - want).abs() / want < 1e-8, "jacobi idx {i}");
+    }
+}
+
+#[test]
+fn gk_full_svd_at_scale() {
+    let mut rng = Pcg64::seeded(102);
+    let (m, n) = (60, 45);
+    let a = Mat::random_normal(m, n, &mut rng);
+    let r = gk_svd::svd(&a, true);
+    let u = r.u.as_ref().unwrap();
+    let vt = r.vt.as_ref().unwrap();
+    // Reconstruct.
+    let mut us = Mat::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            us[(i, j)] = u[(i, j)] * r.s[j];
+        }
+    }
+    let recon = us.matmul(vt);
+    assert!(recon.max_abs_diff(&a) < 1e-8);
+    assert!(qr::orthonormality_defect(u) < 1e-9);
+    assert!(qr::orthonormality_defect(&vt.transpose()) < 1e-9);
+}
+
+#[test]
+fn jacobi_svd_full_at_scale_complex() {
+    let mut rng = Pcg64::seeded(103);
+    let a = CMat::random_normal(32, 20, &mut rng);
+    let dec = jacobi_svd::svd(&a);
+    assert!(dec.u.orthonormality_defect() < 1e-9);
+    assert!(dec.v.orthonormality_defect() < 1e-9);
+    // A v_i == σ_i u_i
+    for j in 0..dec.s.len() {
+        let v: Vec<_> = (0..20).map(|i| dec.v[(i, j)]).collect();
+        let av = a.matvec(&v);
+        for i in 0..32 {
+            let want = dec.u[(i, j)].scale(dec.s[j]);
+            assert!((av[i] - want).abs() < 1e-9, "col {j} row {i}");
+        }
+    }
+}
+
+#[test]
+fn hermitian_eigh_at_scale() {
+    let mut rng = Pcg64::seeded(104);
+    let n = 24;
+    let a = CMat::random_normal(n, n, &mut rng);
+    let mut h = CMat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            h[(i, j)] = (a[(i, j)] + a[(j, i)].conj()).scale(0.5);
+        }
+    }
+    let e = jacobi_eig::eigh(&h);
+    assert!(e.q.orthonormality_defect() < 1e-9);
+    // H q_i == λ_i q_i
+    for j in 0..n {
+        let q: Vec<_> = (0..n).map(|i| e.q[(i, j)]).collect();
+        let hq = h.matvec(&q);
+        for i in 0..n {
+            let want = e.q[(i, j)].scale(e.lambda[j]);
+            assert!((hq[i] - want).abs() < 1e-8, "eigpair {j}");
+        }
+    }
+}
+
+#[test]
+fn near_degenerate_spectrum() {
+    // Clustered singular values (σ = 1, 1, 1, 1e-1, 1e-1) must come out
+    // grouped correctly from both SVD routes.
+    let n = 5;
+    let mut rng = Pcg64::seeded(105);
+    let qa = qr::qr(&Mat::random_normal(n, n, &mut rng)).q;
+    let qb = qr::qr(&Mat::random_normal(n, n, &mut rng)).q;
+    let sig = [1.0, 1.0, 1.0, 0.1, 0.1];
+    let mut a = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for k in 0..n {
+                acc += qa[(i, k)] * sig[k] * qb[(j, k)];
+            }
+            a[(i, j)] = acc;
+        }
+    }
+    for s in [gk_svd::singular_values(&a), jacobi_svd::singular_values(&CMat::from_real(&a))] {
+        for (got, want) in s.iter().zip(&sig) {
+            assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        }
+    }
+}

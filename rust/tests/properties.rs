@@ -1,0 +1,166 @@
+//! Property-based tests (in-repo `testing::prop` harness — proptest is not
+//! in the offline crate set) over the coordinator-level invariants:
+//! routing/tiling correctness, spectrum identities, transform equivalences.
+
+use conv_svd_lfa::baselines::fft_svd::{self, FftLayoutPolicy};
+use conv_svd_lfa::conv::{Boundary, ConvKernel, ConvOp};
+use conv_svd_lfa::coordinator::{JobSpec, Scheduler};
+use conv_svd_lfa::lfa::{self, BlockLayout, LfaOptions};
+use conv_svd_lfa::linalg::power::LinOp;
+use conv_svd_lfa::numeric::Pcg64;
+use conv_svd_lfa::testing::{prop_assert, prop_check, prop_close, Gen};
+
+fn random_kernel(g: &mut Gen) -> ConvKernel {
+    let c_out = g.usize_in(1, 5);
+    let c_in = g.usize_in(1, 5);
+    let k = *g.pick(&[1usize, 3, 5]);
+    let seed = g.rng.next_u64();
+    let mut rng = Pcg64::seeded(seed);
+    ConvKernel::random_he(c_out, c_in, k, k, &mut rng)
+}
+
+#[test]
+fn prop_frobenius_identity() {
+    // Σσ² == n·m·‖W‖²_F for every kernel and grid (periodic), PROVIDED the
+    // kernel fits in the grid — wrapped taps that collide add up and break
+    // the identity (see lfa::svd::frobenius_check docs).
+    prop_check("frobenius identity", 40, |g| {
+        let kern = random_kernel(g);
+        let n = g.usize_in(kern.kh.max(2), 10.max(kern.kh));
+        let m = g.usize_in(kern.kw.max(2), 10.max(kern.kw));
+        let s = lfa::singular_values(&kern, n, m, LfaOptions::default());
+        let lhs: f64 = s.values.iter().map(|v| v * v).sum();
+        let rhs = (n * m) as f64 * kern.frobenius_norm().powi(2);
+        prop_close(lhs, rhs, 1e-9, "Σσ² vs nm·‖W‖²")
+    });
+}
+
+#[test]
+fn prop_lfa_equals_fft() {
+    prop_check("lfa == fft", 30, |g| {
+        let kern = random_kernel(g);
+        let n = g.usize_in(2, 9);
+        let m = g.usize_in(2, 9);
+        let a = lfa::singular_values(&kern, n, m, LfaOptions::default()).sorted_desc();
+        let b = fft_svd::singular_values(&kern, n, m, FftLayoutPolicy::Natural, 1).sorted_desc();
+        for (x, y) in a.iter().zip(&b) {
+            prop_close(*x, *y, 1e-9, "σ")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scaling_homogeneity() {
+    // σ(αA) == |α|·σ(A).
+    prop_check("scaling homogeneity", 25, |g| {
+        let kern = random_kernel(g);
+        let alpha = g.f64_in(-3.0, 3.0);
+        let mut scaled = kern.clone();
+        scaled.data.iter_mut().for_each(|v| *v *= alpha);
+        let n = g.usize_in(2, 8);
+        let s1 = lfa::singular_values(&kern, n, n, LfaOptions::default());
+        let s2 = lfa::singular_values(&scaled, n, n, LfaOptions::default());
+        for (a, b) in s1.values.iter().zip(&s2.values) {
+            prop_close(a * alpha.abs(), *b, 1e-9, "α-homogeneity")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_operator_gain_bounded_by_sigma_max() {
+    // ‖A f‖ ≤ σ_max ‖f‖ for the actual (periodic) conv operator.
+    prop_check("gain bound", 25, |g| {
+        let kern = random_kernel(g);
+        let n = g.usize_in(3, 8);
+        let op = ConvOp::new(&kern, n, n, Boundary::Periodic);
+        let s = lfa::singular_values(&kern, n, n, LfaOptions::default());
+        let f = g.rng.normal_vec(op.in_dim());
+        let y = op.forward(&f);
+        let fn2: f64 = f.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let yn2: f64 = y.iter().map(|v| v * v).sum::<f64>().sqrt();
+        prop_assert(
+            yn2 <= s.sigma_max() * fn2 * (1.0 + 1e-9),
+            format!("gain {} > σ_max {}", yn2 / fn2.max(1e-300), s.sigma_max()),
+        )
+    });
+}
+
+#[test]
+fn prop_tiling_is_seamless() {
+    // Any tile partition of the rows yields exactly the full spectrum.
+    prop_check("tile stitching", 20, |g| {
+        let kern = random_kernel(g);
+        let n = g.usize_in(3, 10);
+        let m = g.usize_in(2, 6);
+        let full = lfa::singular_values(&kern, n, m, LfaOptions::default());
+        let r = full.rank_per_freq();
+        let mut lo = 0;
+        let mut collected = Vec::new();
+        while lo < n {
+            let hi = (lo + g.usize_in(1, 3)).min(n);
+            collected.extend(lfa::tile_singular_values(
+                &kern,
+                n,
+                m,
+                lo,
+                hi,
+                lfa::BlockSolver::Jacobi,
+            ));
+            lo = hi;
+        }
+        prop_assert(collected.len() == n * m * r, "length")?;
+        for (a, b) in collected.iter().zip(&full.values) {
+            prop_close(*a, *b, 1e-12, "tiled σ")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scheduler_arbitrary_tile_rows() {
+    // The coordinator yields identical spectra for any tile_rows choice.
+    let sched = Scheduler::native(2);
+    prop_check("scheduler tiling", 12, |g| {
+        let kern = random_kernel(g);
+        let n = g.usize_in(3, 10);
+        let tile_rows = g.usize_in(1, n);
+        let res = sched
+            .run(JobSpec::new("p", kern.clone(), n, n).with_tile_rows(tile_rows))
+            .map_err(|e| e.to_string())?;
+        let want = lfa::singular_values(&kern, n, n, LfaOptions::default());
+        for (a, b) in res.spectrum.values.iter().zip(&want.values) {
+            prop_close(*a, *b, 1e-12, "σ")?;
+        }
+        Ok(())
+    });
+    sched.shutdown();
+}
+
+#[test]
+fn prop_layout_roundtrip_preserves_symbols() {
+    prop_check("layout roundtrip", 20, |g| {
+        let kern = random_kernel(g);
+        let n = g.usize_in(2, 8);
+        let a = lfa::compute_symbols(&kern, n, n, BlockLayout::BlockContiguous);
+        let b = a.to_layout(BlockLayout::PlanarStrided).to_layout(BlockLayout::BlockContiguous);
+        prop_assert(a.max_abs_diff(&b) < 1e-15, "roundtrip changed symbols")
+    });
+}
+
+#[test]
+fn prop_transpose_kernel_spectrum_identical() {
+    // σ(A) == σ(Aᵀ): the transposed conv has the same singular values.
+    prop_check("transpose spectrum", 20, |g| {
+        let kern = random_kernel(g);
+        let n = g.usize_in(2, 8);
+        let s1 = lfa::singular_values(&kern, n, n, LfaOptions::default()).sorted_desc();
+        let s2 =
+            lfa::singular_values(&kern.transpose_kernel(), n, n, LfaOptions::default()).sorted_desc();
+        for (a, b) in s1.iter().zip(&s2) {
+            prop_close(*a, *b, 1e-9, "σ(A) vs σ(Aᵀ)")?;
+        }
+        Ok(())
+    });
+}

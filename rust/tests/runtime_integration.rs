@@ -1,0 +1,110 @@
+//! Integration: rust PJRT runtime executes the AOT artifacts and the
+//! numbers agree with the native LFA implementation.
+//!
+//! Requires `make artifacts` to have run (skips with a message otherwise).
+
+use conv_svd_lfa::conv::ConvKernel;
+use conv_svd_lfa::lfa::{self, LfaOptions};
+use conv_svd_lfa::numeric::Pcg64;
+use conv_svd_lfa::runtime::{load_manifest, select, PjrtEngine, PjrtExecutor};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn random_kernel(spec: &conv_svd_lfa::runtime::ArtifactSpec, seed: u64) -> ConvKernel {
+    let mut rng = Pcg64::seeded(seed);
+    ConvKernel::random_he(spec.c_out, spec.c_in, spec.kh, spec.kw, &mut rng)
+}
+
+fn native_values(kernel: &ConvKernel, n: usize, m: usize) -> Vec<f64> {
+    lfa::singular_values(kernel, n, m, LfaOptions::default()).values
+}
+
+fn check_close(pjrt: &[f32], native: &[f64], scale: f64, what: &str) {
+    assert_eq!(pjrt.len(), native.len(), "{what}: length");
+    for (i, (a, b)) in pjrt.iter().zip(native).enumerate() {
+        assert!(
+            (*a as f64 - b).abs() < 2e-4 * scale.max(1.0),
+            "{what}: idx {i}: pjrt {a} vs native {b}"
+        );
+    }
+}
+
+#[test]
+fn whole_grid_artifact_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let specs = load_manifest(&dir).unwrap();
+    let spec = select(&specs, 8, 8, 4, 4, 3, 3, false).expect("8x8 c4 artifact");
+    let kernel = random_kernel(spec, 2024);
+    let w: Vec<f32> = kernel.data.iter().map(|&v| v as f32).collect();
+    let mut engine = PjrtEngine::cpu().unwrap();
+    let got = engine.run_grid(spec, &w).unwrap();
+    let want = native_values(&kernel, 8, 8);
+    let scale = want.iter().cloned().fold(0.0, f64::max);
+    check_close(&got, &want, scale, "whole grid");
+}
+
+#[test]
+fn tiled_artifact_stitches_to_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let specs = load_manifest(&dir).unwrap();
+    let spec = select(&specs, 32, 32, 16, 16, 3, 3, true).expect("tiled 32x32 artifact");
+    assert!(!spec.is_whole_grid(), "selection should pick the tiled variant");
+    let kernel = random_kernel(spec, 7);
+    let w: Vec<f32> = kernel.data.iter().map(|&v| v as f32).collect();
+    let mut engine = PjrtEngine::cpu().unwrap();
+    // Execute the tiles out of order to prove offset-independence.
+    let mut got = vec![0f32; spec.n * spec.m * spec.rank];
+    let per_call = spec.out_len();
+    let mut offsets: Vec<usize> = (0..spec.calls_for_grid()).collect();
+    offsets.reverse();
+    for c in offsets {
+        let row = c * spec.tile_rows;
+        let tile = engine.run_tile(spec, &w, row as i32).unwrap();
+        got[c * per_call..(c + 1) * per_call].copy_from_slice(&tile);
+    }
+    let want = native_values(&kernel, 32, 32);
+    let scale = want.iter().cloned().fold(0.0, f64::max);
+    check_close(&got, &want, scale, "tiled grid");
+}
+
+#[test]
+fn executor_thread_serves_many_clients() {
+    let Some(dir) = artifacts_dir() else { return };
+    let specs = load_manifest(&dir).unwrap();
+    let spec = select(&specs, 16, 16, 8, 8, 3, 3, false).expect("16x16 c8 artifact").clone();
+    let exec = PjrtExecutor::spawn().unwrap();
+    let kernel = random_kernel(&spec, 99);
+    let w: Vec<f32> = kernel.data.iter().map(|&v| v as f32).collect();
+    let want = native_values(&kernel, 16, 16);
+    let scale = want.iter().cloned().fold(0.0, f64::max);
+    std::thread::scope(|s| {
+        for t in 0..4 {
+            let exec = exec.clone();
+            let spec = spec.clone();
+            let w = w.clone();
+            let want = want.clone();
+            s.spawn(move || {
+                let got = exec.run_grid(&spec, &w).unwrap();
+                check_close(&got, &want, scale, &format!("client {t}"));
+            });
+        }
+    });
+}
+
+#[test]
+fn rejects_wrong_weight_length() {
+    let Some(dir) = artifacts_dir() else { return };
+    let specs = load_manifest(&dir).unwrap();
+    let spec = select(&specs, 8, 8, 4, 4, 3, 3, false).unwrap();
+    let mut engine = PjrtEngine::cpu().unwrap();
+    assert!(engine.run_tile(spec, &[0f32; 3], 0).is_err());
+}
