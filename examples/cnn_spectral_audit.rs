@@ -20,7 +20,7 @@ use conv_svd_lfa::lfa::Spectrum;
 use conv_svd_lfa::model::zoo;
 use conv_svd_lfa::report::{commas, secs, Table};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> conv_svd_lfa::Result<()> {
     let model = zoo::resnet20ish();
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     println!(

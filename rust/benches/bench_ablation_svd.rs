@@ -29,7 +29,7 @@ fn main() {
                 &kernel,
                 n,
                 n,
-                LfaOptions { solver: BlockSolver::Jacobi, ..Default::default() },
+                LfaOptions { solver: BlockSolver::Jacobi, threads: 1, ..Default::default() },
             )
         });
         let gram = bench.measure("gram", || {
@@ -37,7 +37,7 @@ fn main() {
                 &kernel,
                 n,
                 n,
-                LfaOptions { solver: BlockSolver::GramEigen, ..Default::default() },
+                LfaOptions { solver: BlockSolver::GramEigen, threads: 1, ..Default::default() },
             )
         });
         // GK on the realified blocks: embed C^{c×c} into R^{2c×2c}
@@ -74,13 +74,13 @@ fn main() {
             &kernel,
             n,
             n,
-            LfaOptions { solver: BlockSolver::Jacobi, ..Default::default() },
+            LfaOptions { solver: BlockSolver::Jacobi, threads: 1, ..Default::default() },
         );
         let s_g = lfa::singular_values(
             &kernel,
             n,
             n,
-            LfaOptions { solver: BlockSolver::GramEigen, ..Default::default() },
+            LfaOptions { solver: BlockSolver::GramEigen, threads: 1, ..Default::default() },
         );
         let gap = s_j
             .values

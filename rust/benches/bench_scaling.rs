@@ -11,9 +11,15 @@
 use conv_svd_lfa::baselines::{explicit_svd, fft_svd, FftLayoutPolicy};
 use conv_svd_lfa::bench_util::bench_args;
 use conv_svd_lfa::conv::{Boundary, ConvKernel};
+use conv_svd_lfa::engine::SpectralPlan;
 use conv_svd_lfa::lfa::{self, LfaOptions};
 use conv_svd_lfa::numeric::Pcg64;
 use conv_svd_lfa::report::Table;
+
+/// Serial options: the scaling fits want single-core numbers.
+fn serial() -> LfaOptions {
+    LfaOptions { threads: 1, ..Default::default() }
+}
 
 fn slope(points: &[(f64, f64)]) -> f64 {
     // least-squares slope in log-log space
@@ -43,7 +49,7 @@ fn main() {
     let mut exp_pts = Vec::new();
     for &n in &ns_fast {
         let t = bench
-            .measure("lfa", || lfa::singular_values(&kernel, n, n, LfaOptions::default()))
+            .measure("lfa", || lfa::singular_values(&kernel, n, n, serial()))
             .min()
             .as_secs_f64();
         lfa_pts.push((n as f64, t));
@@ -72,10 +78,41 @@ fn main() {
         let mut rng = Pcg64::seeded(1001 + cc as u64);
         let k = ConvKernel::random_he(cc, cc, 3, 3, &mut rng);
         let t = bench
-            .measure("lfa-c", || lfa::singular_values(&k, n_fixed, n_fixed, LfaOptions::default()))
+            .measure("lfa-c", || lfa::singular_values(&k, n_fixed, n_fixed, serial()))
             .min()
             .as_secs_f64();
         lfa_c.push((cc as f64, t));
+    }
+
+    // --- plan-once/execute-many vs plan-per-call (paper-c16 shapes) ---
+    // `lfa::singular_values` builds a throwaway SpectralPlan per call; a
+    // held plan skips phase-table construction and all per-call allocation.
+    // This is the repeated-spectrum workload (training-loop clipping).
+    let mut plan_rows: Vec<[String; 4]> = Vec::new();
+    let ns_plan: Vec<usize> = if full { vec![32, 64] } else { vec![32] };
+    for &n in &ns_plan {
+        let mut rng = Pcg64::seeded(1002 + n as u64);
+        let k16 = ConvKernel::random_he(16, 16, 3, 3, &mut rng);
+        let per_call = bench
+            .measure("plan-per-call", || lfa::singular_values(&k16, n, n, serial()))
+            .min()
+            .as_secs_f64();
+        let plan = SpectralPlan::new(&k16, n, n, serial());
+        let mut out = vec![0.0f64; plan.values_len()];
+        plan.execute_into(&mut out); // warm the workspace pool
+        let reused = bench
+            .measure("plan-reuse", || {
+                plan.execute_into(&mut out);
+                out[0]
+            })
+            .min()
+            .as_secs_f64();
+        plan_rows.push([
+            format!("c16 n={n}"),
+            format!("{:.3} ms", per_call * 1e3),
+            format!("{:.3} ms", reused * 1e3),
+            format!("{:.2}x", per_call / reused.max(1e-12)),
+        ]);
     }
 
     println!("# Table I — measured scaling exponents vs theory");
@@ -96,6 +133,14 @@ fn main() {
         ]);
     }
     print!("{}", table.render());
+
+    println!("\n# SpectralPlan — plan-once/execute-many vs plan-per-call");
+    let mut ptable = Table::new(["shape", "plan-per-call", "plan-reuse", "speedup"]);
+    for row in plan_rows {
+        ptable.row(row);
+    }
+    print!("{}", ptable.render());
+
     println!(
         "notes: explicit slope < 6 at tiny n (LAPACK-style constants dominate);\n\
          LFA-vs-c < 3 until c is large enough for the O(c³) SVD to dominate the\n\

@@ -19,6 +19,11 @@ use conv_svd_lfa::numeric::Pcg64;
 use conv_svd_lfa::report::{secs, Table};
 use std::time::{Duration, Instant};
 
+/// Single-threaded options: Table IV isolates per-core cache behaviour.
+fn serial() -> LfaOptions {
+    LfaOptions { threads: 1, ..Default::default() }
+}
+
 fn main() {
     let (bench, full) = bench_args();
     let c = 16;
@@ -50,9 +55,9 @@ fn main() {
 
         // --- LFA block-contiguous (the default) ---
         let m3 = bench.measure("lfa-cont", || {
-            lfa::singular_values_timed(&kernel, n, n, LfaOptions::default()).1
+            lfa::singular_values_timed(&kernel, n, n, serial()).1
         });
-        let s3 = lfa::singular_values_timed(&kernel, n, n, LfaOptions::default()).1;
+        let s3 = lfa::singular_values_timed(&kernel, n, n, serial()).1;
         emit(&mut table, &mut csv, n, "LFA", "contiguous (native)", s3.transform, s3.copy, s3.svd, m3.median());
 
         // --- LFA forced planar, then converted back (the paper's ✗ row) ---
@@ -64,7 +69,7 @@ fn main() {
             let grid = grid.to_layout(BlockLayout::BlockContiguous);
             let t_copy = t0.elapsed();
             let t0 = Instant::now();
-            let v = svd_pass(&grid, LfaOptions::default());
+            let v = svd_pass(&grid, serial());
             let t_svd = t0.elapsed();
             (v, t_f, t_copy, t_svd)
         };
@@ -78,7 +83,7 @@ fn main() {
             let grid = lfa::compute_symbols(&kernel, n, n, BlockLayout::PlanarStrided);
             let t_f = t0.elapsed();
             let t0 = Instant::now();
-            let v = svd_pass(&grid, LfaOptions { layout: BlockLayout::PlanarStrided, ..Default::default() });
+            let v = svd_pass(&grid, LfaOptions { layout: BlockLayout::PlanarStrided, ..serial() });
             let t_svd = t0.elapsed();
             (v, t_f, t_svd)
         };

@@ -11,6 +11,10 @@
 //!    whose SVD stage runs slower than LFA's block-contiguous one.
 //! 2. Optionally converting to block-contiguous before the SVD reproduces
 //!    the `s_copy` experiment of Table IV.
+//!
+//! The SVD stage is literally [`svd_pass`] — the engine-backed per-block
+//! pass the LFA route uses, with the same per-worker solver workspaces —
+//! so the Table III comparison isolates the transform alone.
 
 use crate::conv::ConvKernel;
 use crate::fft::FftPlan;

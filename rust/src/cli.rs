@@ -1,6 +1,7 @@
 //! Hand-rolled CLI argument parsing (no clap in the offline crate set).
 
-use anyhow::{anyhow, bail, Result};
+use crate::error::Result;
+use crate::{bail, err};
 use std::collections::HashMap;
 
 /// Parsed command line: subcommand, positionals, `--key value` / `--flag`
@@ -43,7 +44,7 @@ impl Cli {
                         Some(v) => v,
                         None => it
                             .next()
-                            .ok_or_else(|| anyhow!("option --{name} needs a value"))?
+                            .ok_or_else(|| err!("option --{name} needs a value"))?
                             .clone(),
                     };
                     options.insert(name.to_string(), value);
@@ -69,7 +70,7 @@ impl Cli {
         match self.options.get(name) {
             None => Ok(default),
             Some(v) => {
-                v.parse::<T>().map_err(|_| anyhow!("--{name}: cannot parse {v:?}"))
+                v.parse::<T>().map_err(|_| err!("--{name}: cannot parse {v:?}"))
             }
         }
     }

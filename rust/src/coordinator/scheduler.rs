@@ -7,12 +7,18 @@
 //! executor — and writes them into the job's result buffer. A bounded
 //! submission channel provides backpressure when jobs arrive faster than
 //! workers drain them.
+//!
+//! Every job carries one shared [`SpectralPlan`]: phase tables are computed
+//! once at submission and every native tile executes against the plan's
+//! pooled workspaces, so a job no longer rebuilds symbol state per tile.
 
 use super::job::{Backend, JobSpec, Tile};
 use super::metrics::Metrics;
-use crate::lfa;
+use crate::engine::{resolve_threads, SpectralPlan};
+use crate::err;
+use crate::error::Result;
+use crate::lfa::{self, LfaOptions};
 use crate::runtime::{ArtifactSpec, PjrtExecutor};
-use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
@@ -20,7 +26,7 @@ use std::time::Instant;
 /// Scheduler configuration.
 #[derive(Clone)]
 pub struct SchedulerConfig {
-    /// Worker threads for native tiles.
+    /// Worker threads for native tiles (0 = auto = `available_parallelism`).
     pub workers: usize,
     /// Bounded queue depth for submitted jobs (backpressure).
     pub queue_depth: usize,
@@ -30,11 +36,7 @@ pub struct SchedulerConfig {
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        Self {
-            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
-            queue_depth: 16,
-            artifacts: Vec::new(),
-        }
+        Self { workers: 0, queue_depth: 16, artifacts: Vec::new() }
     }
 }
 
@@ -51,6 +53,9 @@ pub struct JobResult {
 
 struct JobState {
     spec: Arc<JobSpec>,
+    /// Planned symbol→SVD state shared by every tile of this job.
+    /// `None` for jobs routed entirely to a PJRT artifact (no native tiles).
+    plan: Option<Arc<SpectralPlan>>,
     values: Mutex<Vec<f64>>,
     remaining: AtomicUsize,
     pjrt_tiles: AtomicUsize,
@@ -81,6 +86,8 @@ impl Scheduler {
     /// Start the pool. If `executor` is `Some`, jobs whose shape matches an
     /// artifact may run on PJRT (per their backend policy).
     pub fn start(config: SchedulerConfig, executor: Option<PjrtExecutor>) -> Self {
+        let mut config = config;
+        config.workers = resolve_threads(config.workers);
         let (work_tx, work_rx) = mpsc::sync_channel::<Work>(config.queue_depth.max(1) * 4);
         let work_rx = Arc::new(Mutex::new(work_rx));
         let metrics = Arc::new(Metrics::default());
@@ -99,24 +106,21 @@ impl Scheduler {
         Self { work_tx, workers, metrics, config, executor }
     }
 
-    /// Convenience: native-only scheduler.
+    /// Convenience: native-only scheduler (`workers == 0` = auto).
     pub fn native(workers: usize) -> Self {
-        Self::start(
-            SchedulerConfig { workers, ..Default::default() },
-            None,
-        )
+        Self::start(SchedulerConfig { workers, ..Default::default() }, None)
     }
 
     /// Submit a job; returns a receiver for its result. Blocks (backpressure)
-    /// if the work queue is full.
+    /// if the work queue is full. The job's [`SpectralPlan`] is built here,
+    /// once — tiles only execute.
     pub fn submit(&self, spec: JobSpec) -> mpsc::Receiver<Result<JobResult>> {
         let (done_tx, done_rx) = mpsc::channel();
         self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
         let spec = Arc::new(spec);
         let artifact = self.pick_artifact(&spec);
         let tile_rows = match &artifact {
-            Some(a) if !a.is_whole_grid() => a.tile_rows,
-            Some(a) => a.tile_rows, // whole grid = single tile
+            Some(a) => a.tile_rows,
             None => spec.effective_tile_rows(self.config.workers),
         };
         let tiles: Vec<(usize, usize)> = {
@@ -133,8 +137,21 @@ impl Scheduler {
         } else {
             Vec::new()
         };
+        // Jobs with a matching artifact run every tile on PJRT and never
+        // touch the native path — skip the planning cost for them.
+        let plan = if artifact.is_none() {
+            Some(Arc::new(SpectralPlan::new(
+                &spec.kernel,
+                spec.n,
+                spec.m,
+                LfaOptions { solver: spec.solver, threads: 1, ..Default::default() },
+            )))
+        } else {
+            None
+        };
         let state = Arc::new(JobState {
             spec: Arc::clone(&spec),
+            plan,
             values: Mutex::new(vec![0.0; spec.total_values()]),
             remaining: AtomicUsize::new(tiles.len()),
             pjrt_tiles: AtomicUsize::new(0),
@@ -158,7 +175,7 @@ impl Scheduler {
     /// Submit and wait.
     pub fn run(&self, spec: JobSpec) -> Result<JobResult> {
         let rx = self.submit(spec);
-        rx.recv().map_err(|_| anyhow!("job dropped without a result"))?
+        rx.recv().map_err(|_| err!("job dropped without a result"))?
     }
 
     fn pick_artifact(&self, spec: &JobSpec) -> Option<ArtifactSpec> {
@@ -166,7 +183,7 @@ impl Scheduler {
             return None;
         }
         let k = &spec.kernel;
-        let found = crate::runtime::select(
+        crate::runtime::select(
             &self.config.artifacts,
             spec.n,
             spec.m,
@@ -176,12 +193,9 @@ impl Scheduler {
             k.kw,
             true,
         )
-        .cloned();
-        if found.is_none() && spec.backend == Backend::Pjrt {
-            // Explicit PJRT requested but no artifact: the job will fail in
-            // the worker; surfacing it here keeps submit() infallible.
-        }
-        found
+        .cloned()
+        // Explicit PJRT requested but no artifact: the job fails in the
+        // worker; keeping submit() infallible.
     }
 
     /// Graceful shutdown: waits for queued work to finish.
@@ -253,7 +267,7 @@ fn run_tile(state: &JobState, tile: &Tile, executor: Option<&PjrtExecutor>) -> R
         }
         _ => {
             if state.artifact.is_none() && spec.backend == Backend::Pjrt {
-                return Err(anyhow!(
+                return Err(err!(
                     "job {}: PJRT backend requested but no artifact matches \
                      (n={}, c_out={}, c_in={}); run `make artifacts` or use Backend::Auto",
                     spec.id,
@@ -262,17 +276,13 @@ fn run_tile(state: &JobState, tile: &Tile, executor: Option<&PjrtExecutor>) -> R
                     spec.kernel.c_in
                 ));
             }
-            (
-                lfa::tile_singular_values(
-                    &spec.kernel,
-                    spec.n,
-                    spec.m,
-                    tile.row_lo,
-                    tile.row_hi,
-                    spec.solver,
-                ),
-                false,
-            )
+            // Native path: execute against the job's shared plan. Workspace
+            // checkout reuses the buffers of whichever worker last ran a
+            // tile of this job — no per-tile symbol state rebuild.
+            let plan = state.plan.as_ref().expect("native jobs always carry a plan");
+            let mut vals = vec![0.0f64; tile.num_values()];
+            plan.execute_rows_pooled(tile.row_lo, tile.row_hi, &mut vals);
+            (vals, false)
         }
     };
     let base = tile.row_lo * spec.m * r;

@@ -8,16 +8,18 @@ use super::job::{Backend, JobSpec};
 use super::metrics::MetricsSnapshot;
 use super::scheduler::{JobResult, Scheduler, SchedulerConfig};
 use crate::conv::ConvKernel;
+use crate::err;
+use crate::error::Result;
 use crate::lfa::{self, BlockSolver};
 use crate::model::config::ModelConfig;
 use crate::runtime::{load_manifest, PjrtExecutor};
-use anyhow::Result;
 use std::path::Path;
 use std::time::Duration;
 
 /// Service configuration.
 #[derive(Clone)]
 pub struct ServiceConfig {
+    /// Worker threads (0 = auto = `available_parallelism`).
     pub workers: usize,
     pub backend: Backend,
     pub solver: BlockSolver,
@@ -30,7 +32,7 @@ pub struct ServiceConfig {
 impl Default for ServiceConfig {
     fn default() -> Self {
         Self {
-            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            workers: 0,
             backend: Backend::Auto,
             solver: BlockSolver::Jacobi,
             artifacts_dir: None,
@@ -67,7 +69,9 @@ pub struct SpectralService {
 impl SpectralService {
     /// Start the service. Loads the artifact manifest and spawns the PJRT
     /// executor when an artifacts directory is configured; falls back to
-    /// native-only (with a warning) when PJRT cannot start.
+    /// native-only (with a warning) when PJRT cannot start — including when
+    /// the crate was built without the `pjrt` feature, whose stub executor
+    /// always fails to spawn.
     pub fn start(config: ServiceConfig) -> Result<Self> {
         let (artifacts, executor) = match &config.artifacts_dir {
             Some(dir) if dir.join("manifest.txt").exists() => {
@@ -134,7 +138,7 @@ impl SpectralService {
         }
         let mut reports = Vec::new();
         for (layer, kernel, rx) in pending {
-            let result = rx.recv().map_err(|_| anyhow::anyhow!("job dropped"))??;
+            let result = rx.recv().map_err(|_| err!("job dropped"))??;
             reports.push(self.report(&layer.name, &kernel, layer.height, layer.width, result));
         }
         Ok(reports)

@@ -1,0 +1,148 @@
+//! Execution backends for a [`SpectralPlan`].
+//!
+//! The plan owns the *what* (phase tables, workspaces, dual-grid geometry);
+//! a [`SpectralBackend`] owns the *where*: same-thread, a scoped worker
+//! pool, or (feature `pjrt`) an AOT-compiled XLA artifact driven through the
+//! PJRT executor thread. All backends produce identical spectra; they exist
+//! so callers can pick an execution strategy without touching the plan.
+
+use super::plan::SpectralPlan;
+use crate::error::Result;
+use crate::lfa::spectrum::Spectrum;
+
+/// A strategy for executing a [`SpectralPlan`].
+pub trait SpectralBackend {
+    /// Human-readable backend name (metrics, reports).
+    fn name(&self) -> &'static str;
+
+    /// Execute the plan, writing `plan.values_len()` singular values into
+    /// `out` (frequency-major, descending per frequency).
+    fn execute_into(&self, plan: &SpectralPlan, out: &mut [f64]) -> Result<()>;
+
+    /// Execute the plan and package the result as a [`Spectrum`].
+    fn execute(&self, plan: &SpectralPlan) -> Result<Spectrum> {
+        let mut values = vec![0.0f64; plan.values_len()];
+        self.execute_into(plan, &mut values)?;
+        Ok(Spectrum {
+            n: plan.coarse_rows(),
+            m: plan.coarse_cols(),
+            c_out: plan.block_shape().0,
+            c_in: plan.block_shape().1,
+            values,
+        })
+    }
+}
+
+/// Single-threaded native execution, regardless of the plan's thread hint.
+/// The baseline for equivalence tests and the right choice inside an outer
+/// parallel driver (e.g. the coordinator's worker pool).
+pub struct NativeSerial;
+
+impl SpectralBackend for NativeSerial {
+    fn name(&self) -> &'static str {
+        "native-serial"
+    }
+
+    fn execute_into(&self, plan: &SpectralPlan, out: &mut [f64]) -> Result<()> {
+        plan.execute_into_threads(1, out);
+        Ok(())
+    }
+}
+
+/// Scoped-thread native execution with an explicit worker count (0 = auto =
+/// `available_parallelism`).
+pub struct NativeThreaded {
+    pub threads: usize,
+}
+
+impl SpectralBackend for NativeThreaded {
+    fn name(&self) -> &'static str {
+        "native-threaded"
+    }
+
+    fn execute_into(&self, plan: &SpectralPlan, out: &mut [f64]) -> Result<()> {
+        plan.execute_into_threads(super::resolve_threads(self.threads), out);
+        Ok(())
+    }
+}
+
+/// PJRT-backed execution: sweeps a matching AOT artifact over the dual grid
+/// through the dedicated executor thread. Only meaningful for stride-1 plans
+/// whose shape matches the artifact exactly.
+#[cfg(feature = "pjrt")]
+pub struct PjrtBackend {
+    executor: crate::runtime::PjrtExecutor,
+    artifact: crate::runtime::ArtifactSpec,
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtBackend {
+    pub fn new(
+        executor: crate::runtime::PjrtExecutor,
+        artifact: crate::runtime::ArtifactSpec,
+    ) -> Self {
+        Self { executor, artifact }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl SpectralBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn execute_into(&self, plan: &SpectralPlan, out: &mut [f64]) -> Result<()> {
+        use crate::bail;
+        let a = &self.artifact;
+        let (c_out, c_in) = plan.block_shape();
+        let k = plan.kernel();
+        if plan.stride() != 1
+            || a.n != plan.coarse_rows()
+            || a.m != plan.coarse_cols()
+            || a.c_out != c_out
+            || a.c_in != c_in
+            || a.kh != k.kh
+            || a.kw != k.kw
+        {
+            bail!(
+                "artifact {} does not match the plan shape \
+                 (n={}, m={}, c_out={}, c_in={}, kh={}, kw={})",
+                a.name,
+                plan.coarse_rows(),
+                plan.coarse_cols(),
+                c_out,
+                c_in,
+                k.kh,
+                k.kw
+            );
+        }
+        let weights: Vec<f32> = plan.kernel().data.iter().map(|&v| v as f32).collect();
+        let values = self.executor.run_grid(a, &weights)?;
+        if values.len() != out.len() {
+            bail!("artifact {} returned {} values, expected {}", a.name, values.len(), out.len());
+        }
+        for (dst, &src) in out.iter_mut().zip(values.iter()) {
+            *dst = src as f64;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvKernel;
+    use crate::lfa::svd::LfaOptions;
+    use crate::numeric::Pcg64;
+
+    #[test]
+    fn serial_and_threaded_backends_agree() {
+        let mut rng = Pcg64::seeded(610);
+        let k = ConvKernel::random_he(3, 3, 3, 3, &mut rng);
+        let plan = SpectralPlan::new(&k, 12, 12, LfaOptions::default());
+        let a = NativeSerial.execute(&plan).unwrap();
+        let b = NativeThreaded { threads: 3 }.execute(&plan).unwrap();
+        assert_eq!(a.values, b.values);
+        assert_eq!(NativeSerial.name(), "native-serial");
+    }
+}

@@ -1,0 +1,51 @@
+//! The planned, allocation-free execution core behind every SVD path.
+//!
+//! The paper's `O(n·m·c³)` advantage over the FFT route only materializes
+//! when the per-frequency hot loop is allocation-free and the
+//! "embarrassingly parallel" dual grid is driven by one engine rather than
+//! several duplicated pipelines. This module is that engine:
+//!
+//! - [`SpectralPlan`] — created once per `(kernel, grid, stride, layout,
+//!   solver, threads)`; precomputes the twiddle/phase tables and owns a
+//!   pool of per-worker scratch [`Workspace`]s. `execute()` can be called
+//!   many times (training-loop clipping, repeated audits) without
+//!   re-planning or re-allocating.
+//! - [`Workspace`] — per-worker scratch: symbol block, per-tap phases, and
+//!   the Jacobi / Gram solver work matrices.
+//! - [`SpectralBackend`] — execution strategies over a plan:
+//!   [`NativeSerial`], [`NativeThreaded`], and (feature `pjrt`) a PJRT
+//!   artifact backend.
+//!
+//! `lfa::svd`, `lfa::stride`, the FFT baseline's SVD stage and the
+//! coordinator's tile workers are all thin wrappers over this module.
+
+pub mod backend;
+pub mod plan;
+pub mod workspace;
+
+#[cfg(feature = "pjrt")]
+pub use backend::PjrtBackend;
+pub use backend::{NativeSerial, NativeThreaded, SpectralBackend};
+pub use plan::SpectralPlan;
+pub use workspace::Workspace;
+
+/// Resolve a thread-count option: `0` means auto (`available_parallelism`),
+/// anything else is taken literally. This is the single source of truth for
+/// the `threads == 0` convention shared by [`crate::lfa::LfaOptions`], the
+/// coordinator's scheduler, and the CLI.
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn zero_threads_resolves_to_at_least_one() {
+        assert!(super::resolve_threads(0) >= 1);
+        assert_eq!(super::resolve_threads(3), 3);
+    }
+}

@@ -1,0 +1,451 @@
+//! The [`SpectralPlan`]: plan once, execute many.
+//!
+//! A plan is created once per `(kernel, grid, stride, layout, solver,
+//! threads)` configuration and captures everything that is invariant across
+//! executions:
+//!
+//! - the **twiddle/phase tables** `e^{2πi·i·dy/n}`, `e^{2πi·j·dx/m}` for
+//!   every (axis, tap-offset) pair — `O(n·kh + m·kw)` trig total, evaluated
+//!   exactly once per plan instead of once per call;
+//! - a **pool of per-worker workspaces** (symbol block, per-tap phases,
+//!   Jacobi/Gram work matrices) so the per-frequency hot loop performs zero
+//!   heap allocation;
+//! - the **strided dual-grid geometry**: for stride `s > 1` the plan's
+//!   frequency space is the coarse torus `(n/s)×(m/s)` and each block is the
+//!   `c_out × s²·c_in` concatenation of the `s²` aliasing fine symbols.
+//!
+//! `execute*` then runs the fused symbol→SVD pipeline over any row range of
+//! the dual grid. Every SVD entry point in the crate — `lfa::svd`,
+//! `lfa::stride`, the FFT baseline's SVD stage, the coordinator's tiles —
+//! is a thin wrapper over this type.
+
+use super::workspace::Workspace;
+use crate::conv::ConvKernel;
+use crate::lfa::spectrum::{FullSvd, Spectrum};
+use crate::lfa::svd::{BlockSolver, LfaOptions};
+use crate::lfa::symbol::{scatter_shard, BlockLayout, SymbolGrid};
+use crate::linalg::jacobi_svd;
+use crate::numeric::{C64, CMat};
+use std::f64::consts::PI;
+use std::sync::Mutex;
+
+/// A planned, reusable symbol→SVD execution for one convolution layer.
+pub struct SpectralPlan {
+    kernel: ConvKernel,
+    /// Fine input grid.
+    n: usize,
+    m: usize,
+    stride: usize,
+    layout: BlockLayout,
+    solver: BlockSolver,
+    threads: usize,
+    /// Coarse (output) dual grid: `n/stride × m/stride`.
+    nc: usize,
+    mc: usize,
+    /// Per-frequency block shape: `c_out × stride²·c_in`.
+    block_rows: usize,
+    block_cols: usize,
+    rank: usize,
+    /// Row-axis phase table, flattened `[kh][n]`: `py[d·n + i] =
+    /// e^{2πi·i·(d − anchor_row)/n}`.
+    py: Vec<C64>,
+    /// Column-axis phase table, flattened `[kw][m]`.
+    px: Vec<C64>,
+    /// Reusable per-worker workspaces (checked out per execution range).
+    pool: Mutex<Vec<Workspace>>,
+}
+
+impl SpectralPlan {
+    /// Plan the dense (stride-1) pipeline for `kernel` on an `n×m` grid.
+    pub fn new(kernel: &ConvKernel, n: usize, m: usize, opts: LfaOptions) -> Self {
+        Self::with_stride(kernel, n, m, 1, opts)
+    }
+
+    /// Plan the stride-`s` pipeline (`C = D_s ∘ A`) on an `n×m` fine grid.
+    /// The coarse output grid is `(n/s)×(m/s)`; `s` must divide both axes.
+    pub fn with_stride(
+        kernel: &ConvKernel,
+        n: usize,
+        m: usize,
+        s: usize,
+        opts: LfaOptions,
+    ) -> Self {
+        assert!(s > 0 && n % s == 0 && m % s == 0, "stride must divide the grid");
+        assert!(n > 0 && m > 0, "grid must be nonempty");
+        let (ar, ac) = (kernel.anchor.0 as isize, kernel.anchor.1 as isize);
+        let mut py = vec![C64::ZERO; kernel.kh * n];
+        for d in 0..kernel.kh {
+            let dy = d as isize - ar;
+            for i in 0..n {
+                py[d * n + i] = C64::cis(2.0 * PI * (i as f64) * (dy as f64) / (n as f64));
+            }
+        }
+        let mut px = vec![C64::ZERO; kernel.kw * m];
+        for d in 0..kernel.kw {
+            let dx = d as isize - ac;
+            for j in 0..m {
+                px[d * m + j] = C64::cis(2.0 * PI * (j as f64) * (dx as f64) / (m as f64));
+            }
+        }
+        let block_rows = kernel.c_out;
+        let block_cols = s * s * kernel.c_in;
+        let ntaps = kernel.kh * kernel.kw;
+        // Prewarm one workspace: the serial path never allocates at execute
+        // time, and threaded paths grow the pool once on first use.
+        let pool = Mutex::new(vec![Workspace::for_block(block_rows, block_cols, ntaps)]);
+        Self {
+            kernel: kernel.clone(),
+            n,
+            m,
+            stride: s,
+            layout: opts.layout,
+            solver: opts.solver,
+            threads: opts.threads,
+            nc: n / s,
+            mc: m / s,
+            block_rows,
+            block_cols,
+            rank: block_rows.min(block_cols),
+            py,
+            px,
+            pool,
+        }
+    }
+
+    /// Rows of the coarse dual grid (the shardable axis).
+    pub fn coarse_rows(&self) -> usize {
+        self.nc
+    }
+
+    /// Columns of the coarse dual grid.
+    pub fn coarse_cols(&self) -> usize {
+        self.mc
+    }
+
+    /// Number of frequencies (= blocks) the plan executes.
+    pub fn freqs(&self) -> usize {
+        self.nc * self.mc
+    }
+
+    /// Singular values per frequency: `min(c_out, stride²·c_in)`.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Total output length of [`Self::execute_into`].
+    pub fn values_len(&self) -> usize {
+        self.freqs() * self.rank
+    }
+
+    /// The solver the plan was built with.
+    pub fn solver(&self) -> BlockSolver {
+        self.solver
+    }
+
+    /// Per-frequency block shape `(c_out, stride²·c_in)`.
+    pub fn block_shape(&self) -> (usize, usize) {
+        (self.block_rows, self.block_cols)
+    }
+
+    /// The stride the plan was built with (1 = dense).
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// The kernel the plan owns (a clone of the one it was built from).
+    pub fn kernel(&self) -> &ConvKernel {
+        &self.kernel
+    }
+
+    /// Worker count the plan will use (0 in options means auto).
+    pub fn effective_threads(&self) -> usize {
+        // Tiny grids: thread spawn overhead dominates the whole pipeline.
+        if self.freqs() < 64 {
+            return 1;
+        }
+        super::resolve_threads(self.threads).min(self.nc.max(1))
+    }
+
+    /// Check a workspace out of the plan's pool (or build a fresh one if all
+    /// are in use). Return it with [`Self::restore`] so later executions and
+    /// other workers can reuse the buffers.
+    pub fn checkout(&self) -> Workspace {
+        let ws = self.pool.lock().expect("workspace pool poisoned").pop();
+        ws.unwrap_or_else(|| {
+            Workspace::for_block(self.block_rows, self.block_cols, self.kernel.kh * self.kernel.kw)
+        })
+    }
+
+    /// Return a checked-out workspace to the pool.
+    pub fn restore(&self, ws: Workspace) {
+        self.pool.lock().expect("workspace pool poisoned").push(ws);
+    }
+
+    /// Fill `ws.block` with the symbol at coarse frequency `(ki, kj)`:
+    /// the `c_out×c_in` symbol for stride 1, the horizontal concatenation
+    /// `(1/s)·[A_{k_00} | … | A_{k_(s-1)(s-1)}]` for stride `s`. Uses only
+    /// the precomputed phase tables — no trig, no allocation.
+    fn fill_block(&self, ki: usize, kj: usize, ws: &mut Workspace) {
+        let (kh, kw) = (self.kernel.kh, self.kernel.kw);
+        let (cout, cin) = (self.kernel.c_out, self.kernel.c_in);
+        let s = self.stride;
+        let ntaps = kh * kw;
+        let inv_s = 1.0 / s as f64;
+        for a in 0..s {
+            for b in 0..s {
+                // Fine frequency this sub-block aliases from.
+                let fi = ki + a * self.nc;
+                let fj = kj + b * self.mc;
+                // Combine the two 1-D tables into per-tap phases.
+                for r in 0..kh {
+                    let pyr = self.py[r * self.n + fi];
+                    for c in 0..kw {
+                        ws.tap_phase[r * kw + c] = pyr * self.px[c * self.m + fj];
+                    }
+                }
+                // Contract taps against the OIHW weight tensor; taps are the
+                // innermost stride, so each (o, i) pair's weights are
+                // contiguous.
+                let col0 = (a * s + b) * cin;
+                for o in 0..cout {
+                    for i in 0..cin {
+                        let p = o * cin + i;
+                        let w = &self.kernel.data[p * ntaps..(p + 1) * ntaps];
+                        let mut acc = C64::ZERO;
+                        for (wv, ph) in w.iter().zip(ws.tap_phase.iter()) {
+                            acc.re += wv * ph.re;
+                            acc.im += wv * ph.im;
+                        }
+                        if s > 1 {
+                            acc = acc.scale(inv_s);
+                        }
+                        ws.block[o * self.block_cols + col0 + i] = acc;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Execute coarse frequency rows `[row_lo, row_hi)` into `out`
+    /// (`(row_hi−row_lo)·mc·rank` values, frequency-major, descending per
+    /// frequency). Zero heap allocation per frequency.
+    pub fn execute_rows(&self, row_lo: usize, row_hi: usize, ws: &mut Workspace, out: &mut [f64]) {
+        debug_assert!(row_lo <= row_hi && row_hi <= self.nc);
+        debug_assert_eq!(out.len(), (row_hi - row_lo) * self.mc * self.rank);
+        let r = self.rank;
+        for ki in row_lo..row_hi {
+            for kj in 0..self.mc {
+                self.fill_block(ki, kj, ws);
+                let f = (ki - row_lo) * self.mc + kj;
+                let dst = &mut out[f * r..(f + 1) * r];
+                ws.solve_block(self.solver, self.block_rows, self.block_cols, dst);
+            }
+        }
+    }
+
+    /// [`Self::execute_rows`] with pool-managed workspace checkout — the
+    /// entry point the coordinator's tile workers use against a shared plan.
+    pub fn execute_rows_pooled(&self, row_lo: usize, row_hi: usize, out: &mut [f64]) {
+        let mut ws = self.checkout();
+        self.execute_rows(row_lo, row_hi, &mut ws, out);
+        self.restore(ws);
+    }
+
+    /// Execute the full dual grid into a caller-provided buffer
+    /// (`values_len()` long). After the first call on a plan this performs
+    /// no heap allocation in the serial path.
+    pub fn execute_into(&self, out: &mut [f64]) {
+        self.execute_into_threads(self.effective_threads(), out);
+    }
+
+    /// [`Self::execute_into`] with an explicit worker count (0 = auto).
+    pub fn execute_into_threads(&self, threads: usize, out: &mut [f64]) {
+        assert_eq!(out.len(), self.values_len(), "output buffer length mismatch");
+        let threads = super::resolve_threads(threads).min(self.nc.max(1));
+        if threads <= 1 || self.nc <= 1 {
+            self.execute_rows_pooled(0, self.nc, out);
+            return;
+        }
+        let rows_per = self.nc.div_ceil(threads);
+        let row_vals = self.mc * self.rank;
+        std::thread::scope(|scope| {
+            let mut rest: &mut [f64] = out;
+            let mut lo = 0usize;
+            while lo < self.nc {
+                let hi = (lo + rows_per).min(self.nc);
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut((hi - lo) * row_vals);
+                rest = tail;
+                scope.spawn(move || self.execute_rows_pooled(lo, hi, head));
+                lo = hi;
+            }
+        });
+    }
+
+    /// Execute the full dual grid and package the result as a [`Spectrum`].
+    pub fn execute(&self) -> Spectrum {
+        let mut values = vec![0.0f64; self.values_len()];
+        self.execute_into(&mut values);
+        Spectrum { n: self.nc, m: self.mc, c_out: self.block_rows, c_in: self.block_cols, values }
+    }
+
+    /// Full SVD with per-frequency factors `U_k, Σ_k, V_k` (the factor
+    /// matrices are fresh allocations by necessity — they are the output).
+    pub fn execute_full(&self) -> FullSvd {
+        let freqs = self.freqs();
+        let r = self.rank;
+        let mut u = Vec::with_capacity(freqs);
+        let mut v = Vec::with_capacity(freqs);
+        let mut values = vec![0.0f64; freqs * r];
+        let mut ws = self.checkout();
+        let mut block = CMat::zeros(self.block_rows, self.block_cols);
+        for ki in 0..self.nc {
+            for kj in 0..self.mc {
+                self.fill_block(ki, kj, &mut ws);
+                block.data.copy_from_slice(&ws.block);
+                let dec = jacobi_svd::svd(&block);
+                let f = ki * self.mc + kj;
+                values[f * r..(f + 1) * r].copy_from_slice(&dec.s[..r]);
+                u.push(dec.u);
+                v.push(dec.v);
+            }
+        }
+        self.restore(ws);
+        FullSvd {
+            n: self.nc,
+            m: self.mc,
+            c_out: self.block_rows,
+            c_in: self.block_cols,
+            u,
+            sigma: Spectrum {
+                n: self.nc,
+                m: self.mc,
+                c_out: self.block_rows,
+                c_in: self.block_cols,
+                values,
+            },
+            v,
+        }
+    }
+
+    /// Materialize the symbol grid in the plan's layout (stride 1 only) —
+    /// the `s_F` stage of the timed Table III/IV pipelines and the input to
+    /// spectral-transfer reconstruction.
+    pub fn compute_symbols(&self) -> SymbolGrid {
+        assert_eq!(self.stride, 1, "symbol grids are only defined for stride 1");
+        let (cout, cin) = (self.kernel.c_out, self.kernel.c_in);
+        let block_len = cout * cin;
+        let mut grid = SymbolGrid::zeros(self.n, self.m, cout, cin, self.layout);
+        match self.layout {
+            BlockLayout::BlockContiguous => {
+                // The grid's buffer is already block-contiguous: fill it
+                // directly, sharded over rows.
+                let mut data = std::mem::take(&mut grid.data);
+                self.symbols_into(&mut data);
+                grid.data = data;
+            }
+            BlockLayout::PlanarStrided => {
+                let mut buf = vec![C64::ZERO; self.n * self.m * block_len];
+                self.symbols_into(&mut buf);
+                scatter_shard(&mut grid, 0, self.n, &buf);
+            }
+        }
+        grid
+    }
+
+    /// Fill `out` (`n·m·c_out·c_in` long) with all symbols in
+    /// block-contiguous order, sharded across the plan's workers.
+    fn symbols_into(&self, out: &mut [C64]) {
+        debug_assert_eq!(self.stride, 1);
+        let block_len = self.block_rows * self.block_cols;
+        let threads = self.effective_threads();
+        if threads <= 1 || self.nc <= 1 {
+            let mut ws = self.checkout();
+            self.symbol_rows(0, self.n, &mut ws, out);
+            self.restore(ws);
+            return;
+        }
+        let rows_per = self.n.div_ceil(threads);
+        let row_elems = self.m * block_len;
+        std::thread::scope(|scope| {
+            let mut rest: &mut [C64] = out;
+            let mut lo = 0usize;
+            while lo < self.n {
+                let hi = (lo + rows_per).min(self.n);
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut((hi - lo) * row_elems);
+                rest = tail;
+                scope.spawn(move || {
+                    let mut ws = self.checkout();
+                    self.symbol_rows(lo, hi, &mut ws, head);
+                    self.restore(ws);
+                });
+                lo = hi;
+            }
+        });
+    }
+
+    /// Symbols for rows `[row_lo, row_hi)`, block-contiguous into `out`.
+    fn symbol_rows(&self, row_lo: usize, row_hi: usize, ws: &mut Workspace, out: &mut [C64]) {
+        let block_len = self.block_rows * self.block_cols;
+        for ki in row_lo..row_hi {
+            for kj in 0..self.mc {
+                self.fill_block(ki, kj, ws);
+                let f = (ki - row_lo) * self.mc + kj;
+                out[f * block_len..(f + 1) * block_len].copy_from_slice(&ws.block);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lfa::symbol::symbol_at;
+    use crate::numeric::Pcg64;
+
+    fn jacobi_block(b: &CMat) -> Vec<f64> {
+        crate::linalg::jacobi_svd::singular_values(b)
+    }
+
+    #[test]
+    fn plan_matches_per_frequency_reference() {
+        let mut rng = Pcg64::seeded(600);
+        let k = ConvKernel::random_he(3, 2, 3, 3, &mut rng);
+        let (n, m) = (5, 7);
+        let plan = SpectralPlan::new(&k, n, m, LfaOptions { threads: 1, ..Default::default() });
+        let got = plan.execute();
+        for ki in 0..n {
+            for kj in 0..m {
+                let want = jacobi_block(&symbol_at(&k, n, m, ki, kj));
+                let at = got.at(ki * m + kj);
+                for (a, b) in want.iter().take(at.len()).zip(at) {
+                    assert!((a - b).abs() < 1e-12, "({ki},{kj}): {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_reuse_is_deterministic() {
+        let mut rng = Pcg64::seeded(601);
+        let k = ConvKernel::random_he(4, 4, 3, 3, &mut rng);
+        let plan = SpectralPlan::new(&k, 8, 8, LfaOptions { threads: 2, ..Default::default() });
+        let a = plan.execute();
+        let b = plan.execute();
+        assert_eq!(a.values, b.values, "repeated execution must be bitwise identical");
+    }
+
+    #[test]
+    fn materialized_symbols_match_fused_path() {
+        let mut rng = Pcg64::seeded(602);
+        let k = ConvKernel::random_he(2, 3, 3, 3, &mut rng);
+        let plan = SpectralPlan::new(&k, 6, 4, LfaOptions { threads: 1, ..Default::default() });
+        let grid = plan.compute_symbols();
+        for ki in 0..6 {
+            for kj in 0..4 {
+                let want = symbol_at(&k, 6, 4, ki, kj);
+                let gotb = grid.block(ki * 4 + kj);
+                assert!(gotb.max_abs_diff(&want) < 1e-12, "({ki},{kj})");
+            }
+        }
+    }
+}

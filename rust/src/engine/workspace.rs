@@ -1,0 +1,82 @@
+//! Per-worker scratch for the planned execution core.
+//!
+//! A [`Workspace`] owns everything a worker needs to turn one frequency into
+//! its singular values: the symbol block buffer, the per-tap phase scratch,
+//! and the solver work matrices (one-sided Jacobi row form, Gram/eigen work
+//! matrix). All buffers are sized once — either at plan construction or on a
+//! worker's first block — so the per-frequency hot loop performs **zero heap
+//! allocation**. Workspaces live in the plan's pool (see
+//! [`super::SpectralPlan`]) and are checked out per execution range, which
+//! makes repeated `execute()` calls on one plan allocation-free end to end.
+
+use crate::lfa::svd::BlockSolver;
+use crate::linalg::jacobi_eig::{self, GramScratch};
+use crate::linalg::jacobi_svd::{self, JacobiScratch};
+use crate::numeric::C64;
+
+/// Reusable per-worker scratch buffers for block symbol + SVD work.
+pub struct Workspace {
+    /// Row-major `block_rows×block_cols` symbol block under construction.
+    pub block: Vec<C64>,
+    /// Per-tap phase factors `e^{2πi⟨k,y⟩}`, `kh·kw` long.
+    pub tap_phase: Vec<C64>,
+    /// One-sided Jacobi work matrices.
+    pub jacobi: JacobiScratch,
+    /// Gram-route work matrix (ablation solver).
+    pub gram: GramScratch,
+}
+
+impl Workspace {
+    /// Workspace pre-sized for `rows×cols` blocks with `ntaps` kernel taps.
+    pub fn for_block(rows: usize, cols: usize, ntaps: usize) -> Self {
+        let mut jacobi = JacobiScratch::new();
+        jacobi.reserve(rows, cols);
+        let mut gram = GramScratch::new();
+        gram.reserve(rows, cols);
+        Self {
+            block: vec![C64::ZERO; rows * cols],
+            tap_phase: vec![C64::ZERO; ntaps.max(1)],
+            jacobi,
+            gram,
+        }
+    }
+
+    /// Singular values (descending) of the current contents of `self.block`,
+    /// interpreted as a row-major `rows×cols` matrix, written into `out`
+    /// (`min(rows, cols)` long). Allocation-free.
+    #[inline]
+    pub fn solve_block(&mut self, solver: BlockSolver, rows: usize, cols: usize, out: &mut [f64]) {
+        match solver {
+            BlockSolver::Jacobi => {
+                jacobi_svd::singular_values_into(&self.block, rows, cols, &mut self.jacobi, out)
+            }
+            BlockSolver::GramEigen => {
+                jacobi_eig::singular_values_gram_into(&self.block, rows, cols, &mut self.gram, out)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::{CMat, Pcg64};
+
+    #[test]
+    fn solve_block_matches_direct_solvers() {
+        let mut rng = Pcg64::seeded(500);
+        let a = CMat::random_normal(4, 3, &mut rng);
+        let mut ws = Workspace::for_block(4, 3, 9);
+        ws.block.copy_from_slice(&a.data);
+        let mut got = vec![0.0f64; 3];
+        ws.solve_block(BlockSolver::Jacobi, 4, 3, &mut got);
+        let want = crate::linalg::jacobi_svd::singular_values(&a);
+        for (x, y) in want.iter().zip(&got) {
+            assert!((x - y).abs() < 1e-12);
+        }
+        ws.solve_block(BlockSolver::GramEigen, 4, 3, &mut got);
+        for (x, y) in want.iter().zip(&got) {
+            assert!((x - y).abs() < 1e-7);
+        }
+    }
+}

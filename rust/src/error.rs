@@ -1,0 +1,150 @@
+//! Minimal error handling for the offline crate set (no `anyhow`).
+//!
+//! The whole system reports failures as human-readable strings with context
+//! chains — there is no error taxonomy to match on, so a single string-backed
+//! [`Error`] plus the [`Context`] extension trait covers every call site.
+//! The [`crate::err!`] and [`crate::bail!`] macros mirror the `anyhow!` /
+//! `bail!` idiom so call sites read the same as they would with the crate.
+
+use std::fmt;
+
+/// A string-backed error with a context chain folded into the message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into() }
+    }
+
+    /// Prepend a context line, `anyhow::Context`-style.
+    pub fn context(self, msg: impl fmt::Display) -> Self {
+        Self { msg: format!("{msg}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Self {
+        Self { msg }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Self {
+        Self { msg: msg.to_string() }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Self { msg: e.to_string() }
+    }
+}
+
+/// Crate-wide result alias (defaults to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`-alike for `Result` and `Option`.
+pub trait Context<T> {
+    /// Attach a fixed context message.
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    /// Attach a lazily-built context message.
+    fn with_context<S: fmt::Display>(self, f: impl FnOnce() -> S) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context<S: fmt::Display>(self, f: impl FnOnce() -> S) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg.to_string()))
+    }
+
+    fn with_context<S: fmt::Display>(self, f: impl FnOnce() -> S) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string: `err!("bad {x}")`.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`]: `bail!("bad {x}")`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(err!("inner {}", 42))
+    }
+
+    #[test]
+    fn macros_and_context_chain() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner 42");
+        let e2 = fails().with_context(|| format!("step {}", 1)).unwrap_err();
+        assert_eq!(e2.to_string(), "step 1: inner 42");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u8> = None;
+        assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(3u8).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn bail_returns() {
+        fn f(x: u8) -> Result<u8> {
+            if x == 0 {
+                bail!("zero");
+            }
+            Ok(x)
+        }
+        assert!(f(0).is_err());
+        assert_eq!(f(2).unwrap(), 2);
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/path")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+}

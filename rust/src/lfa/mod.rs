@@ -1,11 +1,16 @@
 //! Local Fourier Analysis of convolutional mappings — the paper's core
 //! contribution.
 //!
-//! - [`symbol`]: symbol computation `A_k = Σ_y M_y e^{2πi⟨k,y⟩}` (Algorithm
-//!   1 line 5), phase-factored, tile-shardable, with layout control.
+//! - [`symbol`]: the [`SymbolGrid`] container, the per-frequency reference
+//!   `A_k = Σ_y M_y e^{2πi⟨k,y⟩}` (Algorithm 1 line 5), and the inverse
+//!   transform back to weight taps.
 //! - [`spectrum`]: spectra and full per-frequency SVD containers.
 //! - [`svd`]: the end-to-end pipeline with stage timing (Tables II–IV) and
 //!   spectral transfer functions for the application modules.
+//! - [`stride`]: the crystal-torus strided machinery (§III).
+//!
+//! All pipelines here execute through the planned core in
+//! [`crate::engine`]; these modules define the math and the public API.
 
 pub mod spectrum;
 pub mod stride;
@@ -13,7 +18,7 @@ pub mod svd;
 pub mod symbol;
 
 pub use spectrum::{FullSvd, Spectrum};
-pub use stride::{strided_singular_values, strided_symbol_at};
+pub use stride::{strided_plan, strided_singular_values, strided_symbol_at};
 pub use svd::{
     singular_values, singular_values_timed, svd_full, tile_singular_values, BlockSolver,
     LfaOptions, StageTiming,

@@ -19,7 +19,7 @@
 use super::spectrum::Spectrum;
 use super::symbol::symbol_at;
 use crate::conv::ConvKernel;
-use crate::linalg::jacobi_svd;
+use crate::engine::SpectralPlan;
 use crate::numeric::CMat;
 
 /// The symbol of the stride-`s` convolution at coarse frequency
@@ -58,20 +58,26 @@ pub fn strided_symbol_at(
 
 /// All singular values of the stride-`s` convolution on an `n×m` fine grid
 /// (output grid `(n/s)×(m/s)`), grouped per coarse frequency, descending.
+///
+/// Thin wrapper over [`SpectralPlan::with_stride`]: the plan folds the
+/// `s²`-fold frequency aliasing into its block geometry and runs the same
+/// planned, allocation-free symbol→SVD loop as the dense path. Use
+/// [`strided_plan`] directly for repeated spectra of one layer.
 pub fn strided_singular_values(kernel: &ConvKernel, n: usize, m: usize, s: usize) -> Spectrum {
-    assert!(s > 0 && n % s == 0 && m % s == 0, "stride must divide the grid");
-    let (nc, mc) = (n / s, m / s);
-    let r = kernel.c_out.min(s * s * kernel.c_in);
-    let mut values = vec![0.0f64; nc * mc * r];
-    for ki in 0..nc {
-        for kj in 0..mc {
-            let block = strided_symbol_at(kernel, n, m, s, ki, kj);
-            let sv = jacobi_svd::singular_values(&block);
-            let f = ki * mc + kj;
-            values[f * r..(f + 1) * r].copy_from_slice(&sv[..r]);
-        }
-    }
-    Spectrum { n: nc, m: mc, c_out: kernel.c_out, c_in: s * s * kernel.c_in, values }
+    strided_plan(kernel, n, m, s, Default::default()).execute()
+}
+
+/// Plan the stride-`s` pipeline for repeated execution (plan once, execute
+/// many — e.g. per-step spectral norms of a strided encoder during
+/// training).
+pub fn strided_plan(
+    kernel: &ConvKernel,
+    n: usize,
+    m: usize,
+    s: usize,
+    opts: crate::lfa::LfaOptions,
+) -> SpectralPlan {
+    SpectralPlan::with_stride(kernel, n, m, s, opts)
 }
 
 /// Dense unrolled matrix of the strided convolution (ground truth for the

@@ -1,13 +1,20 @@
 //! The LFA SVD pipeline (Algorithm 1 of the paper): symbols → per-frequency
 //! SVD → full spectrum, with a timed variant that separates the two stages
 //! exactly as Tables III/IV do (`s_F` vs `s_SVD`).
+//!
+//! Every entry point here is a thin wrapper over the planned execution core
+//! in [`crate::engine`]: a [`SpectralPlan`] is built (phase tables +
+//! workspace pool), executed, and dropped. Callers that compute the same
+//! layer's spectrum repeatedly (training-loop clipping, repeated audits)
+//! should hold a [`SpectralPlan`] themselves and call `execute()` on it —
+//! plan-once/execute-many skips the planning cost and all per-call
+//! allocation.
 
 use super::spectrum::{FullSvd, Spectrum};
-use super::symbol::{
-    compute_symbols_parallel, compute_symbols_shard, BlockLayout, SymbolGrid,
-};
+use super::symbol::{BlockLayout, SymbolGrid};
 use crate::conv::ConvKernel;
-use crate::linalg::{jacobi_eig, jacobi_svd};
+use crate::engine::{SpectralPlan, Workspace};
+use crate::linalg::jacobi_svd;
 use crate::numeric::{C64, CMat};
 use std::time::{Duration, Instant};
 
@@ -26,13 +33,15 @@ pub enum BlockSolver {
 pub struct LfaOptions {
     pub layout: BlockLayout,
     pub solver: BlockSolver,
-    /// Worker threads (1 = serial). Frequencies are embarrassingly parallel.
+    /// Worker threads: `0` = auto (`available_parallelism`), `1` = serial.
+    /// Frequencies are embarrassingly parallel. The same convention applies
+    /// in the scheduler and the CLI (see [`crate::engine::resolve_threads`]).
     pub threads: usize,
 }
 
 impl Default for LfaOptions {
     fn default() -> Self {
-        Self { layout: BlockLayout::BlockContiguous, solver: BlockSolver::Jacobi, threads: 1 }
+        Self { layout: BlockLayout::BlockContiguous, solver: BlockSolver::Jacobi, threads: 0 }
     }
 }
 
@@ -54,19 +63,25 @@ impl StageTiming {
 }
 
 /// Singular values of the convolution on an `n×m` grid via LFA.
+///
+/// Builds a [`SpectralPlan`] and executes it once (fused symbol→SVD, no
+/// intermediate symbol grid). Hold a plan yourself for repeated spectra.
 pub fn singular_values(kernel: &ConvKernel, n: usize, m: usize, opts: LfaOptions) -> Spectrum {
-    singular_values_timed(kernel, n, m, opts).0
+    SpectralPlan::new(kernel, n, m, opts).execute()
 }
 
-/// Timed variant separating `s_F` and `s_SVD` (Table III).
+/// Timed variant separating `s_F` and `s_SVD` (Table III). Unlike
+/// [`singular_values`] this materializes the symbol grid between the stages
+/// so the two timings are observable — exactly the paper's measurement.
 pub fn singular_values_timed(
     kernel: &ConvKernel,
     n: usize,
     m: usize,
     opts: LfaOptions,
 ) -> (Spectrum, StageTiming) {
+    let plan = SpectralPlan::new(kernel, n, m, opts);
     let t0 = Instant::now();
-    let grid = compute_symbols_parallel(kernel, n, m, opts.layout, opts.threads);
+    let grid = plan.compute_symbols();
     let transform = t0.elapsed();
     let t1 = Instant::now();
     let values = svd_pass(&grid, opts);
@@ -79,34 +94,32 @@ pub fn singular_values_timed(
 
 /// Run the per-block singular value pass over an existing symbol grid.
 /// Exposed so the FFT baseline can share the identical SVD stage (keeping
-/// the Table III comparison honest: only the transform differs).
+/// the Table III comparison honest: only the transform differs). Uses the
+/// same per-worker [`Workspace`]s as the planned path — one scratch set per
+/// worker, zero allocation per frequency.
 pub fn svd_pass(grid: &SymbolGrid, opts: LfaOptions) -> Vec<f64> {
     let r = grid.c_out.min(grid.c_in);
     let freqs = grid.freqs();
     let mut values = vec![0.0f64; freqs * r];
-    if opts.threads <= 1 {
-        svd_pass_range(grid, opts.solver, 0, freqs, &mut values);
+    let threads = crate::engine::resolve_threads(opts.threads).min(freqs.max(1));
+    if threads <= 1 {
+        let mut ws = Workspace::for_block(grid.c_out, grid.c_in, 1);
+        svd_pass_range(grid, opts.solver, 0, freqs, &mut ws, &mut values);
         return values;
     }
-    let threads = opts.threads.min(freqs.max(1));
     let chunk = freqs.div_ceil(threads);
-    let mut slices: Vec<(usize, usize, &mut [f64])> = Vec::new();
-    let mut rest: &mut [f64] = &mut values;
-    let mut lo = 0usize;
-    while lo < freqs {
-        let hi = (lo + chunk).min(freqs);
-        let (head, tail) = rest.split_at_mut((hi - lo) * r);
-        slices.push((lo, hi, head));
-        rest = tail;
-        lo = hi;
-    }
     std::thread::scope(|s| {
-        for (lo, hi, slice) in slices {
+        let mut rest: &mut [f64] = &mut values;
+        let mut lo = 0usize;
+        while lo < freqs {
+            let hi = (lo + chunk).min(freqs);
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut((hi - lo) * r);
+            rest = tail;
             s.spawn(move || {
-                let mut local = vec![0.0f64; (hi - lo) * r];
-                svd_pass_range(grid, opts.solver, lo, hi, &mut local);
-                slice.copy_from_slice(&local);
+                let mut ws = Workspace::for_block(grid.c_out, grid.c_in, 1);
+                svd_pass_range(grid, opts.solver, lo, hi, &mut ws, head);
             });
+            lo = hi;
         }
     });
     values
@@ -118,24 +131,20 @@ fn svd_pass_range(
     solver: BlockSolver,
     f_lo: usize,
     f_hi: usize,
+    ws: &mut Workspace,
     out: &mut [f64],
 ) {
     let r = grid.c_out.min(grid.c_in);
-    let mut block = CMat::zeros(grid.c_out, grid.c_in);
     for f in f_lo..f_hi {
-        grid.block_into(f, &mut block.data);
-        let vals = match solver {
-            BlockSolver::Jacobi => jacobi_svd::singular_values(&block),
-            BlockSolver::GramEigen => jacobi_eig::singular_values_gram(&block),
-        };
-        out[(f - f_lo) * r..(f - f_lo + 1) * r].copy_from_slice(&vals[..r]);
+        grid.block_into(f, &mut ws.block);
+        let dst = &mut out[(f - f_lo) * r..(f - f_lo + 1) * r];
+        ws.solve_block(solver, grid.c_out, grid.c_in, dst);
     }
 }
 
 /// Full SVD with per-frequency factors `U_k, Σ_k, V_k`.
 pub fn svd_full(kernel: &ConvKernel, n: usize, m: usize, opts: LfaOptions) -> FullSvd {
-    let grid = compute_symbols_parallel(kernel, n, m, opts.layout, opts.threads);
-    svd_full_from_grid(&grid)
+    SpectralPlan::new(kernel, n, m, opts).execute_full()
 }
 
 /// Full SVD from an existing symbol grid.
@@ -163,10 +172,15 @@ pub fn svd_full_from_grid(grid: &SymbolGrid) -> FullSvd {
     }
 }
 
-/// Streaming interface for the coordinator: compute the singular values for
-/// the frequency-row tile `[row_lo, row_hi)` only, returning
-/// `(row_hi−row_lo)·m·r` values. Symbols for the tile are computed on the
-/// fly and discarded — memory stays proportional to the tile.
+/// Streaming interface: compute the singular values for the frequency-row
+/// tile `[row_lo, row_hi)` only, returning `(row_hi−row_lo)·m·r` values.
+/// Symbols for the tile are computed on the fly and discarded — memory
+/// stays proportional to the tile.
+///
+/// NOTE: this builds a throwaway plan per call. The coordinator shares one
+/// [`SpectralPlan`] across all of a job's tiles instead (see
+/// `coordinator::scheduler`), which is the right shape whenever more than
+/// one tile of the same layer is computed.
 pub fn tile_singular_values(
     kernel: &ConvKernel,
     n: usize,
@@ -175,21 +189,11 @@ pub fn tile_singular_values(
     row_hi: usize,
     solver: BlockSolver,
 ) -> Vec<f64> {
-    let shard = compute_symbols_shard(kernel, n, m, row_lo, row_hi);
-    let (cout, cin) = (kernel.c_out, kernel.c_in);
-    let block_len = cout * cin;
-    let r = cout.min(cin);
-    let freqs = (row_hi - row_lo) * m;
-    let mut values = vec![0.0f64; freqs * r];
-    let mut block = CMat::zeros(cout, cin);
-    for f in 0..freqs {
-        block.data.copy_from_slice(&shard[f * block_len..(f + 1) * block_len]);
-        let vals = match solver {
-            BlockSolver::Jacobi => jacobi_svd::singular_values(&block),
-            BlockSolver::GramEigen => jacobi_eig::singular_values_gram(&block),
-        };
-        values[f * r..(f + 1) * r].copy_from_slice(&vals[..r]);
-    }
+    let plan =
+        SpectralPlan::new(kernel, n, m, LfaOptions { solver, threads: 1, ..Default::default() });
+    let r = kernel.c_out.min(kernel.c_in);
+    let mut values = vec![0.0f64; (row_hi - row_lo) * m * r];
+    plan.execute_rows_pooled(row_lo, row_hi, &mut values);
     values
 }
 
@@ -253,6 +257,7 @@ pub fn block_singular_values(block_data: &[C64], c_out: usize, c_in: usize) -> V
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::lfa::symbol::compute_symbols_parallel;
     use crate::numeric::Pcg64;
 
     #[test]

@@ -17,6 +17,12 @@
 //! 2. **Block-contiguous output**: symbols are written row-major per block,
 //!    which Table IV shows is exactly the layout the downstream SVD wants —
 //!    LFA gets it for free, the FFT does not.
+//!
+//! Since the [`crate::engine`] refactor the phase tables live in the
+//! [`crate::engine::SpectralPlan`] (computed once per plan, reused across
+//! executions); the grid builders here are thin wrappers over it. This
+//! module keeps the [`SymbolGrid`] container, the per-frequency reference
+//! [`symbol_at`], and the inverse transform [`taps_from_symbols`].
 
 use crate::conv::ConvKernel;
 use crate::numeric::{C64, CMat};
@@ -202,67 +208,12 @@ pub fn symbol_at(kernel: &ConvKernel, n: usize, m: usize, ki: usize, kj: usize) 
 }
 
 /// Compute all `n·m` symbols (single-threaded). See
-/// [`compute_symbols_parallel`] for the multi-core version the coordinator
-/// uses.
+/// [`compute_symbols_parallel`] for the multi-core version.
+///
+/// Thin wrapper over [`crate::engine::SpectralPlan::compute_symbols`] — the
+/// phase tables live in the plan; this builds a throwaway plan per call.
 pub fn compute_symbols(kernel: &ConvKernel, n: usize, m: usize, layout: BlockLayout) -> SymbolGrid {
-    let mut grid = SymbolGrid::zeros(n, m, kernel.c_out, kernel.c_in, layout);
-    let shard = compute_symbols_shard(kernel, n, m, 0, n);
-    scatter_shard(&mut grid, 0, n, &shard);
-    grid
-}
-
-/// Compute the symbols for frequency rows `[row_lo, row_hi)` into a
-/// block-contiguous shard buffer of length `(row_hi−row_lo)·m·c_out·c_in`.
-/// This is the unit of work the tile scheduler shards — frequencies are
-/// independent ("embarrassingly parallel", §V).
-pub fn compute_symbols_shard(
-    kernel: &ConvKernel,
-    n: usize,
-    m: usize,
-    row_lo: usize,
-    row_hi: usize,
-) -> Vec<C64> {
-    let (kh, kw) = (kernel.kh, kernel.kw);
-    let (cout, cin) = (kernel.c_out, kernel.c_in);
-    let (ar, ac) = (kernel.anchor.0 as isize, kernel.anchor.1 as isize);
-    let row_offsets: Vec<isize> = (0..kh as isize).map(|r| r - ar).collect();
-    let col_offsets: Vec<isize> = (0..kw as isize).map(|c| c - ac).collect();
-    // Phase separability: 1-D tables once per call, O(n·kh + m·kw) trig.
-    let py = phase_table(n, &row_offsets);
-    let px = phase_table(m, &col_offsets);
-
-    // Per-tap phase scratch, reused across frequencies.
-    let ntaps = kh * kw;
-    let mut tap_phase = vec![C64::ZERO; ntaps];
-    let block_len = cout * cin;
-    let mut out = vec![C64::ZERO; (row_hi - row_lo) * m * block_len];
-
-    for i in row_lo..row_hi {
-        for j in 0..m {
-            // Combine the two 1-D tables into per-tap phases.
-            for r in 0..kh {
-                let pyr = py[r][i];
-                for c in 0..kw {
-                    tap_phase[r * kw + c] = pyr * px[c][j];
-                }
-            }
-            let f_local = (i - row_lo) * m + j;
-            let block = &mut out[f_local * block_len..(f_local + 1) * block_len];
-            // Contract taps against the weight tensor. The kernel's OIHW
-            // layout makes `taps` the innermost stride — walk it linearly.
-            for (p, bv) in block.iter_mut().enumerate() {
-                // p = o·c_in + ic; weights for this (o, ic) are contiguous.
-                let w = &kernel.data[p * ntaps..(p + 1) * ntaps];
-                let mut acc = C64::ZERO;
-                for (wv, ph) in w.iter().zip(tap_phase.iter()) {
-                    acc.re += wv * ph.re;
-                    acc.im += wv * ph.im;
-                }
-                *bv = acc;
-            }
-        }
-    }
-    out
+    compute_symbols_parallel(kernel, n, m, layout, 1)
 }
 
 /// Write a block-contiguous shard covering rows `[row_lo, row_hi)` into a
@@ -288,8 +239,9 @@ pub fn scatter_shard(grid: &mut SymbolGrid, row_lo: usize, row_hi: usize, shard:
     }
 }
 
-/// Multi-threaded symbol computation: shards frequency rows across
-/// `threads` workers with `std::thread::scope` (no runtime dependencies).
+/// Multi-threaded symbol computation (`threads == 0` = auto): thin wrapper
+/// over [`crate::engine::SpectralPlan::compute_symbols`], which shards
+/// frequency rows across scoped workers against the planned phase tables.
 pub fn compute_symbols_parallel(
     kernel: &ConvKernel,
     n: usize,
@@ -297,35 +249,10 @@ pub fn compute_symbols_parallel(
     layout: BlockLayout,
     threads: usize,
 ) -> SymbolGrid {
-    let threads = threads.max(1).min(n.max(1));
-    if threads == 1 {
-        return compute_symbols(kernel, n, m, layout);
-    }
-    let mut grid = SymbolGrid::zeros(n, m, kernel.c_out, kernel.c_in, layout);
-    let rows_per = n.div_ceil(threads);
-    let mut bounds = Vec::new();
-    let mut lo = 0usize;
-    while lo < n {
-        let hi = (lo + rows_per).min(n);
-        bounds.push((lo, hi));
-        lo = hi;
-    }
-    let mut shards: Vec<(usize, usize, Vec<C64>)> = Vec::with_capacity(bounds.len());
-    std::thread::scope(|s| {
-        let handles: Vec<_> = bounds
-            .iter()
-            .map(|&(lo, hi)| {
-                s.spawn(move || (lo, hi, compute_symbols_shard(kernel, n, m, lo, hi)))
-            })
-            .collect();
-        for h in handles {
-            shards.push(h.join().expect("symbol worker panicked"));
-        }
-    });
-    for (lo, hi, shard) in shards {
-        scatter_shard(&mut grid, lo, hi, &shard);
-    }
-    grid
+    use crate::engine::SpectralPlan;
+    use crate::lfa::svd::LfaOptions;
+    let opts = LfaOptions { layout, threads, ..Default::default() };
+    SpectralPlan::new(kernel, n, m, opts).compute_symbols()
 }
 
 /// Inverse transform: recover the multiplication operators `M_y` (i.e. the

@@ -10,12 +10,65 @@
 //! complex matrix, and the SVDs of all `n·m` symbols together form the full
 //! SVD of `A` in `O(n·m·c³)` — a `log n` factor better than the FFT route
 //! (Sedghi et al. 2019) and embarrassingly parallel across frequencies.
+//!
+//! ## Architecture: three layers around one engine
+//!
+//! At the center sits [`engine::SpectralPlan`] — the planned,
+//! allocation-free execution core. A plan is built once per
+//! `(kernel, grid, stride, layout, solver, threads)` and executed many
+//! times: it precomputes the twiddle/phase tables, owns pooled per-worker
+//! scratch workspaces, and fuses symbol computation with the per-frequency
+//! SVD so nothing is allocated per frequency. See `ARCHITECTURE.md` for the
+//! full picture.
+//!
+//! - **L1 — numeric/linalg primitives**: [`numeric`] (complex arithmetic,
+//!   layout-aware matrices, deterministic PRNG), [`linalg`] (one-sided
+//!   Jacobi SVD with reusable scratch, Hermitian Jacobi eigensolver,
+//!   Golub–Reinsch reference SVD, QR, power iteration), [`fft`].
+//! - **L2 — LFA core**: [`engine`] (the plan + backends), [`lfa`] (symbols,
+//!   spectra, strided crystal-torus machinery — thin wrappers over the
+//!   engine), [`conv`], [`baselines`] (FFT/explicit routes sharing the
+//!   engine's SVD stage), [`spectral`] (clipping, low-rank compression,
+//!   pseudo-inverse — consumers of the planned `FullSvd`).
+//! - **L3 — coordinator/service**: [`coordinator`] (frequency-tile
+//!   scheduler whose tiles execute against one shared plan per job,
+//!   metrics, the [`coordinator::SpectralService`] API), [`runtime`]
+//!   (AOT artifact manifest; PJRT execution behind the off-by-default
+//!   `pjrt` feature), [`cli`] / [`model`] / [`report`] around them.
+//!
+//! Thread counts follow one convention everywhere (`lfa`, scheduler, CLI):
+//! `0` means auto (`available_parallelism`); see
+//! [`engine::resolve_threads`].
+//!
+//! ## Quick start
+//!
+//! ```
+//! use conv_svd_lfa::conv::ConvKernel;
+//! use conv_svd_lfa::engine::SpectralPlan;
+//! use conv_svd_lfa::lfa::LfaOptions;
+//! use conv_svd_lfa::numeric::Pcg64;
+//!
+//! let mut rng = Pcg64::seeded(7);
+//! let kernel = ConvKernel::random_he(4, 4, 3, 3, &mut rng);
+//! // Plan once …
+//! let plan = SpectralPlan::new(&kernel, 16, 16, LfaOptions::default());
+//! // … execute many times (training-loop clipping, repeated audits).
+//! let spectrum = plan.execute();
+//! assert_eq!(spectrum.num_values(), 16 * 16 * 4);
+//! assert!(spectrum.sigma_max() > 0.0);
+//! ```
+
+// The codebase favors explicit index loops that mirror the paper's sums;
+// these lints are stylistic there, not defects.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 pub mod cli;
+pub mod error;
 pub mod numeric;
 pub mod linalg;
 pub mod fft;
 pub mod conv;
+pub mod engine;
 pub mod lfa;
 pub mod baselines;
 pub mod spectral;
@@ -26,4 +79,6 @@ pub mod report;
 pub mod bench_util;
 pub mod testing;
 
+pub use engine::{SpectralBackend, SpectralPlan};
+pub use error::{Error, Result};
 pub use numeric::{c64, C64, CMat, Layout, Mat, Pcg64};

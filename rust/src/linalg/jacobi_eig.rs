@@ -113,6 +113,125 @@ pub fn singular_values_gram(a: &CMat) -> Vec<f64> {
     eigenvalues(&g).into_iter().map(|l| l.max(0.0).sqrt()).collect()
 }
 
+/// Reusable scratch for [`singular_values_gram_into`]: the Gram work matrix,
+/// diagonalized in place. Owned per worker by the [`crate::engine`]
+/// workspaces (Gram-route ablation of the planned pipeline).
+#[derive(Default)]
+pub struct GramScratch {
+    g: Vec<C64>,
+}
+
+impl GramScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pre-size for `rows×cols` blocks so the first solve does not allocate.
+    pub fn reserve(&mut self, rows: usize, cols: usize) {
+        let k = rows.min(cols);
+        self.g.resize(k * k, C64::ZERO);
+    }
+}
+
+/// Allocation-free Gram-route singular values on a raw row-major block.
+///
+/// `a` is `rows×cols` row-major; the `min(rows, cols)` descending singular
+/// values are written into `out`. Forms the smaller of `AᴴA` / `AAᴴ` in the
+/// scratch buffer and diagonalizes it in place; after `scratch` has seen a
+/// block of this shape once, the call performs no heap allocation.
+pub fn singular_values_gram_into(
+    a: &[C64],
+    rows: usize,
+    cols: usize,
+    scratch: &mut GramScratch,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(a.len(), rows * cols);
+    let k = rows.min(cols);
+    debug_assert_eq!(out.len(), k);
+    scratch.g.resize(k * k, C64::ZERO);
+    let g = &mut scratch.g[..];
+    if rows >= cols {
+        // G = AᴴA (cols×cols), exploiting Hermitian symmetry.
+        for p in 0..k {
+            for q in p..k {
+                let mut acc = C64::ZERO;
+                for i in 0..rows {
+                    acc = acc.mul_add(a[i * cols + p].conj(), a[i * cols + q]);
+                }
+                g[p * k + q] = acc;
+                g[q * k + p] = acc.conj();
+            }
+        }
+    } else {
+        // G = AAᴴ (rows×rows).
+        for p in 0..k {
+            for q in p..k {
+                let mut acc = C64::ZERO;
+                for j in 0..cols {
+                    acc = acc.mul_add(a[p * cols + j], a[q * cols + j].conj());
+                }
+                g[p * k + q] = acc;
+                g[q * k + p] = acc.conj();
+            }
+        }
+    }
+    diagonalize_in_place(g, k);
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = g[j * k + j].re.max(0.0).sqrt();
+    }
+    out.sort_unstable_by(|x, y| y.partial_cmp(x).unwrap());
+}
+
+/// Cyclic two-sided Jacobi sweeps on a flat row-major Hermitian `n×n`
+/// matrix, eigenvalues left on the diagonal (unsorted). Identical rotation
+/// schedule and formulas to [`eigh`], minus the eigenvector accumulation.
+fn diagonalize_in_place(g: &mut [C64], n: usize) {
+    debug_assert_eq!(g.len(), n * n);
+    for _sweep in 0..MAX_SWEEPS {
+        let mut off = 0.0f64;
+        for p in 0..n.saturating_sub(1) {
+            for q in p + 1..n {
+                let apq = g[p * n + q];
+                let mag = apq.abs();
+                let scale = (g[p * n + p].re.abs() + g[q * n + q].re.abs()).max(1e-300);
+                if mag / scale <= TOL {
+                    continue;
+                }
+                off = off.max(mag / scale);
+                let phase = apq.scale(1.0 / mag); // e^{iφ}
+                let app = g[p * n + p].re;
+                let aqq = g[q * n + q].re;
+                let tau = (aqq - app) / (2.0 * mag);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                let se_pos = phase.scale(s); // s·e^{iφ}
+                let se_neg = phase.conj().scale(s); // s·e^{−iφ}
+                for i in 0..n {
+                    let aip = g[i * n + p];
+                    let aiq = g[i * n + q];
+                    g[i * n + p] = aip.scale(c) - aiq * se_neg;
+                    g[i * n + q] = aip * se_pos + aiq.scale(c);
+                }
+                for j in 0..n {
+                    let apj = g[p * n + j];
+                    let aqj = g[q * n + j];
+                    g[p * n + j] = apj.scale(c) - aqj * se_pos;
+                    g[q * n + j] = apj * se_neg + aqj.scale(c);
+                }
+            }
+        }
+        if off <= TOL {
+            break;
+        }
+    }
+}
+
 fn hermitian_defect(h: &CMat) -> f64 {
     let mut worst = 0.0f64;
     for i in 0..h.rows {
@@ -188,6 +307,21 @@ mod tests {
         let tr: f64 = (0..6).map(|i| h[(i, i)].re).sum();
         let l = eigenvalues(&h);
         assert!((l.iter().sum::<f64>() - tr).abs() < 1e-10);
+    }
+
+    #[test]
+    fn gram_scratch_matches_allocating_path() {
+        let mut rng = Pcg64::seeded(44);
+        let mut ws = GramScratch::new();
+        for &(m, n) in &[(5usize, 5usize), (7, 4), (4, 7), (1, 3), (3, 1)] {
+            let a = CMat::random_normal(m, n, &mut rng);
+            let want = singular_values_gram(&a);
+            let mut got = vec![0.0f64; m.min(n)];
+            singular_values_gram_into(&a.data, m, n, &mut ws, &mut got);
+            for (x, y) in want.iter().take(got.len()).zip(&got) {
+                assert!((x - y).abs() < 1e-8, "{m}x{n}: {x} vs {y}");
+            }
+        }
     }
 
     #[test]

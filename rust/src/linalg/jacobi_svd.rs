@@ -21,6 +21,28 @@ pub struct CSvd {
 const MAX_SWEEPS: usize = 40;
 const TOL: f64 = 1e-12;
 
+/// Reusable scratch for [`singular_values_into`]: the row-form work matrix
+/// and the incremental Gram-diagonal buffer. Owned per worker by the
+/// [`crate::engine`] workspaces so the per-frequency hot loop of a
+/// [`crate::engine::SpectralPlan`] performs **zero heap allocation**.
+#[derive(Default)]
+pub struct JacobiScratch {
+    b: Vec<C64>,
+    norms: Vec<f64>,
+}
+
+impl JacobiScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pre-size for `rows×cols` blocks so the first solve does not allocate.
+    pub fn reserve(&mut self, rows: usize, cols: usize) {
+        self.b.resize(rows * cols, C64::ZERO);
+        self.norms.resize(rows.min(cols), 0.0);
+    }
+}
+
 /// Singular values (descending) of a complex matrix via one-sided Jacobi.
 ///
 /// Orthogonalizes the columns of a working copy; the column norms at
@@ -39,8 +61,47 @@ pub fn singular_values(a: &CMat) -> Vec<f64> {
     let (mut b, n, m) = to_row_form(a);
     jacobi_rows(&mut b, n, m, None);
     let mut s: Vec<f64> = (0..n).map(|j| row_norm(&b[j * m..(j + 1) * m])).collect();
-    s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    s.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
     s
+}
+
+/// Allocation-free variant of [`singular_values`] on a raw row-major block.
+///
+/// `a` is `rows×cols` row-major; the `min(rows, cols)` descending singular
+/// values are written into `out`. After `scratch` has seen a block of this
+/// shape once, the call performs no heap allocation — this is the
+/// per-frequency hot path of the planned LFA pipeline.
+pub fn singular_values_into(
+    a: &[C64],
+    rows: usize,
+    cols: usize,
+    scratch: &mut JacobiScratch,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(a.len(), rows * cols);
+    let r = rows.min(cols);
+    debug_assert_eq!(out.len(), r);
+    // Row-form work matrix: `nvec` vectors of length `vlen`. For a tall (or
+    // square) block the vectors are the conjugated columns of A (B = Aᴴ);
+    // for a wide block the rows of A already are the conjugated columns of
+    // Aᴴ, so B = A verbatim — no recursion, no transpose copy.
+    let (nvec, vlen) = if rows >= cols { (cols, rows) } else { (rows, cols) };
+    scratch.b.resize(nvec * vlen, C64::ZERO);
+    scratch.norms.resize(nvec, 0.0);
+    if rows >= cols {
+        for j in 0..cols {
+            for i in 0..rows {
+                scratch.b[j * vlen + i] = a[i * cols + j].conj();
+            }
+        }
+    } else {
+        scratch.b.copy_from_slice(a);
+    }
+    jacobi_rows_with(&mut scratch.b, nvec, vlen, None, &mut scratch.norms);
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = row_norm(&scratch.b[j * vlen..(j + 1) * vlen]);
+    }
+    out.sort_unstable_by(|x, y| y.partial_cmp(x).unwrap());
 }
 
 /// Flatten `Aᴴ` (n×m, row-major): row j = conj of column j of A.
@@ -138,16 +199,29 @@ pub fn svd(a: &CMat) -> CSvd {
 ///   B_p ← c·B_p − s·e^{+iφ}·B_q
 ///   B_q ← s·e^{−iφ}·B_p + c·B_q
 /// ```
-fn jacobi_rows(b: &mut [C64], n: usize, m: usize, mut vrows: Option<&mut [C64]>) {
+fn jacobi_rows(b: &mut [C64], n: usize, m: usize, vrows: Option<&mut [C64]>) {
+    let mut norms = vec![0.0f64; n];
+    jacobi_rows_with(b, n, m, vrows, &mut norms);
+}
+
+/// [`jacobi_rows`] with a caller-provided norms buffer (`n` long) so the
+/// planned hot path stays allocation-free.
+fn jacobi_rows_with(
+    b: &mut [C64],
+    n: usize,
+    m: usize,
+    mut vrows: Option<&mut [C64]>,
+    norms: &mut [f64],
+) {
     if n < 2 {
         return;
     }
     debug_assert_eq!(b.len(), n * m);
+    debug_assert_eq!(norms.len(), n);
     // PERF: row norms (the Gram diagonal) are tracked incrementally via the
     // Rutishauser update (app ← app − t·|apq|, aqq ← aqq + t·|apq|) instead
     // of being re-accumulated for every pair — drops ~40% of the per-pair
     // dot work. Refreshed exactly at each sweep start to stop FP drift.
-    let mut norms = vec![0.0f64; n];
     for _sweep in 0..MAX_SWEEPS {
         for (j, nj) in norms.iter_mut().enumerate() {
             *nj = b[j * m..(j + 1) * m].iter().map(|z| z.norm_sqr()).sum();
@@ -333,5 +407,21 @@ mod tests {
         let s = singular_values(&a);
         let fro2: f64 = s.iter().map(|x| x * x).sum();
         assert!((fro2 - a.frobenius_norm().powi(2)).abs() < 1e-8);
+    }
+
+    #[test]
+    fn scratch_path_matches_allocating_path() {
+        let mut rng = Pcg64::seeded(34);
+        let mut ws = JacobiScratch::new();
+        for &(m, n) in &[(4usize, 4usize), (6, 3), (3, 6), (1, 5), (5, 1), (8, 8)] {
+            let a = CMat::random_normal(m, n, &mut rng);
+            let want = singular_values(&a);
+            let mut got = vec![0.0f64; m.min(n)];
+            // CMat::random_normal is row-major, so `data` is the raw block.
+            singular_values_into(&a.data, m, n, &mut ws, &mut got);
+            for (x, y) in want.iter().zip(&got) {
+                assert!((x - y).abs() < 1e-12, "{m}x{n}: {x} vs {y}");
+            }
+        }
     }
 }

@@ -7,17 +7,20 @@
 //!   artifacts  list AOT artifacts and smoke-run one through PJRT
 //!   help       this text
 
-use anyhow::{anyhow, bail, Result};
 use conv_svd_lfa::baselines::{explicit_svd, fft_svd, FftLayoutPolicy};
 use conv_svd_lfa::cli::Cli;
 use conv_svd_lfa::conv::{Boundary, ConvKernel};
 use conv_svd_lfa::coordinator::{Backend, ServiceConfig, SpectralService};
+use conv_svd_lfa::error::Result;
 use conv_svd_lfa::lfa::{self, LfaOptions};
 use conv_svd_lfa::model::zoo;
 use conv_svd_lfa::model::ModelConfig;
 use conv_svd_lfa::numeric::Pcg64;
 use conv_svd_lfa::report::{commas, secs, Table};
-use conv_svd_lfa::runtime::{load_manifest, PjrtEngine};
+use conv_svd_lfa::runtime::load_manifest;
+#[cfg(feature = "pjrt")]
+use conv_svd_lfa::runtime::PjrtEngine;
+use conv_svd_lfa::{bail, err};
 
 const HELP: &str = "\
 conv-svd-lfa — efficient SVD of convolutional mappings by Local Fourier Analysis
@@ -35,8 +38,11 @@ COMMANDS
   compare   --n <N> [--c C] [--threads T] [--with-explicit]
             LFA vs FFT (vs explicit) runtimes + agreement on one layer.
   artifacts [--dir DIR] [--run NAME]
-            List AOT artifacts; optionally execute one via PJRT.
+            List AOT artifacts; optionally execute one via PJRT
+            (requires a build with --features pjrt).
   help      Show this text.
+
+--threads 0 (the default) means auto: one worker per available core.
 ";
 
 fn main() {
@@ -61,17 +67,13 @@ fn run() -> Result<()> {
     }
 }
 
-fn default_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-}
-
 fn cmd_analyze(cli: &Cli) -> Result<()> {
     let n: usize = cli.opt_parse("n", 32)?;
     let m: usize = cli.opt_parse("m", n)?;
     let c_in: usize = cli.opt_parse("c-in", cli.opt_parse("c", 16)?)?;
     let c_out: usize = cli.opt_parse("c-out", cli.opt_parse("c", 16)?)?;
     let k: usize = cli.opt_parse("k", 3)?;
-    let threads: usize = cli.opt_parse("threads", default_threads())?;
+    let threads: usize = cli.opt_parse("threads", 0)?;
     let seed: u64 = cli.opt_parse("seed", 2025)?;
     let top: usize = cli.opt_parse("top", 8)?;
     let method = cli.opt("method").unwrap_or("lfa");
@@ -113,7 +115,7 @@ fn load_model(name_or_path: &str) -> Result<ModelConfig> {
     if path.exists() {
         return ModelConfig::load(path);
     }
-    Err(anyhow!(
+    Err(err!(
         "no builtin model {name_or_path:?} (have {:?}) and no such file",
         zoo::builtin_names()
     ))
@@ -123,9 +125,9 @@ fn cmd_audit(cli: &Cli) -> Result<()> {
     let target = cli
         .positional
         .first()
-        .ok_or_else(|| anyhow!("audit needs a builtin name or config path"))?;
+        .ok_or_else(|| err!("audit needs a builtin name or config path"))?;
     let model = load_model(target)?;
-    let threads: usize = cli.opt_parse("threads", default_threads())?;
+    let threads: usize = cli.opt_parse("threads", 0)?;
     let backend = match cli.opt("backend").unwrap_or("auto") {
         "auto" => Backend::Auto,
         "native" => Backend::Native,
@@ -191,7 +193,7 @@ fn cmd_audit(cli: &Cli) -> Result<()> {
 fn cmd_compare(cli: &Cli) -> Result<()> {
     let n: usize = cli.opt_parse("n", 32)?;
     let c: usize = cli.opt_parse("c", 16)?;
-    let threads: usize = cli.opt_parse("threads", default_threads())?;
+    let threads: usize = cli.opt_parse("threads", 0)?;
     let seed: u64 = cli.opt_parse("seed", 2025)?;
     let mut rng = Pcg64::seeded(seed);
     let kernel = ConvKernel::random_he(c, c, 3, 3, &mut rng);
@@ -259,29 +261,37 @@ fn cmd_artifacts(cli: &Cli) -> Result<()> {
     }
     print!("{}", table.render());
     if let Some(name) = cli.opt("run") {
-        let spec = specs
-            .iter()
-            .find(|s| s.name == name)
-            .ok_or_else(|| anyhow!("no artifact named {name:?}"))?;
-        let mut rng = Pcg64::seeded(7);
-        let kernel = ConvKernel::random_he(spec.c_out, spec.c_in, spec.kh, spec.kw, &mut rng);
-        let w: Vec<f32> = kernel.data.iter().map(|&v| v as f32).collect();
-        let mut engine = PjrtEngine::cpu()?;
-        let t0 = std::time::Instant::now();
-        let values = engine.run_grid(spec, &w)?;
-        let dt = t0.elapsed();
-        let native = lfa::singular_values(&kernel, spec.n, spec.m, LfaOptions::default());
-        let worst = values
-            .iter()
-            .zip(&native.values)
-            .map(|(a, b)| (*a as f64 - b).abs())
-            .fold(0.0, f64::max);
-        println!(
-            "ran {name} on {}: {} values in {}, max |Δσ| vs native = {worst:.2e}",
-            engine.platform(),
-            commas(values.len() as u128),
-            secs(dt)
-        );
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let _ = name;
+            bail!("artifact execution needs PJRT; rebuild with --features pjrt");
+        }
+        #[cfg(feature = "pjrt")]
+        {
+            let spec = specs
+                .iter()
+                .find(|s| s.name == name)
+                .ok_or_else(|| err!("no artifact named {name:?}"))?;
+            let mut rng = Pcg64::seeded(7);
+            let kernel = ConvKernel::random_he(spec.c_out, spec.c_in, spec.kh, spec.kw, &mut rng);
+            let w: Vec<f32> = kernel.data.iter().map(|&v| v as f32).collect();
+            let mut engine = PjrtEngine::cpu()?;
+            let t0 = std::time::Instant::now();
+            let values = engine.run_grid(spec, &w)?;
+            let dt = t0.elapsed();
+            let native = lfa::singular_values(&kernel, spec.n, spec.m, LfaOptions::default());
+            let worst = values
+                .iter()
+                .zip(&native.values)
+                .map(|(a, b)| (*a as f64 - b).abs())
+                .fold(0.0, f64::max);
+            println!(
+                "ran {name} on {}: {} values in {}, max |Δσ| vs native = {worst:.2e}",
+                engine.platform(),
+                commas(values.len() as u128),
+                secs(dt)
+            );
+        }
     }
     Ok(())
 }

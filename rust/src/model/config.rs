@@ -17,9 +17,10 @@
 //! init   = "he"     # he | glorot
 //! ```
 
+use crate::bail;
 use crate::conv::ConvKernel;
+use crate::error::{Context, Result};
 use crate::numeric::Pcg64;
-use anyhow::{bail, Context, Result};
 
 /// Weight initialization scheme.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

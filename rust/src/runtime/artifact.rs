@@ -1,7 +1,8 @@
 //! Artifact manifest: maps static pipeline configurations to the AOT HLO
 //! text files emitted by `python/compile/aot.py`.
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 use std::path::{Path, PathBuf};
 
 /// Static description of one AOT artifact (mirrors

@@ -2,7 +2,11 @@
 //! the CPU PJRT client from the request path (python is never involved at
 //! runtime).
 //!
-//! Two layers:
+//! The artifact manifest ([`artifact`]) is always available — it is plain
+//! parsing with no XLA dependency. The execution layers are gated behind
+//! the off-by-default `pjrt` cargo feature because the `xla` crate is not
+//! part of the offline image:
+//!
 //! - [`PjrtEngine`] — thread-local engine: client + compiled-executable
 //!   cache. `PjRtClient` is `Rc`-based (not `Send`), so an engine lives and
 //!   dies on one thread.
@@ -10,182 +14,21 @@
 //!   driven through an mpsc channel. The coordinator's worker pool sends
 //!   tile jobs to it and receives spectra back; this is how the non-`Send`
 //!   client composes with the multi-threaded scheduler.
+//!
+//! Without the feature, a stub [`PjrtExecutor`] whose `spawn()` always
+//! fails keeps the coordinator's routing code compiling unchanged; every
+//! job simply runs on the native backend.
 
 pub mod artifact;
 
-pub use artifact::{load_manifest, select, ArtifactSpec};
+pub use artifact::{load_manifest, parse_manifest, select, ArtifactSpec};
 
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
-use std::sync::mpsc;
-use std::time::{Duration, Instant};
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{ExecReply, PjrtEngine, PjrtExecutor};
 
-/// Thread-local PJRT engine: one CPU client + executable cache.
-pub struct PjrtEngine {
-    client: xla::PjRtClient,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
-}
-
-impl PjrtEngine {
-    /// Create a CPU engine.
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Self { client, cache: HashMap::new() })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an artifact (cached by name).
-    pub fn prepare(&mut self, spec: &ArtifactSpec) -> Result<()> {
-        if self.cache.contains_key(&spec.name) {
-            return Ok(());
-        }
-        let path = spec
-            .file
-            .to_str()
-            .with_context(|| format!("non-utf8 artifact path {:?}", spec.file))?;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow!("parsing HLO text {path}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling artifact {}: {e:?}", spec.name))?;
-        self.cache.insert(spec.name.clone(), exe);
-        Ok(())
-    }
-
-    /// Execute one tile: weights (OIHW, f32) + frequency-row offset →
-    /// `tile_rows·m·rank` singular values (frequency-major, descending per
-    /// frequency).
-    pub fn run_tile(&mut self, spec: &ArtifactSpec, weights: &[f32], row_offset: i32) -> Result<Vec<f32>> {
-        let expect = spec.c_out * spec.c_in * spec.kh * spec.kw;
-        if weights.len() != expect {
-            return Err(anyhow!(
-                "weight length {} != {expect} for artifact {}",
-                weights.len(),
-                spec.name
-            ));
-        }
-        self.prepare(spec)?;
-        let exe = self.cache.get(&spec.name).expect("prepared above");
-        let w = xla::Literal::vec1(weights)
-            .reshape(&[spec.c_out as i64, spec.c_in as i64, spec.kh as i64, spec.kw as i64])
-            .map_err(|e| anyhow!("reshaping weights: {e:?}"))?;
-        let off = xla::Literal::scalar(row_offset);
-        let result = exe
-            .execute::<xla::Literal>(&[w, off])
-            .map_err(|e| anyhow!("executing {}: {e:?}", spec.name))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
-        // Lowered with return_tuple=True → 1-tuple.
-        let out = lit.to_tuple1().map_err(|e| anyhow!("untupling result: {e:?}"))?;
-        let values = out.to_vec::<f32>().map_err(|e| anyhow!("reading f32s: {e:?}"))?;
-        if values.len() != spec.out_len() {
-            return Err(anyhow!(
-                "artifact {} returned {} values, expected {}",
-                spec.name,
-                values.len(),
-                spec.out_len()
-            ));
-        }
-        Ok(values)
-    }
-
-    /// Run the full grid by sweeping the artifact over all row tiles.
-    pub fn run_grid(&mut self, spec: &ArtifactSpec, weights: &[f32]) -> Result<Vec<f32>> {
-        let mut values = Vec::with_capacity(spec.n * spec.m * spec.rank);
-        let mut row = 0usize;
-        while row < spec.n {
-            values.extend(self.run_tile(spec, weights, row as i32)?);
-            row += spec.tile_rows;
-        }
-        values.truncate(spec.n * spec.m * spec.rank);
-        Ok(values)
-    }
-}
-
-/// A tile job for the executor thread.
-struct ExecRequest {
-    spec: ArtifactSpec,
-    weights: Vec<f32>,
-    row_offset: i32,
-    reply: mpsc::Sender<Result<ExecReply>>,
-}
-
-/// Executor reply: singular values + on-thread execution latency.
-pub struct ExecReply {
-    pub values: Vec<f32>,
-    pub latency: Duration,
-}
-
-/// Handle to a dedicated PJRT executor thread. Cheap to clone; all clones
-/// feed the same engine through a channel (requests are serialized — XLA's
-/// CPU executable is internally multi-threaded, so one engine saturates the
-/// machine for large tiles while small tiles interleave with native work).
-#[derive(Clone)]
-pub struct PjrtExecutor {
-    tx: mpsc::Sender<ExecRequest>,
-}
-
-impl PjrtExecutor {
-    /// Spawn the executor thread. Fails fast if the client cannot start.
-    pub fn spawn() -> Result<Self> {
-        let (tx, rx) = mpsc::channel::<ExecRequest>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        std::thread::Builder::new()
-            .name("pjrt-executor".into())
-            .spawn(move || {
-                let mut engine = match PjrtEngine::cpu() {
-                    Ok(e) => {
-                        let _ = ready_tx.send(Ok(()));
-                        e
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                while let Ok(req) = rx.recv() {
-                    let t0 = Instant::now();
-                    let out = engine
-                        .run_tile(&req.spec, &req.weights, req.row_offset)
-                        .map(|values| ExecReply { values, latency: t0.elapsed() });
-                    let _ = req.reply.send(out);
-                }
-            })
-            .context("spawning pjrt-executor thread")?;
-        ready_rx.recv().context("executor thread died during init")??;
-        Ok(Self { tx })
-    }
-
-    /// Execute a tile synchronously (blocks the calling worker, not the
-    /// executor queue).
-    pub fn run_tile(&self, spec: &ArtifactSpec, weights: &[f32], row_offset: i32) -> Result<ExecReply> {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
-            .send(ExecRequest {
-                spec: spec.clone(),
-                weights: weights.to_vec(),
-                row_offset,
-                reply: reply_tx,
-            })
-            .map_err(|_| anyhow!("pjrt executor thread is gone"))?;
-        reply_rx.recv().map_err(|_| anyhow!("pjrt executor dropped the reply"))?
-    }
-
-    /// Run the full grid for an artifact (tile sweep through the executor).
-    pub fn run_grid(&self, spec: &ArtifactSpec, weights: &[f32]) -> Result<Vec<f32>> {
-        let mut values = Vec::with_capacity(spec.n * spec.m * spec.rank);
-        let mut row = 0usize;
-        while row < spec.n {
-            values.extend(self.run_tile(spec, weights, row as i32)?.values);
-            row += spec.tile_rows;
-        }
-        values.truncate(spec.n * spec.m * spec.rank);
-        Ok(values)
-    }
-}
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{ExecReply, PjrtExecutor};

@@ -1,0 +1,189 @@
+//! The real PJRT engine + executor (feature `pjrt`): compiles HLO text
+//! artifacts with the `xla` crate and executes tiles on the CPU client.
+
+use crate::err;
+use crate::error::{Context, Result};
+use crate::runtime::ArtifactSpec;
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Thread-local PJRT engine: one CPU client + executable cache.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtEngine {
+    /// Create a CPU engine.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| err!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached by name).
+    pub fn prepare(&mut self, spec: &ArtifactSpec) -> Result<()> {
+        if self.cache.contains_key(&spec.name) {
+            return Ok(());
+        }
+        let path = spec
+            .file
+            .to_str()
+            .with_context(|| format!("non-utf8 artifact path {:?}", spec.file))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| err!("parsing HLO text {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| err!("compiling artifact {}: {e:?}", spec.name))?;
+        self.cache.insert(spec.name.clone(), exe);
+        Ok(())
+    }
+
+    /// Execute one tile: weights (OIHW, f32) + frequency-row offset →
+    /// `tile_rows·m·rank` singular values (frequency-major, descending per
+    /// frequency).
+    pub fn run_tile(
+        &mut self,
+        spec: &ArtifactSpec,
+        weights: &[f32],
+        row_offset: i32,
+    ) -> Result<Vec<f32>> {
+        let expect = spec.c_out * spec.c_in * spec.kh * spec.kw;
+        if weights.len() != expect {
+            return Err(err!(
+                "weight length {} != {expect} for artifact {}",
+                weights.len(),
+                spec.name
+            ));
+        }
+        self.prepare(spec)?;
+        let exe = self.cache.get(&spec.name).expect("prepared above");
+        let w = xla::Literal::vec1(weights)
+            .reshape(&[spec.c_out as i64, spec.c_in as i64, spec.kh as i64, spec.kw as i64])
+            .map_err(|e| err!("reshaping weights: {e:?}"))?;
+        let off = xla::Literal::scalar(row_offset);
+        let result = exe
+            .execute::<xla::Literal>(&[w, off])
+            .map_err(|e| err!("executing {}: {e:?}", spec.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| err!("fetching result: {e:?}"))?;
+        // Lowered with return_tuple=True → 1-tuple.
+        let out = lit.to_tuple1().map_err(|e| err!("untupling result: {e:?}"))?;
+        let values = out.to_vec::<f32>().map_err(|e| err!("reading f32s: {e:?}"))?;
+        if values.len() != spec.out_len() {
+            return Err(err!(
+                "artifact {} returned {} values, expected {}",
+                spec.name,
+                values.len(),
+                spec.out_len()
+            ));
+        }
+        Ok(values)
+    }
+
+    /// Run the full grid by sweeping the artifact over all row tiles.
+    pub fn run_grid(&mut self, spec: &ArtifactSpec, weights: &[f32]) -> Result<Vec<f32>> {
+        let mut values = Vec::with_capacity(spec.n * spec.m * spec.rank);
+        let mut row = 0usize;
+        while row < spec.n {
+            values.extend(self.run_tile(spec, weights, row as i32)?);
+            row += spec.tile_rows;
+        }
+        values.truncate(spec.n * spec.m * spec.rank);
+        Ok(values)
+    }
+}
+
+/// A tile job for the executor thread.
+struct ExecRequest {
+    spec: ArtifactSpec,
+    weights: Vec<f32>,
+    row_offset: i32,
+    reply: mpsc::Sender<Result<ExecReply>>,
+}
+
+/// Executor reply: singular values + on-thread execution latency.
+pub struct ExecReply {
+    pub values: Vec<f32>,
+    pub latency: Duration,
+}
+
+/// Handle to a dedicated PJRT executor thread. Cheap to clone; all clones
+/// feed the same engine through a channel (requests are serialized — XLA's
+/// CPU executable is internally multi-threaded, so one engine saturates the
+/// machine for large tiles while small tiles interleave with native work).
+#[derive(Clone)]
+pub struct PjrtExecutor {
+    tx: mpsc::Sender<ExecRequest>,
+}
+
+impl PjrtExecutor {
+    /// Spawn the executor thread. Fails fast if the client cannot start.
+    pub fn spawn() -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<ExecRequest>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || {
+                let mut engine = match PjrtEngine::cpu() {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    let t0 = Instant::now();
+                    let out = engine
+                        .run_tile(&req.spec, &req.weights, req.row_offset)
+                        .map(|values| ExecReply { values, latency: t0.elapsed() });
+                    let _ = req.reply.send(out);
+                }
+            })
+            .context("spawning pjrt-executor thread")?;
+        ready_rx.recv().context("executor thread died during init")??;
+        Ok(Self { tx })
+    }
+
+    /// Execute a tile synchronously (blocks the calling worker, not the
+    /// executor queue).
+    pub fn run_tile(
+        &self,
+        spec: &ArtifactSpec,
+        weights: &[f32],
+        row_offset: i32,
+    ) -> Result<ExecReply> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(ExecRequest {
+                spec: spec.clone(),
+                weights: weights.to_vec(),
+                row_offset,
+                reply: reply_tx,
+            })
+            .map_err(|_| err!("pjrt executor thread is gone"))?;
+        reply_rx.recv().map_err(|_| err!("pjrt executor dropped the reply"))?
+    }
+
+    /// Run the full grid for an artifact (tile sweep through the executor).
+    pub fn run_grid(&self, spec: &ArtifactSpec, weights: &[f32]) -> Result<Vec<f32>> {
+        let mut values = Vec::with_capacity(spec.n * spec.m * spec.rank);
+        let mut row = 0usize;
+        while row < spec.n {
+            values.extend(self.run_tile(spec, weights, row as i32)?.values);
+            row += spec.tile_rows;
+        }
+        values.truncate(spec.n * spec.m * spec.rank);
+        Ok(values)
+    }
+}

@@ -8,6 +8,7 @@
 //! procedure of Sedghi et al. §4).
 
 use crate::conv::ConvKernel;
+use crate::engine::SpectralPlan;
 use crate::lfa::svd::map_singular_values;
 use crate::lfa::{self, LfaOptions, SymbolGrid};
 
@@ -24,6 +25,11 @@ pub struct ClipResult {
 }
 
 /// Clip the spectrum of `kernel` (on an `n×m` periodic grid) at `cap`.
+///
+/// Builds a throwaway [`SpectralPlan`]. Training loops that clip the same
+/// layer every step should hold a plan and call [`clip_with_plan`] —
+/// spectral clipping is exactly the repeated-spectrum workload the
+/// plan-once/execute-many engine exists for.
 pub fn clip_spectral_norm(
     kernel: &ConvKernel,
     n: usize,
@@ -31,7 +37,13 @@ pub fn clip_spectral_norm(
     cap: f64,
     opts: LfaOptions,
 ) -> ClipResult {
-    let svd = lfa::svd_full(kernel, n, m, opts);
+    clip_with_plan(&SpectralPlan::new(kernel, n, m, opts), cap)
+}
+
+/// Clip against an existing plan (the plan's kernel is the layer clipped).
+pub fn clip_with_plan(plan: &SpectralPlan, cap: f64) -> ClipResult {
+    let svd = plan.execute_full();
+    let kernel = plan.kernel();
     let sigma_before = svd.sigma.sigma_max();
     let clipped_count = svd.sigma.values.iter().filter(|&&s| s > cap).count();
     let grid = map_singular_values(&svd, |s| s.min(cap));

@@ -7,7 +7,8 @@
 //! stored as `n·m` factor pairs or re-projected onto a local kernel.
 
 use crate::conv::ConvKernel;
-use crate::lfa::{self, BlockLayout, FullSvd, LfaOptions, SymbolGrid};
+use crate::engine::SpectralPlan;
+use crate::lfa::{BlockLayout, FullSvd, LfaOptions, SymbolGrid};
 use crate::numeric::CMat;
 
 /// A rank-`r` compressed convolution in frequency space.
@@ -22,9 +23,15 @@ pub struct LowRankConv {
     pub storage_ratio: f64,
 }
 
-/// Truncate every frequency block to rank `r`.
-pub fn compress(kernel: &ConvKernel, n: usize, m: usize, r: usize, opts: LfaOptions) -> LowRankConv {
-    let svd = lfa::svd_full(kernel, n, m, opts);
+/// Truncate every frequency block to rank `r` (planned `FullSvd` path).
+pub fn compress(
+    kernel: &ConvKernel,
+    n: usize,
+    m: usize,
+    r: usize,
+    opts: LfaOptions,
+) -> LowRankConv {
+    let svd = SpectralPlan::new(kernel, n, m, opts).execute_full();
     compress_from_svd(&svd, r)
 }
 
@@ -75,8 +82,13 @@ pub fn compress_from_svd(svd: &FullSvd, r: usize) -> LowRankConv {
 
 /// Sweep ranks `1..=min(c_out,c_in)` and report `(rank, rel_error,
 /// storage_ratio)` — the compression trade-off curve.
-pub fn rank_sweep(kernel: &ConvKernel, n: usize, m: usize, opts: LfaOptions) -> Vec<(usize, f64, f64)> {
-    let svd = lfa::svd_full(kernel, n, m, opts);
+pub fn rank_sweep(
+    kernel: &ConvKernel,
+    n: usize,
+    m: usize,
+    opts: LfaOptions,
+) -> Vec<(usize, f64, f64)> {
+    let svd = SpectralPlan::new(kernel, n, m, opts).execute_full();
     let rmax = svd.sigma.rank_per_freq();
     (1..=rmax)
         .map(|r| {

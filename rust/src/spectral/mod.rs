@@ -8,7 +8,7 @@ pub mod lipschitz;
 pub mod lowrank;
 pub mod pinv;
 
-pub use clip::{clip_spectral_norm, ClipResult};
+pub use clip::{clip_spectral_norm, clip_with_plan, ClipResult};
 pub use freq_op::FreqOperator;
 pub use lipschitz::{spectral_report, SpectralNormReport};
 pub use lowrank::{compress, rank_sweep, LowRankConv};

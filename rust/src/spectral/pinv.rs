@@ -5,7 +5,8 @@
 //! SVD as `B_k = V_k Σ_k⁺ U_kᴴ`.
 
 use crate::conv::ConvKernel;
-use crate::lfa::{self, BlockLayout, FullSvd, LfaOptions, SymbolGrid};
+use crate::engine::SpectralPlan;
+use crate::lfa::{BlockLayout, FullSvd, LfaOptions, SymbolGrid};
 use crate::numeric::CMat;
 
 /// The pseudo-inverse operator in frequency space.
@@ -26,7 +27,7 @@ pub fn pseudo_inverse(
     rcond: f64,
     opts: LfaOptions,
 ) -> PseudoInverse {
-    let svd = lfa::svd_full(kernel, n, m, opts);
+    let svd = SpectralPlan::new(kernel, n, m, opts).execute_full();
     pseudo_inverse_from_svd(&svd, rcond)
 }
 

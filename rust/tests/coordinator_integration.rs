@@ -2,12 +2,13 @@
 //! backpressure, PJRT/native routing, model audits and metrics.
 
 use conv_svd_lfa::conv::ConvKernel;
-use conv_svd_lfa::coordinator::{
-    Backend, JobSpec, Scheduler, SchedulerConfig, ServiceConfig, SpectralService,
-};
+use conv_svd_lfa::coordinator::{Backend, JobSpec, Scheduler, SchedulerConfig, SpectralService};
+#[cfg(feature = "pjrt")]
+use conv_svd_lfa::coordinator::ServiceConfig;
 use conv_svd_lfa::lfa::{self, LfaOptions};
 use conv_svd_lfa::model::zoo;
 use conv_svd_lfa::numeric::Pcg64;
+#[cfg(feature = "pjrt")]
 use std::path::PathBuf;
 
 fn kernel(c_out: usize, c_in: usize, seed: u64) -> ConvKernel {
@@ -74,6 +75,7 @@ fn pjrt_backend_requires_artifact() {
     sched.shutdown();
 }
 
+#[cfg(feature = "pjrt")]
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.txt").exists() {
@@ -84,6 +86,7 @@ fn artifacts_dir() -> Option<PathBuf> {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn service_auto_routes_to_pjrt_when_artifact_matches() {
     let Some(dir) = artifacts_dir() else { return };

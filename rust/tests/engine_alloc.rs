@@ -1,0 +1,66 @@
+//! Acceptance check for the engine's allocation discipline: after a plan's
+//! first (warm-up) execution has populated the workspace pool,
+//! `execute_into` on a caller-provided buffer performs **zero heap
+//! allocation** — the per-frequency hot loop only touches preallocated
+//! scratch. Verified with a counting global allocator; this file holds only
+//! these tests so unrelated parallel tests cannot perturb the counter.
+
+use conv_svd_lfa::conv::ConvKernel;
+use conv_svd_lfa::engine::SpectralPlan;
+use conv_svd_lfa::lfa::{BlockSolver, LfaOptions};
+use conv_svd_lfa::numeric::Pcg64;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn assert_zero_alloc_after_warmup(solver: BlockSolver, stride: usize) {
+    let mut rng = Pcg64::seeded(8000 + stride as u64);
+    let kernel = ConvKernel::random_he(4, 4, 3, 3, &mut rng);
+    let opts = LfaOptions { solver, threads: 1, ..Default::default() };
+    let plan = SpectralPlan::with_stride(&kernel, 8, 8, stride, opts);
+    let mut out = vec![0.0f64; plan.values_len()];
+    // Warm-up: the pool may grow its spine / solver scratch once.
+    plan.execute_into(&mut out);
+    let before = ALLOCS.load(Ordering::SeqCst);
+    plan.execute_into(&mut out);
+    plan.execute_into(&mut out);
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "{solver:?} stride {stride}: {} allocation(s) in warmed-up execute_into",
+        after - before
+    );
+    assert!(out.iter().all(|v| v.is_finite() && *v >= 0.0));
+}
+
+// One test, sequential scenarios: the harness runs #[test] fns on separate
+// threads, and concurrent tests would pollute each other's counter windows.
+#[test]
+fn execute_is_allocation_free_after_warmup() {
+    assert_zero_alloc_after_warmup(BlockSolver::Jacobi, 1);
+    assert_zero_alloc_after_warmup(BlockSolver::GramEigen, 1);
+    assert_zero_alloc_after_warmup(BlockSolver::Jacobi, 2);
+}

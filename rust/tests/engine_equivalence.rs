@@ -1,0 +1,165 @@
+//! Engine equivalence: the planned execution core ([`SpectralPlan`]) must
+//! reproduce the per-frequency reference pipeline — `symbol_at` (direct
+//! trig, no tables) + the standalone block solvers — to ≤ 1e-10 across
+//! every configuration axis: both block layouts, both solvers, strided and
+//! unstrided kernels, odd and even grids, square and rectangular channel
+//! counts. Plus reuse semantics: repeated `execute()` on one plan is
+//! bitwise identical.
+
+use conv_svd_lfa::conv::ConvKernel;
+use conv_svd_lfa::engine::{NativeSerial, NativeThreaded, SpectralBackend, SpectralPlan};
+use conv_svd_lfa::lfa::symbol::symbol_at;
+use conv_svd_lfa::lfa::{self, BlockLayout, BlockSolver, LfaOptions};
+use conv_svd_lfa::linalg::{jacobi_eig, jacobi_svd};
+use conv_svd_lfa::numeric::{CMat, Pcg64};
+
+const TOL: f64 = 1e-10;
+
+fn solve_reference(block: &CMat, solver: BlockSolver) -> Vec<f64> {
+    match solver {
+        BlockSolver::Jacobi => jacobi_svd::singular_values(block),
+        BlockSolver::GramEigen => jacobi_eig::singular_values_gram(block),
+    }
+}
+
+/// Frequency-by-frequency reference spectrum, bypassing the engine
+/// entirely: direct per-frequency trig (`symbol_at`) + allocating solvers.
+fn reference_unstrided(k: &ConvKernel, n: usize, m: usize, solver: BlockSolver) -> Vec<f64> {
+    let r = k.c_out.min(k.c_in);
+    let mut values = vec![0.0f64; n * m * r];
+    for ki in 0..n {
+        for kj in 0..m {
+            let sv = solve_reference(&symbol_at(k, n, m, ki, kj), solver);
+            let f = ki * m + kj;
+            values[f * r..(f + 1) * r].copy_from_slice(&sv[..r]);
+        }
+    }
+    values
+}
+
+fn reference_strided(
+    k: &ConvKernel,
+    n: usize,
+    m: usize,
+    s: usize,
+    solver: BlockSolver,
+) -> Vec<f64> {
+    let (nc, mc) = (n / s, m / s);
+    let r = k.c_out.min(s * s * k.c_in);
+    let mut values = vec![0.0f64; nc * mc * r];
+    for ki in 0..nc {
+        for kj in 0..mc {
+            let block = lfa::strided_symbol_at(k, n, m, s, ki, kj);
+            let sv = solve_reference(&block, solver);
+            let f = ki * mc + kj;
+            values[f * r..(f + 1) * r].copy_from_slice(&sv[..r]);
+        }
+    }
+    values
+}
+
+fn max_gap(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "spectrum lengths differ");
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+#[test]
+fn plan_matches_reference_across_all_configs() {
+    let mut rng = Pcg64::seeded(7001);
+    // Odd/even, square/rectangular grids; square/tall/wide channel counts.
+    for &(n, m) in &[(6usize, 6usize), (5, 7), (8, 3), (4, 4)] {
+        for &(c_out, c_in) in &[(3usize, 3usize), (4, 2), (2, 4)] {
+            let k = ConvKernel::random_he(c_out, c_in, 3, 3, &mut rng);
+            for layout in [BlockLayout::BlockContiguous, BlockLayout::PlanarStrided] {
+                for solver in [BlockSolver::Jacobi, BlockSolver::GramEigen] {
+                    let want = reference_unstrided(&k, n, m, solver);
+                    for threads in [1usize, 3] {
+                        let opts = LfaOptions { layout, solver, threads };
+                        let got = SpectralPlan::new(&k, n, m, opts).execute();
+                        let gap = max_gap(&got.values, &want);
+                        assert!(
+                            gap < TOL,
+                            "{n}x{m} {c_out}x{c_in} {layout:?} {solver:?} x{threads}: gap {gap}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn strided_plan_matches_reference() {
+    let mut rng = Pcg64::seeded(7002);
+    for &(n, m, s) in &[(8usize, 8usize, 2usize), (6, 6, 3), (4, 8, 2)] {
+        for &(c_out, c_in) in &[(2usize, 2usize), (3, 2)] {
+            let k = ConvKernel::random_he(c_out, c_in, 3, 3, &mut rng);
+            for solver in [BlockSolver::Jacobi, BlockSolver::GramEigen] {
+                let want = reference_strided(&k, n, m, s, solver);
+                let opts = LfaOptions { solver, threads: 1, ..Default::default() };
+                let got = SpectralPlan::with_stride(&k, n, m, s, opts).execute();
+                let gap = max_gap(&got.values, &want);
+                assert!(gap < TOL, "{n}x{m}/{s} {c_out}x{c_in} {solver:?}: gap {gap}");
+            }
+        }
+    }
+}
+
+#[test]
+fn legacy_entry_points_match_plan() {
+    // The public lfa:: wrappers are the plan — but assert it anyway so a
+    // future de-unification shows up as a test failure.
+    let mut rng = Pcg64::seeded(7003);
+    let k = ConvKernel::random_he(3, 3, 3, 3, &mut rng);
+    let plan = SpectralPlan::new(&k, 9, 9, LfaOptions::default());
+    let via_plan = plan.execute();
+    let via_lfa = lfa::singular_values(&k, 9, 9, LfaOptions::default());
+    assert_eq!(via_plan.values, via_lfa.values);
+    let strided = lfa::strided_singular_values(&k, 8, 8, 2);
+    let strided_plan =
+        SpectralPlan::with_stride(&k, 8, 8, 2, LfaOptions::default()).execute();
+    assert_eq!(strided.values, strided_plan.values);
+}
+
+#[test]
+fn one_plan_executes_many_times_identically() {
+    let mut rng = Pcg64::seeded(7004);
+    let k = ConvKernel::random_he(4, 4, 3, 3, &mut rng);
+    let plan = SpectralPlan::new(&k, 12, 12, LfaOptions { threads: 2, ..Default::default() });
+    let first = plan.execute();
+    let second = plan.execute();
+    assert_eq!(first.values, second.values, "plan reuse must be bitwise reproducible");
+    // execute_into on a caller buffer agrees too.
+    let mut buf = vec![0.0f64; plan.values_len()];
+    plan.execute_into(&mut buf);
+    assert_eq!(buf, first.values);
+}
+
+#[test]
+fn backends_agree_with_plan_execute() {
+    let mut rng = Pcg64::seeded(7005);
+    let k = ConvKernel::random_he(3, 2, 3, 3, &mut rng);
+    let plan = SpectralPlan::new(&k, 10, 10, LfaOptions::default());
+    let direct = plan.execute();
+    let serial = NativeSerial.execute(&plan).unwrap();
+    let threaded = NativeThreaded { threads: 4 }.execute(&plan).unwrap();
+    assert_eq!(direct.values, serial.values);
+    assert_eq!(direct.values, threaded.values);
+    assert_eq!(serial.n, 10);
+    assert_eq!(serial.c_out, 3);
+}
+
+#[test]
+fn tile_execution_stitches_to_full_grid() {
+    let mut rng = Pcg64::seeded(7006);
+    let k = ConvKernel::random_he(3, 3, 3, 3, &mut rng);
+    let plan = SpectralPlan::new(&k, 9, 5, LfaOptions { threads: 1, ..Default::default() });
+    let full = plan.execute();
+    let r = plan.rank();
+    let mut stitched = vec![0.0f64; plan.values_len()];
+    for (lo, hi) in [(0usize, 2usize), (2, 3), (3, 9)] {
+        let chunk = &mut stitched[lo * 5 * r..hi * 5 * r];
+        plan.execute_rows_pooled(lo, hi, chunk);
+    }
+    assert_eq!(stitched, full.values);
+}

@@ -1,7 +1,10 @@
 //! Integration: rust PJRT runtime executes the AOT artifacts and the
 //! numbers agree with the native LFA implementation.
 //!
-//! Requires `make artifacts` to have run (skips with a message otherwise).
+//! Requires a build with `--features pjrt` (the whole file is compiled out
+//! otherwise) and `make artifacts` to have run (skips with a message if the
+//! manifest is missing).
+#![cfg(feature = "pjrt")]
 
 use conv_svd_lfa::conv::ConvKernel;
 use conv_svd_lfa::lfa::{self, LfaOptions};
