@@ -22,7 +22,7 @@ use conv_svd_lfa::report::{commas, secs, Table};
 
 fn main() -> conv_svd_lfa::Result<()> {
     let model = zoo::resnet20ish();
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let threads = conv_svd_lfa::engine::resolve_threads(0);
     println!(
         "auditing model `{}`: {} conv layers, {} singular values total, {threads} worker(s)\n",
         model.name,

@@ -10,6 +10,7 @@
 use conv_svd_lfa::bench_util::bench_args;
 use conv_svd_lfa::conv::ConvKernel;
 use conv_svd_lfa::coordinator::{JobSpec, Scheduler};
+use conv_svd_lfa::engine::resolve_threads;
 use conv_svd_lfa::lfa::{self, LfaOptions};
 use conv_svd_lfa::numeric::Pcg64;
 use conv_svd_lfa::report::{secs, Table};
@@ -19,7 +20,7 @@ fn main() {
     let (n, c) = if full { (256, 16) } else { (128, 16) };
     let mut rng = Pcg64::seeded(900);
     let kernel = ConvKernel::random_he(c, c, 3, 3, &mut rng);
-    let cores = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let cores = resolve_threads(0);
 
     println!("# Ablation — thread scaling (n = {n}, c = {c}; host cores = {cores})");
     let mut table = Table::new(["threads", "in-process LFA", "coordinator", "speedup vs 1"]);

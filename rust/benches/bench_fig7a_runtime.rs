@@ -10,6 +10,7 @@
 use conv_svd_lfa::baselines::{explicit_svd, fft_svd, FftLayoutPolicy};
 use conv_svd_lfa::bench_util::bench_args;
 use conv_svd_lfa::conv::{Boundary, ConvKernel};
+use conv_svd_lfa::engine::resolve_threads;
 use conv_svd_lfa::lfa::{self, LfaOptions};
 use conv_svd_lfa::numeric::Pcg64;
 use conv_svd_lfa::report::{commas, secs, Table};
@@ -23,7 +24,7 @@ fn main() {
 
     let mut rng = Pcg64::seeded(700);
     let kernel = ConvKernel::random_he(c, c, 3, 3, &mut rng);
-    let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let threads = resolve_threads(0);
 
     println!("# Fig. 7a — runtime vs input size (c = {c}, k = 3, {threads} thread(s))");
     let mut table = Table::new(["n", "#σ", "explicit", "FFT", "LFA", "FFT/LFA"]);

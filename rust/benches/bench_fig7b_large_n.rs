@@ -9,6 +9,7 @@
 use conv_svd_lfa::baselines::{fft_svd, FftLayoutPolicy};
 use conv_svd_lfa::bench_util::bench_args;
 use conv_svd_lfa::conv::ConvKernel;
+use conv_svd_lfa::engine::resolve_threads;
 use conv_svd_lfa::lfa::{self, LfaOptions};
 use conv_svd_lfa::numeric::Pcg64;
 use conv_svd_lfa::report::{commas, secs, Table};
@@ -19,7 +20,7 @@ fn main() {
     let ns: Vec<usize> = if full { vec![32, 64, 128, 256, 512] } else { vec![32, 64, 128, 256] };
     let mut rng = Pcg64::seeded(701);
     let kernel = ConvKernel::random_he(c, c, 3, 3, &mut rng);
-    let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let threads = resolve_threads(0);
 
     println!("# Fig. 7b / Table II — LFA vs FFT at scale (c = {c}, {threads} thread(s))");
     let mut table = Table::new(["n", "no. of SVs", "s_FFT", "s_LFA", "s_FFT/s_LFA"]);

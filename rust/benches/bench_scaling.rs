@@ -6,13 +6,20 @@
 //!   FFT       O(n² (c + log n) c²) ≈ slope 2 in n (plus log factor)
 //!   LFA       O(n² c³)            = slope exactly 2 in n
 //!
-//! Also channel scaling at fixed n: both fast methods are O(c³)-dominated.
+//! Also channel scaling at fixed n, the plan-reuse margin, and the
+//! whole-model batching margin: `ModelPlan` (one planned object, one
+//! sweep) vs N independent per-layer plan executions.
+//!
+//! Flags: `--quick` (fewer samples), `--full` (bigger sizes), `--smoke`
+//! (CI bench-smoke: reduced sizes), `--json <path>` (machine-readable
+//! `{bench, case, ns_per_iter}` lines — uploaded as `BENCH_scaling.json`).
 
 use conv_svd_lfa::baselines::{explicit_svd, fft_svd, FftLayoutPolicy};
-use conv_svd_lfa::bench_util::bench_args;
+use conv_svd_lfa::bench_util::{bench_opts, JsonLines};
 use conv_svd_lfa::conv::{Boundary, ConvKernel};
-use conv_svd_lfa::engine::SpectralPlan;
+use conv_svd_lfa::engine::{resolve_threads, ModelPlan, SpectralPlan};
 use conv_svd_lfa::lfa::{self, LfaOptions};
+use conv_svd_lfa::model::{Init, LayerConfig, ModelConfig};
 use conv_svd_lfa::numeric::Pcg64;
 use conv_svd_lfa::report::Table;
 
@@ -35,53 +42,73 @@ fn slope(points: &[(f64, f64)]) -> f64 {
     (n * sxy - sx * sy) / (n * sxx - sx * sx)
 }
 
+/// A homogeneous stack: `depth` conv layers of `c×c` channels on an `n×n`
+/// grid — the equal-shape batching case ModelPlan groups into one sweep.
+fn equal_shape_model(depth: usize, c: usize, n: usize) -> ModelConfig {
+    let layers = (0..depth)
+        .map(|i| LayerConfig {
+            name: format!("conv{i}"),
+            c_in: c,
+            c_out: c,
+            kh: 3,
+            kw: 3,
+            height: n,
+            width: n,
+            stride: 1,
+            init: Init::He,
+        })
+        .collect();
+    ModelConfig { name: format!("stack-{depth}x c{c} n{n}"), seed: 77, layers }
+}
+
 fn main() {
-    let (bench, full) = bench_args();
+    let opts = bench_opts();
+    let bench = opts.bench;
+    let mut json = JsonLines::new("bench_scaling");
     let c = 8;
     let mut rng = Pcg64::seeded(1000);
     let kernel = ConvKernel::random_he(c, c, 3, 3, &mut rng);
 
     // --- n-scaling ---
-    let ns_fast: Vec<usize> = if full { vec![32, 64, 128, 256] } else { vec![32, 64, 128] };
-    let ns_explicit: Vec<usize> = vec![4, 6, 8, 12];
+    let ns_fast: Vec<usize> = if opts.smoke {
+        vec![16, 32]
+    } else if opts.full {
+        vec![32, 64, 128, 256]
+    } else {
+        vec![32, 64, 128]
+    };
+    let ns_explicit: Vec<usize> = if opts.smoke { vec![4, 6] } else { vec![4, 6, 8, 12] };
     let mut lfa_pts = Vec::new();
     let mut fft_pts = Vec::new();
     let mut exp_pts = Vec::new();
     for &n in &ns_fast {
-        let t = bench
-            .measure("lfa", || lfa::singular_values(&kernel, n, n, serial()))
-            .min()
-            .as_secs_f64();
-        lfa_pts.push((n as f64, t));
-        let t = bench
-            .measure("fft", || {
-                fft_svd::singular_values(&kernel, n, n, FftLayoutPolicy::Natural, 1)
-            })
-            .min()
-            .as_secs_f64();
-        fft_pts.push((n as f64, t));
+        let m = bench.measure("lfa", || lfa::singular_values(&kernel, n, n, serial()));
+        json.record_measurement(&format!("lfa n={n}"), &m);
+        lfa_pts.push((n as f64, m.min().as_secs_f64()));
+        let m = bench.measure("fft", || {
+            fft_svd::singular_values(&kernel, n, n, FftLayoutPolicy::Natural, 1)
+        });
+        json.record_measurement(&format!("fft n={n}"), &m);
+        fft_pts.push((n as f64, m.min().as_secs_f64()));
     }
     for &n in &ns_explicit {
-        let t = bench
-            .measure("explicit", || {
-                explicit_svd::singular_values(&kernel, n, n, Boundary::Periodic)
-            })
-            .min()
-            .as_secs_f64();
-        exp_pts.push((n as f64, t));
+        let m = bench.measure("explicit", || {
+            explicit_svd::singular_values(&kernel, n, n, Boundary::Periodic)
+        });
+        json.record_measurement(&format!("explicit n={n}"), &m);
+        exp_pts.push((n as f64, m.min().as_secs_f64()));
     }
 
     // --- c-scaling at fixed n ---
-    let n_fixed = 32;
+    let n_fixed = if opts.smoke { 16 } else { 32 };
+    let cs: Vec<usize> = if opts.smoke { vec![4, 8] } else { vec![4, 8, 16, 32] };
     let mut lfa_c = Vec::new();
-    for &cc in &[4usize, 8, 16, 32] {
+    for &cc in &cs {
         let mut rng = Pcg64::seeded(1001 + cc as u64);
         let k = ConvKernel::random_he(cc, cc, 3, 3, &mut rng);
-        let t = bench
-            .measure("lfa-c", || lfa::singular_values(&k, n_fixed, n_fixed, serial()))
-            .min()
-            .as_secs_f64();
-        lfa_c.push((cc as f64, t));
+        let m = bench.measure("lfa-c", || lfa::singular_values(&k, n_fixed, n_fixed, serial()));
+        json.record_measurement(&format!("lfa c={cc} n={n_fixed}"), &m);
+        lfa_c.push((cc as f64, m.min().as_secs_f64()));
     }
 
     // --- plan-once/execute-many vs plan-per-call (paper-c16 shapes) ---
@@ -89,29 +116,88 @@ fn main() {
     // held plan skips phase-table construction and all per-call allocation.
     // This is the repeated-spectrum workload (training-loop clipping).
     let mut plan_rows: Vec<[String; 4]> = Vec::new();
-    let ns_plan: Vec<usize> = if full { vec![32, 64] } else { vec![32] };
+    let ns_plan: Vec<usize> = if opts.smoke {
+        vec![16]
+    } else if opts.full {
+        vec![32, 64]
+    } else {
+        vec![32]
+    };
     for &n in &ns_plan {
         let mut rng = Pcg64::seeded(1002 + n as u64);
         let k16 = ConvKernel::random_he(16, 16, 3, 3, &mut rng);
-        let per_call = bench
-            .measure("plan-per-call", || lfa::singular_values(&k16, n, n, serial()))
-            .min()
-            .as_secs_f64();
+        let m = bench.measure("plan-per-call", || lfa::singular_values(&k16, n, n, serial()));
+        json.record_measurement(&format!("plan-per-call c16 n={n}"), &m);
+        let per_call = m.min().as_secs_f64();
         let plan = SpectralPlan::new(&k16, n, n, serial());
         let mut out = vec![0.0f64; plan.values_len()];
         plan.execute_into(&mut out); // warm the workspace pool
-        let reused = bench
-            .measure("plan-reuse", || {
-                plan.execute_into(&mut out);
-                out[0]
-            })
-            .min()
-            .as_secs_f64();
+        let m = bench.measure("plan-reuse", || {
+            plan.execute_into(&mut out);
+            out[0]
+        });
+        json.record_measurement(&format!("plan-reuse c16 n={n}"), &m);
+        let reused = m.min().as_secs_f64();
         plan_rows.push([
             format!("c16 n={n}"),
             format!("{:.3} ms", per_call * 1e3),
             format!("{:.3} ms", reused * 1e3),
             format!("{:.2}x", per_call / reused.max(1e-12)),
+        ]);
+    }
+
+    // --- ModelPlan: whole-model batched sweep vs per-layer plans ---
+    // The equal-shape special case: `depth` identical layers. Both sides
+    // hold prebuilt plans and reuse output buffers; the model side batches
+    // all layers into one group-major sweep (shared workspace pool, a
+    // single scoped fan-out when threaded) while the per-layer side
+    // executes N independent plans back-to-back.
+    let (depth, mc, mn) = if opts.smoke { (6, 4, 16) } else { (8, 8, 32) };
+    let threads = resolve_threads(0);
+    let model = equal_shape_model(depth, mc, mn);
+    let mut model_rows: Vec<[String; 4]> = Vec::new();
+    let mut thread_counts = vec![1usize];
+    if threads > 1 {
+        thread_counts.push(threads);
+    }
+    for &t in &thread_counts {
+        let lfa_opts = LfaOptions { threads: t, ..Default::default() };
+        let mplan = ModelPlan::build(&model, lfa_opts).expect("valid model");
+        let mut mout = vec![0.0f64; mplan.values_len()];
+        mplan.execute_into(&mut mout); // warm all pools
+        let m = bench.measure("model-plan", || {
+            mplan.execute_into(&mut mout);
+            mout[0]
+        });
+        json.record_measurement(&format!("model-plan {depth}xc{mc} n={mn} t={t}"), &m);
+        let batched = m.min().as_secs_f64();
+
+        let plans: Vec<SpectralPlan> = model
+            .layers
+            .iter()
+            .map(|l| {
+                let k = l.materialize(model.seed);
+                SpectralPlan::new(&k, l.height, l.width, lfa_opts)
+            })
+            .collect();
+        let mut outs: Vec<Vec<f64>> =
+            plans.iter().map(|p| vec![0.0f64; p.values_len()]).collect();
+        for (p, o) in plans.iter().zip(outs.iter_mut()) {
+            p.execute_into(o); // warm per-layer pools
+        }
+        let m = bench.measure("per-layer-plans", || {
+            for (p, o) in plans.iter().zip(outs.iter_mut()) {
+                p.execute_into(o);
+            }
+            outs[0][0]
+        });
+        json.record_measurement(&format!("per-layer-plans {depth}xc{mc} n={mn} t={t}"), &m);
+        let independent = m.min().as_secs_f64();
+        model_rows.push([
+            format!("{depth}x c{mc} n={mn} threads={t}"),
+            format!("{:.3} ms", independent * 1e3),
+            format!("{:.3} ms", batched * 1e3),
+            format!("{:.2}x", independent / batched.max(1e-12)),
         ]);
     }
 
@@ -140,6 +226,18 @@ fn main() {
         ptable.row(row);
     }
     print!("{}", ptable.render());
+
+    println!("\n# ModelPlan — whole-model batched sweep vs per-layer plans");
+    let mut mtable = Table::new(["workload", "per-layer plans", "model-plan", "speedup"]);
+    for row in model_rows {
+        mtable.row(row);
+    }
+    print!("{}", mtable.render());
+
+    if let Some(path) = &opts.json {
+        json.write(path).expect("writing bench json");
+        println!("\njson: {} ({} cases)", path.display(), json.len());
+    }
 
     println!(
         "notes: explicit slope < 6 at tiny n (LAPACK-style constants dominate);\n\

@@ -8,6 +8,7 @@
 use conv_svd_lfa::baselines::{fft_svd, FftLayoutPolicy};
 use conv_svd_lfa::bench_util::bench_args;
 use conv_svd_lfa::conv::ConvKernel;
+use conv_svd_lfa::engine::resolve_threads;
 use conv_svd_lfa::lfa::{self, LfaOptions};
 use conv_svd_lfa::numeric::Pcg64;
 use conv_svd_lfa::report::{commas, secs, Table};
@@ -18,7 +19,7 @@ fn main() {
     let ns: Vec<usize> = if full { vec![64, 128, 256, 512] } else { vec![64, 128, 256] };
     let mut rng = Pcg64::seeded(702);
     let kernel = ConvKernel::random_he(c, c, 3, 3, &mut rng);
-    let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let threads = resolve_threads(0);
 
     println!("# Table III — s_F vs s_SVD split (c = {c}, {threads} thread(s))");
     let mut table = Table::new(["n", "no. of SVs", "method", "s_F", "s_SVD", "s_total"]);

@@ -91,11 +91,93 @@ pub fn sink<T>(value: T) -> T {
 /// Parse common bench CLI flags: `--quick` (fewer samples) and `--full`
 /// (extended problem sizes). Returns (bench, full).
 pub fn bench_args() -> (Bench, bool) {
+    let opts = bench_opts();
+    (opts.bench, opts.full)
+}
+
+/// Full bench CLI options. Beyond [`bench_args`]'s `--quick`/`--full`:
+///
+/// - `--smoke`: CI bench-smoke mode — quick sampling **and** reduced
+///   problem sizes, so the harness finishes in seconds and the recorded
+///   numbers form a per-commit trajectory rather than a precise benchmark.
+/// - `--json <path>` (or `--json=<path>`): write every measurement as a
+///   machine-readable JSON line (see [`JsonLines`]) to `path`.
+pub struct BenchOpts {
+    pub bench: Bench,
+    pub full: bool,
+    pub smoke: bool,
+    pub json: Option<std::path::PathBuf>,
+}
+
+/// Parse [`BenchOpts`] from `std::env::args()`. `cargo bench` passes
+/// `--bench`; unknown flags are ignored.
+pub fn bench_opts() -> BenchOpts {
     let args: Vec<String> = std::env::args().collect();
-    let quick = args.iter().any(|a| a == "--quick");
-    // `cargo bench` passes --bench; ignore unknown flags.
-    let full = args.iter().any(|a| a == "--full");
-    (if quick { Bench::quick() } else { Bench::default() }, full)
+    let has = |name: &str| args.iter().any(|a| a == name);
+    let smoke = has("--smoke");
+    let quick = smoke || has("--quick");
+    let full = has("--full") && !smoke;
+    let mut json = None;
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        if a == "--json" {
+            json = it.peek().map(|p| std::path::PathBuf::from(p.as_str()));
+        } else if let Some(p) = a.strip_prefix("--json=") {
+            json = Some(std::path::PathBuf::from(p));
+        }
+    }
+    BenchOpts { bench: if quick { Bench::quick() } else { Bench::default() }, full, smoke, json }
+}
+
+/// Machine-readable bench output: one `{"bench": …, "case": …,
+/// "ns_per_iter": …}` JSON object per line, the format CI uploads as
+/// `BENCH_<name>.json` so the perf trajectory is recorded per commit.
+pub struct JsonLines {
+    bench: String,
+    lines: Vec<String>,
+}
+
+impl JsonLines {
+    pub fn new(bench: &str) -> Self {
+        Self { bench: bench.to_string(), lines: Vec::new() }
+    }
+
+    /// Record one case's nanoseconds-per-iteration.
+    pub fn record(&mut self, case: &str, ns_per_iter: f64) {
+        self.lines.push(format!(
+            "{{\"bench\":\"{}\",\"case\":\"{}\",\"ns_per_iter\":{:.1}}}",
+            escape(&self.bench),
+            escape(case),
+            ns_per_iter
+        ));
+    }
+
+    /// [`Self::record`] from a [`Measurement`] (its minimum sample — robust
+    /// against scheduler noise, matching how the tables report).
+    pub fn record_measurement(&mut self, case: &str, m: &Measurement) {
+        self.record(case, m.min().as_secs_f64() * 1e9);
+    }
+
+    /// Write all recorded lines to `path` (one JSON object per line).
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        let mut text = self.lines.join("\n");
+        text.push('\n');
+        std::fs::write(path, text)
+    }
+
+    pub fn len(&self) -> usize {
+        self.lines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lines.is_empty()
+    }
+}
+
+/// Minimal JSON string escaping (case names are plain ASCII identifiers,
+/// but don't let a stray quote corrupt the record).
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
 #[cfg(test)]
@@ -137,5 +219,23 @@ mod tests {
         let m = b.measure("sleepy", || std::thread::sleep(Duration::from_millis(2)));
         assert!(m.samples.len() < 10);
         assert!(m.samples.len() >= 2);
+    }
+
+    #[test]
+    fn json_lines_format() {
+        let mut j = JsonLines::new("bench_scaling");
+        assert!(j.is_empty());
+        j.record("lfa n=32", 1234.56);
+        j.record_measurement(
+            "case \"quoted\"",
+            &Measurement { name: "x".into(), samples: vec![Duration::from_nanos(500)] },
+        );
+        assert_eq!(j.len(), 2);
+        assert_eq!(
+            j.lines[0],
+            "{\"bench\":\"bench_scaling\",\"case\":\"lfa n=32\",\"ns_per_iter\":1234.6}"
+        );
+        assert!(j.lines[1].contains("\\\"quoted\\\""));
+        assert!(j.lines[1].contains("\"ns_per_iter\":500.0"));
     }
 }

@@ -1,8 +1,46 @@
-//! Hand-rolled CLI argument parsing (no clap in the offline crate set).
+//! Hand-rolled CLI argument parsing (no clap in the offline crate set),
+//! plus the binary's help text (kept here so the library's tests can pin
+//! that every subcommand stays documented).
 
 use crate::error::Result;
 use crate::{bail, err};
 use std::collections::HashMap;
+
+/// Help text for the `conv-svd-lfa` binary. Every subcommand `main.rs`
+/// dispatches on must appear here — enforced by `help_documents_every_command`.
+pub const HELP: &str = "\
+conv-svd-lfa — efficient SVD of convolutional mappings by Local Fourier Analysis
+
+USAGE: conv-svd-lfa <command> [options]
+
+COMMANDS
+  analyze      --n <N> [--m M] [--c-in C] [--c-out C] [--k K] [--threads T]
+               [--seed S] [--method lfa|fft|explicit] [--top J]
+               Compute the spectrum of a random conv layer.
+  audit        <builtin-or-config.toml> [--threads T] [--backend auto|native|pjrt]
+               [--artifacts DIR] [--csv]
+               Analyze all conv layers of a model through the coordinator
+               service (one planned model job, tiled across the worker
+               pool). Builtins: lenet, vgg-small, resnet20ish,
+               paper-c16-n<N>.
+  audit-model  <builtin-or-config.toml> [--threads T] [--solver jacobi|gram]
+               [--top J] [--csv]
+               Whole-model spectral report straight off a ModelPlan: every
+               layer planned once, equal-shape layers batched into shared
+               workspace groups, executed as one sweep. Emits the per-layer
+               table plus aggregate statistics (global sigma extrema,
+               Lipschitz composition bound, batching summary). The config
+               is [[layer]] TOML (keys: name, c_in, c_out, kernel|kh/kw,
+               height, width, stride, init).
+  compare      --n <N> [--c C] [--threads T] [--with-explicit]
+               LFA vs FFT (vs explicit) runtimes + agreement on one layer.
+  artifacts    [--dir DIR] [--run NAME]
+               List AOT artifacts; optionally execute one via PJRT
+               (requires a build with --features pjrt).
+  help         Show this text.
+
+--threads 0 (the default) means auto: one worker per available core.
+";
 
 /// Parsed command line: subcommand, positionals, `--key value` / `--flag`
 /// options.
@@ -111,5 +149,17 @@ mod tests {
     fn defaults() {
         let c = Cli::parse(&args("x"), &[]).unwrap();
         assert_eq!(c.opt_parse::<usize>("n", 16).unwrap(), 16);
+    }
+
+    #[test]
+    fn help_documents_every_command() {
+        // The commands main.rs dispatches on; `audit-model` usage
+        // (ModelPlan-backed whole-model report) is pinned here too.
+        for cmd in ["analyze", "audit", "audit-model", "compare", "artifacts", "help"] {
+            assert!(HELP.contains(cmd), "HELP must document {cmd:?}");
+        }
+        for detail in ["--solver jacobi|gram", "ModelPlan", "stride", "Lipschitz"] {
+            assert!(HELP.contains(detail), "HELP must document audit-model's {detail:?}");
+        }
     }
 }

@@ -2,6 +2,7 @@
 
 use crate::conv::ConvKernel;
 use crate::lfa::BlockSolver;
+use crate::model::config::ModelConfig;
 use std::sync::Arc;
 
 /// Which backend executes the per-tile work.
@@ -78,6 +79,58 @@ impl JobSpec {
     }
 }
 
+/// A whole-model spectral-analysis job: every conv layer of a model,
+/// planned once as a single [`crate::engine::ModelPlan`] at submission and
+/// executed as tiles against the shared plan — no per-layer plan lookups.
+#[derive(Clone)]
+pub struct ModelJobSpec {
+    /// Stable identifier for reporting.
+    pub id: String,
+    pub model: ModelConfig,
+    pub solver: BlockSolver,
+    pub backend: Backend,
+    /// Coarse frequency rows per tile (0 = pick automatically per layer).
+    pub tile_rows: usize,
+}
+
+impl ModelJobSpec {
+    pub fn new(id: impl Into<String>, model: ModelConfig) -> Self {
+        Self {
+            id: id.into(),
+            model,
+            solver: BlockSolver::Jacobi,
+            backend: Backend::Auto,
+            tile_rows: 0,
+        }
+    }
+
+    pub fn with_backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn with_solver(mut self, solver: BlockSolver) -> Self {
+        self.solver = solver;
+        self
+    }
+
+    pub fn with_tile_rows(mut self, rows: usize) -> Self {
+        self.tile_rows = rows;
+        self
+    }
+
+    /// Tile size for a layer with `coarse_rows` frequency rows: the
+    /// explicit override, else enough tiles for load balance without
+    /// flooding the queue (models already fan out across layers).
+    pub fn effective_tile_rows(&self, coarse_rows: usize, workers: usize) -> usize {
+        if self.tile_rows > 0 {
+            return self.tile_rows.min(coarse_rows).max(1);
+        }
+        let target_tiles = (workers * 4).max(1);
+        coarse_rows.div_ceil(target_tiles).max(1)
+    }
+}
+
 /// One unit of scheduled work: frequency rows `[row_lo, row_hi)` of a job.
 #[derive(Clone)]
 pub struct Tile {
@@ -124,5 +177,17 @@ mod tests {
     fn tiny_grids_get_one_row_tiles() {
         let j = job(2);
         assert!(j.effective_tile_rows(16) >= 1);
+    }
+
+    #[test]
+    fn model_job_tile_heuristic() {
+        let model = crate::model::ModelConfig { name: "m".into(), seed: 0, layers: vec![] };
+        let spec = ModelJobSpec::new("m", model.clone());
+        // 32 coarse rows, 4 workers → 2-row tiles (16 tiles).
+        assert_eq!(spec.effective_tile_rows(32, 4), 2);
+        assert_eq!(spec.effective_tile_rows(1, 16), 1);
+        // Explicit override wins, clamped to the grid.
+        let spec2 = ModelJobSpec::new("m", model).with_tile_rows(64);
+        assert_eq!(spec2.effective_tile_rows(8, 4), 8);
     }
 }

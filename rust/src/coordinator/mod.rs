@@ -2,14 +2,17 @@
 //! native and PJRT backends, metrics, and the high-level
 //! [`SpectralService`] API. This is the system expression of the paper's
 //! "embarrassingly parallel" remark (§V): tiles of the dual grid are
-//! independent, so the spectrum of a layer scales out trivially.
+//! independent, so the spectrum of a layer scales out trivially — and a
+//! whole model, submitted as one planned [`crate::engine::ModelPlan`]
+//! object ([`Scheduler::submit_model`]), scales out across every layer's
+//! tiles at once.
 
 pub mod job;
 pub mod metrics;
 pub mod scheduler;
 pub mod service;
 
-pub use job::{Backend, JobSpec, Tile};
+pub use job::{Backend, JobSpec, ModelJobSpec, Tile};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use scheduler::{JobResult, Scheduler, SchedulerConfig};
+pub use scheduler::{JobResult, LayerOutcome, ModelJobResult, Scheduler, SchedulerConfig};
 pub use service::{analyze, LayerReport, ServiceConfig, SpectralService};

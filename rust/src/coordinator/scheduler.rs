@@ -11,17 +11,22 @@
 //! Every job carries one shared [`SpectralPlan`]: phase tables are computed
 //! once at submission and every native tile executes against the plan's
 //! pooled workspaces, so a job no longer rebuilds symbol state per tile.
+//!
+//! Whole models go further: [`Scheduler::submit_model`] plans *all* layers
+//! once as a single [`ModelPlan`] (equal-shape layers share workspace
+//! pools) and queues per-layer row tiles against that one planned object —
+//! there is no per-layer plan lookup or rebuild anywhere in the model path.
 
-use super::job::{Backend, JobSpec, Tile};
+use super::job::{Backend, JobSpec, ModelJobSpec, Tile};
 use super::metrics::Metrics;
-use crate::engine::{resolve_threads, SpectralPlan};
+use crate::engine::{resolve_threads, ModelPlan, SpectralPlan};
 use crate::err;
 use crate::error::Result;
 use crate::lfa::{self, LfaOptions};
 use crate::runtime::{ArtifactSpec, PjrtExecutor};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Scheduler configuration.
 #[derive(Clone)]
@@ -51,6 +56,27 @@ pub struct JobResult {
     pub native_tiles: usize,
 }
 
+/// Per-layer outcome of a whole-model job.
+pub struct LayerOutcome {
+    pub name: String,
+    pub spectrum: lfa::Spectrum,
+    /// Summed tile work for this layer (not wall-clock — tiles of different
+    /// layers interleave across the pool).
+    pub elapsed: Duration,
+    pub pjrt_tiles: usize,
+    pub native_tiles: usize,
+}
+
+/// Result of one whole-model job: per-layer outcomes in model order.
+pub struct ModelJobResult {
+    pub id: String,
+    pub layers: Vec<LayerOutcome>,
+    /// Wall-clock for the whole model.
+    pub elapsed: Duration,
+    pub pjrt_tiles: usize,
+    pub native_tiles: usize,
+}
+
 struct JobState {
     spec: Arc<JobSpec>,
     /// Planned symbol→SVD state shared by every tile of this job.
@@ -68,8 +94,36 @@ struct JobState {
     weights_f32: Vec<f32>,
 }
 
+/// Per-layer tile bookkeeping for a whole-model job.
+struct LayerCounters {
+    pjrt: AtomicUsize,
+    native: AtomicUsize,
+    work_nanos: AtomicU64,
+}
+
+struct ModelJobState {
+    spec: Arc<ModelJobSpec>,
+    /// All layers, planned once at submission; tiles only execute.
+    plan: Arc<ModelPlan>,
+    /// Flat whole-model values buffer (per-layer offsets from the plan).
+    values: Mutex<Vec<f64>>,
+    remaining: AtomicUsize,
+    layer_counters: Vec<LayerCounters>,
+    started: Instant,
+    done_tx: mpsc::Sender<Result<ModelJobResult>>,
+    /// Set by the first failing tile so the whole model job is accounted
+    /// failed exactly once (`jobs_failed += layer count`, balancing the
+    /// per-layer `jobs_submitted` accounting).
+    failed: AtomicBool,
+    /// Per-layer artifact routing (None = native).
+    artifacts: Vec<Option<ArtifactSpec>>,
+    /// Pre-converted f32 weights for PJRT-routed layers (empty otherwise).
+    weights_f32: Vec<Vec<f32>>,
+}
+
 enum Work {
     Tile { state: Arc<JobState>, tile: Tile },
+    ModelTile { state: Arc<ModelJobState>, layer: usize, row_lo: usize, row_hi: usize },
     Shutdown,
 }
 
@@ -178,6 +232,110 @@ impl Scheduler {
         rx.recv().map_err(|_| err!("job dropped without a result"))?
     }
 
+    /// Submit a whole model as **one planned object**: a [`ModelPlan`] is
+    /// built here, once — every layer's phase tables, equal-shape groups
+    /// sharing workspace pools — and per-layer row tiles are queued against
+    /// it. Layers whose shape matches an AOT artifact route to PJRT (per
+    /// the backend policy); everything else executes natively against the
+    /// shared plan. Metrics count one job per layer, so model audits and
+    /// per-layer audits report comparably.
+    pub fn submit_model(&self, spec: ModelJobSpec) -> mpsc::Receiver<Result<ModelJobResult>> {
+        let (done_tx, done_rx) = mpsc::channel();
+        let nlayers = spec.model.layers.len();
+        self.metrics.jobs_submitted.fetch_add(nlayers as u64, Ordering::Relaxed);
+        let plan = match ModelPlan::build(
+            &spec.model,
+            LfaOptions { solver: spec.solver, threads: 1, ..Default::default() },
+        ) {
+            Ok(p) => Arc::new(p),
+            Err(e) => {
+                self.metrics.jobs_failed.fetch_add(nlayers as u64, Ordering::Relaxed);
+                let _ = done_tx.send(Err(e.context(format!("planning model job {}", spec.id))));
+                return done_rx;
+            }
+        };
+        // Per-layer artifact routing: stride-1 layers whose shape matches.
+        let mut artifacts: Vec<Option<ArtifactSpec>> = Vec::with_capacity(nlayers);
+        let mut weights_f32: Vec<Vec<f32>> = Vec::with_capacity(nlayers);
+        for i in 0..nlayers {
+            let lp = plan.layer_plan(i);
+            let art = if self.executor.is_some()
+                && spec.backend != Backend::Native
+                && lp.stride() == 1
+            {
+                let k = lp.kernel();
+                crate::runtime::select(
+                    &self.config.artifacts,
+                    lp.coarse_rows(),
+                    lp.coarse_cols(),
+                    k.c_out,
+                    k.c_in,
+                    k.kh,
+                    k.kw,
+                    true,
+                )
+                .cloned()
+            } else {
+                None
+            };
+            let w = if art.is_some() {
+                lp.kernel().data.iter().map(|&v| v as f32).collect()
+            } else {
+                Vec::new()
+            };
+            artifacts.push(art);
+            weights_f32.push(w);
+        }
+        // Tiles: per-layer row ranges against the shared plan.
+        let mut tiles: Vec<(usize, usize, usize)> = Vec::new();
+        for i in 0..nlayers {
+            let nc = plan.layer_plan(i).coarse_rows();
+            let tr = match &artifacts[i] {
+                Some(a) => a.tile_rows,
+                None => spec.effective_tile_rows(nc, self.config.workers),
+            };
+            let mut lo = 0usize;
+            while lo < nc {
+                tiles.push((i, lo, (lo + tr).min(nc)));
+                lo += tr;
+            }
+        }
+        let spec = Arc::new(spec);
+        let state = Arc::new(ModelJobState {
+            spec: Arc::clone(&spec),
+            values: Mutex::new(vec![0.0; plan.values_len()]),
+            remaining: AtomicUsize::new(tiles.len()),
+            layer_counters: (0..nlayers)
+                .map(|_| LayerCounters {
+                    pjrt: AtomicUsize::new(0),
+                    native: AtomicUsize::new(0),
+                    work_nanos: AtomicU64::new(0),
+                })
+                .collect(),
+            started: Instant::now(),
+            done_tx,
+            failed: AtomicBool::new(false),
+            artifacts,
+            weights_f32,
+            plan,
+        });
+        for (layer, lo, hi) in tiles {
+            self.metrics.tiles_dispatched.fetch_add(1, Ordering::Relaxed);
+            // SyncSender blocks when full — the same backpressure point as
+            // per-layer jobs.
+            self.work_tx
+                .send(Work::ModelTile { state: Arc::clone(&state), layer, row_lo: lo, row_hi: hi })
+                .expect("worker pool is gone");
+        }
+        done_rx
+    }
+
+    /// Submit a whole model and wait.
+    pub fn run_model(&self, spec: ModelJobSpec) -> Result<ModelJobResult> {
+        let rx = self.submit_model(spec);
+        rx.recv().map_err(|_| err!("model job dropped without a result"))?
+    }
+
     fn pick_artifact(&self, spec: &JobSpec) -> Option<ArtifactSpec> {
         if self.executor.is_none() || spec.backend == Backend::Native {
             return None;
@@ -243,9 +401,68 @@ fn worker_loop(
                     }
                 }
             }
+            Ok(Work::ModelTile { state, layer, row_lo, row_hi }) => {
+                let t0 = Instant::now();
+                let outcome = run_model_tile(&state, layer, row_lo, row_hi, executor.as_ref());
+                match outcome {
+                    Ok(used_pjrt) => {
+                        let lp = state.plan.layer_plan(layer);
+                        let vals = (row_hi - row_lo) * lp.coarse_cols() * lp.rank();
+                        let elapsed = t0.elapsed();
+                        metrics.record_tile(vals, elapsed, used_pjrt);
+                        let counters = &state.layer_counters[layer];
+                        counters
+                            .work_nanos
+                            .fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+                        if used_pjrt {
+                            counters.pjrt.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            counters.native.fetch_add(1, Ordering::Relaxed);
+                        }
+                        if state.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                            finish_model_job(&state, &metrics);
+                        }
+                    }
+                    Err(e) => {
+                        // Account the whole model job failed exactly once
+                        // (it was submitted as one job per layer), no
+                        // matter how many of its tiles error.
+                        if !state.failed.swap(true, Ordering::Relaxed) {
+                            let nlayers = state.spec.model.layers.len() as u64;
+                            metrics.jobs_failed.fetch_add(nlayers, Ordering::Relaxed);
+                        }
+                        let _ = state.done_tx.send(Err(e));
+                    }
+                }
+            }
             Ok(Work::Shutdown) | Err(_) => return,
         }
     }
+}
+
+/// Sweep a PJRT artifact over rows `[row_lo, row_hi)`. The artifact
+/// computes `art.tile_rows` rows per call; the last call may overshoot the
+/// range and its surplus values are trimmed. `row_vals` is the number of
+/// singular values per frequency row (`cols · rank`). Shared by the
+/// per-layer and whole-model tile paths so the partial-tile slicing cannot
+/// diverge between them.
+fn pjrt_tile_values(
+    exec: &PjrtExecutor,
+    art: &ArtifactSpec,
+    weights: &[f32],
+    row_lo: usize,
+    row_hi: usize,
+    row_vals: usize,
+) -> Result<Vec<f64>> {
+    let mut vals = Vec::with_capacity((row_hi - row_lo) * row_vals);
+    let mut row = row_lo;
+    while row < row_hi {
+        let reply = exec.run_tile(art, weights, row as i32)?;
+        let take = (row_hi - row).min(art.tile_rows) * row_vals;
+        vals.extend(reply.values[..take].iter().map(|&v| v as f64));
+        row += art.tile_rows;
+    }
+    Ok(vals)
 }
 
 /// Execute one tile. Returns Ok(true) if it ran via PJRT.
@@ -254,15 +471,14 @@ fn run_tile(state: &JobState, tile: &Tile, executor: Option<&PjrtExecutor>) -> R
     let r = spec.rank();
     let (values, used_pjrt): (Vec<f64>, bool) = match (&state.artifact, executor) {
         (Some(art), Some(exec)) => {
-            // PJRT path: the artifact computes `art.tile_rows` rows per call.
-            let mut vals = Vec::with_capacity(tile.num_values());
-            let mut row = tile.row_lo;
-            while row < tile.row_hi {
-                let reply = exec.run_tile(art, &state.weights_f32, row as i32)?;
-                let take = ((tile.row_hi - row).min(art.tile_rows)) * spec.m * r;
-                vals.extend(reply.values[..take].iter().map(|&v| v as f64));
-                row += art.tile_rows;
-            }
+            let vals = pjrt_tile_values(
+                exec,
+                art,
+                &state.weights_f32,
+                tile.row_lo,
+                tile.row_hi,
+                spec.m * r,
+            )?;
             (vals, true)
         }
         _ => {
@@ -289,6 +505,88 @@ fn run_tile(state: &JobState, tile: &Tile, executor: Option<&PjrtExecutor>) -> R
     let mut buf = state.values.lock().expect("values poisoned");
     buf[base..base + values.len()].copy_from_slice(&values);
     Ok(used_pjrt)
+}
+
+/// Execute one tile of a whole-model job. Returns Ok(true) if it ran via
+/// PJRT.
+fn run_model_tile(
+    state: &ModelJobState,
+    layer: usize,
+    row_lo: usize,
+    row_hi: usize,
+    executor: Option<&PjrtExecutor>,
+) -> Result<bool> {
+    let lp = state.plan.layer_plan(layer);
+    let r = lp.rank();
+    let mc = lp.coarse_cols();
+    let (values, used_pjrt): (Vec<f64>, bool) = match (&state.artifacts[layer], executor) {
+        (Some(art), Some(exec)) => {
+            let vals = pjrt_tile_values(
+                exec,
+                art,
+                &state.weights_f32[layer],
+                row_lo,
+                row_hi,
+                mc * r,
+            )?;
+            (vals, true)
+        }
+        _ => {
+            if state.artifacts[layer].is_none() && state.spec.backend == Backend::Pjrt {
+                let k = lp.kernel();
+                return Err(err!(
+                    "model job {}: PJRT backend requested but no artifact matches layer \
+                     {:?} (n={}, c_out={}, c_in={}); run `make artifacts` or use Backend::Auto",
+                    state.spec.id,
+                    state.plan.layer_name(layer),
+                    lp.coarse_rows(),
+                    k.c_out,
+                    k.c_in
+                ));
+            }
+            // Native path: execute against the layer's plan inside the
+            // shared ModelPlan. Workspace checkout goes to the layer
+            // *group's* pool, so equal-shape layers reuse each other's
+            // scratch across the whole model.
+            let mut vals = vec![0.0f64; (row_hi - row_lo) * mc * r];
+            lp.execute_rows_pooled(row_lo, row_hi, &mut vals);
+            (vals, false)
+        }
+    };
+    let base = state.plan.layer_offset(layer) + row_lo * mc * r;
+    let mut buf = state.values.lock().expect("values poisoned");
+    buf[base..base + values.len()].copy_from_slice(&values);
+    Ok(used_pjrt)
+}
+
+fn finish_model_job(state: &ModelJobState, metrics: &Metrics) {
+    let values = std::mem::take(&mut *state.values.lock().expect("values poisoned"));
+    let spectra = state.plan.spectra_from_flat(&values);
+    let mut layers = Vec::with_capacity(spectra.layers.len());
+    let mut pjrt_total = 0usize;
+    let mut native_total = 0usize;
+    for (i, layer) in spectra.layers.into_iter().enumerate() {
+        let c = &state.layer_counters[i];
+        let pjrt = c.pjrt.load(Ordering::Relaxed);
+        let native = c.native.load(Ordering::Relaxed);
+        pjrt_total += pjrt;
+        native_total += native;
+        layers.push(LayerOutcome {
+            name: layer.name,
+            spectrum: layer.spectrum,
+            elapsed: Duration::from_nanos(c.work_nanos.load(Ordering::Relaxed)),
+            pjrt_tiles: pjrt,
+            native_tiles: native,
+        });
+    }
+    metrics.jobs_completed.fetch_add(layers.len() as u64, Ordering::Relaxed);
+    let _ = state.done_tx.send(Ok(ModelJobResult {
+        id: state.spec.id.clone(),
+        layers,
+        elapsed: state.started.elapsed(),
+        pjrt_tiles: pjrt_total,
+        native_tiles: native_total,
+    }));
 }
 
 fn finish_job(state: &JobState, metrics: &Metrics) {

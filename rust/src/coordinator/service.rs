@@ -4,11 +4,10 @@
 //! object that analyzes layers and whole models, verifies results against
 //! the Frobenius identity, and reports per-layer spectral summaries.
 
-use super::job::{Backend, JobSpec};
+use super::job::{Backend, JobSpec, ModelJobSpec};
 use super::metrics::MetricsSnapshot;
 use super::scheduler::{JobResult, Scheduler, SchedulerConfig};
 use crate::conv::ConvKernel;
-use crate::err;
 use crate::error::Result;
 use crate::lfa::{self, BlockSolver};
 use crate::model::config::ModelConfig;
@@ -123,23 +122,33 @@ impl SpectralService {
         Ok(self.report(name, kernel, n, m, result))
     }
 
-    /// Analyze every conv layer of a model config (weights He-initialized
+    /// Analyze every conv layer of a model config (weights materialized
     /// from the config's seed — the paper's "random weight tensors").
+    ///
+    /// The whole model is submitted as **one planned job**: the scheduler
+    /// builds a single [`crate::engine::ModelPlan`] (equal-shape layers
+    /// share workspace pools) and executes per-layer tiles against it —
+    /// no per-layer plan lookups. Per-layer `elapsed` is summed tile work,
+    /// not wall-clock, since tiles of different layers interleave.
     pub fn audit_model(&self, model: &ModelConfig) -> Result<Vec<LayerReport>> {
-        // Submit all layers first (the queue pipelines them), then collect.
-        let mut pending = Vec::new();
-        for layer in &model.layers {
+        let spec = ModelJobSpec::new(&model.name, model.clone())
+            .with_backend(self.config.backend)
+            .with_solver(self.config.solver);
+        let result = self.scheduler.run_model(spec)?;
+        let mut reports = Vec::with_capacity(result.layers.len());
+        for (layer, outcome) in model.layers.iter().zip(result.layers) {
             let kernel = layer.materialize(model.seed);
-            let spec = JobSpec::new(&layer.name, kernel.clone(), layer.height, layer.width)
-                .with_backend(self.config.backend)
-                .with_solver(self.config.solver);
-            let rx = self.scheduler.submit(spec);
-            pending.push((layer.clone(), kernel, rx));
-        }
-        let mut reports = Vec::new();
-        for (layer, kernel, rx) in pending {
-            let result = rx.recv().map_err(|_| err!("job dropped"))??;
-            reports.push(self.report(&layer.name, &kernel, layer.height, layer.width, result));
+            reports.push(self.layer_report(
+                outcome.name,
+                &kernel,
+                layer.height,
+                layer.width,
+                layer.stride,
+                outcome.spectrum,
+                outcome.elapsed,
+                outcome.pjrt_tiles,
+                outcome.native_tiles,
+            ));
         }
         Ok(reports)
     }
@@ -152,26 +161,54 @@ impl SpectralService {
         m: usize,
         result: JobResult,
     ) -> LayerReport {
+        self.layer_report(
+            name.to_string(),
+            kernel,
+            n,
+            m,
+            1,
+            result.spectrum,
+            result.elapsed,
+            result.pjrt_tiles,
+            result.native_tiles,
+        )
+    }
+
+    /// Shared [`LayerReport`] assembly for the per-layer and whole-model
+    /// paths. `n`/`m` are the fine input grid; `stride` selects the right
+    /// Frobenius identity (`frobenius_check` is the stride-1 special case).
+    fn layer_report(
+        &self,
+        name: String,
+        kernel: &ConvKernel,
+        n: usize,
+        m: usize,
+        stride: usize,
+        spectrum: lfa::Spectrum,
+        elapsed: Duration,
+        pjrt_tiles: usize,
+        native_tiles: usize,
+    ) -> LayerReport {
         let defect = if self.config.verify {
-            lfa::svd::frobenius_check(kernel, n, m, &result.spectrum)
+            lfa::svd::frobenius_check_strided(kernel, n, m, stride, &spectrum)
         } else {
             f64::NAN
         };
         LayerReport {
-            name: name.to_string(),
+            name,
             n,
             m,
             c_out: kernel.c_out,
             c_in: kernel.c_in,
-            num_values: result.spectrum.num_values(),
-            sigma_max: result.spectrum.sigma_max(),
-            sigma_min: result.spectrum.sigma_min(),
-            condition: result.spectrum.condition_number(),
-            elapsed: result.elapsed,
-            pjrt_tiles: result.pjrt_tiles,
-            native_tiles: result.native_tiles,
+            num_values: spectrum.num_values(),
+            sigma_max: spectrum.sigma_max(),
+            sigma_min: spectrum.sigma_min(),
+            condition: spectrum.condition_number(),
+            elapsed,
+            pjrt_tiles,
+            native_tiles,
             frobenius_defect: defect,
-            spectrum: result.spectrum,
+            spectrum,
         }
     }
 

@@ -11,23 +11,28 @@
 //!   many times (training-loop clipping, repeated audits) without
 //!   re-planning or re-allocating.
 //! - [`Workspace`] — per-worker scratch: symbol block, per-tap phases, and
-//!   the Jacobi / Gram solver work matrices.
+//!   the Jacobi / Gram solver work matrices, pooled in a [`WorkspacePool`].
 //! - [`SpectralBackend`] — execution strategies over a plan:
 //!   [`NativeSerial`], [`NativeThreaded`], and (feature `pjrt`) a PJRT
 //!   artifact backend.
+//! - [`ModelPlan`] — every conv layer of a model planned once: layers with
+//!   equal block shape share one workspace pool, and whole-model audits,
+//!   clipping and compression run as a single batched sweep.
 //!
 //! `lfa::svd`, `lfa::stride`, the FFT baseline's SVD stage and the
 //! coordinator's tile workers are all thin wrappers over this module.
 
 pub mod backend;
+pub mod model_plan;
 pub mod plan;
 pub mod workspace;
 
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
 pub use backend::{NativeSerial, NativeThreaded, SpectralBackend};
+pub use model_plan::{LayerSpectrum, ModelPlan, ModelSpectra};
 pub use plan::SpectralPlan;
-pub use workspace::Workspace;
+pub use workspace::{Workspace, WorkspacePool};
 
 /// Resolve a thread-count option: `0` means auto (`available_parallelism`),
 /// anything else is taken literally. This is the single source of truth for

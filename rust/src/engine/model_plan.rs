@@ -1,0 +1,489 @@
+//! [`ModelPlan`]: every conv layer of a model, planned once, executed as
+//! one batched sweep.
+//!
+//! Whole-model workloads — spectral audits, training-loop clipping
+//! (Senderovich et al.), compression sweeps — decompose the *same* layers
+//! over and over. A `ModelPlan` amortizes the planning exactly once across
+//! all of them:
+//!
+//! - every layer gets a [`SpectralPlan`] (phase tables, strided dual-grid
+//!   geometry) built at construction, never per call;
+//! - layers with equal per-frequency block shape (`c_out × s²·c_in` — the
+//!   `(c_out, c_in, solver, layout)` grouping key with one options set) are
+//!   **batched into a group sharing one [`WorkspacePool`]**, so a VGG-style
+//!   stack with six equal-shape layers warms one scratch set, not six;
+//! - `execute*` runs all layers back-to-back: serially as one group-major
+//!   solver sweep, threaded as a single scoped fan-out over the whole
+//!   model's frequency rows (one spawn round instead of one per layer), or
+//!   through any [`SpectralBackend`] via [`ModelPlan::execute_with`].
+//!
+//! The whole-model entry points mirror the per-layer ones:
+//! [`ModelPlan::execute`] (spectra), [`ModelPlan::full_svd_all`] (factors),
+//! [`ModelPlan::clip_all`] (plan-reuse clipping for training loops) and
+//! [`ModelPlan::lowrank_all`] (compression). The coordinator submits whole
+//! models as one `ModelPlan` (see `coordinator::scheduler::submit_model`),
+//! and the `audit-model` CLI subcommand drives one directly.
+
+use super::backend::SpectralBackend;
+use super::plan::SpectralPlan;
+use super::workspace::{Workspace, WorkspacePool};
+use crate::bail;
+use crate::error::Result;
+use crate::lfa::spectrum::{FullSvd, Spectrum};
+use crate::lfa::svd::LfaOptions;
+use crate::model::config::ModelConfig;
+use crate::spectral::clip::{clip_with_plan, ClipResult};
+use crate::spectral::lowrank::{compress_from_svd, LowRankConv};
+use std::sync::Arc;
+
+/// One planned layer of a [`ModelPlan`].
+struct LayerEntry {
+    name: String,
+    plan: SpectralPlan,
+    /// Start of this layer's values in the whole-model buffer. Offsets are
+    /// assigned in group-major order so the batched sweep writes the buffer
+    /// front to back.
+    offset: usize,
+    /// Index into the plan's equal-shape groups.
+    group: usize,
+}
+
+/// A contiguous run of one layer's coarse frequency rows — the unit the
+/// threaded whole-model sweep partitions.
+struct Span {
+    layer: usize,
+    lo: usize,
+    hi: usize,
+    /// Singular values this span produces.
+    len: usize,
+}
+
+/// The spectrum of one layer, as produced by a whole-model execution.
+#[derive(Clone, Debug)]
+pub struct LayerSpectrum {
+    pub name: String,
+    pub spectrum: Spectrum,
+}
+
+/// Per-layer spectra of a whole model, plus aggregate views.
+#[derive(Clone, Debug)]
+pub struct ModelSpectra {
+    /// Model name (from the config).
+    pub model: String,
+    /// Layers in original model order.
+    pub layers: Vec<LayerSpectrum>,
+}
+
+impl ModelSpectra {
+    /// Total singular values across all layers.
+    pub fn num_values(&self) -> usize {
+        self.layers.iter().map(|l| l.spectrum.num_values()).sum()
+    }
+
+    /// Largest singular value anywhere in the model.
+    pub fn sigma_max(&self) -> f64 {
+        self.layers.iter().map(|l| l.spectrum.sigma_max()).fold(0.0, f64::max)
+    }
+
+    /// Smallest singular value anywhere in the model.
+    pub fn sigma_min(&self) -> f64 {
+        self.layers.iter().map(|l| l.spectrum.sigma_min()).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Composition bound on the network's Lipschitz constant: the product
+    /// of per-layer spectral norms (tight only for linear chains, but the
+    /// standard certified bound — Szegedy et al. 2014).
+    pub fn lipschitz_upper_bound(&self) -> f64 {
+        self.layers.iter().map(|l| l.spectrum.sigma_max()).product()
+    }
+
+    /// Look a layer up by name.
+    pub fn layer(&self, name: &str) -> Option<&LayerSpectrum> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+}
+
+/// A whole model planned once: per-layer [`SpectralPlan`]s, equal-shape
+/// groups sharing workspace pools, and batched whole-model execution.
+pub struct ModelPlan {
+    name: String,
+    /// Layers in original model order.
+    layers: Vec<LayerEntry>,
+    /// Layer indices in buffer (group-major) order.
+    exec_order: Vec<usize>,
+    /// Equal-shape groups: member layer indices, original order within.
+    groups: Vec<Vec<usize>>,
+    total_values: usize,
+    threads: usize,
+}
+
+impl ModelPlan {
+    /// Plan every layer of `model` once. Layers are materialized from the
+    /// config's seed (the paper's "random weight tensors"), grouped by
+    /// per-frequency block shape, and each group shares one workspace pool.
+    /// `opts.threads` drives the whole-model sweep; the per-layer plans are
+    /// built serial (the model plan owns the parallelism).
+    pub fn build(model: &ModelConfig, opts: LfaOptions) -> Result<ModelPlan> {
+        if model.layers.is_empty() {
+            bail!("model {:?} has no layers to plan", model.name);
+        }
+        // Validate and compute per-layer block shapes + tap counts.
+        let mut shapes: Vec<(usize, usize, usize)> = Vec::with_capacity(model.layers.len());
+        for l in &model.layers {
+            if l.stride == 0 || l.height % l.stride != 0 || l.width % l.stride != 0 {
+                bail!(
+                    "layer {:?}: stride {} must be nonzero and divide the {}x{} grid",
+                    l.name,
+                    l.stride,
+                    l.height,
+                    l.width
+                );
+            }
+            shapes.push((l.c_out, l.stride * l.stride * l.c_in, l.kh * l.kw));
+        }
+        // Group layers with equal block shape. Solver and layout are uniform
+        // across one plan's options, so the (c_out, c_in, solver, layout)
+        // batching key reduces to the block shape here; tap counts may
+        // differ within a group and the pool is sized for the largest.
+        let mut keys: Vec<(usize, usize)> = Vec::new();
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        for (i, &(rows, cols, _)) in shapes.iter().enumerate() {
+            match keys.iter().position(|&k| k == (rows, cols)) {
+                Some(g) => groups[g].push(i),
+                None => {
+                    keys.push((rows, cols));
+                    groups.push(vec![i]);
+                }
+            }
+        }
+        let mut group_of = vec![0usize; model.layers.len()];
+        let mut pools: Vec<Arc<WorkspacePool>> = Vec::with_capacity(groups.len());
+        for (g, members) in groups.iter().enumerate() {
+            let (rows, cols) = keys[g];
+            let ntaps = members.iter().map(|&i| shapes[i].2).max().unwrap_or(1);
+            pools.push(Arc::new(WorkspacePool::for_block(rows, cols, ntaps)));
+            for &i in members {
+                group_of[i] = g;
+            }
+        }
+        // Build the per-layer plans against the shared pools.
+        let layer_opts = LfaOptions { threads: 1, ..opts };
+        let mut plans: Vec<SpectralPlan> = Vec::with_capacity(model.layers.len());
+        for (i, l) in model.layers.iter().enumerate() {
+            let kernel = l.materialize(model.seed);
+            plans.push(SpectralPlan::with_shared_pool(
+                &kernel,
+                l.height,
+                l.width,
+                l.stride,
+                layer_opts,
+                Arc::clone(&pools[group_of[i]]),
+            ));
+        }
+        // Assign buffer offsets in group-major order: one batched sweep per
+        // group writes the whole-model buffer front to back.
+        let mut offsets = vec![0usize; plans.len()];
+        let mut exec_order = Vec::with_capacity(plans.len());
+        let mut offset = 0usize;
+        for members in &groups {
+            for &i in members {
+                offsets[i] = offset;
+                offset += plans[i].values_len();
+                exec_order.push(i);
+            }
+        }
+        let mut layers = Vec::with_capacity(plans.len());
+        for (i, plan) in plans.into_iter().enumerate() {
+            layers.push(LayerEntry {
+                name: model.layers[i].name.clone(),
+                plan,
+                offset: offsets[i],
+                group: group_of[i],
+            });
+        }
+        Ok(ModelPlan {
+            name: model.name.clone(),
+            layers,
+            exec_order,
+            groups,
+            total_values: offset,
+            threads: opts.threads,
+        })
+    }
+
+    /// Model name (from the config).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Number of planned layers.
+    pub fn layer_count(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Name of layer `i` (original model order).
+    pub fn layer_name(&self, i: usize) -> &str {
+        &self.layers[i].name
+    }
+
+    /// The planned pipeline of layer `i`.
+    pub fn layer_plan(&self, i: usize) -> &SpectralPlan {
+        &self.layers[i].plan
+    }
+
+    /// Start of layer `i`'s values in the whole-model buffer.
+    pub fn layer_offset(&self, i: usize) -> usize {
+        self.layers[i].offset
+    }
+
+    /// Number of equal-shape groups (== distinct block shapes).
+    pub fn group_count(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Member layer indices of group `g`.
+    pub fn group_members(&self, g: usize) -> &[usize] {
+        &self.groups[g]
+    }
+
+    /// Total singular values across all layers — the length of the buffer
+    /// [`Self::execute_into`] fills.
+    pub fn values_len(&self) -> usize {
+        self.total_values
+    }
+
+    /// Worker count a whole-model sweep will use (0 in options = auto).
+    pub fn effective_threads(&self) -> usize {
+        let freqs: usize = self.layers.iter().map(|l| l.plan.freqs()).sum();
+        // Tiny models: thread spawn overhead dominates the whole pipeline.
+        if freqs < 64 {
+            return 1;
+        }
+        let total_rows: usize = self.layers.iter().map(|l| l.plan.coarse_rows()).sum();
+        super::resolve_threads(self.threads).min(total_rows.max(1))
+    }
+
+    /// Execute every layer into a caller-provided whole-model buffer
+    /// (`values_len()` long). Serially this is one group-major batched
+    /// sweep — a single workspace checkout per group, zero heap allocation
+    /// per frequency. Threaded, the model's frequency rows are partitioned
+    /// across one scoped worker fan-out (not one per layer).
+    pub fn execute_into(&self, out: &mut [f64]) {
+        assert_eq!(out.len(), self.total_values, "output buffer length mismatch");
+        let threads = self.effective_threads();
+        if threads <= 1 {
+            for members in &self.groups {
+                let mut ws = self.layers[members[0]].plan.checkout();
+                for &i in members {
+                    let l = &self.layers[i];
+                    let slice = &mut out[l.offset..l.offset + l.plan.values_len()];
+                    l.plan.execute_rows(0, l.plan.coarse_rows(), &mut ws, slice);
+                }
+                self.layers[members[0]].plan.restore(ws);
+            }
+            return;
+        }
+        // Cut layers into row spans (buffer order), then hand contiguous
+        // runs of roughly equal value counts to each worker.
+        let spans_target = (threads * 4).max(1);
+        let total_rows: usize = self.layers.iter().map(|l| l.plan.coarse_rows()).sum();
+        let rows_per = total_rows.div_ceil(spans_target).max(1);
+        let mut spans: Vec<Span> = Vec::new();
+        for &i in &self.exec_order {
+            let plan = &self.layers[i].plan;
+            let nc = plan.coarse_rows();
+            let row_vals = plan.coarse_cols() * plan.rank();
+            let mut lo = 0usize;
+            while lo < nc {
+                let hi = (lo + rows_per).min(nc);
+                spans.push(Span { layer: i, lo, hi, len: (hi - lo) * row_vals });
+                lo = hi;
+            }
+        }
+        let target = self.total_values.div_ceil(threads).max(1);
+        std::thread::scope(|scope| {
+            let mut rest: &mut [f64] = out;
+            let mut s0 = 0usize;
+            while s0 < spans.len() {
+                let mut s1 = s0;
+                let mut acc = 0usize;
+                while s1 < spans.len() && acc < target {
+                    acc += spans[s1].len;
+                    s1 += 1;
+                }
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(acc);
+                rest = tail;
+                let chunk = &spans[s0..s1];
+                scope.spawn(move || self.execute_spans(chunk, head));
+                s0 = s1;
+            }
+        });
+    }
+
+    /// Worker body: execute a contiguous run of spans, checking one
+    /// workspace out per group transition (spans arrive group-major, so a
+    /// worker crossing layers inside one group keeps its scratch).
+    fn execute_spans(&self, spans: &[Span], out: &mut [f64]) {
+        let mut cur_group = usize::MAX;
+        let mut ws: Option<Workspace> = None;
+        let mut pos = 0usize;
+        for s in spans {
+            let l = &self.layers[s.layer];
+            if l.group != cur_group {
+                if let Some(w) = ws.take() {
+                    self.group_pool(cur_group).restore(w);
+                }
+                ws = Some(l.plan.checkout());
+                cur_group = l.group;
+            }
+            let w = ws.as_mut().expect("workspace checked out above");
+            l.plan.execute_rows(s.lo, s.hi, w, &mut out[pos..pos + s.len]);
+            pos += s.len;
+        }
+        if let Some(w) = ws.take() {
+            self.group_pool(cur_group).restore(w);
+        }
+    }
+
+    fn group_pool(&self, g: usize) -> &Arc<WorkspacePool> {
+        self.layers[self.groups[g][0]].plan.workspace_pool()
+    }
+
+    /// Execute the whole model and package per-layer spectra.
+    pub fn execute(&self) -> ModelSpectra {
+        let mut values = vec![0.0f64; self.total_values];
+        self.execute_into(&mut values);
+        self.spectra_from_flat(&values)
+    }
+
+    /// Execute every layer back-to-back through an explicit backend
+    /// (serial, threaded, or — feature `pjrt` — an AOT artifact sweep).
+    pub fn execute_with(&self, backend: &dyn SpectralBackend) -> Result<ModelSpectra> {
+        let mut values = vec![0.0f64; self.total_values];
+        for &i in &self.exec_order {
+            let l = &self.layers[i];
+            backend.execute_into(&l.plan, &mut values[l.offset..l.offset + l.plan.values_len()])?;
+        }
+        Ok(self.spectra_from_flat(&values))
+    }
+
+    /// Split a flat whole-model buffer (as filled by [`Self::execute_into`])
+    /// into per-layer spectra, original model order.
+    pub fn spectra_from_flat(&self, values: &[f64]) -> ModelSpectra {
+        assert_eq!(values.len(), self.total_values, "flat buffer length mismatch");
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| {
+                let p = &l.plan;
+                LayerSpectrum {
+                    name: l.name.clone(),
+                    spectrum: Spectrum {
+                        n: p.coarse_rows(),
+                        m: p.coarse_cols(),
+                        c_out: p.block_shape().0,
+                        c_in: p.block_shape().1,
+                        values: values[l.offset..l.offset + p.values_len()].to_vec(),
+                    },
+                }
+            })
+            .collect();
+        ModelSpectra { model: self.name.clone(), layers }
+    }
+
+    /// Full per-frequency SVD of every layer (original model order).
+    pub fn full_svd_all(&self) -> Vec<FullSvd> {
+        self.layers.iter().map(|l| l.plan.execute_full()).collect()
+    }
+
+    /// Clip every layer's spectrum at `cap` against the held plans — the
+    /// training-loop shape: plan once at startup, clip every step without
+    /// re-planning. Only defined for stride-1 layers (the least-squares
+    /// kernel projection needs the dense symbol grid).
+    pub fn clip_all(&self, cap: f64) -> Result<Vec<ClipResult>> {
+        for l in &self.layers {
+            if l.plan.stride() != 1 {
+                bail!(
+                    "clip_all: layer {:?} has stride {} — kernel projection is only \
+                     defined for dense (stride-1) layers",
+                    l.name,
+                    l.plan.stride()
+                );
+            }
+        }
+        Ok(self.layers.iter().map(|l| clip_with_plan(&l.plan, cap)).collect())
+    }
+
+    /// Rank-`r` truncation of every layer (Eckart–Young optimal per
+    /// frequency), original model order.
+    pub fn lowrank_all(&self, rank: usize) -> Vec<LowRankConv> {
+        self.layers.iter().map(|l| compress_from_svd(&l.plan.execute_full(), rank)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    const MIXED: &str = r#"
+name = "mixed"
+seed = 11
+
+[[layer]]
+name   = "a1"
+c_in   = 3
+c_out  = 4
+height = 8
+width  = 8
+
+[[layer]]
+name   = "b"
+c_in   = 2
+c_out  = 3
+height = 6
+width  = 6
+
+[[layer]]
+name   = "a2"
+c_in   = 3
+c_out  = 4
+height = 4
+width  = 8
+"#;
+
+    #[test]
+    fn groups_equal_shapes_and_preserves_order() {
+        let model = ModelConfig::parse(MIXED).unwrap();
+        let mp = ModelPlan::build(&model, LfaOptions { threads: 1, ..Default::default() })
+            .unwrap();
+        assert_eq!(mp.layer_count(), 3);
+        assert_eq!(mp.group_count(), 2, "a1 and a2 share a 4x3 group");
+        assert_eq!(mp.group_members(0), &[0, 2]);
+        assert_eq!(mp.group_members(1), &[1]);
+        assert_eq!(
+            mp.values_len(),
+            model.layers.iter().map(|l| l.num_values()).sum::<usize>()
+        );
+        let spectra = mp.execute();
+        // Spectra come back in original model order regardless of grouping.
+        assert_eq!(spectra.layers[0].name, "a1");
+        assert_eq!(spectra.layers[1].name, "b");
+        assert_eq!(spectra.layers[2].name, "a2");
+        assert_eq!(spectra.num_values(), mp.values_len());
+        assert!(spectra.sigma_max() > 0.0);
+        assert!(spectra.lipschitz_upper_bound() > 0.0);
+        assert!(spectra.layer("b").is_some());
+        assert!(spectra.layer("nope").is_none());
+    }
+
+    #[test]
+    fn empty_model_is_rejected() {
+        let model = ModelConfig {
+            name: "empty".into(),
+            seed: 0,
+            layers: Vec::new(),
+        };
+        assert!(ModelPlan::build(&model, LfaOptions::default()).is_err());
+    }
+}

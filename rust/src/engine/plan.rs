@@ -19,7 +19,7 @@
 //! `lfa::stride`, the FFT baseline's SVD stage, the coordinator's tiles —
 //! is a thin wrapper over this type.
 
-use super::workspace::Workspace;
+use super::workspace::{Workspace, WorkspacePool};
 use crate::conv::ConvKernel;
 use crate::lfa::spectrum::{FullSvd, Spectrum};
 use crate::lfa::svd::{BlockSolver, LfaOptions};
@@ -27,7 +27,7 @@ use crate::lfa::symbol::{scatter_shard, BlockLayout, SymbolGrid};
 use crate::linalg::jacobi_svd;
 use crate::numeric::{C64, CMat};
 use std::f64::consts::PI;
-use std::sync::Mutex;
+use std::sync::Arc;
 
 /// A planned, reusable symbol→SVD execution for one convolution layer.
 pub struct SpectralPlan {
@@ -52,7 +52,9 @@ pub struct SpectralPlan {
     /// Column-axis phase table, flattened `[kw][m]`.
     px: Vec<C64>,
     /// Reusable per-worker workspaces (checked out per execution range).
-    pool: Mutex<Vec<Workspace>>,
+    /// Owned by this plan alone, or shared with other equal-shape plans of a
+    /// [`super::ModelPlan`] group.
+    pool: Arc<WorkspacePool>,
 }
 
 impl SpectralPlan {
@@ -70,8 +72,34 @@ impl SpectralPlan {
         s: usize,
         opts: LfaOptions,
     ) -> Self {
+        // Prewarm one workspace: the serial path never allocates at execute
+        // time, and threaded paths grow the pool once on first use.
+        let pool = Arc::new(WorkspacePool::for_block(
+            kernel.c_out,
+            s * s * kernel.c_in,
+            kernel.kh * kernel.kw,
+        ));
+        Self::with_shared_pool(kernel, n, m, s, opts, pool)
+    }
+
+    /// [`Self::with_stride`] drawing scratch from an existing shared pool
+    /// instead of creating one. This is how [`super::ModelPlan`] batches
+    /// layers with equal block shape into one workspace-sharing group; the
+    /// pool must cover this plan's `c_out × s²·c_in` blocks and tap count.
+    pub fn with_shared_pool(
+        kernel: &ConvKernel,
+        n: usize,
+        m: usize,
+        s: usize,
+        opts: LfaOptions,
+        pool: Arc<WorkspacePool>,
+    ) -> Self {
         assert!(s > 0 && n % s == 0 && m % s == 0, "stride must divide the grid");
         assert!(n > 0 && m > 0, "grid must be nonempty");
+        assert!(
+            pool.covers(kernel.c_out, s * s * kernel.c_in, kernel.kh * kernel.kw),
+            "workspace pool does not cover the plan's block shape"
+        );
         let (ar, ac) = (kernel.anchor.0 as isize, kernel.anchor.1 as isize);
         let mut py = vec![C64::ZERO; kernel.kh * n];
         for d in 0..kernel.kh {
@@ -89,10 +117,6 @@ impl SpectralPlan {
         }
         let block_rows = kernel.c_out;
         let block_cols = s * s * kernel.c_in;
-        let ntaps = kernel.kh * kernel.kw;
-        // Prewarm one workspace: the serial path never allocates at execute
-        // time, and threaded paths grow the pool once on first use.
-        let pool = Mutex::new(vec![Workspace::for_block(block_rows, block_cols, ntaps)]);
         Self {
             kernel: kernel.clone(),
             n,
@@ -152,6 +176,16 @@ impl SpectralPlan {
         self.stride
     }
 
+    /// Rows of the fine input grid (`coarse_rows · stride`).
+    pub fn fine_rows(&self) -> usize {
+        self.n
+    }
+
+    /// Columns of the fine input grid (`coarse_cols · stride`).
+    pub fn fine_cols(&self) -> usize {
+        self.m
+    }
+
     /// The kernel the plan owns (a clone of the one it was built from).
     pub fn kernel(&self) -> &ConvKernel {
         &self.kernel
@@ -168,17 +202,21 @@ impl SpectralPlan {
 
     /// Check a workspace out of the plan's pool (or build a fresh one if all
     /// are in use). Return it with [`Self::restore`] so later executions and
-    /// other workers can reuse the buffers.
+    /// other workers — including other plans sharing the pool — can reuse
+    /// the buffers.
     pub fn checkout(&self) -> Workspace {
-        let ws = self.pool.lock().expect("workspace pool poisoned").pop();
-        ws.unwrap_or_else(|| {
-            Workspace::for_block(self.block_rows, self.block_cols, self.kernel.kh * self.kernel.kw)
-        })
+        self.pool.checkout()
     }
 
     /// Return a checked-out workspace to the pool.
     pub fn restore(&self, ws: Workspace) {
-        self.pool.lock().expect("workspace pool poisoned").push(ws);
+        self.pool.restore(ws);
+    }
+
+    /// The workspace pool this plan draws from (shared across a
+    /// [`super::ModelPlan`] group, private otherwise).
+    pub fn workspace_pool(&self) -> &Arc<WorkspacePool> {
+        &self.pool
     }
 
     /// Fill `ws.block` with the symbol at coarse frequency `(ki, kj)`:
@@ -432,6 +470,28 @@ mod tests {
         let a = plan.execute();
         let b = plan.execute();
         assert_eq!(a.values, b.values, "repeated execution must be bitwise identical");
+    }
+
+    #[test]
+    fn shared_pool_plans_agree_with_private_pool_plans() {
+        let mut rng = Pcg64::seeded(603);
+        let k1 = ConvKernel::random_he(3, 2, 3, 3, &mut rng);
+        let k2 = ConvKernel::random_he(3, 2, 3, 3, &mut rng);
+        let opts = LfaOptions { threads: 1, ..Default::default() };
+        let pool = Arc::new(WorkspacePool::for_block(3, 2, 9));
+        let a = SpectralPlan::with_shared_pool(&k1, 6, 6, 1, opts, Arc::clone(&pool));
+        let b = SpectralPlan::with_shared_pool(&k2, 4, 8, 1, opts, pool);
+        assert_eq!(a.execute().values, SpectralPlan::new(&k1, 6, 6, opts).execute().values);
+        assert_eq!(b.execute().values, SpectralPlan::new(&k2, 4, 8, opts).execute().values);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not cover")]
+    fn mismatched_shared_pool_is_rejected() {
+        let mut rng = Pcg64::seeded(604);
+        let k = ConvKernel::random_he(4, 4, 3, 3, &mut rng);
+        let pool = Arc::new(WorkspacePool::for_block(2, 2, 9));
+        let _ = SpectralPlan::with_shared_pool(&k, 4, 4, 1, LfaOptions::default(), pool);
     }
 
     #[test]

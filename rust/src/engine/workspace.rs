@@ -3,16 +3,21 @@
 //! A [`Workspace`] owns everything a worker needs to turn one frequency into
 //! its singular values: the symbol block buffer, the per-tap phase scratch,
 //! and the solver work matrices (one-sided Jacobi row form, Gram/eigen work
-//! matrix). All buffers are sized once — either at plan construction or on a
+//! matrix). All buffers are sized once — either at pool construction or on a
 //! worker's first block — so the per-frequency hot loop performs **zero heap
-//! allocation**. Workspaces live in the plan's pool (see
-//! [`super::SpectralPlan`]) and are checked out per execution range, which
-//! makes repeated `execute()` calls on one plan allocation-free end to end.
+//! allocation**.
+//!
+//! Workspaces live in a [`WorkspacePool`]. Every [`super::SpectralPlan`]
+//! owns (or shares) one: a standalone plan creates its own, while
+//! [`super::ModelPlan`] hands one shared pool to every layer of an
+//! equal-shape group, so a whole-model sweep reuses the same scratch buffers
+//! across layers instead of warming one set per layer.
 
 use crate::lfa::svd::BlockSolver;
 use crate::linalg::jacobi_eig::{self, GramScratch};
 use crate::linalg::jacobi_svd::{self, JacobiScratch};
 use crate::numeric::C64;
+use std::sync::Mutex;
 
 /// Reusable per-worker scratch buffers for block symbol + SVD work.
 pub struct Workspace {
@@ -57,6 +62,56 @@ impl Workspace {
     }
 }
 
+/// A shared pool of [`Workspace`]s for one per-frequency block shape.
+///
+/// The pool is sized for `rows×cols` blocks and for the *largest* tap count
+/// of any plan drawing from it (tap counts may differ within an equal-shape
+/// layer group — a 3×3 and a 5×5 kernel with the same channel counts share a
+/// pool sized for 25 taps). `checkout` pops a ready workspace or builds one
+/// at the recorded sizing; `restore` returns it for later executions and
+/// other workers. One workspace is prewarmed at construction so serial
+/// executions never allocate.
+pub struct WorkspacePool {
+    rows: usize,
+    cols: usize,
+    ntaps: usize,
+    pool: Mutex<Vec<Workspace>>,
+}
+
+impl WorkspacePool {
+    /// Pool for `rows×cols` blocks with up to `ntaps` kernel taps.
+    pub fn for_block(rows: usize, cols: usize, ntaps: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            ntaps,
+            pool: Mutex::new(vec![Workspace::for_block(rows, cols, ntaps)]),
+        }
+    }
+
+    /// The block shape this pool's workspaces are sized for.
+    pub fn block_shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Whether workspaces from this pool can serve `rows×cols` blocks with
+    /// `ntaps` taps (exact block shape, tap capacity at least `ntaps`).
+    pub fn covers(&self, rows: usize, cols: usize, ntaps: usize) -> bool {
+        self.rows == rows && self.cols == cols && self.ntaps >= ntaps
+    }
+
+    /// Check a workspace out (or build a fresh one if all are in use).
+    pub fn checkout(&self) -> Workspace {
+        let ws = self.pool.lock().expect("workspace pool poisoned").pop();
+        ws.unwrap_or_else(|| Workspace::for_block(self.rows, self.cols, self.ntaps))
+    }
+
+    /// Return a checked-out workspace for reuse.
+    pub fn restore(&self, ws: Workspace) {
+        self.pool.lock().expect("workspace pool poisoned").push(ws);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -78,5 +133,23 @@ mod tests {
         for (x, y) in want.iter().zip(&got) {
             assert!((x - y).abs() < 1e-7);
         }
+    }
+
+    #[test]
+    fn pool_checkout_restore_reuses_and_covers() {
+        let pool = WorkspacePool::for_block(3, 2, 9);
+        assert_eq!(pool.block_shape(), (3, 2));
+        assert!(pool.covers(3, 2, 9));
+        assert!(pool.covers(3, 2, 4), "smaller tap counts are covered");
+        assert!(!pool.covers(3, 2, 25), "larger tap counts are not");
+        assert!(!pool.covers(2, 3, 9), "shape must match exactly");
+        let a = pool.checkout();
+        let b = pool.checkout(); // pool empty → fresh build
+        assert!(a.block.len() >= 6 && b.block.len() >= 6);
+        pool.restore(a);
+        pool.restore(b);
+        let c = pool.checkout();
+        assert_eq!(c.block.len(), 6, "restored workspace comes back");
+        pool.restore(c);
     }
 }

@@ -202,8 +202,23 @@ pub fn tile_singular_values(
 /// the kernel fits in the grid (`kh ≤ n`, `kw ≤ m`): larger kernels wrap and
 /// colliding taps accumulate, adding cross terms to the left side.
 pub fn frobenius_check(kernel: &ConvKernel, n: usize, m: usize, spectrum: &Spectrum) -> f64 {
+    frobenius_check_strided(kernel, n, m, 1, spectrum)
+}
+
+/// [`frobenius_check`] for the strided operator `C = D_s ∘ A` on an `n×m`
+/// fine grid. Each coarse block is the `1/s`-scaled concatenation of its
+/// `s²` aliasing fine symbols, so summing `‖block‖²` over the `(n/s)·(m/s)`
+/// coarse frequencies covers every fine symbol once at weight `1/s²`:
+/// `Σσ² = n·m·‖W‖_F²/s²`.
+pub fn frobenius_check_strided(
+    kernel: &ConvKernel,
+    n: usize,
+    m: usize,
+    s: usize,
+    spectrum: &Spectrum,
+) -> f64 {
     let lhs: f64 = spectrum.values.iter().map(|v| v * v).sum();
-    let rhs = (n * m) as f64 * kernel.frobenius_norm().powi(2);
+    let rhs = (n * m) as f64 / (s * s) as f64 * kernel.frobenius_norm().powi(2);
     ((lhs - rhs) / rhs.max(1e-300)).abs()
 }
 
@@ -286,6 +301,14 @@ mod tests {
         let k = ConvKernel::random_he(4, 3, 3, 3, &mut rng);
         let s = singular_values(&k, 8, 6, LfaOptions::default());
         assert!(frobenius_check(&k, 8, 6, &s) < 1e-10);
+    }
+
+    #[test]
+    fn strided_frobenius_identity_holds() {
+        let mut rng = Pcg64::seeded(118);
+        let k = ConvKernel::random_he(4, 2, 3, 3, &mut rng);
+        let s = SpectralPlan::with_stride(&k, 8, 8, 2, LfaOptions::default()).execute();
+        assert!(frobenius_check_strided(&k, 8, 8, 2, &s) < 1e-10);
     }
 
     #[test]

@@ -25,14 +25,16 @@
 //!   layout-aware matrices, deterministic PRNG), [`linalg`] (one-sided
 //!   Jacobi SVD with reusable scratch, Hermitian Jacobi eigensolver,
 //!   Golub–Reinsch reference SVD, QR, power iteration), [`fft`].
-//! - **L2 — LFA core**: [`engine`] (the plan + backends), [`lfa`] (symbols,
-//!   spectra, strided crystal-torus machinery — thin wrappers over the
-//!   engine), [`conv`], [`baselines`] (FFT/explicit routes sharing the
-//!   engine's SVD stage), [`spectral`] (clipping, low-rank compression,
-//!   pseudo-inverse — consumers of the planned `FullSvd`).
+//! - **L2 — LFA core**: [`engine`] (the plan, whole-model
+//!   [`engine::ModelPlan`], backends), [`lfa`] (symbols, spectra, strided
+//!   crystal-torus machinery — thin wrappers over the engine), [`conv`],
+//!   [`baselines`] (FFT/explicit routes sharing the engine's SVD stage),
+//!   [`spectral`] (clipping, low-rank compression, pseudo-inverse —
+//!   consumers of the planned `FullSvd`).
 //! - **L3 — coordinator/service**: [`coordinator`] (frequency-tile
-//!   scheduler whose tiles execute against one shared plan per job,
-//!   metrics, the [`coordinator::SpectralService`] API), [`runtime`]
+//!   scheduler whose tiles execute against one shared plan per job — and,
+//!   for whole models, one shared [`engine::ModelPlan`] per job — metrics,
+//!   the [`coordinator::SpectralService`] API), [`runtime`]
 //!   (AOT artifact manifest; PJRT execution behind the off-by-default
 //!   `pjrt` feature), [`cli`] / [`model`] / [`report`] around them.
 //!
@@ -57,6 +59,34 @@
 //! assert_eq!(spectrum.num_values(), 16 * 16 * 4);
 //! assert!(spectrum.sigma_max() > 0.0);
 //! ```
+//!
+//! ## Whole-model quick start
+//!
+//! A whole CNN is one planned object: [`engine::ModelPlan`] plans every
+//! conv layer once, batches equal-shape layers into groups sharing one
+//! workspace pool, and executes all layers as a single sweep. The same
+//! plan then serves audits ([`engine::ModelPlan::execute`]), training-loop
+//! clipping (`clip_all`) and compression (`lowrank_all`).
+//!
+//! ```
+//! use conv_svd_lfa::engine::ModelPlan;
+//! use conv_svd_lfa::lfa::LfaOptions;
+//! use conv_svd_lfa::model::ModelConfig;
+//!
+//! let model = ModelConfig::parse(
+//!     "name = \"tiny\"\nseed = 7\n\
+//!      [[layer]]\nname = \"c1\"\nc_in = 3\nc_out = 4\nheight = 8\nwidth = 8\n\
+//!      [[layer]]\nname = \"c2\"\nc_in = 3\nc_out = 4\nheight = 8\nwidth = 8\n",
+//! )
+//! .unwrap();
+//! // Plan all layers once; c1 and c2 share one 4x3 workspace group …
+//! let plan = ModelPlan::build(&model, LfaOptions::default()).unwrap();
+//! assert_eq!(plan.group_count(), 1);
+//! // … and execute the whole model as one batched sweep.
+//! let spectra = plan.execute();
+//! assert_eq!(spectra.num_values(), 2 * 8 * 8 * 3);
+//! assert!(spectra.lipschitz_upper_bound() > 0.0);
+//! ```
 
 // The codebase favors explicit index loops that mirror the paper's sums;
 // these lints are stylistic there, not defects.
@@ -79,6 +109,6 @@ pub mod report;
 pub mod bench_util;
 pub mod testing;
 
-pub use engine::{SpectralBackend, SpectralPlan};
+pub use engine::{ModelPlan, SpectralBackend, SpectralPlan};
 pub use error::{Error, Result};
 pub use numeric::{c64, C64, CMat, Layout, Mat, Pcg64};

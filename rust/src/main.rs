@@ -1,18 +1,20 @@
 //! `conv-svd-lfa` — CLI for the LFA convolutional-SVD system.
 //!
 //! Subcommands:
-//!   analyze    spectrum of one random conv layer (LFA, FFT or explicit)
-//!   audit      analyze every layer of a builtin or TOML model
-//!   compare    LFA vs FFT vs explicit on one layer, with timings
-//!   artifacts  list AOT artifacts and smoke-run one through PJRT
-//!   help       this text
+//!   analyze      spectrum of one random conv layer (LFA, FFT or explicit)
+//!   audit        analyze every layer of a model through the coordinator
+//!   audit-model  whole-model spectral report straight off a ModelPlan
+//!   compare      LFA vs FFT vs explicit on one layer, with timings
+//!   artifacts    list AOT artifacts and smoke-run one through PJRT
+//!   help         this text (see `cli::HELP`)
 
 use conv_svd_lfa::baselines::{explicit_svd, fft_svd, FftLayoutPolicy};
-use conv_svd_lfa::cli::Cli;
+use conv_svd_lfa::cli::{Cli, HELP};
 use conv_svd_lfa::conv::{Boundary, ConvKernel};
 use conv_svd_lfa::coordinator::{Backend, ServiceConfig, SpectralService};
+use conv_svd_lfa::engine::ModelPlan;
 use conv_svd_lfa::error::Result;
-use conv_svd_lfa::lfa::{self, LfaOptions};
+use conv_svd_lfa::lfa::{self, BlockSolver, LfaOptions};
 use conv_svd_lfa::model::zoo;
 use conv_svd_lfa::model::ModelConfig;
 use conv_svd_lfa::numeric::Pcg64;
@@ -21,29 +23,6 @@ use conv_svd_lfa::runtime::load_manifest;
 #[cfg(feature = "pjrt")]
 use conv_svd_lfa::runtime::PjrtEngine;
 use conv_svd_lfa::{bail, err};
-
-const HELP: &str = "\
-conv-svd-lfa — efficient SVD of convolutional mappings by Local Fourier Analysis
-
-USAGE: conv-svd-lfa <command> [options]
-
-COMMANDS
-  analyze   --n <N> [--m M] [--c-in C] [--c-out C] [--k K] [--threads T]
-            [--seed S] [--method lfa|fft|explicit] [--top J]
-            Compute the spectrum of a random conv layer.
-  audit     <builtin-or-config.toml> [--threads T] [--backend auto|native|pjrt]
-            [--artifacts DIR] [--csv]
-            Analyze all conv layers of a model. Builtins: lenet, vgg-small,
-            resnet20ish, paper-c16-n<N>.
-  compare   --n <N> [--c C] [--threads T] [--with-explicit]
-            LFA vs FFT (vs explicit) runtimes + agreement on one layer.
-  artifacts [--dir DIR] [--run NAME]
-            List AOT artifacts; optionally execute one via PJRT
-            (requires a build with --features pjrt).
-  help      Show this text.
-
---threads 0 (the default) means auto: one worker per available core.
-";
 
 fn main() {
     if let Err(e) = run() {
@@ -57,6 +36,7 @@ fn run() -> Result<()> {
     match cli.command.as_str() {
         "analyze" => cmd_analyze(&cli),
         "audit" => cmd_audit(&cli),
+        "audit-model" => cmd_audit_model(&cli),
         "compare" => cmd_compare(&cli),
         "artifacts" => cmd_artifacts(&cli),
         "" | "help" | "--help" | "-h" => {
@@ -187,6 +167,92 @@ fn cmd_audit(cli: &Cli) -> Result<()> {
         println!("csv: {}", path.display());
     }
     svc.shutdown();
+    Ok(())
+}
+
+/// Whole-model spectral report straight off a [`ModelPlan`] — every layer
+/// planned once, equal-shape layers batched into shared workspace groups,
+/// one batched sweep, per-layer + aggregate report.
+fn cmd_audit_model(cli: &Cli) -> Result<()> {
+    let target = cli
+        .positional
+        .first()
+        .ok_or_else(|| err!("audit-model needs a builtin name or config path"))?;
+    let model = load_model(target)?;
+    let threads: usize = cli.opt_parse("threads", 0)?;
+    let top: usize = cli.opt_parse("top", 4)?;
+    let solver = match cli.opt("solver").unwrap_or("jacobi") {
+        "jacobi" => BlockSolver::Jacobi,
+        "gram" => BlockSolver::GramEigen,
+        other => bail!("unknown solver {other:?} (jacobi|gram)"),
+    };
+    let t0 = std::time::Instant::now();
+    let plan = ModelPlan::build(&model, LfaOptions { threads, solver, ..Default::default() })?;
+    let t_plan = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let spectra = plan.execute();
+    let t_exec = t1.elapsed();
+
+    let mut table = Table::new([
+        "layer", "grid", "stride", "c", "#σ", "σ_max", "σ_min", "cond", "fro-defect", "top σ",
+    ]);
+    for (i, layer) in spectra.layers.iter().enumerate() {
+        let lp = plan.layer_plan(i);
+        let k = lp.kernel();
+        let s = &layer.spectrum;
+        let defect = lfa::svd::frobenius_check_strided(
+            k,
+            lp.fine_rows(),
+            lp.fine_cols(),
+            lp.stride(),
+            s,
+        );
+        let shown: Vec<String> =
+            s.sorted_desc().iter().take(top).map(|v| format!("{v:.3}")).collect();
+        table.row([
+            layer.name.clone(),
+            format!("{}x{}", lp.fine_rows(), lp.fine_cols()),
+            lp.stride().to_string(),
+            format!("{}→{}", k.c_in, k.c_out),
+            commas(s.num_values() as u128),
+            format!("{:.4}", s.sigma_max()),
+            format!("{:.4}", s.sigma_min()),
+            format!("{:.2}", s.condition_number()),
+            format!("{defect:.1e}"),
+            shown.join(" "),
+        ]);
+    }
+    println!(
+        "model {} — {} layers planned once into {} equal-shape group(s), \
+         plan {} + sweep {} ({} worker(s))",
+        spectra.model,
+        plan.layer_count(),
+        plan.group_count(),
+        secs(t_plan),
+        secs(t_exec),
+        plan.effective_threads()
+    );
+    print!("{}", table.render());
+    println!(
+        "aggregate: {} singular values, global σ_max {:.4}, global σ_min {:.4}, \
+         Lipschitz composition bound {:.4}",
+        commas(spectra.num_values() as u128),
+        spectra.sigma_max(),
+        spectra.sigma_min(),
+        spectra.lipschitz_upper_bound()
+    );
+    for g in 0..plan.group_count() {
+        let members = plan.group_members(g);
+        let (rows, cols) = plan.layer_plan(members[0]).block_shape();
+        println!(
+            "  group {g}: {} layer(s) with {rows}x{cols} blocks share one workspace pool",
+            members.len()
+        );
+    }
+    if cli.flag("csv") {
+        let path = table.save_csv(&format!("audit_model_{}", spectra.model))?;
+        println!("csv: {}", path.display());
+    }
     Ok(())
 }
 

@@ -14,6 +14,7 @@
 //! kernel = 3        # kh = kw
 //! height = 32
 //! width  = 32
+//! stride = 1        # must divide height and width
 //! init   = "he"     # he | glorot
 //! ```
 
@@ -39,6 +40,8 @@ pub struct LayerConfig {
     pub kw: usize,
     pub height: usize,
     pub width: usize,
+    /// Output subsampling stride (`C = D_s ∘ A`); 1 = dense.
+    pub stride: usize,
     pub init: Init,
 }
 
@@ -58,9 +61,12 @@ impl LayerConfig {
         }
     }
 
-    /// Number of singular values this layer's mapping has.
+    /// Number of singular values this layer's mapping has. For stride `s`
+    /// the dual grid is the coarse `(h/s)×(w/s)` torus and each frequency's
+    /// block is `c_out × s²·c_in`.
     pub fn num_values(&self) -> usize {
-        self.height * self.width * self.c_out.min(self.c_in)
+        let s = self.stride;
+        (self.height / s) * (self.width / s) * self.c_out.min(s * s * self.c_in)
     }
 }
 
@@ -125,6 +131,7 @@ impl ModelConfig {
                     "kw" => p.kw = Some(parse_usize(v, lineno)?),
                     "height" => p.height = Some(parse_usize(v, lineno)?),
                     "width" => p.width = Some(parse_usize(v, lineno)?),
+                    "stride" => p.stride = Some(parse_usize(v, lineno)?),
                     "init" => {
                         p.init = Some(match v {
                             "he" => Init::He,
@@ -171,6 +178,7 @@ struct PartialLayer {
     kw: Option<usize>,
     height: Option<usize>,
     width: Option<usize>,
+    stride: Option<usize>,
     init: Option<Init>,
 }
 
@@ -188,6 +196,14 @@ impl PartialLayer {
         if c_in == 0 || c_out == 0 || height == 0 || width == 0 || kh == 0 || kw == 0 {
             bail!("layer before line {}: zero-sized dimension", lineno + 1);
         }
+        let stride = self.stride.unwrap_or(1);
+        if stride == 0 || height % stride != 0 || width % stride != 0 {
+            bail!(
+                "layer before line {}: stride {stride} must be nonzero and divide \
+                 height {height} and width {width}",
+                lineno + 1
+            );
+        }
         Ok(LayerConfig {
             name: self.name.unwrap_or_else(|| format!("layer{}", lineno)),
             c_in,
@@ -196,6 +212,7 @@ impl PartialLayer {
             kw,
             height,
             width,
+            stride,
             init: self.init.unwrap_or(Init::He),
         })
     }
@@ -268,6 +285,27 @@ init   = "glorot"
         )
         .unwrap();
         assert_eq!(m.layers[0].kh, 3, "kernel defaults to 3");
+        assert_eq!(m.layers[0].stride, 1, "stride defaults to 1");
         assert_eq!(m.layers[0].init, Init::He);
+    }
+
+    #[test]
+    fn strided_layer_counts_and_validation() {
+        let m = ModelConfig::parse(
+            "[[layer]]\nc_in = 2\nc_out = 16\nheight = 8\nwidth = 8\nstride = 2\n",
+        )
+        .unwrap();
+        assert_eq!(m.layers[0].stride, 2);
+        // 4×4 coarse grid, min(16, 4·2) = 8 values per frequency.
+        assert_eq!(m.layers[0].num_values(), 4 * 4 * 8);
+        // Stride must divide the grid, and must be nonzero.
+        assert!(ModelConfig::parse(
+            "[[layer]]\nc_in = 1\nc_out = 1\nheight = 8\nwidth = 9\nstride = 2\n"
+        )
+        .is_err());
+        assert!(ModelConfig::parse(
+            "[[layer]]\nc_in = 1\nc_out = 1\nheight = 8\nwidth = 8\nstride = 0\n"
+        )
+        .is_err());
     }
 }

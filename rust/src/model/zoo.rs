@@ -14,6 +14,7 @@ fn layer(name: &str, c_in: usize, c_out: usize, hw: usize) -> LayerConfig {
         kw: 3,
         height: hw,
         width: hw,
+        stride: 1,
         init: Init::He,
     }
 }

@@ -4,8 +4,10 @@
 //!
 //! The artifact manifest ([`artifact`]) is always available — it is plain
 //! parsing with no XLA dependency. The execution layers are gated behind
-//! the off-by-default `pjrt` cargo feature because the `xla` crate is not
-//! part of the offline image:
+//! the off-by-default `pjrt` cargo feature; by default the feature compiles
+//! against the in-tree `xla` API stub (`rust/xla-stub/`, so the gated code
+//! typechecks offline and CI can gate it) whose client constructor fails
+//! fast — swap the path dependency for the real `xla` crate to execute:
 //!
 //! - [`PjrtEngine`] — thread-local engine: client + compiled-executable
 //!   cache. `PjRtClient` is `Rc`-based (not `Send`), so an engine lives and

@@ -6,8 +6,9 @@
 //! these tests so unrelated parallel tests cannot perturb the counter.
 
 use conv_svd_lfa::conv::ConvKernel;
-use conv_svd_lfa::engine::SpectralPlan;
+use conv_svd_lfa::engine::{ModelPlan, SpectralPlan};
 use conv_svd_lfa::lfa::{BlockSolver, LfaOptions};
+use conv_svd_lfa::model::ModelConfig;
 use conv_svd_lfa::numeric::Pcg64;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -56,6 +57,36 @@ fn assert_zero_alloc_after_warmup(solver: BlockSolver, stride: usize) {
     assert!(out.iter().all(|v| v.is_finite() && *v >= 0.0));
 }
 
+/// Whole-model discipline: a warmed-up serial `ModelPlan::execute_into` —
+/// the group-major batched sweep over every layer, including an
+/// equal-shape group sharing one workspace pool and a strided layer —
+/// performs zero heap allocation.
+fn assert_model_zero_alloc_after_warmup() {
+    let model = ModelConfig::parse(
+        "name = \"alloc\"\nseed = 13\n\
+         [[layer]]\nname = \"a1\"\nc_in = 3\nc_out = 4\nheight = 8\nwidth = 8\n\
+         [[layer]]\nname = \"a2\"\nc_in = 3\nc_out = 4\nheight = 8\nwidth = 8\n\
+         [[layer]]\nname = \"s\"\nc_in = 2\nc_out = 4\nheight = 8\nwidth = 8\nstride = 2\n",
+    )
+    .unwrap();
+    let plan =
+        ModelPlan::build(&model, LfaOptions { threads: 1, ..Default::default() }).unwrap();
+    let mut out = vec![0.0f64; plan.values_len()];
+    // Warm-up: pools may grow solver scratch once.
+    plan.execute_into(&mut out);
+    let before = ALLOCS.load(Ordering::SeqCst);
+    plan.execute_into(&mut out);
+    plan.execute_into(&mut out);
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "{} allocation(s) in warmed-up whole-model execute_into",
+        after - before
+    );
+    assert!(out.iter().all(|v| v.is_finite() && *v >= 0.0));
+}
+
 // One test, sequential scenarios: the harness runs #[test] fns on separate
 // threads, and concurrent tests would pollute each other's counter windows.
 #[test]
@@ -63,4 +94,5 @@ fn execute_is_allocation_free_after_warmup() {
     assert_zero_alloc_after_warmup(BlockSolver::Jacobi, 1);
     assert_zero_alloc_after_warmup(BlockSolver::GramEigen, 1);
     assert_zero_alloc_after_warmup(BlockSolver::Jacobi, 2);
+    assert_model_zero_alloc_after_warmup();
 }

@@ -1,0 +1,232 @@
+//! ModelPlan acceptance: whole-model batched execution must reproduce the
+//! per-layer [`SpectralPlan`] results across mixed layouts, strides, kernel
+//! sizes and thread counts; batched-group execution must be deterministic;
+//! and the coordinator's whole-model job path must match direct execution.
+
+use conv_svd_lfa::coordinator::{ModelJobSpec, Scheduler, SpectralService};
+use conv_svd_lfa::engine::{ModelPlan, NativeSerial, NativeThreaded, SpectralPlan};
+use conv_svd_lfa::lfa::{self, BlockLayout, BlockSolver, LfaOptions};
+use conv_svd_lfa::model::ModelConfig;
+
+const TOL: f64 = 1e-10;
+
+/// Mixed everything: strides 1 and 2, square and rectangular grids, tall
+/// and wide channel counts, and two kernel sizes inside one equal-shape
+/// group (conv1/conv3/conv5 all have 4×3 blocks; conv5 is 5×5 so the
+/// shared pool must cover 25 taps).
+const MIXED: &str = r#"
+name = "mixed-strides"
+seed = 42
+
+[[layer]]
+name   = "conv1"
+c_in   = 3
+c_out  = 4
+height = 8
+width  = 8
+
+[[layer]]
+name   = "conv2"
+c_in   = 2
+c_out  = 6
+height = 8
+width  = 8
+stride = 2
+
+[[layer]]
+name   = "conv3"
+c_in   = 3
+c_out  = 4
+height = 6
+width  = 8
+
+[[layer]]
+name   = "conv4"
+c_in   = 4
+c_out  = 3
+height = 6
+width  = 6
+init   = "glorot"
+
+[[layer]]
+name   = "conv5"
+c_in   = 3
+c_out  = 4
+kernel = 5
+height = 8
+width  = 8
+"#;
+
+fn mixed_model() -> ModelConfig {
+    ModelConfig::parse(MIXED).unwrap()
+}
+
+fn max_gap(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "spectrum lengths differ");
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+#[test]
+fn whole_model_matches_per_layer_plans_across_configs() {
+    let model = mixed_model();
+    for layout in [BlockLayout::BlockContiguous, BlockLayout::PlanarStrided] {
+        for solver in [BlockSolver::Jacobi, BlockSolver::GramEigen] {
+            for threads in [1usize, 3] {
+                let opts = LfaOptions { layout, solver, threads };
+                let mp = ModelPlan::build(&model, opts).unwrap();
+                let spectra = mp.execute();
+                for (layer, got) in model.layers.iter().zip(&spectra.layers) {
+                    let kernel = layer.materialize(model.seed);
+                    let want = SpectralPlan::with_stride(
+                        &kernel,
+                        layer.height,
+                        layer.width,
+                        layer.stride,
+                        LfaOptions { threads: 1, ..opts },
+                    )
+                    .execute();
+                    assert_eq!(got.name, layer.name);
+                    assert_eq!(got.spectrum.values.len(), layer.num_values());
+                    let gap = max_gap(&got.spectrum.values, &want.values);
+                    assert!(
+                        gap < TOL,
+                        "{} {layout:?} {solver:?} x{threads}: gap {gap}",
+                        layer.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_groups_share_pools_and_stay_deterministic() {
+    let model = mixed_model();
+    let opts = LfaOptions { threads: 3, ..Default::default() };
+    let mp = ModelPlan::build(&model, opts).unwrap();
+    // conv1, conv3 and conv5 all have 4×3 blocks → one batched group.
+    assert_eq!(mp.group_count(), 3);
+    assert_eq!(mp.group_members(0), &[0, 2, 4]);
+    let a = mp.execute();
+    let b = mp.execute();
+    for (x, y) in a.layers.iter().zip(&b.layers) {
+        assert_eq!(
+            x.spectrum.values, y.spectrum.values,
+            "repeated batched execution must be bitwise identical"
+        );
+    }
+    // A freshly built plan — and the serial (unbatched-threads) sweep —
+    // must agree bitwise too.
+    let serial = ModelPlan::build(&model, LfaOptions { threads: 1, ..Default::default() })
+        .unwrap()
+        .execute();
+    for (x, y) in a.layers.iter().zip(&serial.layers) {
+        assert_eq!(x.spectrum.values, y.spectrum.values);
+    }
+}
+
+#[test]
+fn execute_with_backends_matches_direct_execution() {
+    let model = mixed_model();
+    let mp = ModelPlan::build(&model, LfaOptions::default()).unwrap();
+    let direct = mp.execute();
+    let serial = mp.execute_with(&NativeSerial).unwrap();
+    let threaded = mp.execute_with(&NativeThreaded { threads: 2 }).unwrap();
+    for ((d, s), t) in direct.layers.iter().zip(&serial.layers).zip(&threaded.layers) {
+        assert_eq!(d.spectrum.values, s.spectrum.values);
+        assert_eq!(d.spectrum.values, t.spectrum.values);
+    }
+}
+
+#[test]
+fn full_svd_clip_and_lowrank_whole_model() {
+    // Stride-1 stack (clip's kernel projection needs dense layers).
+    let model = ModelConfig::parse(
+        "name = \"dense\"\nseed = 9\n\
+         [[layer]]\nname = \"l0\"\nc_in = 4\nc_out = 4\nheight = 6\nwidth = 6\n\
+         [[layer]]\nname = \"l1\"\nc_in = 4\nc_out = 4\nheight = 6\nwidth = 6\n",
+    )
+    .unwrap();
+    let mp = ModelPlan::build(&model, LfaOptions { threads: 1, ..Default::default() }).unwrap();
+    let spectra = mp.execute();
+
+    // full_svd_all reproduces the batched sweep's singular values.
+    let svds = mp.full_svd_all();
+    assert_eq!(svds.len(), 2);
+    for (svd, layer) in svds.iter().zip(&spectra.layers) {
+        let gap = max_gap(&svd.sigma.values, &layer.spectrum.values);
+        assert!(gap < TOL, "full_svd_all vs execute: gap {gap}");
+    }
+
+    // clip_all caps every layer's spectral norm.
+    let cap = spectra.sigma_max() * 0.6;
+    let clipped = mp.clip_all(cap).unwrap();
+    assert_eq!(clipped.len(), 2);
+    assert!(clipped.iter().any(|c| c.clipped_count > 0), "cap must bite");
+    for c in &clipped {
+        let after = lfa::svd::svd_full_from_grid(&c.grid);
+        assert!(after.sigma.sigma_max() <= cap + 1e-9);
+    }
+
+    // Full-rank truncation is lossless; rank-1 is not (generically).
+    let lossless = mp.lowrank_all(4);
+    assert!(lossless.iter().all(|l| l.rel_error < 1e-12));
+    let crushed = mp.lowrank_all(1);
+    assert!(crushed.iter().all(|l| l.rank == 1));
+    assert!(crushed.iter().any(|l| l.rel_error > 1e-6));
+
+    // clip_all on a strided model is a clean error, not a bad projection.
+    let strided = ModelConfig::parse(
+        "[[layer]]\nc_in = 2\nc_out = 4\nheight = 8\nwidth = 8\nstride = 2\n",
+    )
+    .unwrap();
+    let smp = ModelPlan::build(&strided, LfaOptions::default()).unwrap();
+    assert!(smp.clip_all(1.0).is_err());
+}
+
+#[test]
+fn scheduler_whole_model_job_matches_direct_plan() {
+    let model = mixed_model();
+    let direct = ModelPlan::build(&model, LfaOptions { threads: 1, ..Default::default() })
+        .unwrap()
+        .execute();
+    let sched = Scheduler::native(3);
+    let result = sched.run_model(ModelJobSpec::new("mixed", model.clone())).unwrap();
+    assert_eq!(result.id, "mixed");
+    assert_eq!(result.layers.len(), model.layers.len());
+    assert_eq!(result.pjrt_tiles, 0);
+    assert!(result.native_tiles >= model.layers.len());
+    for (got, want) in result.layers.iter().zip(&direct.layers) {
+        assert_eq!(got.name, want.name);
+        assert_eq!(
+            got.spectrum.values, want.spectrum.values,
+            "scheduler model path must match the planned sweep bitwise"
+        );
+    }
+    let m = sched.metrics.snapshot();
+    assert_eq!(m.jobs_completed as usize, model.layers.len());
+    assert_eq!(
+        m.values_computed as usize,
+        model.layers.iter().map(|l| l.num_values()).sum::<usize>()
+    );
+    sched.shutdown();
+}
+
+#[test]
+fn service_audit_verifies_strided_layers() {
+    let model = mixed_model();
+    let svc = SpectralService::native(2);
+    let reports = svc.audit_model(&model).unwrap();
+    assert_eq!(reports.len(), model.layers.len());
+    for (r, layer) in reports.iter().zip(&model.layers) {
+        assert_eq!(r.num_values, layer.num_values());
+        assert!(
+            r.frobenius_defect < 1e-10,
+            "{}: defect {}",
+            r.name,
+            r.frobenius_defect
+        );
+        assert!(r.sigma_max > 0.0);
+    }
+    svc.shutdown();
+}
