@@ -6,13 +6,18 @@
 //!   FFT       O(n² (c + log n) c²) ≈ slope 2 in n (plus log factor)
 //!   LFA       O(n² c³)            = slope exactly 2 in n
 //!
-//! Also channel scaling at fixed n, the plan-reuse margin, and the
-//! whole-model batching margin: `ModelPlan` (one planned object, one
-//! sweep) vs N independent per-layer plan executions.
+//! Also channel scaling at fixed n, the plan-reuse margin, the
+//! whole-model batching margin (`ModelPlan` — one planned object, one
+//! sweep — vs N independent per-layer plan executions), and the
+//! **top-k partial-spectrum margin**: warm-started Krylov iteration
+//! (`SpectrumRequest::TopK`) vs the full fused Jacobi path, with the
+//! per-frequency iteration counts that cross-frequency warm-starting
+//! saves over cold starts.
 //!
 //! Flags: `--quick` (fewer samples), `--full` (bigger sizes), `--smoke`
 //! (CI bench-smoke: reduced sizes), `--json <path>` (machine-readable
-//! `{bench, case, ns_per_iter}` lines — uploaded as `BENCH_scaling.json`).
+//! `{bench, case, ns_per_iter, commit, unix_time}` lines — uploaded as
+//! `BENCH_scaling.json`).
 
 use conv_svd_lfa::baselines::{explicit_svd, fft_svd, FftLayoutPolicy};
 use conv_svd_lfa::bench_util::{bench_opts, JsonLines};
@@ -201,6 +206,71 @@ fn main() {
         ]);
     }
 
+    // --- TopK partial spectrum: full fused vs warm/cold top-k (k=4) ---
+    // Production consumers (clipping, Lipschitz bounds, compression) only
+    // need a few extreme values per frequency; the warm-started Krylov
+    // sweep computes exactly those. The c³-vs-c²k gap means the margin
+    // grows with the channel count, so the largest case is the headline.
+    let kk = 4usize;
+    let topk_cases: Vec<(usize, usize)> = if opts.smoke {
+        vec![(16, 16), (64, 16)]
+    } else if opts.full {
+        vec![(32, 32), (64, 32), (128, 32)]
+    } else {
+        vec![(16, 32), (32, 16), (64, 16)]
+    };
+    let mut topk_rows: Vec<[String; 6]> = Vec::new();
+    let mut topk_verdict = String::new();
+    for &(c, n) in &topk_cases {
+        let mut rng = Pcg64::seeded(1003 + c as u64);
+        let k = ConvKernel::random_he(c, c, 3, 3, &mut rng);
+        let plan = SpectralPlan::new(&k, n, n, serial());
+        let freqs = plan.freqs() as f64;
+        let mut out_full = vec![0.0f64; plan.values_len()];
+        plan.execute_into(&mut out_full); // warm the pool
+        let m = bench.measure("topk-baseline-full", || {
+            plan.execute_into(&mut out_full);
+            out_full[0]
+        });
+        json.record_measurement(&format!("topk-baseline-full c={c} n={n}"), &m);
+        let t_full = m.min().as_secs_f64();
+
+        let mut out_top = vec![0.0f64; plan.topk_values_len(kk)];
+        let warm_iters = plan.execute_topk_into(kk, &mut out_top); // warm the pool
+        let m = bench.measure("topk-warm", || {
+            plan.execute_topk_into(kk, &mut out_top);
+            out_top[0]
+        });
+        json.record_measurement(&format!("topk-warm k={kk} c={c} n={n}"), &m);
+        let t_warm = m.min().as_secs_f64();
+
+        let cold_iters = plan.execute_topk_cold(kk).iterations;
+        let m = bench.measure("topk-cold", || {
+            plan.execute_topk_into_threads(kk, 1, false, &mut out_top);
+            out_top[0]
+        });
+        json.record_measurement(&format!("topk-cold k={kk} c={c} n={n}"), &m);
+        let t_cold = m.min().as_secs_f64();
+
+        let speedup = t_full / t_warm.max(1e-12);
+        topk_rows.push([
+            format!("c{c} n={n}"),
+            format!("{:.3} ms", t_full * 1e3),
+            format!("{:.3} ms", t_warm * 1e3),
+            format!("{speedup:.2}x"),
+            format!("{:.2} / {:.2}", warm_iters as f64 / freqs, cold_iters as f64 / freqs),
+            format!("{:.2}x", t_cold / t_warm.max(1e-12)),
+        ]);
+        // The last case is the largest; its margin is the acceptance line.
+        topk_verdict = format!(
+            "topk verdict: largest case c{c} n={n} — top-{kk} warm {speedup:.2}x \
+             faster than full fused (target ≥3x), warm {:.2} vs cold {:.2} \
+             iters/freq",
+            warm_iters as f64 / freqs,
+            cold_iters as f64 / freqs
+        );
+    }
+
     println!("# Table I — measured scaling exponents vs theory");
     let mut table = Table::new(["series", "fit slope", "theory", "verdict"]);
     let rows: Vec<(&str, f64, f64, f64)> = vec![
@@ -233,6 +303,21 @@ fn main() {
         mtable.row(row);
     }
     print!("{}", mtable.render());
+
+    println!("\n# TopK — warm-started partial spectrum (k=4) vs full fused path");
+    let mut ttable = Table::new([
+        "shape",
+        "full fused",
+        "topk warm",
+        "speedup",
+        "iters/freq warm/cold",
+        "warm vs cold",
+    ]);
+    for row in topk_rows {
+        ttable.row(row);
+    }
+    print!("{}", ttable.render());
+    println!("{topk_verdict}");
 
     if let Some(path) = &opts.json {
         json.write(path).expect("writing bench json");

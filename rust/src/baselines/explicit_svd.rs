@@ -31,7 +31,14 @@ pub fn singular_values_timed(
     // the explicit route (the paper's too) — Spectrum stores the flat list.
     values.sort_by(|x, y| y.partial_cmp(x).unwrap());
     (
-        Spectrum { n, m, c_out: kernel.c_out, c_in: kernel.c_in, values },
+        Spectrum {
+            n,
+            m,
+            c_out: kernel.c_out,
+            c_in: kernel.c_in,
+            per_freq: kernel.c_out.min(kernel.c_in),
+            values,
+        },
         (unroll, svd),
     )
 }

@@ -121,7 +121,14 @@ pub fn singular_values_timed(
     let values = svd_pass(&grid, LfaOptions { threads, layout: grid.layout, ..Default::default() });
     let svd = t2.elapsed();
     (
-        Spectrum { n, m, c_out: kernel.c_out, c_in: kernel.c_in, values },
+        Spectrum {
+            n,
+            m,
+            c_out: kernel.c_out,
+            c_in: kernel.c_in,
+            per_freq: kernel.c_out.min(kernel.c_in),
+            values,
+        },
         StageTiming { transform, copy, svd },
     )
 }

@@ -130,25 +130,47 @@ pub fn bench_opts() -> BenchOpts {
 }
 
 /// Machine-readable bench output: one `{"bench": …, "case": …,
-/// "ns_per_iter": …}` JSON object per line, the format CI uploads as
-/// `BENCH_<name>.json` so the perf trajectory is recorded per commit.
+/// "ns_per_iter": …, "commit": …, "unix_time": …}` JSON object per line,
+/// the format CI uploads as `BENCH_<name>.json`. Every line is stamped
+/// with the git commit (from `GITHUB_SHA` in CI, `git rev-parse` locally)
+/// and the record's creation time, so the perf trajectory the artifacts
+/// accumulate stays attributable across runs.
 pub struct JsonLines {
     bench: String,
+    commit: String,
+    unix_time: u64,
     lines: Vec<String>,
 }
 
 impl JsonLines {
     pub fn new(bench: &str) -> Self {
-        Self { bench: bench.to_string(), lines: Vec::new() }
+        let unix_time = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        Self::with_stamp(bench, &detect_commit(), unix_time)
+    }
+
+    /// [`Self::new`] with an explicit commit/time stamp (tests, replays).
+    pub fn with_stamp(bench: &str, commit: &str, unix_time: u64) -> Self {
+        Self {
+            bench: bench.to_string(),
+            commit: commit.to_string(),
+            unix_time,
+            lines: Vec::new(),
+        }
     }
 
     /// Record one case's nanoseconds-per-iteration.
     pub fn record(&mut self, case: &str, ns_per_iter: f64) {
         self.lines.push(format!(
-            "{{\"bench\":\"{}\",\"case\":\"{}\",\"ns_per_iter\":{:.1}}}",
+            "{{\"bench\":\"{}\",\"case\":\"{}\",\"ns_per_iter\":{:.1},\
+             \"commit\":\"{}\",\"unix_time\":{}}}",
             escape(&self.bench),
             escape(case),
-            ns_per_iter
+            ns_per_iter,
+            escape(&self.commit),
+            self.unix_time
         ));
     }
 
@@ -178,6 +200,28 @@ impl JsonLines {
 /// but don't let a stray quote corrupt the record).
 fn escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// The commit hash stamped onto every JSON line: `GITHUB_SHA` when CI set
+/// it, `git rev-parse` when running in a checkout, `"unknown"` otherwise.
+fn detect_commit() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        let sha = sha.trim().to_string();
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    if let Ok(out) = std::process::Command::new("git").args(["rev-parse", "HEAD"]).output() {
+        if out.status.success() {
+            if let Ok(sha) = String::from_utf8(out.stdout) {
+                let sha = sha.trim().to_string();
+                if !sha.is_empty() {
+                    return sha;
+                }
+            }
+        }
+    }
+    "unknown".to_string()
 }
 
 #[cfg(test)]
@@ -223,7 +267,7 @@ mod tests {
 
     #[test]
     fn json_lines_format() {
-        let mut j = JsonLines::new("bench_scaling");
+        let mut j = JsonLines::with_stamp("bench_scaling", "abc123", 1_750_000_000);
         assert!(j.is_empty());
         j.record("lfa n=32", 1234.56);
         j.record_measurement(
@@ -233,9 +277,20 @@ mod tests {
         assert_eq!(j.len(), 2);
         assert_eq!(
             j.lines[0],
-            "{\"bench\":\"bench_scaling\",\"case\":\"lfa n=32\",\"ns_per_iter\":1234.6}"
+            "{\"bench\":\"bench_scaling\",\"case\":\"lfa n=32\",\"ns_per_iter\":1234.6,\
+             \"commit\":\"abc123\",\"unix_time\":1750000000}"
         );
         assert!(j.lines[1].contains("\\\"quoted\\\""));
         assert!(j.lines[1].contains("\"ns_per_iter\":500.0"));
+    }
+
+    #[test]
+    fn json_lines_auto_stamp_is_present() {
+        let mut j = JsonLines::new("b");
+        j.record("case", 1.0);
+        // Whatever environment this runs in, every line carries a commit
+        // stamp and a timestamp field.
+        assert!(j.lines[0].contains("\"commit\":\""));
+        assert!(j.lines[0].contains("\"unix_time\":"));
     }
 }

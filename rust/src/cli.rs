@@ -18,20 +18,27 @@ COMMANDS
                [--seed S] [--method lfa|fft|explicit] [--top J]
                Compute the spectrum of a random conv layer.
   audit        <builtin-or-config.toml> [--threads T] [--backend auto|native|pjrt]
-               [--artifacts DIR] [--csv]
+               [--artifacts DIR] [--top-k K] [--csv]
                Analyze all conv layers of a model through the coordinator
                service (one planned model job, tiled across the worker
-               pool). Builtins: lenet, vgg-small, resnet20ish,
-               paper-c16-n<N>.
+               pool). With --top-k K, tiles compute only the K largest
+               singular values per frequency (warm-started Krylov
+               iteration; native — artifacts bake in the full SVD, so
+               combining --top-k with --backend pjrt is an error).
+               Builtins: lenet, vgg-small, resnet20ish, paper-c16-n<N>.
   audit-model  <builtin-or-config.toml> [--threads T] [--solver jacobi|gram]
-               [--top J] [--csv]
+               [--top J] [--top-k K] [--csv]
                Whole-model spectral report straight off a ModelPlan: every
                layer planned once, equal-shape layers batched into shared
                workspace groups, executed as one sweep. Emits the per-layer
                table plus aggregate statistics (global sigma extrema,
-               Lipschitz composition bound, batching summary). The config
-               is [[layer]] TOML (keys: name, c_in, c_out, kernel|kh/kw,
-               height, width, stride, init).
+               Lipschitz composition bound, batching summary). With
+               --top-k K the sweep runs the partial-spectrum engine
+               (only the K extreme values per frequency, warm-started
+               along the dual grid) and reports the iteration counts the
+               warm starts saved. The config is [[layer]] TOML (keys:
+               name, c_in, c_out, kernel|kh/kw, height, width, stride,
+               init).
   compare      --n <N> [--c C] [--threads T] [--with-explicit]
                LFA vs FFT (vs explicit) runtimes + agreement on one layer.
   artifacts    [--dir DIR] [--run NAME]
@@ -161,5 +168,11 @@ mod tests {
         for detail in ["--solver jacobi|gram", "ModelPlan", "stride", "Lipschitz"] {
             assert!(HELP.contains(detail), "HELP must document audit-model's {detail:?}");
         }
+        // The partial-spectrum mode is documented on both audit paths
+        // (usage line + prose for each).
+        assert!(
+            HELP.matches("--top-k K").count() >= 2,
+            "HELP must document --top-k on audit and audit-model"
+        );
     }
 }

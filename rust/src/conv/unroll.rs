@@ -15,7 +15,7 @@ use crate::numeric::Mat;
 ///
 /// Row index: `(x_row·w + x_col)·c_out + o`; column index:
 /// `(x'_row·w + x'_col)·c_in + i` — identical ordering to
-/// [`ConvOp::forward`] on flat vectors.
+/// [`crate::conv::ConvOp::forward`] on flat vectors.
 pub fn unroll_dense(kernel: &ConvKernel, h: usize, w: usize, boundary: Boundary) -> Mat {
     let rows = h * w * kernel.c_out;
     let cols = h * w * kernel.c_in;

@@ -1,6 +1,7 @@
 //! Job and tile descriptions for the spectral-analysis coordinator.
 
 use crate::conv::ConvKernel;
+use crate::engine::SpectrumRequest;
 use crate::lfa::BlockSolver;
 use crate::model::config::ModelConfig;
 use std::sync::Arc;
@@ -89,6 +90,12 @@ pub struct ModelJobSpec {
     pub model: ModelConfig,
     pub solver: BlockSolver,
     pub backend: Backend,
+    /// How much of each layer's spectrum to compute. `TopK(k)` tiles run
+    /// the warm-started top-k sweep natively — under `Backend::Auto` the
+    /// PJRT artifact routing is simply skipped (artifacts bake the full
+    /// per-frequency SVD in), while an explicit `Backend::Pjrt` combined
+    /// with a top-k request is rejected at submission.
+    pub request: SpectrumRequest,
     /// Coarse frequency rows per tile (0 = pick automatically per layer).
     pub tile_rows: usize,
 }
@@ -100,6 +107,7 @@ impl ModelJobSpec {
             model,
             solver: BlockSolver::Jacobi,
             backend: Backend::Auto,
+            request: SpectrumRequest::Full,
             tile_rows: 0,
         }
     }
@@ -111,6 +119,11 @@ impl ModelJobSpec {
 
     pub fn with_solver(mut self, solver: BlockSolver) -> Self {
         self.solver = solver;
+        self
+    }
+
+    pub fn with_request(mut self, request: SpectrumRequest) -> Self {
+        self.request = request;
         self
     }
 

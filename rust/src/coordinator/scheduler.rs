@@ -16,10 +16,15 @@
 //! once as a single [`ModelPlan`] (equal-shape layers share workspace
 //! pools) and queues per-layer row tiles against that one planned object —
 //! there is no per-layer plan lookup or rebuild anywhere in the model path.
+//! Model jobs carry a [`SpectrumRequest`]: `TopK(k)` tiles run the
+//! warm-started top-k sweep over their contiguous row strip natively (AOT
+//! artifacts bake in the full per-frequency SVD, so `Backend::Auto` skips
+//! artifact routing and an explicit `Backend::Pjrt` is rejected at
+//! submission) and the result stitches into per-layer *partial* spectra.
 
 use super::job::{Backend, JobSpec, ModelJobSpec, Tile};
 use super::metrics::Metrics;
-use crate::engine::{resolve_threads, ModelPlan, SpectralPlan};
+use crate::engine::{resolve_threads, ModelPlan, SpectralPlan, SpectrumRequest};
 use crate::err;
 use crate::error::Result;
 use crate::lfa::{self, LfaOptions};
@@ -105,7 +110,13 @@ struct ModelJobState {
     spec: Arc<ModelJobSpec>,
     /// All layers, planned once at submission; tiles only execute.
     plan: Arc<ModelPlan>,
-    /// Flat whole-model values buffer (per-layer offsets from the plan).
+    /// Per-layer values-per-frequency under the job's request (equals the
+    /// layer rank for `Full`, `min(k, rank)` for top-k).
+    values_per_freq: Vec<usize>,
+    /// Per-layer start offsets in the flat buffer (group-major execution
+    /// order, matching `ModelPlan::spectra_from_flat_request`).
+    offsets: Vec<usize>,
+    /// Flat whole-model values buffer (per-layer offsets above).
     values: Mutex<Vec<f64>>,
     remaining: AtomicUsize,
     layer_counters: Vec<LayerCounters>,
@@ -243,6 +254,20 @@ impl Scheduler {
         let (done_tx, done_rx) = mpsc::channel();
         let nlayers = spec.model.layers.len();
         self.metrics.jobs_submitted.fetch_add(nlayers as u64, Ordering::Relaxed);
+        // An *explicit* PJRT backend cannot serve a partial-spectrum
+        // request (AOT artifacts bake in the full per-frequency SVD) —
+        // fail loudly instead of silently downgrading to native.
+        // `Backend::Auto` + top-k routes native by design.
+        if spec.backend == Backend::Pjrt && spec.request != SpectrumRequest::Full {
+            self.metrics.jobs_failed.fetch_add(nlayers as u64, Ordering::Relaxed);
+            let _ = done_tx.send(Err(err!(
+                "model job {}: PJRT cannot serve partial-spectrum (top-k) requests — \
+                 the AOT artifacts bake in the full per-frequency SVD; use \
+                 Backend::Auto or Backend::Native",
+                spec.id
+            )));
+            return done_rx;
+        }
         let plan = match ModelPlan::build(
             &spec.model,
             LfaOptions { solver: spec.solver, threads: 1, ..Default::default() },
@@ -255,12 +280,15 @@ impl Scheduler {
             }
         };
         // Per-layer artifact routing: stride-1 layers whose shape matches.
+        // Top-k jobs always run natively — the AOT artifacts bake the full
+        // per-frequency SVD in, so PJRT cannot serve a partial request.
         let mut artifacts: Vec<Option<ArtifactSpec>> = Vec::with_capacity(nlayers);
         let mut weights_f32: Vec<Vec<f32>> = Vec::with_capacity(nlayers);
         for i in 0..nlayers {
             let lp = plan.layer_plan(i);
             let art = if self.executor.is_some()
                 && spec.backend != Backend::Native
+                && spec.request == SpectrumRequest::Full
                 && lp.stride() == 1
             {
                 let k = lp.kernel();
@@ -300,10 +328,21 @@ impl Scheduler {
                 lo += tr;
             }
         }
+        // Per-layer buffer geometry under the request. Offsets come from
+        // the plan itself — the same single source of truth
+        // `spectra_from_flat_request` slices by — so tile placement and
+        // result slicing cannot drift apart.
+        let values_per_freq: Vec<usize> = (0..nlayers)
+            .map(|i| spec.request.values_per_freq(plan.layer_plan(i).rank()))
+            .collect();
+        let offsets = plan.request_offsets(spec.request);
+        let total_values = plan.request_values_len(spec.request);
         let spec = Arc::new(spec);
         let state = Arc::new(ModelJobState {
             spec: Arc::clone(&spec),
-            values: Mutex::new(vec![0.0; plan.values_len()]),
+            values_per_freq,
+            offsets,
+            values: Mutex::new(vec![0.0; total_values]),
             remaining: AtomicUsize::new(tiles.len()),
             layer_counters: (0..nlayers)
                 .map(|_| LayerCounters {
@@ -407,7 +446,8 @@ fn worker_loop(
                 match outcome {
                     Ok(used_pjrt) => {
                         let lp = state.plan.layer_plan(layer);
-                        let vals = (row_hi - row_lo) * lp.coarse_cols() * lp.rank();
+                        let vals =
+                            (row_hi - row_lo) * lp.coarse_cols() * state.values_per_freq[layer];
                         let elapsed = t0.elapsed();
                         metrics.record_tile(vals, elapsed, used_pjrt);
                         let counters = &state.layer_counters[layer];
@@ -517,7 +557,7 @@ fn run_model_tile(
     executor: Option<&PjrtExecutor>,
 ) -> Result<bool> {
     let lp = state.plan.layer_plan(layer);
-    let r = lp.rank();
+    let r = state.values_per_freq[layer];
     let mc = lp.coarse_cols();
     let (values, used_pjrt): (Vec<f64>, bool) = match (&state.artifacts[layer], executor) {
         (Some(art), Some(exec)) => {
@@ -532,6 +572,8 @@ fn run_model_tile(
             (vals, true)
         }
         _ => {
+            // (Pjrt + top-k is rejected at submission, so this error path
+            // only concerns full-spectrum jobs.)
             if state.artifacts[layer].is_none() && state.spec.backend == Backend::Pjrt {
                 let k = lp.kernel();
                 return Err(err!(
@@ -547,13 +589,20 @@ fn run_model_tile(
             // Native path: execute against the layer's plan inside the
             // shared ModelPlan. Workspace checkout goes to the layer
             // *group's* pool, so equal-shape layers reuse each other's
-            // scratch across the whole model.
+            // scratch across the whole model. Top-k tiles run the
+            // warm-started top-k sweep over their contiguous row strip
+            // (cold at the strip's first frequency, warm along it).
             let mut vals = vec![0.0f64; (row_hi - row_lo) * mc * r];
-            lp.execute_rows_pooled(row_lo, row_hi, &mut vals);
+            match state.spec.request {
+                SpectrumRequest::Full => lp.execute_rows_pooled(row_lo, row_hi, &mut vals),
+                SpectrumRequest::TopK(k) => {
+                    lp.execute_topk_rows_pooled(k, row_lo, row_hi, &mut vals);
+                }
+            }
             (vals, false)
         }
     };
-    let base = state.plan.layer_offset(layer) + row_lo * mc * r;
+    let base = state.offsets[layer] + row_lo * mc * r;
     let mut buf = state.values.lock().expect("values poisoned");
     buf[base..base + values.len()].copy_from_slice(&values);
     Ok(used_pjrt)
@@ -561,7 +610,7 @@ fn run_model_tile(
 
 fn finish_model_job(state: &ModelJobState, metrics: &Metrics) {
     let values = std::mem::take(&mut *state.values.lock().expect("values poisoned"));
-    let spectra = state.plan.spectra_from_flat(&values);
+    let spectra = state.plan.spectra_from_flat_request(state.spec.request, &values);
     let mut layers = Vec::with_capacity(spectra.layers.len());
     let mut pjrt_total = 0usize;
     let mut native_total = 0usize;
@@ -597,6 +646,7 @@ fn finish_job(state: &JobState, metrics: &Metrics) {
         m: spec.m,
         c_out: spec.kernel.c_out,
         c_in: spec.kernel.c_in,
+        per_freq: spec.rank(),
         values,
     };
     metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);

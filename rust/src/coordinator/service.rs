@@ -8,6 +8,7 @@ use super::job::{Backend, JobSpec, ModelJobSpec};
 use super::metrics::MetricsSnapshot;
 use super::scheduler::{JobResult, Scheduler, SchedulerConfig};
 use crate::conv::ConvKernel;
+use crate::engine::SpectrumRequest;
 use crate::error::Result;
 use crate::lfa::{self, BlockSolver};
 use crate::model::config::ModelConfig;
@@ -131,9 +132,25 @@ impl SpectralService {
     /// no per-layer plan lookups. Per-layer `elapsed` is summed tile work,
     /// not wall-clock, since tiles of different layers interleave.
     pub fn audit_model(&self, model: &ModelConfig) -> Result<Vec<LayerReport>> {
+        self.audit_model_with(model, SpectrumRequest::Full)
+    }
+
+    /// [`Self::audit_model`] with an explicit [`SpectrumRequest`]:
+    /// `TopK(k)` audits compute only the `k` extreme singular values per
+    /// frequency (warm-started Krylov iteration per tile strip) — the
+    /// fast mode when the report's consumers only need σ extrema and the
+    /// Lipschitz bound. Frobenius verification is skipped for partial
+    /// spectra (the identity needs the whole spectrum), so
+    /// `frobenius_defect` comes back NaN.
+    pub fn audit_model_with(
+        &self,
+        model: &ModelConfig,
+        request: SpectrumRequest,
+    ) -> Result<Vec<LayerReport>> {
         let spec = ModelJobSpec::new(&model.name, model.clone())
             .with_backend(self.config.backend)
-            .with_solver(self.config.solver);
+            .with_solver(self.config.solver)
+            .with_request(request);
         let result = self.scheduler.run_model(spec)?;
         let mut reports = Vec::with_capacity(result.layers.len());
         for (layer, outcome) in model.layers.iter().zip(result.layers) {
@@ -189,7 +206,9 @@ impl SpectralService {
         pjrt_tiles: usize,
         native_tiles: usize,
     ) -> LayerReport {
-        let defect = if self.config.verify {
+        // The Frobenius identity sums *every* σ², so it can only verify
+        // full spectra; partial (top-k) spectra report NaN.
+        let defect = if self.config.verify && spectrum.is_full() {
             lfa::svd::frobenius_check_strided(kernel, n, m, stride, &spectrum)
         } else {
             f64::NAN

@@ -5,8 +5,15 @@
 //! pool, or (feature `pjrt`) an AOT-compiled XLA artifact driven through the
 //! PJRT executor thread. All backends produce identical spectra; they exist
 //! so callers can pick an execution strategy without touching the plan.
+//!
+//! Backends also answer [`SpectrumRequest`]s: the native backends run the
+//! warm-started top-k sweep (serially, or one contiguous frequency strip
+//! per worker); the PJRT backend only serves full spectra (its AOT artifact
+//! bakes the full per-frequency SVD in) and reports top-k unsupported.
 
-use super::plan::SpectralPlan;
+use super::plan::{SpectralPlan, TopKResult};
+use super::SpectrumRequest;
+use crate::bail;
 use crate::error::Result;
 use crate::lfa::spectrum::Spectrum;
 
@@ -19,6 +26,28 @@ pub trait SpectralBackend {
     /// `out` (frequency-major, descending per frequency).
     fn execute_into(&self, plan: &SpectralPlan, out: &mut [f64]) -> Result<()>;
 
+    /// Execute `request` into `out` (`plan.request_values_len(request)`
+    /// values); returns solver iteration steps spent (0 for the direct full
+    /// path). The default implementation serves `Full` through
+    /// [`Self::execute_into`] and rejects `TopK` — backends that can run
+    /// the warm-started top-k sweep override it.
+    fn execute_request_into(
+        &self,
+        plan: &SpectralPlan,
+        request: SpectrumRequest,
+        out: &mut [f64],
+    ) -> Result<u64> {
+        match request {
+            SpectrumRequest::Full => {
+                self.execute_into(plan, out)?;
+                Ok(0)
+            }
+            SpectrumRequest::TopK(_) => {
+                bail!("backend {} does not support partial-spectrum (top-k) requests", self.name())
+            }
+        }
+    }
+
     /// Execute the plan and package the result as a [`Spectrum`].
     fn execute(&self, plan: &SpectralPlan) -> Result<Spectrum> {
         let mut values = vec![0.0f64; plan.values_len()];
@@ -28,7 +57,27 @@ pub trait SpectralBackend {
             m: plan.coarse_cols(),
             c_out: plan.block_shape().0,
             c_in: plan.block_shape().1,
+            per_freq: plan.rank(),
             values,
+        })
+    }
+
+    /// Top-`k` values per frequency through this backend.
+    fn execute_topk(&self, plan: &SpectralPlan, k: usize) -> Result<TopKResult> {
+        let ke = plan.topk_per_freq(k);
+        let mut values = vec![0.0f64; plan.topk_values_len(k)];
+        let iterations =
+            self.execute_request_into(plan, SpectrumRequest::TopK(k), &mut values)?;
+        Ok(TopKResult {
+            spectrum: Spectrum {
+                n: plan.coarse_rows(),
+                m: plan.coarse_cols(),
+                c_out: plan.block_shape().0,
+                c_in: plan.block_shape().1,
+                per_freq: ke,
+                values,
+            },
+            iterations,
         })
     }
 }
@@ -47,6 +96,21 @@ impl SpectralBackend for NativeSerial {
         plan.execute_into_threads(1, out);
         Ok(())
     }
+
+    fn execute_request_into(
+        &self,
+        plan: &SpectralPlan,
+        request: SpectrumRequest,
+        out: &mut [f64],
+    ) -> Result<u64> {
+        Ok(match request {
+            SpectrumRequest::Full => {
+                plan.execute_into_threads(1, out);
+                0
+            }
+            SpectrumRequest::TopK(k) => plan.execute_topk_into_threads(k, 1, true, out),
+        })
+    }
 }
 
 /// Scoped-thread native execution with an explicit worker count (0 = auto =
@@ -63,6 +127,22 @@ impl SpectralBackend for NativeThreaded {
     fn execute_into(&self, plan: &SpectralPlan, out: &mut [f64]) -> Result<()> {
         plan.execute_into_threads(super::resolve_threads(self.threads), out);
         Ok(())
+    }
+
+    fn execute_request_into(
+        &self,
+        plan: &SpectralPlan,
+        request: SpectrumRequest,
+        out: &mut [f64],
+    ) -> Result<u64> {
+        let threads = super::resolve_threads(self.threads);
+        Ok(match request {
+            SpectrumRequest::Full => {
+                plan.execute_into_threads(threads, out);
+                0
+            }
+            SpectrumRequest::TopK(k) => plan.execute_topk_into_threads(k, threads, true, out),
+        })
     }
 }
 
@@ -92,7 +172,6 @@ impl SpectralBackend for PjrtBackend {
     }
 
     fn execute_into(&self, plan: &SpectralPlan, out: &mut [f64]) -> Result<()> {
-        use crate::bail;
         let a = &self.artifact;
         let (c_out, c_in) = plan.block_shape();
         let k = plan.kernel();
@@ -144,5 +223,23 @@ mod tests {
         let b = NativeThreaded { threads: 3 }.execute(&plan).unwrap();
         assert_eq!(a.values, b.values);
         assert_eq!(NativeSerial.name(), "native-serial");
+    }
+
+    #[test]
+    fn backends_serve_topk_requests() {
+        let mut rng = Pcg64::seeded(612);
+        let k = ConvKernel::random_he(4, 4, 3, 3, &mut rng);
+        let plan = SpectralPlan::new(&k, 8, 8, LfaOptions::default());
+        let full = NativeSerial.execute(&plan).unwrap();
+        let a = NativeSerial.execute_topk(&plan, 2).unwrap();
+        let b = NativeThreaded { threads: 2 }.execute_topk(&plan, 2).unwrap();
+        assert!(a.iterations > 0 && b.iterations > 0);
+        let scale = full.sigma_max();
+        for f in 0..plan.freqs() {
+            for j in 0..2 {
+                assert!((a.spectrum.at(f)[j] - full.at(f)[j]).abs() <= 1e-8 * scale);
+                assert!((b.spectrum.at(f)[j] - full.at(f)[j]).abs() <= 1e-8 * scale);
+            }
+        }
     }
 }

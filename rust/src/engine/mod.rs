@@ -10,14 +10,22 @@
 //!   pool of per-worker scratch [`Workspace`]s. `execute()` can be called
 //!   many times (training-loop clipping, repeated audits) without
 //!   re-planning or re-allocating.
-//! - [`Workspace`] — per-worker scratch: symbol block, per-tap phases, and
-//!   the Jacobi / Gram solver work matrices, pooled in a [`WorkspacePool`].
+//! - [`SpectrumRequest`] — how much of the spectrum an execution computes:
+//!   the full per-frequency SVD, or only the `k` largest values per
+//!   frequency via warm-started Krylov iteration
+//!   ([`SpectralPlan::execute_topk`]) — the regime spectral-norm clipping
+//!   and Lipschitz certification actually need.
+//! - [`Workspace`] — per-worker scratch: symbol block, per-tap phases, the
+//!   Jacobi / Gram solver work matrices, and the top-k Krylov basis that
+//!   carries warm starts between neighboring frequencies, pooled in a
+//!   [`WorkspacePool`].
 //! - [`SpectralBackend`] — execution strategies over a plan:
 //!   [`NativeSerial`], [`NativeThreaded`], and (feature `pjrt`) a PJRT
 //!   artifact backend.
 //! - [`ModelPlan`] — every conv layer of a model planned once: layers with
 //!   equal block shape share one workspace pool, and whole-model audits,
-//!   clipping and compression run as a single batched sweep.
+//!   clipping and compression run as a single batched sweep (top-k variant:
+//!   [`ModelPlan::top_k_all`]).
 //!
 //! `lfa::svd`, `lfa::stride`, the FFT baseline's SVD stage and the
 //! coordinator's tile workers are all thin wrappers over this module.
@@ -30,9 +38,37 @@ pub mod workspace;
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
 pub use backend::{NativeSerial, NativeThreaded, SpectralBackend};
-pub use model_plan::{LayerSpectrum, ModelPlan, ModelSpectra};
-pub use plan::SpectralPlan;
+pub use model_plan::{LayerSpectrum, ModelPlan, ModelSpectra, ModelTopK};
+pub use plan::{SpectralPlan, TopKResult};
 pub use workspace::{Workspace, WorkspacePool};
+
+/// How much of the spectrum one execution computes.
+///
+/// `Full` runs the fused symbol→SVD pipeline (every `min(c_out, c_in)`
+/// singular value per frequency). `TopK(k)` runs Krylov-accelerated power
+/// iteration per frequency instead ([`crate::linalg::power::block_topk`]),
+/// warm-started along the plan's locality-preserving sweep order — the
+/// right mode when only the extreme values are consumed (spectral-norm
+/// clipping, Lipschitz bounds, low-rank compression). `k` is clamped to
+/// the per-frequency rank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpectrumRequest {
+    /// Every singular value per frequency (the fused Jacobi/Gram path).
+    Full,
+    /// Only the `k` largest singular values per frequency.
+    TopK(usize),
+}
+
+impl SpectrumRequest {
+    /// Values this request stores per frequency, for a block of rank
+    /// `rank = min(c_out, c_in)`.
+    pub fn values_per_freq(&self, rank: usize) -> usize {
+        match *self {
+            SpectrumRequest::Full => rank,
+            SpectrumRequest::TopK(k) => k.clamp(1, rank.max(1)),
+        }
+    }
+}
 
 /// Resolve a thread-count option: `0` means auto (`available_parallelism`),
 /// anything else is taken literally. This is the single source of truth for
@@ -48,9 +84,19 @@ pub fn resolve_threads(threads: usize) -> usize {
 
 #[cfg(test)]
 mod tests {
+    use super::SpectrumRequest;
+
     #[test]
     fn zero_threads_resolves_to_at_least_one() {
         assert!(super::resolve_threads(0) >= 1);
         assert_eq!(super::resolve_threads(3), 3);
+    }
+
+    #[test]
+    fn request_values_per_freq_clamps() {
+        assert_eq!(SpectrumRequest::Full.values_per_freq(4), 4);
+        assert_eq!(SpectrumRequest::TopK(2).values_per_freq(4), 2);
+        assert_eq!(SpectrumRequest::TopK(9).values_per_freq(4), 4, "clamped to rank");
+        assert_eq!(SpectrumRequest::TopK(0).values_per_freq(4), 1, "at least one value");
     }
 }

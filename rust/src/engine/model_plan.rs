@@ -18,22 +18,26 @@
 //!   through any [`SpectralBackend`] via [`ModelPlan::execute_with`].
 //!
 //! The whole-model entry points mirror the per-layer ones:
-//! [`ModelPlan::execute`] (spectra), [`ModelPlan::full_svd_all`] (factors),
-//! [`ModelPlan::clip_all`] (plan-reuse clipping for training loops) and
-//! [`ModelPlan::lowrank_all`] (compression). The coordinator submits whole
-//! models as one `ModelPlan` (see `coordinator::scheduler::submit_model`),
-//! and the `audit-model` CLI subcommand drives one directly.
+//! [`ModelPlan::execute`] (spectra), [`ModelPlan::top_k_all`] (partial
+//! spectra via the warm-started Krylov sweep), [`ModelPlan::full_svd_all`]
+//! (factors), [`ModelPlan::clip_all`] (plan-reuse clipping for training
+//! loops, screened by a cheap top-1 sweep) and [`ModelPlan::lowrank_all`]
+//! (compression). The coordinator submits whole models as one `ModelPlan`
+//! (see `coordinator::scheduler::submit_model`), and the `audit-model` CLI
+//! subcommand drives one directly.
 
 use super::backend::SpectralBackend;
 use super::plan::SpectralPlan;
 use super::workspace::{Workspace, WorkspacePool};
+use super::SpectrumRequest;
 use crate::bail;
 use crate::error::Result;
 use crate::lfa::spectrum::{FullSvd, Spectrum};
 use crate::lfa::svd::LfaOptions;
 use crate::model::config::ModelConfig;
-use crate::spectral::clip::{clip_with_plan, ClipResult};
+use crate::spectral::clip::{clip_with_plan, unclipped_result, ClipResult};
 use crate::spectral::lowrank::{compress_from_svd, LowRankConv};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// One planned layer of a [`ModelPlan`].
@@ -72,6 +76,21 @@ pub struct ModelSpectra {
     pub model: String,
     /// Layers in original model order.
     pub layers: Vec<LayerSpectrum>,
+}
+
+/// Whole-model top-k result: per-layer **partial** spectra (the `k`
+/// extreme values per frequency) plus the solver effort.
+/// Everything that only consumes extremes —
+/// [`ModelSpectra::sigma_max`], [`ModelSpectra::lipschitz_upper_bound`] —
+/// reads identically off this as off a full execution.
+#[derive(Clone, Debug)]
+pub struct ModelTopK {
+    /// Per-layer partial spectra (`per_freq == k`, clamped per layer).
+    pub spectra: ModelSpectra,
+    /// The requested `k` (individual layers clamp to their rank).
+    pub k: usize,
+    /// Total solver iteration steps across every layer and frequency.
+    pub iterations: u64,
 }
 
 impl ModelSpectra {
@@ -252,6 +271,33 @@ impl ModelPlan {
         self.total_values
     }
 
+    /// Buffer length of an execution of `request`
+    /// ([`Self::values_len`] for `Full`, `Σ freqs·min(k, rank)` for top-k).
+    pub fn request_values_len(&self, request: SpectrumRequest) -> usize {
+        match request {
+            SpectrumRequest::Full => self.total_values,
+            SpectrumRequest::TopK(_) => {
+                self.layers.iter().map(|l| l.plan.request_values_len(request)).sum()
+            }
+        }
+    }
+
+    /// Per-layer start offsets (indexed in original layer order) into the
+    /// flat buffer an execution of `request` fills. The buffer is laid out
+    /// in **group-major execution order**; this method is the single source
+    /// of truth for that layout — [`Self::spectra_from_flat_request`] and
+    /// the coordinator's tile placement both derive from it, so they cannot
+    /// drift apart if the execution order ever changes.
+    pub fn request_offsets(&self, request: SpectrumRequest) -> Vec<usize> {
+        let mut offsets = vec![0usize; self.layers.len()];
+        let mut pos = 0usize;
+        for &i in &self.exec_order {
+            offsets[i] = pos;
+            pos += self.layers[i].plan.request_values_len(request);
+        }
+        offsets
+    }
+
     /// Worker count a whole-model sweep will use (0 in options = auto).
     pub fn effective_threads(&self) -> usize {
         let freqs: usize = self.layers.iter().map(|l| l.plan.freqs()).sum();
@@ -269,19 +315,49 @@ impl ModelPlan {
     /// per frequency. Threaded, the model's frequency rows are partitioned
     /// across one scoped worker fan-out (not one per layer).
     pub fn execute_into(&self, out: &mut [f64]) {
-        assert_eq!(out.len(), self.total_values, "output buffer length mismatch");
+        self.execute_request_into(SpectrumRequest::Full, out);
+    }
+
+    /// Execute `request` for every layer into a caller-provided buffer
+    /// (`request_values_len(request)` long, group-major layer order).
+    /// Returns total solver iteration steps (0 for `Full`). For top-k the
+    /// serial path warm-starts across each layer's serpentine sweep
+    /// (cold per layer — symbols of different layers are unrelated);
+    /// threaded, every span is a contiguous frequency strip of one layer,
+    /// so warm starts never cross workers or layers.
+    pub fn execute_request_into(&self, request: SpectrumRequest, out: &mut [f64]) -> u64 {
+        let total = self.request_values_len(request);
+        assert_eq!(out.len(), total, "output buffer length mismatch");
         let threads = self.effective_threads();
         if threads <= 1 {
+            let mut iters = 0u64;
+            let mut pos = 0usize;
             for members in &self.groups {
                 let mut ws = self.layers[members[0]].plan.checkout();
                 for &i in members {
                     let l = &self.layers[i];
-                    let slice = &mut out[l.offset..l.offset + l.plan.values_len()];
-                    l.plan.execute_rows(0, l.plan.coarse_rows(), &mut ws, slice);
+                    let len = l.plan.request_values_len(request);
+                    let slice = &mut out[pos..pos + len];
+                    match request {
+                        SpectrumRequest::Full => {
+                            l.plan.execute_rows(0, l.plan.coarse_rows(), &mut ws, slice)
+                        }
+                        SpectrumRequest::TopK(k) => {
+                            iters += l.plan.execute_topk_rows(
+                                k,
+                                0,
+                                l.plan.coarse_rows(),
+                                true,
+                                &mut ws,
+                                slice,
+                            );
+                        }
+                    }
+                    pos += len;
                 }
                 self.layers[members[0]].plan.restore(ws);
             }
-            return;
+            return iters;
         }
         // Cut layers into row spans (buffer order), then hand contiguous
         // runs of roughly equal value counts to each worker.
@@ -292,7 +368,7 @@ impl ModelPlan {
         for &i in &self.exec_order {
             let plan = &self.layers[i].plan;
             let nc = plan.coarse_rows();
-            let row_vals = plan.coarse_cols() * plan.rank();
+            let row_vals = plan.coarse_cols() * request.values_per_freq(plan.rank());
             let mut lo = 0usize;
             while lo < nc {
                 let hi = (lo + rows_per).min(nc);
@@ -300,7 +376,9 @@ impl ModelPlan {
                 lo = hi;
             }
         }
-        let target = self.total_values.div_ceil(threads).max(1);
+        let target = total.div_ceil(threads).max(1);
+        let iters_total = AtomicU64::new(0);
+        let iters_ref = &iters_total;
         std::thread::scope(|scope| {
             let mut rest: &mut [f64] = out;
             let mut s0 = 0usize;
@@ -314,19 +392,25 @@ impl ModelPlan {
                 let (head, tail) = std::mem::take(&mut rest).split_at_mut(acc);
                 rest = tail;
                 let chunk = &spans[s0..s1];
-                scope.spawn(move || self.execute_spans(chunk, head));
+                scope.spawn(move || {
+                    let it = self.execute_spans(request, chunk, head);
+                    iters_ref.fetch_add(it, Ordering::Relaxed);
+                });
                 s0 = s1;
             }
         });
+        iters_total.into_inner()
     }
 
     /// Worker body: execute a contiguous run of spans, checking one
     /// workspace out per group transition (spans arrive group-major, so a
-    /// worker crossing layers inside one group keeps its scratch).
-    fn execute_spans(&self, spans: &[Span], out: &mut [f64]) {
+    /// worker crossing layers inside one group keeps its scratch; top-k
+    /// warm starts stay within one span's strip).
+    fn execute_spans(&self, request: SpectrumRequest, spans: &[Span], out: &mut [f64]) -> u64 {
         let mut cur_group = usize::MAX;
         let mut ws: Option<Workspace> = None;
         let mut pos = 0usize;
+        let mut iters = 0u64;
         for s in spans {
             let l = &self.layers[s.layer];
             if l.group != cur_group {
@@ -337,12 +421,21 @@ impl ModelPlan {
                 cur_group = l.group;
             }
             let w = ws.as_mut().expect("workspace checked out above");
-            l.plan.execute_rows(s.lo, s.hi, w, &mut out[pos..pos + s.len]);
+            match request {
+                SpectrumRequest::Full => {
+                    l.plan.execute_rows(s.lo, s.hi, w, &mut out[pos..pos + s.len])
+                }
+                SpectrumRequest::TopK(k) => {
+                    let dst = &mut out[pos..pos + s.len];
+                    iters += l.plan.execute_topk_rows(k, s.lo, s.hi, true, w, dst);
+                }
+            }
             pos += s.len;
         }
         if let Some(w) = ws.take() {
             self.group_pool(cur_group).restore(w);
         }
+        iters
     }
 
     fn group_pool(&self, g: usize) -> &Arc<WorkspacePool> {
@@ -370,12 +463,30 @@ impl ModelPlan {
     /// Split a flat whole-model buffer (as filled by [`Self::execute_into`])
     /// into per-layer spectra, original model order.
     pub fn spectra_from_flat(&self, values: &[f64]) -> ModelSpectra {
-        assert_eq!(values.len(), self.total_values, "flat buffer length mismatch");
+        self.spectra_from_flat_request(SpectrumRequest::Full, values)
+    }
+
+    /// [`Self::spectra_from_flat`] for any request: slice a buffer filled
+    /// by [`Self::execute_request_into`] into per-layer (possibly partial)
+    /// spectra, original model order.
+    pub fn spectra_from_flat_request(
+        &self,
+        request: SpectrumRequest,
+        values: &[f64],
+    ) -> ModelSpectra {
+        assert_eq!(
+            values.len(),
+            self.request_values_len(request),
+            "flat buffer length mismatch"
+        );
+        let offsets = self.request_offsets(request);
         let layers = self
             .layers
             .iter()
-            .map(|l| {
+            .enumerate()
+            .map(|(i, l)| {
                 let p = &l.plan;
+                let len = p.request_values_len(request);
                 LayerSpectrum {
                     name: l.name.clone(),
                     spectrum: Spectrum {
@@ -383,7 +494,8 @@ impl ModelPlan {
                         m: p.coarse_cols(),
                         c_out: p.block_shape().0,
                         c_in: p.block_shape().1,
-                        values: values[l.offset..l.offset + p.values_len()].to_vec(),
+                        per_freq: request.values_per_freq(p.rank()),
+                        values: values[offsets[i]..offsets[i] + len].to_vec(),
                     },
                 }
             })
@@ -391,7 +503,48 @@ impl ModelPlan {
         ModelSpectra { model: self.name.clone(), layers }
     }
 
+    /// Top-`k` singular values per frequency for **every** layer, one
+    /// batched warm-started top-k sweep — the whole-model analogue of
+    /// [`SpectralPlan::execute_topk`]. This is the execution mode behind
+    /// fast Lipschitz reporting and clip screening: when only the extreme
+    /// values are consumed, it replaces the `O(c³)` per-frequency Jacobi
+    /// solve with a few `O(c²k)` iterations.
+    pub fn top_k_all(&self, k: usize) -> ModelTopK {
+        let request = SpectrumRequest::TopK(k);
+        let mut values = vec![0.0f64; self.request_values_len(request)];
+        let iterations = self.execute_request_into(request, &mut values);
+        ModelTopK { spectra: self.spectra_from_flat_request(request, &values), k, iterations }
+    }
+
+    /// Network Lipschitz composition bound (product of per-layer spectral
+    /// norms — Szegedy et al. 2014) via a **top-1** sweep: the same number
+    /// [`ModelSpectra::lipschitz_upper_bound`] reports after a full
+    /// execution, at a fraction of the cost. Returns the bound and the
+    /// solver iteration steps spent.
+    pub fn lipschitz_bound_topk(&self) -> (f64, u64) {
+        let r = self.top_k_all(1);
+        (r.spectra.lipschitz_upper_bound(), r.iterations)
+    }
+
     /// Full per-frequency SVD of every layer (original model order).
+    ///
+    /// ```
+    /// use conv_svd_lfa::engine::ModelPlan;
+    /// use conv_svd_lfa::lfa::LfaOptions;
+    /// use conv_svd_lfa::model::ModelConfig;
+    ///
+    /// let model = ModelConfig::parse(
+    ///     "name = \"tiny\"\nseed = 3\n\
+    ///      [[layer]]\nname = \"c1\"\nc_in = 2\nc_out = 3\nheight = 4\nwidth = 4\n",
+    /// )
+    /// .unwrap();
+    /// let plan = ModelPlan::build(&model, LfaOptions::default()).unwrap();
+    /// let svds = plan.full_svd_all();
+    /// assert_eq!(svds.len(), 1);
+    /// // Per-frequency factors reconstruct each symbol: U_k Σ_k V_kᴴ.
+    /// let sym = svds[0].symbol(0);
+    /// assert_eq!((sym.rows, sym.cols), (3, 2));
+    /// ```
     pub fn full_svd_all(&self) -> Vec<FullSvd> {
         self.layers.iter().map(|l| l.plan.execute_full()).collect()
     }
@@ -400,6 +553,12 @@ impl ModelPlan {
     /// training-loop shape: plan once at startup, clip every step without
     /// re-planning. Only defined for stride-1 layers (the least-squares
     /// kernel projection needs the dense symbol grid).
+    ///
+    /// A cheap **top-1 screening sweep** runs first: layers whose spectral
+    /// norm is already ≤ `cap` skip the full per-frequency SVD and the
+    /// reconstruction entirely (their kernel is returned unchanged) — in a
+    /// training loop most layers are below the cap most steps, so this is
+    /// where the top-k engine pays off.
     pub fn clip_all(&self, cap: f64) -> Result<Vec<ClipResult>> {
         for l in &self.layers {
             if l.plan.stride() != 1 {
@@ -411,7 +570,20 @@ impl ModelPlan {
                 );
             }
         }
-        Ok(self.layers.iter().map(|l| clip_with_plan(&l.plan, cap)).collect())
+        let screen = self.top_k_all(1);
+        Ok(self
+            .layers
+            .iter()
+            .zip(&screen.spectra.layers)
+            .map(|(l, s)| {
+                let sigma_before = s.spectrum.sigma_max();
+                if sigma_before <= cap {
+                    unclipped_result(&l.plan, sigma_before)
+                } else {
+                    clip_with_plan(&l.plan, cap)
+                }
+            })
+            .collect())
     }
 
     /// Rank-`r` truncation of every layer (Eckart–Young optimal per
@@ -475,6 +647,69 @@ width  = 8
         assert!(spectra.lipschitz_upper_bound() > 0.0);
         assert!(spectra.layer("b").is_some());
         assert!(spectra.layer("nope").is_none());
+    }
+
+    #[test]
+    fn top_k_all_matches_full_extremes() {
+        let model = ModelConfig::parse(MIXED).unwrap();
+        let mp = ModelPlan::build(&model, LfaOptions { threads: 1, ..Default::default() })
+            .unwrap();
+        let full = mp.execute();
+        let top = mp.top_k_all(2);
+        assert_eq!(top.k, 2);
+        assert!(top.iterations > 0);
+        let scale = full.sigma_max();
+        for (fl, tl) in full.layers.iter().zip(&top.spectra.layers) {
+            assert_eq!(fl.name, tl.name);
+            assert_eq!(tl.spectrum.rank_per_freq(), 2);
+            let freqs = tl.spectrum.n * tl.spectrum.m;
+            for f in 0..freqs {
+                for j in 0..2 {
+                    assert!(
+                        (fl.spectrum.at(f)[j] - tl.spectrum.at(f)[j]).abs() <= 1e-8 * scale,
+                        "{} f={f} j={j}",
+                        fl.name
+                    );
+                }
+            }
+        }
+        // The Lipschitz bound off the partial spectra equals the full one.
+        let (fast, iters) = mp.lipschitz_bound_topk();
+        assert!(iters > 0);
+        assert!(
+            (fast - full.lipschitz_upper_bound()).abs() <= 1e-7 * full.lipschitz_upper_bound()
+        );
+    }
+
+    #[test]
+    fn clip_all_screening_skips_layers_below_cap() {
+        let model = ModelConfig::parse(MIXED).unwrap();
+        let mp = ModelPlan::build(&model, LfaOptions { threads: 1, ..Default::default() })
+            .unwrap();
+        let full = mp.execute();
+        // Cap above every σ: nothing clips, kernels come back bit-identical.
+        let cap = full.sigma_max() * 2.0;
+        let results = mp.clip_all(cap).unwrap();
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.clipped_count, 0, "layer {i}");
+            let k = mp.layer_plan(i).kernel();
+            assert_eq!(r.projected_kernel.data, k.data, "layer {i}: kernel untouched");
+        }
+        // Cap below σ_max: the over-cap layers still clip exactly.
+        let cap = full.sigma_max() * 0.5;
+        let results = mp.clip_all(cap).unwrap();
+        let clipped: usize = results.iter().map(|r| r.clipped_count).sum();
+        assert!(clipped > 0, "something must clip at half σ_max");
+        for (i, r) in results.iter().enumerate() {
+            if full.layers[i].spectrum.sigma_max() > cap {
+                let direct = crate::spectral::clip::clip_with_plan(mp.layer_plan(i), cap);
+                assert_eq!(r.clipped_count, direct.clipped_count, "layer {i}");
+                for (a, b) in r.projected_kernel.data.iter().zip(&direct.projected_kernel.data)
+                {
+                    assert!((a - b).abs() < 1e-12, "layer {i}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -20,14 +20,38 @@
 //! is a thin wrapper over this type.
 
 use super::workspace::{Workspace, WorkspacePool};
+use super::SpectrumRequest;
 use crate::conv::ConvKernel;
-use crate::lfa::spectrum::{FullSvd, Spectrum};
+use crate::lfa::spectrum::{FullSvd, Spectrum, TopKSvd};
 use crate::lfa::svd::{BlockSolver, LfaOptions};
 use crate::lfa::symbol::{scatter_shard, BlockLayout, SymbolGrid};
 use crate::linalg::jacobi_svd;
+use crate::linalg::power::TopKOptions;
 use crate::numeric::{C64, CMat};
 use std::f64::consts::PI;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+
+/// Outcome of a partial-spectrum execution: the top-k values per frequency
+/// plus the solver effort spent producing them.
+#[derive(Clone, Debug)]
+pub struct TopKResult {
+    /// Partial spectrum (`per_freq == k`, descending per frequency).
+    pub spectrum: Spectrum,
+    /// Total solver iteration steps (Krylov steps plus completion-probe
+    /// power steps) across all frequencies — the direct
+    /// measure of how much the warm starts saved (compare a warm-sweep run
+    /// against [`SpectralPlan::execute_topk_cold`]).
+    pub iterations: u64,
+}
+
+impl TopKResult {
+    /// Mean solver iteration steps per frequency.
+    pub fn iterations_per_freq(&self) -> f64 {
+        let freqs = (self.spectrum.n * self.spectrum.m).max(1);
+        self.iterations as f64 / freqs as f64
+    }
+}
 
 /// A planned, reusable symbol→SVD execution for one convolution layer.
 pub struct SpectralPlan {
@@ -161,6 +185,23 @@ impl SpectralPlan {
         self.freqs() * self.rank
     }
 
+    /// Values per frequency a `TopK(k)` execution stores: `k` clamped to
+    /// the per-frequency rank (and at least 1).
+    pub fn topk_per_freq(&self, k: usize) -> usize {
+        SpectrumRequest::TopK(k).values_per_freq(self.rank)
+    }
+
+    /// Total output length of [`Self::execute_topk_into`].
+    pub fn topk_values_len(&self, k: usize) -> usize {
+        self.freqs() * self.topk_per_freq(k)
+    }
+
+    /// Output length of an execution of `request`
+    /// ([`Self::values_len`] / [`Self::topk_values_len`]).
+    pub fn request_values_len(&self, request: SpectrumRequest) -> usize {
+        self.freqs() * request.values_per_freq(self.rank)
+    }
+
     /// The solver the plan was built with.
     pub fn solver(&self) -> BlockSolver {
         self.solver
@@ -217,6 +258,21 @@ impl SpectralPlan {
     /// [`super::ModelPlan`] group, private otherwise).
     pub fn workspace_pool(&self) -> &Arc<WorkspacePool> {
         &self.pool
+    }
+
+    /// Column visited at `step` of a serpentine (boustrophedon) row sweep:
+    /// even rows (relative to the sweep's start row) run left to right, odd
+    /// rows right to left, so consecutive visits are always dual-grid
+    /// neighbors. The single definition of the locality-preserving order
+    /// that both the top-k values sweep and the factors sweep follow — the
+    /// warm-start guarantee lives here and nowhere else.
+    #[inline]
+    fn serpentine_col(&self, row_in_range: usize, step: usize) -> usize {
+        if row_in_range % 2 == 1 {
+            self.mc - 1 - step
+        } else {
+            step
+        }
     }
 
     /// Fill `ws.block` with the symbol at coarse frequency `(ki, kj)`:
@@ -289,6 +345,238 @@ impl SpectralPlan {
         self.restore(ws);
     }
 
+    /// Top-`k` singular values for coarse frequency rows `[row_lo, row_hi)`
+    /// by warm-started Krylov iteration, written frequency-major (descending per
+    /// frequency, `topk_per_freq(k)` values each) into `out`. Returns total
+    /// solver iteration steps.
+    ///
+    /// The rows are visited in a **serpentine (boustrophedon) order** — row
+    /// `row_lo` left to right, the next row right to left, … — so
+    /// consecutive frequencies are always dual-grid neighbors. Because the
+    /// symbol varies smoothly with frequency (the paper's shift-invariance
+    /// observation), the converged singular basis of one frequency is an
+    /// excellent warm start for the next; with `warm_sweep` the basis is
+    /// carried across the whole range (cold only at `row_lo`'s first
+    /// frequency), without it every frequency cold-starts — the ablation
+    /// [`Self::execute_topk_cold`] measures.
+    pub fn execute_topk_rows(
+        &self,
+        k: usize,
+        row_lo: usize,
+        row_hi: usize,
+        warm_sweep: bool,
+        ws: &mut Workspace,
+        out: &mut [f64],
+    ) -> u64 {
+        debug_assert!(row_lo <= row_hi && row_hi <= self.nc);
+        let ke = self.topk_per_freq(k);
+        debug_assert_eq!(out.len(), (row_hi - row_lo) * self.mc * ke);
+        let opts = TopKOptions::default();
+        // Never inherit a basis from whatever this pooled workspace did
+        // last (another strip, another layer): cold-start the sweep.
+        ws.topk.reset();
+        let mut iters = 0u64;
+        for ki in row_lo..row_hi {
+            for step in 0..self.mc {
+                let kj = self.serpentine_col(ki - row_lo, step);
+                if !warm_sweep {
+                    ws.topk.reset();
+                }
+                self.fill_block(ki, kj, ws);
+                let f = (ki - row_lo) * self.mc + kj;
+                let dst = &mut out[f * ke..(f + 1) * ke];
+                iters +=
+                    ws.solve_block_topk(self.block_rows, self.block_cols, ke, opts, dst) as u64;
+            }
+        }
+        iters
+    }
+
+    /// [`Self::execute_topk_rows`] with pool-managed workspace checkout
+    /// (warm-started within the range) — the tile entry point of the
+    /// coordinator's top-k model jobs.
+    pub fn execute_topk_rows_pooled(
+        &self,
+        k: usize,
+        row_lo: usize,
+        row_hi: usize,
+        out: &mut [f64],
+    ) -> u64 {
+        let mut ws = self.checkout();
+        let iters = self.execute_topk_rows(k, row_lo, row_hi, true, &mut ws, out);
+        self.restore(ws);
+        iters
+    }
+
+    /// Top-`k` execution over the full dual grid into a caller-provided
+    /// buffer (`topk_values_len(k)` long); returns total solver iteration
+    /// steps. Allocation-free per frequency once warmed up, like
+    /// [`Self::execute_into`].
+    pub fn execute_topk_into(&self, k: usize, out: &mut [f64]) -> u64 {
+        self.execute_topk_into_threads(k, self.effective_threads(), true, out)
+    }
+
+    /// [`Self::execute_topk_into`] with an explicit worker count (0 = auto)
+    /// and warm-start control. Threaded, each worker owns a **contiguous
+    /// strip of frequency rows** and sweeps it serpentine, so warm starts
+    /// stay local to a strip and never cross workers (results are
+    /// deterministic for a fixed strip partition).
+    pub fn execute_topk_into_threads(
+        &self,
+        k: usize,
+        threads: usize,
+        warm_sweep: bool,
+        out: &mut [f64],
+    ) -> u64 {
+        let ke = self.topk_per_freq(k);
+        assert_eq!(out.len(), self.freqs() * ke, "output buffer length mismatch");
+        let threads = super::resolve_threads(threads).min(self.nc.max(1));
+        if threads <= 1 || self.nc <= 1 {
+            let mut ws = self.checkout();
+            let iters = self.execute_topk_rows(k, 0, self.nc, warm_sweep, &mut ws, out);
+            self.restore(ws);
+            return iters;
+        }
+        let rows_per = self.nc.div_ceil(threads);
+        let row_vals = self.mc * ke;
+        let total = AtomicU64::new(0);
+        let total_ref = &total;
+        std::thread::scope(|scope| {
+            let mut rest: &mut [f64] = out;
+            let mut lo = 0usize;
+            while lo < self.nc {
+                let hi = (lo + rows_per).min(self.nc);
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut((hi - lo) * row_vals);
+                rest = tail;
+                scope.spawn(move || {
+                    let mut ws = self.checkout();
+                    let iters = self.execute_topk_rows(k, lo, hi, warm_sweep, &mut ws, head);
+                    self.restore(ws);
+                    total_ref.fetch_add(iters, Ordering::Relaxed);
+                });
+                lo = hi;
+            }
+        });
+        total.into_inner()
+    }
+
+    /// Top-`k` singular values per frequency, warm-started along the
+    /// plan's serpentine sweep — the partial-spectrum companion of
+    /// [`Self::execute`], at `O(n·m·c²k)` per converged iteration instead
+    /// of the full `O(n·m·c³)`.
+    ///
+    /// ```
+    /// use conv_svd_lfa::conv::ConvKernel;
+    /// use conv_svd_lfa::engine::SpectralPlan;
+    /// use conv_svd_lfa::lfa::LfaOptions;
+    /// use conv_svd_lfa::numeric::Pcg64;
+    ///
+    /// let mut rng = Pcg64::seeded(11);
+    /// let kernel = ConvKernel::random_he(6, 6, 3, 3, &mut rng);
+    /// let plan = SpectralPlan::new(&kernel, 8, 8, LfaOptions::default());
+    /// // Only the two extreme values per frequency (σ_max lives here) …
+    /// let top = plan.execute_topk(2);
+    /// assert_eq!(top.spectrum.rank_per_freq(), 2);
+    /// // … and they match the full pipeline's extremes.
+    /// let full = plan.execute();
+    /// assert!((top.spectrum.sigma_max() - full.sigma_max()).abs() < 1e-8);
+    /// assert!(top.iterations > 0);
+    /// ```
+    pub fn execute_topk(&self, k: usize) -> TopKResult {
+        let mut values = vec![0.0f64; self.topk_values_len(k)];
+        let iterations = self.execute_topk_into(k, &mut values);
+        TopKResult { spectrum: self.topk_spectrum(k, values), iterations }
+    }
+
+    /// Ablation twin of [`Self::execute_topk`]: cold-start the Krylov
+    /// solver at **every** frequency. Same values, more iterations —
+    /// the bench's measure of what cross-frequency warm-starting buys.
+    pub fn execute_topk_cold(&self, k: usize) -> TopKResult {
+        let mut values = vec![0.0f64; self.topk_values_len(k)];
+        let iterations =
+            self.execute_topk_into_threads(k, self.effective_threads(), false, &mut values);
+        TopKResult { spectrum: self.topk_spectrum(k, values), iterations }
+    }
+
+    /// Package a flat top-k buffer as a partial [`Spectrum`].
+    fn topk_spectrum(&self, k: usize, values: Vec<f64>) -> Spectrum {
+        Spectrum {
+            n: self.nc,
+            m: self.mc,
+            c_out: self.block_rows,
+            c_in: self.block_cols,
+            per_freq: self.topk_per_freq(k),
+            values,
+        }
+    }
+
+    /// Execute `request` into a caller-provided buffer
+    /// (`request_values_len(request)` long). Returns the solver iteration
+    /// steps spent (0 for the full fused path, which is direct).
+    pub fn execute_request_into(&self, request: SpectrumRequest, out: &mut [f64]) -> u64 {
+        match request {
+            SpectrumRequest::Full => {
+                self.execute_into(out);
+                0
+            }
+            SpectrumRequest::TopK(k) => self.execute_topk_into(k, out),
+        }
+    }
+
+    /// Top-`k` singular **triplets** per frequency: values plus left/right
+    /// singular vectors, the inputs low-rank compression needs
+    /// ([`crate::spectral::lowrank::compress_from_topk`]). Serial
+    /// warm-started sweep; the factor matrices are fresh allocations by
+    /// necessity — they are the output.
+    pub fn execute_topk_factors(&self, k: usize) -> TopKSvd {
+        let ke = self.topk_per_freq(k);
+        let freqs = self.freqs();
+        let opts = TopKOptions::default();
+        let mut values = vec![0.0f64; freqs * ke];
+        let mut u: Vec<CMat> = (0..freqs).map(|_| CMat::zeros(self.block_rows, ke)).collect();
+        let mut v: Vec<CMat> = (0..freqs).map(|_| CMat::zeros(self.block_cols, ke)).collect();
+        let mut ws = self.checkout();
+        ws.topk.reset();
+        let mut iters = 0u64;
+        let mut total_energy = 0.0f64;
+        for ki in 0..self.nc {
+            for step in 0..self.mc {
+                let kj = self.serpentine_col(ki, step);
+                self.fill_block(ki, kj, &mut ws);
+                total_energy += ws.block.iter().map(|z| z.norm_sqr()).sum::<f64>();
+                let f = ki * self.mc + kj;
+                let dst = &mut values[f * ke..(f + 1) * ke];
+                iters +=
+                    ws.solve_block_topk(self.block_rows, self.block_cols, ke, opts, dst) as u64;
+                for j in 0..ke {
+                    let vj = ws.topk.right_vector(j);
+                    for c in 0..self.block_cols {
+                        v[f][(c, j)] = vj[c];
+                    }
+                    // A v_j = σ_j u_j ⇒ u_j = (A v_j)/σ_j (zero if σ_j = 0).
+                    let inv = if dst[j] > 0.0 { 1.0 / dst[j] } else { 0.0 };
+                    let wj = ws.topk.left_scaled(j);
+                    for r in 0..self.block_rows {
+                        u[f][(r, j)] = wj[r].scale(inv);
+                    }
+                }
+            }
+        }
+        self.restore(ws);
+        TopKSvd {
+            n: self.nc,
+            m: self.mc,
+            c_out: self.block_rows,
+            c_in: self.block_cols,
+            k: ke,
+            u,
+            sigma: self.topk_spectrum(k, values),
+            v,
+            iterations: iters,
+            total_energy,
+        }
+    }
+
     /// Execute the full dual grid into a caller-provided buffer
     /// (`values_len()` long). After the first call on a plan this performs
     /// no heap allocation in the serial path.
@@ -323,7 +611,14 @@ impl SpectralPlan {
     pub fn execute(&self) -> Spectrum {
         let mut values = vec![0.0f64; self.values_len()];
         self.execute_into(&mut values);
-        Spectrum { n: self.nc, m: self.mc, c_out: self.block_rows, c_in: self.block_cols, values }
+        Spectrum {
+            n: self.nc,
+            m: self.mc,
+            c_out: self.block_rows,
+            c_in: self.block_cols,
+            per_freq: self.rank,
+            values,
+        }
     }
 
     /// Full SVD with per-frequency factors `U_k, Σ_k, V_k` (the factor
@@ -359,6 +654,7 @@ impl SpectralPlan {
                 m: self.mc,
                 c_out: self.block_rows,
                 c_in: self.block_cols,
+                per_freq: r,
                 values,
             },
             v,
@@ -492,6 +788,129 @@ mod tests {
         let k = ConvKernel::random_he(4, 4, 3, 3, &mut rng);
         let pool = Arc::new(WorkspacePool::for_block(2, 2, 9));
         let _ = SpectralPlan::with_shared_pool(&k, 4, 4, 1, LfaOptions::default(), pool);
+    }
+
+    #[test]
+    fn topk_matches_full_extremes() {
+        let mut rng = Pcg64::seeded(605);
+        let k = ConvKernel::random_he(5, 4, 3, 3, &mut rng);
+        let plan = SpectralPlan::new(&k, 6, 6, LfaOptions { threads: 1, ..Default::default() });
+        let full = plan.execute();
+        let top = plan.execute_topk(2);
+        assert_eq!(top.spectrum.rank_per_freq(), 2);
+        assert!(!top.spectrum.is_full());
+        let scale = full.sigma_max();
+        for f in 0..plan.freqs() {
+            let want = full.at(f);
+            let got = top.spectrum.at(f);
+            for j in 0..2 {
+                assert!(
+                    (want[j] - got[j]).abs() <= 1e-8 * scale,
+                    "f={f} j={j}: {} vs {}",
+                    got[j],
+                    want[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn topk_warm_sweep_uses_fewer_iterations_than_cold() {
+        // Channel count matters here: below c≈16 the Krylov loop exhausts
+        // the whole space either way and warm/cold step counts tie. At
+        // c=32 the warm hint reliably saves steps at every frequency.
+        let mut rng = Pcg64::seeded(606);
+        let k = ConvKernel::random_he(32, 32, 3, 3, &mut rng);
+        let plan = SpectralPlan::new(&k, 6, 6, LfaOptions { threads: 1, ..Default::default() });
+        let warm = plan.execute_topk(2);
+        let cold = plan.execute_topk_cold(2);
+        let scale = warm.spectrum.sigma_max();
+        for (a, b) in warm.spectrum.values.iter().zip(&cold.spectrum.values) {
+            assert!((a - b).abs() <= 2e-8 * scale, "{a} vs {b}");
+        }
+        assert!(
+            warm.iterations < cold.iterations,
+            "warm {} vs cold {}",
+            warm.iterations,
+            cold.iterations
+        );
+        assert!(warm.iterations_per_freq() >= 1.0);
+    }
+
+    #[test]
+    fn topk_threaded_strips_match_serial_values() {
+        let mut rng = Pcg64::seeded(607);
+        let k = ConvKernel::random_he(4, 4, 3, 3, &mut rng);
+        let plan = SpectralPlan::new(&k, 12, 12, LfaOptions { threads: 1, ..Default::default() });
+        let serial = plan.execute_topk(3);
+        let mut threaded = vec![0.0f64; plan.topk_values_len(3)];
+        plan.execute_topk_into_threads(3, 3, true, &mut threaded);
+        let scale = serial.spectrum.sigma_max();
+        for (a, b) in serial.spectrum.values.iter().zip(&threaded) {
+            assert!((a - b).abs() <= 2e-8 * scale, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn topk_clamps_k_to_rank_and_supports_stride() {
+        let mut rng = Pcg64::seeded(608);
+        let k = ConvKernel::random_he(3, 2, 3, 3, &mut rng);
+        let plan =
+            SpectralPlan::with_stride(&k, 8, 8, 2, LfaOptions { threads: 1, ..Default::default() });
+        // rank = min(3, 4·2) = 3; k = 9 clamps to 3.
+        assert_eq!(plan.topk_per_freq(9), 3);
+        let full = plan.execute();
+        let top = plan.execute_topk(9);
+        let scale = full.sigma_max();
+        for (a, b) in full.values.iter().zip(&top.spectrum.values) {
+            assert!((a - b).abs() <= 1e-8 * scale, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn topk_factors_reconstruct_best_rank_k() {
+        let mut rng = Pcg64::seeded(609);
+        let k = ConvKernel::random_he(4, 3, 3, 3, &mut rng);
+        let plan = SpectralPlan::new(&k, 5, 5, LfaOptions { threads: 1, ..Default::default() });
+        let fac = plan.execute_topk_factors(2);
+        assert_eq!(fac.k, 2);
+        let full = plan.execute_full();
+        for f in 0..plan.freqs() {
+            // The truncated symbol must match the Eckart–Young truncation
+            // built from the full SVD's top-2 triplets.
+            let s = full.sigma.at(f);
+            let u = &full.u[f];
+            let v = &full.v[f];
+            let mut us = CMat::zeros(u.rows, 2);
+            for i in 0..u.rows {
+                for j in 0..2 {
+                    us[(i, j)] = u[(i, j)].scale(s[j]);
+                }
+            }
+            let mut vr = CMat::zeros(v.rows, 2);
+            for i in 0..v.rows {
+                for j in 0..2 {
+                    vr[(i, j)] = v[(i, j)];
+                }
+            }
+            let want = us.matmul(&vr.hermitian());
+            let got = fac.truncated_symbol(f);
+            assert!(got.max_abs_diff(&want) < 1e-6, "f={f}");
+        }
+    }
+
+    #[test]
+    fn request_lengths_and_dispatch() {
+        let mut rng = Pcg64::seeded(611);
+        let k = ConvKernel::random_he(4, 4, 3, 3, &mut rng);
+        let plan = SpectralPlan::new(&k, 4, 4, LfaOptions { threads: 1, ..Default::default() });
+        assert_eq!(plan.request_values_len(SpectrumRequest::Full), plan.values_len());
+        assert_eq!(plan.request_values_len(SpectrumRequest::TopK(2)), plan.topk_values_len(2));
+        let mut full = vec![0.0f64; plan.values_len()];
+        assert_eq!(plan.execute_request_into(SpectrumRequest::Full, &mut full), 0);
+        let mut top = vec![0.0f64; plan.topk_values_len(1)];
+        assert!(plan.execute_request_into(SpectrumRequest::TopK(1), &mut top) > 0);
+        assert!((top[0] - full[0]).abs() <= 1e-8 * full[0].max(1.0));
     }
 
     #[test]

@@ -16,6 +16,7 @@
 use crate::lfa::svd::BlockSolver;
 use crate::linalg::jacobi_eig::{self, GramScratch};
 use crate::linalg::jacobi_svd::{self, JacobiScratch};
+use crate::linalg::power::{self, TopKOptions, TopKScratch};
 use crate::numeric::C64;
 use std::sync::Mutex;
 
@@ -29,6 +30,12 @@ pub struct Workspace {
     pub jacobi: JacobiScratch,
     /// Gram-route work matrix (ablation solver).
     pub gram: GramScratch,
+    /// Krylov-solver scratch for the top-k partial-spectrum mode. The
+    /// converged basis of one frequency **warm-starts the next** along a
+    /// sweep; [`power::TopKScratch::reset`] at a sweep boundary forces a
+    /// cold start. Sized lazily on the first top-k solve (a warm-up
+    /// execution, after which the hot loop is allocation-free).
+    pub topk: TopKScratch,
 }
 
 impl Workspace {
@@ -43,6 +50,7 @@ impl Workspace {
             tap_phase: vec![C64::ZERO; ntaps.max(1)],
             jacobi,
             gram,
+            topk: TopKScratch::new(),
         }
     }
 
@@ -59,6 +67,23 @@ impl Workspace {
                 jacobi_eig::singular_values_gram_into(&self.block, rows, cols, &mut self.gram, out)
             }
         }
+    }
+
+    /// Top-`k` singular values (descending) of the current contents of
+    /// `self.block` via warm-started Krylov iteration, seeded from
+    /// whatever basis the previous solve on this workspace converged to.
+    /// Returns the iterations spent. Allocation-free after the scratch has
+    /// seen the shape once.
+    #[inline]
+    pub fn solve_block_topk(
+        &mut self,
+        rows: usize,
+        cols: usize,
+        k: usize,
+        opts: TopKOptions,
+        out: &mut [f64],
+    ) -> usize {
+        power::block_topk(&self.block, rows, cols, k, opts, &mut self.topk, out)
     }
 }
 
@@ -132,6 +157,23 @@ mod tests {
         ws.solve_block(BlockSolver::GramEigen, 4, 3, &mut got);
         for (x, y) in want.iter().zip(&got) {
             assert!((x - y).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn solve_block_topk_matches_full_extremes() {
+        let mut rng = Pcg64::seeded(501);
+        let a = CMat::random_normal(5, 4, &mut rng);
+        let mut ws = Workspace::for_block(5, 4, 9);
+        ws.block.copy_from_slice(&a.data);
+        let mut full = vec![0.0f64; 4];
+        ws.solve_block(BlockSolver::Jacobi, 5, 4, &mut full);
+        let mut top = vec![0.0f64; 2];
+        let iters = ws.solve_block_topk(5, 4, 2, TopKOptions::default(), &mut top);
+        assert!(iters >= 1);
+        assert!(ws.topk.is_warm());
+        for j in 0..2 {
+            assert!((top[j] - full[j]).abs() < 1e-9 * full[0].max(1.0), "{j}");
         }
     }
 

@@ -5,24 +5,38 @@ use crate::numeric::CMat;
 
 /// Singular values of a convolution, grouped by frequency.
 ///
-/// Frequency `f = i·m + j` contributes `min(c_out, c_in)` values; the full
-/// operator has `n·m·min(c_out, c_in)` nonzero-capable singular values
+/// A **full** spectrum stores `min(c_out, c_in)` values per frequency; the
+/// full operator has `n·m·min(c_out, c_in)` nonzero-capable singular values
 /// (`n·m·c` for square channel counts, matching the paper's counts — e.g.
-/// `n=256, c=16 → 1,048,576`).
+/// `n=256, c=16 → 1,048,576`). A **partial** (top-k) spectrum, as produced
+/// by the engine's `SpectrumRequest::TopK` mode, stores only the `k`
+/// largest values per frequency; [`Spectrum::per_freq`] records which of
+/// the two a given instance is, so every consumer indexes correctly.
 #[derive(Clone, Debug)]
 pub struct Spectrum {
     pub n: usize,
     pub m: usize,
     pub c_out: usize,
     pub c_in: usize,
+    /// Singular values stored per frequency: `min(c_out, c_in)` for full
+    /// spectra, `k` for top-k partial spectra.
+    pub per_freq: usize,
     /// `values[f·r .. (f+1)·r]` are the descending singular values at
-    /// frequency `f`, with `r = min(c_out, c_in)`.
+    /// frequency `f`, with `r = per_freq`.
     pub values: Vec<f64>,
 }
 
 impl Spectrum {
+    /// Values stored per frequency (`min(c_out, c_in)` for a full spectrum,
+    /// `k` for a top-k partial one).
     pub fn rank_per_freq(&self) -> usize {
-        self.c_out.min(self.c_in)
+        self.per_freq
+    }
+
+    /// Whether this spectrum stores every singular value per frequency (as
+    /// opposed to a top-k partial spectrum).
+    pub fn is_full(&self) -> bool {
+        self.per_freq == self.c_out.min(self.c_in)
     }
 
     pub fn num_values(&self) -> usize {
@@ -41,7 +55,10 @@ impl Spectrum {
         self.values.iter().cloned().fold(0.0, f64::max)
     }
 
-    /// Smallest singular value across all frequencies.
+    /// Smallest **stored** singular value across all frequencies. For a
+    /// full spectrum this is the operator's smallest singular value; for a
+    /// top-k partial spectrum it is only the smallest of the computed
+    /// extremes.
     pub fn sigma_min(&self) -> f64 {
         self.values.iter().cloned().fold(f64::INFINITY, f64::min)
     }
@@ -134,13 +151,58 @@ impl FullSvd {
     }
 }
 
+/// Partial (top-k) SVD of a convolution: per frequency, the `k` largest
+/// singular values with their left/right singular vectors — the output of
+/// the engine's warm-started Krylov (Lanczos) sweep
+/// (`SpectralPlan::execute_topk_factors`). The rank-`k` truncation
+/// `U_k Σ_k V_kᴴ` it spans is the Eckart–Young-optimal rank-`k`
+/// approximation of each symbol, which is all that low-rank compression
+/// needs — at `O(n·m·c²k)` instead of the full `O(n·m·c³)`.
+pub struct TopKSvd {
+    pub n: usize,
+    pub m: usize,
+    pub c_out: usize,
+    pub c_in: usize,
+    /// Triplets kept per frequency.
+    pub k: usize,
+    /// Per-frequency left factors (`c_out×k`).
+    pub u: Vec<CMat>,
+    /// Per-frequency top-k singular values (`per_freq == k`).
+    pub sigma: Spectrum,
+    /// Per-frequency right factors (`c_in×k`).
+    pub v: Vec<CMat>,
+    /// Total solver iteration steps spent across all frequencies.
+    pub iterations: u64,
+    /// Total spectral energy `Σ_k ‖A_k‖_F² = Σ_{k,j} σ_{k,j}²` over **all**
+    /// singular values, accumulated exactly from the symbol blocks during
+    /// the sweep. This is what lets a partial SVD still report the exact
+    /// Eckart–Young relative error: `√(1 − Σ_{kept} σ²/total)`.
+    pub total_energy: f64,
+}
+
+impl TopKSvd {
+    /// Rank-`k` truncated symbol at frequency `f`: `U_k Σ_k V_kᴴ`.
+    pub fn truncated_symbol(&self, f: usize) -> CMat {
+        let s = self.sigma.at(f);
+        let u = &self.u[f];
+        let v = &self.v[f];
+        let mut us = CMat::zeros(u.rows, self.k);
+        for i in 0..u.rows {
+            for j in 0..self.k {
+                us[(i, j)] = u[(i, j)].scale(s[j]);
+            }
+        }
+        us.matmul(&v.hermitian())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn spectrum(values: Vec<f64>, r: usize) -> Spectrum {
         let f = values.len() / r;
-        Spectrum { n: f, m: 1, c_out: r, c_in: r, values }
+        Spectrum { n: f, m: 1, c_out: r, c_in: r, per_freq: r, values }
     }
 
     #[test]

@@ -87,7 +87,14 @@ pub fn singular_values_timed(
     let values = svd_pass(&grid, opts);
     let svd = t1.elapsed();
     (
-        Spectrum { n, m, c_out: kernel.c_out, c_in: kernel.c_in, values },
+        Spectrum {
+            n,
+            m,
+            c_out: kernel.c_out,
+            c_in: kernel.c_in,
+            per_freq: kernel.c_out.min(kernel.c_in),
+            values,
+        },
         StageTiming { transform, copy: Duration::ZERO, svd },
     )
 }
@@ -167,7 +174,14 @@ pub fn svd_full_from_grid(grid: &SymbolGrid) -> FullSvd {
         c_out: grid.c_out,
         c_in: grid.c_in,
         u,
-        sigma: Spectrum { n: grid.n, m: grid.m, c_out: grid.c_out, c_in: grid.c_in, values },
+        sigma: Spectrum {
+            n: grid.n,
+            m: grid.m,
+            c_out: grid.c_out,
+            c_in: grid.c_in,
+            per_freq: r,
+            values,
+        },
         v,
     }
 }

@@ -18,8 +18,13 @@
 //! `(kernel, grid, stride, layout, solver, threads)` and executed many
 //! times: it precomputes the twiddle/phase tables, owns pooled per-worker
 //! scratch workspaces, and fuses symbol computation with the per-frequency
-//! SVD so nothing is allocated per frequency. See `ARCHITECTURE.md` for the
-//! full picture.
+//! SVD so nothing is allocated per frequency. Executions answer a
+//! [`engine::SpectrumRequest`]: the **full** spectrum, or only the **top-k**
+//! values per frequency via warm-started Krylov iteration — the partial
+//! regime that spectral-norm clipping, Lipschitz certification and
+//! low-rank compression actually consume. See `ARCHITECTURE.md` for the
+//! full picture and `docs/PAPER_MAP.md` for the paper→code map (which
+//! section, equation, figure and table each module reproduces).
 //!
 //! - **L1 — numeric/linalg primitives**: [`numeric`] (complex arithmetic,
 //!   layout-aware matrices, deterministic PRNG), [`linalg`] (one-sided
@@ -86,6 +91,11 @@
 //! let spectra = plan.execute();
 //! assert_eq!(spectra.num_values(), 2 * 8 * 8 * 3);
 //! assert!(spectra.lipschitz_upper_bound() > 0.0);
+//! // Only need the extremes? The top-k sweep computes exactly those —
+//! // same Lipschitz bound, a fraction of the work.
+//! let (bound, iterations) = plan.lipschitz_bound_topk();
+//! assert!((bound - spectra.lipschitz_upper_bound()).abs() < 1e-7 * bound);
+//! assert!(iterations > 0);
 //! ```
 
 // The codebase favors explicit index loops that mirror the paper's sums;

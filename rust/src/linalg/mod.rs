@@ -1,7 +1,9 @@
 //! Linear-algebra substrate built from scratch (no LAPACK in this image):
 //! Householder QR, Golub–Reinsch dense SVD, one-sided Jacobi SVD for the
 //! per-frequency complex blocks, Hermitian Jacobi eigensolver (Gram-route
-//! ablation), power iteration, and induced-norm bounds.
+//! ablation), power/Krylov iteration (including the warm-startable
+//! block top-k solver behind the engine's partial-spectrum mode), and
+//! induced-norm bounds.
 
 pub mod gk_svd;
 pub mod jacobi_eig;
@@ -12,4 +14,4 @@ pub mod qr;
 
 pub use gk_svd::SvdResult;
 pub use jacobi_svd::CSvd;
-pub use power::LinOp;
+pub use power::{block_topk, LinOp, TopKOptions, TopKScratch};

@@ -1,11 +1,28 @@
-//! Power iteration for the spectral norm (largest singular value).
+//! Power and Krylov iteration for extreme singular values.
 //!
-//! The Yoshida–Miyato baseline (§II-b of the paper): approximate only σ_max,
-//! either on the *true* convolution operator (via `LinOp`) or on the loose
-//! reshaped `c_out × c_in·k²` matrix. Used as a comparison point for the
-//! full-spectrum methods.
+//! Two layers live here:
+//!
+//! - [`spectral_norm`]: the Yoshida–Miyato baseline (§II-b of the paper) —
+//!   approximate only σ_max, either on the *true* convolution operator (via
+//!   [`LinOp`]) or on the loose reshaped `c_out × c_in·k²` matrix. A
+//!   comparison point for the full-spectrum methods.
+//! - [`block_topk`]: the per-frequency solver behind the engine's
+//!   `SpectrumRequest::TopK` mode — **Krylov-accelerated power iteration
+//!   (Lanczos with full reorthogonalization) on the Gram operator, plus a
+//!   deflated completion probe**. Plain block subspace iteration converges
+//!   at the *relative eigenvalue gap*, which for conv symbols (dense,
+//!   quasi-uniform spectra) shrinks like `1/c` — making it as expensive as
+//!   the full Jacobi decomposition it was meant to beat. The Krylov form
+//!   converges like Chebyshev (square-root of the gap), needs one
+//!   matvec pair per step, and a power-iteration probe on the deflated
+//!   operator catches the degenerate copies single-vector Lanczos can
+//!   miss. The reusable [`TopKScratch`] carries the converged singular
+//!   basis from one solve into the starting vector of the next, so a sweep
+//!   over smoothly varying symbols — neighboring frequencies — spends
+//!   measurably fewer steps than isolated cold solves (the paper's
+//!   smooth-symbol observation turned into an iteration-count win).
 
-use crate::numeric::{Mat, Pcg64};
+use crate::numeric::{C64, Mat, Pcg64};
 
 /// A real linear operator `A : R^in → R^out` exposing the two matvecs the
 /// power method needs. Implemented by dense matrices and by the convolution
@@ -71,6 +88,712 @@ pub fn spectral_norm<O: LinOp>(op: &O, max_iters: usize, tol: f64, rng: &mut Pcg
     PowerResult { sigma_max: sigma, iterations: iters, residual }
 }
 
+/// Convergence controls for [`block_topk`].
+#[derive(Clone, Copy, Debug)]
+pub struct TopKOptions {
+    /// Ritz-residual tolerance, relative to the largest eigenvalue of the
+    /// Gram operator: pair `j` is converged when
+    /// `‖AᴴA x_j − λ_j x_j‖ ≤ tol·λ_max`. For a Hermitian operator the
+    /// eigenvalue error is bounded by the residual, so the default keeps
+    /// σ errors below `1e-8·σ_max` even for values as small as
+    /// `~1e-4·σ_max` (the σ²→σ conversion divides the λ error by `2σ_j`).
+    pub tol: f64,
+    /// Hard cap on iteration steps per solve (Lanczos steps + probe power
+    /// steps). The Krylov dimension is additionally capped by the scratch
+    /// sizing; at either cap the best available estimates are reported.
+    pub max_iters: usize,
+}
+
+impl Default for TopKOptions {
+    fn default() -> Self {
+        Self { tol: 1e-12, max_iters: 4000 }
+    }
+}
+
+/// Reusable scratch for [`block_topk`]: the Lanczos basis and tridiagonal,
+/// the small-eigenproblem buffers, and the output singular vectors. After a
+/// solve the scratch is **warm**: the converged right singular vectors are
+/// kept and the next call seeds its Krylov start vector from them — call
+/// [`TopKScratch::reset`] at the start of every new sweep (or unrelated
+/// block) to force a cold start. All buffers are sized by
+/// [`TopKScratch::reserve`], so repeated solves on one shape are
+/// allocation-free.
+#[derive(Default)]
+pub struct TopKScratch {
+    rows: usize,
+    cols: usize,
+    k: usize,
+    /// Dimension the Gram iteration runs in: `min(rows, cols)`.
+    dim: usize,
+    /// Krylov-basis capacity (`≤ dim`).
+    tmax: usize,
+    /// Output right singular vectors, vector-major: `v[j·cols..]`.
+    v: Vec<C64>,
+    /// Output scaled left vectors `A v_j = σ_j u_j`, vector-major over rows.
+    w: Vec<C64>,
+    /// Current Lanczos vector (`dim`).
+    q: Vec<C64>,
+    /// Lanczos work vector (`dim`).
+    u: Vec<C64>,
+    /// Matvec intermediate (`max(rows, cols)`).
+    aw: Vec<C64>,
+    /// Orthonormal Krylov basis, vector-major: `qbasis[t·dim..]`.
+    qbasis: Vec<C64>,
+    /// Tridiagonal diagonal / off-diagonal.
+    alpha: Vec<f64>,
+    beta: Vec<f64>,
+    /// tqli work: eigenvalues, off-diagonal copy, last-row components.
+    td: Vec<f64>,
+    te: Vec<f64>,
+    tz: Vec<f64>,
+    /// Top-k eigenvalue indices into `td`.
+    idx: Vec<usize>,
+    /// Tridiagonal eigenvectors of the chosen pairs, vector-major `k×tmax`.
+    svecs: Vec<f64>,
+    /// Inverse-iteration solve buffers (`tmax`).
+    sdd: Vec<f64>,
+    sup: Vec<f64>,
+    /// Probe vectors (right space / mapped).
+    pv: Vec<C64>,
+    pz: Vec<C64>,
+    pw: Vec<C64>,
+    warm: bool,
+}
+
+impl TopKScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pre-size for `rows×cols` blocks and `k` values so solves do not
+    /// allocate. Resizing invalidates any warm basis.
+    pub fn reserve(&mut self, rows: usize, cols: usize, k: usize) {
+        if self.rows != rows || self.cols != cols || self.k != k {
+            self.warm = false;
+        }
+        self.rows = rows;
+        self.cols = cols;
+        self.k = k;
+        let dim = rows.min(cols);
+        self.dim = dim;
+        // Krylov capacity: comfortably past the observed step counts for
+        // dense conv-symbol spectra, never past the space dimension.
+        self.tmax = dim.min((8 * k).max(48) + dim / 8).max(k.min(dim)).max(1);
+        self.v.resize(k * cols, C64::ZERO);
+        self.w.resize(k * rows, C64::ZERO);
+        self.q.resize(dim, C64::ZERO);
+        self.u.resize(dim, C64::ZERO);
+        self.aw.resize(rows.max(cols), C64::ZERO);
+        self.qbasis.resize(self.tmax * dim, C64::ZERO);
+        self.alpha.resize(self.tmax, 0.0);
+        self.beta.resize(self.tmax, 0.0);
+        self.td.resize(self.tmax, 0.0);
+        self.te.resize(self.tmax, 0.0);
+        self.tz.resize(self.tmax, 0.0);
+        self.idx.resize(self.tmax, 0);
+        self.svecs.resize(k * self.tmax, 0.0);
+        self.sdd.resize(self.tmax, 0.0);
+        self.sup.resize(self.tmax, 0.0);
+        self.pv.resize(cols, C64::ZERO);
+        self.pz.resize(cols, C64::ZERO);
+        self.pw.resize(rows, C64::ZERO);
+    }
+
+    /// Forget the warm basis: the next [`block_topk`] call cold-starts.
+    pub fn reset(&mut self) {
+        self.warm = false;
+    }
+
+    /// Whether the next solve will warm-start from a converged basis.
+    pub fn is_warm(&self) -> bool {
+        self.warm
+    }
+
+    /// Right singular vector `j` (length `cols`) after a solve, descending
+    /// value order.
+    pub fn right_vector(&self, j: usize) -> &[C64] {
+        &self.v[j * self.cols..(j + 1) * self.cols]
+    }
+
+    /// Scaled left vector `j` after a solve: `A v_j = σ_j u_j` (length
+    /// `rows`). Divide by `σ_j` for the unit left singular vector.
+    pub fn left_scaled(&self, j: usize) -> &[C64] {
+        &self.w[j * self.rows..(j + 1) * self.rows]
+    }
+}
+
+/// `⟨a, b⟩ = Σ conj(a_i)·b_i`.
+#[inline]
+fn cdot(a: &[C64], b: &[C64]) -> C64 {
+    let mut acc = C64::ZERO;
+    for (x, y) in a.iter().zip(b.iter()) {
+        acc = acc.mul_add(x.conj(), *y);
+    }
+    acc
+}
+
+#[inline]
+fn cnorm2(a: &[C64]) -> f64 {
+    a.iter().map(|z| z.norm_sqr()).sum()
+}
+
+/// `y = A x` for a row-major `rows×cols` block.
+fn mat_vec(a: &[C64], rows: usize, cols: usize, x: &[C64], y: &mut [C64]) {
+    for i in 0..rows {
+        let arow = &a[i * cols..(i + 1) * cols];
+        let mut acc = C64::ZERO;
+        for c in 0..cols {
+            acc = acc.mul_add(arow[c], x[c]);
+        }
+        y[i] = acc;
+    }
+}
+
+/// `y = Aᴴ x` for a row-major `rows×cols` block.
+fn mat_vec_h(a: &[C64], rows: usize, cols: usize, x: &[C64], y: &mut [C64]) {
+    y[..cols].fill(C64::ZERO);
+    for i in 0..rows {
+        let arow = &a[i * cols..(i + 1) * cols];
+        let xi = x[i];
+        for c in 0..cols {
+            y[c] = y[c].mul_add(arow[c].conj(), xi);
+        }
+    }
+}
+
+/// Eigenvalues of the symmetric tridiagonal `(d, e)` (size `t`) by implicit
+/// QL with Wilkinson shifts, plus the **last component** of every
+/// eigenvector (accumulated through the rotations) — exactly what the
+/// Lanczos residual bound `|β_t·s_{t,i}|` needs. `d` is overwritten with
+/// the (unsorted) eigenvalues, `e` is clobbered, `z` receives the last-row
+/// components. `O(t²)`.
+fn tqli_values_lastrow(d: &mut [f64], e: &mut [f64], z: &mut [f64], t: usize) {
+    z[..t].fill(0.0);
+    z[t - 1] = 1.0;
+    if t == 1 {
+        return;
+    }
+    e[t - 1] = 0.0;
+    for l in 0..t {
+        let mut iters = 0;
+        loop {
+            let mut m = l;
+            while m < t - 1 {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= 1e-300 + 1e-16 * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iters += 1;
+            if iters > 50 {
+                break;
+            }
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + if g >= 0.0 { r } else { -r });
+            let mut s = 1.0f64;
+            let mut c = 1.0f64;
+            let mut p = 0.0f64;
+            let mut underflow = false;
+            let mut i = m;
+            while i > l {
+                i -= 1;
+                let f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    underflow = true;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                let rr = (d[i] - g) * s + 2.0 * c * b;
+                p = s * rr;
+                d[i + 1] = g + p;
+                g = c * rr - b;
+                // The same rotation, applied to the last-row accumulator.
+                let zi = z[i];
+                let zi1 = z[i + 1];
+                z[i + 1] = s * zi + c * zi1;
+                z[i] = c * zi - s * zi1;
+            }
+            if !underflow {
+                d[l] -= p;
+                e[l] = g;
+                e[m] = 0.0;
+            }
+        }
+    }
+}
+
+/// One eigenvector of the symmetric tridiagonal `(alpha, beta)` (size `t`)
+/// for the (already computed) eigenvalue `lam`, by inverse iteration with a
+/// perturbed shift; written into `s[..t]`, normalized. `O(t)` per solve.
+fn tridiag_eigvec(
+    alpha: &[f64],
+    beta: &[f64],
+    t: usize,
+    lam: f64,
+    seed: u64,
+    dd: &mut [f64],
+    up: &mut [f64],
+    s: &mut [f64],
+) {
+    let mut rng = Pcg64::seeded(0x7071_u64 ^ seed);
+    for x in s[..t].iter_mut() {
+        *x = rng.normal();
+    }
+    let shift = lam + 1e-12 * lam.abs().max(1.0);
+    for _round in 0..3 {
+        // Thomas solve (T − shift·I) y = s, in place on s.
+        for i in 0..t {
+            dd[i] = alpha[i] - shift;
+        }
+        up[..t.saturating_sub(1)].copy_from_slice(&beta[..t.saturating_sub(1)]);
+        for i in 0..t - 1 {
+            if dd[i].abs() < 1e-300 {
+                dd[i] = 1e-300;
+            }
+            let w = up[i] / dd[i];
+            dd[i + 1] -= w * up[i];
+            s[i + 1] -= w * s[i];
+        }
+        if dd[t - 1].abs() < 1e-300 {
+            dd[t - 1] = 1e-300;
+        }
+        s[t - 1] /= dd[t - 1];
+        let mut i = t - 1;
+        while i > 0 {
+            i -= 1;
+            s[i] = (s[i] - up[i] * s[i + 1]) / dd[i];
+        }
+        let n: f64 = s[..t].iter().map(|x| x * x).sum::<f64>().sqrt();
+        if n == 0.0 {
+            return;
+        }
+        for x in s[..t].iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+/// Top-`k` singular values of a row-major `rows×cols` complex block,
+/// written descending into `out` (`k ≤ min(rows, cols)` values), with the
+/// corresponding singular vectors left in `scratch`
+/// ([`TopKScratch::right_vector`] / [`TopKScratch::left_scaled`]). Returns
+/// the number of iteration steps spent (Lanczos steps + probe power steps).
+///
+/// The engine: Lanczos on the Gram operator of the smaller side (`AᴴA` or
+/// `AAᴴ`), fully reorthogonalized, with the Ritz residual bound
+/// `|β_t·s_{t,i}| ≤ tol·λ_max` as the stopping rule — convergence like
+/// Chebyshev in the relative gap, one matvec pair per step. A deflated
+/// power-iteration **probe** then checks the orthogonal complement of the
+/// returned vectors for a larger hidden eigenvalue (the degenerate-copy
+/// case single-vector Krylov cannot see) and completes the set if one is
+/// found. A warm scratch (see [`TopKScratch`]) seeds the start vector from
+/// the previous block's singular basis. Allocation-free once the scratch
+/// has seen the shape.
+///
+/// Like every Gram-side method (including the `GramEigen` ablation
+/// solver), exactly-zero singular values are reported at the `√ε·σ_max ≈
+/// 2e-8·σ_max` noise floor of the squared formulation; nonzero values are
+/// accurate to the residual tolerance.
+pub fn block_topk(
+    a: &[C64],
+    rows: usize,
+    cols: usize,
+    k: usize,
+    opts: TopKOptions,
+    scratch: &mut TopKScratch,
+    out: &mut [f64],
+) -> usize {
+    debug_assert_eq!(a.len(), rows * cols);
+    debug_assert!(k >= 1 && k <= rows.min(cols), "k must be in 1..=min(rows, cols)");
+    debug_assert_eq!(out.len(), k);
+    scratch.reserve(rows, cols, k);
+    let dim = scratch.dim;
+    let tmax = scratch.tmax;
+    let use_right = cols <= rows;
+    let tol = opts.tol;
+    let max_steps = opts.max_iters.max(k + 1);
+    let mut steps = 0usize;
+
+    // --- starting vector: warm hint (sum of previous right vectors,
+    // mapped through A when iterating the left Gram side) or random ---
+    let mut warm_ok = false;
+    if scratch.warm {
+        if use_right {
+            scratch.q.fill(C64::ZERO);
+            for j in 0..k {
+                let vj = &scratch.v[j * cols..(j + 1) * cols];
+                for (qc, vc) in scratch.q.iter_mut().zip(vj.iter()) {
+                    *qc += *vc;
+                }
+            }
+        } else {
+            scratch.aw[..cols].fill(C64::ZERO);
+            for j in 0..k {
+                let vj = &scratch.v[j * cols..(j + 1) * cols];
+                for (ac, vc) in scratch.aw[..cols].iter_mut().zip(vj.iter()) {
+                    *ac += *vc;
+                }
+            }
+            let (hint, q) = (&scratch.aw[..cols], &mut scratch.q[..]);
+            mat_vec(a, rows, cols, hint, q);
+        }
+        let n2 = cnorm2(&scratch.q);
+        if n2.sqrt() > 1e-150 {
+            let inv = 1.0 / n2.sqrt();
+            for x in scratch.q.iter_mut() {
+                *x = x.scale(inv);
+            }
+            warm_ok = true;
+        }
+    }
+    if !warm_ok {
+        let mut rng = Pcg64::seeded(0x7091_u64 ^ ((dim as u64) << 12) ^ (k as u64));
+        for x in scratch.q.iter_mut() {
+            *x = C64::new(rng.normal(), rng.normal());
+        }
+        let inv = 1.0 / cnorm2(&scratch.q).sqrt().max(1e-300);
+        for x in scratch.q.iter_mut() {
+            *x = x.scale(inv);
+        }
+    }
+
+    // --- Lanczos with full reorthogonalization ---
+    let mut t = 0usize;
+    let mut scale = 0.0f64;
+    let mut lmax = 0.0f64;
+    loop {
+        scratch.qbasis[t * dim..(t + 1) * dim].copy_from_slice(&scratch.q);
+        steps += 1;
+        // u = Gram · q through the block (one matvec pair).
+        if use_right {
+            mat_vec(a, rows, cols, &scratch.q, &mut scratch.aw[..rows]);
+            mat_vec_h(a, rows, cols, &scratch.aw[..rows], &mut scratch.u);
+        } else {
+            mat_vec_h(a, rows, cols, &scratch.q, &mut scratch.aw[..cols]);
+            mat_vec(a, rows, cols, &scratch.aw[..cols], &mut scratch.u);
+        }
+        let alpha_t = cdot(&scratch.q, &scratch.u).re;
+        scratch.alpha[t] = alpha_t;
+        // u ← u − α_t·q_t − β_{t-1}·q_{t-1}, then one full classical-GS
+        // pass against the whole basis (the "full reorthogonalization"
+        // that keeps the basis orthonormal to machine precision).
+        for (uc, qc) in scratch.u.iter_mut().zip(scratch.q.iter()) {
+            *uc -= qc.scale(alpha_t);
+        }
+        if t > 0 {
+            let bprev = scratch.beta[t - 1];
+            let qprev = &scratch.qbasis[(t - 1) * dim..t * dim];
+            for (uc, qc) in scratch.u.iter_mut().zip(qprev.iter()) {
+                *uc -= qc.scale(bprev);
+            }
+        }
+        for i in 0..=t {
+            let qi = &scratch.qbasis[i * dim..(i + 1) * dim];
+            let coef = cdot(qi, &scratch.u);
+            for (uc, qc) in scratch.u.iter_mut().zip(qi.iter()) {
+                *uc -= *qc * coef;
+            }
+        }
+        let b = cnorm2(&scratch.u).sqrt();
+        scale = scale.max(alpha_t.abs()).max(b);
+        t += 1;
+        // Convergence: Ritz residuals of the current tridiagonal.
+        let mut done = t >= dim || t >= tmax || steps >= max_steps;
+        if t >= k.min(dim) {
+            scratch.td[..t].copy_from_slice(&scratch.alpha[..t]);
+            scratch.te[..t].copy_from_slice(&scratch.beta[..t]);
+            tqli_values_lastrow(&mut scratch.td, &mut scratch.te, &mut scratch.tz, t);
+            select_topk_desc(&scratch.td[..t], &mut scratch.idx, k.min(t));
+            lmax = scratch.td[scratch.idx[0]].max(0.0);
+            if lmax > 0.0 && t >= k {
+                let mut ok = true;
+                for j in 0..k {
+                    if b * scratch.tz[scratch.idx[j]].abs() > tol * lmax {
+                        ok = false;
+                        break;
+                    }
+                }
+                if ok {
+                    done = true;
+                }
+            }
+        }
+        if !done && b <= 1e-13 * scale.max(1e-300) {
+            // Breakdown: the Krylov space went invariant. That is only a
+            // *converged* state if it already exposed a nonzero top-k set;
+            // otherwise — fewer than k columns, or everything seen so far
+            // is zero (a warm hint that landed exactly in the null space
+            // of a nonzero block looks like this) — restart with a fresh
+            // random vector orthogonal to the basis and keep growing, so
+            // the true spectrum is picked up and the all-zero answer is
+            // only ever reported once the basis exhausts the space.
+            if t >= k && lmax > 0.0 {
+                done = true;
+            } else {
+                let mut rng = Pcg64::seeded(0xbdbd_u64 ^ (t as u64));
+                for x in scratch.q.iter_mut() {
+                    *x = C64::new(rng.normal(), rng.normal());
+                }
+                for i in 0..t {
+                    let qi = &scratch.qbasis[i * dim..(i + 1) * dim];
+                    let coef = cdot(qi, &scratch.q);
+                    for (qc, bc) in scratch.q.iter_mut().zip(qi.iter()) {
+                        *qc -= *bc * coef;
+                    }
+                }
+                let inv = 1.0 / cnorm2(&scratch.q).sqrt().max(1e-300);
+                for x in scratch.q.iter_mut() {
+                    *x = x.scale(inv);
+                }
+                scratch.beta[t - 1] = 0.0;
+                continue;
+            }
+        }
+        if done {
+            break;
+        }
+        scratch.beta[t - 1] = b;
+        let inv = 1.0 / b;
+        for (qc, uc) in scratch.q.iter_mut().zip(scratch.u.iter()) {
+            *qc = uc.scale(inv);
+        }
+    }
+
+    // --- extract the top-k Ritz pairs of the final tridiagonal ---
+    scratch.td[..t].copy_from_slice(&scratch.alpha[..t]);
+    scratch.te[..t].copy_from_slice(&scratch.beta[..t]);
+    tqli_values_lastrow(&mut scratch.td, &mut scratch.te, &mut scratch.tz, t);
+    let kk = k.min(t);
+    select_topk_desc(&scratch.td[..t], &mut scratch.idx, kk);
+    lmax = scratch.td[scratch.idx[0]].max(0.0);
+    for j in 0..kk {
+        let lam = scratch.td[scratch.idx[j]];
+        tridiag_eigvec(
+            &scratch.alpha,
+            &scratch.beta,
+            t,
+            lam,
+            ((j as u64) << 32) | (t as u64),
+            &mut scratch.sdd,
+            &mut scratch.sup,
+            &mut scratch.svecs[j * tmax..j * tmax + t],
+        );
+    }
+    // Orthonormalize the k tridiagonal eigenvectors (clustered eigenvalues
+    // can make inverse iteration return nearly parallel vectors).
+    for j in 0..kk {
+        for _pass in 0..2 {
+            for p in 0..j {
+                let mut dot = 0.0f64;
+                for i in 0..t {
+                    dot += scratch.svecs[p * tmax + i] * scratch.svecs[j * tmax + i];
+                }
+                for i in 0..t {
+                    let sub = dot * scratch.svecs[p * tmax + i];
+                    scratch.svecs[j * tmax + i] -= sub;
+                }
+            }
+        }
+        let n: f64 =
+            scratch.svecs[j * tmax..j * tmax + t].iter().map(|x| x * x).sum::<f64>().sqrt();
+        if n > 1e-150 {
+            for i in 0..t {
+                scratch.svecs[j * tmax + i] /= n;
+            }
+        }
+    }
+    // Map back to singular vectors and values.
+    for j in 0..k {
+        if j < kk {
+            let lam = scratch.td[scratch.idx[j]].max(0.0);
+            out[j] = lam.sqrt();
+        } else {
+            out[j] = 0.0;
+        }
+    }
+    for j in 0..k {
+        // x_j = Σ_i s_j[i]·q_i, built in scratch.u (dim long).
+        scratch.u.fill(C64::ZERO);
+        if j < kk {
+            for i in 0..t {
+                let si = scratch.svecs[j * tmax + i];
+                let qi = &scratch.qbasis[i * dim..(i + 1) * dim];
+                for (uc, qc) in scratch.u.iter_mut().zip(qi.iter()) {
+                    *uc += qc.scale(si);
+                }
+            }
+        }
+        let sigma = out[j];
+        if use_right {
+            // x is the right singular vector directly.
+            scratch.v[j * cols..(j + 1) * cols].copy_from_slice(&scratch.u);
+            let (v, w) = (&scratch.v[j * cols..(j + 1) * cols], &mut scratch.pw);
+            mat_vec(a, rows, cols, v, w);
+            scratch.w[j * rows..(j + 1) * rows].copy_from_slice(&scratch.pw);
+        } else {
+            // x is the left singular vector u_j: w_j = σ_j·u_j and
+            // v_j = Aᴴu_j / σ_j.
+            for (wc, uc) in
+                scratch.w[j * rows..(j + 1) * rows].iter_mut().zip(scratch.u.iter())
+            {
+                *wc = uc.scale(sigma);
+            }
+            mat_vec_h(a, rows, cols, &scratch.u, &mut scratch.pz);
+            let inv = if sigma > 0.0 { 1.0 / sigma } else { 0.0 };
+            for (vc, zc) in
+                scratch.v[j * cols..(j + 1) * cols].iter_mut().zip(scratch.pz.iter())
+            {
+                *vc = zc.scale(inv);
+            }
+        }
+    }
+
+    // --- deflated completion probe: catch missed degenerate copies ---
+    // A single Krylov start vector carries one fixed direction per
+    // eigenspace, so an exact multiplicity among the top k can surface as
+    // the *next* eigenvalue instead. Power-iterate a random vector in the
+    // orthogonal complement of the returned right vectors; if its Rayleigh
+    // quotient beats λ_k, a copy was missed — converge it and insert.
+    if lmax > 0.0 {
+        'rounds: for round in 0..k {
+            if k >= cols {
+                break;
+            }
+            let mut rng =
+                Pcg64::seeded(0x9b0e_u64 ^ ((round as u64) << 24) ^ (cols as u64));
+            for x in scratch.pv.iter_mut() {
+                *x = C64::new(rng.normal(), rng.normal());
+            }
+            deflate_against(&mut scratch.pv, &scratch.v, k, cols);
+            let n2 = cnorm2(&scratch.pv);
+            if n2.sqrt() <= 1e-8 * (cols as f64).sqrt() {
+                break;
+            }
+            let inv = 1.0 / n2.sqrt();
+            for x in scratch.pv.iter_mut() {
+                *x = x.scale(inv);
+            }
+            let lam_k = out[k - 1] * out[k - 1];
+            let threshold = lam_k * (1.0 + 1e-8) + tol * lmax;
+            let mut rq = 0.0f64;
+            for _ in 0..12 {
+                steps += 1;
+                mat_vec(a, rows, cols, &scratch.pv, &mut scratch.pw);
+                mat_vec_h(a, rows, cols, &scratch.pw, &mut scratch.pz);
+                deflate_against(&mut scratch.pz, &scratch.v, k, cols);
+                rq = cdot(&scratch.pv, &scratch.pz).re;
+                let n = cnorm2(&scratch.pz).sqrt();
+                if n == 0.0 || rq > threshold {
+                    // Zero complement, or detection already confirmed (the
+                    // Rayleigh quotient only lower-bounds the deflated
+                    // operator's top eigenvalue, so exceeding the threshold
+                    // early is conclusive — the clean case has no such
+                    // shortcut and runs the full amplification budget).
+                    break;
+                }
+                let inv = 1.0 / n;
+                for (pc, zc) in scratch.pv.iter_mut().zip(scratch.pz.iter()) {
+                    *pc = zc.scale(inv);
+                }
+            }
+            if rq <= threshold {
+                break 'rounds;
+            }
+            // Missed copy: converge the probe, then insert it in order.
+            for _ in 0..50 {
+                steps += 1;
+                mat_vec(a, rows, cols, &scratch.pv, &mut scratch.pw);
+                mat_vec_h(a, rows, cols, &scratch.pw, &mut scratch.pz);
+                deflate_against(&mut scratch.pz, &scratch.v, k, cols);
+                rq = cdot(&scratch.pv, &scratch.pz).re;
+                let mut res2 = 0.0f64;
+                for (zc, pc) in scratch.pz.iter().zip(scratch.pv.iter()) {
+                    res2 += (*zc - pc.scale(rq)).norm_sqr();
+                }
+                let n = cnorm2(&scratch.pz).sqrt();
+                if n == 0.0 {
+                    break;
+                }
+                let inv = 1.0 / n;
+                for (pc, zc) in scratch.pv.iter_mut().zip(scratch.pz.iter()) {
+                    *pc = zc.scale(inv);
+                }
+                if res2.sqrt() <= tol * lmax {
+                    break;
+                }
+            }
+            let sigma_new = rq.max(0.0).sqrt();
+            // Shift the smaller entries down and insert at the right rank.
+            let mut pos = k;
+            for j in 0..k {
+                if sigma_new > out[j] {
+                    pos = j;
+                    break;
+                }
+            }
+            if pos >= k {
+                break 'rounds;
+            }
+            let mut j = k - 1;
+            while j > pos {
+                out[j] = out[j - 1];
+                let (head, tail) = scratch.v.split_at_mut(j * cols);
+                tail[..cols].copy_from_slice(&head[(j - 1) * cols..j * cols]);
+                let (whead, wtail) = scratch.w.split_at_mut(j * rows);
+                wtail[..rows].copy_from_slice(&whead[(j - 1) * rows..j * rows]);
+                j -= 1;
+            }
+            out[pos] = sigma_new;
+            scratch.v[pos * cols..(pos + 1) * cols].copy_from_slice(&scratch.pv);
+            mat_vec(a, rows, cols, &scratch.pv, &mut scratch.pw);
+            scratch.w[pos * rows..(pos + 1) * rows].copy_from_slice(&scratch.pw);
+        }
+    }
+    scratch.warm = true;
+    steps
+}
+
+/// Write the indices of the `k` largest entries of `vals` (descending)
+/// into `idx[..k]` — selection without sorting the whole array.
+fn select_topk_desc(vals: &[f64], idx: &mut [usize], k: usize) {
+    for j in 0..k {
+        let mut best = usize::MAX;
+        for (i, &v) in vals.iter().enumerate() {
+            if idx[..j].contains(&i) {
+                continue;
+            }
+            if best == usize::MAX || v > vals[best] {
+                best = i;
+            }
+        }
+        idx[j] = best;
+    }
+}
+
+/// Subtract the projections of `x` onto the `k` stored vectors
+/// (vector-major, `len` entries each) — the deflation step of the probe.
+fn deflate_against(x: &mut [C64], vecs: &[C64], k: usize, len: usize) {
+    for j in 0..k {
+        let vj = &vecs[j * len..(j + 1) * len];
+        let coef = cdot(vj, x);
+        for (xc, vc) in x.iter_mut().zip(vj.iter()) {
+            *xc -= *vc * coef;
+        }
+    }
+}
+
 fn norm(x: &[f64]) -> f64 {
     x.iter().map(|v| v * v).sum::<f64>().sqrt()
 }
@@ -124,5 +847,112 @@ mod tests {
         let a = Mat::random_normal(20, 20, &mut rng);
         let got = spectral_norm(&a, 2000, 1e-10, &mut rng);
         assert!(got.residual < 1e-10, "residual {}", got.residual);
+    }
+
+    #[test]
+    fn block_topk_matches_jacobi() {
+        use crate::linalg::jacobi_svd;
+        use crate::numeric::CMat;
+        let mut rng = Pcg64::seeded(55);
+        for &(rows, cols, k) in &[(6usize, 6usize, 1usize), (6, 6, 3), (8, 5, 2), (4, 9, 4)] {
+            let a = CMat::random_normal(rows, cols, &mut rng);
+            let want = jacobi_svd::singular_values(&a);
+            let mut scratch = TopKScratch::new();
+            let mut got = vec![0.0f64; k];
+            let iters =
+                block_topk(&a.data, rows, cols, k, TopKOptions::default(), &mut scratch, &mut got);
+            assert!(iters >= 1);
+            for j in 0..k {
+                assert!(
+                    (got[j] - want[j]).abs() <= 1e-9 * want[0].max(1.0),
+                    "{rows}x{cols} k={k} j={j}: {} vs {}",
+                    got[j],
+                    want[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn block_topk_warm_start_uses_fewer_steps() {
+        use crate::numeric::CMat;
+        let mut rng = Pcg64::seeded(56);
+        let a = CMat::random_normal(8, 8, &mut rng);
+        let mut scratch = TopKScratch::new();
+        let mut out = vec![0.0f64; 3];
+        let cold =
+            block_topk(&a.data, 8, 8, 3, TopKOptions::default(), &mut scratch, &mut out);
+        assert!(scratch.is_warm());
+        // Same block again: the warm hint spans the invariant subspace, so
+        // the Krylov loop exhausts it after ~k steps instead of sweeping
+        // the whole space (both runs pay the fixed completion-probe steps).
+        let warm =
+            block_topk(&a.data, 8, 8, 3, TopKOptions::default(), &mut scratch, &mut out);
+        assert!(cold > warm, "cold {cold} vs warm {warm}");
+    }
+
+    #[test]
+    fn block_topk_finds_degenerate_copies() {
+        use crate::numeric::C64;
+        // diag(3, 3, 1): a single Krylov start vector carries one fixed
+        // direction of the 2-dim eigenspace, so Lanczos alone would report
+        // [3, 1] — the deflated completion probe must recover the copy.
+        let mut a = vec![C64::ZERO; 9];
+        a[0] = C64::real(3.0);
+        a[4] = C64::real(3.0);
+        a[8] = C64::real(1.0);
+        let mut scratch = TopKScratch::new();
+        let mut out = vec![0.0f64; 2];
+        block_topk(&a, 3, 3, 2, TopKOptions::default(), &mut scratch, &mut out);
+        assert!(
+            (out[0] - 3.0).abs() < 1e-8 && (out[1] - 3.0).abs() < 1e-8,
+            "degenerate pair lost: {out:?}"
+        );
+    }
+
+    #[test]
+    fn block_topk_recovers_from_null_warm_hint() {
+        use crate::numeric::C64;
+        // Warm the scratch on a block whose top right vector is e_2 …
+        let mut b = vec![C64::ZERO; 9];
+        b[8] = C64::real(5.0);
+        let mut scratch = TopKScratch::new();
+        let mut out = vec![0.0f64; 1];
+        block_topk(&b, 3, 3, 1, TopKOptions::default(), &mut scratch, &mut out);
+        assert!(scratch.is_warm());
+        assert!((out[0] - 5.0).abs() < 1e-8);
+        // … then solve a block for which e_2 is exactly the null direction.
+        // The warm hint annihilates under the Gram operator; the solver
+        // must restart internally instead of reporting σ_max = 0.
+        let mut a = vec![C64::ZERO; 9];
+        a[0] = C64::real(2.0);
+        a[4] = C64::real(1.0);
+        block_topk(&a, 3, 3, 1, TopKOptions::default(), &mut scratch, &mut out);
+        assert!((out[0] - 2.0).abs() < 1e-8, "null warm hint zeroed the solve: {out:?}");
+    }
+
+    #[test]
+    fn block_topk_zero_block() {
+        let a = vec![crate::numeric::C64::ZERO; 12];
+        let mut scratch = TopKScratch::new();
+        let mut out = vec![1.0f64; 2];
+        block_topk(&a, 3, 4, 2, TopKOptions::default(), &mut scratch, &mut out);
+        assert_eq!(out, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn block_topk_reset_forces_cold_start() {
+        use crate::numeric::CMat;
+        let mut rng = Pcg64::seeded(57);
+        let a = CMat::random_normal(7, 7, &mut rng);
+        let mut scratch = TopKScratch::new();
+        let mut out = vec![0.0f64; 2];
+        let first =
+            block_topk(&a.data, 7, 7, 2, TopKOptions::default(), &mut scratch, &mut out);
+        scratch.reset();
+        assert!(!scratch.is_warm());
+        let again =
+            block_topk(&a.data, 7, 7, 2, TopKOptions::default(), &mut scratch, &mut out);
+        assert_eq!(first, again, "cold starts are deterministic");
     }
 }

@@ -9,9 +9,9 @@
 //! typechecks offline and CI can gate it) whose client constructor fails
 //! fast — swap the path dependency for the real `xla` crate to execute:
 //!
-//! - [`PjrtEngine`] — thread-local engine: client + compiled-executable
-//!   cache. `PjRtClient` is `Rc`-based (not `Send`), so an engine lives and
-//!   dies on one thread.
+//! - `PjrtEngine` (feature `pjrt` only) — thread-local engine: client +
+//!   compiled-executable cache. `PjRtClient` is `Rc`-based (not `Send`), so
+//!   an engine lives and dies on one thread.
 //! - [`PjrtExecutor`] — a dedicated executor thread owning one engine,
 //!   driven through an mpsc channel. The coordinator's worker pool sends
 //!   tile jobs to it and receives spectra back; this is how the non-`Send`

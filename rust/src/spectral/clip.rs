@@ -52,6 +52,30 @@ pub fn clip_with_plan(plan: &SpectralPlan, cap: f64) -> ClipResult {
     ClipResult { grid, projected_kernel, sigma_before, clipped_count }
 }
 
+/// Cheap clip screening: the layer's spectral norm via a **top-1**
+/// warm-started top-k sweep, and whether it exceeds `cap`. Costs
+/// `O(n·m·c²)` per verification iteration instead of the full `O(n·m·c³)`
+/// decomposition — the right first step for a training loop that clips
+/// only when needed. Returns `(σ_max, σ_max > cap, iterations)`.
+pub fn needs_clipping(plan: &SpectralPlan, cap: f64) -> (f64, bool, u64) {
+    let top = plan.execute_topk(1);
+    let sigma = top.spectrum.sigma_max();
+    (sigma, sigma > cap, top.iterations)
+}
+
+/// The [`ClipResult`] of a layer established (e.g. by [`needs_clipping`]
+/// or a whole-model top-1 screen) to already satisfy `σ_max ≤ cap`: the
+/// symbol grid is materialized directly — no per-frequency SVD, no
+/// reconstruction — and the kernel is returned unchanged.
+pub fn unclipped_result(plan: &SpectralPlan, sigma_before: f64) -> ClipResult {
+    ClipResult {
+        grid: plan.compute_symbols(),
+        projected_kernel: plan.kernel().clone(),
+        sigma_before,
+        clipped_count: 0,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,6 +109,30 @@ mod tests {
         for (a, b) in k.data.iter().zip(&res.projected_kernel.data) {
             assert!((a - b).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn screening_agrees_with_full_norm() {
+        let mut rng = Pcg64::seeded(153);
+        let k = ConvKernel::random_he(4, 4, 3, 3, &mut rng);
+        let plan = SpectralPlan::new(&k, 8, 8, Default::default());
+        let exact = plan.execute().sigma_max();
+        let (sigma, over, iters) = needs_clipping(&plan, exact * 0.9);
+        assert!((sigma - exact).abs() <= 1e-8 * exact, "{sigma} vs {exact}");
+        assert!(over && iters > 0);
+        let (_, under, _) = needs_clipping(&plan, exact * 1.1);
+        assert!(!under);
+        // A screened-out layer produces a no-op result.
+        let res = unclipped_result(&plan, sigma);
+        assert_eq!(res.clipped_count, 0);
+        assert_eq!(res.projected_kernel.data, k.data);
+        let direct = crate::lfa::compute_symbols(
+            &k,
+            8,
+            8,
+            crate::lfa::BlockLayout::BlockContiguous,
+        );
+        assert!(res.grid.max_abs_diff(&direct) < 1e-12);
     }
 
     #[test]

@@ -1,6 +1,13 @@
 //! Applications of the convolutional SVD (§II-c of the paper): spectral
 //! clipping for regularization/robustness, low-rank compression,
 //! Moore–Penrose pseudo-inverse, and spectral-norm estimator comparisons.
+//!
+//! The applications that only consume extreme singular values route
+//! through the engine's top-k partial-spectrum mode where it pays:
+//! [`clip::needs_clipping`] (top-1 screening before a full clip),
+//! [`lipschitz::sigma_max_topk`] (exact norm without the full
+//! decomposition), and [`lowrank::compress_topk`] (only the kept triplets
+//! are ever computed).
 
 pub mod clip;
 pub mod freq_op;
@@ -8,8 +15,8 @@ pub mod lipschitz;
 pub mod lowrank;
 pub mod pinv;
 
-pub use clip::{clip_spectral_norm, clip_with_plan, ClipResult};
+pub use clip::{clip_spectral_norm, clip_with_plan, needs_clipping, ClipResult};
 pub use freq_op::FreqOperator;
-pub use lipschitz::{spectral_report, SpectralNormReport};
-pub use lowrank::{compress, rank_sweep, LowRankConv};
+pub use lipschitz::{sigma_max_topk, spectral_report, SpectralNormReport};
+pub use lowrank::{compress, compress_topk, rank_sweep, LowRankConv};
 pub use pinv::{pseudo_inverse, PseudoInverse};

@@ -57,6 +57,33 @@ fn assert_zero_alloc_after_warmup(solver: BlockSolver, stride: usize) {
     assert!(out.iter().all(|v| v.is_finite() && *v >= 0.0));
 }
 
+/// Top-k discipline: after one warm-up sweep has sized the Krylov
+/// scratch, the warm-started `execute_topk_into` hot loop — symbol fill,
+/// Lanczos steps with full reorthogonalization, the tridiagonal solves,
+/// the completion probe, the warm-hint carry between frequencies —
+/// performs zero heap
+/// allocation, for both warm and per-frequency-cold sweeps.
+fn assert_topk_zero_alloc_after_warmup(stride: usize, k: usize) {
+    let mut rng = Pcg64::seeded(8100 + stride as u64);
+    let kernel = ConvKernel::random_he(4, 4, 3, 3, &mut rng);
+    let opts = LfaOptions { threads: 1, ..Default::default() };
+    let plan = SpectralPlan::with_stride(&kernel, 8, 8, stride, opts);
+    let mut out = vec![0.0f64; plan.topk_values_len(k)];
+    // Warm-up: the pool may grow its spine / Krylov scratch once.
+    plan.execute_topk_into(k, &mut out);
+    let before = ALLOCS.load(Ordering::SeqCst);
+    plan.execute_topk_into(k, &mut out);
+    plan.execute_topk_into_threads(k, 1, false, &mut out);
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "topk k={k} stride {stride}: {} allocation(s) in warmed-up execute_topk_into",
+        after - before
+    );
+    assert!(out.iter().all(|v| v.is_finite() && *v >= 0.0));
+}
+
 /// Whole-model discipline: a warmed-up serial `ModelPlan::execute_into` —
 /// the group-major batched sweep over every layer, including an
 /// equal-shape group sharing one workspace pool and a strided layer —
@@ -94,5 +121,7 @@ fn execute_is_allocation_free_after_warmup() {
     assert_zero_alloc_after_warmup(BlockSolver::Jacobi, 1);
     assert_zero_alloc_after_warmup(BlockSolver::GramEigen, 1);
     assert_zero_alloc_after_warmup(BlockSolver::Jacobi, 2);
+    assert_topk_zero_alloc_after_warmup(1, 2);
+    assert_topk_zero_alloc_after_warmup(2, 1);
     assert_model_zero_alloc_after_warmup();
 }
