@@ -18,7 +18,7 @@ COMMANDS
                [--seed S] [--method lfa|fft|explicit] [--top J]
                Compute the spectrum of a random conv layer.
   audit        <builtin-or-config.toml> [--threads T] [--backend auto|native|pjrt]
-               [--artifacts DIR] [--top-k K] [--csv]
+               [--artifacts DIR] [--top-k K] [--no-fold] [--csv]
                Analyze all conv layers of a model through the coordinator
                service (one planned model job, tiled across the worker
                pool). With --top-k K, tiles compute only the K largest
@@ -27,7 +27,7 @@ COMMANDS
                combining --top-k with --backend pjrt is an error).
                Builtins: lenet, vgg-small, resnet20ish, paper-c16-n<N>.
   audit-model  <builtin-or-config.toml> [--threads T] [--solver jacobi|gram]
-               [--top J] [--top-k K] [--csv]
+               [--top J] [--top-k K] [--no-fold] [--csv]
                Whole-model spectral report straight off a ModelPlan: every
                layer planned once, equal-shape layers batched into shared
                workspace groups, executed as one sweep. Emits the per-layer
@@ -47,6 +47,13 @@ COMMANDS
   help         Show this text.
 
 --threads 0 (the default) means auto: one worker per available core.
+
+Conjugate-pair frequency folding is on by default for native execution:
+real kernels give A(-θ) = conj(A(θ)), so both audit commands solve only a
+fundamental domain of the dual grid (about half the frequencies — the
+report's `frequencies solved:` line shows the folded-domain size vs the
+full grid) and mirror the rest. --no-fold solves every frequency
+independently (the unfolded reference).
 ";
 
 /// Parsed command line: subcommand, positionals, `--key value` / `--flag`
@@ -174,5 +181,12 @@ mod tests {
             HELP.matches("--top-k K").count() >= 2,
             "HELP must document --top-k on audit and audit-model"
         );
+        // Conjugate-pair folding: the escape hatch appears on both audit
+        // usage lines, and the prose names the report line it affects.
+        assert!(
+            HELP.matches("--no-fold").count() >= 3,
+            "HELP must document --no-fold on audit and audit-model"
+        );
+        assert!(HELP.contains("frequencies solved:"), "HELP must name the fold report line");
     }
 }

@@ -2,7 +2,7 @@
 
 use crate::conv::ConvKernel;
 use crate::engine::SpectrumRequest;
-use crate::lfa::BlockSolver;
+use crate::lfa::{BlockSolver, Fold};
 use crate::model::config::ModelConfig;
 use std::sync::Arc;
 
@@ -27,6 +27,11 @@ pub struct JobSpec {
     pub m: usize,
     pub solver: BlockSolver,
     pub backend: Backend,
+    /// Conjugate-pair frequency folding for native tiles (default
+    /// [`Fold::Auto`]): the job's plan solves only the fundamental domain
+    /// of `θ → −θ`, tiles cover its rows, and assembly mirrors the rest.
+    /// PJRT-routed jobs always sweep the full grid.
+    pub folding: Fold,
     /// Frequency rows per tile (0 = pick automatically).
     pub tile_rows: usize,
 }
@@ -40,6 +45,7 @@ impl JobSpec {
             m,
             solver: BlockSolver::Jacobi,
             backend: Backend::Auto,
+            folding: Fold::Auto,
             tile_rows: 0,
         }
     }
@@ -51,6 +57,11 @@ impl JobSpec {
 
     pub fn with_solver(mut self, solver: BlockSolver) -> Self {
         self.solver = solver;
+        self
+    }
+
+    pub fn with_folding(mut self, folding: Fold) -> Self {
+        self.folding = folding;
         self
     }
 
@@ -69,14 +80,16 @@ impl JobSpec {
         self.n * self.m * self.rank()
     }
 
-    /// Tile size heuristic: aim for ≥ 8 tiles per worker for load balance
+    /// Tile size heuristic for tiling `rows` frequency rows — the full
+    /// grid, or the folded fundamental domain (`≈ n/2` rows) when the
+    /// job's plan folds: aim for ≥ 8 tiles per worker for load balance
     /// while keeping tiles ≥ 1 row.
-    pub fn effective_tile_rows(&self, workers: usize) -> usize {
+    pub fn effective_tile_rows(&self, rows: usize, workers: usize) -> usize {
         if self.tile_rows > 0 {
-            return self.tile_rows.min(self.n);
+            return self.tile_rows.min(rows).max(1);
         }
         let target_tiles = (workers * 8).max(1);
-        (self.n.div_ceil(target_tiles)).max(1)
+        rows.div_ceil(target_tiles).max(1)
     }
 }
 
@@ -96,6 +109,10 @@ pub struct ModelJobSpec {
     /// per-frequency SVD in), while an explicit `Backend::Pjrt` combined
     /// with a top-k request is rejected at submission.
     pub request: SpectrumRequest,
+    /// Conjugate-pair frequency folding for native tiles (default
+    /// [`Fold::Auto`]); per-layer PJRT-routed tiles always sweep the full
+    /// grid.
+    pub folding: Fold,
     /// Coarse frequency rows per tile (0 = pick automatically per layer).
     pub tile_rows: usize,
 }
@@ -108,6 +125,7 @@ impl ModelJobSpec {
             solver: BlockSolver::Jacobi,
             backend: Backend::Auto,
             request: SpectrumRequest::Full,
+            folding: Fold::Auto,
             tile_rows: 0,
         }
     }
@@ -119,6 +137,11 @@ impl ModelJobSpec {
 
     pub fn with_solver(mut self, solver: BlockSolver) -> Self {
         self.solver = solver;
+        self
+    }
+
+    pub fn with_folding(mut self, folding: Fold) -> Self {
+        self.folding = folding;
         self
     }
 
@@ -178,18 +201,22 @@ mod tests {
     #[test]
     fn tile_heuristic_bounds() {
         let j = job(64);
-        let t = j.effective_tile_rows(4);
+        let t = j.effective_tile_rows(64, 4);
         assert!(t >= 1 && t <= 64);
         assert!(64usize.div_ceil(t) >= 16, "enough tiles for 4 workers");
-        // explicit override wins
+        // The folded fundamental domain sizes tiles from its own row count.
+        let tf = j.effective_tile_rows(33, 4);
+        assert!(33usize.div_ceil(tf) >= 16, "enough folded tiles for 4 workers");
+        // explicit override wins (clamped to the tiled rows).
         let j2 = job(64).with_tile_rows(5);
-        assert_eq!(j2.effective_tile_rows(4), 5);
+        assert_eq!(j2.effective_tile_rows(64, 4), 5);
+        assert_eq!(j2.effective_tile_rows(3, 4), 3);
     }
 
     #[test]
     fn tiny_grids_get_one_row_tiles() {
         let j = job(2);
-        assert!(j.effective_tile_rows(16) >= 1);
+        assert!(j.effective_tile_rows(2, 16) >= 1);
     }
 
     #[test]

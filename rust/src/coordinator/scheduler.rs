@@ -11,6 +11,11 @@
 //! Every job carries one shared [`SpectralPlan`]: phase tables are computed
 //! once at submission and every native tile executes against the plan's
 //! pooled workspaces, so a job no longer rebuilds symbol state per tile.
+//! When the plan folds (conjugate-pair frequency folding,
+//! `lfa::Fold::Auto` — the default), tiles cover only the fundamental
+//! domain of `θ → −θ` (about half the rows) and assembly mirrors the
+//! conjugate half at completion — the same ~2× SVD-work cut the direct
+//! engine paths get, bit-identical to them.
 //!
 //! Whole models go further: [`Scheduler::submit_model`] plans *all* layers
 //! once as a single [`ModelPlan`] (equal-shape layers share workspace
@@ -184,19 +189,6 @@ impl Scheduler {
         self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
         let spec = Arc::new(spec);
         let artifact = self.pick_artifact(&spec);
-        let tile_rows = match &artifact {
-            Some(a) => a.tile_rows,
-            None => spec.effective_tile_rows(self.config.workers),
-        };
-        let tiles: Vec<(usize, usize)> = {
-            let mut v = Vec::new();
-            let mut lo = 0;
-            while lo < spec.n {
-                v.push((lo, (lo + tile_rows).min(spec.n)));
-                lo += tile_rows;
-            }
-            v
-        };
         let weights_f32 = if artifact.is_some() {
             spec.kernel.data.iter().map(|&v| v as f32).collect()
         } else {
@@ -209,10 +201,35 @@ impl Scheduler {
                 &spec.kernel,
                 spec.n,
                 spec.m,
-                LfaOptions { solver: spec.solver, threads: 1, ..Default::default() },
+                LfaOptions {
+                    solver: spec.solver,
+                    folding: spec.folding,
+                    threads: 1,
+                    ..Default::default()
+                },
             )))
         } else {
             None
+        };
+        // Native folded jobs tile only the fundamental-domain rows of the
+        // conjugate involution θ → −θ; finish_job mirrors the rest.
+        // Artifact jobs always sweep the full grid.
+        let tiled_rows = match &plan {
+            Some(p) if p.folded() => p.solved_rows(),
+            _ => spec.n,
+        };
+        let tile_rows = match &artifact {
+            Some(a) => a.tile_rows,
+            None => spec.effective_tile_rows(tiled_rows, self.config.workers),
+        };
+        let tiles: Vec<(usize, usize)> = {
+            let mut v = Vec::new();
+            let mut lo = 0;
+            while lo < tiled_rows {
+                v.push((lo, (lo + tile_rows).min(tiled_rows)));
+                lo += tile_rows;
+            }
+            v
         };
         let state = Arc::new(JobState {
             spec: Arc::clone(&spec),
@@ -270,7 +287,12 @@ impl Scheduler {
         }
         let plan = match ModelPlan::build(
             &spec.model,
-            LfaOptions { solver: spec.solver, threads: 1, ..Default::default() },
+            LfaOptions {
+                solver: spec.solver,
+                folding: spec.folding,
+                threads: 1,
+                ..Default::default()
+            },
         ) {
             Ok(p) => Arc::new(p),
             Err(e) => {
@@ -314,17 +336,25 @@ impl Scheduler {
             artifacts.push(art);
             weights_f32.push(w);
         }
-        // Tiles: per-layer row ranges against the shared plan.
+        // Tiles: per-layer row ranges against the shared plan. Native
+        // tiles of a folded layer cover only its fundamental-domain rows
+        // (finish_model_job mirrors the conjugate halves); PJRT-routed
+        // layers always sweep the full grid.
         let mut tiles: Vec<(usize, usize, usize)> = Vec::new();
         for i in 0..nlayers {
-            let nc = plan.layer_plan(i).coarse_rows();
+            let lp = plan.layer_plan(i);
+            let nrows = if artifacts[i].is_none() && lp.folded() {
+                lp.solved_rows()
+            } else {
+                lp.coarse_rows()
+            };
             let tr = match &artifacts[i] {
                 Some(a) => a.tile_rows,
-                None => spec.effective_tile_rows(nc, self.config.workers),
+                None => spec.effective_tile_rows(nrows, self.config.workers),
             };
             let mut lo = 0usize;
-            while lo < nc {
-                tiles.push((i, lo, (lo + tr).min(nc)));
+            while lo < nrows {
+                tiles.push((i, lo, (lo + tr).min(nrows)));
                 lo += tr;
             }
         }
@@ -534,10 +564,15 @@ fn run_tile(state: &JobState, tile: &Tile, executor: Option<&PjrtExecutor>) -> R
             }
             // Native path: execute against the job's shared plan. Workspace
             // checkout reuses the buffers of whichever worker last ran a
-            // tile of this job — no per-tile symbol state rebuild.
+            // tile of this job — no per-tile symbol state rebuild. Folded
+            // plans solve their tile's fundamental-domain rows only.
             let plan = state.plan.as_ref().expect("native jobs always carry a plan");
             let mut vals = vec![0.0f64; tile.num_values()];
-            plan.execute_rows_pooled(tile.row_lo, tile.row_hi, &mut vals);
+            if plan.folded() {
+                plan.execute_fold_rows_pooled(tile.row_lo, tile.row_hi, &mut vals);
+            } else {
+                plan.execute_rows_pooled(tile.row_lo, tile.row_hi, &mut vals);
+            }
             (vals, false)
         }
     };
@@ -592,11 +627,23 @@ fn run_model_tile(
             // scratch across the whole model. Top-k tiles run the
             // warm-started top-k sweep over their contiguous row strip
             // (cold at the strip's first frequency, warm along it).
+            // Folded layers' tiles cover fundamental-domain rows only.
+            let folded = state.artifacts[layer].is_none() && lp.folded();
             let mut vals = vec![0.0f64; (row_hi - row_lo) * mc * r];
             match state.spec.request {
-                SpectrumRequest::Full => lp.execute_rows_pooled(row_lo, row_hi, &mut vals),
+                SpectrumRequest::Full => {
+                    if folded {
+                        lp.execute_fold_rows_pooled(row_lo, row_hi, &mut vals)
+                    } else {
+                        lp.execute_rows_pooled(row_lo, row_hi, &mut vals)
+                    }
+                }
                 SpectrumRequest::TopK(k) => {
-                    lp.execute_topk_rows_pooled(k, row_lo, row_hi, &mut vals);
+                    if folded {
+                        lp.execute_topk_fold_rows_pooled(k, row_lo, row_hi, &mut vals);
+                    } else {
+                        lp.execute_topk_rows_pooled(k, row_lo, row_hi, &mut vals);
+                    }
                 }
             }
             (vals, false)
@@ -609,7 +656,25 @@ fn run_model_tile(
 }
 
 fn finish_model_job(state: &ModelJobState, metrics: &Metrics) {
-    let values = std::mem::take(&mut *state.values.lock().expect("values poisoned"));
+    let mut values = std::mem::take(&mut *state.values.lock().expect("values poisoned"));
+    // Mirror the conjugate halves of folded native layers in, and account
+    // the mirrored values as delivered (matching the per-layer job path).
+    for i in 0..state.plan.layer_count() {
+        let lp = state.plan.layer_plan(i);
+        if state.artifacts[i].is_none() && lp.folded() {
+            let r = state.values_per_freq[i];
+            let off = state.offsets[i];
+            let len = lp.freqs() * r;
+            lfa::spectrum::mirror_fill(
+                lp.coarse_rows(),
+                lp.coarse_cols(),
+                r,
+                &mut values[off..off + len],
+            );
+            let mirrored = (lp.coarse_rows() - lp.solved_rows()) * lp.coarse_cols() * r;
+            metrics.values_computed.fetch_add(mirrored as u64, Ordering::Relaxed);
+        }
+    }
     let spectra = state.plan.spectra_from_flat_request(state.spec.request, &values);
     let mut layers = Vec::with_capacity(spectra.layers.len());
     let mut pjrt_total = 0usize;
@@ -640,7 +705,17 @@ fn finish_model_job(state: &ModelJobState, metrics: &Metrics) {
 
 fn finish_job(state: &JobState, metrics: &Metrics) {
     let spec = &state.spec;
-    let values = std::mem::take(&mut *state.values.lock().expect("values poisoned"));
+    let mut values = std::mem::take(&mut *state.values.lock().expect("values poisoned"));
+    if let Some(plan) = state.plan.as_ref() {
+        if plan.folded() {
+            // The tiles covered the fundamental domain of θ → −θ; mirror
+            // the conjugate half in and account the mirrored values as
+            // delivered (values_computed counts what the job produced).
+            lfa::spectrum::mirror_fill(spec.n, spec.m, spec.rank(), &mut values);
+            let mirrored = (spec.n - plan.solved_rows()) * spec.m * spec.rank();
+            metrics.values_computed.fetch_add(mirrored as u64, Ordering::Relaxed);
+        }
+    }
     let spectrum = lfa::Spectrum {
         n: spec.n,
         m: spec.m,

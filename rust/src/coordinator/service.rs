@@ -10,7 +10,7 @@ use super::scheduler::{JobResult, Scheduler, SchedulerConfig};
 use crate::conv::ConvKernel;
 use crate::engine::SpectrumRequest;
 use crate::error::Result;
-use crate::lfa::{self, BlockSolver};
+use crate::lfa::{self, BlockSolver, Fold};
 use crate::model::config::ModelConfig;
 use crate::runtime::{load_manifest, PjrtExecutor};
 use std::path::Path;
@@ -27,6 +27,9 @@ pub struct ServiceConfig {
     pub artifacts_dir: Option<std::path::PathBuf>,
     /// Verify each spectrum against the Frobenius identity.
     pub verify: bool,
+    /// Conjugate-pair frequency folding for native tiles (default
+    /// [`Fold::Auto`]; the CLI's `--no-fold` maps to [`Fold::Off`]).
+    pub folding: Fold,
 }
 
 impl Default for ServiceConfig {
@@ -37,6 +40,7 @@ impl Default for ServiceConfig {
             solver: BlockSolver::Jacobi,
             artifacts_dir: None,
             verify: true,
+            folding: Fold::Auto,
         }
     }
 }
@@ -118,7 +122,8 @@ impl SpectralService {
     ) -> Result<LayerReport> {
         let spec = JobSpec::new(name, kernel.clone(), n, m)
             .with_backend(self.config.backend)
-            .with_solver(self.config.solver);
+            .with_solver(self.config.solver)
+            .with_folding(self.config.folding);
         let result = self.scheduler.run(spec)?;
         Ok(self.report(name, kernel, n, m, result))
     }
@@ -150,6 +155,7 @@ impl SpectralService {
         let spec = ModelJobSpec::new(&model.name, model.clone())
             .with_backend(self.config.backend)
             .with_solver(self.config.solver)
+            .with_folding(self.config.folding)
             .with_request(request);
         let result = self.scheduler.run_model(spec)?;
         let mut reports = Vec::with_capacity(result.layers.len());

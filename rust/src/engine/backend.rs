@@ -10,6 +10,14 @@
 //! warm-started top-k sweep (serially, or one contiguous frequency strip
 //! per worker); the PJRT backend only serves full spectra (its AOT artifact
 //! bakes the full per-frequency SVD in) and reports top-k unsupported.
+//!
+//! Conjugate-pair frequency folding ([`crate::lfa::Fold`]) is a **plan**
+//! property: native backends inherit it transparently — their serial and
+//! threaded partitioning runs over the plan's folded-index ranges (solved
+//! fundamental-domain rows, weighted by solved-block count) whenever the
+//! plan folds, so the ~2× SVD-work cut applies identically through every
+//! native execution strategy. The PJRT artifact sweep always covers the
+//! full grid (the AOT program bakes the dual-grid loop in).
 
 use super::plan::{SpectralPlan, TopKResult};
 use super::SpectrumRequest;
@@ -223,6 +231,25 @@ mod tests {
         let b = NativeThreaded { threads: 3 }.execute(&plan).unwrap();
         assert_eq!(a.values, b.values);
         assert_eq!(NativeSerial.name(), "native-serial");
+    }
+
+    #[test]
+    fn backends_fold_transparently() {
+        use crate::lfa::svd::Fold;
+        let mut rng = Pcg64::seeded(613);
+        let k = ConvKernel::random_he(3, 3, 3, 3, &mut rng);
+        let folded = SpectralPlan::new(&k, 10, 10, LfaOptions::default());
+        let off_opts = LfaOptions { folding: Fold::Off, ..Default::default() };
+        let off = SpectralPlan::new(&k, 10, 10, off_opts);
+        assert!(folded.folded() && !off.folded());
+        for backend in [&NativeSerial as &dyn SpectralBackend, &NativeThreaded { threads: 3 }] {
+            let a = backend.execute(&folded).unwrap();
+            let b = backend.execute(&off).unwrap();
+            let scale = b.sigma_max().max(1.0);
+            for (x, y) in a.values.iter().zip(&b.values) {
+                assert!((x - y).abs() <= 1e-12 * scale, "{}: {x} vs {y}", backend.name());
+            }
+        }
     }
 
     #[test]

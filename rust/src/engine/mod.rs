@@ -15,6 +15,12 @@
 //!   frequency via warm-started Krylov iteration
 //!   ([`SpectralPlan::execute_topk`]) — the regime spectral-norm clipping
 //!   and Lipschitz certification actually need.
+//! - **Conjugate-pair frequency folding** ([`crate::lfa::Fold`], on by
+//!   default): real kernels give `A(−θ) = conj(A(θ))`, so every full-grid
+//!   execution solves only the fundamental domain of `θ → −θ` (about half
+//!   the blocks; self-paired DC/Nyquist frequencies exactly once) and
+//!   mirrors the conjugate half — values copied, factors conjugated.
+//!   `LfaOptions { folding: Fold::Off, .. }` is the unfolded reference.
 //! - [`Workspace`] — per-worker scratch: symbol block, per-tap phases, the
 //!   Jacobi / Gram solver work matrices, and the top-k Krylov basis that
 //!   carries warm starts between neighboring frequencies, pooled in a

@@ -32,7 +32,7 @@ use super::workspace::{Workspace, WorkspacePool};
 use super::SpectrumRequest;
 use crate::bail;
 use crate::error::Result;
-use crate::lfa::spectrum::{FullSvd, Spectrum};
+use crate::lfa::spectrum::{mirror_fill, FullSvd, Spectrum};
 use crate::lfa::svd::LfaOptions;
 use crate::model::config::ModelConfig;
 use crate::spectral::clip::{clip_with_plan, unclipped_result, ClipResult};
@@ -52,7 +52,8 @@ struct LayerEntry {
     group: usize,
 }
 
-/// A contiguous run of one layer's coarse frequency rows — the unit the
+/// A contiguous run of one layer's **solved** coarse frequency rows (the
+/// fundamental-domain rows when the layer's plan folds) — the unit the
 /// threaded whole-model sweep partitions.
 struct Span {
     layer: usize,
@@ -60,6 +61,10 @@ struct Span {
     hi: usize,
     /// Singular values this span produces.
     len: usize,
+    /// Absolute start of this span's values in the whole-model buffer.
+    /// Folded layers leave a gap between their last span and the next
+    /// layer's first (the mirrored bottom half, filled at assembly).
+    offset: usize,
 }
 
 /// The spectrum of one layer, as produced by a whole-model execution.
@@ -305,7 +310,7 @@ impl ModelPlan {
         if freqs < 64 {
             return 1;
         }
-        let total_rows: usize = self.layers.iter().map(|l| l.plan.coarse_rows()).sum();
+        let total_rows: usize = self.layers.iter().map(|l| l.plan.solved_rows()).sum();
         super::resolve_threads(self.threads).min(total_rows.max(1))
     }
 
@@ -324,7 +329,10 @@ impl ModelPlan {
     /// serial path warm-starts across each layer's serpentine sweep
     /// (cold per layer — symbols of different layers are unrelated);
     /// threaded, every span is a contiguous frequency strip of one layer,
-    /// so warm starts never cross workers or layers.
+    /// so warm starts never cross workers or layers. Layers whose plan
+    /// folds ([`crate::lfa::Fold::Auto`], the default) sweep only their
+    /// fundamental-domain rows; the conjugate halves are mirrored in at
+    /// assembly ([`crate::lfa::spectrum::mirror_fill`]).
     pub fn execute_request_into(&self, request: SpectrumRequest, out: &mut [f64]) -> u64 {
         let total = self.request_values_len(request);
         assert_eq!(out.len(), total, "output buffer length mismatch");
@@ -338,19 +346,27 @@ impl ModelPlan {
                     let l = &self.layers[i];
                     let len = l.plan.request_values_len(request);
                     let slice = &mut out[pos..pos + len];
+                    let vpf = request.values_per_freq(l.plan.rank());
+                    let (nc, mc) = (l.plan.coarse_rows(), l.plan.coarse_cols());
+                    let srows = l.plan.solved_rows();
+                    let solved_len = srows * mc * vpf;
                     match request {
+                        SpectrumRequest::Full if l.plan.folded() => {
+                            let solved = &mut slice[..solved_len];
+                            l.plan.execute_fold_rows(0, srows, &mut ws, solved);
+                            mirror_fill(nc, mc, vpf, slice);
+                        }
                         SpectrumRequest::Full => {
-                            l.plan.execute_rows(0, l.plan.coarse_rows(), &mut ws, slice)
+                            l.plan.execute_rows(0, nc, &mut ws, slice);
+                        }
+                        SpectrumRequest::TopK(k) if l.plan.folded() => {
+                            let solved = &mut slice[..solved_len];
+                            iters +=
+                                l.plan.execute_topk_fold_rows(k, 0, srows, true, &mut ws, solved);
+                            mirror_fill(nc, mc, vpf, slice);
                         }
                         SpectrumRequest::TopK(k) => {
-                            iters += l.plan.execute_topk_rows(
-                                k,
-                                0,
-                                l.plan.coarse_rows(),
-                                true,
-                                &mut ws,
-                                slice,
-                            );
+                            iters += l.plan.execute_topk_rows(k, 0, nc, true, &mut ws, slice);
                         }
                     }
                     pos += len;
@@ -359,28 +375,37 @@ impl ModelPlan {
             }
             return iters;
         }
-        // Cut layers into row spans (buffer order), then hand contiguous
-        // runs of roughly equal value counts to each worker.
+        // Cut layers into solved-row spans (buffer order), then hand
+        // contiguous runs of roughly equal value counts to each worker.
+        let offsets = self.request_offsets(request);
         let spans_target = (threads * 4).max(1);
-        let total_rows: usize = self.layers.iter().map(|l| l.plan.coarse_rows()).sum();
+        let total_rows: usize = self.layers.iter().map(|l| l.plan.solved_rows()).sum();
         let rows_per = total_rows.div_ceil(spans_target).max(1);
         let mut spans: Vec<Span> = Vec::new();
         for &i in &self.exec_order {
             let plan = &self.layers[i].plan;
-            let nc = plan.coarse_rows();
+            let nrows = plan.solved_rows();
             let row_vals = plan.coarse_cols() * request.values_per_freq(plan.rank());
             let mut lo = 0usize;
-            while lo < nc {
-                let hi = (lo + rows_per).min(nc);
-                spans.push(Span { layer: i, lo, hi, len: (hi - lo) * row_vals });
+            while lo < nrows {
+                let hi = (lo + rows_per).min(nrows);
+                spans.push(Span {
+                    layer: i,
+                    lo,
+                    hi,
+                    len: (hi - lo) * row_vals,
+                    offset: offsets[i] + lo * row_vals,
+                });
                 lo = hi;
             }
         }
-        let target = total.div_ceil(threads).max(1);
+        let solved_total: usize = spans.iter().map(|s| s.len).sum();
+        let target = solved_total.div_ceil(threads).max(1);
         let iters_total = AtomicU64::new(0);
         let iters_ref = &iters_total;
         std::thread::scope(|scope| {
             let mut rest: &mut [f64] = out;
+            let mut pos = 0usize;
             let mut s0 = 0usize;
             while s0 < spans.len() {
                 let mut s1 = s0;
@@ -389,29 +414,55 @@ impl ModelPlan {
                     acc += spans[s1].len;
                     s1 += 1;
                 }
-                let (head, tail) = std::mem::take(&mut rest).split_at_mut(acc);
-                rest = tail;
+                // Per-span output slices: spans are disjoint and ascending
+                // in the buffer, but folded layers leave gaps between them
+                // (their mirrored bottom halves, filled after the sweep).
+                let mut bufs: Vec<&mut [f64]> = Vec::with_capacity(s1 - s0);
+                for s in &spans[s0..s1] {
+                    let (_gap, tail) = std::mem::take(&mut rest).split_at_mut(s.offset - pos);
+                    let (head, tail2) = tail.split_at_mut(s.len);
+                    rest = tail2;
+                    pos = s.offset + s.len;
+                    bufs.push(head);
+                }
                 let chunk = &spans[s0..s1];
                 scope.spawn(move || {
-                    let it = self.execute_spans(request, chunk, head);
+                    let it = self.execute_spans(request, chunk, bufs);
                     iters_ref.fetch_add(it, Ordering::Relaxed);
                 });
                 s0 = s1;
             }
         });
+        // Mirror the conjugate halves of folded layers.
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.plan.folded() {
+                let len = l.plan.request_values_len(request);
+                let vpf = request.values_per_freq(l.plan.rank());
+                mirror_fill(
+                    l.plan.coarse_rows(),
+                    l.plan.coarse_cols(),
+                    vpf,
+                    &mut out[offsets[i]..offsets[i] + len],
+                );
+            }
+        }
         iters_total.into_inner()
     }
 
-    /// Worker body: execute a contiguous run of spans, checking one
-    /// workspace out per group transition (spans arrive group-major, so a
-    /// worker crossing layers inside one group keeps its scratch; top-k
-    /// warm starts stay within one span's strip).
-    fn execute_spans(&self, request: SpectrumRequest, spans: &[Span], out: &mut [f64]) -> u64 {
+    /// Worker body: execute a run of spans (span `i` into `bufs[i]`),
+    /// checking one workspace out per group transition (spans arrive
+    /// group-major, so a worker crossing layers inside one group keeps its
+    /// scratch; top-k warm starts stay within one span's strip).
+    fn execute_spans(
+        &self,
+        request: SpectrumRequest,
+        spans: &[Span],
+        bufs: Vec<&mut [f64]>,
+    ) -> u64 {
         let mut cur_group = usize::MAX;
         let mut ws: Option<Workspace> = None;
-        let mut pos = 0usize;
         let mut iters = 0u64;
-        for s in spans {
+        for (s, buf) in spans.iter().zip(bufs) {
             let l = &self.layers[s.layer];
             if l.group != cur_group {
                 if let Some(w) = ws.take() {
@@ -423,14 +474,20 @@ impl ModelPlan {
             let w = ws.as_mut().expect("workspace checked out above");
             match request {
                 SpectrumRequest::Full => {
-                    l.plan.execute_rows(s.lo, s.hi, w, &mut out[pos..pos + s.len])
+                    if l.plan.folded() {
+                        l.plan.execute_fold_rows(s.lo, s.hi, w, buf);
+                    } else {
+                        l.plan.execute_rows(s.lo, s.hi, w, buf);
+                    }
                 }
                 SpectrumRequest::TopK(k) => {
-                    let dst = &mut out[pos..pos + s.len];
-                    iters += l.plan.execute_topk_rows(k, s.lo, s.hi, true, w, dst);
+                    if l.plan.folded() {
+                        iters += l.plan.execute_topk_fold_rows(k, s.lo, s.hi, true, w, buf);
+                    } else {
+                        iters += l.plan.execute_topk_rows(k, s.lo, s.hi, true, w, buf);
+                    }
                 }
             }
-            pos += s.len;
         }
         if let Some(w) = ws.take() {
             self.group_pool(cur_group).restore(w);

@@ -12,7 +12,15 @@
 //!   heap allocation;
 //! - the **strided dual-grid geometry**: for stride `s > 1` the plan's
 //!   frequency space is the coarse torus `(n/s)×(m/s)` and each block is the
-//!   `c_out × s²·c_in` concatenation of the `s²` aliasing fine symbols.
+//!   `c_out × s²·c_in` concatenation of the `s²` aliasing fine symbols;
+//! - the **folded execution domain** ([`crate::lfa::Fold`], on by
+//!   default): real kernel weights give `A(−θ) = conj(A(θ))`, so full-grid
+//!   executions solve only a canonical fundamental domain of `θ → −θ`
+//!   (rows `0..=nc/2`, with the self-paired DC/Nyquist rows folded to
+//!   columns `0..=mc/2` — each self-paired frequency solved exactly once)
+//!   and mirror the conjugate half: singular values copied, `U`/`V`
+//!   factors conjugated (with the stride aliasing permutation on `V`) —
+//!   about a 2× cut in per-layer SVD work.
 //!
 //! `execute*` then runs the fused symbol→SVD pipeline over any row range of
 //! the dual grid. Every SVD entry point in the crate — `lfa::svd`,
@@ -22,8 +30,9 @@
 use super::workspace::{Workspace, WorkspacePool};
 use super::SpectrumRequest;
 use crate::conv::ConvKernel;
-use crate::lfa::spectrum::{FullSvd, Spectrum, TopKSvd};
-use crate::lfa::svd::{BlockSolver, LfaOptions};
+use crate::lfa::spectrum::{conj_factor, mirror_fill, FullSvd, Spectrum, TopKSvd};
+use crate::lfa::stride::alias_mirror_index;
+use crate::lfa::svd::{BlockSolver, Fold, LfaOptions};
 use crate::lfa::symbol::{scatter_shard, BlockLayout, SymbolGrid};
 use crate::linalg::jacobi_svd;
 use crate::linalg::power::TopKOptions;
@@ -70,6 +79,11 @@ pub struct SpectralPlan {
     block_rows: usize,
     block_cols: usize,
     rank: usize,
+    /// Conjugate-pair frequency folding: when set, full-grid executions
+    /// solve only the fundamental domain of `θ → −θ` (rows `0..=nc/2`,
+    /// self-paired rows folded to columns `0..=mc/2`) and mirror the rest
+    /// — valid because the kernel weights are real (`A(−θ) = conj(A(θ))`).
+    fold: bool,
     /// Row-axis phase table, flattened `[kh][n]`: `py[d·n + i] =
     /// e^{2πi·i·(d − anchor_row)/n}`.
     py: Vec<C64>,
@@ -154,6 +168,7 @@ impl SpectralPlan {
             block_rows,
             block_cols,
             rank: block_rows.min(block_cols),
+            fold: opts.folding == Fold::Auto,
             py,
             px,
             pool,
@@ -170,9 +185,108 @@ impl SpectralPlan {
         self.mc
     }
 
-    /// Number of frequencies (= blocks) the plan executes.
+    /// Number of frequencies (= blocks) of the full dual grid.
     pub fn freqs(&self) -> usize {
         self.nc * self.mc
+    }
+
+    /// Whether conjugate-pair frequency folding is enabled
+    /// ([`crate::lfa::Fold`] in the plan's options): full-grid executions
+    /// then solve only [`Self::solved_freqs`] blocks and mirror the rest.
+    pub fn folded(&self) -> bool {
+        self.fold
+    }
+
+    /// Coarse frequency rows a folded full-grid execution solves: the
+    /// fundamental-domain rows `0..=nc/2`. Equals [`Self::coarse_rows`]
+    /// when folding is off — the shardable axis of the folded sweep.
+    pub fn solved_rows(&self) -> usize {
+        if self.fold {
+            self.nc / 2 + 1
+        } else {
+            self.nc
+        }
+    }
+
+    /// Whether coarse row `ki` is its own mirror under `θ → −θ` (the DC
+    /// row, and the Nyquist row for even `nc`).
+    #[inline]
+    fn row_self_paired(&self, ki: usize) -> bool {
+        ki == 0 || 2 * ki == self.nc
+    }
+
+    /// Canonical columns a folded sweep solves in row `ki`: self-paired
+    /// rows fold along the column axis too (`0..=mc/2`), every other
+    /// fundamental-domain row is solved in full.
+    #[inline]
+    fn fold_row_cols(&self, ki: usize) -> usize {
+        if self.row_self_paired(ki) {
+            self.mc / 2 + 1
+        } else {
+            self.mc
+        }
+    }
+
+    /// Block SVDs a full-grid execution performs: the fundamental-domain
+    /// size when folding (every conjugate pair solved once, self-paired
+    /// frequencies solved exactly once — the one counting rule lives in
+    /// [`crate::lfa::spectrum::folded_freqs`]), [`Self::freqs`] otherwise.
+    pub fn solved_freqs(&self) -> usize {
+        if self.fold {
+            crate::lfa::spectrum::folded_freqs(self.nc, self.mc)
+        } else {
+            self.freqs()
+        }
+    }
+
+    /// Conjugate mirror of coarse frequency `(ki, kj)`.
+    #[inline]
+    fn mirror_coords(&self, ki: usize, kj: usize) -> (usize, usize) {
+        ((self.nc - ki) % self.nc, (self.mc - kj) % self.mc)
+    }
+
+    /// Mirror the upper columns of a self-paired row in-row
+    /// (`σ(ki, kj) = σ(ki, mc − kj)`): `out[base + kj·per ..]` receives
+    /// `out[base + (mc − kj)·per ..]` for every `kj > mc/2`. Shared by the
+    /// full and top-k folded sweeps so the mirror index arithmetic exists
+    /// exactly once.
+    #[inline]
+    fn mirror_row_tail(&self, base: usize, per: usize, out: &mut [f64]) {
+        for kj in (self.mc / 2 + 1)..self.mc {
+            let src = base + (self.mc - kj) * per;
+            let dst = base + kj * per;
+            out.copy_within(src..src + per, dst);
+        }
+    }
+
+    /// Cut the folded row range `0..solved_rows()` into contiguous strips
+    /// of roughly equal **solved-block** count for `threads` workers
+    /// (self-paired rows carry about half the work of a full row) — the
+    /// partition both folded threaded sweeps hand out, defined exactly
+    /// once.
+    fn fold_strips(&self, threads: usize) -> Vec<(usize, usize)> {
+        let srows = self.solved_rows();
+        let target = self.solved_freqs().div_ceil(threads).max(1);
+        let mut strips = Vec::with_capacity(threads);
+        let mut lo = 0usize;
+        while lo < srows {
+            let mut hi = lo;
+            let mut acc = 0usize;
+            while hi < srows && acc < target {
+                acc += self.fold_row_cols(hi);
+                hi += 1;
+            }
+            strips.push((lo, hi));
+            lo = hi;
+        }
+        strips
+    }
+
+    /// Whether `(ki, kj)` lies in the canonical fundamental domain (the
+    /// set a folded execution solves directly).
+    #[inline]
+    fn freq_is_canonical(&self, ki: usize, kj: usize) -> bool {
+        ki <= self.nc / 2 && (!self.row_self_paired(ki) || kj <= self.mc / 2)
     }
 
     /// Singular values per frequency: `min(c_out, stride²·c_in)`.
@@ -238,7 +352,7 @@ impl SpectralPlan {
         if self.freqs() < 64 {
             return 1;
         }
-        super::resolve_threads(self.threads).min(self.nc.max(1))
+        super::resolve_threads(self.threads).min(self.solved_rows().max(1))
     }
 
     /// Check a workspace out of the plan's pool (or build a fresh one if all
@@ -345,6 +459,47 @@ impl SpectralPlan {
         self.restore(ws);
     }
 
+    /// Execute **folded** coarse rows `[fr_lo, fr_hi)` (indices into the
+    /// fundamental-domain range `0..solved_rows()`) into `out` — one full
+    /// row of output per folded row (`(fr_hi−fr_lo)·mc·rank` values):
+    /// canonical columns are solved, the mirrored columns of self-paired
+    /// rows are filled in-row by copy, so every tile is self-contained.
+    /// Rows below the fold line are nobody's tile — assembly fills them
+    /// with [`crate::lfa::spectrum::mirror_fill`]. Zero heap allocation
+    /// per frequency, like [`Self::execute_rows`].
+    pub fn execute_fold_rows(
+        &self,
+        fr_lo: usize,
+        fr_hi: usize,
+        ws: &mut Workspace,
+        out: &mut [f64],
+    ) {
+        debug_assert!(self.fold, "folded sweep on an unfolded plan");
+        debug_assert!(fr_lo <= fr_hi && fr_hi <= self.solved_rows());
+        let r = self.rank;
+        debug_assert_eq!(out.len(), (fr_hi - fr_lo) * self.mc * r);
+        for ki in fr_lo..fr_hi {
+            let base = (ki - fr_lo) * self.mc * r;
+            let cols = self.fold_row_cols(ki);
+            for kj in 0..cols {
+                self.fill_block(ki, kj, ws);
+                let dst = &mut out[base + kj * r..base + (kj + 1) * r];
+                ws.solve_block(self.solver, self.block_rows, self.block_cols, dst);
+            }
+            if cols < self.mc {
+                self.mirror_row_tail(base, r, out);
+            }
+        }
+    }
+
+    /// [`Self::execute_fold_rows`] with pool-managed workspace checkout —
+    /// the folded tile entry point of the coordinator's workers.
+    pub fn execute_fold_rows_pooled(&self, fr_lo: usize, fr_hi: usize, out: &mut [f64]) {
+        let mut ws = self.checkout();
+        self.execute_fold_rows(fr_lo, fr_hi, &mut ws, out);
+        self.restore(ws);
+    }
+
     /// Top-`k` singular values for coarse frequency rows `[row_lo, row_hi)`
     /// by warm-started Krylov iteration, written frequency-major (descending per
     /// frequency, `topk_per_freq(k)` values each) into `out`. Returns total
@@ -408,6 +563,121 @@ impl SpectralPlan {
         iters
     }
 
+    /// Direction of the folded serpentine sweep in row `ki`: `true` means
+    /// the canonical columns are visited high→low. Chosen so consecutive
+    /// solves stay dual-grid neighbors **in the torus metric**: a
+    /// self-paired row opening a strip runs `mc/2 → 0` (the next row then
+    /// enters adjacently at column 0), full rows run away from the
+    /// previous row's end column (entering straight down at 0 or `mc−1`),
+    /// and the closing self-paired row runs `0 → mc/2` — entered either
+    /// straight down (previous end 0) or across the wrap seam from column
+    /// `mc−1` to column 0 (a diagonal torus step).
+    #[inline]
+    fn fold_row_reverse(&self, ki: usize, first_in_strip: bool, prev_end: usize) -> bool {
+        if self.row_self_paired(ki) {
+            first_in_strip
+        } else {
+            prev_end != 0
+        }
+    }
+
+    /// Walk the folded serpentine order over rows `[fr_lo, fr_hi)` of the
+    /// fundamental domain, invoking `visit(ki, kj, crossed_seam)` at every
+    /// canonical frequency. `crossed_seam` is true exactly on the first
+    /// visit after the walk wraps across the fold seam into the closing
+    /// self-paired row — the spot where a carried warm basis should be
+    /// conjugated ([`crate::linalg::power::TopKScratch::conjugate_basis`]).
+    /// The **single definition** of the folded visit order; the top-k
+    /// values sweep and the factors sweep both follow it, so the seam and
+    /// direction bookkeeping cannot drift between them.
+    fn walk_fold_rows<F: FnMut(usize, usize, bool)>(
+        &self,
+        fr_lo: usize,
+        fr_hi: usize,
+        mut visit: F,
+    ) {
+        let mut prev_end = 0usize;
+        for ki in fr_lo..fr_hi {
+            let cols = self.fold_row_cols(ki);
+            let first = ki == fr_lo;
+            let reverse = self.fold_row_reverse(ki, first, prev_end);
+            let seam = !first && self.row_self_paired(ki) && prev_end != 0;
+            for step in 0..cols {
+                let kj = if reverse { cols - 1 - step } else { step };
+                visit(ki, kj, seam && step == 0);
+            }
+            prev_end = if reverse { 0 } else { cols - 1 };
+        }
+    }
+
+    /// Top-`k` values for **folded** coarse rows `[fr_lo, fr_hi)` (indices
+    /// into `0..solved_rows()`), one full row of output per folded row
+    /// (self-paired rows mirror their upper columns in-row; rows below the
+    /// fold line are assembly's job — [`crate::lfa::spectrum::mirror_fill`]).
+    /// Returns total solver iteration steps.
+    ///
+    /// The sweep is the folded analogue of the serpentine order in
+    /// [`Self::execute_topk_rows`] (per-row direction chosen so
+    /// consecutive solves stay torus-adjacent — see `fold_row_reverse`);
+    /// when the walk crosses the fold seam into the closing self-paired
+    /// row the carried warm basis is conjugated
+    /// ([`crate::linalg::power::TopKScratch::conjugate_basis`]): past the
+    /// seam the walk continues along the mirror track, where the symbol is
+    /// the conjugate of the side already visited.
+    pub fn execute_topk_fold_rows(
+        &self,
+        k: usize,
+        fr_lo: usize,
+        fr_hi: usize,
+        warm_sweep: bool,
+        ws: &mut Workspace,
+        out: &mut [f64],
+    ) -> u64 {
+        debug_assert!(self.fold, "folded sweep on an unfolded plan");
+        debug_assert!(fr_lo <= fr_hi && fr_hi <= self.solved_rows());
+        let ke = self.topk_per_freq(k);
+        debug_assert_eq!(out.len(), (fr_hi - fr_lo) * self.mc * ke);
+        let opts = TopKOptions::default();
+        // Never inherit a basis from whatever this pooled workspace did
+        // last (another strip, another layer): cold-start the sweep.
+        ws.topk.reset();
+        let mut iters = 0u64;
+        self.walk_fold_rows(fr_lo, fr_hi, |ki, kj, crossed_seam| {
+            if crossed_seam {
+                ws.topk.conjugate_basis();
+            }
+            if !warm_sweep {
+                ws.topk.reset();
+            }
+            self.fill_block(ki, kj, ws);
+            let base = (ki - fr_lo) * self.mc * ke;
+            let dst = &mut out[base + kj * ke..base + (kj + 1) * ke];
+            iters += ws.solve_block_topk(self.block_rows, self.block_cols, ke, opts, dst) as u64;
+        });
+        for ki in fr_lo..fr_hi {
+            if self.fold_row_cols(ki) < self.mc {
+                self.mirror_row_tail((ki - fr_lo) * self.mc * ke, ke, out);
+            }
+        }
+        iters
+    }
+
+    /// [`Self::execute_topk_fold_rows`] with pool-managed workspace
+    /// checkout (warm-started within the range) — the folded top-k tile
+    /// entry point of the coordinator's model jobs.
+    pub fn execute_topk_fold_rows_pooled(
+        &self,
+        k: usize,
+        fr_lo: usize,
+        fr_hi: usize,
+        out: &mut [f64],
+    ) -> u64 {
+        let mut ws = self.checkout();
+        let iters = self.execute_topk_fold_rows(k, fr_lo, fr_hi, true, &mut ws, out);
+        self.restore(ws);
+        iters
+    }
+
     /// Top-`k` execution over the full dual grid into a caller-provided
     /// buffer (`topk_values_len(k)` long); returns total solver iteration
     /// steps. Allocation-free per frequency once warmed up, like
@@ -420,7 +690,10 @@ impl SpectralPlan {
     /// and warm-start control. Threaded, each worker owns a **contiguous
     /// strip of frequency rows** and sweeps it serpentine, so warm starts
     /// stay local to a strip and never cross workers (results are
-    /// deterministic for a fixed strip partition).
+    /// deterministic for a fixed strip partition). When the plan folds
+    /// ([`crate::lfa::Fold::Auto`]), strips partition the
+    /// fundamental-domain rows by solved-block count and assembly mirrors
+    /// the conjugate half.
     pub fn execute_topk_into_threads(
         &self,
         k: usize,
@@ -430,34 +703,68 @@ impl SpectralPlan {
     ) -> u64 {
         let ke = self.topk_per_freq(k);
         assert_eq!(out.len(), self.freqs() * ke, "output buffer length mismatch");
-        let threads = super::resolve_threads(threads).min(self.nc.max(1));
-        if threads <= 1 || self.nc <= 1 {
-            let mut ws = self.checkout();
-            let iters = self.execute_topk_rows(k, 0, self.nc, warm_sweep, &mut ws, out);
-            self.restore(ws);
-            return iters;
-        }
-        let rows_per = self.nc.div_ceil(threads);
+        let srows = self.solved_rows();
+        let threads = super::resolve_threads(threads).min(srows.max(1));
         let row_vals = self.mc * ke;
-        let total = AtomicU64::new(0);
-        let total_ref = &total;
-        std::thread::scope(|scope| {
-            let mut rest: &mut [f64] = out;
-            let mut lo = 0usize;
-            while lo < self.nc {
-                let hi = (lo + rows_per).min(self.nc);
-                let (head, tail) = std::mem::take(&mut rest).split_at_mut((hi - lo) * row_vals);
-                rest = tail;
-                scope.spawn(move || {
-                    let mut ws = self.checkout();
-                    let iters = self.execute_topk_rows(k, lo, hi, warm_sweep, &mut ws, head);
-                    self.restore(ws);
-                    total_ref.fetch_add(iters, Ordering::Relaxed);
-                });
-                lo = hi;
+        if !self.fold {
+            if threads <= 1 || self.nc <= 1 {
+                let mut ws = self.checkout();
+                let iters = self.execute_topk_rows(k, 0, self.nc, warm_sweep, &mut ws, out);
+                self.restore(ws);
+                return iters;
             }
-        });
-        total.into_inner()
+            let rows_per = self.nc.div_ceil(threads);
+            let total = AtomicU64::new(0);
+            let total_ref = &total;
+            std::thread::scope(|scope| {
+                let mut rest: &mut [f64] = out;
+                let mut lo = 0usize;
+                while lo < self.nc {
+                    let hi = (lo + rows_per).min(self.nc);
+                    let (head, tail) = std::mem::take(&mut rest).split_at_mut((hi - lo) * row_vals);
+                    rest = tail;
+                    scope.spawn(move || {
+                        let mut ws = self.checkout();
+                        let iters = self.execute_topk_rows(k, lo, hi, warm_sweep, &mut ws, head);
+                        self.restore(ws);
+                        total_ref.fetch_add(iters, Ordering::Relaxed);
+                    });
+                    lo = hi;
+                }
+            });
+            return total.into_inner();
+        }
+        // Folded: solve the fundamental domain, then mirror the rest.
+        let iters = {
+            let solved = &mut out[..srows * row_vals];
+            if threads <= 1 || srows <= 1 {
+                let mut ws = self.checkout();
+                let iters = self.execute_topk_fold_rows(k, 0, srows, warm_sweep, &mut ws, solved);
+                self.restore(ws);
+                iters
+            } else {
+                let total = AtomicU64::new(0);
+                let total_ref = &total;
+                std::thread::scope(|scope| {
+                    let mut rest: &mut [f64] = solved;
+                    for (lo, hi) in self.fold_strips(threads) {
+                        let (head, tail) =
+                            std::mem::take(&mut rest).split_at_mut((hi - lo) * row_vals);
+                        rest = tail;
+                        scope.spawn(move || {
+                            let mut ws = self.checkout();
+                            let iters =
+                                self.execute_topk_fold_rows(k, lo, hi, warm_sweep, &mut ws, head);
+                            self.restore(ws);
+                            total_ref.fetch_add(iters, Ordering::Relaxed);
+                        });
+                    }
+                });
+                total.into_inner()
+            }
+        };
+        mirror_fill(self.nc, self.mc, ke, out);
+        iters
     }
 
     /// Top-`k` singular values per frequency, warm-started along the
@@ -523,11 +830,74 @@ impl SpectralPlan {
         }
     }
 
+    /// Solve the block currently in `ws` for its top-`ke` triplet and
+    /// store it at frequency `f`: values into `values`, right vectors into
+    /// `v[f]`, left vectors `u_j = (A v_j)/σ_j` into `u[f]`. Returns the
+    /// solver iteration steps — the per-frequency body shared by the
+    /// folded and unfolded factor sweeps.
+    fn store_topk_triplet(
+        &self,
+        ke: usize,
+        opts: TopKOptions,
+        ws: &mut Workspace,
+        f: usize,
+        values: &mut [f64],
+        u: &mut [CMat],
+        v: &mut [CMat],
+    ) -> u64 {
+        let dst = &mut values[f * ke..(f + 1) * ke];
+        let iters = ws.solve_block_topk(self.block_rows, self.block_cols, ke, opts, dst) as u64;
+        for j in 0..ke {
+            let vj = ws.topk.right_vector(j);
+            for c in 0..self.block_cols {
+                v[f][(c, j)] = vj[c];
+            }
+            // A v_j = σ_j u_j ⇒ u_j = (A v_j)/σ_j (zero if σ_j = 0).
+            let inv = if dst[j] > 0.0 { 1.0 / dst[j] } else { 0.0 };
+            let wj = ws.topk.left_scaled(j);
+            for r in 0..self.block_rows {
+                u[f][(r, j)] = wj[r].scale(inv);
+            }
+        }
+        iters
+    }
+
+    /// Right factor of the conjugate mirror of frequency `(ki, kj)`:
+    /// `V(−κ) = Pᵀ·conj(V(κ))` — rows permuted per aliasing group by the
+    /// stride negation permutation
+    /// ([`crate::lfa::stride::alias_mirror_index`]), entries conjugated.
+    /// For stride 1 this reduces to the plain conjugate.
+    fn mirror_right_factor(&self, vsrc: &CMat, ki: usize, kj: usize) -> CMat {
+        let s = self.stride;
+        if s == 1 {
+            return conj_factor(vsrc);
+        }
+        let cin = self.kernel.c_in;
+        let mut out = CMat::zeros(vsrc.rows, vsrc.cols);
+        for a in 0..s {
+            for b in 0..s {
+                let sa = alias_mirror_index(s, ki == 0, a);
+                let sb = alias_mirror_index(s, kj == 0, b);
+                let dst0 = (a * s + b) * cin;
+                let src0 = (sa * s + sb) * cin;
+                for i in 0..cin {
+                    for j in 0..vsrc.cols {
+                        out[(dst0 + i, j)] = vsrc[(src0 + i, j)].conj();
+                    }
+                }
+            }
+        }
+        out
+    }
+
     /// Top-`k` singular **triplets** per frequency: values plus left/right
     /// singular vectors, the inputs low-rank compression needs
     /// ([`crate::spectral::lowrank::compress_from_topk`]). Serial
-    /// warm-started sweep; the factor matrices are fresh allocations by
-    /// necessity — they are the output.
+    /// warm-started sweep over the folded fundamental domain (mirrored
+    /// frequencies get copied values, conjugated `U` and permuted-conjugate
+    /// `V` — exact by the symbol symmetry) or, with folding off, over the
+    /// whole grid. The factor matrices are fresh allocations by necessity —
+    /// they are the output.
     pub fn execute_topk_factors(&self, k: usize) -> TopKSvd {
         let ke = self.topk_per_freq(k);
         let freqs = self.freqs();
@@ -539,26 +909,39 @@ impl SpectralPlan {
         ws.topk.reset();
         let mut iters = 0u64;
         let mut total_energy = 0.0f64;
-        for ki in 0..self.nc {
-            for step in 0..self.mc {
-                let kj = self.serpentine_col(ki, step);
+        if self.fold {
+            self.walk_fold_rows(0, self.solved_rows(), |ki, kj, crossed_seam| {
+                if crossed_seam {
+                    ws.topk.conjugate_basis();
+                }
                 self.fill_block(ki, kj, &mut ws);
-                total_energy += ws.block.iter().map(|z| z.norm_sqr()).sum::<f64>();
+                let energy = ws.block.iter().map(|z| z.norm_sqr()).sum::<f64>();
+                total_energy += energy;
                 let f = ki * self.mc + kj;
-                let dst = &mut values[f * ke..(f + 1) * ke];
                 iters +=
-                    ws.solve_block_topk(self.block_rows, self.block_cols, ke, opts, dst) as u64;
-                for j in 0..ke {
-                    let vj = ws.topk.right_vector(j);
-                    for c in 0..self.block_cols {
-                        v[f][(c, j)] = vj[c];
-                    }
-                    // A v_j = σ_j u_j ⇒ u_j = (A v_j)/σ_j (zero if σ_j = 0).
-                    let inv = if dst[j] > 0.0 { 1.0 / dst[j] } else { 0.0 };
-                    let wj = ws.topk.left_scaled(j);
-                    for r in 0..self.block_rows {
-                        u[f][(r, j)] = wj[r].scale(inv);
-                    }
+                    self.store_topk_triplet(ke, opts, &mut ws, f, &mut values, &mut u, &mut v);
+                let (mi, mj) = self.mirror_coords(ki, kj);
+                let fm = mi * self.mc + mj;
+                if fm != f {
+                    // The mirror carries the same energy and values,
+                    // conjugated factors.
+                    total_energy += energy;
+                    values.copy_within(f * ke..(f + 1) * ke, fm * ke);
+                    let um = conj_factor(&u[f]);
+                    let vm = self.mirror_right_factor(&v[f], ki, kj);
+                    u[fm] = um;
+                    v[fm] = vm;
+                }
+            });
+        } else {
+            for ki in 0..self.nc {
+                for step in 0..self.mc {
+                    let kj = self.serpentine_col(ki, step);
+                    self.fill_block(ki, kj, &mut ws);
+                    total_energy += ws.block.iter().map(|z| z.norm_sqr()).sum::<f64>();
+                    let f = ki * self.mc + kj;
+                    iters +=
+                        self.store_topk_triplet(ke, opts, &mut ws, f, &mut values, &mut u, &mut v);
                 }
             }
         }
@@ -585,26 +968,53 @@ impl SpectralPlan {
     }
 
     /// [`Self::execute_into`] with an explicit worker count (0 = auto).
+    /// When the plan folds ([`crate::lfa::Fold::Auto`], the default) only
+    /// the fundamental domain of `θ → −θ` is solved — workers partition
+    /// its rows by solved-block count — and the conjugate half is filled
+    /// by mirroring ([`crate::lfa::spectrum::mirror_fill`]), roughly
+    /// halving the SVD work on every native path.
     pub fn execute_into_threads(&self, threads: usize, out: &mut [f64]) {
         assert_eq!(out.len(), self.values_len(), "output buffer length mismatch");
-        let threads = super::resolve_threads(threads).min(self.nc.max(1));
-        if threads <= 1 || self.nc <= 1 {
-            self.execute_rows_pooled(0, self.nc, out);
+        let srows = self.solved_rows();
+        let threads = super::resolve_threads(threads).min(srows.max(1));
+        let row_vals = self.mc * self.rank;
+        if !self.fold {
+            if threads <= 1 || self.nc <= 1 {
+                self.execute_rows_pooled(0, self.nc, out);
+                return;
+            }
+            let rows_per = self.nc.div_ceil(threads);
+            std::thread::scope(|scope| {
+                let mut rest: &mut [f64] = out;
+                let mut lo = 0usize;
+                while lo < self.nc {
+                    let hi = (lo + rows_per).min(self.nc);
+                    let (head, tail) = std::mem::take(&mut rest).split_at_mut((hi - lo) * row_vals);
+                    rest = tail;
+                    scope.spawn(move || self.execute_rows_pooled(lo, hi, head));
+                    lo = hi;
+                }
+            });
             return;
         }
-        let rows_per = self.nc.div_ceil(threads);
-        let row_vals = self.mc * self.rank;
-        std::thread::scope(|scope| {
-            let mut rest: &mut [f64] = out;
-            let mut lo = 0usize;
-            while lo < self.nc {
-                let hi = (lo + rows_per).min(self.nc);
-                let (head, tail) = std::mem::take(&mut rest).split_at_mut((hi - lo) * row_vals);
-                rest = tail;
-                scope.spawn(move || self.execute_rows_pooled(lo, hi, head));
-                lo = hi;
+        // Folded: solve the fundamental domain, then mirror the rest.
+        {
+            let solved = &mut out[..srows * row_vals];
+            if threads <= 1 || srows <= 1 {
+                self.execute_fold_rows_pooled(0, srows, solved);
+            } else {
+                std::thread::scope(|scope| {
+                    let mut rest: &mut [f64] = solved;
+                    for (lo, hi) in self.fold_strips(threads) {
+                        let (head, tail) =
+                            std::mem::take(&mut rest).split_at_mut((hi - lo) * row_vals);
+                        rest = tail;
+                        scope.spawn(move || self.execute_fold_rows_pooled(lo, hi, head));
+                    }
+                });
             }
-        });
+        }
+        mirror_fill(self.nc, self.mc, self.rank, out);
     }
 
     /// Execute the full dual grid and package the result as a [`Spectrum`].
@@ -623,20 +1033,39 @@ impl SpectralPlan {
 
     /// Full SVD with per-frequency factors `U_k, Σ_k, V_k` (the factor
     /// matrices are fresh allocations by necessity — they are the output).
+    /// When the plan folds, only the fundamental domain is decomposed;
+    /// every mirrored frequency receives copied values and conjugated
+    /// factors (`U(−θ) = conj(U(θ))`, `V(−θ) = Pᵀ·conj(V(θ))` with the
+    /// stride aliasing permutation `P`) — exact by the symbol symmetry, so
+    /// spectral transfer functions reconstruct `A(−θ)` bit-for-bit from
+    /// them.
     pub fn execute_full(&self) -> FullSvd {
         let freqs = self.freqs();
         let r = self.rank;
-        let mut u = Vec::with_capacity(freqs);
-        let mut v = Vec::with_capacity(freqs);
+        let mut u: Vec<CMat> = Vec::with_capacity(freqs);
+        let mut v: Vec<CMat> = Vec::with_capacity(freqs);
         let mut values = vec![0.0f64; freqs * r];
         let mut ws = self.checkout();
         let mut block = CMat::zeros(self.block_rows, self.block_cols);
         for ki in 0..self.nc {
             for kj in 0..self.mc {
+                let f = ki * self.mc + kj;
+                if self.fold && !self.freq_is_canonical(ki, kj) {
+                    // The canonical partner precedes every mirrored
+                    // frequency in row-major order: derive, don't solve.
+                    let (mi, mj) = self.mirror_coords(ki, kj);
+                    let fm = mi * self.mc + mj;
+                    debug_assert!(fm < f, "mirror must already be decomposed");
+                    values.copy_within(fm * r..(fm + 1) * r, f * r);
+                    let um = conj_factor(&u[fm]);
+                    let vm = self.mirror_right_factor(&v[fm], mi, mj);
+                    u.push(um);
+                    v.push(vm);
+                    continue;
+                }
                 self.fill_block(ki, kj, &mut ws);
                 block.data.copy_from_slice(&ws.block);
                 let dec = jacobi_svd::svd(&block);
-                let f = ki * self.mc + kj;
                 values[f * r..(f + 1) * r].copy_from_slice(&dec.s[..r]);
                 u.push(dec.u);
                 v.push(dec.v);
@@ -911,6 +1340,141 @@ mod tests {
         let mut top = vec![0.0f64; plan.topk_values_len(1)];
         assert!(plan.execute_request_into(SpectrumRequest::TopK(1), &mut top) > 0);
         assert!((top[0] - full[0]).abs() <= 1e-8 * full[0].max(1.0));
+    }
+
+    #[test]
+    fn solved_freqs_counts_the_fundamental_domain() {
+        let mut rng = Pcg64::seeded(612);
+        let k = ConvKernel::random_he(2, 2, 3, 3, &mut rng);
+        for &(n, m) in &[(4usize, 4usize), (5, 5), (5, 4), (4, 5), (1, 1), (2, 6), (8, 8)] {
+            let plan = SpectralPlan::new(&k, n, m, LfaOptions { threads: 1, ..Default::default() });
+            assert!(plan.folded());
+            assert_eq!(plan.solved_rows(), n / 2 + 1, "{n}x{m}");
+            assert_eq!(plan.solved_freqs(), crate::lfa::spectrum::folded_freqs(n, m), "{n}x{m}");
+            let off = SpectralPlan::new(
+                &k,
+                n,
+                m,
+                LfaOptions { threads: 1, folding: Fold::Off, ..Default::default() },
+            );
+            assert!(!off.folded());
+            assert_eq!(off.solved_rows(), n);
+            assert_eq!(off.solved_freqs(), n * m);
+        }
+    }
+
+    #[test]
+    fn folded_execution_matches_unfolded() {
+        let mut rng = Pcg64::seeded(613);
+        let k = ConvKernel::random_he(3, 2, 3, 3, &mut rng);
+        for &(n, m) in &[(6usize, 6usize), (5, 7), (4, 4)] {
+            for threads in [1usize, 2] {
+                let folded =
+                    SpectralPlan::new(&k, n, m, LfaOptions { threads, ..Default::default() });
+                let off = SpectralPlan::new(
+                    &k,
+                    n,
+                    m,
+                    LfaOptions { threads, folding: Fold::Off, ..Default::default() },
+                );
+                let a = folded.execute();
+                let b = off.execute();
+                let scale = b.sigma_max().max(1.0);
+                for (x, y) in a.values.iter().zip(&b.values) {
+                    assert!((x - y).abs() <= 1e-12 * scale, "{n}x{m} x{threads}: {x} vs {y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn folded_fold_rows_tiles_stitch_and_mirror_to_full_grid() {
+        // The coordinator's folded tile shape: fundamental-domain row
+        // strips via execute_fold_rows_pooled + mirror_fill assembly.
+        let mut rng = Pcg64::seeded(614);
+        let k = ConvKernel::random_he(3, 3, 3, 3, &mut rng);
+        let plan = SpectralPlan::new(&k, 9, 5, LfaOptions { threads: 1, ..Default::default() });
+        let full = plan.execute();
+        let r = plan.rank();
+        let srows = plan.solved_rows();
+        let mut stitched = vec![0.0f64; plan.values_len()];
+        for (lo, hi) in [(0usize, 2usize), (2, 3), (3, srows)] {
+            let chunk = &mut stitched[lo * 5 * r..hi * 5 * r];
+            plan.execute_fold_rows_pooled(lo, hi, chunk);
+        }
+        crate::lfa::spectrum::mirror_fill(9, 5, r, &mut stitched);
+        assert_eq!(stitched, full.values, "folded tiles + mirror == folded execute");
+    }
+
+    #[test]
+    fn folded_full_factors_reconstruct_mirrored_symbols() {
+        let mut rng = Pcg64::seeded(615);
+        let k = ConvKernel::random_he(3, 2, 3, 3, &mut rng);
+        for &(n, m, s) in &[(6usize, 6usize, 1usize), (5, 4, 1), (8, 8, 2), (6, 6, 3)] {
+            let plan = SpectralPlan::with_stride(
+                &k,
+                n,
+                m,
+                s,
+                LfaOptions { threads: 1, ..Default::default() },
+            );
+            assert!(plan.folded());
+            let svd = plan.execute_full();
+            let (nc, mc) = (n / s, m / s);
+            for ki in 0..nc {
+                for kj in 0..mc {
+                    let want = if s == 1 {
+                        symbol_at(&k, n, m, ki, kj)
+                    } else {
+                        crate::lfa::stride::strided_symbol_at(&k, n, m, s, ki, kj)
+                    };
+                    let got = svd.symbol(ki * mc + kj);
+                    assert!(
+                        got.max_abs_diff(&want) < 1e-10,
+                        "{n}x{m}/{s} ({ki},{kj}): {}",
+                        got.max_abs_diff(&want)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn folded_topk_factors_match_unfolded_truncations() {
+        let mut rng = Pcg64::seeded(616);
+        let k = ConvKernel::random_he(4, 3, 3, 3, &mut rng);
+        for &(n, m, s) in &[(5usize, 5usize, 1usize), (8, 8, 2)] {
+            let folded = SpectralPlan::with_stride(
+                &k,
+                n,
+                m,
+                s,
+                LfaOptions { threads: 1, ..Default::default() },
+            );
+            let off = SpectralPlan::with_stride(
+                &k,
+                n,
+                m,
+                s,
+                LfaOptions { threads: 1, folding: Fold::Off, ..Default::default() },
+            );
+            let fa = folded.execute_topk_factors(2);
+            let fb = off.execute_topk_factors(2);
+            assert!(fa.iterations > 0 && fa.iterations <= fb.iterations);
+            assert!((fa.total_energy - fb.total_energy).abs() <= 1e-9 * fb.total_energy);
+            let scale = fb.sigma.sigma_max().max(1.0);
+            for f in 0..folded.freqs() {
+                // Truncated symbols are basis-independent: compare those,
+                // not the (gauge-dependent) factors themselves.
+                let ta = fa.truncated_symbol(f);
+                let tb = fb.truncated_symbol(f);
+                assert!(
+                    ta.max_abs_diff(&tb) <= 1e-6 * scale,
+                    "{n}x{m}/{s} f={f}: {}",
+                    ta.max_abs_diff(&tb)
+                );
+            }
+        }
     }
 
     #[test]

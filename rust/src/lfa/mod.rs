@@ -20,7 +20,7 @@ pub mod symbol;
 pub use spectrum::{FullSvd, Spectrum, TopKSvd};
 pub use stride::{strided_plan, strided_singular_values, strided_symbol_at};
 pub use svd::{
-    singular_values, singular_values_timed, svd_full, tile_singular_values, BlockSolver,
+    singular_values, singular_values_timed, svd_full, tile_singular_values, BlockSolver, Fold,
     LfaOptions, StageTiming,
 };
 pub use symbol::{

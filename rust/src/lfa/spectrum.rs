@@ -1,7 +1,87 @@
 //! The spectrum of a convolutional mapping: per-frequency singular values
-//! and (optionally) per-frequency singular vector factors.
+//! and (optionally) per-frequency singular vector factors — plus the
+//! **mirror-aware assembly** helpers behind conjugate-pair frequency
+//! folding ([`crate::lfa::Fold`]): real kernels give `A(−θ) = conj(A(θ))`,
+//! so a folded execution solves only a fundamental domain of `θ → −θ` and
+//! [`mirror_fill`] / [`conj_factor`] complete the conjugate half.
 
 use crate::numeric::CMat;
+
+/// Flat index of the conjugate mirror of frequency `f = i·m + j` on an
+/// `n×m` dual grid: `(−i mod n)·m + (−j mod m)`. A fixed point of this map
+/// is a **self-paired** frequency (the DC point and, on even axes, the
+/// Nyquist lines), which a folded execution solves exactly once.
+#[inline]
+pub fn mirror_freq(n: usize, m: usize, f: usize) -> usize {
+    let (i, j) = (f / m, f % m);
+    ((n - i) % n) * m + (m - j) % m
+}
+
+/// Number of frequencies in the canonical fundamental domain of `θ → −θ`
+/// on an `n×m` dual grid: rows `0..=n/2`, with the self-paired rows (row 0
+/// and, for even `n`, row `n/2`) folded along the column axis to columns
+/// `0..=m/2`. Equals `(n·m + s)/2` where `s` counts the self-paired
+/// frequencies — the block-SVD count a folded execution performs.
+pub fn folded_freqs(n: usize, m: usize) -> usize {
+    let half_row = m / 2 + 1;
+    (0..=n / 2).map(|i| if i == 0 || 2 * i == n { half_row } else { m }).sum()
+}
+
+/// Complete a frequency-major values buffer (`n·m·per_freq` long,
+/// `per_freq` values per frequency) from its canonical fundamental domain:
+/// every frequency outside the domain receives a copy of its conjugate
+/// mirror's values (`σ(A(−θ)) = σ(conj(A(θ))) = σ(A(θ))`). Idempotent —
+/// callers whose folded sweeps already filled the self-paired rows in-row
+/// (the engine's tiles do) lose nothing by running it over the whole
+/// buffer. The single assembly step shared by the plan's folded
+/// executions, `ModelPlan`'s batched sweeps and the coordinator's folded
+/// tile jobs.
+pub fn mirror_fill(n: usize, m: usize, per_freq: usize, values: &mut [f64]) {
+    assert_eq!(values.len(), n * m * per_freq, "values buffer length mismatch");
+    let r = per_freq;
+    let h = n / 2;
+    let hm = m / 2;
+    let (top, bottom) = values.split_at_mut((h + 1).min(n) * m * r);
+    // Self-paired rows mirror along the column axis, within the row.
+    let mut row = 0usize;
+    loop {
+        let base = row * m * r;
+        for j in (hm + 1)..m {
+            let src = base + (m - j) * r;
+            let dst = base + j * r;
+            top.copy_within(src..src + r, dst);
+        }
+        if row == 0 && n % 2 == 0 && h > 0 {
+            row = h;
+        } else {
+            break;
+        }
+    }
+    // Every row below the fold line mirrors a solved upper row.
+    for i in (h + 1)..n {
+        let si = n - i;
+        for j in 0..m {
+            let sj = (m - j) % m;
+            let src = (si * m + sj) * r;
+            let dst = ((i - h - 1) * m + j) * r;
+            bottom[dst..dst + r].copy_from_slice(&top[src..src + r]);
+        }
+    }
+}
+
+/// Elementwise conjugate of a factor matrix: the **left** factor of a
+/// mirrored frequency (`A(−θ) = conj(A(θ)) ⇒ U(−θ) = conj(U(θ))`). The
+/// right factor additionally permutes its aliasing row groups for strided
+/// plans — see `lfa::stride::alias_mirror_index`.
+pub fn conj_factor(mat: &CMat) -> CMat {
+    let mut out = CMat::zeros(mat.rows, mat.cols);
+    for i in 0..mat.rows {
+        for j in 0..mat.cols {
+            out[(i, j)] = mat[(i, j)].conj();
+        }
+    }
+    out
+}
 
 /// Singular values of a convolution, grouped by frequency.
 ///
@@ -250,5 +330,84 @@ mod tests {
         let a = vec![1.0; 100];
         let b = vec![1.0; 73];
         assert!(Spectrum::divergence(&a, &b) < 1e-12);
+    }
+
+    #[test]
+    fn mirror_freq_is_an_involution() {
+        for &(n, m) in &[(4usize, 4usize), (5, 7), (1, 6), (6, 1), (2, 2), (1, 1)] {
+            for f in 0..n * m {
+                let fm = mirror_freq(n, m, f);
+                assert!(fm < n * m);
+                assert_eq!(mirror_freq(n, m, fm), f, "{n}x{m} f={f}");
+            }
+        }
+    }
+
+    #[test]
+    fn folded_freqs_counts_half_plus_self_paired() {
+        for &(n, m) in &[
+            (4usize, 4usize),
+            (5, 5),
+            (4, 5),
+            (5, 4),
+            (1, 1),
+            (2, 2),
+            (1, 6),
+            (6, 1),
+            (8, 8),
+            (64, 64),
+        ] {
+            let self_paired = (0..n * m).filter(|&f| mirror_freq(n, m, f) == f).count();
+            assert_eq!(
+                folded_freqs(n, m),
+                (n * m + self_paired) / 2,
+                "{n}x{m}: {} self-paired",
+                self_paired
+            );
+        }
+        // The DC point is always self-paired; even axes add Nyquist lines.
+        assert_eq!(folded_freqs(64, 64), 2050);
+    }
+
+    #[test]
+    fn mirror_fill_copies_conjugate_partners() {
+        for &(n, m, r) in &[(5usize, 4usize, 2usize), (4, 4, 1), (6, 5, 3), (1, 4, 2)] {
+            // Seed every canonical frequency with a distinct value, poison
+            // the rest, then assert the poison is replaced by the mirror.
+            let mut values = vec![f64::NAN; n * m * r];
+            for f in 0..n * m {
+                if mirror_freq(n, m, f) >= f {
+                    for j in 0..r {
+                        values[f * r + j] = (f * r + j) as f64;
+                    }
+                }
+            }
+            mirror_fill(n, m, r, &mut values);
+            for f in 0..n * m {
+                let canon = f.min(mirror_freq(n, m, f));
+                for j in 0..r {
+                    assert_eq!(
+                        values[f * r + j],
+                        (canon * r + j) as f64,
+                        "{n}x{m} r={r} f={f} j={j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conj_factor_conjugates_entries() {
+        use crate::numeric::Pcg64;
+        let mut rng = Pcg64::seeded(77);
+        let a = CMat::random_normal(3, 2, &mut rng);
+        let c = conj_factor(&a);
+        for i in 0..3 {
+            for j in 0..2 {
+                let want = a[(i, j)].conj();
+                let got = c[(i, j)];
+                assert!((got - want).abs() == 0.0, "({i},{j})");
+            }
+        }
     }
 }

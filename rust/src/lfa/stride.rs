@@ -113,6 +113,30 @@ pub fn unroll_strided(kernel: &ConvKernel, n: usize, m: usize, s: usize) -> crat
     a
 }
 
+/// Aliasing-index permutation of the strided symbol under frequency
+/// negation — the coarse-grid side of conjugate-pair folding
+/// ([`crate::lfa::Fold`]).
+///
+/// For real kernels every fine symbol satisfies `A(−k) = conj(A(k))`, but
+/// the coarse block at `−κ` concatenates the *negated* fine frequencies,
+/// whose aliasing offsets land in permuted positions:
+/// `C(−κ) = conj(C(κ))·P`, where `P` permutes the `s²` column groups
+/// sub-axis-wise. On one axis, the group offset paired with `a` is
+/// `(s − a) mod s` when that axis' coarse component is zero (the offsets
+/// negate in place) and `s − 1 − a` otherwise (negation crosses into the
+/// next coarse cell). Column permutations leave singular values untouched
+/// and carry the right factors as `V(−κ) = Pᵀ·conj(V(κ))` — the rule the
+/// engine's folded factor paths apply per aliasing row group.
+#[inline]
+pub fn alias_mirror_index(s: usize, coarse_component_is_zero: bool, a: usize) -> usize {
+    debug_assert!(a < s);
+    if coarse_component_is_zero {
+        (s - a) % s
+    } else {
+        s - 1 - a
+    }
+}
+
 /// Singular values of the transposed (fractionally-strided / upsampling)
 /// convolution `Cᵀ` — identical multiset to `C`'s by the SVD's symmetry,
 /// exposed as an explicit helper for pseudo-invertible-network use.
@@ -220,5 +244,57 @@ mod tests {
     fn rejects_nondividing_stride() {
         let k = ConvKernel::zeros(1, 1, 3, 3);
         strided_singular_values(&k, 7, 7, 2);
+    }
+
+    #[test]
+    fn alias_mirror_permutation_is_a_self_inverse_bijection() {
+        for s in 1..=4usize {
+            for zero in [true, false] {
+                let mut seen = vec![false; s];
+                for a in 0..s {
+                    let b = alias_mirror_index(s, zero, a);
+                    assert!(b < s);
+                    assert!(!seen[b], "s={s} zero={zero}: {b} hit twice");
+                    seen[b] = true;
+                    assert_eq!(alias_mirror_index(s, zero, b), a, "involution");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strided_symbol_mirrors_as_conjugate_column_permutation() {
+        // C(−κ) = conj(C(κ))·P with P permuting the s² aliasing column
+        // groups by `alias_mirror_index` per axis — the identity the
+        // engine's folded factor mirroring relies on.
+        let mut rng = Pcg64::seeded(406);
+        for &(n, m, s) in &[(8usize, 8usize, 2usize), (6, 6, 3), (4, 8, 2)] {
+            let k = ConvKernel::random_he(3, 2, 3, 3, &mut rng);
+            let (nc, mc) = (n / s, m / s);
+            let cin = k.c_in;
+            for ki in 0..nc {
+                for kj in 0..mc {
+                    let (mi, mj) = ((nc - ki) % nc, (mc - kj) % mc);
+                    let at = strided_symbol_at(&k, n, m, s, ki, kj);
+                    let neg = strided_symbol_at(&k, n, m, s, mi, mj);
+                    for a in 0..s {
+                        for b in 0..s {
+                            let sa = alias_mirror_index(s, ki == 0, a);
+                            let sb = alias_mirror_index(s, kj == 0, b);
+                            for o in 0..k.c_out {
+                                for i in 0..cin {
+                                    let got = neg[(o, (a * s + b) * cin + i)];
+                                    let want = at[(o, (sa * s + sb) * cin + i)].conj();
+                                    assert!(
+                                        (got - want).abs() < 1e-12,
+                                        "{n}x{m}/{s} κ=({ki},{kj}) sub=({a},{b})"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
     }
 }

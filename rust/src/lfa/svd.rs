@@ -28,6 +28,26 @@ pub enum BlockSolver {
     GramEigen,
 }
 
+/// Conjugate-pair frequency folding: whether full-grid executions solve
+/// only a fundamental domain of the involution `θ → −θ` on the dual torus
+/// and mirror the rest.
+///
+/// Real kernel weights give `A(−θ) = conj(A(θ))`, so the two frequencies
+/// of a conjugate pair share the exact same singular values (and
+/// conjugated singular vectors — see
+/// [`crate::lfa::spectrum::mirror_fill`]). Folding halves the per-layer
+/// SVD work; `Off` is the unfolded reference every folded path is
+/// cross-checked against in tests and benches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Fold {
+    /// Fold whenever the symmetry holds. Kernels in this crate carry real
+    /// weights, so this always folds — the default.
+    #[default]
+    Auto,
+    /// Solve every frequency independently (reference / escape hatch).
+    Off,
+}
+
 /// Options for the LFA pipeline.
 #[derive(Clone, Copy, Debug)]
 pub struct LfaOptions {
@@ -37,11 +57,19 @@ pub struct LfaOptions {
     /// Frequencies are embarrassingly parallel. The same convention applies
     /// in the scheduler and the CLI (see [`crate::engine::resolve_threads`]).
     pub threads: usize,
+    /// Conjugate-pair frequency folding (default [`Fold::Auto`]: solve the
+    /// fundamental domain of `θ → −θ`, mirror the conjugate half).
+    pub folding: Fold,
 }
 
 impl Default for LfaOptions {
     fn default() -> Self {
-        Self { layout: BlockLayout::BlockContiguous, solver: BlockSolver::Jacobi, threads: 0 }
+        Self {
+            layout: BlockLayout::BlockContiguous,
+            solver: BlockSolver::Jacobi,
+            threads: 0,
+            folding: Fold::Auto,
+        }
     }
 }
 

@@ -22,7 +22,10 @@
 //! [`engine::SpectrumRequest`]: the **full** spectrum, or only the **top-k**
 //! values per frequency via warm-started Krylov iteration — the partial
 //! regime that spectral-norm clipping, Lipschitz certification and
-//! low-rank compression actually consume. See `ARCHITECTURE.md` for the
+//! low-rank compression actually consume. Because real kernels give
+//! `A(−θ) = conj(A(θ))`, every full-grid execution folds the dual grid to
+//! a fundamental domain of `θ → −θ` by default ([`lfa::Fold`]) — half the
+//! SVDs, the other half mirrored. See `ARCHITECTURE.md` for the
 //! full picture and `docs/PAPER_MAP.md` for the paper→code map (which
 //! section, equation, figure and table each module reproduces).
 //!

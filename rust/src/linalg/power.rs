@@ -204,6 +204,26 @@ impl TopKScratch {
         self.warm = false;
     }
 
+    /// Conjugate the stored warm basis in place. For real kernel weights
+    /// the symbol satisfies `A(−θ) = conj(A(θ))` with conjugated singular
+    /// vectors, so a folded sweep (engine `Fold`) crossing the `θ → −θ`
+    /// seam continues its warm start through the mirror by conjugating the
+    /// carried basis: the next frequencies it visits are the conjugates of
+    /// neighbors of the frequencies just solved. (For strided plans the
+    /// aliasing groups additionally permute — the conjugate is then a
+    /// partial hint, which is all a warm start needs.) No-op when cold.
+    pub fn conjugate_basis(&mut self) {
+        if !self.warm {
+            return;
+        }
+        for z in self.v.iter_mut() {
+            *z = z.conj();
+        }
+        for z in self.w.iter_mut() {
+            *z = z.conj();
+        }
+    }
+
     /// Whether the next solve will warm-start from a converged basis.
     pub fn is_warm(&self) -> bool {
         self.warm
@@ -929,6 +949,36 @@ mod tests {
         a[4] = C64::real(1.0);
         block_topk(&a, 3, 3, 1, TopKOptions::default(), &mut scratch, &mut out);
         assert!((out[0] - 2.0).abs() < 1e-8, "null warm hint zeroed the solve: {out:?}");
+    }
+
+    #[test]
+    fn conjugated_basis_warm_starts_the_conjugate_block() {
+        use crate::numeric::CMat;
+        let mut rng = Pcg64::seeded(59);
+        let a = CMat::random_normal(12, 12, &mut rng);
+        let conj_a: Vec<C64> = a.data.iter().map(|z| z.conj()).collect();
+        // Cold reference on conj(A).
+        let mut cold_scratch = TopKScratch::new();
+        let mut want = vec![0.0f64; 3];
+        let cold =
+            block_topk(&conj_a, 12, 12, 3, TopKOptions::default(), &mut cold_scratch, &mut want);
+        // Solve A, conjugate the carried basis, then solve conj(A): the
+        // conjugated basis spans conj(A)'s invariant subspace exactly, so
+        // the warm solve converges in fewer steps with the same values.
+        let mut scratch = TopKScratch::new();
+        let mut out = vec![0.0f64; 3];
+        block_topk(&a.data, 12, 12, 3, TopKOptions::default(), &mut scratch, &mut out);
+        scratch.conjugate_basis();
+        assert!(scratch.is_warm(), "conjugation must not drop the warm state");
+        let warm = block_topk(&conj_a, 12, 12, 3, TopKOptions::default(), &mut scratch, &mut out);
+        for (x, y) in out.iter().zip(&want) {
+            assert!((x - y).abs() <= 1e-9 * want[0].max(1.0), "{x} vs {y}");
+        }
+        assert!(warm < cold, "warm {warm} !< cold {cold}");
+        // Conjugating a cold scratch is a no-op.
+        let mut empty = TopKScratch::new();
+        empty.conjugate_basis();
+        assert!(!empty.is_warm());
     }
 
     #[test]

@@ -14,7 +14,7 @@ use conv_svd_lfa::conv::{Boundary, ConvKernel};
 use conv_svd_lfa::coordinator::{Backend, ServiceConfig, SpectralService};
 use conv_svd_lfa::engine::{ModelPlan, SpectrumRequest};
 use conv_svd_lfa::error::Result;
-use conv_svd_lfa::lfa::{self, BlockSolver, LfaOptions};
+use conv_svd_lfa::lfa::{self, BlockSolver, Fold, LfaOptions};
 use conv_svd_lfa::model::zoo;
 use conv_svd_lfa::model::ModelConfig;
 use conv_svd_lfa::numeric::Pcg64;
@@ -32,7 +32,7 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let cli = Cli::from_env(&["with-explicit", "verbose", "csv"])?;
+    let cli = Cli::from_env(&["with-explicit", "verbose", "csv", "no-fold"])?;
     match cli.command.as_str() {
         "analyze" => cmd_analyze(&cli),
         "audit" => cmd_audit(&cli),
@@ -101,6 +101,33 @@ fn load_model(name_or_path: &str) -> Result<ModelConfig> {
     ))
 }
 
+/// The `frequencies solved: S/T (fold …)` report line of `audit-model`
+/// (always native — a `ModelPlan` sweep): the folded fundamental-domain
+/// size vs the full dual grid, summed over every layer. `audit` computes
+/// its line from the per-layer reports instead, because PJRT-routed
+/// layers sweep the full grid regardless of the folding setting.
+fn fold_report_line(model: &ModelConfig, folding: Fold) -> String {
+    let total: usize = model
+        .layers
+        .iter()
+        .map(|l| (l.height / l.stride) * (l.width / l.stride))
+        .sum();
+    match folding {
+        Fold::Off => format!("frequencies solved: {total}/{total} (fold off)"),
+        Fold::Auto => {
+            let solved: usize = model
+                .layers
+                .iter()
+                .map(|l| lfa::spectrum::folded_freqs(l.height / l.stride, l.width / l.stride))
+                .sum();
+            format!(
+                "frequencies solved: {solved}/{total} (fold {:.2}x)",
+                total as f64 / solved.max(1) as f64
+            )
+        }
+    }
+}
+
 fn cmd_audit(cli: &Cli) -> Result<()> {
     let target = cli
         .positional
@@ -109,6 +136,7 @@ fn cmd_audit(cli: &Cli) -> Result<()> {
     let model = load_model(target)?;
     let threads: usize = cli.opt_parse("threads", 0)?;
     let top_k: usize = cli.opt_parse("top-k", 0)?;
+    let folding = if cli.flag("no-fold") { Fold::Off } else { Fold::Auto };
     let request =
         if top_k > 0 { SpectrumRequest::TopK(top_k) } else { SpectrumRequest::Full };
     let backend = match cli.opt("backend").unwrap_or("auto") {
@@ -126,6 +154,7 @@ fn cmd_audit(cli: &Cli) -> Result<()> {
         workers: threads,
         backend,
         artifacts_dir,
+        folding,
         ..Default::default()
     })?;
     let reports = svc.audit_model_with(&model, request)?;
@@ -172,6 +201,27 @@ fn cmd_audit(cli: &Cli) -> Result<()> {
         commas(m.values_computed as u128),
         secs(m.tile_work)
     );
+    // Fold accounting from what actually ran: PJRT-routed layers always
+    // sweep the full grid, so only native-tiled layers count as folded.
+    let mut total_freqs = 0usize;
+    let mut solved_freqs = 0usize;
+    for (r, layer) in reports.iter().zip(&model.layers) {
+        let (nc, mc) = (layer.height / layer.stride, layer.width / layer.stride);
+        total_freqs += nc * mc;
+        solved_freqs += if folding == Fold::Off || r.pjrt_tiles > 0 {
+            nc * mc
+        } else {
+            lfa::spectrum::folded_freqs(nc, mc)
+        };
+    }
+    if solved_freqs == total_freqs {
+        println!("frequencies solved: {total_freqs}/{total_freqs} (fold off)");
+    } else {
+        println!(
+            "frequencies solved: {solved_freqs}/{total_freqs} (fold {:.2}x)",
+            total_freqs as f64 / solved_freqs.max(1) as f64
+        );
+    }
     if cli.flag("csv") {
         let path = table.save_csv(&format!("audit_{}", model.name))?;
         println!("csv: {}", path.display());
@@ -192,16 +242,19 @@ fn cmd_audit_model(cli: &Cli) -> Result<()> {
     let threads: usize = cli.opt_parse("threads", 0)?;
     let top: usize = cli.opt_parse("top", 4)?;
     let top_k: usize = cli.opt_parse("top-k", 0)?;
+    let folding = if cli.flag("no-fold") { Fold::Off } else { Fold::Auto };
     let solver = match cli.opt("solver").unwrap_or("jacobi") {
         "jacobi" => BlockSolver::Jacobi,
         "gram" => BlockSolver::GramEigen,
         other => bail!("unknown solver {other:?} (jacobi|gram)"),
     };
     let t0 = std::time::Instant::now();
-    let plan = ModelPlan::build(&model, LfaOptions { threads, solver, ..Default::default() })?;
+    let plan =
+        ModelPlan::build(&model, LfaOptions { threads, solver, folding, ..Default::default() })?;
     let t_plan = t0.elapsed();
+    let fold_line = fold_report_line(&model, folding);
     if top_k > 0 {
-        return audit_model_topk(cli, &plan, top_k, t_plan);
+        return audit_model_topk(cli, &plan, top_k, t_plan, &fold_line);
     }
     let t1 = std::time::Instant::now();
     let spectra = plan.execute();
@@ -255,6 +308,7 @@ fn cmd_audit_model(cli: &Cli) -> Result<()> {
         spectra.sigma_min(),
         spectra.lipschitz_upper_bound()
     );
+    println!("{fold_line}");
     for g in 0..plan.group_count() {
         let members = plan.group_members(g);
         let (rows, cols) = plan.layer_plan(members[0]).block_shape();
@@ -278,6 +332,7 @@ fn audit_model_topk(
     plan: &ModelPlan,
     k: usize,
     t_plan: std::time::Duration,
+    fold_line: &str,
 ) -> Result<()> {
     let t1 = std::time::Instant::now();
     let warm = plan.top_k_all(k);
@@ -318,6 +373,7 @@ fn audit_model_topk(
         warm.spectra.sigma_max(),
         warm.spectra.lipschitz_upper_bound()
     );
+    println!("{fold_line}");
     println!(
         "warm-start effort: {} Krylov iteration steps over {} frequencies \
          ({:.2} per frequency; cold starts typically cost an order of \

@@ -60,9 +60,33 @@ fn many_jobs_pipeline_through_bounded_queue() {
 fn explicit_tile_rows_respected() {
     let k = kernel(2, 2, 5);
     let sched = Scheduler::native(2);
-    let res = sched.run(JobSpec::new("t", k, 12, 12).with_tile_rows(5)).unwrap();
-    // 12 rows / 5 per tile = 3 tiles
+    // Folded (default): only the 7 fundamental-domain rows of the 12-row
+    // grid are tiled (rows 0..=6; the rest mirror) → ceil(7/5) = 2 tiles.
+    let res = sched.run(JobSpec::new("t", k.clone(), 12, 12).with_tile_rows(5)).unwrap();
+    assert_eq!(res.native_tiles, 2);
+    // Unfolded: all 12 rows / 5 per tile = 3 tiles.
+    let res = sched
+        .run(JobSpec::new("t2", k, 12, 12).with_tile_rows(5).with_folding(lfa::Fold::Off))
+        .unwrap();
     assert_eq!(res.native_tiles, 3);
+    sched.shutdown();
+}
+
+#[test]
+fn folded_and_unfolded_jobs_agree_and_account_all_values() {
+    let k = kernel(3, 3, 9);
+    let sched = Scheduler::native(3);
+    let folded = sched.run(JobSpec::new("f", k.clone(), 11, 7)).unwrap();
+    let unfolded =
+        sched.run(JobSpec::new("u", k.clone(), 11, 7).with_folding(lfa::Fold::Off)).unwrap();
+    assert_eq!(folded.spectrum.values.len(), unfolded.spectrum.values.len());
+    let scale = unfolded.spectrum.sigma_max().max(1.0);
+    for (a, b) in folded.spectrum.values.iter().zip(&unfolded.spectrum.values) {
+        assert!((a - b).abs() <= 1e-12 * scale, "{a} vs {b}");
+    }
+    // Folded jobs deliver (and account) the full grid's values.
+    let m = sched.metrics.snapshot();
+    assert_eq!(m.values_computed as usize, 2 * 11 * 7 * 3);
     sched.shutdown();
 }
 

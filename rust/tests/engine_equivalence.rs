@@ -9,7 +9,7 @@
 use conv_svd_lfa::conv::ConvKernel;
 use conv_svd_lfa::engine::{NativeSerial, NativeThreaded, SpectralBackend, SpectralPlan};
 use conv_svd_lfa::lfa::symbol::symbol_at;
-use conv_svd_lfa::lfa::{self, BlockLayout, BlockSolver, LfaOptions};
+use conv_svd_lfa::lfa::{self, BlockLayout, BlockSolver, Fold, LfaOptions};
 use conv_svd_lfa::linalg::{jacobi_eig, jacobi_svd};
 use conv_svd_lfa::numeric::{CMat, Pcg64};
 
@@ -74,13 +74,16 @@ fn plan_matches_reference_across_all_configs() {
                 for solver in [BlockSolver::Jacobi, BlockSolver::GramEigen] {
                     let want = reference_unstrided(&k, n, m, solver);
                     for threads in [1usize, 3] {
-                        let opts = LfaOptions { layout, solver, threads };
-                        let got = SpectralPlan::new(&k, n, m, opts).execute();
-                        let gap = max_gap(&got.values, &want);
-                        assert!(
-                            gap < TOL,
-                            "{n}x{m} {c_out}x{c_in} {layout:?} {solver:?} x{threads}: gap {gap}"
-                        );
+                        for folding in [Fold::Auto, Fold::Off] {
+                            let opts = LfaOptions { layout, solver, threads, folding };
+                            let got = SpectralPlan::new(&k, n, m, opts).execute();
+                            let gap = max_gap(&got.values, &want);
+                            assert!(
+                                gap < TOL,
+                                "{n}x{m} {c_out}x{c_in} {layout:?} {solver:?} x{threads} \
+                                 {folding:?}: gap {gap}"
+                            );
+                        }
                     }
                 }
             }
@@ -151,9 +154,16 @@ fn backends_agree_with_plan_execute() {
 
 #[test]
 fn tile_execution_stitches_to_full_grid() {
+    // Raw row-range tiling is the *unfolded* contract (every row solved
+    // independently) — pin it against an unfolded plan.
     let mut rng = Pcg64::seeded(7006);
     let k = ConvKernel::random_he(3, 3, 3, 3, &mut rng);
-    let plan = SpectralPlan::new(&k, 9, 5, LfaOptions { threads: 1, ..Default::default() });
+    let plan = SpectralPlan::new(
+        &k,
+        9,
+        5,
+        LfaOptions { threads: 1, folding: Fold::Off, ..Default::default() },
+    );
     let full = plan.execute();
     let r = plan.rank();
     let mut stitched = vec![0.0f64; plan.values_len()];
@@ -162,4 +172,96 @@ fn tile_execution_stitches_to_full_grid() {
         plan.execute_rows_pooled(lo, hi, chunk);
     }
     assert_eq!(stitched, full.values);
+}
+
+/// The acceptance matrix of the folding change: folded and unfolded
+/// execution agree to ≤ 1e-12 on singular values across stride ∈ {1, 2},
+/// both layouts, serial and threaded, Full and TopK requests, and odd and
+/// even grids (odd axes have no Nyquist line; even axes self-pair it).
+#[test]
+fn folded_matches_unfolded_across_the_full_matrix() {
+    let mut rng = Pcg64::seeded(7008);
+    for &(n, m, s) in &[
+        (6usize, 6usize, 1usize),
+        (5, 7, 1),
+        (4, 4, 1),
+        (7, 4, 1),
+        (8, 8, 2),
+        (4, 8, 2),
+        (12, 6, 2),
+    ] {
+        for &(c_out, c_in) in &[(3usize, 3usize), (4, 2)] {
+            let k = ConvKernel::random_he(c_out, c_in, 3, 3, &mut rng);
+            for layout in [BlockLayout::BlockContiguous, BlockLayout::PlanarStrided] {
+                for threads in [1usize, 3] {
+                    let base = LfaOptions { layout, threads, ..Default::default() };
+                    let folded = SpectralPlan::with_stride(&k, n, m, s, base);
+                    let unfolded = SpectralPlan::with_stride(
+                        &k,
+                        n,
+                        m,
+                        s,
+                        LfaOptions { folding: Fold::Off, ..base },
+                    );
+                    assert!(folded.folded() && !unfolded.folded());
+                    assert!(
+                        folded.solved_freqs() < unfolded.solved_freqs(),
+                        "folding must shrink the solved set ({n}x{m}/{s})"
+                    );
+                    // Full spectra: ≤ 1e-12.
+                    let a = folded.execute();
+                    let b = unfolded.execute();
+                    let scale = b.sigma_max().max(1.0);
+                    for (x, y) in a.values.iter().zip(&b.values) {
+                        assert!(
+                            (x - y).abs() <= 1e-12 * scale,
+                            "{n}x{m}/{s} {c_out}x{c_in} {layout:?} x{threads}: {x} vs {y}"
+                        );
+                    }
+                    // TopK: both sides carry the Krylov tolerance.
+                    let ta = folded.execute_topk(2);
+                    let tb = unfolded.execute_topk(2);
+                    for (x, y) in ta.spectrum.values.iter().zip(&tb.spectrum.values) {
+                        assert!(
+                            (x - y).abs() <= 2e-8 * scale,
+                            "topk {n}x{m}/{s} {c_out}x{c_in} {layout:?} x{threads}: {x} vs {y}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Self-paired frequencies (DC and Nyquist lines) are solved exactly once:
+/// the folded solve count equals `(freqs + self_paired)/2` on every grid
+/// parity, and the folded spectra at those frequencies match the unfolded
+/// reference (no double-mirroring artifacts).
+#[test]
+fn self_paired_frequencies_are_solved_once() {
+    use conv_svd_lfa::lfa::spectrum::mirror_freq;
+    let mut rng = Pcg64::seeded(7009);
+    let k = ConvKernel::random_he(3, 2, 3, 3, &mut rng);
+    for &(n, m) in &[(4usize, 4usize), (5, 5), (4, 5), (5, 4), (2, 2), (1, 7)] {
+        let plan = SpectralPlan::new(&k, n, m, LfaOptions { threads: 1, ..Default::default() });
+        let self_paired = (0..n * m).filter(|&f| mirror_freq(n, m, f) == f).count();
+        assert_eq!(
+            plan.solved_freqs(),
+            (n * m + self_paired) / 2,
+            "{n}x{m}: {self_paired} self-paired"
+        );
+        let off = SpectralPlan::new(
+            &k,
+            n,
+            m,
+            LfaOptions { threads: 1, folding: Fold::Off, ..Default::default() },
+        );
+        let a = plan.execute();
+        let b = off.execute();
+        for f in (0..n * m).filter(|&f| mirror_freq(n, m, f) == f) {
+            for (x, y) in a.at(f).iter().zip(b.at(f)) {
+                assert!((x - y).abs() < 1e-12, "{n}x{m} f={f}");
+            }
+        }
+    }
 }

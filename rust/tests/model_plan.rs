@@ -5,7 +5,7 @@
 
 use conv_svd_lfa::coordinator::{ModelJobSpec, Scheduler, SpectralService};
 use conv_svd_lfa::engine::{ModelPlan, NativeSerial, NativeThreaded, SpectralPlan};
-use conv_svd_lfa::lfa::{self, BlockLayout, BlockSolver, LfaOptions};
+use conv_svd_lfa::lfa::{self, BlockLayout, BlockSolver, Fold, LfaOptions};
 use conv_svd_lfa::model::ModelConfig;
 
 const TOL: f64 = 1e-10;
@@ -72,7 +72,7 @@ fn whole_model_matches_per_layer_plans_across_configs() {
     for layout in [BlockLayout::BlockContiguous, BlockLayout::PlanarStrided] {
         for solver in [BlockSolver::Jacobi, BlockSolver::GramEigen] {
             for threads in [1usize, 3] {
-                let opts = LfaOptions { layout, solver, threads };
+                let opts = LfaOptions { layout, solver, threads, ..Default::default() };
                 let mp = ModelPlan::build(&model, opts).unwrap();
                 let spectra = mp.execute();
                 for (layer, got) in model.layers.iter().zip(&spectra.layers) {
@@ -122,6 +122,49 @@ fn batched_groups_share_pools_and_stay_deterministic() {
         .execute();
     for (x, y) in a.layers.iter().zip(&serial.layers) {
         assert_eq!(x.spectrum.values, y.spectrum.values);
+    }
+}
+
+/// Whole-model folding: the batched sweep over folded layers (mixed
+/// strides, odd/even grids, equal-shape groups) agrees with the unfolded
+/// reference to ≤ 1e-12 for full spectra and to the Krylov tolerance for
+/// top-k, serial and threaded.
+#[test]
+fn whole_model_folded_matches_unfolded() {
+    let model = mixed_model();
+    for threads in [1usize, 3] {
+        let folded =
+            ModelPlan::build(&model, LfaOptions { threads, ..Default::default() }).unwrap();
+        let unfolded = ModelPlan::build(
+            &model,
+            LfaOptions { threads, folding: Fold::Off, ..Default::default() },
+        )
+        .unwrap();
+        let a = folded.execute();
+        let b = unfolded.execute();
+        let scale = b.sigma_max().max(1.0);
+        for (x, y) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(x.name, y.name);
+            for (v, w) in x.spectrum.values.iter().zip(&y.spectrum.values) {
+                assert!(
+                    (v - w).abs() <= 1e-12 * scale,
+                    "x{threads} layer {}: {v} vs {w}",
+                    x.name
+                );
+            }
+        }
+        let ta = folded.top_k_all(2);
+        let tb = unfolded.top_k_all(2);
+        assert!(ta.iterations > 0);
+        for (x, y) in ta.spectra.layers.iter().zip(&tb.spectra.layers) {
+            for (v, w) in x.spectrum.values.iter().zip(&y.spectrum.values) {
+                assert!(
+                    (v - w).abs() <= 2e-8 * scale,
+                    "topk x{threads} layer {}: {v} vs {w}",
+                    x.name
+                );
+            }
+        }
     }
 }
 
