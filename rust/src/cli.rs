@@ -19,15 +19,19 @@ COMMANDS
                Compute the spectrum of a random conv layer.
   audit        <builtin-or-config.toml> [--threads T] [--backend auto|native|pjrt]
                [--artifacts DIR] [--top-k K] [--no-fold] [--csv]
+               [--cache-bytes N] [--no-cache]
                Analyze all conv layers of a model through the coordinator
                service (one planned model job, tiled across the worker
                pool). With --top-k K, tiles compute only the K largest
                singular values per frequency (warm-started Krylov
                iteration; native — artifacts bake in the full SVD, so
-               combining --top-k with --backend pjrt is an error).
+               combining --top-k with --backend pjrt is an error; σ_min
+               and cond report NaN, since the retained extremes say
+               nothing about the small end of the spectrum).
                Builtins: lenet, vgg-small, resnet20ish, paper-c16-n<N>.
   audit-model  <builtin-or-config.toml> [--threads T] [--solver jacobi|gram]
-               [--top J] [--top-k K] [--no-fold] [--csv]
+               [--top J] [--top-k K] [--no-fold] [--csv] [--repeat R]
+               [--cache-bytes N] [--no-cache]
                Whole-model spectral report straight off a ModelPlan: every
                layer planned once, equal-shape layers batched into shared
                workspace groups, executed as one sweep. Emits the per-layer
@@ -36,9 +40,11 @@ COMMANDS
                --top-k K the sweep runs the partial-spectrum engine
                (only the K extreme values per frequency, warm-started
                along the dual grid) and reports the iteration counts the
-               warm starts saved. The config is [[layer]] TOML (keys:
-               name, c_in, c_out, kernel|kh/kw, height, width, stride,
-               init).
+               warm starts saved. --repeat R runs the sweep R times
+               against the result cache — the repeat-audit shape; the
+               warm runs serve every unchanged layer from cache. The
+               config is [[layer]] TOML (keys: name, c_in, c_out,
+               kernel|kh/kw, height, width, stride, init).
   compare      --n <N> [--c C] [--threads T] [--with-explicit]
                LFA vs FFT (vs explicit) runtimes + agreement on one layer.
   artifacts    [--dir DIR] [--run NAME]
@@ -51,9 +57,17 @@ COMMANDS
 Conjugate-pair frequency folding is on by default for native execution:
 real kernels give A(-θ) = conj(A(θ)), so both audit commands solve only a
 fundamental domain of the dual grid (about half the frequencies — the
-report's `frequencies solved:` line shows the folded-domain size vs the
-full grid) and mirror the rest. --no-fold solves every frequency
-independently (the unfolded reference).
+report's `frequencies solved:` line counts what each layer actually
+decomposed: folded native layers their fundamental domain, PJRT-routed
+layers the full grid, cache-served layers nothing) and mirror the rest.
+--no-fold solves every frequency independently (the unfolded reference).
+
+Result & plan caching is on by default for both audit commands: spectra
+are content-addressed by the kernel weight bits + geometry + options, so
+repeat audits of unchanged layers are served from an LRU cache without
+re-solving a single frequency. The `cache: H hits / M misses / E
+evictions` report line shows the traffic; --cache-bytes N caps the result
+cache (0 = the default budget) and --no-cache disables caching entirely.
 ";
 
 /// Parsed command line: subcommand, positionals, `--key value` / `--flag`
@@ -188,5 +202,17 @@ mod tests {
             "HELP must document --no-fold on audit and audit-model"
         );
         assert!(HELP.contains("frequencies solved:"), "HELP must name the fold report line");
+        // Result/plan caching: both audit usage lines carry the knobs, and
+        // the prose names the cache report line and the repeat mode.
+        assert!(
+            HELP.matches("--no-cache").count() >= 3,
+            "HELP must document --no-cache on audit and audit-model"
+        );
+        assert!(
+            HELP.matches("--cache-bytes").count() >= 3,
+            "HELP must document --cache-bytes on audit and audit-model"
+        );
+        assert!(HELP.contains("cache: H hits / M misses / E"), "HELP must name the cache line");
+        assert!(HELP.contains("--repeat R"), "HELP must document audit-model --repeat");
     }
 }

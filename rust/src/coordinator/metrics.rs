@@ -18,6 +18,13 @@ pub struct Metrics {
     pub pjrt_tiles: AtomicU64,
     /// Tiles executed natively.
     pub native_tiles: AtomicU64,
+    /// Jobs (per-layer for model jobs) served from the result cache —
+    /// zero frequencies re-solved.
+    pub cache_hits: AtomicU64,
+    /// Cacheable jobs that missed and were computed (then inserted).
+    pub cache_misses: AtomicU64,
+    /// Result-cache entries evicted under the byte budget.
+    pub cache_evictions: AtomicU64,
 }
 
 /// A point-in-time copy of the counters.
@@ -32,6 +39,9 @@ pub struct MetricsSnapshot {
     pub tile_work: Duration,
     pub pjrt_tiles: u64,
     pub native_tiles: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
 }
 
 impl Metrics {
@@ -57,6 +67,9 @@ impl Metrics {
             tile_work: Duration::from_nanos(self.tile_work_nanos.load(Ordering::Relaxed)),
             pjrt_tiles: self.pjrt_tiles.load(Ordering::Relaxed),
             native_tiles: self.native_tiles.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
         }
     }
 }

@@ -21,6 +21,14 @@
 //! once as a single [`ModelPlan`] (equal-shape layers share workspace
 //! pools) and queues per-layer row tiles against that one planned object —
 //! there is no per-layer plan lookup or rebuild anywhere in the model path.
+//!
+//! Repeat traffic short-circuits even earlier: a [`SpectralCache`]
+//! (enabled by default, [`SchedulerConfig::cache_bytes`]) is consulted
+//! **before tiling** — a native job (or model layer) whose content
+//! signature matches a cached result is served the shared spectrum with
+//! zero tiles queued and zero frequencies re-solved, and freshly computed
+//! native results populate the cache at job finish. Plans are cached the
+//! same way, so a repeat submission re-plans nothing.
 //! Model jobs carry a [`SpectrumRequest`]: `TopK(k)` tiles run the
 //! warm-started top-k sweep over their contiguous row strip natively (AOT
 //! artifacts bake in the full per-frequency SVD, so `Backend::Auto` skips
@@ -29,7 +37,9 @@
 
 use super::job::{Backend, JobSpec, ModelJobSpec, Tile};
 use super::metrics::Metrics;
-use crate::engine::{resolve_threads, ModelPlan, SpectralPlan, SpectrumRequest};
+use crate::engine::{
+    resolve_threads, ModelPlan, Signature, SpectralCache, SpectralPlan, SpectrumRequest,
+};
 use crate::err;
 use crate::error::Result;
 use crate::lfa::{self, LfaOptions};
@@ -43,38 +53,74 @@ use std::time::{Duration, Instant};
 pub struct SchedulerConfig {
     /// Worker threads for native tiles (0 = auto = `available_parallelism`).
     pub workers: usize,
-    /// Bounded queue depth for submitted jobs (backpressure).
+    /// Bounded queue depth for submitted jobs (backpressure);
+    /// 0 = the default depth ([`SchedulerConfig::DEFAULT_QUEUE_DEPTH`]).
     pub queue_depth: usize,
     /// Artifact manifest (empty = native only).
     pub artifacts: Vec<ArtifactSpec>,
+    /// Result/plan cache byte budget: `None` disables caching, `Some(0)`
+    /// uses [`crate::engine::DEFAULT_CACHE_BYTES`], `Some(n)` caps result
+    /// entries at `n` bytes. Native jobs are served from (and populate)
+    /// the cache;
+    /// PJRT-routed work bypasses it (artifact results are f32-precision —
+    /// caching them would silently degrade later native consumers).
+    pub cache_bytes: Option<usize>,
+}
+
+impl SchedulerConfig {
+    /// Default bounded submission-queue depth.
+    pub const DEFAULT_QUEUE_DEPTH: usize = 16;
+
+    /// Resolve the `0 = default` queue-depth convention.
+    pub fn effective_queue_depth(&self) -> usize {
+        if self.queue_depth == 0 {
+            Self::DEFAULT_QUEUE_DEPTH
+        } else {
+            self.queue_depth
+        }
+    }
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        Self { workers: 0, queue_depth: 16, artifacts: Vec::new() }
+        Self { workers: 0, queue_depth: 0, artifacts: Vec::new(), cache_bytes: Some(0) }
     }
 }
 
 /// Result of one job.
 pub struct JobResult {
     pub id: String,
-    pub spectrum: lfa::Spectrum,
+    /// The spectrum — shared with the scheduler's result cache, so a
+    /// cache-served job hands back the very buffer a previous job computed.
+    pub spectrum: Arc<lfa::Spectrum>,
     /// Wall-clock for the whole job.
     pub elapsed: std::time::Duration,
     /// Tiles executed via PJRT / natively.
     pub pjrt_tiles: usize,
     pub native_tiles: usize,
+    /// Block SVDs this job actually performed: the folded fundamental
+    /// domain for folded native jobs, the full grid for PJRT/unfolded
+    /// ones, 0 when served from cache.
+    pub solved_freqs: usize,
+    /// Whether the result came straight from the cache.
+    pub cached: bool,
 }
 
 /// Per-layer outcome of a whole-model job.
 pub struct LayerOutcome {
     pub name: String,
-    pub spectrum: lfa::Spectrum,
+    /// Shared with the scheduler's result cache (see [`JobResult`]).
+    pub spectrum: Arc<lfa::Spectrum>,
     /// Summed tile work for this layer (not wall-clock — tiles of different
     /// layers interleave across the pool).
     pub elapsed: Duration,
     pub pjrt_tiles: usize,
     pub native_tiles: usize,
+    /// Block SVDs actually performed for this layer (0 on a cache hit —
+    /// the per-layer term of the truthful `frequencies solved:` line).
+    pub solved_freqs: usize,
+    /// Whether this layer was served from the result cache.
+    pub cached: bool,
 }
 
 /// Result of one whole-model job: per-layer outcomes in model order.
@@ -102,6 +148,9 @@ struct JobState {
     artifact: Option<ArtifactSpec>,
     /// Pre-converted f32 weights for the PJRT path.
     weights_f32: Vec<f32>,
+    /// Result cache to populate at finish (native jobs only), with the
+    /// job's content signature.
+    cache: Option<(Arc<SpectralCache>, Signature)>,
 }
 
 /// Per-layer tile bookkeeping for a whole-model job.
@@ -135,6 +184,12 @@ struct ModelJobState {
     artifacts: Vec<Option<ArtifactSpec>>,
     /// Pre-converted f32 weights for PJRT-routed layers (empty otherwise).
     weights_f32: Vec<Vec<f32>>,
+    /// Result cache + per-layer signatures (signatures only for native,
+    /// cacheable layers) and the per-layer cache hits: a hit layer has no
+    /// tiles — its spectrum ships straight from here at finish.
+    cache: Option<Arc<SpectralCache>>,
+    keys: Vec<Option<Signature>>,
+    cached: Vec<Option<Arc<lfa::Spectrum>>>,
 }
 
 enum Work {
@@ -150,6 +205,8 @@ pub struct Scheduler {
     pub metrics: Arc<Metrics>,
     config: SchedulerConfig,
     executor: Option<PjrtExecutor>,
+    /// Content-addressed result & plan cache (None when disabled).
+    cache: Option<Arc<SpectralCache>>,
 }
 
 impl Scheduler {
@@ -158,7 +215,9 @@ impl Scheduler {
     pub fn start(config: SchedulerConfig, executor: Option<PjrtExecutor>) -> Self {
         let mut config = config;
         config.workers = resolve_threads(config.workers);
-        let (work_tx, work_rx) = mpsc::sync_channel::<Work>(config.queue_depth.max(1) * 4);
+        let cache = config.cache_bytes.map(|b| Arc::new(SpectralCache::with_budget_or_default(b)));
+        let (work_tx, work_rx) =
+            mpsc::sync_channel::<Work>(config.effective_queue_depth().max(1) * 4);
         let work_rx = Arc::new(Mutex::new(work_rx));
         let metrics = Arc::new(Metrics::default());
         let mut workers = Vec::with_capacity(config.workers);
@@ -173,12 +232,23 @@ impl Scheduler {
                     .expect("spawning worker"),
             );
         }
-        Self { work_tx, workers, metrics, config, executor }
+        Self { work_tx, workers, metrics, config, executor, cache }
     }
 
     /// Convenience: native-only scheduler (`workers == 0` = auto).
     pub fn native(workers: usize) -> Self {
         Self::start(SchedulerConfig { workers, ..Default::default() }, None)
+    }
+
+    /// The scheduler's result/plan cache (None when disabled via
+    /// [`SchedulerConfig::cache_bytes`]).
+    pub fn cache(&self) -> Option<&Arc<SpectralCache>> {
+        self.cache.as_ref()
+    }
+
+    /// The resolved bounded-queue depth jobs are submitted against.
+    pub fn queue_depth(&self) -> usize {
+        self.config.effective_queue_depth()
     }
 
     /// Submit a job; returns a receiver for its result. Blocks (backpressure)
@@ -189,25 +259,81 @@ impl Scheduler {
         self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
         let spec = Arc::new(spec);
         let artifact = self.pick_artifact(&spec);
+        let opts = LfaOptions {
+            solver: spec.solver,
+            folding: spec.folding,
+            threads: 1,
+            ..Default::default()
+        };
+        // Cache check before any tiling or planning. Only native jobs are
+        // cacheable (PJRT results are f32-precision — see SchedulerConfig);
+        // an explicit-PJRT job without an artifact contractually *fails*,
+        // so it must not be silently served from a native result either.
+        let cache = if artifact.is_none() && spec.backend != Backend::Pjrt {
+            self.cache.as_ref().map(|c| {
+                let key = Signature::result(
+                    &spec.kernel,
+                    spec.n,
+                    spec.m,
+                    1,
+                    &opts,
+                    SpectrumRequest::Full,
+                );
+                (Arc::clone(c), key)
+            })
+        } else {
+            None
+        };
+        if let Some((c, key)) = &cache {
+            if let Some(spectrum) = c.get(key) {
+                // Served entirely from cache: zero tiles, zero frequencies
+                // re-solved; the job still counts submitted + completed.
+                self.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+                self.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                let _ = done_tx.send(Ok(JobResult {
+                    id: spec.id.clone(),
+                    spectrum,
+                    elapsed: Duration::ZERO,
+                    pjrt_tiles: 0,
+                    native_tiles: 0,
+                    solved_freqs: 0,
+                    cached: true,
+                }));
+                return done_rx;
+            }
+            self.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
         let weights_f32 = if artifact.is_some() {
             spec.kernel.data.iter().map(|&v| v as f32).collect()
         } else {
             Vec::new()
         };
         // Jobs with a matching artifact run every tile on PJRT and never
-        // touch the native path — skip the planning cost for them.
+        // touch the native path — skip the planning cost for them. Native
+        // jobs draw their plan from the plan cache when one is running:
+        // equal plan signatures share phase tables and warmed workspaces.
+        // The plan key derives from the result key computed above, so one
+        // submission hashes the weight tensor exactly once.
         let plan = if artifact.is_none() {
-            Some(Arc::new(SpectralPlan::new(
-                &spec.kernel,
-                spec.n,
-                spec.m,
-                LfaOptions {
-                    solver: spec.solver,
-                    folding: spec.folding,
-                    threads: 1,
-                    ..Default::default()
-                },
-            )))
+            Some(match (&self.cache, &cache) {
+                (Some(c), Some((_, key))) => {
+                    let pkey = key.for_plan(opts.threads);
+                    match c.plan_lookup(&pkey) {
+                        Some(p) => p,
+                        None => c.plan_store(
+                            pkey,
+                            Arc::new(SpectralPlan::new(&spec.kernel, spec.n, spec.m, opts)),
+                        ),
+                    }
+                }
+                // The cache tuple is None (with a live cache) only for
+                // explicit-PJRT jobs without an artifact — they
+                // contractually fail in the worker, so don't let them
+                // churn warmed plans out of the capped plan cache.
+                (Some(_), None) | (None, _) => {
+                    Arc::new(SpectralPlan::new(&spec.kernel, spec.n, spec.m, opts))
+                }
+            })
         } else {
             None
         };
@@ -242,6 +368,7 @@ impl Scheduler {
             done_tx,
             artifact,
             weights_f32,
+            cache,
         });
         for (lo, hi) in tiles {
             self.metrics.tiles_dispatched.fetch_add(1, Ordering::Relaxed);
@@ -285,15 +412,20 @@ impl Scheduler {
             )));
             return done_rx;
         }
-        let plan = match ModelPlan::build(
-            &spec.model,
-            LfaOptions {
-                solver: spec.solver,
-                folding: spec.folding,
-                threads: 1,
-                ..Default::default()
-            },
-        ) {
+        let opts = LfaOptions {
+            solver: spec.solver,
+            folding: spec.folding,
+            threads: 1,
+            ..Default::default()
+        };
+        // The plan cache makes a repeat model submission re-plan nothing:
+        // every layer's plan signature matches and the planned objects
+        // (phase tables + warmed pools) are shared.
+        let built = match &self.cache {
+            Some(c) => ModelPlan::build_cached(&spec.model, opts, c),
+            None => ModelPlan::build(&spec.model, opts),
+        };
+        let plan = match built {
             Ok(p) => Arc::new(p),
             Err(e) => {
                 self.metrics.jobs_failed.fetch_add(nlayers as u64, Ordering::Relaxed);
@@ -336,12 +468,43 @@ impl Scheduler {
             artifacts.push(art);
             weights_f32.push(w);
         }
+        // Result-cache check, per layer: a native layer whose signature
+        // hits gets **no tiles** — its spectrum ships from the cache at
+        // finish, zero frequencies re-solved. PJRT-routed layers bypass
+        // the cache (f32-precision results are never cached).
+        let mut keys: Vec<Option<Signature>> = vec![None; nlayers];
+        let mut cached: Vec<Option<Arc<lfa::Spectrum>>> = vec![None; nlayers];
+        if let Some(c) = &self.cache {
+            for i in 0..nlayers {
+                // (Explicit-PJRT model jobs fail per unmatched layer —
+                // never mask that with a cached native result.)
+                if artifacts[i].is_none() && spec.backend != Backend::Pjrt {
+                    // Cached builds stored each layer's plan signature:
+                    // derive the result key instead of re-hashing the
+                    // whole weight tensor a second time per submission.
+                    let key = match plan.layer_plan_signature(i) {
+                        Some(ps) => ps.for_request(spec.request),
+                        None => plan.layer_plan(i).result_signature(spec.request),
+                    };
+                    cached[i] = c.get(&key);
+                    if cached[i].is_some() {
+                        self.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        self.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+                    }
+                    keys[i] = Some(key);
+                }
+            }
+        }
         // Tiles: per-layer row ranges against the shared plan. Native
         // tiles of a folded layer cover only its fundamental-domain rows
         // (finish_model_job mirrors the conjugate halves); PJRT-routed
-        // layers always sweep the full grid.
+        // layers always sweep the full grid; cache-hit layers get none.
         let mut tiles: Vec<(usize, usize, usize)> = Vec::new();
         for i in 0..nlayers {
+            if cached[i].is_some() {
+                continue;
+            }
             let lp = plan.layer_plan(i);
             let nrows = if artifacts[i].is_none() && lp.folded() {
                 lp.solved_rows()
@@ -367,12 +530,16 @@ impl Scheduler {
             .collect();
         let offsets = plan.request_offsets(spec.request);
         let total_values = plan.request_values_len(spec.request);
+        // Every layer a cache hit ⇒ no tiles ⇒ the whole-model buffer is
+        // never touched: don't allocate (and zero) it on the pure-lookup
+        // path — that allocation is exactly what a hit is meant to skip.
+        let values = if tiles.is_empty() { Vec::new() } else { vec![0.0; total_values] };
         let spec = Arc::new(spec);
         let state = Arc::new(ModelJobState {
             spec: Arc::clone(&spec),
             values_per_freq,
             offsets,
-            values: Mutex::new(vec![0.0; total_values]),
+            values: Mutex::new(values),
             remaining: AtomicUsize::new(tiles.len()),
             layer_counters: (0..nlayers)
                 .map(|_| LayerCounters {
@@ -387,7 +554,15 @@ impl Scheduler {
             artifacts,
             weights_f32,
             plan,
+            cache: self.cache.clone(),
+            keys,
+            cached,
         });
+        if state.remaining.load(Ordering::Relaxed) == 0 {
+            // Every layer hit the cache: nothing to schedule, finish now.
+            finish_model_job(&state, &self.metrics);
+            return done_rx;
+        }
         for (layer, lo, hi) in tiles {
             self.metrics.tiles_dispatched.fetch_add(1, Ordering::Relaxed);
             // SyncSender blocks when full — the same backpressure point as
@@ -659,9 +834,11 @@ fn finish_model_job(state: &ModelJobState, metrics: &Metrics) {
     let mut values = std::mem::take(&mut *state.values.lock().expect("values poisoned"));
     // Mirror the conjugate halves of folded native layers in, and account
     // the mirrored values as delivered (matching the per-layer job path).
+    // Cache-hit layers were never tiled: their values ship from the cache
+    // below and count nothing as computed.
     for i in 0..state.plan.layer_count() {
         let lp = state.plan.layer_plan(i);
-        if state.artifacts[i].is_none() && lp.folded() {
+        if state.cached[i].is_none() && state.artifacts[i].is_none() && lp.folded() {
             let r = state.values_per_freq[i];
             let off = state.offsets[i];
             let len = lp.freqs() * r;
@@ -675,22 +852,47 @@ fn finish_model_job(state: &ModelJobState, metrics: &Metrics) {
             metrics.values_computed.fetch_add(mirrored as u64, Ordering::Relaxed);
         }
     }
-    let spectra = state.plan.spectra_from_flat_request(state.spec.request, &values);
-    let mut layers = Vec::with_capacity(spectra.layers.len());
+    let mut layers = Vec::with_capacity(state.plan.layer_count());
     let mut pjrt_total = 0usize;
     let mut native_total = 0usize;
-    for (i, layer) in spectra.layers.into_iter().enumerate() {
+    for i in 0..state.plan.layer_count() {
+        let lp = state.plan.layer_plan(i);
         let c = &state.layer_counters[i];
         let pjrt = c.pjrt.load(Ordering::Relaxed);
         let native = c.native.load(Ordering::Relaxed);
         pjrt_total += pjrt;
         native_total += native;
+        // Folded/unfolded/PJRT/cached accounted separately: solved_freqs
+        // is what this layer's tiles actually decomposed.
+        let (spectrum, solved, cached) = match &state.cached[i] {
+            Some(sp) => (Arc::clone(sp), 0usize, true),
+            None => {
+                let r = state.values_per_freq[i];
+                let off = state.offsets[i];
+                let slice = values[off..off + lp.freqs() * r].to_vec();
+                let spectrum =
+                    Arc::new(lp.spectrum_from_values(state.spec.request, slice));
+                // Freshly computed native layers enter the result cache.
+                if let (Some(cache), Some(key)) = (&state.cache, &state.keys[i]) {
+                    let evicted = cache.insert(*key, Arc::clone(&spectrum));
+                    metrics.cache_evictions.fetch_add(evicted, Ordering::Relaxed);
+                }
+                let solved = if state.artifacts[i].is_none() {
+                    lp.solved_freqs()
+                } else {
+                    lp.freqs()
+                };
+                (spectrum, solved, false)
+            }
+        };
         layers.push(LayerOutcome {
-            name: layer.name,
-            spectrum: layer.spectrum,
+            name: state.plan.layer_name(i).to_string(),
+            spectrum,
             elapsed: Duration::from_nanos(c.work_nanos.load(Ordering::Relaxed)),
             pjrt_tiles: pjrt,
             native_tiles: native,
+            solved_freqs: solved,
+            cached,
         });
     }
     metrics.jobs_completed.fetch_add(layers.len() as u64, Ordering::Relaxed);
@@ -716,13 +918,22 @@ fn finish_job(state: &JobState, metrics: &Metrics) {
             metrics.values_computed.fetch_add(mirrored as u64, Ordering::Relaxed);
         }
     }
-    let spectrum = lfa::Spectrum {
+    let spectrum = Arc::new(lfa::Spectrum {
         n: spec.n,
         m: spec.m,
         c_out: spec.kernel.c_out,
         c_in: spec.kernel.c_in,
         per_freq: spec.rank(),
         values,
+    });
+    // Freshly computed native results populate the cache for repeats.
+    if let Some((cache, key)) = &state.cache {
+        let evicted = cache.insert(*key, Arc::clone(&spectrum));
+        metrics.cache_evictions.fetch_add(evicted, Ordering::Relaxed);
+    }
+    let solved_freqs = match state.plan.as_ref() {
+        Some(plan) => plan.solved_freqs(),
+        None => spec.n * spec.m,
     };
     metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
     let _ = state.done_tx.send(Ok(JobResult {
@@ -731,5 +942,7 @@ fn finish_job(state: &JobState, metrics: &Metrics) {
         elapsed: state.started.elapsed(),
         pjrt_tiles: state.pjrt_tiles.load(Ordering::Relaxed),
         native_tiles: state.native_tiles.load(Ordering::Relaxed),
+        solved_freqs,
+        cached: false,
     }));
 }

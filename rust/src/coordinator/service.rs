@@ -14,6 +14,7 @@ use crate::lfa::{self, BlockSolver, Fold};
 use crate::model::config::ModelConfig;
 use crate::runtime::{load_manifest, PjrtExecutor};
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Service configuration.
@@ -30,6 +31,14 @@ pub struct ServiceConfig {
     /// Conjugate-pair frequency folding for native tiles (default
     /// [`Fold::Auto`]; the CLI's `--no-fold` maps to [`Fold::Off`]).
     pub folding: Fold,
+    /// Bounded job-queue depth for the scheduler (0 = default —
+    /// [`SchedulerConfig::DEFAULT_QUEUE_DEPTH`]).
+    pub queue_depth: usize,
+    /// Result/plan cache budget: `None` disables caching, `Some(0)` uses
+    /// the default budget, `Some(n)` caps result entries at `n` bytes
+    /// (the CLI's `--no-cache` / `--cache-bytes N`). See
+    /// [`SchedulerConfig::cache_bytes`].
+    pub cache_bytes: Option<usize>,
 }
 
 impl Default for ServiceConfig {
@@ -41,6 +50,8 @@ impl Default for ServiceConfig {
             artifacts_dir: None,
             verify: true,
             folding: Fold::Auto,
+            queue_depth: 0,
+            cache_bytes: Some(0),
         }
     }
 }
@@ -54,14 +65,25 @@ pub struct LayerReport {
     pub c_in: usize,
     pub num_values: usize,
     pub sigma_max: f64,
+    /// NaN under a partial (top-k) request — the retained extremes don't
+    /// span the operator's smallest value (see [`lfa::Spectrum::sigma_min`]).
     pub sigma_min: f64,
+    /// NaN under a partial (top-k) request, like [`Self::sigma_min`].
     pub condition: f64,
     pub elapsed: Duration,
     pub pjrt_tiles: usize,
     pub native_tiles: usize,
+    /// Block SVDs actually performed for this layer: the folded
+    /// fundamental domain for folded native execution, the full grid for
+    /// PJRT/unfolded, 0 when served from the result cache — the per-layer
+    /// term of the `frequencies solved:` report line.
+    pub solved_freqs: usize,
+    /// Whether this layer came straight from the result cache.
+    pub cached: bool,
     /// Relative Frobenius-identity defect (NaN when verification is off).
     pub frobenius_defect: f64,
-    pub spectrum: lfa::Spectrum,
+    /// Shared with the scheduler's result cache on cached/cacheable paths.
+    pub spectrum: Arc<lfa::Spectrum>,
 }
 
 /// The spectral-analysis service.
@@ -98,7 +120,12 @@ impl SpectralService {
             None => (Vec::new(), None),
         };
         let scheduler = Scheduler::start(
-            SchedulerConfig { workers: config.workers, queue_depth: 16, artifacts },
+            SchedulerConfig {
+                workers: config.workers,
+                queue_depth: config.queue_depth,
+                artifacts,
+                cache_bytes: config.cache_bytes,
+            },
             executor,
         );
         Ok(Self { scheduler, config })
@@ -146,7 +173,9 @@ impl SpectralService {
     /// fast mode when the report's consumers only need σ extrema and the
     /// Lipschitz bound. Frobenius verification is skipped for partial
     /// spectra (the identity needs the whole spectrum), so
-    /// `frobenius_defect` comes back NaN.
+    /// `frobenius_defect` comes back NaN — and so do `sigma_min` and
+    /// `condition`, because the retained per-frequency values are the
+    /// *largest* ones and say nothing about the small end.
     pub fn audit_model_with(
         &self,
         model: &ModelConfig,
@@ -171,6 +200,8 @@ impl SpectralService {
                 outcome.elapsed,
                 outcome.pjrt_tiles,
                 outcome.native_tiles,
+                outcome.solved_freqs,
+                outcome.cached,
             ));
         }
         Ok(reports)
@@ -194,6 +225,8 @@ impl SpectralService {
             result.elapsed,
             result.pjrt_tiles,
             result.native_tiles,
+            result.solved_freqs,
+            result.cached,
         )
     }
 
@@ -207,10 +240,12 @@ impl SpectralService {
         n: usize,
         m: usize,
         stride: usize,
-        spectrum: lfa::Spectrum,
+        spectrum: Arc<lfa::Spectrum>,
         elapsed: Duration,
         pjrt_tiles: usize,
         native_tiles: usize,
+        solved_freqs: usize,
+        cached: bool,
     ) -> LayerReport {
         // The Frobenius identity sums *every* σ², so it can only verify
         // full spectra; partial (top-k) spectra report NaN.
@@ -227,11 +262,15 @@ impl SpectralService {
             c_in: kernel.c_in,
             num_values: spectrum.num_values(),
             sigma_max: spectrum.sigma_max(),
+            // NaN under a top-k request: Spectrum's partial-spectrum guard
+            // (the fix for reporting extremes off truncated spectra).
             sigma_min: spectrum.sigma_min(),
             condition: spectrum.condition_number(),
             elapsed,
             pjrt_tiles,
             native_tiles,
+            solved_freqs,
+            cached,
             frobenius_defect: defect,
             spectrum,
         }
@@ -239,6 +278,17 @@ impl SpectralService {
 
     pub fn metrics(&self) -> MetricsSnapshot {
         self.scheduler.metrics.snapshot()
+    }
+
+    /// Stats of the scheduler's result/plan cache (None when caching is
+    /// disabled via [`ServiceConfig::cache_bytes`]).
+    pub fn cache_stats(&self) -> Option<crate::engine::CacheStats> {
+        self.scheduler.cache().map(|c| c.stats())
+    }
+
+    /// The resolved bounded job-queue depth the scheduler runs with.
+    pub fn queue_depth(&self) -> usize {
+        self.scheduler.queue_depth()
     }
 
     pub fn shutdown(self) {

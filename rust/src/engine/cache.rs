@@ -1,0 +1,592 @@
+//! [`SpectralCache`]: content-addressed result & plan caching for
+//! repeat-traffic audits.
+//!
+//! A service handling heavy repeat traffic — training-loop clipping
+//! (Senderovich et al. 2022), repeated Lipschitz audits (Sedghi et al.
+//! 2019) — recomputes identical spectra every time a layer's weights
+//! haven't changed. This module makes the recomputation a hash lookup:
+//!
+//! - a **result cache**: a deterministic [`Signature`] over the kernel
+//!   weight *bits*, the grid, stride, block layout, solver,
+//!   [`SpectrumRequest`] and [`Fold`] mode maps to an `Arc<Spectrum>`.
+//!   Equal signature ⇒ the same operator spectrum, so a hit returns
+//!   previously computed values without touching a single frequency.
+//!   For `Full` requests that sharing is **bit-identical** (per-frequency
+//!   Jacobi is partition-invariant); `TopK` values are converged to the
+//!   Krylov solver's tolerance and their final bits depend on the sweep
+//!   shape (thread strips, batched model sweeps), so a served `TopK`
+//!   entry may differ from a particular resweep in the last bits — the
+//!   same variation threaded-vs-serial top-k already has without a
+//!   cache. Entries are evicted **least-recently-used under a byte
+//!   budget** ([`SpectralCache::with_budget`]).
+//! - a **plan cache**: jobs and [`super::ModelPlan`] groups with equal
+//!   plan signatures (weights + geometry + options + resolved worker
+//!   count) share one [`SpectralPlan`] instead of re-planning phase
+//!   tables; a shared plan also shares its workspace pool, so repeat
+//!   jobs reuse warmed scratch. Capped by **entry count**, deliberately
+//!   modest: a cached plan pins its `O(n·kh + m·kw)` phase tables, the
+//!   kernel clone *and* its warmed workspace pool (which grows with the
+//!   worker count), none of which is charged against the byte budget —
+//!   `cache_bytes` budgets *results* only.
+//!
+//! The coordinator's [`crate::coordinator::Scheduler`] consults the cache
+//! before tiling a job and populates it at job finish;
+//! [`super::ModelPlan::execute_cached`] does the same for direct
+//! whole-model sweeps, so a repeated `audit-model` of an unchanged model
+//! re-solves zero frequencies. Hit / miss / eviction counts are exposed
+//! via [`SpectralCache::stats`] and the coordinator's `MetricsSnapshot`.
+//!
+//! Keys are *content hashes* of the weight bits (two independent FNV-1a
+//! streams, 128 bits total) plus every structural field compared exactly —
+//! a collision requires two weight tensors of equal length agreeing on
+//! both digests, which does not happen by accident. Weight mutation (a
+//! clipped layer, a training step) changes the bits and therefore the
+//! signature: stale entries are never *returned*, they simply age out of
+//! the LRU order.
+
+use super::plan::SpectralPlan;
+use super::SpectrumRequest;
+use crate::conv::ConvKernel;
+use crate::lfa::spectrum::Spectrum;
+use crate::lfa::svd::{BlockSolver, Fold, LfaOptions};
+use crate::lfa::symbol::BlockLayout;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Default result-cache byte budget (256 MiB ≈ 32M singular values).
+pub const DEFAULT_CACHE_BYTES: usize = 256 << 20;
+
+/// Plan-cache entry cap. Each cached plan retains phase tables, a kernel
+/// clone and its warmed workspace pool (outside the byte budget — see the
+/// module docs), so the cap is modest; it also bounds pathological churn
+/// (a service cycling through thousands of distinct layer shapes).
+const PLAN_CACHE_CAP: usize = 64;
+
+/// Byte-wise FNV-1a over a stream of `u64`s (the weight bit patterns),
+/// maintaining **two** digests from different offset bases in one fused
+/// pass — 128 bits of content address for a single sweep of the tensor
+/// (hashing is the dominant cost of a signature on big layers; two
+/// separate passes would double the memory traffic).
+fn fnv1a_u64s2(words: impl Iterator<Item = u64>) -> [u64; 2] {
+    const PRIME: u64 = 0x100000001b3;
+    let mut h0: u64 = 0xcbf29ce484222325;
+    let mut h1: u64 = 0x6c62272e07bb0142;
+    for w in words {
+        for shift in [0u32, 8, 16, 24, 32, 40, 48, 56] {
+            let b = (w >> shift) & 0xff;
+            h0 = (h0 ^ b).wrapping_mul(PRIME);
+            h1 = (h1 ^ b).wrapping_mul(PRIME);
+        }
+    }
+    [h0, h1]
+}
+
+/// Deterministic content signature of one spectral computation (or of one
+/// plan, when [`Signature::plan`] built it): kernel weight **bits**, grid,
+/// stride, layout, solver, folding, and — for result signatures — the
+/// [`SpectrumRequest`]. Plan signatures additionally pin the resolved
+/// worker count (a plan built for 1 thread partitions differently than one
+/// built for 8; results are invariant, plans are not).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Signature {
+    /// 128-bit FNV-1a content digest of the weight bit patterns.
+    weights: [u64; 2],
+    weight_len: usize,
+    c_out: usize,
+    c_in: usize,
+    kh: usize,
+    kw: usize,
+    anchor: (usize, usize),
+    n: usize,
+    m: usize,
+    stride: usize,
+    layout: BlockLayout,
+    solver: BlockSolver,
+    folding: Fold,
+    /// `Some(request)` for result signatures, `None` for plan signatures.
+    request: Option<SpectrumRequest>,
+    /// Resolved worker count for plan signatures, 0 for result signatures
+    /// (values are identical no matter how many workers solved them).
+    threads: usize,
+}
+
+impl Signature {
+    fn common(kernel: &ConvKernel, n: usize, m: usize, stride: usize, opts: &LfaOptions) -> Self {
+        Signature {
+            weights: fnv1a_u64s2(kernel.data.iter().map(|v| v.to_bits())),
+            weight_len: kernel.data.len(),
+            c_out: kernel.c_out,
+            c_in: kernel.c_in,
+            kh: kernel.kh,
+            kw: kernel.kw,
+            anchor: kernel.anchor,
+            n,
+            m,
+            stride,
+            layout: opts.layout,
+            solver: opts.solver,
+            folding: opts.folding,
+            request: None,
+            threads: 0,
+        }
+    }
+
+    /// Per-frequency rank of the signed configuration: `TopK(k)` requests
+    /// are normalized to their clamped `k` so equivalent requests —
+    /// `TopK(rank)` and any `TopK(k > rank)` run the identical sweep —
+    /// share one cache entry instead of storing duplicate values.
+    fn rank(&self) -> usize {
+        self.c_out.min(self.stride * self.stride * self.c_in)
+    }
+
+    fn normalized(request: SpectrumRequest, rank: usize) -> SpectrumRequest {
+        match request {
+            SpectrumRequest::Full => SpectrumRequest::Full,
+            SpectrumRequest::TopK(_) => SpectrumRequest::TopK(request.values_per_freq(rank)),
+        }
+    }
+
+    /// Signature of the spectrum `request` computes for `kernel` on an
+    /// `n×m` fine grid at `stride` under `opts`. Thread count is
+    /// deliberately excluded: the values do not depend on it. Top-k
+    /// requests are normalized to the clamped `k` (see [`Self::rank`]).
+    pub fn result(
+        kernel: &ConvKernel,
+        n: usize,
+        m: usize,
+        stride: usize,
+        opts: &LfaOptions,
+        request: SpectrumRequest,
+    ) -> Self {
+        let common = Self::common(kernel, n, m, stride, opts);
+        Signature { request: Some(Self::normalized(request, common.rank())), ..common }
+    }
+
+    /// Signature of the [`SpectralPlan`] `opts` would build (thread count
+    /// resolved, so `0 = auto` and the explicit core count coincide).
+    pub fn plan(kernel: &ConvKernel, n: usize, m: usize, stride: usize, opts: &LfaOptions) -> Self {
+        Signature {
+            threads: super::resolve_threads(opts.threads),
+            ..Self::common(kernel, n, m, stride, opts)
+        }
+    }
+
+    /// Derive the **result** signature for `request` from any signature
+    /// of the same content. The weight digest is reused, not re-hashed —
+    /// streaming a big layer's tensor through both FNV streams is the
+    /// dominant cost of a repeat lookup, so paths that already hold a
+    /// plan signature derive instead of recomputing. Top-k requests are
+    /// normalized exactly as [`Self::result`] does.
+    pub fn for_request(&self, request: SpectrumRequest) -> Signature {
+        Signature { request: Some(Self::normalized(request, self.rank())), threads: 0, ..*self }
+    }
+
+    /// Derive the **plan** signature (worker count resolved, request
+    /// cleared) from any signature of the same content — no re-hash.
+    pub fn for_plan(&self, threads: usize) -> Signature {
+        Signature { request: None, threads: super::resolve_threads(threads), ..*self }
+    }
+}
+
+struct ResultEntry {
+    spectrum: Arc<Spectrum>,
+    bytes: usize,
+    last_used: u64,
+}
+
+struct PlanEntry {
+    plan: Arc<SpectralPlan>,
+    last_used: u64,
+}
+
+struct Inner {
+    results: HashMap<Signature, ResultEntry>,
+    /// Recency index over `results`: LRU tick → key. Ticks are unique
+    /// (monotone, bumped under the mutex), so eviction pops the smallest
+    /// tick in `O(log n)` instead of scanning every entry — a large
+    /// insert that evicts many small entries stays cheap while every
+    /// submission path waits on this mutex.
+    recency: BTreeMap<u64, Signature>,
+    plans: HashMap<Signature, PlanEntry>,
+    /// Total bytes held by `results` entries.
+    bytes: usize,
+    /// Monotone LRU clock: bumped on every touch.
+    tick: u64,
+}
+
+/// Point-in-time cache counters ([`SpectralCache::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Result-cache lookups that returned a spectrum.
+    pub hits: u64,
+    /// Result-cache lookups that found nothing.
+    pub misses: u64,
+    /// Result entries evicted to stay under the byte budget.
+    pub evictions: u64,
+    /// Plan-cache lookups that reused a planned object.
+    pub plan_hits: u64,
+    /// Plan-cache lookups that had to plan.
+    pub plan_misses: u64,
+    /// Result entries currently held.
+    pub entries: usize,
+    /// Plans currently held.
+    pub plan_entries: usize,
+    /// Bytes currently held by result entries.
+    pub bytes: usize,
+    /// Result-cache byte budget.
+    pub capacity: usize,
+}
+
+/// Content-addressed result & plan cache — see the module docs. All
+/// methods are `&self` and thread-safe; share one instance via `Arc`.
+pub struct SpectralCache {
+    max_bytes: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    plan_hits: AtomicU64,
+    plan_misses: AtomicU64,
+}
+
+impl SpectralCache {
+    /// Cache with the default byte budget ([`DEFAULT_CACHE_BYTES`]).
+    pub fn new() -> Self {
+        Self::with_budget(DEFAULT_CACHE_BYTES)
+    }
+
+    /// [`Self::with_budget`] with the `0 = default` convention shared by
+    /// the CLI's `--cache-bytes` and the coordinator's
+    /// [`crate::coordinator::SchedulerConfig`] `cache_bytes` field: `0`
+    /// means [`DEFAULT_CACHE_BYTES`].
+    pub fn with_budget_or_default(max_bytes: usize) -> Self {
+        Self::with_budget(if max_bytes == 0 { DEFAULT_CACHE_BYTES } else { max_bytes })
+    }
+
+    /// Cache whose result entries are bounded by `max_bytes` (LRU
+    /// eviction). A spectrum larger than the whole budget is simply not
+    /// cached.
+    pub fn with_budget(max_bytes: usize) -> Self {
+        Self {
+            max_bytes,
+            inner: Mutex::new(Inner {
+                results: HashMap::new(),
+                recency: BTreeMap::new(),
+                plans: HashMap::new(),
+                bytes: 0,
+                tick: 0,
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            plan_hits: AtomicU64::new(0),
+            plan_misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Approximate heap bytes a cached spectrum occupies (values buffer +
+    /// entry bookkeeping) — the unit of the byte budget.
+    fn entry_bytes(spectrum: &Spectrum) -> usize {
+        spectrum.values.len() * std::mem::size_of::<f64>()
+            + std::mem::size_of::<Spectrum>()
+            + std::mem::size_of::<Signature>()
+            + std::mem::size_of::<ResultEntry>()
+    }
+
+    /// Look a result up. A hit bumps the entry's LRU position and returns
+    /// the shared spectrum — zero per-frequency work, zero allocation.
+    pub fn get(&self, key: &Signature) -> Option<Arc<Spectrum>> {
+        let mut guard = self.inner.lock().expect("cache poisoned");
+        let inner = &mut *guard;
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.results.get_mut(key) {
+            Some(e) => {
+                inner.recency.remove(&e.last_used);
+                inner.recency.insert(tick, *key);
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::clone(&e.spectrum))
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) a result. Evicts least-recently-used entries
+    /// until the byte budget holds (each eviction `O(log n)` through the
+    /// recency index); returns how many were evicted. A spectrum that
+    /// alone exceeds the budget is not stored.
+    pub fn insert(&self, key: Signature, spectrum: Arc<Spectrum>) -> u64 {
+        let bytes = Self::entry_bytes(&spectrum);
+        let mut guard = self.inner.lock().expect("cache poisoned");
+        let inner = &mut *guard;
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(old) = inner.results.remove(&key) {
+            inner.recency.remove(&old.last_used);
+            inner.bytes -= old.bytes;
+        }
+        if bytes > self.max_bytes {
+            return 0;
+        }
+        let mut evicted = 0u64;
+        while inner.bytes + bytes > self.max_bytes {
+            let (_, lru) =
+                inner.recency.pop_first().expect("nonzero bytes imply an evictable entry");
+            let e = inner.results.remove(&lru).expect("recency index tracks results");
+            inner.bytes -= e.bytes;
+            evicted += 1;
+        }
+        inner.bytes += bytes;
+        inner.recency.insert(tick, key);
+        inner.results.insert(key, ResultEntry { spectrum, bytes, last_used: tick });
+        self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        evicted
+    }
+
+    /// Look a plan up by signature (bumping its LRU position). Counts a
+    /// plan hit or miss.
+    pub fn plan_lookup(&self, key: &Signature) -> Option<Arc<SpectralPlan>> {
+        let mut inner = self.inner.lock().expect("cache poisoned");
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.plans.get_mut(key) {
+            Some(e) => {
+                e.last_used = tick;
+                self.plan_hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::clone(&e.plan))
+            }
+            None => {
+                self.plan_misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Store a freshly built plan. If another thread won a build race for
+    /// the same signature, the incumbent is kept (so every caller shares
+    /// one workspace pool) — the returned `Arc` is the plan to use.
+    pub fn plan_store(&self, key: Signature, plan: Arc<SpectralPlan>) -> Arc<SpectralPlan> {
+        let mut inner = self.inner.lock().expect("cache poisoned");
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(e) = inner.plans.get_mut(&key) {
+            e.last_used = tick;
+            return Arc::clone(&e.plan);
+        }
+        while inner.plans.len() >= PLAN_CACHE_CAP {
+            let lru = inner
+                .plans
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+                .expect("len >= cap > 0");
+            inner.plans.remove(&lru);
+        }
+        inner.plans.insert(key, PlanEntry { plan: Arc::clone(&plan), last_used: tick });
+        plan
+    }
+
+    /// Get-or-build the plan for `kernel` on an `n×m` fine grid at
+    /// `stride` under `opts`: plans with equal signatures are shared, so
+    /// repeat jobs skip the phase-table construction *and* reuse the
+    /// plan's warmed workspace pool. The build happens outside the cache
+    /// lock (concurrent misses may race to build; one winner is kept).
+    pub fn plan_for(
+        &self,
+        kernel: &ConvKernel,
+        n: usize,
+        m: usize,
+        stride: usize,
+        opts: LfaOptions,
+    ) -> Arc<SpectralPlan> {
+        let key = Signature::plan(kernel, n, m, stride, &opts);
+        if let Some(plan) = self.plan_lookup(&key) {
+            return plan;
+        }
+        let plan = Arc::new(SpectralPlan::with_stride(kernel, n, m, stride, opts));
+        self.plan_store(key, plan)
+    }
+
+    /// Drop every cached result and plan (counters are kept — they record
+    /// lifetime traffic, not current contents).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().expect("cache poisoned");
+        inner.results.clear();
+        inner.recency.clear();
+        inner.plans.clear();
+        inner.bytes = 0;
+    }
+
+    /// Current counters and occupancy.
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().expect("cache poisoned");
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            plan_hits: self.plan_hits.load(Ordering::Relaxed),
+            plan_misses: self.plan_misses.load(Ordering::Relaxed),
+            entries: inner.results.len(),
+            plan_entries: inner.plans.len(),
+            bytes: inner.bytes,
+            capacity: self.max_bytes,
+        }
+    }
+}
+
+impl Default for SpectralCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::Pcg64;
+
+    fn kernel(seed: u64) -> ConvKernel {
+        let mut rng = Pcg64::seeded(seed);
+        ConvKernel::random_he(3, 2, 3, 3, &mut rng)
+    }
+
+    fn spectrum_of(plan: &SpectralPlan) -> Arc<Spectrum> {
+        Arc::new(plan.execute())
+    }
+
+    #[test]
+    fn signature_is_content_addressed() {
+        let k = kernel(1);
+        let opts = LfaOptions::default();
+        let a = Signature::result(&k, 8, 8, 1, &opts, SpectrumRequest::Full);
+        let b = Signature::result(&k.clone(), 8, 8, 1, &opts, SpectrumRequest::Full);
+        assert_eq!(a, b, "equal content, equal signature");
+        // Any single axis changing changes the signature.
+        let mut k2 = k.clone();
+        k2.data[0] += 1e-16;
+        assert_ne!(Signature::result(&k2, 8, 8, 1, &opts, SpectrumRequest::Full), a);
+        assert_ne!(Signature::result(&k, 8, 4, 1, &opts, SpectrumRequest::Full), a);
+        assert_ne!(Signature::result(&k, 8, 8, 2, &opts, SpectrumRequest::Full), a);
+        assert_ne!(Signature::result(&k, 8, 8, 1, &opts, SpectrumRequest::TopK(2)), a);
+        let off = LfaOptions { folding: Fold::Off, ..opts };
+        assert_ne!(Signature::result(&k, 8, 8, 1, &off, SpectrumRequest::Full), a);
+        let gram = LfaOptions { solver: BlockSolver::GramEigen, ..opts };
+        assert_ne!(Signature::result(&k, 8, 8, 1, &gram, SpectrumRequest::Full), a);
+        let planar = LfaOptions { layout: BlockLayout::PlanarStrided, ..opts };
+        assert_ne!(Signature::result(&k, 8, 8, 1, &planar, SpectrumRequest::Full), a);
+        // Thread count does NOT change a result signature …
+        let t8 = LfaOptions { threads: 8, ..opts };
+        assert_eq!(Signature::result(&k, 8, 8, 1, &t8, SpectrumRequest::Full), a);
+        // … but does change a plan signature (and 0 = auto resolves).
+        let p1 = Signature::plan(&k, 8, 8, 1, &LfaOptions { threads: 1, ..opts });
+        let p8 = Signature::plan(&k, 8, 8, 1, &t8);
+        assert_ne!(p1, p8);
+        let auto = Signature::plan(&k, 8, 8, 1, &LfaOptions { threads: 0, ..opts });
+        let explicit = Signature::plan(
+            &k,
+            8,
+            8,
+            1,
+            &LfaOptions { threads: crate::engine::resolve_threads(0), ..opts },
+        );
+        assert_eq!(auto, explicit);
+        // Derived signatures equal directly computed ones (no re-hash).
+        assert_eq!(auto.for_request(SpectrumRequest::Full), a);
+        assert_eq!(a.for_plan(opts.threads), auto);
+        assert_eq!(a.for_request(SpectrumRequest::TopK(2)).for_request(SpectrumRequest::Full), a);
+        // Equivalent top-k requests share one key: k clamps to the rank
+        // (min(c_out, c_in) = 2 here), so TopK(2), TopK(3) and TopK(9)
+        // all run the identical sweep and must hit the same entry.
+        let top2 = Signature::result(&k, 8, 8, 1, &opts, SpectrumRequest::TopK(2));
+        assert_eq!(Signature::result(&k, 8, 8, 1, &opts, SpectrumRequest::TopK(3)), top2);
+        assert_eq!(a.for_request(SpectrumRequest::TopK(9)), top2);
+        assert_ne!(Signature::result(&k, 8, 8, 1, &opts, SpectrumRequest::TopK(1)), top2);
+    }
+
+    #[test]
+    fn get_insert_roundtrip_and_counters() {
+        let cache = SpectralCache::new();
+        let k = kernel(2);
+        let opts = LfaOptions { threads: 1, ..Default::default() };
+        let key = Signature::result(&k, 6, 6, 1, &opts, SpectrumRequest::Full);
+        assert!(cache.get(&key).is_none());
+        let plan = SpectralPlan::new(&k, 6, 6, opts);
+        let sp = spectrum_of(&plan);
+        cache.insert(key, Arc::clone(&sp));
+        let hit = cache.get(&key).expect("hit");
+        assert!(Arc::ptr_eq(&hit, &sp), "hit returns the shared spectrum");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 1, 0));
+        assert_eq!(s.entries, 1);
+        assert!(s.bytes > 0 && s.bytes <= s.capacity);
+    }
+
+    #[test]
+    fn lru_evicts_under_byte_budget() {
+        let k = kernel(3);
+        let opts = LfaOptions { threads: 1, ..Default::default() };
+        let plan = SpectralPlan::new(&k, 4, 4, opts);
+        let sp = spectrum_of(&plan);
+        let one = SpectralCache::entry_bytes(&sp);
+        // Room for exactly two entries. Keys differ by grid size (the
+        // cache never validates an entry against its key, so inserting
+        // the same spectrum under each key keeps the sizes equal).
+        let cache = SpectralCache::with_budget(2 * one);
+        let keys: Vec<Signature> = (0..3)
+            .map(|i| Signature::result(&k, 4, 4 + i, 1, &opts, SpectrumRequest::Full))
+            .collect();
+        cache.insert(keys[0], Arc::clone(&sp));
+        cache.insert(keys[1], Arc::clone(&sp));
+        // Touch key 0 so key 1 is the LRU …
+        assert!(cache.get(&keys[0]).is_some());
+        // … and inserting a third evicts key 1, not key 0.
+        assert_eq!(cache.insert(keys[2], Arc::clone(&sp)), 1);
+        assert!(cache.get(&keys[0]).is_some());
+        assert!(cache.get(&keys[1]).is_none(), "LRU entry evicted");
+        assert!(cache.get(&keys[2]).is_some());
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.entries, 2);
+        // An entry bigger than the whole budget is not stored.
+        let tiny = SpectralCache::with_budget(one - 1);
+        assert_eq!(tiny.insert(keys[0], Arc::clone(&sp)), 0);
+        assert!(tiny.get(&keys[0]).is_none());
+    }
+
+    #[test]
+    fn plan_cache_shares_planned_objects() {
+        let cache = SpectralCache::new();
+        let k = kernel(4);
+        let opts = LfaOptions { threads: 1, ..Default::default() };
+        let a = cache.plan_for(&k, 8, 8, 1, opts);
+        let b = cache.plan_for(&k, 8, 8, 1, opts);
+        assert!(Arc::ptr_eq(&a, &b), "equal plan signatures share one plan");
+        let c = cache.plan_for(&k, 8, 8, 2, opts);
+        assert!(!Arc::ptr_eq(&a, &c), "different stride, different plan");
+        let s = cache.stats();
+        assert_eq!((s.plan_hits, s.plan_misses, s.plan_entries), (1, 2, 2));
+        // Shared plans execute identically to fresh ones.
+        assert_eq!(a.execute().values, SpectralPlan::new(&k, 8, 8, opts).execute().values);
+    }
+
+    #[test]
+    fn clear_empties_contents_but_keeps_counters() {
+        let cache = SpectralCache::new();
+        let k = kernel(5);
+        let opts = LfaOptions { threads: 1, ..Default::default() };
+        let key = Signature::result(&k, 4, 4, 1, &opts, SpectrumRequest::Full);
+        let plan = cache.plan_for(&k, 4, 4, 1, opts);
+        cache.insert(key, spectrum_of(&plan));
+        assert!(cache.get(&key).is_some());
+        cache.clear();
+        assert!(cache.get(&key).is_none());
+        let s = cache.stats();
+        assert_eq!((s.entries, s.plan_entries, s.bytes), (0, 0, 0));
+        assert!(s.hits >= 1 && s.plan_misses >= 1, "counters survive clear");
+    }
+}

@@ -37,6 +37,7 @@
 //! coordinator's tile workers are all thin wrappers over this module.
 
 pub mod backend;
+pub mod cache;
 pub mod model_plan;
 pub mod plan;
 pub mod workspace;
@@ -44,7 +45,8 @@ pub mod workspace;
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
 pub use backend::{NativeSerial, NativeThreaded, SpectralBackend};
-pub use model_plan::{LayerSpectrum, ModelPlan, ModelSpectra, ModelTopK};
+pub use cache::{CacheStats, Signature, SpectralCache, DEFAULT_CACHE_BYTES};
+pub use model_plan::{CachedExecution, LayerSpectrum, ModelPlan, ModelSpectra, ModelTopK};
 pub use plan::{SpectralPlan, TopKResult};
 pub use workspace::{Workspace, WorkspacePool};
 
@@ -57,7 +59,7 @@ pub use workspace::{Workspace, WorkspacePool};
 /// right mode when only the extreme values are consumed (spectral-norm
 /// clipping, Lipschitz bounds, low-rank compression). `k` is clamped to
 /// the per-frequency rank.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SpectrumRequest {
     /// Every singular value per frequency (the fused Jacobi/Gram path).
     Full,

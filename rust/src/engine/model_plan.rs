@@ -27,6 +27,7 @@
 //! subcommand drives one directly.
 
 use super::backend::SpectralBackend;
+use super::cache::{Signature, SpectralCache};
 use super::plan::SpectralPlan;
 use super::workspace::{Workspace, WorkspacePool};
 use super::SpectrumRequest;
@@ -43,7 +44,11 @@ use std::sync::Arc;
 /// One planned layer of a [`ModelPlan`].
 struct LayerEntry {
     name: String,
-    plan: SpectralPlan,
+    plan: Arc<SpectralPlan>,
+    /// This layer's plan signature when the model was built against a
+    /// [`SpectralCache`] (`None` for plain builds) — result signatures
+    /// derive from it without re-hashing the weight tensor.
+    plan_key: Option<Signature>,
     /// Start of this layer's values in the whole-model buffer. Offsets are
     /// assigned in group-major order so the batched sweep writes the buffer
     /// front to back.
@@ -68,10 +73,12 @@ struct Span {
 }
 
 /// The spectrum of one layer, as produced by a whole-model execution.
+/// The spectrum is shared (`Arc`) so cached executions can hand the same
+/// buffer to every consumer without copying.
 #[derive(Clone, Debug)]
 pub struct LayerSpectrum {
     pub name: String,
-    pub spectrum: Spectrum,
+    pub spectrum: Arc<Spectrum>,
 }
 
 /// Per-layer spectra of a whole model, plus aggregate views.
@@ -98,6 +105,25 @@ pub struct ModelTopK {
     pub iterations: u64,
 }
 
+/// Outcome of a cache-mediated whole-model execution
+/// ([`ModelPlan::execute_cached`] / [`ModelPlan::top_k_all_cached`]):
+/// the spectra plus what the cache saved.
+#[derive(Clone, Debug)]
+pub struct CachedExecution {
+    /// Per-layer spectra, original model order (cache hits share their
+    /// buffer with the cache; recomputed layers were inserted into it).
+    pub spectra: ModelSpectra,
+    /// Solver iteration steps spent on recomputed layers (0 for full
+    /// spectra and for all-hit sweeps).
+    pub iterations: u64,
+    /// Layers served straight from the result cache.
+    pub cache_hits: usize,
+    /// Block SVDs actually performed — 0 when every layer hit.
+    pub freqs_solved: usize,
+    /// Result-cache evictions triggered by storing this sweep's results.
+    pub evictions: u64,
+}
+
 impl ModelSpectra {
     /// Total singular values across all layers.
     pub fn num_values(&self) -> usize {
@@ -109,8 +135,14 @@ impl ModelSpectra {
         self.layers.iter().map(|l| l.spectrum.sigma_max()).fold(0.0, f64::max)
     }
 
-    /// Smallest singular value anywhere in the model.
+    /// Smallest singular value anywhere in the model. NaN when any layer
+    /// holds a partial (top-k) spectrum — the retained extremes do not
+    /// span the operator's smallest value (`f64::min` would silently drop
+    /// the per-layer NaNs, so the guard lives here too).
     pub fn sigma_min(&self) -> f64 {
+        if self.layers.iter().any(|l| l.spectrum.is_partial()) {
+            return f64::NAN;
+        }
         self.layers.iter().map(|l| l.spectrum.sigma_min()).fold(f64::INFINITY, f64::min)
     }
 
@@ -148,6 +180,28 @@ impl ModelPlan {
     /// `opts.threads` drives the whole-model sweep; the per-layer plans are
     /// built serial (the model plan owns the parallelism).
     pub fn build(model: &ModelConfig, opts: LfaOptions) -> Result<ModelPlan> {
+        Self::build_with_cache(model, opts, None)
+    }
+
+    /// [`Self::build`] drawing layer plans from (and populating) a
+    /// [`SpectralCache`]'s plan cache: layers whose plan signature —
+    /// weight bits, geometry, options — matches a cached plan reuse it
+    /// (phase tables *and* warmed workspace pool) instead of re-planning.
+    /// Rebuilding the same model (the repeat-audit loop) re-plans nothing;
+    /// after a training step only the mutated layers re-plan.
+    pub fn build_cached(
+        model: &ModelConfig,
+        opts: LfaOptions,
+        cache: &SpectralCache,
+    ) -> Result<ModelPlan> {
+        Self::build_with_cache(model, opts, Some(cache))
+    }
+
+    fn build_with_cache(
+        model: &ModelConfig,
+        opts: LfaOptions,
+        cache: Option<&SpectralCache>,
+    ) -> Result<ModelPlan> {
         if model.layers.is_empty() {
             bail!("model {:?} has no layers to plan", model.name);
         }
@@ -165,44 +219,90 @@ impl ModelPlan {
             }
             shapes.push((l.c_out, l.stride * l.stride * l.c_in, l.kh * l.kw));
         }
-        // Group layers with equal block shape. Solver and layout are uniform
-        // across one plan's options, so the (c_out, c_in, solver, layout)
-        // batching key reduces to the block shape here; tap counts may
-        // differ within a group and the pool is sized for the largest.
+        // Per-layer plans are built serial; the model plan owns the
+        // parallelism. Cached plans are looked up by the plan signature —
+        // computed once per layer (it hashes the whole weight tensor
+        // through both FNV streams) and reused when freshly built plans
+        // are stored below.
+        let layer_opts = LfaOptions { threads: 1, ..opts };
+        let kernels: Vec<_> = model.layers.iter().map(|l| l.materialize(model.seed)).collect();
+        let plan_keys: Vec<Option<Signature>> = model
+            .layers
+            .iter()
+            .zip(&kernels)
+            .map(|(l, k)| {
+                cache.map(|_| Signature::plan(k, l.height, l.width, l.stride, &layer_opts))
+            })
+            .collect();
+        let mut plans: Vec<Option<Arc<SpectralPlan>>> = plan_keys
+            .iter()
+            .map(|key| match (cache, key) {
+                (Some(c), Some(k)) => c.plan_lookup(k),
+                _ => None,
+            })
+            .collect();
+        // Group the *missing* layers by block shape. Solver and layout are
+        // uniform across one plan's options, so the (c_out, c_in, solver,
+        // layout) batching key reduces to the block shape here; tap counts
+        // may differ within a group and the pool is sized for the largest.
+        // (Cached plans arrive with their own — already shared — pools.)
+        let missing: Vec<usize> = (0..plans.len()).filter(|&i| plans[i].is_none()).collect();
         let mut keys: Vec<(usize, usize)> = Vec::new();
-        let mut groups: Vec<Vec<usize>> = Vec::new();
-        for (i, &(rows, cols, _)) in shapes.iter().enumerate() {
+        let mut fresh_groups: Vec<Vec<usize>> = Vec::new();
+        for &i in &missing {
+            let (rows, cols, _) = shapes[i];
             match keys.iter().position(|&k| k == (rows, cols)) {
-                Some(g) => groups[g].push(i),
+                Some(g) => fresh_groups[g].push(i),
                 None => {
                     keys.push((rows, cols));
-                    groups.push(vec![i]);
+                    fresh_groups.push(vec![i]);
                 }
             }
         }
-        let mut group_of = vec![0usize; model.layers.len()];
-        let mut pools: Vec<Arc<WorkspacePool>> = Vec::with_capacity(groups.len());
-        for (g, members) in groups.iter().enumerate() {
+        for (g, members) in fresh_groups.iter().enumerate() {
             let (rows, cols) = keys[g];
             let ntaps = members.iter().map(|&i| shapes[i].2).max().unwrap_or(1);
-            pools.push(Arc::new(WorkspacePool::for_block(rows, cols, ntaps)));
+            let pool = Arc::new(WorkspacePool::for_block(rows, cols, ntaps));
             for &i in members {
-                group_of[i] = g;
+                let l = &model.layers[i];
+                let plan = Arc::new(SpectralPlan::with_shared_pool(
+                    &kernels[i],
+                    l.height,
+                    l.width,
+                    l.stride,
+                    layer_opts,
+                    Arc::clone(&pool),
+                ));
+                let plan = match (cache, &plan_keys[i]) {
+                    (Some(c), Some(key)) => c.plan_store(*key, plan),
+                    _ => plan,
+                };
+                plans[i] = Some(plan);
             }
         }
-        // Build the per-layer plans against the shared pools.
-        let layer_opts = LfaOptions { threads: 1, ..opts };
-        let mut plans: Vec<SpectralPlan> = Vec::with_capacity(model.layers.len());
-        for (i, l) in model.layers.iter().enumerate() {
-            let kernel = l.materialize(model.seed);
-            plans.push(SpectralPlan::with_shared_pool(
-                &kernel,
-                l.height,
-                l.width,
-                l.stride,
-                layer_opts,
-                Arc::clone(&pools[group_of[i]]),
-            ));
+        let plans: Vec<Arc<SpectralPlan>> =
+            plans.into_iter().map(|p| p.expect("every layer planned above")).collect();
+        // Equal-shape groups = workspace-pool identity: freshly built
+        // layers share the pool created above, cache-reused layers share
+        // whatever pool they were first built with. Same pool ⇒ same block
+        // shape (the plan constructor asserts coverage), so the batched
+        // sweep's checkout-per-group-transition stays valid.
+        let mut pool_ids: Vec<*const WorkspacePool> = Vec::new();
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        let mut group_of = vec![0usize; plans.len()];
+        for (i, p) in plans.iter().enumerate() {
+            let id = Arc::as_ptr(p.workspace_pool());
+            match pool_ids.iter().position(|&q| q == id) {
+                Some(g) => {
+                    groups[g].push(i);
+                    group_of[i] = g;
+                }
+                None => {
+                    pool_ids.push(id);
+                    group_of[i] = groups.len();
+                    groups.push(vec![i]);
+                }
+            }
         }
         // Assign buffer offsets in group-major order: one batched sweep per
         // group writes the whole-model buffer front to back.
@@ -221,6 +321,7 @@ impl ModelPlan {
             layers.push(LayerEntry {
                 name: model.layers[i].name.clone(),
                 plan,
+                plan_key: plan_keys[i],
                 offset: offsets[i],
                 group: group_of[i],
             });
@@ -253,6 +354,20 @@ impl ModelPlan {
     /// The planned pipeline of layer `i`.
     pub fn layer_plan(&self, i: usize) -> &SpectralPlan {
         &self.layers[i].plan
+    }
+
+    /// The planned pipeline of layer `i`, shared — the `Arc` a
+    /// [`SpectralCache`] plan entry would hold.
+    pub fn layer_plan_shared(&self, i: usize) -> &Arc<SpectralPlan> {
+        &self.layers[i].plan
+    }
+
+    /// The plan signature of layer `i` when this model was built against
+    /// a [`SpectralCache`] ([`Self::build_cached`]); `None` for plain
+    /// builds. Callers derive result signatures from it
+    /// ([`Signature::for_request`]) instead of re-hashing the weights.
+    pub fn layer_plan_signature(&self, i: usize) -> Option<&Signature> {
+        self.layers[i].plan_key.as_ref()
     }
 
     /// Start of layer `i`'s values in the whole-model buffer.
@@ -544,16 +659,10 @@ impl ModelPlan {
             .map(|(i, l)| {
                 let p = &l.plan;
                 let len = p.request_values_len(request);
+                let slice = values[offsets[i]..offsets[i] + len].to_vec();
                 LayerSpectrum {
                     name: l.name.clone(),
-                    spectrum: Spectrum {
-                        n: p.coarse_rows(),
-                        m: p.coarse_cols(),
-                        c_out: p.block_shape().0,
-                        c_in: p.block_shape().1,
-                        per_freq: request.values_per_freq(p.rank()),
-                        values: values[offsets[i]..offsets[i] + len].to_vec(),
-                    },
+                    spectrum: Arc::new(p.spectrum_from_values(request, slice)),
                 }
             })
             .collect();
@@ -571,6 +680,102 @@ impl ModelPlan {
         let mut values = vec![0.0f64; self.request_values_len(request)];
         let iterations = self.execute_request_into(request, &mut values);
         ModelTopK { spectra: self.spectra_from_flat_request(request, &values), k, iterations }
+    }
+
+    /// Execute `request` for every layer **through a result cache**: a
+    /// layer whose signature (weight bits + geometry + options + request)
+    /// matches a cached spectrum is served from it — zero frequencies
+    /// re-solved — and only the missing layers execute. The repeat-audit
+    /// shape: the first sweep populates the cache (one batched sweep,
+    /// identical to [`Self::execute_request_into`]); every following sweep
+    /// of an unchanged model is pure lookup. After a weight mutation
+    /// (training-loop clipping), only the mutated layers recompute.
+    pub fn execute_request_cached(
+        &self,
+        request: SpectrumRequest,
+        cache: &SpectralCache,
+    ) -> CachedExecution {
+        // Result keys derive from the stored plan signatures when this
+        // model was built cached — one weight-tensor hash per layer per
+        // build, not one per sweep.
+        let keys: Vec<Signature> = self
+            .layers
+            .iter()
+            .map(|l| match &l.plan_key {
+                Some(ps) => ps.for_request(request),
+                None => l.plan.result_signature(request),
+            })
+            .collect();
+        let mut found: Vec<Option<Arc<Spectrum>>> = keys.iter().map(|k| cache.get(k)).collect();
+        let miss_count = found.iter().filter(|f| f.is_none()).count();
+        let cache_hits = self.layers.len() - miss_count;
+        if miss_count == self.layers.len() {
+            // All cold: one batched group-major sweep, exactly the
+            // uncached path, then every layer's slice enters the cache —
+            // and the assembled spectra ship as-is, no rebuild.
+            let mut values = vec![0.0f64; self.request_values_len(request)];
+            let iterations = self.execute_request_into(request, &mut values);
+            let spectra = self.spectra_from_flat_request(request, &values);
+            let mut evictions = 0u64;
+            let mut freqs_solved = 0usize;
+            for (i, layer) in spectra.layers.iter().enumerate() {
+                evictions += cache.insert(keys[i], Arc::clone(&layer.spectrum));
+                freqs_solved += self.layers[i].plan.solved_freqs();
+            }
+            return CachedExecution { spectra, iterations, cache_hits: 0, freqs_solved, evictions };
+        }
+        // Mixed (or all-hit): recompute only the missing layers (each
+        // with the model's worker budget — misses are few in repeat
+        // traffic).
+        let mut iterations = 0u64;
+        let mut evictions = 0u64;
+        let mut freqs_solved = 0usize;
+        for (i, l) in self.layers.iter().enumerate() {
+            if found[i].is_some() {
+                continue;
+            }
+            let p = &l.plan;
+            let mut values = vec![0.0f64; p.request_values_len(request)];
+            match request {
+                SpectrumRequest::Full => p.execute_into_threads(self.threads, &mut values),
+                SpectrumRequest::TopK(k) => {
+                    iterations += p.execute_topk_into_threads(k, self.threads, true, &mut values);
+                }
+            }
+            let sp = Arc::new(p.spectrum_from_values(request, values));
+            evictions += cache.insert(keys[i], Arc::clone(&sp));
+            freqs_solved += p.solved_freqs();
+            found[i] = Some(sp);
+        }
+        let layers = self
+            .layers
+            .iter()
+            .zip(found)
+            .map(|(l, sp)| LayerSpectrum {
+                name: l.name.clone(),
+                spectrum: sp.expect("every layer either hit or was recomputed"),
+            })
+            .collect();
+        CachedExecution {
+            spectra: ModelSpectra { model: self.name.clone(), layers },
+            iterations,
+            cache_hits,
+            freqs_solved,
+            evictions,
+        }
+    }
+
+    /// Full-spectrum [`Self::execute`] through a result cache — see
+    /// [`Self::execute_request_cached`].
+    pub fn execute_cached(&self, cache: &SpectralCache) -> CachedExecution {
+        self.execute_request_cached(SpectrumRequest::Full, cache)
+    }
+
+    /// [`Self::top_k_all`] through a result cache: partial spectra are
+    /// cached under their `TopK(k)` signature, so repeated Lipschitz
+    /// screens and clip sweeps of unchanged layers cost a lookup.
+    pub fn top_k_all_cached(&self, k: usize, cache: &SpectralCache) -> CachedExecution {
+        self.execute_request_cached(SpectrumRequest::TopK(k), cache)
     }
 
     /// Network Lipschitz composition bound (product of per-layer spectral
@@ -617,6 +822,18 @@ impl ModelPlan {
     /// training loop most layers are below the cap most steps, so this is
     /// where the top-k engine pays off.
     pub fn clip_all(&self, cap: f64) -> Result<Vec<ClipResult>> {
+        self.clip_all_inner(cap, None)
+    }
+
+    /// [`Self::clip_all`] with the **top-1 screening sweep served through
+    /// a result cache**: in a training loop, layers whose weights haven't
+    /// changed since the last step screen from cache (zero frequencies
+    /// re-solved) and only the mutated layers run the Krylov sweep.
+    pub fn clip_all_cached(&self, cap: f64, cache: &SpectralCache) -> Result<Vec<ClipResult>> {
+        self.clip_all_inner(cap, Some(cache))
+    }
+
+    fn clip_all_inner(&self, cap: f64, cache: Option<&SpectralCache>) -> Result<Vec<ClipResult>> {
         for l in &self.layers {
             if l.plan.stride() != 1 {
                 bail!(
@@ -627,11 +844,14 @@ impl ModelPlan {
                 );
             }
         }
-        let screen = self.top_k_all(1);
+        let screen = match cache {
+            Some(c) => self.top_k_all_cached(1, c).spectra,
+            None => self.top_k_all(1).spectra,
+        };
         Ok(self
             .layers
             .iter()
-            .zip(&screen.spectra.layers)
+            .zip(&screen.layers)
             .map(|(l, s)| {
                 let sigma_before = s.spectrum.sigma_max();
                 if sigma_before <= cap {

@@ -289,6 +289,38 @@ impl SpectralPlan {
         ki <= self.nc / 2 && (!self.row_self_paired(ki) || kj <= self.mc / 2)
     }
 
+    /// The folding mode the plan was built with.
+    pub fn folding(&self) -> Fold {
+        if self.fold {
+            Fold::Auto
+        } else {
+            Fold::Off
+        }
+    }
+
+    /// The options the plan was built with (threads as given, 0 = auto).
+    pub fn options(&self) -> LfaOptions {
+        LfaOptions {
+            layout: self.layout,
+            solver: self.solver,
+            threads: self.threads,
+            folding: self.folding(),
+        }
+    }
+
+    /// Content signature of the spectrum `request` computes on this plan —
+    /// the key [`crate::engine::SpectralCache`] addresses results by.
+    pub fn result_signature(&self, request: SpectrumRequest) -> crate::engine::Signature {
+        crate::engine::Signature::result(
+            &self.kernel,
+            self.n,
+            self.m,
+            self.stride,
+            &self.options(),
+            request,
+        )
+    }
+
     /// Singular values per frequency: `min(c_out, stride²·c_in)`.
     pub fn rank(&self) -> usize {
         self.rank
@@ -807,12 +839,28 @@ impl SpectralPlan {
 
     /// Package a flat top-k buffer as a partial [`Spectrum`].
     fn topk_spectrum(&self, k: usize, values: Vec<f64>) -> Spectrum {
+        self.spectrum_from_values(SpectrumRequest::TopK(k), values)
+    }
+
+    /// Package a flat values buffer produced by executing `request` on
+    /// this plan into a [`Spectrum`] carrying the plan's shape metadata
+    /// (coarse grid, block shape, values per frequency). Every path that
+    /// materializes a spectrum from raw values — direct execution,
+    /// `ModelPlan` assembly, the scheduler's job finish, the result
+    /// cache — routes through here, so the shape fields cannot drift
+    /// between them.
+    pub fn spectrum_from_values(&self, request: SpectrumRequest, values: Vec<f64>) -> Spectrum {
+        assert_eq!(
+            values.len(),
+            self.request_values_len(request),
+            "values buffer length mismatch"
+        );
         Spectrum {
             n: self.nc,
             m: self.mc,
             c_out: self.block_rows,
             c_in: self.block_cols,
-            per_freq: self.topk_per_freq(k),
+            per_freq: request.values_per_freq(self.rank),
             values,
         }
     }
@@ -1021,14 +1069,7 @@ impl SpectralPlan {
     pub fn execute(&self) -> Spectrum {
         let mut values = vec![0.0f64; self.values_len()];
         self.execute_into(&mut values);
-        Spectrum {
-            n: self.nc,
-            m: self.mc,
-            c_out: self.block_rows,
-            c_in: self.block_cols,
-            per_freq: self.rank,
-            values,
-        }
+        self.spectrum_from_values(SpectrumRequest::Full, values)
     }
 
     /// Full SVD with per-frequency factors `U_k, Σ_k, V_k` (the factor

@@ -11,6 +11,8 @@ pub mod plan;
 pub use plan::FftPlan;
 
 use crate::numeric::C64;
+use std::cell::RefCell;
+use std::rc::Rc;
 
 /// Direction of the transform.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -19,14 +21,49 @@ pub enum Direction {
     Inverse,
 }
 
-/// One-shot forward FFT of arbitrary length (plan cached internally per call).
-pub fn fft(data: &mut [C64]) {
-    FftPlan::new(data.len()).forward(data);
+/// Per-thread plan cache capacity. The one-shot entry points below juggle
+/// at most a handful of lengths per workload (grid rows/cols and their
+/// Bluestein inner lengths build plans recursively, not through here).
+const PLAN_CACHE_CAP: usize = 8;
+
+thread_local! {
+    /// Most-recently-used-first list of this thread's one-shot plans.
+    static PLANS: RefCell<Vec<Rc<FftPlan>>> = const { RefCell::new(Vec::new()) };
 }
 
-/// One-shot inverse FFT (normalized by `1/n`).
+/// The calling thread's plan for length `n`: built once, then reused by
+/// every one-shot transform of that length on this thread (move-to-front
+/// LRU, capacity [`PLAN_CACHE_CAP`]). Twiddle tables and bit-reversal (or
+/// the Bluestein chirp machinery) are *not* rebuilt per call — the fix for
+/// the old one-shot `fft` that planned on every invocation.
+fn thread_plan(n: usize) -> Rc<FftPlan> {
+    PLANS.with(|cell| {
+        let mut plans = cell.borrow_mut();
+        if let Some(pos) = plans.iter().position(|p| p.len() == n) {
+            let p = plans.remove(pos);
+            plans.insert(0, Rc::clone(&p));
+            return p;
+        }
+        let p = Rc::new(FftPlan::new(n));
+        plans.insert(0, Rc::clone(&p));
+        plans.truncate(PLAN_CACHE_CAP);
+        p
+    })
+}
+
+/// One-shot forward FFT of arbitrary length. The plan is drawn from a
+/// small per-thread cache, so repeated one-shot calls of the same length
+/// (the FFT baseline's row/column sweeps, `FreqOperator` applications)
+/// don't rebuild twiddle tables; hold an [`FftPlan`] yourself only when
+/// you want the plan's lifetime explicit.
+pub fn fft(data: &mut [C64]) {
+    thread_plan(data.len()).forward(data);
+}
+
+/// One-shot inverse FFT (normalized by `1/n`), same per-thread plan cache
+/// as [`fft`].
 pub fn ifft(data: &mut [C64]) {
-    FftPlan::new(data.len()).inverse(data);
+    thread_plan(data.len()).inverse(data);
 }
 
 /// Naive `O(n²)` DFT — the correctness oracle for tests.
@@ -60,8 +97,8 @@ pub fn ifft2(data: &mut [C64], rows: usize, cols: usize) {
 
 fn fft2_dir(data: &mut [C64], rows: usize, cols: usize, dir: Direction) {
     assert_eq!(data.len(), rows * cols, "grid shape mismatch");
-    let row_plan = FftPlan::new(cols);
-    let col_plan = FftPlan::new(rows);
+    let row_plan = thread_plan(cols);
+    let col_plan = thread_plan(rows);
     // Transform rows (contiguous).
     for r in 0..rows {
         let row = &mut data[r * cols..(r + 1) * cols];
@@ -219,5 +256,32 @@ mod tests {
         let mut x = vec![c64(3.0, -2.0)];
         fft(&mut x);
         assert_eq!(x[0], c64(3.0, -2.0));
+    }
+
+    #[test]
+    fn one_shot_plans_are_cached_per_thread() {
+        // Two one-shot transforms of the same length share one plan …
+        let a = thread_plan(96);
+        let b = thread_plan(96);
+        assert!(Rc::ptr_eq(&a, &b), "same length must reuse the cached plan");
+        // … which moves to the front on reuse, and distinct lengths
+        // coexist up to the cap, evicting least-recently-used beyond it.
+        let lens: Vec<usize> = (1..=PLAN_CACHE_CAP + 1).map(|i| 96 + i).collect();
+        for &n in &lens {
+            let _ = thread_plan(n);
+        }
+        let oldest = thread_plan(96);
+        assert!(
+            !Rc::ptr_eq(&a, &oldest),
+            "filling the cache past capacity must evict the oldest plan"
+        );
+        // Cached plans still transform correctly (the reuse is pure).
+        let x = rand_signal(96, 42);
+        let want = dft_reference(&x, Direction::Forward);
+        let mut got = x.clone();
+        fft(&mut got);
+        assert!(max_err(&got, &want) < 1e-8 * 96.0);
+        ifft(&mut got);
+        assert!(max_err(&got, &x) < 1e-10 * 96.0);
     }
 }

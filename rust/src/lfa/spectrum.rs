@@ -119,6 +119,15 @@ impl Spectrum {
         self.per_freq == self.c_out.min(self.c_in)
     }
 
+    /// Whether this is a partial (top-k) spectrum: only the `per_freq`
+    /// **largest** values per frequency are stored, so any statistic that
+    /// needs the small end of the spectrum ([`Self::sigma_min`],
+    /// [`Self::condition_number`], the Frobenius identity) is undefined —
+    /// those accessors return NaN rather than a silently wrong number.
+    pub fn is_partial(&self) -> bool {
+        !self.is_full()
+    }
+
     pub fn num_values(&self) -> usize {
         self.values.len()
     }
@@ -135,17 +144,33 @@ impl Spectrum {
         self.values.iter().cloned().fold(0.0, f64::max)
     }
 
-    /// Smallest **stored** singular value across all frequencies. For a
-    /// full spectrum this is the operator's smallest singular value; for a
-    /// top-k partial spectrum it is only the smallest of the computed
-    /// extremes.
+    /// Smallest singular value of the operator. **NaN for a partial
+    /// (top-k) spectrum**: the retained per-frequency values are the
+    /// *largest* ones, so the smallest stored value says nothing about the
+    /// operator's σ_min — reporting it would be silently wrong (the same
+    /// convention `frobenius_defect` uses for unverifiable spectra). Use
+    /// [`Self::min_stored`] for the smallest *computed* value.
     pub fn sigma_min(&self) -> f64 {
+        if self.is_partial() {
+            return f64::NAN;
+        }
+        self.min_stored()
+    }
+
+    /// Smallest **stored** singular value across all frequencies — the
+    /// operator's σ_min for a full spectrum, merely the smallest computed
+    /// extreme for a top-k partial one.
+    pub fn min_stored(&self) -> f64 {
         self.values.iter().cloned().fold(f64::INFINITY, f64::min)
     }
 
-    /// Condition number `σ_max/σ_min` (∞ if singular).
+    /// Condition number `σ_max/σ_min` (∞ if singular; NaN for a partial
+    /// spectrum — see [`Self::sigma_min`]).
     pub fn condition_number(&self) -> f64 {
         let lo = self.sigma_min();
+        if lo.is_nan() {
+            return f64::NAN;
+        }
         if lo == 0.0 {
             f64::INFINITY
         } else {
@@ -297,6 +322,25 @@ mod tests {
     fn singular_operator_condition_infinite() {
         let s = spectrum(vec![1.0, 0.0], 1);
         assert!(s.condition_number().is_infinite());
+    }
+
+    #[test]
+    fn partial_spectrum_reports_nan_extremes() {
+        // 2 values per frequency retained out of rank 3: σ_min/cond are
+        // undefined (the small end was never computed) and must say so.
+        let s = Spectrum {
+            n: 2,
+            m: 1,
+            c_out: 3,
+            c_in: 3,
+            per_freq: 2,
+            values: vec![3.0, 2.0, 4.0, 1.0],
+        };
+        assert!(s.is_partial() && !s.is_full());
+        assert_eq!(s.sigma_max(), 4.0, "σ_max is exact on a top-k spectrum");
+        assert!(s.sigma_min().is_nan(), "σ_min must be NaN, not the smallest retained value");
+        assert!(s.condition_number().is_nan());
+        assert_eq!(s.min_stored(), 1.0, "the smallest *computed* value stays accessible");
     }
 
     #[test]

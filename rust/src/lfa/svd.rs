@@ -19,7 +19,7 @@ use crate::numeric::{C64, CMat};
 use std::time::{Duration, Instant};
 
 /// Which per-block solver to use for the `c_out×c_in` SVDs.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum BlockSolver {
     /// One-sided Jacobi on `A_k` (default; best accuracy).
     Jacobi,
@@ -38,7 +38,7 @@ pub enum BlockSolver {
 /// [`crate::lfa::spectrum::mirror_fill`]). Folding halves the per-layer
 /// SVD work; `Off` is the unfolded reference every folded path is
 /// cross-checked against in tests and benches.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
 pub enum Fold {
     /// Fold whenever the symmetry holds. Kernels in this crate carry real
     /// weights, so this always folds — the default.

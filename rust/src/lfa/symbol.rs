@@ -29,7 +29,7 @@ use crate::numeric::{C64, CMat};
 use std::f64::consts::PI;
 
 /// Memory layout of a [`SymbolGrid`].
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum BlockLayout {
     /// `[freq][c_out][c_in]` — each block contiguous, row-major (LFA-natural).
     BlockContiguous,

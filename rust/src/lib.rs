@@ -34,14 +34,17 @@
 //!   Jacobi SVD with reusable scratch, Hermitian Jacobi eigensolver,
 //!   Golub–Reinsch reference SVD, QR, power iteration), [`fft`].
 //! - **L2 — LFA core**: [`engine`] (the plan, whole-model
-//!   [`engine::ModelPlan`], backends), [`lfa`] (symbols, spectra, strided
+//!   [`engine::ModelPlan`], backends, and the content-addressed
+//!   [`engine::SpectralCache`] serving repeat audits as hash lookups),
+//!   [`lfa`] (symbols, spectra, strided
 //!   crystal-torus machinery — thin wrappers over the engine), [`conv`],
 //!   [`baselines`] (FFT/explicit routes sharing the engine's SVD stage),
 //!   [`spectral`] (clipping, low-rank compression, pseudo-inverse —
 //!   consumers of the planned `FullSvd`).
 //! - **L3 — coordinator/service**: [`coordinator`] (frequency-tile
 //!   scheduler whose tiles execute against one shared plan per job — and,
-//!   for whole models, one shared [`engine::ModelPlan`] per job — metrics,
+//!   for whole models, one shared [`engine::ModelPlan`] per job — with
+//!   cache-before-tiling on every native path, metrics,
 //!   the [`coordinator::SpectralService`] API), [`runtime`]
 //!   (AOT artifact manifest; PJRT execution behind the off-by-default
 //!   `pjrt` feature), [`cli`] / [`model`] / [`report`] around them.

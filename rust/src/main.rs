@@ -12,7 +12,7 @@ use conv_svd_lfa::baselines::{explicit_svd, fft_svd, FftLayoutPolicy};
 use conv_svd_lfa::cli::{Cli, HELP};
 use conv_svd_lfa::conv::{Boundary, ConvKernel};
 use conv_svd_lfa::coordinator::{Backend, ServiceConfig, SpectralService};
-use conv_svd_lfa::engine::{ModelPlan, SpectrumRequest};
+use conv_svd_lfa::engine::{ModelPlan, SpectralCache, SpectrumRequest};
 use conv_svd_lfa::error::Result;
 use conv_svd_lfa::lfa::{self, BlockSolver, Fold, LfaOptions};
 use conv_svd_lfa::model::zoo;
@@ -32,7 +32,7 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let cli = Cli::from_env(&["with-explicit", "verbose", "csv", "no-fold"])?;
+    let cli = Cli::from_env(&["with-explicit", "verbose", "csv", "no-fold", "no-cache"])?;
     match cli.command.as_str() {
         "analyze" => cmd_analyze(&cli),
         "audit" => cmd_audit(&cli),
@@ -101,30 +101,58 @@ fn load_model(name_or_path: &str) -> Result<ModelConfig> {
     ))
 }
 
-/// The `frequencies solved: S/T (fold …)` report line of `audit-model`
-/// (always native — a `ModelPlan` sweep): the folded fundamental-domain
-/// size vs the full dual grid, summed over every layer. `audit` computes
-/// its line from the per-layer reports instead, because PJRT-routed
-/// layers sweep the full grid regardless of the folding setting.
-fn fold_report_line(model: &ModelConfig, folding: Fold) -> String {
-    let total: usize = model
-        .layers
-        .iter()
-        .map(|l| (l.height / l.stride) * (l.width / l.stride))
-        .sum();
-    match folding {
-        Fold::Off => format!("frequencies solved: {total}/{total} (fold off)"),
-        Fold::Auto => {
-            let solved: usize = model
-                .layers
-                .iter()
-                .map(|l| lfa::spectrum::folded_freqs(l.height / l.stride, l.width / l.stride))
-                .sum();
-            format!(
-                "frequencies solved: {solved}/{total} (fold {:.2}x)",
-                total as f64 / solved.max(1) as f64
-            )
+/// The truthful `frequencies solved: S/T …` report line shared by both
+/// audit commands: `S` sums what each layer *actually* decomposed —
+/// folded native layers their fundamental domain, PJRT-routed/unfolded
+/// layers the full grid, cache-served layers nothing — so mixed runs
+/// report a correct ratio instead of assuming every layer folded. The
+/// label is derived from per-layer *outcomes*, not configuration flags:
+/// `folded_layers` counts layers that actually solved a folded domain,
+/// `cached_layers` counts layers served from the result cache, and the
+/// saving is attributed to whichever contributed ("fold", "cache", or
+/// "fold + cache"). `S == T` means nothing was reduced — every solved
+/// layer swept its full grid (fold disabled or PJRT-routed).
+fn freqs_solved_line(solved: usize, total: usize, cached_layers: usize, folded: usize) -> String {
+    if solved == 0 && total > 0 {
+        format!("frequencies solved: 0/{total} (all served from cache)")
+    } else if solved == total {
+        // The outcome, not the flag: every solved layer swept its full
+        // grid — because folding was off, or because PJRT routing (which
+        // always sweeps the full grid) made it inapplicable.
+        format!("frequencies solved: {total}/{total} (full grid)")
+    } else {
+        let label = match (folded > 0, cached_layers > 0) {
+            (true, true) => "fold + cache",
+            (false, true) => "cache",
+            _ => "fold",
+        };
+        format!(
+            "frequencies solved: {solved}/{total} ({label} {:.2}x)",
+            total as f64 / solved.max(1) as f64
+        )
+    }
+}
+
+/// The `--cache-bytes N` / `--no-cache` pair shared by both audit
+/// commands: `None` = caching disabled, `Some(0)` = the default budget.
+fn cache_budget(cli: &Cli) -> Result<Option<usize>> {
+    if cli.flag("no-cache") {
+        if cli.opt("cache-bytes").is_some() {
+            bail!("--no-cache conflicts with --cache-bytes");
         }
+        return Ok(None);
+    }
+    Ok(Some(cli.opt_parse("cache-bytes", 0usize)?))
+}
+
+/// The `cache: H hits / M misses / E evictions` report line.
+fn cache_line(stats: Option<conv_svd_lfa::engine::CacheStats>) -> String {
+    match stats {
+        Some(s) => format!(
+            "cache: {} hits / {} misses / {} evictions ({} entries, {}/{} bytes)",
+            s.hits, s.misses, s.evictions, s.entries, s.bytes, s.capacity
+        ),
+        None => "cache: off".into(),
     }
 }
 
@@ -155,14 +183,16 @@ fn cmd_audit(cli: &Cli) -> Result<()> {
         backend,
         artifacts_dir,
         folding,
+        cache_bytes: cache_budget(cli)?,
         ..Default::default()
     })?;
     let reports = svc.audit_model_with(&model, request)?;
     if top_k > 0 {
         println!(
             "partial-spectrum audit: top-{top_k} values per frequency \
-             (σ_min/cond cover the computed extremes only; Frobenius \
-             verification needs the full spectrum)"
+             (σ_min and cond report NaN — the retained extremes say \
+             nothing about the small end; Frobenius verification needs \
+             the full spectrum)"
         );
     }
     let mut table = Table::new([
@@ -201,27 +231,30 @@ fn cmd_audit(cli: &Cli) -> Result<()> {
         commas(m.values_computed as u128),
         secs(m.tile_work)
     );
-    // Fold accounting from what actually ran: PJRT-routed layers always
-    // sweep the full grid, so only native-tiled layers count as folded.
-    let mut total_freqs = 0usize;
-    let mut solved_freqs = 0usize;
-    for (r, layer) in reports.iter().zip(&model.layers) {
-        let (nc, mc) = (layer.height / layer.stride, layer.width / layer.stride);
-        total_freqs += nc * mc;
-        solved_freqs += if folding == Fold::Off || r.pjrt_tiles > 0 {
-            nc * mc
-        } else {
-            lfa::spectrum::folded_freqs(nc, mc)
-        };
-    }
-    if solved_freqs == total_freqs {
-        println!("frequencies solved: {total_freqs}/{total_freqs} (fold off)");
-    } else {
-        println!(
-            "frequencies solved: {solved_freqs}/{total_freqs} (fold {:.2}x)",
-            total_freqs as f64 / solved_freqs.max(1) as f64
-        );
-    }
+    // Fold/cache accounting from what actually ran, per layer: each
+    // report's solved_freqs is what that layer's tiles decomposed — the
+    // folded fundamental domain natively, the full grid on PJRT, nothing
+    // when the result cache served it.
+    let total_freqs: usize = model
+        .layers
+        .iter()
+        .map(|l| (l.height / l.stride) * (l.width / l.stride))
+        .sum();
+    let solved_freqs: usize = reports.iter().map(|r| r.solved_freqs).sum();
+    let cached_layers = reports.iter().filter(|r| r.cached).count();
+    // A layer "folded" iff it executed and decomposed fewer frequencies
+    // than its grid holds — PJRT-routed layers never do, whatever the
+    // folding flag says.
+    let folded_layers = reports
+        .iter()
+        .zip(&model.layers)
+        .filter(|(r, l)| {
+            let freqs = (l.height / l.stride) * (l.width / l.stride);
+            r.solved_freqs > 0 && r.solved_freqs < freqs
+        })
+        .count();
+    println!("{}", freqs_solved_line(solved_freqs, total_freqs, cached_layers, folded_layers));
+    println!("{}", cache_line(svc.cache_stats()));
     if cli.flag("csv") {
         let path = table.save_csv(&format!("audit_{}", model.name))?;
         println!("csv: {}", path.display());
@@ -242,22 +275,52 @@ fn cmd_audit_model(cli: &Cli) -> Result<()> {
     let threads: usize = cli.opt_parse("threads", 0)?;
     let top: usize = cli.opt_parse("top", 4)?;
     let top_k: usize = cli.opt_parse("top-k", 0)?;
+    let repeat: usize = cli.opt_parse("repeat", 1)?;
+    if repeat == 0 {
+        bail!("--repeat must be at least 1");
+    }
     let folding = if cli.flag("no-fold") { Fold::Off } else { Fold::Auto };
     let solver = match cli.opt("solver").unwrap_or("jacobi") {
         "jacobi" => BlockSolver::Jacobi,
         "gram" => BlockSolver::GramEigen,
         other => bail!("unknown solver {other:?} (jacobi|gram)"),
     };
+    // The result/plan cache the repeat sweeps run against (the
+    // repeat-audit shape: sweep 1 populates it, sweeps 2..R hit it).
+    let cache = cache_budget(cli)?.map(SpectralCache::with_budget_or_default);
     let t0 = std::time::Instant::now();
-    let plan =
-        ModelPlan::build(&model, LfaOptions { threads, solver, folding, ..Default::default() })?;
+    // Build through the cache when one exists: the build stores each
+    // layer's plan signature, so every repeat sweep derives its result
+    // keys instead of re-hashing the weight tensors per sweep.
+    let opts = LfaOptions { threads, solver, folding, ..Default::default() };
+    let plan = match &cache {
+        Some(c) => ModelPlan::build_cached(&model, opts, c)?,
+        None => ModelPlan::build(&model, opts)?,
+    };
     let t_plan = t0.elapsed();
-    let fold_line = fold_report_line(&model, folding);
+    let total_freqs: usize = (0..plan.layer_count()).map(|i| plan.layer_plan(i).freqs()).sum();
     if top_k > 0 {
-        return audit_model_topk(cli, &plan, top_k, t_plan, &fold_line);
+        return audit_model_topk(cli, &plan, top_k, t_plan, cache.as_ref(), repeat, total_freqs);
     }
     let t1 = std::time::Instant::now();
-    let spectra = plan.execute();
+    let (spectra, solved_freqs, cached_layers) = match &cache {
+        Some(c) => {
+            let mut exec = plan.execute_cached(c);
+            for _ in 1..repeat {
+                exec = plan.execute_cached(c);
+            }
+            (exec.spectra, exec.freqs_solved, exec.cache_hits)
+        }
+        None => {
+            let mut spectra = plan.execute();
+            for _ in 1..repeat {
+                spectra = plan.execute();
+            }
+            let solved: usize =
+                (0..plan.layer_count()).map(|i| plan.layer_plan(i).solved_freqs()).sum();
+            (spectra, solved, 0)
+        }
+    };
     let t_exec = t1.elapsed();
 
     let mut table = Table::new([
@@ -291,12 +354,13 @@ fn cmd_audit_model(cli: &Cli) -> Result<()> {
     }
     println!(
         "model {} — {} layers planned once into {} equal-shape group(s), \
-         plan {} + sweep {} ({} worker(s))",
+         plan {} + sweep {} ({} run(s), {} worker(s))",
         spectra.model,
         plan.layer_count(),
         plan.group_count(),
         secs(t_plan),
         secs(t_exec),
+        repeat,
         plan.effective_threads()
     );
     print!("{}", table.render());
@@ -308,7 +372,13 @@ fn cmd_audit_model(cli: &Cli) -> Result<()> {
         spectra.sigma_min(),
         spectra.lipschitz_upper_bound()
     );
-    println!("{fold_line}");
+    // The last sweep's accounting: all-hit repeats solve 0 frequencies.
+    // ModelPlan sweeps are all-native: every executed layer folds unless
+    // folding is off.
+    let folded_layers =
+        if folding == Fold::Off { 0 } else { plan.layer_count() - cached_layers };
+    println!("{}", freqs_solved_line(solved_freqs, total_freqs, cached_layers, folded_layers));
+    println!("{}", cache_line(cache.as_ref().map(|c| c.stats())));
     for g in 0..plan.group_count() {
         let members = plan.group_members(g);
         let (rows, cols) = plan.layer_plan(members[0]).block_shape();
@@ -326,19 +396,39 @@ fn cmd_audit_model(cli: &Cli) -> Result<()> {
 
 /// The `audit-model --top-k K` report: the partial-spectrum sweep off the
 /// same planned object, with the iteration counts that show what the
-/// cross-frequency warm starts saved.
+/// cross-frequency warm starts saved. With a cache, partial spectra are
+/// content-addressed under their `TopK(k)` signature like full ones.
 fn audit_model_topk(
     cli: &Cli,
     plan: &ModelPlan,
     k: usize,
     t_plan: std::time::Duration,
-    fold_line: &str,
+    cache: Option<&SpectralCache>,
+    repeat: usize,
+    total_freqs: usize,
 ) -> Result<()> {
     let t1 = std::time::Instant::now();
-    let warm = plan.top_k_all(k);
+    let (spectra, iterations, solved_freqs, cached_layers) = match cache {
+        Some(c) => {
+            let mut exec = plan.top_k_all_cached(k, c);
+            for _ in 1..repeat {
+                exec = plan.top_k_all_cached(k, c);
+            }
+            (exec.spectra, exec.iterations, exec.freqs_solved, exec.cache_hits)
+        }
+        None => {
+            let mut warm = plan.top_k_all(k);
+            for _ in 1..repeat {
+                warm = plan.top_k_all(k);
+            }
+            let solved: usize =
+                (0..plan.layer_count()).map(|i| plan.layer_plan(i).solved_freqs()).sum();
+            (warm.spectra, warm.iterations, solved, 0)
+        }
+    };
     let t_exec = t1.elapsed();
     let mut table = Table::new(["layer", "grid", "stride", "c", "k", "σ_max", "top σ"]);
-    for (i, layer) in warm.spectra.layers.iter().enumerate() {
+    for (i, layer) in spectra.layers.iter().enumerate() {
         let lp = plan.layer_plan(i);
         let kernel = lp.kernel();
         let s = &layer.spectrum;
@@ -354,36 +444,45 @@ fn audit_model_topk(
             shown.join(" "),
         ]);
     }
-    let freqs: usize = (0..plan.layer_count()).map(|i| plan.layer_plan(i).freqs()).sum();
     println!(
         "model {} — top-{k} partial-spectrum sweep: {} layers planned once into \
-         {} equal-shape group(s), plan {} + sweep {} ({} worker(s))",
+         {} equal-shape group(s), plan {} + sweep {} ({} run(s), {} worker(s))",
         plan.name(),
         plan.layer_count(),
         plan.group_count(),
         secs(t_plan),
         secs(t_exec),
+        repeat,
         plan.effective_threads()
     );
     print!("{}", table.render());
     println!(
         "aggregate: {} singular values computed, global σ_max {:.4}, \
          Lipschitz composition bound {:.4}",
-        commas(warm.spectra.num_values() as u128),
-        warm.spectra.sigma_max(),
-        warm.spectra.lipschitz_upper_bound()
+        commas(spectra.num_values() as u128),
+        spectra.sigma_max(),
+        spectra.lipschitz_upper_bound()
     );
-    println!("{fold_line}");
+    // All layers share the build options, so layer 0 carries the sweep's
+    // folding mode; ModelPlan sweeps are all-native, so every executed
+    // layer folds unless folding is off.
+    let folded_layers = if plan.layer_plan(0).folding() == Fold::Off {
+        0
+    } else {
+        plan.layer_count() - cached_layers
+    };
+    println!("{}", freqs_solved_line(solved_freqs, total_freqs, cached_layers, folded_layers));
+    println!("{}", cache_line(cache.map(|c| c.stats())));
     println!(
         "warm-start effort: {} Krylov iteration steps over {} frequencies \
          ({:.2} per frequency; cold starts typically cost an order of \
          magnitude more — see bench_scaling)",
-        commas(warm.iterations as u128),
-        commas(freqs as u128),
-        warm.iterations as f64 / freqs.max(1) as f64
+        commas(iterations as u128),
+        commas(total_freqs as u128),
+        iterations as f64 / total_freqs.max(1) as f64
     );
     if cli.flag("csv") {
-        let path = table.save_csv(&format!("audit_model_topk_{}", warm.spectra.model))?;
+        let path = table.save_csv(&format!("audit_model_topk_{}", spectra.model))?;
         println!("csv: {}", path.display());
     }
     Ok(())

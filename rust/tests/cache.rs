@@ -1,0 +1,217 @@
+//! Integration tests for the [`SpectralCache`] subsystem: content-addressed
+//! result caching (bit-identical hits across the stride/layout/fold
+//! matrix, cached-vs-uncached ≤ 1e-12 against the unfolded reference),
+//! weight-mutation invalidation, byte-budgeted LRU eviction under real
+//! sweeps, plan sharing across `ModelPlan` builds, and the cached
+//! whole-model entry points (`execute_cached` / `top_k_all_cached` /
+//! `clip_all_cached` — the repeat-audit and training-loop shapes).
+
+use conv_svd_lfa::conv::ConvKernel;
+use conv_svd_lfa::engine::{ModelPlan, SpectralCache, SpectralPlan, SpectrumRequest};
+use conv_svd_lfa::lfa::{BlockLayout, Fold, LfaOptions};
+use conv_svd_lfa::model::ModelConfig;
+use conv_svd_lfa::numeric::Pcg64;
+use std::sync::Arc;
+
+fn kernel(c_out: usize, c_in: usize, seed: u64) -> ConvKernel {
+    let mut rng = Pcg64::seeded(seed);
+    ConvKernel::random_he(c_out, c_in, 3, 3, &mut rng)
+}
+
+/// A small three-layer model: two stride-1 layers (one of which the
+/// "training step" below mutates) plus a strided layer.
+const BASE_MODEL: &str = "name = \"cache-model\"\nseed = 5\n\
+    [[layer]]\nname = \"a\"\nc_in = 2\nc_out = 3\nheight = 8\nwidth = 8\n\
+    [[layer]]\nname = \"b\"\nc_in = 3\nc_out = 3\nheight = 6\nwidth = 6\n\
+    [[layer]]\nname = \"s\"\nc_in = 2\nc_out = 4\nheight = 8\nwidth = 8\nstride = 2\n";
+
+/// The same model after "one training step touched layer b": its weights
+/// are drawn differently, every other layer's bits are unchanged.
+fn mutated_model() -> ModelConfig {
+    let toml = BASE_MODEL.replace("name = \"b\"", "name = \"b\"\ninit = \"glorot\"");
+    ModelConfig::parse(&toml).unwrap()
+}
+
+fn serial() -> LfaOptions {
+    LfaOptions { threads: 1, ..Default::default() }
+}
+
+#[test]
+fn cache_hit_is_bit_identical_across_the_config_matrix() {
+    let cache = SpectralCache::new();
+    let k = kernel(3, 2, 1);
+    for &(n, m, stride) in &[(8usize, 8usize, 1usize), (6, 8, 2), (5, 7, 1)] {
+        for layout in [BlockLayout::BlockContiguous, BlockLayout::PlanarStrided] {
+            for folding in [Fold::Auto, Fold::Off] {
+                let opts = LfaOptions { layout, folding, ..serial() };
+                let plan = SpectralPlan::with_stride(&k, n, m, stride, opts);
+                let key = plan.result_signature(SpectrumRequest::Full);
+                assert!(cache.get(&key).is_none(), "distinct configs must not collide");
+                let cold = Arc::new(plan.execute());
+                cache.insert(key, Arc::clone(&cold));
+                let hit = cache.get(&key).expect("just inserted");
+                assert!(Arc::ptr_eq(&hit, &cold), "a hit returns the shared spectrum");
+                assert_eq!(hit.values, plan.execute().values, "bit-identical to a cold run");
+                // Cached-vs-uncached equivalence: the served spectrum
+                // matches a fresh *unfolded* execution to ≤ 1e-12.
+                let reference = SpectralPlan::with_stride(
+                    &k,
+                    n,
+                    m,
+                    stride,
+                    LfaOptions { folding: Fold::Off, ..opts },
+                )
+                .execute();
+                let scale = reference.sigma_max().max(1.0);
+                for (a, b) in hit.values.iter().zip(&reference.values) {
+                    assert!(
+                        (a - b).abs() <= 1e-12 * scale,
+                        "{n}x{m}/{stride} {layout:?} {folding:?}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn weight_mutation_misses_while_the_old_entry_stays_valid() {
+    let cache = SpectralCache::new();
+    let k = kernel(3, 3, 2);
+    let plan = SpectralPlan::new(&k, 8, 8, serial());
+    let key = plan.result_signature(SpectrumRequest::Full);
+    cache.insert(key, Arc::new(plan.execute()));
+    // One weight moves by one part in 10¹² — a clipped layer, a training
+    // step. The content signature changes, so the lookup misses.
+    let mut k2 = k.clone();
+    k2.data[4] *= 1.0 + 1e-12;
+    let key2 = SpectralPlan::new(&k2, 8, 8, serial()).result_signature(SpectrumRequest::Full);
+    assert_ne!(key, key2);
+    assert!(cache.get(&key2).is_none(), "mutated weights must miss");
+    // The old entry still serves the old weights — correct, not stale.
+    assert!(cache.get(&key).is_some());
+}
+
+#[test]
+fn model_sweep_cold_then_warm_then_one_mutated_layer() {
+    let model = ModelConfig::parse(BASE_MODEL).unwrap();
+    let cache = SpectralCache::new();
+    let plan = ModelPlan::build_cached(&model, serial(), &cache).unwrap();
+    let cold = plan.execute_cached(&cache);
+    assert_eq!(cold.cache_hits, 0);
+    assert!(cold.freqs_solved > 0);
+    // The cold cached sweep is the plain batched sweep, bit for bit.
+    let plain = plan.execute();
+    for (a, b) in cold.spectra.layers.iter().zip(&plain.layers) {
+        assert_eq!(a.spectrum.values, b.spectrum.values, "{}", a.name);
+    }
+    // Warm repeat: every layer hits, zero frequencies re-solved.
+    let warm = plan.execute_cached(&cache);
+    assert_eq!(warm.cache_hits, plan.layer_count());
+    assert_eq!(warm.freqs_solved, 0, "a repeat sweep re-solves nothing");
+    assert_eq!(warm.iterations, 0);
+    for (a, b) in warm.spectra.layers.iter().zip(&cold.spectra.layers) {
+        assert!(Arc::ptr_eq(&a.spectrum, &b.spectrum), "{}: hit shares the buffer", a.name);
+    }
+    // One training step mutates layer b: rebuilding reuses the cached
+    // *plans* of unchanged layers, and re-solves only the mutated one.
+    let plan2 = ModelPlan::build_cached(&mutated_model(), serial(), &cache).unwrap();
+    assert!(
+        Arc::ptr_eq(plan.layer_plan_shared(0), plan2.layer_plan_shared(0)),
+        "unchanged layer a shares one planned object across builds"
+    );
+    assert!(
+        !Arc::ptr_eq(plan.layer_plan_shared(1), plan2.layer_plan_shared(1)),
+        "mutated layer b re-plans"
+    );
+    let mixed = plan2.execute_cached(&cache);
+    assert_eq!(mixed.cache_hits, plan.layer_count() - 1);
+    assert_eq!(mixed.freqs_solved, plan2.layer_plan(1).solved_freqs());
+    assert!(Arc::ptr_eq(
+        &mixed.spectra.layers[0].spectrum,
+        &cold.spectra.layers[0].spectrum
+    ));
+    assert_ne!(mixed.spectra.layers[1].spectrum.values, cold.spectra.layers[1].spectrum.values);
+}
+
+#[test]
+fn tiny_byte_budget_evicts_but_sweeps_stay_correct() {
+    let model = ModelConfig::parse(BASE_MODEL).unwrap();
+    // Probe how many bytes the whole model needs, then grant one byte
+    // less: the cold sweep must evict at least one layer.
+    let probe = SpectralCache::new();
+    let plan = ModelPlan::build_cached(&model, serial(), &probe).unwrap();
+    plan.execute_cached(&probe);
+    let need = probe.stats().bytes;
+    assert!(need > 0);
+    let cache = SpectralCache::with_budget(need - 1);
+    let cold = plan.execute_cached(&cache);
+    assert!(cold.evictions >= 1, "budget below the working set must evict");
+    let held = cache.stats();
+    assert!(held.entries < plan.layer_count());
+    assert!(held.bytes <= need - 1);
+    // The warm sweep hits what survived, recomputes the rest — and the
+    // values come out identical either way.
+    let warm = plan.execute_cached(&cache);
+    assert!(warm.cache_hits >= 1 && warm.cache_hits < plan.layer_count());
+    assert!(warm.freqs_solved > 0 && warm.freqs_solved < cold.freqs_solved);
+    for (a, b) in warm.spectra.layers.iter().zip(&cold.spectra.layers) {
+        assert_eq!(a.spectrum.values, b.spectrum.values, "{}", a.name);
+    }
+}
+
+#[test]
+fn topk_partial_spectra_cache_under_their_own_signature() {
+    let model = ModelConfig::parse(BASE_MODEL).unwrap();
+    let cache = SpectralCache::new();
+    let plan = ModelPlan::build_cached(&model, serial(), &cache).unwrap();
+    let full = plan.execute_cached(&cache);
+    // TopK(1) is a different request, therefore a different signature:
+    // the full-spectrum entries must not answer it.
+    let top = plan.top_k_all_cached(1, &cache);
+    assert_eq!(top.cache_hits, 0, "no cross-request hits");
+    assert!(top.spectra.layers.iter().all(|l| l.spectrum.is_partial()));
+    let top2 = plan.top_k_all_cached(1, &cache);
+    assert_eq!(top2.cache_hits, plan.layer_count());
+    assert_eq!(top2.freqs_solved, 0);
+    for (a, b) in top2.spectra.layers.iter().zip(&top.spectra.layers) {
+        assert!(Arc::ptr_eq(&a.spectrum, &b.spectrum));
+    }
+    // Aggregate extremes: partial spectra poison σ_min (NaN guard), the
+    // full sweep keeps a real value; σ_max is exact on both.
+    assert!(top.spectra.sigma_min().is_nan());
+    assert!(full.spectra.sigma_min().is_finite());
+    let scale = full.spectra.sigma_max().max(1.0);
+    assert!((top.spectra.sigma_max() - full.spectra.sigma_max()).abs() <= 1e-8 * scale);
+}
+
+#[test]
+fn clip_screening_serves_unchanged_layers_from_cache() {
+    // clip_all is stride-1 only: keep the dense sub-stack.
+    let model = ModelConfig::parse(BASE_MODEL).unwrap();
+    let dense = ModelConfig {
+        name: "dense".into(),
+        seed: model.seed,
+        layers: model.layers.iter().filter(|l| l.stride == 1).cloned().collect(),
+    };
+    let cache = SpectralCache::new();
+    let plan = ModelPlan::build_cached(&dense, serial(), &cache).unwrap();
+    let cap = plan.execute().sigma_max() * 0.5;
+    let first = plan.clip_all_cached(cap, &cache).unwrap();
+    let hits_after_first = cache.stats().hits;
+    // The repeat screen (the next "training step" with unchanged weights)
+    // serves every top-1 screen from cache.
+    let second = plan.clip_all_cached(cap, &cache).unwrap();
+    assert_eq!(
+        cache.stats().hits - hits_after_first,
+        plan.layer_count() as u64,
+        "repeat screening must be pure lookup"
+    );
+    let uncached = plan.clip_all(cap).unwrap();
+    for ((a, b), c) in first.iter().zip(&second).zip(&uncached) {
+        assert_eq!(a.sigma_before, b.sigma_before);
+        assert_eq!(a.clipped_count, b.clipped_count);
+        assert_eq!(a.sigma_before, c.sigma_before);
+        assert_eq!(a.clipped_count, c.clipped_count);
+    }
+}

@@ -1,15 +1,18 @@
 //! Integration tests for the L3 coordinator: tile scheduling correctness,
-//! backpressure, PJRT/native routing, model audits and metrics.
+//! backpressure, PJRT/native routing, model audits, the content-addressed
+//! result cache and metrics.
 
 use conv_svd_lfa::conv::ConvKernel;
-use conv_svd_lfa::coordinator::{Backend, JobSpec, Scheduler, SchedulerConfig, SpectralService};
-#[cfg(feature = "pjrt")]
-use conv_svd_lfa::coordinator::ServiceConfig;
+use conv_svd_lfa::coordinator::{
+    Backend, JobSpec, Scheduler, SchedulerConfig, ServiceConfig, SpectralService,
+};
+use conv_svd_lfa::engine::SpectrumRequest;
 use conv_svd_lfa::lfa::{self, LfaOptions};
-use conv_svd_lfa::model::zoo;
+use conv_svd_lfa::model::{zoo, ModelConfig};
 use conv_svd_lfa::numeric::Pcg64;
 #[cfg(feature = "pjrt")]
 use std::path::PathBuf;
+use std::sync::Arc;
 
 fn kernel(c_out: usize, c_in: usize, seed: u64) -> ConvKernel {
     let mut rng = Pcg64::seeded(seed);
@@ -34,7 +37,7 @@ fn scheduler_matches_direct_lfa() {
 #[test]
 fn many_jobs_pipeline_through_bounded_queue() {
     let sched = Scheduler::start(
-        SchedulerConfig { workers: 2, queue_depth: 2, artifacts: vec![] },
+        SchedulerConfig { workers: 2, queue_depth: 2, ..Default::default() },
         None,
     );
     // More jobs than queue depth: backpressure must not deadlock.
@@ -158,11 +161,175 @@ fn audit_lenet_native() {
 
 #[test]
 fn audit_is_deterministic() {
-    let svc = SpectralService::native(2);
+    // Caching off: with it on, the second audit would be served the
+    // first one's buffer and the comparison would be vacuous — this
+    // test exists to catch nondeterminism in the *sweep*.
+    let svc = SpectralService::start(ServiceConfig {
+        workers: 2,
+        cache_bytes: None,
+        ..Default::default()
+    })
+    .unwrap();
     let r1 = svc.audit_model(&zoo::lenet()).unwrap();
     let r2 = svc.audit_model(&zoo::lenet()).unwrap();
     for (a, b) in r1.iter().zip(&r2) {
+        assert!(!a.cached && !b.cached);
         assert_eq!(a.sigma_max, b.sigma_max);
+        assert_eq!(a.spectrum.values, b.spectrum.values);
     }
+    svc.shutdown();
+}
+
+// --- SpectralCache: content-addressed result & plan caching ---
+
+#[test]
+fn repeat_job_is_served_from_cache() {
+    let k = kernel(3, 3, 21);
+    let sched = Scheduler::native(2);
+    let cold = sched.run(JobSpec::new("a", k.clone(), 10, 10)).unwrap();
+    assert!(!cold.cached);
+    assert!(cold.solved_freqs > 0);
+    // Same content, different job id: the signature is over the weight
+    // bits and geometry, so this is a hit — the very same buffer, zero
+    // tiles, zero frequencies re-solved.
+    let warm = sched.run(JobSpec::new("b", k.clone(), 10, 10)).unwrap();
+    assert!(warm.cached, "identical content must be served from cache");
+    assert_eq!(warm.solved_freqs, 0, "a cache hit re-solves zero frequencies");
+    assert_eq!(warm.native_tiles + warm.pjrt_tiles, 0);
+    assert!(Arc::ptr_eq(&warm.spectrum, &cold.spectrum), "hit shares the cached buffer");
+    // A weight mutation changes the content signature: full recompute.
+    let mut k2 = k.clone();
+    k2.data[0] += 0.25;
+    let changed = sched.run(JobSpec::new("c", k2, 10, 10)).unwrap();
+    assert!(!changed.cached, "mutated weights must miss");
+    assert_ne!(changed.spectrum.values, cold.spectrum.values);
+    // Different grid or folding also miss (each is its own signature).
+    let other_grid = sched.run(JobSpec::new("d", k.clone(), 8, 10)).unwrap();
+    assert!(!other_grid.cached);
+    let unfolded =
+        sched.run(JobSpec::new("e", k.clone(), 10, 10).with_folding(lfa::Fold::Off)).unwrap();
+    assert!(!unfolded.cached);
+    let m = sched.metrics.snapshot();
+    assert_eq!((m.cache_hits, m.cache_misses), (1, 4));
+    sched.shutdown();
+}
+
+#[test]
+fn disabled_cache_recomputes_every_job() {
+    let k = kernel(3, 2, 22);
+    let sched = Scheduler::start(
+        SchedulerConfig { workers: 2, cache_bytes: None, ..Default::default() },
+        None,
+    );
+    assert!(sched.cache().is_none());
+    let a = sched.run(JobSpec::new("a", k.clone(), 8, 8)).unwrap();
+    let b = sched.run(JobSpec::new("b", k, 8, 8)).unwrap();
+    assert!(!a.cached && !b.cached);
+    assert!(b.solved_freqs > 0);
+    assert_eq!(a.spectrum.values, b.spectrum.values, "determinism does not need the cache");
+    let m = sched.metrics.snapshot();
+    assert_eq!((m.cache_hits, m.cache_misses), (0, 0));
+    sched.shutdown();
+}
+
+#[test]
+fn repeat_model_audit_is_served_entirely_from_cache() {
+    let model = zoo::lenet();
+    let svc = SpectralService::native(2);
+    let cold = svc.audit_model(&model).unwrap();
+    assert!(cold.iter().all(|r| !r.cached && r.solved_freqs > 0));
+    let warm = svc.audit_model(&model).unwrap();
+    assert!(warm.iter().all(|r| r.cached), "unchanged model must hit layer-by-layer");
+    assert_eq!(warm.iter().map(|r| r.solved_freqs).sum::<usize>(), 0);
+    for (c, w) in cold.iter().zip(&warm) {
+        assert!(Arc::ptr_eq(&c.spectrum, &w.spectrum), "{}: hit shares the buffer", c.name);
+        assert_eq!(c.sigma_max, w.sigma_max);
+        assert_eq!(c.sigma_min, w.sigma_min);
+    }
+    let m = svc.metrics();
+    assert_eq!(m.cache_hits as usize, model.layers.len());
+    assert_eq!(m.cache_misses as usize, model.layers.len());
+    let stats = svc.cache_stats().expect("cache is on by default");
+    assert_eq!(stats.hits, m.cache_hits);
+    assert_eq!(stats.entries, model.layers.len());
+    assert!(stats.bytes > 0 && stats.bytes <= stats.capacity);
+    svc.shutdown();
+}
+
+/// The training-loop shape: after a "step" mutates one layer's weights,
+/// a re-audit recomputes only that layer — the rest hit the cache.
+#[test]
+fn mutated_layer_recomputes_while_the_rest_hit() {
+    const BASE: &str = "name = \"two\"\nseed = 5\n\
+        [[layer]]\nname = \"a\"\nc_in = 2\nc_out = 3\nheight = 8\nwidth = 8\n\
+        [[layer]]\nname = \"b\"\nc_in = 3\nc_out = 3\nheight = 6\nwidth = 6\n";
+    let base = ModelConfig::parse(BASE).unwrap();
+    // The same model with layer b's weights drawn differently — the
+    // stand-in for one training step touching one layer.
+    let mutated = ModelConfig::parse(&BASE.replace(
+        "name = \"b\"",
+        "name = \"b\"\ninit = \"glorot\"",
+    ))
+    .unwrap();
+    let svc = SpectralService::native(2);
+    let cold = svc.audit_model(&base).unwrap();
+    let mixed = svc.audit_model(&mutated).unwrap();
+    assert!(mixed[0].cached, "unchanged layer a must hit");
+    assert_eq!(mixed[0].solved_freqs, 0);
+    assert!(!mixed[1].cached, "mutated layer b must recompute");
+    assert!(mixed[1].solved_freqs > 0);
+    assert!(Arc::ptr_eq(&cold[0].spectrum, &mixed[0].spectrum));
+    assert_ne!(cold[1].spectrum.values, mixed[1].spectrum.values);
+    let m = svc.metrics();
+    assert_eq!((m.cache_hits, m.cache_misses), (1, 3));
+    svc.shutdown();
+}
+
+#[test]
+fn queue_depth_zero_means_default_and_explicit_is_respected() {
+    let d = SchedulerConfig::default();
+    assert_eq!(d.effective_queue_depth(), SchedulerConfig::DEFAULT_QUEUE_DEPTH);
+    let svc = SpectralService::native(1);
+    assert_eq!(svc.queue_depth(), SchedulerConfig::DEFAULT_QUEUE_DEPTH);
+    svc.shutdown();
+    let svc = SpectralService::start(ServiceConfig {
+        workers: 1,
+        queue_depth: 3,
+        ..Default::default()
+    })
+    .unwrap();
+    assert_eq!(svc.queue_depth(), 3);
+    // The explicit depth still pipelines more jobs than it has slots.
+    for j in 0..8 {
+        let k = kernel(2, 2, 300 + j);
+        let rep = svc.analyze_layer("q", &k, 6, 6).unwrap();
+        assert!(rep.sigma_max > 0.0);
+    }
+    svc.shutdown();
+}
+
+/// Regression: under a top-k request the retained per-frequency values
+/// are the *largest* ones, so σ_min and the condition number are
+/// undefined — they must report NaN (like `frobenius_defect` already
+/// does), not the smallest retained value.
+#[test]
+fn topk_audit_reports_nan_extremes() {
+    const MODEL: &str = "name = \"nan\"\nseed = 9\n\
+        [[layer]]\nname = \"a\"\nc_in = 3\nc_out = 4\nheight = 8\nwidth = 8\n";
+    let model = ModelConfig::parse(MODEL).unwrap();
+    let svc = SpectralService::native(2);
+    let reports = svc.audit_model_with(&model, SpectrumRequest::TopK(1)).unwrap();
+    for r in &reports {
+        assert!(r.spectrum.is_partial());
+        assert!(r.sigma_max > 0.0, "{}: σ_max is exact under top-k", r.name);
+        assert!(r.sigma_min.is_nan(), "{}: σ_min off a truncated spectrum", r.name);
+        assert!(r.condition.is_nan(), "{}: condition off a truncated spectrum", r.name);
+        assert!(r.frobenius_defect.is_nan());
+        // The smallest *computed* value stays accessible, clearly named.
+        assert!(r.spectrum.min_stored() > 0.0 && r.spectrum.min_stored().is_finite());
+    }
+    // Full requests still report real extremes.
+    let full = svc.audit_model(&model).unwrap();
+    assert!(full[0].sigma_min.is_finite() && full[0].condition.is_finite());
     svc.shutdown();
 }

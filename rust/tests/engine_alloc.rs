@@ -6,12 +6,13 @@
 //! these tests so unrelated parallel tests cannot perturb the counter.
 
 use conv_svd_lfa::conv::ConvKernel;
-use conv_svd_lfa::engine::{ModelPlan, SpectralPlan};
+use conv_svd_lfa::engine::{ModelPlan, SpectralCache, SpectralPlan, SpectrumRequest};
 use conv_svd_lfa::lfa::{BlockSolver, Fold, LfaOptions};
 use conv_svd_lfa::model::ModelConfig;
 use conv_svd_lfa::numeric::Pcg64;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 static ALLOCS: AtomicUsize = AtomicUsize::new(0);
 
@@ -115,6 +116,34 @@ fn assert_model_zero_alloc_after_warmup() {
     assert!(out.iter().all(|v| v.is_finite() && *v >= 0.0));
 }
 
+/// Cache discipline: serving a repeat spectrum is a hash lookup. After a
+/// result is cached, computing the content signature (FNV over the weight
+/// bits, no buffers) plus the lookup itself (`Arc` clone of the stored
+/// spectrum) performs **zero heap allocation** — no per-frequency scratch
+/// is ever touched on a hit.
+fn assert_cache_hit_zero_alloc() {
+    let mut rng = Pcg64::seeded(8200);
+    let kernel = ConvKernel::random_he(4, 4, 3, 3, &mut rng);
+    let plan = SpectralPlan::new(&kernel, 8, 8, LfaOptions { threads: 1, ..Default::default() });
+    let cache = SpectralCache::new();
+    let key = plan.result_signature(SpectrumRequest::Full);
+    cache.insert(key, Arc::new(plan.execute()));
+    // Warm-up lookup (the map sized itself at insert time).
+    assert!(cache.get(&key).is_some());
+    let before = ALLOCS.load(Ordering::SeqCst);
+    let rekeyed = plan.result_signature(SpectrumRequest::Full);
+    let hit = cache.get(&rekeyed);
+    let again = cache.get(&rekeyed);
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "{} allocation(s) in a warmed-up signature + cache hit",
+        after - before
+    );
+    assert!(hit.is_some() && again.is_some());
+}
+
 // One test, sequential scenarios: the harness runs #[test] fns on separate
 // threads, and concurrent tests would pollute each other's counter windows.
 // Both folding modes are covered: the folded hot loop (solve the
@@ -133,4 +162,5 @@ fn execute_is_allocation_free_after_warmup() {
     assert_topk_zero_alloc_after_warmup(2, 1, Fold::Auto);
     assert_topk_zero_alloc_after_warmup(2, 1, Fold::Off);
     assert_model_zero_alloc_after_warmup();
+    assert_cache_hit_zero_alloc();
 }

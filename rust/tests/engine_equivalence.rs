@@ -233,6 +233,51 @@ fn folded_matches_unfolded_across_the_full_matrix() {
     }
 }
 
+/// The cached arm of the acceptance matrix: a spectrum served through
+/// [`SpectralCache`] (plan drawn from the plan cache, result from the
+/// result cache) is bitwise identical to direct execution, and agrees
+/// with the unfolded uncached reference to ≤ 1e-12 — across stride,
+/// layout and folding. Plans with equal signatures are shared objects.
+#[test]
+fn cached_paths_match_direct_execution_across_the_matrix() {
+    use conv_svd_lfa::engine::{SpectralCache, SpectrumRequest};
+    use std::sync::Arc;
+    let cache = SpectralCache::new();
+    let mut rng = Pcg64::seeded(7010);
+    for &(n, m, s) in &[(6usize, 6usize, 1usize), (5, 7, 1), (8, 8, 2)] {
+        for layout in [BlockLayout::BlockContiguous, BlockLayout::PlanarStrided] {
+            for folding in [Fold::Auto, Fold::Off] {
+                let k = ConvKernel::random_he(3, 2, 3, 3, &mut rng);
+                let opts = LfaOptions { layout, folding, threads: 1, ..Default::default() };
+                // Plan cache: equal signatures share one planned object.
+                let p1 = cache.plan_for(&k, n, m, s, opts);
+                let p2 = cache.plan_for(&k, n, m, s, opts);
+                assert!(Arc::ptr_eq(&p1, &p2), "{n}x{m}/{s}: plan must be shared");
+                let direct = SpectralPlan::with_stride(&k, n, m, s, opts).execute();
+                let key = p1.result_signature(SpectrumRequest::Full);
+                cache.insert(key, Arc::new(p1.execute()));
+                let served = cache.get(&key).expect("just inserted");
+                assert_eq!(served.values, direct.values, "cached == direct, bitwise");
+                let reference = SpectralPlan::with_stride(
+                    &k,
+                    n,
+                    m,
+                    s,
+                    LfaOptions { folding: Fold::Off, ..opts },
+                )
+                .execute();
+                let scale = reference.sigma_max().max(1.0);
+                for (a, b) in served.values.iter().zip(&reference.values) {
+                    assert!(
+                        (a - b).abs() <= 1e-12 * scale,
+                        "{n}x{m}/{s} {layout:?} {folding:?}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
 /// Self-paired frequencies (DC and Nyquist lines) are solved exactly once:
 /// the folded solve count equals `(freqs + self_paired)/2` on every grid
 /// parity, and the folded spectra at those frequencies match the unfolded
