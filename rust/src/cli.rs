@@ -16,9 +16,11 @@ USAGE: conv-svd-lfa <command> [options]
 COMMANDS
   analyze      --n <N> [--m M] [--c-in C] [--c-out C] [--k K] [--threads T]
                [--seed S] [--method lfa|fft|explicit] [--top J]
+               [--precision f64|f32|f32-refined]
                Compute the spectrum of a random conv layer.
   audit        <builtin-or-config.toml> [--threads T] [--backend auto|native|pjrt]
                [--artifacts DIR] [--top-k K] [--no-fold] [--csv]
+               [--precision f64|f32|f32-refined]
                [--cache-bytes N] [--no-cache]
                Analyze all conv layers of a model through the coordinator
                service (one planned model job, tiled across the worker
@@ -31,6 +33,7 @@ COMMANDS
                Builtins: lenet, vgg-small, resnet20ish, paper-c16-n<N>.
   audit-model  <builtin-or-config.toml> [--threads T] [--solver jacobi|gram]
                [--top J] [--top-k K] [--no-fold] [--csv] [--repeat R]
+               [--precision f64|f32|f32-refined]
                [--cache-bytes N] [--no-cache]
                Whole-model spectral report straight off a ModelPlan: every
                layer planned once, equal-shape layers batched into shared
@@ -62,8 +65,17 @@ decomposed: folded native layers their fundamental domain, PJRT-routed
 layers the full grid, cache-served layers nothing) and mirror the rest.
 --no-fold solves every frequency independently (the unfolded reference).
 
+--precision selects the scalar width of the native hot loop (outputs are
+always f64): f64 (default) keeps the ≤1e-12 verification thresholds; f32
+runs the SIMD-friendly single-precision sweep (~1e-4·σ_max accuracy,
+twice the lane width); f32-refined runs the f32 sweep plus one f64
+polish per frequency, restoring ≤1e-12 at a fraction of the f64 cost.
+PJRT artifacts always compute in f32 regardless of the flag.
+
 Result & plan caching is on by default for both audit commands: spectra
-are content-addressed by the kernel weight bits + geometry + options, so
+are content-addressed by the kernel weight bits + geometry + options
+(including the precision tier — an f32 result is never served where an
+f64 one was requested; PJRT results cache under f32-pinned keys), so
 repeat audits of unchanged layers are served from an LRU cache without
 re-solving a single frequency. The `cache: H hits / M misses / E
 evictions` report line shows the traffic; --cache-bytes N caps the result
@@ -214,5 +226,14 @@ mod tests {
         );
         assert!(HELP.contains("cache: H hits / M misses / E"), "HELP must name the cache line");
         assert!(HELP.contains("--repeat R"), "HELP must document audit-model --repeat");
+        // Precision tiers: every native-sweep command's usage line carries
+        // the flag, and the prose explains the tiers + PJRT's f32 pin.
+        assert!(
+            HELP.matches("--precision f64|f32|f32-refined").count() >= 3,
+            "HELP must document --precision on analyze, audit and audit-model"
+        );
+        for detail in ["f32-refined", "≤1e-12", "f32-pinned"] {
+            assert!(HELP.contains(detail), "HELP must document precision {detail:?}");
+        }
     }
 }

@@ -2,7 +2,7 @@
 
 use crate::conv::ConvKernel;
 use crate::engine::SpectrumRequest;
-use crate::lfa::{BlockSolver, Fold};
+use crate::lfa::{BlockSolver, Fold, Precision};
 use crate::model::config::ModelConfig;
 use std::sync::Arc;
 
@@ -32,6 +32,10 @@ pub struct JobSpec {
     /// of `θ → −θ`, tiles cover its rows, and assembly mirrors the rest.
     /// PJRT-routed jobs always sweep the full grid.
     pub folding: Fold,
+    /// Precision tier for native tiles (default [`Precision::F64`]).
+    /// PJRT artifacts always compute in f32 — their results cache under a
+    /// key pinned to [`Precision::F32`] regardless of this field.
+    pub precision: Precision,
     /// Frequency rows per tile (0 = pick automatically).
     pub tile_rows: usize,
 }
@@ -46,6 +50,7 @@ impl JobSpec {
             solver: BlockSolver::Jacobi,
             backend: Backend::Auto,
             folding: Fold::Auto,
+            precision: Precision::F64,
             tile_rows: 0,
         }
     }
@@ -62,6 +67,11 @@ impl JobSpec {
 
     pub fn with_folding(mut self, folding: Fold) -> Self {
         self.folding = folding;
+        self
+    }
+
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
         self
     }
 
@@ -113,6 +123,10 @@ pub struct ModelJobSpec {
     /// [`Fold::Auto`]); per-layer PJRT-routed tiles always sweep the full
     /// grid.
     pub folding: Fold,
+    /// Precision tier for native tiles (default [`Precision::F64`]).
+    /// PJRT-routed layers compute in f32 regardless and cache under keys
+    /// pinned to [`Precision::F32`].
+    pub precision: Precision,
     /// Coarse frequency rows per tile (0 = pick automatically per layer).
     pub tile_rows: usize,
 }
@@ -126,6 +140,7 @@ impl ModelJobSpec {
             backend: Backend::Auto,
             request: SpectrumRequest::Full,
             folding: Fold::Auto,
+            precision: Precision::F64,
             tile_rows: 0,
         }
     }
@@ -142,6 +157,11 @@ impl ModelJobSpec {
 
     pub fn with_folding(mut self, folding: Fold) -> Self {
         self.folding = folding;
+        self
+    }
+
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
         self
     }
 

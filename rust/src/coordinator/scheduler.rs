@@ -24,11 +24,15 @@
 //!
 //! Repeat traffic short-circuits even earlier: a [`SpectralCache`]
 //! (enabled by default, [`SchedulerConfig::cache_bytes`]) is consulted
-//! **before tiling** — a native job (or model layer) whose content
-//! signature matches a cached result is served the shared spectrum with
-//! zero tiles queued and zero frequencies re-solved, and freshly computed
-//! native results populate the cache at job finish. Plans are cached the
-//! same way, so a repeat submission re-plans nothing.
+//! **before tiling** — a job (or model layer) whose content signature
+//! matches a cached result is served the shared spectrum with zero tiles
+//! queued and zero frequencies re-solved, and freshly computed results
+//! populate the cache at job finish. Signatures pin the precision tier,
+//! so this covers every execution route: native jobs key at their
+//! requested [`Precision`], and PJRT-routed work — whose AOT artifacts
+//! compute in f32 — keys at [`Precision::F32`], interchangeable with a
+//! native f32 sweep of the same content and with nothing else. Plans are
+//! cached the same way, so a repeat submission re-plans nothing.
 //! Model jobs carry a [`SpectrumRequest`]: `TopK(k)` tiles run the
 //! warm-started top-k sweep over their contiguous row strip natively (AOT
 //! artifacts bake in the full per-frequency SVD, so `Backend::Auto` skips
@@ -42,7 +46,7 @@ use crate::engine::{
 };
 use crate::err;
 use crate::error::Result;
-use crate::lfa::{self, LfaOptions};
+use crate::lfa::{self, LfaOptions, Precision};
 use crate::runtime::{ArtifactSpec, PjrtExecutor};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -60,10 +64,12 @@ pub struct SchedulerConfig {
     pub artifacts: Vec<ArtifactSpec>,
     /// Result/plan cache byte budget: `None` disables caching, `Some(0)`
     /// uses [`crate::engine::DEFAULT_CACHE_BYTES`], `Some(n)` caps result
-    /// entries at `n` bytes. Native jobs are served from (and populate)
-    /// the cache;
-    /// PJRT-routed work bypasses it (artifact results are f32-precision —
-    /// caching them would silently degrade later native consumers).
+    /// entries at `n` bytes. Every execution route is served from (and
+    /// populates) the cache: signatures pin the precision tier, so
+    /// PJRT-routed work caches under [`Precision::F32`] keys and can never
+    /// be served where an f64 (or refined) spectrum was requested. The one
+    /// uncacheable shape is an explicit-PJRT job with no matching artifact,
+    /// which contractually fails instead of computing.
     pub cache_bytes: Option<usize>,
 }
 
@@ -148,8 +154,10 @@ struct JobState {
     artifact: Option<ArtifactSpec>,
     /// Pre-converted f32 weights for the PJRT path.
     weights_f32: Vec<f32>,
-    /// Result cache to populate at finish (native jobs only), with the
-    /// job's content signature.
+    /// Result cache to populate at finish, with the job's content
+    /// signature — precision-pinned to `F32` for PJRT-routed jobs. `None`
+    /// when caching is off or the job contractually fails (explicit PJRT
+    /// without an artifact).
     cache: Option<(Arc<SpectralCache>, Signature)>,
 }
 
@@ -184,9 +192,10 @@ struct ModelJobState {
     artifacts: Vec<Option<ArtifactSpec>>,
     /// Pre-converted f32 weights for PJRT-routed layers (empty otherwise).
     weights_f32: Vec<Vec<f32>>,
-    /// Result cache + per-layer signatures (signatures only for native,
-    /// cacheable layers) and the per-layer cache hits: a hit layer has no
-    /// tiles — its spectrum ships straight from here at finish.
+    /// Result cache + per-layer signatures (precision-pinned to `F32` for
+    /// PJRT-routed layers, `None` only for contractually failing ones) and
+    /// the per-layer cache hits: a hit layer has no tiles — its spectrum
+    /// ships straight from here at finish.
     cache: Option<Arc<SpectralCache>>,
     keys: Vec<Option<Signature>>,
     cached: Vec<Option<Arc<lfa::Spectrum>>>,
@@ -263,13 +272,17 @@ impl Scheduler {
             solver: spec.solver,
             folding: spec.folding,
             threads: 1,
+            precision: spec.precision,
             ..Default::default()
         };
-        // Cache check before any tiling or planning. Only native jobs are
-        // cacheable (PJRT results are f32-precision — see SchedulerConfig);
-        // an explicit-PJRT job without an artifact contractually *fails*,
-        // so it must not be silently served from a native result either.
-        let cache = if artifact.is_none() && spec.backend != Backend::Pjrt {
+        // Cache check before any tiling or planning. Signatures pin the
+        // precision tier, so every route that computes is cacheable:
+        // artifact-routed jobs key at `Precision::F32` (that is what PJRT
+        // delivers, whatever the spec asked for) and native jobs key at
+        // their requested tier. The one exception: an explicit-PJRT job
+        // without an artifact contractually *fails*, so it must not be
+        // silently served from a cached result either.
+        let cache = if artifact.is_some() || spec.backend != Backend::Pjrt {
             self.cache.as_ref().map(|c| {
                 let key = Signature::result(
                     &spec.kernel,
@@ -279,6 +292,8 @@ impl Scheduler {
                     &opts,
                     SpectrumRequest::Full,
                 );
+                let key =
+                    if artifact.is_some() { key.with_precision(Precision::F32) } else { key };
                 (Arc::clone(c), key)
             })
         } else {
@@ -416,6 +431,7 @@ impl Scheduler {
             solver: spec.solver,
             folding: spec.folding,
             threads: 1,
+            precision: spec.precision,
             ..Default::default()
         };
         // The plan cache makes a repeat model submission re-plan nothing:
@@ -468,23 +484,30 @@ impl Scheduler {
             artifacts.push(art);
             weights_f32.push(w);
         }
-        // Result-cache check, per layer: a native layer whose signature
-        // hits gets **no tiles** — its spectrum ships from the cache at
-        // finish, zero frequencies re-solved. PJRT-routed layers bypass
-        // the cache (f32-precision results are never cached).
+        // Result-cache check, per layer: a layer whose signature hits gets
+        // **no tiles** — its spectrum ships from the cache at finish, zero
+        // frequencies re-solved. Native layers key at the job's precision
+        // tier; PJRT-routed layers key at `Precision::F32` (what the AOT
+        // artifact computes in), so a repeat PJRT audit is a pure hit and
+        // an f32 result can never be served to an f64 consumer.
         let mut keys: Vec<Option<Signature>> = vec![None; nlayers];
         let mut cached: Vec<Option<Arc<lfa::Spectrum>>> = vec![None; nlayers];
         if let Some(c) = &self.cache {
             for i in 0..nlayers {
                 // (Explicit-PJRT model jobs fail per unmatched layer —
-                // never mask that with a cached native result.)
-                if artifacts[i].is_none() && spec.backend != Backend::Pjrt {
+                // never mask that with a cached result.)
+                if artifacts[i].is_some() || spec.backend != Backend::Pjrt {
                     // Cached builds stored each layer's plan signature:
                     // derive the result key instead of re-hashing the
                     // whole weight tensor a second time per submission.
                     let key = match plan.layer_plan_signature(i) {
                         Some(ps) => ps.for_request(spec.request),
                         None => plan.layer_plan(i).result_signature(spec.request),
+                    };
+                    let key = if artifacts[i].is_some() {
+                        key.with_precision(Precision::F32)
+                    } else {
+                        key
                     };
                     cached[i] = c.get(&key);
                     if cached[i].is_some() {
@@ -872,7 +895,8 @@ fn finish_model_job(state: &ModelJobState, metrics: &Metrics) {
                 let slice = values[off..off + lp.freqs() * r].to_vec();
                 let spectrum =
                     Arc::new(lp.spectrum_from_values(state.spec.request, slice));
-                // Freshly computed native layers enter the result cache.
+                // Freshly computed layers enter the result cache under
+                // their precision-pinned key (F32 for PJRT-routed ones).
                 if let (Some(cache), Some(key)) = (&state.cache, &state.keys[i]) {
                     let evicted = cache.insert(*key, Arc::clone(&spectrum));
                     metrics.cache_evictions.fetch_add(evicted, Ordering::Relaxed);
@@ -926,7 +950,8 @@ fn finish_job(state: &JobState, metrics: &Metrics) {
         per_freq: spec.rank(),
         values,
     });
-    // Freshly computed native results populate the cache for repeats.
+    // Freshly computed results populate the cache for repeats, under the
+    // precision-pinned key (F32 for PJRT-routed jobs).
     if let Some((cache, key)) = &state.cache {
         let evicted = cache.insert(*key, Arc::clone(&spectrum));
         metrics.cache_evictions.fetch_add(evicted, Ordering::Relaxed);

@@ -10,7 +10,7 @@ use super::scheduler::{JobResult, Scheduler, SchedulerConfig};
 use crate::conv::ConvKernel;
 use crate::engine::SpectrumRequest;
 use crate::error::Result;
-use crate::lfa::{self, BlockSolver, Fold};
+use crate::lfa::{self, BlockSolver, Fold, Precision};
 use crate::model::config::ModelConfig;
 use crate::runtime::{load_manifest, PjrtExecutor};
 use std::path::Path;
@@ -31,6 +31,10 @@ pub struct ServiceConfig {
     /// Conjugate-pair frequency folding for native tiles (default
     /// [`Fold::Auto`]; the CLI's `--no-fold` maps to [`Fold::Off`]).
     pub folding: Fold,
+    /// Precision tier for native tiles (default [`Precision::F64`]; the
+    /// CLI's `--precision {f64,f32,f32-refined}`). PJRT-routed work always
+    /// computes in f32 and caches under [`Precision::F32`] keys.
+    pub precision: Precision,
     /// Bounded job-queue depth for the scheduler (0 = default —
     /// [`SchedulerConfig::DEFAULT_QUEUE_DEPTH`]).
     pub queue_depth: usize,
@@ -50,6 +54,7 @@ impl Default for ServiceConfig {
             artifacts_dir: None,
             verify: true,
             folding: Fold::Auto,
+            precision: Precision::F64,
             queue_depth: 0,
             cache_bytes: Some(0),
         }
@@ -150,7 +155,8 @@ impl SpectralService {
         let spec = JobSpec::new(name, kernel.clone(), n, m)
             .with_backend(self.config.backend)
             .with_solver(self.config.solver)
-            .with_folding(self.config.folding);
+            .with_folding(self.config.folding)
+            .with_precision(self.config.precision);
         let result = self.scheduler.run(spec)?;
         Ok(self.report(name, kernel, n, m, result))
     }
@@ -185,6 +191,7 @@ impl SpectralService {
             .with_backend(self.config.backend)
             .with_solver(self.config.solver)
             .with_folding(self.config.folding)
+            .with_precision(self.config.precision)
             .with_request(request);
         let result = self.scheduler.run_model(spec)?;
         let mut reports = Vec::with_capacity(result.layers.len());

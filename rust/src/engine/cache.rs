@@ -48,7 +48,7 @@ use super::plan::SpectralPlan;
 use super::SpectrumRequest;
 use crate::conv::ConvKernel;
 use crate::lfa::spectrum::Spectrum;
-use crate::lfa::svd::{BlockSolver, Fold, LfaOptions};
+use crate::lfa::svd::{BlockSolver, Fold, LfaOptions, Precision};
 use crate::lfa::symbol::BlockLayout;
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -104,6 +104,10 @@ pub struct Signature {
     layout: BlockLayout,
     solver: BlockSolver,
     folding: Fold,
+    /// Scalar width of the sweep. Pinned into the digest: an f32 spectrum
+    /// (~1e-4 relative) must never be served where an f64 or refined one
+    /// was requested — and vice versa, so each tier caches independently.
+    precision: Precision,
     /// `Some(request)` for result signatures, `None` for plan signatures.
     request: Option<SpectrumRequest>,
     /// Resolved worker count for plan signatures, 0 for result signatures
@@ -127,6 +131,7 @@ impl Signature {
             layout: opts.layout,
             solver: opts.solver,
             folding: opts.folding,
+            precision: opts.precision,
             request: None,
             threads: 0,
         }
@@ -186,6 +191,14 @@ impl Signature {
     /// cleared) from any signature of the same content — no re-hash.
     pub fn for_plan(&self, threads: usize) -> Signature {
         Signature { request: None, threads: super::resolve_threads(threads), ..*self }
+    }
+
+    /// The same signature pinned to a different scalar width — no re-hash.
+    /// The scheduler keys PJRT-routed work with this: AOT artifacts compute
+    /// in f32, so their results are interchangeable with a native
+    /// [`Precision::F32`] sweep of the same content, and with nothing else.
+    pub fn with_precision(&self, precision: Precision) -> Signature {
+        Signature { precision, ..*self }
     }
 }
 
@@ -479,6 +492,22 @@ mod tests {
         assert_ne!(Signature::result(&k, 8, 8, 1, &gram, SpectrumRequest::Full), a);
         let planar = LfaOptions { layout: BlockLayout::PlanarStrided, ..opts };
         assert_ne!(Signature::result(&k, 8, 8, 1, &planar, SpectrumRequest::Full), a);
+        // Precision is pinned: each tier caches independently.
+        let f32p = LfaOptions { precision: Precision::F32, ..opts };
+        assert_ne!(Signature::result(&k, 8, 8, 1, &f32p, SpectrumRequest::Full), a);
+        let refp = LfaOptions { precision: Precision::F32Refined, ..opts };
+        assert_ne!(Signature::result(&k, 8, 8, 1, &refp, SpectrumRequest::Full), a);
+        assert_ne!(
+            Signature::result(&k, 8, 8, 1, &f32p, SpectrumRequest::Full),
+            Signature::result(&k, 8, 8, 1, &refp, SpectrumRequest::Full)
+        );
+        // Re-pinning equals computing at that tier directly — this is how
+        // the scheduler keys PJRT (f32) results without a second hash.
+        assert_eq!(
+            a.with_precision(Precision::F32),
+            Signature::result(&k, 8, 8, 1, &f32p, SpectrumRequest::Full)
+        );
+        assert_eq!(a.with_precision(Precision::F64), a);
         // Thread count does NOT change a result signature …
         let t8 = LfaOptions { threads: 8, ..opts };
         assert_eq!(Signature::result(&k, 8, 8, 1, &t8, SpectrumRequest::Full), a);

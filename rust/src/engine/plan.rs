@@ -32,11 +32,11 @@ use super::SpectrumRequest;
 use crate::conv::ConvKernel;
 use crate::lfa::spectrum::{conj_factor, mirror_fill, FullSvd, Spectrum, TopKSvd};
 use crate::lfa::stride::alias_mirror_index;
-use crate::lfa::svd::{BlockSolver, Fold, LfaOptions};
+use crate::lfa::svd::{BlockSolver, Fold, LfaOptions, Precision};
 use crate::lfa::symbol::{scatter_shard, BlockLayout, SymbolGrid};
 use crate::linalg::jacobi_svd;
 use crate::linalg::power::TopKOptions;
-use crate::numeric::{C64, CMat};
+use crate::numeric::{C32, C64, CMat, SimdReal};
 use std::f64::consts::PI;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -84,11 +84,26 @@ pub struct SpectralPlan {
     /// self-paired rows folded to columns `0..=mc/2`) and mirror the rest
     /// — valid because the kernel weights are real (`A(−θ) = conj(A(θ))`).
     fold: bool,
+    /// Scalar width the sweeps execute at ([`crate::lfa::Precision`]):
+    /// `F64` is the reference path, `F32` runs symbol assembly *and* the
+    /// solvers in f32 (twice the SIMD lanes), `F32Refined` adds an f64
+    /// refinement pass per frequency. Factor-producing paths
+    /// ([`Self::execute_full`], [`Self::execute_topk_factors`]) always run
+    /// in f64 regardless.
+    precision: Precision,
     /// Row-axis phase table, flattened `[kh][n]`: `py[d·n + i] =
     /// e^{2πi·i·(d − anchor_row)/n}`.
     py: Vec<C64>,
     /// Column-axis phase table, flattened `[kw][m]`.
     px: Vec<C64>,
+    /// f32 twin of `py`, narrowed from the f64 table (so the f32 phases
+    /// are the correctly rounded images of the reference phases).
+    py32: Vec<C32>,
+    /// f32 twin of `px`.
+    px32: Vec<C32>,
+    /// Kernel weights narrowed to f32 for reduced-precision symbol
+    /// assembly, same OIHW-taps-innermost order as `kernel.data`.
+    w32: Vec<f32>,
     /// Reusable per-worker workspaces (checked out per execution range).
     /// Owned by this plan alone, or shared with other equal-shape plans of a
     /// [`super::ModelPlan`] group.
@@ -155,6 +170,9 @@ impl SpectralPlan {
         }
         let block_rows = kernel.c_out;
         let block_cols = s * s * kernel.c_in;
+        let py32: Vec<C32> = py.iter().map(|z| z.to_c32()).collect();
+        let px32: Vec<C32> = px.iter().map(|z| z.to_c32()).collect();
+        let w32: Vec<f32> = kernel.data.iter().map(|&v| v as f32).collect();
         Self {
             kernel: kernel.clone(),
             n,
@@ -169,8 +187,12 @@ impl SpectralPlan {
             block_cols,
             rank: block_rows.min(block_cols),
             fold: opts.folding == Fold::Auto,
+            precision: opts.precision,
             py,
             px,
+            py32,
+            px32,
+            w32,
             pool,
         }
     }
@@ -298,6 +320,11 @@ impl SpectralPlan {
         }
     }
 
+    /// The scalar width the plan's sweeps execute at.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
     /// The options the plan was built with (threads as given, 0 = auto).
     pub fn options(&self) -> LfaOptions {
         LfaOptions {
@@ -305,6 +332,7 @@ impl SpectralPlan {
             solver: self.solver,
             threads: self.threads,
             folding: self.folding(),
+            precision: self.precision,
         }
     }
 
@@ -424,7 +452,9 @@ impl SpectralPlan {
     /// Fill `ws.block` with the symbol at coarse frequency `(ki, kj)`:
     /// the `c_out×c_in` symbol for stride 1, the horizontal concatenation
     /// `(1/s)·[A_{k_00} | … | A_{k_(s-1)(s-1)}]` for stride `s`. Uses only
-    /// the precomputed phase tables — no trig, no allocation.
+    /// the precomputed phase tables — no trig, no allocation. The tap
+    /// contraction stores the per-tap phases as split re/im planes and
+    /// runs both dot products in one fused [`SimdReal::dot_split`] pass.
     fn fill_block(&self, ki: usize, kj: usize, ws: &mut Workspace) {
         let (kh, kw) = (self.kernel.kh, self.kernel.kw);
         let (cout, cin) = (self.kernel.c_out, self.kernel.c_in);
@@ -436,11 +466,13 @@ impl SpectralPlan {
                 // Fine frequency this sub-block aliases from.
                 let fi = ki + a * self.nc;
                 let fj = kj + b * self.mc;
-                // Combine the two 1-D tables into per-tap phases.
+                // Combine the two 1-D tables into split per-tap phases.
                 for r in 0..kh {
                     let pyr = self.py[r * self.n + fi];
                     for c in 0..kw {
-                        ws.tap_phase[r * kw + c] = pyr * self.px[c * self.m + fj];
+                        let ph = pyr * self.px[c * self.m + fj];
+                        ws.tap_re[r * kw + c] = ph.re;
+                        ws.tap_im[r * kw + c] = ph.im;
                     }
                 }
                 // Contract taps against the OIHW weight tensor; taps are the
@@ -451,11 +483,9 @@ impl SpectralPlan {
                     for i in 0..cin {
                         let p = o * cin + i;
                         let w = &self.kernel.data[p * ntaps..(p + 1) * ntaps];
-                        let mut acc = C64::ZERO;
-                        for (wv, ph) in w.iter().zip(ws.tap_phase.iter()) {
-                            acc.re += wv * ph.re;
-                            acc.im += wv * ph.im;
-                        }
+                        let (re, im) =
+                            f64::dot_split(w, &ws.tap_re[..ntaps], &ws.tap_im[..ntaps]);
+                        let mut acc = C64::new(re, im);
                         if s > 1 {
                             acc = acc.scale(inv_s);
                         }
@@ -463,6 +493,116 @@ impl SpectralPlan {
                     }
                 }
             }
+        }
+    }
+
+    /// f32 twin of [`Self::fill_block`]: assembles the symbol into
+    /// `ws.block32` from the narrowed phase tables and weights — the
+    /// reduced-precision tiers' symbol stage, at twice the SIMD lanes.
+    fn fill_block32(&self, ki: usize, kj: usize, ws: &mut Workspace) {
+        let (kh, kw) = (self.kernel.kh, self.kernel.kw);
+        let (cout, cin) = (self.kernel.c_out, self.kernel.c_in);
+        let s = self.stride;
+        let ntaps = kh * kw;
+        let inv_s = 1.0f32 / s as f32;
+        for a in 0..s {
+            for b in 0..s {
+                let fi = ki + a * self.nc;
+                let fj = kj + b * self.mc;
+                for r in 0..kh {
+                    let pyr = self.py32[r * self.n + fi];
+                    for c in 0..kw {
+                        let ph = pyr * self.px32[c * self.m + fj];
+                        ws.tap_re32[r * kw + c] = ph.re;
+                        ws.tap_im32[r * kw + c] = ph.im;
+                    }
+                }
+                let col0 = (a * s + b) * cin;
+                for o in 0..cout {
+                    for i in 0..cin {
+                        let p = o * cin + i;
+                        let w = &self.w32[p * ntaps..(p + 1) * ntaps];
+                        let (re, im) =
+                            f32::dot_split(w, &ws.tap_re32[..ntaps], &ws.tap_im32[..ntaps]);
+                        let mut acc = C32::new(re, im);
+                        if s > 1 {
+                            acc = acc.scale(inv_s);
+                        }
+                        ws.block32[o * self.block_cols + col0 + i] = acc;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Assemble and solve frequency `(ki, kj)` at the plan's precision:
+    /// full per-frequency singular values, descending, into `dst`
+    /// (`rank` long, always f64 at the output boundary). The single
+    /// dispatch point of the full-sweep precision tiers.
+    #[inline]
+    fn solve_freq(&self, ki: usize, kj: usize, ws: &mut Workspace, dst: &mut [f64]) {
+        match self.precision {
+            Precision::F64 => {
+                self.fill_block(ki, kj, ws);
+                ws.solve_block(self.solver, self.block_rows, self.block_cols, dst);
+            }
+            Precision::F32 => {
+                self.fill_block32(ki, kj, ws);
+                ws.solve_block32(self.solver, self.block_rows, self.block_cols, dst);
+            }
+            Precision::F32Refined => {
+                self.fill_block(ki, kj, ws);
+                ws.solve_block_refined(self.block_rows, self.block_cols, dst);
+            }
+        }
+    }
+
+    /// Top-k companion of [`Self::solve_freq`]: assemble and solve
+    /// frequency `(ki, kj)` for its `ke` largest values at the plan's
+    /// precision. Returns the solver iteration steps spent.
+    #[inline]
+    fn solve_freq_topk(
+        &self,
+        ki: usize,
+        kj: usize,
+        ke: usize,
+        opts: TopKOptions,
+        ws: &mut Workspace,
+        dst: &mut [f64],
+    ) -> u64 {
+        match self.precision {
+            Precision::F64 => {
+                self.fill_block(ki, kj, ws);
+                ws.solve_block_topk(self.block_rows, self.block_cols, ke, opts, dst) as u64
+            }
+            Precision::F32 => {
+                self.fill_block32(ki, kj, ws);
+                ws.solve_block_topk32(self.block_rows, self.block_cols, ke, opts, dst) as u64
+            }
+            Precision::F32Refined => {
+                self.fill_block(ki, kj, ws);
+                ws.solve_block_topk_refined(self.block_rows, self.block_cols, ke, opts, dst) as u64
+            }
+        }
+    }
+
+    /// Cold-start the top-k scratch the plan's precision actually sweeps
+    /// with (`topk` for f64, `topk32` for both reduced tiers).
+    #[inline]
+    fn topk_reset(&self, ws: &mut Workspace) {
+        match self.precision {
+            Precision::F64 => ws.topk.reset(),
+            Precision::F32 | Precision::F32Refined => ws.topk32.reset(),
+        }
+    }
+
+    /// Conjugate the carried warm basis at a fold seam — on whichever
+    /// scratch the plan's precision sweeps with.
+    #[inline]
+    fn topk_conjugate(&self, ws: &mut Workspace) {
+        match self.precision {
+            Precision::F64 => ws.topk.conjugate_basis(),
+            Precision::F32 | Precision::F32Refined => ws.topk32.conjugate_basis(),
         }
     }
 
@@ -475,10 +615,9 @@ impl SpectralPlan {
         let r = self.rank;
         for ki in row_lo..row_hi {
             for kj in 0..self.mc {
-                self.fill_block(ki, kj, ws);
                 let f = (ki - row_lo) * self.mc + kj;
                 let dst = &mut out[f * r..(f + 1) * r];
-                ws.solve_block(self.solver, self.block_rows, self.block_cols, dst);
+                self.solve_freq(ki, kj, ws, dst);
             }
         }
     }
@@ -514,9 +653,8 @@ impl SpectralPlan {
             let base = (ki - fr_lo) * self.mc * r;
             let cols = self.fold_row_cols(ki);
             for kj in 0..cols {
-                self.fill_block(ki, kj, ws);
                 let dst = &mut out[base + kj * r..base + (kj + 1) * r];
-                ws.solve_block(self.solver, self.block_rows, self.block_cols, dst);
+                self.solve_freq(ki, kj, ws, dst);
             }
             if cols < self.mc {
                 self.mirror_row_tail(base, r, out);
@@ -561,19 +699,17 @@ impl SpectralPlan {
         let opts = TopKOptions::default();
         // Never inherit a basis from whatever this pooled workspace did
         // last (another strip, another layer): cold-start the sweep.
-        ws.topk.reset();
+        self.topk_reset(ws);
         let mut iters = 0u64;
         for ki in row_lo..row_hi {
             for step in 0..self.mc {
                 let kj = self.serpentine_col(ki - row_lo, step);
                 if !warm_sweep {
-                    ws.topk.reset();
+                    self.topk_reset(ws);
                 }
-                self.fill_block(ki, kj, ws);
                 let f = (ki - row_lo) * self.mc + kj;
                 let dst = &mut out[f * ke..(f + 1) * ke];
-                iters +=
-                    ws.solve_block_topk(self.block_rows, self.block_cols, ke, opts, dst) as u64;
+                iters += self.solve_freq_topk(ki, kj, ke, opts, ws, dst);
             }
         }
         iters
@@ -672,19 +808,18 @@ impl SpectralPlan {
         let opts = TopKOptions::default();
         // Never inherit a basis from whatever this pooled workspace did
         // last (another strip, another layer): cold-start the sweep.
-        ws.topk.reset();
+        self.topk_reset(ws);
         let mut iters = 0u64;
         self.walk_fold_rows(fr_lo, fr_hi, |ki, kj, crossed_seam| {
             if crossed_seam {
-                ws.topk.conjugate_basis();
+                self.topk_conjugate(ws);
             }
             if !warm_sweep {
-                ws.topk.reset();
+                self.topk_reset(ws);
             }
-            self.fill_block(ki, kj, ws);
             let base = (ki - fr_lo) * self.mc * ke;
             let dst = &mut out[base + kj * ke..base + (kj + 1) * ke];
-            iters += ws.solve_block_topk(self.block_rows, self.block_cols, ke, opts, dst) as u64;
+            iters += self.solve_freq_topk(ki, kj, ke, opts, ws, dst);
         });
         for ki in fr_lo..fr_hi {
             if self.fold_row_cols(ki) < self.mc {
@@ -945,7 +1080,10 @@ impl SpectralPlan {
     /// frequencies get copied values, conjugated `U` and permuted-conjugate
     /// `V` — exact by the symbol symmetry) or, with folding off, over the
     /// whole grid. The factor matrices are fresh allocations by necessity —
-    /// they are the output.
+    /// they are the output. Always executes in f64 regardless of the
+    /// plan's [`Precision`]: the vectors are consumed downstream
+    /// (compression, reconstruction) where reduced precision would
+    /// compound.
     pub fn execute_topk_factors(&self, k: usize) -> TopKSvd {
         let ke = self.topk_per_freq(k);
         let freqs = self.freqs();
@@ -1079,7 +1217,8 @@ impl SpectralPlan {
     /// factors (`U(−θ) = conj(U(θ))`, `V(−θ) = Pᵀ·conj(V(θ))` with the
     /// stride aliasing permutation `P`) — exact by the symbol symmetry, so
     /// spectral transfer functions reconstruct `A(−θ)` bit-for-bit from
-    /// them.
+    /// them. Like [`Self::execute_topk_factors`], always f64 regardless of
+    /// the plan's [`Precision`].
     pub fn execute_full(&self) -> FullSvd {
         let freqs = self.freqs();
         let r = self.rank;
@@ -1514,6 +1653,67 @@ mod tests {
                     "{n}x{m}/{s} f={f}: {}",
                     ta.max_abs_diff(&tb)
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn precision_tiers_track_the_f64_full_sweep() {
+        let mut rng = Pcg64::seeded(617);
+        let k = ConvKernel::random_he(4, 3, 3, 3, &mut rng);
+        let base = LfaOptions { threads: 1, ..Default::default() };
+        let want = SpectralPlan::new(&k, 6, 6, base).execute();
+        let scale = want.sigma_max().max(1.0);
+        let f32p =
+            SpectralPlan::new(&k, 6, 6, LfaOptions { precision: Precision::F32, ..base });
+        assert_eq!(f32p.precision(), Precision::F32);
+        assert_eq!(f32p.options().precision, Precision::F32);
+        let got32 = f32p.execute();
+        for (a, b) in want.values.iter().zip(&got32.values) {
+            assert!((a - b).abs() <= 1e-4 * scale, "f32: {a} vs {b}");
+        }
+        let refp = SpectralPlan::new(
+            &k,
+            6,
+            6,
+            LfaOptions { precision: Precision::F32Refined, ..base },
+        );
+        let ref32 = refp.execute();
+        for (a, b) in want.values.iter().zip(&ref32.values) {
+            assert!((a - b).abs() <= 1e-12 * scale, "refined: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn precision_tiers_track_the_f64_topk_sweep() {
+        let mut rng = Pcg64::seeded(618);
+        let k = ConvKernel::random_he(4, 3, 3, 3, &mut rng);
+        let base = LfaOptions { threads: 1, ..Default::default() };
+        for &(n, m, s) in &[(6usize, 6usize, 1usize), (8, 8, 2)] {
+            let want = SpectralPlan::with_stride(&k, n, m, s, base).execute_topk(2);
+            let scale = want.spectrum.sigma_max().max(1.0);
+            let f32p = SpectralPlan::with_stride(
+                &k,
+                n,
+                m,
+                s,
+                LfaOptions { precision: Precision::F32, ..base },
+            );
+            let got32 = f32p.execute_topk(2);
+            assert!(got32.iterations > 0);
+            for (a, b) in want.spectrum.values.iter().zip(&got32.spectrum.values) {
+                assert!((a - b).abs() <= 2e-3 * scale, "{n}x{m}/{s} f32: {a} vs {b}");
+            }
+            let refp = SpectralPlan::with_stride(
+                &k,
+                n,
+                m,
+                s,
+                LfaOptions { precision: Precision::F32Refined, ..base },
+            );
+            let refd = refp.execute_topk(2);
+            for (a, b) in want.spectrum.values.iter().zip(&refd.spectrum.values) {
+                assert!((a - b).abs() <= 1e-8 * scale, "{n}x{m}/{s} refined: {a} vs {b}");
             }
         }
     }

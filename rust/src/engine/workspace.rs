@@ -7,6 +7,15 @@
 //! worker's first block — so the per-frequency hot loop performs **zero heap
 //! allocation**.
 //!
+//! Every buffer exists in two widths: the f64 set serves
+//! [`crate::lfa::Precision::F64`] and the refinement polish, the f32 twins
+//! (`block32`, `jacobi32`, `gram32`, `topk32`, the split tap planes) serve
+//! the reduced-precision tiers — so one pooled workspace can execute a plan
+//! of any precision without reallocating. The per-tap phase factors are
+//! stored as **split re/im planes** rather than interleaved complex: that is
+//! the layout the [`crate::numeric::SimdReal::dot_split`] kernel consumes
+//! when contracting real weights against complex phases in symbol assembly.
+//!
 //! Workspaces live in a [`WorkspacePool`]. Every [`super::SpectralPlan`]
 //! owns (or shares) one: a standalone plan creates its own, while
 //! [`super::ModelPlan`] hands one shared pool to every layer of an
@@ -15,27 +24,53 @@
 
 use crate::lfa::svd::BlockSolver;
 use crate::linalg::jacobi_eig::{self, GramScratch};
-use crate::linalg::jacobi_svd::{self, JacobiScratch};
+use crate::linalg::jacobi_svd::{self, JacobiScratch, RefineScratch};
 use crate::linalg::power::{self, TopKOptions, TopKScratch};
-use crate::numeric::C64;
+use crate::numeric::{C32, C64};
 use std::sync::Mutex;
 
 /// Reusable per-worker scratch buffers for block symbol + SVD work.
 pub struct Workspace {
     /// Row-major `block_rows×block_cols` symbol block under construction.
     pub block: Vec<C64>,
-    /// Per-tap phase factors `e^{2πi⟨k,y⟩}`, `kh·kw` long.
-    pub tap_phase: Vec<C64>,
+    /// f32 twin of `block` for the reduced-precision tiers.
+    pub block32: Vec<C32>,
+    /// Per-tap phase factors `e^{2πi⟨k,y⟩}` as split re/im planes,
+    /// `kh·kw` long each — the operand layout of
+    /// [`crate::numeric::SimdReal::dot_split`].
+    pub tap_re: Vec<f64>,
+    /// Imaginary plane of the per-tap phases.
+    pub tap_im: Vec<f64>,
+    /// f32 twin of `tap_re`.
+    pub tap_re32: Vec<f32>,
+    /// f32 twin of `tap_im`.
+    pub tap_im32: Vec<f32>,
     /// One-sided Jacobi work matrices.
     pub jacobi: JacobiScratch,
     /// Gram-route work matrix (ablation solver).
     pub gram: GramScratch,
+    /// f32 twin of `jacobi`.
+    pub jacobi32: JacobiScratch<f32>,
+    /// f32 twin of `gram`.
+    pub gram32: GramScratch<f32>,
+    /// Mixed-precision refinement scratch: f32 Jacobi sweep, widened
+    /// basis replay, f64 polish
+    /// ([`jacobi_svd::singular_values_refined_into`]).
+    pub refine: RefineScratch,
+    /// Widened right-vector buffer for the top-k Rayleigh refinement
+    /// ([`power::refine_topk_values`]), `block_cols` long.
+    pub refine_v: Vec<C64>,
+    /// f32 staging for singular values before widening into f64 output.
+    pub svals32: Vec<f32>,
     /// Krylov-solver scratch for the top-k partial-spectrum mode. The
     /// converged basis of one frequency **warm-starts the next** along a
     /// sweep; [`power::TopKScratch::reset`] at a sweep boundary forces a
     /// cold start. Sized lazily on the first top-k solve (a warm-up
     /// execution, after which the hot loop is allocation-free).
     pub topk: TopKScratch,
+    /// f32 twin of `topk`: carries the warm basis of the reduced-precision
+    /// top-k sweeps (both `F32` and the `F32Refined` f32 stage).
+    pub topk32: TopKScratch<f32>,
 }
 
 impl Workspace {
@@ -45,12 +80,29 @@ impl Workspace {
         jacobi.reserve(rows, cols);
         let mut gram = GramScratch::new();
         gram.reserve(rows, cols);
+        let mut jacobi32 = JacobiScratch::<f32>::new();
+        jacobi32.reserve(rows, cols);
+        let mut gram32 = GramScratch::<f32>::new();
+        gram32.reserve(rows, cols);
+        let mut refine = RefineScratch::new();
+        refine.reserve(rows, cols);
+        let ntaps = ntaps.max(1);
         Self {
             block: vec![C64::ZERO; rows * cols],
-            tap_phase: vec![C64::ZERO; ntaps.max(1)],
+            block32: vec![C32::ZERO; rows * cols],
+            tap_re: vec![0.0f64; ntaps],
+            tap_im: vec![0.0f64; ntaps],
+            tap_re32: vec![0.0f32; ntaps],
+            tap_im32: vec![0.0f32; ntaps],
             jacobi,
             gram,
+            jacobi32,
+            gram32,
+            refine,
+            refine_v: vec![C64::ZERO; cols.max(1)],
+            svals32: vec![0.0f32; rows.min(cols).max(1)],
             topk: TopKScratch::new(),
+            topk32: TopKScratch::<f32>::new(),
         }
     }
 
@@ -69,6 +121,52 @@ impl Workspace {
         }
     }
 
+    /// [`Self::solve_block`] over the f32 twin `self.block32`: the whole
+    /// Jacobi / Gram sweep runs in f32 (twice the SIMD lanes per rotation),
+    /// and the converged values are widened into the f64 output. Expect
+    /// ~1e-4 relative accuracy — the [`crate::lfa::Precision::F32`] tier.
+    #[inline]
+    pub fn solve_block32(
+        &mut self,
+        solver: BlockSolver,
+        rows: usize,
+        cols: usize,
+        out: &mut [f64],
+    ) {
+        let r = rows.min(cols);
+        let vals = &mut self.svals32[..r];
+        match solver {
+            BlockSolver::Jacobi => jacobi_svd::singular_values_into(
+                &self.block32,
+                rows,
+                cols,
+                &mut self.jacobi32,
+                vals,
+            ),
+            BlockSolver::GramEigen => jacobi_eig::singular_values_gram_into(
+                &self.block32,
+                rows,
+                cols,
+                &mut self.gram32,
+                vals,
+            ),
+        }
+        for (o, &v) in out[..r].iter_mut().zip(vals.iter()) {
+            *o = v as f64;
+        }
+    }
+
+    /// Mixed-precision solve of the f64 block: an f32 Jacobi sweep does the
+    /// bulk of the rotations, then the accumulated basis is replayed against
+    /// the exact f64 rows and polished with one or two f64 sweeps —
+    /// ≤1e-12 relative to the all-f64 path at roughly f32 sweep cost
+    /// (the [`crate::lfa::Precision::F32Refined`] tier; always the Jacobi
+    /// route — the Gram ablation has no refinement ladder).
+    #[inline]
+    pub fn solve_block_refined(&mut self, rows: usize, cols: usize, out: &mut [f64]) {
+        jacobi_svd::singular_values_refined_into(&self.block, rows, cols, &mut self.refine, out)
+    }
+
     /// Top-`k` singular values (descending) of the current contents of
     /// `self.block` via warm-started Krylov iteration, seeded from
     /// whatever basis the previous solve on this workspace converged to.
@@ -84,6 +182,58 @@ impl Workspace {
         out: &mut [f64],
     ) -> usize {
         power::block_topk(&self.block, rows, cols, k, opts, &mut self.topk, out)
+    }
+
+    /// [`Self::solve_block_topk`] over the f32 twin `self.block32` with the
+    /// f32 Krylov scratch; converged values are widened into the f64
+    /// output.
+    #[inline]
+    pub fn solve_block_topk32(
+        &mut self,
+        rows: usize,
+        cols: usize,
+        k: usize,
+        opts: TopKOptions,
+        out: &mut [f64],
+    ) -> usize {
+        let vals = &mut self.svals32[..k];
+        let iters = power::block_topk(&self.block32, rows, cols, k, opts, &mut self.topk32, vals);
+        for (o, &v) in out[..k].iter_mut().zip(vals.iter()) {
+            *o = v as f64;
+        }
+        iters
+    }
+
+    /// Mixed-precision top-`k` of the f64 block: narrow it into `block32`,
+    /// run the f32 Krylov solve (warm starts carried in `topk32`), then
+    /// refine each value against the exact f64 block by a Rayleigh
+    /// quotient over the widened right vector — second-order accurate in
+    /// the f32 error, so the values land within ~1e-12 of the f64 path.
+    #[inline]
+    pub fn solve_block_topk_refined(
+        &mut self,
+        rows: usize,
+        cols: usize,
+        k: usize,
+        opts: TopKOptions,
+        out: &mut [f64],
+    ) -> usize {
+        let len = rows * cols;
+        for (d, s) in self.block32[..len].iter_mut().zip(self.block[..len].iter()) {
+            *d = s.to_c32();
+        }
+        let vals = &mut self.svals32[..k];
+        let iters = power::block_topk(&self.block32, rows, cols, k, opts, &mut self.topk32, vals);
+        power::refine_topk_values(
+            &self.block[..len],
+            rows,
+            cols,
+            &self.topk32,
+            k,
+            &mut self.refine_v[..cols],
+            out,
+        );
+        iters
     }
 }
 
@@ -161,6 +311,36 @@ mod tests {
     }
 
     #[test]
+    fn reduced_precision_solves_track_the_f64_path() {
+        let mut rng = Pcg64::seeded(502);
+        let a = CMat::random_normal(5, 4, &mut rng);
+        let mut ws = Workspace::for_block(5, 4, 9);
+        ws.block.copy_from_slice(&a.data);
+        for (d, s) in ws.block32.iter_mut().zip(&a.data) {
+            *d = s.to_c32();
+        }
+        let mut want = vec![0.0f64; 4];
+        ws.solve_block(BlockSolver::Jacobi, 5, 4, &mut want);
+        let scale = want[0].max(1.0);
+        // Pure f32: ~1e-4 relative.
+        let mut got32 = vec![0.0f64; 4];
+        ws.solve_block32(BlockSolver::Jacobi, 5, 4, &mut got32);
+        for (x, y) in want.iter().zip(&got32) {
+            assert!((x - y).abs() <= 1e-4 * scale, "{x} vs {y}");
+        }
+        ws.solve_block32(BlockSolver::GramEigen, 5, 4, &mut got32);
+        for (x, y) in want.iter().zip(&got32) {
+            assert!((x - y).abs() <= 5e-3 * scale, "gram32 {x} vs {y}");
+        }
+        // Refined: back to f64-grade accuracy.
+        let mut refined = vec![0.0f64; 4];
+        ws.solve_block_refined(5, 4, &mut refined);
+        for (x, y) in want.iter().zip(&refined) {
+            assert!((x - y).abs() <= 1e-12 * scale, "{x} vs {y}");
+        }
+    }
+
+    #[test]
     fn solve_block_topk_matches_full_extremes() {
         let mut rng = Pcg64::seeded(501);
         let a = CMat::random_normal(5, 4, &mut rng);
@@ -174,6 +354,35 @@ mod tests {
         assert!(ws.topk.is_warm());
         for j in 0..2 {
             assert!((top[j] - full[j]).abs() < 1e-9 * full[0].max(1.0), "{j}");
+        }
+    }
+
+    #[test]
+    fn reduced_precision_topk_tracks_and_refines() {
+        let mut rng = Pcg64::seeded(503);
+        let a = CMat::random_normal(6, 5, &mut rng);
+        let mut ws = Workspace::for_block(6, 5, 9);
+        ws.block.copy_from_slice(&a.data);
+        let mut full = vec![0.0f64; 5];
+        ws.solve_block(BlockSolver::Jacobi, 6, 5, &mut full);
+        let scale = full[0].max(1.0);
+        // Pure f32 top-k widens to ~1e-3 relative accuracy.
+        for (d, s) in ws.block32.iter_mut().zip(&a.data) {
+            *d = s.to_c32();
+        }
+        let mut top32 = vec![0.0f64; 2];
+        let iters = ws.solve_block_topk32(6, 5, 2, TopKOptions::default(), &mut top32);
+        assert!(iters >= 1);
+        assert!(ws.topk32.is_warm());
+        for j in 0..2 {
+            assert!((top32[j] - full[j]).abs() <= 1e-3 * scale, "{j}");
+        }
+        // Refined top-k recovers near-f64 values from the f32 basis.
+        ws.topk32.reset();
+        let mut refined = vec![0.0f64; 2];
+        ws.solve_block_topk_refined(6, 5, 2, TopKOptions::default(), &mut refined);
+        for j in 0..2 {
+            assert!((refined[j] - full[j]).abs() <= 1e-9 * scale, "{j}");
         }
     }
 

@@ -21,7 +21,7 @@ pub use spectrum::{FullSvd, Spectrum, TopKSvd};
 pub use stride::{strided_plan, strided_singular_values, strided_symbol_at};
 pub use svd::{
     singular_values, singular_values_timed, svd_full, tile_singular_values, BlockSolver, Fold,
-    LfaOptions, StageTiming,
+    LfaOptions, Precision, StageTiming,
 };
 pub use symbol::{
     compute_symbols, compute_symbols_parallel, symbol_at, taps_from_symbols, BlockLayout,

@@ -48,6 +48,61 @@ pub enum Fold {
     Off,
 }
 
+/// Numeric precision tier for the spectral engine.
+///
+/// Selects the scalar width the fused symbol→SVD hot loop runs at. All
+/// *outputs* (spectra, cache entries, CLI reports) are f64 regardless of
+/// tier — the tier controls the arithmetic, not the interface.
+///
+/// Paper error bounds: the LFA decomposition itself is exact (Theorem 1 —
+/// the per-frequency symbols *are* the operator blocks), so precision only
+/// enters through floating-point round-off in assembly and decomposition.
+/// `F64` keeps the crate's ≤1e-12 verification thresholds; `F32` degrades
+/// them to ~1e-4·σ_max (assembly + Jacobi round-off at ε≈1.2e-7, Gram-route
+/// paths worse — see docs/PAPER_MAP.md); `F32Refined` restores ≤1e-12 by
+/// polishing every frequency against an exactly-assembled f64 block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum Precision {
+    /// Full double precision everywhere (default).
+    #[default]
+    F64,
+    /// Single precision end-to-end: f32 phase tables, f32 weights, f32
+    /// solves; values widened to f64 at the output boundary. Roughly
+    /// 1e-4·σ_max absolute accuracy; twice the SIMD lane width.
+    F32,
+    /// f32 sweep plus one f64 refinement pass per frequency: the f32
+    /// rotations warm-start an exactly-assembled f64 polish, recovering
+    /// the ≤1e-12 guarantee at a fraction of the full f64 cost.
+    F32Refined,
+}
+
+impl Precision {
+    /// Parse the CLI spelling (`f64`, `f32`, `f32-refined`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "f64" => Some(Self::F64),
+            "f32" => Some(Self::F32),
+            "f32-refined" | "f32_refined" => Some(Self::F32Refined),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI/report spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::F64 => "f64",
+            Self::F32 => "f32",
+            Self::F32Refined => "f32-refined",
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Options for the LFA pipeline.
 #[derive(Clone, Copy, Debug)]
 pub struct LfaOptions {
@@ -60,6 +115,9 @@ pub struct LfaOptions {
     /// Conjugate-pair frequency folding (default [`Fold::Auto`]: solve the
     /// fundamental domain of `θ → −θ`, mirror the conjugate half).
     pub folding: Fold,
+    /// Scalar width of the per-frequency hot loop (default
+    /// [`Precision::F64`]). Outputs are always f64.
+    pub precision: Precision,
 }
 
 impl Default for LfaOptions {
@@ -69,6 +127,7 @@ impl Default for LfaOptions {
             solver: BlockSolver::Jacobi,
             threads: 0,
             folding: Fold::Auto,
+            precision: Precision::F64,
         }
     }
 }
@@ -139,7 +198,7 @@ pub fn svd_pass(grid: &SymbolGrid, opts: LfaOptions) -> Vec<f64> {
     let threads = crate::engine::resolve_threads(opts.threads).min(freqs.max(1));
     if threads <= 1 {
         let mut ws = Workspace::for_block(grid.c_out, grid.c_in, 1);
-        svd_pass_range(grid, opts.solver, 0, freqs, &mut ws, &mut values);
+        svd_pass_range(grid, opts, 0, freqs, &mut ws, &mut values);
         return values;
     }
     let chunk = freqs.div_ceil(threads);
@@ -152,7 +211,7 @@ pub fn svd_pass(grid: &SymbolGrid, opts: LfaOptions) -> Vec<f64> {
             rest = tail;
             s.spawn(move || {
                 let mut ws = Workspace::for_block(grid.c_out, grid.c_in, 1);
-                svd_pass_range(grid, opts.solver, lo, hi, &mut ws, head);
+                svd_pass_range(grid, opts, lo, hi, &mut ws, head);
             });
             lo = hi;
         }
@@ -161,9 +220,11 @@ pub fn svd_pass(grid: &SymbolGrid, opts: LfaOptions) -> Vec<f64> {
 }
 
 /// SVD the blocks `[f_lo, f_hi)`; writes into `out[(f−f_lo)·r ..]`.
+/// Honors `opts.precision`: the grid's f64 blocks are narrowed for the
+/// `F32` tier and refined against for `F32Refined`.
 fn svd_pass_range(
     grid: &SymbolGrid,
-    solver: BlockSolver,
+    opts: LfaOptions,
     f_lo: usize,
     f_hi: usize,
     ws: &mut Workspace,
@@ -173,7 +234,16 @@ fn svd_pass_range(
     for f in f_lo..f_hi {
         grid.block_into(f, &mut ws.block);
         let dst = &mut out[(f - f_lo) * r..(f - f_lo + 1) * r];
-        ws.solve_block(solver, grid.c_out, grid.c_in, dst);
+        match opts.precision {
+            Precision::F64 => ws.solve_block(opts.solver, grid.c_out, grid.c_in, dst),
+            Precision::F32 => {
+                for (d, s) in ws.block32.iter_mut().zip(ws.block.iter()) {
+                    *d = s.to_c32();
+                }
+                ws.solve_block32(opts.solver, grid.c_out, grid.c_in, dst);
+            }
+            Precision::F32Refined => ws.solve_block_refined(grid.c_out, grid.c_in, dst),
+        }
     }
 }
 

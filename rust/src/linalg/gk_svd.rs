@@ -5,28 +5,31 @@
 //! convolution into its `(m·n·c_out) × (m·n·c_in)` matrix and decompose it
 //! directly — the `O(n⁶c³)` approach of Table I that the LFA route obsoletes.
 //! `compute_uv = false` mirrors `numpy.linalg.svd(..., compute_uv=False)`
-//! used by the paper and skips all U/V accumulation work.
+//! used by the paper and skips all U/V accumulation work. Generic over the
+//! [`Real`] width like the rest of the linalg layer (`f64` default; the
+//! deflation tests `x.abs() + anorm == anorm` are precision-relative and
+//! work unchanged at `f32`).
 
-use crate::numeric::{Layout, Mat};
+use crate::numeric::{Layout, Mat, Real};
 
 /// Result of [`svd`]: `A = U · diag(s) · Vᵀ` with `s` sorted descending.
-pub struct SvdResult {
+pub struct SvdResult<T = f64> {
     /// `m×n` left singular vectors (thin), if requested.
-    pub u: Option<Mat>,
+    pub u: Option<Mat<T>>,
     /// Singular values, descending.
-    pub s: Vec<f64>,
+    pub s: Vec<T>,
     /// `n×n` transposed right singular vectors, if requested.
-    pub vt: Option<Mat>,
+    pub vt: Option<Mat<T>>,
 }
 
 #[inline]
-fn pythag(a: f64, b: f64) -> f64 {
+fn pythag<T: Real>(a: T, b: T) -> T {
     a.hypot(b)
 }
 
 #[inline]
-fn sign_of(a: f64, b: f64) -> f64 {
-    if b >= 0.0 {
+fn sign_of<T: Real>(a: T, b: T) -> T {
+    if b >= T::ZERO {
         a.abs()
     } else {
         -a.abs()
@@ -39,7 +42,7 @@ fn sign_of(a: f64, b: f64) -> f64 {
 /// Iteration cap is 60 sweeps per singular value (well above the ~30 the
 /// literature suggests); convergence failures panic loudly rather than
 /// returning garbage.
-pub fn svd(a: &Mat, compute_uv: bool) -> SvdResult {
+pub fn svd<T: Real>(a: &Mat<T>, compute_uv: bool) -> SvdResult<T> {
     if a.rows < a.cols {
         let at = a.transpose();
         let r = svd(&at, compute_uv);
@@ -53,26 +56,26 @@ pub fn svd(a: &Mat, compute_uv: bool) -> SvdResult {
     let n = a.cols;
     // Working copy holds U progressively (Golub–Reinsch accumulates in place).
     let mut u = a.to_layout(Layout::RowMajor);
-    let mut w = vec![0.0f64; n];
-    let mut rv1 = vec![0.0f64; n];
+    let mut w = vec![T::ZERO; n];
+    let mut rv1 = vec![T::ZERO; n];
     let mut v = Mat::zeros(n, n);
 
     // --- Householder bidiagonalization ---
-    let mut g = 0.0f64;
-    let mut scale = 0.0f64;
-    let mut anorm = 0.0f64;
+    let mut g = T::ZERO;
+    let mut scale = T::ZERO;
+    let mut anorm = T::ZERO;
     for i in 0..n {
         let l = i + 1;
         rv1[i] = scale * g;
-        g = 0.0;
+        g = T::ZERO;
         let mut s;
-        scale = 0.0;
+        scale = T::ZERO;
         if i < m {
             for k in i..m {
                 scale += u[(k, i)].abs();
             }
-            if scale != 0.0 {
-                s = 0.0;
+            if scale != T::ZERO {
+                s = T::ZERO;
                 for k in i..m {
                     u[(k, i)] /= scale;
                     s += u[(k, i)] * u[(k, i)];
@@ -87,30 +90,30 @@ pub fn svd(a: &Mat, compute_uv: bool) -> SvdResult {
                 // 5-10x slower at n ≥ 1024; see EXPERIMENTS.md §Perf).
                 if l < n {
                     // dots[j] = Σ_k v_k · A[k, j], accumulated row-wise.
-                    let mut dots = vec![0.0f64; n - l];
+                    let mut dots = vec![T::ZERO; n - l];
                     for k in i..m {
                         let vk = u[(k, i)];
-                        if vk == 0.0 {
+                        if vk == T::ZERO {
                             continue;
                         }
                         let row = k * n;
                         let (row_l, row_n) = (row + l, row + n);
                         for (d, a) in dots.iter_mut().zip(&u.data[row_l..row_n]) {
-                            *d += vk * a;
+                            *d += vk * *a;
                         }
                     }
-                    let hinv = 1.0 / h;
+                    let hinv = h.recip();
                     for d in dots.iter_mut() {
                         *d *= hinv;
                     }
                     for k in i..m {
                         let vk = u[(k, i)];
-                        if vk == 0.0 {
+                        if vk == T::ZERO {
                             continue;
                         }
                         let row = k * n;
                         for (d, a) in dots.iter().zip(&mut u.data[row + l..row + n]) {
-                            *a += vk * d;
+                            *a += vk * *d;
                         }
                     }
                 }
@@ -120,14 +123,14 @@ pub fn svd(a: &Mat, compute_uv: bool) -> SvdResult {
             }
         }
         w[i] = scale * g;
-        g = 0.0;
-        s = 0.0;
-        scale = 0.0;
+        g = T::ZERO;
+        s = T::ZERO;
+        scale = T::ZERO;
         if i < m && i != n - 1 {
             for k in l..n {
                 scale += u[(i, k)].abs();
             }
-            if scale != 0.0 {
+            if scale != T::ZERO {
                 for k in l..n {
                     u[(i, k)] /= scale;
                     s += u[(i, k)] * u[(i, k)];
@@ -140,7 +143,7 @@ pub fn svd(a: &Mat, compute_uv: bool) -> SvdResult {
                     rv1[k] = u[(i, k)] / h;
                 }
                 for j in l..m {
-                    s = 0.0;
+                    s = T::ZERO;
                     for k in l..n {
                         s += u[(j, k)] * u[(i, k)];
                     }
@@ -160,15 +163,15 @@ pub fn svd(a: &Mat, compute_uv: bool) -> SvdResult {
     // --- Accumulate right-hand transformations (V) ---
     if compute_uv {
         let mut l = n; // l tracks i+1 from the previous iteration
-        let mut gprev = 0.0;
+        let mut gprev = T::ZERO;
         for i in (0..n).rev() {
             if i < n - 1 {
-                if gprev != 0.0 {
+                if gprev != T::ZERO {
                     for j in l..n {
                         v[(j, i)] = (u[(i, j)] / u[(i, l)]) / gprev;
                     }
                     for j in l..n {
-                        let mut s = 0.0;
+                        let mut s = T::ZERO;
                         for k in l..n {
                             s += u[(i, k)] * v[(k, j)];
                         }
@@ -179,11 +182,11 @@ pub fn svd(a: &Mat, compute_uv: bool) -> SvdResult {
                     }
                 }
                 for j in l..n {
-                    v[(i, j)] = 0.0;
-                    v[(j, i)] = 0.0;
+                    v[(i, j)] = T::ZERO;
+                    v[(j, i)] = T::ZERO;
                 }
             }
-            v[(i, i)] = 1.0;
+            v[(i, i)] = T::ONE;
             gprev = rv1[i];
             l = i;
         }
@@ -195,12 +198,12 @@ pub fn svd(a: &Mat, compute_uv: bool) -> SvdResult {
             let l = i + 1;
             let g = w[i];
             for j in l..n {
-                u[(i, j)] = 0.0;
+                u[(i, j)] = T::ZERO;
             }
-            if g != 0.0 {
-                let ginv = 1.0 / g;
+            if g != T::ZERO {
+                let ginv = g.recip();
                 for j in l..n {
-                    let mut s = 0.0;
+                    let mut s = T::ZERO;
                     for k in l..m {
                         s += u[(k, i)] * u[(k, j)];
                     }
@@ -215,10 +218,10 @@ pub fn svd(a: &Mat, compute_uv: bool) -> SvdResult {
                 }
             } else {
                 for j in i..m {
-                    u[(j, i)] = 0.0;
+                    u[(j, i)] = T::ZERO;
                 }
             }
-            u[(i, i)] += 1.0;
+            u[(i, i)] += T::ONE;
         }
     }
 
@@ -248,8 +251,8 @@ pub fn svd(a: &Mat, compute_uv: bool) -> SvdResult {
             }
             if flag {
                 // Cancel rv1[l] if w[l-1] is negligible.
-                let mut c = 0.0;
-                let mut s = 1.0;
+                let mut c = T::ZERO;
+                let mut s = T::ONE;
                 for i in l..=k {
                     let f = s * rv1[i];
                     rv1[i] = c * rv1[i];
@@ -259,7 +262,7 @@ pub fn svd(a: &Mat, compute_uv: bool) -> SvdResult {
                     let g = w[i];
                     let h = pythag(f, g);
                     w[i] = h;
-                    let hinv = 1.0 / h;
+                    let hinv = h.recip();
                     c = g * hinv;
                     s = -f * hinv;
                     if compute_uv {
@@ -275,7 +278,7 @@ pub fn svd(a: &Mat, compute_uv: bool) -> SvdResult {
             let z = w[k];
             if l == k {
                 // Converged; enforce non-negative singular value.
-                if z < 0.0 {
+                if z < T::ZERO {
                     w[k] = -z;
                     if compute_uv {
                         for j in 0..n {
@@ -295,12 +298,12 @@ pub fn svd(a: &Mat, compute_uv: bool) -> SvdResult {
             let mut y = w[nm];
             let mut g = rv1[nm];
             let mut h = rv1[k];
-            let mut f = ((y - z) * (y + z) + (g - h) * (g + h)) / (2.0 * h * y);
-            g = pythag(f, 1.0);
+            let mut f = ((y - z) * (y + z) + (g - h) * (g + h)) / (T::TWO * h * y);
+            g = pythag(f, T::ONE);
             f = ((x - z) * (x + z) + h * ((y / (f + sign_of(g, f))) - h)) / x;
             // Next QR transformation.
-            let mut c = 1.0;
-            let mut s = 1.0;
+            let mut c = T::ONE;
+            let mut s = T::ONE;
             for j in l..=nm {
                 let i = j + 1;
                 g = rv1[i];
@@ -309,7 +312,7 @@ pub fn svd(a: &Mat, compute_uv: bool) -> SvdResult {
                 g = c * g;
                 let mut zz = pythag(f, h);
                 rv1[j] = zz;
-                let zinv = 1.0 / zz;
+                let zinv = zz.recip();
                 c = f * zinv;
                 s = h * zinv;
                 f = x * c + g * s;
@@ -326,8 +329,8 @@ pub fn svd(a: &Mat, compute_uv: bool) -> SvdResult {
                 }
                 zz = pythag(f, h);
                 w[j] = zz;
-                if zz != 0.0 {
-                    let zi = 1.0 / zz;
+                if zz != T::ZERO {
+                    let zi = zz.recip();
                     c = f * zi;
                     s = h * zi;
                 }
@@ -342,7 +345,7 @@ pub fn svd(a: &Mat, compute_uv: bool) -> SvdResult {
                     }
                 }
             }
-            rv1[l] = 0.0;
+            rv1[l] = T::ZERO;
             rv1[k] = f;
             w[k] = x;
         }
@@ -351,7 +354,7 @@ pub fn svd(a: &Mat, compute_uv: bool) -> SvdResult {
     // --- Sort descending (and permute U, V consistently) ---
     let mut order: Vec<usize> = (0..n).collect();
     order.sort_by(|&a, &b| w[b].partial_cmp(&w[a]).unwrap());
-    let s_sorted: Vec<f64> = order.iter().map(|&i| w[i]).collect();
+    let s_sorted: Vec<T> = order.iter().map(|&i| w[i]).collect();
     if !compute_uv {
         return SvdResult { u: None, s: s_sorted, vt: None };
     }
@@ -369,7 +372,7 @@ pub fn svd(a: &Mat, compute_uv: bool) -> SvdResult {
 }
 
 /// Convenience: singular values only, descending.
-pub fn singular_values(a: &Mat) -> Vec<f64> {
+pub fn singular_values<T: Real>(a: &Mat<T>) -> Vec<T> {
     svd(a, false).s
 }
 
@@ -482,6 +485,19 @@ mod tests {
         let s2 = svd(&a, true).s;
         for (a, b) in s1.iter().zip(&s2) {
             assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn f32_values_track_f64() {
+        let mut rng = Pcg64::seeded(25);
+        let a = Mat::random_normal(10, 7, &mut rng);
+        let want = singular_values(&a);
+        let a32: Mat<f32> = a.convert();
+        let got = singular_values(&a32);
+        let scale = want[0].max(1.0);
+        for (x, y) in want.iter().zip(&got) {
+            assert!((x - *y as f64).abs() <= 1e-4 * scale, "{x} vs {y}");
         }
     }
 }

@@ -5,8 +5,14 @@
 //! (`jacobi_svd`) is the default in the LFA pipeline — this solver exists as
 //! an ablation (`bench_ablation_svd`) and because the PJRT artifact uses the
 //! same algorithm in pure-HLO form (where one-sidedness is awkward to batch).
+//!
+//! The allocation-free Gram path ([`singular_values_gram_into`]) is generic
+//! over the [`Real`] width and runs its Gram formation and row rotations
+//! through the [`SimdReal`] kernels: the tall case streams each row of `A`
+//! once as a rank-1 `caxpy` update into the upper triangle (contiguous in
+//! both operands), the wide case is a straight conjugate dot per pair.
 
-use crate::numeric::CMat;
+use crate::numeric::{C, CMat, Real, SimdReal};
 
 const MAX_SWEEPS: usize = 40;
 const TOL: f64 = 1e-15;
@@ -117,19 +123,19 @@ pub fn singular_values_gram(a: &CMat) -> Vec<f64> {
 /// diagonalized in place. Owned per worker by the [`crate::engine`]
 /// workspaces (Gram-route ablation of the planned pipeline).
 #[derive(Default)]
-pub struct GramScratch {
-    g: Vec<C64>,
+pub struct GramScratch<T = f64> {
+    g: Vec<C<T>>,
 }
 
-impl GramScratch {
+impl<T: Real> GramScratch<T> {
     pub fn new() -> Self {
-        Self::default()
+        Self { g: Vec::new() }
     }
 
     /// Pre-size for `rows×cols` blocks so the first solve does not allocate.
     pub fn reserve(&mut self, rows: usize, cols: usize) {
         let k = rows.min(cols);
-        self.g.resize(k * k, C64::ZERO);
+        self.g.resize(k * k, C::ZERO);
     }
 }
 
@@ -139,38 +145,42 @@ impl GramScratch {
 /// values are written into `out`. Forms the smaller of `AᴴA` / `AAᴴ` in the
 /// scratch buffer and diagonalizes it in place; after `scratch` has seen a
 /// block of this shape once, the call performs no heap allocation.
-pub fn singular_values_gram_into(
-    a: &[C64],
+pub fn singular_values_gram_into<T: SimdReal>(
+    a: &[C<T>],
     rows: usize,
     cols: usize,
-    scratch: &mut GramScratch,
-    out: &mut [f64],
+    scratch: &mut GramScratch<T>,
+    out: &mut [T],
 ) {
     debug_assert_eq!(a.len(), rows * cols);
     let k = rows.min(cols);
     debug_assert_eq!(out.len(), k);
-    scratch.g.resize(k * k, C64::ZERO);
+    scratch.g.resize(k * k, C::ZERO);
     let g = &mut scratch.g[..];
     if rows >= cols {
-        // G = AᴴA (cols×cols), exploiting Hermitian symmetry.
+        // G = AᴴA (cols×cols), upper triangle only. Formed as a stream of
+        // rank-1 row updates G[p, p..] += conj(A[i,p])·A[i, p..] — both
+        // operands contiguous, so each update is one SIMD caxpy and every
+        // row of A is read exactly once (cache-blocked by construction).
+        g.iter_mut().for_each(|z| *z = C::ZERO);
+        for i in 0..rows {
+            let row = &a[i * cols..(i + 1) * cols];
+            for p in 0..k {
+                let s = row[p].conj();
+                T::caxpy(s, &row[p..], &mut g[p * k + p..p * k + k]);
+            }
+        }
         for p in 0..k {
-            for q in p..k {
-                let mut acc = C64::ZERO;
-                for i in 0..rows {
-                    acc = acc.mul_add(a[i * cols + p].conj(), a[i * cols + q]);
-                }
-                g[p * k + q] = acc;
-                g[q * k + p] = acc.conj();
+            for q in p + 1..k {
+                g[q * k + p] = g[p * k + q].conj();
             }
         }
     } else {
-        // G = AAᴴ (rows×rows).
+        // G = AAᴴ (rows×rows): each entry is a conjugate dot of two
+        // contiguous rows of A.
         for p in 0..k {
             for q in p..k {
-                let mut acc = C64::ZERO;
-                for j in 0..cols {
-                    acc = acc.mul_add(a[p * cols + j], a[q * cols + j].conj());
-                }
+                let acc = T::cdot_conj(&a[p * cols..(p + 1) * cols], &a[q * cols..(q + 1) * cols]);
                 g[p * k + q] = acc;
                 g[q * k + p] = acc.conj();
             }
@@ -178,7 +188,7 @@ pub fn singular_values_gram_into(
     }
     diagonalize_in_place(g, k);
     for (j, o) in out.iter_mut().enumerate() {
-        *o = g[j * k + j].re.max(0.0).sqrt();
+        *o = g[j * k + j].re.max(T::ZERO).sqrt();
     }
     out.sort_unstable_by(|x, y| y.partial_cmp(x).unwrap());
 }
@@ -186,29 +196,31 @@ pub fn singular_values_gram_into(
 /// Cyclic two-sided Jacobi sweeps on a flat row-major Hermitian `n×n`
 /// matrix, eigenvalues left on the diagonal (unsorted). Identical rotation
 /// schedule and formulas to [`eigh`], minus the eigenvector accumulation.
-fn diagonalize_in_place(g: &mut [C64], n: usize) {
+/// The paired-row update is the lane-parallel [`SimdReal::crot`] kernel;
+/// the column update is strided and stays scalar.
+fn diagonalize_in_place<T: SimdReal>(g: &mut [C<T>], n: usize) {
     debug_assert_eq!(g.len(), n * n);
     for _sweep in 0..MAX_SWEEPS {
-        let mut off = 0.0f64;
+        let mut off = T::ZERO;
         for p in 0..n.saturating_sub(1) {
             for q in p + 1..n {
                 let apq = g[p * n + q];
                 let mag = apq.abs();
-                let scale = (g[p * n + p].re.abs() + g[q * n + q].re.abs()).max(1e-300);
-                if mag / scale <= TOL {
+                let scale = (g[p * n + p].re.abs() + g[q * n + q].re.abs()).max(T::TINY);
+                if mag / scale <= T::EIG_TOL {
                     continue;
                 }
                 off = off.max(mag / scale);
-                let phase = apq.scale(1.0 / mag); // e^{iφ}
+                let phase = apq.scale(mag.recip()); // e^{iφ}
                 let app = g[p * n + p].re;
                 let aqq = g[q * n + q].re;
-                let tau = (aqq - app) / (2.0 * mag);
-                let t = if tau >= 0.0 {
-                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                let tau = (aqq - app) / (T::TWO * mag);
+                let t = if tau >= T::ZERO {
+                    (tau + (T::ONE + tau * tau).sqrt()).recip()
                 } else {
-                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                    -(-tau + (T::ONE + tau * tau).sqrt()).recip()
                 };
-                let c = 1.0 / (1.0 + t * t).sqrt();
+                let c = (T::ONE + t * t).sqrt().recip();
                 let s = c * t;
                 let se_pos = phase.scale(s); // s·e^{iφ}
                 let se_neg = phase.conj().scale(s); // s·e^{−iφ}
@@ -218,15 +230,15 @@ fn diagonalize_in_place(g: &mut [C64], n: usize) {
                     g[i * n + p] = aip.scale(c) - aiq * se_neg;
                     g[i * n + q] = aip * se_pos + aiq.scale(c);
                 }
-                for j in 0..n {
-                    let apj = g[p * n + j];
-                    let aqj = g[q * n + j];
-                    g[p * n + j] = apj.scale(c) - aqj * se_pos;
-                    g[q * n + j] = apj * se_neg + aqj.scale(c);
-                }
+                // Rows p and q are contiguous: row_p ← c·row_p − se_pos·row_q,
+                // row_q ← se_neg·row_p + c·row_q — exactly the crot kernel.
+                let (head, tail) = g.split_at_mut(q * n);
+                let row_p = &mut head[p * n..p * n + n];
+                let row_q = &mut tail[..n];
+                T::crot(row_p, row_q, c, se_pos, se_neg);
             }
         }
-        if off <= TOL {
+        if off <= T::EIG_TOL {
             break;
         }
     }
@@ -334,6 +346,28 @@ mod tests {
             let s2 = singular_values_gram(&a);
             for (x, y) in s1.iter().zip(&s2) {
                 assert!((x - y).abs() < 1e-8, "{m}x{n}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_gram_route_tracks_f64() {
+        let mut rng = Pcg64::seeded(45);
+        let mut ws64 = GramScratch::new();
+        let mut ws32 = GramScratch::<f32>::new();
+        for &(m, n) in &[(5usize, 5usize), (8, 4), (4, 8)] {
+            let a = CMat::random_normal(m, n, &mut rng);
+            let k = m.min(n);
+            let mut want = vec![0.0f64; k];
+            singular_values_gram_into(&a.data, m, n, &mut ws64, &mut want);
+            let a32: CMat<f32> = a.convert();
+            let mut got = vec![0.0f32; k];
+            singular_values_gram_into(&a32.data, m, n, &mut ws32, &mut got);
+            // The Gram route squares the condition number, so the f32 tier
+            // carries a looser bound than the one-sided path.
+            let scale = want[0].max(1.0);
+            for (x, y) in want.iter().zip(&got) {
+                assert!((x - *y as f64).abs() <= 5e-3 * scale, "{m}x{n}: {x} vs {y}");
             }
         }
     }

@@ -5,41 +5,87 @@
 //! layer). One-sided Jacobi is ideal for this regime — small blocks, high
 //! accuracy, trivially vectorizable/parallelizable across blocks, no
 //! Householder bookkeeping.
+//!
+//! Everything here is generic over the [`Real`] scalar width: `f64` is the
+//! default tier, `f32` the SIMD half-width tier, and
+//! [`singular_values_refined_into`] is the mixed-precision bridge — an f32
+//! sweep whose accumulated rotations warm-start a short f64 cleanup sweep,
+//! recovering the full ≤1e-12 guarantee at a fraction of the f64 cost.
+//! The inner conjugate-dot and paired-row rotation run through the
+//! [`SimdReal`] kernels (AVX2 when available, bit-identical portable
+//! fallback otherwise).
 
-use crate::numeric::{C64, CMat};
+use crate::numeric::{C, C32, C64, CMat, Real, SimdReal};
 
 /// Full SVD of a complex block: `A = U · diag(s) · Vᴴ`.
-pub struct CSvd {
+pub struct CSvd<T = f64> {
     /// `m×r` left singular vectors, `r = min(m, n)`.
-    pub u: CMat,
+    pub u: CMat<T>,
     /// Singular values, descending.
-    pub s: Vec<f64>,
+    pub s: Vec<T>,
     /// `n×r` right singular vectors (not transposed).
-    pub v: CMat,
+    pub v: CMat<T>,
 }
 
 const MAX_SWEEPS: usize = 40;
-const TOL: f64 = 1e-12;
 
 /// Reusable scratch for [`singular_values_into`]: the row-form work matrix
 /// and the incremental Gram-diagonal buffer. Owned per worker by the
 /// [`crate::engine`] workspaces so the per-frequency hot loop of a
 /// [`crate::engine::SpectralPlan`] performs **zero heap allocation**.
 #[derive(Default)]
-pub struct JacobiScratch {
+pub struct JacobiScratch<T = f64> {
+    b: Vec<C<T>>,
+    norms: Vec<T>,
+}
+
+impl<T: Real> JacobiScratch<T> {
+    pub fn new() -> Self {
+        Self { b: Vec::new(), norms: Vec::new() }
+    }
+
+    /// Pre-size for `rows×cols` blocks so the first solve does not allocate.
+    pub fn reserve(&mut self, rows: usize, cols: usize) {
+        self.b.resize(rows * cols, C::ZERO);
+        self.norms.resize(rows.min(cols), T::ZERO);
+    }
+}
+
+/// Scratch for the mixed-precision refined solve
+/// ([`singular_values_refined_into`]): the f32 sweep state, the widened
+/// rotation accumulator, and the f64 cleanup work matrix.
+#[derive(Default)]
+pub struct RefineScratch {
+    /// f32 row-form work matrix + norms.
+    b32: Vec<C32>,
+    norms32: Vec<f32>,
+    /// Accumulated f32 rotations, row form (`nvec×nvec`).
+    v32: Vec<C32>,
+    /// The widened, re-orthonormalized rotation basis (`nvec×nvec`).
+    v: Vec<C64>,
+    /// Exact f64 row form of the input block.
+    b0: Vec<C64>,
+    /// f64 cleanup work matrix (`V64 · B0`) + norms.
     b: Vec<C64>,
     norms: Vec<f64>,
 }
 
-impl JacobiScratch {
+impl RefineScratch {
     pub fn new() -> Self {
         Self::default()
     }
 
     /// Pre-size for `rows×cols` blocks so the first solve does not allocate.
     pub fn reserve(&mut self, rows: usize, cols: usize) {
-        self.b.resize(rows * cols, C64::ZERO);
-        self.norms.resize(rows.min(cols), 0.0);
+        let nvec = rows.min(cols);
+        let vlen = rows.max(cols);
+        self.b32.resize(nvec * vlen, C::ZERO);
+        self.norms32.resize(nvec, 0.0);
+        self.v32.resize(nvec * nvec, C::ZERO);
+        self.v.resize(nvec * nvec, C::ZERO);
+        self.b0.resize(nvec * vlen, C::ZERO);
+        self.b.resize(nvec * vlen, C::ZERO);
+        self.norms.resize(nvec, 0.0);
     }
 }
 
@@ -53,14 +99,14 @@ impl JacobiScratch {
 /// no per-element layout dispatch in the hot loop. Blocks this small are
 /// cache-resident either way, so the measured gain is modest (~2% at c=16,
 /// larger for c ≥ 64); see EXPERIMENTS.md §Perf.
-pub fn singular_values(a: &CMat) -> Vec<f64> {
+pub fn singular_values<T: SimdReal>(a: &CMat<T>) -> Vec<T> {
     if a.rows < a.cols {
         return singular_values(&a.hermitian());
     }
     // rows of B = conjugated columns of A.
     let (mut b, n, m) = to_row_form(a);
     jacobi_rows(&mut b, n, m, None);
-    let mut s: Vec<f64> = (0..n).map(|j| row_norm(&b[j * m..(j + 1) * m])).collect();
+    let mut s: Vec<T> = (0..n).map(|j| row_norm(&b[j * m..(j + 1) * m])).collect();
     s.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
     s
 }
@@ -71,12 +117,12 @@ pub fn singular_values(a: &CMat) -> Vec<f64> {
 /// values are written into `out`. After `scratch` has seen a block of this
 /// shape once, the call performs no heap allocation — this is the
 /// per-frequency hot path of the planned LFA pipeline.
-pub fn singular_values_into(
-    a: &[C64],
+pub fn singular_values_into<T: SimdReal>(
+    a: &[C<T>],
     rows: usize,
     cols: usize,
-    scratch: &mut JacobiScratch,
-    out: &mut [f64],
+    scratch: &mut JacobiScratch<T>,
+    out: &mut [T],
 ) {
     debug_assert_eq!(a.len(), rows * cols);
     let r = rows.min(cols);
@@ -86,17 +132,9 @@ pub fn singular_values_into(
     // for a wide block the rows of A already are the conjugated columns of
     // Aᴴ, so B = A verbatim — no recursion, no transpose copy.
     let (nvec, vlen) = if rows >= cols { (cols, rows) } else { (rows, cols) };
-    scratch.b.resize(nvec * vlen, C64::ZERO);
-    scratch.norms.resize(nvec, 0.0);
-    if rows >= cols {
-        for j in 0..cols {
-            for i in 0..rows {
-                scratch.b[j * vlen + i] = a[i * cols + j].conj();
-            }
-        }
-    } else {
-        scratch.b.copy_from_slice(a);
-    }
+    scratch.b.resize(nvec * vlen, C::ZERO);
+    scratch.norms.resize(nvec, T::ZERO);
+    row_form_into(a, rows, cols, &mut scratch.b);
     jacobi_rows_with(&mut scratch.b, nvec, vlen, None, &mut scratch.norms);
     for (j, o) in out.iter_mut().enumerate() {
         *o = row_norm(&scratch.b[j * vlen..(j + 1) * vlen]);
@@ -104,10 +142,98 @@ pub fn singular_values_into(
     out.sort_unstable_by(|x, y| y.partial_cmp(x).unwrap());
 }
 
+/// Mixed-precision solve with the full f64 guarantee
+/// ([`crate::lfa::Precision::F32Refined`]): run the one-sided sweep in f32
+/// with rotation accumulation, re-orthonormalize the widened basis in f64
+/// (modified Gram–Schmidt over the rows of `V32↑f64` — the accumulated
+/// rotations are only f32-unitary, and replaying through a non-unitary
+/// basis would bake an f32-scale error into the spectrum that no exact
+/// sweep can remove), then replay it against the **exact** f64 block
+/// (`B_start = V · B0`, whose rows are orthogonal to f32 round-off
+/// already) and let one or two quadratic f64 sweeps polish it to ≤1e-12.
+/// The MGS pass is `O(nvec³)` — cheap next to the `O(sweeps·nvec²·vlen)`
+/// it replaces in f64. Allocation-free once `scratch` has seen the shape.
+pub fn singular_values_refined_into(
+    a: &[C64],
+    rows: usize,
+    cols: usize,
+    scratch: &mut RefineScratch,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(a.len(), rows * cols);
+    let r = rows.min(cols);
+    debug_assert_eq!(out.len(), r);
+    let (nvec, vlen) = if rows >= cols { (cols, rows) } else { (rows, cols) };
+    scratch.reserve(rows, cols);
+    // 1. Exact f64 row form, narrowed to the f32 work matrix.
+    row_form_into(a, rows, cols, &mut scratch.b0);
+    for (w, z) in scratch.b32.iter_mut().zip(&scratch.b0) {
+        *w = z.to_c32();
+    }
+    // 2. f32 sweep, accumulating the rotations (V starts at identity).
+    scratch.v32.iter_mut().for_each(|z| *z = C::ZERO);
+    for j in 0..nvec {
+        scratch.v32[j * nvec + j] = C::ONE;
+    }
+    jacobi_rows_with(&mut scratch.b32, nvec, vlen, Some(&mut scratch.v32), &mut scratch.norms32);
+    // 3. Widen the basis and restore exact unitarity: modified Gram–Schmidt
+    //    over the rows. V32 is near-unitary (‖VᴴV−I‖ ~ ε_f32), so MGS is
+    //    stable here and each projection coefficient is O(ε_f32).
+    for (w, z) in scratch.v.iter_mut().zip(&scratch.v32) {
+        *w = z.to_c64();
+    }
+    for p in 0..nvec {
+        let (head, rest) = scratch.v.split_at_mut(p * nvec);
+        let rp = &mut rest[..nvec];
+        for j in 0..p {
+            let rj = &head[j * nvec..(j + 1) * nvec];
+            let c = <f64 as SimdReal>::cdot_conj(rp, rj);
+            <f64 as SimdReal>::caxpy(-c, rj, rp);
+        }
+        let nrm = row_norm(rp);
+        if nrm > f64::TINY {
+            let inv = nrm.recip();
+            rp.iter_mut().for_each(|z| *z = z.scale(inv));
+        }
+    }
+    // 4. Replay against the exact block: B_start[p,·] = Σ_j V[p,j]·B0[j,·].
+    scratch.b.iter_mut().for_each(|z| *z = C::ZERO);
+    for p in 0..nvec {
+        let dst = p * vlen;
+        for j in 0..nvec {
+            let s = scratch.v[p * nvec + j];
+            let src = &scratch.b0[j * vlen..(j + 1) * vlen];
+            <f64 as SimdReal>::caxpy(s, src, &mut scratch.b[dst..dst + vlen]);
+        }
+    }
+    // 5. Quadratic f64 cleanup (normally 1–2 sweeps).
+    jacobi_rows_with(&mut scratch.b, nvec, vlen, None, &mut scratch.norms);
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = row_norm(&scratch.b[j * vlen..(j + 1) * vlen]);
+    }
+    out.sort_unstable_by(|x, y| y.partial_cmp(x).unwrap());
+}
+
+/// Fill `b` (`min×max` row-major) with the row form of the `rows×cols`
+/// block `a`: conjugated columns for a tall block, the rows verbatim for a
+/// wide one.
+fn row_form_into<T: Real>(a: &[C<T>], rows: usize, cols: usize, b: &mut [C<T>]) {
+    if rows >= cols {
+        let vlen = rows;
+        for j in 0..cols {
+            for i in 0..rows {
+                b[j * vlen + i] = a[i * cols + j].conj();
+            }
+        }
+    } else {
+        b.copy_from_slice(a);
+    }
+}
+
 /// Flatten `Aᴴ` (n×m, row-major): row j = conj of column j of A.
-fn to_row_form(a: &CMat) -> (Vec<C64>, usize, usize) {
+fn to_row_form<T: Real>(a: &CMat<T>) -> (Vec<C<T>>, usize, usize) {
     let (m, n) = (a.rows, a.cols);
-    let mut b = vec![C64::ZERO; n * m];
+    let mut b = vec![C::ZERO; n * m];
     for j in 0..n {
         for i in 0..m {
             b[j * m + i] = a[(i, j)].conj();
@@ -117,12 +243,12 @@ fn to_row_form(a: &CMat) -> (Vec<C64>, usize, usize) {
 }
 
 #[inline]
-fn row_norm(row: &[C64]) -> f64 {
-    row.iter().map(|z| z.norm_sqr()).sum::<f64>().sqrt()
+fn row_norm<T: Real>(row: &[C<T>]) -> T {
+    row.iter().map(|z| z.norm_sqr()).sum::<T>().sqrt()
 }
 
 /// Full SVD via one-sided Jacobi (with V accumulation + U normalization).
-pub fn svd(a: &CMat) -> CSvd {
+pub fn svd<T: SimdReal>(a: &CMat<T>) -> CSvd<T> {
     if a.rows < a.cols {
         // A = U Σ Vᴴ  ⇔  Aᴴ = V Σ Uᴴ
         let r = svd(&a.hermitian());
@@ -131,27 +257,27 @@ pub fn svd(a: &CMat) -> CSvd {
     let (m, n) = (a.rows, a.cols);
     let (mut b, _, _) = to_row_form(a);
     // V carried in row form as well (row j = conj of V's column j).
-    let mut vrows = vec![C64::ZERO; n * n];
+    let mut vrows = vec![C::ZERO; n * n];
     for j in 0..n {
-        vrows[j * n + j] = C64::ONE;
+        vrows[j * n + j] = C::ONE;
     }
     jacobi_rows(&mut b, n, m, Some(&mut vrows));
 
     // Row norms of B = column norms of A = singular values; sort descending.
     let mut idx: Vec<usize> = (0..n).collect();
-    let norms: Vec<f64> = (0..n).map(|j| row_norm(&b[j * m..(j + 1) * m])).collect();
+    let norms: Vec<T> = (0..n).map(|j| row_norm(&b[j * m..(j + 1) * m])).collect();
     idx.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
 
     let r = n.min(m);
     let mut u = CMat::zeros(m, r);
     let mut vs = CMat::zeros(n, r);
     let mut s = Vec::with_capacity(r);
-    let scale_floor = norms.iter().cloned().fold(0.0f64, f64::max) * 1e-300;
+    let scale_floor = norms.iter().cloned().fold(T::ZERO, T::max) * T::TINY;
     for (out_j, &j) in idx.iter().take(r).enumerate() {
         let sigma = norms[j];
         s.push(sigma);
-        if sigma > scale_floor && sigma > 0.0 {
-            let inv = 1.0 / sigma;
+        if sigma > scale_floor && sigma > T::ZERO {
+            let inv = sigma.recip();
             for i in 0..m {
                 u[(i, out_j)] = b[j * m + i].conj().scale(inv);
             }
@@ -159,10 +285,10 @@ pub fn svd(a: &CMat) -> CSvd {
             // Null column: produce any unit vector orthogonal to the previous
             // ones via Gram–Schmidt over the standard basis.
             'basis: for basis in 0..m {
-                let mut cand = vec![C64::ZERO; m];
-                cand[basis] = C64::ONE;
+                let mut cand = vec![C::ZERO; m];
+                cand[basis] = C::ONE;
                 for p in 0..out_j {
-                    let mut dot = C64::ZERO;
+                    let mut dot = C::ZERO;
                     for i in 0..m {
                         dot = dot.mul_add(u[(i, p)].conj(), cand[i]);
                     }
@@ -170,9 +296,9 @@ pub fn svd(a: &CMat) -> CSvd {
                         cand[i] -= u[(i, p)] * dot;
                     }
                 }
-                let nrm = cand.iter().map(|z| z.norm_sqr()).sum::<f64>().sqrt();
-                if nrm > 0.5 {
-                    let inv = 1.0 / nrm;
+                let nrm = cand.iter().map(|z| z.norm_sqr()).sum::<T>().sqrt();
+                if nrm > T::HALF {
+                    let inv = nrm.recip();
                     for i in 0..m {
                         u[(i, out_j)] = cand[i].scale(inv);
                     }
@@ -199,19 +325,19 @@ pub fn svd(a: &CMat) -> CSvd {
 ///   B_p ← c·B_p − s·e^{+iφ}·B_q
 ///   B_q ← s·e^{−iφ}·B_p + c·B_q
 /// ```
-fn jacobi_rows(b: &mut [C64], n: usize, m: usize, vrows: Option<&mut [C64]>) {
-    let mut norms = vec![0.0f64; n];
+fn jacobi_rows<T: SimdReal>(b: &mut [C<T>], n: usize, m: usize, vrows: Option<&mut [C<T>]>) {
+    let mut norms = vec![T::ZERO; n];
     jacobi_rows_with(b, n, m, vrows, &mut norms);
 }
 
 /// [`jacobi_rows`] with a caller-provided norms buffer (`n` long) so the
 /// planned hot path stays allocation-free.
-fn jacobi_rows_with(
-    b: &mut [C64],
+fn jacobi_rows_with<T: SimdReal>(
+    b: &mut [C<T>],
     n: usize,
     m: usize,
-    mut vrows: Option<&mut [C64]>,
-    norms: &mut [f64],
+    mut vrows: Option<&mut [C<T>]>,
+    norms: &mut [T],
 ) {
     if n < 2 {
         return;
@@ -226,7 +352,7 @@ fn jacobi_rows_with(
         for (j, nj) in norms.iter_mut().enumerate() {
             *nj = b[j * m..(j + 1) * m].iter().map(|z| z.norm_sqr()).sum();
         }
-        let mut off = 0.0f64;
+        let mut off = T::ZERO;
         for p in 0..n - 1 {
             for q in p + 1..n {
                 // Split-borrow the two contiguous rows.
@@ -235,49 +361,31 @@ fn jacobi_rows_with(
                 let row_q = &mut tail[..m];
                 let app = norms[p];
                 let aqq = norms[q];
-                // Four independent accumulators: a single running product
-                // is FMA-latency-bound (measured 25% slower end-to-end).
-                let mut acc = [C64::ZERO; 4];
-                let chunks_p = row_p.chunks_exact(4);
-                let chunks_q = row_q.chunks_exact(4);
-                let rem_p = chunks_p.remainder();
-                let rem_q = chunks_q.remainder();
-                for (cp, cq) in chunks_p.zip(chunks_q) {
-                    for l in 0..4 {
-                        acc[l] = acc[l].mul_add(cp[l], cq[l].conj());
-                    }
-                }
-                let mut apq = acc[0] + acc[1] + acc[2] + acc[3];
-                for (bp, bq) in rem_p.iter().zip(rem_q.iter()) {
-                    apq = apq.mul_add(*bp, bq.conj());
-                }
+                // Lane-parallel conjugate dot (AVX2 or the bit-identical
+                // portable emulation — see numeric::simd).
+                let apq = T::cdot_conj(row_p, row_q);
                 let denom = (app * aqq).sqrt();
-                if denom == 0.0 {
+                if denom == T::ZERO {
                     continue;
                 }
                 let rel = apq.abs() / denom;
                 off = off.max(rel);
-                if rel <= TOL {
+                if rel <= T::SVD_TOL {
                     continue;
                 }
                 let r = apq.abs();
-                let phase = apq.scale(1.0 / r); // e^{iφ}
-                let tau = (aqq - app) / (2.0 * r);
-                let t = if tau >= 0.0 {
-                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                let phase = apq.scale(r.recip()); // e^{iφ}
+                let tau = (aqq - app) / (T::TWO * r);
+                let t = if tau >= T::ZERO {
+                    (tau + (T::ONE + tau * tau).sqrt()).recip()
                 } else {
-                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                    -(-tau + (T::ONE + tau * tau).sqrt()).recip()
                 };
-                let c = 1.0 / (1.0 + t * t).sqrt();
+                let c = (T::ONE + t * t).sqrt().recip();
                 let s = c * t;
                 let sp = phase.scale(s); // s·e^{+iφ}
                 let sm = phase.conj().scale(s); // s·e^{−iφ}
-                for (bp, bq) in row_p.iter_mut().zip(row_q.iter_mut()) {
-                    let old_p = *bp;
-                    let old_q = *bq;
-                    *bp = old_p.scale(c) - sp * old_q;
-                    *bq = sm * old_p + old_q.scale(c);
-                }
+                T::crot(row_p, row_q, c, sp, sm);
                 // Rutishauser diagonal update (exact for the 2x2 rotation).
                 norms[p] = app - t * r;
                 norms[q] = aqq + t * r;
@@ -285,16 +393,11 @@ fn jacobi_rows_with(
                     let (vh, vt) = v.split_at_mut(q * n);
                     let vrow_p = &mut vh[p * n..p * n + n];
                     let vrow_q = &mut vt[..n];
-                    for (vp, vq) in vrow_p.iter_mut().zip(vrow_q.iter_mut()) {
-                        let old_p = *vp;
-                        let old_q = *vq;
-                        *vp = old_p.scale(c) - sp * old_q;
-                        *vq = sm * old_p + old_q.scale(c);
-                    }
+                    T::crot(vrow_p, vrow_q, c, sp, sm);
                 }
             }
         }
-        if off <= TOL {
+        if off <= T::SVD_TOL {
             return;
         }
     }
@@ -305,7 +408,7 @@ fn jacobi_rows_with(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::numeric::{c64, Pcg64};
+    use crate::numeric::{c64, C64, Pcg64};
 
     fn reconstruct(r: &CSvd) -> CMat {
         let mut us = CMat::zeros(r.u.rows, r.s.len());
@@ -421,6 +524,44 @@ mod tests {
             singular_values_into(&a.data, m, n, &mut ws, &mut got);
             for (x, y) in want.iter().zip(&got) {
                 assert!((x - y).abs() < 1e-12, "{m}x{n}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_singular_values_track_f64() {
+        let mut rng = Pcg64::seeded(35);
+        let mut ws = JacobiScratch::<f32>::new();
+        for &(m, n) in &[(4usize, 4usize), (6, 3), (3, 6), (8, 8), (16, 16)] {
+            let a = CMat::random_normal(m, n, &mut rng);
+            let want = singular_values(&a);
+            let a32: CMat<f32> = a.convert();
+            let mut got = vec![0.0f32; m.min(n)];
+            singular_values_into(&a32.data, m, n, &mut ws, &mut got);
+            let scale = want[0].max(1.0);
+            for (x, y) in want.iter().zip(&got) {
+                assert!(
+                    (x - *y as f64).abs() <= 1e-4 * scale,
+                    "{m}x{n}: f64 {x} vs f32 {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn refined_matches_f64_to_1e12() {
+        let mut rng = Pcg64::seeded(36);
+        let mut ws = JacobiScratch::new();
+        let mut rs = RefineScratch::new();
+        for &(m, n) in &[(4usize, 4usize), (6, 3), (3, 6), (8, 8), (16, 16), (1, 1)] {
+            let a = CMat::random_normal(m, n, &mut rng);
+            let mut want = vec![0.0f64; m.min(n)];
+            singular_values_into(&a.data, m, n, &mut ws, &mut want);
+            let mut got = vec![0.0f64; m.min(n)];
+            singular_values_refined_into(&a.data, m, n, &mut rs, &mut got);
+            let scale = want[0].max(1.0);
+            for (x, y) in want.iter().zip(&got) {
+                assert!((x - y).abs() <= 1e-12 * scale, "{m}x{n}: {x} vs {y}");
             }
         }
     }

@@ -3,7 +3,12 @@
 //! per-frequency complex blocks, Hermitian Jacobi eigensolver (Gram-route
 //! ablation), power/Krylov iteration (including the warm-startable
 //! block top-k solver behind the engine's partial-spectrum mode), and
-//! induced-norm bounds.
+//! induced-norm bounds. Every solver is generic over the
+//! [`crate::numeric::Real`] scalar width (`f64` default, `f32` for the
+//! reduced-precision tier), with the complex hot loops dispatched through
+//! the [`crate::numeric::SimdReal`] kernels; the mixed-precision refinement
+//! entry points (`jacobi_svd::singular_values_refined_into`,
+//! `power::refine_topk_values`) recover full f64 accuracy from f32 sweeps.
 
 pub mod gk_svd;
 pub mod jacobi_eig;

@@ -4,14 +4,15 @@
 //! (Hölder interpolation), where for the unrolled convolution both one-norms
 //! are cheap — with periodic boundary conditions every row (resp. column)
 //! has the same absolute sum, so they reduce to sums over the weight tensor.
+//! Generic over the [`Real`] width (`f64` default).
 
-use crate::numeric::Mat;
+use crate::numeric::{Mat, Real};
 
 /// `‖A‖₁` — maximum absolute column sum.
-pub fn norm_1(a: &Mat) -> f64 {
-    let mut worst = 0.0f64;
+pub fn norm_1<T: Real>(a: &Mat<T>) -> T {
+    let mut worst = T::ZERO;
     for j in 0..a.cols {
-        let mut s = 0.0;
+        let mut s = T::ZERO;
         for i in 0..a.rows {
             s += a[(i, j)].abs();
         }
@@ -21,10 +22,10 @@ pub fn norm_1(a: &Mat) -> f64 {
 }
 
 /// `‖A‖_∞` — maximum absolute row sum.
-pub fn norm_inf(a: &Mat) -> f64 {
-    let mut worst = 0.0f64;
+pub fn norm_inf<T: Real>(a: &Mat<T>) -> T {
+    let mut worst = T::ZERO;
     for i in 0..a.rows {
-        let mut s = 0.0;
+        let mut s = T::ZERO;
         for j in 0..a.cols {
             s += a[(i, j)].abs();
         }
@@ -34,7 +35,7 @@ pub fn norm_inf(a: &Mat) -> f64 {
 }
 
 /// Hölder bound on the spectral norm: `√(‖A‖₁ ‖A‖_∞)`.
-pub fn holder_bound(a: &Mat) -> f64 {
+pub fn holder_bound<T: Real>(a: &Mat<T>) -> T {
     (norm_1(a) * norm_inf(a)).sqrt()
 }
 
@@ -70,5 +71,12 @@ mod tests {
         a.data.iter_mut().for_each(|v| *v = 1.0);
         let sigma = gk_svd::singular_values(&a)[0];
         assert!((holder_bound(&a) - sigma).abs() < 1e-9);
+    }
+
+    #[test]
+    fn f32_norms_match() {
+        let a = Mat::from_rows(&[&[1.0f32, -2.0], &[3.0, 4.0]]);
+        assert_eq!(norm_1(&a), 6.0);
+        assert_eq!(norm_inf(&a), 7.0);
     }
 }

@@ -5,7 +5,8 @@
 //! - [`spectral_norm`]: the Yoshida–Miyato baseline (§II-b of the paper) —
 //!   approximate only σ_max, either on the *true* convolution operator (via
 //!   [`LinOp`]) or on the loose reshaped `c_out × c_in·k²` matrix. A
-//!   comparison point for the full-spectrum methods.
+//!   comparison point for the full-spectrum methods. Stays `f64`-only: it is
+//!   a reference baseline, not a hot path.
 //! - [`block_topk`]: the per-frequency solver behind the engine's
 //!   `SpectrumRequest::TopK` mode — **Krylov-accelerated power iteration
 //!   (Lanczos with full reorthogonalization) on the Gram operator, plus a
@@ -21,8 +22,15 @@
 //!   over smoothly varying symbols — neighboring frequencies — spends
 //!   measurably fewer steps than isolated cold solves (the paper's
 //!   smooth-symbol observation turned into an iteration-count win).
+//!
+//! [`block_topk`] and its scratch are generic over the [`Real`] width
+//! (`f64` default, `f32` for the reduced-precision tier); the dense matvec,
+//! reorthogonalization, and deflation inner loops run through the
+//! [`SimdReal`] kernels. Tolerances self-adapt: the caller's `tol` is
+//! floored at a few machine epsilons of the active width so an `f32` solve
+//! with default options terminates instead of chasing round-off.
 
-use crate::numeric::{C64, Mat, Pcg64};
+use crate::numeric::{C, C64, Mat, Pcg64, Real, SimdReal};
 
 /// A real linear operator `A : R^in → R^out` exposing the two matvecs the
 /// power method needs. Implemented by dense matrices and by the convolution
@@ -97,6 +105,8 @@ pub struct TopKOptions {
     /// eigenvalue error is bounded by the residual, so the default keeps
     /// σ errors below `1e-8·σ_max` even for values as small as
     /// `~1e-4·σ_max` (the σ²→σ conversion divides the λ error by `2σ_j`).
+    /// Internally floored at `8·ε` of the active scalar width, so the
+    /// same options work at `f32` without spinning on round-off.
     pub tol: f64,
     /// Hard cap on iteration steps per solve (Lanczos steps + probe power
     /// steps). The Krylov dimension is additionally capped by the scratch
@@ -119,7 +129,7 @@ impl Default for TopKOptions {
 /// [`TopKScratch::reserve`], so repeated solves on one shape are
 /// allocation-free.
 #[derive(Default)]
-pub struct TopKScratch {
+pub struct TopKScratch<T = f64> {
     rows: usize,
     cols: usize,
     k: usize,
@@ -128,41 +138,66 @@ pub struct TopKScratch {
     /// Krylov-basis capacity (`≤ dim`).
     tmax: usize,
     /// Output right singular vectors, vector-major: `v[j·cols..]`.
-    v: Vec<C64>,
+    v: Vec<C<T>>,
     /// Output scaled left vectors `A v_j = σ_j u_j`, vector-major over rows.
-    w: Vec<C64>,
+    w: Vec<C<T>>,
     /// Current Lanczos vector (`dim`).
-    q: Vec<C64>,
+    q: Vec<C<T>>,
     /// Lanczos work vector (`dim`).
-    u: Vec<C64>,
+    u: Vec<C<T>>,
     /// Matvec intermediate (`max(rows, cols)`).
-    aw: Vec<C64>,
+    aw: Vec<C<T>>,
     /// Orthonormal Krylov basis, vector-major: `qbasis[t·dim..]`.
-    qbasis: Vec<C64>,
+    qbasis: Vec<C<T>>,
     /// Tridiagonal diagonal / off-diagonal.
-    alpha: Vec<f64>,
-    beta: Vec<f64>,
+    alpha: Vec<T>,
+    beta: Vec<T>,
     /// tqli work: eigenvalues, off-diagonal copy, last-row components.
-    td: Vec<f64>,
-    te: Vec<f64>,
-    tz: Vec<f64>,
+    td: Vec<T>,
+    te: Vec<T>,
+    tz: Vec<T>,
     /// Top-k eigenvalue indices into `td`.
     idx: Vec<usize>,
     /// Tridiagonal eigenvectors of the chosen pairs, vector-major `k×tmax`.
-    svecs: Vec<f64>,
+    svecs: Vec<T>,
     /// Inverse-iteration solve buffers (`tmax`).
-    sdd: Vec<f64>,
-    sup: Vec<f64>,
+    sdd: Vec<T>,
+    sup: Vec<T>,
     /// Probe vectors (right space / mapped).
-    pv: Vec<C64>,
-    pz: Vec<C64>,
-    pw: Vec<C64>,
+    pv: Vec<C<T>>,
+    pz: Vec<C<T>>,
+    pw: Vec<C<T>>,
     warm: bool,
 }
 
-impl TopKScratch {
+impl<T: Real> TopKScratch<T> {
     pub fn new() -> Self {
-        Self::default()
+        Self {
+            rows: 0,
+            cols: 0,
+            k: 0,
+            dim: 0,
+            tmax: 0,
+            v: Vec::new(),
+            w: Vec::new(),
+            q: Vec::new(),
+            u: Vec::new(),
+            aw: Vec::new(),
+            qbasis: Vec::new(),
+            alpha: Vec::new(),
+            beta: Vec::new(),
+            td: Vec::new(),
+            te: Vec::new(),
+            tz: Vec::new(),
+            idx: Vec::new(),
+            svecs: Vec::new(),
+            sdd: Vec::new(),
+            sup: Vec::new(),
+            pv: Vec::new(),
+            pz: Vec::new(),
+            pw: Vec::new(),
+            warm: false,
+        }
     }
 
     /// Pre-size for `rows×cols` blocks and `k` values so solves do not
@@ -179,24 +214,24 @@ impl TopKScratch {
         // Krylov capacity: comfortably past the observed step counts for
         // dense conv-symbol spectra, never past the space dimension.
         self.tmax = dim.min((8 * k).max(48) + dim / 8).max(k.min(dim)).max(1);
-        self.v.resize(k * cols, C64::ZERO);
-        self.w.resize(k * rows, C64::ZERO);
-        self.q.resize(dim, C64::ZERO);
-        self.u.resize(dim, C64::ZERO);
-        self.aw.resize(rows.max(cols), C64::ZERO);
-        self.qbasis.resize(self.tmax * dim, C64::ZERO);
-        self.alpha.resize(self.tmax, 0.0);
-        self.beta.resize(self.tmax, 0.0);
-        self.td.resize(self.tmax, 0.0);
-        self.te.resize(self.tmax, 0.0);
-        self.tz.resize(self.tmax, 0.0);
+        self.v.resize(k * cols, C::ZERO);
+        self.w.resize(k * rows, C::ZERO);
+        self.q.resize(dim, C::ZERO);
+        self.u.resize(dim, C::ZERO);
+        self.aw.resize(rows.max(cols), C::ZERO);
+        self.qbasis.resize(self.tmax * dim, C::ZERO);
+        self.alpha.resize(self.tmax, T::ZERO);
+        self.beta.resize(self.tmax, T::ZERO);
+        self.td.resize(self.tmax, T::ZERO);
+        self.te.resize(self.tmax, T::ZERO);
+        self.tz.resize(self.tmax, T::ZERO);
         self.idx.resize(self.tmax, 0);
-        self.svecs.resize(k * self.tmax, 0.0);
-        self.sdd.resize(self.tmax, 0.0);
-        self.sup.resize(self.tmax, 0.0);
-        self.pv.resize(cols, C64::ZERO);
-        self.pz.resize(cols, C64::ZERO);
-        self.pw.resize(rows, C64::ZERO);
+        self.svecs.resize(k * self.tmax, T::ZERO);
+        self.sdd.resize(self.tmax, T::ZERO);
+        self.sup.resize(self.tmax, T::ZERO);
+        self.pv.resize(cols, C::ZERO);
+        self.pz.resize(cols, C::ZERO);
+        self.pw.resize(rows, C::ZERO);
     }
 
     /// Forget the warm basis: the next [`block_topk`] call cold-starts.
@@ -231,47 +266,39 @@ impl TopKScratch {
 
     /// Right singular vector `j` (length `cols`) after a solve, descending
     /// value order.
-    pub fn right_vector(&self, j: usize) -> &[C64] {
+    pub fn right_vector(&self, j: usize) -> &[C<T>] {
         &self.v[j * self.cols..(j + 1) * self.cols]
     }
 
     /// Scaled left vector `j` after a solve: `A v_j = σ_j u_j` (length
     /// `rows`). Divide by `σ_j` for the unit left singular vector.
-    pub fn left_scaled(&self, j: usize) -> &[C64] {
+    pub fn left_scaled(&self, j: usize) -> &[C<T>] {
         &self.w[j * self.rows..(j + 1) * self.rows]
     }
 }
 
-/// `⟨a, b⟩ = Σ conj(a_i)·b_i`.
+/// `⟨a, b⟩ = Σ conj(a_i)·b_i` — the conjugate of the SIMD `cdot_conj`.
 #[inline]
-fn cdot(a: &[C64], b: &[C64]) -> C64 {
-    let mut acc = C64::ZERO;
-    for (x, y) in a.iter().zip(b.iter()) {
-        acc = acc.mul_add(x.conj(), *y);
-    }
-    acc
+fn cdot<T: SimdReal>(a: &[C<T>], b: &[C<T>]) -> C<T> {
+    T::cdot_conj(a, b).conj()
 }
 
 #[inline]
-fn cnorm2(a: &[C64]) -> f64 {
+fn cnorm2<T: Real>(a: &[C<T>]) -> T {
     a.iter().map(|z| z.norm_sqr()).sum()
 }
 
-/// `y = A x` for a row-major `rows×cols` block.
-fn mat_vec(a: &[C64], rows: usize, cols: usize, x: &[C64], y: &mut [C64]) {
+/// `y = A x` for a row-major `rows×cols` block: one SIMD dot per row.
+fn mat_vec<T: SimdReal>(a: &[C<T>], rows: usize, cols: usize, x: &[C<T>], y: &mut [C<T>]) {
     for i in 0..rows {
-        let arow = &a[i * cols..(i + 1) * cols];
-        let mut acc = C64::ZERO;
-        for c in 0..cols {
-            acc = acc.mul_add(arow[c], x[c]);
-        }
-        y[i] = acc;
+        y[i] = T::cdot(&a[i * cols..(i + 1) * cols], &x[..cols]);
     }
 }
 
-/// `y = Aᴴ x` for a row-major `rows×cols` block.
-fn mat_vec_h(a: &[C64], rows: usize, cols: usize, x: &[C64], y: &mut [C64]) {
-    y[..cols].fill(C64::ZERO);
+/// `y = Aᴴ x` for a row-major `rows×cols` block (streamed over rows; the
+/// conjugated-source axpy has no SIMD kernel, so this stays scalar FMA).
+fn mat_vec_h<T: Real>(a: &[C<T>], rows: usize, cols: usize, x: &[C<T>], y: &mut [C<T>]) {
+    y[..cols].fill(C::ZERO);
     for i in 0..rows {
         let arow = &a[i * cols..(i + 1) * cols];
         let xi = x[i];
@@ -287,20 +314,20 @@ fn mat_vec_h(a: &[C64], rows: usize, cols: usize, x: &[C64], y: &mut [C64]) {
 /// Lanczos residual bound `|β_t·s_{t,i}|` needs. `d` is overwritten with
 /// the (unsorted) eigenvalues, `e` is clobbered, `z` receives the last-row
 /// components. `O(t²)`.
-fn tqli_values_lastrow(d: &mut [f64], e: &mut [f64], z: &mut [f64], t: usize) {
-    z[..t].fill(0.0);
-    z[t - 1] = 1.0;
+fn tqli_values_lastrow<T: Real>(d: &mut [T], e: &mut [T], z: &mut [T], t: usize) {
+    z[..t].fill(T::ZERO);
+    z[t - 1] = T::ONE;
     if t == 1 {
         return;
     }
-    e[t - 1] = 0.0;
+    e[t - 1] = T::ZERO;
     for l in 0..t {
         let mut iters = 0;
         loop {
             let mut m = l;
             while m < t - 1 {
                 let dd = d[m].abs() + d[m + 1].abs();
-                if e[m].abs() <= 1e-300 + 1e-16 * dd {
+                if e[m].abs() <= T::TINY + T::QL_EPS * dd {
                     break;
                 }
                 m += 1;
@@ -312,12 +339,12 @@ fn tqli_values_lastrow(d: &mut [f64], e: &mut [f64], z: &mut [f64], t: usize) {
             if iters > 50 {
                 break;
             }
-            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
-            let mut r = g.hypot(1.0);
-            g = d[m] - d[l] + e[l] / (g + if g >= 0.0 { r } else { -r });
-            let mut s = 1.0f64;
-            let mut c = 1.0f64;
-            let mut p = 0.0f64;
+            let mut g = (d[l + 1] - d[l]) / (T::TWO * e[l]);
+            let mut r = g.hypot(T::ONE);
+            g = d[m] - d[l] + e[l] / (g + if g >= T::ZERO { r } else { -r });
+            let mut s = T::ONE;
+            let mut c = T::ONE;
+            let mut p = T::ZERO;
             let mut underflow = false;
             let mut i = m;
             while i > l {
@@ -326,16 +353,16 @@ fn tqli_values_lastrow(d: &mut [f64], e: &mut [f64], z: &mut [f64], t: usize) {
                 let b = c * e[i];
                 r = f.hypot(g);
                 e[i + 1] = r;
-                if r == 0.0 {
+                if r == T::ZERO {
                     d[i + 1] -= p;
-                    e[m] = 0.0;
+                    e[m] = T::ZERO;
                     underflow = true;
                     break;
                 }
                 s = f / r;
                 c = g / r;
                 g = d[i + 1] - p;
-                let rr = (d[i] - g) * s + 2.0 * c * b;
+                let rr = (d[i] - g) * s + T::TWO * c * b;
                 p = s * rr;
                 d[i + 1] = g + p;
                 g = c * rr - b;
@@ -348,7 +375,7 @@ fn tqli_values_lastrow(d: &mut [f64], e: &mut [f64], z: &mut [f64], t: usize) {
             if !underflow {
                 d[l] -= p;
                 e[l] = g;
-                e[m] = 0.0;
+                e[m] = T::ZERO;
             }
         }
     }
@@ -357,21 +384,21 @@ fn tqli_values_lastrow(d: &mut [f64], e: &mut [f64], z: &mut [f64], t: usize) {
 /// One eigenvector of the symmetric tridiagonal `(alpha, beta)` (size `t`)
 /// for the (already computed) eigenvalue `lam`, by inverse iteration with a
 /// perturbed shift; written into `s[..t]`, normalized. `O(t)` per solve.
-fn tridiag_eigvec(
-    alpha: &[f64],
-    beta: &[f64],
+fn tridiag_eigvec<T: Real>(
+    alpha: &[T],
+    beta: &[T],
     t: usize,
-    lam: f64,
+    lam: T,
     seed: u64,
-    dd: &mut [f64],
-    up: &mut [f64],
-    s: &mut [f64],
+    dd: &mut [T],
+    up: &mut [T],
+    s: &mut [T],
 ) {
     let mut rng = Pcg64::seeded(0x7071_u64 ^ seed);
     for x in s[..t].iter_mut() {
-        *x = rng.normal();
+        *x = T::from_f64(rng.normal());
     }
-    let shift = lam + 1e-12 * lam.abs().max(1.0);
+    let shift = lam + T::SHIFT * lam.abs().max(T::ONE);
     for _round in 0..3 {
         // Thomas solve (T − shift·I) y = s, in place on s.
         for i in 0..t {
@@ -379,15 +406,15 @@ fn tridiag_eigvec(
         }
         up[..t.saturating_sub(1)].copy_from_slice(&beta[..t.saturating_sub(1)]);
         for i in 0..t - 1 {
-            if dd[i].abs() < 1e-300 {
-                dd[i] = 1e-300;
+            if dd[i].abs() < T::TINY {
+                dd[i] = T::TINY;
             }
             let w = up[i] / dd[i];
             dd[i + 1] -= w * up[i];
             s[i + 1] -= w * s[i];
         }
-        if dd[t - 1].abs() < 1e-300 {
-            dd[t - 1] = 1e-300;
+        if dd[t - 1].abs() < T::TINY {
+            dd[t - 1] = T::TINY;
         }
         s[t - 1] /= dd[t - 1];
         let mut i = t - 1;
@@ -395,8 +422,8 @@ fn tridiag_eigvec(
             i -= 1;
             s[i] = (s[i] - up[i] * s[i + 1]) / dd[i];
         }
-        let n: f64 = s[..t].iter().map(|x| x * x).sum::<f64>().sqrt();
-        if n == 0.0 {
+        let n: T = s[..t].iter().map(|x| *x * *x).sum::<T>().sqrt();
+        if n == T::ZERO {
             return;
         }
         for x in s[..t].iter_mut() {
@@ -423,17 +450,17 @@ fn tridiag_eigvec(
 /// has seen the shape.
 ///
 /// Like every Gram-side method (including the `GramEigen` ablation
-/// solver), exactly-zero singular values are reported at the `√ε·σ_max ≈
-/// 2e-8·σ_max` noise floor of the squared formulation; nonzero values are
-/// accurate to the residual tolerance.
-pub fn block_topk(
-    a: &[C64],
+/// solver), exactly-zero singular values are reported at the `√ε·σ_max`
+/// noise floor of the squared formulation (≈2e-8·σ_max at f64); nonzero
+/// values are accurate to the residual tolerance.
+pub fn block_topk<T: SimdReal>(
+    a: &[C<T>],
     rows: usize,
     cols: usize,
     k: usize,
     opts: TopKOptions,
-    scratch: &mut TopKScratch,
-    out: &mut [f64],
+    scratch: &mut TopKScratch<T>,
+    out: &mut [T],
 ) -> usize {
     debug_assert_eq!(a.len(), rows * cols);
     debug_assert!(k >= 1 && k <= rows.min(cols), "k must be in 1..=min(rows, cols)");
@@ -442,7 +469,12 @@ pub fn block_topk(
     let dim = scratch.dim;
     let tmax = scratch.tmax;
     let use_right = cols <= rows;
-    let tol = opts.tol;
+    // Floor the tolerance at a few machine epsilons of the active width:
+    // a Ritz residual cannot shrink below ~ε·λ_max, so an f32 run with the
+    // f64 default (1e-12) would otherwise spin to max_iters on round-off.
+    let tol = T::from_f64(opts.tol).max(T::EPS * T::from_f64(8.0));
+    // √ε of the active width: probe noise floors and degeneracy margins.
+    let sqrt_eps = T::EPS.sqrt();
     let max_steps = opts.max_iters.max(k + 1);
     let mut steps = 0usize;
 
@@ -451,7 +483,7 @@ pub fn block_topk(
     let mut warm_ok = false;
     if scratch.warm {
         if use_right {
-            scratch.q.fill(C64::ZERO);
+            scratch.q.fill(C::ZERO);
             for j in 0..k {
                 let vj = &scratch.v[j * cols..(j + 1) * cols];
                 for (qc, vc) in scratch.q.iter_mut().zip(vj.iter()) {
@@ -459,7 +491,7 @@ pub fn block_topk(
                 }
             }
         } else {
-            scratch.aw[..cols].fill(C64::ZERO);
+            scratch.aw[..cols].fill(C::ZERO);
             for j in 0..k {
                 let vj = &scratch.v[j * cols..(j + 1) * cols];
                 for (ac, vc) in scratch.aw[..cols].iter_mut().zip(vj.iter()) {
@@ -470,8 +502,8 @@ pub fn block_topk(
             mat_vec(a, rows, cols, hint, q);
         }
         let n2 = cnorm2(&scratch.q);
-        if n2.sqrt() > 1e-150 {
-            let inv = 1.0 / n2.sqrt();
+        if n2.sqrt() > T::SMALL {
+            let inv = n2.sqrt().recip();
             for x in scratch.q.iter_mut() {
                 *x = x.scale(inv);
             }
@@ -481,9 +513,9 @@ pub fn block_topk(
     if !warm_ok {
         let mut rng = Pcg64::seeded(0x7091_u64 ^ ((dim as u64) << 12) ^ (k as u64));
         for x in scratch.q.iter_mut() {
-            *x = C64::new(rng.normal(), rng.normal());
+            *x = C::new(T::from_f64(rng.normal()), T::from_f64(rng.normal()));
         }
-        let inv = 1.0 / cnorm2(&scratch.q).sqrt().max(1e-300);
+        let inv = cnorm2(&scratch.q).sqrt().max(T::TINY).recip();
         for x in scratch.q.iter_mut() {
             *x = x.scale(inv);
         }
@@ -491,8 +523,8 @@ pub fn block_topk(
 
     // --- Lanczos with full reorthogonalization ---
     let mut t = 0usize;
-    let mut scale = 0.0f64;
-    let mut lmax = 0.0f64;
+    let mut scale = T::ZERO;
+    let mut lmax = T::ZERO;
     loop {
         scratch.qbasis[t * dim..(t + 1) * dim].copy_from_slice(&scratch.q);
         steps += 1;
@@ -509,22 +541,16 @@ pub fn block_topk(
         // u ← u − α_t·q_t − β_{t-1}·q_{t-1}, then one full classical-GS
         // pass against the whole basis (the "full reorthogonalization"
         // that keeps the basis orthonormal to machine precision).
-        for (uc, qc) in scratch.u.iter_mut().zip(scratch.q.iter()) {
-            *uc -= qc.scale(alpha_t);
-        }
+        T::caxpy(C::new(-alpha_t, T::ZERO), &scratch.q, &mut scratch.u);
         if t > 0 {
             let bprev = scratch.beta[t - 1];
             let qprev = &scratch.qbasis[(t - 1) * dim..t * dim];
-            for (uc, qc) in scratch.u.iter_mut().zip(qprev.iter()) {
-                *uc -= qc.scale(bprev);
-            }
+            T::caxpy(C::new(-bprev, T::ZERO), qprev, &mut scratch.u);
         }
         for i in 0..=t {
             let qi = &scratch.qbasis[i * dim..(i + 1) * dim];
             let coef = cdot(qi, &scratch.u);
-            for (uc, qc) in scratch.u.iter_mut().zip(qi.iter()) {
-                *uc -= *qc * coef;
-            }
+            T::caxpy(-coef, qi, &mut scratch.u);
         }
         let b = cnorm2(&scratch.u).sqrt();
         scale = scale.max(alpha_t.abs()).max(b);
@@ -536,8 +562,8 @@ pub fn block_topk(
             scratch.te[..t].copy_from_slice(&scratch.beta[..t]);
             tqli_values_lastrow(&mut scratch.td, &mut scratch.te, &mut scratch.tz, t);
             select_topk_desc(&scratch.td[..t], &mut scratch.idx, k.min(t));
-            lmax = scratch.td[scratch.idx[0]].max(0.0);
-            if lmax > 0.0 && t >= k {
+            lmax = scratch.td[scratch.idx[0]].max(T::ZERO);
+            if lmax > T::ZERO && t >= k {
                 let mut ok = true;
                 for j in 0..k {
                     if b * scratch.tz[scratch.idx[j]].abs() > tol * lmax {
@@ -550,7 +576,7 @@ pub fn block_topk(
                 }
             }
         }
-        if !done && b <= 1e-13 * scale.max(1e-300) {
+        if !done && b <= T::BREAKDOWN * scale.max(T::TINY) {
             // Breakdown: the Krylov space went invariant. That is only a
             // *converged* state if it already exposed a nonzero top-k set;
             // otherwise — fewer than k columns, or everything seen so far
@@ -559,25 +585,23 @@ pub fn block_topk(
             // random vector orthogonal to the basis and keep growing, so
             // the true spectrum is picked up and the all-zero answer is
             // only ever reported once the basis exhausts the space.
-            if t >= k && lmax > 0.0 {
+            if t >= k && lmax > T::ZERO {
                 done = true;
             } else {
                 let mut rng = Pcg64::seeded(0xbdbd_u64 ^ (t as u64));
                 for x in scratch.q.iter_mut() {
-                    *x = C64::new(rng.normal(), rng.normal());
+                    *x = C::new(T::from_f64(rng.normal()), T::from_f64(rng.normal()));
                 }
                 for i in 0..t {
                     let qi = &scratch.qbasis[i * dim..(i + 1) * dim];
                     let coef = cdot(qi, &scratch.q);
-                    for (qc, bc) in scratch.q.iter_mut().zip(qi.iter()) {
-                        *qc -= *bc * coef;
-                    }
+                    T::caxpy(-coef, qi, &mut scratch.q);
                 }
-                let inv = 1.0 / cnorm2(&scratch.q).sqrt().max(1e-300);
+                let inv = cnorm2(&scratch.q).sqrt().max(T::TINY).recip();
                 for x in scratch.q.iter_mut() {
                     *x = x.scale(inv);
                 }
-                scratch.beta[t - 1] = 0.0;
+                scratch.beta[t - 1] = T::ZERO;
                 continue;
             }
         }
@@ -585,7 +609,7 @@ pub fn block_topk(
             break;
         }
         scratch.beta[t - 1] = b;
-        let inv = 1.0 / b;
+        let inv = b.recip();
         for (qc, uc) in scratch.q.iter_mut().zip(scratch.u.iter()) {
             *qc = uc.scale(inv);
         }
@@ -597,7 +621,7 @@ pub fn block_topk(
     tqli_values_lastrow(&mut scratch.td, &mut scratch.te, &mut scratch.tz, t);
     let kk = k.min(t);
     select_topk_desc(&scratch.td[..t], &mut scratch.idx, kk);
-    lmax = scratch.td[scratch.idx[0]].max(0.0);
+    lmax = scratch.td[scratch.idx[0]].max(T::ZERO);
     for j in 0..kk {
         let lam = scratch.td[scratch.idx[j]];
         tridiag_eigvec(
@@ -616,7 +640,7 @@ pub fn block_topk(
     for j in 0..kk {
         for _pass in 0..2 {
             for p in 0..j {
-                let mut dot = 0.0f64;
+                let mut dot = T::ZERO;
                 for i in 0..t {
                     dot += scratch.svecs[p * tmax + i] * scratch.svecs[j * tmax + i];
                 }
@@ -626,9 +650,9 @@ pub fn block_topk(
                 }
             }
         }
-        let n: f64 =
-            scratch.svecs[j * tmax..j * tmax + t].iter().map(|x| x * x).sum::<f64>().sqrt();
-        if n > 1e-150 {
+        let n: T =
+            scratch.svecs[j * tmax..j * tmax + t].iter().map(|x| *x * *x).sum::<T>().sqrt();
+        if n > T::SMALL {
             for i in 0..t {
                 scratch.svecs[j * tmax + i] /= n;
             }
@@ -637,22 +661,20 @@ pub fn block_topk(
     // Map back to singular vectors and values.
     for j in 0..k {
         if j < kk {
-            let lam = scratch.td[scratch.idx[j]].max(0.0);
+            let lam = scratch.td[scratch.idx[j]].max(T::ZERO);
             out[j] = lam.sqrt();
         } else {
-            out[j] = 0.0;
+            out[j] = T::ZERO;
         }
     }
     for j in 0..k {
         // x_j = Σ_i s_j[i]·q_i, built in scratch.u (dim long).
-        scratch.u.fill(C64::ZERO);
+        scratch.u.fill(C::ZERO);
         if j < kk {
             for i in 0..t {
                 let si = scratch.svecs[j * tmax + i];
                 let qi = &scratch.qbasis[i * dim..(i + 1) * dim];
-                for (uc, qc) in scratch.u.iter_mut().zip(qi.iter()) {
-                    *uc += qc.scale(si);
-                }
+                T::caxpy(C::new(si, T::ZERO), qi, &mut scratch.u);
             }
         }
         let sigma = out[j];
@@ -671,7 +693,7 @@ pub fn block_topk(
                 *wc = uc.scale(sigma);
             }
             mat_vec_h(a, rows, cols, &scratch.u, &mut scratch.pz);
-            let inv = if sigma > 0.0 { 1.0 / sigma } else { 0.0 };
+            let inv = if sigma > T::ZERO { sigma.recip() } else { T::ZERO };
             for (vc, zc) in
                 scratch.v[j * cols..(j + 1) * cols].iter_mut().zip(scratch.pz.iter())
             {
@@ -686,7 +708,7 @@ pub fn block_topk(
     // the *next* eigenvalue instead. Power-iterate a random vector in the
     // orthogonal complement of the returned right vectors; if its Rayleigh
     // quotient beats λ_k, a copy was missed — converge it and insert.
-    if lmax > 0.0 {
+    if lmax > T::ZERO {
         'rounds: for round in 0..k {
             if k >= cols {
                 break;
@@ -694,20 +716,20 @@ pub fn block_topk(
             let mut rng =
                 Pcg64::seeded(0x9b0e_u64 ^ ((round as u64) << 24) ^ (cols as u64));
             for x in scratch.pv.iter_mut() {
-                *x = C64::new(rng.normal(), rng.normal());
+                *x = C::new(T::from_f64(rng.normal()), T::from_f64(rng.normal()));
             }
             deflate_against(&mut scratch.pv, &scratch.v, k, cols);
             let n2 = cnorm2(&scratch.pv);
-            if n2.sqrt() <= 1e-8 * (cols as f64).sqrt() {
+            if n2.sqrt() <= sqrt_eps * T::from_usize(cols).sqrt() {
                 break;
             }
-            let inv = 1.0 / n2.sqrt();
+            let inv = n2.sqrt().recip();
             for x in scratch.pv.iter_mut() {
                 *x = x.scale(inv);
             }
             let lam_k = out[k - 1] * out[k - 1];
-            let threshold = lam_k * (1.0 + 1e-8) + tol * lmax;
-            let mut rq = 0.0f64;
+            let threshold = lam_k * (T::ONE + sqrt_eps) + tol * lmax;
+            let mut rq = T::ZERO;
             for _ in 0..12 {
                 steps += 1;
                 mat_vec(a, rows, cols, &scratch.pv, &mut scratch.pw);
@@ -715,7 +737,7 @@ pub fn block_topk(
                 deflate_against(&mut scratch.pz, &scratch.v, k, cols);
                 rq = cdot(&scratch.pv, &scratch.pz).re;
                 let n = cnorm2(&scratch.pz).sqrt();
-                if n == 0.0 || rq > threshold {
+                if n == T::ZERO || rq > threshold {
                     // Zero complement, or detection already confirmed (the
                     // Rayleigh quotient only lower-bounds the deflated
                     // operator's top eigenvalue, so exceeding the threshold
@@ -723,7 +745,7 @@ pub fn block_topk(
                     // shortcut and runs the full amplification budget).
                     break;
                 }
-                let inv = 1.0 / n;
+                let inv = n.recip();
                 for (pc, zc) in scratch.pv.iter_mut().zip(scratch.pz.iter()) {
                     *pc = zc.scale(inv);
                 }
@@ -738,15 +760,15 @@ pub fn block_topk(
                 mat_vec_h(a, rows, cols, &scratch.pw, &mut scratch.pz);
                 deflate_against(&mut scratch.pz, &scratch.v, k, cols);
                 rq = cdot(&scratch.pv, &scratch.pz).re;
-                let mut res2 = 0.0f64;
+                let mut res2 = T::ZERO;
                 for (zc, pc) in scratch.pz.iter().zip(scratch.pv.iter()) {
                     res2 += (*zc - pc.scale(rq)).norm_sqr();
                 }
                 let n = cnorm2(&scratch.pz).sqrt();
-                if n == 0.0 {
+                if n == T::ZERO {
                     break;
                 }
-                let inv = 1.0 / n;
+                let inv = n.recip();
                 for (pc, zc) in scratch.pv.iter_mut().zip(scratch.pz.iter()) {
                     *pc = zc.scale(inv);
                 }
@@ -754,7 +776,7 @@ pub fn block_topk(
                     break;
                 }
             }
-            let sigma_new = rq.max(0.0).sqrt();
+            let sigma_new = rq.max(T::ZERO).sqrt();
             // Shift the smaller entries down and insert at the right rank.
             let mut pos = k;
             for j in 0..k {
@@ -787,7 +809,7 @@ pub fn block_topk(
 
 /// Write the indices of the `k` largest entries of `vals` (descending)
 /// into `idx[..k]` — selection without sorting the whole array.
-fn select_topk_desc(vals: &[f64], idx: &mut [usize], k: usize) {
+fn select_topk_desc<T: Real>(vals: &[T], idx: &mut [usize], k: usize) {
     for j in 0..k {
         let mut best = usize::MAX;
         for (i, &v) in vals.iter().enumerate() {
@@ -804,14 +826,52 @@ fn select_topk_desc(vals: &[f64], idx: &mut [usize], k: usize) {
 
 /// Subtract the projections of `x` onto the `k` stored vectors
 /// (vector-major, `len` entries each) — the deflation step of the probe.
-fn deflate_against(x: &mut [C64], vecs: &[C64], k: usize, len: usize) {
+fn deflate_against<T: SimdReal>(x: &mut [C<T>], vecs: &[C<T>], k: usize, len: usize) {
     for j in 0..k {
         let vj = &vecs[j * len..(j + 1) * len];
         let coef = cdot(vj, x);
-        for (xc, vc) in x.iter_mut().zip(vj.iter()) {
-            *xc -= *vc * coef;
-        }
+        T::caxpy(-coef, vj, x);
     }
+}
+
+/// Refine f32 top-k values against the exact f64 block: `σ_j = ‖A·v_j‖`
+/// with `v_j` the (widened) f32 right singular vector. First-order errors
+/// in `v_j` perturb `‖A v_j‖` only at second order around a singular
+/// vector, so an `O(ε_32)` vector yields an `O(ε_32²) ≈ 1e-14` value —
+/// the top-k half of the `F32Refined` tier. `vtmp` is a `cols`-long
+/// widening buffer; values are written descending into `out`.
+pub fn refine_topk_values(
+    a64: &[C64],
+    rows: usize,
+    cols: usize,
+    scratch32: &TopKScratch<f32>,
+    k: usize,
+    vtmp: &mut [C64],
+    out: &mut [f64],
+) {
+    debug_assert_eq!(a64.len(), rows * cols);
+    debug_assert_eq!(out.len(), k);
+    debug_assert!(vtmp.len() >= cols);
+    for j in 0..k {
+        let v32 = scratch32.right_vector(j);
+        let mut n2 = 0.0f64;
+        for (wide, narrow) in vtmp[..cols].iter_mut().zip(v32.iter()) {
+            *wide = narrow.to_c64();
+            n2 += wide.norm_sqr();
+        }
+        if n2 <= 0.0 {
+            out[j] = 0.0;
+            continue;
+        }
+        // ‖A v‖ / ‖v‖ — the Rayleigh quotient for singular values.
+        let mut num2 = 0.0f64;
+        for i in 0..rows {
+            let yi = <f64 as SimdReal>::cdot(&a64[i * cols..(i + 1) * cols], &vtmp[..cols]);
+            num2 += yi.norm_sqr();
+        }
+        out[j] = (num2 / n2).sqrt();
+    }
+    out.sort_unstable_by(|x, y| y.partial_cmp(x).unwrap());
 }
 
 fn norm(x: &[f64]) -> f64 {
@@ -976,7 +1036,7 @@ mod tests {
         }
         assert!(warm < cold, "warm {warm} !< cold {cold}");
         // Conjugating a cold scratch is a no-op.
-        let mut empty = TopKScratch::new();
+        let mut empty = TopKScratch::<f64>::new();
         empty.conjugate_basis();
         assert!(!empty.is_warm());
     }
@@ -1004,5 +1064,38 @@ mod tests {
         let again =
             block_topk(&a.data, 7, 7, 2, TopKOptions::default(), &mut scratch, &mut out);
         assert_eq!(first, again, "cold starts are deterministic");
+    }
+
+    #[test]
+    fn f32_topk_tracks_f64_and_refines_to_1e12() {
+        use crate::numeric::CMat;
+        let mut rng = Pcg64::seeded(58);
+        for &(rows, cols, k) in &[(8usize, 8usize, 3usize), (10, 6, 2), (6, 10, 2)] {
+            let a = CMat::random_normal(rows, cols, &mut rng);
+            let mut s64 = TopKScratch::new();
+            let mut want = vec![0.0f64; k];
+            block_topk(&a.data, rows, cols, k, TopKOptions::default(), &mut s64, &mut want);
+            let a32: CMat<f32> = a.convert();
+            let mut s32 = TopKScratch::<f32>::new();
+            let mut got32 = vec![0.0f32; k];
+            block_topk(&a32.data, rows, cols, k, TopKOptions::default(), &mut s32, &mut got32);
+            let scale = want[0].max(1.0);
+            for (x, y) in want.iter().zip(&got32) {
+                assert!(
+                    (x - *y as f64).abs() <= 1e-3 * scale,
+                    "{rows}x{cols} k={k}: f64 {x} vs f32 {y}"
+                );
+            }
+            // Refinement against the exact block recovers f64 accuracy.
+            let mut vtmp = vec![C64::ZERO; cols];
+            let mut refined = vec![0.0f64; k];
+            refine_topk_values(&a.data, rows, cols, &s32, k, &mut vtmp, &mut refined);
+            for (x, y) in want.iter().zip(&refined) {
+                assert!(
+                    (x - y).abs() <= 1e-9 * scale,
+                    "{rows}x{cols} k={k}: refined {y} vs f64 {x}"
+                );
+            }
+        }
     }
 }

@@ -1,71 +1,73 @@
 //! Householder QR decomposition for real dense matrices.
 //!
 //! Substrate for the Golub–Kahan SVD (bidiagonalization uses the same
-//! reflector machinery) and for orthogonality checks in tests.
+//! reflector machinery) and for orthogonality checks in tests. Generic over
+//! the [`Real`] width like the rest of the linalg layer (`f64` default).
 
-use crate::numeric::{Layout, Mat};
+use crate::numeric::{Layout, Mat, Real};
 
 /// Result of a QR decomposition: `A = Q · R` with `Q` having orthonormal
 /// columns (thin factorization, `Q: m×n`, `R: n×n` for `m ≥ n`).
-pub struct Qr {
-    pub q: Mat,
-    pub r: Mat,
+pub struct Qr<T = f64> {
+    pub q: Mat<T>,
+    pub r: Mat<T>,
 }
 
 /// Compute a Householder reflector `v, β` such that
 /// `(I − β v vᵀ) x = ∓‖x‖ e₁`, with `v[0] = 1` implicit.
 /// Returns `(v, beta, alpha)` where `alpha` is the resulting leading entry.
-pub(crate) fn householder(x: &[f64]) -> (Vec<f64>, f64, f64) {
+pub(crate) fn householder<T: Real>(x: &[T]) -> (Vec<T>, T, T) {
     let n = x.len();
     let mut v = x.to_vec();
     if n == 0 {
-        return (v, 0.0, 0.0);
+        return (v, T::ZERO, T::ZERO);
     }
-    let sigma: f64 = x[1..].iter().map(|a| a * a).sum();
+    let sigma: T = x[1..].iter().map(|a| *a * *a).sum();
     let x0 = x[0];
-    if sigma == 0.0 && x0 >= 0.0 {
-        v[0] = 1.0;
-        return (v, 0.0, x0);
+    if sigma == T::ZERO && x0 >= T::ZERO {
+        v[0] = T::ONE;
+        return (v, T::ZERO, x0);
     }
     let mu = (x0 * x0 + sigma).sqrt();
-    let v0 = if x0 <= 0.0 { x0 - mu } else { -sigma / (x0 + mu) };
-    let beta = 2.0 * v0 * v0 / (sigma + v0 * v0);
+    let v0 = if x0 <= T::ZERO { x0 - mu } else { -sigma / (x0 + mu) };
+    let beta = T::TWO * v0 * v0 / (sigma + v0 * v0);
     for vi in v.iter_mut().skip(1) {
         *vi /= v0;
     }
-    v[0] = 1.0;
+    v[0] = T::ONE;
     // Both branches of v0 equal x0 − mu (the second computed stably), so the
     // reflection always maps x ↦ +‖x‖·e₁.
     (v, beta, mu)
 }
 
 /// Thin QR via Householder reflectors. Requires `m ≥ n`.
-pub fn qr(a: &Mat) -> Qr {
+pub fn qr<T: Real>(a: &Mat<T>) -> Qr<T> {
     let (m, n) = (a.rows, a.cols);
     assert!(m >= n, "qr requires rows >= cols (got {m}x{n})");
     let mut r = a.to_layout(Layout::RowMajor);
     // Store reflectors (v, beta) to build Q afterwards.
-    let mut reflectors: Vec<(Vec<f64>, f64)> = Vec::with_capacity(n);
+    let mut reflectors: Vec<(Vec<T>, T)> = Vec::with_capacity(n);
 
     for k in 0..n {
-        let col: Vec<f64> = (k..m).map(|i| r[(i, k)]).collect();
+        let col: Vec<T> = (k..m).map(|i| r[(i, k)]).collect();
         let (v, beta, alpha) = householder(&col);
         // Apply (I - beta v vT) to R[k.., k..]
-        if beta != 0.0 {
+        if beta != T::ZERO {
             for j in k..n {
-                let mut dot = 0.0;
+                let mut dot = T::ZERO;
                 for i in k..m {
                     dot += v[i - k] * r[(i, j)];
                 }
                 let bd = beta * dot;
                 for i in k..m {
-                    r[(i, j)] -= bd * v[i - k];
+                    let d = bd * v[i - k];
+                    r[(i, j)] -= d;
                 }
             }
         }
         r[(k, k)] = alpha;
         for i in k + 1..m {
-            r[(i, k)] = 0.0;
+            r[(i, k)] = T::ZERO;
         }
         reflectors.push((v, beta));
     }
@@ -73,21 +75,22 @@ pub fn qr(a: &Mat) -> Qr {
     // Accumulate thin Q by applying reflectors to I (m×n), backwards.
     let mut q = Mat::zeros(m, n);
     for i in 0..n {
-        q[(i, i)] = 1.0;
+        q[(i, i)] = T::ONE;
     }
     for k in (0..n).rev() {
         let (v, beta) = &reflectors[k];
-        if *beta == 0.0 {
+        if *beta == T::ZERO {
             continue;
         }
         for j in 0..n {
-            let mut dot = 0.0;
+            let mut dot = T::ZERO;
             for i in k..m {
                 dot += v[i - k] * q[(i, j)];
             }
-            let bd = beta * dot;
+            let bd = *beta * dot;
             for i in k..m {
-                q[(i, j)] -= bd * v[i - k];
+                let d = bd * v[i - k];
+                q[(i, j)] -= d;
             }
         }
     }
@@ -103,15 +106,15 @@ pub fn qr(a: &Mat) -> Qr {
 }
 
 /// Orthonormality defect `‖QᵀQ − I‖_max` of a real matrix.
-pub fn orthonormality_defect(q: &Mat) -> f64 {
-    let mut worst = 0.0f64;
+pub fn orthonormality_defect<T: Real>(q: &Mat<T>) -> T {
+    let mut worst = T::ZERO;
     for i in 0..q.cols {
         for j in 0..q.cols {
-            let mut dot = 0.0;
+            let mut dot = T::ZERO;
             for r in 0..q.rows {
                 dot += q[(r, i)] * q[(r, j)];
             }
-            let want = if i == j { 1.0 } else { 0.0 };
+            let want = if i == j { T::ONE } else { T::ZERO };
             worst = worst.max((dot - want).abs());
         }
     }
@@ -175,5 +178,16 @@ mod tests {
         }
         let norm: f64 = x.iter().map(|a| a * a).sum::<f64>().sqrt();
         assert!((alpha.abs() - norm).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f32_qr_reconstructs() {
+        let mut rng = Pcg64::seeded(13);
+        let a64 = Mat::random_normal(8, 5, &mut rng);
+        let a: Mat<f32> = a64.convert();
+        let f = qr(&a);
+        let recon = f.q.matmul(&f.r);
+        assert!(recon.max_abs_diff(&a) < 1e-4);
+        assert!(orthonormality_defect(&f.q) < 1e-5);
     }
 }

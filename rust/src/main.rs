@@ -14,7 +14,7 @@ use conv_svd_lfa::conv::{Boundary, ConvKernel};
 use conv_svd_lfa::coordinator::{Backend, ServiceConfig, SpectralService};
 use conv_svd_lfa::engine::{ModelPlan, SpectralCache, SpectrumRequest};
 use conv_svd_lfa::error::Result;
-use conv_svd_lfa::lfa::{self, BlockSolver, Fold, LfaOptions};
+use conv_svd_lfa::lfa::{self, BlockSolver, Fold, LfaOptions, Precision};
 use conv_svd_lfa::model::zoo;
 use conv_svd_lfa::model::ModelConfig;
 use conv_svd_lfa::numeric::Pcg64;
@@ -57,6 +57,10 @@ fn cmd_analyze(cli: &Cli) -> Result<()> {
     let seed: u64 = cli.opt_parse("seed", 2025)?;
     let top: usize = cli.opt_parse("top", 8)?;
     let method = cli.opt("method").unwrap_or("lfa");
+    let precision = precision_opt(cli)?;
+    if precision != Precision::F64 && method != "lfa" {
+        bail!("--precision applies to the LFA engine only (method {method:?} is f64)");
+    }
 
     let mut rng = Pcg64::seeded(seed);
     let kernel = ConvKernel::random_he(c_out, c_in, k, k, &mut rng);
@@ -66,7 +70,7 @@ fn cmd_analyze(cli: &Cli) -> Result<()> {
             &kernel,
             n,
             m,
-            LfaOptions { threads, ..Default::default() },
+            LfaOptions { threads, precision, ..Default::default() },
         ),
         "fft" => fft_svd::singular_values(&kernel, n, m, FftLayoutPolicy::Natural, threads),
         "explicit" => explicit_svd::singular_values(&kernel, n, m, Boundary::Periodic),
@@ -133,6 +137,16 @@ fn freqs_solved_line(solved: usize, total: usize, cached_layers: usize, folded: 
     }
 }
 
+/// The `--precision {f64,f32,f32-refined}` option shared by the analyze
+/// and audit commands (default f64).
+fn precision_opt(cli: &Cli) -> Result<Precision> {
+    match cli.opt("precision") {
+        None => Ok(Precision::F64),
+        Some(s) => Precision::parse(s)
+            .ok_or_else(|| err!("unknown precision {s:?} (f64|f32|f32-refined)")),
+    }
+}
+
 /// The `--cache-bytes N` / `--no-cache` pair shared by both audit
 /// commands: `None` = caching disabled, `Some(0)` = the default budget.
 fn cache_budget(cli: &Cli) -> Result<Option<usize>> {
@@ -183,6 +197,7 @@ fn cmd_audit(cli: &Cli) -> Result<()> {
         backend,
         artifacts_dir,
         folding,
+        precision: precision_opt(cli)?,
         cache_bytes: cache_budget(cli)?,
         ..Default::default()
     })?;
@@ -292,7 +307,13 @@ fn cmd_audit_model(cli: &Cli) -> Result<()> {
     // Build through the cache when one exists: the build stores each
     // layer's plan signature, so every repeat sweep derives its result
     // keys instead of re-hashing the weight tensors per sweep.
-    let opts = LfaOptions { threads, solver, folding, ..Default::default() };
+    let opts = LfaOptions {
+        threads,
+        solver,
+        folding,
+        precision: precision_opt(cli)?,
+        ..Default::default()
+    };
     let plan = match &cache {
         Some(c) => ModelPlan::build_cached(&model, opts, c)?,
         None => ModelPlan::build(&model, opts)?,

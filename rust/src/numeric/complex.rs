@@ -1,47 +1,62 @@
-//! Double-precision complex arithmetic.
+//! Complex arithmetic, generic over the real scalar width.
 //!
 //! The offline crate set has no `num-complex`, so we carry our own small,
-//! `#[repr(C)]`, `Copy` complex type. Layout is `[re, im]`, compatible with
-//! the interleaved representation used by the FFT substrate and by the
-//! real/imag plane pairs exchanged with the PJRT artifacts.
+//! `#[repr(C)]`, `Copy` complex type [`C<T>`] over any [`Real`] scalar.
+//! Layout is `[re, im]`, compatible with the interleaved representation
+//! used by the FFT substrate and by the real/imag plane pairs exchanged
+//! with the PJRT artifacts. [`C64`] (`C<f64>`) is the crate-wide default —
+//! every pre-existing call site compiles unchanged against the alias —
+//! and [`C32`] (`C<f32>`) is the half-width tier the SIMD f32 paths run on.
 
+use super::real::Real;
 use std::fmt;
 use std::iter::Sum;
 use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
 
-/// A complex number over `f64`.
+/// A complex number over the real scalar `T`.
 #[derive(Clone, Copy, PartialEq, Default)]
 #[repr(C)]
-pub struct C64 {
-    pub re: f64,
-    pub im: f64,
+pub struct C<T> {
+    pub re: T,
+    pub im: T,
 }
 
-/// Shorthand constructor.
+/// Double-precision complex — the crate-wide default scalar.
+pub type C64 = C<f64>;
+/// Single-precision complex — the SIMD/f32 tier.
+pub type C32 = C<f32>;
+
+/// Shorthand constructor (double precision).
 #[inline(always)]
 pub const fn c64(re: f64, im: f64) -> C64 {
-    C64 { re, im }
+    C { re, im }
 }
 
-impl C64 {
-    pub const ZERO: C64 = c64(0.0, 0.0);
-    pub const ONE: C64 = c64(1.0, 0.0);
-    pub const I: C64 = c64(0.0, 1.0);
+/// Shorthand constructor (single precision).
+#[inline(always)]
+pub const fn c32(re: f32, im: f32) -> C32 {
+    C { re, im }
+}
+
+impl<T: Real> C<T> {
+    pub const ZERO: C<T> = C { re: T::ZERO, im: T::ZERO };
+    pub const ONE: C<T> = C { re: T::ONE, im: T::ZERO };
+    pub const I: C<T> = C { re: T::ZERO, im: T::ONE };
 
     #[inline(always)]
-    pub const fn new(re: f64, im: f64) -> Self {
+    pub const fn new(re: T, im: T) -> Self {
         Self { re, im }
     }
 
     /// Purely real complex number.
     #[inline(always)]
-    pub const fn real(re: f64) -> Self {
-        Self { re, im: 0.0 }
+    pub const fn real(re: T) -> Self {
+        Self { re, im: T::ZERO }
     }
 
     /// `e^{iθ} = cos θ + i sin θ`.
     #[inline]
-    pub fn cis(theta: f64) -> Self {
+    pub fn cis(theta: T) -> Self {
         let (s, c) = theta.sin_cos();
         Self { re: c, im: s }
     }
@@ -54,23 +69,23 @@ impl C64 {
 
     /// Squared magnitude `|z|²` (cheaper than `abs`).
     #[inline(always)]
-    pub fn norm_sqr(self) -> f64 {
+    pub fn norm_sqr(self) -> T {
         self.re * self.re + self.im * self.im
     }
 
     /// Magnitude `|z|`, overflow-safe via `hypot`.
     #[inline]
-    pub fn abs(self) -> f64 {
+    pub fn abs(self) -> T {
         self.re.hypot(self.im)
     }
 
     /// Argument (phase) in `(-π, π]`.
     #[inline]
-    pub fn arg(self) -> f64 {
+    pub fn arg(self) -> T {
         self.im.atan2(self.re)
     }
 
-    /// Multiplicative inverse. `1/0` produces infinities like `f64`.
+    /// Multiplicative inverse. `1/0` produces infinities like the scalar.
     #[inline]
     pub fn inv(self) -> Self {
         let d = self.norm_sqr();
@@ -98,19 +113,19 @@ impl C64 {
 
     /// Scale by a real factor.
     #[inline(always)]
-    pub fn scale(self, s: f64) -> Self {
+    pub fn scale(self, s: T) -> Self {
         Self { re: self.re * s, im: self.im * s }
     }
 
     /// Principal square root.
     pub fn sqrt(self) -> Self {
-        if self.re == 0.0 && self.im == 0.0 {
+        if self.re == T::ZERO && self.im == T::ZERO {
             return Self::ZERO;
         }
         let m = self.abs();
-        let re = ((m + self.re) * 0.5).sqrt();
-        let im_mag = ((m - self.re) * 0.5).sqrt();
-        Self { re, im: if self.im >= 0.0 { im_mag } else { -im_mag } }
+        let re = ((m + self.re) * T::HALF).sqrt();
+        let im_mag = ((m - self.re) * T::HALF).sqrt();
+        Self { re, im: if self.im >= T::ZERO { im_mag } else { -im_mag } }
     }
 
     /// True if either component is NaN.
@@ -124,68 +139,92 @@ impl C64 {
     pub fn is_finite(self) -> bool {
         self.re.is_finite() && self.im.is_finite()
     }
-}
 
-impl Add for C64 {
-    type Output = C64;
+    /// Widen/narrow to another scalar width through `f64`.
     #[inline(always)]
-    fn add(self, rhs: C64) -> C64 {
-        c64(self.re + rhs.re, self.im + rhs.im)
+    pub fn convert<U: Real>(self) -> C<U> {
+        C { re: U::from_f64(self.re.to_f64()), im: U::from_f64(self.im.to_f64()) }
     }
 }
 
-impl Sub for C64 {
-    type Output = C64;
+impl C64 {
+    /// Narrow to single precision.
     #[inline(always)]
-    fn sub(self, rhs: C64) -> C64 {
-        c64(self.re - rhs.re, self.im - rhs.im)
+    pub fn to_c32(self) -> C32 {
+        C { re: self.re as f32, im: self.im as f32 }
     }
 }
 
-impl Mul for C64 {
-    type Output = C64;
+impl C32 {
+    /// Widen to double precision.
     #[inline(always)]
-    fn mul(self, rhs: C64) -> C64 {
-        c64(
-            self.re * rhs.re - self.im * rhs.im,
-            self.re * rhs.im + self.im * rhs.re,
-        )
+    pub fn to_c64(self) -> C64 {
+        C { re: self.re as f64, im: self.im as f64 }
     }
 }
 
-impl Div for C64 {
-    type Output = C64;
-    #[inline]
-    fn div(self, rhs: C64) -> C64 {
-        // Smith's algorithm: avoids overflow for large components.
-        if rhs.re.abs() >= rhs.im.abs() {
-            let r = rhs.im / rhs.re;
-            let d = rhs.re + rhs.im * r;
-            c64((self.re + self.im * r) / d, (self.im - self.re * r) / d)
-        } else {
-            let r = rhs.re / rhs.im;
-            let d = rhs.re * r + rhs.im;
-            c64((self.re * r + self.im) / d, (self.im * r - self.re) / d)
+impl<T: Real> Add for C<T> {
+    type Output = C<T>;
+    #[inline(always)]
+    fn add(self, rhs: C<T>) -> C<T> {
+        C { re: self.re + rhs.re, im: self.im + rhs.im }
+    }
+}
+
+impl<T: Real> Sub for C<T> {
+    type Output = C<T>;
+    #[inline(always)]
+    fn sub(self, rhs: C<T>) -> C<T> {
+        C { re: self.re - rhs.re, im: self.im - rhs.im }
+    }
+}
+
+impl<T: Real> Mul for C<T> {
+    type Output = C<T>;
+    #[inline(always)]
+    fn mul(self, rhs: C<T>) -> C<T> {
+        C {
+            re: self.re * rhs.re - self.im * rhs.im,
+            im: self.re * rhs.im + self.im * rhs.re,
         }
     }
 }
 
-impl Neg for C64 {
-    type Output = C64;
-    #[inline(always)]
-    fn neg(self) -> C64 {
-        c64(-self.re, -self.im)
+impl<T: Real> Div for C<T> {
+    type Output = C<T>;
+    #[inline]
+    fn div(self, rhs: C<T>) -> C<T> {
+        // Smith's algorithm: avoids overflow for large components.
+        if rhs.re.abs() >= rhs.im.abs() {
+            let r = rhs.im / rhs.re;
+            let d = rhs.re + rhs.im * r;
+            C { re: (self.re + self.im * r) / d, im: (self.im - self.re * r) / d }
+        } else {
+            let r = rhs.re / rhs.im;
+            let d = rhs.re * r + rhs.im;
+            C { re: (self.re * r + self.im) / d, im: (self.im * r - self.re) / d }
+        }
     }
 }
 
-impl Mul<f64> for C64 {
-    type Output = C64;
+impl<T: Real> Neg for C<T> {
+    type Output = C<T>;
     #[inline(always)]
-    fn mul(self, rhs: f64) -> C64 {
+    fn neg(self) -> C<T> {
+        C { re: -self.re, im: -self.im }
+    }
+}
+
+impl<T: Real> Mul<T> for C<T> {
+    type Output = C<T>;
+    #[inline(always)]
+    fn mul(self, rhs: T) -> C<T> {
         self.scale(rhs)
     }
 }
 
+// The orphan rules (E0210) forbid `impl<T: Real> Mul<C<T>> for T`, so the
+// scalar-on-the-left form is spelled out per implementor.
 impl Mul<C64> for f64 {
     type Output = C64;
     #[inline(always)]
@@ -194,68 +233,72 @@ impl Mul<C64> for f64 {
     }
 }
 
-impl Div<f64> for C64 {
-    type Output = C64;
+impl Mul<C32> for f32 {
+    type Output = C32;
     #[inline(always)]
-    fn div(self, rhs: f64) -> C64 {
-        c64(self.re / rhs, self.im / rhs)
+    fn mul(self, rhs: C32) -> C32 {
+        rhs.scale(self)
     }
 }
 
-impl AddAssign for C64 {
+impl<T: Real> Div<T> for C<T> {
+    type Output = C<T>;
     #[inline(always)]
-    fn add_assign(&mut self, rhs: C64) {
+    fn div(self, rhs: T) -> C<T> {
+        C { re: self.re / rhs, im: self.im / rhs }
+    }
+}
+
+impl<T: Real> AddAssign for C<T> {
+    #[inline(always)]
+    fn add_assign(&mut self, rhs: C<T>) {
         self.re += rhs.re;
         self.im += rhs.im;
     }
 }
 
-impl SubAssign for C64 {
+impl<T: Real> SubAssign for C<T> {
     #[inline(always)]
-    fn sub_assign(&mut self, rhs: C64) {
+    fn sub_assign(&mut self, rhs: C<T>) {
         self.re -= rhs.re;
         self.im -= rhs.im;
     }
 }
 
-impl MulAssign for C64 {
+impl<T: Real> MulAssign for C<T> {
     #[inline(always)]
-    fn mul_assign(&mut self, rhs: C64) {
+    fn mul_assign(&mut self, rhs: C<T>) {
         *self = *self * rhs;
     }
 }
 
-impl DivAssign for C64 {
+impl<T: Real> DivAssign for C<T> {
     #[inline]
-    fn div_assign(&mut self, rhs: C64) {
+    fn div_assign(&mut self, rhs: C<T>) {
         *self = *self / rhs;
     }
 }
 
-impl From<f64> for C64 {
+impl<T: Real> From<T> for C<T> {
     #[inline(always)]
-    fn from(re: f64) -> Self {
-        c64(re, 0.0)
+    fn from(re: T) -> Self {
+        C { re, im: T::ZERO }
     }
 }
 
-impl Sum for C64 {
-    fn sum<I: Iterator<Item = C64>>(iter: I) -> C64 {
-        iter.fold(C64::ZERO, |a, b| a + b)
+impl<T: Real> Sum for C<T> {
+    fn sum<I: Iterator<Item = C<T>>>(iter: I) -> C<T> {
+        iter.fold(C::ZERO, |a, b| a + b)
     }
 }
 
-impl fmt::Debug for C64 {
+impl<T: Real> fmt::Debug for C<T> {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        if self.im >= 0.0 {
-            write!(f, "{:+.6}{:+.6}i", self.re, self.im)
-        } else {
-            write!(f, "{:+.6}{:+.6}i", self.re, self.im)
-        }
+        write!(f, "{:+.6}{:+.6}i", self.re, self.im)
     }
 }
 
-impl fmt::Display for C64 {
+impl<T: Real> fmt::Display for C<T> {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         fmt::Debug::fmt(self, f)
     }
@@ -366,5 +409,24 @@ mod tests {
     fn abs_overflow_safe() {
         let z = c64(1e200, 1e200);
         assert!(z.abs().is_finite());
+    }
+
+    #[test]
+    fn f32_arithmetic_mirrors_f64() {
+        let a = c32(1.0, 2.0);
+        let b = c32(3.0, -4.0);
+        let p = a * b;
+        assert!((p.re - 11.0).abs() < 1e-5 && (p.im - 2.0).abs() < 1e-5);
+        assert!((0.5f32 * a - a.scale(0.5)).abs() < 1e-6);
+        let z = C32::cis(0.3);
+        assert!((z.abs() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn width_conversions_roundtrip() {
+        let a = c64(0.125, -2.5);
+        assert_eq!(a.to_c32().to_c64(), a, "dyadic values convert exactly");
+        let w: C32 = a.convert();
+        assert_eq!(w, a.to_c32());
     }
 }

@@ -4,8 +4,14 @@
 //! stored row-major (contiguous) or in the FFT's natural planar layout has a
 //! first-order effect on SVD runtime. Layout is therefore a visible property
 //! of the matrix types here, not an implementation detail.
+//!
+//! Both matrix types are generic over the [`Real`] scalar width with an
+//! `f64` default — `Mat`/`CMat` written anywhere in the crate mean the
+//! double-precision instantiation, exactly as before the generic port,
+//! while the f32 SIMD tier instantiates `CMat<f32>`.
 
-use crate::numeric::complex::C64;
+use crate::numeric::complex::C;
+use crate::numeric::real::Real;
 use crate::numeric::rng::Pcg64;
 use std::fmt;
 
@@ -32,33 +38,33 @@ impl Layout {
 // Real dense matrix
 // ---------------------------------------------------------------------------
 
-/// Dense `f64` matrix.
+/// Dense real matrix (`f64` unless instantiated otherwise).
 #[derive(Clone, PartialEq)]
-pub struct Mat {
+pub struct Mat<T = f64> {
     pub rows: usize,
     pub cols: usize,
     pub layout: Layout,
-    pub data: Vec<f64>,
+    pub data: Vec<T>,
 }
 
-impl Mat {
+impl<T: Real> Mat<T> {
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Self { rows, cols, layout: Layout::RowMajor, data: vec![0.0; rows * cols] }
+        Self { rows, cols, layout: Layout::RowMajor, data: vec![T::ZERO; rows * cols] }
     }
 
     pub fn zeros_with(rows: usize, cols: usize, layout: Layout) -> Self {
-        Self { rows, cols, layout, data: vec![0.0; rows * cols] }
+        Self { rows, cols, layout, data: vec![T::ZERO; rows * cols] }
     }
 
     pub fn eye(n: usize) -> Self {
         let mut m = Self::zeros(n, n);
         for i in 0..n {
-            m[(i, i)] = 1.0;
+            m[(i, i)] = T::ONE;
         }
         m
     }
 
-    pub fn from_rows(rows: &[&[f64]]) -> Self {
+    pub fn from_rows(rows: &[&[T]]) -> Self {
         let r = rows.len();
         let c = if r == 0 { 0 } else { rows[0].len() };
         let mut m = Self::zeros(r, c);
@@ -72,7 +78,18 @@ impl Mat {
     }
 
     pub fn random_normal(rows: usize, cols: usize, rng: &mut Pcg64) -> Self {
-        Self { rows, cols, layout: Layout::RowMajor, data: rng.normal_vec(rows * cols) }
+        let data = (0..rows * cols).map(|_| T::from_f64(rng.normal())).collect();
+        Self { rows, cols, layout: Layout::RowMajor, data }
+    }
+
+    /// Widen/narrow every entry to another scalar width through `f64`.
+    pub fn convert<U: Real>(&self) -> Mat<U> {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            layout: self.layout,
+            data: self.data.iter().map(|&x| U::from_f64(x.to_f64())).collect(),
+        }
     }
 
     #[inline(always)]
@@ -106,13 +123,13 @@ impl Mat {
     }
 
     /// Plain triple-loop matmul (used by tests and small problems only).
-    pub fn matmul(&self, other: &Mat) -> Mat {
+    pub fn matmul(&self, other: &Mat<T>) -> Mat<T> {
         assert_eq!(self.cols, other.rows, "dim mismatch");
         let mut out = Mat::zeros(self.rows, other.cols);
         for i in 0..self.rows {
             for k in 0..self.cols {
                 let a = self[(i, k)];
-                if a == 0.0 {
+                if a == T::ZERO {
                     continue;
                 }
                 for j in 0..other.cols {
@@ -124,19 +141,19 @@ impl Mat {
     }
 
     /// Matrix–vector product.
-    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+    pub fn matvec(&self, x: &[T]) -> Vec<T> {
         assert_eq!(self.cols, x.len());
-        let mut y = vec![0.0; self.rows];
+        let mut y = vec![T::ZERO; self.rows];
         match self.layout {
             Layout::RowMajor => {
                 for (i, yi) in y.iter_mut().enumerate() {
                     let row = &self.data[i * self.cols..(i + 1) * self.cols];
-                    *yi = row.iter().zip(x).map(|(a, b)| a * b).sum();
+                    *yi = row.iter().zip(x).map(|(&a, &b)| a * b).sum();
                 }
             }
             Layout::ColMajor => {
                 for (j, &xj) in x.iter().enumerate() {
-                    if xj == 0.0 {
+                    if xj == T::ZERO {
                         continue;
                     }
                     let col = &self.data[j * self.rows..(j + 1) * self.rows];
@@ -150,12 +167,12 @@ impl Mat {
     }
 
     /// Transposed matrix–vector product `Aᵀ x`.
-    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+    pub fn matvec_t(&self, x: &[T]) -> Vec<T> {
         assert_eq!(self.rows, x.len());
-        let mut y = vec![0.0; self.cols];
+        let mut y = vec![T::ZERO; self.cols];
         for i in 0..self.rows {
             let xi = x[i];
-            if xi == 0.0 {
+            if xi == T::ZERO {
                 continue;
             }
             for j in 0..self.cols {
@@ -165,13 +182,13 @@ impl Mat {
         y
     }
 
-    pub fn frobenius_norm(&self) -> f64 {
-        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    pub fn frobenius_norm(&self) -> T {
+        self.data.iter().map(|&v| v * v).sum::<T>().sqrt()
     }
 
-    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+    pub fn max_abs_diff(&self, other: &Mat<T>) -> T {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        let mut m = 0.0f64;
+        let mut m = T::ZERO;
         for r in 0..self.rows {
             for c in 0..self.cols {
                 m = m.max((self[(r, c)] - other[(r, c)]).abs());
@@ -181,23 +198,23 @@ impl Mat {
     }
 }
 
-impl std::ops::Index<(usize, usize)> for Mat {
-    type Output = f64;
+impl<T: Real> std::ops::Index<(usize, usize)> for Mat<T> {
+    type Output = T;
     #[inline(always)]
-    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+    fn index(&self, (r, c): (usize, usize)) -> &T {
         &self.data[self.idx(r, c)]
     }
 }
 
-impl std::ops::IndexMut<(usize, usize)> for Mat {
+impl<T: Real> std::ops::IndexMut<(usize, usize)> for Mat<T> {
     #[inline(always)]
-    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut T {
         let i = self.idx(r, c);
         &mut self.data[i]
     }
 }
 
-impl fmt::Debug for Mat {
+impl<T: Real> fmt::Debug for Mat<T> {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         writeln!(f, "Mat {}x{} ({:?})", self.rows, self.cols, self.layout)?;
         let rmax = self.rows.min(8);
@@ -220,43 +237,55 @@ impl fmt::Debug for Mat {
 // Complex dense matrix
 // ---------------------------------------------------------------------------
 
-/// Dense complex matrix over [`C64`].
+/// Dense complex matrix over [`C<T>`] (`C64` unless instantiated otherwise).
 #[derive(Clone, PartialEq)]
-pub struct CMat {
+pub struct CMat<T = f64> {
     pub rows: usize,
     pub cols: usize,
     pub layout: Layout,
-    pub data: Vec<C64>,
+    pub data: Vec<C<T>>,
 }
 
-impl CMat {
+impl<T: Real> CMat<T> {
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Self { rows, cols, layout: Layout::RowMajor, data: vec![C64::ZERO; rows * cols] }
+        Self { rows, cols, layout: Layout::RowMajor, data: vec![C::ZERO; rows * cols] }
     }
 
     pub fn zeros_with(rows: usize, cols: usize, layout: Layout) -> Self {
-        Self { rows, cols, layout, data: vec![C64::ZERO; rows * cols] }
+        Self { rows, cols, layout, data: vec![C::ZERO; rows * cols] }
     }
 
     pub fn eye(n: usize) -> Self {
         let mut m = Self::zeros(n, n);
         for i in 0..n {
-            m[(i, i)] = C64::ONE;
+            m[(i, i)] = C::ONE;
         }
         m
     }
 
-    pub fn from_real(m: &Mat) -> Self {
+    pub fn from_real(m: &Mat<T>) -> Self {
         let mut out = Self::zeros_with(m.rows, m.cols, m.layout);
         for (dst, &src) in out.data.iter_mut().zip(&m.data) {
-            *dst = C64::real(src);
+            *dst = C::real(src);
         }
         out
     }
 
     pub fn random_normal(rows: usize, cols: usize, rng: &mut Pcg64) -> Self {
-        let data = (0..rows * cols).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+        let data = (0..rows * cols)
+            .map(|_| C::new(T::from_f64(rng.normal()), T::from_f64(rng.normal())))
+            .collect();
         Self { rows, cols, layout: Layout::RowMajor, data }
+    }
+
+    /// Widen/narrow every entry to another scalar width through `f64`.
+    pub fn convert<U: Real>(&self) -> CMat<U> {
+        CMat {
+            rows: self.rows,
+            cols: self.cols,
+            layout: self.layout,
+            data: self.data.iter().map(|z| z.convert()).collect(),
+        }
     }
 
     #[inline(always)]
@@ -279,7 +308,7 @@ impl CMat {
     }
 
     /// Hermitian (conjugate) transpose.
-    pub fn hermitian(&self) -> CMat {
+    pub fn hermitian(&self) -> CMat<T> {
         let mut out = CMat::zeros(self.cols, self.rows);
         for r in 0..self.rows {
             for c in 0..self.cols {
@@ -289,7 +318,7 @@ impl CMat {
         out
     }
 
-    pub fn matmul(&self, other: &CMat) -> CMat {
+    pub fn matmul(&self, other: &CMat<T>) -> CMat<T> {
         assert_eq!(self.cols, other.rows, "dim mismatch");
         let mut out = CMat::zeros(self.rows, other.cols);
         for i in 0..self.rows {
@@ -305,12 +334,12 @@ impl CMat {
     }
 
     /// `Aᴴ A` — the Gram matrix (Hermitian positive semidefinite).
-    pub fn gram(&self) -> CMat {
+    pub fn gram(&self) -> CMat<T> {
         let n = self.cols;
         let mut g = CMat::zeros(n, n);
         for i in 0..n {
             for j in i..n {
-                let mut s = C64::ZERO;
+                let mut s = C::ZERO;
                 for r in 0..self.rows {
                     s = s.mul_add(self[(r, i)].conj(), self[(r, j)]);
                 }
@@ -321,11 +350,11 @@ impl CMat {
         g
     }
 
-    pub fn matvec(&self, x: &[C64]) -> Vec<C64> {
+    pub fn matvec(&self, x: &[C<T>]) -> Vec<C<T>> {
         assert_eq!(self.cols, x.len());
-        let mut y = vec![C64::ZERO; self.rows];
+        let mut y = vec![C::ZERO; self.rows];
         for r in 0..self.rows {
-            let mut s = C64::ZERO;
+            let mut s = C::ZERO;
             for c in 0..self.cols {
                 s = s.mul_add(self[(r, c)], x[c]);
             }
@@ -334,13 +363,13 @@ impl CMat {
         y
     }
 
-    pub fn frobenius_norm(&self) -> f64 {
-        self.data.iter().map(|v| v.norm_sqr()).sum::<f64>().sqrt()
+    pub fn frobenius_norm(&self) -> T {
+        self.data.iter().map(|v| v.norm_sqr()).sum::<T>().sqrt()
     }
 
-    pub fn max_abs_diff(&self, other: &CMat) -> f64 {
+    pub fn max_abs_diff(&self, other: &CMat<T>) -> T {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        let mut m = 0.0f64;
+        let mut m = T::ZERO;
         for r in 0..self.rows {
             for c in 0..self.cols {
                 m = m.max((self[(r, c)] - other[(r, c)]).abs());
@@ -350,12 +379,12 @@ impl CMat {
     }
 
     /// `‖AᴴA − I‖_∞` — deviation from having orthonormal columns.
-    pub fn orthonormality_defect(&self) -> f64 {
+    pub fn orthonormality_defect(&self) -> T {
         let g = self.gram();
-        let mut m = 0.0f64;
+        let mut m = T::ZERO;
         for r in 0..g.rows {
             for c in 0..g.cols {
-                let want = if r == c { C64::ONE } else { C64::ZERO };
+                let want = if r == c { C::ONE } else { C::ZERO };
                 m = m.max((g[(r, c)] - want).abs());
             }
         }
@@ -363,23 +392,23 @@ impl CMat {
     }
 }
 
-impl std::ops::Index<(usize, usize)> for CMat {
-    type Output = C64;
+impl<T: Real> std::ops::Index<(usize, usize)> for CMat<T> {
+    type Output = C<T>;
     #[inline(always)]
-    fn index(&self, (r, c): (usize, usize)) -> &C64 {
+    fn index(&self, (r, c): (usize, usize)) -> &C<T> {
         &self.data[self.idx(r, c)]
     }
 }
 
-impl std::ops::IndexMut<(usize, usize)> for CMat {
+impl<T: Real> std::ops::IndexMut<(usize, usize)> for CMat<T> {
     #[inline(always)]
-    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut C64 {
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut C<T> {
         let i = self.idx(r, c);
         &mut self.data[i]
     }
 }
 
-impl fmt::Debug for CMat {
+impl<T: Real> fmt::Debug for CMat<T> {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         writeln!(f, "CMat {}x{} ({:?})", self.rows, self.cols, self.layout)?;
         let rmax = self.rows.min(6);
@@ -492,5 +521,15 @@ mod tests {
     fn frobenius_matches_manual() {
         let a = Mat::from_rows(&[&[3.0, 0.0], &[0.0, 4.0]]);
         assert!((a.frobenius_norm() - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn f32_instantiation_and_conversion() {
+        let mut rng = Pcg64::seeded(8);
+        let a: CMat = CMat::random_normal(3, 3, &mut rng);
+        let a32: CMat<f32> = a.convert();
+        let back: CMat = a32.convert();
+        assert!(a.max_abs_diff(&back) < 1e-6);
+        assert!((a32.frobenius_norm() as f64 - a.frobenius_norm()).abs() < 1e-5);
     }
 }

@@ -1,10 +1,15 @@
 //! Numeric substrate: complex arithmetic, dense matrices with explicit
-//! memory layout, and a deterministic PRNG.
+//! memory layout, a deterministic PRNG, the [`Real`] scalar abstraction
+//! (f64/f32), and the SIMD kernel dispatch layer.
 
 pub mod complex;
 pub mod mat;
+pub mod real;
 pub mod rng;
+pub mod simd;
 
-pub use complex::{c64, C64};
+pub use complex::{c32, c64, C, C32, C64};
 pub use mat::{CMat, Layout, Mat};
+pub use real::Real;
 pub use rng::Pcg64;
+pub use simd::{active_kernel_name, set_force_scalar, simd_active, SimdReal};

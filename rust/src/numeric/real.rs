@@ -1,0 +1,219 @@
+//! The [`Real`] scalar abstraction: the one trait the whole numeric and
+//! linear-algebra substrate is generic over.
+//!
+//! Two implementors exist — `f64` (the default everywhere; every public
+//! `C64`/`CMat` alias resolves to it) and `f32` (the half-width SIMD tier
+//! behind [`crate::lfa::Precision::F32`]). The trait carries exactly what
+//! the kernels need:
+//!
+//! - arithmetic/comparison bounds and the usual transcendental helpers
+//!   (`sqrt`, `hypot`, `sin_cos`, `atan2`);
+//! - conversions to/from `f64`, the crate's interchange precision (the
+//!   PRNG, the spectrum output buffers, and all public APIs speak `f64`);
+//! - **per-precision tolerance constants**. Every magic threshold in the
+//!   solvers (`1e-12` Jacobi convergence, `1e-300` division guards,
+//!   `1e-13` Lanczos breakdown, …) is an f64-ism; its f32 analogue lives
+//!   here, scaled to f32's ~1.2e-7 machine epsilon, so a solver written
+//!   once against `T::SVD_TOL` converges correctly at either width.
+//!
+//! Tolerances are deliberately associated consts, not parameters: they are
+//! properties of the arithmetic, not of the caller.
+
+use std::fmt::{Debug, Display};
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// A real scalar the spectral engine can run on. Implemented for `f64` and
+/// `f32`; sealed in practice by the tolerance-constant surface.
+pub trait Real:
+    Copy
+    + Clone
+    + Debug
+    + Display
+    + Default
+    + PartialEq
+    + PartialOrd
+    + Send
+    + Sync
+    + 'static
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + DivAssign
+    + Sum
+{
+    const ZERO: Self;
+    const ONE: Self;
+    const TWO: Self;
+    const HALF: Self;
+    /// Machine epsilon.
+    const EPS: Self;
+    /// Underflow-guard floor for divisions (`max(TINY)` denominators).
+    const TINY: Self;
+    /// "Numerically negligible vector norm" floor (warm-start hints, etc.).
+    const SMALL: Self;
+    /// One-sided Jacobi SVD relative off-diagonal convergence tolerance.
+    const SVD_TOL: Self;
+    /// Two-sided Hermitian Jacobi relative off-norm tolerance.
+    const EIG_TOL: Self;
+    /// Lanczos β breakdown threshold (relative to the running scale).
+    const BREAKDOWN: Self;
+    /// Implicit-QL deflation guard (relative off-diagonal floor).
+    const QL_EPS: Self;
+    /// Inverse-iteration shift perturbation.
+    const SHIFT: Self;
+
+    fn from_f64(x: f64) -> Self;
+    fn to_f64(self) -> f64;
+    fn from_usize(x: usize) -> Self {
+        Self::from_f64(x as f64)
+    }
+    /// Fused multiply-add `self·a + b` with a single rounding — the scalar
+    /// twin of the SIMD FMA lanes, so the portable fallback can reproduce
+    /// the vectorized kernels bit-for-bit.
+    fn mul_add(self, a: Self, b: Self) -> Self;
+    fn abs(self) -> Self;
+    fn sqrt(self) -> Self;
+    fn hypot(self, other: Self) -> Self;
+    fn atan2(self, other: Self) -> Self;
+    fn sin_cos(self) -> (Self, Self);
+    fn max(self, other: Self) -> Self;
+    fn min(self, other: Self) -> Self;
+    fn recip(self) -> Self;
+    fn is_nan(self) -> bool;
+    fn is_finite(self) -> bool;
+}
+
+macro_rules! forward_real_methods {
+    () => {
+        #[inline(always)]
+        fn mul_add(self, a: Self, b: Self) -> Self {
+            self.mul_add(a, b)
+        }
+        #[inline(always)]
+        fn abs(self) -> Self {
+            self.abs()
+        }
+        #[inline(always)]
+        fn sqrt(self) -> Self {
+            self.sqrt()
+        }
+        #[inline(always)]
+        fn hypot(self, other: Self) -> Self {
+            self.hypot(other)
+        }
+        #[inline(always)]
+        fn atan2(self, other: Self) -> Self {
+            self.atan2(other)
+        }
+        #[inline(always)]
+        fn sin_cos(self) -> (Self, Self) {
+            self.sin_cos()
+        }
+        #[inline(always)]
+        fn max(self, other: Self) -> Self {
+            self.max(other)
+        }
+        #[inline(always)]
+        fn min(self, other: Self) -> Self {
+            self.min(other)
+        }
+        #[inline(always)]
+        fn recip(self) -> Self {
+            self.recip()
+        }
+        #[inline(always)]
+        fn is_nan(self) -> bool {
+            self.is_nan()
+        }
+        #[inline(always)]
+        fn is_finite(self) -> bool {
+            self.is_finite()
+        }
+    };
+}
+
+impl Real for f64 {
+    const ZERO: f64 = 0.0;
+    const ONE: f64 = 1.0;
+    const TWO: f64 = 2.0;
+    const HALF: f64 = 0.5;
+    const EPS: f64 = f64::EPSILON;
+    const TINY: f64 = 1e-300;
+    const SMALL: f64 = 1e-150;
+    const SVD_TOL: f64 = 1e-12;
+    const EIG_TOL: f64 = 1e-15;
+    const BREAKDOWN: f64 = 1e-13;
+    const QL_EPS: f64 = 1e-16;
+    const SHIFT: f64 = 1e-12;
+
+    #[inline(always)]
+    fn from_f64(x: f64) -> f64 {
+        x
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    forward_real_methods!();
+}
+
+impl Real for f32 {
+    const ZERO: f32 = 0.0;
+    const ONE: f32 = 1.0;
+    const TWO: f32 = 2.0;
+    const HALF: f32 = 0.5;
+    const EPS: f32 = f32::EPSILON;
+    const TINY: f32 = 1e-30;
+    const SMALL: f32 = 1e-15;
+    // f32 ε ≈ 1.19e-7: tolerances sit a little above it so the sweeps
+    // terminate instead of chasing round-off.
+    const SVD_TOL: f32 = 1e-6;
+    const EIG_TOL: f32 = 2e-7;
+    const BREAKDOWN: f32 = 1e-5;
+    const QL_EPS: f32 = 2e-7;
+    const SHIFT: f32 = 1e-6;
+
+    #[inline(always)]
+    fn from_f64(x: f64) -> f32 {
+        x as f32
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    forward_real_methods!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<T: Real>() {
+        assert_eq!(T::from_f64(2.0).to_f64(), 2.0);
+        assert_eq!(T::from_usize(7).to_f64(), 7.0);
+        assert_eq!((T::ONE + T::ONE).to_f64(), T::TWO.to_f64());
+        assert!(T::EPS > T::ZERO && T::EPS < T::ONE);
+        assert!(T::TINY > T::ZERO && T::TINY < T::SMALL);
+        assert!(T::SVD_TOL > T::EPS * T::HALF);
+    }
+
+    #[test]
+    fn both_widths_roundtrip() {
+        roundtrip::<f64>();
+        roundtrip::<f32>();
+    }
+
+    #[test]
+    fn transcendentals_forward() {
+        let (s, c) = <f32 as Real>::sin_cos(0.0f32);
+        assert_eq!((s, c), (0.0, 1.0));
+        assert_eq!(<f64 as Real>::hypot(3.0, 4.0), 5.0);
+        assert_eq!(Real::max(1.0f32, 2.0), 2.0);
+    }
+}

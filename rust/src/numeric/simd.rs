@@ -1,0 +1,744 @@
+//! Explicitly vectorized inner-loop kernels with a portable fallback.
+//!
+//! The per-frequency hot loops — symbol-assembly tap contraction, Jacobi
+//! conjugate dots and row rotations, Gram rank-1 updates, Krylov matvecs —
+//! spend essentially all of their time in four primitive shapes. This
+//! module implements each one twice:
+//!
+//! - an **AVX2+FMA** `std::arch` path (x86_64 only), selected at runtime
+//!   via CPUID so a generic build still uses it on capable hardware;
+//! - a **portable lane-emulating fallback** that mirrors the vector
+//!   register layout (4 f64 / 8 f32 lanes), accumulation order and FMA
+//!   rounding exactly, using scalar `mul_add`. The two paths are therefore
+//!   **bit-identical** for either lane width — the equivalence tests
+//!   assert it — so enabling SIMD can never change a spectrum.
+//!
+//! Complex data stays interleaved `[re, im]` (`#[repr(C)]` [`C<T>`]);
+//! the symbol-assembly kernel instead takes **split** `re`/`im` phase
+//! planes, which turns the complex tap contraction into two independent
+//! real dot products — the best-vectorizing form of that loop.
+//!
+//! Dispatch is per-call through [`SimdReal`], with the one-time CPUID
+//! result cached; [`set_force_scalar`] (and the `CONV_SVD_NO_SIMD`
+//! environment variable) pin the fallback for benches, tests and the
+//! no-AVX2 CI job.
+
+use super::complex::C;
+use super::real::Real;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+/// Process-wide "pretend the CPU has no vector unit" switch.
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Cached CPUID result (plus the `CONV_SVD_NO_SIMD` env override).
+fn detected() -> bool {
+    static DETECTED: OnceLock<bool> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        if std::env::var_os("CONV_SVD_NO_SIMD").is_some() {
+            return false;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
+    })
+}
+
+/// Whether the vectorized paths are currently in use.
+#[inline]
+pub fn simd_active() -> bool {
+    detected() && !FORCE_SCALAR.load(Ordering::Relaxed)
+}
+
+/// Force (or release) the portable fallback, regardless of CPU support.
+/// Used by the SIMD-vs-scalar bench sections and equivalence tests.
+pub fn set_force_scalar(force: bool) {
+    FORCE_SCALAR.store(force, Ordering::Relaxed);
+}
+
+/// Human-readable name of the active kernel path (for bench stamps).
+pub fn active_kernel_name() -> &'static str {
+    if simd_active() {
+        "avx2+fma"
+    } else {
+        "scalar"
+    }
+}
+
+/// The four vector kernel shapes, per scalar width. `f64` runs 4 lanes,
+/// `f32` 8; both fall back to the bit-identical lane emulation when AVX2
+/// is absent or disabled.
+pub trait SimdReal: Real {
+    /// Split-complex tap contraction: `(Σ w·re, Σ w·im)`.
+    fn dot_split(w: &[Self], re: &[Self], im: &[Self]) -> (Self, Self);
+    /// Hermitian inner product `Σ x_i · conj(y_i)`.
+    fn cdot_conj(x: &[C<Self>], y: &[C<Self>]) -> C<Self>;
+    /// Plain inner product `Σ x_i · y_i`.
+    fn cdot(x: &[C<Self>], y: &[C<Self>]) -> C<Self>;
+    /// `y += s·x` (complex axpy — the Gram rank-1 update row).
+    fn caxpy(s: C<Self>, x: &[C<Self>], y: &mut [C<Self>]);
+    /// Paired Jacobi row rotation: `p' = c·p − sp·q`, `q' = sm·p + c·q`.
+    fn crot(p: &mut [C<Self>], q: &mut [C<Self>], c: Self, sp: C<Self>, sm: C<Self>);
+}
+
+// ---------------------------------------------------------------------------
+// Portable lane-emulating fallback, generic over the width.
+//
+// LANES accumulators are combined pairwise in the same order as the AVX2
+// horizontal sums, every multiply-accumulate is a fused `mul_add`, and the
+// tail is handled identically — which is what makes scalar and vector
+// paths bit-identical.
+// ---------------------------------------------------------------------------
+
+mod scalar {
+    use super::{Real, C};
+
+    /// Pairwise lane reduction matching the AVX2 horizontal sums:
+    /// `(l0+l1)+(l2+l3)` for 4 lanes, the same tree again across halves
+    /// for 8.
+    #[inline(always)]
+    pub fn reduce<T: Real, const LANES: usize>(acc: &[T; LANES]) -> T {
+        match LANES {
+            4 => (acc[0] + acc[1]) + (acc[2] + acc[3]),
+            8 => {
+                let lo = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+                let hi = (acc[4] + acc[5]) + (acc[6] + acc[7]);
+                lo + hi
+            }
+            _ => acc.iter().copied().sum(),
+        }
+    }
+
+    pub fn dot_split<T: Real, const LANES: usize>(w: &[T], re: &[T], im: &[T]) -> (T, T) {
+        debug_assert!(re.len() >= w.len() && im.len() >= w.len());
+        let n = w.len();
+        let mut ar = [T::ZERO; LANES];
+        let mut ai = [T::ZERO; LANES];
+        let chunks = n / LANES;
+        for k in 0..chunks {
+            let i = k * LANES;
+            for l in 0..LANES {
+                ar[l] = w[i + l].mul_add(re[i + l], ar[l]);
+                ai[l] = w[i + l].mul_add(im[i + l], ai[l]);
+            }
+        }
+        let mut sr = reduce(&ar);
+        let mut si = reduce(&ai);
+        for i in chunks * LANES..n {
+            sr = w[i].mul_add(re[i], sr);
+            si = w[i].mul_add(im[i], si);
+        }
+        (sr, si)
+    }
+
+    /// Shared body of the two complex dots on the flat interleaved view:
+    /// `CONJ` flips the sign pattern (`x·conj(y)` vs `x·y`).
+    pub fn cdot_flat<T: Real, const LANES: usize, const CONJ: bool>(x: &[T], y: &[T]) -> C<T> {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let mut ar = [T::ZERO; LANES];
+        let mut ai = [T::ZERO; LANES];
+        let chunks = n / LANES;
+        for k in 0..chunks {
+            let i = k * LANES;
+            for l in 0..LANES {
+                // Lane layout: even = re, odd = im. `yn` is y with the
+                // imaginary lanes negated; `xs` is x with re/im swapped.
+                let (xv, yv) = (x[i + l], y[i + l]);
+                let xs = if l % 2 == 0 { x[i + l + 1] } else { x[i + l - 1] };
+                let yn = if l % 2 == 1 { -yv } else { yv };
+                if CONJ {
+                    // re: x·y elementwise; im: swap(x)·(y with −im lanes).
+                    ar[l] = xv.mul_add(yv, ar[l]);
+                    ai[l] = xs.mul_add(yn, ai[l]);
+                } else {
+                    // re: x·(y with −im lanes); im: swap(x)·y.
+                    ar[l] = xv.mul_add(yn, ar[l]);
+                    ai[l] = xs.mul_add(yv, ai[l]);
+                }
+            }
+        }
+        let mut sr = reduce(&ar);
+        let mut si = reduce(&ai);
+        for k in chunks * (LANES / 2)..n / 2 {
+            let (xr, xi) = (x[2 * k], x[2 * k + 1]);
+            let (yr, yi) = (y[2 * k], y[2 * k + 1]);
+            if CONJ {
+                sr = xr.mul_add(yr, sr);
+                sr = xi.mul_add(yi, sr);
+                si = xi.mul_add(yr, si);
+                si = xr.mul_add(-yi, si);
+            } else {
+                sr = xr.mul_add(yr, sr);
+                sr = xi.mul_add(-yi, sr);
+                si = xi.mul_add(yr, si);
+                si = xr.mul_add(yi, si);
+            }
+        }
+        C { re: sr, im: si }
+    }
+
+    /// `y += s·x` on the flat view, mirroring `fmaddsub` rounding:
+    /// `t = s.im·x_swapped`, then `re' = s.re·x − t` / `im' = s.re·x + t`,
+    /// each as one fused op.
+    pub fn caxpy_flat<T: Real>(s: C<T>, x: &[T], y: &mut [T]) {
+        debug_assert_eq!(x.len(), y.len());
+        for k in 0..x.len() / 2 {
+            let (xr, xi) = (x[2 * k], x[2 * k + 1]);
+            let tr = s.im * xi;
+            let ti = s.im * xr;
+            y[2 * k] += s.re.mul_add(xr, -tr);
+            y[2 * k + 1] += s.re.mul_add(xi, ti);
+        }
+    }
+
+    pub fn crot_flat<T: Real>(p: &mut [T], q: &mut [T], c: T, sp: C<T>, sm: C<T>) {
+        debug_assert_eq!(p.len(), q.len());
+        for k in 0..p.len() / 2 {
+            let (pr, pi) = (p[2 * k], p[2 * k + 1]);
+            let (qr, qi) = (q[2 * k], q[2 * k + 1]);
+            // sp·q and sm·p with fmaddsub rounding (t rounded once, then
+            // one fused op per component).
+            let spq_r = sp.re.mul_add(qr, -(sp.im * qi));
+            let spq_i = sp.re.mul_add(qi, sp.im * qr);
+            let smp_r = sm.re.mul_add(pr, -(sm.im * pi));
+            let smp_i = sm.re.mul_add(pi, sm.im * pr);
+            p[2 * k] = c.mul_add(pr, -spq_r);
+            p[2 * k + 1] = c.mul_add(pi, -spq_i);
+            q[2 * k] = c.mul_add(qr, smp_r);
+            q[2 * k + 1] = c.mul_add(qi, smp_i);
+        }
+    }
+}
+
+/// Reinterpret an interleaved complex slice as its flat scalar view.
+#[inline(always)]
+fn flat<T: Real>(x: &[C<T>]) -> &[T] {
+    // Safety: C<T> is #[repr(C)] { re: T, im: T } — exactly two Ts.
+    unsafe { std::slice::from_raw_parts(x.as_ptr() as *const T, x.len() * 2) }
+}
+
+#[inline(always)]
+fn flat_mut<T: Real>(x: &mut [C<T>]) -> &mut [T] {
+    unsafe { std::slice::from_raw_parts_mut(x.as_mut_ptr() as *mut T, x.len() * 2) }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 + FMA kernels (x86_64).
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::C;
+    use std::arch::x86_64::*;
+
+    /// Lane sum in the fixed order `(l0+l1)+(l2+l3)`.
+    #[inline(always)]
+    unsafe fn hsum_pd(v: __m256d) -> f64 {
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), v);
+        (lanes[0] + lanes[1]) + (lanes[2] + lanes[3])
+    }
+
+    #[inline(always)]
+    unsafe fn hsum_ps(v: __m256) -> f32 {
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), v);
+        ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+            + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]))
+    }
+
+    /// `[+0.0, -0.0, …]` — XOR negates the imaginary (odd) lanes.
+    #[inline(always)]
+    unsafe fn neg_im_pd() -> __m256d {
+        _mm256_set_pd(-0.0, 0.0, -0.0, 0.0)
+    }
+
+    #[inline(always)]
+    unsafe fn neg_im_ps() -> __m256 {
+        _mm256_set_ps(-0.0, 0.0, -0.0, 0.0, -0.0, 0.0, -0.0, 0.0)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot_split_f64(w: &[f64], re: &[f64], im: &[f64]) -> (f64, f64) {
+        let n = w.len();
+        let mut ar = _mm256_setzero_pd();
+        let mut ai = _mm256_setzero_pd();
+        let chunks = n / 4;
+        for k in 0..chunks {
+            let i = k * 4;
+            let vw = _mm256_loadu_pd(w.as_ptr().add(i));
+            ar = _mm256_fmadd_pd(vw, _mm256_loadu_pd(re.as_ptr().add(i)), ar);
+            ai = _mm256_fmadd_pd(vw, _mm256_loadu_pd(im.as_ptr().add(i)), ai);
+        }
+        let mut sr = hsum_pd(ar);
+        let mut si = hsum_pd(ai);
+        for i in chunks * 4..n {
+            sr = w[i].mul_add(re[i], sr);
+            si = w[i].mul_add(im[i], si);
+        }
+        (sr, si)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot_split_f32(w: &[f32], re: &[f32], im: &[f32]) -> (f32, f32) {
+        let n = w.len();
+        let mut ar = _mm256_setzero_ps();
+        let mut ai = _mm256_setzero_ps();
+        let chunks = n / 8;
+        for k in 0..chunks {
+            let i = k * 8;
+            let vw = _mm256_loadu_ps(w.as_ptr().add(i));
+            ar = _mm256_fmadd_ps(vw, _mm256_loadu_ps(re.as_ptr().add(i)), ar);
+            ai = _mm256_fmadd_ps(vw, _mm256_loadu_ps(im.as_ptr().add(i)), ai);
+        }
+        let mut sr = hsum_ps(ar);
+        let mut si = hsum_ps(ai);
+        for i in chunks * 8..n {
+            sr = w[i].mul_add(re[i], sr);
+            si = w[i].mul_add(im[i], si);
+        }
+        (sr, si)
+    }
+
+    /// Both complex dots on the flat interleaved f64 view. `CONJ` selects
+    /// `Σ x·conj(y)`; see the scalar twin for the lane algebra.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn cdot_flat_f64<const CONJ: bool>(x: &[f64], y: &[f64]) -> C<f64> {
+        let n = x.len();
+        let sign = neg_im_pd();
+        let mut ar = _mm256_setzero_pd();
+        let mut ai = _mm256_setzero_pd();
+        let chunks = n / 4;
+        for k in 0..chunks {
+            let i = k * 4;
+            let vx = _mm256_loadu_pd(x.as_ptr().add(i));
+            let vy = _mm256_loadu_pd(y.as_ptr().add(i));
+            let xs = _mm256_permute_pd(vx, 0b0101);
+            let yn = _mm256_xor_pd(vy, sign);
+            if CONJ {
+                ar = _mm256_fmadd_pd(vx, vy, ar);
+                ai = _mm256_fmadd_pd(xs, yn, ai);
+            } else {
+                ar = _mm256_fmadd_pd(vx, yn, ar);
+                ai = _mm256_fmadd_pd(xs, vy, ai);
+            }
+        }
+        let mut sr = hsum_pd(ar);
+        let mut si = hsum_pd(ai);
+        for k in chunks * 2..n / 2 {
+            let (xr, xi) = (x[2 * k], x[2 * k + 1]);
+            let (yr, yi) = (y[2 * k], y[2 * k + 1]);
+            if CONJ {
+                sr = xr.mul_add(yr, sr);
+                sr = xi.mul_add(yi, sr);
+                si = xi.mul_add(yr, si);
+                si = xr.mul_add(-yi, si);
+            } else {
+                sr = xr.mul_add(yr, sr);
+                sr = xi.mul_add(-yi, sr);
+                si = xi.mul_add(yr, si);
+                si = xr.mul_add(yi, si);
+            }
+        }
+        C { re: sr, im: si }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn cdot_flat_f32<const CONJ: bool>(x: &[f32], y: &[f32]) -> C<f32> {
+        let n = x.len();
+        let sign = neg_im_ps();
+        let mut ar = _mm256_setzero_ps();
+        let mut ai = _mm256_setzero_ps();
+        let chunks = n / 8;
+        for k in 0..chunks {
+            let i = k * 8;
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            let xs = _mm256_permute_ps(vx, 0xB1);
+            let yn = _mm256_xor_ps(vy, sign);
+            if CONJ {
+                ar = _mm256_fmadd_ps(vx, vy, ar);
+                ai = _mm256_fmadd_ps(xs, yn, ai);
+            } else {
+                ar = _mm256_fmadd_ps(vx, yn, ar);
+                ai = _mm256_fmadd_ps(xs, vy, ai);
+            }
+        }
+        let mut sr = hsum_ps(ar);
+        let mut si = hsum_ps(ai);
+        for k in chunks * 4..n / 2 {
+            let (xr, xi) = (x[2 * k], x[2 * k + 1]);
+            let (yr, yi) = (y[2 * k], y[2 * k + 1]);
+            if CONJ {
+                sr = xr.mul_add(yr, sr);
+                sr = xi.mul_add(yi, sr);
+                si = xi.mul_add(yr, si);
+                si = xr.mul_add(-yi, si);
+            } else {
+                sr = xr.mul_add(yr, sr);
+                sr = xi.mul_add(-yi, sr);
+                si = xi.mul_add(yr, si);
+                si = xr.mul_add(yi, si);
+            }
+        }
+        C { re: sr, im: si }
+    }
+
+    /// Complex scalar × vector: `s·v` per interleaved pair, with the
+    /// `t = s.im·swap(v)` then `fmaddsub(s.re, v, t)` rounding pattern.
+    #[inline(always)]
+    unsafe fn cmul_vec_pd(sre: __m256d, sim: __m256d, v: __m256d) -> __m256d {
+        let t = _mm256_mul_pd(sim, _mm256_permute_pd(v, 0b0101));
+        _mm256_fmaddsub_pd(sre, v, t)
+    }
+
+    #[inline(always)]
+    unsafe fn cmul_vec_ps(sre: __m256, sim: __m256, v: __m256) -> __m256 {
+        let t = _mm256_mul_ps(sim, _mm256_permute_ps(v, 0xB1));
+        _mm256_fmaddsub_ps(sre, v, t)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn caxpy_f64(s: C<f64>, x: &[f64], y: &mut [f64]) {
+        let n = x.len();
+        let sre = _mm256_set1_pd(s.re);
+        let sim = _mm256_set1_pd(s.im);
+        let chunks = n / 4;
+        for k in 0..chunks {
+            let i = k * 4;
+            let vx = _mm256_loadu_pd(x.as_ptr().add(i));
+            let vy = _mm256_loadu_pd(y.as_ptr().add(i));
+            _mm256_storeu_pd(y.as_mut_ptr().add(i), _mm256_add_pd(vy, cmul_vec_pd(sre, sim, vx)));
+        }
+        for k in chunks * 2..n / 2 {
+            let (xr, xi) = (x[2 * k], x[2 * k + 1]);
+            let tr = s.im * xi;
+            let ti = s.im * xr;
+            y[2 * k] += s.re.mul_add(xr, -tr);
+            y[2 * k + 1] += s.re.mul_add(xi, ti);
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn caxpy_f32(s: C<f32>, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let sre = _mm256_set1_ps(s.re);
+        let sim = _mm256_set1_ps(s.im);
+        let chunks = n / 8;
+        for k in 0..chunks {
+            let i = k * 8;
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(vy, cmul_vec_ps(sre, sim, vx)));
+        }
+        for k in chunks * 4..n / 2 {
+            let (xr, xi) = (x[2 * k], x[2 * k + 1]);
+            let tr = s.im * xi;
+            let ti = s.im * xr;
+            y[2 * k] += s.re.mul_add(xr, -tr);
+            y[2 * k + 1] += s.re.mul_add(xi, ti);
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn crot_f64(p: &mut [f64], q: &mut [f64], c: f64, sp: C<f64>, sm: C<f64>) {
+        let n = p.len();
+        let vc = _mm256_set1_pd(c);
+        let spr = _mm256_set1_pd(sp.re);
+        let spi = _mm256_set1_pd(sp.im);
+        let smr = _mm256_set1_pd(sm.re);
+        let smi = _mm256_set1_pd(sm.im);
+        let chunks = n / 4;
+        for k in 0..chunks {
+            let i = k * 4;
+            let vp = _mm256_loadu_pd(p.as_ptr().add(i));
+            let vq = _mm256_loadu_pd(q.as_ptr().add(i));
+            let spq = cmul_vec_pd(spr, spi, vq);
+            let smp = cmul_vec_pd(smr, smi, vp);
+            _mm256_storeu_pd(p.as_mut_ptr().add(i), _mm256_fmsub_pd(vc, vp, spq));
+            _mm256_storeu_pd(q.as_mut_ptr().add(i), _mm256_fmadd_pd(vc, vq, smp));
+        }
+        for k in chunks * 2..n / 2 {
+            let (pr, pi) = (p[2 * k], p[2 * k + 1]);
+            let (qr, qi) = (q[2 * k], q[2 * k + 1]);
+            let spq_r = sp.re.mul_add(qr, -(sp.im * qi));
+            let spq_i = sp.re.mul_add(qi, sp.im * qr);
+            let smp_r = sm.re.mul_add(pr, -(sm.im * pi));
+            let smp_i = sm.re.mul_add(pi, sm.im * pr);
+            p[2 * k] = c.mul_add(pr, -spq_r);
+            p[2 * k + 1] = c.mul_add(pi, -spq_i);
+            q[2 * k] = c.mul_add(qr, smp_r);
+            q[2 * k + 1] = c.mul_add(qi, smp_i);
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn crot_f32(p: &mut [f32], q: &mut [f32], c: f32, sp: C<f32>, sm: C<f32>) {
+        let n = p.len();
+        let vc = _mm256_set1_ps(c);
+        let spr = _mm256_set1_ps(sp.re);
+        let spi = _mm256_set1_ps(sp.im);
+        let smr = _mm256_set1_ps(sm.re);
+        let smi = _mm256_set1_ps(sm.im);
+        let chunks = n / 8;
+        for k in 0..chunks {
+            let i = k * 8;
+            let vp = _mm256_loadu_ps(p.as_ptr().add(i));
+            let vq = _mm256_loadu_ps(q.as_ptr().add(i));
+            let spq = cmul_vec_ps(spr, spi, vq);
+            let smp = cmul_vec_ps(smr, smi, vp);
+            _mm256_storeu_ps(p.as_mut_ptr().add(i), _mm256_fmsub_ps(vc, vp, spq));
+            _mm256_storeu_ps(q.as_mut_ptr().add(i), _mm256_fmadd_ps(vc, vq, smp));
+        }
+        for k in chunks * 4..n / 2 {
+            let (pr, pi) = (p[2 * k], p[2 * k + 1]);
+            let (qr, qi) = (q[2 * k], q[2 * k + 1]);
+            let spq_r = sp.re.mul_add(qr, -(sp.im * qi));
+            let spq_i = sp.re.mul_add(qi, sp.im * qr);
+            let smp_r = sm.re.mul_add(pr, -(sm.im * pi));
+            let smp_i = sm.re.mul_add(pi, sm.im * pr);
+            p[2 * k] = c.mul_add(pr, -spq_r);
+            p[2 * k + 1] = c.mul_add(pi, -spq_i);
+            q[2 * k] = c.mul_add(qr, smp_r);
+            q[2 * k + 1] = c.mul_add(qi, smp_i);
+        }
+    }
+}
+
+impl SimdReal for f64 {
+    #[inline]
+    fn dot_split(w: &[f64], re: &[f64], im: &[f64]) -> (f64, f64) {
+        #[cfg(target_arch = "x86_64")]
+        if simd_active() {
+            return unsafe { avx2::dot_split_f64(w, re, im) };
+        }
+        scalar::dot_split::<f64, 4>(w, re, im)
+    }
+
+    #[inline]
+    fn cdot_conj(x: &[C<f64>], y: &[C<f64>]) -> C<f64> {
+        debug_assert_eq!(x.len(), y.len());
+        #[cfg(target_arch = "x86_64")]
+        if simd_active() {
+            return unsafe { avx2::cdot_flat_f64::<true>(flat(x), flat(y)) };
+        }
+        scalar::cdot_flat::<f64, 4, true>(flat(x), flat(y))
+    }
+
+    #[inline]
+    fn cdot(x: &[C<f64>], y: &[C<f64>]) -> C<f64> {
+        debug_assert_eq!(x.len(), y.len());
+        #[cfg(target_arch = "x86_64")]
+        if simd_active() {
+            return unsafe { avx2::cdot_flat_f64::<false>(flat(x), flat(y)) };
+        }
+        scalar::cdot_flat::<f64, 4, false>(flat(x), flat(y))
+    }
+
+    #[inline]
+    fn caxpy(s: C<f64>, x: &[C<f64>], y: &mut [C<f64>]) {
+        debug_assert_eq!(x.len(), y.len());
+        #[cfg(target_arch = "x86_64")]
+        if simd_active() {
+            return unsafe { avx2::caxpy_f64(s, flat(x), flat_mut(y)) };
+        }
+        scalar::caxpy_flat(s, flat(x), flat_mut(y))
+    }
+
+    #[inline]
+    fn crot(p: &mut [C<f64>], q: &mut [C<f64>], c: f64, sp: C<f64>, sm: C<f64>) {
+        debug_assert_eq!(p.len(), q.len());
+        #[cfg(target_arch = "x86_64")]
+        if simd_active() {
+            return unsafe { avx2::crot_f64(flat_mut(p), flat_mut(q), c, sp, sm) };
+        }
+        scalar::crot_flat(flat_mut(p), flat_mut(q), c, sp, sm)
+    }
+}
+
+impl SimdReal for f32 {
+    #[inline]
+    fn dot_split(w: &[f32], re: &[f32], im: &[f32]) -> (f32, f32) {
+        #[cfg(target_arch = "x86_64")]
+        if simd_active() {
+            return unsafe { avx2::dot_split_f32(w, re, im) };
+        }
+        scalar::dot_split::<f32, 8>(w, re, im)
+    }
+
+    #[inline]
+    fn cdot_conj(x: &[C<f32>], y: &[C<f32>]) -> C<f32> {
+        debug_assert_eq!(x.len(), y.len());
+        #[cfg(target_arch = "x86_64")]
+        if simd_active() {
+            return unsafe { avx2::cdot_flat_f32::<true>(flat(x), flat(y)) };
+        }
+        scalar::cdot_flat::<f32, 8, true>(flat(x), flat(y))
+    }
+
+    #[inline]
+    fn cdot(x: &[C<f32>], y: &[C<f32>]) -> C<f32> {
+        debug_assert_eq!(x.len(), y.len());
+        #[cfg(target_arch = "x86_64")]
+        if simd_active() {
+            return unsafe { avx2::cdot_flat_f32::<false>(flat(x), flat(y)) };
+        }
+        scalar::cdot_flat::<f32, 8, false>(flat(x), flat(y))
+    }
+
+    #[inline]
+    fn caxpy(s: C<f32>, x: &[C<f32>], y: &mut [C<f32>]) {
+        debug_assert_eq!(x.len(), y.len());
+        #[cfg(target_arch = "x86_64")]
+        if simd_active() {
+            return unsafe { avx2::caxpy_f32(s, flat(x), flat_mut(y)) };
+        }
+        scalar::caxpy_flat(s, flat(x), flat_mut(y))
+    }
+
+    #[inline]
+    fn crot(p: &mut [C<f32>], q: &mut [C<f32>], c: f32, sp: C<f32>, sm: C<f32>) {
+        debug_assert_eq!(p.len(), q.len());
+        #[cfg(target_arch = "x86_64")]
+        if simd_active() {
+            return unsafe { avx2::crot_f32(flat_mut(p), flat_mut(q), c, sp, sm) };
+        }
+        scalar::crot_flat(flat_mut(p), flat_mut(q), c, sp, sm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::Pcg64;
+
+    fn cvec<T: Real>(rng: &mut Pcg64, n: usize) -> Vec<C<T>> {
+        (0..n)
+            .map(|_| C { re: T::from_f64(rng.normal()), im: T::from_f64(rng.normal()) })
+            .collect()
+    }
+
+    /// Run `f` on the active path and again with the fallback forced;
+    /// restores the toggle.
+    fn both_paths<R>(f: impl Fn() -> R) -> (R, R) {
+        let active = f();
+        set_force_scalar(true);
+        let forced = f();
+        set_force_scalar(false);
+        (active, forced)
+    }
+
+    #[test]
+    fn dot_split_matches_reference_and_paths_agree() {
+        let mut rng = Pcg64::seeded(900);
+        for n in [0usize, 1, 3, 4, 7, 8, 15, 64, 129] {
+            let w: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let re: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let im: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let (sr, si) = <f64 as SimdReal>::dot_split(&w, &re, &im);
+            let want_r: f64 = w.iter().zip(&re).map(|(a, b)| a * b).sum();
+            let want_i: f64 = w.iter().zip(&im).map(|(a, b)| a * b).sum();
+            assert!((sr - want_r).abs() < 1e-10 && (si - want_i).abs() < 1e-10, "n={n}");
+            let (a, b) = both_paths(|| <f64 as SimdReal>::dot_split(&w, &re, &im));
+            assert_eq!(a, b, "n={n}: simd and scalar must agree bitwise");
+        }
+    }
+
+    #[test]
+    fn cdots_match_reference_and_paths_agree() {
+        let mut rng = Pcg64::seeded(901);
+        for n in [0usize, 1, 2, 3, 5, 8, 33, 100] {
+            let x = cvec::<f64>(&mut rng, n);
+            let y = cvec::<f64>(&mut rng, n);
+            let want_c: C<f64> =
+                x.iter().zip(&y).fold(C::ZERO, |acc, (a, b)| acc + *a * b.conj());
+            let want_p: C<f64> = x.iter().zip(&y).fold(C::ZERO, |acc, (a, b)| acc + *a * *b);
+            let got_c = <f64 as SimdReal>::cdot_conj(&x, &y);
+            let got_p = <f64 as SimdReal>::cdot(&x, &y);
+            assert!((got_c - want_c).abs() < 1e-10, "conj n={n}");
+            assert!((got_p - want_p).abs() < 1e-10, "plain n={n}");
+            let (a, b) = both_paths(|| <f64 as SimdReal>::cdot_conj(&x, &y));
+            assert_eq!((a.re, a.im), (b.re, b.im), "conj n={n} bitwise");
+            let (a, b) = both_paths(|| <f64 as SimdReal>::cdot(&x, &y));
+            assert_eq!((a.re, a.im), (b.re, b.im), "plain n={n} bitwise");
+        }
+    }
+
+    #[test]
+    fn cdots_f32_paths_agree_bitwise() {
+        let mut rng = Pcg64::seeded(902);
+        for n in [0usize, 1, 4, 7, 8, 9, 64, 101] {
+            let x = cvec::<f32>(&mut rng, n);
+            let y = cvec::<f32>(&mut rng, n);
+            let (a, b) = both_paths(|| <f32 as SimdReal>::cdot_conj(&x, &y));
+            assert_eq!((a.re, a.im), (b.re, b.im), "conj n={n}");
+            let w: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let re: Vec<f32> = x.iter().map(|z| z.re).collect();
+            let im: Vec<f32> = x.iter().map(|z| z.im).collect();
+            let (a, b) = both_paths(|| <f32 as SimdReal>::dot_split(&w, &re, &im));
+            assert_eq!(a, b, "split n={n}");
+        }
+    }
+
+    #[test]
+    fn caxpy_and_crot_match_reference_and_paths_agree() {
+        let mut rng = Pcg64::seeded(903);
+        for n in [0usize, 1, 2, 5, 8, 31] {
+            let s = C { re: rng.normal(), im: rng.normal() };
+            let x = cvec::<f64>(&mut rng, n);
+            let y0 = cvec::<f64>(&mut rng, n);
+            let mut want = y0.clone();
+            for (w, xv) in want.iter_mut().zip(&x) {
+                *w += s * *xv;
+            }
+            let mut got = y0.clone();
+            <f64 as SimdReal>::caxpy(s, &x, &mut got);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((*a - *b).abs() < 1e-10, "caxpy n={n}");
+            }
+            let (a, b) = both_paths(|| {
+                let mut y = y0.clone();
+                <f64 as SimdReal>::caxpy(s, &x, &mut y);
+                y
+            });
+            assert!(a.iter().zip(&b).all(|(p, q)| p == q), "caxpy n={n} bitwise");
+
+            let c = rng.normal();
+            let sp = C { re: rng.normal(), im: rng.normal() };
+            let sm = sp.conj().scale(-1.0);
+            let p0 = cvec::<f64>(&mut rng, n);
+            let q0 = cvec::<f64>(&mut rng, n);
+            let run = || {
+                let mut p = p0.clone();
+                let mut q = q0.clone();
+                <f64 as SimdReal>::crot(&mut p, &mut q, c, sp, sm);
+                (p, q)
+            };
+            let ((pa, qa), (pb, qb)) = both_paths(run);
+            assert!(pa.iter().zip(&pb).all(|(x, y)| x == y), "crot p n={n}");
+            assert!(qa.iter().zip(&qb).all(|(x, y)| x == y), "crot q n={n}");
+            // Reference rotation.
+            for i in 0..n {
+                let want_p = p0[i].scale(c) - sp * q0[i];
+                let want_q = sm * p0[i] + q0[i].scale(c);
+                assert!((pa[i] - want_p).abs() < 1e-10, "crot ref p n={n}");
+                assert!((qa[i] - want_q).abs() < 1e-10, "crot ref q n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn force_scalar_toggle_reports() {
+        set_force_scalar(true);
+        assert!(!simd_active());
+        assert_eq!(active_kernel_name(), "scalar");
+        set_force_scalar(false);
+    }
+}

@@ -7,7 +7,7 @@ use conv_svd_lfa::coordinator::{
     Backend, JobSpec, Scheduler, SchedulerConfig, ServiceConfig, SpectralService,
 };
 use conv_svd_lfa::engine::SpectrumRequest;
-use conv_svd_lfa::lfa::{self, LfaOptions};
+use conv_svd_lfa::lfa::{self, LfaOptions, Precision};
 use conv_svd_lfa::model::{zoo, ModelConfig};
 use conv_svd_lfa::numeric::Pcg64;
 #[cfg(feature = "pjrt")]
@@ -143,6 +143,47 @@ fn service_auto_routes_to_pjrt_when_artifact_matches() {
     svc.shutdown();
 }
 
+/// Regression for the PJRT cache gate: artifact results (f32) now cache
+/// under keys pinned to `Precision::F32`, so a repeat PJRT audit is a
+/// pure hit — zero tiles, shared buffer — while f64-native consumers of
+/// the same content still recompute at full precision.
+#[cfg(feature = "pjrt")]
+#[test]
+fn pjrt_repeat_audit_is_pure_cache_hit() {
+    let Some(dir) = artifacts_dir() else { return };
+    let artifacts = conv_svd_lfa::runtime::load_manifest(&dir).unwrap();
+    let exec = conv_svd_lfa::runtime::PjrtExecutor::spawn().unwrap();
+    let sched = Scheduler::start(
+        SchedulerConfig { workers: 2, artifacts, ..Default::default() },
+        Some(exec),
+    );
+    let k = kernel(16, 16, 7);
+    let cold = sched.run(JobSpec::new("a", k.clone(), 32, 32)).unwrap();
+    assert!(cold.pjrt_tiles > 0, "should route via PJRT");
+    assert!(!cold.cached);
+    let warm = sched.run(JobSpec::new("b", k.clone(), 32, 32)).unwrap();
+    assert!(warm.cached, "repeat PJRT audit must be a pure cache hit");
+    assert_eq!(warm.solved_freqs, 0);
+    assert_eq!(warm.pjrt_tiles + warm.native_tiles, 0);
+    assert!(Arc::ptr_eq(&warm.spectrum, &cold.spectrum), "hit shares the cached buffer");
+    // A native f32 sweep of the same content is the same accuracy tier:
+    // it shares the PJRT entry's key and hits.
+    let f32nat = sched
+        .run(
+            JobSpec::new("c", k.clone(), 32, 32)
+                .with_backend(Backend::Native)
+                .with_precision(Precision::F32),
+        )
+        .unwrap();
+    assert!(f32nat.cached, "native f32 and PJRT results share one tier");
+    // An f64-native job of the same content keys its own tier: recompute.
+    let f64nat =
+        sched.run(JobSpec::new("d", k, 32, 32).with_backend(Backend::Native)).unwrap();
+    assert!(!f64nat.cached, "f64 consumers must never see the f32 entry");
+    assert!(f64nat.native_tiles > 0);
+    sched.shutdown();
+}
+
 #[test]
 fn audit_lenet_native() {
     let svc = SpectralService::native(2);
@@ -212,6 +253,85 @@ fn repeat_job_is_served_from_cache() {
     let m = sched.metrics.snapshot();
     assert_eq!((m.cache_hits, m.cache_misses), (1, 4));
     sched.shutdown();
+}
+
+/// Signatures pin the precision tier, so f32 results — native here, and
+/// PJRT by the same key construction — are cacheable: a repeat f32 audit
+/// is a pure hit, and no tier is ever served another tier's spectrum.
+#[test]
+fn reduced_precision_jobs_cache_independently() {
+    let k = kernel(4, 3, 31);
+    let sched = Scheduler::native(2);
+    let f64cold = sched.run(JobSpec::new("a", k.clone(), 10, 10)).unwrap();
+    assert!(!f64cold.cached);
+    // Same content at f32: its own signature — a miss, not a downgrade.
+    let f32cold = sched
+        .run(JobSpec::new("b", k.clone(), 10, 10).with_precision(Precision::F32))
+        .unwrap();
+    assert!(!f32cold.cached, "an f32 job must not be served the f64 spectrum");
+    assert!(f32cold.solved_freqs > 0);
+    let scale = f64cold.spectrum.sigma_max().max(1.0);
+    for (a, b) in f32cold.spectrum.values.iter().zip(&f64cold.spectrum.values) {
+        assert!((a - b).abs() <= 1e-4 * scale, "f32 {a} vs f64 {b}");
+    }
+    // Repeat f32 audit: a pure hit on the f32 entry.
+    let f32warm = sched
+        .run(JobSpec::new("c", k.clone(), 10, 10).with_precision(Precision::F32))
+        .unwrap();
+    assert!(f32warm.cached, "repeat f32 audit must be a pure cache hit");
+    assert_eq!(f32warm.solved_freqs, 0);
+    assert_eq!(f32warm.native_tiles + f32warm.pjrt_tiles, 0);
+    assert!(Arc::ptr_eq(&f32warm.spectrum, &f32cold.spectrum));
+    // Refined is its own tier and restores f64-grade accuracy.
+    let refined = sched
+        .run(JobSpec::new("d", k.clone(), 10, 10).with_precision(Precision::F32Refined))
+        .unwrap();
+    assert!(!refined.cached, "refined must not be served the f32 spectrum");
+    for (a, b) in refined.spectrum.values.iter().zip(&f64cold.spectrum.values) {
+        assert!((a - b).abs() <= 1e-12 * scale, "refined {a} vs f64 {b}");
+    }
+    // And the f64 entry is still there, untouched.
+    let f64warm = sched.run(JobSpec::new("e", k, 10, 10)).unwrap();
+    assert!(f64warm.cached);
+    assert!(Arc::ptr_eq(&f64warm.spectrum, &f64cold.spectrum));
+    let m = sched.metrics.snapshot();
+    assert_eq!((m.cache_hits, m.cache_misses), (2, 3));
+    sched.shutdown();
+}
+
+/// The service's `precision` config threads through whole-model audits,
+/// and a repeat reduced-precision audit hits the cache layer-by-layer.
+#[test]
+fn service_precision_threads_through_model_audits() {
+    let model = zoo::lenet();
+    let reference = SpectralService::native(2);
+    let want = reference.audit_model(&model).unwrap();
+    reference.shutdown();
+    let svc = SpectralService::start(ServiceConfig {
+        workers: 2,
+        precision: Precision::F32,
+        ..Default::default()
+    })
+    .unwrap();
+    let cold = svc.audit_model(&model).unwrap();
+    assert!(cold.iter().all(|r| !r.cached && r.solved_freqs > 0));
+    for (c, w) in cold.iter().zip(&want) {
+        let scale = w.sigma_max.max(1.0);
+        assert!(
+            (c.sigma_max - w.sigma_max).abs() <= 1e-4 * scale,
+            "{}: f32 σ_max {} vs f64 {}",
+            c.name,
+            c.sigma_max,
+            w.sigma_max
+        );
+    }
+    let warm = svc.audit_model(&model).unwrap();
+    assert!(warm.iter().all(|r| r.cached), "repeat f32 audit must hit layer-by-layer");
+    assert_eq!(warm.iter().map(|r| r.solved_freqs).sum::<usize>(), 0);
+    for (c, w) in cold.iter().zip(&warm) {
+        assert!(Arc::ptr_eq(&c.spectrum, &w.spectrum));
+    }
+    svc.shutdown();
 }
 
 #[test]

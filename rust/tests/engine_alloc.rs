@@ -7,7 +7,7 @@
 
 use conv_svd_lfa::conv::ConvKernel;
 use conv_svd_lfa::engine::{ModelPlan, SpectralCache, SpectralPlan, SpectrumRequest};
-use conv_svd_lfa::lfa::{BlockSolver, Fold, LfaOptions};
+use conv_svd_lfa::lfa::{BlockSolver, Fold, LfaOptions, Precision};
 use conv_svd_lfa::model::ModelConfig;
 use conv_svd_lfa::numeric::Pcg64;
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -37,10 +37,15 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
 
-fn assert_zero_alloc_after_warmup(solver: BlockSolver, stride: usize, folding: Fold) {
+fn assert_zero_alloc_after_warmup(
+    solver: BlockSolver,
+    stride: usize,
+    folding: Fold,
+    precision: Precision,
+) {
     let mut rng = Pcg64::seeded(8000 + stride as u64);
     let kernel = ConvKernel::random_he(4, 4, 3, 3, &mut rng);
-    let opts = LfaOptions { solver, threads: 1, folding, ..Default::default() };
+    let opts = LfaOptions { solver, threads: 1, folding, precision, ..Default::default() };
     let plan = SpectralPlan::with_stride(&kernel, 8, 8, stride, opts);
     let mut out = vec![0.0f64; plan.values_len()];
     // Warm-up: the pool may grow its spine / solver scratch once.
@@ -52,7 +57,8 @@ fn assert_zero_alloc_after_warmup(solver: BlockSolver, stride: usize, folding: F
     assert_eq!(
         after - before,
         0,
-        "{solver:?} stride {stride} {folding:?}: {} allocation(s) in warmed-up execute_into",
+        "{solver:?} stride {stride} {folding:?} {precision:?}: {} allocation(s) in \
+         warmed-up execute_into",
         after - before
     );
     assert!(out.iter().all(|v| v.is_finite() && *v >= 0.0));
@@ -64,10 +70,15 @@ fn assert_zero_alloc_after_warmup(solver: BlockSolver, stride: usize, folding: F
 /// the completion probe, the warm-hint carry between frequencies —
 /// performs zero heap
 /// allocation, for both warm and per-frequency-cold sweeps.
-fn assert_topk_zero_alloc_after_warmup(stride: usize, k: usize, folding: Fold) {
+fn assert_topk_zero_alloc_after_warmup(
+    stride: usize,
+    k: usize,
+    folding: Fold,
+    precision: Precision,
+) {
     let mut rng = Pcg64::seeded(8100 + stride as u64);
     let kernel = ConvKernel::random_he(4, 4, 3, 3, &mut rng);
-    let opts = LfaOptions { threads: 1, folding, ..Default::default() };
+    let opts = LfaOptions { threads: 1, folding, precision, ..Default::default() };
     let plan = SpectralPlan::with_stride(&kernel, 8, 8, stride, opts);
     let mut out = vec![0.0f64; plan.topk_values_len(k)];
     // Warm-up: the pool may grow its spine / Krylov scratch once.
@@ -79,8 +90,8 @@ fn assert_topk_zero_alloc_after_warmup(stride: usize, k: usize, folding: Fold) {
     assert_eq!(
         after - before,
         0,
-        "topk k={k} stride {stride} {folding:?}: {} allocation(s) in warmed-up \
-         execute_topk_into",
+        "topk k={k} stride {stride} {folding:?} {precision:?}: {} allocation(s) in \
+         warmed-up execute_topk_into",
         after - before
     );
     assert!(out.iter().all(|v| v.is_finite() && *v >= 0.0));
@@ -148,19 +159,30 @@ fn assert_cache_hit_zero_alloc() {
 // threads, and concurrent tests would pollute each other's counter windows.
 // Both folding modes are covered: the folded hot loop (solve the
 // fundamental domain + in-row mirror + `mirror_fill` assembly) must be as
-// allocation-free as the unfolded reference.
+// allocation-free as the unfolded reference. So are all three precision
+// tiers: the f32 planes/scratch and the refinement scratch are sized at
+// plan/checkout time, so the reduced-precision hot loops (and the
+// per-frequency f64 polish of `F32Refined`) allocate nothing either.
 #[test]
 fn execute_is_allocation_free_after_warmup() {
-    assert_zero_alloc_after_warmup(BlockSolver::Jacobi, 1, Fold::Auto);
-    assert_zero_alloc_after_warmup(BlockSolver::Jacobi, 1, Fold::Off);
-    assert_zero_alloc_after_warmup(BlockSolver::GramEigen, 1, Fold::Auto);
-    assert_zero_alloc_after_warmup(BlockSolver::GramEigen, 1, Fold::Off);
-    assert_zero_alloc_after_warmup(BlockSolver::Jacobi, 2, Fold::Auto);
-    assert_zero_alloc_after_warmup(BlockSolver::Jacobi, 2, Fold::Off);
-    assert_topk_zero_alloc_after_warmup(1, 2, Fold::Auto);
-    assert_topk_zero_alloc_after_warmup(1, 2, Fold::Off);
-    assert_topk_zero_alloc_after_warmup(2, 1, Fold::Auto);
-    assert_topk_zero_alloc_after_warmup(2, 1, Fold::Off);
+    assert_zero_alloc_after_warmup(BlockSolver::Jacobi, 1, Fold::Auto, Precision::F64);
+    assert_zero_alloc_after_warmup(BlockSolver::Jacobi, 1, Fold::Off, Precision::F64);
+    assert_zero_alloc_after_warmup(BlockSolver::GramEigen, 1, Fold::Auto, Precision::F64);
+    assert_zero_alloc_after_warmup(BlockSolver::GramEigen, 1, Fold::Off, Precision::F64);
+    assert_zero_alloc_after_warmup(BlockSolver::Jacobi, 2, Fold::Auto, Precision::F64);
+    assert_zero_alloc_after_warmup(BlockSolver::Jacobi, 2, Fold::Off, Precision::F64);
+    assert_zero_alloc_after_warmup(BlockSolver::Jacobi, 1, Fold::Auto, Precision::F32);
+    assert_zero_alloc_after_warmup(BlockSolver::Jacobi, 2, Fold::Off, Precision::F32);
+    assert_zero_alloc_after_warmup(BlockSolver::GramEigen, 1, Fold::Auto, Precision::F32);
+    assert_zero_alloc_after_warmup(BlockSolver::Jacobi, 1, Fold::Auto, Precision::F32Refined);
+    assert_zero_alloc_after_warmup(BlockSolver::Jacobi, 2, Fold::Off, Precision::F32Refined);
+    assert_topk_zero_alloc_after_warmup(1, 2, Fold::Auto, Precision::F64);
+    assert_topk_zero_alloc_after_warmup(1, 2, Fold::Off, Precision::F64);
+    assert_topk_zero_alloc_after_warmup(2, 1, Fold::Auto, Precision::F64);
+    assert_topk_zero_alloc_after_warmup(2, 1, Fold::Off, Precision::F64);
+    assert_topk_zero_alloc_after_warmup(1, 2, Fold::Auto, Precision::F32);
+    assert_topk_zero_alloc_after_warmup(2, 1, Fold::Off, Precision::F32);
+    assert_topk_zero_alloc_after_warmup(1, 2, Fold::Auto, Precision::F32Refined);
     assert_model_zero_alloc_after_warmup();
     assert_cache_hit_zero_alloc();
 }

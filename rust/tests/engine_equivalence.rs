@@ -9,7 +9,7 @@
 use conv_svd_lfa::conv::ConvKernel;
 use conv_svd_lfa::engine::{NativeSerial, NativeThreaded, SpectralBackend, SpectralPlan};
 use conv_svd_lfa::lfa::symbol::symbol_at;
-use conv_svd_lfa::lfa::{self, BlockLayout, BlockSolver, Fold, LfaOptions};
+use conv_svd_lfa::lfa::{self, BlockLayout, BlockSolver, Fold, LfaOptions, Precision};
 use conv_svd_lfa::linalg::{jacobi_eig, jacobi_svd};
 use conv_svd_lfa::numeric::{CMat, Pcg64};
 
@@ -75,7 +75,15 @@ fn plan_matches_reference_across_all_configs() {
                     let want = reference_unstrided(&k, n, m, solver);
                     for threads in [1usize, 3] {
                         for folding in [Fold::Auto, Fold::Off] {
-                            let opts = LfaOptions { layout, solver, threads, folding };
+                            // Full literal on purpose: a new LfaOptions
+                            // field must be weighed for this matrix.
+                            let opts = LfaOptions {
+                                layout,
+                                solver,
+                                threads,
+                                folding,
+                                precision: Precision::F64,
+                            };
                             let got = SpectralPlan::new(&k, n, m, opts).execute();
                             let gap = max_gap(&got.values, &want);
                             assert!(
@@ -274,6 +282,97 @@ fn cached_paths_match_direct_execution_across_the_matrix() {
                     );
                 }
             }
+        }
+    }
+}
+
+/// The precision-tier acceptance matrix: across stride ∈ {1, 2}, both
+/// layouts, folded and unfolded, serial and threaded, Full and TopK —
+/// the f32 sweep tracks the f64 spectrum to ≤ 1e-4·σ_max (single-precision
+/// assembly + Jacobi round-off), and the f32-refined tier restores the
+/// crate's ≤ 1e-12 guarantee (its f64 polish runs off exactly-assembled
+/// blocks, so the f32 sweep only steers which rotations warm-start it).
+#[test]
+fn precision_tiers_track_f64_across_the_matrix() {
+    let mut rng = Pcg64::seeded(7011);
+    for &(n, m, s) in &[(6usize, 6usize, 1usize), (5, 7, 1), (8, 8, 2), (12, 6, 2)] {
+        for &(c_out, c_in) in &[(3usize, 3usize), (4, 2)] {
+            let k = ConvKernel::random_he(c_out, c_in, 3, 3, &mut rng);
+            for layout in [BlockLayout::BlockContiguous, BlockLayout::PlanarStrided] {
+                for folding in [Fold::Auto, Fold::Off] {
+                    for threads in [1usize, 3] {
+                        let base = LfaOptions { layout, folding, threads, ..Default::default() };
+                        let f64sp = SpectralPlan::with_stride(&k, n, m, s, base).execute();
+                        let scale = f64sp.sigma_max().max(1.0);
+                        let f32sp = SpectralPlan::with_stride(
+                            &k,
+                            n,
+                            m,
+                            s,
+                            LfaOptions { precision: Precision::F32, ..base },
+                        )
+                        .execute();
+                        let refined_plan = SpectralPlan::with_stride(
+                            &k,
+                            n,
+                            m,
+                            s,
+                            LfaOptions { precision: Precision::F32Refined, ..base },
+                        );
+                        let refsp = refined_plan.execute();
+                        let tag = format!(
+                            "{n}x{m}/{s} {c_out}x{c_in} {layout:?} {folding:?} x{threads}"
+                        );
+                        let g32 = max_gap(&f32sp.values, &f64sp.values);
+                        assert!(g32 <= 1e-4 * scale, "{tag}: f32 gap {g32:e}");
+                        let gref = max_gap(&refsp.values, &f64sp.values);
+                        assert!(gref <= 1e-12 * scale, "{tag}: refined gap {gref:e}");
+                        // TopK: the partial sweep carries the same tiers.
+                        let t64 = SpectralPlan::with_stride(&k, n, m, s, base).execute_topk(2);
+                        let t32 = SpectralPlan::with_stride(
+                            &k,
+                            n,
+                            m,
+                            s,
+                            LfaOptions { precision: Precision::F32, ..base },
+                        )
+                        .execute_topk(2);
+                        let tref = refined_plan.execute_topk(2);
+                        let tg32 = max_gap(&t32.spectrum.values, &t64.spectrum.values);
+                        assert!(tg32 <= 2e-3 * scale, "{tag}: topk f32 gap {tg32:e}");
+                        let tgref = max_gap(&tref.spectrum.values, &t64.spectrum.values);
+                        assert!(tgref <= 1e-8 * scale, "{tag}: topk refined gap {tgref:e}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The SIMD kernels and their scalar fallbacks are *bit-comparable*: the
+/// scalar paths mirror the vector lanes' split/interleaved accumulation
+/// order exactly, so forcing scalar execution reproduces the SIMD spectra
+/// bit-for-bit at every precision tier — the CI no-AVX2 job and a
+/// `-Ctarget-cpu=native` build must agree on every value.
+#[test]
+fn forced_scalar_execution_is_bit_identical_to_simd() {
+    use conv_svd_lfa::numeric::{active_kernel_name, set_force_scalar};
+    let mut rng = Pcg64::seeded(7012);
+    for &(n, m, s) in &[(6usize, 6usize, 1usize), (8, 8, 2)] {
+        let k = ConvKernel::random_he(4, 3, 3, 3, &mut rng);
+        for precision in [Precision::F64, Precision::F32, Precision::F32Refined] {
+            let opts = LfaOptions { threads: 1, precision, ..Default::default() };
+            let plan = SpectralPlan::with_stride(&k, n, m, s, opts);
+            let auto = plan.execute();
+            set_force_scalar(true);
+            let forced_name = active_kernel_name();
+            let scalar = plan.execute();
+            set_force_scalar(false);
+            assert_eq!(forced_name, "scalar");
+            assert_eq!(
+                auto.values, scalar.values,
+                "{n}x{m}/{s} {precision:?}: SIMD and scalar must agree bitwise"
+            );
         }
     }
 }
