@@ -21,10 +21,14 @@
 //! cold sweep that populates it — the **simd-vs-scalar margin**: the
 //! runtime-detected AVX2+FMA complex kernels against the bit-identical
 //! forced-scalar fallback on the same plan (full + top-k, serial +
-//! threaded, with a verdict line) — and the **f32-vs-f64 precision
+//! threaded, with a verdict line) — the **f32-vs-f64 precision
 //! margin**: the single-precision sweep (double the SIMD lanes,
 //! ~1e-4·σ_max) and the `f32-refined` tier (f32 sweep + one f64 polish
-//! per frequency, ≤1e-12 restored) against the f64 reference.
+//! per frequency, ≤1e-12 restored) against the f64 reference — and the
+//! **grouped-vs-dense margin**: a grouped layer's per-frequency symbol is
+//! block diagonal, so the engine solves `g` blocks of `c/g × c/g` instead
+//! of one `c × c` SVD (`c³/g²` vs `c³` flops); depthwise (`g = c`,
+//! scalar symbols) is the limit case and the acceptance line.
 //!
 //! Flags: `--quick` (fewer samples), `--full` (bigger sizes), `--smoke`
 //! (CI bench-smoke: reduced sizes), `--json <path>` (machine-readable
@@ -72,6 +76,9 @@ fn equal_shape_model(depth: usize, c: usize, n: usize) -> ModelConfig {
             height: n,
             width: n,
             stride: 1,
+            groups: 1,
+            dilation: 1,
+            transposed: false,
             init: Init::He,
         })
         .collect();
@@ -551,6 +558,57 @@ fn main() {
         );
     }
 
+    // --- Grouped vs dense: block-diagonal structured symbols ---
+    // Same total channel width c, three structures: dense (one c×c SVD per
+    // frequency), grouped g=8 (8 SVDs of (c/8)×(c/8) — c³/64 flops), and
+    // depthwise g=c (c scalar symbols — the MobileNet block). All serial,
+    // warmed pools, full spectra; the depthwise-vs-dense margin is the
+    // acceptance line (it should be large — the block solve is g² cheaper).
+    let (gv_c, gv_n) = (fold_c, fold_n);
+    let mut grouped_rows: Vec<[String; 4]> = Vec::new();
+    let grouped_verdict = {
+        let mut rng = Pcg64::seeded(1006);
+        let cases = [
+            ("dense", ConvKernel::random_he(gv_c, gv_c, 3, 3, &mut rng)),
+            (
+                "grouped g=8",
+                ConvKernel::random_he(gv_c, gv_c / 8, 3, 3, &mut rng).with_groups(8),
+            ),
+            (
+                "depthwise",
+                ConvKernel::random_he(gv_c, 1, 3, 3, &mut rng).with_groups(gv_c),
+            ),
+        ];
+        let mut times = Vec::new();
+        for (tag, k) in &cases {
+            let plan = SpectralPlan::new(k, gv_n, gv_n, serial());
+            let mut out = vec![0.0f64; plan.values_len()];
+            plan.execute_into(&mut out); // warm the pool
+            let m = bench.measure("grouped-vs-dense", || {
+                plan.execute_into(&mut out);
+                out[0]
+            });
+            json.record_measurement(&format!("grouped-vs-dense {tag} c={gv_c} n={gv_n}"), &m);
+            times.push(m.min().as_secs_f64());
+        }
+        let dense_t = times[0];
+        for ((tag, _), &t) in cases.iter().zip(&times) {
+            grouped_rows.push([
+                format!("{tag} c{gv_c} n={gv_n}"),
+                format!("{:.3} ms", t * 1e3),
+                format!("{:.2}x", dense_t / t.max(1e-12)),
+                if *tag == "dense" { "1 block/freq".into() } else { "block-diagonal".into() },
+            ]);
+        }
+        format!(
+            "grouped verdict: c{gv_c} n={gv_n} serial full sweep — depthwise {:.2}x faster \
+             than dense (target: measurably faster, block solves are g² cheaper), \
+             grouped g=8 {:.2}x",
+            dense_t / times[2].max(1e-12),
+            dense_t / times[1].max(1e-12)
+        )
+    };
+
     println!("# Table I — measured scaling exponents vs theory");
     let mut table = Table::new(["series", "fit slope", "theory", "verdict"]);
     let rows: Vec<(&str, f64, f64, f64)> = vec![
@@ -637,6 +695,14 @@ fn main() {
     }
     print!("{}", qtable.render());
     println!("{prec_verdict}");
+
+    println!("\n# Grouped vs dense — block-diagonal structured symbols (grouped-vs-dense)");
+    let mut gtable = Table::new(["workload", "time", "vs dense", "per-frequency solve"]);
+    for row in grouped_rows {
+        gtable.row(row);
+    }
+    print!("{}", gtable.render());
+    println!("{grouped_verdict}");
 
     if let Some(path) = &opts.json {
         json.write(path).expect("writing bench json");

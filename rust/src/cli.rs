@@ -16,10 +16,16 @@ USAGE: conv-svd-lfa <command> [options]
 COMMANDS
   analyze      --n <N> [--m M] [--c-in C] [--c-out C] [--k K] [--threads T]
                [--seed S] [--method lfa|fft|explicit] [--top J]
+               [--groups G] [--dilation D] [--transposed]
                [--precision f64|f32|f32-refined]
-               Compute the spectrum of a random conv layer.
+               Compute the spectrum of a random conv layer. --groups G
+               audits a grouped layer (G = C for depthwise), --dilation D
+               spaces the taps D pixels apart, --transposed audits the
+               adjoint (deconvolution) operator; structured kernels run
+               on the LFA engine only (fft/explicit are dense baselines).
   audit        <builtin-or-config.toml> [--threads T] [--backend auto|native|pjrt]
                [--artifacts DIR] [--top-k K] [--no-fold] [--csv]
+               [--groups G] [--dilation D] [--transposed]
                [--precision f64|f32|f32-refined]
                [--cache-bytes N] [--no-cache]
                Analyze all conv layers of a model through the coordinator
@@ -30,7 +36,12 @@ COMMANDS
                combining --top-k with --backend pjrt is an error; σ_min
                and cond report NaN, since the retained extremes say
                nothing about the small end of the spectrum).
-               Builtins: lenet, vgg-small, resnet20ish, paper-c16-n<N>.
+               --groups/--dilation/--transposed override the structure of
+               *every* layer in the model — the what-if knob for auditing
+               a grouped/dilated/transposed variant of a dense builtin
+               (channel counts must stay divisible by G).
+               Builtins: lenet, vgg-small, resnet20ish, mobile-ish,
+               paper-c16-n<N>.
   audit-model  <builtin-or-config.toml> [--threads T] [--solver jacobi|gram]
                [--top J] [--top-k K] [--no-fold] [--csv] [--repeat R]
                [--precision f64|f32|f32-refined]
@@ -47,7 +58,10 @@ COMMANDS
                against the result cache — the repeat-audit shape; the
                warm runs serve every unchanged layer from cache. The
                config is [[layer]] TOML (keys: name, c_in, c_out,
-               kernel|kh/kw, height, width, stride, init).
+               kernel|kh/kw, height, width, stride, groups, dilation,
+               transposed, init); c_in is always the total input
+               channel count. The mobile-ish builtin exercises every
+               structured variant in one model.
   compare      --n <N> [--c C] [--threads T] [--with-explicit]
                LFA vs FFT (vs explicit) runtimes + agreement on one layer.
   artifacts    [--dir DIR] [--run NAME]
@@ -56,6 +70,18 @@ COMMANDS
   help         Show this text.
 
 --threads 0 (the default) means auto: one worker per available core.
+
+Structured convolutions (grouped / depthwise / dilated / transposed) run
+on the native LFA engine: a grouped layer's per-frequency symbol is block
+diagonal, so the engine solves g independent c_out/g x s^2*c_in/g blocks
+per frequency (depthwise layers degenerate to scalar symbols — g times
+cheaper than the dense layer of the same total shape); dilation only
+changes the phase tables; a transposed layer is the adjoint symbol, so
+its singular values equal the forward layer's and only the reported
+operator shape swaps. Folding, precision tiers, --top-k, caching and the
+whole-model batching all apply per block — see docs/WORKLOADS.md for the
+full supported-configuration matrix. PJRT artifacts bake dense forward
+geometry in, so structured layers always route native.
 
 Conjugate-pair frequency folding is on by default for native execution:
 real kernels give A(-θ) = conj(A(θ)), so both audit commands solve only a
@@ -234,6 +260,25 @@ mod tests {
         );
         for detail in ["f32-refined", "≤1e-12", "f32-pinned"] {
             assert!(HELP.contains(detail), "HELP must document precision {detail:?}");
+        }
+        // Structured convolutions: the flag triple appears on both the
+        // analyze and audit usage lines, the TOML keys are listed for
+        // audit-model, the structured builtin is named, and the prose
+        // explains the block-diagonal/adjoint semantics + the native-only
+        // routing and points at the workload matrix.
+        assert!(
+            HELP.matches("--groups G] [--dilation D] [--transposed]").count() >= 2,
+            "HELP must document --groups/--dilation/--transposed on analyze and audit"
+        );
+        for detail in [
+            "groups, dilation,\n               transposed",
+            "mobile-ish",
+            "block\ndiagonal",
+            "adjoint symbol",
+            "docs/WORKLOADS.md",
+            "structured layers always route native",
+        ] {
+            assert!(HELP.contains(detail), "HELP must document structured convs: {detail:?}");
         }
     }
 }

@@ -19,6 +19,13 @@ pub enum Boundary {
 
 /// A convolution operator `A : R^{h×w×c_in} → R^{h×w×c_out}` over a fixed
 /// grid with a fixed boundary condition.
+///
+/// Structure-aware: grouped kernels only couple an output channel to its
+/// own group's input channels (input width = [`ConvKernel::c_in_total`]),
+/// and dilated kernels read taps at `dilation`-spaced displacements. The
+/// `transposed` audit flag is **not** consumed here — `forward` always
+/// applies the forward mapping the taps define; the adjoint is
+/// [`Self::transpose_apply`] (what a transposed-conv audit measures).
 pub struct ConvOp<'a> {
     pub kernel: &'a ConvKernel,
     pub height: usize,
@@ -31,25 +38,31 @@ impl<'a> ConvOp<'a> {
         Self { kernel, height, width, boundary }
     }
 
-    /// Apply the convolution: `out[x, o] = Σ_i Σ_y W[o,i,y] · f[x+y, i]`.
+    /// Apply the convolution: `out[x, o] = Σ_i Σ_y W[o,i,y] · f[x+d·y, i]`
+    /// where `i` ranges over output channel `o`'s group and `d` is the
+    /// dilation.
     pub fn forward(&self, f: &[f64]) -> Vec<f64> {
         let k = self.kernel;
         let (h, w) = (self.height, self.width);
-        assert_eq!(f.len(), h * w * k.c_in, "input length mismatch");
+        let cin_total = k.c_in_total();
+        assert_eq!(f.len(), h * w * cin_total, "input length mismatch");
         let mut out = vec![0.0; h * w * k.c_out];
         let (ar, ac) = (k.anchor.0 as isize, k.anchor.1 as isize);
+        let gr = k.group_c_out();
+        let d = k.dilation as isize;
         for xr in 0..h as isize {
             for xc in 0..w as isize {
                 for r in 0..k.kh as isize {
                     for c in 0..k.kw as isize {
-                        let (sr, sc) = (xr + r - ar, xc + c - ac);
+                        let (sr, sc) = (xr + d * (r - ar), xc + d * (c - ac));
                         let Some(src) = self.resolve(sr, sc) else { continue };
-                        let in_base = src * k.c_in;
+                        let in_base = src * cin_total;
                         let out_base = (xr as usize * w + xc as usize) * k.c_out;
                         for o in 0..k.c_out {
+                            let group_base = in_base + (o / gr) * k.c_in;
                             let mut acc = 0.0;
                             for i in 0..k.c_in {
-                                acc += k.get(o, i, r as usize, c as usize) * f[in_base + i];
+                                acc += k.get(o, i, r as usize, c as usize) * f[group_base + i];
                             }
                             out[out_base + o] += acc;
                         }
@@ -60,28 +73,32 @@ impl<'a> ConvOp<'a> {
         out
     }
 
-    /// Apply the transposed operator `Aᵀ`.
+    /// Apply the transposed operator `Aᵀ` — the mapping a transposed-conv
+    /// (`ConvKernel::transposed`) audit measures.
     pub fn transpose_apply(&self, g: &[f64]) -> Vec<f64> {
         let k = self.kernel;
         let (h, w) = (self.height, self.width);
+        let cin_total = k.c_in_total();
         assert_eq!(g.len(), h * w * k.c_out, "input length mismatch");
-        let mut out = vec![0.0; h * w * k.c_in];
+        let mut out = vec![0.0; h * w * cin_total];
         let (ar, ac) = (k.anchor.0 as isize, k.anchor.1 as isize);
-        // (Aᵀ g)[x', i] = Σ_o Σ_y W[o,i,y] g[x, o] where x' = x + y.
+        let gr = k.group_c_out();
+        let d = k.dilation as isize;
+        // (Aᵀ g)[x', i] = Σ_o Σ_y W[o,i,y] g[x, o] where x' = x + d·y.
         for xr in 0..h as isize {
             for xc in 0..w as isize {
                 for r in 0..k.kh as isize {
                     for c in 0..k.kw as isize {
-                        let (sr, sc) = (xr + r - ar, xc + c - ac);
+                        let (sr, sc) = (xr + d * (r - ar), xc + d * (c - ac));
                         let Some(dst) = self.resolve(sr, sc) else { continue };
                         let g_base = (xr as usize * w + xc as usize) * k.c_out;
-                        let out_base = dst * k.c_in;
-                        for i in 0..k.c_in {
-                            let mut acc = 0.0;
-                            for o in 0..k.c_out {
-                                acc += k.get(o, i, r as usize, c as usize) * g[g_base + o];
+                        let out_base = dst * cin_total;
+                        for o in 0..k.c_out {
+                            let group_base = out_base + (o / gr) * k.c_in;
+                            let gv = g[g_base + o];
+                            for i in 0..k.c_in {
+                                out[group_base + i] += k.get(o, i, r as usize, c as usize) * gv;
                             }
-                            out[out_base + i] += acc;
                         }
                     }
                 }
@@ -113,7 +130,7 @@ impl<'a> ConvOp<'a> {
 
 impl LinOp for ConvOp<'_> {
     fn in_dim(&self) -> usize {
-        self.height * self.width * self.kernel.c_in
+        self.height * self.width * self.kernel.c_in_total()
     }
     fn out_dim(&self) -> usize {
         self.height * self.width * self.kernel.c_out
@@ -206,6 +223,47 @@ mod tests {
         let b = opt.forward(&g);
         for (x, y) in a.iter().zip(&b) {
             assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dilated_shift_reads_spaced_neighbor() {
+        // Tap at displacement (0, +1) with dilation 2 reads index +2.
+        let mut k = ConvKernel::zeros(1, 1, 3, 3);
+        k.set(0, 0, 1, 2, 1.0);
+        let k = k.with_dilation(2);
+        let op = ConvOp::new(&k, 1, 4, Boundary::Periodic);
+        let g = op.forward(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(g, vec![3.0, 4.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn grouped_forward_stays_within_groups() {
+        // 2 groups of 1→1 channels, 1x1 taps: a pure per-group scale.
+        let mut k = ConvKernel::zeros(2, 1, 1, 1);
+        k.set(0, 0, 0, 0, 2.0);
+        k.set(1, 0, 0, 0, 5.0);
+        let k = k.with_groups(2);
+        let op = ConvOp::new(&k, 1, 1, Boundary::Periodic);
+        assert_eq!(op.in_dim(), 2, "total input channels");
+        let g = op.forward(&[1.0, 10.0]);
+        assert_eq!(g, vec![2.0, 50.0], "no cross-group coupling");
+    }
+
+    #[test]
+    fn structured_transpose_is_adjoint() {
+        // ⟨A f, g⟩ == ⟨f, Aᵀ g⟩ for a grouped + dilated kernel.
+        let mut rng = Pcg64::seeded(84);
+        let k = ConvKernel::random_he(4, 2, 3, 3, &mut rng).with_groups(2).with_dilation(2);
+        for bc in [Boundary::Periodic, Boundary::Dirichlet] {
+            let op = ConvOp::new(&k, 5, 6, bc);
+            let f = rng.normal_vec(op.in_dim());
+            let g = rng.normal_vec(op.out_dim());
+            let af = op.forward(&f);
+            let atg = op.transpose_apply(&g);
+            let lhs: f64 = af.iter().zip(&g).map(|(a, b)| a * b).sum();
+            let rhs: f64 = f.iter().zip(&atg).map(|(a, b)| a * b).sum();
+            assert!((lhs - rhs).abs() < 1e-10, "{bc:?}: {lhs} vs {rhs}");
         }
     }
 

@@ -6,24 +6,53 @@
 //! `N = {y = (r,c) − anchor}` of the multiplication operators `M_y` in
 //! `(A∗f)(x) = Σ_y M_y f(x+y)` is explicit. Cross-correlation convention
 //! (what deep-learning frameworks call "convolution").
+//!
+//! ## Structured convolutions
+//!
+//! Beyond the dense case, a kernel can describe a *structured* convolution
+//! (see `docs/WORKLOADS.md` for the full supported matrix):
+//!
+//! - **Grouped** (`groups = g > 1`): the channel mixing is block-diagonal —
+//!   input group `gi` only reaches output group `gi`. As in PyTorch, the
+//!   stored `c_in` is the **per-group** input width, so the operator acts on
+//!   [`c_in_total()`](ConvKernel::c_in_total)` = c_in·groups` input channels
+//!   and `data` holds `c_out·c_in·kh·kw` weights. `groups == c_out ==
+//!   c_in_total` is depthwise.
+//! - **Dilated** (`dilation = d > 1`): tap `(r,c)` sits at displacement
+//!   `d·(r−ar, c−ac)`; the support spreads but the tap count (and therefore
+//!   the symbol cost) is unchanged.
+//! - **Transposed** (`transposed = true`): the kernel is interpreted as the
+//!   *adjoint* mapping `Aᵀ` (`c_out → c_in_total` channels, e.g. a decoder /
+//!   up-convolution). Singular values are those of the forward map; singular
+//!   vector roles swap.
 
 use crate::numeric::{Mat, Pcg64};
 
-/// A dense convolution kernel in OIHW layout.
+/// A convolution kernel in OIHW layout, optionally grouped / dilated /
+/// transposed (see the [module docs](self) for the structure semantics).
 #[derive(Clone, Debug)]
 pub struct ConvKernel {
     pub c_out: usize,
+    /// Per-group input channel count (PyTorch grouped layout). The operator's
+    /// total input width is [`c_in_total()`](ConvKernel::c_in_total).
     pub c_in: usize,
     pub kh: usize,
     pub kw: usize,
     /// Anchor tap (row, col). For odd kernels this is the center.
     pub anchor: (usize, usize),
+    /// Channel groups `g ≥ 1`; `c_out` must be divisible by `g`. Dense = 1.
+    pub groups: usize,
+    /// Tap spacing `d ≥ 1` in pixels. Dense = 1.
+    pub dilation: usize,
+    /// Interpret the kernel as the adjoint operator `Aᵀ`.
+    pub transposed: bool,
     /// OIHW data: `data[((o·c_in + i)·kh + r)·kw + c]`.
     pub data: Vec<f64>,
 }
 
 impl ConvKernel {
-    /// Zero-initialized kernel with centered anchor.
+    /// Zero-initialized kernel with centered anchor (dense: `groups = 1`,
+    /// `dilation = 1`, not transposed).
     pub fn zeros(c_out: usize, c_in: usize, kh: usize, kw: usize) -> Self {
         Self {
             c_out,
@@ -31,8 +60,62 @@ impl ConvKernel {
             kh,
             kw,
             anchor: (kh / 2, kw / 2),
+            groups: 1,
+            dilation: 1,
+            transposed: false,
             data: vec![0.0; c_out * c_in * kh * kw],
         }
+    }
+
+    /// Split the channel mixing into `groups` independent blocks. The stored
+    /// `c_in` is reinterpreted as the per-group input width (the operator
+    /// then has `c_in · groups` total input channels), matching how grouped
+    /// weight tensors are laid out in PyTorch.
+    ///
+    /// Panics unless `groups ≥ 1` and `c_out % groups == 0`.
+    pub fn with_groups(mut self, groups: usize) -> Self {
+        assert!(groups >= 1, "groups must be >= 1, got {groups}");
+        assert!(
+            self.c_out % groups == 0,
+            "c_out {} not divisible by groups {}",
+            self.c_out,
+            groups
+        );
+        self.groups = groups;
+        self
+    }
+
+    /// Space taps `dilation` pixels apart. Panics unless `dilation ≥ 1`.
+    pub fn with_dilation(mut self, dilation: usize) -> Self {
+        assert!(dilation >= 1, "dilation must be >= 1, got {dilation}");
+        self.dilation = dilation;
+        self
+    }
+
+    /// Mark the kernel as describing the adjoint (transposed) operator.
+    pub fn with_transposed(mut self, transposed: bool) -> Self {
+        self.transposed = transposed;
+        self
+    }
+
+    /// Total input channel count of the operator: `c_in · groups`.
+    #[inline(always)]
+    pub fn c_in_total(&self) -> usize {
+        self.c_in * self.groups
+    }
+
+    /// Output channels per group: `c_out / groups`.
+    #[inline(always)]
+    pub fn group_c_out(&self) -> usize {
+        self.c_out / self.groups
+    }
+
+    /// `true` when this is a plain dense forward convolution — the case the
+    /// unstructured fast paths (tap extraction, dense symbol grids, AOT
+    /// artifact matching) are specialized for.
+    #[inline(always)]
+    pub fn is_dense(&self) -> bool {
+        self.groups == 1 && self.dilation == 1 && !self.transposed
     }
 
     /// He/Kaiming-normal initialization — std `√(2 / (c_in·kh·kw))`,
@@ -77,13 +160,15 @@ impl ConvKernel {
     }
 
     /// Displacements `y = (dy, dx)` of every tap relative to the anchor,
-    /// in row-major tap order.
+    /// in row-major tap order. Dilation scales every displacement by `d`
+    /// (the tap grid spreads; the tap *count* is unchanged).
     pub fn displacements(&self) -> Vec<(isize, isize)> {
         let (ar, ac) = (self.anchor.0 as isize, self.anchor.1 as isize);
+        let d = self.dilation as isize;
         let mut ys = Vec::with_capacity(self.kh * self.kw);
         for r in 0..self.kh as isize {
             for c in 0..self.kw as isize {
-                ys.push((r - ar, c - ac));
+                ys.push((d * (r - ar), d * (c - ac)));
             }
         }
         ys
@@ -122,16 +207,36 @@ impl ConvKernel {
 
     /// Flip spatially and swap in/out channels: the kernel of the transposed
     /// operator `Aᵀ` (used by power iteration and the pseudo-inverse checks).
+    ///
+    /// Structure-aware: groups transpose per block (output group `gi` of `Aᵀ`
+    /// is the transpose of block `gi` of `A`), dilation carries over
+    /// unchanged, and the `transposed` flag is preserved as-is (this builds
+    /// an *explicit* transpose rather than toggling the interpretation bit).
     pub fn transpose_kernel(&self) -> ConvKernel {
-        let mut t = ConvKernel::zeros(self.c_in, self.c_out, self.kh, self.kw);
+        let g = self.groups;
+        let gr = self.group_c_out();
+        // Aᵀ maps c_out → c_in_total, so its stored shape is
+        // [c_in·g, c_out/g, kh, kw] with the same group count.
+        let mut t = ConvKernel::zeros(self.c_in * g, gr, self.kh, self.kw)
+            .with_groups(g)
+            .with_dilation(self.dilation)
+            .with_transposed(self.transposed);
         // Aᵀ has taps W'[i,o,r',c'] = W[o,i,kh−1−r', kw−1−c'] with anchor
         // mirrored so that displacements negate.
         t.anchor = (self.kh - 1 - self.anchor.0, self.kw - 1 - self.anchor.1);
-        for o in 0..self.c_out {
-            for i in 0..self.c_in {
-                for r in 0..self.kh {
-                    for c in 0..self.kw {
-                        t.set(i, o, self.kh - 1 - r, self.kw - 1 - c, self.get(o, i, r, c));
+        for gi in 0..g {
+            for o in 0..gr {
+                for i in 0..self.c_in {
+                    for r in 0..self.kh {
+                        for c in 0..self.kw {
+                            t.set(
+                                gi * self.c_in + i,
+                                o,
+                                self.kh - 1 - r,
+                                self.kw - 1 - c,
+                                self.get(gi * gr + o, i, r, c),
+                            );
+                        }
                     }
                 }
             }
@@ -202,5 +307,50 @@ mod tests {
         assert_eq!(tt.c_out, k.c_out);
         assert_eq!(tt.data, k.data);
         assert_eq!(tt.anchor, k.anchor);
+    }
+
+    #[test]
+    fn structured_accessors() {
+        let k = ConvKernel::zeros(8, 2, 3, 3).with_groups(4).with_dilation(2);
+        assert_eq!(k.c_in_total(), 8);
+        assert_eq!(k.group_c_out(), 2);
+        assert!(!k.is_dense());
+        assert!(ConvKernel::zeros(4, 4, 3, 3).is_dense());
+        // depthwise: one channel per group
+        let dw = ConvKernel::zeros(6, 1, 3, 3).with_groups(6);
+        assert_eq!(dw.c_in_total(), 6);
+        assert_eq!(dw.group_c_out(), 1);
+        assert_eq!(dw.len(), 6 * 9);
+    }
+
+    #[test]
+    fn dilated_displacements_scale() {
+        let k = ConvKernel::zeros(1, 1, 3, 3).with_dilation(3);
+        let ys = k.displacements();
+        assert_eq!(ys[0], (-3, -3));
+        assert_eq!(ys[4], (0, 0));
+        assert_eq!(ys[8], (3, 3));
+    }
+
+    #[test]
+    fn grouped_transpose_involution() {
+        let mut rng = Pcg64::seeded(74);
+        let mut k = ConvKernel::random_he(6, 2, 3, 3, &mut rng)
+            .with_groups(3)
+            .with_dilation(2);
+        k.anchor = (0, 1);
+        let t = k.transpose_kernel();
+        assert_eq!((t.c_out, t.c_in, t.groups, t.dilation), (6, 2, 3, 2));
+        let tt = t.transpose_kernel();
+        assert_eq!(tt.data, k.data);
+        assert_eq!(tt.anchor, k.anchor);
+        // block gi of Aᵀ is the transpose of block gi of A
+        assert_eq!(t.get(2, 1, 2, 2), k.get(3, 0, 0, 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn groups_must_divide_c_out() {
+        let _ = ConvKernel::zeros(6, 2, 3, 3).with_groups(4);
     }
 }

@@ -14,18 +14,27 @@ use crate::numeric::Mat;
 /// Dense unrolled matrix of the convolution over an `h×w` grid.
 ///
 /// Row index: `(x_row·w + x_col)·c_out + o`; column index:
-/// `(x'_row·w + x'_col)·c_in + i` — identical ordering to
+/// `(x'_row·w + x'_col)·c_in_total + i_total` — identical ordering to
 /// [`crate::conv::ConvOp::forward`] on flat vectors.
+///
+/// Structure-aware: grouped kernels only populate each output channel's
+/// own group of input columns (block-diagonal channel coupling), dilated
+/// kernels place taps at `dilation`-spaced displacements. This is the
+/// ground-truth matrix the structured spectral paths are validated
+/// against; the transposed-conv reference is this matrix's transpose.
 pub fn unroll_dense(kernel: &ConvKernel, h: usize, w: usize, boundary: Boundary) -> Mat {
+    let cin_total = kernel.c_in_total();
     let rows = h * w * kernel.c_out;
-    let cols = h * w * kernel.c_in;
+    let cols = h * w * cin_total;
     let mut a = Mat::zeros(rows, cols);
     let (ar, ac) = (kernel.anchor.0 as isize, kernel.anchor.1 as isize);
+    let gr = kernel.group_c_out();
+    let d = kernel.dilation as isize;
     for xr in 0..h as isize {
         for xc in 0..w as isize {
             for r in 0..kernel.kh as isize {
                 for c in 0..kernel.kw as isize {
-                    let (sr, sc) = (xr + r - ar, xc + c - ac);
+                    let (sr, sc) = (xr + d * (r - ar), xc + d * (c - ac));
                     let src = match boundary {
                         Boundary::Periodic => {
                             let rr = sr.rem_euclid(h as isize) as usize;
@@ -41,10 +50,11 @@ pub fn unroll_dense(kernel: &ConvKernel, h: usize, w: usize, boundary: Boundary)
                     };
                     let dst = xr as usize * w + xc as usize;
                     for o in 0..kernel.c_out {
+                        let col0 = src * cin_total + (o / gr) * kernel.c_in;
                         for i in 0..kernel.c_in {
                             let v = kernel.get(o, i, r as usize, c as usize);
                             if v != 0.0 {
-                                a[(dst * kernel.c_out + o, src * kernel.c_in + i)] += v;
+                                a[(dst * kernel.c_out + o, col0 + i)] += v;
                             }
                         }
                     }
@@ -92,12 +102,15 @@ impl CsrMatrix {
 
 /// Sparse unrolled matrix (CSR). Same index conventions as [`unroll_dense`].
 pub fn unroll_csr(kernel: &ConvKernel, h: usize, w: usize, boundary: Boundary) -> CsrMatrix {
+    let cin_total = kernel.c_in_total();
     let rows = h * w * kernel.c_out;
-    let cols = h * w * kernel.c_in;
+    let cols = h * w * cin_total;
     let mut row_ptr = Vec::with_capacity(rows + 1);
     let mut col_idx = Vec::new();
     let mut values = Vec::new();
     let (ar, ac) = (kernel.anchor.0 as isize, kernel.anchor.1 as isize);
+    let gr = kernel.group_c_out();
+    let d = kernel.dilation as isize;
     row_ptr.push(0);
     // Scratch accumulating one row at a time (duplicate columns merged).
     let mut entries: Vec<(usize, f64)> = Vec::new();
@@ -107,7 +120,7 @@ pub fn unroll_csr(kernel: &ConvKernel, h: usize, w: usize, boundary: Boundary) -
                 entries.clear();
                 for r in 0..kernel.kh as isize {
                     for c in 0..kernel.kw as isize {
-                        let (sr, sc) = (xr + r - ar, xc + c - ac);
+                        let (sr, sc) = (xr + d * (r - ar), xc + d * (c - ac));
                         let src = match boundary {
                             Boundary::Periodic => {
                                 let rr = sr.rem_euclid(h as isize) as usize;
@@ -121,10 +134,11 @@ pub fn unroll_csr(kernel: &ConvKernel, h: usize, w: usize, boundary: Boundary) -
                                 sr as usize * w + sc as usize
                             }
                         };
+                        let col0 = src * cin_total + (o / gr) * kernel.c_in;
                         for i in 0..kernel.c_in {
                             let v = kernel.get(o, i, r as usize, c as usize);
                             if v != 0.0 {
-                                entries.push((src * kernel.c_in + i, v));
+                                entries.push((col0 + i, v));
                             }
                         }
                     }
@@ -185,6 +199,49 @@ mod tests {
             let y2 = csr.matvec(&f);
             for (x, y) in y1.iter().zip(&y2) {
                 assert!((x - y).abs() < 1e-12, "{bc:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn structured_unroll_matches_direct_apply() {
+        // Grouped + dilated: the unrolled matrix, the CSR form and the
+        // direct operator agree entry-for-entry under both boundaries.
+        let mut rng = Pcg64::seeded(95);
+        let k = ConvKernel::random_he(4, 2, 3, 3, &mut rng).with_groups(2).with_dilation(2);
+        for bc in [Boundary::Periodic, Boundary::Dirichlet] {
+            let op = ConvOp::new(&k, 5, 6, bc);
+            let a = unroll_dense(&k, 5, 6, bc);
+            assert_eq!((a.rows, a.cols), (op.out_dim(), op.in_dim()));
+            let f = rng.normal_vec(op.in_dim());
+            let direct = op.forward(&f);
+            let via_mat = a.matvec(&f);
+            for (x, y) in direct.iter().zip(&via_mat) {
+                assert!((x - y).abs() < 1e-12, "{bc:?}");
+            }
+            let csr = unroll_csr(&k, 5, 6, bc);
+            let via_csr = csr.matvec(&f);
+            for (x, y) in direct.iter().zip(&via_csr) {
+                assert!((x - y).abs() < 1e-12, "{bc:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_unroll_is_channel_block_diagonal() {
+        // Cross-group channel couplings must be exactly zero.
+        let mut rng = Pcg64::seeded(96);
+        let k = ConvKernel::random_he(4, 1, 3, 3, &mut rng).with_groups(4);
+        let a = unroll_dense(&k, 4, 4, Boundary::Periodic);
+        for dst in 0..16 {
+            for src in 0..16 {
+                for o in 0..4 {
+                    for i in 0..4 {
+                        if o != i {
+                            assert_eq!(a[(dst * 4 + o, src * 4 + i)], 0.0);
+                        }
+                    }
+                }
             }
         }
     }

@@ -80,9 +80,12 @@ impl JobSpec {
         self
     }
 
-    /// Values per frequency.
+    /// Values per frequency. Grouped kernels store the per-group input
+    /// width, so the block-diagonal rank is `min(c_out, c_in_total)` —
+    /// identical to a dense kernel of the same total shape (transposition
+    /// is rank-preserving, dilation shape-preserving).
     pub fn rank(&self) -> usize {
-        self.kernel.c_out.min(self.kernel.c_in)
+        self.kernel.c_out.min(self.kernel.c_in_total())
     }
 
     /// Total singular values of the full grid.

@@ -460,6 +460,7 @@ impl Scheduler {
                 && spec.backend != Backend::Native
                 && spec.request == SpectrumRequest::Full
                 && lp.stride() == 1
+                && lp.kernel().is_dense()
             {
                 let k = lp.kernel();
                 crate::runtime::select(
@@ -604,7 +605,10 @@ impl Scheduler {
     }
 
     fn pick_artifact(&self, spec: &JobSpec) -> Option<ArtifactSpec> {
-        if self.executor.is_none() || spec.backend == Backend::Native {
+        // Structured kernels (grouped / dilated / transposed) never match
+        // an AOT artifact — the compiled program bakes dense forward
+        // geometry in.
+        if self.executor.is_none() || spec.backend == Backend::Native || !spec.kernel.is_dense() {
             return None;
         }
         let k = &spec.kernel;
@@ -942,11 +946,19 @@ fn finish_job(state: &JobState, metrics: &Metrics) {
             metrics.values_computed.fetch_add(mirrored as u64, Ordering::Relaxed);
         }
     }
+    // Operator dimensions, not kernel storage: grouped kernels store the
+    // per-group input width, and a transposed audit reports the adjoint's
+    // (swapped) shape.
+    let (sym_rows, sym_cols) = if spec.kernel.transposed {
+        (spec.kernel.c_in_total(), spec.kernel.c_out)
+    } else {
+        (spec.kernel.c_out, spec.kernel.c_in_total())
+    };
     let spectrum = Arc::new(lfa::Spectrum {
         n: spec.n,
         m: spec.m,
-        c_out: spec.kernel.c_out,
-        c_in: spec.kernel.c_in,
+        c_out: sym_rows,
+        c_in: sym_cols,
         per_freq: spec.rank(),
         values,
     });

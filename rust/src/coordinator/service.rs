@@ -66,7 +66,10 @@ pub struct LayerReport {
     pub name: String,
     pub n: usize,
     pub m: usize,
+    /// Output channels of the *audited operator* — the adjoint's (swapped)
+    /// shape for transposed layers, total channels for grouped ones.
     pub c_out: usize,
+    /// Input channels of the audited operator (total, not per-group).
     pub c_in: usize,
     pub num_values: usize,
     pub sigma_max: f64,
@@ -265,8 +268,10 @@ impl SpectralService {
             name,
             n,
             m,
-            c_out: kernel.c_out,
-            c_in: kernel.c_in,
+            // Operator channel dims (grouped kernels store the per-group
+            // input width; a transposed audit reports the adjoint's shape).
+            c_out: if kernel.transposed { kernel.c_in_total() } else { kernel.c_out },
+            c_in: if kernel.transposed { kernel.c_out } else { kernel.c_in_total() },
             num_values: spectrum.num_values(),
             sigma_max: spectrum.sigma_max(),
             // NaN under a top-k request: Spectrum's partial-spectrum guard

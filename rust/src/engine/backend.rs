@@ -56,15 +56,19 @@ pub trait SpectralBackend {
         }
     }
 
-    /// Execute the plan and package the result as a [`Spectrum`].
+    /// Execute the plan and package the result as a [`Spectrum`]. Operator
+    /// dimensions come from [`SpectralPlan::sym_shape`] — the full
+    /// (block-diagonal, possibly adjoint) per-frequency shape, not the
+    /// per-group solved block.
     fn execute(&self, plan: &SpectralPlan) -> Result<Spectrum> {
         let mut values = vec![0.0f64; plan.values_len()];
         self.execute_into(plan, &mut values)?;
+        let (c_out, c_in) = plan.sym_shape();
         Ok(Spectrum {
             n: plan.coarse_rows(),
             m: plan.coarse_cols(),
-            c_out: plan.block_shape().0,
-            c_in: plan.block_shape().1,
+            c_out,
+            c_in,
             per_freq: plan.rank(),
             values,
         })
@@ -76,12 +80,13 @@ pub trait SpectralBackend {
         let mut values = vec![0.0f64; plan.topk_values_len(k)];
         let iterations =
             self.execute_request_into(plan, SpectrumRequest::TopK(k), &mut values)?;
+        let (c_out, c_in) = plan.sym_shape();
         Ok(TopKResult {
             spectrum: Spectrum {
                 n: plan.coarse_rows(),
                 m: plan.coarse_cols(),
-                c_out: plan.block_shape().0,
-                c_in: plan.block_shape().1,
+                c_out,
+                c_in,
                 per_freq: ke,
                 values,
             },
@@ -183,7 +188,10 @@ impl SpectralBackend for PjrtBackend {
         let a = &self.artifact;
         let (c_out, c_in) = plan.block_shape();
         let k = plan.kernel();
-        if plan.stride() != 1
+        // AOT artifacts bake dense forward geometry in; structured plans
+        // (grouped / dilated / transposed) never match one.
+        if !k.is_dense()
+            || plan.stride() != 1
             || a.n != plan.coarse_rows()
             || a.m != plan.coarse_cols()
             || a.c_out != c_out

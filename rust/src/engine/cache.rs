@@ -98,6 +98,15 @@ pub struct Signature {
     kh: usize,
     kw: usize,
     anchor: (usize, usize),
+    /// Channel-group count. Structure fields are compared exactly: a
+    /// grouped kernel and a dense kernel with bit-identical weight
+    /// tensors describe *different operators* (the grouped one masks
+    /// cross-group taps), so they must never share a cache entry.
+    groups: usize,
+    /// Tap-spacing factor (1 = ordinary convolution).
+    dilation: usize,
+    /// Whether the audited operator is the adjoint (transposed conv).
+    transposed: bool,
     n: usize,
     m: usize,
     stride: usize,
@@ -125,6 +134,9 @@ impl Signature {
             kh: kernel.kh,
             kw: kernel.kw,
             anchor: kernel.anchor,
+            groups: kernel.groups,
+            dilation: kernel.dilation,
+            transposed: kernel.transposed,
             n,
             m,
             stride,
@@ -141,8 +153,14 @@ impl Signature {
     /// are normalized to their clamped `k` so equivalent requests —
     /// `TopK(rank)` and any `TopK(k > rank)` run the identical sweep —
     /// share one cache entry instead of storing duplicate values.
+    ///
+    /// For grouped kernels `c_in` is the per-group width (the kernel's
+    /// storage convention), so the block-diagonal rank is
+    /// `min(c_out, groups·s²·c_in)` — `groups` independent blocks of
+    /// `min(c_out/groups, s²·c_in)` values each. Transposition is rank-
+    /// preserving (the adjoint has the same singular values).
     fn rank(&self) -> usize {
-        self.c_out.min(self.stride * self.stride * self.c_in)
+        self.c_out.min(self.groups * self.stride * self.stride * self.c_in)
     }
 
     fn normalized(request: SpectrumRequest, rank: usize) -> SpectrumRequest {
@@ -492,6 +510,20 @@ mod tests {
         assert_ne!(Signature::result(&k, 8, 8, 1, &gram, SpectrumRequest::Full), a);
         let planar = LfaOptions { layout: BlockLayout::PlanarStrided, ..opts };
         assert_ne!(Signature::result(&k, 8, 8, 1, &planar, SpectrumRequest::Full), a);
+        // Structure fields hash: bit-identical weight tensors describe
+        // different operators when grouped / dilated / transposed, so
+        // each must miss against the dense entry — and against each
+        // other.
+        let kg = k.clone().with_groups(3);
+        let kd = k.clone().with_dilation(2);
+        let kt = k.clone().with_transposed(true);
+        assert_ne!(Signature::result(&kg, 8, 8, 1, &opts, SpectrumRequest::Full), a);
+        assert_ne!(Signature::result(&kd, 8, 8, 1, &opts, SpectrumRequest::Full), a);
+        assert_ne!(Signature::result(&kt, 8, 8, 1, &opts, SpectrumRequest::Full), a);
+        assert_ne!(
+            Signature::result(&kg, 8, 8, 1, &opts, SpectrumRequest::Full),
+            Signature::result(&kd, 8, 8, 1, &opts, SpectrumRequest::Full)
+        );
         // Precision is pinned: each tier caches independently.
         let f32p = LfaOptions { precision: Precision::F32, ..opts };
         assert_ne!(Signature::result(&k, 8, 8, 1, &f32p, SpectrumRequest::Full), a);

@@ -8,10 +8,12 @@
 //!
 //! - every layer gets a [`SpectralPlan`] (phase tables, strided dual-grid
 //!   geometry) built at construction, never per call;
-//! - layers with equal per-frequency block shape (`c_out × s²·c_in` — the
-//!   `(c_out, c_in, solver, layout)` grouping key with one options set) are
-//!   **batched into a group sharing one [`WorkspacePool`]**, so a VGG-style
-//!   stack with six equal-shape layers warms one scratch set, not six;
+//! - layers with equal per-frequency **solved** block shape
+//!   (`c_out/g × s²·c_in/g` — grouped layers solve their `g` diagonal
+//!   blocks independently, so the per-group shape is the scratch shape)
+//!   are **batched into a group sharing one [`WorkspacePool`]**, so a
+//!   VGG-style stack with six equal-shape layers warms one scratch set,
+//!   not six;
 //! - `execute*` runs all layers back-to-back: serially as one group-major
 //!   solver sweep, threaded as a single scoped fan-out over the whole
 //!   model's frequency rows (one spawn round instead of one per layer), or
@@ -217,7 +219,15 @@ impl ModelPlan {
                     l.width
                 );
             }
-            shapes.push((l.c_out, l.stride * l.stride * l.c_in, l.kh * l.kw));
+            // The pool covers the per-frequency **solved** block — the
+            // per-group shape for grouped layers (the plan solves the g
+            // diagonal blocks independently), so a grouped and a dense
+            // layer with the same per-group shape share scratch.
+            shapes.push((
+                l.c_out / l.groups,
+                l.stride * l.stride * (l.c_in / l.groups),
+                l.kh * l.kw,
+            ));
         }
         // Per-layer plans are built serial; the model plan owns the
         // parallelism. Cached plans are looked up by the plan signature —
@@ -841,6 +851,17 @@ impl ModelPlan {
                      defined for dense (stride-1) layers",
                     l.name,
                     l.plan.stride()
+                );
+            }
+            if !l.plan.kernel().is_dense() {
+                bail!(
+                    "clip_all: layer {:?} is structured (groups {}, dilation {}, \
+                     transposed {}) — the least-squares kernel projection is only \
+                     defined for dense forward layers",
+                    l.name,
+                    l.plan.kernel().groups,
+                    l.plan.kernel().dilation,
+                    l.plan.kernel().transposed
                 );
             }
         }

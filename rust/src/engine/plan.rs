@@ -13,6 +13,16 @@
 //! - the **strided dual-grid geometry**: for stride `s > 1` the plan's
 //!   frequency space is the coarse torus `(n/s)×(m/s)` and each block is the
 //!   `c_out × s²·c_in` concatenation of the `s²` aliasing fine symbols;
+//! - the **structured-convolution geometry**: grouped kernels make the
+//!   per-frequency symbol *block-diagonal* — the plan solves `g`
+//!   independent `(c_out/g) × s²·c_in` blocks per frequency instead of one
+//!   `c_out × s²·c_in·g` matrix (an `O(g²)` cut in per-frequency SVD
+//!   flops; depthwise degenerates to scalar symbols), dilation is folded
+//!   into the phase tables at plan time (`e^{2πi⟨k, d·y⟩}` — zero marginal
+//!   cost per frequency), and a transposed kernel solves the *forward*
+//!   blocks (the adjoint symbol is their conjugate transpose, so the
+//!   singular values are identical) and swaps the factor roles / shape
+//!   metadata at packaging. See `docs/WORKLOADS.md` for the full matrix;
 //! - the **folded execution domain** ([`crate::lfa::Fold`], on by
 //!   default): real kernel weights give `A(−θ) = conj(A(θ))`, so full-grid
 //!   executions solve only a canonical fundamental domain of `θ → −θ`
@@ -62,6 +72,22 @@ impl TopKResult {
     }
 }
 
+/// Candidate-triplet scratch for the grouped factor sweep: per-group
+/// top-k values and vectors are gathered here before the global top-k is
+/// embedded into the block-diagonal factor matrices. Allocated once per
+/// [`SpectralPlan::execute_topk_factors`] call (a factor path — the
+/// output allocates anyway), only for `groups > 1`.
+struct FactorScratch {
+    /// `g·kg` candidate singular values, group-major.
+    vals: Vec<f64>,
+    /// Candidate indices sorted by value, reused across frequencies.
+    order: Vec<usize>,
+    /// Per-group left vectors, `block_rows × g·kg`.
+    u: CMat,
+    /// Per-group right vectors, `block_cols × g·kg`.
+    v: CMat,
+}
+
 /// A planned, reusable symbol→SVD execution for one convolution layer.
 pub struct SpectralPlan {
     kernel: ConvKernel,
@@ -75,9 +101,13 @@ pub struct SpectralPlan {
     /// Coarse (output) dual grid: `n/stride × m/stride`.
     nc: usize,
     mc: usize,
-    /// Per-frequency block shape: `c_out × stride²·c_in`.
+    /// Per-frequency **solved** block shape: `(c_out/groups) ×
+    /// stride²·c_in` — the shape of one group's diagonal block (the whole
+    /// symbol for dense kernels, where `groups == 1`).
     block_rows: usize,
     block_cols: usize,
+    /// Singular values per frequency of the whole (block-diagonal)
+    /// operator: `groups · min(block_rows, block_cols)`.
     rank: usize,
     /// Conjugate-pair frequency folding: when set, full-grid executions
     /// solve only the fundamental domain of `θ → −θ` (rows `0..=nc/2`,
@@ -126,9 +156,10 @@ impl SpectralPlan {
         opts: LfaOptions,
     ) -> Self {
         // Prewarm one workspace: the serial path never allocates at execute
-        // time, and threaded paths grow the pool once on first use.
+        // time, and threaded paths grow the pool once on first use. Grouped
+        // kernels solve per-group blocks, so the pool is sized per group.
         let pool = Arc::new(WorkspacePool::for_block(
-            kernel.c_out,
+            kernel.group_c_out(),
             s * s * kernel.c_in,
             kernel.kh * kernel.kw,
         ));
@@ -150,25 +181,37 @@ impl SpectralPlan {
         assert!(s > 0 && n % s == 0 && m % s == 0, "stride must divide the grid");
         assert!(n > 0 && m > 0, "grid must be nonempty");
         assert!(
-            pool.covers(kernel.c_out, s * s * kernel.c_in, kernel.kh * kernel.kw),
+            kernel.groups >= 1 && kernel.c_out % kernel.groups == 0,
+            "c_out {} not divisible by groups {}",
+            kernel.c_out,
+            kernel.groups
+        );
+        assert!(kernel.dilation >= 1, "dilation must be >= 1");
+        assert!(
+            pool.covers(kernel.group_c_out(), s * s * kernel.c_in, kernel.kh * kernel.kw),
             "workspace pool does not cover the plan's block shape"
         );
         let (ar, ac) = (kernel.anchor.0 as isize, kernel.anchor.1 as isize);
+        // Dilation is a pure phase change: tap (r,c) sits at displacement
+        // d·(r−ar, c−ac), so the tables absorb the factor d here and every
+        // downstream path (fused sweeps, f32 twins) is dilation-correct for
+        // free.
+        let dil = kernel.dilation as isize;
         let mut py = vec![C64::ZERO; kernel.kh * n];
         for d in 0..kernel.kh {
-            let dy = d as isize - ar;
+            let dy = dil * (d as isize - ar);
             for i in 0..n {
                 py[d * n + i] = C64::cis(2.0 * PI * (i as f64) * (dy as f64) / (n as f64));
             }
         }
         let mut px = vec![C64::ZERO; kernel.kw * m];
         for d in 0..kernel.kw {
-            let dx = d as isize - ac;
+            let dx = dil * (d as isize - ac);
             for j in 0..m {
                 px[d * m + j] = C64::cis(2.0 * PI * (j as f64) * (dx as f64) / (m as f64));
             }
         }
-        let block_rows = kernel.c_out;
+        let block_rows = kernel.group_c_out();
         let block_cols = s * s * kernel.c_in;
         let py32: Vec<C32> = py.iter().map(|z| z.to_c32()).collect();
         let px32: Vec<C32> = px.iter().map(|z| z.to_c32()).collect();
@@ -185,7 +228,7 @@ impl SpectralPlan {
             mc: m / s,
             block_rows,
             block_cols,
-            rank: block_rows.min(block_cols),
+            rank: kernel.groups * block_rows.min(block_cols),
             fold: opts.folding == Fold::Auto,
             precision: opts.precision,
             py,
@@ -349,9 +392,18 @@ impl SpectralPlan {
         )
     }
 
-    /// Singular values per frequency: `min(c_out, stride²·c_in)`.
+    /// Singular values per frequency: `min(c_out, stride²·c_in_total)`
+    /// (equivalently `groups · min(c_out/g, stride²·c_in)` — the union of
+    /// the per-group block spectra). Transposition does not change it.
     pub fn rank(&self) -> usize {
         self.rank
+    }
+
+    /// Per-group rank `min(c_out/g, stride²·c_in)` — the singular values
+    /// one diagonal block contributes per frequency.
+    #[inline]
+    fn group_rank(&self) -> usize {
+        self.block_rows.min(self.block_cols)
     }
 
     /// Total output length of [`Self::execute_into`].
@@ -381,9 +433,41 @@ impl SpectralPlan {
         self.solver
     }
 
-    /// Per-frequency block shape `(c_out, stride²·c_in)`.
+    /// Per-frequency **solved** block shape `(c_out/groups, stride²·c_in)`
+    /// — one group's diagonal block (the whole symbol when `groups == 1`).
     pub fn block_shape(&self) -> (usize, usize) {
         (self.block_rows, self.block_cols)
+    }
+
+    /// Shape of the whole per-frequency symbol of the operator the plan
+    /// audits: `(c_out, stride²·c_in_total)` for a forward convolution
+    /// (block-diagonal when grouped), swapped when the kernel is
+    /// transposed (the adjoint symbol is the conjugate transpose). This —
+    /// not [`Self::block_shape`] — is the shape [`Spectrum`] / factor
+    /// metadata carries.
+    pub fn sym_shape(&self) -> (usize, usize) {
+        let rows = self.kernel.c_out;
+        let cols = self.block_cols * self.kernel.groups;
+        if self.kernel.transposed {
+            (cols, rows)
+        } else {
+            (rows, cols)
+        }
+    }
+
+    /// Channel groups of the planned kernel (1 = dense mixing).
+    pub fn groups(&self) -> usize {
+        self.kernel.groups
+    }
+
+    /// Tap dilation of the planned kernel (1 = dense lattice).
+    pub fn dilation(&self) -> usize {
+        self.kernel.dilation
+    }
+
+    /// Whether the plan audits the adjoint (transposed) operator.
+    pub fn transposed(&self) -> bool {
+        self.kernel.transposed
     }
 
     /// The stride the plan was built with (1 = dense).
@@ -449,15 +533,18 @@ impl SpectralPlan {
         }
     }
 
-    /// Fill `ws.block` with the symbol at coarse frequency `(ki, kj)`:
-    /// the `c_out×c_in` symbol for stride 1, the horizontal concatenation
-    /// `(1/s)·[A_{k_00} | … | A_{k_(s-1)(s-1)}]` for stride `s`. Uses only
-    /// the precomputed phase tables — no trig, no allocation. The tap
-    /// contraction stores the per-tap phases as split re/im planes and
-    /// runs both dot products in one fused [`SimdReal::dot_split`] pass.
-    fn fill_block(&self, ki: usize, kj: usize, ws: &mut Workspace) {
+    /// Fill `ws.block` with group `gi`'s diagonal block of the symbol at
+    /// coarse frequency `(ki, kj)`: the `(c_out/g)×c_in` per-group symbol
+    /// for stride 1, the horizontal concatenation
+    /// `(1/s)·[A_{k_00} | … | A_{k_(s-1)(s-1)}]` for stride `s` (`gi = 0`
+    /// is the whole symbol for dense kernels). Uses only the precomputed
+    /// phase tables — no trig, no allocation; dilation is already folded
+    /// into the tables. The tap contraction stores the per-tap phases as
+    /// split re/im planes and runs both dot products in one fused
+    /// [`SimdReal::dot_split`] pass.
+    fn fill_block(&self, ki: usize, kj: usize, gi: usize, ws: &mut Workspace) {
         let (kh, kw) = (self.kernel.kh, self.kernel.kw);
-        let (cout, cin) = (self.kernel.c_out, self.kernel.c_in);
+        let cin = self.kernel.c_in;
         let s = self.stride;
         let ntaps = kh * kw;
         let inv_s = 1.0 / s as f64;
@@ -477,11 +564,12 @@ impl SpectralPlan {
                 }
                 // Contract taps against the OIHW weight tensor; taps are the
                 // innermost stride, so each (o, i) pair's weights are
-                // contiguous.
+                // contiguous. Group gi's output channels start at
+                // gi·block_rows in the stored tensor.
                 let col0 = (a * s + b) * cin;
-                for o in 0..cout {
+                for o in 0..self.block_rows {
                     for i in 0..cin {
-                        let p = o * cin + i;
+                        let p = (gi * self.block_rows + o) * cin + i;
                         let w = &self.kernel.data[p * ntaps..(p + 1) * ntaps];
                         let (re, im) =
                             f64::dot_split(w, &ws.tap_re[..ntaps], &ws.tap_im[..ntaps]);
@@ -496,12 +584,12 @@ impl SpectralPlan {
         }
     }
 
-    /// f32 twin of [`Self::fill_block`]: assembles the symbol into
+    /// f32 twin of [`Self::fill_block`]: assembles group `gi`'s block into
     /// `ws.block32` from the narrowed phase tables and weights — the
     /// reduced-precision tiers' symbol stage, at twice the SIMD lanes.
-    fn fill_block32(&self, ki: usize, kj: usize, ws: &mut Workspace) {
+    fn fill_block32(&self, ki: usize, kj: usize, gi: usize, ws: &mut Workspace) {
         let (kh, kw) = (self.kernel.kh, self.kernel.kw);
-        let (cout, cin) = (self.kernel.c_out, self.kernel.c_in);
+        let cin = self.kernel.c_in;
         let s = self.stride;
         let ntaps = kh * kw;
         let inv_s = 1.0f32 / s as f32;
@@ -518,9 +606,9 @@ impl SpectralPlan {
                     }
                 }
                 let col0 = (a * s + b) * cin;
-                for o in 0..cout {
+                for o in 0..self.block_rows {
                     for i in 0..cin {
-                        let p = o * cin + i;
+                        let p = (gi * self.block_rows + o) * cin + i;
                         let w = &self.w32[p * ntaps..(p + 1) * ntaps];
                         let (re, im) =
                             f32::dot_split(w, &ws.tap_re32[..ntaps], &ws.tap_im32[..ntaps]);
@@ -535,31 +623,60 @@ impl SpectralPlan {
         }
     }
 
-    /// Assemble and solve frequency `(ki, kj)` at the plan's precision:
-    /// full per-frequency singular values, descending, into `dst`
-    /// (`rank` long, always f64 at the output boundary). The single
-    /// dispatch point of the full-sweep precision tiers.
+    /// Assemble and solve one group block of frequency `(ki, kj)` at the
+    /// plan's precision: the block's singular values, descending, into
+    /// `dst` (`group_rank` long, always f64 at the output boundary). The
+    /// single dispatch point of the full-sweep precision tiers.
     #[inline]
-    fn solve_freq(&self, ki: usize, kj: usize, ws: &mut Workspace, dst: &mut [f64]) {
+    fn solve_group(&self, ki: usize, kj: usize, gi: usize, ws: &mut Workspace, dst: &mut [f64]) {
         match self.precision {
             Precision::F64 => {
-                self.fill_block(ki, kj, ws);
+                self.fill_block(ki, kj, gi, ws);
                 ws.solve_block(self.solver, self.block_rows, self.block_cols, dst);
             }
             Precision::F32 => {
-                self.fill_block32(ki, kj, ws);
+                self.fill_block32(ki, kj, gi, ws);
                 ws.solve_block32(self.solver, self.block_rows, self.block_cols, dst);
             }
             Precision::F32Refined => {
-                self.fill_block(ki, kj, ws);
+                self.fill_block(ki, kj, gi, ws);
                 ws.solve_block_refined(self.block_rows, self.block_cols, dst);
             }
         }
     }
 
+    /// Assemble and solve frequency `(ki, kj)` at the plan's precision:
+    /// full per-frequency singular values of the (block-diagonal)
+    /// operator, descending, into `dst` (`rank` long). Dense kernels solve
+    /// one block; grouped kernels solve `g` per-group blocks — `O(g²)`
+    /// cheaper than one dense SVD of the embedded matrix — and merge the
+    /// group spectra by an in-place sort (the singular values of a
+    /// block-diagonal matrix are the union of its blocks').
+    #[inline]
+    fn solve_freq(&self, ki: usize, kj: usize, ws: &mut Workspace, dst: &mut [f64]) {
+        let g = self.kernel.groups;
+        if g == 1 {
+            self.solve_group(ki, kj, 0, ws, dst);
+            return;
+        }
+        let gr = self.group_rank();
+        for gi in 0..g {
+            let (lo, hi) = (gi * gr, (gi + 1) * gr);
+            self.solve_group(ki, kj, gi, ws, &mut dst[lo..hi]);
+        }
+        dst.sort_unstable_by(|a, b| b.total_cmp(a));
+    }
+
     /// Top-k companion of [`Self::solve_freq`]: assemble and solve
     /// frequency `(ki, kj)` for its `ke` largest values at the plan's
     /// precision. Returns the solver iteration steps spent.
+    ///
+    /// Grouped kernels solve each diagonal block for its own
+    /// `min(ke, group_rank)` extremes (cold-started per block — a warm
+    /// basis from a *different* group's block is meaningless), gather the
+    /// candidates in `ws.merge`, and copy the global top `ke` out: the
+    /// top-k of a block-diagonal matrix is the top-k of the union of its
+    /// blocks' top-k.
     #[inline]
     fn solve_freq_topk(
         &self,
@@ -570,20 +687,55 @@ impl SpectralPlan {
         ws: &mut Workspace,
         dst: &mut [f64],
     ) -> u64 {
-        match self.precision {
-            Precision::F64 => {
-                self.fill_block(ki, kj, ws);
-                ws.solve_block_topk(self.block_rows, self.block_cols, ke, opts, dst) as u64
-            }
-            Precision::F32 => {
-                self.fill_block32(ki, kj, ws);
-                ws.solve_block_topk32(self.block_rows, self.block_cols, ke, opts, dst) as u64
-            }
-            Precision::F32Refined => {
-                self.fill_block(ki, kj, ws);
-                ws.solve_block_topk_refined(self.block_rows, self.block_cols, ke, opts, dst) as u64
-            }
+        let g = self.kernel.groups;
+        if g == 1 {
+            return match self.precision {
+                Precision::F64 => {
+                    self.fill_block(ki, kj, 0, ws);
+                    ws.solve_block_topk(self.block_rows, self.block_cols, ke, opts, dst) as u64
+                }
+                Precision::F32 => {
+                    self.fill_block32(ki, kj, 0, ws);
+                    ws.solve_block_topk32(self.block_rows, self.block_cols, ke, opts, dst) as u64
+                }
+                Precision::F32Refined => {
+                    self.fill_block(ki, kj, 0, ws);
+                    ws.solve_block_topk_refined(self.block_rows, self.block_cols, ke, opts, dst)
+                        as u64
+                }
+            };
         }
+        let kg = ke.min(self.group_rank());
+        // The merge buffer is owned scratch: take it out so the per-group
+        // solves can borrow `ws` mutably, put it back when done.
+        let mut merge = std::mem::take(&mut ws.merge);
+        if merge.len() < g * kg {
+            merge.resize(g * kg, 0.0);
+        }
+        let mut iters = 0u64;
+        for gi in 0..g {
+            self.topk_reset(ws);
+            let sub = &mut merge[gi * kg..(gi + 1) * kg];
+            iters += match self.precision {
+                Precision::F64 => {
+                    self.fill_block(ki, kj, gi, ws);
+                    ws.solve_block_topk(self.block_rows, self.block_cols, kg, opts, sub) as u64
+                }
+                Precision::F32 => {
+                    self.fill_block32(ki, kj, gi, ws);
+                    ws.solve_block_topk32(self.block_rows, self.block_cols, kg, opts, sub) as u64
+                }
+                Precision::F32Refined => {
+                    self.fill_block(ki, kj, gi, ws);
+                    ws.solve_block_topk_refined(self.block_rows, self.block_cols, kg, opts, sub)
+                        as u64
+                }
+            };
+        }
+        merge[..g * kg].sort_unstable_by(|a, b| b.total_cmp(a));
+        dst.copy_from_slice(&merge[..ke]);
+        ws.merge = merge;
+        iters
     }
 
     /// Cold-start the top-k scratch the plan's precision actually sweeps
@@ -990,11 +1142,12 @@ impl SpectralPlan {
             self.request_values_len(request),
             "values buffer length mismatch"
         );
+        let (rows, cols) = self.sym_shape();
         Spectrum {
             n: self.nc,
             m: self.mc,
-            c_out: self.block_rows,
-            c_in: self.block_cols,
+            c_out: rows,
+            c_in: cols,
             per_freq: request.values_per_freq(self.rank),
             values,
         }
@@ -1017,7 +1170,9 @@ impl SpectralPlan {
     /// store it at frequency `f`: values into `values`, right vectors into
     /// `v[f]`, left vectors `u_j = (A v_j)/σ_j` into `u[f]`. Returns the
     /// solver iteration steps — the per-frequency body shared by the
-    /// folded and unfolded factor sweeps.
+    /// folded and unfolded factor sweeps (dense kernels; grouped kernels
+    /// go through the candidate-merging path of
+    /// [`Self::topk_triplet_at`]).
     fn store_topk_triplet(
         &self,
         ke: usize,
@@ -1045,17 +1200,94 @@ impl SpectralPlan {
         iters
     }
 
+    /// Assemble, solve and store the top-`ke` forward triplet of frequency
+    /// `(ki, kj)` at index `f`; returns `(iterations, block energy)`. The
+    /// per-frequency body of [`Self::execute_topk_factors`], shared by the
+    /// folded and unfolded sweeps. Dense kernels solve the single block in
+    /// place; grouped kernels solve each diagonal block for its own
+    /// `min(ke, group_rank)` candidate triplets (cold per block), merge by
+    /// value in `fs`, and embed the winners' vectors at their group's
+    /// row/column offsets of the block-diagonal factor matrices.
+    #[allow(clippy::too_many_arguments)]
+    fn topk_triplet_at(
+        &self,
+        ki: usize,
+        kj: usize,
+        ke: usize,
+        opts: TopKOptions,
+        ws: &mut Workspace,
+        fs: &mut Option<FactorScratch>,
+        f: usize,
+        values: &mut [f64],
+        u: &mut [CMat],
+        v: &mut [CMat],
+    ) -> (u64, f64) {
+        let g = self.kernel.groups;
+        if g == 1 {
+            self.fill_block(ki, kj, 0, ws);
+            let energy = ws.block.iter().map(|z| z.norm_sqr()).sum::<f64>();
+            let iters = self.store_topk_triplet(ke, opts, ws, f, values, u, v);
+            return (iters, energy);
+        }
+        let FactorScratch { vals, order, u: cand_u, v: cand_v } =
+            fs.as_mut().expect("grouped factor sweep requires candidate scratch");
+        let kg = ke.min(self.group_rank());
+        let (cin, cin_total) = (self.kernel.c_in, self.kernel.c_in_total());
+        let mut iters = 0u64;
+        let mut energy = 0.0f64;
+        for gi in 0..g {
+            // A warm basis from another group's block is meaningless.
+            ws.topk.reset();
+            self.fill_block(ki, kj, gi, ws);
+            energy += ws.block.iter().map(|z| z.norm_sqr()).sum::<f64>();
+            let sub = &mut vals[gi * kg..(gi + 1) * kg];
+            iters += ws.solve_block_topk(self.block_rows, self.block_cols, kg, opts, sub) as u64;
+            for j in 0..kg {
+                let c = gi * kg + j;
+                let vj = ws.topk.right_vector(j);
+                for row in 0..self.block_cols {
+                    cand_v[(row, c)] = vj[row];
+                }
+                let inv = if sub[j] > 0.0 { 1.0 / sub[j] } else { 0.0 };
+                let wj = ws.topk.left_scaled(j);
+                for r in 0..self.block_rows {
+                    cand_u[(r, c)] = wj[r].scale(inv);
+                }
+            }
+        }
+        // Global top-ke across the g·kg candidates (the top-k of a
+        // block-diagonal matrix is the top-k of the union of its blocks').
+        order.clear();
+        order.extend(0..g * kg);
+        order.sort_unstable_by(|&a, &b| vals[b].total_cmp(&vals[a]));
+        for (j2, &c) in order.iter().take(ke).enumerate() {
+            let gi = c / kg;
+            values[f * ke + j2] = vals[c];
+            for r in 0..self.block_rows {
+                u[f][(gi * self.block_rows + r, j2)] = cand_u[(r, c)];
+            }
+            for row in 0..self.block_cols {
+                let (ab, i) = (row / cin, row % cin);
+                v[f][(ab * cin_total + gi * cin + i, j2)] = cand_v[(row, c)];
+            }
+        }
+        (iters, energy)
+    }
+
     /// Right factor of the conjugate mirror of frequency `(ki, kj)`:
     /// `V(−κ) = Pᵀ·conj(V(κ))` — rows permuted per aliasing group by the
     /// stride negation permutation
     /// ([`crate::lfa::stride::alias_mirror_index`]), entries conjugated.
-    /// For stride 1 this reduces to the plain conjugate.
+    /// For stride 1 this reduces to the plain conjugate. The factor rows
+    /// are `(a,b)`-alias-major with `c_in_total` channels per alias, so
+    /// the permutation is oblivious to channel grouping — it moves whole
+    /// alias row groups.
     fn mirror_right_factor(&self, vsrc: &CMat, ki: usize, kj: usize) -> CMat {
         let s = self.stride;
         if s == 1 {
             return conj_factor(vsrc);
         }
-        let cin = self.kernel.c_in;
+        let cin = self.kernel.c_in_total();
         let mut out = CMat::zeros(vsrc.rows, vsrc.cols);
         for a in 0..s {
             for b in 0..s {
@@ -1084,13 +1316,32 @@ impl SpectralPlan {
     /// plan's [`Precision`]: the vectors are consumed downstream
     /// (compression, reconstruction) where reduced precision would
     /// compound.
+    /// Grouped kernels solve each diagonal block for its own candidates
+    /// and merge (see [`Self::topk_triplet_at`]); transposed kernels solve
+    /// the forward blocks and swap the `U`/`V` roles at packaging (the
+    /// adjoint symbol is the conjugate transpose, so `Aᴴ = VΣUᴴ`).
     pub fn execute_topk_factors(&self, k: usize) -> TopKSvd {
         let ke = self.topk_per_freq(k);
         let freqs = self.freqs();
         let opts = TopKOptions::default();
+        let g = self.kernel.groups;
+        // Forward-operator factor shapes; swapped at packaging when
+        // transposed.
+        let (fwd_rows, fwd_cols) = (self.kernel.c_out, self.block_cols * g);
         let mut values = vec![0.0f64; freqs * ke];
-        let mut u: Vec<CMat> = (0..freqs).map(|_| CMat::zeros(self.block_rows, ke)).collect();
-        let mut v: Vec<CMat> = (0..freqs).map(|_| CMat::zeros(self.block_cols, ke)).collect();
+        let mut u: Vec<CMat> = (0..freqs).map(|_| CMat::zeros(fwd_rows, ke)).collect();
+        let mut v: Vec<CMat> = (0..freqs).map(|_| CMat::zeros(fwd_cols, ke)).collect();
+        let kg = ke.min(self.group_rank());
+        let mut fs = if g > 1 {
+            Some(FactorScratch {
+                vals: vec![0.0f64; g * kg],
+                order: Vec::with_capacity(g * kg),
+                u: CMat::zeros(self.block_rows, g * kg),
+                v: CMat::zeros(self.block_cols, g * kg),
+            })
+        } else {
+            None
+        };
         let mut ws = self.checkout();
         ws.topk.reset();
         let mut iters = 0u64;
@@ -1100,12 +1351,12 @@ impl SpectralPlan {
                 if crossed_seam {
                     ws.topk.conjugate_basis();
                 }
-                self.fill_block(ki, kj, &mut ws);
-                let energy = ws.block.iter().map(|z| z.norm_sqr()).sum::<f64>();
-                total_energy += energy;
                 let f = ki * self.mc + kj;
-                iters +=
-                    self.store_topk_triplet(ke, opts, &mut ws, f, &mut values, &mut u, &mut v);
+                let (it, energy) = self.topk_triplet_at(
+                    ki, kj, ke, opts, &mut ws, &mut fs, f, &mut values, &mut u, &mut v,
+                );
+                iters += it;
+                total_energy += energy;
                 let (mi, mj) = self.mirror_coords(ki, kj);
                 let fm = mi * self.mc + mj;
                 if fm != f {
@@ -1123,23 +1374,27 @@ impl SpectralPlan {
             for ki in 0..self.nc {
                 for step in 0..self.mc {
                     let kj = self.serpentine_col(ki, step);
-                    self.fill_block(ki, kj, &mut ws);
-                    total_energy += ws.block.iter().map(|z| z.norm_sqr()).sum::<f64>();
                     let f = ki * self.mc + kj;
-                    iters +=
-                        self.store_topk_triplet(ke, opts, &mut ws, f, &mut values, &mut u, &mut v);
+                    let (it, energy) = self.topk_triplet_at(
+                        ki, kj, ke, opts, &mut ws, &mut fs, f, &mut values, &mut u, &mut v,
+                    );
+                    iters += it;
+                    total_energy += energy;
                 }
             }
         }
         self.restore(ws);
+        let (sym_rows, sym_cols) = self.sym_shape();
+        let sigma = self.topk_spectrum(k, values);
+        let (u, v) = if self.kernel.transposed { (v, u) } else { (u, v) };
         TopKSvd {
             n: self.nc,
             m: self.mc,
-            c_out: self.block_rows,
-            c_in: self.block_cols,
+            c_out: sym_rows,
+            c_in: sym_cols,
             k: ke,
             u,
-            sigma: self.topk_spectrum(k, values),
+            sigma,
             v,
             iterations: iters,
             total_energy,
@@ -1219,14 +1474,24 @@ impl SpectralPlan {
     /// spectral transfer functions reconstruct `A(−θ)` bit-for-bit from
     /// them. Like [`Self::execute_topk_factors`], always f64 regardless of
     /// the plan's [`Precision`].
+    /// Grouped kernels are decomposed through the *embedded*
+    /// block-diagonal symbol (`c_out × s²·c_in_total`) so the factors come
+    /// out in operator coordinates; transposed kernels decompose the
+    /// forward symbol and swap the `U`/`V` roles at packaging
+    /// (`Aᴴ = VΣUᴴ`).
     pub fn execute_full(&self) -> FullSvd {
         let freqs = self.freqs();
         let r = self.rank;
+        let g = self.kernel.groups;
+        let (cin, cin_total) = (self.kernel.c_in, self.kernel.c_in_total());
+        // Forward-operator symbol shape; factor roles swap at packaging
+        // when transposed.
+        let (fwd_rows, fwd_cols) = (self.kernel.c_out, self.block_cols * g);
         let mut u: Vec<CMat> = Vec::with_capacity(freqs);
         let mut v: Vec<CMat> = Vec::with_capacity(freqs);
         let mut values = vec![0.0f64; freqs * r];
         let mut ws = self.checkout();
-        let mut block = CMat::zeros(self.block_rows, self.block_cols);
+        let mut block = CMat::zeros(fwd_rows, fwd_cols);
         for ki in 0..self.nc {
             for kj in 0..self.mc {
                 let f = ki * self.mc + kj;
@@ -1243,8 +1508,30 @@ impl SpectralPlan {
                     v.push(vm);
                     continue;
                 }
-                self.fill_block(ki, kj, &mut ws);
-                block.data.copy_from_slice(&ws.block);
+                if g == 1 {
+                    self.fill_block(ki, kj, 0, &mut ws);
+                    block.data.copy_from_slice(&ws.block);
+                } else {
+                    // Embed the per-group blocks into the block-diagonal
+                    // symbol: group gi's rows start at gi·block_rows, its
+                    // columns sit at channel offset gi·c_in within each
+                    // (a,b) alias column group.
+                    for z in block.data.iter_mut() {
+                        *z = C64::ZERO;
+                    }
+                    for gi in 0..g {
+                        self.fill_block(ki, kj, gi, &mut ws);
+                        for o in 0..self.block_rows {
+                            for col in 0..self.block_cols {
+                                let (ab, i) = (col / cin, col % cin);
+                                block[(
+                                    gi * self.block_rows + o,
+                                    ab * cin_total + gi * cin + i,
+                                )] = ws.block[o * self.block_cols + col];
+                            }
+                        }
+                    }
+                }
                 let dec = jacobi_svd::svd(&block);
                 values[f * r..(f + 1) * r].copy_from_slice(&dec.s[..r]);
                 u.push(dec.u);
@@ -1252,22 +1539,17 @@ impl SpectralPlan {
             }
         }
         self.restore(ws);
-        FullSvd {
+        let (sym_rows, sym_cols) = self.sym_shape();
+        let sigma = Spectrum {
             n: self.nc,
             m: self.mc,
-            c_out: self.block_rows,
-            c_in: self.block_cols,
-            u,
-            sigma: Spectrum {
-                n: self.nc,
-                m: self.mc,
-                c_out: self.block_rows,
-                c_in: self.block_cols,
-                per_freq: r,
-                values,
-            },
-            v,
-        }
+            c_out: sym_rows,
+            c_in: sym_cols,
+            per_freq: r,
+            values,
+        };
+        let (u, v) = if self.kernel.transposed { (v, u) } else { (u, v) };
+        FullSvd { n: self.nc, m: self.mc, c_out: sym_rows, c_in: sym_cols, u, sigma, v }
     }
 
     /// Materialize the symbol grid in the plan's layout (stride 1 only) —
@@ -1275,6 +1557,12 @@ impl SpectralPlan {
     /// spectral-transfer reconstruction.
     pub fn compute_symbols(&self) -> SymbolGrid {
         assert_eq!(self.stride, 1, "symbol grids are only defined for stride 1");
+        assert!(
+            self.kernel.groups == 1 && !self.kernel.transposed,
+            "symbol grids are only materialized for forward ungrouped kernels \
+             (grouped symbols are block-diagonal, adjoint symbols are their \
+             conjugate transposes — take them per block from the plan instead)"
+        );
         let (cout, cin) = (self.kernel.c_out, self.kernel.c_in);
         let block_len = cout * cin;
         let mut grid = SymbolGrid::zeros(self.n, self.m, cout, cin, self.layout);
@@ -1331,7 +1619,7 @@ impl SpectralPlan {
         let block_len = self.block_rows * self.block_cols;
         for ki in row_lo..row_hi {
             for kj in 0..self.mc {
-                self.fill_block(ki, kj, ws);
+                self.fill_block(ki, kj, 0, ws);
                 let f = (ki - row_lo) * self.mc + kj;
                 out[f * block_len..(f + 1) * block_len].copy_from_slice(&ws.block);
             }

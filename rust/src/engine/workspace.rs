@@ -71,6 +71,12 @@ pub struct Workspace {
     /// f32 twin of `topk`: carries the warm basis of the reduced-precision
     /// top-k sweeps (both `F32` and the `F32Refined` f32 stage).
     pub topk32: TopKScratch<f32>,
+    /// Merge buffer for grouped top-k solves: per-group candidate values
+    /// are gathered here, sorted, and the global top-k copied out. Always
+    /// f64 (the top-k output boundary), sized lazily on the first grouped
+    /// solve — like `topk`, a warm-up execution makes the hot loop
+    /// allocation-free.
+    pub merge: Vec<f64>,
 }
 
 impl Workspace {
@@ -103,6 +109,7 @@ impl Workspace {
             svals32: vec![0.0f32; rows.min(cols).max(1)],
             topk: TopKScratch::new(),
             topk32: TopKScratch::<f32>::new(),
+            merge: Vec::new(),
         }
     }
 

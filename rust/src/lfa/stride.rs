@@ -23,7 +23,11 @@ use crate::engine::SpectralPlan;
 use crate::numeric::CMat;
 
 /// The symbol of the stride-`s` convolution at coarse frequency
-/// `κ = (ki/(n/s), kj/(m/s))`: a `c_out × s²·c_in` matrix.
+/// `κ = (ki/(n/s), kj/(m/s))`: a `c_out × s²·c_in_total` matrix
+/// (structure-aware — grouped blocks are channel-block-diagonal within
+/// every aliasing column group, dilation enters through the fine symbols).
+/// For a `transposed` kernel the returned block is the conjugate
+/// transpose, `s²·c_in_total × c_out` — the adjoint operator's symbol.
 ///
 /// Requires `s` to divide `n` and `m`.
 pub fn strided_symbol_at(
@@ -37,14 +41,18 @@ pub fn strided_symbol_at(
     assert!(s > 0 && n % s == 0 && m % s == 0, "stride must divide the grid");
     let (nc, mc) = (n / s, m / s);
     debug_assert!(ki < nc && kj < mc);
-    let cin = kernel.c_in;
+    let cin = kernel.c_in_total();
     let mut block = CMat::zeros(kernel.c_out, s * s * cin);
     let scale = 1.0 / s as f64;
     for a in 0..s {
         for b in 0..s {
             // fine frequency (ki + a·nc, kj + b·mc) / n — i.e. index into the
-            // full fine dual grid.
+            // full fine dual grid. `symbol_at` hands the adjoint symbol for
+            // transposed kernels; undo that here and re-transpose the whole
+            // concatenated block at the end (adjoint of the strided op, not
+            // a concatenation of fine adjoints).
             let fine = symbol_at(kernel, n, m, ki + a * nc, kj + b * mc);
+            let fine = if kernel.transposed { fine.hermitian() } else { fine };
             let col0 = (a * s + b) * cin;
             for o in 0..kernel.c_out {
                 for i in 0..cin {
@@ -53,7 +61,11 @@ pub fn strided_symbol_at(
             }
         }
     }
-    block
+    if kernel.transposed {
+        block.hermitian()
+    } else {
+        block
+    }
 }
 
 /// All singular values of the stride-`s` convolution on an `n×m` fine grid
@@ -82,27 +94,37 @@ pub fn strided_plan(
 
 /// Dense unrolled matrix of the strided convolution (ground truth for the
 /// tests): rows = coarse outputs, columns = fine inputs. Periodic BC.
+///
+/// Structure-aware like [`crate::conv::unroll_dense`]: grouped kernels
+/// populate block-diagonal channel couplings, dilated kernels read
+/// `dilation`-spaced taps. Always the **forward** mapping — the
+/// transposed-conv reference is this matrix's transpose (same singular
+/// values).
 pub fn unroll_strided(kernel: &ConvKernel, n: usize, m: usize, s: usize) -> crate::numeric::Mat {
     assert!(s > 0 && n % s == 0 && m % s == 0);
     let (nc, mc) = (n / s, m / s);
+    let cin_total = kernel.c_in_total();
     let rows = nc * mc * kernel.c_out;
-    let cols = n * m * kernel.c_in;
+    let cols = n * m * cin_total;
     let mut a = crate::numeric::Mat::zeros(rows, cols);
     let (ar, ac) = (kernel.anchor.0 as isize, kernel.anchor.1 as isize);
+    let gr = kernel.group_c_out();
+    let d = kernel.dilation as isize;
     for xr in 0..nc {
         for xc in 0..mc {
             // Output pixel (xr, xc) reads the fine-grid stencil at (s·xr, s·xc).
             let (fr, fc) = ((s * xr) as isize, (s * xc) as isize);
             for r in 0..kernel.kh as isize {
                 for c in 0..kernel.kw as isize {
-                    let (sr, sc) = (fr + r - ar, fc + c - ac);
+                    let (sr, sc) = (fr + d * (r - ar), fc + d * (c - ac));
                     let rr = sr.rem_euclid(n as isize) as usize;
                     let cc = sc.rem_euclid(m as isize) as usize;
                     let src = rr * m + cc;
                     let dst = xr * mc + xc;
                     for o in 0..kernel.c_out {
+                        let col0 = src * cin_total + (o / gr) * kernel.c_in;
                         for i in 0..kernel.c_in {
-                            a[(dst * kernel.c_out + o, src * kernel.c_in + i)] +=
+                            a[(dst * kernel.c_out + o, col0 + i)] +=
                                 kernel.get(o, i, r as usize, c as usize);
                         }
                     }

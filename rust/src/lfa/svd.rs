@@ -160,6 +160,11 @@ pub fn singular_values(kernel: &ConvKernel, n: usize, m: usize, opts: LfaOptions
 /// Timed variant separating `s_F` and `s_SVD` (Table III). Unlike
 /// [`singular_values`] this materializes the symbol grid between the stages
 /// so the two timings are observable — exactly the paper's measurement.
+///
+/// Materialized symbol grids are only defined for forward ungrouped
+/// kernels (`groups == 1`, not transposed; dilation is fine — see
+/// [`SpectralPlan::compute_symbols`]); structured kernels take the fused
+/// [`singular_values`] path instead.
 pub fn singular_values_timed(
     kernel: &ConvKernel,
     n: usize,
@@ -303,7 +308,7 @@ pub fn tile_singular_values(
 ) -> Vec<f64> {
     let plan =
         SpectralPlan::new(kernel, n, m, LfaOptions { solver, threads: 1, ..Default::default() });
-    let r = kernel.c_out.min(kernel.c_in);
+    let r = kernel.c_out.min(kernel.c_in_total());
     let mut values = vec![0.0f64; (row_hi - row_lo) * m * r];
     plan.execute_rows_pooled(row_lo, row_hi, &mut values);
     values
@@ -322,6 +327,12 @@ pub fn frobenius_check(kernel: &ConvKernel, n: usize, m: usize, spectrum: &Spect
 /// `s²` aliasing fine symbols, so summing `‖block‖²` over the `(n/s)·(m/s)`
 /// coarse frequencies covers every fine symbol once at weight `1/s²`:
 /// `Σσ² = n·m·‖W‖_F²/s²`.
+///
+/// The identity is structure-oblivious: grouping only masks weights that
+/// are zero anyway, transposition preserves singular values, and dilation
+/// relocates taps without changing `‖W‖_F` — so the check applies to every
+/// structured variant, with the same caveat that *distinct* taps must stay
+/// distinct on the torus (`dilation·(kh−1) < n`, `dilation·(kw−1) < m`).
 pub fn frobenius_check_strided(
     kernel: &ConvKernel,
     n: usize,

@@ -183,28 +183,45 @@ fn phase_table(n: usize, offsets: &[isize]) -> Vec<Vec<C64>> {
 
 /// Compute the symbol at a single frequency `k = (ki/n, kj/m)` — line 5 of
 /// Algorithm 1. `O(c_out·c_in·kh·kw)`, no dependence on `n, m`.
+///
+/// Structure-aware reference:
+///
+/// - **Groups** make the symbol *block-diagonal*: the returned matrix is
+///   `c_out × c_in_total`, with group `gi`'s `(c_out/g) × c_in` block at
+///   rows `gi·c_out/g..` and columns `gi·c_in..` and zeros elsewhere.
+///   Depthwise (`g = c_out = c_in_total`) degenerates to a diagonal of
+///   scalar symbols.
+/// - **Dilation** multiplies every displacement by `d` — a pure phase
+///   change `e^{2πi⟨k, d·y⟩}`; the flop count is unchanged.
+/// - **Transposed** kernels return the *adjoint symbol* `A_kᴴ`
+///   (`c_in_total × c_out`): per frequency the adjoint of a convolution is
+///   the conjugate-transpose of its symbol, so `Aᵀ = VΣUᴴ` shares the
+///   forward singular values with the vector roles swapped.
 pub fn symbol_at(kernel: &ConvKernel, n: usize, m: usize, ki: usize, kj: usize) -> CMat {
     let (ar, ac) = (kernel.anchor.0 as isize, kernel.anchor.1 as isize);
-    let mut b = CMat::zeros(kernel.c_out, kernel.c_in);
+    let d = kernel.dilation as isize;
+    let gr = kernel.group_c_out();
+    let mut b = CMat::zeros(kernel.c_out, kernel.c_in_total());
     for r in 0..kernel.kh {
-        let dy = r as isize - ar;
+        let dy = d * (r as isize - ar);
         let py = C64::cis(2.0 * PI * (ki as f64) * (dy as f64) / (n as f64));
         for c in 0..kernel.kw {
-            let dx = c as isize - ac;
+            let dx = d * (c as isize - ac);
             let px = C64::cis(2.0 * PI * (kj as f64) * (dx as f64) / (m as f64));
             let phase = py * px;
             for o in 0..kernel.c_out {
+                let col0 = (o / gr) * kernel.c_in;
                 for ic in 0..kernel.c_in {
                     let w = kernel.get(o, ic, r, c);
                     if w != 0.0 {
-                        let v = b[(o, ic)];
-                        b[(o, ic)] = v + phase.scale(w);
+                        let v = b[(o, col0 + ic)];
+                        b[(o, col0 + ic)] = v + phase.scale(w);
                     }
                 }
             }
         }
     }
-    b
+    if kernel.transposed { b.hermitian() } else { b }
 }
 
 /// Compute all `n·m` symbols (single-threaded). See
@@ -267,6 +284,15 @@ pub fn compute_symbols_parallel(
 /// modified grid (clipped/truncated spectrum) it is the least-squares
 /// projection onto kernels of that support — the standard way to pull
 /// spectral edits back into weight space.
+///
+/// Dense-only: the inverse sum assumes taps on the unit grid and a fully
+/// mixed channel block, so it recovers a `groups = 1`, `dilation = 1`
+/// forward kernel. Structured grids must be pulled back per group / on the
+/// dilated tap lattice by the caller ([`SpectralPlan::compute_symbols`]
+/// refuses to build grids for grouped or transposed kernels for the same
+/// reason).
+///
+/// [`SpectralPlan::compute_symbols`]: crate::engine::SpectralPlan::compute_symbols
 pub fn taps_from_symbols(
     grid: &SymbolGrid,
     kh: usize,
@@ -407,6 +433,77 @@ mod tests {
                         assert!((b[(o, ic)] - bneg[(o, ic)].conj()).abs() < 1e-12);
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_symbol_is_block_diagonal() {
+        let mut rng = Pcg64::seeded(108);
+        let k = ConvKernel::random_he(6, 2, 3, 3, &mut rng).with_groups(3);
+        let b = symbol_at(&k, 8, 8, 3, 5);
+        assert_eq!((b.rows, b.cols), (6, 6));
+        // Off-block entries vanish; on-block entries match the per-group
+        // dense symbol of the extracted sub-kernel.
+        for gi in 0..3 {
+            let mut sub = ConvKernel::zeros(2, 2, 3, 3);
+            for o in 0..2 {
+                for i in 0..2 {
+                    for r in 0..3 {
+                        for c in 0..3 {
+                            sub.set(o, i, r, c, k.get(gi * 2 + o, i, r, c));
+                        }
+                    }
+                }
+            }
+            let bs = symbol_at(&sub, 8, 8, 3, 5);
+            for o in 0..6 {
+                for ic in 0..6 {
+                    let inside = o / 2 == gi && ic / 2 == gi;
+                    if inside {
+                        assert!((b[(o, ic)] - bs[(o % 2, ic % 2)]).abs() < 1e-14);
+                    } else if o / 2 == gi {
+                        assert!(b[(o, ic)].abs() == 0.0, "off-block leak at ({o},{ic})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dilated_symbol_matches_spread_kernel() {
+        // A d-dilated k×k kernel has the same symbol as the dense
+        // (d·(k−1)+1)-wide kernel with the taps spread out.
+        let mut rng = Pcg64::seeded(109);
+        let k = ConvKernel::random_he(2, 3, 3, 3, &mut rng).with_dilation(2);
+        let mut spread = ConvKernel::zeros(2, 3, 5, 5);
+        for o in 0..2 {
+            for i in 0..3 {
+                for r in 0..3 {
+                    for c in 0..3 {
+                        spread.set(o, i, 2 * r, 2 * c, k.get(o, i, r, c));
+                    }
+                }
+            }
+        }
+        for (ki, kj) in [(0, 0), (1, 3), (7, 2), (5, 5)] {
+            let a = symbol_at(&k, 8, 8, ki, kj);
+            let b = symbol_at(&spread, 8, 8, ki, kj);
+            assert!(a.max_abs_diff(&b) < 1e-13, "({ki},{kj})");
+        }
+    }
+
+    #[test]
+    fn transposed_symbol_is_adjoint() {
+        let mut rng = Pcg64::seeded(110);
+        let k = ConvKernel::random_he(2, 3, 3, 3, &mut rng);
+        let kt = k.clone().with_transposed(true);
+        let a = symbol_at(&k, 6, 6, 2, 4);
+        let at = symbol_at(&kt, 6, 6, 2, 4);
+        assert_eq!((at.rows, at.cols), (3, 2));
+        for o in 0..2 {
+            for ic in 0..3 {
+                assert!((at[(ic, o)] - a[(o, ic)].conj()).abs() < 1e-15);
             }
         }
     }

@@ -25,9 +25,17 @@
 //! low-rank compression actually consume. Because real kernels give
 //! `A(−θ) = conj(A(θ))`, every full-grid execution folds the dual grid to
 //! a fundamental domain of `θ → −θ` by default ([`lfa::Fold`]) — half the
-//! SVDs, the other half mirrored. See `ARCHITECTURE.md` for the
-//! full picture and `docs/PAPER_MAP.md` for the paper→code map (which
-//! section, equation, figure and table each module reproduces).
+//! SVDs, the other half mirrored. **Structured convolutions** are
+//! first-class: grouped kernels solve block-diagonal symbols (`g`
+//! independent blocks per frequency — `g²`× cheaper, depthwise
+//! degenerating to scalars), dilation is a phase-table change, and
+//! transposed convolutions solve the adjoint symbol (forward singular
+//! values bitwise, `U↔V` swapped). See `ARCHITECTURE.md` for the
+//! full picture, `docs/PAPER_MAP.md` for the paper→code map (which
+//! section, equation, figure and table each module reproduces), and
+//! `docs/WORKLOADS.md` for the supported-convolution matrix — which
+//! engine path serves each variant × stride × layout × fold × precision
+//! × top-k cell, and the accuracy contract it is pinned to.
 //!
 //! - **L1 — numeric/linalg primitives**: [`numeric`] (complex arithmetic,
 //!   layout-aware matrices, deterministic PRNG), [`linalg`] (one-sided
@@ -102,6 +110,62 @@
 //! let (bound, iterations) = plan.lipschitz_bound_topk();
 //! assert!((bound - spectra.lipschitz_upper_bound()).abs() < 1e-7 * bound);
 //! assert!(iterations > 0);
+//! ```
+//!
+//! ## Structured convolutions
+//!
+//! Grouped, depthwise, dilated and transposed convolutions are built with
+//! the [`conv::ConvKernel`] structure builders and run on the same planned
+//! engine — `docs/WORKLOADS.md` has the full matrix. A **depthwise audit**:
+//! the symbol is block diagonal with one scalar per channel, so each
+//! per-frequency "SVD" costs `O(c)` instead of `O(c³)`, and the spectrum
+//! (and its cheap top-k extremes) come out exactly as for any dense layer:
+//!
+//! ```
+//! use conv_svd_lfa::conv::ConvKernel;
+//! use conv_svd_lfa::engine::SpectralPlan;
+//! use conv_svd_lfa::lfa::LfaOptions;
+//! use conv_svd_lfa::numeric::Pcg64;
+//!
+//! let mut rng = Pcg64::seeded(11);
+//! // Depthwise = groups == channels; the stored kernel is 4×1×3×3 and
+//! // `c_in` names the *per-group* input channels (total = c_in · groups).
+//! let depthwise = ConvKernel::random_he(4, 1, 3, 3, &mut rng).with_groups(4);
+//! assert_eq!(depthwise.c_in_total(), 4);
+//! assert!(!depthwise.is_dense());
+//!
+//! let plan = SpectralPlan::new(&depthwise, 8, 8, LfaOptions::default());
+//! let full = plan.execute();
+//! // Grouping never changes the singular-value count per frequency.
+//! assert_eq!(full.num_values(), 8 * 8 * 4);
+//! // The warm-started top-k sweep reproduces the extreme exactly.
+//! let top = plan.execute_topk(1);
+//! assert!((full.sigma_max() - top.spectrum.sigma_max()).abs() < 1e-8);
+//! ```
+//!
+//! A **transposed-conv Lipschitz bound**: the transposed operator's symbol
+//! is the adjoint `A_k^H`, so its singular values — and therefore the
+//! layer's Lipschitz constant `σ_max` — are *bitwise* those of the forward
+//! operator; only the factor roles and the reported operator shape swap:
+//!
+//! ```
+//! use conv_svd_lfa::conv::ConvKernel;
+//! use conv_svd_lfa::engine::SpectralPlan;
+//! use conv_svd_lfa::lfa::LfaOptions;
+//! use conv_svd_lfa::numeric::Pcg64;
+//!
+//! let mut rng = Pcg64::seeded(23);
+//! // A decoder-style up-convolution: the adjoint of a 3→6 forward conv.
+//! let forward = ConvKernel::random_he(6, 3, 3, 3, &mut rng);
+//! let decoder = forward.clone().with_transposed(true);
+//!
+//! let opts = LfaOptions::default();
+//! let fwd = SpectralPlan::new(&forward, 8, 8, opts).execute();
+//! let adj = SpectralPlan::new(&decoder, 8, 8, opts).execute();
+//! // ‖Aᴴ‖₂ = ‖A‖₂ — the adjoint's Lipschitz bound is the forward one,
+//! // down to the last bit (the same forward blocks are solved).
+//! assert_eq!(fwd.sigma_max(), adj.sigma_max());
+//! assert_eq!(fwd.num_values(), adj.num_values());
 //! ```
 
 // The codebase favors explicit index loops that mirror the paper's sums;

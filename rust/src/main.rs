@@ -32,7 +32,8 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let cli = Cli::from_env(&["with-explicit", "verbose", "csv", "no-fold", "no-cache"])?;
+    let cli =
+        Cli::from_env(&["with-explicit", "verbose", "csv", "no-fold", "no-cache", "transposed"])?;
     match cli.command.as_str() {
         "analyze" => cmd_analyze(&cli),
         "audit" => cmd_audit(&cli),
@@ -61,9 +62,29 @@ fn cmd_analyze(cli: &Cli) -> Result<()> {
     if precision != Precision::F64 && method != "lfa" {
         bail!("--precision applies to the LFA engine only (method {method:?} is f64)");
     }
+    let groups: usize = cli.opt_parse("groups", 1)?;
+    let dilation: usize = cli.opt_parse("dilation", 1)?;
+    let transposed = cli.flag("transposed");
+    if groups == 0 || c_in % groups != 0 || c_out % groups != 0 {
+        bail!("--groups {groups} must be nonzero and divide --c-in {c_in} and --c-out {c_out}");
+    }
+    if dilation == 0 {
+        bail!("--dilation must be >= 1");
+    }
 
     let mut rng = Pcg64::seeded(seed);
-    let kernel = ConvKernel::random_he(c_out, c_in, k, k, &mut rng);
+    // The kernel stores the per-group input width (c_in / groups);
+    // c_in stays the activation tensor's total channel count.
+    let kernel = ConvKernel::random_he(c_out, c_in / groups, k, k, &mut rng)
+        .with_groups(groups)
+        .with_dilation(dilation)
+        .with_transposed(transposed);
+    if !kernel.is_dense() && method != "lfa" {
+        bail!(
+            "structured kernels (--groups/--dilation/--transposed) run on the \
+             LFA engine only (method {method:?} is a dense baseline)"
+        );
+    }
     let t0 = std::time::Instant::now();
     let spectrum = match method {
         "lfa" => lfa::singular_values(
@@ -78,8 +99,21 @@ fn cmd_analyze(cli: &Cli) -> Result<()> {
     };
     let dt = t0.elapsed();
     let sorted = spectrum.sorted_desc();
+    let structure = {
+        let mut tags = Vec::new();
+        if groups > 1 {
+            tags.push(format!("groups={groups}"));
+        }
+        if dilation > 1 {
+            tags.push(format!("dilation={dilation}"));
+        }
+        if transposed {
+            tags.push("transposed".to_string());
+        }
+        if tags.is_empty() { String::new() } else { format!(" [{}]", tags.join(", ")) }
+    };
     println!(
-        "layer {c_out}x{c_in}x{k}x{k} on {n}x{m} grid — {} singular values via {method} in {}",
+        "layer {c_out}x{c_in}x{k}x{k}{structure} on {n}x{m} grid — {} singular values via {method} in {}",
         commas(sorted.len() as u128),
         secs(dt)
     );
@@ -137,6 +171,26 @@ fn freqs_solved_line(solved: usize, total: usize, cached_layers: usize, folded: 
     }
 }
 
+/// The `c` column of the audit-model tables: operator channel dims —
+/// total input width (grouped kernels store the per-group width), the
+/// adjoint's swapped shape for transposed layers — plus a structure tag:
+/// `g4` grouped, `d2` dilated, `T` transposed.
+fn channels_desc(k: &ConvKernel) -> String {
+    let (ci, co) =
+        if k.transposed { (k.c_out, k.c_in_total()) } else { (k.c_in_total(), k.c_out) };
+    let mut s = format!("{ci}→{co}");
+    if k.groups > 1 {
+        s.push_str(&format!(" g{}", k.groups));
+    }
+    if k.dilation > 1 {
+        s.push_str(&format!(" d{}", k.dilation));
+    }
+    if k.transposed {
+        s.push('ᵀ');
+    }
+    s
+}
+
 /// The `--precision {f64,f32,f32-refined}` option shared by the analyze
 /// and audit commands (default f64).
 fn precision_opt(cli: &Cli) -> Result<Precision> {
@@ -175,7 +229,32 @@ fn cmd_audit(cli: &Cli) -> Result<()> {
         .positional
         .first()
         .ok_or_else(|| err!("audit needs a builtin name or config path"))?;
-    let model = load_model(target)?;
+    let mut model = load_model(target)?;
+    // Structure overrides: audit a grouped / dilated / transposed variant
+    // of any builtin or config. Applied to every layer (0 = keep the
+    // layer's own setting), so channel counts must stay divisible.
+    let groups: usize = cli.opt_parse("groups", 0)?;
+    let dilation: usize = cli.opt_parse("dilation", 0)?;
+    let transposed = cli.flag("transposed");
+    for l in &mut model.layers {
+        if groups > 0 {
+            if l.c_in % groups != 0 || l.c_out % groups != 0 {
+                bail!(
+                    "--groups {groups} does not divide layer {:?} ({}->{} channels)",
+                    l.name,
+                    l.c_in,
+                    l.c_out
+                );
+            }
+            l.groups = groups;
+        }
+        if dilation > 0 {
+            l.dilation = dilation;
+        }
+        if transposed {
+            l.transposed = true;
+        }
+    }
     let threads: usize = cli.opt_parse("threads", 0)?;
     let top_k: usize = cli.opt_parse("top-k", 0)?;
     let folding = if cli.flag("no-fold") { Fold::Off } else { Fold::Auto };
@@ -364,7 +443,7 @@ fn cmd_audit_model(cli: &Cli) -> Result<()> {
             layer.name.clone(),
             format!("{}x{}", lp.fine_rows(), lp.fine_cols()),
             lp.stride().to_string(),
-            format!("{}→{}", k.c_in, k.c_out),
+            channels_desc(k),
             commas(s.num_values() as u128),
             format!("{:.4}", s.sigma_max()),
             format!("{:.4}", s.sigma_min()),
@@ -459,7 +538,7 @@ fn audit_model_topk(
             layer.name.clone(),
             format!("{}x{}", lp.fine_rows(), lp.fine_cols()),
             lp.stride().to_string(),
-            format!("{}→{}", kernel.c_in, kernel.c_out),
+            channels_desc(kernel),
             s.rank_per_freq().to_string(),
             format!("{:.4}", s.sigma_max()),
             shown.join(" "),

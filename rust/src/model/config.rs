@@ -16,7 +16,16 @@
 //! width  = 32
 //! stride = 1        # must divide height and width
 //! init   = "he"     # he | glorot
+//!
+//! # Structured convolutions (all optional — defaults are dense):
+//! groups     = 1        # channel groups; must divide c_in and c_out
+//! dilation   = 1        # tap spacing (à-trous)
+//! transposed = false    # audit the adjoint operator (true | false | 1 | 0)
 //! ```
+//!
+//! `c_in` is always the **total** input channel count — the shape an
+//! activation tensor actually has. Grouped layers divide it internally
+//! (`groups = c_in` with per-group width 1 is depthwise).
 
 use crate::bail;
 use crate::conv::ConvKernel;
@@ -34,6 +43,8 @@ pub enum Init {
 #[derive(Clone, Debug)]
 pub struct LayerConfig {
     pub name: String,
+    /// **Total** input channels (the activation tensor's width). Grouped
+    /// layers store `c_in / groups` per-group channels in the kernel.
     pub c_in: usize,
     pub c_out: usize,
     pub kh: usize,
@@ -42,6 +53,14 @@ pub struct LayerConfig {
     pub width: usize,
     /// Output subsampling stride (`C = D_s ∘ A`); 1 = dense.
     pub stride: usize,
+    /// Channel groups (1 = dense, `c_in` with `c_out = c_in` = depthwise).
+    pub groups: usize,
+    /// Tap spacing (1 = ordinary convolution).
+    pub dilation: usize,
+    /// Audit the adjoint operator (transposed / "deconvolution") instead
+    /// of the forward mapping. Singular values are identical; the factors
+    /// and the operator shape swap.
+    pub transposed: bool,
     pub init: Init,
 }
 
@@ -53,17 +72,22 @@ impl LayerConfig {
             (h ^ b as u64).wrapping_mul(0x100000001b3)
         });
         let mut rng = Pcg64::new(seed, stream);
-        match self.init {
-            Init::He => ConvKernel::random_he(self.c_out, self.c_in, self.kh, self.kw, &mut rng),
-            Init::Glorot => {
-                ConvKernel::random_glorot(self.c_out, self.c_in, self.kh, self.kw, &mut rng)
-            }
-        }
+        // The kernel stores per-group input width (PyTorch OIHW grouped
+        // convention); He/Glorot fan-in is the per-group fan-in, which is
+        // what a grouped layer's forward pass actually sums over.
+        let cg = self.c_in / self.groups;
+        let k = match self.init {
+            Init::He => ConvKernel::random_he(self.c_out, cg, self.kh, self.kw, &mut rng),
+            Init::Glorot => ConvKernel::random_glorot(self.c_out, cg, self.kh, self.kw, &mut rng),
+        };
+        k.with_groups(self.groups).with_dilation(self.dilation).with_transposed(self.transposed)
     }
 
     /// Number of singular values this layer's mapping has. For stride `s`
     /// the dual grid is the coarse `(h/s)×(w/s)` torus and each frequency's
-    /// block is `c_out × s²·c_in`.
+    /// block is `c_out × s²·c_in`. Grouping does not change the count —
+    /// `groups` blocks of `min(c_out/g, s²·c_in/g)` values sum to
+    /// `min(c_out, s²·c_in)` — and transposition is rank-preserving.
     pub fn num_values(&self) -> usize {
         let s = self.stride;
         (self.height / s) * (self.width / s) * self.c_out.min(s * s * self.c_in)
@@ -132,6 +156,9 @@ impl ModelConfig {
                     "height" => p.height = Some(parse_usize(v, lineno)?),
                     "width" => p.width = Some(parse_usize(v, lineno)?),
                     "stride" => p.stride = Some(parse_usize(v, lineno)?),
+                    "groups" => p.groups = Some(parse_usize(v, lineno)?),
+                    "dilation" => p.dilation = Some(parse_usize(v, lineno)?),
+                    "transposed" => p.transposed = Some(parse_bool(v, lineno)?),
                     "init" => {
                         p.init = Some(match v {
                             "he" => Init::He,
@@ -169,6 +196,14 @@ fn parse_usize(v: &str, lineno: usize) -> Result<usize> {
     v.parse::<usize>().with_context(|| format!("line {}: bad integer {v}", lineno + 1))
 }
 
+fn parse_bool(v: &str, lineno: usize) -> Result<bool> {
+    match v {
+        "true" | "1" => Ok(true),
+        "false" | "0" => Ok(false),
+        _ => bail!("line {}: bad boolean {v} (expected true/false/1/0)", lineno + 1),
+    }
+}
+
 #[derive(Default)]
 struct PartialLayer {
     name: Option<String>,
@@ -179,6 +214,9 @@ struct PartialLayer {
     height: Option<usize>,
     width: Option<usize>,
     stride: Option<usize>,
+    groups: Option<usize>,
+    dilation: Option<usize>,
+    transposed: Option<bool>,
     init: Option<Init>,
 }
 
@@ -204,6 +242,18 @@ impl PartialLayer {
                 lineno + 1
             );
         }
+        let groups = self.groups.unwrap_or(1);
+        if groups == 0 || c_in % groups != 0 || c_out % groups != 0 {
+            bail!(
+                "layer before line {}: groups {groups} must be nonzero and divide \
+                 both c_in {c_in} and c_out {c_out}",
+                lineno + 1
+            );
+        }
+        let dilation = self.dilation.unwrap_or(1);
+        if dilation == 0 {
+            bail!("layer before line {}: dilation must be >= 1", lineno + 1);
+        }
         Ok(LayerConfig {
             name: self.name.unwrap_or_else(|| format!("layer{}", lineno)),
             c_in,
@@ -213,6 +263,9 @@ impl PartialLayer {
             height,
             width,
             stride,
+            groups,
+            dilation,
+            transposed: self.transposed.unwrap_or(false),
             init: self.init.unwrap_or(Init::He),
         })
     }
@@ -287,6 +340,47 @@ init   = "glorot"
         assert_eq!(m.layers[0].kh, 3, "kernel defaults to 3");
         assert_eq!(m.layers[0].stride, 1, "stride defaults to 1");
         assert_eq!(m.layers[0].init, Init::He);
+    }
+
+    #[test]
+    fn structured_layer_parses_and_materializes() {
+        let m = ModelConfig::parse(
+            "[[layer]]\nname = \"dw\"\nc_in = 8\nc_out = 8\nheight = 8\nwidth = 8\n\
+             groups = 8\ndilation = 2\ntransposed = true\n",
+        )
+        .unwrap();
+        let l = &m.layers[0];
+        assert_eq!((l.groups, l.dilation, l.transposed), (8, 2, true));
+        let k = l.materialize(0);
+        // Kernel stores per-group width: depthwise c_in/groups = 1.
+        assert_eq!((k.c_out, k.c_in, k.groups), (8, 1, 8));
+        assert_eq!(k.c_in_total(), 8);
+        assert_eq!((k.dilation, k.transposed), (2, true));
+        // Grouping does not change the value count: 8·8·min(8, 8) values.
+        assert_eq!(l.num_values(), 8 * 8 * 8);
+        // Defaults stay dense.
+        let d = ModelConfig::parse("[[layer]]\nc_in = 2\nc_out = 2\nheight = 4\nwidth = 4\n")
+            .unwrap();
+        let l = &d.layers[0];
+        assert_eq!((l.groups, l.dilation, l.transposed), (1, 1, false));
+        assert!(l.materialize(0).is_dense());
+        // groups must divide both channel counts; dilation must be >= 1.
+        assert!(ModelConfig::parse(
+            "[[layer]]\nc_in = 3\nc_out = 4\nheight = 4\nwidth = 4\ngroups = 2\n"
+        )
+        .is_err());
+        assert!(ModelConfig::parse(
+            "[[layer]]\nc_in = 4\nc_out = 3\nheight = 4\nwidth = 4\ngroups = 2\n"
+        )
+        .is_err());
+        assert!(ModelConfig::parse(
+            "[[layer]]\nc_in = 2\nc_out = 2\nheight = 4\nwidth = 4\ndilation = 0\n"
+        )
+        .is_err());
+        assert!(ModelConfig::parse(
+            "[[layer]]\nc_in = 2\nc_out = 2\nheight = 4\nwidth = 4\ntransposed = maybe\n"
+        )
+        .is_err());
     }
 
     #[test]

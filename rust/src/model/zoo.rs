@@ -15,8 +15,21 @@ fn layer(name: &str, c_in: usize, c_out: usize, hw: usize) -> LayerConfig {
         height: hw,
         width: hw,
         stride: 1,
+        groups: 1,
+        dilation: 1,
+        transposed: false,
         init: Init::He,
     }
+}
+
+/// Depthwise 3×3 layer (`groups = c`), the MobileNet building block.
+fn dw_layer(name: &str, c: usize, hw: usize) -> LayerConfig {
+    LayerConfig { groups: c, ..layer(name, c, c, hw) }
+}
+
+/// Pointwise 1×1 layer — the channel-mixing half of a separable block.
+fn pw_layer(name: &str, c_in: usize, c_out: usize, hw: usize) -> LayerConfig {
+    LayerConfig { kh: 1, kw: 1, ..layer(name, c_in, c_out, hw) }
 }
 
 /// The paper's benchmark shape: `c = 16` channels at a given resolution.
@@ -73,12 +86,33 @@ pub fn resnet20ish() -> ModelConfig {
     ModelConfig { name: "resnet20ish".into(), seed: 3, layers }
 }
 
+/// MobileNet-style stack on 32×32 inputs exercising every structured
+/// convolution the engine audits: depthwise-separable blocks (depthwise
+/// 3×3 + pointwise 1×1), a dilated context layer, and a transposed
+/// decoder layer.
+pub fn mobile_ish() -> ModelConfig {
+    ModelConfig {
+        name: "mobile-ish".into(),
+        seed: 4,
+        layers: vec![
+            layer("stem", 3, 8, 32),
+            dw_layer("block1.dw", 8, 32),
+            pw_layer("block1.pw", 8, 16, 32),
+            dw_layer("block2.dw", 16, 16),
+            pw_layer("block2.pw", 16, 32, 16),
+            LayerConfig { dilation: 2, ..layer("context.dilated", 32, 32, 16) },
+            LayerConfig { transposed: true, ..layer("decoder.up", 32, 16, 16) },
+        ],
+    }
+}
+
 /// Look up a builtin by name.
 pub fn builtin(name: &str) -> Option<ModelConfig> {
     match name {
         "lenet" => Some(lenet()),
         "vgg-small" => Some(vgg_small()),
         "resnet20ish" => Some(resnet20ish()),
+        "mobile-ish" => Some(mobile_ish()),
         _ => name
             .strip_prefix("paper-c16-n")
             .and_then(|n| n.parse().ok())
@@ -88,7 +122,7 @@ pub fn builtin(name: &str) -> Option<ModelConfig> {
 
 /// Names of all builtins (for `--help`).
 pub fn builtin_names() -> &'static [&'static str] {
-    &["lenet", "vgg-small", "resnet20ish", "paper-c16-n<N>"]
+    &["lenet", "vgg-small", "resnet20ish", "mobile-ish", "paper-c16-n<N>"]
 }
 
 #[cfg(test)]
@@ -100,7 +134,26 @@ mod tests {
         assert_eq!(builtin("lenet").unwrap().layers.len(), 2);
         assert_eq!(builtin("resnet20ish").unwrap().layers.len(), 19);
         assert_eq!(builtin("paper-c16-n64").unwrap().layers[0].height, 64);
+        assert_eq!(builtin("mobile-ish").unwrap().layers.len(), 7);
         assert!(builtin("nope").is_none());
+    }
+
+    #[test]
+    fn mobile_ish_is_structured_and_materializes() {
+        let m = mobile_ish();
+        assert!(m.layers.iter().any(|l| l.groups > 1), "has a depthwise layer");
+        assert!(m.layers.iter().any(|l| l.dilation > 1), "has a dilated layer");
+        assert!(m.layers.iter().any(|l| l.transposed), "has a transposed layer");
+        for l in &m.layers {
+            assert_eq!(l.c_in % l.groups, 0);
+            assert_eq!(l.c_out % l.groups, 0);
+            let k = l.materialize(m.seed);
+            assert_eq!(k.c_in_total(), l.c_in);
+            assert_eq!(k.c_out, l.c_out);
+        }
+        // Depthwise block: per-group width 1 ⇒ scalar per-group symbols.
+        let dw = m.layers.iter().find(|l| l.groups > 1).unwrap();
+        assert_eq!(dw.materialize(m.seed).c_in, 1);
     }
 
     #[test]

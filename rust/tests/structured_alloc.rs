@@ -1,0 +1,90 @@
+//! Allocation discipline of the structured (block-diagonal / dilated /
+//! adjoint) engine paths: after a warm-up execution has populated the
+//! workspace pool — including the per-group merge buffer the grouped
+//! top-k sweep uses — `execute_into` / `execute_topk_into` on structured
+//! plans perform **zero heap allocation**, exactly like the dense paths
+//! pinned in `engine_alloc.rs`. Kept in its own file (with its own
+//! counting global allocator) so unrelated parallel tests cannot perturb
+//! the counter windows.
+
+use conv_svd_lfa::conv::ConvKernel;
+use conv_svd_lfa::engine::SpectralPlan;
+use conv_svd_lfa::lfa::{Fold, LfaOptions};
+use conv_svd_lfa::numeric::Pcg64;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn structured_kernels(rng: &mut Pcg64) -> Vec<(&'static str, ConvKernel)> {
+    vec![
+        ("grouped g2", ConvKernel::random_he(4, 2, 3, 3, rng).with_groups(2)),
+        ("depthwise", ConvKernel::random_he(4, 1, 3, 3, rng).with_groups(4)),
+        ("dilated d2", ConvKernel::random_he(4, 4, 3, 3, rng).with_dilation(2)),
+        ("transposed", ConvKernel::random_he(4, 3, 3, 3, rng).with_transposed(true)),
+    ]
+}
+
+fn assert_structured_zero_alloc(tag: &str, k: &ConvKernel, folding: Fold) {
+    let opts = LfaOptions { threads: 1, folding, ..Default::default() };
+    let plan = SpectralPlan::new(k, 8, 8, opts);
+    let mut out = vec![0.0f64; plan.values_len()];
+    // Warm-up: the pool (and the grouped merge buffer) may grow once.
+    plan.execute_into(&mut out);
+    let before = ALLOCS.load(Ordering::SeqCst);
+    plan.execute_into(&mut out);
+    plan.execute_into(&mut out);
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "{tag} {folding:?}: {} allocation(s) in warmed-up structured execute_into",
+        after - before
+    );
+    assert!(out.iter().all(|v| v.is_finite() && *v >= 0.0));
+
+    let mut tout = vec![0.0f64; plan.topk_values_len(2)];
+    plan.execute_topk_into(2, &mut tout);
+    let before = ALLOCS.load(Ordering::SeqCst);
+    plan.execute_topk_into(2, &mut tout);
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "{tag} {folding:?}: {} allocation(s) in warmed-up structured execute_topk_into",
+        after - before
+    );
+    assert!(tout.iter().all(|v| v.is_finite() && *v >= 0.0));
+}
+
+// One test, sequential scenarios: the harness runs #[test] fns on separate
+// threads, and concurrent tests would pollute each other's counter windows.
+#[test]
+fn structured_execution_is_allocation_free_after_warmup() {
+    let mut rng = Pcg64::seeded(9200);
+    for (tag, k) in structured_kernels(&mut rng) {
+        assert_structured_zero_alloc(tag, &k, Fold::Auto);
+        assert_structured_zero_alloc(tag, &k, Fold::Off);
+    }
+}
