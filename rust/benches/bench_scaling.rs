@@ -18,7 +18,10 @@
 //! conjugate half — the **SpectralCache cold-vs-warm margin**: a
 //! repeat audit of an unchanged model served entirely from the
 //! content-addressed result cache (zero frequencies re-solved) vs the
-//! cold sweep that populates it — the **simd-vs-scalar margin**: the
+//! cold sweep that populates it — the **disk-cold-vs-disk-warm
+//! margin**: the same repeat audit after losing the memory tier (the
+//! daemon-restart scenario), served from checksummed spill files vs
+//! re-sweeping and re-spilling — the **simd-vs-scalar margin**: the
 //! runtime-detected AVX2+FMA complex kernels against the bit-identical
 //! forced-scalar fallback on the same plan (full + top-k, serial +
 //! threaded, with a verdict line) — the **f32-vs-f64 precision
@@ -38,7 +41,7 @@
 use conv_svd_lfa::baselines::{explicit_svd, fft_svd, FftLayoutPolicy};
 use conv_svd_lfa::bench_util::{bench_opts, JsonLines};
 use conv_svd_lfa::conv::{Boundary, ConvKernel};
-use conv_svd_lfa::engine::{resolve_threads, ModelPlan, SpectralCache, SpectralPlan};
+use conv_svd_lfa::engine::{resolve_threads, DiskCache, ModelPlan, SpectralCache, SpectralPlan};
 use conv_svd_lfa::lfa::{self, Fold, LfaOptions, Precision};
 use conv_svd_lfa::model::{Init, LayerConfig, ModelConfig};
 use conv_svd_lfa::numeric::{active_kernel_name, set_force_scalar, Pcg64};
@@ -391,6 +394,62 @@ fn main() {
         )
     };
 
+    // --- Disk tier: disk-cold vs disk-warm repeat audits ---
+    // The daemon-restart scenario: a warm *process* serves repeats from
+    // the in-memory LRU (cache-warm above); a warm *spill directory*
+    // serves a fresh process that lost its memory tier. disk-cold purges
+    // the spill files and drops the memory results every iteration, so
+    // the measured time includes the sweep plus the checksummed spill
+    // writes; disk-warm drops only the memory results, so every layer
+    // comes back through a validated disk read and re-solves zero
+    // frequencies — asserted, not assumed.
+    let disk_dir = std::env::temp_dir().join(format!("lfa-bench-spill-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&disk_dir);
+    let mut disk_rows: Vec<[String; 4]> = Vec::new();
+    let disk_verdict = {
+        let cache =
+            SpectralCache::new().with_disk(DiskCache::open(&disk_dir).expect("bench spill dir"));
+        let cplan =
+            ModelPlan::build_cached(&cache_model, serial(), &cache).expect("valid model");
+        let m = bench.measure("disk-cold", || {
+            cache.clear_results();
+            cache.disk().expect("disk tier attached").purge();
+            cplan.execute_cached(&cache).freqs_solved
+        });
+        json.record_measurement(&format!("disk-cold {cd}xc{cc} n={cn}"), &m);
+        let t_cold = m.min().as_secs_f64();
+        // The last cold iteration left its spill files behind: drop the
+        // memory tier and pin the restart-shaped zero-work invariant.
+        cache.clear_results();
+        let probe = cplan.execute_cached(&cache);
+        assert_eq!(probe.freqs_solved, 0, "disk-warm repeat must re-solve zero frequencies");
+        assert_eq!(
+            probe.cache_hits,
+            cplan.layer_count(),
+            "disk-warm repeat must serve every layer from the spill files"
+        );
+        let m = bench.measure("disk-warm", || {
+            cache.clear_results();
+            cplan.execute_cached(&cache).cache_hits
+        });
+        json.record_measurement(&format!("disk-warm {cd}xc{cc} n={cn}"), &m);
+        let t_warm = m.min().as_secs_f64();
+        let speedup = t_cold / t_warm.max(1e-12);
+        disk_rows.push([
+            format!("{cd}x c{cc} n={cn}"),
+            format!("{:.3} ms", t_cold * 1e3),
+            format!("{:.3} ms", t_warm * 1e3),
+            format!("{speedup:.2}x"),
+        ]);
+        format!(
+            "disk verdict: {cd}x c{cc} n={cn} — disk-warm restart audit {speedup:.2}x faster \
+             than disk-cold (target: faster than the cold sweep it replaces; \
+             {}/{cd} layers read back from spill files, 0 frequencies re-solved)",
+            probe.cache_hits
+        )
+    };
+    let _ = std::fs::remove_dir_all(&disk_dir);
+
     // --- SIMD & precision: vectorized kernels vs forced scalar, f32 vs f64 ---
     // The acceptance case is a 64-channel full sweep, where the O(c³)
     // per-frequency complex kernels (split-complex phase multiply, Gram
@@ -672,6 +731,14 @@ fn main() {
     }
     print!("{}", ctable.render());
     println!("{cache_verdict}");
+
+    println!("\n# Disk tier — disk-cold vs disk-warm restart audit (persistent spill files)");
+    let mut dtable = Table::new(["workload", "disk-cold (sweep+spill)", "disk-warm (reads)", "speedup"]);
+    for row in disk_rows {
+        dtable.row(row);
+    }
+    print!("{}", dtable.render());
+    println!("{disk_verdict}");
 
     println!("\n# SIMD — AVX2+FMA complex kernels vs forced scalar (simd-vs-scalar)");
     let mut stable = Table::new(["workload", "forced scalar", "auto", "speedup", "kernel"]);

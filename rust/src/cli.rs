@@ -27,7 +27,7 @@ COMMANDS
                [--artifacts DIR] [--top-k K] [--no-fold] [--csv]
                [--groups G] [--dilation D] [--transposed]
                [--precision f64|f32|f32-refined]
-               [--cache-bytes N] [--no-cache]
+               [--cache-bytes N] [--no-cache] [--disk-cache-dir DIR]
                Analyze all conv layers of a model through the coordinator
                service (one planned model job, tiled across the worker
                pool). With --top-k K, tiles compute only the K largest
@@ -45,7 +45,7 @@ COMMANDS
   audit-model  <builtin-or-config.toml> [--threads T] [--solver jacobi|gram]
                [--top J] [--top-k K] [--no-fold] [--csv] [--repeat R]
                [--precision f64|f32|f32-refined]
-               [--cache-bytes N] [--no-cache]
+               [--cache-bytes N] [--no-cache] [--disk-cache-dir DIR]
                Whole-model spectral report straight off a ModelPlan: every
                layer planned once, equal-shape layers batched into shared
                workspace groups, executed as one sweep. Emits the per-layer
@@ -64,6 +64,31 @@ COMMANDS
                structured variant in one model.
   compare      --n <N> [--c C] [--threads T] [--with-explicit]
                LFA vs FFT (vs explicit) runtimes + agreement on one layer.
+  serve        [--addr HOST:PORT] [--threads T] [--max-inflight J]
+               [--tenant-quota Q] [--request-timeout-ms MS]
+               [--io-timeout-ms MS] [--quantum U] [--allow-remote]
+               [--cache-bytes N] [--no-cache] [--disk-cache-dir DIR]
+               [--precision f64|f32|f32-refined] [--no-fold]
+               Run lfa-convd, the long-running spectral-audit daemon
+               (built with the default `daemon` feature): a TCP line
+               protocol over the coordinator service — PING, SUBMIT
+               <tenant> <model> [top-k=K], POLL <id>, WAIT <id>,
+               METRICS, STATS, QUIT, SHUTDOWN — plus plain-HTTP
+               GET /metrics for scrapers. Every SUBMIT names a tenant;
+               a tenant holding --tenant-quota jobs queued + running
+               (default 8) gets a typed backpressure reply (ERR quota
+               tenant=T pending=P limit=Q) instead of queueing deeper,
+               and admitted jobs dispatch in deficit-round-robin order
+               weighted by layer count, so a flooding tenant cannot
+               starve a well-behaved one. Jobs expire after
+               --request-timeout-ms (default 30000) — still-queued jobs
+               are cancelled unrun, late results discarded — and idle
+               connections close after --io-timeout-ms (default 10000).
+               The daemon binds loopback (default 127.0.0.1:7733) and
+               refuses routable addresses unless --allow-remote; all
+               clients share one warm result cache, so point
+               --disk-cache-dir at a persistent directory to keep that
+               warmth across restarts.
   artifacts    [--dir DIR] [--run NAME]
                List AOT artifacts; optionally execute one via PJRT
                (requires a build with --features pjrt).
@@ -106,6 +131,16 @@ repeat audits of unchanged layers are served from an LRU cache without
 re-solving a single frequency. The `cache: H hits / M misses / E
 evictions` report line shows the traffic; --cache-bytes N caps the result
 cache (0 = the default budget) and --no-cache disables caching entirely.
+
+--disk-cache-dir DIR adds a persistent tier below the in-memory LRU: every
+computed spectrum is written through to a checksummed, versioned spill
+file content-addressed by the same weight-bit signature, and read back in
+later processes — a repeat audit after a restart re-solves zero
+frequencies and returns bit-identical singular values. Spill files that
+fail validation (truncated, bit-flipped, wrong version) are quarantined:
+deleted, counted in the disk_corruptions metric, and never served. The
+tier requires the result cache (combining it with --no-cache is an
+error) and degrades to memory-only with a warning if DIR is unusable.
 ";
 
 /// Parsed command line: subcommand, positionals, `--key value` / `--flag`
@@ -221,7 +256,7 @@ mod tests {
     fn help_documents_every_command() {
         // The commands main.rs dispatches on; `audit-model` usage
         // (ModelPlan-backed whole-model report) is pinned here too.
-        for cmd in ["analyze", "audit", "audit-model", "compare", "artifacts", "help"] {
+        for cmd in ["analyze", "audit", "audit-model", "compare", "serve", "artifacts", "help"] {
             assert!(HELP.contains(cmd), "HELP must document {cmd:?}");
         }
         for detail in ["--solver jacobi|gram", "ModelPlan", "stride", "Lipschitz"] {
@@ -279,6 +314,39 @@ mod tests {
             "structured layers always route native",
         ] {
             assert!(HELP.contains(detail), "HELP must document structured convs: {detail:?}");
+        }
+        // The daemon: usage line, the line protocol, multi-tenant fair
+        // queueing with typed backpressure, and the loopback-only default.
+        for detail in [
+            "serve        [--addr HOST:PORT]",
+            "SUBMIT",
+            "POLL <id>, WAIT <id>",
+            "SHUTDOWN",
+            "GET /metrics",
+            "ERR quota\n               tenant=T pending=P limit=Q",
+            "deficit-round-robin",
+            "--tenant-quota",
+            "--request-timeout-ms",
+            "--io-timeout-ms",
+            "--allow-remote",
+            "127.0.0.1:7733",
+        ] {
+            assert!(HELP.contains(detail), "HELP must document the daemon: {detail:?}");
+        }
+        // The persistent disk tier: the knob on audit, audit-model and
+        // serve, plus the prose pinning its hard guarantees.
+        assert!(
+            HELP.matches("--disk-cache-dir DIR").count() >= 4,
+            "HELP must document --disk-cache-dir on audit, audit-model, serve and the prose"
+        );
+        for detail in [
+            "spill",
+            "bit-identical",
+            "quarantined",
+            "disk_corruptions",
+            "re-solves zero\nfrequencies",
+        ] {
+            assert!(HELP.contains(detail), "HELP must document the disk tier: {detail:?}");
         }
     }
 }

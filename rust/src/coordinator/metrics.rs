@@ -42,6 +42,17 @@ pub struct MetricsSnapshot {
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub cache_evictions: u64,
+    /// Disk-tier lookups served from a valid spill file (0 unless a
+    /// `disk_cache_dir` is configured). Filled in by
+    /// [`crate::coordinator::SpectralService::metrics`] from the cache's
+    /// own counters — the `Metrics` struct stays purely scheduler-side.
+    pub disk_hits: u64,
+    /// Disk-tier lookups that found no spill file.
+    pub disk_misses: u64,
+    /// Spectra newly spilled to disk.
+    pub disk_spills: u64,
+    /// Spill files that failed validation and were quarantined.
+    pub disk_corruptions: u64,
 }
 
 impl Metrics {
@@ -70,6 +81,10 @@ impl Metrics {
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
             cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
+            disk_hits: 0,
+            disk_misses: 0,
+            disk_spills: 0,
+            disk_corruptions: 0,
         }
     }
 }

@@ -10,9 +10,13 @@
 pub mod job;
 pub mod metrics;
 pub mod scheduler;
+#[cfg(feature = "daemon")]
+pub mod server;
 pub mod service;
 
 pub use job::{Backend, JobSpec, ModelJobSpec, Tile};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use scheduler::{JobResult, LayerOutcome, ModelJobResult, Scheduler, SchedulerConfig};
+#[cfg(feature = "daemon")]
+pub use server::{serve, DaemonConfig, DaemonHandle, FairQueue, QuotaExceeded};
 pub use service::{analyze, LayerReport, ServiceConfig, SpectralService};

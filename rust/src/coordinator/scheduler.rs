@@ -44,10 +44,14 @@ use super::metrics::Metrics;
 use crate::engine::{
     resolve_threads, ModelPlan, Signature, SpectralCache, SpectralPlan, SpectrumRequest,
 };
+use crate::engine::DiskCache;
 use crate::err;
 use crate::error::Result;
 use crate::lfa::{self, LfaOptions, Precision};
 use crate::runtime::{ArtifactSpec, PjrtExecutor};
+use crate::testing::chaos;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -71,6 +75,14 @@ pub struct SchedulerConfig {
     /// uncacheable shape is an explicit-PJRT job with no matching artifact,
     /// which contractually fails instead of computing.
     pub cache_bytes: Option<usize>,
+    /// Directory for the persistent disk tier below the in-memory LRU
+    /// ([`crate::engine::DiskCache`]): computed spectra are written
+    /// through to checksummed spill files and read back across process
+    /// restarts. `None` (the default) keeps the cache memory-only;
+    /// ignored when caching is disabled (`cache_bytes: None`). If the
+    /// directory cannot be created the scheduler degrades to memory-only
+    /// with a warning rather than refusing to start.
+    pub disk_cache_dir: Option<PathBuf>,
 }
 
 impl SchedulerConfig {
@@ -89,7 +101,13 @@ impl SchedulerConfig {
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        Self { workers: 0, queue_depth: 0, artifacts: Vec::new(), cache_bytes: Some(0) }
+        Self {
+            workers: 0,
+            queue_depth: 0,
+            artifacts: Vec::new(),
+            cache_bytes: Some(0),
+            disk_cache_dir: None,
+        }
     }
 }
 
@@ -224,7 +242,18 @@ impl Scheduler {
     pub fn start(config: SchedulerConfig, executor: Option<PjrtExecutor>) -> Self {
         let mut config = config;
         config.workers = resolve_threads(config.workers);
-        let cache = config.cache_bytes.map(|b| Arc::new(SpectralCache::with_budget_or_default(b)));
+        let cache = config.cache_bytes.map(|b| {
+            let mut cache = SpectralCache::with_budget_or_default(b);
+            if let Some(dir) = &config.disk_cache_dir {
+                match DiskCache::open(dir) {
+                    Ok(disk) => cache = cache.with_disk(disk),
+                    Err(e) => eprintln!(
+                        "warning: disk cache tier disabled (falling back to memory-only): {e}"
+                    ),
+                }
+            }
+            Arc::new(cache)
+        });
         let (work_tx, work_rx) =
             mpsc::sync_channel::<Work>(config.effective_queue_depth().max(1) * 4);
         let work_rx = Arc::new(Mutex::new(work_rx));
@@ -652,7 +681,20 @@ fn worker_loop(
         match work {
             Ok(Work::Tile { state, tile }) => {
                 let t0 = Instant::now();
-                let outcome = run_tile(&state, &tile, executor.as_ref());
+                // A panicking tile (solver bug, chaos injection) must fail
+                // its *job* with a typed error, not silently kill this
+                // worker thread and hang the submitter forever.
+                let outcome =
+                    catch_unwind(AssertUnwindSafe(|| run_tile(&state, &tile, executor.as_ref())))
+                        .unwrap_or_else(|payload| {
+                            Err(err!(
+                                "job {}: worker panicked mid-tile (rows {}..{}): {}",
+                                state.spec.id,
+                                tile.row_lo,
+                                tile.row_hi,
+                                panic_message(payload.as_ref())
+                            ))
+                        });
                 let used_pjrt = matches!(outcome, Ok(true));
                 match outcome {
                     Ok(_) => {
@@ -674,7 +716,19 @@ fn worker_loop(
             }
             Ok(Work::ModelTile { state, layer, row_lo, row_hi }) => {
                 let t0 = Instant::now();
-                let outcome = run_model_tile(&state, layer, row_lo, row_hi, executor.as_ref());
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    run_model_tile(&state, layer, row_lo, row_hi, executor.as_ref())
+                }))
+                .unwrap_or_else(|payload| {
+                    Err(err!(
+                        "model job {}: worker panicked mid-tile (layer {:?}, rows {}..{}): {}",
+                        state.spec.id,
+                        state.plan.layer_name(layer),
+                        row_lo,
+                        row_hi,
+                        panic_message(payload.as_ref())
+                    ))
+                });
                 match outcome {
                     Ok(used_pjrt) => {
                         let lp = state.plan.layer_plan(layer);
@@ -737,9 +791,27 @@ fn pjrt_tile_values(
     Ok(vals)
 }
 
+/// Stringify a caught panic payload for the typed job error.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Execute one tile. Returns Ok(true) if it ran via PJRT.
 fn run_tile(state: &JobState, tile: &Tile, executor: Option<&PjrtExecutor>) -> Result<bool> {
     let spec = &state.spec;
+    // Fault-injection points for the chaos suite (free when disarmed).
+    if chaos::fire(chaos::TILE_PANIC) {
+        panic!("chaos: injected tile panic (job {})", spec.id);
+    }
+    if chaos::fire(chaos::TILE_ERROR) {
+        return Err(err!("job {}: chaos: injected tile failure", spec.id));
+    }
     let r = spec.rank();
     let (values, used_pjrt): (Vec<f64>, bool) = match (&state.artifact, executor) {
         (Some(art), Some(exec)) => {
@@ -779,7 +851,10 @@ fn run_tile(state: &JobState, tile: &Tile, executor: Option<&PjrtExecutor>) -> R
         }
     };
     let base = tile.row_lo * spec.m * r;
-    let mut buf = state.values.lock().expect("values poisoned");
+    // Poison-tolerant: a tile that panicked while holding this lock has
+    // already failed its job (catch_unwind → typed error); later tiles of
+    // *other* jobs must keep working, not cascade the panic.
+    let mut buf = state.values.lock().unwrap_or_else(|e| e.into_inner());
     buf[base..base + values.len()].copy_from_slice(&values);
     Ok(used_pjrt)
 }
@@ -793,6 +868,13 @@ fn run_model_tile(
     row_hi: usize,
     executor: Option<&PjrtExecutor>,
 ) -> Result<bool> {
+    // Fault-injection points for the chaos suite (free when disarmed).
+    if chaos::fire(chaos::TILE_PANIC) {
+        panic!("chaos: injected tile panic (model job {})", state.spec.id);
+    }
+    if chaos::fire(chaos::TILE_ERROR) {
+        return Err(err!("model job {}: chaos: injected tile failure", state.spec.id));
+    }
     let lp = state.plan.layer_plan(layer);
     let r = state.values_per_freq[layer];
     let mc = lp.coarse_cols();
@@ -852,13 +934,16 @@ fn run_model_tile(
         }
     };
     let base = state.offsets[layer] + row_lo * mc * r;
-    let mut buf = state.values.lock().expect("values poisoned");
+    // Poison-tolerant: a tile that panicked while holding this lock has
+    // already failed its job (catch_unwind → typed error); later tiles of
+    // *other* jobs must keep working, not cascade the panic.
+    let mut buf = state.values.lock().unwrap_or_else(|e| e.into_inner());
     buf[base..base + values.len()].copy_from_slice(&values);
     Ok(used_pjrt)
 }
 
 fn finish_model_job(state: &ModelJobState, metrics: &Metrics) {
-    let mut values = std::mem::take(&mut *state.values.lock().expect("values poisoned"));
+    let mut values = std::mem::take(&mut *state.values.lock().unwrap_or_else(|e| e.into_inner()));
     // Mirror the conjugate halves of folded native layers in, and account
     // the mirrored values as delivered (matching the per-layer job path).
     // Cache-hit layers were never tiled: their values ship from the cache
@@ -935,7 +1020,7 @@ fn finish_model_job(state: &ModelJobState, metrics: &Metrics) {
 
 fn finish_job(state: &JobState, metrics: &Metrics) {
     let spec = &state.spec;
-    let mut values = std::mem::take(&mut *state.values.lock().expect("values poisoned"));
+    let mut values = std::mem::take(&mut *state.values.lock().unwrap_or_else(|e| e.into_inner()));
     if let Some(plan) = state.plan.as_ref() {
         if plan.folded() {
             // The tiles covered the fundamental domain of θ → −θ; mirror

@@ -1,0 +1,957 @@
+//! `lfa-convd` — the long-running spectral-audit daemon (feature
+//! `daemon`, on by default; the CLI's `serve` subcommand).
+//!
+//! The ROADMAP's "millions of users" need more than the in-process
+//! [`SpectralService`]: a server that survives between audits, shares one
+//! warm [`crate::engine::SpectralCache`] (plus its persistent disk tier)
+//! across all clients, and keeps one flooding tenant from starving the
+//! rest. This module is that server, std-only:
+//!
+//! - **Loopback TCP front-end** with a minimal line protocol (one request
+//!   line, one reply line — trivially scriptable from shell/python) plus a
+//!   plain-HTTP `GET /metrics` endpoint rendered from
+//!   [`super::MetricsSnapshot`] for scrapers.
+//! - **Per-tenant admission control**: each `SUBMIT` names a tenant; a
+//!   tenant with `tenant_quota` jobs already queued + running is rejected
+//!   with a *typed* backpressure reply (`ERR quota tenant=… pending=…
+//!   limit=…`) instead of being queued behind everyone else's flood.
+//! - **Deficit-round-robin fair queueing** ([`FairQueue`]): admitted jobs
+//!   are dispatched to the scheduler in DRR order — each round, every
+//!   tenant's deficit counter grows by one quantum and a tenant may spend
+//!   its deficit on jobs (cost = layer count), so tenants get equal
+//!   *cost* shares no matter how asymmetric their submission rates are,
+//!   and a well-behaved tenant's job is served within a bounded number of
+//!   rounds of arriving.
+//! - **Request timeouts with cancellation**: every job carries a deadline;
+//!   a job still queued past it is cancelled without running, a job that
+//!   finishes past it reports `ERR timeout` and its result is discarded.
+//!   Connections that go quiet are closed after `io_timeout`
+//!   (slow-consumer protection); a client disconnecting mid-request
+//!   leaves the daemon — and its submitted jobs, pollable from any new
+//!   connection — untouched.
+//!
+//! ### Protocol
+//!
+//! ```text
+//! >> PING
+//! << PONG
+//! >> SUBMIT tenant-a lenet [top-k=K]          (builtin name or config.toml path)
+//! << QUEUED id=1 tenant=tenant-a cost=2       | ERR quota tenant=… pending=… limit=…
+//! >> POLL 1
+//! << PENDING id=1 | RUNNING id=1 | DONE id=1 layers=… sigma_max=… solved=… cached=… elapsed_ms=…
+//!    | ERR timeout id=1 | ERR failed id=1 … | ERR unknown-job id=1
+//! >> WAIT 1                                   (blocks until terminal or deadline)
+//! << DONE id=1 …
+//! >> METRICS                                  (one line of key=value pairs)
+//! >> STATS                                    (cache + disk-tier counters)
+//! >> RESUME                                   (release a start_paused daemon)
+//! >> QUIT | SHUTDOWN
+//! GET /metrics HTTP/1.1                       (plain-HTTP scrape: lfa_* lines)
+//! ```
+//!
+//! The daemon trusts its socket (bind it to loopback, the default): model
+//! tokens may name builtin zoo models or readable TOML config paths.
+
+use super::service::{ServiceConfig, SpectralService};
+use crate::engine::SpectrumRequest;
+use crate::error::{Context, Result};
+use crate::model::config::ModelConfig;
+use crate::model::zoo;
+use crate::{bail, err};
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Daemon configuration ([`serve`]).
+#[derive(Clone)]
+pub struct DaemonConfig {
+    /// The wrapped service (workers, precision, cache budget,
+    /// `disk_cache_dir`, `tenant_quota`, …).
+    pub service: ServiceConfig,
+    /// Bind address; use port 0 to let the OS pick (the bound address is
+    /// on [`DaemonHandle::addr`]). Keep it loopback — the protocol is
+    /// unauthenticated by design.
+    pub addr: String,
+    /// Concurrent jobs dispatched into the scheduler (runner threads);
+    /// 0 = default (2). The scheduler's own worker pool parallelizes
+    /// *within* a job; this bounds cross-job concurrency.
+    pub max_inflight: usize,
+    /// Per-job deadline measured from admission (zero = default 30 s).
+    pub request_timeout: Duration,
+    /// Socket idle/read timeout — a connection that sends nothing for
+    /// this long gets a slow-consumer reply and is closed (zero =
+    /// default 10 s).
+    pub io_timeout: Duration,
+    /// DRR quantum in cost units (cost = a job's layer count); 0 =
+    /// default (8). Larger quanta let expensive multi-layer jobs through
+    /// in fewer rounds at slightly coarser interleaving.
+    pub quantum: usize,
+    /// Start with dispatch held: jobs are admitted (quota decisions are
+    /// made) but nothing runs until a `RESUME` command. Admission
+    /// decisions made while paused depend only on arrival order — the
+    /// fairness suite uses this to prove serial and threaded schedulers
+    /// admit identically.
+    pub start_paused: bool,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        Self {
+            service: ServiceConfig::default(),
+            addr: "127.0.0.1:0".to_string(),
+            max_inflight: 0,
+            request_timeout: Duration::ZERO,
+            io_timeout: Duration::ZERO,
+            quantum: 0,
+            start_paused: false,
+        }
+    }
+}
+
+impl DaemonConfig {
+    const DEFAULT_MAX_INFLIGHT: usize = 2;
+    const DEFAULT_REQUEST_TIMEOUT: Duration = Duration::from_secs(30);
+    const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(10);
+    const DEFAULT_QUANTUM: usize = 8;
+
+    fn effective_max_inflight(&self) -> usize {
+        if self.max_inflight == 0 {
+            Self::DEFAULT_MAX_INFLIGHT
+        } else {
+            self.max_inflight
+        }
+    }
+
+    fn effective_request_timeout(&self) -> Duration {
+        if self.request_timeout.is_zero() {
+            Self::DEFAULT_REQUEST_TIMEOUT
+        } else {
+            self.request_timeout
+        }
+    }
+
+    fn effective_io_timeout(&self) -> Duration {
+        if self.io_timeout.is_zero() {
+            Self::DEFAULT_IO_TIMEOUT
+        } else {
+            self.io_timeout
+        }
+    }
+
+    fn effective_quantum(&self) -> usize {
+        if self.quantum == 0 {
+            Self::DEFAULT_QUANTUM
+        } else {
+            self.quantum
+        }
+    }
+}
+
+/// Typed admission rejection ([`FairQueue::try_enqueue`]) — the payload of
+/// the `ERR quota` backpressure reply.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QuotaExceeded {
+    /// The tenant that was rejected (quotas are strictly per-tenant: one
+    /// tenant flooding never consumes another's admission budget).
+    pub tenant: String,
+    /// Jobs this tenant already has queued + running.
+    pub pending: usize,
+    /// The per-tenant quota that was hit.
+    pub quota: usize,
+}
+
+struct TenantState {
+    name: String,
+    /// FIFO of admitted jobs: (job id, cost).
+    queue: VecDeque<(u64, usize)>,
+    /// DRR deficit counter (cost units this tenant may spend).
+    deficit: usize,
+    /// Jobs popped but not yet completed.
+    in_flight: usize,
+}
+
+/// Deficit-round-robin fair queue with per-tenant admission quotas.
+///
+/// Deterministic by construction: decisions depend only on the sequence
+/// of `try_enqueue` / `next` / `complete` calls (tenant order is
+/// registration order, ties break by round-robin cursor) — never on
+/// thread timing — so a serial and a threaded scheduler given the same
+/// call sequence admit and dispatch identically. Exposed `pub` for the
+/// fairness property suite (`tests/fairness.rs`).
+pub struct FairQueue {
+    quota: usize,
+    quantum: usize,
+    tenants: Vec<TenantState>,
+    index: HashMap<String, usize>,
+    cursor: usize,
+}
+
+impl FairQueue {
+    /// `quota` = max queued + running jobs per tenant; `quantum` = DRR
+    /// refill per round (cost units). Both are clamped to ≥ 1.
+    pub fn new(quota: usize, quantum: usize) -> Self {
+        Self {
+            quota: quota.max(1),
+            quantum: quantum.max(1),
+            tenants: Vec::new(),
+            index: HashMap::new(),
+            cursor: 0,
+        }
+    }
+
+    fn tenant_index(&mut self, tenant: &str) -> usize {
+        if let Some(&i) = self.index.get(tenant) {
+            return i;
+        }
+        self.tenants.push(TenantState {
+            name: tenant.to_string(),
+            queue: VecDeque::new(),
+            deficit: 0,
+            in_flight: 0,
+        });
+        self.index.insert(tenant.to_string(), self.tenants.len() - 1);
+        self.tenants.len() - 1
+    }
+
+    /// Admit a job, or reject it with the typed quota error. `cost` is
+    /// the job's DRR weight (layer count; clamped to ≥ 1).
+    pub fn try_enqueue(
+        &mut self,
+        tenant: &str,
+        id: u64,
+        cost: usize,
+    ) -> std::result::Result<(), QuotaExceeded> {
+        let quota = self.quota;
+        let i = self.tenant_index(tenant);
+        let t = &mut self.tenants[i];
+        let pending = t.queue.len() + t.in_flight;
+        if pending >= quota {
+            return Err(QuotaExceeded { tenant: tenant.to_string(), pending, quota });
+        }
+        t.queue.push_back((id, cost.max(1)));
+        Ok(())
+    }
+
+    /// Pop the next job in DRR order: the cursor sweeps tenants round-
+    /// robin; visiting a non-empty tenant refills its deficit by one
+    /// quantum, and the tenant serves its FIFO head once the deficit
+    /// covers the head's cost. Idle tenants forfeit their deficit
+    /// (standard DRR — credit must not accumulate while a queue is
+    /// empty). Returns `None` only when every queue is empty; otherwise
+    /// termination is guaranteed because some deficit grows every round.
+    pub fn pop(&mut self) -> Option<(u64, String)> {
+        if self.tenants.iter().all(|t| t.queue.is_empty()) {
+            return None;
+        }
+        let n = self.tenants.len();
+        loop {
+            let i = self.cursor % n;
+            self.cursor = (self.cursor + 1) % n;
+            let t = &mut self.tenants[i];
+            if t.queue.is_empty() {
+                t.deficit = 0;
+                continue;
+            }
+            t.deficit = t.deficit.saturating_add(self.quantum);
+            let head_cost = t.queue.front().expect("non-empty queue").1;
+            if t.deficit >= head_cost {
+                let (id, cost) = t.queue.pop_front().expect("non-empty queue");
+                t.deficit -= cost;
+                if t.queue.is_empty() {
+                    t.deficit = 0;
+                }
+                t.in_flight += 1;
+                return Some((id, t.name.clone()));
+            }
+        }
+    }
+
+    /// Mark one of `tenant`'s in-flight jobs finished (frees quota).
+    pub fn complete(&mut self, tenant: &str) {
+        if let Some(&i) = self.index.get(tenant) {
+            let t = &mut self.tenants[i];
+            t.in_flight = t.in_flight.saturating_sub(1);
+        }
+    }
+
+    /// Jobs `tenant` has queued + running.
+    pub fn pending(&self, tenant: &str) -> usize {
+        match self.index.get(tenant) {
+            Some(&i) => self.tenants[i].queue.len() + self.tenants[i].in_flight,
+            None => 0,
+        }
+    }
+
+    /// Jobs queued (not yet dispatched) across all tenants.
+    pub fn queued_total(&self) -> usize {
+        self.tenants.iter().map(|t| t.queue.len()).sum()
+    }
+
+    /// Tenants ever registered.
+    pub fn tenant_count(&self) -> usize {
+        self.tenants.len()
+    }
+}
+
+/// What a queued job will run.
+struct PendingSpec {
+    model: ModelConfig,
+    request: SpectrumRequest,
+}
+
+/// Terminal summary of a completed job (the `DONE` reply payload).
+#[derive(Clone)]
+struct JobSummary {
+    layers: usize,
+    sigma_max: f64,
+    solved_freqs: usize,
+    cached_layers: usize,
+    elapsed_ms: u128,
+}
+
+#[derive(Clone)]
+enum JobPhase {
+    Queued,
+    Running,
+    Done(JobSummary),
+    Failed(String),
+    TimedOut,
+}
+
+struct JobEntry {
+    tenant: String,
+    deadline: Instant,
+    phase: JobPhase,
+}
+
+struct QueueState {
+    fair: FairQueue,
+    specs: HashMap<u64, PendingSpec>,
+    paused: bool,
+}
+
+struct Shared {
+    svc: SpectralService,
+    addr: SocketAddr,
+    queue: Mutex<QueueState>,
+    queue_cv: Condvar,
+    jobs: Mutex<HashMap<u64, JobEntry>>,
+    jobs_cv: Condvar,
+    next_id: AtomicU64,
+    stopping: AtomicBool,
+    quota_rejections: AtomicU64,
+    request_timeout: Duration,
+    io_timeout: Duration,
+}
+
+impl Shared {
+    fn lock_queue(&self) -> MutexGuard<'_, QueueState> {
+        self.queue.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn lock_jobs(&self) -> MutexGuard<'_, HashMap<u64, JobEntry>> {
+        self.jobs.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn stop(&self) {
+        if self.stopping.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.queue_cv.notify_all();
+        self.jobs_cv.notify_all();
+        // Wake the acceptor out of its blocking accept().
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// Handle to a running daemon: the bound address plus join/shutdown.
+pub struct DaemonHandle {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    acceptor: std::thread::JoinHandle<()>,
+    runners: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl DaemonHandle {
+    /// The address the daemon actually bound (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until the daemon stops (a `SHUTDOWN` command, or
+    /// [`Self::shutdown`] from another thread via a cloned trigger).
+    pub fn wait(self) {
+        let _ = self.acceptor.join();
+        for r in self.runners {
+            let _ = r.join();
+        }
+    }
+
+    /// Stop the daemon and join its threads. In-flight jobs finish their
+    /// current scheduler work; queued jobs are abandoned (their spectra —
+    /// if any were computed — are already spilled to the disk tier, which
+    /// is written through at insert time, so nothing is lost by exiting).
+    pub fn shutdown(self) {
+        self.shared.stop();
+        self.wait();
+    }
+}
+
+/// Start the daemon: bind the front-end socket, spawn the runner pool and
+/// the acceptor, and return immediately with the handle.
+pub fn serve(config: DaemonConfig) -> Result<DaemonHandle> {
+    let svc = SpectralService::start(config.service.clone())?;
+    let listener = TcpListener::bind(&config.addr)
+        .with_context(|| format!("binding daemon socket {}", config.addr))?;
+    let addr = listener.local_addr().context("resolving bound daemon address")?;
+    let quota = config.service.effective_tenant_quota();
+    let shared = Arc::new(Shared {
+        svc,
+        addr,
+        queue: Mutex::new(QueueState {
+            fair: FairQueue::new(quota, config.effective_quantum()),
+            specs: HashMap::new(),
+            paused: config.start_paused,
+        }),
+        queue_cv: Condvar::new(),
+        jobs: Mutex::new(HashMap::new()),
+        jobs_cv: Condvar::new(),
+        next_id: AtomicU64::new(0),
+        stopping: AtomicBool::new(false),
+        quota_rejections: AtomicU64::new(0),
+        request_timeout: config.effective_request_timeout(),
+        io_timeout: config.effective_io_timeout(),
+    });
+    let mut runners = Vec::with_capacity(config.effective_max_inflight());
+    for r in 0..config.effective_max_inflight() {
+        let sh = Arc::clone(&shared);
+        runners.push(
+            std::thread::Builder::new()
+                .name(format!("lfa-convd-runner-{r}"))
+                .spawn(move || runner_loop(&sh))
+                .context("spawning daemon runner")?,
+        );
+    }
+    let sh = Arc::clone(&shared);
+    let acceptor = std::thread::Builder::new()
+        .name("lfa-convd-acceptor".to_string())
+        .spawn(move || accept_loop(listener, sh))
+        .context("spawning daemon acceptor")?;
+    Ok(DaemonHandle { shared, addr, acceptor, runners })
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    for conn in listener.incoming() {
+        if shared.stopping.load(Ordering::SeqCst) {
+            return;
+        }
+        if let Ok(stream) = conn {
+            let sh = Arc::clone(&shared);
+            let _ = std::thread::Builder::new()
+                .name("lfa-convd-conn".to_string())
+                .spawn(move || handle_connection(stream, &sh));
+        }
+    }
+}
+
+/// Pop the next dispatchable job, blocking on the queue condvar. `None`
+/// means the daemon is stopping.
+fn next_job(shared: &Shared) -> Option<(u64, String, PendingSpec)> {
+    let mut q = shared.lock_queue();
+    loop {
+        if shared.stopping.load(Ordering::SeqCst) {
+            return None;
+        }
+        if !q.paused {
+            if let Some((id, tenant)) = q.fair.pop() {
+                let spec = q.specs.remove(&id).expect("spec tracked for every queued job");
+                return Some((id, tenant, spec));
+            }
+        }
+        q = shared.queue_cv.wait(q).unwrap_or_else(|e| e.into_inner());
+    }
+}
+
+fn runner_loop(shared: &Shared) {
+    while let Some((id, tenant, spec)) = next_job(shared) {
+        // Deadline check at dispatch: a job that expired while queued is
+        // cancelled without running (true cancellation — the scheduler
+        // never sees it).
+        let run = {
+            let mut jobs = shared.lock_jobs();
+            match jobs.get_mut(&id) {
+                Some(e) if matches!(e.phase, JobPhase::Queued) => {
+                    if Instant::now() >= e.deadline {
+                        e.phase = JobPhase::TimedOut;
+                        false
+                    } else {
+                        e.phase = JobPhase::Running;
+                        true
+                    }
+                }
+                // Already lazily timed out by a POLL/WAIT, or unknown.
+                _ => false,
+            }
+        };
+        if run {
+            let started = Instant::now();
+            let outcome = shared.svc.audit_model_with(&spec.model, spec.request);
+            let mut jobs = shared.lock_jobs();
+            if let Some(e) = jobs.get_mut(&id) {
+                e.phase = match outcome {
+                    Ok(reports) => {
+                        if Instant::now() >= e.deadline {
+                            // Finished past the deadline: the client was
+                            // (or will be) told `timeout`; discard the
+                            // summary so the reply never flips.
+                            JobPhase::TimedOut
+                        } else {
+                            JobPhase::Done(JobSummary {
+                                layers: reports.len(),
+                                sigma_max: reports
+                                    .iter()
+                                    .map(|r| r.sigma_max)
+                                    .fold(f64::NEG_INFINITY, f64::max),
+                                solved_freqs: reports.iter().map(|r| r.solved_freqs).sum(),
+                                cached_layers: reports.iter().filter(|r| r.cached).count(),
+                                elapsed_ms: started.elapsed().as_millis(),
+                            })
+                        }
+                    }
+                    Err(why) => JobPhase::Failed(format!("{why}")),
+                };
+            }
+        }
+        shared.lock_queue().fair.complete(&tenant);
+        shared.queue_cv.notify_all();
+        shared.jobs_cv.notify_all();
+    }
+}
+
+enum Reply {
+    /// Write the line, keep the connection.
+    Line(String),
+    /// Write the line, close the connection.
+    Close(String),
+}
+
+fn handle_connection(stream: TcpStream, shared: &Shared) {
+    let _ = stream.set_read_timeout(Some(shared.io_timeout));
+    let _ = stream.set_write_timeout(Some(shared.io_timeout));
+    let reader = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(reader);
+    let mut writer = stream;
+    loop {
+        if shared.stopping.load(Ordering::SeqCst) {
+            return;
+        }
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            // Clean disconnect — possibly mid-session; submitted jobs
+            // stay pollable from any new connection.
+            Ok(0) => return,
+            Ok(_) => {}
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                // Slow consumer: typed reply (best effort), then close so
+                // the handler thread is never parked on a dead client.
+                let _ = writeln!(
+                    writer,
+                    "ERR slow-consumer no request within {}ms",
+                    shared.io_timeout.as_millis()
+                );
+                return;
+            }
+            // Client vanished mid-request (reset, abort): just close.
+            Err(_) => return,
+        }
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with("GET ") || line.starts_with("HEAD ") {
+            handle_http(&mut reader, &mut writer, shared, line);
+            return;
+        }
+        match handle_command(shared, line) {
+            Reply::Line(s) => {
+                if writeln!(writer, "{s}").is_err() {
+                    return;
+                }
+            }
+            Reply::Close(s) => {
+                let _ = writeln!(writer, "{s}");
+                return;
+            }
+        }
+    }
+}
+
+fn handle_command(shared: &Shared, line: &str) -> Reply {
+    let mut parts = line.split_whitespace();
+    let cmd = parts.next().unwrap_or("").to_ascii_uppercase();
+    match cmd.as_str() {
+        "PING" => Reply::Line("PONG".to_string()),
+        "SUBMIT" => {
+            let (Some(tenant), Some(model)) = (parts.next(), parts.next()) else {
+                return Reply::Line(
+                    "ERR bad-request usage: SUBMIT <tenant> <model> [top-k=K]".to_string(),
+                );
+            };
+            let mut topk = None;
+            for extra in parts {
+                match extra.strip_prefix("top-k=").or_else(|| extra.strip_prefix("topk=")) {
+                    Some(k) => match k.parse::<usize>() {
+                        Ok(k) if k > 0 => topk = Some(k),
+                        _ => {
+                            return Reply::Line(format!("ERR bad-request bad top-k {k:?}"));
+                        }
+                    },
+                    None => {
+                        return Reply::Line(format!("ERR bad-request unknown option {extra:?}"));
+                    }
+                }
+            }
+            Reply::Line(submit(shared, tenant, model, topk))
+        }
+        "POLL" | "WAIT" => {
+            let id = match parts.next().map(str::parse::<u64>) {
+                Some(Ok(id)) => id,
+                _ => return Reply::Line(format!("ERR bad-request usage: {cmd} <job-id>")),
+            };
+            if cmd == "WAIT" {
+                Reply::Line(wait_job(shared, id))
+            } else {
+                Reply::Line(poll_job(shared, id))
+            }
+        }
+        "METRICS" => Reply::Line(metrics_line(shared)),
+        "STATS" => Reply::Line(stats_line(shared)),
+        "RESUME" => {
+            shared.lock_queue().paused = false;
+            shared.queue_cv.notify_all();
+            Reply::Line("OK resumed".to_string())
+        }
+        "QUIT" => Reply::Close("BYE".to_string()),
+        "SHUTDOWN" => {
+            shared.stop();
+            Reply::Close("OK shutting-down".to_string())
+        }
+        _ => Reply::Line(format!("ERR bad-request unknown command {cmd:?}")),
+    }
+}
+
+/// Resolve a model token: builtin zoo name first, then a TOML config path.
+fn resolve_model(token: &str) -> std::result::Result<ModelConfig, String> {
+    if let Some(m) = zoo::builtin(token) {
+        return Ok(m);
+    }
+    let path = Path::new(token);
+    if path.exists() {
+        return ModelConfig::load(path).map_err(|e| format!("loading {token}: {e}"));
+    }
+    Err(format!(
+        "no builtin model or config file {token:?} (builtins: {})",
+        zoo::builtin_names().join(", ")
+    ))
+}
+
+fn submit(shared: &Shared, tenant: &str, model_token: &str, topk: Option<usize>) -> String {
+    let model = match resolve_model(model_token) {
+        Ok(m) => m,
+        Err(why) => return format!("ERR bad-request {why}"),
+    };
+    let request = match topk {
+        Some(k) => SpectrumRequest::TopK(k),
+        None => SpectrumRequest::Full,
+    };
+    let cost = model.layers.len().max(1);
+    let id = shared.next_id.fetch_add(1, Ordering::SeqCst) + 1;
+    let deadline = Instant::now() + shared.request_timeout;
+    // Register the job *before* it becomes poppable: a runner may pop the
+    // instant the queue lock is released, and must find the entry.
+    shared.lock_jobs().insert(
+        id,
+        JobEntry { tenant: tenant.to_string(), deadline, phase: JobPhase::Queued },
+    );
+    let admitted = {
+        let mut q = shared.lock_queue();
+        match q.fair.try_enqueue(tenant, id, cost) {
+            Ok(()) => {
+                q.specs.insert(id, PendingSpec { model, request });
+                Ok(())
+            }
+            Err(e) => Err(e),
+        }
+    };
+    match admitted {
+        Ok(()) => {
+            shared.queue_cv.notify_all();
+            format!("QUEUED id={id} tenant={tenant} cost={cost}")
+        }
+        Err(q) => {
+            shared.lock_jobs().remove(&id);
+            shared.quota_rejections.fetch_add(1, Ordering::Relaxed);
+            format!("ERR quota tenant={} pending={} limit={}", q.tenant, q.pending, q.quota)
+        }
+    }
+}
+
+fn done_line(id: u64, s: &JobSummary) -> String {
+    format!(
+        "DONE id={id} layers={} sigma_max={:.6e} solved={} cached={} elapsed_ms={}",
+        s.layers, s.sigma_max, s.solved_freqs, s.cached_layers, s.elapsed_ms
+    )
+}
+
+/// One non-blocking status probe. Expired non-terminal jobs are lazily
+/// marked timed out right here, so a `POLL` never reports `PENDING` past
+/// the deadline (the runner honors the marking by skipping the job).
+fn probe(jobs: &mut HashMap<u64, JobEntry>, id: u64) -> Option<String> {
+    let e = match jobs.get_mut(&id) {
+        Some(e) => e,
+        None => return Some(format!("ERR unknown-job id={id}")),
+    };
+    match &e.phase {
+        JobPhase::Done(s) => Some(done_line(id, s)),
+        JobPhase::Failed(msg) => Some(format!("ERR failed id={id} {msg}")),
+        JobPhase::TimedOut => Some(format!("ERR timeout id={id}")),
+        JobPhase::Queued | JobPhase::Running => {
+            if Instant::now() >= e.deadline {
+                e.phase = JobPhase::TimedOut;
+                Some(format!("ERR timeout id={id}"))
+            } else {
+                None // non-terminal; poll_job/wait_job decide
+            }
+        }
+    }
+}
+
+fn poll_job(shared: &Shared, id: u64) -> String {
+    let mut jobs = shared.lock_jobs();
+    if let Some(terminal) = probe(&mut jobs, id) {
+        return terminal;
+    }
+    match jobs.get(&id).map(|e| &e.phase) {
+        Some(JobPhase::Running) => format!("RUNNING id={id}"),
+        _ => format!("PENDING id={id}"),
+    }
+}
+
+/// Block until the job reaches a terminal phase or its deadline passes.
+/// Bounded: the condvar wait re-checks at least every 100 ms and the
+/// deadline converts the job to `timeout`, so `WAIT` can never hang.
+fn wait_job(shared: &Shared, id: u64) -> String {
+    let mut jobs = shared.lock_jobs();
+    loop {
+        if let Some(terminal) = probe(&mut jobs, id) {
+            return terminal;
+        }
+        let (guard, _) = shared
+            .jobs_cv
+            .wait_timeout(jobs, Duration::from_millis(100))
+            .unwrap_or_else(|e| e.into_inner());
+        jobs = guard;
+    }
+}
+
+/// The metric names + values the daemon exports, shared by the one-line
+/// `METRICS` reply and the HTTP `/metrics` body.
+fn metric_pairs(shared: &Shared) -> Vec<(&'static str, u64)> {
+    let m = shared.svc.metrics();
+    let (tenants, queued) = {
+        let q = shared.lock_queue();
+        (q.fair.tenant_count() as u64, q.fair.queued_total() as u64)
+    };
+    vec![
+        ("jobs_submitted", m.jobs_submitted),
+        ("jobs_completed", m.jobs_completed),
+        ("jobs_failed", m.jobs_failed),
+        ("tiles_completed", m.tiles_completed),
+        ("values_computed", m.values_computed),
+        ("cache_hits", m.cache_hits),
+        ("cache_misses", m.cache_misses),
+        ("cache_evictions", m.cache_evictions),
+        ("disk_hits", m.disk_hits),
+        ("disk_misses", m.disk_misses),
+        ("disk_spills", m.disk_spills),
+        ("disk_corruptions", m.disk_corruptions),
+        ("tenants", tenants),
+        ("jobs_queued", queued),
+        ("quota_rejections", shared.quota_rejections.load(Ordering::Relaxed)),
+    ]
+}
+
+fn metrics_line(shared: &Shared) -> String {
+    let pairs = metric_pairs(shared);
+    let body: Vec<String> = pairs.iter().map(|(k, v)| format!("{k}={v}")).collect();
+    format!("METRICS {}", body.join(" "))
+}
+
+fn stats_line(shared: &Shared) -> String {
+    match shared.svc.cache_stats() {
+        Some(s) => format!(
+            "STATS hits={} misses={} evictions={} entries={} bytes={} disk_hits={} \
+             disk_misses={} disk_spills={} disk_corruptions={}",
+            s.hits,
+            s.misses,
+            s.evictions,
+            s.entries,
+            s.bytes,
+            s.disk_hits,
+            s.disk_misses,
+            s.disk_spills,
+            s.disk_corruptions
+        ),
+        None => "STATS cache=off".to_string(),
+    }
+}
+
+fn handle_http(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut TcpStream,
+    shared: &Shared,
+    request_line: &str,
+) {
+    // Drain the (bounded) header block; the body is ignored.
+    for _ in 0..64 {
+        let mut header = String::new();
+        match reader.read_line(&mut header) {
+            Ok(0) => break,
+            Ok(_) if header.trim().is_empty() => break,
+            Ok(_) => continue,
+            Err(_) => break,
+        }
+    }
+    let path = request_line.split_whitespace().nth(1).unwrap_or("/");
+    let (status, body) = match path {
+        "/metrics" => {
+            let lines: Vec<String> =
+                metric_pairs(shared).iter().map(|(k, v)| format!("lfa_{k} {v}")).collect();
+            ("200 OK", format!("{}\n", lines.join("\n")))
+        }
+        "/healthz" => ("200 OK", "ok\n".to_string()),
+        _ => ("404 Not Found", format!("no route {path}\n")),
+    };
+    let _ = write!(
+        writer,
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+}
+
+/// Parse a `host:port` string early so the CLI can reject it with a typed
+/// error before starting workers (TcpListener::bind would too, later and
+/// more opaquely).
+pub fn parse_addr(addr: &str) -> Result<SocketAddr> {
+    use std::net::ToSocketAddrs;
+    let mut addrs = addr
+        .to_socket_addrs()
+        .map_err(|e| err!("cannot resolve bind address {addr:?}: {e}"))?;
+    addrs.next().ok_or_else(|| err!("bind address {addr:?} resolves to nothing"))
+}
+
+/// Reject non-loopback binds unless explicitly allowed — the protocol is
+/// unauthenticated, so listening on a routable interface is almost always
+/// a mistake.
+pub fn ensure_loopback(addr: &SocketAddr, allow_remote: bool) -> Result<()> {
+    if !allow_remote && !addr.ip().is_loopback() {
+        bail!(
+            "refusing to bind unauthenticated daemon to non-loopback {addr} \
+             (pass --allow-remote to override)"
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drr_alternates_equal_cost_tenants() {
+        let mut q = FairQueue::new(8, 1);
+        for id in 0..4u64 {
+            q.try_enqueue("a", id, 1).unwrap();
+        }
+        for id in 10..14u64 {
+            q.try_enqueue("b", id, 1).unwrap();
+        }
+        let order: Vec<String> = std::iter::from_fn(|| q.pop().map(|(_, t)| t)).collect();
+        assert_eq!(order, ["a", "b", "a", "b", "a", "b", "a", "b"]);
+    }
+
+    #[test]
+    fn drr_cost_weighting_equalizes_served_cost() {
+        // Tenant a submits cost-3 jobs, tenant b cost-1 jobs: over a long
+        // run both are served about the same total cost, i.e. b gets ~3×
+        // as many jobs through.
+        let mut q = FairQueue::new(100, 1);
+        for id in 0..20u64 {
+            q.try_enqueue("a", id, 3).unwrap();
+        }
+        for id in 100..160u64 {
+            q.try_enqueue("b", id, 1).unwrap();
+        }
+        let (mut cost_a, mut cost_b) = (0usize, 0usize);
+        for _ in 0..40 {
+            let (id, t) = q.pop().expect("work queued");
+            if t == "a" {
+                cost_a += 3;
+                assert!(id < 20);
+            } else {
+                cost_b += 1;
+            }
+        }
+        let diff = cost_a.abs_diff(cost_b);
+        assert!(diff <= 4, "served cost should track: a={cost_a} b={cost_b}");
+    }
+
+    #[test]
+    fn quota_is_per_tenant_and_frees_on_complete() {
+        let mut q = FairQueue::new(2, 1);
+        q.try_enqueue("a", 1, 1).unwrap();
+        q.try_enqueue("a", 2, 1).unwrap();
+        let e = q.try_enqueue("a", 3, 1).unwrap_err();
+        assert_eq!(e, QuotaExceeded { tenant: "a".to_string(), pending: 2, quota: 2 });
+        // Another tenant is unaffected.
+        q.try_enqueue("b", 4, 1).unwrap();
+        // Popping alone does NOT free quota (the job is now in flight) …
+        let (id, t) = q.pop().unwrap();
+        assert_eq!((id, t.as_str()), (1, "a"));
+        assert!(q.try_enqueue("a", 5, 1).is_err());
+        // … completion does.
+        q.complete("a");
+        q.try_enqueue("a", 5, 1).unwrap();
+        assert_eq!(q.pending("a"), 2);
+    }
+
+    #[test]
+    fn expensive_job_eventually_served() {
+        let mut q = FairQueue::new(8, 2);
+        q.try_enqueue("big", 1, 9).unwrap(); // cost > quantum: needs 5 rounds
+        q.try_enqueue("small", 2, 1).unwrap();
+        let mut order = Vec::new();
+        while let Some((id, _)) = q.pop() {
+            order.push(id);
+        }
+        assert_eq!(order.len(), 2);
+        assert!(order.contains(&1), "expensive job must not starve");
+    }
+
+    #[test]
+    fn loopback_guard() {
+        let local = parse_addr("127.0.0.1:0").unwrap();
+        assert!(ensure_loopback(&local, false).is_ok());
+        let remote = parse_addr("0.0.0.0:7733").unwrap();
+        assert!(ensure_loopback(&remote, false).is_err());
+        assert!(ensure_loopback(&remote, true).is_ok());
+    }
+}

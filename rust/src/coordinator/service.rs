@@ -43,6 +43,18 @@ pub struct ServiceConfig {
     /// (the CLI's `--no-cache` / `--cache-bytes N`). See
     /// [`SchedulerConfig::cache_bytes`].
     pub cache_bytes: Option<usize>,
+    /// Directory for the persistent disk cache tier (the CLI's
+    /// `--disk-cache-dir`): computed spectra spill to checksummed files
+    /// and are read back across process restarts. `None` (the default)
+    /// keeps the cache memory-only. Requires caching to be enabled —
+    /// [`Self::validate`] rejects a disk dir with `cache_bytes: None`.
+    pub disk_cache_dir: Option<std::path::PathBuf>,
+    /// Per-tenant admission quota for the daemon front-end: the maximum
+    /// number of jobs one tenant may have queued + running at once before
+    /// submissions are rejected with a typed backpressure reply (0 = the
+    /// default, [`Self::DEFAULT_TENANT_QUOTA`]). Unused by the in-process
+    /// API — only `serve` enforces it.
+    pub tenant_quota: usize,
 }
 
 impl Default for ServiceConfig {
@@ -57,7 +69,41 @@ impl Default for ServiceConfig {
             precision: Precision::F64,
             queue_depth: 0,
             cache_bytes: Some(0),
+            disk_cache_dir: None,
+            tenant_quota: 0,
         }
+    }
+}
+
+impl ServiceConfig {
+    /// Default per-tenant admission quota (`tenant_quota == 0`).
+    pub const DEFAULT_TENANT_QUOTA: usize = 8;
+
+    /// Resolve the `0 = default` tenant-quota convention.
+    pub fn effective_tenant_quota(&self) -> usize {
+        if self.tenant_quota == 0 {
+            Self::DEFAULT_TENANT_QUOTA
+        } else {
+            self.tenant_quota
+        }
+    }
+
+    /// Validate cross-field consistency. [`SpectralService::start`] calls
+    /// this, so an inconsistent config fails fast instead of silently
+    /// dropping a tier.
+    pub fn validate(&self) -> Result<()> {
+        if self.disk_cache_dir.is_some() && self.cache_bytes.is_none() {
+            crate::bail!(
+                "disk_cache_dir requires caching: the disk tier sits below the \
+                 in-memory result cache (drop --no-cache or the disk dir)"
+            );
+        }
+        if let Some(dir) = &self.disk_cache_dir {
+            if dir.exists() && !dir.is_dir() {
+                crate::bail!("disk_cache_dir {} exists and is not a directory", dir.display());
+            }
+        }
+        Ok(())
     }
 }
 
@@ -107,6 +153,7 @@ impl SpectralService {
     /// the crate was built without the `pjrt` feature, whose stub executor
     /// always fails to spawn.
     pub fn start(config: ServiceConfig) -> Result<Self> {
+        config.validate()?;
         let (artifacts, executor) = match &config.artifacts_dir {
             Some(dir) if dir.join("manifest.txt").exists() => {
                 let specs = load_manifest(dir)?;
@@ -133,6 +180,7 @@ impl SpectralService {
                 queue_depth: config.queue_depth,
                 artifacts,
                 cache_bytes: config.cache_bytes,
+                disk_cache_dir: config.disk_cache_dir.clone(),
             },
             executor,
         );
@@ -288,8 +336,24 @@ impl SpectralService {
         }
     }
 
+    /// Point-in-time metrics, with the disk-tier counters merged in from
+    /// the cache (the scheduler's `Metrics` atomics are compute-side only;
+    /// the cache owns disk traffic). This is what the daemon's `/metrics`
+    /// endpoint renders — the report layer cannot silently drop the tier.
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.scheduler.metrics.snapshot()
+        let mut snap = self.scheduler.metrics.snapshot();
+        if let Some(stats) = self.cache_stats() {
+            snap.disk_hits = stats.disk_hits;
+            snap.disk_misses = stats.disk_misses;
+            snap.disk_spills = stats.disk_spills;
+            snap.disk_corruptions = stats.disk_corruptions;
+        }
+        snap
+    }
+
+    /// The service's configuration (as resolved at start).
+    pub fn config(&self) -> &ServiceConfig {
+        &self.config
     }
 
     /// Stats of the scheduler's result/plan cache (None when caching is

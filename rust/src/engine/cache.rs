@@ -29,6 +29,14 @@
 //!   worker count), none of which is charged against the byte budget —
 //!   `cache_bytes` budgets *results* only.
 //!
+//! - an optional **disk tier** ([`SpectralCache::with_disk`] →
+//!   [`super::disk_cache::DiskCache`]): inserted results are written
+//!   through to checksummed, versioned spill files named by the
+//!   signature's [`Signature::file_digest`], and a memory miss falls back
+//!   to a disk read — so warm repeat traffic survives process restarts
+//!   (the daemon's deploy-restart shape). Disk I/O never holds the
+//!   in-memory mutex.
+//!
 //! The coordinator's [`crate::coordinator::Scheduler`] consults the cache
 //! before tiling a job and populates it at job finish;
 //! [`super::ModelPlan::execute_cached`] does the same for direct
@@ -44,6 +52,7 @@
 //! signature: stale entries are never *returned*, they simply age out of
 //! the LRU order.
 
+use super::disk_cache::{DiskCache, DiskStats};
 use super::plan::SpectralPlan;
 use super::SpectrumRequest;
 use crate::conv::ConvKernel;
@@ -218,6 +227,61 @@ impl Signature {
     pub fn with_precision(&self, precision: Precision) -> Signature {
         Signature { precision, ..*self }
     }
+
+    /// Stable 128-bit digest of the **entire** signature — every field,
+    /// enums mapped to explicit tags — used by the disk tier
+    /// ([`super::disk_cache::DiskCache`]) to name spill files and to
+    /// verify on read that a file really belongs to the key that looked it
+    /// up. Unlike `Hash`, the encoding is explicit and stable across
+    /// builds (the spill-file format version, not the compiler, owns it).
+    pub fn file_digest(&self) -> [u64; 2] {
+        let layout = match self.layout {
+            BlockLayout::BlockContiguous => 0u64,
+            BlockLayout::PlanarStrided => 1,
+        };
+        let solver = match self.solver {
+            BlockSolver::Jacobi => 0u64,
+            BlockSolver::GramEigen => 1,
+        };
+        let folding = match self.folding {
+            Fold::Auto => 0u64,
+            Fold::Off => 1,
+        };
+        let precision = match self.precision {
+            Precision::F64 => 0u64,
+            Precision::F32 => 1,
+            Precision::F32Refined => 2,
+        };
+        let request = match self.request {
+            None => 0u64,
+            Some(SpectrumRequest::Full) => 1,
+            Some(SpectrumRequest::TopK(k)) => 2 | ((k as u64) << 2),
+        };
+        let words = [
+            self.weights[0],
+            self.weights[1],
+            self.weight_len as u64,
+            self.c_out as u64,
+            self.c_in as u64,
+            self.kh as u64,
+            self.kw as u64,
+            self.anchor.0 as u64,
+            self.anchor.1 as u64,
+            self.groups as u64,
+            self.dilation as u64,
+            self.transposed as u64,
+            self.n as u64,
+            self.m as u64,
+            self.stride as u64,
+            layout,
+            solver,
+            folding,
+            precision,
+            request,
+            self.threads as u64,
+        ];
+        fnv1a_u64s2(words.into_iter())
+    }
 }
 
 struct ResultEntry {
@@ -267,6 +331,15 @@ pub struct CacheStats {
     pub bytes: usize,
     /// Result-cache byte budget.
     pub capacity: usize,
+    /// Disk-tier lookups served from a valid spill file (0 if no disk
+    /// tier is attached).
+    pub disk_hits: u64,
+    /// Disk-tier lookups that found no spill file.
+    pub disk_misses: u64,
+    /// Spectra newly spilled to disk.
+    pub disk_spills: u64,
+    /// Spill files that failed validation and were quarantined.
+    pub disk_corruptions: u64,
 }
 
 /// Content-addressed result & plan cache — see the module docs. All
@@ -274,6 +347,9 @@ pub struct CacheStats {
 pub struct SpectralCache {
     max_bytes: usize,
     inner: Mutex<Inner>,
+    /// Optional persistent tier below the LRU — see
+    /// [`super::disk_cache::DiskCache`] and [`Self::with_disk`].
+    disk: Option<DiskCache>,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
@@ -308,12 +384,29 @@ impl SpectralCache {
                 bytes: 0,
                 tick: 0,
             }),
+            disk: None,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             plan_hits: AtomicU64::new(0),
             plan_misses: AtomicU64::new(0),
         }
+    }
+
+    /// Attach a persistent disk tier below the LRU. Every inserted result
+    /// is **written through** to disk (not just spilled on eviction — a
+    /// restart must find everything the process computed, and evicting at
+    /// process death is exactly when no code runs), and a memory miss
+    /// falls back to a disk read before reporting a miss to the caller.
+    /// Disk I/O happens outside the in-memory mutex.
+    pub fn with_disk(mut self, disk: DiskCache) -> Self {
+        self.disk = Some(disk);
+        self
+    }
+
+    /// The attached disk tier, if any.
+    pub fn disk(&self) -> Option<&DiskCache> {
+        self.disk.as_ref()
     }
 
     /// Approximate heap bytes a cached spectrum occupies (values buffer +
@@ -325,9 +418,24 @@ impl SpectralCache {
             + std::mem::size_of::<ResultEntry>()
     }
 
-    /// Look a result up. A hit bumps the entry's LRU position and returns
-    /// the shared spectrum — zero per-frequency work, zero allocation.
+    /// Look a result up. A memory hit bumps the entry's LRU position and
+    /// returns the shared spectrum — zero per-frequency work, zero
+    /// allocation. A memory miss falls back to the disk tier (if one is
+    /// attached): a valid spill file is promoted back into the LRU
+    /// (without re-spilling) and served; the `hits`/`misses` counters
+    /// track the memory tier, `disk_*` the fallback.
     pub fn get(&self, key: &Signature) -> Option<Arc<Spectrum>> {
+        if let Some(spectrum) = self.get_mem(key) {
+            return Some(spectrum);
+        }
+        let disk = self.disk.as_ref()?;
+        let spectrum = Arc::new(disk.get(key)?);
+        self.insert_mem(key, Arc::clone(&spectrum));
+        Some(spectrum)
+    }
+
+    /// Memory-tier lookup (counts a hit or a miss).
+    fn get_mem(&self, key: &Signature) -> Option<Arc<Spectrum>> {
         let mut guard = self.inner.lock().expect("cache poisoned");
         let inner = &mut *guard;
         inner.tick += 1;
@@ -347,11 +455,24 @@ impl SpectralCache {
         }
     }
 
-    /// Insert (or refresh) a result. Evicts least-recently-used entries
-    /// until the byte budget holds (each eviction `O(log n)` through the
+    /// Insert (or refresh) a result. With a disk tier attached the
+    /// spectrum is written through to disk first (outside the mutex;
+    /// content-addressed, so a re-insert of spilled content skips the
+    /// write). In memory, least-recently-used entries are evicted until
+    /// the byte budget holds (each eviction `O(log n)` through the
     /// recency index); returns how many were evicted. A spectrum that
-    /// alone exceeds the budget is not stored.
+    /// alone exceeds the memory budget is not stored in the LRU — but
+    /// with a disk tier it remains servable from disk.
     pub fn insert(&self, key: Signature, spectrum: Arc<Spectrum>) -> u64 {
+        if let Some(disk) = &self.disk {
+            disk.put(&key, &spectrum);
+        }
+        self.insert_mem(&key, spectrum)
+    }
+
+    /// Memory-tier insert (LRU + byte budget only; no disk write).
+    fn insert_mem(&self, key: &Signature, spectrum: Arc<Spectrum>) -> u64 {
+        let key = *key;
         let bytes = Self::entry_bytes(&spectrum);
         let mut guard = self.inner.lock().expect("cache poisoned");
         let inner = &mut *guard;
@@ -443,8 +564,11 @@ impl SpectralCache {
         self.plan_store(key, plan)
     }
 
-    /// Drop every cached result and plan (counters are kept — they record
-    /// lifetime traffic, not current contents).
+    /// Drop every cached result and plan from **memory** (counters are
+    /// kept — they record lifetime traffic, not current contents). The
+    /// disk tier is untouched: its files belong to the operator
+    /// ([`DiskCache::purge`] empties it explicitly), and a post-`clear`
+    /// lookup may still be served from disk.
     pub fn clear(&self) {
         let mut inner = self.inner.lock().expect("cache poisoned");
         inner.results.clear();
@@ -453,8 +577,21 @@ impl SpectralCache {
         inner.bytes = 0;
     }
 
-    /// Current counters and occupancy.
+    /// Drop cached **results** from memory but keep the plans (and their
+    /// warmed workspace pools). This is the restart-shaped probe the
+    /// disk-tier bench and tests use: after `clear_results`, a repeat
+    /// audit's values must come from disk while its plans stay warm —
+    /// isolating disk-read cost from re-planning cost.
+    pub fn clear_results(&self) {
+        let mut inner = self.inner.lock().expect("cache poisoned");
+        inner.results.clear();
+        inner.recency.clear();
+        inner.bytes = 0;
+    }
+
+    /// Current counters and occupancy (both tiers).
     pub fn stats(&self) -> CacheStats {
+        let disk = self.disk.as_ref().map(|d| d.stats()).unwrap_or_default();
         let inner = self.inner.lock().expect("cache poisoned");
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
@@ -466,6 +603,10 @@ impl SpectralCache {
             plan_entries: inner.plans.len(),
             bytes: inner.bytes,
             capacity: self.max_bytes,
+            disk_hits: disk.hits,
+            disk_misses: disk.misses,
+            disk_spills: disk.spills,
+            disk_corruptions: disk.corruptions,
         }
     }
 }
@@ -567,6 +708,49 @@ mod tests {
         assert_eq!(Signature::result(&k, 8, 8, 1, &opts, SpectrumRequest::TopK(3)), top2);
         assert_eq!(a.for_request(SpectrumRequest::TopK(9)), top2);
         assert_ne!(Signature::result(&k, 8, 8, 1, &opts, SpectrumRequest::TopK(1)), top2);
+    }
+
+    #[test]
+    fn file_digest_is_stable_and_field_sensitive() {
+        let k = kernel(9);
+        let opts = LfaOptions::default();
+        let a = Signature::result(&k, 8, 8, 1, &opts, SpectrumRequest::Full);
+        assert_eq!(a.file_digest(), a.file_digest(), "deterministic");
+        assert_eq!(
+            a.file_digest(),
+            Signature::result(&k.clone(), 8, 8, 1, &opts, SpectrumRequest::Full).file_digest(),
+            "equal content, equal digest"
+        );
+        // Every enum axis feeds the digest (spill files for different
+        // solver/fold/precision/request configurations must not collide).
+        let mut seen = vec![a.file_digest()];
+        for sig in [
+            Signature::result(&k, 8, 8, 1, &opts, SpectrumRequest::TopK(1)),
+            Signature::result(
+                &k,
+                8,
+                8,
+                1,
+                &LfaOptions { folding: Fold::Off, ..opts },
+                SpectrumRequest::Full,
+            ),
+            Signature::result(
+                &k,
+                8,
+                8,
+                1,
+                &LfaOptions { solver: BlockSolver::GramEigen, ..opts },
+                SpectrumRequest::Full,
+            ),
+            a.with_precision(Precision::F32),
+            a.with_precision(Precision::F32Refined),
+            a.for_plan(1),
+            a.for_plan(2),
+        ] {
+            let d = sig.file_digest();
+            assert!(!seen.contains(&d), "digest collision for {sig:?}");
+            seen.push(d);
+        }
     }
 
     #[test]

@@ -1,0 +1,296 @@
+//! [`DiskCache`]: the content-addressed on-disk tier below the in-memory
+//! [`super::SpectralCache`] LRU.
+//!
+//! The in-memory cache dies with the process; a long-running audit daemon
+//! restarted for a deploy would re-solve every frequency of every layer it
+//! had already decomposed. This tier spills computed [`Spectrum`]s to
+//! checksummed, versioned files keyed by their weight-bit [`Signature`],
+//! and reads them back across process restarts — a warm repeat audit after
+//! a restart re-solves **zero** frequencies and returns bit-identical
+//! values (spectra are stored as raw `f64` bit patterns, so the round trip
+//! is exact).
+//!
+//! Spill-file format (all integers little-endian):
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic  b"LFASPILL"
+//! 8       4     format version (u32) — mismatches are quarantined
+//! 12      4     reserved (zero)
+//! 16      16    signature digest ([`Signature::file_digest`], 2×u64)
+//! 32      40    n, m, c_out, c_in, per_freq (5×u64)
+//! 72      8     value count (u64)
+//! 80      8·V   singular values (f64 bit patterns)
+//! 80+8·V  16    checksum: dual FNV-1a over bytes 16..80+8·V
+//! ```
+//!
+//! Writes are atomic (temp file + rename), so a crash mid-spill leaves at
+//! worst an orphaned temp file, never a half-written entry under a live
+//! name. Reads re-verify everything: magic, version, checksum, the key
+//! digest, and geometry consistency. **Any** failure quarantines the file
+//! (it is deleted), counts a corruption, and reads as a miss — a truncated,
+//! bit-flipped or wrong-version spill is never served. Entries are
+//! content-addressed, so there is no invalidation: stale files for mutated
+//! weights are simply never looked up again, and `put` of an
+//! already-spilled signature is a no-op (the bytes would be identical).
+//!
+//! Counter semantics: `hits + misses + corruptions` = total lookups;
+//! `spills` counts files newly written. The tier has no byte budget of its
+//! own — the operator points [`DiskCache::open`] at a directory and owns
+//! its lifecycle ([`DiskCache::purge`] empties it).
+
+use super::cache::Signature;
+use crate::error::{Context, Result};
+use crate::lfa::spectrum::Spectrum;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// First 8 bytes of every spill file.
+pub const SPILL_MAGIC: [u8; 8] = *b"LFASPILL";
+/// Current spill-file format version. Bump on any layout change: readers
+/// quarantine files from other versions instead of misparsing them.
+pub const SPILL_VERSION: u32 = 1;
+
+/// Bytes before the checksummed region (magic + version + reserved).
+const PREFIX_LEN: usize = 16;
+/// Header words inside the checksummed region (digest + geometry + count).
+const HEADER_WORDS: usize = 8;
+/// Trailing checksum bytes (two u64 FNV-1a streams).
+const CHECKSUM_LEN: usize = 16;
+
+/// Unique temp-file suffix counter (several threads may spill at once).
+static NEXT_TMP: AtomicU64 = AtomicU64::new(0);
+
+/// Point-in-time disk-tier counters ([`DiskCache::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DiskStats {
+    /// Lookups served from a valid spill file.
+    pub hits: u64,
+    /// Lookups that found no spill file.
+    pub misses: u64,
+    /// Spill files newly written.
+    pub spills: u64,
+    /// Spill files that failed validation and were quarantined.
+    pub corruptions: u64,
+}
+
+/// Dual FNV-1a over a byte slice — 128 bits of checksum in one pass (same
+/// construction as the weight-bit content digest in `engine::cache`).
+fn fnv1a_bytes2(bytes: &[u8]) -> [u64; 2] {
+    const PRIME: u64 = 0x100000001b3;
+    let mut h0: u64 = 0xcbf29ce484222325;
+    let mut h1: u64 = 0x6c62272e07bb0142;
+    for &b in bytes {
+        h0 = (h0 ^ b as u64).wrapping_mul(PRIME);
+        h1 = (h1 ^ b as u64).wrapping_mul(PRIME);
+    }
+    [h0, h1]
+}
+
+fn read_u64(bytes: &[u8]) -> u64 {
+    u64::from_le_bytes(bytes[..8].try_into().expect("8-byte slice"))
+}
+
+/// The on-disk spill tier — see the module docs. All methods are `&self`
+/// and thread-safe (the filesystem is the shared state; writes are atomic
+/// renames).
+pub struct DiskCache {
+    root: PathBuf,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    spills: AtomicU64,
+    corruptions: AtomicU64,
+}
+
+impl DiskCache {
+    /// Open (creating if needed) the spill directory. Fails only if the
+    /// directory cannot be created — an unreadable *entry* later is a
+    /// per-lookup miss, never an error.
+    pub fn open(root: impl Into<PathBuf>) -> Result<Self> {
+        let root = root.into();
+        fs::create_dir_all(&root)
+            .with_context(|| format!("creating disk cache dir {}", root.display()))?;
+        Ok(Self {
+            root,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            spills: AtomicU64::new(0),
+            corruptions: AtomicU64::new(0),
+        })
+    }
+
+    /// The spill directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// The file a signature spills to (content-addressed name).
+    pub fn path_for(&self, key: &Signature) -> PathBuf {
+        let d = key.file_digest();
+        self.root.join(format!("{:016x}{:016x}.spill", d[0], d[1]))
+    }
+
+    /// Read a spectrum back. A missing file is a miss; a file that fails
+    /// **any** validation (magic, version, checksum, key digest, geometry)
+    /// is quarantined — deleted, counted as a corruption — and also reads
+    /// as a miss. Corrupt bytes are never served.
+    pub fn get(&self, key: &Signature) -> Option<Spectrum> {
+        let path = self.path_for(key);
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(_) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        };
+        match decode(key, &bytes) {
+            Ok(spectrum) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(spectrum)
+            }
+            Err(_why) => {
+                let _ = fs::remove_file(&path);
+                self.corruptions.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Spill a spectrum. Content-addressed: if the file already exists the
+    /// bytes would be identical, so the write is skipped. Returns whether
+    /// a file was newly written. I/O failures are swallowed (the disk tier
+    /// degrades to a smaller cache, it never fails a job).
+    pub fn put(&self, key: &Signature, spectrum: &Spectrum) -> bool {
+        let path = self.path_for(key);
+        if path.exists() {
+            return false;
+        }
+        // Fault-injection point: a full / read-only disk shrinks the cache,
+        // it never fails the job that computed the spectrum.
+        if crate::testing::chaos::fire(crate::testing::chaos::DISK_WRITE_FAIL) {
+            return false;
+        }
+        let bytes = encode(key, spectrum);
+        let tmp = self.root.join(format!(
+            ".tmp-{}-{}",
+            std::process::id(),
+            NEXT_TMP.fetch_add(1, Ordering::Relaxed)
+        ));
+        let written = fs::write(&tmp, &bytes).and_then(|()| fs::rename(&tmp, &path)).is_ok();
+        if written {
+            self.spills.fetch_add(1, Ordering::Relaxed);
+        } else {
+            let _ = fs::remove_file(&tmp);
+        }
+        written
+    }
+
+    /// Number of spill files currently on disk.
+    pub fn len(&self) -> usize {
+        self.spill_files().count()
+    }
+
+    /// Whether the spill directory holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Delete every spill file (bench / test hygiene). Returns how many
+    /// were removed. Counters are kept — they record lifetime traffic.
+    pub fn purge(&self) -> usize {
+        self.spill_files().filter(|p| fs::remove_file(p).is_ok()).count()
+    }
+
+    fn spill_files(&self) -> impl Iterator<Item = PathBuf> {
+        fs::read_dir(&self.root)
+            .into_iter()
+            .flatten()
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| p.extension().is_some_and(|x| x == "spill"))
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> DiskStats {
+        DiskStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            spills: self.spills.load(Ordering::Relaxed),
+            corruptions: self.corruptions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Serialize a spectrum under `key` into the spill-file layout.
+fn encode(key: &Signature, spectrum: &Spectrum) -> Vec<u8> {
+    let words = [
+        spectrum.n as u64,
+        spectrum.m as u64,
+        spectrum.c_out as u64,
+        spectrum.c_in as u64,
+        spectrum.per_freq as u64,
+        spectrum.values.len() as u64,
+    ];
+    let mut buf =
+        Vec::with_capacity(PREFIX_LEN + (HEADER_WORDS + spectrum.values.len()) * 8 + CHECKSUM_LEN);
+    buf.extend_from_slice(&SPILL_MAGIC);
+    buf.extend_from_slice(&SPILL_VERSION.to_le_bytes());
+    buf.extend_from_slice(&0u32.to_le_bytes());
+    let digest = key.file_digest();
+    for w in digest.iter().copied().chain(words) {
+        buf.extend_from_slice(&w.to_le_bytes());
+    }
+    for v in &spectrum.values {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    let sum = fnv1a_bytes2(&buf[PREFIX_LEN..]);
+    buf.extend_from_slice(&sum[0].to_le_bytes());
+    buf.extend_from_slice(&sum[1].to_le_bytes());
+    buf
+}
+
+/// Parse + fully validate a spill file against the key that looked it up.
+fn decode(key: &Signature, bytes: &[u8]) -> std::result::Result<Spectrum, &'static str> {
+    if bytes.len() < PREFIX_LEN + HEADER_WORDS * 8 + CHECKSUM_LEN {
+        return Err("truncated");
+    }
+    if bytes[..8] != SPILL_MAGIC {
+        return Err("bad magic");
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().expect("4-byte slice"));
+    if version != SPILL_VERSION {
+        return Err("version mismatch");
+    }
+    let body = &bytes[PREFIX_LEN..bytes.len() - CHECKSUM_LEN];
+    let tail = &bytes[bytes.len() - CHECKSUM_LEN..];
+    let stored = [read_u64(tail), read_u64(&tail[8..])];
+    if fnv1a_bytes2(body) != stored {
+        return Err("checksum mismatch");
+    }
+    let word = |i: usize| read_u64(&body[i * 8..]);
+    if [word(0), word(1)] != key.file_digest() {
+        return Err("key digest mismatch");
+    }
+    let n = word(2) as usize;
+    let m = word(3) as usize;
+    let c_out = word(4) as usize;
+    let c_in = word(5) as usize;
+    let per_freq = word(6) as usize;
+    let count = word(7) as usize;
+    if body.len() != (HEADER_WORDS + count) * 8 {
+        return Err("length mismatch");
+    }
+    let expect = n
+        .checked_mul(m)
+        .and_then(|nm| nm.checked_mul(per_freq))
+        .ok_or("geometry overflow")?;
+    if count != expect {
+        return Err("inconsistent geometry");
+    }
+    let values = body[HEADER_WORDS * 8..]
+        .chunks_exact(8)
+        .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().expect("8-byte chunk"))))
+        .collect();
+    Ok(Spectrum { n, m, c_out, c_in, per_freq, values })
+}

@@ -38,6 +38,7 @@
 
 pub mod backend;
 pub mod cache;
+pub mod disk_cache;
 pub mod model_plan;
 pub mod plan;
 pub mod workspace;
@@ -46,6 +47,7 @@ pub mod workspace;
 pub use backend::PjrtBackend;
 pub use backend::{NativeSerial, NativeThreaded, SpectralBackend};
 pub use cache::{CacheStats, Signature, SpectralCache, DEFAULT_CACHE_BYTES};
+pub use disk_cache::{DiskCache, DiskStats};
 pub use model_plan::{CachedExecution, LayerSpectrum, ModelPlan, ModelSpectra, ModelTopK};
 pub use plan::{SpectralPlan, TopKResult};
 pub use workspace::{Workspace, WorkspacePool};

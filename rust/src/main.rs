@@ -5,6 +5,7 @@
 //!   audit        analyze every layer of a model through the coordinator
 //!   audit-model  whole-model spectral report straight off a ModelPlan
 //!   compare      LFA vs FFT vs explicit on one layer, with timings
+//!   serve        run lfa-convd, the long-running spectral-audit daemon
 //!   artifacts    list AOT artifacts and smoke-run one through PJRT
 //!   help         this text (see `cli::HELP`)
 
@@ -32,13 +33,24 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let cli =
-        Cli::from_env(&["with-explicit", "verbose", "csv", "no-fold", "no-cache", "transposed"])?;
+    let cli = Cli::from_env(&[
+        "with-explicit",
+        "verbose",
+        "csv",
+        "no-fold",
+        "no-cache",
+        "transposed",
+        "allow-remote",
+    ])?;
     match cli.command.as_str() {
         "analyze" => cmd_analyze(&cli),
         "audit" => cmd_audit(&cli),
         "audit-model" => cmd_audit_model(&cli),
         "compare" => cmd_compare(&cli),
+        #[cfg(feature = "daemon")]
+        "serve" => cmd_serve(&cli),
+        #[cfg(not(feature = "daemon"))]
+        "serve" => bail!("this binary was built without the `daemon` feature"),
         "artifacts" => cmd_artifacts(&cli),
         "" | "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -224,6 +236,21 @@ fn cache_line(stats: Option<conv_svd_lfa::engine::CacheStats>) -> String {
     }
 }
 
+/// The `--disk-cache-dir DIR` option shared by the audit commands and the
+/// daemon: the persistent spill tier below the in-memory result cache.
+fn disk_cache_dir(cli: &Cli) -> Option<std::path::PathBuf> {
+    cli.opt("disk-cache-dir").map(std::path::PathBuf::from)
+}
+
+/// The `disk: …` report line, printed when the disk tier is active.
+fn disk_line(stats: Option<conv_svd_lfa::engine::CacheStats>) -> Option<String> {
+    let s = stats?;
+    Some(format!(
+        "disk: {} hits / {} misses / {} spills / {} corruptions",
+        s.disk_hits, s.disk_misses, s.disk_spills, s.disk_corruptions
+    ))
+}
+
 fn cmd_audit(cli: &Cli) -> Result<()> {
     let target = cli
         .positional
@@ -278,6 +305,7 @@ fn cmd_audit(cli: &Cli) -> Result<()> {
         folding,
         precision: precision_opt(cli)?,
         cache_bytes: cache_budget(cli)?,
+        disk_cache_dir: disk_cache_dir(cli),
         ..Default::default()
     })?;
     let reports = svc.audit_model_with(&model, request)?;
@@ -349,6 +377,11 @@ fn cmd_audit(cli: &Cli) -> Result<()> {
         .count();
     println!("{}", freqs_solved_line(solved_freqs, total_freqs, cached_layers, folded_layers));
     println!("{}", cache_line(svc.cache_stats()));
+    if disk_cache_dir(cli).is_some() {
+        if let Some(line) = disk_line(svc.cache_stats()) {
+            println!("{line}");
+        }
+    }
     if cli.flag("csv") {
         let path = table.save_csv(&format!("audit_{}", model.name))?;
         println!("csv: {}", path.display());
@@ -380,8 +413,22 @@ fn cmd_audit_model(cli: &Cli) -> Result<()> {
         other => bail!("unknown solver {other:?} (jacobi|gram)"),
     };
     // The result/plan cache the repeat sweeps run against (the
-    // repeat-audit shape: sweep 1 populates it, sweeps 2..R hit it).
-    let cache = cache_budget(cli)?.map(SpectralCache::with_budget_or_default);
+    // repeat-audit shape: sweep 1 populates it, sweeps 2..R hit it), with
+    // the persistent disk tier below it when --disk-cache-dir is given.
+    let cache = match (cache_budget(cli)?, disk_cache_dir(cli)) {
+        (None, Some(_)) => bail!(
+            "--disk-cache-dir requires caching: the disk tier sits below \
+             the in-memory result cache (drop --no-cache)"
+        ),
+        (None, None) => None,
+        (Some(budget), dir) => {
+            let mut c = SpectralCache::with_budget_or_default(budget);
+            if let Some(dir) = dir {
+                c = c.with_disk(conv_svd_lfa::engine::DiskCache::open(dir)?);
+            }
+            Some(c)
+        }
+    };
     let t0 = std::time::Instant::now();
     // Build through the cache when one exists: the build stores each
     // layer's plan signature, so every repeat sweep derives its result
@@ -479,6 +526,11 @@ fn cmd_audit_model(cli: &Cli) -> Result<()> {
         if folding == Fold::Off { 0 } else { plan.layer_count() - cached_layers };
     println!("{}", freqs_solved_line(solved_freqs, total_freqs, cached_layers, folded_layers));
     println!("{}", cache_line(cache.as_ref().map(|c| c.stats())));
+    if disk_cache_dir(cli).is_some() {
+        if let Some(line) = disk_line(cache.as_ref().map(|c| c.stats())) {
+            println!("{line}");
+        }
+    }
     for g in 0..plan.group_count() {
         let members = plan.group_members(g);
         let (rows, cols) = plan.layer_plan(members[0]).block_shape();
@@ -585,6 +637,44 @@ fn audit_model_topk(
         let path = table.save_csv(&format!("audit_model_topk_{}", spectra.model))?;
         println!("csv: {}", path.display());
     }
+    Ok(())
+}
+
+/// `serve` — run `lfa-convd`, the long-running spectral-audit daemon
+/// (loopback line protocol + `GET /metrics`; see `coordinator::server`).
+/// Blocks until a client sends `SHUTDOWN`.
+#[cfg(feature = "daemon")]
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    use conv_svd_lfa::coordinator::server::{self, DaemonConfig};
+    use std::time::Duration;
+    let addr = cli.opt("addr").unwrap_or("127.0.0.1:7733").to_string();
+    let parsed = server::parse_addr(&addr)?;
+    server::ensure_loopback(&parsed, cli.flag("allow-remote"))?;
+    let service = ServiceConfig {
+        workers: cli.opt_parse("threads", 0)?,
+        folding: if cli.flag("no-fold") { Fold::Off } else { Fold::Auto },
+        precision: precision_opt(cli)?,
+        cache_bytes: cache_budget(cli)?,
+        disk_cache_dir: disk_cache_dir(cli),
+        tenant_quota: cli.opt_parse("tenant-quota", 0usize)?,
+        ..Default::default()
+    };
+    let config = DaemonConfig {
+        service,
+        addr,
+        max_inflight: cli.opt_parse("max-inflight", 0usize)?,
+        request_timeout: Duration::from_millis(cli.opt_parse("request-timeout-ms", 0u64)?),
+        io_timeout: Duration::from_millis(cli.opt_parse("io-timeout-ms", 0u64)?),
+        quantum: cli.opt_parse("quantum", 0usize)?,
+        start_paused: false,
+    };
+    let handle = server::serve(config)?;
+    println!(
+        "lfa-convd listening on {} (line protocol + GET /metrics; SHUTDOWN to stop)",
+        handle.addr()
+    );
+    handle.wait();
+    println!("lfa-convd stopped");
     Ok(())
 }
 

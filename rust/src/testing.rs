@@ -12,6 +12,67 @@
 
 use crate::numeric::Pcg64;
 
+pub mod chaos {
+    //! Fault-injection hooks for the coordinator and daemon test suites.
+    //!
+    //! Production code calls [`fire`] at named injection points; the call
+    //! is a single relaxed atomic load unless a test has [`arm`]ed the
+    //! point, so the hooks cost nothing in normal operation. An armed
+    //! point fires exactly once after a configurable number of passes —
+    //! e.g. `arm(TILE_PANIC, 1)` makes the *next* tile execution panic
+    //! mid-flight, which is how `tests/service_daemon.rs` proves a worker
+    //! panic degrades to a typed job error instead of a hang.
+    //!
+    //! State is process-global (the scheduler's workers are real threads);
+    //! tests that arm points must serialize themselves (a shared mutex)
+    //! and [`reset`] when done.
+
+    use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+
+    /// Panic in the middle of executing a tile (worker-thread crash).
+    pub const TILE_PANIC: usize = 0;
+    /// Fail a tile with a typed error (solver-level failure).
+    pub const TILE_ERROR: usize = 1;
+    /// Fail a disk-cache spill write (full / read-only disk).
+    pub const DISK_WRITE_FAIL: usize = 2;
+    const POINTS: usize = 3;
+
+    /// Fast path: any point armed at all?
+    static ENABLED: AtomicBool = AtomicBool::new(false);
+    /// Per-point countdown: 0 = disarmed, `n` = fire on the n-th pass.
+    static ARMED: [AtomicU32; POINTS] = [AtomicU32::new(0), AtomicU32::new(0), AtomicU32::new(0)];
+
+    /// Arm `point` to fire on its `nth` upcoming pass (1 = the next one).
+    /// `nth = 0` disarms the point.
+    pub fn arm(point: usize, nth: u32) {
+        ARMED[point].store(nth, Ordering::SeqCst);
+        ENABLED.store(true, Ordering::SeqCst);
+    }
+
+    /// Disarm every point.
+    pub fn reset() {
+        for a in &ARMED {
+            a.store(0, Ordering::SeqCst);
+        }
+        ENABLED.store(false, Ordering::SeqCst);
+    }
+
+    /// Called by production code at an injection point. Returns whether
+    /// the armed fault should trigger here. Free (one relaxed load) when
+    /// nothing is armed.
+    pub fn fire(point: usize) -> bool {
+        if !ENABLED.load(Ordering::Relaxed) {
+            return false;
+        }
+        // Count this pass down; exactly one caller observes the 1 → 0
+        // transition and fires (workers race to this on purpose).
+        let prev = ARMED[point]
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1))
+            .unwrap_or(0);
+        prev == 1
+    }
+}
+
 /// Case generator handed to each property invocation.
 pub struct Gen {
     pub rng: Pcg64,

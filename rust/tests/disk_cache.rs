@@ -1,0 +1,330 @@
+//! The persistent disk cache tier (`engine::disk_cache`): spill-file
+//! round trips, restart-warm audits that re-solve zero frequencies and
+//! return bit-identical spectra, and the corruption suite — truncated,
+//! bit-flipped, wrong-version and wrong-key spill files must fail
+//! validation, be quarantined, and never be served.
+
+use conv_svd_lfa::conv::ConvKernel;
+use conv_svd_lfa::coordinator::{ServiceConfig, SpectralService};
+use conv_svd_lfa::engine::{DiskCache, Signature, SpectralCache, SpectrumRequest};
+use conv_svd_lfa::lfa::{self, LfaOptions};
+use conv_svd_lfa::model::ModelConfig;
+use conv_svd_lfa::numeric::Pcg64;
+use std::fs;
+use std::path::PathBuf;
+
+/// Unique, self-cleaning spill directory per test (tests run in parallel
+/// threads of one process, and possibly concurrently across processes).
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> Self {
+        let dir = std::env::temp_dir().join(format!("lfa-spill-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        TempDir(dir)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.0);
+    }
+}
+
+fn kernel(seed: u64) -> ConvKernel {
+    let mut rng = Pcg64::seeded(seed);
+    ConvKernel::random_he(3, 2, 3, 3, &mut rng)
+}
+
+fn sig_and_spectrum(seed: u64) -> (Signature, lfa::Spectrum) {
+    let k = kernel(seed);
+    let opts = LfaOptions::default();
+    let sig = Signature::result(&k, 8, 8, 1, &opts, SpectrumRequest::Full);
+    let spectrum = lfa::singular_values(&k, 8, 8, opts);
+    (sig, spectrum)
+}
+
+const MODEL: &str = "name = \"tiny\"\nseed = 3\n\
+    [[layer]]\nname = \"a\"\nc_in = 2\nc_out = 3\nheight = 8\nwidth = 8\n\
+    [[layer]]\nname = \"b\"\nc_in = 3\nc_out = 2\nheight = 6\nwidth = 6\n";
+
+fn service(dir: &TempDir) -> SpectralService {
+    SpectralService::start(ServiceConfig {
+        workers: 2,
+        disk_cache_dir: Some(dir.0.clone()),
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+#[test]
+fn spill_roundtrip_is_bit_exact_and_idempotent() {
+    let tmp = TempDir::new("roundtrip");
+    let disk = DiskCache::open(&tmp.0).unwrap();
+    let (sig, spectrum) = sig_and_spectrum(1);
+    assert!(disk.is_empty());
+    assert!(disk.put(&sig, &spectrum), "first put writes a spill file");
+    assert!(!disk.put(&sig, &spectrum), "second put is a content-addressed no-op");
+    assert_eq!(disk.len(), 1);
+    let back = disk.get(&sig).expect("spill file reads back");
+    assert_eq!(back.values.len(), spectrum.values.len());
+    for (a, b) in back.values.iter().zip(&spectrum.values) {
+        assert_eq!(a.to_bits(), b.to_bits(), "round trip must be bit-exact");
+    }
+    assert_eq!(
+        (back.n, back.m, back.c_out, back.c_in, back.per_freq),
+        (spectrum.n, spectrum.m, spectrum.c_out, spectrum.c_in, spectrum.per_freq)
+    );
+    let s = disk.stats();
+    assert_eq!((s.hits, s.misses, s.spills, s.corruptions), (1, 0, 1, 0));
+}
+
+#[test]
+fn missing_entry_is_a_miss_not_an_error() {
+    let tmp = TempDir::new("miss");
+    let disk = DiskCache::open(&tmp.0).unwrap();
+    let (sig, _) = sig_and_spectrum(2);
+    assert!(disk.get(&sig).is_none());
+    let s = disk.stats();
+    assert_eq!((s.hits, s.misses, s.corruptions), (0, 1, 0));
+}
+
+/// Each corruption shape: tamper, assert the read is a quarantining miss
+/// (None + corruption counted + file deleted), never a served value.
+fn assert_quarantined(disk: &DiskCache, sig: &Signature, what: &str) {
+    let path = disk.path_for(sig);
+    assert!(path.exists(), "{what}: tampered file still present before read");
+    assert!(disk.get(sig).is_none(), "{what}: corrupt spill must not be served");
+    assert_eq!(disk.stats().corruptions, 1, "{what}: corruption must be counted");
+    assert!(!path.exists(), "{what}: corrupt spill must be quarantined (deleted)");
+    // The slot now reads as a plain miss and can be re-spilled.
+    assert!(disk.get(sig).is_none());
+    assert_eq!(disk.stats().misses, 1, "{what}: post-quarantine read is a miss");
+}
+
+#[test]
+fn truncated_spill_is_quarantined() {
+    let tmp = TempDir::new("truncate");
+    let disk = DiskCache::open(&tmp.0).unwrap();
+    let (sig, spectrum) = sig_and_spectrum(3);
+    disk.put(&sig, &spectrum);
+    let path = disk.path_for(&sig);
+    let len = fs::metadata(&path).unwrap().len();
+    let f = fs::OpenOptions::new().write(true).open(&path).unwrap();
+    f.set_len(len / 2).unwrap();
+    drop(f);
+    assert_quarantined(&disk, &sig, "truncated");
+}
+
+#[test]
+fn bit_flipped_spill_is_quarantined() {
+    let tmp = TempDir::new("bitflip");
+    let disk = DiskCache::open(&tmp.0).unwrap();
+    let (sig, spectrum) = sig_and_spectrum(4);
+    disk.put(&sig, &spectrum);
+    let path = disk.path_for(&sig);
+    let mut bytes = fs::read(&path).unwrap();
+    // Flip one bit in the middle of the value payload: the checksum
+    // (not the geometry checks) is what must catch this.
+    let mid = 80 + (bytes.len() - 96) / 2;
+    bytes[mid] ^= 0x10;
+    fs::write(&path, &bytes).unwrap();
+    assert_quarantined(&disk, &sig, "bit-flipped");
+}
+
+#[test]
+fn wrong_version_spill_is_quarantined() {
+    let tmp = TempDir::new("version");
+    let disk = DiskCache::open(&tmp.0).unwrap();
+    let (sig, spectrum) = sig_and_spectrum(5);
+    disk.put(&sig, &spectrum);
+    let path = disk.path_for(&sig);
+    let mut bytes = fs::read(&path).unwrap();
+    // The version field sits outside the checksummed region, so this is
+    // exactly the "future format" shape: checksum fine, version not ours.
+    bytes[8] = bytes[8].wrapping_add(1);
+    fs::write(&path, &bytes).unwrap();
+    assert_quarantined(&disk, &sig, "wrong-version");
+}
+
+#[test]
+fn spill_under_wrong_key_is_quarantined() {
+    let tmp = TempDir::new("wrongkey");
+    let disk = DiskCache::open(&tmp.0).unwrap();
+    let (sig_a, spectrum_a) = sig_and_spectrum(6);
+    let (sig_b, _) = sig_and_spectrum(7);
+    disk.put(&sig_a, &spectrum_a);
+    // A well-formed file parked under another key's name (renamed spill,
+    // colliding copy): the embedded digest must reject it.
+    fs::copy(disk.path_for(&sig_a), disk.path_for(&sig_b)).unwrap();
+    assert!(disk.get(&sig_b).is_none(), "foreign spill must not be served");
+    assert_eq!(disk.stats().corruptions, 1);
+    assert!(!disk.path_for(&sig_b).exists());
+    // The original entry is untouched.
+    assert!(disk.get(&sig_a).is_some());
+}
+
+#[test]
+fn purge_empties_the_tier() {
+    let tmp = TempDir::new("purge");
+    let disk = DiskCache::open(&tmp.0).unwrap();
+    for seed in 10..13 {
+        let (sig, spectrum) = sig_and_spectrum(seed);
+        disk.put(&sig, &spectrum);
+    }
+    assert_eq!(disk.len(), 3);
+    assert_eq!(disk.purge(), 3);
+    assert!(disk.is_empty());
+}
+
+/// The headline acceptance test: audit, kill the process state (drop the
+/// service — the in-memory cache dies with it), restart against the same
+/// spill directory, repeat the audit. The warm run must be pure disk
+/// hits: zero frequencies re-solved, bit-identical singular values.
+#[test]
+fn restart_warm_audit_resolves_zero_frequencies_bit_identically() {
+    let tmp = TempDir::new("restart");
+    let model = ModelConfig::parse(MODEL).unwrap();
+
+    let svc1 = service(&tmp);
+    let cold = svc1.audit_model(&model).unwrap();
+    assert!(cold.iter().all(|r| !r.cached && r.solved_freqs > 0));
+    let stats1 = svc1.cache_stats().unwrap();
+    assert_eq!(stats1.disk_spills, 2, "every computed layer spills");
+    assert_eq!(stats1.disk_hits, 0);
+    svc1.shutdown();
+
+    // "Restart": a fresh service, fresh (empty) in-memory cache, same dir.
+    let svc2 = service(&tmp);
+    let warm = svc2.audit_model(&model).unwrap();
+    for (c, w) in cold.iter().zip(&warm) {
+        assert!(w.cached, "layer {} must be served from the disk tier", w.name);
+        assert_eq!(w.solved_freqs, 0, "layer {} must re-solve nothing", w.name);
+        assert_eq!(c.spectrum.values.len(), w.spectrum.values.len());
+        for (a, b) in c.spectrum.values.iter().zip(&w.spectrum.values) {
+            assert_eq!(a.to_bits(), b.to_bits(), "layer {}: bit-identical", w.name);
+        }
+    }
+    let stats2 = svc2.cache_stats().unwrap();
+    assert_eq!(stats2.disk_hits, 2, "both layers read back from disk");
+    assert_eq!(stats2.disk_spills, 0, "disk-served layers are not re-spilled");
+    assert_eq!(stats2.disk_corruptions, 0);
+    // The daemon's /metrics endpoint renders this snapshot — the disk
+    // counters must flow through it, not just through cache_stats().
+    let m = svc2.metrics();
+    assert_eq!(
+        (m.disk_hits, m.disk_misses, m.disk_spills, m.disk_corruptions),
+        (stats2.disk_hits, stats2.disk_misses, stats2.disk_spills, stats2.disk_corruptions)
+    );
+    svc2.shutdown();
+}
+
+/// A corrupted spill across a restart: the poisoned layer recomputes (and
+/// re-spills); the healthy layer still hits. Nothing is ever served from
+/// the bad file, and the recomputed spectrum matches the original.
+#[test]
+fn corrupted_spill_recomputes_and_reheals_across_restart() {
+    let tmp = TempDir::new("reheal");
+    let model = ModelConfig::parse(MODEL).unwrap();
+    let svc1 = service(&tmp);
+    let cold = svc1.audit_model(&model).unwrap();
+    svc1.shutdown();
+
+    // Corrupt exactly one spill file (deterministically: the first in
+    // sorted order).
+    let mut spills: Vec<PathBuf> = fs::read_dir(&tmp.0)
+        .unwrap()
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "spill"))
+        .collect();
+    spills.sort();
+    assert_eq!(spills.len(), 2);
+    let victim = &spills[0];
+    let mut bytes = fs::read(victim).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    fs::write(victim, &bytes).unwrap();
+
+    let svc2 = service(&tmp);
+    let warm = svc2.audit_model(&model).unwrap();
+    let stats = svc2.cache_stats().unwrap();
+    assert_eq!(stats.disk_corruptions, 1, "the tampered file is quarantined");
+    assert_eq!(stats.disk_hits, 1, "the healthy layer still hits");
+    assert_eq!(stats.disk_spills, 1, "the recomputed layer re-spills");
+    let recomputed: Vec<_> = warm.iter().filter(|r| !r.cached).collect();
+    assert_eq!(recomputed.len(), 1, "exactly one layer recomputes");
+    assert!(recomputed[0].solved_freqs > 0);
+    // Values are deterministic, so the recomputed layer agrees bit-for-bit
+    // with the original cold run.
+    for (c, w) in cold.iter().zip(&warm) {
+        for (a, b) in c.spectrum.values.iter().zip(&w.spectrum.values) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+    // And the tier healed: a third run is pure hits again.
+    assert_eq!(svc2.cache_stats().unwrap().entries, 2);
+    svc2.shutdown();
+    let svc3 = service(&tmp);
+    let hot = svc3.audit_model(&model).unwrap();
+    assert!(hot.iter().all(|r| r.cached && r.solved_freqs == 0));
+    svc3.shutdown();
+}
+
+/// An entry too big for the memory budget is still served by the disk
+/// tier: the tiers are independent, and disk has no byte budget.
+#[test]
+fn disk_tier_serves_entries_the_memory_budget_evicts() {
+    let tmp = TempDir::new("tiny-mem");
+    let disk = DiskCache::open(&tmp.0).unwrap();
+    // A 1-byte budget: nothing survives in memory.
+    let cache = SpectralCache::with_budget(1).with_disk(disk);
+    let (sig, spectrum) = sig_and_spectrum(8);
+    cache.insert(sig, std::sync::Arc::new(spectrum.clone()));
+    let stats = cache.stats();
+    assert_eq!(stats.entries, 0, "memory tier evicted the oversized entry");
+    assert_eq!(stats.disk_spills, 1, "…but it was written through to disk");
+    let back = cache.get(&sig).expect("served from disk despite memory eviction");
+    for (a, b) in back.values.iter().zip(&spectrum.values) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    assert_eq!(cache.stats().disk_hits, 1);
+}
+
+/// Signatures isolate entries: a different weight draw never reads
+/// another draw's spill file.
+#[test]
+fn keys_are_isolated_on_disk() {
+    let tmp = TempDir::new("isolation");
+    let disk = DiskCache::open(&tmp.0).unwrap();
+    let (sig_a, spec_a) = sig_and_spectrum(20);
+    let (sig_b, spec_b) = sig_and_spectrum(21);
+    assert_ne!(sig_a.file_digest(), sig_b.file_digest());
+    disk.put(&sig_a, &spec_a);
+    disk.put(&sig_b, &spec_b);
+    assert_eq!(disk.len(), 2);
+    let a = disk.get(&sig_a).unwrap();
+    let b = disk.get(&sig_b).unwrap();
+    assert_ne!(a.values, b.values);
+    assert_eq!(a.values, spec_a.values);
+    assert_eq!(b.values, spec_b.values);
+}
+
+/// The config cross-check: a disk tier below a disabled cache is a
+/// contradiction and must fail fast, not silently drop the tier.
+#[test]
+fn disk_dir_without_cache_is_rejected() {
+    let tmp = TempDir::new("no-cache");
+    let err = SpectralService::start(ServiceConfig {
+        workers: 1,
+        cache_bytes: None,
+        disk_cache_dir: Some(tmp.0.clone()),
+        ..Default::default()
+    })
+    .unwrap_err();
+    assert!(
+        err.to_string().contains("requires caching"),
+        "unexpected error: {err}"
+    );
+}

@@ -1,0 +1,323 @@
+//! Multi-tenant fairness: property tests for the daemon's deficit-round-
+//! robin [`FairQueue`] (admission quotas, bounded delay for well-behaved
+//! tenants, determinism) plus end-to-end checks over the daemon socket —
+//! a flooding tenant cannot starve a well-behaved one, quota rejections
+//! name the right tenant, and a serial and a threaded daemon make
+//! identical admission decisions for the same submission script.
+#![cfg(feature = "daemon")]
+
+use conv_svd_lfa::coordinator::server::serve;
+use conv_svd_lfa::coordinator::{DaemonConfig, FairQueue, ServiceConfig};
+use conv_svd_lfa::testing::{prop_assert, prop_check, Gen};
+use std::collections::{HashMap, VecDeque};
+use std::fs;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+// ---------------------------------------------------------------------
+// FairQueue unit + property tests
+// ---------------------------------------------------------------------
+
+/// Random op sequences against a reference model: quotas are enforced
+/// per tenant with the exact (tenant, pending, quota) rejection payload,
+/// pops respect per-tenant FIFO order, no job is lost or duplicated —
+/// and a twin queue fed the identical sequence stays in lockstep (the
+/// determinism the daemon's serial-vs-threaded admission test relies on).
+#[test]
+fn fairqueue_random_ops_match_reference_model() {
+    prop_check("fairqueue invariants", 150, |g: &mut Gen| {
+        let quota = g.usize_in(1, 4);
+        let quantum = g.usize_in(1, 4);
+        let mut q = FairQueue::new(quota, quantum);
+        let mut twin = FairQueue::new(quota, quantum);
+        let tenants = ["a", "b", "c"];
+        // Reference model: per-tenant FIFO of queued ids + in-flight count.
+        let mut queued: HashMap<&str, VecDeque<u64>> =
+            tenants.iter().map(|t| (*t, VecDeque::new())).collect();
+        let mut in_flight: HashMap<&str, usize> = tenants.iter().map(|t| (*t, 0)).collect();
+        let mut next_id = 0u64;
+        let ops = g.usize_in(10, 80);
+        for _ in 0..ops {
+            match g.usize_in(0, 2) {
+                0 => {
+                    let t = *g.pick(&tenants);
+                    let cost = g.usize_in(1, 5);
+                    let id = next_id;
+                    next_id += 1;
+                    let r = q.try_enqueue(t, id, cost);
+                    prop_assert(r == twin.try_enqueue(t, id, cost), "twin diverged: enqueue")?;
+                    let pending = queued[t].len() + in_flight[t];
+                    match r {
+                        Ok(()) => {
+                            prop_assert(pending < quota, format!("admitted over quota: {t}"))?;
+                            queued.get_mut(t).unwrap().push_back(id);
+                        }
+                        Err(e) => {
+                            prop_assert(
+                                pending >= quota,
+                                format!("rejected under quota: {t} at {pending}/{quota}"),
+                            )?;
+                            prop_assert(
+                                e.tenant == t && e.pending == pending && e.quota == quota,
+                                format!("wrong rejection payload: {e:?}"),
+                            )?;
+                        }
+                    }
+                }
+                1 => {
+                    let r = q.pop();
+                    prop_assert(r == twin.pop(), "twin diverged: pop")?;
+                    match r {
+                        Some((id, t)) => {
+                            let fifo = queued.get_mut(t.as_str()).unwrap();
+                            prop_assert(
+                                fifo.front() == Some(&id),
+                                format!("pop broke {t}'s FIFO order: got {id}"),
+                            )?;
+                            fifo.pop_front();
+                            *in_flight.get_mut(t.as_str()).unwrap() += 1;
+                        }
+                        None => {
+                            prop_assert(
+                                queued.values().all(|f| f.is_empty()),
+                                "pop returned None with work queued",
+                            )?;
+                        }
+                    }
+                }
+                _ => {
+                    let t = *g.pick(&tenants);
+                    if in_flight[t] > 0 {
+                        q.complete(t);
+                        twin.complete(t);
+                        *in_flight.get_mut(t).unwrap() -= 1;
+                    }
+                }
+            }
+        }
+        // Drain: everything admitted must come out, exactly once.
+        let mut remaining: usize = queued.values().map(|f| f.len()).sum();
+        while let Some((id, t)) = q.pop() {
+            let fifo = queued.get_mut(t.as_str()).unwrap();
+            prop_assert(fifo.pop_front() == Some(id), "drain lost FIFO order")?;
+            remaining -= 1;
+        }
+        prop_assert(remaining == 0, format!("{remaining} admitted jobs never dispatched"))?;
+        Ok(())
+    });
+}
+
+/// Bounded delay: however deep another tenant's backlog, a well-behaved
+/// tenant's unit-cost job is served within one cursor sweep — with two
+/// active tenants, within 2 pops of being enqueued.
+#[test]
+fn well_behaved_tenant_is_served_within_one_sweep() {
+    prop_check("bounded delay under flood", 100, |g: &mut Gen| {
+        let quantum = g.usize_in(1, 4);
+        let mut q = FairQueue::new(1_000, quantum);
+        let flood_depth = g.usize_in(5, 40);
+        for id in 0..flood_depth as u64 {
+            q.try_enqueue("flood", id, g.usize_in(1, 5)).unwrap();
+        }
+        // Let the flood get an arbitrary head start.
+        for _ in 0..g.usize_in(0, 5) {
+            q.pop();
+        }
+        q.try_enqueue("good", 9_999, 1).unwrap();
+        let served_within = (1..=2).any(|_| matches!(q.pop(), Some((9_999, _))));
+        prop_assert(
+            served_within,
+            format!("good tenant starved behind a {flood_depth}-deep flood"),
+        )?;
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Daemon-level fairness over the socket
+// ---------------------------------------------------------------------
+
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> Self {
+        let dir = std::env::temp_dir().join(format!("lfa-fair-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        TempDir(dir)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.0);
+    }
+}
+
+/// A model big enough that a job takes real milliseconds (so completion
+/// races in the flood test have a wide margin), small enough to stay fast.
+fn write_model(dir: &TempDir) -> PathBuf {
+    let path = dir.0.join("model.toml");
+    fs::write(
+        &path,
+        "name = \"fair\"\nseed = 3\n\
+         [[layer]]\nname = \"a\"\nc_in = 2\nc_out = 3\nheight = 24\nwidth = 24\n",
+    )
+    .unwrap();
+    path
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { reader, writer: stream }
+    }
+
+    fn send(&mut self, line: &str) -> String {
+        writeln!(self.writer, "{line}").unwrap();
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).unwrap();
+        assert!(!reply.is_empty(), "daemon closed the connection on {line:?}");
+        reply.trim_end().to_string()
+    }
+}
+
+fn queued_id(reply: &str) -> u64 {
+    assert!(reply.starts_with("QUEUED id="), "not an admission reply: {reply}");
+    reply
+        .split_whitespace()
+        .find_map(|tok| tok.strip_prefix("id="))
+        .unwrap()
+        .parse()
+        .unwrap()
+}
+
+fn daemon_config(workers: usize, max_inflight: usize, quota: usize, paused: bool) -> DaemonConfig {
+    DaemonConfig {
+        service: ServiceConfig { workers, tenant_quota: quota, ..Default::default() },
+        addr: "127.0.0.1:0".to_string(),
+        max_inflight,
+        start_paused: paused,
+        ..Default::default()
+    }
+}
+
+/// A flooding tenant submits a deep backlog, then a well-behaved tenant
+/// submits one job; with a single runner the well-behaved job must
+/// complete while most of the flood is still pending — FIFO would have
+/// completed the entire flood first.
+#[test]
+fn flooding_tenant_cannot_starve_well_behaved_one() {
+    let tmp = TempDir::new("flood");
+    let model = write_model(&tmp);
+    let model = model.to_str().unwrap();
+    let handle = serve(daemon_config(2, 1, 8, true)).unwrap();
+    let mut c = Client::connect(handle.addr());
+    let flood_ids: Vec<u64> =
+        (0..6).map(|_| queued_id(&c.send(&format!("SUBMIT flood {model}")))).collect();
+    let good_id = queued_id(&c.send(&format!("SUBMIT good {model}")));
+    assert_eq!(c.send("RESUME"), "OK resumed");
+    let done = c.send(&format!("WAIT {good_id}"));
+    assert!(done.starts_with("DONE id="), "good tenant's job must complete: {done}");
+    // The flood was submitted first; strict FIFO would finish all 6 flood
+    // jobs before the good tenant's. DRR must interleave instead.
+    let flood_done = flood_ids
+        .iter()
+        .filter(|id| c.send(&format!("POLL {id}")).starts_with("DONE"))
+        .count();
+    assert!(
+        flood_done < flood_ids.len(),
+        "good tenant was served only after the whole flood drained"
+    );
+    // Drain and stop; the flood does complete eventually (no lost jobs).
+    for id in &flood_ids {
+        assert!(c.send(&format!("WAIT {id}")).starts_with("DONE"), "flood job {id} lost");
+    }
+    assert_eq!(c.send("SHUTDOWN"), "OK shutting-down");
+    handle.wait();
+}
+
+/// Quota rejections are per-tenant and carry the right payload: the
+/// flooding tenant is named (never the well-behaved one), with its own
+/// pending count; the other tenant still gets admitted.
+#[test]
+fn quota_rejection_names_the_offending_tenant() {
+    let tmp = TempDir::new("quota");
+    let model = write_model(&tmp);
+    let model = model.to_str().unwrap();
+    // Paused: nothing completes, so admission state is exact.
+    let handle = serve(daemon_config(1, 1, 2, true)).unwrap();
+    let mut c = Client::connect(handle.addr());
+    let mut admitted = Vec::new();
+    admitted.push(queued_id(&c.send(&format!("SUBMIT flood {model}"))));
+    admitted.push(queued_id(&c.send(&format!("SUBMIT flood {model}"))));
+    let rejected = c.send(&format!("SUBMIT flood {model}"));
+    assert_eq!(rejected, "ERR quota tenant=flood pending=2 limit=2");
+    // The other tenant's budget is untouched.
+    admitted.push(queued_id(&c.send(&format!("SUBMIT calm {model}"))));
+    assert_eq!(c.send("RESUME"), "OK resumed");
+    for id in &admitted {
+        assert!(c.send(&format!("WAIT {id}")).starts_with("DONE"));
+    }
+    // Completion freed the flood tenant's quota.
+    assert!(c.send(&format!("SUBMIT flood {model}")).starts_with("QUEUED"));
+    assert_eq!(c.send("SHUTDOWN"), "OK shutting-down");
+    handle.wait();
+}
+
+/// Admission decisions depend only on the submission sequence, never on
+/// scheduler threading: a serial daemon (1 worker, 1 runner) and a
+/// threaded one (4 workers, 4 runners) given the same paused submission
+/// script produce byte-identical reply transcripts.
+#[test]
+fn serial_and_threaded_daemons_admit_identically() {
+    let tmp = TempDir::new("determinism");
+    let model = write_model(&tmp);
+    let model = model.to_str().unwrap();
+    let script: Vec<&str> = vec!["a", "a", "b", "a", "b", "b", "a", "c", "a", "b"];
+    let mut transcripts = Vec::new();
+    for (workers, inflight) in [(1, 1), (4, 4)] {
+        let handle = serve(daemon_config(workers, inflight, 3, true)).unwrap();
+        let mut c = Client::connect(handle.addr());
+        let mut transcript = Vec::new();
+        for tenant in &script {
+            let reply = c.send(&format!("SUBMIT {tenant} {model}"));
+            if let Some(rest) = reply.strip_prefix("ERR quota ") {
+                assert!(
+                    rest.contains(&format!("tenant={tenant}")),
+                    "rejection names the wrong tenant: {reply}"
+                );
+            }
+            transcript.push(reply);
+        }
+        // Drain so shutdown is clean.
+        assert_eq!(c.send("RESUME"), "OK resumed");
+        for reply in &transcript {
+            if reply.starts_with("QUEUED") {
+                let id = queued_id(reply);
+                assert!(c.send(&format!("WAIT {id}")).starts_with("DONE"));
+            }
+        }
+        assert_eq!(c.send("SHUTDOWN"), "OK shutting-down");
+        handle.wait();
+        transcripts.push(transcript);
+    }
+    assert_eq!(
+        transcripts[0], transcripts[1],
+        "serial and threaded admission must be byte-identical"
+    );
+    // Sanity on the shared transcript: quota 3 per tenant, nothing ran
+    // while paused → a (5 submits) admits 3, b (4) admits 3, c (1) admits 1.
+    let queued = transcripts[0].iter().filter(|r| r.starts_with("QUEUED")).count();
+    let rejected = transcripts[0].iter().filter(|r| r.starts_with("ERR quota")).count();
+    assert_eq!((queued, rejected), (7, 3));
+}

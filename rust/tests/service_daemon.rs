@@ -1,0 +1,392 @@
+//! Fault-injection suite for the service and the `lfa-convd` daemon:
+//! worker panics mid-tile, injected tile failures, disk-spill write
+//! failures, client disconnects mid-request, slow consumers, and request
+//! timeouts. Every fault must degrade gracefully — a typed error reply,
+//! no hang, no poisoned scheduler state, and subsequent requests served.
+#![cfg(feature = "daemon")]
+
+use conv_svd_lfa::coordinator::server::serve;
+use conv_svd_lfa::coordinator::{DaemonConfig, ServiceConfig, SpectralService};
+use conv_svd_lfa::engine::{DiskCache, Signature, SpectralCache, SpectrumRequest};
+use conv_svd_lfa::lfa::{self, LfaOptions};
+use conv_svd_lfa::model::ModelConfig;
+use conv_svd_lfa::numeric::Pcg64;
+use conv_svd_lfa::testing::chaos;
+use std::fs;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------
+// Shared plumbing
+// ---------------------------------------------------------------------
+
+/// Chaos state is process-global and these tests run as parallel threads
+/// of one binary — an injection point armed by one test could fire inside
+/// another's scheduler tiles. *Every* test in this file holds this guard
+/// (serializing the whole file), and chaos is disarmed on entry and on
+/// drop (even when the test itself panics).
+struct ChaosGuard(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl Drop for ChaosGuard {
+    fn drop(&mut self) {
+        chaos::reset();
+    }
+}
+
+fn chaos_guard() -> ChaosGuard {
+    static LOCK: Mutex<()> = Mutex::new(());
+    // A previous test panicking while holding the lock is fine — chaos
+    // state is reset on entry either way.
+    let guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    chaos::reset();
+    ChaosGuard(guard)
+}
+
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> Self {
+        let dir = std::env::temp_dir().join(format!("lfa-daemon-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        TempDir(dir)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.0);
+    }
+}
+
+const MODEL: &str = "name = \"tiny\"\nseed = 3\n\
+    [[layer]]\nname = \"a\"\nc_in = 2\nc_out = 3\nheight = 8\nwidth = 8\n\
+    [[layer]]\nname = \"b\"\nc_in = 3\nc_out = 2\nheight = 6\nwidth = 6\n";
+
+fn write_model(dir: &TempDir) -> String {
+    let path = dir.0.join("model.toml");
+    fs::write(&path, MODEL).unwrap();
+    path.to_str().unwrap().to_string()
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { reader, writer: stream }
+    }
+
+    fn send(&mut self, line: &str) -> String {
+        writeln!(self.writer, "{line}").unwrap();
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).unwrap();
+        assert!(!reply.is_empty(), "daemon closed the connection on {line:?}");
+        reply.trim_end().to_string()
+    }
+}
+
+/// Pull `key=` out of a `DONE …` / `QUEUED …` reply.
+fn field<'a>(reply: &'a str, key: &str) -> &'a str {
+    reply
+        .split_whitespace()
+        .find_map(|tok| tok.strip_prefix(key).and_then(|t| t.strip_prefix('=')))
+        .unwrap_or_else(|| panic!("no {key}= in {reply:?}"))
+}
+
+fn daemon(service: ServiceConfig, tweak: impl FnOnce(&mut DaemonConfig)) -> DaemonConfig {
+    let mut config = DaemonConfig {
+        service,
+        addr: "127.0.0.1:0".to_string(),
+        ..Default::default()
+    };
+    tweak(&mut config);
+    config
+}
+
+// ---------------------------------------------------------------------
+// Chaos at the service layer: typed errors, no poisoned state
+// ---------------------------------------------------------------------
+
+/// A worker panicking mid-tile must surface as a typed job error — and
+/// the scheduler (threads, locks, queue) must stay fully usable after.
+#[test]
+fn worker_panic_degrades_to_typed_error_and_service_survives() {
+    let _guard = chaos_guard();
+    let model = ModelConfig::parse(MODEL).unwrap();
+    let svc = SpectralService::native(2);
+    chaos::arm(chaos::TILE_PANIC, 1);
+    let err = svc.audit_model(&model).unwrap_err().to_string();
+    assert!(err.contains("panicked mid-tile"), "untyped panic error: {err}");
+    chaos::reset();
+    // No poisoned mutexes, no dead workers: the same service serves the
+    // same audit cleanly.
+    let reports = svc.audit_model(&model).unwrap();
+    assert!(reports.iter().all(|r| r.sigma_max > 0.0));
+    svc.shutdown();
+}
+
+/// An injected tile *failure* (typed error, no unwinding) takes the same
+/// graceful path.
+#[test]
+fn injected_tile_failure_is_typed_and_recoverable() {
+    let _guard = chaos_guard();
+    let model = ModelConfig::parse(MODEL).unwrap();
+    let svc = SpectralService::native(2);
+    chaos::arm(chaos::TILE_ERROR, 1);
+    let err = svc.audit_model(&model).unwrap_err().to_string();
+    assert!(err.contains("chaos: injected tile failure"), "unexpected error: {err}");
+    chaos::reset();
+    assert!(svc.audit_model(&model).is_ok());
+    let m = svc.metrics();
+    assert!(m.jobs_failed > 0, "the failed job must be accounted");
+    svc.shutdown();
+}
+
+/// A failing spill write (full/read-only disk) must not fail the job —
+/// the tier degrades to memory-only for that entry and heals on the next
+/// write.
+#[test]
+fn disk_write_failure_degrades_without_failing_the_insert() {
+    let _guard = chaos_guard();
+    let tmp = TempDir::new("disk-chaos");
+    let cache =
+        SpectralCache::with_budget_or_default(0).with_disk(DiskCache::open(&tmp.0).unwrap());
+    let mut rng = Pcg64::seeded(11);
+    let kernel = conv_svd_lfa::conv::ConvKernel::random_he(2, 2, 3, 3, &mut rng);
+    let opts = LfaOptions::default();
+    let sig = Signature::result(&kernel, 8, 8, 1, &opts, SpectrumRequest::Full);
+    let spectrum = std::sync::Arc::new(lfa::singular_values(&kernel, 8, 8, opts));
+
+    chaos::arm(chaos::DISK_WRITE_FAIL, 1);
+    cache.insert(sig, std::sync::Arc::clone(&spectrum));
+    let stats = cache.stats();
+    assert_eq!(stats.disk_spills, 0, "the injected write failure must drop the spill");
+    assert_eq!(stats.entries, 1, "…but the memory tier still serves the entry");
+    assert!(cache.get(&sig).is_some());
+
+    // Disarmed, the same content heals onto disk on the next insert.
+    chaos::reset();
+    cache.insert(sig, spectrum);
+    assert_eq!(cache.stats().disk_spills, 1);
+    assert!(cache.disk().unwrap().get(&sig).is_some());
+}
+
+// ---------------------------------------------------------------------
+// The daemon protocol end to end
+// ---------------------------------------------------------------------
+
+#[test]
+fn daemon_protocol_end_to_end() {
+    let _guard = chaos_guard();
+    let tmp = TempDir::new("proto");
+    let model = write_model(&tmp);
+    let handle = serve(daemon(ServiceConfig::default(), |_| {})).unwrap();
+    let mut c = Client::connect(handle.addr());
+
+    assert_eq!(c.send("PING"), "PONG");
+    assert!(c.send("FROB").starts_with("ERR bad-request unknown command"));
+    assert!(c.send("SUBMIT t1").starts_with("ERR bad-request usage:"));
+    assert!(c.send("SUBMIT t1 no-such-model").starts_with("ERR bad-request"));
+    assert_eq!(c.send("POLL 99"), "ERR unknown-job id=99");
+
+    // Cold audit.
+    let queued = c.send(&format!("SUBMIT t1 {model}"));
+    assert_eq!(field(&queued, "tenant"), "t1");
+    assert_eq!(field(&queued, "cost"), "2", "cost = layer count");
+    let id = field(&queued, "id").to_string();
+    let done = c.send(&format!("WAIT {id}"));
+    assert!(done.starts_with("DONE id="), "unexpected: {done}");
+    assert_eq!(field(&done, "layers"), "2");
+    assert!(field(&done, "solved").parse::<usize>().unwrap() > 0);
+    assert_eq!(field(&done, "cached"), "0");
+    // Terminal state is stable and repeatable.
+    assert_eq!(c.send(&format!("POLL {id}")), done);
+
+    // Warm repeat in the same daemon: pure memory-cache hits.
+    let id2 = field(&c.send(&format!("SUBMIT t1 {model}")), "id").to_string();
+    let done2 = c.send(&format!("WAIT {id2}"));
+    assert_eq!(field(&done2, "cached"), "2");
+    assert_eq!(field(&done2, "solved"), "0");
+    assert_eq!(field(&done2, "sigma_max"), field(&done, "sigma_max"));
+
+    // Partial-spectrum submissions ride the same path.
+    let id3 = field(&c.send(&format!("SUBMIT t2 {model} top-k=1")), "id").to_string();
+    assert!(c.send(&format!("WAIT {id3}")).starts_with("DONE"));
+
+    // Metrics: one line of key=value pairs fed by the scheduler snapshot.
+    let metrics = c.send("METRICS");
+    assert!(metrics.starts_with("METRICS "));
+    for key in ["jobs_completed=", "cache_hits=", "disk_hits=", "tenants=", "quota_rejections="] {
+        assert!(metrics.contains(key), "METRICS must report {key}: {metrics}");
+    }
+    let stats = c.send("STATS");
+    assert!(stats.starts_with("STATS hits="), "unexpected: {stats}");
+
+    // The HTTP scrape endpoint on a fresh connection.
+    let mut http = TcpStream::connect(handle.addr()).unwrap();
+    http.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    write!(http, "GET /metrics HTTP/1.1\r\nHost: localhost\r\n\r\n").unwrap();
+    let mut response = String::new();
+    http.read_to_string(&mut response).unwrap();
+    assert!(response.starts_with("HTTP/1.1 200 OK"), "bad response: {response}");
+    assert!(response.contains("lfa_jobs_completed "));
+    assert!(response.contains("lfa_disk_hits "));
+
+    assert_eq!(c.send("QUIT"), "BYE");
+    let mut c2 = Client::connect(handle.addr());
+    assert_eq!(c2.send("SHUTDOWN"), "OK shutting-down");
+    handle.wait();
+}
+
+/// A client vanishing mid-request leaves the daemon — and other clients'
+/// jobs — untouched.
+#[test]
+fn client_disconnect_mid_request_leaves_daemon_healthy() {
+    let _guard = chaos_guard();
+    let tmp = TempDir::new("disconnect");
+    let model = write_model(&tmp);
+    let handle = serve(daemon(ServiceConfig::default(), |_| {})).unwrap();
+
+    // A half-written request line, then a hard drop.
+    let mut rude = TcpStream::connect(handle.addr()).unwrap();
+    rude.write_all(b"SUBMIT t1 ").unwrap();
+    drop(rude);
+    // A clean disconnect with a job in flight: the job survives the
+    // connection and stays pollable from a *new* connection.
+    let mut submitter = Client::connect(handle.addr());
+    let id = field(&submitter.send(&format!("SUBMIT t1 {model}")), "id").to_string();
+    drop(submitter);
+
+    let mut c = Client::connect(handle.addr());
+    assert_eq!(c.send("PING"), "PONG");
+    let done = c.send(&format!("WAIT {id}"));
+    assert!(done.starts_with("DONE id="), "orphaned job must still complete: {done}");
+    assert_eq!(c.send("SHUTDOWN"), "OK shutting-down");
+    handle.wait();
+}
+
+/// A connection that goes quiet gets the typed slow-consumer reply and is
+/// closed — handler threads are never parked on dead clients.
+#[test]
+fn slow_consumer_is_timed_out_with_a_typed_reply() {
+    let _guard = chaos_guard();
+    let handle =
+        serve(daemon(ServiceConfig::default(), |d| d.io_timeout = Duration::from_millis(250)))
+            .unwrap();
+    let stream = TcpStream::connect(handle.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    // Send nothing; the daemon must speak first, then hang up.
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR slow-consumer"), "unexpected: {line}");
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "connection must be closed");
+    // The daemon itself is unaffected.
+    let mut c = Client::connect(handle.addr());
+    assert_eq!(c.send("PING"), "PONG");
+    assert_eq!(c.send("SHUTDOWN"), "OK shutting-down");
+    handle.wait();
+}
+
+/// Jobs queued past their deadline are cancelled *unrun*: the reply is a
+/// typed timeout and the scheduler never sees the job.
+#[test]
+fn request_timeout_cancels_queued_jobs_without_running_them() {
+    let _guard = chaos_guard();
+    let tmp = TempDir::new("timeout");
+    let model = write_model(&tmp);
+    let handle = serve(daemon(ServiceConfig::default(), |d| {
+        d.request_timeout = Duration::from_millis(200);
+        d.start_paused = true; // hold dispatch so the deadline passes while queued
+    }))
+    .unwrap();
+    let mut c = Client::connect(handle.addr());
+    let id = field(&c.send(&format!("SUBMIT t1 {model}")), "id").to_string();
+    std::thread::sleep(Duration::from_millis(350));
+    assert_eq!(c.send(&format!("POLL {id}")), format!("ERR timeout id={id}"));
+    assert_eq!(c.send(&format!("WAIT {id}")), format!("ERR timeout id={id}"));
+    // Release dispatch: the runner must *skip* the expired job.
+    assert_eq!(c.send("RESUME"), "OK resumed");
+    std::thread::sleep(Duration::from_millis(100));
+    let metrics = c.send("METRICS");
+    assert!(
+        metrics.contains("jobs_submitted=0"),
+        "an expired queued job must never reach the scheduler: {metrics}"
+    );
+    assert!(metrics.contains("jobs_queued=0"), "the cancelled job must leave the queue");
+    assert_eq!(c.send("PING"), "PONG");
+    assert_eq!(c.send("SHUTDOWN"), "OK shutting-down");
+    handle.wait();
+}
+
+/// A worker panic inside a daemon-dispatched job becomes a typed
+/// `ERR failed` reply, and the daemon keeps serving.
+#[test]
+fn daemon_survives_worker_panic_mid_job() {
+    let _guard = chaos_guard();
+    let tmp = TempDir::new("panic");
+    let model = write_model(&tmp);
+    let handle = serve(daemon(ServiceConfig::default(), |_| {})).unwrap();
+    let mut c = Client::connect(handle.addr());
+    chaos::arm(chaos::TILE_PANIC, 1);
+    let id = field(&c.send(&format!("SUBMIT t1 {model}")), "id").to_string();
+    let reply = c.send(&format!("WAIT {id}"));
+    assert!(
+        reply.starts_with(&format!("ERR failed id={id}")) && reply.contains("panicked mid-tile"),
+        "panic must become a typed failure reply: {reply}"
+    );
+    chaos::reset();
+    // Same daemon, same scheduler: the next submission completes.
+    let id2 = field(&c.send(&format!("SUBMIT t1 {model}")), "id").to_string();
+    assert!(c.send(&format!("WAIT {id2}")).starts_with("DONE"));
+    assert_eq!(c.send("SHUTDOWN"), "OK shutting-down");
+    handle.wait();
+}
+
+/// The daemon acceptance path: audit over the socket, SHUTDOWN, restart a
+/// daemon on the same spill directory, repeat the audit — pure disk hits,
+/// zero frequencies re-solved, identical reported σ_max.
+#[test]
+fn daemon_restart_warm_audit_hits_disk() {
+    let _guard = chaos_guard();
+    let tmp = TempDir::new("restart");
+    let model = write_model(&tmp);
+    let spill = tmp.0.join("spill");
+    let service = |dir: &PathBuf| ServiceConfig {
+        disk_cache_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+
+    let handle = serve(daemon(service(&spill), |_| {})).unwrap();
+    let mut c = Client::connect(handle.addr());
+    let id = field(&c.send(&format!("SUBMIT t1 {model}")), "id").to_string();
+    let cold = c.send(&format!("WAIT {id}"));
+    assert!(field(&cold, "solved").parse::<usize>().unwrap() > 0);
+    let stats = c.send("STATS");
+    assert!(stats.contains("disk_spills=2"), "cold run must spill both layers: {stats}");
+    assert_eq!(c.send("SHUTDOWN"), "OK shutting-down");
+    handle.wait();
+
+    // Restart on the same directory: a fresh process's daemon, warm disk.
+    let handle = serve(daemon(service(&spill), |_| {})).unwrap();
+    let mut c = Client::connect(handle.addr());
+    let id = field(&c.send(&format!("SUBMIT t1 {model}")), "id").to_string();
+    let warm = c.send(&format!("WAIT {id}"));
+    assert_eq!(field(&warm, "solved"), "0", "warm restart must re-solve nothing: {warm}");
+    assert_eq!(field(&warm, "cached"), "2");
+    assert_eq!(field(&warm, "sigma_max"), field(&cold, "sigma_max"));
+    let stats = c.send("STATS");
+    assert!(stats.contains("disk_hits=2"), "both layers must read back: {stats}");
+    assert!(stats.contains("disk_corruptions=0"), "clean spill files: {stats}");
+    assert_eq!(c.send("SHUTDOWN"), "OK shutting-down");
+    handle.wait();
+}
