@@ -258,7 +258,7 @@ fn main() {
         let t_full = m.min().as_secs_f64();
 
         let mut out_top = vec![0.0f64; plan.topk_values_len(kk)];
-        let warm_iters = plan.execute_topk_into(kk, &mut out_top); // warm the pool
+        let (warm_iters, _) = plan.execute_topk_into(kk, &mut out_top); // warm the pool
         let m = bench.measure("topk-warm", || {
             plan.execute_topk_into(kk, &mut out_top);
             out_top[0]
@@ -668,6 +668,50 @@ fn main() {
         )
     };
 
+    // --- Health overhead: certified sweep vs values-only consumption ---
+    // Convergence certificates are woven into the solve (the residual the
+    // certificate reports is the same quantity the Jacobi/Krylov stopping
+    // test already computes), so there is no "certificates off" switch to
+    // flip. This section bounds what the health layer *adds on top of the
+    // hot loop* — per-frequency verdict aggregation and the Spectrum
+    // packaging that carries SpectrumHealth — by comparing the certified
+    // path (`execute()`, health carried on the result) against the leanest
+    // values-only path (`execute_into` into a reused buffer, certificate
+    // discarded). The acceptance line: ≤2% on the 64-channel full sweep.
+    let (hv_c, hv_n) = (fold_c, fold_n);
+    let mut health_rows: Vec<[String; 4]> = Vec::new();
+    let health_verdict = {
+        let mut rng = Pcg64::seeded(1007);
+        let k = ConvKernel::random_he(hv_c, hv_c, 3, 3, &mut rng);
+        let plan = SpectralPlan::new(&k, hv_n, hv_n, serial());
+        let mut out = vec![0.0f64; plan.values_len()];
+        plan.execute_into(&mut out); // warm the pool
+        let m = bench.measure("health-values-only", || {
+            plan.execute_into(&mut out);
+            out[0]
+        });
+        json.record_measurement(&format!("health-overhead values-only c={hv_c} n={hv_n}"), &m);
+        let t_values = m.min().as_secs_f64();
+        let m = bench.measure("health-certified", || {
+            let spectrum = plan.execute();
+            spectrum.health.converged_freqs
+        });
+        json.record_measurement(&format!("health-overhead certified c={hv_c} n={hv_n}"), &m);
+        let t_cert = m.min().as_secs_f64();
+        let overhead = (t_cert / t_values.max(1e-12) - 1.0) * 100.0;
+        health_rows.push([
+            format!("c{hv_c} n={hv_n} serial full"),
+            format!("{:.3} ms", t_values * 1e3),
+            format!("{:.3} ms", t_cert * 1e3),
+            format!("{overhead:+.2}%"),
+        ]);
+        format!(
+            "health verdict: c{hv_c} n={hv_n} serial full sweep — certified path \
+             {overhead:+.2}% vs values-only (target ≤2%: certificate bookkeeping \
+             must be free next to the O(c³) per-frequency solve)"
+        )
+    };
+
     println!("# Table I — measured scaling exponents vs theory");
     let mut table = Table::new(["series", "fit slope", "theory", "verdict"]);
     let rows: Vec<(&str, f64, f64, f64)> = vec![
@@ -770,6 +814,14 @@ fn main() {
     }
     print!("{}", gtable.render());
     println!("{grouped_verdict}");
+
+    println!("\n# Health — certified sweep vs values-only consumption (health-overhead)");
+    let mut htable = Table::new(["workload", "values-only", "certified", "overhead"]);
+    for row in health_rows {
+        htable.row(row);
+    }
+    print!("{}", htable.render());
+    println!("{health_verdict}");
 
     if let Some(path) = &opts.json {
         json.write(path).expect("writing bench json");

@@ -69,7 +69,7 @@ fn main() {
             let grid = grid.to_layout(BlockLayout::BlockContiguous);
             let t_copy = t0.elapsed();
             let t0 = Instant::now();
-            let v = svd_pass(&grid, serial());
+            let (v, _) = svd_pass(&grid, serial());
             let t_svd = t0.elapsed();
             (v, t_f, t_copy, t_svd)
         };
@@ -83,7 +83,7 @@ fn main() {
             let grid = lfa::compute_symbols(&kernel, n, n, BlockLayout::PlanarStrided);
             let t_f = t0.elapsed();
             let t0 = Instant::now();
-            let v = svd_pass(&grid, LfaOptions { layout: BlockLayout::PlanarStrided, ..serial() });
+            let (v, _) = svd_pass(&grid, LfaOptions { layout: BlockLayout::PlanarStrided, ..serial() });
             let t_svd = t0.elapsed();
             (v, t_f, t_svd)
         };

@@ -5,7 +5,7 @@
 //! memory/time wall).
 
 use crate::conv::{unroll_dense, Boundary, ConvKernel};
-use crate::lfa::Spectrum;
+use crate::lfa::{Spectrum, SpectrumHealth};
 use crate::linalg::gk_svd;
 use std::time::{Duration, Instant};
 
@@ -38,6 +38,9 @@ pub fn singular_values_timed(
             c_in: kernel.c_in,
             per_freq: kernel.c_out.min(kernel.c_in),
             values,
+            // The dense GK route carries no per-frequency certificates (the
+            // frequency association itself is lost) — empty evidence.
+            health: SpectrumHealth::default(),
         },
         (unroll, svd),
     )

@@ -118,7 +118,8 @@ pub fn singular_values_timed(
     let copy = t1.elapsed();
 
     let t2 = Instant::now();
-    let values = svd_pass(&grid, LfaOptions { threads, layout: grid.layout, ..Default::default() });
+    let (values, health) =
+        svd_pass(&grid, LfaOptions { threads, layout: grid.layout, ..Default::default() });
     let svd = t2.elapsed();
     (
         Spectrum {
@@ -128,6 +129,7 @@ pub fn singular_values_timed(
             c_in: kernel.c_in,
             per_freq: kernel.c_out.min(kernel.c_in),
             values,
+            health,
         },
         StageTiming { transform, copy, svd },
     )

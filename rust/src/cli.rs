@@ -28,6 +28,7 @@ COMMANDS
                [--groups G] [--dilation D] [--transposed]
                [--precision f64|f32|f32-refined]
                [--cache-bytes N] [--no-cache] [--disk-cache-dir DIR]
+               [--strict-health]
                Analyze all conv layers of a model through the coordinator
                service (one planned model job, tiled across the worker
                pool). With --top-k K, tiles compute only the K largest
@@ -46,6 +47,7 @@ COMMANDS
                [--top J] [--top-k K] [--no-fold] [--csv] [--repeat R]
                [--precision f64|f32|f32-refined]
                [--cache-bytes N] [--no-cache] [--disk-cache-dir DIR]
+               [--strict-health]
                Whole-model spectral report straight off a ModelPlan: every
                layer planned once, equal-shape layers batched into shared
                workspace groups, executed as one sweep. Emits the per-layer
@@ -69,6 +71,7 @@ COMMANDS
                [--io-timeout-ms MS] [--quantum U] [--allow-remote]
                [--cache-bytes N] [--no-cache] [--disk-cache-dir DIR]
                [--precision f64|f32|f32-refined] [--no-fold]
+               [--strict-health]
                Run lfa-convd, the long-running spectral-audit daemon
                (built with the default `daemon` feature): a TCP line
                protocol over the coordinator service — PING, SUBMIT
@@ -141,6 +144,23 @@ fail validation (truncated, bit-flipped, wrong version) are quarantined:
 deleted, counted in the disk_corruptions metric, and never served. The
 tier requires the result cache (combining it with --no-cache is an
 error) and degrades to memory-only with a warning if DIR is unusable.
+
+Every native solve ships a convergence certificate: the per-frequency
+block solvers report sweep/residual evidence, and a frequency whose
+certificate misses tolerance retries up a bounded escalation ladder —
+fresh-rotation restart, top-k → full Jacobi, f32 → f64 re-solve — before
+it is ever declared degraded. Audits print the aggregate on a `health:`
+report line (certified / retried / escalations / degraded frequencies,
+plus nonfinite rejections on the service path). A spectrum still
+degraded after the ladder is served *flagged* but never cached — neither
+the in-memory LRU nor the disk tier will admit it — so a transient
+failure is never replayed. --strict-health (audit, audit-model, serve)
+turns a degraded result into a typed error instead: the CLI exits
+nonzero naming the layer, and the daemon replies ERR degraded job=I
+freqs=N. Kernel weights containing NaN/Inf are rejected at submit time,
+before any frequency is solved: the CLI reports the layer and count, the
+daemon replies ERR nonfinite, and the rejection is counted in the
+nonfinite_rejections metric (jobs_submitted is not incremented).
 ";
 
 /// Parsed command line: subcommand, positionals, `--key value` / `--flag`
@@ -347,6 +367,26 @@ mod tests {
             "re-solves zero\nfrequencies",
         ] {
             assert!(HELP.contains(detail), "HELP must document the disk tier: {detail:?}");
+        }
+        // The numerical-health layer: the strict flag on audit,
+        // audit-model and serve usage lines plus the prose, which must pin
+        // the escalation ladder, the flagged-but-never-cached rule, the
+        // health report line and both typed daemon error replies.
+        assert!(
+            HELP.matches("--strict-health").count() >= 4,
+            "HELP must document --strict-health on audit, audit-model and serve"
+        );
+        for detail in [
+            "convergence certificate",
+            "escalation ladder",
+            "f32 → f64 re-solve",
+            "`health:`",
+            "never cached",
+            "ERR degraded job=I",
+            "ERR nonfinite",
+            "nonfinite_rejections",
+        ] {
+            assert!(HELP.contains(detail), "HELP must document numerical health: {detail:?}");
         }
     }
 }

@@ -118,6 +118,15 @@ impl ConvKernel {
         self.groups == 1 && self.dilation == 1 && !self.transposed
     }
 
+    /// Number of non-finite (NaN/Inf) weights — the plan/submit-time
+    /// screen of the numerical-health layer. A diverging training loop
+    /// poisons every symbol and therefore every singular value, so kernels
+    /// with a nonzero count are rejected with a typed
+    /// `Error::NonFiniteWeights` before any frequency is solved.
+    pub fn non_finite_count(&self) -> usize {
+        self.data.iter().filter(|v| !v.is_finite()).count()
+    }
+
     /// He/Kaiming-normal initialization — std `√(2 / (c_in·kh·kw))`,
     /// the standard for ReLU CNNs and what the paper's "random weight
     /// tensors" look like in practice.

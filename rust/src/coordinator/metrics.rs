@@ -25,6 +25,15 @@ pub struct Metrics {
     pub cache_misses: AtomicU64,
     /// Result-cache entries evicted under the byte budget.
     pub cache_evictions: AtomicU64,
+    /// Frequencies still unconverged after the full escalation ladder
+    /// (their spectra ship flagged and are refused by the cache).
+    pub degraded_freqs: AtomicU64,
+    /// Escalation-ladder rungs taken (full-Jacobi / f64 re-solves of
+    /// frequencies whose first-tier certificate missed tolerance).
+    pub lfa_escalations: AtomicU64,
+    /// Submissions rejected at the non-finite weight screen, before any
+    /// frequency was solved (never counted in `jobs_submitted`).
+    pub nonfinite_rejections: AtomicU64,
 }
 
 /// A point-in-time copy of the counters.
@@ -42,6 +51,12 @@ pub struct MetricsSnapshot {
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub cache_evictions: u64,
+    /// Frequencies still unconverged after the escalation ladder.
+    pub degraded_freqs: u64,
+    /// Escalation-ladder rungs taken across all jobs.
+    pub escalations: u64,
+    /// Submissions rejected for NaN/Inf weights before any solve.
+    pub nonfinite_rejections: u64,
     /// Disk-tier lookups served from a valid spill file (0 unless a
     /// `disk_cache_dir` is configured). Filled in by
     /// [`crate::coordinator::SpectralService::metrics`] from the cache's
@@ -81,6 +96,9 @@ impl Metrics {
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
             cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
+            degraded_freqs: self.degraded_freqs.load(Ordering::Relaxed),
+            escalations: self.lfa_escalations.load(Ordering::Relaxed),
+            nonfinite_rejections: self.nonfinite_rejections.load(Ordering::Relaxed),
             disk_hits: 0,
             disk_misses: 0,
             disk_spills: 0,
@@ -99,7 +117,13 @@ mod tests {
         m.jobs_submitted.fetch_add(2, Ordering::Relaxed);
         m.record_tile(64, Duration::from_millis(3), true);
         m.record_tile(64, Duration::from_millis(2), false);
+        m.degraded_freqs.fetch_add(1, Ordering::Relaxed);
+        m.lfa_escalations.fetch_add(2, Ordering::Relaxed);
+        m.nonfinite_rejections.fetch_add(3, Ordering::Relaxed);
         let s = m.snapshot();
+        assert_eq!(s.degraded_freqs, 1);
+        assert_eq!(s.escalations, 2);
+        assert_eq!(s.nonfinite_rejections, 3);
         assert_eq!(s.jobs_submitted, 2);
         assert_eq!(s.tiles_completed, 2);
         assert_eq!(s.values_computed, 128);

@@ -46,8 +46,8 @@ use crate::engine::{
 };
 use crate::engine::DiskCache;
 use crate::err;
-use crate::error::Result;
-use crate::lfa::{self, LfaOptions, Precision};
+use crate::error::{Error, ErrorKind, Result};
+use crate::lfa::{self, LfaOptions, Precision, SpectrumHealth};
 use crate::runtime::{ArtifactSpec, PjrtExecutor};
 use crate::testing::chaos;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -163,6 +163,9 @@ struct JobState {
     /// `None` for jobs routed entirely to a PJRT artifact (no native tiles).
     plan: Option<Arc<SpectralPlan>>,
     values: Mutex<Vec<f64>>,
+    /// Merged solver-certificate evidence across this job's native tiles
+    /// (PJRT tiles carry none — the artifact boundary strips certificates).
+    health: Mutex<SpectrumHealth>,
     remaining: AtomicUsize,
     pjrt_tiles: AtomicUsize,
     native_tiles: AtomicUsize,
@@ -198,6 +201,9 @@ struct ModelJobState {
     offsets: Vec<usize>,
     /// Flat whole-model values buffer (per-layer offsets above).
     values: Mutex<Vec<f64>>,
+    /// Per-layer merged certificate evidence from native tiles (empty for
+    /// PJRT-routed and cache-hit layers).
+    layer_health: Mutex<Vec<SpectrumHealth>>,
     remaining: AtomicUsize,
     layer_counters: Vec<LayerCounters>,
     started: Instant,
@@ -294,6 +300,16 @@ impl Scheduler {
     /// once — tiles only execute.
     pub fn submit(&self, spec: JobSpec) -> mpsc::Receiver<Result<JobResult>> {
         let (done_tx, done_rx) = mpsc::channel();
+        // Non-finite screen, before *any* accounting, planning, or tiling:
+        // a NaN/Inf weight tensor is rejected with a typed error and leaves
+        // `jobs_submitted` untouched (the acceptance contract of the
+        // numerical-health layer).
+        let bad = spec.kernel.non_finite_count();
+        if bad > 0 {
+            self.metrics.nonfinite_rejections.fetch_add(1, Ordering::Relaxed);
+            let _ = done_tx.send(Err(Error::non_finite_weights(&spec.id, bad)));
+            return done_rx;
+        }
         self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
         let spec = Arc::new(spec);
         let artifact = self.pick_artifact(&spec);
@@ -405,6 +421,7 @@ impl Scheduler {
             spec: Arc::clone(&spec),
             plan,
             values: Mutex::new(vec![0.0; spec.total_values()]),
+            health: Mutex::new(SpectrumHealth::default()),
             remaining: AtomicUsize::new(tiles.len()),
             pjrt_tiles: AtomicUsize::new(0),
             native_tiles: AtomicUsize::new(0),
@@ -441,12 +458,12 @@ impl Scheduler {
     pub fn submit_model(&self, spec: ModelJobSpec) -> mpsc::Receiver<Result<ModelJobResult>> {
         let (done_tx, done_rx) = mpsc::channel();
         let nlayers = spec.model.layers.len();
-        self.metrics.jobs_submitted.fetch_add(nlayers as u64, Ordering::Relaxed);
         // An *explicit* PJRT backend cannot serve a partial-spectrum
         // request (AOT artifacts bake in the full per-frequency SVD) —
         // fail loudly instead of silently downgrading to native.
         // `Backend::Auto` + top-k routes native by design.
         if spec.backend == Backend::Pjrt && spec.request != SpectrumRequest::Full {
+            self.metrics.jobs_submitted.fetch_add(nlayers as u64, Ordering::Relaxed);
             self.metrics.jobs_failed.fetch_add(nlayers as u64, Ordering::Relaxed);
             let _ = done_tx.send(Err(err!(
                 "model job {}: PJRT cannot serve partial-spectrum (top-k) requests — \
@@ -465,15 +482,29 @@ impl Scheduler {
         };
         // The plan cache makes a repeat model submission re-plan nothing:
         // every layer's plan signature matches and the planned objects
-        // (phase tables + warmed pools) are shared.
+        // (phase tables + warmed pools) are shared. Building also runs the
+        // non-finite weight screen — a rejected model leaves
+        // `jobs_submitted` untouched (nothing was accepted; the typed
+        // error reaches the caller before any frequency is solved), so the
+        // accepted-work accounting only happens once the plan exists.
         let built = match &self.cache {
             Some(c) => ModelPlan::build_cached(&spec.model, opts, c),
             None => ModelPlan::build(&spec.model, opts),
         };
         let plan = match built {
-            Ok(p) => Arc::new(p),
+            Ok(p) => {
+                self.metrics.jobs_submitted.fetch_add(nlayers as u64, Ordering::Relaxed);
+                Arc::new(p)
+            }
             Err(e) => {
-                self.metrics.jobs_failed.fetch_add(nlayers as u64, Ordering::Relaxed);
+                if matches!(e.kind(), ErrorKind::NonFiniteWeights { .. }) {
+                    self.metrics.nonfinite_rejections.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.metrics.jobs_submitted.fetch_add(nlayers as u64, Ordering::Relaxed);
+                    self.metrics.jobs_failed.fetch_add(nlayers as u64, Ordering::Relaxed);
+                }
+                // Inherent `Error::context` preserves the typed kind, so
+                // the daemon can still map this to `ERR nonfinite`.
                 let _ = done_tx.send(Err(e.context(format!("planning model job {}", spec.id))));
                 return done_rx;
             }
@@ -593,6 +624,7 @@ impl Scheduler {
             values_per_freq,
             offsets,
             values: Mutex::new(values),
+            layer_health: Mutex::new(vec![SpectrumHealth::default(); nlayers]),
             remaining: AtomicUsize::new(tiles.len()),
             layer_counters: (0..nlayers)
                 .map(|_| LayerCounters {
@@ -813,43 +845,46 @@ fn run_tile(state: &JobState, tile: &Tile, executor: Option<&PjrtExecutor>) -> R
         return Err(err!("job {}: chaos: injected tile failure", spec.id));
     }
     let r = spec.rank();
-    let (values, used_pjrt): (Vec<f64>, bool) = match (&state.artifact, executor) {
-        (Some(art), Some(exec)) => {
-            let vals = pjrt_tile_values(
-                exec,
-                art,
-                &state.weights_f32,
-                tile.row_lo,
-                tile.row_hi,
-                spec.m * r,
-            )?;
-            (vals, true)
-        }
-        _ => {
-            if state.artifact.is_none() && spec.backend == Backend::Pjrt {
-                return Err(err!(
-                    "job {}: PJRT backend requested but no artifact matches \
-                     (n={}, c_out={}, c_in={}); run `make artifacts` or use Backend::Auto",
-                    spec.id,
-                    spec.n,
-                    spec.kernel.c_out,
-                    spec.kernel.c_in
-                ));
+    let (values, health, used_pjrt): (Vec<f64>, SpectrumHealth, bool) =
+        match (&state.artifact, executor) {
+            (Some(art), Some(exec)) => {
+                let vals = pjrt_tile_values(
+                    exec,
+                    art,
+                    &state.weights_f32,
+                    tile.row_lo,
+                    tile.row_hi,
+                    spec.m * r,
+                )?;
+                // No certificates cross the PJRT boundary — empty evidence.
+                (vals, SpectrumHealth::default(), true)
             }
-            // Native path: execute against the job's shared plan. Workspace
-            // checkout reuses the buffers of whichever worker last ran a
-            // tile of this job — no per-tile symbol state rebuild. Folded
-            // plans solve their tile's fundamental-domain rows only.
-            let plan = state.plan.as_ref().expect("native jobs always carry a plan");
-            let mut vals = vec![0.0f64; tile.num_values()];
-            if plan.folded() {
-                plan.execute_fold_rows_pooled(tile.row_lo, tile.row_hi, &mut vals);
-            } else {
-                plan.execute_rows_pooled(tile.row_lo, tile.row_hi, &mut vals);
+            _ => {
+                if state.artifact.is_none() && spec.backend == Backend::Pjrt {
+                    return Err(err!(
+                        "job {}: PJRT backend requested but no artifact matches \
+                         (n={}, c_out={}, c_in={}); run `make artifacts` or use Backend::Auto",
+                        spec.id,
+                        spec.n,
+                        spec.kernel.c_out,
+                        spec.kernel.c_in
+                    ));
+                }
+                // Native path: execute against the job's shared plan. Workspace
+                // checkout reuses the buffers of whichever worker last ran a
+                // tile of this job — no per-tile symbol state rebuild. Folded
+                // plans solve their tile's fundamental-domain rows only.
+                let plan = state.plan.as_ref().expect("native jobs always carry a plan");
+                let mut vals = vec![0.0f64; tile.num_values()];
+                let h = if plan.folded() {
+                    plan.execute_fold_rows_pooled(tile.row_lo, tile.row_hi, &mut vals)
+                } else {
+                    plan.execute_rows_pooled(tile.row_lo, tile.row_hi, &mut vals)
+                };
+                (vals, h, false)
             }
-            (vals, false)
-        }
-    };
+        };
+    state.health.lock().unwrap_or_else(|e| e.into_inner()).merge(&health);
     let base = tile.row_lo * spec.m * r;
     // Poison-tolerant: a tile that panicked while holding this lock has
     // already failed its job (catch_unwind → typed error); later tiles of
@@ -878,7 +913,9 @@ fn run_model_tile(
     let lp = state.plan.layer_plan(layer);
     let r = state.values_per_freq[layer];
     let mc = lp.coarse_cols();
-    let (values, used_pjrt): (Vec<f64>, bool) = match (&state.artifacts[layer], executor) {
+    let artifact = &state.artifacts[layer];
+    let (values, health, used_pjrt): (Vec<f64>, SpectrumHealth, bool) = match (artifact, executor)
+    {
         (Some(art), Some(exec)) => {
             let vals = pjrt_tile_values(
                 exec,
@@ -888,7 +925,8 @@ fn run_model_tile(
                 row_hi,
                 mc * r,
             )?;
-            (vals, true)
+            // No certificates cross the PJRT boundary — empty evidence.
+            (vals, SpectrumHealth::default(), true)
         }
         _ => {
             // (Pjrt + top-k is rejected at submission, so this error path
@@ -914,7 +952,7 @@ fn run_model_tile(
             // Folded layers' tiles cover fundamental-domain rows only.
             let folded = state.artifacts[layer].is_none() && lp.folded();
             let mut vals = vec![0.0f64; (row_hi - row_lo) * mc * r];
-            match state.spec.request {
+            let h = match state.spec.request {
                 SpectrumRequest::Full => {
                     if folded {
                         lp.execute_fold_rows_pooled(row_lo, row_hi, &mut vals)
@@ -924,15 +962,16 @@ fn run_model_tile(
                 }
                 SpectrumRequest::TopK(k) => {
                     if folded {
-                        lp.execute_topk_fold_rows_pooled(k, row_lo, row_hi, &mut vals);
+                        lp.execute_topk_fold_rows_pooled(k, row_lo, row_hi, &mut vals).1
                     } else {
-                        lp.execute_topk_rows_pooled(k, row_lo, row_hi, &mut vals);
+                        lp.execute_topk_rows_pooled(k, row_lo, row_hi, &mut vals).1
                     }
                 }
-            }
-            (vals, false)
+            };
+            (vals, h, false)
         }
     };
+    state.layer_health.lock().unwrap_or_else(|e| e.into_inner())[layer].merge(&health);
     let base = state.offsets[layer] + row_lo * mc * r;
     // Poison-tolerant: a tile that panicked while holding this lock has
     // already failed its job (catch_unwind → typed error); later tiles of
@@ -944,6 +983,8 @@ fn run_model_tile(
 
 fn finish_model_job(state: &ModelJobState, metrics: &Metrics) {
     let mut values = std::mem::take(&mut *state.values.lock().unwrap_or_else(|e| e.into_inner()));
+    let layer_health =
+        std::mem::take(&mut *state.layer_health.lock().unwrap_or_else(|e| e.into_inner()));
     // Mirror the conjugate halves of folded native layers in, and account
     // the mirrored values as delivered (matching the per-layer job path).
     // Cache-hit layers were never tiled: their values ship from the cache
@@ -982,10 +1023,16 @@ fn finish_model_job(state: &ModelJobState, metrics: &Metrics) {
                 let r = state.values_per_freq[i];
                 let off = state.offsets[i];
                 let slice = values[off..off + lp.freqs() * r].to_vec();
+                let health = layer_health[i];
+                metrics.degraded_freqs.fetch_add(health.degraded_freqs, Ordering::Relaxed);
+                metrics.lfa_escalations.fetch_add(health.escalations, Ordering::Relaxed);
                 let spectrum =
-                    Arc::new(lp.spectrum_from_values(state.spec.request, slice));
+                    Arc::new(lp.spectrum_from_values_health(state.spec.request, slice, health));
                 // Freshly computed layers enter the result cache under
                 // their precision-pinned key (F32 for PJRT-routed ones).
+                // The cache's admission gate refuses a spectrum still
+                // flagged degraded — it ships to the caller flagged, once,
+                // but is never replayable.
                 if let (Some(cache), Some(key)) = (&state.cache, &state.keys[i]) {
                     let evicted = cache.insert(*key, Arc::clone(&spectrum));
                     metrics.cache_evictions.fetch_add(evicted, Ordering::Relaxed);
@@ -1039,6 +1086,9 @@ fn finish_job(state: &JobState, metrics: &Metrics) {
     } else {
         (spec.kernel.c_out, spec.kernel.c_in_total())
     };
+    let health = *state.health.lock().unwrap_or_else(|e| e.into_inner());
+    metrics.degraded_freqs.fetch_add(health.degraded_freqs, Ordering::Relaxed);
+    metrics.lfa_escalations.fetch_add(health.escalations, Ordering::Relaxed);
     let spectrum = Arc::new(lfa::Spectrum {
         n: spec.n,
         m: spec.m,
@@ -1046,9 +1096,12 @@ fn finish_job(state: &JobState, metrics: &Metrics) {
         c_in: sym_cols,
         per_freq: spec.rank(),
         values,
+        health,
     });
     // Freshly computed results populate the cache for repeats, under the
-    // precision-pinned key (F32 for PJRT-routed jobs).
+    // precision-pinned key (F32 for PJRT-routed jobs). The cache's
+    // admission gate refuses a spectrum still flagged degraded — it ships
+    // to the caller flagged, once, but is never replayable.
     if let Some((cache, key)) = &state.cache {
         let evicted = cache.insert(*key, Arc::clone(&spectrum));
         metrics.cache_evictions.fetch_add(evicted, Ordering::Relaxed);

@@ -40,6 +40,8 @@
 //! >> POLL 1
 //! << PENDING id=1 | RUNNING id=1 | DONE id=1 layers=… sigma_max=… solved=… cached=… elapsed_ms=…
 //!    | ERR timeout id=1 | ERR failed id=1 … | ERR unknown-job id=1
+//!    | ERR nonfinite id=1 layer=… count=…   (NaN/Inf weights, screened pre-solve)
+//!    | ERR degraded job=1 freqs=…           (strict-health: unconverged after escalation)
 //! >> WAIT 1                                   (blocks until terminal or deadline)
 //! << DONE id=1 …
 //! >> METRICS                                  (one line of key=value pairs)
@@ -318,8 +320,28 @@ enum JobPhase {
     Queued,
     Running,
     Done(JobSummary),
+    /// Holds the complete wire tail after `ERR ` — already classified
+    /// (`nonfinite …` / `degraded …` / `failed …`) by [`failure_tail`].
     Failed(String),
     TimedOut,
+}
+
+/// Map a job error to its `ERR ` wire tail. Typed numerical-health
+/// failures keep their structure on the wire so clients can dispatch on
+/// the first token instead of parsing prose:
+///
+/// - [`crate::ErrorKind::NonFiniteWeights`] → `nonfinite id=… layer=… count=…`
+/// - [`crate::ErrorKind::DegradedSpectrum`] → `degraded job=… freqs=…`
+/// - everything else → `failed id=… <message>`
+fn failure_tail(id: u64, why: &crate::error::Error) -> String {
+    use crate::error::ErrorKind as Kind;
+    match why.kind() {
+        Kind::NonFiniteWeights { layer, count } => {
+            format!("nonfinite id={id} layer={layer} count={count}")
+        }
+        Kind::DegradedSpectrum { freqs, .. } => format!("degraded job={id} freqs={freqs}"),
+        Kind::Generic => format!("failed id={id} {why}"),
+    }
 }
 
 struct JobEntry {
@@ -522,7 +544,7 @@ fn runner_loop(shared: &Shared) {
                             })
                         }
                     }
-                    Err(why) => JobPhase::Failed(format!("{why}")),
+                    Err(why) => JobPhase::Failed(failure_tail(id, &why)),
                 };
             }
         }
@@ -720,7 +742,7 @@ fn probe(jobs: &mut HashMap<u64, JobEntry>, id: u64) -> Option<String> {
     };
     match &e.phase {
         JobPhase::Done(s) => Some(done_line(id, s)),
-        JobPhase::Failed(msg) => Some(format!("ERR failed id={id} {msg}")),
+        JobPhase::Failed(tail) => Some(format!("ERR {tail}")),
         JobPhase::TimedOut => Some(format!("ERR timeout id={id}")),
         JobPhase::Queued | JobPhase::Running => {
             if Instant::now() >= e.deadline {
@@ -778,6 +800,9 @@ fn metric_pairs(shared: &Shared) -> Vec<(&'static str, u64)> {
         ("cache_hits", m.cache_hits),
         ("cache_misses", m.cache_misses),
         ("cache_evictions", m.cache_evictions),
+        ("degraded_freqs", m.degraded_freqs),
+        ("escalations", m.escalations),
+        ("nonfinite_rejections", m.nonfinite_rejections),
         ("disk_hits", m.disk_hits),
         ("disk_misses", m.disk_misses),
         ("disk_spills", m.disk_spills),

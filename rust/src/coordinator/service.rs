@@ -9,8 +9,8 @@ use super::metrics::MetricsSnapshot;
 use super::scheduler::{JobResult, Scheduler, SchedulerConfig};
 use crate::conv::ConvKernel;
 use crate::engine::SpectrumRequest;
-use crate::error::Result;
-use crate::lfa::{self, BlockSolver, Fold, Precision};
+use crate::error::{Error, Result};
+use crate::lfa::{self, BlockSolver, Fold, Precision, SpectrumHealth};
 use crate::model::config::ModelConfig;
 use crate::runtime::{load_manifest, PjrtExecutor};
 use std::path::Path;
@@ -55,6 +55,13 @@ pub struct ServiceConfig {
     /// default, [`Self::DEFAULT_TENANT_QUOTA`]). Unused by the in-process
     /// API — only `serve` enforces it.
     pub tenant_quota: usize,
+    /// Strict numerical-health mode (the CLI's `--strict-health`). By
+    /// default a spectrum still degraded after the escalation ladder is
+    /// *served flagged* — [`LayerReport::health`] carries the evidence and
+    /// the result is refused by the cache. Under strict mode the same
+    /// outcome becomes a typed job error
+    /// ([`crate::ErrorKind::DegradedSpectrum`]) instead of a report.
+    pub strict_health: bool,
 }
 
 impl Default for ServiceConfig {
@@ -71,6 +78,7 @@ impl Default for ServiceConfig {
             cache_bytes: Some(0),
             disk_cache_dir: None,
             tenant_quota: 0,
+            strict_health: false,
         }
     }
 }
@@ -136,6 +144,12 @@ pub struct LayerReport {
     pub cached: bool,
     /// Relative Frobenius-identity defect (NaN when verification is off).
     pub frobenius_defect: f64,
+    /// Convergence certificate aggregated over every frequency solved for
+    /// this layer. `health.is_degraded()` means the escalation ladder was
+    /// exhausted and the values for those frequencies carry no certificate
+    /// — the report ships flagged (or, under
+    /// [`ServiceConfig::strict_health`], never ships at all).
+    pub health: SpectrumHealth,
     /// Shared with the scheduler's result cache on cached/cacheable paths.
     pub spectrum: Arc<lfa::Spectrum>,
 }
@@ -209,7 +223,9 @@ impl SpectralService {
             .with_folding(self.config.folding)
             .with_precision(self.config.precision);
         let result = self.scheduler.run(spec)?;
-        Ok(self.report(name, kernel, n, m, result))
+        let report = self.report(name, kernel, n, m, result);
+        self.enforce_health(&report)?;
+        Ok(report)
     }
 
     /// Analyze every conv layer of a model config (weights materialized
@@ -261,6 +277,9 @@ impl SpectralService {
                 outcome.solved_freqs,
                 outcome.cached,
             ));
+        }
+        for report in &reports {
+            self.enforce_health(report)?;
         }
         Ok(reports)
     }
@@ -332,8 +351,22 @@ impl SpectralService {
             solved_freqs,
             cached,
             frobenius_defect: defect,
+            health: spectrum.health,
             spectrum,
         }
+    }
+
+    /// Strict-health gate: a degraded report becomes a typed error
+    /// ([`crate::ErrorKind::DegradedSpectrum`]) instead of shipping
+    /// flagged. No-op unless [`ServiceConfig::strict_health`] is set.
+    fn enforce_health(&self, report: &LayerReport) -> Result<()> {
+        if self.config.strict_health && report.health.is_degraded() {
+            return Err(Error::degraded_spectrum(
+                &report.name,
+                report.health.degraded_freqs as usize,
+            ));
+        }
+        Ok(())
     }
 
     /// Point-in-time metrics, with the disk-tier counters merged in from

@@ -23,7 +23,7 @@ use super::plan::{SpectralPlan, TopKResult};
 use super::SpectrumRequest;
 use crate::bail;
 use crate::error::Result;
-use crate::lfa::spectrum::Spectrum;
+use crate::lfa::spectrum::{Spectrum, SpectrumHealth};
 
 /// A strategy for executing a [`SpectralPlan`].
 pub trait SpectralBackend {
@@ -31,24 +31,27 @@ pub trait SpectralBackend {
     fn name(&self) -> &'static str;
 
     /// Execute the plan, writing `plan.values_len()` singular values into
-    /// `out` (frequency-major, descending per frequency).
-    fn execute_into(&self, plan: &SpectralPlan, out: &mut [f64]) -> Result<()>;
+    /// `out` (frequency-major, descending per frequency). Returns the
+    /// sweep's aggregated [`SpectrumHealth`] — backends that cannot
+    /// certify (the PJRT artifact boundary carries no certificates) report
+    /// the empty default, never a fabricated clean bill.
+    fn execute_into(&self, plan: &SpectralPlan, out: &mut [f64]) -> Result<SpectrumHealth>;
 
     /// Execute `request` into `out` (`plan.request_values_len(request)`
     /// values); returns solver iteration steps spent (0 for the direct full
-    /// path). The default implementation serves `Full` through
-    /// [`Self::execute_into`] and rejects `TopK` — backends that can run
-    /// the warm-started top-k sweep override it.
+    /// path) and the sweep's health. The default implementation serves
+    /// `Full` through [`Self::execute_into`] and rejects `TopK` — backends
+    /// that can run the warm-started top-k sweep override it.
     fn execute_request_into(
         &self,
         plan: &SpectralPlan,
         request: SpectrumRequest,
         out: &mut [f64],
-    ) -> Result<u64> {
+    ) -> Result<(u64, SpectrumHealth)> {
         match request {
             SpectrumRequest::Full => {
-                self.execute_into(plan, out)?;
-                Ok(0)
+                let health = self.execute_into(plan, out)?;
+                Ok((0, health))
             }
             SpectrumRequest::TopK(_) => {
                 bail!("backend {} does not support partial-spectrum (top-k) requests", self.name())
@@ -62,7 +65,7 @@ pub trait SpectralBackend {
     /// per-group solved block.
     fn execute(&self, plan: &SpectralPlan) -> Result<Spectrum> {
         let mut values = vec![0.0f64; plan.values_len()];
-        self.execute_into(plan, &mut values)?;
+        let health = self.execute_into(plan, &mut values)?;
         let (c_out, c_in) = plan.sym_shape();
         Ok(Spectrum {
             n: plan.coarse_rows(),
@@ -71,6 +74,7 @@ pub trait SpectralBackend {
             c_in,
             per_freq: plan.rank(),
             values,
+            health,
         })
     }
 
@@ -78,7 +82,7 @@ pub trait SpectralBackend {
     fn execute_topk(&self, plan: &SpectralPlan, k: usize) -> Result<TopKResult> {
         let ke = plan.topk_per_freq(k);
         let mut values = vec![0.0f64; plan.topk_values_len(k)];
-        let iterations =
+        let (iterations, health) =
             self.execute_request_into(plan, SpectrumRequest::TopK(k), &mut values)?;
         let (c_out, c_in) = plan.sym_shape();
         Ok(TopKResult {
@@ -89,6 +93,7 @@ pub trait SpectralBackend {
                 c_in,
                 per_freq: ke,
                 values,
+                health,
             },
             iterations,
         })
@@ -105,9 +110,8 @@ impl SpectralBackend for NativeSerial {
         "native-serial"
     }
 
-    fn execute_into(&self, plan: &SpectralPlan, out: &mut [f64]) -> Result<()> {
-        plan.execute_into_threads(1, out);
-        Ok(())
+    fn execute_into(&self, plan: &SpectralPlan, out: &mut [f64]) -> Result<SpectrumHealth> {
+        Ok(plan.execute_into_threads(1, out))
     }
 
     fn execute_request_into(
@@ -115,12 +119,9 @@ impl SpectralBackend for NativeSerial {
         plan: &SpectralPlan,
         request: SpectrumRequest,
         out: &mut [f64],
-    ) -> Result<u64> {
+    ) -> Result<(u64, SpectrumHealth)> {
         Ok(match request {
-            SpectrumRequest::Full => {
-                plan.execute_into_threads(1, out);
-                0
-            }
+            SpectrumRequest::Full => (0, plan.execute_into_threads(1, out)),
             SpectrumRequest::TopK(k) => plan.execute_topk_into_threads(k, 1, true, out),
         })
     }
@@ -137,9 +138,8 @@ impl SpectralBackend for NativeThreaded {
         "native-threaded"
     }
 
-    fn execute_into(&self, plan: &SpectralPlan, out: &mut [f64]) -> Result<()> {
-        plan.execute_into_threads(super::resolve_threads(self.threads), out);
-        Ok(())
+    fn execute_into(&self, plan: &SpectralPlan, out: &mut [f64]) -> Result<SpectrumHealth> {
+        Ok(plan.execute_into_threads(super::resolve_threads(self.threads), out))
     }
 
     fn execute_request_into(
@@ -147,13 +147,10 @@ impl SpectralBackend for NativeThreaded {
         plan: &SpectralPlan,
         request: SpectrumRequest,
         out: &mut [f64],
-    ) -> Result<u64> {
+    ) -> Result<(u64, SpectrumHealth)> {
         let threads = super::resolve_threads(self.threads);
         Ok(match request {
-            SpectrumRequest::Full => {
-                plan.execute_into_threads(threads, out);
-                0
-            }
+            SpectrumRequest::Full => (0, plan.execute_into_threads(threads, out)),
             SpectrumRequest::TopK(k) => plan.execute_topk_into_threads(k, threads, true, out),
         })
     }
@@ -184,7 +181,7 @@ impl SpectralBackend for PjrtBackend {
         "pjrt"
     }
 
-    fn execute_into(&self, plan: &SpectralPlan, out: &mut [f64]) -> Result<()> {
+    fn execute_into(&self, plan: &SpectralPlan, out: &mut [f64]) -> Result<SpectrumHealth> {
         let a = &self.artifact;
         let (c_out, c_in) = plan.block_shape();
         let k = plan.kernel();
@@ -219,7 +216,10 @@ impl SpectralBackend for PjrtBackend {
         for (dst, &src) in out.iter_mut().zip(values.iter()) {
             *dst = src as f64;
         }
-        Ok(())
+        // No certificate evidence crosses the PJRT artifact boundary — the
+        // AOT program returns bare values. Report the empty default rather
+        // than a fabricated clean bill; native paths carry real evidence.
+        Ok(SpectrumHealth::default())
     }
 }
 
@@ -238,6 +238,8 @@ mod tests {
         let a = NativeSerial.execute(&plan).unwrap();
         let b = NativeThreaded { threads: 3 }.execute(&plan).unwrap();
         assert_eq!(a.values, b.values);
+        assert!(!a.health.is_degraded() && !b.health.is_degraded());
+        assert_eq!(a.health.converged_freqs, plan.solved_freqs() as u64);
         assert_eq!(NativeSerial.name(), "native-serial");
     }
 

@@ -463,7 +463,16 @@ impl SpectralCache {
     /// recency index); returns how many were evicted. A spectrum that
     /// alone exceeds the memory budget is not stored in the LRU — but
     /// with a disk tier it remains servable from disk.
+    ///
+    /// A spectrum still flagged degraded after the escalation ladder is
+    /// **refused outright** — neither spilled to disk nor admitted to the
+    /// LRU (returns 0). This is the single admission gate of the
+    /// numerical-health layer: a degraded result may be *served* flagged,
+    /// once, but never replayed from cache as if it were trustworthy.
     pub fn insert(&self, key: Signature, spectrum: Arc<Spectrum>) -> u64 {
+        if spectrum.health.is_degraded() {
+            return 0;
+        }
         if let Some(disk) = &self.disk {
             disk.put(&key, &spectrum);
         }

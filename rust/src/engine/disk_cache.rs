@@ -292,5 +292,9 @@ fn decode(key: &Signature, bytes: &[u8]) -> std::result::Result<Spectrum, &'stat
         .chunks_exact(8)
         .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().expect("8-byte chunk"))))
         .collect();
-    Ok(Spectrum { n, m, c_out, c_in, per_freq, values })
+    // Degraded spectra are refused at the cache's admission gate, so a
+    // spill file always holds a clean result; restore it with the
+    // matching clean certificate (one record per frequency).
+    let health = crate::lfa::spectrum::SpectrumHealth::clean((n * m) as u64);
+    Ok(Spectrum { n, m, c_out, c_in, per_freq, values, health })
 }

@@ -34,14 +34,14 @@ use super::plan::SpectralPlan;
 use super::workspace::{Workspace, WorkspacePool};
 use super::SpectrumRequest;
 use crate::bail;
-use crate::error::Result;
-use crate::lfa::spectrum::{mirror_fill, FullSvd, Spectrum};
+use crate::error::{Error, Result};
+use crate::lfa::spectrum::{mirror_fill, FullSvd, Spectrum, SpectrumHealth};
 use crate::lfa::svd::LfaOptions;
 use crate::model::config::ModelConfig;
 use crate::spectral::clip::{clip_with_plan, unclipped_result, ClipResult};
 use crate::spectral::lowrank::{compress_from_svd, LowRankConv};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// One planned layer of a [`ModelPlan`].
 struct LayerEntry {
@@ -159,6 +159,31 @@ impl ModelSpectra {
     pub fn layer(&self, name: &str) -> Option<&LayerSpectrum> {
         self.layers.iter().find(|l| l.name == name)
     }
+
+    /// Whole-model numerical health: every layer's [`SpectrumHealth`]
+    /// merged into one evidence record (counts add, worst residual wins).
+    pub fn health(&self) -> SpectrumHealth {
+        let mut h = SpectrumHealth::default();
+        for l in &self.layers {
+            h.merge(&l.spectrum.health);
+        }
+        h
+    }
+
+    /// True when any layer's spectrum is still flagged degraded after the
+    /// escalation ladder ran out of rungs.
+    pub fn is_degraded(&self) -> bool {
+        self.layers.iter().any(|l| l.spectrum.health.is_degraded())
+    }
+
+    /// Names of the degraded layers, original order (empty when healthy).
+    pub fn degraded_layers(&self) -> Vec<&str> {
+        self.layers
+            .iter()
+            .filter(|l| l.spectrum.health.is_degraded())
+            .map(|l| l.name.as_str())
+            .collect()
+    }
 }
 
 /// A whole model planned once: per-layer [`SpectralPlan`]s, equal-shape
@@ -236,6 +261,16 @@ impl ModelPlan {
         // are stored below.
         let layer_opts = LfaOptions { threads: 1, ..opts };
         let kernels: Vec<_> = model.layers.iter().map(|l| l.materialize(model.seed)).collect();
+        // Non-finite screen — the plan-time gate of the numerical-health
+        // layer. A NaN/Inf weight poisons every symbol and every downstream
+        // certificate, so it is rejected here, before any plan is built,
+        // any signature hashed, or any frequency solved.
+        for (l, k) in model.layers.iter().zip(&kernels) {
+            let bad = k.non_finite_count();
+            if bad > 0 {
+                return Err(Error::non_finite_weights(&l.name, bad));
+            }
+        }
         let plan_keys: Vec<Option<Signature>> = model
             .layers
             .iter()
@@ -443,22 +478,60 @@ impl ModelPlan {
     /// (`values_len()` long). Serially this is one group-major batched
     /// sweep — a single workspace checkout per group, zero heap allocation
     /// per frequency. Threaded, the model's frequency rows are partitioned
-    /// across one scoped worker fan-out (not one per layer).
-    pub fn execute_into(&self, out: &mut [f64]) {
-        self.execute_request_into(SpectrumRequest::Full, out);
+    /// across one scoped worker fan-out (not one per layer). Returns the
+    /// model-merged [`SpectrumHealth`] (a `Copy` value — the serial path
+    /// stays allocation-free); callers that need per-layer evidence use
+    /// [`Self::execute_request_into_health`].
+    pub fn execute_into(&self, out: &mut [f64]) -> SpectrumHealth {
+        self.execute_request_into(SpectrumRequest::Full, out).1
     }
 
     /// Execute `request` for every layer into a caller-provided buffer
     /// (`request_values_len(request)` long, group-major layer order).
-    /// Returns total solver iteration steps (0 for `Full`). For top-k the
-    /// serial path warm-starts across each layer's serpentine sweep
-    /// (cold per layer — symbols of different layers are unrelated);
-    /// threaded, every span is a contiguous frequency strip of one layer,
-    /// so warm starts never cross workers or layers. Layers whose plan
-    /// folds ([`crate::lfa::Fold::Auto`], the default) sweep only their
+    /// Returns total solver iteration steps (0 for `Full`) and the merged
+    /// whole-model health. For top-k the serial path warm-starts across
+    /// each layer's serpentine sweep (cold per layer — symbols of
+    /// different layers are unrelated); threaded, every span is a
+    /// contiguous frequency strip of one layer, so warm starts never cross
+    /// workers or layers. Layers whose plan folds
+    /// ([`crate::lfa::Fold::Auto`], the default) sweep only their
     /// fundamental-domain rows; the conjugate halves are mirrored in at
     /// assembly ([`crate::lfa::spectrum::mirror_fill`]).
-    pub fn execute_request_into(&self, request: SpectrumRequest, out: &mut [f64]) -> u64 {
+    pub fn execute_request_into(
+        &self,
+        request: SpectrumRequest,
+        out: &mut [f64],
+    ) -> (u64, SpectrumHealth) {
+        let mut merged = SpectrumHealth::default();
+        let iters = self.execute_request_observed(request, out, |_, h| merged.merge(&h));
+        (iters, merged)
+    }
+
+    /// [`Self::execute_request_into`] reporting **per-layer** health into a
+    /// caller-provided slice (`layer_count()` long, original layer order) —
+    /// the form the spectra-assembly and cache-gating paths consume.
+    pub fn execute_request_into_health(
+        &self,
+        request: SpectrumRequest,
+        out: &mut [f64],
+        health: &mut [SpectrumHealth],
+    ) -> u64 {
+        assert_eq!(health.len(), self.layers.len(), "health slice length mismatch");
+        self.execute_request_observed(request, out, |i, h| health[i] = h)
+    }
+
+    /// Execution core: runs the sweep and reports each layer's aggregated
+    /// [`SpectrumHealth`] through `observe(layer_index, health)` exactly
+    /// once per layer. The observer is a plain closure so the warmed-up
+    /// serial path allocates nothing; the threaded path (which already
+    /// allocates spans and spawns workers) aggregates per layer behind a
+    /// mutex and drains it into the observer after the scope joins.
+    fn execute_request_observed(
+        &self,
+        request: SpectrumRequest,
+        out: &mut [f64],
+        mut observe: impl FnMut(usize, SpectrumHealth),
+    ) -> u64 {
         let total = self.request_values_len(request);
         assert_eq!(out.len(), total, "output buffer length mismatch");
         let threads = self.effective_threads();
@@ -475,25 +548,30 @@ impl ModelPlan {
                     let (nc, mc) = (l.plan.coarse_rows(), l.plan.coarse_cols());
                     let srows = l.plan.solved_rows();
                     let solved_len = srows * mc * vpf;
-                    match request {
+                    let health = match request {
                         SpectrumRequest::Full if l.plan.folded() => {
                             let solved = &mut slice[..solved_len];
-                            l.plan.execute_fold_rows(0, srows, &mut ws, solved);
+                            let h = l.plan.execute_fold_rows(0, srows, &mut ws, solved);
                             mirror_fill(nc, mc, vpf, slice);
+                            h
                         }
-                        SpectrumRequest::Full => {
-                            l.plan.execute_rows(0, nc, &mut ws, slice);
-                        }
+                        SpectrumRequest::Full => l.plan.execute_rows(0, nc, &mut ws, slice),
                         SpectrumRequest::TopK(k) if l.plan.folded() => {
                             let solved = &mut slice[..solved_len];
-                            iters +=
+                            let (it, h) =
                                 l.plan.execute_topk_fold_rows(k, 0, srows, true, &mut ws, solved);
+                            iters += it;
                             mirror_fill(nc, mc, vpf, slice);
+                            h
                         }
                         SpectrumRequest::TopK(k) => {
-                            iters += l.plan.execute_topk_rows(k, 0, nc, true, &mut ws, slice);
+                            let (it, h) =
+                                l.plan.execute_topk_rows(k, 0, nc, true, &mut ws, slice);
+                            iters += it;
+                            h
                         }
-                    }
+                    };
+                    observe(i, health);
                     pos += len;
                 }
                 self.layers[members[0]].plan.restore(ws);
@@ -528,6 +606,8 @@ impl ModelPlan {
         let target = solved_total.div_ceil(threads).max(1);
         let iters_total = AtomicU64::new(0);
         let iters_ref = &iters_total;
+        let layer_health = Mutex::new(vec![SpectrumHealth::default(); self.layers.len()]);
+        let health_ref = &layer_health;
         std::thread::scope(|scope| {
             let mut rest: &mut [f64] = out;
             let mut pos = 0usize;
@@ -552,12 +632,15 @@ impl ModelPlan {
                 }
                 let chunk = &spans[s0..s1];
                 scope.spawn(move || {
-                    let it = self.execute_spans(request, chunk, bufs);
+                    let it = self.execute_spans(request, chunk, bufs, health_ref);
                     iters_ref.fetch_add(it, Ordering::Relaxed);
                 });
                 s0 = s1;
             }
         });
+        for (i, h) in layer_health.into_inner().unwrap().into_iter().enumerate() {
+            observe(i, h);
+        }
         // Mirror the conjugate halves of folded layers.
         for (i, l) in self.layers.iter().enumerate() {
             if l.plan.folded() {
@@ -577,12 +660,14 @@ impl ModelPlan {
     /// Worker body: execute a run of spans (span `i` into `bufs[i]`),
     /// checking one workspace out per group transition (spans arrive
     /// group-major, so a worker crossing layers inside one group keeps its
-    /// scratch; top-k warm starts stay within one span's strip).
+    /// scratch; top-k warm starts stay within one span's strip). Each
+    /// span's health merges into its layer's slot of `layer_health`.
     fn execute_spans(
         &self,
         request: SpectrumRequest,
         spans: &[Span],
         bufs: Vec<&mut [f64]>,
+        layer_health: &Mutex<Vec<SpectrumHealth>>,
     ) -> u64 {
         let mut cur_group = usize::MAX;
         let mut ws: Option<Workspace> = None;
@@ -597,22 +682,25 @@ impl ModelPlan {
                 cur_group = l.group;
             }
             let w = ws.as_mut().expect("workspace checked out above");
-            match request {
+            let health = match request {
                 SpectrumRequest::Full => {
                     if l.plan.folded() {
-                        l.plan.execute_fold_rows(s.lo, s.hi, w, buf);
+                        l.plan.execute_fold_rows(s.lo, s.hi, w, buf)
                     } else {
-                        l.plan.execute_rows(s.lo, s.hi, w, buf);
+                        l.plan.execute_rows(s.lo, s.hi, w, buf)
                     }
                 }
                 SpectrumRequest::TopK(k) => {
-                    if l.plan.folded() {
-                        iters += l.plan.execute_topk_fold_rows(k, s.lo, s.hi, true, w, buf);
+                    let (it, h) = if l.plan.folded() {
+                        l.plan.execute_topk_fold_rows(k, s.lo, s.hi, true, w, buf)
                     } else {
-                        iters += l.plan.execute_topk_rows(k, s.lo, s.hi, true, w, buf);
-                    }
+                        l.plan.execute_topk_rows(k, s.lo, s.hi, true, w, buf)
+                    };
+                    iters += it;
+                    h
                 }
-            }
+            };
+            layer_health.lock().unwrap()[s.layer].merge(&health);
         }
         if let Some(w) = ws.take() {
             self.group_pool(cur_group).restore(w);
@@ -624,22 +712,29 @@ impl ModelPlan {
         self.layers[self.groups[g][0]].plan.workspace_pool()
     }
 
-    /// Execute the whole model and package per-layer spectra.
+    /// Execute the whole model and package per-layer spectra (each
+    /// carrying its sweep's [`SpectrumHealth`]).
     pub fn execute(&self) -> ModelSpectra {
+        let request = SpectrumRequest::Full;
         let mut values = vec![0.0f64; self.total_values];
-        self.execute_into(&mut values);
-        self.spectra_from_flat(&values)
+        let mut health = vec![SpectrumHealth::default(); self.layers.len()];
+        self.execute_request_into_health(request, &mut values, &mut health);
+        self.spectra_from_flat_health(request, &values, &health)
     }
 
     /// Execute every layer back-to-back through an explicit backend
     /// (serial, threaded, or — feature `pjrt` — an AOT artifact sweep).
+    /// Per-layer health is whatever the backend reports (empty for
+    /// backends that carry no certificates across their boundary).
     pub fn execute_with(&self, backend: &dyn SpectralBackend) -> Result<ModelSpectra> {
         let mut values = vec![0.0f64; self.total_values];
+        let mut health = vec![SpectrumHealth::default(); self.layers.len()];
         for &i in &self.exec_order {
             let l = &self.layers[i];
-            backend.execute_into(&l.plan, &mut values[l.offset..l.offset + l.plan.values_len()])?;
+            health[i] = backend
+                .execute_into(&l.plan, &mut values[l.offset..l.offset + l.plan.values_len()])?;
         }
-        Ok(self.spectra_from_flat(&values))
+        Ok(self.spectra_from_flat_health(SpectrumRequest::Full, &values, &health))
     }
 
     /// Split a flat whole-model buffer (as filled by [`Self::execute_into`])
@@ -650,7 +745,9 @@ impl ModelPlan {
 
     /// [`Self::spectra_from_flat`] for any request: slice a buffer filled
     /// by [`Self::execute_request_into`] into per-layer (possibly partial)
-    /// spectra, original model order.
+    /// spectra, original model order. Each layer gets the clean-bill
+    /// health of [`SpectralPlan::spectrum_from_values`] — callers holding
+    /// real per-layer evidence use [`Self::spectra_from_flat_health`].
     pub fn spectra_from_flat_request(
         &self,
         request: SpectrumRequest,
@@ -679,6 +776,39 @@ impl ModelPlan {
         ModelSpectra { model: self.name.clone(), layers }
     }
 
+    /// [`Self::spectra_from_flat_request`] with per-layer health evidence
+    /// (`layer_count()` long, original order) attached to each spectrum —
+    /// the assembly used by every live (non-cache-hit) execution.
+    pub fn spectra_from_flat_health(
+        &self,
+        request: SpectrumRequest,
+        values: &[f64],
+        health: &[SpectrumHealth],
+    ) -> ModelSpectra {
+        assert_eq!(
+            values.len(),
+            self.request_values_len(request),
+            "flat buffer length mismatch"
+        );
+        assert_eq!(health.len(), self.layers.len(), "health slice length mismatch");
+        let offsets = self.request_offsets(request);
+        let layers = self
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let p = &l.plan;
+                let len = p.request_values_len(request);
+                let slice = values[offsets[i]..offsets[i] + len].to_vec();
+                LayerSpectrum {
+                    name: l.name.clone(),
+                    spectrum: Arc::new(p.spectrum_from_values_health(request, slice, health[i])),
+                }
+            })
+            .collect();
+        ModelSpectra { model: self.name.clone(), layers }
+    }
+
     /// Top-`k` singular values per frequency for **every** layer, one
     /// batched warm-started top-k sweep — the whole-model analogue of
     /// [`SpectralPlan::execute_topk`]. This is the execution mode behind
@@ -688,8 +818,13 @@ impl ModelPlan {
     pub fn top_k_all(&self, k: usize) -> ModelTopK {
         let request = SpectrumRequest::TopK(k);
         let mut values = vec![0.0f64; self.request_values_len(request)];
-        let iterations = self.execute_request_into(request, &mut values);
-        ModelTopK { spectra: self.spectra_from_flat_request(request, &values), k, iterations }
+        let mut health = vec![SpectrumHealth::default(); self.layers.len()];
+        let iterations = self.execute_request_into_health(request, &mut values, &mut health);
+        ModelTopK {
+            spectra: self.spectra_from_flat_health(request, &values, &health),
+            k,
+            iterations,
+        }
     }
 
     /// Execute `request` for every layer **through a result cache**: a
@@ -722,10 +857,14 @@ impl ModelPlan {
         if miss_count == self.layers.len() {
             // All cold: one batched group-major sweep, exactly the
             // uncached path, then every layer's slice enters the cache —
-            // and the assembled spectra ship as-is, no rebuild.
+            // and the assembled spectra ship as-is, no rebuild. A layer
+            // still degraded after the escalation ladder ships flagged but
+            // is refused by the cache ([`SpectralCache::insert`] gates on
+            // health), so a poisoned result can never be replayed.
             let mut values = vec![0.0f64; self.request_values_len(request)];
-            let iterations = self.execute_request_into(request, &mut values);
-            let spectra = self.spectra_from_flat_request(request, &values);
+            let mut health = vec![SpectrumHealth::default(); self.layers.len()];
+            let iterations = self.execute_request_into_health(request, &mut values, &mut health);
+            let spectra = self.spectra_from_flat_health(request, &values, &health);
             let mut evictions = 0u64;
             let mut freqs_solved = 0usize;
             for (i, layer) in spectra.layers.iter().enumerate() {
@@ -746,13 +885,16 @@ impl ModelPlan {
             }
             let p = &l.plan;
             let mut values = vec![0.0f64; p.request_values_len(request)];
-            match request {
+            let health = match request {
                 SpectrumRequest::Full => p.execute_into_threads(self.threads, &mut values),
                 SpectrumRequest::TopK(k) => {
-                    iterations += p.execute_topk_into_threads(k, self.threads, true, &mut values);
+                    let (it, h) =
+                        p.execute_topk_into_threads(k, self.threads, true, &mut values);
+                    iterations += it;
+                    h
                 }
-            }
-            let sp = Arc::new(p.spectrum_from_values(request, values));
+            };
+            let sp = Arc::new(p.spectrum_from_values_health(request, values, health));
             evictions += cache.insert(keys[i], Arc::clone(&sp));
             freqs_solved += p.solved_freqs();
             found[i] = Some(sp);
@@ -1018,5 +1160,46 @@ width  = 8
             layers: Vec::new(),
         };
         assert!(ModelPlan::build(&model, LfaOptions::default()).is_err());
+    }
+
+    #[test]
+    fn non_finite_weights_rejected_at_build() {
+        use crate::error::ErrorKind;
+        let model = ModelConfig::parse(
+            "name = \"bad\"\nseed = 1\n\
+             [[layer]]\nname = \"ok\"\nc_in = 2\nc_out = 2\nheight = 4\nwidth = 4\n\
+             [[layer]]\nname = \"poisoned\"\nc_in = 2\nc_out = 2\nheight = 4\nwidth = 4\n\
+             init = \"const:nan\"\n",
+        )
+        .unwrap();
+        let err = ModelPlan::build(&model, LfaOptions::default()).unwrap_err();
+        match err.kind() {
+            ErrorKind::NonFiniteWeights { layer, count } => {
+                assert_eq!(layer, "poisoned");
+                assert_eq!(*count, 2 * 2 * 3 * 3);
+            }
+            other => panic!("expected NonFiniteWeights, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn healthy_model_reports_clean_health() {
+        let model = ModelConfig::parse(MIXED).unwrap();
+        let mp = ModelPlan::build(&model, LfaOptions { threads: 1, ..Default::default() })
+            .unwrap();
+        let spectra = mp.execute();
+        assert!(!spectra.is_degraded());
+        assert!(spectra.degraded_layers().is_empty());
+        let merged = spectra.health();
+        let solved: u64 = (0..mp.layer_count())
+            .map(|i| mp.layer_plan(i).solved_freqs() as u64)
+            .sum();
+        assert_eq!(merged.converged_freqs + merged.retried_freqs, solved);
+        assert_eq!(merged.degraded_freqs, 0);
+        // The raw-buffer entry point reports the same merged evidence.
+        let mut out = vec![0.0f64; mp.values_len()];
+        let h = mp.execute_into(&mut out);
+        assert_eq!(h.degraded_freqs, 0);
+        assert_eq!(h.converged_freqs + h.retried_freqs, solved);
     }
 }

@@ -40,16 +40,17 @@
 use super::workspace::{Workspace, WorkspacePool};
 use super::SpectrumRequest;
 use crate::conv::ConvKernel;
-use crate::lfa::spectrum::{conj_factor, mirror_fill, FullSvd, Spectrum, TopKSvd};
+use crate::lfa::spectrum::{conj_factor, mirror_fill, FullSvd, Spectrum, SpectrumHealth, TopKSvd};
 use crate::lfa::stride::alias_mirror_index;
 use crate::lfa::svd::{BlockSolver, Fold, LfaOptions, Precision};
 use crate::lfa::symbol::{scatter_shard, BlockLayout, SymbolGrid};
 use crate::linalg::jacobi_svd;
 use crate::linalg::power::TopKOptions;
+use crate::linalg::SolveCert;
 use crate::numeric::{C32, C64, CMat, SimdReal};
 use std::f64::consts::PI;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Outcome of a partial-spectrum execution: the top-k values per frequency
 /// plus the solver effort spent producing them.
@@ -69,6 +70,47 @@ impl TopKResult {
     pub fn iterations_per_freq(&self) -> f64 {
         let freqs = (self.spectrum.n * self.spectrum.m).max(1);
         self.iterations as f64 / freqs as f64
+    }
+}
+
+/// Convergence verdict of one frequency's solve, after the escalation
+/// ladder ran: the per-frequency unit [`SpectrumHealth`] aggregates.
+/// Grouped kernels merge their per-group verdicts into one (a frequency is
+/// degraded if *any* of its diagonal blocks is).
+#[derive(Clone, Copy, Debug)]
+struct FreqVerdict {
+    /// Every solve (after any retry/escalation) met its tolerance.
+    converged: bool,
+    /// At least one solve needed a fresh-rotation restart or an
+    /// escalation rung to get there.
+    retried: bool,
+    /// Escalation rungs taken (full-Jacobi / f64 re-solves).
+    escalations: u64,
+    /// Worst relative residual the accepted solves reported.
+    residual: f64,
+}
+
+impl FreqVerdict {
+    fn from_cert(cert: SolveCert) -> Self {
+        Self {
+            converged: cert.converged,
+            retried: cert.restarted,
+            escalations: 0,
+            residual: cert.residual,
+        }
+    }
+
+    /// Fold another group's verdict into this frequency's.
+    fn absorb(&mut self, other: Self) {
+        self.converged &= other.converged;
+        self.retried |= other.retried;
+        self.escalations += other.escalations;
+        self.residual = self.residual.max(other.residual);
+    }
+
+    /// Record this frequency in a sweep-level health aggregate.
+    fn record(self, health: &mut SpectrumHealth) {
+        health.absorb(self.converged, self.retried, self.escalations, self.residual);
     }
 }
 
@@ -626,22 +668,63 @@ impl SpectralPlan {
     /// Assemble and solve one group block of frequency `(ki, kj)` at the
     /// plan's precision: the block's singular values, descending, into
     /// `dst` (`group_rank` long, always f64 at the output boundary). The
-    /// single dispatch point of the full-sweep precision tiers.
+    /// single dispatch point of the full-sweep precision tiers — and of the
+    /// **escalation ladder**: a solve whose certificate reports
+    /// non-convergence (the certified solvers already retried once from
+    /// fresh rotations internally) is re-assembled in f64 and re-solved by
+    /// the full one-sided Jacobi SVD, the crate's most robust path. The
+    /// one rung covers every tier at once: GramEigen → Jacobi, f32 → f64,
+    /// refined → reference. Only if that rung *also* fails to certify does
+    /// the frequency count as degraded.
     #[inline]
-    fn solve_group(&self, ki: usize, kj: usize, gi: usize, ws: &mut Workspace, dst: &mut [f64]) {
-        match self.precision {
+    fn solve_group(
+        &self,
+        ki: usize,
+        kj: usize,
+        gi: usize,
+        ws: &mut Workspace,
+        dst: &mut [f64],
+    ) -> FreqVerdict {
+        let cert = match self.precision {
             Precision::F64 => {
                 self.fill_block(ki, kj, gi, ws);
-                ws.solve_block(self.solver, self.block_rows, self.block_cols, dst);
+                ws.solve_block(self.solver, self.block_rows, self.block_cols, dst)
             }
             Precision::F32 => {
                 self.fill_block32(ki, kj, gi, ws);
-                ws.solve_block32(self.solver, self.block_rows, self.block_cols, dst);
+                ws.solve_block32(self.solver, self.block_rows, self.block_cols, dst)
             }
             Precision::F32Refined => {
                 self.fill_block(ki, kj, gi, ws);
-                ws.solve_block_refined(self.block_rows, self.block_cols, dst);
+                ws.solve_block_refined(self.block_rows, self.block_cols, dst)
             }
+        };
+        if cert.converged {
+            return FreqVerdict::from_cert(cert);
+        }
+        self.escalate_group(ki, kj, gi, ws, dst, cert.residual)
+    }
+
+    /// The escalation rung: re-assemble group `gi`'s block in f64 and
+    /// re-solve with the full one-sided Jacobi SVD, overwriting `dst`.
+    /// `prev_residual` is the failed attempt's residual — kept as the
+    /// reported worst case if even this rung cannot certify.
+    fn escalate_group(
+        &self,
+        ki: usize,
+        kj: usize,
+        gi: usize,
+        ws: &mut Workspace,
+        dst: &mut [f64],
+        prev_residual: f64,
+    ) -> FreqVerdict {
+        self.fill_block(ki, kj, gi, ws);
+        let esc = ws.solve_block(BlockSolver::Jacobi, self.block_rows, self.block_cols, dst);
+        FreqVerdict {
+            converged: esc.converged,
+            retried: true,
+            escalations: 1,
+            residual: if esc.converged { esc.residual } else { esc.residual.max(prev_residual) },
         }
     }
 
@@ -653,23 +736,29 @@ impl SpectralPlan {
     /// group spectra by an in-place sort (the singular values of a
     /// block-diagonal matrix are the union of its blocks').
     #[inline]
-    fn solve_freq(&self, ki: usize, kj: usize, ws: &mut Workspace, dst: &mut [f64]) {
+    fn solve_freq(&self, ki: usize, kj: usize, ws: &mut Workspace, dst: &mut [f64]) -> FreqVerdict {
         let g = self.kernel.groups;
         if g == 1 {
-            self.solve_group(ki, kj, 0, ws, dst);
-            return;
+            return self.solve_group(ki, kj, 0, ws, dst);
         }
         let gr = self.group_rank();
+        let mut verdict =
+            FreqVerdict { converged: true, retried: false, escalations: 0, residual: 0.0 };
         for gi in 0..g {
             let (lo, hi) = (gi * gr, (gi + 1) * gr);
-            self.solve_group(ki, kj, gi, ws, &mut dst[lo..hi]);
+            verdict.absorb(self.solve_group(ki, kj, gi, ws, &mut dst[lo..hi]));
         }
         dst.sort_unstable_by(|a, b| b.total_cmp(a));
+        verdict
     }
 
     /// Top-k companion of [`Self::solve_freq`]: assemble and solve
     /// frequency `(ki, kj)` for its `ke` largest values at the plan's
-    /// precision. Returns the solver iteration steps spent.
+    /// precision. Returns the solver iteration steps spent and the
+    /// frequency's convergence verdict after the escalation ladder: a
+    /// Krylov solve whose Ritz residuals miss the tolerance within budget
+    /// falls back to the full f64 Jacobi SVD of the block
+    /// ([`Self::escalate_topk_group`]) and takes the top `ke` of that.
     ///
     /// Grouped kernels solve each diagonal block for its own
     /// `min(ke, group_rank)` extremes (cold-started per block — a warm
@@ -686,24 +775,15 @@ impl SpectralPlan {
         opts: TopKOptions,
         ws: &mut Workspace,
         dst: &mut [f64],
-    ) -> u64 {
+    ) -> (u64, FreqVerdict) {
         let g = self.kernel.groups;
         if g == 1 {
-            return match self.precision {
-                Precision::F64 => {
-                    self.fill_block(ki, kj, 0, ws);
-                    ws.solve_block_topk(self.block_rows, self.block_cols, ke, opts, dst) as u64
-                }
-                Precision::F32 => {
-                    self.fill_block32(ki, kj, 0, ws);
-                    ws.solve_block_topk32(self.block_rows, self.block_cols, ke, opts, dst) as u64
-                }
-                Precision::F32Refined => {
-                    self.fill_block(ki, kj, 0, ws);
-                    ws.solve_block_topk_refined(self.block_rows, self.block_cols, ke, opts, dst)
-                        as u64
-                }
-            };
+            let cert = self.solve_group_topk(ki, kj, 0, ke, opts, ws, dst);
+            let iters = cert.effort as u64;
+            if cert.converged {
+                return (iters, FreqVerdict::from_cert(cert));
+            }
+            return (iters, self.escalate_topk_group(ki, kj, 0, ws, dst, cert.residual));
         }
         let kg = ke.min(self.group_rank());
         // The merge buffer is owned scratch: take it out so the per-group
@@ -713,29 +793,80 @@ impl SpectralPlan {
             merge.resize(g * kg, 0.0);
         }
         let mut iters = 0u64;
+        let mut verdict =
+            FreqVerdict { converged: true, retried: false, escalations: 0, residual: 0.0 };
         for gi in 0..g {
             self.topk_reset(ws);
             let sub = &mut merge[gi * kg..(gi + 1) * kg];
-            iters += match self.precision {
-                Precision::F64 => {
-                    self.fill_block(ki, kj, gi, ws);
-                    ws.solve_block_topk(self.block_rows, self.block_cols, kg, opts, sub) as u64
-                }
-                Precision::F32 => {
-                    self.fill_block32(ki, kj, gi, ws);
-                    ws.solve_block_topk32(self.block_rows, self.block_cols, kg, opts, sub) as u64
-                }
-                Precision::F32Refined => {
-                    self.fill_block(ki, kj, gi, ws);
-                    ws.solve_block_topk_refined(self.block_rows, self.block_cols, kg, opts, sub)
-                        as u64
-                }
-            };
+            let cert = self.solve_group_topk(ki, kj, gi, kg, opts, ws, sub);
+            iters += cert.effort as u64;
+            if cert.converged {
+                verdict.absorb(FreqVerdict::from_cert(cert));
+            } else {
+                verdict.absorb(self.escalate_topk_group(ki, kj, gi, ws, sub, cert.residual));
+            }
         }
         merge[..g * kg].sort_unstable_by(|a, b| b.total_cmp(a));
         dst.copy_from_slice(&merge[..ke]);
         ws.merge = merge;
-        iters
+        (iters, verdict)
+    }
+
+    /// One group block's top-`ke` Krylov solve at the plan's precision —
+    /// the tier dispatch shared by the dense and grouped top-k paths.
+    #[inline]
+    fn solve_group_topk(
+        &self,
+        ki: usize,
+        kj: usize,
+        gi: usize,
+        ke: usize,
+        opts: TopKOptions,
+        ws: &mut Workspace,
+        dst: &mut [f64],
+    ) -> SolveCert {
+        match self.precision {
+            Precision::F64 => {
+                self.fill_block(ki, kj, gi, ws);
+                ws.solve_block_topk(self.block_rows, self.block_cols, ke, opts, dst)
+            }
+            Precision::F32 => {
+                self.fill_block32(ki, kj, gi, ws);
+                ws.solve_block_topk32(self.block_rows, self.block_cols, ke, opts, dst)
+            }
+            Precision::F32Refined => {
+                self.fill_block(ki, kj, gi, ws);
+                ws.solve_block_topk_refined(self.block_rows, self.block_cols, ke, opts, dst)
+            }
+        }
+    }
+
+    /// Top-k escalation rung: solve group `gi`'s **whole** block spectrum
+    /// by the full f64 Jacobi SVD and keep the top `dst.len()` values —
+    /// trading the Krylov path's `O(c²k)` for a guaranteed-robust `O(c³)`
+    /// on the (rare) frequency that refused to certify. The full-spectrum
+    /// scratch borrows `ws.merge`; inside the grouped merge loop that
+    /// buffer is already checked out, so this path may allocate a
+    /// transient `group_rank`-length vector — acceptable on an
+    /// escalation-only path.
+    fn escalate_topk_group(
+        &self,
+        ki: usize,
+        kj: usize,
+        gi: usize,
+        ws: &mut Workspace,
+        dst: &mut [f64],
+        prev_residual: f64,
+    ) -> FreqVerdict {
+        let gr = self.group_rank();
+        let mut full = std::mem::take(&mut ws.merge);
+        if full.len() < gr {
+            full.resize(gr, 0.0);
+        }
+        let verdict = self.escalate_group(ki, kj, gi, ws, &mut full[..gr], prev_residual);
+        dst.copy_from_slice(&full[..dst.len()]);
+        ws.merge = full;
+        verdict
     }
 
     /// Cold-start the top-k scratch the plan's precision actually sweeps
@@ -760,26 +891,41 @@ impl SpectralPlan {
 
     /// Execute coarse frequency rows `[row_lo, row_hi)` into `out`
     /// (`(row_hi−row_lo)·mc·rank` values, frequency-major, descending per
-    /// frequency). Zero heap allocation per frequency.
-    pub fn execute_rows(&self, row_lo: usize, row_hi: usize, ws: &mut Workspace, out: &mut [f64]) {
+    /// frequency). Zero heap allocation per frequency. Returns the range's
+    /// [`SpectrumHealth`] — one verdict per solved frequency.
+    pub fn execute_rows(
+        &self,
+        row_lo: usize,
+        row_hi: usize,
+        ws: &mut Workspace,
+        out: &mut [f64],
+    ) -> SpectrumHealth {
         debug_assert!(row_lo <= row_hi && row_hi <= self.nc);
         debug_assert_eq!(out.len(), (row_hi - row_lo) * self.mc * self.rank);
         let r = self.rank;
+        let mut health = SpectrumHealth::default();
         for ki in row_lo..row_hi {
             for kj in 0..self.mc {
                 let f = (ki - row_lo) * self.mc + kj;
                 let dst = &mut out[f * r..(f + 1) * r];
-                self.solve_freq(ki, kj, ws, dst);
+                self.solve_freq(ki, kj, ws, dst).record(&mut health);
             }
         }
+        health
     }
 
     /// [`Self::execute_rows`] with pool-managed workspace checkout — the
     /// entry point the coordinator's tile workers use against a shared plan.
-    pub fn execute_rows_pooled(&self, row_lo: usize, row_hi: usize, out: &mut [f64]) {
+    pub fn execute_rows_pooled(
+        &self,
+        row_lo: usize,
+        row_hi: usize,
+        out: &mut [f64],
+    ) -> SpectrumHealth {
         let mut ws = self.checkout();
-        self.execute_rows(row_lo, row_hi, &mut ws, out);
+        let health = self.execute_rows(row_lo, row_hi, &mut ws, out);
         self.restore(ws);
+        health
     }
 
     /// Execute **folded** coarse rows `[fr_lo, fr_hi)` (indices into the
@@ -796,30 +942,38 @@ impl SpectralPlan {
         fr_hi: usize,
         ws: &mut Workspace,
         out: &mut [f64],
-    ) {
+    ) -> SpectrumHealth {
         debug_assert!(self.fold, "folded sweep on an unfolded plan");
         debug_assert!(fr_lo <= fr_hi && fr_hi <= self.solved_rows());
         let r = self.rank;
         debug_assert_eq!(out.len(), (fr_hi - fr_lo) * self.mc * r);
+        let mut health = SpectrumHealth::default();
         for ki in fr_lo..fr_hi {
             let base = (ki - fr_lo) * self.mc * r;
             let cols = self.fold_row_cols(ki);
             for kj in 0..cols {
                 let dst = &mut out[base + kj * r..base + (kj + 1) * r];
-                self.solve_freq(ki, kj, ws, dst);
+                self.solve_freq(ki, kj, ws, dst).record(&mut health);
             }
             if cols < self.mc {
                 self.mirror_row_tail(base, r, out);
             }
         }
+        health
     }
 
     /// [`Self::execute_fold_rows`] with pool-managed workspace checkout —
     /// the folded tile entry point of the coordinator's workers.
-    pub fn execute_fold_rows_pooled(&self, fr_lo: usize, fr_hi: usize, out: &mut [f64]) {
+    pub fn execute_fold_rows_pooled(
+        &self,
+        fr_lo: usize,
+        fr_hi: usize,
+        out: &mut [f64],
+    ) -> SpectrumHealth {
         let mut ws = self.checkout();
-        self.execute_fold_rows(fr_lo, fr_hi, &mut ws, out);
+        let health = self.execute_fold_rows(fr_lo, fr_hi, &mut ws, out);
         self.restore(ws);
+        health
     }
 
     /// Top-`k` singular values for coarse frequency rows `[row_lo, row_hi)`
@@ -844,7 +998,7 @@ impl SpectralPlan {
         warm_sweep: bool,
         ws: &mut Workspace,
         out: &mut [f64],
-    ) -> u64 {
+    ) -> (u64, SpectrumHealth) {
         debug_assert!(row_lo <= row_hi && row_hi <= self.nc);
         let ke = self.topk_per_freq(k);
         debug_assert_eq!(out.len(), (row_hi - row_lo) * self.mc * ke);
@@ -853,6 +1007,7 @@ impl SpectralPlan {
         // last (another strip, another layer): cold-start the sweep.
         self.topk_reset(ws);
         let mut iters = 0u64;
+        let mut health = SpectrumHealth::default();
         for ki in row_lo..row_hi {
             for step in 0..self.mc {
                 let kj = self.serpentine_col(ki - row_lo, step);
@@ -861,10 +1016,12 @@ impl SpectralPlan {
                 }
                 let f = (ki - row_lo) * self.mc + kj;
                 let dst = &mut out[f * ke..(f + 1) * ke];
-                iters += self.solve_freq_topk(ki, kj, ke, opts, ws, dst);
+                let (it, verdict) = self.solve_freq_topk(ki, kj, ke, opts, ws, dst);
+                iters += it;
+                verdict.record(&mut health);
             }
         }
-        iters
+        (iters, health)
     }
 
     /// [`Self::execute_topk_rows`] with pool-managed workspace checkout
@@ -876,11 +1033,11 @@ impl SpectralPlan {
         row_lo: usize,
         row_hi: usize,
         out: &mut [f64],
-    ) -> u64 {
+    ) -> (u64, SpectrumHealth) {
         let mut ws = self.checkout();
-        let iters = self.execute_topk_rows(k, row_lo, row_hi, true, &mut ws, out);
+        let result = self.execute_topk_rows(k, row_lo, row_hi, true, &mut ws, out);
         self.restore(ws);
-        iters
+        result
     }
 
     /// Direction of the folded serpentine sweep in row `ki`: `true` means
@@ -952,7 +1109,7 @@ impl SpectralPlan {
         warm_sweep: bool,
         ws: &mut Workspace,
         out: &mut [f64],
-    ) -> u64 {
+    ) -> (u64, SpectrumHealth) {
         debug_assert!(self.fold, "folded sweep on an unfolded plan");
         debug_assert!(fr_lo <= fr_hi && fr_hi <= self.solved_rows());
         let ke = self.topk_per_freq(k);
@@ -962,6 +1119,7 @@ impl SpectralPlan {
         // last (another strip, another layer): cold-start the sweep.
         self.topk_reset(ws);
         let mut iters = 0u64;
+        let mut health = SpectrumHealth::default();
         self.walk_fold_rows(fr_lo, fr_hi, |ki, kj, crossed_seam| {
             if crossed_seam {
                 self.topk_conjugate(ws);
@@ -971,14 +1129,16 @@ impl SpectralPlan {
             }
             let base = (ki - fr_lo) * self.mc * ke;
             let dst = &mut out[base + kj * ke..base + (kj + 1) * ke];
-            iters += self.solve_freq_topk(ki, kj, ke, opts, ws, dst);
+            let (it, verdict) = self.solve_freq_topk(ki, kj, ke, opts, ws, dst);
+            iters += it;
+            verdict.record(&mut health);
         });
         for ki in fr_lo..fr_hi {
             if self.fold_row_cols(ki) < self.mc {
                 self.mirror_row_tail((ki - fr_lo) * self.mc * ke, ke, out);
             }
         }
-        iters
+        (iters, health)
     }
 
     /// [`Self::execute_topk_fold_rows`] with pool-managed workspace
@@ -990,18 +1150,19 @@ impl SpectralPlan {
         fr_lo: usize,
         fr_hi: usize,
         out: &mut [f64],
-    ) -> u64 {
+    ) -> (u64, SpectrumHealth) {
         let mut ws = self.checkout();
-        let iters = self.execute_topk_fold_rows(k, fr_lo, fr_hi, true, &mut ws, out);
+        let result = self.execute_topk_fold_rows(k, fr_lo, fr_hi, true, &mut ws, out);
         self.restore(ws);
-        iters
+        result
     }
 
     /// Top-`k` execution over the full dual grid into a caller-provided
     /// buffer (`topk_values_len(k)` long); returns total solver iteration
-    /// steps. Allocation-free per frequency once warmed up, like
+    /// steps and the sweep's aggregated [`SpectrumHealth`].
+    /// Allocation-free per frequency once warmed up, like
     /// [`Self::execute_into`].
-    pub fn execute_topk_into(&self, k: usize, out: &mut [f64]) -> u64 {
+    pub fn execute_topk_into(&self, k: usize, out: &mut [f64]) -> (u64, SpectrumHealth) {
         self.execute_topk_into_threads(k, self.effective_threads(), true, out)
     }
 
@@ -1019,7 +1180,7 @@ impl SpectralPlan {
         threads: usize,
         warm_sweep: bool,
         out: &mut [f64],
-    ) -> u64 {
+    ) -> (u64, SpectrumHealth) {
         let ke = self.topk_per_freq(k);
         assert_eq!(out.len(), self.freqs() * ke, "output buffer length mismatch");
         let srows = self.solved_rows();
@@ -1028,13 +1189,15 @@ impl SpectralPlan {
         if !self.fold {
             if threads <= 1 || self.nc <= 1 {
                 let mut ws = self.checkout();
-                let iters = self.execute_topk_rows(k, 0, self.nc, warm_sweep, &mut ws, out);
+                let result = self.execute_topk_rows(k, 0, self.nc, warm_sweep, &mut ws, out);
                 self.restore(ws);
-                return iters;
+                return result;
             }
             let rows_per = self.nc.div_ceil(threads);
             let total = AtomicU64::new(0);
             let total_ref = &total;
+            let agg = Mutex::new(SpectrumHealth::default());
+            let agg_ref = &agg;
             std::thread::scope(|scope| {
                 let mut rest: &mut [f64] = out;
                 let mut lo = 0usize;
@@ -1044,26 +1207,31 @@ impl SpectralPlan {
                     rest = tail;
                     scope.spawn(move || {
                         let mut ws = self.checkout();
-                        let iters = self.execute_topk_rows(k, lo, hi, warm_sweep, &mut ws, head);
+                        let (iters, health) =
+                            self.execute_topk_rows(k, lo, hi, warm_sweep, &mut ws, head);
                         self.restore(ws);
                         total_ref.fetch_add(iters, Ordering::Relaxed);
+                        agg_ref.lock().unwrap().merge(&health);
                     });
                     lo = hi;
                 }
             });
-            return total.into_inner();
+            return (total.into_inner(), agg.into_inner().unwrap());
         }
         // Folded: solve the fundamental domain, then mirror the rest.
-        let iters = {
+        let result = {
             let solved = &mut out[..srows * row_vals];
             if threads <= 1 || srows <= 1 {
                 let mut ws = self.checkout();
-                let iters = self.execute_topk_fold_rows(k, 0, srows, warm_sweep, &mut ws, solved);
+                let result =
+                    self.execute_topk_fold_rows(k, 0, srows, warm_sweep, &mut ws, solved);
                 self.restore(ws);
-                iters
+                result
             } else {
                 let total = AtomicU64::new(0);
                 let total_ref = &total;
+                let agg = Mutex::new(SpectrumHealth::default());
+                let agg_ref = &agg;
                 std::thread::scope(|scope| {
                     let mut rest: &mut [f64] = solved;
                     for (lo, hi) in self.fold_strips(threads) {
@@ -1072,18 +1240,19 @@ impl SpectralPlan {
                         rest = tail;
                         scope.spawn(move || {
                             let mut ws = self.checkout();
-                            let iters =
+                            let (iters, health) =
                                 self.execute_topk_fold_rows(k, lo, hi, warm_sweep, &mut ws, head);
                             self.restore(ws);
                             total_ref.fetch_add(iters, Ordering::Relaxed);
+                            agg_ref.lock().unwrap().merge(&health);
                         });
                     }
                 });
-                total.into_inner()
+                (total.into_inner(), agg.into_inner().unwrap())
             }
         };
         mirror_fill(self.nc, self.mc, ke, out);
-        iters
+        result
     }
 
     /// Top-`k` singular values per frequency, warm-started along the
@@ -1110,8 +1279,8 @@ impl SpectralPlan {
     /// ```
     pub fn execute_topk(&self, k: usize) -> TopKResult {
         let mut values = vec![0.0f64; self.topk_values_len(k)];
-        let iterations = self.execute_topk_into(k, &mut values);
-        TopKResult { spectrum: self.topk_spectrum(k, values), iterations }
+        let (iterations, health) = self.execute_topk_into(k, &mut values);
+        TopKResult { spectrum: self.topk_spectrum(k, values, health), iterations }
     }
 
     /// Ablation twin of [`Self::execute_topk`]: cold-start the Krylov
@@ -1119,14 +1288,14 @@ impl SpectralPlan {
     /// the bench's measure of what cross-frequency warm-starting buys.
     pub fn execute_topk_cold(&self, k: usize) -> TopKResult {
         let mut values = vec![0.0f64; self.topk_values_len(k)];
-        let iterations =
+        let (iterations, health) =
             self.execute_topk_into_threads(k, self.effective_threads(), false, &mut values);
-        TopKResult { spectrum: self.topk_spectrum(k, values), iterations }
+        TopKResult { spectrum: self.topk_spectrum(k, values, health), iterations }
     }
 
     /// Package a flat top-k buffer as a partial [`Spectrum`].
-    fn topk_spectrum(&self, k: usize, values: Vec<f64>) -> Spectrum {
-        self.spectrum_from_values(SpectrumRequest::TopK(k), values)
+    fn topk_spectrum(&self, k: usize, values: Vec<f64>, health: SpectrumHealth) -> Spectrum {
+        self.spectrum_from_values_health(SpectrumRequest::TopK(k), values, health)
     }
 
     /// Package a flat values buffer produced by executing `request` on
@@ -1137,6 +1306,23 @@ impl SpectralPlan {
     /// cache — routes through here, so the shape fields cannot drift
     /// between them.
     pub fn spectrum_from_values(&self, request: SpectrumRequest, values: Vec<f64>) -> Spectrum {
+        // No health evidence travels with a bare values buffer; report the
+        // clean certificate. This is the cache-hit path — degraded spectra
+        // are never admitted to the caches, so a reconstructed hit is
+        // converged by construction.
+        let health = SpectrumHealth::clean(self.solved_freqs() as u64);
+        self.spectrum_from_values_health(request, values, health)
+    }
+
+    /// [`Self::spectrum_from_values`] carrying the convergence evidence a
+    /// live execution produced — the packaging the scheduler's job-finish
+    /// path uses so tile-level health survives into the job's [`Spectrum`].
+    pub fn spectrum_from_values_health(
+        &self,
+        request: SpectrumRequest,
+        values: Vec<f64>,
+        health: SpectrumHealth,
+    ) -> Spectrum {
         assert_eq!(
             values.len(),
             self.request_values_len(request),
@@ -1150,18 +1336,21 @@ impl SpectralPlan {
             c_in: cols,
             per_freq: request.values_per_freq(self.rank),
             values,
+            health,
         }
     }
 
     /// Execute `request` into a caller-provided buffer
     /// (`request_values_len(request)` long). Returns the solver iteration
-    /// steps spent (0 for the full fused path, which is direct).
-    pub fn execute_request_into(&self, request: SpectrumRequest, out: &mut [f64]) -> u64 {
+    /// steps spent (0 for the full fused path, which is direct) and the
+    /// sweep's aggregated [`SpectrumHealth`].
+    pub fn execute_request_into(
+        &self,
+        request: SpectrumRequest,
+        out: &mut [f64],
+    ) -> (u64, SpectrumHealth) {
         match request {
-            SpectrumRequest::Full => {
-                self.execute_into(out);
-                0
-            }
+            SpectrumRequest::Full => (0, self.execute_into(out)),
             SpectrumRequest::TopK(k) => self.execute_topk_into(k, out),
         }
     }
@@ -1169,7 +1358,7 @@ impl SpectralPlan {
     /// Solve the block currently in `ws` for its top-`ke` triplet and
     /// store it at frequency `f`: values into `values`, right vectors into
     /// `v[f]`, left vectors `u_j = (A v_j)/σ_j` into `u[f]`. Returns the
-    /// solver iteration steps — the per-frequency body shared by the
+    /// solver certificate — the per-frequency body shared by the
     /// folded and unfolded factor sweeps (dense kernels; grouped kernels
     /// go through the candidate-merging path of
     /// [`Self::topk_triplet_at`]).
@@ -1182,9 +1371,9 @@ impl SpectralPlan {
         values: &mut [f64],
         u: &mut [CMat],
         v: &mut [CMat],
-    ) -> u64 {
+    ) -> SolveCert {
         let dst = &mut values[f * ke..(f + 1) * ke];
-        let iters = ws.solve_block_topk(self.block_rows, self.block_cols, ke, opts, dst) as u64;
+        let cert = ws.solve_block_topk(self.block_rows, self.block_cols, ke, opts, dst);
         for j in 0..ke {
             let vj = ws.topk.right_vector(j);
             for c in 0..self.block_cols {
@@ -1221,13 +1410,15 @@ impl SpectralPlan {
         values: &mut [f64],
         u: &mut [CMat],
         v: &mut [CMat],
+        health: &mut SpectrumHealth,
     ) -> (u64, f64) {
         let g = self.kernel.groups;
         if g == 1 {
             self.fill_block(ki, kj, 0, ws);
             let energy = ws.block.iter().map(|z| z.norm_sqr()).sum::<f64>();
-            let iters = self.store_topk_triplet(ke, opts, ws, f, values, u, v);
-            return (iters, energy);
+            let cert = self.store_topk_triplet(ke, opts, ws, f, values, u, v);
+            FreqVerdict::from_cert(cert).record(health);
+            return (cert.effort as u64, energy);
         }
         let FactorScratch { vals, order, u: cand_u, v: cand_v } =
             fs.as_mut().expect("grouped factor sweep requires candidate scratch");
@@ -1235,13 +1426,17 @@ impl SpectralPlan {
         let (cin, cin_total) = (self.kernel.c_in, self.kernel.c_in_total());
         let mut iters = 0u64;
         let mut energy = 0.0f64;
+        let mut verdict =
+            FreqVerdict { converged: true, retried: false, escalations: 0, residual: 0.0 };
         for gi in 0..g {
             // A warm basis from another group's block is meaningless.
             ws.topk.reset();
             self.fill_block(ki, kj, gi, ws);
             energy += ws.block.iter().map(|z| z.norm_sqr()).sum::<f64>();
             let sub = &mut vals[gi * kg..(gi + 1) * kg];
-            iters += ws.solve_block_topk(self.block_rows, self.block_cols, kg, opts, sub) as u64;
+            let cert = ws.solve_block_topk(self.block_rows, self.block_cols, kg, opts, sub);
+            iters += cert.effort as u64;
+            verdict.absorb(FreqVerdict::from_cert(cert));
             for j in 0..kg {
                 let c = gi * kg + j;
                 let vj = ws.topk.right_vector(j);
@@ -1271,6 +1466,7 @@ impl SpectralPlan {
                 v[f][(ab * cin_total + gi * cin + i, j2)] = cand_v[(row, c)];
             }
         }
+        verdict.record(health);
         (iters, energy)
     }
 
@@ -1320,6 +1516,12 @@ impl SpectralPlan {
     /// and merge (see [`Self::topk_triplet_at`]); transposed kernels solve
     /// the forward blocks and swap the `U`/`V` roles at packaging (the
     /// adjoint symbol is the conjugate transpose, so `Aᴴ = VΣUᴴ`).
+    ///
+    /// Convergence certificates are aggregated into the returned
+    /// `sigma.health`; a frequency whose Krylov solve cannot certify is
+    /// flagged degraded — the values-path Jacobi escalation rung produces
+    /// no singular vectors, so the factor sweep flags rather than
+    /// escalates.
     pub fn execute_topk_factors(&self, k: usize) -> TopKSvd {
         let ke = self.topk_per_freq(k);
         let freqs = self.freqs();
@@ -1346,6 +1548,7 @@ impl SpectralPlan {
         ws.topk.reset();
         let mut iters = 0u64;
         let mut total_energy = 0.0f64;
+        let mut health = SpectrumHealth::default();
         if self.fold {
             self.walk_fold_rows(0, self.solved_rows(), |ki, kj, crossed_seam| {
                 if crossed_seam {
@@ -1354,6 +1557,7 @@ impl SpectralPlan {
                 let f = ki * self.mc + kj;
                 let (it, energy) = self.topk_triplet_at(
                     ki, kj, ke, opts, &mut ws, &mut fs, f, &mut values, &mut u, &mut v,
+                    &mut health,
                 );
                 iters += it;
                 total_energy += energy;
@@ -1377,6 +1581,7 @@ impl SpectralPlan {
                     let f = ki * self.mc + kj;
                     let (it, energy) = self.topk_triplet_at(
                         ki, kj, ke, opts, &mut ws, &mut fs, f, &mut values, &mut u, &mut v,
+                        &mut health,
                     );
                     iters += it;
                     total_energy += energy;
@@ -1385,7 +1590,7 @@ impl SpectralPlan {
         }
         self.restore(ws);
         let (sym_rows, sym_cols) = self.sym_shape();
-        let sigma = self.topk_spectrum(k, values);
+        let sigma = self.topk_spectrum(k, values, health);
         let (u, v) = if self.kernel.transposed { (v, u) } else { (u, v) };
         TopKSvd {
             n: self.nc,
@@ -1403,9 +1608,10 @@ impl SpectralPlan {
 
     /// Execute the full dual grid into a caller-provided buffer
     /// (`values_len()` long). After the first call on a plan this performs
-    /// no heap allocation in the serial path.
-    pub fn execute_into(&self, out: &mut [f64]) {
-        self.execute_into_threads(self.effective_threads(), out);
+    /// no heap allocation in the serial path. Returns the sweep's
+    /// aggregated [`SpectrumHealth`].
+    pub fn execute_into(&self, out: &mut [f64]) -> SpectrumHealth {
+        self.execute_into_threads(self.effective_threads(), out)
     }
 
     /// [`Self::execute_into`] with an explicit worker count (0 = auto).
@@ -1414,17 +1620,18 @@ impl SpectralPlan {
     /// its rows by solved-block count — and the conjugate half is filled
     /// by mirroring ([`crate::lfa::spectrum::mirror_fill`]), roughly
     /// halving the SVD work on every native path.
-    pub fn execute_into_threads(&self, threads: usize, out: &mut [f64]) {
+    pub fn execute_into_threads(&self, threads: usize, out: &mut [f64]) -> SpectrumHealth {
         assert_eq!(out.len(), self.values_len(), "output buffer length mismatch");
         let srows = self.solved_rows();
         let threads = super::resolve_threads(threads).min(srows.max(1));
         let row_vals = self.mc * self.rank;
         if !self.fold {
             if threads <= 1 || self.nc <= 1 {
-                self.execute_rows_pooled(0, self.nc, out);
-                return;
+                return self.execute_rows_pooled(0, self.nc, out);
             }
             let rows_per = self.nc.div_ceil(threads);
+            let agg = Mutex::new(SpectrumHealth::default());
+            let agg_ref = &agg;
             std::thread::scope(|scope| {
                 let mut rest: &mut [f64] = out;
                 let mut lo = 0usize;
@@ -1432,37 +1639,48 @@ impl SpectralPlan {
                     let hi = (lo + rows_per).min(self.nc);
                     let (head, tail) = std::mem::take(&mut rest).split_at_mut((hi - lo) * row_vals);
                     rest = tail;
-                    scope.spawn(move || self.execute_rows_pooled(lo, hi, head));
+                    scope.spawn(move || {
+                        let health = self.execute_rows_pooled(lo, hi, head);
+                        agg_ref.lock().unwrap().merge(&health);
+                    });
                     lo = hi;
                 }
             });
-            return;
+            return agg.into_inner().unwrap();
         }
         // Folded: solve the fundamental domain, then mirror the rest.
-        {
+        let health = {
             let solved = &mut out[..srows * row_vals];
             if threads <= 1 || srows <= 1 {
-                self.execute_fold_rows_pooled(0, srows, solved);
+                self.execute_fold_rows_pooled(0, srows, solved)
             } else {
+                let agg = Mutex::new(SpectrumHealth::default());
+                let agg_ref = &agg;
                 std::thread::scope(|scope| {
                     let mut rest: &mut [f64] = solved;
                     for (lo, hi) in self.fold_strips(threads) {
                         let (head, tail) =
                             std::mem::take(&mut rest).split_at_mut((hi - lo) * row_vals);
                         rest = tail;
-                        scope.spawn(move || self.execute_fold_rows_pooled(lo, hi, head));
+                        scope.spawn(move || {
+                            let health = self.execute_fold_rows_pooled(lo, hi, head);
+                            agg_ref.lock().unwrap().merge(&health);
+                        });
                     }
                 });
+                agg.into_inner().unwrap()
             }
-        }
+        };
         mirror_fill(self.nc, self.mc, self.rank, out);
+        health
     }
 
-    /// Execute the full dual grid and package the result as a [`Spectrum`].
+    /// Execute the full dual grid and package the result as a [`Spectrum`]
+    /// (carrying the sweep's aggregated [`SpectrumHealth`]).
     pub fn execute(&self) -> Spectrum {
         let mut values = vec![0.0f64; self.values_len()];
-        self.execute_into(&mut values);
-        self.spectrum_from_values(SpectrumRequest::Full, values)
+        let health = self.execute_into(&mut values);
+        self.spectrum_from_values_health(SpectrumRequest::Full, values, health)
     }
 
     /// Full SVD with per-frequency factors `U_k, Σ_k, V_k` (the factor
@@ -1492,6 +1710,7 @@ impl SpectralPlan {
         let mut values = vec![0.0f64; freqs * r];
         let mut ws = self.checkout();
         let mut block = CMat::zeros(fwd_rows, fwd_cols);
+        let mut health = SpectrumHealth::default();
         for ki in 0..self.nc {
             for kj in 0..self.mc {
                 let f = ki * self.mc + kj;
@@ -1532,7 +1751,12 @@ impl SpectralPlan {
                         }
                     }
                 }
+                // The full decomposition already runs the crate's most
+                // robust path (f64 Jacobi with a fresh-restart retry), so
+                // there is no further rung to escalate to: record the
+                // certificate as-is.
                 let dec = jacobi_svd::svd(&block);
+                health.absorb(dec.cert.converged, dec.cert.restarted, 0, dec.cert.residual);
                 values[f * r..(f + 1) * r].copy_from_slice(&dec.s[..r]);
                 u.push(dec.u);
                 v.push(dec.v);
@@ -1547,6 +1771,7 @@ impl SpectralPlan {
             c_in: sym_cols,
             per_freq: r,
             values,
+            health,
         };
         let (u, v) = if self.kernel.transposed { (v, u) } else { (u, v) };
         FullSvd { n: self.nc, m: self.mc, c_out: sym_rows, c_in: sym_cols, u, sigma, v }
@@ -1804,10 +2029,39 @@ mod tests {
         assert_eq!(plan.request_values_len(SpectrumRequest::Full), plan.values_len());
         assert_eq!(plan.request_values_len(SpectrumRequest::TopK(2)), plan.topk_values_len(2));
         let mut full = vec![0.0f64; plan.values_len()];
-        assert_eq!(plan.execute_request_into(SpectrumRequest::Full, &mut full), 0);
+        let (full_iters, full_health) = plan.execute_request_into(SpectrumRequest::Full, &mut full);
+        assert_eq!(full_iters, 0);
+        assert!(!full_health.is_degraded());
         let mut top = vec![0.0f64; plan.topk_values_len(1)];
-        assert!(plan.execute_request_into(SpectrumRequest::TopK(1), &mut top) > 0);
+        let (top_iters, top_health) = plan.execute_request_into(SpectrumRequest::TopK(1), &mut top);
+        assert!(top_iters > 0);
+        assert!(!top_health.is_degraded());
         assert!((top[0] - full[0]).abs() <= 1e-8 * full[0].max(1.0));
+    }
+
+    #[test]
+    fn healthy_sweeps_certify_every_solved_frequency() {
+        let mut rng = Pcg64::seeded(619);
+        let k = ConvKernel::random_he(4, 3, 3, 3, &mut rng);
+        let plan = SpectralPlan::new(&k, 6, 6, LfaOptions { threads: 1, ..Default::default() });
+        let full = plan.execute();
+        assert_eq!(full.health.converged_freqs as usize, plan.solved_freqs());
+        assert_eq!(full.health.degraded_freqs, 0);
+        assert_eq!(full.health.escalations, 0);
+        assert!(full.health.worst_residual <= 1e-10);
+        let top = plan.execute_topk(2);
+        let h = top.spectrum.health;
+        assert_eq!(
+            (h.converged_freqs + h.retried_freqs) as usize,
+            plan.solved_freqs(),
+            "every solved frequency must carry a verdict"
+        );
+        assert_eq!(h.degraded_freqs, 0);
+        let fac = plan.execute_topk_factors(2);
+        assert!(!fac.sigma.health.is_degraded());
+        let dec = plan.execute_full();
+        assert_eq!(dec.sigma.health.degraded_freqs, 0);
+        assert!(dec.sigma.health.converged_freqs >= 1);
     }
 
     #[test]

@@ -26,6 +26,7 @@ use crate::lfa::svd::BlockSolver;
 use crate::linalg::jacobi_eig::{self, GramScratch};
 use crate::linalg::jacobi_svd::{self, JacobiScratch, RefineScratch};
 use crate::linalg::power::{self, TopKOptions, TopKScratch};
+use crate::linalg::SolveCert;
 use crate::numeric::{C32, C64};
 use std::sync::Mutex;
 
@@ -115,9 +116,16 @@ impl Workspace {
 
     /// Singular values (descending) of the current contents of `self.block`,
     /// interpreted as a row-major `rows×cols` matrix, written into `out`
-    /// (`min(rows, cols)` long). Allocation-free.
+    /// (`min(rows, cols)` long). Returns the solver's convergence
+    /// certificate. Allocation-free.
     #[inline]
-    pub fn solve_block(&mut self, solver: BlockSolver, rows: usize, cols: usize, out: &mut [f64]) {
+    pub fn solve_block(
+        &mut self,
+        solver: BlockSolver,
+        rows: usize,
+        cols: usize,
+        out: &mut [f64],
+    ) -> SolveCert {
         match solver {
             BlockSolver::Jacobi => {
                 jacobi_svd::singular_values_into(&self.block, rows, cols, &mut self.jacobi, out)
@@ -139,10 +147,10 @@ impl Workspace {
         rows: usize,
         cols: usize,
         out: &mut [f64],
-    ) {
+    ) -> SolveCert {
         let r = rows.min(cols);
         let vals = &mut self.svals32[..r];
-        match solver {
+        let cert = match solver {
             BlockSolver::Jacobi => jacobi_svd::singular_values_into(
                 &self.block32,
                 rows,
@@ -157,10 +165,11 @@ impl Workspace {
                 &mut self.gram32,
                 vals,
             ),
-        }
+        };
         for (o, &v) in out[..r].iter_mut().zip(vals.iter()) {
             *o = v as f64;
         }
+        cert
     }
 
     /// Mixed-precision solve of the f64 block: an f32 Jacobi sweep does the
@@ -170,15 +179,15 @@ impl Workspace {
     /// (the [`crate::lfa::Precision::F32Refined`] tier; always the Jacobi
     /// route — the Gram ablation has no refinement ladder).
     #[inline]
-    pub fn solve_block_refined(&mut self, rows: usize, cols: usize, out: &mut [f64]) {
+    pub fn solve_block_refined(&mut self, rows: usize, cols: usize, out: &mut [f64]) -> SolveCert {
         jacobi_svd::singular_values_refined_into(&self.block, rows, cols, &mut self.refine, out)
     }
 
     /// Top-`k` singular values (descending) of the current contents of
     /// `self.block` via warm-started Krylov iteration, seeded from
     /// whatever basis the previous solve on this workspace converged to.
-    /// Returns the iterations spent. Allocation-free after the scratch has
-    /// seen the shape once.
+    /// Returns the convergence certificate (`effort` = iterations spent).
+    /// Allocation-free after the scratch has seen the shape once.
     #[inline]
     pub fn solve_block_topk(
         &mut self,
@@ -187,7 +196,7 @@ impl Workspace {
         k: usize,
         opts: TopKOptions,
         out: &mut [f64],
-    ) -> usize {
+    ) -> SolveCert {
         power::block_topk(&self.block, rows, cols, k, opts, &mut self.topk, out)
     }
 
@@ -202,13 +211,13 @@ impl Workspace {
         k: usize,
         opts: TopKOptions,
         out: &mut [f64],
-    ) -> usize {
+    ) -> SolveCert {
         let vals = &mut self.svals32[..k];
-        let iters = power::block_topk(&self.block32, rows, cols, k, opts, &mut self.topk32, vals);
+        let cert = power::block_topk(&self.block32, rows, cols, k, opts, &mut self.topk32, vals);
         for (o, &v) in out[..k].iter_mut().zip(vals.iter()) {
             *o = v as f64;
         }
-        iters
+        cert
     }
 
     /// Mixed-precision top-`k` of the f64 block: narrow it into `block32`,
@@ -224,13 +233,13 @@ impl Workspace {
         k: usize,
         opts: TopKOptions,
         out: &mut [f64],
-    ) -> usize {
+    ) -> SolveCert {
         let len = rows * cols;
         for (d, s) in self.block32[..len].iter_mut().zip(self.block[..len].iter()) {
             *d = s.to_c32();
         }
         let vals = &mut self.svals32[..k];
-        let iters = power::block_topk(&self.block32, rows, cols, k, opts, &mut self.topk32, vals);
+        let cert = power::block_topk(&self.block32, rows, cols, k, opts, &mut self.topk32, vals);
         power::refine_topk_values(
             &self.block[..len],
             rows,
@@ -240,7 +249,7 @@ impl Workspace {
             &mut self.refine_v[..cols],
             out,
         );
-        iters
+        cert
     }
 }
 
@@ -356,8 +365,8 @@ mod tests {
         let mut full = vec![0.0f64; 4];
         ws.solve_block(BlockSolver::Jacobi, 5, 4, &mut full);
         let mut top = vec![0.0f64; 2];
-        let iters = ws.solve_block_topk(5, 4, 2, TopKOptions::default(), &mut top);
-        assert!(iters >= 1);
+        let cert = ws.solve_block_topk(5, 4, 2, TopKOptions::default(), &mut top);
+        assert!(cert.effort >= 1 && cert.converged);
         assert!(ws.topk.is_warm());
         for j in 0..2 {
             assert!((top[j] - full[j]).abs() < 1e-9 * full[0].max(1.0), "{j}");
@@ -378,8 +387,8 @@ mod tests {
             *d = s.to_c32();
         }
         let mut top32 = vec![0.0f64; 2];
-        let iters = ws.solve_block_topk32(6, 5, 2, TopKOptions::default(), &mut top32);
-        assert!(iters >= 1);
+        let cert = ws.solve_block_topk32(6, 5, 2, TopKOptions::default(), &mut top32);
+        assert!(cert.effort >= 1 && cert.converged);
         assert!(ws.topk32.is_warm());
         for j in 0..2 {
             assert!((top32[j] - full[j]).abs() <= 1e-3 * scale, "{j}");

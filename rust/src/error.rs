@@ -1,27 +1,83 @@
 //! Minimal error handling for the offline crate set (no `anyhow`).
 //!
 //! The whole system reports failures as human-readable strings with context
-//! chains — there is no error taxonomy to match on, so a single string-backed
-//! [`Error`] plus the [`Context`] extension trait covers every call site.
+//! chains — plus a small [`ErrorKind`] taxonomy for the few failures the
+//! coordinator must *dispatch on* (non-finite weights rejected at submit
+//! time, spectra still degraded after the escalation ladder) so the daemon
+//! can map them to distinct wire responses instead of string-matching.
 //! The [`crate::err!`] and [`crate::bail!`] macros mirror the `anyhow!` /
 //! `bail!` idiom so call sites read the same as they would with the crate.
 
 use std::fmt;
 
-/// A string-backed error with a context chain folded into the message.
+/// Typed classification of the failures the numerical-health layer needs
+/// to route differently. Everything else is [`ErrorKind::Generic`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// An ordinary string-backed failure.
+    Generic,
+    /// Kernel weights contained NaN/Inf — rejected before any tile ran.
+    NonFiniteWeights {
+        /// Layer (or kernel) name the bad weights belong to.
+        layer: String,
+        /// Number of non-finite entries found.
+        count: usize,
+    },
+    /// A spectrum stayed degraded after the escalation ladder and the job
+    /// ran under strict health.
+    DegradedSpectrum {
+        /// Job / layer identifier.
+        job: String,
+        /// Number of frequencies still unconverged.
+        freqs: usize,
+    },
+}
+
+/// A string-backed error with a context chain folded into the message and
+/// an optional typed [`ErrorKind`] for dispatch.
 pub struct Error {
     msg: String,
+    kind: ErrorKind,
 }
 
 impl Error {
     /// Build an error from anything displayable.
     pub fn msg(msg: impl Into<String>) -> Self {
-        Self { msg: msg.into() }
+        Self { msg: msg.into(), kind: ErrorKind::Generic }
     }
 
-    /// Prepend a context line, `anyhow::Context`-style.
+    /// Typed rejection of NaN/Inf kernel weights (screened at plan/submit
+    /// time, before any frequency is solved).
+    pub fn non_finite_weights(layer: impl Into<String>, count: usize) -> Self {
+        let layer = layer.into();
+        Self {
+            msg: format!("layer '{layer}': {count} non-finite kernel weight(s) (NaN/Inf)"),
+            kind: ErrorKind::NonFiniteWeights { layer, count },
+        }
+    }
+
+    /// Typed strict-health failure: `freqs` frequencies of `job` remained
+    /// unconverged after the escalation ladder.
+    pub fn degraded_spectrum(job: impl Into<String>, freqs: usize) -> Self {
+        let job = job.into();
+        Self {
+            msg: format!(
+                "job '{job}': spectrum degraded — {freqs} frequenc{} unconverged after escalation",
+                if freqs == 1 { "y" } else { "ies" }
+            ),
+            kind: ErrorKind::DegradedSpectrum { job, freqs },
+        }
+    }
+
+    /// The typed classification (Generic for plain string errors).
+    pub fn kind(&self) -> &ErrorKind {
+        &self.kind
+    }
+
+    /// Prepend a context line, `anyhow::Context`-style. The typed kind
+    /// survives the wrap.
     pub fn context(self, msg: impl fmt::Display) -> Self {
-        Self { msg: format!("{msg}: {}", self.msg) }
+        Self { msg: format!("{msg}: {}", self.msg), kind: self.kind }
     }
 }
 
@@ -41,19 +97,19 @@ impl std::error::Error for Error {}
 
 impl From<String> for Error {
     fn from(msg: String) -> Self {
-        Self { msg }
+        Self::msg(msg)
     }
 }
 
 impl From<&str> for Error {
     fn from(msg: &str) -> Self {
-        Self { msg: msg.to_string() }
+        Self::msg(msg)
     }
 }
 
 impl From<std::io::Error> for Error {
     fn from(e: std::io::Error) -> Self {
-        Self { msg: e.to_string() }
+        Self::msg(e.to_string())
     }
 }
 
@@ -137,6 +193,22 @@ mod tests {
         }
         assert!(f(0).is_err());
         assert_eq!(f(2).unwrap(), 2);
+    }
+
+    #[test]
+    fn typed_kinds_survive_context() {
+        let e = Error::non_finite_weights("conv1", 3);
+        assert_eq!(
+            *e.kind(),
+            ErrorKind::NonFiniteWeights { layer: "conv1".into(), count: 3 }
+        );
+        let wrapped = e.context("submit");
+        assert!(wrapped.to_string().starts_with("submit: "));
+        assert!(matches!(wrapped.kind(), ErrorKind::NonFiniteWeights { .. }));
+        let d = Error::degraded_spectrum("job-7", 2);
+        assert_eq!(*d.kind(), ErrorKind::DegradedSpectrum { job: "job-7".into(), freqs: 2 });
+        assert!(d.to_string().contains("2 frequencies"));
+        assert_eq!(*err!("plain").kind(), ErrorKind::Generic);
     }
 
     #[test]

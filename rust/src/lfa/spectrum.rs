@@ -83,6 +83,74 @@ pub fn conj_factor(mat: &CMat) -> CMat {
     out
 }
 
+/// Numerical-health summary of the solves that produced a [`Spectrum`]:
+/// how many frequencies converged cleanly, how many needed the escalation
+/// ladder, and how many are still degraded after it — plus the worst
+/// relative solver residual observed. Carried on every `Spectrum`,
+/// aggregated across layers by `ModelSpectra`, and surfaced on the
+/// coordinator's `LayerReport` and the daemon wire protocol, so a consumer
+/// can always tell a certified spectrum from a best-effort one.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SpectrumHealth {
+    /// Frequencies whose solver certificate met tolerance first try.
+    pub converged_freqs: u64,
+    /// Frequencies that needed at least one retry/escalation rung but
+    /// ended converged.
+    pub retried_freqs: u64,
+    /// Frequencies still unconverged after the full escalation ladder —
+    /// their values are best-effort and the spectrum must not be cached.
+    pub degraded_freqs: u64,
+    /// Total escalation-ladder rungs taken (internal fresh restarts plus
+    /// full-Jacobi / f64 re-solves), across all frequencies.
+    pub escalations: u64,
+    /// Worst relative solver residual across all frequencies (off-diagonal
+    /// for Jacobi, Ritz residual for the Krylov top-k path).
+    pub worst_residual: f64,
+}
+
+impl SpectrumHealth {
+    /// Health of a spectrum with `freqs` frequencies solved cleanly —
+    /// the label for exact/direct paths (baselines, disk-cache decode).
+    pub fn clean(freqs: u64) -> Self {
+        Self { converged_freqs: freqs, ..Self::default() }
+    }
+
+    /// Whether any frequency remains unconverged after the ladder. A
+    /// degraded spectrum is served flagged, never cached, and fails the
+    /// job under `--strict-health`.
+    pub fn is_degraded(&self) -> bool {
+        self.degraded_freqs > 0
+    }
+
+    /// Fold in the verdict of one frequency: converged cleanly, retried
+    /// (recovered after `escalations` rungs), or degraded.
+    pub fn absorb(&mut self, converged: bool, retried: bool, escalations: u64, residual: f64) {
+        if !converged {
+            self.degraded_freqs += 1;
+        } else if retried {
+            self.retried_freqs += 1;
+        } else {
+            self.converged_freqs += 1;
+        }
+        self.escalations += escalations;
+        if residual > self.worst_residual {
+            self.worst_residual = residual;
+        }
+    }
+
+    /// Merge another health summary into this one (counts add, worst
+    /// residual maxes) — layer aggregation and threaded-strip reduction.
+    pub fn merge(&mut self, other: &Self) {
+        self.converged_freqs += other.converged_freqs;
+        self.retried_freqs += other.retried_freqs;
+        self.degraded_freqs += other.degraded_freqs;
+        self.escalations += other.escalations;
+        if other.worst_residual > self.worst_residual {
+            self.worst_residual = other.worst_residual;
+        }
+    }
+}
+
 /// Singular values of a convolution, grouped by frequency.
 ///
 /// A **full** spectrum stores `min(c_out, c_in)` values per frequency; the
@@ -104,6 +172,8 @@ pub struct Spectrum {
     /// `values[f·r .. (f+1)·r]` are the descending singular values at
     /// frequency `f`, with `r = per_freq`.
     pub values: Vec<f64>,
+    /// Convergence evidence for the solves behind these values.
+    pub health: SpectrumHealth,
 }
 
 impl Spectrum {
@@ -307,7 +377,15 @@ mod tests {
 
     fn spectrum(values: Vec<f64>, r: usize) -> Spectrum {
         let f = values.len() / r;
-        Spectrum { n: f, m: 1, c_out: r, c_in: r, per_freq: r, values }
+        Spectrum {
+            n: f,
+            m: 1,
+            c_out: r,
+            c_in: r,
+            per_freq: r,
+            values,
+            health: SpectrumHealth::default(),
+        }
     }
 
     #[test]
@@ -335,6 +413,7 @@ mod tests {
             c_in: 3,
             per_freq: 2,
             values: vec![3.0, 2.0, 4.0, 1.0],
+            health: SpectrumHealth::default(),
         };
         assert!(s.is_partial() && !s.is_full());
         assert_eq!(s.sigma_max(), 4.0, "σ_max is exact on a top-k spectrum");
@@ -438,6 +517,26 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn health_absorb_and_merge() {
+        let mut h = SpectrumHealth::default();
+        h.absorb(true, false, 0, 1e-14);
+        h.absorb(true, true, 2, 1e-9);
+        h.absorb(false, true, 3, 0.5);
+        assert_eq!(h.converged_freqs, 1);
+        assert_eq!(h.retried_freqs, 1);
+        assert_eq!(h.degraded_freqs, 1);
+        assert_eq!(h.escalations, 5);
+        assert_eq!(h.worst_residual, 0.5);
+        assert!(h.is_degraded());
+        let mut sum = SpectrumHealth::clean(4);
+        assert!(!sum.is_degraded());
+        sum.merge(&h);
+        assert_eq!(sum.converged_freqs, 5);
+        assert_eq!(sum.degraded_freqs, 1);
+        assert_eq!(sum.worst_residual, 0.5);
     }
 
     #[test]

@@ -10,12 +10,13 @@
 //! plan-once/execute-many skips the planning cost and all per-call
 //! allocation.
 
-use super::spectrum::{FullSvd, Spectrum};
+use super::spectrum::{FullSvd, Spectrum, SpectrumHealth};
 use super::symbol::{BlockLayout, SymbolGrid};
 use crate::conv::ConvKernel;
 use crate::engine::{SpectralPlan, Workspace};
 use crate::linalg::jacobi_svd;
 use crate::numeric::{C64, CMat};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// Which per-block solver to use for the `c_out×c_in` SVDs.
@@ -176,7 +177,7 @@ pub fn singular_values_timed(
     let grid = plan.compute_symbols();
     let transform = t0.elapsed();
     let t1 = Instant::now();
-    let values = svd_pass(&grid, opts);
+    let (values, health) = svd_pass(&grid, opts);
     let svd = t1.elapsed();
     (
         Spectrum {
@@ -186,6 +187,7 @@ pub fn singular_values_timed(
             c_in: kernel.c_in,
             per_freq: kernel.c_out.min(kernel.c_in),
             values,
+            health,
         },
         StageTiming { transform, copy: Duration::ZERO, svd },
     )
@@ -195,18 +197,23 @@ pub fn singular_values_timed(
 /// Exposed so the FFT baseline can share the identical SVD stage (keeping
 /// the Table III comparison honest: only the transform differs). Uses the
 /// same per-worker [`Workspace`]s as the planned path — one scratch set per
-/// worker, zero allocation per frequency.
-pub fn svd_pass(grid: &SymbolGrid, opts: LfaOptions) -> Vec<f64> {
+/// worker, zero allocation per frequency. Returns the values plus the
+/// pass's aggregated [`SpectrumHealth`] (certificates only — the baseline
+/// stage reports but does not escalate; the planned engine's ladder lives
+/// in [`SpectralPlan`]).
+pub fn svd_pass(grid: &SymbolGrid, opts: LfaOptions) -> (Vec<f64>, SpectrumHealth) {
     let r = grid.c_out.min(grid.c_in);
     let freqs = grid.freqs();
     let mut values = vec![0.0f64; freqs * r];
     let threads = crate::engine::resolve_threads(opts.threads).min(freqs.max(1));
     if threads <= 1 {
         let mut ws = Workspace::for_block(grid.c_out, grid.c_in, 1);
-        svd_pass_range(grid, opts, 0, freqs, &mut ws, &mut values);
-        return values;
+        let health = svd_pass_range(grid, opts, 0, freqs, &mut ws, &mut values);
+        return (values, health);
     }
     let chunk = freqs.div_ceil(threads);
+    let agg = Mutex::new(SpectrumHealth::default());
+    let agg_ref = &agg;
     std::thread::scope(|s| {
         let mut rest: &mut [f64] = &mut values;
         let mut lo = 0usize;
@@ -216,17 +223,19 @@ pub fn svd_pass(grid: &SymbolGrid, opts: LfaOptions) -> Vec<f64> {
             rest = tail;
             s.spawn(move || {
                 let mut ws = Workspace::for_block(grid.c_out, grid.c_in, 1);
-                svd_pass_range(grid, opts, lo, hi, &mut ws, head);
+                let health = svd_pass_range(grid, opts, lo, hi, &mut ws, head);
+                agg_ref.lock().unwrap().merge(&health);
             });
             lo = hi;
         }
     });
-    values
+    (values, agg.into_inner().unwrap())
 }
 
 /// SVD the blocks `[f_lo, f_hi)`; writes into `out[(f−f_lo)·r ..]`.
 /// Honors `opts.precision`: the grid's f64 blocks are narrowed for the
-/// `F32` tier and refined against for `F32Refined`.
+/// `F32` tier and refined against for `F32Refined`. Returns the range's
+/// aggregated certificates.
 fn svd_pass_range(
     grid: &SymbolGrid,
     opts: LfaOptions,
@@ -234,22 +243,25 @@ fn svd_pass_range(
     f_hi: usize,
     ws: &mut Workspace,
     out: &mut [f64],
-) {
+) -> SpectrumHealth {
     let r = grid.c_out.min(grid.c_in);
+    let mut health = SpectrumHealth::default();
     for f in f_lo..f_hi {
         grid.block_into(f, &mut ws.block);
         let dst = &mut out[(f - f_lo) * r..(f - f_lo + 1) * r];
-        match opts.precision {
+        let cert = match opts.precision {
             Precision::F64 => ws.solve_block(opts.solver, grid.c_out, grid.c_in, dst),
             Precision::F32 => {
                 for (d, s) in ws.block32.iter_mut().zip(ws.block.iter()) {
                     *d = s.to_c32();
                 }
-                ws.solve_block32(opts.solver, grid.c_out, grid.c_in, dst);
+                ws.solve_block32(opts.solver, grid.c_out, grid.c_in, dst)
             }
             Precision::F32Refined => ws.solve_block_refined(grid.c_out, grid.c_in, dst),
-        }
+        };
+        health.absorb(cert.converged, cert.restarted, 0, cert.residual);
     }
+    health
 }
 
 /// Full SVD with per-frequency factors `U_k, Σ_k, V_k`.
@@ -264,9 +276,11 @@ pub fn svd_full_from_grid(grid: &SymbolGrid) -> FullSvd {
     let mut u = Vec::with_capacity(freqs);
     let mut v = Vec::with_capacity(freqs);
     let mut values = vec![0.0f64; freqs * r];
+    let mut health = SpectrumHealth::default();
     for f in 0..freqs {
         let block = grid.block(f);
         let dec = jacobi_svd::svd(&block);
+        health.absorb(dec.cert.converged, dec.cert.restarted, 0, dec.cert.residual);
         values[f * r..(f + 1) * r].copy_from_slice(&dec.s[..r]);
         u.push(dec.u);
         v.push(dec.v);
@@ -284,6 +298,7 @@ pub fn svd_full_from_grid(grid: &SymbolGrid) -> FullSvd {
             c_in: grid.c_in,
             per_freq: r,
             values,
+            health,
         },
         v,
     }

@@ -190,5 +190,5 @@ pub mod bench_util;
 pub mod testing;
 
 pub use engine::{ModelPlan, SpectralBackend, SpectralPlan};
-pub use error::{Error, Result};
+pub use error::{Error, ErrorKind, Result};
 pub use numeric::{c64, C64, CMat, Layout, Mat, Pcg64};

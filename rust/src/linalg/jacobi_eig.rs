@@ -12,7 +12,9 @@
 //! once as a rank-1 `caxpy` update into the upper triangle (contiguous in
 //! both operands), the wide case is a straight conjugate dot per pair.
 
+use crate::linalg::SolveCert;
 use crate::numeric::{C, CMat, Real, SimdReal};
+use crate::testing::chaos;
 
 const MAX_SWEEPS: usize = 40;
 const TOL: f64 = 1e-15;
@@ -26,22 +28,30 @@ pub struct HEig {
 
 /// Eigenvalues (descending) of a Hermitian matrix.
 pub fn eigenvalues(h: &CMat) -> Vec<f64> {
-    decompose(h, false).lambda
+    decompose(h, false).0.lambda
 }
 
 /// Full Hermitian eigendecomposition via cyclic two-sided Jacobi rotations.
 pub fn eigh(h: &CMat) -> HEig {
+    decompose(h, true).0
+}
+
+/// [`eigh`] plus the convergence certificate of the sweep.
+pub fn eigh_certified(h: &CMat) -> (HEig, SolveCert) {
     decompose(h, true)
 }
 
-fn decompose(h: &CMat, compute_q: bool) -> HEig {
+fn decompose(h: &CMat, compute_q: bool) -> (HEig, SolveCert) {
     let n = h.rows;
     assert_eq!(h.rows, h.cols, "eigh requires a square matrix");
     debug_assert!(hermitian_defect(h) < 1e-10, "input must be Hermitian");
     let mut a = h.clone();
     let mut q = CMat::eye(n);
 
-    for _sweep in 0..MAX_SWEEPS {
+    let stall = chaos::fire(chaos::SOLVER_STALL);
+    let mut cert =
+        SolveCert { effort: MAX_SWEEPS, residual: 0.0, converged: false, restarted: false };
+    for sweep in 0..MAX_SWEEPS {
         let mut off = 0.0f64;
         for p in 0..n.saturating_sub(1) {
             for qi in p + 1..n {
@@ -93,7 +103,10 @@ fn decompose(h: &CMat, compute_q: bool) -> HEig {
                 }
             }
         }
+        cert.residual = off;
         if off <= TOL {
+            cert.effort = sweep + 1;
+            cert.converged = !stall;
             break;
         }
     }
@@ -110,7 +123,7 @@ fn decompose(h: &CMat, compute_q: bool) -> HEig {
             }
         }
     }
-    HEig { lambda, q: q_sorted }
+    (HEig { lambda, q: q_sorted }, cert)
 }
 
 /// Singular values of `A` via eigenvalues of its Gram matrix.
@@ -151,7 +164,7 @@ pub fn singular_values_gram_into<T: SimdReal>(
     cols: usize,
     scratch: &mut GramScratch<T>,
     out: &mut [T],
-) {
+) -> SolveCert {
     debug_assert_eq!(a.len(), rows * cols);
     let k = rows.min(cols);
     debug_assert_eq!(out.len(), k);
@@ -186,11 +199,18 @@ pub fn singular_values_gram_into<T: SimdReal>(
             }
         }
     }
-    diagonalize_in_place(g, k);
+    let mut cert = diagonalize_in_place(g, k);
+    if !cert.converged {
+        // Fresh-restart retry on the current (already nearly diagonal) Gram
+        // iterate before reporting exhaustion to the escalation ladder.
+        let retry = diagonalize_in_place(g, k);
+        cert = cert.after_restart(retry);
+    }
     for (j, o) in out.iter_mut().enumerate() {
         *o = g[j * k + j].re.max(T::ZERO).sqrt();
     }
     out.sort_unstable_by(|x, y| y.partial_cmp(x).unwrap());
+    cert
 }
 
 /// Cyclic two-sided Jacobi sweeps on a flat row-major Hermitian `n×n`
@@ -198,9 +218,11 @@ pub fn singular_values_gram_into<T: SimdReal>(
 /// schedule and formulas to [`eigh`], minus the eigenvector accumulation.
 /// The paired-row update is the lane-parallel [`SimdReal::crot`] kernel;
 /// the column update is strided and stays scalar.
-fn diagonalize_in_place<T: SimdReal>(g: &mut [C<T>], n: usize) {
+fn diagonalize_in_place<T: SimdReal>(g: &mut [C<T>], n: usize) -> SolveCert {
     debug_assert_eq!(g.len(), n * n);
-    for _sweep in 0..MAX_SWEEPS {
+    let stall = chaos::fire(chaos::SOLVER_STALL);
+    let mut last_off = T::ZERO;
+    for sweep in 0..MAX_SWEEPS {
         let mut off = T::ZERO;
         for p in 0..n.saturating_sub(1) {
             for q in p + 1..n {
@@ -239,8 +261,20 @@ fn diagonalize_in_place<T: SimdReal>(g: &mut [C<T>], n: usize) {
             }
         }
         if off <= T::EIG_TOL {
-            break;
+            return SolveCert {
+                effort: sweep + 1,
+                residual: off.to_f64(),
+                converged: !stall,
+                restarted: false,
+            };
         }
+        last_off = off;
+    }
+    SolveCert {
+        effort: MAX_SWEEPS,
+        residual: last_off.to_f64(),
+        converged: false,
+        restarted: false,
     }
 }
 

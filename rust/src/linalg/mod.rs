@@ -20,3 +20,43 @@ pub mod qr;
 pub use gk_svd::SvdResult;
 pub use jacobi_svd::CSvd;
 pub use power::{block_topk, LinOp, TopKOptions, TopKScratch};
+
+/// Convergence certificate returned by the iterative solvers (Jacobi
+/// sweeps, Krylov top-k). Instead of silently "tolerating" iteration-budget
+/// exhaustion, every solve reports how hard it worked and how good the
+/// result actually is, so the engine's escalation ladder
+/// ([`crate::engine::SpectralPlan`]) can retry, re-solve in higher
+/// precision, or flag the frequency as degraded.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SolveCert {
+    /// Iteration effort spent: Jacobi sweeps used, or Krylov steps taken.
+    pub effort: usize,
+    /// Final relative residual: the worst relative off-diagonal element at
+    /// exit (Jacobi), or the worst relative Ritz residual (top-k). Zero for
+    /// trivial solves that need no iteration.
+    pub residual: f64,
+    /// Whether the residual met the solver's tolerance within the
+    /// iteration budget. `false` means the values are best-effort.
+    pub converged: bool,
+    /// Whether an internal fresh-restart retry was taken (sweep
+    /// exhaustion recovered by restarting from the current iterate).
+    pub restarted: bool,
+}
+
+impl SolveCert {
+    /// Certificate for a trivial solve (nothing to iterate on).
+    pub const TRIVIAL: Self =
+        Self { effort: 0, residual: 0.0, converged: true, restarted: false };
+
+    /// Combine the certificate of a retry pass with the original attempt:
+    /// effort accumulates, the retry's verdict and residual win, and the
+    /// result is marked restarted.
+    pub fn after_restart(self, retry: Self) -> Self {
+        Self {
+            effort: self.effort + retry.effort,
+            residual: retry.residual,
+            converged: retry.converged,
+            restarted: true,
+        }
+    }
+}

@@ -30,7 +30,9 @@
 //! floored at a few machine epsilons of the active width so an `f32` solve
 //! with default options terminates instead of chasing round-off.
 
+use crate::linalg::SolveCert;
 use crate::numeric::{C, C64, Mat, Pcg64, Real, SimdReal};
+use crate::testing::chaos;
 
 /// A real linear operator `A : R^in → R^out` exposing the two matvecs the
 /// power method needs. Implemented by dense matrices and by the convolution
@@ -67,6 +69,10 @@ pub struct PowerResult {
     pub iterations: usize,
     /// Final relative change — convergence indicator.
     pub residual: f64,
+    /// Whether the relative change met `tol` within `max_iters`. A `false`
+    /// here means `sigma_max` is a lower-bound estimate only — consumers
+    /// (Lipschitz screening, clipping) must not treat it as certified.
+    pub converged: bool,
 }
 
 /// Estimate `σ_max(A)` by power iteration on `AᵀA`.
@@ -83,7 +89,7 @@ pub fn spectral_norm<O: LinOp>(op: &O, max_iters: usize, tol: f64, rng: &mut Pcg
         let y = op.apply(&x);
         sigma = norm(&y);
         if sigma == 0.0 {
-            return PowerResult { sigma_max: 0.0, iterations: iters, residual: 0.0 };
+            return PowerResult { sigma_max: 0.0, iterations: iters, residual: 0.0, converged: true };
         }
         x = op.apply_t(&y);
         normalize(&mut x);
@@ -93,7 +99,7 @@ pub fn spectral_norm<O: LinOp>(op: &O, max_iters: usize, tol: f64, rng: &mut Pcg
         }
         last = sigma;
     }
-    PowerResult { sigma_max: sigma, iterations: iters, residual }
+    PowerResult { sigma_max: sigma, iterations: iters, residual, converged: residual < tol }
 }
 
 /// Convergence controls for [`block_topk`].
@@ -436,7 +442,11 @@ fn tridiag_eigvec<T: Real>(
 /// written descending into `out` (`k ≤ min(rows, cols)` values), with the
 /// corresponding singular vectors left in `scratch`
 /// ([`TopKScratch::right_vector`] / [`TopKScratch::left_scaled`]). Returns
-/// the number of iteration steps spent (Lanczos steps + probe power steps).
+/// the convergence certificate: `effort` is the number of iteration steps
+/// spent (Lanczos steps + probe power steps), `residual` the worst
+/// relative Ritz residual of the returned pairs, and `converged` whether
+/// every pair met the tolerance (or the Krylov space was exhausted — an
+/// exact invariant subspace) within the budget.
 ///
 /// The engine: Lanczos on the Gram operator of the smaller side (`AᴴA` or
 /// `AAᴴ`), fully reorthogonalized, with the Ritz residual bound
@@ -461,10 +471,13 @@ pub fn block_topk<T: SimdReal>(
     opts: TopKOptions,
     scratch: &mut TopKScratch<T>,
     out: &mut [T],
-) -> usize {
+) -> SolveCert {
     debug_assert_eq!(a.len(), rows * cols);
     debug_assert!(k >= 1 && k <= rows.min(cols), "k must be in 1..=min(rows, cols)");
     debug_assert_eq!(out.len(), k);
+    // Fault injection: report exhaustion (values stay correct) so the
+    // escalation ladder is exercisable without a pathological matrix.
+    let stall = chaos::fire(chaos::SOLVER_STALL);
     scratch.reserve(rows, cols, k);
     let dim = scratch.dim;
     let tmax = scratch.tmax;
@@ -477,6 +490,11 @@ pub fn block_topk<T: SimdReal>(
     let sqrt_eps = T::EPS.sqrt();
     let max_steps = opts.max_iters.max(k + 1);
     let mut steps = 0usize;
+    // Certificate state: the worst relative Ritz residual seen at the most
+    // recent convergence check, and whether the loop exited converged
+    // (Ritz tolerance met, or the Krylov space exhausted — exact).
+    let mut ritz_res = T::ZERO;
+    let mut converged = false;
 
     // --- starting vector: warm hint (sum of previous right vectors,
     // mapped through A when iterating the left Gram side) or random ---
@@ -555,7 +573,12 @@ pub fn block_topk<T: SimdReal>(
         let b = cnorm2(&scratch.u).sqrt();
         scale = scale.max(alpha_t.abs()).max(b);
         t += 1;
-        // Convergence: Ritz residuals of the current tridiagonal.
+        // Convergence: Ritz residuals of the current tridiagonal. Reaching
+        // `dim` means the Krylov space is the whole space (exact invariant
+        // subspace); hitting `tmax`/`max_steps` alone is budget exhaustion.
+        if t >= dim {
+            converged = true;
+        }
         let mut done = t >= dim || t >= tmax || steps >= max_steps;
         if t >= k.min(dim) {
             scratch.td[..t].copy_from_slice(&scratch.alpha[..t]);
@@ -565,14 +588,18 @@ pub fn block_topk<T: SimdReal>(
             lmax = scratch.td[scratch.idx[0]].max(T::ZERO);
             if lmax > T::ZERO && t >= k {
                 let mut ok = true;
+                let mut worst = T::ZERO;
                 for j in 0..k {
-                    if b * scratch.tz[scratch.idx[j]].abs() > tol * lmax {
+                    let r = b * scratch.tz[scratch.idx[j]].abs();
+                    worst = worst.max(r);
+                    if r > tol * lmax {
                         ok = false;
-                        break;
                     }
                 }
+                ritz_res = worst / lmax;
                 if ok {
                     done = true;
+                    converged = true;
                 }
             }
         }
@@ -586,7 +613,9 @@ pub fn block_topk<T: SimdReal>(
             // the true spectrum is picked up and the all-zero answer is
             // only ever reported once the basis exhausts the space.
             if t >= k && lmax > T::ZERO {
+                // Invariant subspace with a nonzero top-k set: exact.
                 done = true;
+                converged = true;
             } else {
                 let mut rng = Pcg64::seeded(0xbdbd_u64 ^ (t as u64));
                 for x in scratch.q.iter_mut() {
@@ -804,7 +833,12 @@ pub fn block_topk<T: SimdReal>(
         }
     }
     scratch.warm = true;
-    steps
+    SolveCert {
+        effort: steps,
+        residual: ritz_res.to_f64(),
+        converged: converged && !stall,
+        restarted: false,
+    }
 }
 
 /// Write the indices of the `k` largest entries of `vals` (descending)
@@ -927,6 +961,15 @@ mod tests {
         let a = Mat::random_normal(20, 20, &mut rng);
         let got = spectral_norm(&a, 2000, 1e-10, &mut rng);
         assert!(got.residual < 1e-10, "residual {}", got.residual);
+        assert!(got.converged);
+    }
+
+    #[test]
+    fn tiny_budget_reports_unconverged() {
+        let mut rng = Pcg64::seeded(60);
+        let a = Mat::random_normal(20, 20, &mut rng);
+        let got = spectral_norm(&a, 2, 1e-14, &mut rng);
+        assert!(!got.converged, "2 iterations cannot certify 1e-14");
     }
 
     #[test]
@@ -939,9 +982,10 @@ mod tests {
             let want = jacobi_svd::singular_values(&a);
             let mut scratch = TopKScratch::new();
             let mut got = vec![0.0f64; k];
-            let iters =
+            let cert =
                 block_topk(&a.data, rows, cols, k, TopKOptions::default(), &mut scratch, &mut got);
-            assert!(iters >= 1);
+            assert!(cert.effort >= 1);
+            assert!(cert.converged, "healthy random block must certify");
             for j in 0..k {
                 assert!(
                     (got[j] - want[j]).abs() <= 1e-9 * want[0].max(1.0),
@@ -961,13 +1005,13 @@ mod tests {
         let mut scratch = TopKScratch::new();
         let mut out = vec![0.0f64; 3];
         let cold =
-            block_topk(&a.data, 8, 8, 3, TopKOptions::default(), &mut scratch, &mut out);
+            block_topk(&a.data, 8, 8, 3, TopKOptions::default(), &mut scratch, &mut out).effort;
         assert!(scratch.is_warm());
         // Same block again: the warm hint spans the invariant subspace, so
         // the Krylov loop exhausts it after ~k steps instead of sweeping
         // the whole space (both runs pay the fixed completion-probe steps).
         let warm =
-            block_topk(&a.data, 8, 8, 3, TopKOptions::default(), &mut scratch, &mut out);
+            block_topk(&a.data, 8, 8, 3, TopKOptions::default(), &mut scratch, &mut out).effort;
         assert!(cold > warm, "cold {cold} vs warm {warm}");
     }
 
@@ -1020,8 +1064,8 @@ mod tests {
         // Cold reference on conj(A).
         let mut cold_scratch = TopKScratch::new();
         let mut want = vec![0.0f64; 3];
-        let cold =
-            block_topk(&conj_a, 12, 12, 3, TopKOptions::default(), &mut cold_scratch, &mut want);
+        let cold = block_topk(&conj_a, 12, 12, 3, TopKOptions::default(), &mut cold_scratch, &mut want)
+            .effort;
         // Solve A, conjugate the carried basis, then solve conj(A): the
         // conjugated basis spans conj(A)'s invariant subspace exactly, so
         // the warm solve converges in fewer steps with the same values.
@@ -1030,7 +1074,8 @@ mod tests {
         block_topk(&a.data, 12, 12, 3, TopKOptions::default(), &mut scratch, &mut out);
         scratch.conjugate_basis();
         assert!(scratch.is_warm(), "conjugation must not drop the warm state");
-        let warm = block_topk(&conj_a, 12, 12, 3, TopKOptions::default(), &mut scratch, &mut out);
+        let warm =
+            block_topk(&conj_a, 12, 12, 3, TopKOptions::default(), &mut scratch, &mut out).effort;
         for (x, y) in out.iter().zip(&want) {
             assert!((x - y).abs() <= 1e-9 * want[0].max(1.0), "{x} vs {y}");
         }
@@ -1058,11 +1103,11 @@ mod tests {
         let mut scratch = TopKScratch::new();
         let mut out = vec![0.0f64; 2];
         let first =
-            block_topk(&a.data, 7, 7, 2, TopKOptions::default(), &mut scratch, &mut out);
+            block_topk(&a.data, 7, 7, 2, TopKOptions::default(), &mut scratch, &mut out).effort;
         scratch.reset();
         assert!(!scratch.is_warm());
         let again =
-            block_topk(&a.data, 7, 7, 2, TopKOptions::default(), &mut scratch, &mut out);
+            block_topk(&a.data, 7, 7, 2, TopKOptions::default(), &mut scratch, &mut out).effort;
         assert_eq!(first, again, "cold starts are deterministic");
     }
 

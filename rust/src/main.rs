@@ -14,7 +14,7 @@ use conv_svd_lfa::cli::{Cli, HELP};
 use conv_svd_lfa::conv::{Boundary, ConvKernel};
 use conv_svd_lfa::coordinator::{Backend, ServiceConfig, SpectralService};
 use conv_svd_lfa::engine::{ModelPlan, SpectralCache, SpectrumRequest};
-use conv_svd_lfa::error::Result;
+use conv_svd_lfa::error::{Error, Result};
 use conv_svd_lfa::lfa::{self, BlockSolver, Fold, LfaOptions, Precision};
 use conv_svd_lfa::model::zoo;
 use conv_svd_lfa::model::ModelConfig;
@@ -41,6 +41,7 @@ fn run() -> Result<()> {
         "no-cache",
         "transposed",
         "allow-remote",
+        "strict-health",
     ])?;
     match cli.command.as_str() {
         "analyze" => cmd_analyze(&cli),
@@ -242,6 +243,31 @@ fn disk_cache_dir(cli: &Cli) -> Option<std::path::PathBuf> {
     cli.opt("disk-cache-dir").map(std::path::PathBuf::from)
 }
 
+/// The `health:` report line + strict-health gate shared by the
+/// audit-model sweeps, which run off the [`ModelPlan`] directly (no
+/// coordinator service, so the aggregate comes from the merged per-layer
+/// certificates instead of the metrics snapshot). Degraded spectra are
+/// served flagged — and were refused by the result cache — unless
+/// `--strict-health` turns them into the typed error.
+fn model_health_report(spectra: &conv_svd_lfa::engine::ModelSpectra, strict: bool) -> Result<()> {
+    let h = spectra.health();
+    println!(
+        "health: {} certified / {} retried / {} escalations / {} degraded freqs",
+        h.converged_freqs, h.retried_freqs, h.escalations, h.degraded_freqs
+    );
+    if spectra.is_degraded() {
+        let names = spectra.degraded_layers().join(", ");
+        if strict {
+            return Err(Error::degraded_spectrum(names, h.degraded_freqs as usize));
+        }
+        println!(
+            "warning: degraded spectra served flagged, never cached: {names} \
+             (re-run with --strict-health to fail instead)"
+        );
+    }
+    Ok(())
+}
+
 /// The `disk: …` report line, printed when the disk tier is active.
 fn disk_line(stats: Option<conv_svd_lfa::engine::CacheStats>) -> Option<String> {
     let s = stats?;
@@ -306,6 +332,7 @@ fn cmd_audit(cli: &Cli) -> Result<()> {
         precision: precision_opt(cli)?,
         cache_bytes: cache_budget(cli)?,
         disk_cache_dir: disk_cache_dir(cli),
+        strict_health: cli.flag("strict-health"),
         ..Default::default()
     })?;
     let reports = svc.audit_model_with(&model, request)?;
@@ -353,6 +380,21 @@ fn cmd_audit(cli: &Cli) -> Result<()> {
         commas(m.values_computed as u128),
         secs(m.tile_work)
     );
+    // The numerical-health line: escalation-ladder traffic plus anything
+    // still degraded (strict mode never reaches this point with either).
+    println!(
+        "health: {} degraded freqs / {} escalations / {} nonfinite rejections",
+        m.degraded_freqs, m.escalations, m.nonfinite_rejections
+    );
+    let degraded: Vec<&str> =
+        reports.iter().filter(|r| r.health.is_degraded()).map(|r| r.name.as_str()).collect();
+    if !degraded.is_empty() {
+        println!(
+            "warning: degraded spectra served flagged, never cached: {} \
+             (re-run with --strict-health to fail instead)",
+            degraded.join(", ")
+        );
+    }
     // Fold/cache accounting from what actually ran, per layer: each
     // report's solved_freqs is what that layer's tiles decomposed — the
     // folded fundamental domain natively, the full grid on PJRT, nothing
@@ -519,6 +561,7 @@ fn cmd_audit_model(cli: &Cli) -> Result<()> {
         spectra.sigma_min(),
         spectra.lipschitz_upper_bound()
     );
+    model_health_report(&spectra, cli.flag("strict-health"))?;
     // The last sweep's accounting: all-hit repeats solve 0 frequencies.
     // ModelPlan sweeps are all-native: every executed layer folds unless
     // folding is off.
@@ -615,6 +658,7 @@ fn audit_model_topk(
         spectra.sigma_max(),
         spectra.lipschitz_upper_bound()
     );
+    model_health_report(&spectra, cli.flag("strict-health"))?;
     // All layers share the build options, so layer 0 carries the sweep's
     // folding mode; ModelPlan sweeps are all-native, so every executed
     // layer folds unless folding is off.
@@ -657,6 +701,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         cache_bytes: cache_budget(cli)?,
         disk_cache_dir: disk_cache_dir(cli),
         tenant_quota: cli.opt_parse("tenant-quota", 0usize)?,
+        strict_health: cli.flag("strict-health"),
         ..Default::default()
     };
     let config = DaemonConfig {

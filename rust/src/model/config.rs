@@ -15,7 +15,7 @@
 //! height = 32
 //! width  = 32
 //! stride = 1        # must divide height and width
-//! init   = "he"     # he | glorot
+//! init   = "he"     # he | glorot | const:<value> (const:nan = divergence drill)
 //!
 //! # Structured convolutions (all optional — defaults are dense):
 //! groups     = 1        # channel groups; must divide c_in and c_out
@@ -32,11 +32,15 @@ use crate::conv::ConvKernel;
 use crate::error::{Context, Result};
 use crate::numeric::Pcg64;
 
-/// Weight initialization scheme.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Weight initialization scheme. `Const` fills every tap with one value —
+/// mainly a test/diagnostic hook: `init = "const:nan"` is how the
+/// numerical-health suite drives non-finite weights through the model and
+/// daemon submit paths (a diverged training loop in one line of TOML).
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Init {
     He,
     Glorot,
+    Const(f64),
 }
 
 /// One conv layer to analyze.
@@ -79,6 +83,11 @@ impl LayerConfig {
         let k = match self.init {
             Init::He => ConvKernel::random_he(self.c_out, cg, self.kh, self.kw, &mut rng),
             Init::Glorot => ConvKernel::random_glorot(self.c_out, cg, self.kh, self.kw, &mut rng),
+            Init::Const(c) => {
+                let mut k = ConvKernel::zeros(self.c_out, cg, self.kh, self.kw);
+                k.data.fill(c);
+                k
+            }
         };
         k.with_groups(self.groups).with_dilation(self.dilation).with_transposed(self.transposed)
     }
@@ -163,7 +172,12 @@ impl ModelConfig {
                         p.init = Some(match v {
                             "he" => Init::He,
                             "glorot" => Init::Glorot,
-                            _ => bail!("line {}: unknown init {v}", lineno + 1),
+                            _ => match v.strip_prefix("const:") {
+                                Some(c) => Init::Const(c.parse::<f64>().with_context(|| {
+                                    format!("line {}: bad const init value {c}", lineno + 1)
+                                })?),
+                                None => bail!("line {}: unknown init {v}", lineno + 1),
+                            },
                         })
                     }
                     _ => bail!("line {}: unknown layer key {k}", lineno + 1),
@@ -318,6 +332,30 @@ init   = "glorot"
         cfg2.name = "other".to_string();
         let k3 = cfg2.materialize(m.seed);
         assert_ne!(k1.data, k3.data);
+    }
+
+    #[test]
+    fn const_init_parses_and_materializes() {
+        let m = ModelConfig::parse(
+            "[[layer]]\nc_in = 2\nc_out = 2\nheight = 4\nwidth = 4\ninit = \"const:0.5\"\n",
+        )
+        .unwrap();
+        assert_eq!(m.layers[0].init, Init::Const(0.5));
+        let k = m.layers[0].materialize(0);
+        assert!(k.data.iter().all(|&w| w == 0.5));
+        assert_eq!(k.non_finite_count(), 0);
+        // NaN/Inf spellings go through f64::from_str — the health suite's
+        // divergence hook.
+        let bad = ModelConfig::parse(
+            "[[layer]]\nc_in = 2\nc_out = 2\nheight = 4\nwidth = 4\ninit = \"const:nan\"\n",
+        )
+        .unwrap();
+        let k = bad.layers[0].materialize(0);
+        assert_eq!(k.non_finite_count(), k.data.len());
+        assert!(ModelConfig::parse(
+            "[[layer]]\nc_in = 2\nc_out = 2\nheight = 4\nwidth = 4\ninit = \"const:x\"\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -57,10 +57,17 @@ pub fn clip_with_plan(plan: &SpectralPlan, cap: f64) -> ClipResult {
 /// `O(n·m·c²)` per verification iteration instead of the full `O(n·m·c³)`
 /// decomposition — the right first step for a training loop that clips
 /// only when needed. Returns `(σ_max, σ_max > cap, iterations)`.
+///
+/// The screen consumes the sweep's convergence certificate: if any
+/// frequency stayed degraded after the escalation ladder, the computed
+/// σ_max cannot witness "safely under the cap", so the layer is
+/// conservatively reported as needing clipping regardless of the value —
+/// a regularization loop must never *skip* a clip on uncertified evidence.
 pub fn needs_clipping(plan: &SpectralPlan, cap: f64) -> (f64, bool, u64) {
     let top = plan.execute_topk(1);
     let sigma = top.spectrum.sigma_max();
-    (sigma, sigma > cap, top.iterations)
+    let over = sigma > cap || top.spectrum.health.is_degraded();
+    (sigma, over, top.iterations)
 }
 
 /// The [`ClipResult`] of a layer established (e.g. by [`needs_clipping`]

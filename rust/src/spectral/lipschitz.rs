@@ -32,6 +32,13 @@ pub struct SpectralNormReport {
     pub holder_bound: f64,
     /// Condition number of the operator (periodic).
     pub condition: f64,
+    /// Convergence certificate of the power-iteration estimate
+    /// ([`crate::linalg::power::PowerResult::converged`]): `false` means
+    /// the iteration hit its step cap before the Rayleigh quotient
+    /// settled, so [`Self::power_iteration`] is a *lower bound* on the
+    /// norm, not an estimate of it — comparisons against `exact_lfa`
+    /// should be skipped rather than trusted.
+    pub power_converged: bool,
 }
 
 /// Compute every estimator for a kernel on an `n×m` grid.
@@ -48,6 +55,7 @@ pub fn spectral_report(kernel: &ConvKernel, n: usize, m: usize, opts: LfaOptions
         ym_upper_bound: ((kernel.kh * kernel.kw) as f64).sqrt() * ym,
         holder_bound: holder_from_taps(kernel),
         condition: spec.condition_number(),
+        power_converged: pi.converged,
     }
 }
 
@@ -103,7 +111,8 @@ mod tests {
         let mut rng = Pcg64::seeded(180);
         let k = ConvKernel::random_he(4, 4, 3, 3, &mut rng);
         let rep = spectral_report(&k, 8, 8, Default::default());
-        // Power iteration converges to the exact value.
+        // Power iteration converges to the exact value — and says so.
+        assert!(rep.power_converged, "power iteration should certify convergence here");
         assert!(
             (rep.exact_lfa - rep.power_iteration).abs() / rep.exact_lfa < 1e-6,
             "lfa {} vs power {}",

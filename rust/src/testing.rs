@@ -35,18 +35,36 @@ pub mod chaos {
     pub const TILE_ERROR: usize = 1;
     /// Fail a disk-cache spill write (full / read-only disk).
     pub const DISK_WRITE_FAIL: usize = 2;
-    const POINTS: usize = 3;
+    /// Force an iterative solver (Jacobi sweep / Krylov top-k) to report
+    /// sweep exhaustion: the computed values are left intact but the
+    /// convergence certificate comes back `converged: false`, exercising
+    /// the escalation ladder and the degraded-spectrum plumbing without
+    /// needing a genuinely pathological matrix.
+    pub const SOLVER_STALL: usize = 3;
+    const POINTS: usize = 4;
+
+    /// Countdown value meaning "fire on every pass" ([`arm_always`]).
+    const STICKY: u32 = u32::MAX;
 
     /// Fast path: any point armed at all?
     static ENABLED: AtomicBool = AtomicBool::new(false);
-    /// Per-point countdown: 0 = disarmed, `n` = fire on the n-th pass.
-    static ARMED: [AtomicU32; POINTS] = [AtomicU32::new(0), AtomicU32::new(0), AtomicU32::new(0)];
+    /// Per-point countdown: 0 = disarmed, `n` = fire on the n-th pass,
+    /// [`STICKY`] = fire on every pass until [`reset`].
+    static ARMED: [AtomicU32; POINTS] =
+        [AtomicU32::new(0), AtomicU32::new(0), AtomicU32::new(0), AtomicU32::new(0)];
 
     /// Arm `point` to fire on its `nth` upcoming pass (1 = the next one).
     /// `nth = 0` disarms the point.
     pub fn arm(point: usize, nth: u32) {
         ARMED[point].store(nth, Ordering::SeqCst);
         ENABLED.store(true, Ordering::SeqCst);
+    }
+
+    /// Arm `point` to fire on **every** pass until [`reset`] — the shape
+    /// the escalation-ladder tests need (a stall that also defeats every
+    /// retry rung, leaving the frequency genuinely degraded).
+    pub fn arm_always(point: usize) {
+        arm(point, STICKY);
     }
 
     /// Disarm every point.
@@ -65,11 +83,18 @@ pub mod chaos {
             return false;
         }
         // Count this pass down; exactly one caller observes the 1 → 0
-        // transition and fires (workers race to this on purpose).
+        // transition and fires (workers race to this on purpose). A
+        // sticky arming never counts down and fires for everyone.
         let prev = ARMED[point]
-            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1))
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
+                if v == STICKY {
+                    Some(v)
+                } else {
+                    v.checked_sub(1)
+                }
+            })
             .unwrap_or(0);
-        prev == 1
+        prev == 1 || prev == STICKY
     }
 }
 

@@ -1,0 +1,517 @@
+//! Numerical-health suite: convergence certificates, the escalation
+//! ladder, and non-finite screening, end to end.
+//!
+//! Chaos-forced solver stalls (`SOLVER_STALL`) must surface as honest
+//! certificates — retried-but-converged for a transient stall, degraded
+//! for a persistent one — with degraded spectra served *flagged* and never
+//! cached (memory or disk), and turned into typed errors under
+//! `--strict-health`. NaN/Inf weights must be rejected with a typed error
+//! before any tile runs, at every entry point: single layer, model build,
+//! daemon SUBMIT, and the cache tiers.
+
+use conv_svd_lfa::conv::ConvKernel;
+use conv_svd_lfa::coordinator::{ServiceConfig, SpectralService};
+use conv_svd_lfa::engine::{
+    DiskCache, ModelPlan, Signature, SpectralCache, SpectralPlan, SpectrumRequest,
+};
+use conv_svd_lfa::error::ErrorKind;
+use conv_svd_lfa::lfa::{BlockLayout, BlockSolver, Fold, LfaOptions, Precision};
+use conv_svd_lfa::model::ModelConfig;
+use conv_svd_lfa::numeric::Pcg64;
+use conv_svd_lfa::testing::chaos;
+use std::fs;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+// ---------------------------------------------------------------------
+// Shared plumbing (chaos state is process-global: every test in this
+// file holds the guard, serializing the whole binary)
+// ---------------------------------------------------------------------
+
+struct ChaosGuard(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl Drop for ChaosGuard {
+    fn drop(&mut self) {
+        chaos::reset();
+    }
+}
+
+fn chaos_guard() -> ChaosGuard {
+    static LOCK: Mutex<()> = Mutex::new(());
+    let guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    chaos::reset();
+    ChaosGuard(guard)
+}
+
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> Self {
+        let dir = std::env::temp_dir().join(format!("lfa-health-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        TempDir(dir)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.0);
+    }
+}
+
+const MODEL: &str = "name = \"tiny\"\nseed = 3\n\
+    [[layer]]\nname = \"a\"\nc_in = 2\nc_out = 3\nheight = 8\nwidth = 8\n\
+    [[layer]]\nname = \"b\"\nc_in = 3\nc_out = 2\nheight = 6\nwidth = 6\n";
+
+/// A model whose second layer materializes to all-NaN weights
+/// (`init = "const:nan"` is the config's divergence drill).
+const POISONED: &str = "name = \"poisoned\"\nseed = 3\n\
+    [[layer]]\nname = \"ok\"\nc_in = 2\nc_out = 3\nheight = 8\nwidth = 8\n\
+    [[layer]]\nname = \"bad\"\nc_in = 2\nc_out = 2\nheight = 6\nwidth = 6\n\
+    init = \"const:nan\"\n";
+
+fn max_gap(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "spectrum lengths differ");
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+// ---------------------------------------------------------------------
+// Certificates and the escalation ladder
+// ---------------------------------------------------------------------
+
+/// A single transient stall is absorbed by the solver's internal
+/// fresh-rotation restart: the sweep comes back fully converged with the
+/// retry visible in the certificate, and the values are untouched.
+#[test]
+fn transient_stall_is_retried_and_certified_converged() {
+    let _guard = chaos_guard();
+    let mut rng = Pcg64::seeded(9001);
+    let k = ConvKernel::random_he(3, 2, 3, 3, &mut rng);
+    let opts = LfaOptions { threads: 1, ..Default::default() };
+    let clean = SpectralPlan::new(&k, 6, 6, opts).execute();
+    assert_eq!(clean.health.degraded_freqs, 0);
+    assert_eq!(clean.health.retried_freqs, 0, "healthy run must not retry");
+
+    chaos::arm(chaos::SOLVER_STALL, 1);
+    let got = SpectralPlan::new(&k, 6, 6, opts).execute();
+    assert_eq!(got.health.degraded_freqs, 0, "one stall must be recovered");
+    assert!(got.health.retried_freqs >= 1, "the restart must be on the certificate");
+    assert_eq!(
+        got.health.converged_freqs + got.health.retried_freqs,
+        clean.health.converged_freqs,
+        "every solved frequency is accounted exactly once"
+    );
+    let scale = clean.sigma_max().max(1.0);
+    let gap = max_gap(&got.values, &clean.values);
+    assert!(gap <= 1e-12 * scale, "the retry must not perturb the values: gap {gap:e}");
+}
+
+/// A stall on the warm-started top-k path escalates to the full-Jacobi
+/// rung: the frequency recovers, and the rung is counted.
+#[test]
+fn topk_stall_escalates_to_full_jacobi_and_recovers() {
+    let _guard = chaos_guard();
+    let mut rng = Pcg64::seeded(9002);
+    let k = ConvKernel::random_he(3, 3, 3, 3, &mut rng);
+    let plan = SpectralPlan::new(&k, 6, 6, LfaOptions { threads: 1, ..Default::default() });
+    let clean = plan.execute_topk(1);
+
+    chaos::arm(chaos::SOLVER_STALL, 1);
+    let got = plan.execute_topk(1);
+    let h = got.spectrum.health;
+    assert_eq!(h.degraded_freqs, 0, "escalation must recover the frequency");
+    assert!(h.retried_freqs >= 1);
+    assert!(h.escalations >= 1, "the full-Jacobi rung must be counted");
+    let scale = clean.spectrum.sigma_max().max(1.0);
+    let gap = max_gap(&got.spectrum.values, &clean.spectrum.values);
+    assert!(gap <= 1e-10 * scale, "escalated values must match: gap {gap:e}");
+}
+
+/// A persistent stall defeats the whole ladder: the spectrum ships with a
+/// degraded certificate — but the values themselves stay correct (the
+/// chaos point poisons certificates, not arithmetic), and the escalations
+/// are all counted.
+#[test]
+fn persistent_stall_degrades_with_escalations_counted() {
+    let _guard = chaos_guard();
+    let mut rng = Pcg64::seeded(9003);
+    let k = ConvKernel::random_he(3, 2, 3, 3, &mut rng);
+    let opts = LfaOptions { threads: 1, ..Default::default() };
+    let clean = SpectralPlan::new(&k, 6, 6, opts).execute();
+
+    chaos::arm_always(chaos::SOLVER_STALL);
+    let plan = SpectralPlan::new(&k, 6, 6, opts);
+    let solved = plan.solved_freqs() as u64;
+    let got = plan.execute();
+    assert!(got.health.is_degraded());
+    assert_eq!(got.health.degraded_freqs, solved, "every frequency stalls");
+    assert_eq!(got.health.escalations, solved, "one ladder rung per frequency");
+    let scale = clean.sigma_max().max(1.0);
+    let gap = max_gap(&got.values, &clean.values);
+    assert!(gap <= 1e-10 * scale, "degraded values are still best-effort correct: {gap:e}");
+}
+
+/// The f32 tier's f64 escalation rung really is a full-precision re-solve:
+/// forcing every frequency up the ladder from an f32 plan reproduces the
+/// plain-f64 spectrum to ≤ 1e-12·σ_max.
+#[test]
+fn escalated_f32_resolve_matches_plain_f64() {
+    let _guard = chaos_guard();
+    let mut rng = Pcg64::seeded(9004);
+    let k = ConvKernel::random_he(4, 2, 3, 3, &mut rng);
+    let base = LfaOptions { threads: 1, ..Default::default() };
+
+    chaos::arm_always(chaos::SOLVER_STALL);
+    let escalated =
+        SpectralPlan::new(&k, 8, 8, LfaOptions { precision: Precision::F32, ..base }).execute();
+    assert!(escalated.health.is_degraded(), "the sticky stall flags the sweep");
+    assert!(escalated.health.escalations > 0, "every frequency must take the f64 rung");
+    chaos::reset();
+
+    let plain = SpectralPlan::new(&k, 8, 8, base).execute();
+    assert_eq!(plain.health.degraded_freqs, 0);
+    let scale = plain.sigma_max().max(1.0);
+    let gap = max_gap(&escalated.values, &plain.values);
+    assert!(gap <= 1e-12 * scale, "f64 rung must deliver f64 accuracy: gap {gap:e}");
+}
+
+/// Healthy-path certificates across the engine equivalence matrix: every
+/// layout × solver × thread-count × folding × precision combination
+/// certifies all solved frequencies with zero degraded, on the full and
+/// the top-k path alike.
+#[test]
+fn healthy_paths_certify_across_the_matrix() {
+    let _guard = chaos_guard();
+    let mut rng = Pcg64::seeded(9005);
+    let k = ConvKernel::random_he(3, 2, 3, 3, &mut rng);
+    for layout in [BlockLayout::BlockContiguous, BlockLayout::PlanarStrided] {
+        for solver in [BlockSolver::Jacobi, BlockSolver::GramEigen] {
+            for threads in [1usize, 3] {
+                for folding in [Fold::Auto, Fold::Off] {
+                    for precision in [Precision::F64, Precision::F32, Precision::F32Refined] {
+                        let opts = LfaOptions { layout, solver, threads, folding, precision };
+                        let plan = SpectralPlan::new(&k, 6, 6, opts);
+                        let tag = format!("{layout:?} {solver:?} x{threads} {folding:?} {precision:?}");
+                        let spectrum = plan.execute();
+                        let h = spectrum.health;
+                        assert_eq!(h.degraded_freqs, 0, "{tag}: degraded on a healthy run");
+                        assert_eq!(
+                            h.converged_freqs + h.retried_freqs,
+                            plan.solved_freqs() as u64,
+                            "{tag}: certificate must cover every solved frequency"
+                        );
+                        assert!(h.worst_residual.is_finite(), "{tag}");
+                        let top = plan.execute_topk(1);
+                        assert_eq!(
+                            top.spectrum.health.degraded_freqs, 0,
+                            "{tag}: top-k degraded on a healthy run"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Degraded spectra: served flagged, never cached, strict-health fails
+// ---------------------------------------------------------------------
+
+/// A degraded spectrum is refused by the cache — memory *and* disk: the
+/// insert is a no-op and no spill file is written.
+#[test]
+fn degraded_spectrum_is_never_cached_or_spilled() {
+    let _guard = chaos_guard();
+    let tmp = TempDir::new("degraded-cache");
+    let cache =
+        SpectralCache::with_budget_or_default(0).with_disk(DiskCache::open(&tmp.0).unwrap());
+    let mut rng = Pcg64::seeded(9006);
+    let k = ConvKernel::random_he(2, 2, 3, 3, &mut rng);
+    let opts = LfaOptions { threads: 1, ..Default::default() };
+    let sig = Signature::result(&k, 6, 6, 1, &opts, SpectrumRequest::Full);
+
+    chaos::arm_always(chaos::SOLVER_STALL);
+    let spectrum = SpectralPlan::new(&k, 6, 6, opts).execute();
+    assert!(spectrum.health.is_degraded(), "precondition: the sweep must be degraded");
+    chaos::reset();
+
+    cache.insert(sig, Arc::new(spectrum));
+    assert!(cache.get(&sig).is_none(), "a degraded spectrum must not be served back");
+    let stats = cache.stats();
+    assert_eq!(stats.entries, 0, "no memory entry for a degraded spectrum");
+    assert_eq!(stats.disk_spills, 0, "no spill write for a degraded spectrum");
+    assert_eq!(cache.disk().unwrap().len(), 0, "no spill file on disk");
+
+    // The same signature with a healthy spectrum caches normally — the
+    // gate keys on the certificate, not the signature.
+    let healthy = SpectralPlan::new(&k, 6, 6, opts).execute();
+    cache.insert(sig, Arc::new(healthy));
+    assert!(cache.get(&sig).is_some());
+    assert_eq!(cache.stats().disk_spills, 1);
+}
+
+/// Default service policy: a chaos-degraded audit is *served* — reports
+/// come back flagged, metrics count the damage — and a repeat of the same
+/// audit re-solves instead of hitting the cache. The same audit under
+/// `strict_health` fails with the typed error.
+#[test]
+fn degraded_audit_is_served_flagged_and_strict_health_fails_typed() {
+    let _guard = chaos_guard();
+    let model = ModelConfig::parse(MODEL).unwrap();
+
+    chaos::arm_always(chaos::SOLVER_STALL);
+    let svc = SpectralService::native(2);
+    let reports = svc.audit_model(&model).expect("default policy serves degraded results");
+    assert!(reports.iter().all(|r| r.health.is_degraded()), "every layer is flagged");
+    assert!(reports.iter().all(|r| r.sigma_max > 0.0), "values still served");
+    let m = svc.metrics();
+    assert!(m.degraded_freqs > 0, "degraded frequencies must be counted");
+    assert!(m.escalations > 0, "ladder rungs must be counted");
+
+    // Repeat audit: the degraded spectra were never admitted to the
+    // cache, so every layer re-solves.
+    let again = svc.audit_model(&model).unwrap();
+    assert!(again.iter().all(|r| !r.cached), "degraded results must not serve from cache");
+    svc.shutdown();
+
+    // Strict policy: the same run is a typed job error.
+    let strict = SpectralService::start(ServiceConfig {
+        workers: 2,
+        strict_health: true,
+        ..Default::default()
+    })
+    .unwrap();
+    let err = strict.audit_model(&model).unwrap_err();
+    match err.kind() {
+        ErrorKind::DegradedSpectrum { job, freqs } => {
+            assert!(!job.is_empty());
+            assert!(*freqs > 0, "the typed error must carry the degraded count");
+        }
+        other => panic!("expected DegradedSpectrum, got {other:?}"),
+    }
+    chaos::reset();
+    // Disarmed, the strict service serves the same audit cleanly.
+    let reports = strict.audit_model(&model).unwrap();
+    assert!(reports.iter().all(|r| !r.health.is_degraded()));
+    strict.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Non-finite screening: typed rejection before any tile runs
+// ---------------------------------------------------------------------
+
+/// Single-layer path: NaN weights are rejected at submit time with the
+/// typed error, before the job is ever accounted as submitted.
+#[test]
+fn nan_kernel_rejected_at_single_layer_submit() {
+    let _guard = chaos_guard();
+    let mut rng = Pcg64::seeded(9007);
+    let mut k = ConvKernel::random_he(2, 2, 3, 3, &mut rng);
+    k.data[5] = f64::NAN;
+    k.data[7] = f64::INFINITY;
+
+    let svc = SpectralService::native(2);
+    let err = svc.analyze_layer("nan-layer", &k, 6, 6).unwrap_err();
+    match err.kind() {
+        ErrorKind::NonFiniteWeights { layer, count } => {
+            assert!(layer.contains("nan-layer"), "layer id in the error: {layer}");
+            assert_eq!(*count, 2, "both non-finite taps counted");
+        }
+        other => panic!("expected NonFiniteWeights, got {other:?}"),
+    }
+    let m = svc.metrics();
+    assert_eq!(m.jobs_submitted, 0, "screening happens before submit accounting");
+    assert_eq!(m.nonfinite_rejections, 1);
+
+    // The same service still serves a healthy layer.
+    let ok = ConvKernel::random_he(2, 2, 3, 3, &mut rng);
+    assert!(svc.analyze_layer("ok", &ok, 6, 6).is_ok());
+    svc.shutdown();
+}
+
+/// Model path: a poisoned layer fails the whole model build with the
+/// typed error naming the layer, at plan time — no tile runs, and the
+/// submitted-jobs counter stays untouched.
+#[test]
+fn nan_model_rejected_at_build_and_audit() {
+    let _guard = chaos_guard();
+    let model = ModelConfig::parse(POISONED).unwrap();
+
+    // Direct plan build.
+    let err = ModelPlan::build(&model, LfaOptions::default()).unwrap_err();
+    match err.kind() {
+        ErrorKind::NonFiniteWeights { layer, count } => {
+            assert_eq!(layer, "bad");
+            assert_eq!(*count, 2 * 2 * 3 * 3, "the whole const:nan tensor is non-finite");
+        }
+        other => panic!("expected NonFiniteWeights, got {other:?}"),
+    }
+
+    // Service audit: same typed kind survives the scheduler round-trip.
+    let svc = SpectralService::native(2);
+    let err = svc.audit_model(&model).unwrap_err();
+    assert!(
+        matches!(err.kind(), ErrorKind::NonFiniteWeights { .. }),
+        "kind lost in transit: {err}"
+    );
+    let m = svc.metrics();
+    assert_eq!(m.jobs_submitted, 0, "rejected before any layer job is accounted");
+    assert_eq!(m.jobs_completed, 0);
+    assert_eq!(m.nonfinite_rejections, 1);
+    svc.shutdown();
+}
+
+/// Cache tier: the screen fires before the cache is consulted — a
+/// poisoned model leaves a disk-backed cache completely untouched (no
+/// entry, no plan, no spill file).
+#[test]
+fn nan_model_never_reaches_the_cache_tiers() {
+    let _guard = chaos_guard();
+    let tmp = TempDir::new("nan-cache");
+    let cache =
+        SpectralCache::with_budget_or_default(0).with_disk(DiskCache::open(&tmp.0).unwrap());
+    let model = ModelConfig::parse(POISONED).unwrap();
+    let err = ModelPlan::build_cached(&model, LfaOptions::default(), &cache).unwrap_err();
+    assert!(matches!(err.kind(), ErrorKind::NonFiniteWeights { .. }));
+    let stats = cache.stats();
+    assert_eq!(stats.entries, 0, "no result entry for a rejected model");
+    assert_eq!(stats.disk_spills, 0);
+    assert_eq!(cache.disk().unwrap().len(), 0, "no spill file for a rejected model");
+}
+
+// ---------------------------------------------------------------------
+// The daemon wire protocol
+// ---------------------------------------------------------------------
+
+#[cfg(feature = "daemon")]
+mod daemon {
+    use super::*;
+    use conv_svd_lfa::coordinator::server::serve;
+    use conv_svd_lfa::coordinator::DaemonConfig;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::{SocketAddr, TcpStream};
+    use std::time::Duration;
+
+    struct Client {
+        reader: BufReader<TcpStream>,
+        writer: TcpStream,
+    }
+
+    impl Client {
+        fn connect(addr: SocketAddr) -> Self {
+            let stream = TcpStream::connect(addr).unwrap();
+            stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+            let reader = BufReader::new(stream.try_clone().unwrap());
+            Client { reader, writer: stream }
+        }
+
+        fn send(&mut self, line: &str) -> String {
+            writeln!(self.writer, "{line}").unwrap();
+            let mut reply = String::new();
+            self.reader.read_line(&mut reply).unwrap();
+            assert!(!reply.is_empty(), "daemon closed the connection on {line:?}");
+            reply.trim_end().to_string()
+        }
+    }
+
+    fn field<'a>(reply: &'a str, key: &str) -> &'a str {
+        reply
+            .split_whitespace()
+            .find_map(|tok| tok.strip_prefix(key).and_then(|t| t.strip_prefix('=')))
+            .unwrap_or_else(|| panic!("no {key}= in {reply:?}"))
+    }
+
+    fn daemon(service: ServiceConfig) -> DaemonConfig {
+        DaemonConfig { service, addr: "127.0.0.1:0".to_string(), ..Default::default() }
+    }
+
+    fn write_file(dir: &TempDir, name: &str, contents: &str) -> String {
+        let path = dir.0.join(name);
+        fs::write(&path, contents).unwrap();
+        path.to_str().unwrap().to_string()
+    }
+
+    /// A NaN model submitted over the socket dies with `ERR nonfinite`
+    /// before any solve: `jobs_submitted` stays zero and the daemon keeps
+    /// serving healthy submissions.
+    #[test]
+    fn daemon_rejects_nonfinite_model_before_any_solve() {
+        let _guard = chaos_guard();
+        let tmp = TempDir::new("daemon-nan");
+        let poisoned = write_file(&tmp, "poisoned.toml", POISONED);
+        let healthy = write_file(&tmp, "model.toml", MODEL);
+        let handle = serve(daemon(ServiceConfig::default())).unwrap();
+        let mut c = Client::connect(handle.addr());
+
+        let id = field(&c.send(&format!("SUBMIT t1 {poisoned}")), "id").to_string();
+        let reply = c.send(&format!("WAIT {id}"));
+        assert!(
+            reply.starts_with("ERR nonfinite id="),
+            "typed nonfinite reply expected: {reply}"
+        );
+        assert_eq!(field(&reply, "layer"), "bad");
+        assert_eq!(field(&reply, "count"), "36");
+        let metrics = c.send("METRICS");
+        assert!(
+            metrics.contains("jobs_submitted=0"),
+            "rejected before submit accounting: {metrics}"
+        );
+        assert!(metrics.contains("nonfinite_rejections=1"), "{metrics}");
+
+        // The daemon is unpoisoned: a healthy model completes.
+        let id2 = field(&c.send(&format!("SUBMIT t1 {healthy}")), "id").to_string();
+        assert!(c.send(&format!("WAIT {id2}")).starts_with("DONE"));
+        assert_eq!(c.send("SHUTDOWN"), "OK shutting-down");
+        handle.wait();
+    }
+
+    /// Degraded-but-served over the wire: the job completes, the health
+    /// metrics are exported, and a repeat submit re-solves (never cached).
+    /// The same submission against a `--strict-health` daemon is a typed
+    /// `ERR degraded` failure.
+    #[test]
+    fn daemon_serves_degraded_flagged_and_strict_health_fails() {
+        let _guard = chaos_guard();
+        let tmp = TempDir::new("daemon-degraded");
+        let model = write_file(&tmp, "model.toml", MODEL);
+
+        chaos::arm_always(chaos::SOLVER_STALL);
+        let handle = serve(daemon(ServiceConfig::default())).unwrap();
+        let mut c = Client::connect(handle.addr());
+        let id = field(&c.send(&format!("SUBMIT t1 {model}")), "id").to_string();
+        let done = c.send(&format!("WAIT {id}"));
+        assert!(done.starts_with("DONE"), "default policy serves degraded: {done}");
+        let metrics = c.send("METRICS");
+        assert!(!metrics.contains("degraded_freqs=0"), "damage must be exported: {metrics}");
+        for key in ["degraded_freqs=", "escalations=", "nonfinite_rejections="] {
+            assert!(metrics.contains(key), "METRICS must report {key}: {metrics}");
+        }
+        // Repeat: the degraded spectra were never cached.
+        let id2 = field(&c.send(&format!("SUBMIT t1 {model}")), "id").to_string();
+        let done2 = c.send(&format!("WAIT {id2}"));
+        assert_eq!(field(&done2, "cached"), "0", "degraded must not serve from cache: {done2}");
+        assert_eq!(c.send("SHUTDOWN"), "OK shutting-down");
+        handle.wait();
+
+        // Strict daemon, same chaos: typed failure on the wire.
+        let handle = serve(daemon(ServiceConfig {
+            strict_health: true,
+            ..Default::default()
+        }))
+        .unwrap();
+        let mut c = Client::connect(handle.addr());
+        let id = field(&c.send(&format!("SUBMIT t1 {model}")), "id").to_string();
+        let reply = c.send(&format!("WAIT {id}"));
+        assert!(
+            reply.starts_with("ERR degraded job=") && reply.contains("freqs="),
+            "strict health must fail typed: {reply}"
+        );
+        chaos::reset();
+        // Disarmed, the strict daemon completes the same model.
+        let id2 = field(&c.send(&format!("SUBMIT t1 {model}")), "id").to_string();
+        assert!(c.send(&format!("WAIT {id2}")).starts_with("DONE"));
+        assert_eq!(c.send("SHUTDOWN"), "OK shutting-down");
+        handle.wait();
+    }
+}
