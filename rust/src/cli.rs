@@ -25,6 +25,7 @@ COMMANDS
                on the LFA engine only (fft/explicit are dense baselines).
   audit        <builtin-or-config.toml> [--threads T] [--backend auto|native|pjrt]
                [--artifacts DIR] [--top-k K] [--no-fold] [--csv]
+               [--density B] [--density-sample S]
                [--groups G] [--dilation D] [--transposed]
                [--precision f64|f32|f32-refined]
                [--cache-bytes N] [--no-cache] [--disk-cache-dir DIR]
@@ -41,6 +42,17 @@ COMMANDS
                *every* layer in the model — the what-if knob for auditing
                a grouped/dilated/transposed variant of a dense builtin
                (channel counts must stay divisible by G).
+               --density B streams each layer's whole singular-value
+               population into a B-bin histogram instead of materializing
+               it: σ_max stays exact (a dedicated warm top-1 pass); the
+               bulk statistics (σ_min*, q50*/q90*/q99* quantiles) come
+               from the histogram. --density-sample S solves only every
+               S-th dual-grid row/column (~1/S² of the SVD work) and the
+               report carries the 95% DKW error bar ±ε on every CDF read
+               plus a coverage column, so the sampled-vs-solved fraction
+               is always visible. Density results are content-addressed
+               and cached like spectra (memory tier only); --density
+               conflicts with --top-k and runs native (not pjrt).
                Builtins: lenet, vgg-small, resnet20ish, mobile-ish,
                paper-c16-n<N>.
   audit-model  <builtin-or-config.toml> [--threads T] [--solver jacobi|gram]
@@ -75,9 +87,11 @@ COMMANDS
                Run lfa-convd, the long-running spectral-audit daemon
                (built with the default `daemon` feature): a TCP line
                protocol over the coordinator service — PING, SUBMIT
-               <tenant> <model> [top-k=K], POLL <id>, WAIT <id>,
-               METRICS, STATS, QUIT, SHUTDOWN — plus plain-HTTP
-               GET /metrics for scrapers. Every SUBMIT names a tenant;
+               <tenant> <model> [top-k=K | density=B [density-sample=S]],
+               POLL <id>, WAIT <id>, METRICS, STATS, QUIT, SHUTDOWN —
+               plus plain-HTTP GET /metrics for scrapers. Density jobs
+               stream histograms like `audit --density` and append
+               density_bins/sample/coverage/epsilon to the DONE reply. Every SUBMIT names a tenant;
                a tenant holding --tenant-quota jobs queued + running
                (default 8) gets a typed backpressure reply (ERR quota
                tenant=T pending=P limit=Q) instead of queueing deeper,
@@ -334,6 +348,19 @@ mod tests {
             "structured layers always route native",
         ] {
             assert!(HELP.contains(detail), "HELP must document structured convs: {detail:?}");
+        }
+        // The streaming-density mode: the knob pair on the audit usage
+        // line, the daemon's density submit option, and the prose pinning
+        // the accuracy contract (exact extremes, sampled bulk with DKW
+        // error bars) and the cache/top-k/pjrt interactions.
+        assert!(HELP.contains("--density B"), "HELP must document audit --density");
+        assert!(HELP.contains("--density-sample S"), "HELP must document --density-sample");
+        assert!(
+            HELP.contains("density=B [density-sample=S]"),
+            "HELP must document the daemon's density submit option"
+        );
+        for detail in ["σ_max stays exact", "DKW error bar", "coverage", "conflicts with --top-k"] {
+            assert!(HELP.contains(detail), "HELP must document density: {detail:?}");
         }
         // The daemon: usage line, the line protocol, multi-tenant fair
         // queueing with typed backpressure, and the loopback-only default.

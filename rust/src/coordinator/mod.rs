@@ -19,4 +19,4 @@ pub use metrics::{Metrics, MetricsSnapshot};
 pub use scheduler::{JobResult, LayerOutcome, ModelJobResult, Scheduler, SchedulerConfig};
 #[cfg(feature = "daemon")]
 pub use server::{serve, DaemonConfig, DaemonHandle, FairQueue, QuotaExceeded};
-pub use service::{analyze, LayerReport, ServiceConfig, SpectralService};
+pub use service::{analyze, DensityAudit, LayerReport, ServiceConfig, SpectralService};

@@ -873,14 +873,16 @@ fn run_tile(state: &JobState, tile: &Tile, executor: Option<&PjrtExecutor>) -> R
                 // Native path: execute against the job's shared plan. Workspace
                 // checkout reuses the buffers of whichever worker last ran a
                 // tile of this job — no per-tile symbol state rebuild. Folded
-                // plans solve their tile's fundamental-domain rows only.
+                // plans solve their tile's fundamental-domain rows only (the
+                // unified row driver dispatches on the plan's fold mode).
                 let plan = state.plan.as_ref().expect("native jobs always carry a plan");
                 let mut vals = vec![0.0f64; tile.num_values()];
-                let h = if plan.folded() {
-                    plan.execute_fold_rows_pooled(tile.row_lo, tile.row_hi, &mut vals)
-                } else {
-                    plan.execute_rows_pooled(tile.row_lo, tile.row_hi, &mut vals)
-                };
+                let (_, h) = plan.execute_request_rows_pooled(
+                    SpectrumRequest::Full,
+                    tile.row_lo,
+                    tile.row_hi,
+                    &mut vals,
+                );
                 (vals, h, false)
             }
         };
@@ -949,25 +951,11 @@ fn run_model_tile(
             // scratch across the whole model. Top-k tiles run the
             // warm-started top-k sweep over their contiguous row strip
             // (cold at the strip's first frequency, warm along it).
-            // Folded layers' tiles cover fundamental-domain rows only.
-            let folded = state.artifacts[layer].is_none() && lp.folded();
+            // Folded layers' tiles cover fundamental-domain rows only —
+            // the unified row driver dispatches on request and fold mode.
             let mut vals = vec![0.0f64; (row_hi - row_lo) * mc * r];
-            let h = match state.spec.request {
-                SpectrumRequest::Full => {
-                    if folded {
-                        lp.execute_fold_rows_pooled(row_lo, row_hi, &mut vals)
-                    } else {
-                        lp.execute_rows_pooled(row_lo, row_hi, &mut vals)
-                    }
-                }
-                SpectrumRequest::TopK(k) => {
-                    if folded {
-                        lp.execute_topk_fold_rows_pooled(k, row_lo, row_hi, &mut vals).1
-                    } else {
-                        lp.execute_topk_rows_pooled(k, row_lo, row_hi, &mut vals).1
-                    }
-                }
-            };
+            let (_, h) =
+                lp.execute_request_rows_pooled(state.spec.request, row_lo, row_hi, &mut vals);
             (vals, h, false)
         }
     };

@@ -35,17 +35,21 @@
 //! ```text
 //! >> PING
 //! << PONG
-//! >> SUBMIT tenant-a lenet [top-k=K]          (builtin name or config.toml path)
+//! >> SUBMIT tenant-a lenet [top-k=K | density=B [density-sample=S]]
+//!                                             (builtin name or config.toml path;
+//!                                              density=B streams a B-bin histogram,
+//!                                              density-sample=S solves every S-th row/col)
 //! << QUEUED id=1 tenant=tenant-a cost=2       | ERR quota tenant=… pending=… limit=…
 //! >> POLL 1
 //! << PENDING id=1 | RUNNING id=1 | DONE id=1 layers=… sigma_max=… solved=… cached=… elapsed_ms=…
+//!    (density jobs append density_bins=B sample=S coverage=… epsilon=…)
 //!    | ERR timeout id=1 | ERR failed id=1 … | ERR unknown-job id=1
 //!    | ERR nonfinite id=1 layer=… count=…   (NaN/Inf weights, screened pre-solve)
 //!    | ERR degraded job=1 freqs=…           (strict-health: unconverged after escalation)
 //! >> WAIT 1                                   (blocks until terminal or deadline)
 //! << DONE id=1 …
 //! >> METRICS                                  (one line of key=value pairs)
-//! >> STATS                                    (cache + disk-tier counters)
+//! >> STATS                                    (cache + density + disk-tier counters)
 //! >> RESUME                                   (release a start_paused daemon)
 //! >> QUIT | SHUTDOWN
 //! GET /metrics HTTP/1.1                       (plain-HTTP scrape: lfa_* lines)
@@ -55,8 +59,9 @@
 //! tokens may name builtin zoo models or readable TOML config paths.
 
 use super::service::{ServiceConfig, SpectralService};
-use crate::engine::SpectrumRequest;
+use crate::engine::{DensityRequest, SpectrumRequest};
 use crate::error::{Context, Result};
+use crate::report;
 use crate::model::config::ModelConfig;
 use crate::model::zoo;
 use crate::{bail, err};
@@ -299,10 +304,29 @@ impl FairQueue {
     }
 }
 
+/// What a queued job will run: a spectrum sweep (full or top-k) or a
+/// streaming density sweep.
+#[derive(Clone, Copy)]
+enum JobRequest {
+    Spectrum(SpectrumRequest),
+    Density(DensityRequest),
+}
+
 /// What a queued job will run.
 struct PendingSpec {
     model: ModelConfig,
-    request: SpectrumRequest,
+    request: JobRequest,
+}
+
+/// Density tail of a `DONE` reply (`SUBMIT … density=B` jobs): the
+/// accuracy contract on the wire — worst per-layer coverage fraction and
+/// the largest 95% DKW CDF half-width across layers.
+#[derive(Clone)]
+struct DensitySummary {
+    bins: u32,
+    sample: u32,
+    coverage: f64,
+    epsilon: f64,
 }
 
 /// Terminal summary of a completed job (the `DONE` reply payload).
@@ -313,6 +337,8 @@ struct JobSummary {
     solved_freqs: usize,
     cached_layers: usize,
     elapsed_ms: u128,
+    /// `Some` for density jobs — appended to the `DONE` line.
+    density: Option<DensitySummary>,
 }
 
 #[derive(Clone)]
@@ -521,27 +547,67 @@ fn runner_loop(shared: &Shared) {
         };
         if run {
             let started = Instant::now();
-            let outcome = shared.svc.audit_model_with(&spec.model, spec.request);
+            let outcome: Result<JobSummary> = match spec.request {
+                JobRequest::Spectrum(request) => {
+                    shared.svc.audit_model_with(&spec.model, request).map(|reports| JobSummary {
+                        layers: reports.len(),
+                        sigma_max: reports
+                            .iter()
+                            .map(|r| r.sigma_max)
+                            .fold(f64::NEG_INFINITY, f64::max),
+                        solved_freqs: reports.iter().map(|r| r.solved_freqs).sum(),
+                        cached_layers: reports.iter().filter(|r| r.cached).count(),
+                        elapsed_ms: started.elapsed().as_millis(),
+                        density: None,
+                    })
+                }
+                JobRequest::Density(req) => {
+                    shared.svc.audit_model_density(&spec.model, req).map(|audit| JobSummary {
+                        layers: audit.layers.len(),
+                        sigma_max: audit
+                            .layers
+                            .iter()
+                            .map(|l| l.density.sigma_max)
+                            .fold(f64::NEG_INFINITY, f64::max),
+                        // Cache-served layers keep their *original*
+                        // solved count inside the stored density; only
+                        // layers that actually swept count as solved here.
+                        solved_freqs: audit
+                            .layers
+                            .iter()
+                            .filter(|l| !l.cached)
+                            .map(|l| l.density.solved_freqs as usize)
+                            .sum(),
+                        cached_layers: audit.layers.iter().filter(|l| l.cached).count(),
+                        elapsed_ms: started.elapsed().as_millis(),
+                        density: Some(DensitySummary {
+                            bins: req.bins,
+                            sample: req.sample.max(1),
+                            coverage: audit
+                                .layers
+                                .iter()
+                                .map(|l| l.density.sampled_fraction())
+                                .fold(1.0, f64::min),
+                            epsilon: audit
+                                .layers
+                                .iter()
+                                .map(|l| l.density.cdf_epsilon())
+                                .fold(0.0, f64::max),
+                        }),
+                    })
+                }
+            };
             let mut jobs = shared.lock_jobs();
             if let Some(e) = jobs.get_mut(&id) {
                 e.phase = match outcome {
-                    Ok(reports) => {
+                    Ok(summary) => {
                         if Instant::now() >= e.deadline {
                             // Finished past the deadline: the client was
                             // (or will be) told `timeout`; discard the
                             // summary so the reply never flips.
                             JobPhase::TimedOut
                         } else {
-                            JobPhase::Done(JobSummary {
-                                layers: reports.len(),
-                                sigma_max: reports
-                                    .iter()
-                                    .map(|r| r.sigma_max)
-                                    .fold(f64::NEG_INFINITY, f64::max),
-                                solved_freqs: reports.iter().map(|r| r.solved_freqs).sum(),
-                                cached_layers: reports.iter().filter(|r| r.cached).count(),
-                                elapsed_ms: started.elapsed().as_millis(),
-                            })
+                            JobPhase::Done(summary)
                         }
                     }
                     Err(why) => JobPhase::Failed(failure_tail(id, &why)),
@@ -623,24 +689,55 @@ fn handle_command(shared: &Shared, line: &str) -> Reply {
         "SUBMIT" => {
             let (Some(tenant), Some(model)) = (parts.next(), parts.next()) else {
                 return Reply::Line(
-                    "ERR bad-request usage: SUBMIT <tenant> <model> [top-k=K]".to_string(),
+                    "ERR bad-request usage: SUBMIT <tenant> <model> \
+                     [top-k=K | density=B [density-sample=S]]"
+                        .to_string(),
                 );
             };
             let mut topk = None;
+            let mut density_bins = None;
+            let mut density_sample = 1u32;
             for extra in parts {
-                match extra.strip_prefix("top-k=").or_else(|| extra.strip_prefix("topk=")) {
-                    Some(k) => match k.parse::<usize>() {
+                if let Some(k) = extra.strip_prefix("top-k=").or_else(|| extra.strip_prefix("topk="))
+                {
+                    match k.parse::<usize>() {
                         Ok(k) if k > 0 => topk = Some(k),
-                        _ => {
-                            return Reply::Line(format!("ERR bad-request bad top-k {k:?}"));
-                        }
-                    },
-                    None => {
-                        return Reply::Line(format!("ERR bad-request unknown option {extra:?}"));
+                        _ => return Reply::Line(format!("ERR bad-request bad top-k {k:?}")),
                     }
+                } else if let Some(b) = extra.strip_prefix("density=") {
+                    match b.parse::<u32>() {
+                        Ok(b) if b > 0 => density_bins = Some(b),
+                        _ => return Reply::Line(format!("ERR bad-request bad density {b:?}")),
+                    }
+                } else if let Some(s) = extra.strip_prefix("density-sample=") {
+                    match s.parse::<u32>() {
+                        Ok(s) if s > 0 => density_sample = s,
+                        _ => {
+                            return Reply::Line(format!("ERR bad-request bad density-sample {s:?}"))
+                        }
+                    }
+                } else {
+                    return Reply::Line(format!("ERR bad-request unknown option {extra:?}"));
                 }
             }
-            Reply::Line(submit(shared, tenant, model, topk))
+            if density_sample != 1 && density_bins.is_none() {
+                return Reply::Line(
+                    "ERR bad-request density-sample requires density=B".to_string(),
+                );
+            }
+            let request = match (topk, density_bins) {
+                (Some(_), Some(_)) => {
+                    return Reply::Line(
+                        "ERR bad-request density conflicts with top-k".to_string(),
+                    )
+                }
+                (Some(k), None) => JobRequest::Spectrum(SpectrumRequest::TopK(k)),
+                (None, Some(bins)) => {
+                    JobRequest::Density(DensityRequest { bins, sample: density_sample })
+                }
+                (None, None) => JobRequest::Spectrum(SpectrumRequest::Full),
+            };
+            Reply::Line(submit(shared, tenant, model, request))
         }
         "POLL" | "WAIT" => {
             let id = match parts.next().map(str::parse::<u64>) {
@@ -684,14 +781,10 @@ fn resolve_model(token: &str) -> std::result::Result<ModelConfig, String> {
     ))
 }
 
-fn submit(shared: &Shared, tenant: &str, model_token: &str, topk: Option<usize>) -> String {
+fn submit(shared: &Shared, tenant: &str, model_token: &str, request: JobRequest) -> String {
     let model = match resolve_model(model_token) {
         Ok(m) => m,
         Err(why) => return format!("ERR bad-request {why}"),
-    };
-    let request = match topk {
-        Some(k) => SpectrumRequest::TopK(k),
-        None => SpectrumRequest::Full,
     };
     let cost = model.layers.len().max(1);
     let id = shared.next_id.fetch_add(1, Ordering::SeqCst) + 1;
@@ -726,10 +819,19 @@ fn submit(shared: &Shared, tenant: &str, model_token: &str, topk: Option<usize>)
 }
 
 fn done_line(id: u64, s: &JobSummary) -> String {
-    format!(
+    let mut line = format!(
         "DONE id={id} layers={} sigma_max={:.6e} solved={} cached={} elapsed_ms={}",
         s.layers, s.sigma_max, s.solved_freqs, s.cached_layers, s.elapsed_ms
-    )
+    );
+    if let Some(d) = &s.density {
+        use std::fmt::Write as _;
+        let _ = write!(
+            line,
+            " density_bins={} sample={} coverage={:.3} epsilon={:.4}",
+            d.bins, d.sample, d.coverage, d.epsilon
+        );
+    }
+    line
 }
 
 /// One non-blocking status probe. Expired non-terminal jobs are lazily
@@ -819,23 +921,11 @@ fn metrics_line(shared: &Shared) -> String {
     format!("METRICS {}", body.join(" "))
 }
 
+/// The `STATS` reply: the shared cache/disk/density counters, formatted
+/// by the same [`report::stats_kv`] the CLI layer uses — one formatter,
+/// two front ends.
 fn stats_line(shared: &Shared) -> String {
-    match shared.svc.cache_stats() {
-        Some(s) => format!(
-            "STATS hits={} misses={} evictions={} entries={} bytes={} disk_hits={} \
-             disk_misses={} disk_spills={} disk_corruptions={}",
-            s.hits,
-            s.misses,
-            s.evictions,
-            s.entries,
-            s.bytes,
-            s.disk_hits,
-            s.disk_misses,
-            s.disk_spills,
-            s.disk_corruptions
-        ),
-        None => "STATS cache=off".to_string(),
-    }
+    format!("STATS {}", report::stats_kv(shared.svc.cache_stats()))
 }
 
 fn handle_http(

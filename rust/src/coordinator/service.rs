@@ -8,14 +8,14 @@ use super::job::{Backend, JobSpec, ModelJobSpec};
 use super::metrics::MetricsSnapshot;
 use super::scheduler::{JobResult, Scheduler, SchedulerConfig};
 use crate::conv::ConvKernel;
-use crate::engine::SpectrumRequest;
+use crate::engine::{DensityRequest, LayerDensity, ModelPlan, SpectrumRequest};
 use crate::error::{Error, Result};
 use crate::lfa::{self, BlockSolver, Fold, Precision, SpectrumHealth};
 use crate::model::config::ModelConfig;
 use crate::runtime::{load_manifest, PjrtExecutor};
 use std::path::Path;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Service configuration.
 #[derive(Clone)]
@@ -154,6 +154,16 @@ pub struct LayerReport {
     pub spectrum: Arc<lfa::Spectrum>,
 }
 
+/// Whole-model density audit ([`SpectralService::audit_model_density`]):
+/// per-layer streaming singular-value histograms in model order, plus the
+/// wall-clock of the whole sweep.
+pub struct DensityAudit {
+    /// Per-layer densities (shared with the result cache on cached runs).
+    pub layers: Vec<LayerDensity>,
+    /// Wall-clock for the whole audit (planning + sweeps + cache traffic).
+    pub elapsed: Duration,
+}
+
 /// The spectral-analysis service.
 pub struct SpectralService {
     scheduler: Scheduler,
@@ -282,6 +292,57 @@ impl SpectralService {
             self.enforce_health(report)?;
         }
         Ok(reports)
+    }
+
+    /// Streaming **spectral-density** audit of every conv layer: instead
+    /// of assembling `freqs × rank` singular values per layer, each layer
+    /// runs the two-pass density pipeline
+    /// ([`crate::engine::SpectralPlan::density_with`]) — an exact top-1
+    /// sweep for σ_max, then histogram accumulation over the (optionally
+    /// sub-sampled, `req.sample`) dual grid — and ships `req.bins`
+    /// counters with coverage error bars. Densities are served from and
+    /// populate the scheduler's result cache exactly like spectra
+    /// (content-addressed, shared byte budget, degraded results refused),
+    /// so a repeat density audit of an unchanged model solves zero
+    /// frequencies. The [`ServiceConfig::strict_health`] gate applies
+    /// unchanged: a layer still degraded after the escalation ladder is a
+    /// typed error under strict mode, a flagged report otherwise.
+    pub fn audit_model_density(
+        &self,
+        model: &ModelConfig,
+        req: DensityRequest,
+    ) -> Result<DensityAudit> {
+        let started = Instant::now();
+        // Density sweeps thread *inside* each layer's plan (pass 1 strip
+        // partitioning + pass 2 per-worker sinks) rather than through the
+        // scheduler's tile queue, so the plan carries the worker budget.
+        let opts = lfa::LfaOptions {
+            solver: self.config.solver,
+            folding: self.config.folding,
+            threads: self.config.workers,
+            precision: self.config.precision,
+            ..Default::default()
+        };
+        let plan = match self.scheduler.cache() {
+            Some(c) => ModelPlan::build_cached(model, opts, c),
+            None => ModelPlan::build(model, opts),
+        }
+        .map_err(|e| e.context(format!("planning density audit of model {}", model.name)))?;
+        let layers = match self.scheduler.cache() {
+            Some(c) => plan.density_all_cached(req, c),
+            None => plan.density_all(req),
+        };
+        if self.config.strict_health {
+            for l in &layers {
+                if l.density.is_degraded() {
+                    return Err(Error::degraded_spectrum(
+                        &l.name,
+                        l.density.health.degraded_freqs as usize,
+                    ));
+                }
+            }
+        }
+        Ok(DensityAudit { layers, elapsed: started.elapsed() })
     }
 
     fn report(

@@ -19,11 +19,11 @@
 //! native execution strategy. The PJRT artifact sweep always covers the
 //! full grid (the AOT program bakes the dual-grid loop in).
 
-use super::plan::{SpectralPlan, TopKResult};
-use super::SpectrumRequest;
+use super::plan::{SpectralPlan, SweepOptions, TopKResult};
+use super::{DensityRequest, SpectrumRequest};
 use crate::bail;
 use crate::error::Result;
-use crate::lfa::spectrum::{Spectrum, SpectrumHealth};
+use crate::lfa::spectrum::{SpectralDensity, Spectrum, SpectrumHealth};
 
 /// A strategy for executing a [`SpectralPlan`].
 pub trait SpectralBackend {
@@ -78,6 +78,16 @@ pub trait SpectralBackend {
         })
     }
 
+    /// Streaming singular-value density through this backend
+    /// ([`SpectralPlan::density`]). The default implementation rejects —
+    /// native backends override it (the density sweep needs the top-k
+    /// extremes pass and the sink protocol, which an AOT artifact boundary
+    /// cannot serve).
+    fn execute_density(&self, plan: &SpectralPlan, req: DensityRequest) -> Result<SpectralDensity> {
+        let _ = (plan, req);
+        bail!("backend {} does not support density requests", self.name())
+    }
+
     /// Top-`k` values per frequency through this backend.
     fn execute_topk(&self, plan: &SpectralPlan, k: usize) -> Result<TopKResult> {
         let ke = plan.topk_per_freq(k);
@@ -111,7 +121,9 @@ impl SpectralBackend for NativeSerial {
     }
 
     fn execute_into(&self, plan: &SpectralPlan, out: &mut [f64]) -> Result<SpectrumHealth> {
-        Ok(plan.execute_into_threads(1, out))
+        let (_, health) =
+            plan.execute_request_into(SpectrumRequest::Full, SweepOptions::with_threads(1), out);
+        Ok(health)
     }
 
     fn execute_request_into(
@@ -120,10 +132,11 @@ impl SpectralBackend for NativeSerial {
         request: SpectrumRequest,
         out: &mut [f64],
     ) -> Result<(u64, SpectrumHealth)> {
-        Ok(match request {
-            SpectrumRequest::Full => (0, plan.execute_into_threads(1, out)),
-            SpectrumRequest::TopK(k) => plan.execute_topk_into_threads(k, 1, true, out),
-        })
+        Ok(plan.execute_request_into(request, SweepOptions::with_threads(1), out))
+    }
+
+    fn execute_density(&self, plan: &SpectralPlan, req: DensityRequest) -> Result<SpectralDensity> {
+        Ok(plan.density_with(req, SweepOptions::with_threads(1)))
     }
 }
 
@@ -139,7 +152,9 @@ impl SpectralBackend for NativeThreaded {
     }
 
     fn execute_into(&self, plan: &SpectralPlan, out: &mut [f64]) -> Result<SpectrumHealth> {
-        Ok(plan.execute_into_threads(super::resolve_threads(self.threads), out))
+        let opts = SweepOptions::with_threads(super::resolve_threads(self.threads));
+        let (_, health) = plan.execute_request_into(SpectrumRequest::Full, opts, out);
+        Ok(health)
     }
 
     fn execute_request_into(
@@ -148,11 +163,13 @@ impl SpectralBackend for NativeThreaded {
         request: SpectrumRequest,
         out: &mut [f64],
     ) -> Result<(u64, SpectrumHealth)> {
-        let threads = super::resolve_threads(self.threads);
-        Ok(match request {
-            SpectrumRequest::Full => (0, plan.execute_into_threads(threads, out)),
-            SpectrumRequest::TopK(k) => plan.execute_topk_into_threads(k, threads, true, out),
-        })
+        let opts = SweepOptions::with_threads(super::resolve_threads(self.threads));
+        Ok(plan.execute_request_into(request, opts, out))
+    }
+
+    fn execute_density(&self, plan: &SpectralPlan, req: DensityRequest) -> Result<SpectralDensity> {
+        let opts = SweepOptions::with_threads(super::resolve_threads(self.threads));
+        Ok(plan.density_with(req, opts))
     }
 }
 
@@ -259,6 +276,26 @@ mod tests {
             for (x, y) in a.values.iter().zip(&b.values) {
                 assert!((x - y).abs() <= 1e-12 * scale, "{}: {x} vs {y}", backend.name());
             }
+        }
+    }
+
+    #[test]
+    fn native_backends_serve_density_requests() {
+        let mut rng = Pcg64::seeded(614);
+        let k = ConvKernel::random_he(3, 3, 3, 3, &mut rng);
+        let plan = SpectralPlan::new(&k, 8, 8, LfaOptions::default());
+        let req = DensityRequest { bins: 16, sample: 2 };
+        let a = NativeSerial.execute_density(&plan, req).unwrap();
+        let b = NativeThreaded { threads: 2 }.execute_density(&plan, req).unwrap();
+        assert_eq!(a.covered_freqs, b.covered_freqs);
+        assert!(a.sampled_fraction() < 1.0 && a.cdf_epsilon() > 0.0);
+        let scale = a.sigma_max.max(1.0);
+        assert!((a.sigma_max - b.sigma_max).abs() <= 1e-8 * scale);
+        for &q in &[0.25f64, 0.5, 0.75] {
+            assert!(
+                (a.quantile(q) - b.quantile(q)).abs() <= 1.5 * a.hi / 16.0 + 1e-9 * scale,
+                "q={q}"
+            );
         }
     }
 

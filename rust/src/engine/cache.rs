@@ -18,7 +18,13 @@
 //!   entry may differ from a particular resweep in the last bits — the
 //!   same variation threaded-vs-serial top-k already has without a
 //!   cache. Entries are evicted **least-recently-used under a byte
-//!   budget** ([`SpectralCache::with_budget`]).
+//!   budget** ([`SpectralCache::with_budget`]). Spectral **densities**
+//!   ([`crate::lfa::SpectralDensity`], the streaming-histogram sink's
+//!   output) cache alongside spectra — same byte budget, one global LRU
+//!   order, same degraded-refusal gate — keyed by
+//!   [`Signature::for_density`]; they are memory-only (no disk tier: a
+//!   density is a small derived summary, recomputable from a spectrum
+//!   hit or a cheap resweep).
 //! - a **plan cache**: jobs and [`super::ModelPlan`] groups with equal
 //!   plan signatures (weights + geometry + options + resolved worker
 //!   count) share one [`SpectralPlan`] instead of re-planning phase
@@ -54,9 +60,9 @@
 
 use super::disk_cache::{DiskCache, DiskStats};
 use super::plan::SpectralPlan;
-use super::SpectrumRequest;
+use super::{DensityRequest, SpectrumRequest};
 use crate::conv::ConvKernel;
-use crate::lfa::spectrum::Spectrum;
+use crate::lfa::spectrum::{SpectralDensity, Spectrum};
 use crate::lfa::svd::{BlockSolver, Fold, LfaOptions, Precision};
 use crate::lfa::symbol::BlockLayout;
 use std::collections::{BTreeMap, HashMap};
@@ -128,6 +134,11 @@ pub struct Signature {
     precision: Precision,
     /// `Some(request)` for result signatures, `None` for plan signatures.
     request: Option<SpectrumRequest>,
+    /// `Some(req)` for **density** signatures ([`Self::for_density`]) —
+    /// mutually exclusive with `request`. Bins and sampling stride are
+    /// part of the content address: a 64-bin histogram is not a 256-bin
+    /// one, and a sub-lattice sample is not a census.
+    density: Option<DensityRequest>,
     /// Resolved worker count for plan signatures, 0 for result signatures
     /// (values are identical no matter how many workers solved them).
     threads: usize,
@@ -154,6 +165,7 @@ impl Signature {
             folding: opts.folding,
             precision: opts.precision,
             request: None,
+            density: None,
             threads: 0,
         }
     }
@@ -211,13 +223,32 @@ impl Signature {
     /// plan signature derive instead of recomputing. Top-k requests are
     /// normalized exactly as [`Self::result`] does.
     pub fn for_request(&self, request: SpectrumRequest) -> Signature {
-        Signature { request: Some(Self::normalized(request, self.rank())), threads: 0, ..*self }
+        Signature {
+            request: Some(Self::normalized(request, self.rank())),
+            density: None,
+            threads: 0,
+            ..*self
+        }
+    }
+
+    /// Derive the **density** signature for `req` from any signature of
+    /// the same content — no re-hash. Density results are keyed exactly
+    /// like spectra (weight bits + geometry + options), with the
+    /// histogram shape (`bins`) and dual-lattice sampling stride
+    /// (`sample`) in place of the [`SpectrumRequest`].
+    pub fn for_density(&self, req: DensityRequest) -> Signature {
+        Signature { request: None, density: Some(req), threads: 0, ..*self }
     }
 
     /// Derive the **plan** signature (worker count resolved, request
     /// cleared) from any signature of the same content — no re-hash.
     pub fn for_plan(&self, threads: usize) -> Signature {
-        Signature { request: None, threads: super::resolve_threads(threads), ..*self }
+        Signature {
+            request: None,
+            density: None,
+            threads: super::resolve_threads(threads),
+            ..*self
+        }
     }
 
     /// The same signature pinned to a different scalar width — no re-hash.
@@ -252,10 +283,14 @@ impl Signature {
             Precision::F32 => 1,
             Precision::F32Refined => 2,
         };
-        let request = match self.request {
-            None => 0u64,
-            Some(SpectrumRequest::Full) => 1,
-            Some(SpectrumRequest::TopK(k)) => 2 | ((k as u64) << 2),
+        // Tag 3 extends the request word for density signatures without
+        // disturbing any pre-existing digest (spill-file names are part
+        // of the on-disk format; plan/Full/TopK words are unchanged).
+        let request = match (self.request, self.density) {
+            (None, None) => 0u64,
+            (Some(SpectrumRequest::Full), _) => 1,
+            (Some(SpectrumRequest::TopK(k)), _) => 2 | ((k as u64) << 2),
+            (None, Some(d)) => 3 | ((d.bins as u64) << 2) | ((d.sample as u64) << 34),
         };
         let words = [
             self.weights[0],
@@ -290,6 +325,12 @@ struct ResultEntry {
     last_used: u64,
 }
 
+struct DensityEntry {
+    density: Arc<SpectralDensity>,
+    bytes: usize,
+    last_used: u64,
+}
+
 struct PlanEntry {
     plan: Arc<SpectralPlan>,
     last_used: u64,
@@ -297,17 +338,45 @@ struct PlanEntry {
 
 struct Inner {
     results: HashMap<Signature, ResultEntry>,
-    /// Recency index over `results`: LRU tick → key. Ticks are unique
-    /// (monotone, bumped under the mutex), so eviction pops the smallest
-    /// tick in `O(log n)` instead of scanning every entry — a large
-    /// insert that evicts many small entries stays cheap while every
-    /// submission path waits on this mutex.
+    /// Density results, keyed by [`Signature::for_density`] signatures.
+    /// Charged against the same byte budget as `results` and aged by the
+    /// same recency index (a key lives in exactly one of the two maps —
+    /// the `density` field makes the signatures disjoint). Memory-only:
+    /// a density is a cheap derived summary, not worth a spill file.
+    densities: HashMap<Signature, DensityEntry>,
+    /// Recency index over `results` ∪ `densities`: LRU tick → key. Ticks
+    /// are unique (monotone, bumped under the mutex), so eviction pops
+    /// the smallest tick in `O(log n)` instead of scanning every entry —
+    /// a large insert that evicts many small entries stays cheap while
+    /// every submission path waits on this mutex.
     recency: BTreeMap<u64, Signature>,
     plans: HashMap<Signature, PlanEntry>,
-    /// Total bytes held by `results` entries.
+    /// Total bytes held by `results` and `densities` entries.
     bytes: usize,
     /// Monotone LRU clock: bumped on every touch.
     tick: u64,
+}
+
+impl Inner {
+    /// Evict least-recently-used entries (spectra **or** densities — one
+    /// global LRU order) until `incoming` more bytes fit under
+    /// `max_bytes`. Returns how many entries were evicted.
+    fn evict_for(&mut self, incoming: usize, max_bytes: usize) -> u64 {
+        let mut evicted = 0u64;
+        while self.bytes + incoming > max_bytes {
+            let (_, lru) =
+                self.recency.pop_first().expect("nonzero bytes imply an evictable entry");
+            let freed = match self.results.remove(&lru) {
+                Some(e) => e.bytes,
+                None => {
+                    self.densities.remove(&lru).expect("recency index tracks both stores").bytes
+                }
+            };
+            self.bytes -= freed;
+            evicted += 1;
+        }
+        evicted
+    }
 }
 
 /// Point-in-time cache counters ([`SpectralCache::stats`]).
@@ -325,6 +394,9 @@ pub struct CacheStats {
     pub plan_misses: u64,
     /// Result entries currently held.
     pub entries: usize,
+    /// Density entries currently held (memory-only tier; shares the byte
+    /// budget and LRU order with `entries`).
+    pub density_entries: usize,
     /// Plans currently held.
     pub plan_entries: usize,
     /// Bytes currently held by result entries.
@@ -379,6 +451,7 @@ impl SpectralCache {
             max_bytes,
             inner: Mutex::new(Inner {
                 results: HashMap::new(),
+                densities: HashMap::new(),
                 recency: BTreeMap::new(),
                 plans: HashMap::new(),
                 bytes: 0,
@@ -494,17 +567,72 @@ impl SpectralCache {
         if bytes > self.max_bytes {
             return 0;
         }
-        let mut evicted = 0u64;
-        while inner.bytes + bytes > self.max_bytes {
-            let (_, lru) =
-                inner.recency.pop_first().expect("nonzero bytes imply an evictable entry");
-            let e = inner.results.remove(&lru).expect("recency index tracks results");
-            inner.bytes -= e.bytes;
-            evicted += 1;
-        }
+        let evicted = inner.evict_for(bytes, self.max_bytes);
         inner.bytes += bytes;
         inner.recency.insert(tick, key);
         inner.results.insert(key, ResultEntry { spectrum, bytes, last_used: tick });
+        self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        evicted
+    }
+
+    /// Approximate heap bytes a cached density occupies — the unit of the
+    /// (shared) byte budget.
+    fn density_entry_bytes(density: &SpectralDensity) -> usize {
+        density.approx_bytes() + std::mem::size_of::<Signature>() + std::mem::size_of::<DensityEntry>()
+    }
+
+    /// Look a **density** result up (a [`Signature::for_density`] key).
+    /// A hit bumps the entry's position in the same global LRU order the
+    /// spectra use and returns the shared histogram. Densities are
+    /// memory-only — there is no disk fallback — so a miss is final.
+    /// Counts into the same `hits`/`misses` counters as spectra (one
+    /// result cache, two value shapes).
+    pub fn get_density(&self, key: &Signature) -> Option<Arc<SpectralDensity>> {
+        let mut guard = self.inner.lock().expect("cache poisoned");
+        let inner = &mut *guard;
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.densities.get_mut(key) {
+            Some(e) => {
+                inner.recency.remove(&e.last_used);
+                inner.recency.insert(tick, *key);
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::clone(&e.density))
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) a density result under the shared byte budget
+    /// (global LRU against spectra **and** densities); returns how many
+    /// entries were evicted. The numerical-health admission gate is
+    /// identical to [`Self::insert`]: a density whose solves are still
+    /// flagged degraded after the escalation ladder is refused outright.
+    /// No disk write-through — densities are cheap derived summaries.
+    pub fn insert_density(&self, key: Signature, density: Arc<SpectralDensity>) -> u64 {
+        if density.is_degraded() {
+            return 0;
+        }
+        let bytes = Self::density_entry_bytes(&density);
+        let mut guard = self.inner.lock().expect("cache poisoned");
+        let inner = &mut *guard;
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(old) = inner.densities.remove(&key) {
+            inner.recency.remove(&old.last_used);
+            inner.bytes -= old.bytes;
+        }
+        if bytes > self.max_bytes {
+            return 0;
+        }
+        let evicted = inner.evict_for(bytes, self.max_bytes);
+        inner.bytes += bytes;
+        inner.recency.insert(tick, key);
+        inner.densities.insert(key, DensityEntry { density, bytes, last_used: tick });
         self.evictions.fetch_add(evicted, Ordering::Relaxed);
         evicted
     }
@@ -581,6 +709,7 @@ impl SpectralCache {
     pub fn clear(&self) {
         let mut inner = self.inner.lock().expect("cache poisoned");
         inner.results.clear();
+        inner.densities.clear();
         inner.recency.clear();
         inner.plans.clear();
         inner.bytes = 0;
@@ -594,6 +723,7 @@ impl SpectralCache {
     pub fn clear_results(&self) {
         let mut inner = self.inner.lock().expect("cache poisoned");
         inner.results.clear();
+        inner.densities.clear();
         inner.recency.clear();
         inner.bytes = 0;
     }
@@ -609,6 +739,7 @@ impl SpectralCache {
             plan_hits: self.plan_hits.load(Ordering::Relaxed),
             plan_misses: self.plan_misses.load(Ordering::Relaxed),
             entries: inner.results.len(),
+            density_entries: inner.densities.len(),
             plan_entries: inner.plans.len(),
             bytes: inner.bytes,
             capacity: self.max_bytes,
@@ -826,6 +957,69 @@ mod tests {
         assert_eq!((s.plan_hits, s.plan_misses, s.plan_entries), (1, 2, 2));
         // Shared plans execute identically to fresh ones.
         assert_eq!(a.execute().values, SpectralPlan::new(&k, 8, 8, opts).execute().values);
+    }
+
+    #[test]
+    fn density_signature_is_its_own_axis() {
+        let k = kernel(7);
+        let opts = LfaOptions::default();
+        let full = Signature::result(&k, 8, 8, 1, &opts, SpectrumRequest::Full);
+        let d64 = full.for_density(DensityRequest { bins: 64, sample: 1 });
+        // A density key never collides with a spectrum key of the same
+        // content, and every density parameter is part of the address.
+        assert_ne!(d64, full);
+        assert_ne!(d64, full.for_request(SpectrumRequest::TopK(1)));
+        assert_ne!(d64, full.for_density(DensityRequest { bins: 128, sample: 1 }));
+        assert_ne!(d64, full.for_density(DensityRequest { bins: 64, sample: 2 }));
+        // Deriving is idempotent content-wise and clears the request axis.
+        assert_eq!(full.for_density(DensityRequest { bins: 64, sample: 1 }), d64);
+        assert_eq!(d64.for_request(SpectrumRequest::Full), full);
+        // The file digest separates density keys too (tag 3), while the
+        // pre-existing words are untouched for non-density signatures.
+        let mut seen = vec![full.file_digest()];
+        for sig in [
+            d64,
+            full.for_density(DensityRequest { bins: 128, sample: 1 }),
+            full.for_density(DensityRequest { bins: 64, sample: 2 }),
+        ] {
+            let d = sig.file_digest();
+            assert!(!seen.contains(&d), "digest collision for {sig:?}");
+            seen.push(d);
+        }
+    }
+
+    #[test]
+    fn density_entries_roundtrip_and_share_the_budget() {
+        let k = kernel(8);
+        let opts = LfaOptions { threads: 1, ..Default::default() };
+        let plan = SpectralPlan::new(&k, 6, 6, opts);
+        let req = DensityRequest { bins: 32, sample: 1 };
+        let dens = Arc::new(plan.density(req));
+        let key = plan.density_signature(req);
+        let cache = SpectralCache::new();
+        assert!(cache.get_density(&key).is_none());
+        cache.insert_density(key, Arc::clone(&dens));
+        let hit = cache.get_density(&key).expect("hit");
+        assert!(Arc::ptr_eq(&hit, &dens), "hit returns the shared density");
+        assert_eq!(cache.stats().density_entries, 1);
+        // Global LRU: a byte budget sized for one entry evicts across
+        // stores — inserting a spectrum after the density evicts the
+        // density (it is the older touch), and vice versa.
+        let sp = spectrum_of(&plan);
+        let skey = plan.result_signature(SpectrumRequest::Full);
+        let one = SpectralCache::entry_bytes(&sp).max(SpectralCache::density_entry_bytes(&dens));
+        let tiny = SpectralCache::with_budget(one);
+        tiny.insert_density(key, Arc::clone(&dens));
+        assert_eq!(tiny.insert(skey, Arc::clone(&sp)), 1, "density evicted");
+        assert!(tiny.get_density(&key).is_none());
+        assert!(tiny.get(&skey).is_some());
+        assert_eq!(tiny.insert_density(key, Arc::clone(&dens)), 1, "spectrum evicted");
+        assert!(tiny.get(&skey).is_none());
+        assert!(tiny.get_density(&key).is_some());
+        // clear_results drops densities too.
+        tiny.clear_results();
+        assert!(tiny.get_density(&key).is_none());
+        assert_eq!(tiny.stats().density_entries, 0);
     }
 
     #[test]

@@ -21,6 +21,12 @@
 //!   the blocks; self-paired DC/Nyquist frequencies exactly once) and
 //!   mirrors the conjugate half — values copied, factors conjugated.
 //!   `LfaOptions { folding: Fold::Off, .. }` is the unfolded reference.
+//! - [`SpectrumSink`] — the pluggable consumer of the unified sweep: the
+//!   assembly sinks ([`FullAssembly`], [`TopKAssembly`], [`FactorAssembly`])
+//!   reproduce the classic buffers, [`DensitySink`] streams singular-value
+//!   histograms ([`SpectralPlan::density`], shaped by [`DensityRequest`]).
+//!   New per-frequency analytics are one `impl SpectrumSink`, not a new
+//!   driver.
 //! - [`Workspace`] — per-worker scratch: symbol block, per-tap phases, the
 //!   Jacobi / Gram solver work matrices, and the top-k Krylov basis that
 //!   carries warm starts between neighboring frequencies, pooled in a
@@ -41,6 +47,7 @@ pub mod cache;
 pub mod disk_cache;
 pub mod model_plan;
 pub mod plan;
+pub mod sink;
 pub mod workspace;
 
 #[cfg(feature = "pjrt")]
@@ -48,8 +55,11 @@ pub use backend::PjrtBackend;
 pub use backend::{NativeSerial, NativeThreaded, SpectralBackend};
 pub use cache::{CacheStats, Signature, SpectralCache, DEFAULT_CACHE_BYTES};
 pub use disk_cache::{DiskCache, DiskStats};
-pub use model_plan::{CachedExecution, LayerSpectrum, ModelPlan, ModelSpectra, ModelTopK};
-pub use plan::{SpectralPlan, TopKResult};
+pub use model_plan::{
+    CachedExecution, LayerDensity, LayerSpectrum, ModelPlan, ModelSpectra, ModelTopK,
+};
+pub use plan::{SpectralPlan, SweepOptions, TopKResult};
+pub use sink::{DensitySink, FactorAssembly, FullAssembly, SpectrumSink, TopKAssembly};
 pub use workspace::{Workspace, WorkspacePool};
 
 /// How much of the spectrum one execution computes.
@@ -77,6 +87,27 @@ impl SpectrumRequest {
             SpectrumRequest::Full => rank,
             SpectrumRequest::TopK(k) => k.clamp(1, rank.max(1)),
         }
+    }
+}
+
+/// Shape of a streaming singular-value **density** request
+/// ([`SpectralPlan::density`]): histogram resolution plus the coarse
+/// sub-lattice step over the dual grid. `sample == 1` is an exact census;
+/// `sample == s > 1` solves every `s`-th frequency row and column
+/// (`~1/s²` of the SVD work) and reports the sampling error bar
+/// ([`crate::lfa::spectrum::SpectralDensity::cdf_epsilon`]). Hashable —
+/// density results are keyed and cached like spectra.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct DensityRequest {
+    /// Histogram bins over `[0, σ_max]`.
+    pub bins: u32,
+    /// Dual-grid sub-lattice step (1 = census); clamped to ≥ 1.
+    pub sample: u32,
+}
+
+impl Default for DensityRequest {
+    fn default() -> Self {
+        Self { bins: 64, sample: 1 }
     }
 }
 

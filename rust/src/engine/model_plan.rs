@@ -30,12 +30,12 @@
 
 use super::backend::SpectralBackend;
 use super::cache::{Signature, SpectralCache};
-use super::plan::SpectralPlan;
+use super::plan::{SpectralPlan, SweepOptions};
 use super::workspace::{Workspace, WorkspacePool};
-use super::SpectrumRequest;
+use super::{DensityRequest, SpectrumRequest};
 use crate::bail;
 use crate::error::{Error, Result};
-use crate::lfa::spectrum::{mirror_fill, FullSvd, Spectrum, SpectrumHealth};
+use crate::lfa::spectrum::{mirror_fill, FullSvd, SpectralDensity, Spectrum, SpectrumHealth};
 use crate::lfa::svd::LfaOptions;
 use crate::model::config::ModelConfig;
 use crate::spectral::clip::{clip_with_plan, unclipped_result, ClipResult};
@@ -81,6 +81,19 @@ struct Span {
 pub struct LayerSpectrum {
     pub name: String,
     pub spectrum: Arc<Spectrum>,
+}
+
+/// The spectral density of one layer, as produced by a whole-model
+/// density sweep ([`ModelPlan::density_all`]). Shared (`Arc`) for the
+/// same reason as [`LayerSpectrum`]: cached sweeps hand one histogram to
+/// every consumer.
+#[derive(Clone, Debug)]
+pub struct LayerDensity {
+    pub name: String,
+    /// Streaming singular-value histogram with coverage error bars.
+    pub density: Arc<SpectralDensity>,
+    /// Served straight from the result cache — zero frequencies solved.
+    pub cached: bool,
 }
 
 /// Per-layer spectra of a whole model, plus aggregate views.
@@ -548,29 +561,17 @@ impl ModelPlan {
                     let (nc, mc) = (l.plan.coarse_rows(), l.plan.coarse_cols());
                     let srows = l.plan.solved_rows();
                     let solved_len = srows * mc * vpf;
-                    let health = match request {
-                        SpectrumRequest::Full if l.plan.folded() => {
-                            let solved = &mut slice[..solved_len];
-                            let h = l.plan.execute_fold_rows(0, srows, &mut ws, solved);
-                            mirror_fill(nc, mc, vpf, slice);
-                            h
-                        }
-                        SpectrumRequest::Full => l.plan.execute_rows(0, nc, &mut ws, slice),
-                        SpectrumRequest::TopK(k) if l.plan.folded() => {
-                            let solved = &mut slice[..solved_len];
-                            let (it, h) =
-                                l.plan.execute_topk_fold_rows(k, 0, srows, true, &mut ws, solved);
-                            iters += it;
-                            mirror_fill(nc, mc, vpf, slice);
-                            h
-                        }
-                        SpectrumRequest::TopK(k) => {
-                            let (it, h) =
-                                l.plan.execute_topk_rows(k, 0, nc, true, &mut ws, slice);
-                            iters += it;
-                            h
-                        }
+                    // One unified row driver regardless of request shape or
+                    // folding; folded layers mirror their bottom half after
+                    // the solved strip (solved == whole slice when unfolded).
+                    let (it, health) = {
+                        let solved = &mut slice[..solved_len];
+                        l.plan.execute_request_rows(request, 0, srows, true, &mut ws, solved)
                     };
+                    iters += it;
+                    if l.plan.folded() {
+                        mirror_fill(nc, mc, vpf, slice);
+                    }
                     observe(i, health);
                     pos += len;
                 }
@@ -682,24 +683,8 @@ impl ModelPlan {
                 cur_group = l.group;
             }
             let w = ws.as_mut().expect("workspace checked out above");
-            let health = match request {
-                SpectrumRequest::Full => {
-                    if l.plan.folded() {
-                        l.plan.execute_fold_rows(s.lo, s.hi, w, buf)
-                    } else {
-                        l.plan.execute_rows(s.lo, s.hi, w, buf)
-                    }
-                }
-                SpectrumRequest::TopK(k) => {
-                    let (it, h) = if l.plan.folded() {
-                        l.plan.execute_topk_fold_rows(k, s.lo, s.hi, true, w, buf)
-                    } else {
-                        l.plan.execute_topk_rows(k, s.lo, s.hi, true, w, buf)
-                    };
-                    iters += it;
-                    h
-                }
-            };
+            let (it, health) = l.plan.execute_request_rows(request, s.lo, s.hi, true, w, buf);
+            iters += it;
             layer_health.lock().unwrap()[s.layer].merge(&health);
         }
         if let Some(w) = ws.take() {
@@ -885,15 +870,12 @@ impl ModelPlan {
             }
             let p = &l.plan;
             let mut values = vec![0.0f64; p.request_values_len(request)];
-            let health = match request {
-                SpectrumRequest::Full => p.execute_into_threads(self.threads, &mut values),
-                SpectrumRequest::TopK(k) => {
-                    let (it, h) =
-                        p.execute_topk_into_threads(k, self.threads, true, &mut values);
-                    iterations += it;
-                    h
-                }
-            };
+            let (it, health) = p.execute_request_into(
+                request,
+                SweepOptions::with_threads(self.threads),
+                &mut values,
+            );
+            iterations += it;
             let sp = Arc::new(p.spectrum_from_values_health(request, values, health));
             evictions += cache.insert(keys[i], Arc::clone(&sp));
             freqs_solved += p.solved_freqs();
@@ -960,7 +942,7 @@ impl ModelPlan {
     /// assert_eq!((sym.rows, sym.cols), (3, 2));
     /// ```
     pub fn full_svd_all(&self) -> Vec<FullSvd> {
-        self.layers.iter().map(|l| l.plan.execute_full()).collect()
+        self.layers.iter().map(|l| l.plan.full_svd()).collect()
     }
 
     /// Clip every layer's spectrum at `cap` against the held plans — the
@@ -1029,7 +1011,55 @@ impl ModelPlan {
     /// Rank-`r` truncation of every layer (Eckart–Young optimal per
     /// frequency), original model order.
     pub fn lowrank_all(&self, rank: usize) -> Vec<LowRankConv> {
-        self.layers.iter().map(|l| compress_from_svd(&l.plan.execute_full(), rank)).collect()
+        self.layers.iter().map(|l| compress_from_svd(&l.plan.full_svd(), rank)).collect()
+    }
+
+    /// Streaming spectral-density sweep of every layer, original model
+    /// order: each layer runs the two-pass density pipeline
+    /// ([`SpectralPlan::density_with`] — exact top-1 extremes, then
+    /// histogram accumulation over the (optionally sub-sampled) dual
+    /// grid) with the model's worker budget. Nothing is assembled: the
+    /// whole-model footprint is `layers × bins` counters instead of
+    /// `layers × freqs × rank` values.
+    pub fn density_all(&self, req: DensityRequest) -> Vec<LayerDensity> {
+        self.layers
+            .iter()
+            .map(|l| LayerDensity {
+                name: l.name.clone(),
+                density: Arc::new(
+                    l.plan.density_with(req, SweepOptions::with_threads(self.threads)),
+                ),
+                cached: false,
+            })
+            .collect()
+    }
+
+    /// [`Self::density_all`] through a result cache: densities are keyed
+    /// like spectra (weight bits + geometry + options + density request,
+    /// [`Signature::for_density`]) and share the cache's byte budget, so
+    /// a repeat density audit of an unchanged model solves zero
+    /// frequencies. The health gate is unchanged: a layer still degraded
+    /// after the escalation ladder ships flagged but is refused by the
+    /// cache, so it recomputes (and re-flags) on every sweep instead of
+    /// being replayed as trustworthy.
+    pub fn density_all_cached(&self, req: DensityRequest, cache: &SpectralCache) -> Vec<LayerDensity> {
+        self.layers
+            .iter()
+            .map(|l| {
+                let key = match &l.plan_key {
+                    Some(ps) => ps.for_density(req),
+                    None => l.plan.density_signature(req),
+                };
+                if let Some(d) = cache.get_density(&key) {
+                    return LayerDensity { name: l.name.clone(), density: d, cached: true };
+                }
+                let d = Arc::new(
+                    l.plan.density_with(req, SweepOptions::with_threads(self.threads)),
+                );
+                cache.insert_density(key, Arc::clone(&d));
+                LayerDensity { name: l.name.clone(), density: d, cached: false }
+            })
+            .collect()
     }
 }
 
@@ -1119,6 +1149,55 @@ width  = 8
         assert!(
             (fast - full.lipschitz_upper_bound()).abs() <= 1e-7 * full.lipschitz_upper_bound()
         );
+    }
+
+    #[test]
+    fn density_all_cached_serves_repeat_sweeps_from_cache() {
+        let model = ModelConfig::parse(MIXED).unwrap();
+        let mp = ModelPlan::build(&model, LfaOptions { threads: 1, ..Default::default() })
+            .unwrap();
+        let req = DensityRequest { bins: 32, sample: 1 };
+        let uncached = mp.density_all(req);
+        assert_eq!(uncached.len(), 3);
+        let full = mp.execute();
+        for (ld, fl) in uncached.iter().zip(&full.layers) {
+            assert_eq!(ld.name, fl.name);
+            assert!(!ld.cached);
+            // Census densities (sample=1) see every frequency: exact
+            // extremes and a singular-value count matching the spectrum.
+            assert_eq!(ld.density.covered_freqs, ld.density.total_freqs);
+            assert_eq!(ld.density.count(), fl.spectrum.values.len() as u64);
+            // σ_max comes from the pass-1 Krylov top-1 sweep; compare at
+            // the solver tolerance, as the top-k tests do.
+            assert!(
+                (ld.density.sigma_max - fl.spectrum.sigma_max()).abs()
+                    <= 1e-8 * fl.spectrum.sigma_max()
+            );
+        }
+        // Cached: first sweep populates, second sweep is pure lookup
+        // sharing the same Arc'd histograms.
+        let cache = SpectralCache::new();
+        let first = mp.density_all_cached(req, &cache);
+        assert!(first.iter().all(|l| !l.cached));
+        assert_eq!(cache.stats().density_entries, 3);
+        let second = mp.density_all_cached(req, &cache);
+        assert!(second.iter().all(|l| l.cached));
+        for (a, b) in first.iter().zip(&second) {
+            assert!(Arc::ptr_eq(&a.density, &b.density), "{}", a.name);
+        }
+        // A different density request is a different key: it misses.
+        let third = mp.density_all_cached(DensityRequest { bins: 16, sample: 2 }, &cache);
+        assert!(third.iter().all(|l| !l.cached));
+        // A cached-build model derives density keys from its stored plan
+        // signatures and hits the same entries.
+        let mp2 = ModelPlan::build_cached(
+            &model,
+            LfaOptions { threads: 1, ..Default::default() },
+            &cache,
+        )
+        .unwrap();
+        let derived = mp2.density_all_cached(req, &cache);
+        assert!(derived.iter().all(|l| l.cached), "plan-key derived keys must hit");
     }
 
     #[test]

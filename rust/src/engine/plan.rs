@@ -32,15 +32,27 @@
 //!   factors conjugated (with the stride aliasing permutation on `V`) —
 //!   about a 2× cut in per-layer SVD work.
 //!
-//! `execute*` then runs the fused symbol→SVD pipeline over any row range of
-//! the dual grid. Every SVD entry point in the crate — `lfa::svd`,
-//! `lfa::stride`, the FFT baseline's SVD stage, the coordinator's tiles —
-//! is a thin wrapper over this type.
+//! One **request-driven sweep** then runs the fused symbol→SVD pipeline
+//! over the dual grid: an internal driver owns frequency iteration,
+//! fold/mirror bookkeeping, precision tiers, the escalation ladder and
+//! workspace pooling, and emits every per-frequency result into a
+//! pluggable [`SpectrumSink`] ([`super::sink`]). The public execute
+//! surface is three thin entry points over it — [`SpectralPlan::execute`],
+//! [`SpectralPlan::execute_topk`], [`SpectralPlan::execute_request_into`]
+//! — plus the factor paths ([`SpectralPlan::full_svd`],
+//! [`SpectralPlan::topk_svd`]), the custom-sink seam
+//! ([`SpectralPlan::sweep_with`]) and the streaming density analytics
+//! ([`SpectralPlan::density`]). Every SVD entry point in the crate —
+//! `lfa::svd`, `lfa::stride`, the FFT baseline's SVD stage, the
+//! coordinator's tiles — is a thin wrapper over this type.
 
+use super::sink::{DensitySink, FactorAssembly, FullAssembly, SpectrumSink, TopKAssembly};
 use super::workspace::{Workspace, WorkspacePool};
-use super::SpectrumRequest;
+use super::{DensityRequest, SpectrumRequest};
 use crate::conv::ConvKernel;
-use crate::lfa::spectrum::{conj_factor, mirror_fill, FullSvd, Spectrum, SpectrumHealth, TopKSvd};
+use crate::lfa::spectrum::{
+    conj_factor, mirror_fill, FullSvd, SpectralDensity, Spectrum, SpectrumHealth, TopKSvd,
+};
 use crate::lfa::stride::alias_mirror_index;
 use crate::lfa::svd::{BlockSolver, Fold, LfaOptions, Precision};
 use crate::lfa::symbol::{scatter_shard, BlockLayout, SymbolGrid};
@@ -61,7 +73,7 @@ pub struct TopKResult {
     /// Total solver iteration steps (Krylov steps plus completion-probe
     /// power steps) across all frequencies — the direct
     /// measure of how much the warm starts saved (compare a warm-sweep run
-    /// against [`SpectralPlan::execute_topk_cold`]).
+    /// against a cold one, [`SweepOptions::cold`]).
     pub iterations: u64,
 }
 
@@ -70,6 +82,37 @@ impl TopKResult {
     pub fn iterations_per_freq(&self) -> f64 {
         let freqs = (self.spectrum.n * self.spectrum.m).max(1);
         self.iterations as f64 / freqs as f64
+    }
+}
+
+/// Knobs of a request-driven execution
+/// ([`SpectralPlan::execute_request_into`]): worker count and warm-start
+/// policy. `Default` is the plan's own effective thread count with
+/// warm-started Krylov sweeps — what [`SpectralPlan::execute`] and
+/// [`SpectralPlan::execute_topk`] use.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SweepOptions {
+    /// Worker override: `None` uses the plan's
+    /// [`SpectralPlan::effective_threads`], `Some(0)` resolves to
+    /// `available_parallelism`, `Some(t)` is taken literally.
+    pub threads: Option<usize>,
+    /// Cold-start the Krylov solver at **every** frequency instead of
+    /// carrying the warm basis along the sweep — the ablation that
+    /// measures what cross-frequency warm-starting buys. Ignored by
+    /// `Full` requests (the fused Jacobi path carries no basis).
+    pub cold_start: bool,
+}
+
+impl SweepOptions {
+    /// Explicit worker count (0 = auto), warm sweeps.
+    pub fn with_threads(threads: usize) -> Self {
+        Self { threads: Some(threads), cold_start: false }
+    }
+
+    /// Cold-start every frequency (the warm-start ablation), at the
+    /// plan's own thread count.
+    pub fn cold() -> Self {
+        Self { threads: None, cold_start: true }
     }
 }
 
@@ -117,7 +160,7 @@ impl FreqVerdict {
 /// Candidate-triplet scratch for the grouped factor sweep: per-group
 /// top-k values and vectors are gathered here before the global top-k is
 /// embedded into the block-diagonal factor matrices. Allocated once per
-/// [`SpectralPlan::execute_topk_factors`] call (a factor path — the
+/// [`SpectralPlan::topk_svd`] call (a factor path — the
 /// output allocates anyway), only for `groups > 1`.
 struct FactorScratch {
     /// `g·kg` candidate singular values, group-major.
@@ -160,7 +203,7 @@ pub struct SpectralPlan {
     /// `F64` is the reference path, `F32` runs symbol assembly *and* the
     /// solvers in f32 (twice the SIMD lanes), `F32Refined` adds an f64
     /// refinement pass per frequency. Factor-producing paths
-    /// ([`Self::execute_full`], [`Self::execute_topk_factors`]) always run
+    /// ([`Self::full_svd`], [`Self::topk_svd`]) always run
     /// in f64 regardless.
     precision: Precision,
     /// Row-axis phase table, flattened `[kh][n]`: `py[d·n + i] =
@@ -352,17 +395,15 @@ impl SpectralPlan {
         ((self.nc - ki) % self.nc, (self.mc - kj) % self.mc)
     }
 
-    /// Mirror the upper columns of a self-paired row in-row
-    /// (`σ(ki, kj) = σ(ki, mc − kj)`): `out[base + kj·per ..]` receives
-    /// `out[base + (mc − kj)·per ..]` for every `kj > mc/2`. Shared by the
-    /// full and top-k folded sweeps so the mirror index arithmetic exists
-    /// exactly once.
+    /// Emit the in-row conjugate mirrors of a folded self-paired row into
+    /// the sink (`σ(ki, kj) = σ(ki, mc − kj)` for every `kj ≥ cols`); a
+    /// no-op for full rows and unfolded sweeps (`cols == mc`). Part of the
+    /// unified sweep so the mirror index arithmetic exists exactly once.
     #[inline]
-    fn mirror_row_tail(&self, base: usize, per: usize, out: &mut [f64]) {
-        for kj in (self.mc / 2 + 1)..self.mc {
-            let src = base + (self.mc - kj) * per;
-            let dst = base + kj * per;
-            out.copy_within(src..src + per, dst);
+    fn emit_row_tail<S: SpectrumSink>(&self, ki: usize, cols: usize, sink: &mut S) {
+        for kj in cols..self.mc {
+            let src = ki * self.mc + (self.mc - kj);
+            sink.mirror(src, ki * self.mc + kj);
         }
     }
 
@@ -434,6 +475,12 @@ impl SpectralPlan {
         )
     }
 
+    /// Content signature of the density `req` computes on this plan — the
+    /// key [`crate::engine::SpectralCache`] addresses density results by.
+    pub fn density_signature(&self, req: DensityRequest) -> crate::engine::Signature {
+        self.result_signature(SpectrumRequest::Full).for_density(req)
+    }
+
     /// Singular values per frequency: `min(c_out, stride²·c_in_total)`
     /// (equivalently `groups · min(c_out/g, stride²·c_in)` — the union of
     /// the per-group block spectra). Transposition does not change it.
@@ -448,7 +495,7 @@ impl SpectralPlan {
         self.block_rows.min(self.block_cols)
     }
 
-    /// Total output length of [`Self::execute_into`].
+    /// Total output length of a `SpectrumRequest::Full` execution.
     pub fn values_len(&self) -> usize {
         self.freqs() * self.rank
     }
@@ -459,7 +506,7 @@ impl SpectralPlan {
         SpectrumRequest::TopK(k).values_per_freq(self.rank)
     }
 
-    /// Total output length of [`Self::execute_topk_into`].
+    /// Total output length of a `SpectrumRequest::TopK(k)` execution.
     pub fn topk_values_len(&self, k: usize) -> usize {
         self.freqs() * self.topk_per_freq(k)
     }
@@ -889,153 +936,143 @@ impl SpectralPlan {
         }
     }
 
-    /// Execute coarse frequency rows `[row_lo, row_hi)` into `out`
-    /// (`(row_hi−row_lo)·mc·rank` values, frequency-major, descending per
-    /// frequency). Zero heap allocation per frequency. Returns the range's
-    /// [`SpectrumHealth`] — one verdict per solved frequency.
-    pub fn execute_rows(
-        &self,
-        row_lo: usize,
-        row_hi: usize,
-        ws: &mut Workspace,
-        out: &mut [f64],
-    ) -> SpectrumHealth {
-        debug_assert!(row_lo <= row_hi && row_hi <= self.nc);
-        debug_assert_eq!(out.len(), (row_hi - row_lo) * self.mc * self.rank);
-        let r = self.rank;
-        let mut health = SpectrumHealth::default();
-        for ki in row_lo..row_hi {
-            for kj in 0..self.mc {
-                let f = (ki - row_lo) * self.mc + kj;
-                let dst = &mut out[f * r..(f + 1) * r];
-                self.solve_freq(ki, kj, ws, dst).record(&mut health);
-            }
-        }
-        health
-    }
-
-    /// [`Self::execute_rows`] with pool-managed workspace checkout — the
-    /// entry point the coordinator's tile workers use against a shared plan.
-    pub fn execute_rows_pooled(
-        &self,
-        row_lo: usize,
-        row_hi: usize,
-        out: &mut [f64],
-    ) -> SpectrumHealth {
-        let mut ws = self.checkout();
-        let health = self.execute_rows(row_lo, row_hi, &mut ws, out);
-        self.restore(ws);
-        health
-    }
-
-    /// Execute **folded** coarse rows `[fr_lo, fr_hi)` (indices into the
-    /// fundamental-domain range `0..solved_rows()`) into `out` — one full
-    /// row of output per folded row (`(fr_hi−fr_lo)·mc·rank` values):
-    /// canonical columns are solved, the mirrored columns of self-paired
-    /// rows are filled in-row by copy, so every tile is self-contained.
-    /// Rows below the fold line are nobody's tile — assembly fills them
-    /// with [`crate::lfa::spectrum::mirror_fill`]. Zero heap allocation
-    /// per frequency, like [`Self::execute_rows`].
-    pub fn execute_fold_rows(
-        &self,
-        fr_lo: usize,
-        fr_hi: usize,
-        ws: &mut Workspace,
-        out: &mut [f64],
-    ) -> SpectrumHealth {
-        debug_assert!(self.fold, "folded sweep on an unfolded plan");
-        debug_assert!(fr_lo <= fr_hi && fr_hi <= self.solved_rows());
-        let r = self.rank;
-        debug_assert_eq!(out.len(), (fr_hi - fr_lo) * self.mc * r);
-        let mut health = SpectrumHealth::default();
-        for ki in fr_lo..fr_hi {
-            let base = (ki - fr_lo) * self.mc * r;
-            let cols = self.fold_row_cols(ki);
-            for kj in 0..cols {
-                let dst = &mut out[base + kj * r..base + (kj + 1) * r];
-                self.solve_freq(ki, kj, ws, dst).record(&mut health);
-            }
-            if cols < self.mc {
-                self.mirror_row_tail(base, r, out);
-            }
-        }
-        health
-    }
-
-    /// [`Self::execute_fold_rows`] with pool-managed workspace checkout —
-    /// the folded tile entry point of the coordinator's workers.
-    pub fn execute_fold_rows_pooled(
-        &self,
-        fr_lo: usize,
-        fr_hi: usize,
-        out: &mut [f64],
-    ) -> SpectrumHealth {
-        let mut ws = self.checkout();
-        let health = self.execute_fold_rows(fr_lo, fr_hi, &mut ws, out);
-        self.restore(ws);
-        health
-    }
-
-    /// Top-`k` singular values for coarse frequency rows `[row_lo, row_hi)`
-    /// by warm-started Krylov iteration, written frequency-major (descending per
-    /// frequency, `topk_per_freq(k)` values each) into `out`. Returns total
-    /// solver iteration steps.
+    /// The engine's **single frequency-iteration driver**: run `request`
+    /// over rows `[row_lo, row_hi)` of the solved domain
+    /// (fundamental-domain rows when the plan folds, all coarse rows
+    /// otherwise), emitting every per-frequency result into `sink`. Owns
+    /// the visit order — row-major for `Full`, serpentine /
+    /// folded-serpentine for `TopK` so warm starts stay dual-grid-local
+    /// (see [`Self::serpentine_col`] / [`Self::walk_fold_rows`]) — the
+    /// fold bookkeeping (self-paired row tails are emitted as in-strip
+    /// [`SpectrumSink::mirror`]s; rows below the fold line are assembly's
+    /// job), the precision tiers and the escalation ladder (via
+    /// [`Self::solve_freq`] / [`Self::solve_freq_topk`]), and one health
+    /// verdict per solved frequency. Zero heap allocation per frequency:
+    /// the sink hands back preallocated slots.
     ///
-    /// The rows are visited in a **serpentine (boustrophedon) order** — row
-    /// `row_lo` left to right, the next row right to left, … — so
-    /// consecutive frequencies are always dual-grid neighbors. Because the
-    /// symbol varies smoothly with frequency (the paper's shift-invariance
-    /// observation), the converged singular basis of one frequency is an
-    /// excellent warm start for the next; with `warm_sweep` the basis is
-    /// carried across the whole range (cold only at `row_lo`'s first
-    /// frequency), without it every frequency cold-starts — the ablation
-    /// [`Self::execute_topk_cold`] measures.
-    pub fn execute_topk_rows(
+    /// Returns total solver iteration steps (0 for `Full` — the fused
+    /// Jacobi path is direct) and the range's aggregated
+    /// [`SpectrumHealth`].
+    fn sweep<S: SpectrumSink>(
         &self,
-        k: usize,
+        request: SpectrumRequest,
+        row_lo: usize,
+        row_hi: usize,
+        warm_sweep: bool,
+        ws: &mut Workspace,
+        sink: &mut S,
+    ) -> (u64, SpectrumHealth) {
+        debug_assert!(row_lo <= row_hi && row_hi <= self.solved_rows());
+        let mut health = SpectrumHealth::default();
+        match request {
+            SpectrumRequest::Full => {
+                for ki in row_lo..row_hi {
+                    let cols = if self.fold { self.fold_row_cols(ki) } else { self.mc };
+                    for kj in 0..cols {
+                        let f = ki * self.mc + kj;
+                        self.solve_freq(ki, kj, ws, sink.slot(f)).record(&mut health);
+                        sink.commit(f, ki, kj);
+                    }
+                    self.emit_row_tail(ki, cols, sink);
+                }
+                (0, health)
+            }
+            SpectrumRequest::TopK(k) => {
+                let ke = self.topk_per_freq(k);
+                let opts = TopKOptions::default();
+                // Never inherit a basis from whatever this pooled workspace
+                // did last (another strip, another layer): cold-start the
+                // sweep.
+                self.topk_reset(ws);
+                let mut iters = 0u64;
+                if self.fold {
+                    self.walk_fold_rows(row_lo, row_hi, |ki, kj, crossed_seam| {
+                        if crossed_seam {
+                            self.topk_conjugate(ws);
+                        }
+                        if !warm_sweep {
+                            self.topk_reset(ws);
+                        }
+                        let f = ki * self.mc + kj;
+                        let (it, verdict) =
+                            self.solve_freq_topk(ki, kj, ke, opts, ws, sink.slot(f));
+                        sink.commit(f, ki, kj);
+                        iters += it;
+                        verdict.record(&mut health);
+                    });
+                    for ki in row_lo..row_hi {
+                        self.emit_row_tail(ki, self.fold_row_cols(ki), sink);
+                    }
+                } else {
+                    for ki in row_lo..row_hi {
+                        for step in 0..self.mc {
+                            let kj = self.serpentine_col(ki - row_lo, step);
+                            if !warm_sweep {
+                                self.topk_reset(ws);
+                            }
+                            let f = ki * self.mc + kj;
+                            let (it, verdict) =
+                                self.solve_freq_topk(ki, kj, ke, opts, ws, sink.slot(f));
+                            sink.commit(f, ki, kj);
+                            iters += it;
+                            verdict.record(&mut health);
+                        }
+                    }
+                }
+                (iters, health)
+            }
+        }
+    }
+
+    /// Execute `request` for rows `[row_lo, row_hi)` of the **solved
+    /// domain** (fundamental-domain rows `0..solved_rows()` when the plan
+    /// folds — each self-paired row's mirrored columns are filled in-row,
+    /// so every tile is self-contained; all coarse rows otherwise) into
+    /// `out`: `(row_hi−row_lo)·mc·values_per_freq` values,
+    /// frequency-major, descending per frequency. Rows below the fold line
+    /// are nobody's tile — assembly fills them with
+    /// [`crate::lfa::spectrum::mirror_fill`]. Zero heap allocation per
+    /// frequency; returns solver iteration steps (0 for `Full`) and the
+    /// range's [`SpectrumHealth`]. The strip primitive behind
+    /// [`Self::execute_request_into`], `ModelPlan`'s batched sweeps and
+    /// the coordinator's tile workers.
+    pub(crate) fn execute_request_rows(
+        &self,
+        request: SpectrumRequest,
         row_lo: usize,
         row_hi: usize,
         warm_sweep: bool,
         ws: &mut Workspace,
         out: &mut [f64],
     ) -> (u64, SpectrumHealth) {
-        debug_assert!(row_lo <= row_hi && row_hi <= self.nc);
-        let ke = self.topk_per_freq(k);
-        debug_assert_eq!(out.len(), (row_hi - row_lo) * self.mc * ke);
-        let opts = TopKOptions::default();
-        // Never inherit a basis from whatever this pooled workspace did
-        // last (another strip, another layer): cold-start the sweep.
-        self.topk_reset(ws);
-        let mut iters = 0u64;
-        let mut health = SpectrumHealth::default();
-        for ki in row_lo..row_hi {
-            for step in 0..self.mc {
-                let kj = self.serpentine_col(ki - row_lo, step);
-                if !warm_sweep {
-                    self.topk_reset(ws);
-                }
-                let f = (ki - row_lo) * self.mc + kj;
-                let dst = &mut out[f * ke..(f + 1) * ke];
-                let (it, verdict) = self.solve_freq_topk(ki, kj, ke, opts, ws, dst);
-                iters += it;
-                verdict.record(&mut health);
+        debug_assert_eq!(
+            out.len(),
+            (row_hi - row_lo) * self.mc * request.values_per_freq(self.rank)
+        );
+        match request {
+            SpectrumRequest::Full => {
+                let mut sink = FullAssembly::strip(self, row_lo, out);
+                self.sweep(request, row_lo, row_hi, warm_sweep, ws, &mut sink)
+            }
+            SpectrumRequest::TopK(k) => {
+                let mut sink = TopKAssembly::strip(self, k, row_lo, out);
+                self.sweep(request, row_lo, row_hi, warm_sweep, ws, &mut sink)
             }
         }
-        (iters, health)
     }
 
-    /// [`Self::execute_topk_rows`] with pool-managed workspace checkout
+    /// [`Self::execute_request_rows`] with pool-managed workspace checkout
     /// (warm-started within the range) — the tile entry point of the
-    /// coordinator's top-k model jobs.
-    pub fn execute_topk_rows_pooled(
+    /// coordinator's workers against a shared plan.
+    pub(crate) fn execute_request_rows_pooled(
         &self,
-        k: usize,
+        request: SpectrumRequest,
         row_lo: usize,
         row_hi: usize,
         out: &mut [f64],
     ) -> (u64, SpectrumHealth) {
         let mut ws = self.checkout();
-        let result = self.execute_topk_rows(k, row_lo, row_hi, true, &mut ws, out);
+        let result = self.execute_request_rows(request, row_lo, row_hi, true, &mut ws, out);
         self.restore(ws);
         result
     }
@@ -1087,161 +1124,72 @@ impl SpectralPlan {
         }
     }
 
-    /// Top-`k` values for **folded** coarse rows `[fr_lo, fr_hi)` (indices
-    /// into `0..solved_rows()`), one full row of output per folded row
-    /// (self-paired rows mirror their upper columns in-row; rows below the
-    /// fold line are assembly's job — [`crate::lfa::spectrum::mirror_fill`]).
-    /// Returns total solver iteration steps.
-    ///
-    /// The sweep is the folded analogue of the serpentine order in
-    /// [`Self::execute_topk_rows`] (per-row direction chosen so
-    /// consecutive solves stay torus-adjacent — see `fold_row_reverse`);
-    /// when the walk crosses the fold seam into the closing self-paired
-    /// row the carried warm basis is conjugated
-    /// ([`crate::linalg::power::TopKScratch::conjugate_basis`]): past the
-    /// seam the walk continues along the mirror track, where the symbol is
-    /// the conjugate of the side already visited.
-    pub fn execute_topk_fold_rows(
+    /// Execute `request` over the full dual grid into a caller-provided
+    /// buffer (`request_values_len(request)` long) — **the** whole-grid
+    /// request-driven driver every other entry point wraps. `opts` picks
+    /// the worker count and warm-start policy ([`SweepOptions`]). Workers
+    /// own contiguous strips of solved rows (folded plans partition the
+    /// fundamental domain by solved-block count) and sweep them with the
+    /// unified driver, so warm starts stay strip-local and never cross
+    /// workers — results are deterministic for a fixed partition. When the
+    /// plan folds ([`crate::lfa::Fold::Auto`], the default), only the
+    /// fundamental domain of `θ → −θ` is solved and the conjugate half is
+    /// filled by mirroring ([`crate::lfa::spectrum::mirror_fill`]) —
+    /// roughly halving the SVD work. Allocation-free per frequency once
+    /// warmed up. Returns the solver iteration steps spent (0 for `Full`
+    /// — the fused Jacobi path is direct) and the sweep's aggregated
+    /// [`SpectrumHealth`].
+    pub fn execute_request_into(
         &self,
-        k: usize,
-        fr_lo: usize,
-        fr_hi: usize,
-        warm_sweep: bool,
-        ws: &mut Workspace,
+        request: SpectrumRequest,
+        opts: SweepOptions,
         out: &mut [f64],
     ) -> (u64, SpectrumHealth) {
-        debug_assert!(self.fold, "folded sweep on an unfolded plan");
-        debug_assert!(fr_lo <= fr_hi && fr_hi <= self.solved_rows());
-        let ke = self.topk_per_freq(k);
-        debug_assert_eq!(out.len(), (fr_hi - fr_lo) * self.mc * ke);
-        let opts = TopKOptions::default();
-        // Never inherit a basis from whatever this pooled workspace did
-        // last (another strip, another layer): cold-start the sweep.
-        self.topk_reset(ws);
-        let mut iters = 0u64;
-        let mut health = SpectrumHealth::default();
-        self.walk_fold_rows(fr_lo, fr_hi, |ki, kj, crossed_seam| {
-            if crossed_seam {
-                self.topk_conjugate(ws);
-            }
-            if !warm_sweep {
-                self.topk_reset(ws);
-            }
-            let base = (ki - fr_lo) * self.mc * ke;
-            let dst = &mut out[base + kj * ke..base + (kj + 1) * ke];
-            let (it, verdict) = self.solve_freq_topk(ki, kj, ke, opts, ws, dst);
-            iters += it;
-            verdict.record(&mut health);
-        });
-        for ki in fr_lo..fr_hi {
-            if self.fold_row_cols(ki) < self.mc {
-                self.mirror_row_tail((ki - fr_lo) * self.mc * ke, ke, out);
-            }
-        }
-        (iters, health)
-    }
-
-    /// [`Self::execute_topk_fold_rows`] with pool-managed workspace
-    /// checkout (warm-started within the range) — the folded top-k tile
-    /// entry point of the coordinator's model jobs.
-    pub fn execute_topk_fold_rows_pooled(
-        &self,
-        k: usize,
-        fr_lo: usize,
-        fr_hi: usize,
-        out: &mut [f64],
-    ) -> (u64, SpectrumHealth) {
-        let mut ws = self.checkout();
-        let result = self.execute_topk_fold_rows(k, fr_lo, fr_hi, true, &mut ws, out);
-        self.restore(ws);
-        result
-    }
-
-    /// Top-`k` execution over the full dual grid into a caller-provided
-    /// buffer (`topk_values_len(k)` long); returns total solver iteration
-    /// steps and the sweep's aggregated [`SpectrumHealth`].
-    /// Allocation-free per frequency once warmed up, like
-    /// [`Self::execute_into`].
-    pub fn execute_topk_into(&self, k: usize, out: &mut [f64]) -> (u64, SpectrumHealth) {
-        self.execute_topk_into_threads(k, self.effective_threads(), true, out)
-    }
-
-    /// [`Self::execute_topk_into`] with an explicit worker count (0 = auto)
-    /// and warm-start control. Threaded, each worker owns a **contiguous
-    /// strip of frequency rows** and sweeps it serpentine, so warm starts
-    /// stay local to a strip and never cross workers (results are
-    /// deterministic for a fixed strip partition). When the plan folds
-    /// ([`crate::lfa::Fold::Auto`]), strips partition the
-    /// fundamental-domain rows by solved-block count and assembly mirrors
-    /// the conjugate half.
-    pub fn execute_topk_into_threads(
-        &self,
-        k: usize,
-        threads: usize,
-        warm_sweep: bool,
-        out: &mut [f64],
-    ) -> (u64, SpectrumHealth) {
-        let ke = self.topk_per_freq(k);
-        assert_eq!(out.len(), self.freqs() * ke, "output buffer length mismatch");
+        assert_eq!(out.len(), self.request_values_len(request), "output buffer length mismatch");
+        let warm = !opts.cold_start;
         let srows = self.solved_rows();
-        let threads = super::resolve_threads(threads).min(srows.max(1));
-        let row_vals = self.mc * ke;
-        if !self.fold {
-            if threads <= 1 || self.nc <= 1 {
-                let mut ws = self.checkout();
-                let result = self.execute_topk_rows(k, 0, self.nc, warm_sweep, &mut ws, out);
-                self.restore(ws);
-                return result;
-            }
-            let rows_per = self.nc.div_ceil(threads);
-            let total = AtomicU64::new(0);
-            let total_ref = &total;
-            let agg = Mutex::new(SpectrumHealth::default());
-            let agg_ref = &agg;
-            std::thread::scope(|scope| {
-                let mut rest: &mut [f64] = out;
-                let mut lo = 0usize;
-                while lo < self.nc {
-                    let hi = (lo + rows_per).min(self.nc);
-                    let (head, tail) = std::mem::take(&mut rest).split_at_mut((hi - lo) * row_vals);
-                    rest = tail;
-                    scope.spawn(move || {
-                        let mut ws = self.checkout();
-                        let (iters, health) =
-                            self.execute_topk_rows(k, lo, hi, warm_sweep, &mut ws, head);
-                        self.restore(ws);
-                        total_ref.fetch_add(iters, Ordering::Relaxed);
-                        agg_ref.lock().unwrap().merge(&health);
-                    });
-                    lo = hi;
-                }
-            });
-            return (total.into_inner(), agg.into_inner().unwrap());
+        let threads = match opts.threads {
+            None => self.effective_threads(),
+            Some(t) => super::resolve_threads(t),
         }
-        // Folded: solve the fundamental domain, then mirror the rest.
+        .min(srows.max(1));
+        let per = request.values_per_freq(self.rank);
+        let row_vals = self.mc * per;
         let result = {
             let solved = &mut out[..srows * row_vals];
             if threads <= 1 || srows <= 1 {
                 let mut ws = self.checkout();
-                let result =
-                    self.execute_topk_fold_rows(k, 0, srows, warm_sweep, &mut ws, solved);
+                let result = self.execute_request_rows(request, 0, srows, warm, &mut ws, solved);
                 self.restore(ws);
                 result
             } else {
+                let strips = if self.fold {
+                    self.fold_strips(threads)
+                } else {
+                    let rows_per = self.nc.div_ceil(threads);
+                    let mut strips = Vec::with_capacity(threads);
+                    let mut lo = 0usize;
+                    while lo < self.nc {
+                        let hi = (lo + rows_per).min(self.nc);
+                        strips.push((lo, hi));
+                        lo = hi;
+                    }
+                    strips
+                };
                 let total = AtomicU64::new(0);
                 let total_ref = &total;
                 let agg = Mutex::new(SpectrumHealth::default());
                 let agg_ref = &agg;
                 std::thread::scope(|scope| {
                     let mut rest: &mut [f64] = solved;
-                    for (lo, hi) in self.fold_strips(threads) {
+                    for (lo, hi) in strips {
                         let (head, tail) =
                             std::mem::take(&mut rest).split_at_mut((hi - lo) * row_vals);
                         rest = tail;
                         scope.spawn(move || {
                             let mut ws = self.checkout();
                             let (iters, health) =
-                                self.execute_topk_fold_rows(k, lo, hi, warm_sweep, &mut ws, head);
+                                self.execute_request_rows(request, lo, hi, warm, &mut ws, head);
                             self.restore(ws);
                             total_ref.fetch_add(iters, Ordering::Relaxed);
                             agg_ref.lock().unwrap().merge(&health);
@@ -1251,8 +1199,150 @@ impl SpectralPlan {
                 (total.into_inner(), agg.into_inner().unwrap())
             }
         };
-        mirror_fill(self.nc, self.mc, ke, out);
+        if self.fold {
+            mirror_fill(self.nc, self.mc, per, out);
+        }
         result
+    }
+
+    /// Run `request` through the unified sweep into a caller-supplied
+    /// [`SpectrumSink`] — the pluggable seam new per-frequency consumers
+    /// build on instead of forking a driver (the density analytics path is
+    /// one: [`Self::density`]; see `docs/ARCHITECTURE.md`'s streaming
+    /// pipeline section). Serial, whole solved domain, warm-started. Every
+    /// canonical frequency is delivered as a `slot`/`commit` pair; when
+    /// the plan folds, every non-canonical frequency is then delivered
+    /// exactly once as a `mirror` of its committed conjugate partner
+    /// (self-paired row tails during the sweep, below-fold rows
+    /// afterwards). Returns solver iteration steps (0 for `Full`) and the
+    /// aggregated [`SpectrumHealth`].
+    pub fn sweep_with<S: SpectrumSink>(
+        &self,
+        request: SpectrumRequest,
+        sink: &mut S,
+    ) -> (u64, SpectrumHealth) {
+        let mut ws = self.checkout();
+        let result = self.sweep(request, 0, self.solved_rows(), true, &mut ws, sink);
+        self.restore(ws);
+        if self.fold {
+            for ki in self.solved_rows()..self.nc {
+                for kj in 0..self.mc {
+                    let (mi, mj) = self.mirror_coords(ki, kj);
+                    sink.mirror(mi * self.mc + mj, ki * self.mc + kj);
+                }
+            }
+        }
+        result
+    }
+
+    /// Streaming singular-value **density** of the operator: a histogram
+    /// of the `n·m·rank` singular values over `[0, σ_max]` with exact
+    /// extremes and optional coarse sub-lattice sampling of the dual grid
+    /// — the bulk-shape analytics the asymptotic-distribution results (Yi
+    /// 2020) justify, at `O((nc/s)·(mc/s))` full SVDs for sample step `s`
+    /// instead of the full `O(nc·mc)`.
+    ///
+    /// Two passes: a warm top-1 Krylov sweep of the whole grid pins
+    /// `σ_max` exactly (top-k-grade — the same accuracy contract as
+    /// [`Self::execute_topk`]) and seeds the iteration/health ledger; the
+    /// sampled sub-lattice of the solved domain is then solved in full and
+    /// streamed into a [`DensitySink`], each canonical frequency weighted
+    /// by its conjugate-mirror multiplicity so folding never biases the
+    /// histogram. With `sample == 1` the histogram is a census (and is
+    /// driven through the same unified sweep as every assembly sink); with
+    /// `sample > 1` it is an estimate whose resolution-independent CDF
+    /// error bar is reported as [`SpectralDensity::cdf_epsilon`]. σ_min is
+    /// only known over the sampled set
+    /// ([`SpectralDensity::sigma_min_sampled`]) — the Krylov extremes pass
+    /// cannot see the small end.
+    pub fn density(&self, req: DensityRequest) -> SpectralDensity {
+        self.density_with(req, SweepOptions::default())
+    }
+
+    /// [`Self::density`] with explicit sweep knobs (worker count /
+    /// warm-start policy for the extremes pass).
+    pub fn density_with(&self, req: DensityRequest, opts: SweepOptions) -> SpectralDensity {
+        let bins = req.bins.max(1) as usize;
+        let sample = req.sample.max(1) as usize;
+        // Pass 1: exact extremes — a warm top-1 sweep over the whole grid.
+        let mut top = vec![0.0f64; self.request_values_len(SpectrumRequest::TopK(1))];
+        let (iterations, mut health) =
+            self.execute_request_into(SpectrumRequest::TopK(1), opts, &mut top);
+        let sigma_max = top.iter().fold(0.0f64, |a, &b| a.max(b));
+        drop(top);
+        // Pass 2: stream the sampled sub-lattice of the solved domain
+        // through a DensitySink (full per-frequency spectra).
+        let rows: Vec<usize> = (0..self.solved_rows()).step_by(sample).collect();
+        let threads = match opts.threads {
+            None => self.effective_threads(),
+            Some(t) => super::resolve_threads(t),
+        }
+        .min(rows.len().max(1));
+        let mut sink = DensitySink::new(self, bins, sigma_max);
+        let bulk_health = if threads <= 1 {
+            let mut ws = self.checkout();
+            let h = self.density_rows(&rows, sample, &mut ws, &mut sink);
+            self.restore(ws);
+            h
+        } else {
+            let chunk = rows.len().div_ceil(threads);
+            let agg = Mutex::new((SpectrumHealth::default(), Vec::<DensitySink>::new()));
+            let agg_ref = &agg;
+            std::thread::scope(|scope| {
+                for part in rows.chunks(chunk) {
+                    scope.spawn(move || {
+                        let mut ws = self.checkout();
+                        let mut local = DensitySink::new(self, bins, sigma_max);
+                        let h = self.density_rows(part, sample, &mut ws, &mut local);
+                        self.restore(ws);
+                        let mut guard = agg_ref.lock().unwrap();
+                        guard.0.merge(&h);
+                        guard.1.push(local);
+                    });
+                }
+            });
+            let (h, parts) = agg.into_inner().unwrap();
+            for part in &parts {
+                sink.merge(part);
+            }
+            h
+        };
+        health.merge(&bulk_health);
+        sink.into_density(self, req, sigma_max, iterations, health)
+    }
+
+    /// Solve the full spectra of the sampled canonical frequencies of
+    /// `rows` (columns stepped by `sample`) into `sink`. A `sample` of 1
+    /// covers a contiguous row range and routes through the unified
+    /// [`Self::sweep`] — the same driver the assembly sinks ride — so the
+    /// census path exercises the pluggable seam end to end.
+    fn density_rows(
+        &self,
+        rows: &[usize],
+        sample: usize,
+        ws: &mut Workspace,
+        sink: &mut DensitySink,
+    ) -> SpectrumHealth {
+        if rows.is_empty() {
+            return SpectrumHealth::default();
+        }
+        if sample == 1 {
+            let (lo, hi) = (rows[0], rows[rows.len() - 1] + 1);
+            let (_, health) = self.sweep(SpectrumRequest::Full, lo, hi, true, ws, sink);
+            return health;
+        }
+        let mut health = SpectrumHealth::default();
+        for &ki in rows {
+            let cols = if self.fold { self.fold_row_cols(ki) } else { self.mc };
+            let mut kj = 0usize;
+            while kj < cols {
+                let f = ki * self.mc + kj;
+                self.solve_freq(ki, kj, ws, sink.slot(f)).record(&mut health);
+                sink.commit(f, ki, kj);
+                kj += sample;
+            }
+        }
+        health
     }
 
     /// Top-`k` singular values per frequency, warm-started along the
@@ -1279,17 +1369,11 @@ impl SpectralPlan {
     /// ```
     pub fn execute_topk(&self, k: usize) -> TopKResult {
         let mut values = vec![0.0f64; self.topk_values_len(k)];
-        let (iterations, health) = self.execute_topk_into(k, &mut values);
-        TopKResult { spectrum: self.topk_spectrum(k, values, health), iterations }
-    }
-
-    /// Ablation twin of [`Self::execute_topk`]: cold-start the Krylov
-    /// solver at **every** frequency. Same values, more iterations —
-    /// the bench's measure of what cross-frequency warm-starting buys.
-    pub fn execute_topk_cold(&self, k: usize) -> TopKResult {
-        let mut values = vec![0.0f64; self.topk_values_len(k)];
-        let (iterations, health) =
-            self.execute_topk_into_threads(k, self.effective_threads(), false, &mut values);
+        let (iterations, health) = self.execute_request_into(
+            SpectrumRequest::TopK(k),
+            SweepOptions::default(),
+            &mut values,
+        );
         TopKResult { spectrum: self.topk_spectrum(k, values, health), iterations }
     }
 
@@ -1340,38 +1424,22 @@ impl SpectralPlan {
         }
     }
 
-    /// Execute `request` into a caller-provided buffer
-    /// (`request_values_len(request)` long). Returns the solver iteration
-    /// steps spent (0 for the full fused path, which is direct) and the
-    /// sweep's aggregated [`SpectrumHealth`].
-    pub fn execute_request_into(
-        &self,
-        request: SpectrumRequest,
-        out: &mut [f64],
-    ) -> (u64, SpectrumHealth) {
-        match request {
-            SpectrumRequest::Full => (0, self.execute_into(out)),
-            SpectrumRequest::TopK(k) => self.execute_topk_into(k, out),
-        }
-    }
-
     /// Solve the block currently in `ws` for its top-`ke` triplet and
-    /// store it at frequency `f`: values into `values`, right vectors into
-    /// `v[f]`, left vectors `u_j = (A v_j)/σ_j` into `u[f]`. Returns the
-    /// solver certificate — the per-frequency body shared by the
-    /// folded and unfolded factor sweeps (dense kernels; grouped kernels
-    /// go through the candidate-merging path of
-    /// [`Self::topk_triplet_at`]).
+    /// store it at frequency `f` of the factor assembly: values into
+    /// `fa.values`, right vectors into `fa.v[f]`, left vectors
+    /// `u_j = (A v_j)/σ_j` into `fa.u[f]`. Returns the solver certificate
+    /// — the per-frequency body shared by the folded and unfolded factor
+    /// sweeps (dense kernels; grouped kernels go through the
+    /// candidate-merging path of [`Self::topk_triplet_at`]).
     fn store_topk_triplet(
         &self,
         ke: usize,
         opts: TopKOptions,
         ws: &mut Workspace,
         f: usize,
-        values: &mut [f64],
-        u: &mut [CMat],
-        v: &mut [CMat],
+        fa: &mut FactorAssembly,
     ) -> SolveCert {
+        let FactorAssembly { values, u, v, .. } = fa;
         let dst = &mut values[f * ke..(f + 1) * ke];
         let cert = ws.solve_block_topk(self.block_rows, self.block_cols, ke, opts, dst);
         for j in 0..ke {
@@ -1386,17 +1454,18 @@ impl SpectralPlan {
                 u[f][(r, j)] = wj[r].scale(inv);
             }
         }
-        iters
+        cert
     }
 
     /// Assemble, solve and store the top-`ke` forward triplet of frequency
-    /// `(ki, kj)` at index `f`; returns `(iterations, block energy)`. The
-    /// per-frequency body of [`Self::execute_topk_factors`], shared by the
-    /// folded and unfolded sweeps. Dense kernels solve the single block in
-    /// place; grouped kernels solve each diagonal block for its own
-    /// `min(ke, group_rank)` candidate triplets (cold per block), merge by
-    /// value in `fs`, and embed the winners' vectors at their group's
-    /// row/column offsets of the block-diagonal factor matrices.
+    /// `(ki, kj)` at index `f` of the factor assembly; returns
+    /// `(iterations, block energy)`. The per-frequency body of
+    /// [`Self::topk_svd`], shared by the folded and unfolded sweeps. Dense
+    /// kernels solve the single block in place; grouped kernels solve each
+    /// diagonal block for its own `min(ke, group_rank)` candidate triplets
+    /// (cold per block), merge by value in `fs`, and embed the winners'
+    /// vectors at their group's row/column offsets of the block-diagonal
+    /// factor matrices.
     #[allow(clippy::too_many_arguments)]
     fn topk_triplet_at(
         &self,
@@ -1407,19 +1476,18 @@ impl SpectralPlan {
         ws: &mut Workspace,
         fs: &mut Option<FactorScratch>,
         f: usize,
-        values: &mut [f64],
-        u: &mut [CMat],
-        v: &mut [CMat],
+        fa: &mut FactorAssembly,
         health: &mut SpectrumHealth,
     ) -> (u64, f64) {
         let g = self.kernel.groups;
         if g == 1 {
             self.fill_block(ki, kj, 0, ws);
             let energy = ws.block.iter().map(|z| z.norm_sqr()).sum::<f64>();
-            let cert = self.store_topk_triplet(ke, opts, ws, f, values, u, v);
+            let cert = self.store_topk_triplet(ke, opts, ws, f, fa);
             FreqVerdict::from_cert(cert).record(health);
             return (cert.effort as u64, energy);
         }
+        let FactorAssembly { values, u, v, .. } = fa;
         let FactorScratch { vals, order, u: cand_u, v: cand_v } =
             fs.as_mut().expect("grouped factor sweep requires candidate scratch");
         let kg = ke.min(self.group_rank());
@@ -1478,7 +1546,7 @@ impl SpectralPlan {
     /// are `(a,b)`-alias-major with `c_in_total` channels per alias, so
     /// the permutation is oblivious to channel grouping — it moves whole
     /// alias row groups.
-    fn mirror_right_factor(&self, vsrc: &CMat, ki: usize, kj: usize) -> CMat {
+    pub(crate) fn mirror_right_factor(&self, vsrc: &CMat, ki: usize, kj: usize) -> CMat {
         let s = self.stride;
         if s == 1 {
             return conj_factor(vsrc);
@@ -1522,17 +1590,14 @@ impl SpectralPlan {
     /// flagged degraded — the values-path Jacobi escalation rung produces
     /// no singular vectors, so the factor sweep flags rather than
     /// escalates.
-    pub fn execute_topk_factors(&self, k: usize) -> TopKSvd {
+    pub fn topk_svd(&self, k: usize) -> TopKSvd {
         let ke = self.topk_per_freq(k);
-        let freqs = self.freqs();
         let opts = TopKOptions::default();
         let g = self.kernel.groups;
         // Forward-operator factor shapes; swapped at packaging when
         // transposed.
         let (fwd_rows, fwd_cols) = (self.kernel.c_out, self.block_cols * g);
-        let mut values = vec![0.0f64; freqs * ke];
-        let mut u: Vec<CMat> = (0..freqs).map(|_| CMat::zeros(fwd_rows, ke)).collect();
-        let mut v: Vec<CMat> = (0..freqs).map(|_| CMat::zeros(fwd_cols, ke)).collect();
+        let mut fa = FactorAssembly::new(self, ke, fwd_rows, fwd_cols);
         let kg = ke.min(self.group_rank());
         let mut fs = if g > 1 {
             Some(FactorScratch {
@@ -1556,8 +1621,7 @@ impl SpectralPlan {
                 }
                 let f = ki * self.mc + kj;
                 let (it, energy) = self.topk_triplet_at(
-                    ki, kj, ke, opts, &mut ws, &mut fs, f, &mut values, &mut u, &mut v,
-                    &mut health,
+                    ki, kj, ke, opts, &mut ws, &mut fs, f, &mut fa, &mut health,
                 );
                 iters += it;
                 total_energy += energy;
@@ -1567,11 +1631,7 @@ impl SpectralPlan {
                     // The mirror carries the same energy and values,
                     // conjugated factors.
                     total_energy += energy;
-                    values.copy_within(f * ke..(f + 1) * ke, fm * ke);
-                    let um = conj_factor(&u[f]);
-                    let vm = self.mirror_right_factor(&v[f], ki, kj);
-                    u[fm] = um;
-                    v[fm] = vm;
+                    fa.mirror_triplet(self, f, fm, ki, kj);
                 }
             });
         } else {
@@ -1580,8 +1640,7 @@ impl SpectralPlan {
                     let kj = self.serpentine_col(ki, step);
                     let f = ki * self.mc + kj;
                     let (it, energy) = self.topk_triplet_at(
-                        ki, kj, ke, opts, &mut ws, &mut fs, f, &mut values, &mut u, &mut v,
-                        &mut health,
+                        ki, kj, ke, opts, &mut ws, &mut fs, f, &mut fa, &mut health,
                     );
                     iters += it;
                     total_energy += energy;
@@ -1590,6 +1649,7 @@ impl SpectralPlan {
         }
         self.restore(ws);
         let (sym_rows, sym_cols) = self.sym_shape();
+        let FactorAssembly { values, u, v, .. } = fa;
         let sigma = self.topk_spectrum(k, values, health);
         let (u, v) = if self.kernel.transposed { (v, u) } else { (u, v) };
         TopKSvd {
@@ -1606,80 +1666,15 @@ impl SpectralPlan {
         }
     }
 
-    /// Execute the full dual grid into a caller-provided buffer
-    /// (`values_len()` long). After the first call on a plan this performs
-    /// no heap allocation in the serial path. Returns the sweep's
-    /// aggregated [`SpectrumHealth`].
-    pub fn execute_into(&self, out: &mut [f64]) -> SpectrumHealth {
-        self.execute_into_threads(self.effective_threads(), out)
-    }
-
-    /// [`Self::execute_into`] with an explicit worker count (0 = auto).
-    /// When the plan folds ([`crate::lfa::Fold::Auto`], the default) only
-    /// the fundamental domain of `θ → −θ` is solved — workers partition
-    /// its rows by solved-block count — and the conjugate half is filled
-    /// by mirroring ([`crate::lfa::spectrum::mirror_fill`]), roughly
-    /// halving the SVD work on every native path.
-    pub fn execute_into_threads(&self, threads: usize, out: &mut [f64]) -> SpectrumHealth {
-        assert_eq!(out.len(), self.values_len(), "output buffer length mismatch");
-        let srows = self.solved_rows();
-        let threads = super::resolve_threads(threads).min(srows.max(1));
-        let row_vals = self.mc * self.rank;
-        if !self.fold {
-            if threads <= 1 || self.nc <= 1 {
-                return self.execute_rows_pooled(0, self.nc, out);
-            }
-            let rows_per = self.nc.div_ceil(threads);
-            let agg = Mutex::new(SpectrumHealth::default());
-            let agg_ref = &agg;
-            std::thread::scope(|scope| {
-                let mut rest: &mut [f64] = out;
-                let mut lo = 0usize;
-                while lo < self.nc {
-                    let hi = (lo + rows_per).min(self.nc);
-                    let (head, tail) = std::mem::take(&mut rest).split_at_mut((hi - lo) * row_vals);
-                    rest = tail;
-                    scope.spawn(move || {
-                        let health = self.execute_rows_pooled(lo, hi, head);
-                        agg_ref.lock().unwrap().merge(&health);
-                    });
-                    lo = hi;
-                }
-            });
-            return agg.into_inner().unwrap();
-        }
-        // Folded: solve the fundamental domain, then mirror the rest.
-        let health = {
-            let solved = &mut out[..srows * row_vals];
-            if threads <= 1 || srows <= 1 {
-                self.execute_fold_rows_pooled(0, srows, solved)
-            } else {
-                let agg = Mutex::new(SpectrumHealth::default());
-                let agg_ref = &agg;
-                std::thread::scope(|scope| {
-                    let mut rest: &mut [f64] = solved;
-                    for (lo, hi) in self.fold_strips(threads) {
-                        let (head, tail) =
-                            std::mem::take(&mut rest).split_at_mut((hi - lo) * row_vals);
-                        rest = tail;
-                        scope.spawn(move || {
-                            let health = self.execute_fold_rows_pooled(lo, hi, head);
-                            agg_ref.lock().unwrap().merge(&health);
-                        });
-                    }
-                });
-                agg.into_inner().unwrap()
-            }
-        };
-        mirror_fill(self.nc, self.mc, self.rank, out);
-        health
-    }
-
     /// Execute the full dual grid and package the result as a [`Spectrum`]
     /// (carrying the sweep's aggregated [`SpectrumHealth`]).
     pub fn execute(&self) -> Spectrum {
         let mut values = vec![0.0f64; self.values_len()];
-        let health = self.execute_into(&mut values);
+        let (_, health) = self.execute_request_into(
+            SpectrumRequest::Full,
+            SweepOptions::default(),
+            &mut values,
+        );
         self.spectrum_from_values_health(SpectrumRequest::Full, values, health)
     }
 
@@ -1690,24 +1685,21 @@ impl SpectralPlan {
     /// factors (`U(−θ) = conj(U(θ))`, `V(−θ) = Pᵀ·conj(V(θ))` with the
     /// stride aliasing permutation `P`) — exact by the symbol symmetry, so
     /// spectral transfer functions reconstruct `A(−θ)` bit-for-bit from
-    /// them. Like [`Self::execute_topk_factors`], always f64 regardless of
-    /// the plan's [`Precision`].
+    /// them. Like [`Self::topk_svd`], always f64 regardless of the plan's
+    /// [`Precision`].
     /// Grouped kernels are decomposed through the *embedded*
     /// block-diagonal symbol (`c_out × s²·c_in_total`) so the factors come
     /// out in operator coordinates; transposed kernels decompose the
     /// forward symbol and swap the `U`/`V` roles at packaging
     /// (`Aᴴ = VΣUᴴ`).
-    pub fn execute_full(&self) -> FullSvd {
-        let freqs = self.freqs();
+    pub fn full_svd(&self) -> FullSvd {
         let r = self.rank;
         let g = self.kernel.groups;
         let (cin, cin_total) = (self.kernel.c_in, self.kernel.c_in_total());
         // Forward-operator symbol shape; factor roles swap at packaging
         // when transposed.
         let (fwd_rows, fwd_cols) = (self.kernel.c_out, self.block_cols * g);
-        let mut u: Vec<CMat> = Vec::with_capacity(freqs);
-        let mut v: Vec<CMat> = Vec::with_capacity(freqs);
-        let mut values = vec![0.0f64; freqs * r];
+        let mut fa = FactorAssembly::new(self, r, fwd_rows, fwd_cols);
         let mut ws = self.checkout();
         let mut block = CMat::zeros(fwd_rows, fwd_cols);
         let mut health = SpectrumHealth::default();
@@ -1720,11 +1712,7 @@ impl SpectralPlan {
                     let (mi, mj) = self.mirror_coords(ki, kj);
                     let fm = mi * self.mc + mj;
                     debug_assert!(fm < f, "mirror must already be decomposed");
-                    values.copy_within(fm * r..(fm + 1) * r, f * r);
-                    let um = conj_factor(&u[fm]);
-                    let vm = self.mirror_right_factor(&v[fm], mi, mj);
-                    u.push(um);
-                    v.push(vm);
+                    fa.mirror_triplet(self, fm, f, mi, mj);
                     continue;
                 }
                 if g == 1 {
@@ -1757,22 +1745,15 @@ impl SpectralPlan {
                 // certificate as-is.
                 let dec = jacobi_svd::svd(&block);
                 health.absorb(dec.cert.converged, dec.cert.restarted, 0, dec.cert.residual);
-                values[f * r..(f + 1) * r].copy_from_slice(&dec.s[..r]);
-                u.push(dec.u);
-                v.push(dec.v);
+                fa.slot(f).copy_from_slice(&dec.s[..r]);
+                fa.u[f] = dec.u;
+                fa.v[f] = dec.v;
             }
         }
         self.restore(ws);
         let (sym_rows, sym_cols) = self.sym_shape();
-        let sigma = Spectrum {
-            n: self.nc,
-            m: self.mc,
-            c_out: sym_rows,
-            c_in: sym_cols,
-            per_freq: r,
-            values,
-            health,
-        };
+        let FactorAssembly { values, u, v, .. } = fa;
+        let sigma = self.spectrum_from_values_health(SpectrumRequest::Full, values, health);
         let (u, v) = if self.kernel.transposed { (v, u) } else { (u, v) };
         FullSvd { n: self.nc, m: self.mc, c_out: sym_rows, c_in: sym_cols, u, sigma, v }
     }
@@ -1945,16 +1926,21 @@ mod tests {
         let k = ConvKernel::random_he(32, 32, 3, 3, &mut rng);
         let plan = SpectralPlan::new(&k, 6, 6, LfaOptions { threads: 1, ..Default::default() });
         let warm = plan.execute_topk(2);
-        let cold = plan.execute_topk_cold(2);
+        let mut cold_vals = vec![0.0f64; plan.topk_values_len(2)];
+        let (cold_iters, _) = plan.execute_request_into(
+            SpectrumRequest::TopK(2),
+            SweepOptions::cold(),
+            &mut cold_vals,
+        );
         let scale = warm.spectrum.sigma_max();
-        for (a, b) in warm.spectrum.values.iter().zip(&cold.spectrum.values) {
+        for (a, b) in warm.spectrum.values.iter().zip(&cold_vals) {
             assert!((a - b).abs() <= 2e-8 * scale, "{a} vs {b}");
         }
         assert!(
-            warm.iterations < cold.iterations,
+            warm.iterations < cold_iters,
             "warm {} vs cold {}",
             warm.iterations,
-            cold.iterations
+            cold_iters
         );
         assert!(warm.iterations_per_freq() >= 1.0);
     }
@@ -1966,7 +1952,11 @@ mod tests {
         let plan = SpectralPlan::new(&k, 12, 12, LfaOptions { threads: 1, ..Default::default() });
         let serial = plan.execute_topk(3);
         let mut threaded = vec![0.0f64; plan.topk_values_len(3)];
-        plan.execute_topk_into_threads(3, 3, true, &mut threaded);
+        plan.execute_request_into(
+            SpectrumRequest::TopK(3),
+            SweepOptions::with_threads(3),
+            &mut threaded,
+        );
         let scale = serial.spectrum.sigma_max();
         for (a, b) in serial.spectrum.values.iter().zip(&threaded) {
             assert!((a - b).abs() <= 2e-8 * scale, "{a} vs {b}");
@@ -1994,9 +1984,9 @@ mod tests {
         let mut rng = Pcg64::seeded(609);
         let k = ConvKernel::random_he(4, 3, 3, 3, &mut rng);
         let plan = SpectralPlan::new(&k, 5, 5, LfaOptions { threads: 1, ..Default::default() });
-        let fac = plan.execute_topk_factors(2);
+        let fac = plan.topk_svd(2);
         assert_eq!(fac.k, 2);
-        let full = plan.execute_full();
+        let full = plan.full_svd();
         for f in 0..plan.freqs() {
             // The truncated symbol must match the Eckart–Young truncation
             // built from the full SVD's top-2 triplets.
@@ -2029,11 +2019,13 @@ mod tests {
         assert_eq!(plan.request_values_len(SpectrumRequest::Full), plan.values_len());
         assert_eq!(plan.request_values_len(SpectrumRequest::TopK(2)), plan.topk_values_len(2));
         let mut full = vec![0.0f64; plan.values_len()];
-        let (full_iters, full_health) = plan.execute_request_into(SpectrumRequest::Full, &mut full);
+        let (full_iters, full_health) =
+            plan.execute_request_into(SpectrumRequest::Full, SweepOptions::default(), &mut full);
         assert_eq!(full_iters, 0);
         assert!(!full_health.is_degraded());
         let mut top = vec![0.0f64; plan.topk_values_len(1)];
-        let (top_iters, top_health) = plan.execute_request_into(SpectrumRequest::TopK(1), &mut top);
+        let (top_iters, top_health) =
+            plan.execute_request_into(SpectrumRequest::TopK(1), SweepOptions::default(), &mut top);
         assert!(top_iters > 0);
         assert!(!top_health.is_degraded());
         assert!((top[0] - full[0]).abs() <= 1e-8 * full[0].max(1.0));
@@ -2057,9 +2049,9 @@ mod tests {
             "every solved frequency must carry a verdict"
         );
         assert_eq!(h.degraded_freqs, 0);
-        let fac = plan.execute_topk_factors(2);
+        let fac = plan.topk_svd(2);
         assert!(!fac.sigma.health.is_degraded());
-        let dec = plan.execute_full();
+        let dec = plan.full_svd();
         assert_eq!(dec.sigma.health.degraded_freqs, 0);
         assert!(dec.sigma.health.converged_freqs >= 1);
     }
@@ -2112,7 +2104,7 @@ mod tests {
     #[test]
     fn folded_fold_rows_tiles_stitch_and_mirror_to_full_grid() {
         // The coordinator's folded tile shape: fundamental-domain row
-        // strips via execute_fold_rows_pooled + mirror_fill assembly.
+        // strips via execute_request_rows_pooled + mirror_fill assembly.
         let mut rng = Pcg64::seeded(614);
         let k = ConvKernel::random_he(3, 3, 3, 3, &mut rng);
         let plan = SpectralPlan::new(&k, 9, 5, LfaOptions { threads: 1, ..Default::default() });
@@ -2122,7 +2114,7 @@ mod tests {
         let mut stitched = vec![0.0f64; plan.values_len()];
         for (lo, hi) in [(0usize, 2usize), (2, 3), (3, srows)] {
             let chunk = &mut stitched[lo * 5 * r..hi * 5 * r];
-            plan.execute_fold_rows_pooled(lo, hi, chunk);
+            plan.execute_request_rows_pooled(SpectrumRequest::Full, lo, hi, chunk);
         }
         crate::lfa::spectrum::mirror_fill(9, 5, r, &mut stitched);
         assert_eq!(stitched, full.values, "folded tiles + mirror == folded execute");
@@ -2141,7 +2133,7 @@ mod tests {
                 LfaOptions { threads: 1, ..Default::default() },
             );
             assert!(plan.folded());
-            let svd = plan.execute_full();
+            let svd = plan.full_svd();
             let (nc, mc) = (n / s, m / s);
             for ki in 0..nc {
                 for kj in 0..mc {
@@ -2180,8 +2172,8 @@ mod tests {
                 s,
                 LfaOptions { threads: 1, folding: Fold::Off, ..Default::default() },
             );
-            let fa = folded.execute_topk_factors(2);
-            let fb = off.execute_topk_factors(2);
+            let fa = folded.topk_svd(2);
+            let fb = off.topk_svd(2);
             assert!(fa.iterations > 0 && fa.iterations <= fb.iterations);
             assert!((fa.total_energy - fb.total_energy).abs() <= 1e-9 * fb.total_energy);
             let scale = fb.sigma.sigma_max().max(1.0);
@@ -2272,6 +2264,149 @@ mod tests {
                 let gotb = grid.block(ki * 4 + kj);
                 assert!(gotb.max_abs_diff(&want) < 1e-12, "({ki},{kj})");
             }
+        }
+    }
+
+    /// A sink that only counts protocol events — proves `sweep_with`
+    /// delivers every canonical frequency exactly once and every
+    /// non-canonical frequency exactly one `mirror`.
+    struct CountSink {
+        scratch: Vec<f64>,
+        committed: Vec<u32>,
+        mirrored: Vec<u32>,
+    }
+
+    impl SpectrumSink for CountSink {
+        fn slot(&mut self, _f: usize) -> &mut [f64] {
+            &mut self.scratch
+        }
+        fn commit(&mut self, f: usize, _ki: usize, _kj: usize) {
+            self.committed[f] += 1;
+        }
+        fn mirror(&mut self, src: usize, dst: usize) {
+            assert!(self.committed[src] == 1 || self.mirrored[src] == 1, "mirror of unsolved {src}");
+            self.mirrored[dst] += 1;
+        }
+    }
+
+    #[test]
+    fn sweep_with_covers_every_frequency_exactly_once() {
+        let mut rng = Pcg64::seeded(620);
+        let k = ConvKernel::random_he(3, 2, 3, 3, &mut rng);
+        for &(n, m) in &[(6usize, 6usize), (5, 7), (4, 4), (1, 1)] {
+            for fold in [Fold::Auto, Fold::Off] {
+                let plan = SpectralPlan::new(
+                    &k,
+                    n,
+                    m,
+                    LfaOptions { threads: 1, folding: fold, ..Default::default() },
+                );
+                let mut sink = CountSink {
+                    scratch: vec![0.0f64; plan.rank()],
+                    committed: vec![0u32; plan.freqs()],
+                    mirrored: vec![0u32; plan.freqs()],
+                };
+                plan.sweep_with(SpectrumRequest::Full, &mut sink);
+                let solved: u32 = sink.committed.iter().sum();
+                assert_eq!(solved as usize, plan.solved_freqs(), "{n}x{m} {fold:?}");
+                for f in 0..plan.freqs() {
+                    assert_eq!(
+                        sink.committed[f] + sink.mirrored[f],
+                        1,
+                        "{n}x{m} {fold:?} f={f}: each frequency exactly once"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn density_census_matches_full_sweep() {
+        let mut rng = Pcg64::seeded(621);
+        let k = ConvKernel::random_he(4, 3, 3, 3, &mut rng);
+        for &(n, m) in &[(6usize, 6usize), (5, 7)] {
+            for fold in [Fold::Auto, Fold::Off] {
+                let plan = SpectralPlan::new(
+                    &k,
+                    n,
+                    m,
+                    LfaOptions { threads: 1, folding: fold, ..Default::default() },
+                );
+                let full = plan.execute();
+                let d = plan.density(DensityRequest { bins: 32, sample: 1 });
+                assert_eq!(d.sample, 1);
+                assert_eq!(d.covered_freqs, d.total_freqs, "census covers the grid");
+                assert_eq!(d.sampled_fraction(), 1.0);
+                assert_eq!(d.cdf_epsilon(), 0.0, "census carries no sampling error");
+                assert_eq!(
+                    d.count(),
+                    (plan.freqs() * plan.rank()) as u64,
+                    "census bins every singular value"
+                );
+                let scale = full.sigma_max().max(1.0);
+                assert!((d.sigma_max - full.sigma_max()).abs() <= 1e-8 * scale);
+                assert!((d.sigma_min_sampled - full.sigma_min()).abs() <= 1e-12 * scale);
+                // The histogram CDF and the exact sorted values must agree
+                // to within one bin width at every quantile.
+                let sorted = full.sorted_desc();
+                let bin_w = d.hi / 32.0;
+                for &q in &[0.1f64, 0.25, 0.5, 0.75, 0.9] {
+                    let est = d.quantile(q);
+                    let idx = ((1.0 - q) * (sorted.len() - 1) as f64).round() as usize;
+                    let exact = sorted[idx];
+                    assert!(
+                        (est - exact).abs() <= bin_w + 1e-9 * scale,
+                        "{n}x{m} {fold:?} q={q}: {est} vs {exact}"
+                    );
+                }
+                assert!(!d.is_degraded());
+            }
+        }
+    }
+
+    #[test]
+    fn density_sampling_covers_sublattice_with_error_bars() {
+        let mut rng = Pcg64::seeded(622);
+        let k = ConvKernel::random_he(4, 4, 3, 3, &mut rng);
+        let plan = SpectralPlan::new(&k, 16, 16, LfaOptions { threads: 1, ..Default::default() });
+        let census = plan.density(DensityRequest { bins: 48, sample: 1 });
+        let sampled = plan.density(DensityRequest { bins: 48, sample: 2 });
+        assert_eq!(sampled.sample, 2);
+        assert!(sampled.solved_freqs < census.solved_freqs);
+        assert!(sampled.covered_freqs < sampled.total_freqs);
+        let frac = sampled.sampled_fraction();
+        assert!(frac > 0.15 && frac < 0.5, "quarter-ish sub-lattice, got {frac}");
+        assert!(sampled.cdf_epsilon() > 0.0, "sampling must report an error bar");
+        // Exact extremes survive sampling (the top-1 pass sweeps the whole
+        // grid), and bulk quantiles stay within the error bar's bounds.
+        let scale = census.sigma_max.max(1.0);
+        assert!((sampled.sigma_max - census.sigma_max).abs() <= 1e-8 * scale);
+        for &q in &[0.25f64, 0.5, 0.75] {
+            let (lo, hi) = sampled.quantile_bounds(q);
+            assert!(lo <= hi);
+            let exact = census.quantile(q);
+            let slack = 2.0 * census.hi / 48.0 + 1e-9 * scale;
+            assert!(
+                exact >= lo - slack && exact <= hi + slack,
+                "q={q}: census {exact} outside sampled [{lo}, {hi}]"
+            );
+        }
+        // Threaded accumulation covers the same sub-lattice and lands on
+        // the same distribution (bin edges may shift by the ~1e-10 σ_max
+        // difference between warm-start strip partitions).
+        let threaded = plan.density_with(
+            DensityRequest { bins: 48, sample: 2 },
+            SweepOptions::with_threads(3),
+        );
+        assert_eq!(threaded.covered_freqs, sampled.covered_freqs);
+        assert_eq!(threaded.solved_freqs, sampled.solved_freqs);
+        assert!((threaded.sigma_max - sampled.sigma_max).abs() <= 1e-8 * scale);
+        for &q in &[0.25f64, 0.5, 0.75] {
+            assert!(
+                (threaded.quantile(q) - sampled.quantile(q)).abs()
+                    <= 1.5 * sampled.hi / 48.0 + 1e-9 * scale,
+                "q={q}"
+            );
         }
     }
 }

@@ -1,0 +1,335 @@
+//! Pluggable per-frequency consumers of the engine's unified sweep.
+//!
+//! [`SpectralPlan::sweep_with`](super::SpectralPlan::sweep_with) (and the
+//! `execute*` entry points built on the same internal driver) solves one
+//! frequency at a time and hands each result to a [`SpectrumSink`]. The
+//! sink owns *what happens to* a per-frequency result; the sweep owns
+//! everything else — visit order, fold/mirror bookkeeping, precision
+//! tiers, the escalation ladder, workspace pooling. The contract per
+//! canonical frequency `f = ki·mc + kj` is:
+//!
+//! ```text
+//!   sweep                           sink
+//!   ─────                           ────
+//!   slot(f) ──────────────────────▶ &mut [f64]   (preallocated, per_freq long)
+//!   … solver writes σ descending …
+//!   commit(f, ki, kj) ────────────▶ result at f is final
+//!   mirror(src, dst) ─────────────▶ dst is a conjugate mirror of src
+//! ```
+//!
+//! `mirror` is only emitted on folded plans, exactly once per
+//! non-canonical frequency (σ(−θ) = σ(θ) for real kernels). A sink may
+//! treat it as a copy ([`FullAssembly`], [`TopKAssembly`]), a weighted
+//! pre-count at `commit` time ([`DensitySink`]), or ignore it entirely.
+//! The sweep performs **zero heap allocation per frequency** — `slot`
+//! must hand back preallocated storage, which is what keeps the sink
+//! indirection free (see `tests/engine_alloc.rs`).
+//!
+//! The built-in sinks reproduce the engine's historical outputs
+//! bit-identically; [`DensitySink`] is the first genuinely new consumer
+//! (streaming singular-value histograms). Adding another consumer is one
+//! `impl SpectrumSink` — not a driver fork.
+
+use super::plan::SpectralPlan;
+use super::DensityRequest;
+use crate::lfa::spectrum::{conj_factor, SpectralDensity, SpectrumHealth};
+use crate::numeric::CMat;
+
+/// A per-frequency consumer of the unified sweep. See the module docs for
+/// the `slot → commit → mirror` protocol and its guarantees.
+pub trait SpectrumSink {
+    /// Storage for frequency `f`'s singular values (`values_per_freq`
+    /// long). The solver writes the descending values straight into this
+    /// slice — the sink must not allocate here (the sweep's hot loop is
+    /// allocation-free).
+    fn slot(&mut self, f: usize) -> &mut [f64];
+
+    /// Frequency `f = ki·mc + kj` has been solved; the values last written
+    /// through [`Self::slot`] are final. Streaming sinks fold the slot
+    /// into their state here; assembly sinks that hand out in-place slices
+    /// need do nothing.
+    fn commit(&mut self, f: usize, ki: usize, kj: usize);
+
+    /// Frequency `dst` is the conjugate mirror of already-committed
+    /// frequency `src` (`σ(dst) = σ(src)`). Emitted only on folded plans,
+    /// exactly once per non-canonical frequency.
+    fn mirror(&mut self, src: usize, dst: usize);
+}
+
+/// Assembles a full-spectrum sweep into a caller-provided frequency-major
+/// buffer — the sink behind every `SpectrumRequest::Full` execution and
+/// the coordinator's full tiles. `slot` hands out the destination slice
+/// itself, so committing is free and the output is written exactly once,
+/// bit-identical to the historical row drivers.
+pub struct FullAssembly<'a> {
+    out: &'a mut [f64],
+    per_freq: usize,
+    /// Global frequency index of `out[0]` (`row_lo · mc`): strips index
+    /// relative to their own start.
+    base: usize,
+}
+
+impl<'a> FullAssembly<'a> {
+    /// Assembly over solved rows starting at `row_lo`, writing into `out`
+    /// (`rows · mc · rank` values).
+    pub fn strip(plan: &SpectralPlan, row_lo: usize, out: &'a mut [f64]) -> Self {
+        Self { per_freq: plan.rank(), base: row_lo * plan.coarse_cols(), out }
+    }
+}
+
+impl SpectrumSink for FullAssembly<'_> {
+    #[inline]
+    fn slot(&mut self, f: usize) -> &mut [f64] {
+        let r = self.per_freq;
+        let o = (f - self.base) * r;
+        &mut self.out[o..o + r]
+    }
+
+    #[inline]
+    fn commit(&mut self, _f: usize, _ki: usize, _kj: usize) {}
+
+    #[inline]
+    fn mirror(&mut self, src: usize, dst: usize) {
+        let r = self.per_freq;
+        let s = (src - self.base) * r;
+        let d = (dst - self.base) * r;
+        self.out.copy_within(s..s + r, d);
+    }
+}
+
+/// [`FullAssembly`]'s top-k twin: `k` values per frequency
+/// (`plan.topk_per_freq(k)`), same in-place contract, behind every
+/// `SpectrumRequest::TopK` execution and the coordinator's top-k tiles.
+pub struct TopKAssembly<'a> {
+    out: &'a mut [f64],
+    per_freq: usize,
+    base: usize,
+}
+
+impl<'a> TopKAssembly<'a> {
+    /// Assembly over solved rows starting at `row_lo`, writing into `out`
+    /// (`rows · mc · topk_per_freq(k)` values).
+    pub fn strip(plan: &SpectralPlan, k: usize, row_lo: usize, out: &'a mut [f64]) -> Self {
+        Self { per_freq: plan.topk_per_freq(k), base: row_lo * plan.coarse_cols(), out }
+    }
+}
+
+impl SpectrumSink for TopKAssembly<'_> {
+    #[inline]
+    fn slot(&mut self, f: usize) -> &mut [f64] {
+        let r = self.per_freq;
+        let o = (f - self.base) * r;
+        &mut self.out[o..o + r]
+    }
+
+    #[inline]
+    fn commit(&mut self, _f: usize, _ki: usize, _kj: usize) {}
+
+    #[inline]
+    fn mirror(&mut self, src: usize, dst: usize) {
+        let r = self.per_freq;
+        let s = (src - self.base) * r;
+        let d = (dst - self.base) * r;
+        self.out.copy_within(s..s + r, d);
+    }
+}
+
+/// The factor paths' sink: owns the values buffer **and** the per-frequency
+/// `U`/`V` factor matrices the SVD paths
+/// ([`SpectralPlan::full_svd`](super::SpectralPlan::full_svd),
+/// [`SpectralPlan::topk_svd`](super::SpectralPlan::topk_svd)) produce.
+/// The `SpectrumSink` impl covers the values plane; factor mirroring —
+/// conjugation plus the stride aliasing permutation on `V` — needs the
+/// plan's geometry and goes through [`Self::mirror_triplet`].
+pub struct FactorAssembly {
+    pub(crate) per_freq: usize,
+    /// Frequency-major singular values, `freqs · per_freq` long.
+    pub(crate) values: Vec<f64>,
+    /// Per-frequency left factors.
+    pub(crate) u: Vec<CMat>,
+    /// Per-frequency right factors.
+    pub(crate) v: Vec<CMat>,
+}
+
+impl FactorAssembly {
+    /// Factor storage for the whole dual grid: `per_freq` values and
+    /// `rows×per_freq` / `cols×per_freq` factor matrices per frequency.
+    /// Fresh allocations by necessity — the factors are the output.
+    pub fn new(plan: &SpectralPlan, per_freq: usize, rows: usize, cols: usize) -> Self {
+        let freqs = plan.freqs();
+        Self {
+            per_freq,
+            values: vec![0.0f64; freqs * per_freq],
+            u: (0..freqs).map(|_| CMat::zeros(rows, per_freq)).collect(),
+            v: (0..freqs).map(|_| CMat::zeros(cols, per_freq)).collect(),
+        }
+    }
+
+    /// Mirror the whole triplet of canonical frequency `src` (coords
+    /// `(ki, kj)`) onto its conjugate partner `dst`: values copied,
+    /// `U(−θ) = conj(U(θ))`, `V(−θ) = Pᵀ·conj(V(θ))` with the stride
+    /// aliasing permutation `P` — exact by the symbol symmetry.
+    pub fn mirror_triplet(
+        &mut self,
+        plan: &SpectralPlan,
+        src: usize,
+        dst: usize,
+        ki: usize,
+        kj: usize,
+    ) {
+        let r = self.per_freq;
+        self.values.copy_within(src * r..(src + 1) * r, dst * r);
+        self.u[dst] = conj_factor(&self.u[src]);
+        self.v[dst] = plan.mirror_right_factor(&self.v[src], ki, kj);
+    }
+}
+
+impl SpectrumSink for FactorAssembly {
+    #[inline]
+    fn slot(&mut self, f: usize) -> &mut [f64] {
+        let r = self.per_freq;
+        &mut self.values[f * r..(f + 1) * r]
+    }
+
+    #[inline]
+    fn commit(&mut self, _f: usize, _ki: usize, _kj: usize) {}
+
+    /// Values-plane mirror only; the factor sweeps follow up with
+    /// [`Self::mirror_triplet`] for the vectors.
+    #[inline]
+    fn mirror(&mut self, src: usize, dst: usize) {
+        let r = self.per_freq;
+        self.values.copy_within(src * r..(src + 1) * r, dst * r);
+    }
+}
+
+/// Streaming singular-value **histogram** — the first post-refactor sink,
+/// and the engine's answer to the asymptotic-distribution workload (Yi
+/// 2020): the bulk shape of the spectrum without materializing
+/// `n·m·rank` values. Each committed frequency's values are binned over
+/// `[0, hi]` immediately and only `O(bins)` state is retained.
+///
+/// Folding never biases the histogram: every committed canonical
+/// frequency is weighted by its conjugate-mirror multiplicity (2 for a
+/// paired frequency, 1 for a self-paired one), so [`Self::mirror`] is a
+/// no-op and the weighted counts sum to the full-grid census. This also
+/// makes the sink correct under coarse sub-lattice sampling, where
+/// mirrors of sampled frequencies are never visited at all.
+pub struct DensitySink {
+    folded: bool,
+    nc: usize,
+    mc: usize,
+    /// Histogram upper edge (the exact σ_max from the extremes pass);
+    /// values ≥ `hi` clamp into the last bin.
+    hi: f64,
+    bins: Vec<u64>,
+    /// Per-frequency slot the solver writes into (`rank` long) — reused
+    /// across frequencies, folded into `bins` at commit.
+    scratch: Vec<f64>,
+    /// Smallest committed value (the sampled σ_min proxy).
+    min: f64,
+    /// Frequencies actually solved.
+    solved: u64,
+    /// Frequencies accounted for including mirror weights.
+    covered: u64,
+}
+
+impl DensitySink {
+    /// A histogram sink for `plan` with `bins` bins over `[0, hi]`.
+    pub fn new(plan: &SpectralPlan, bins: usize, hi: f64) -> Self {
+        Self {
+            folded: plan.folded(),
+            nc: plan.coarse_rows(),
+            mc: plan.coarse_cols(),
+            hi,
+            bins: vec![0u64; bins.max(1)],
+            scratch: vec![0.0f64; plan.rank()],
+            min: f64::INFINITY,
+            solved: 0,
+            covered: 0,
+        }
+    }
+
+    /// How many grid frequencies `(ki, kj)` accounts for: itself plus its
+    /// conjugate mirror when folding pairs them.
+    #[inline]
+    fn weight(&self, ki: usize, kj: usize) -> u64 {
+        if !self.folded {
+            return 1;
+        }
+        let (mi, mj) = ((self.nc - ki) % self.nc, (self.mc - kj) % self.mc);
+        if (mi, mj) == (ki, kj) {
+            1
+        } else {
+            2
+        }
+    }
+
+    /// Fold another worker's partial histogram into this one (counts add,
+    /// min mins) — the threaded density sweep's reduction.
+    pub fn merge(&mut self, other: &DensitySink) {
+        debug_assert_eq!(self.bins.len(), other.bins.len());
+        for (a, b) in self.bins.iter_mut().zip(&other.bins) {
+            *a += b;
+        }
+        if other.min < self.min {
+            self.min = other.min;
+        }
+        self.solved += other.solved;
+        self.covered += other.covered;
+    }
+
+    /// Package the accumulated histogram as a [`SpectralDensity`] carrying
+    /// the plan's grid metadata and the sweep's effort/health ledger.
+    pub(crate) fn into_density(
+        self,
+        plan: &SpectralPlan,
+        req: DensityRequest,
+        sigma_max: f64,
+        iterations: u64,
+        health: SpectrumHealth,
+    ) -> SpectralDensity {
+        SpectralDensity {
+            n: plan.coarse_rows(),
+            m: plan.coarse_cols(),
+            per_freq: plan.rank(),
+            bins: self.bins,
+            hi: self.hi,
+            sigma_max,
+            sigma_min_sampled: if self.min.is_finite() { self.min } else { 0.0 },
+            solved_freqs: self.solved,
+            covered_freqs: self.covered,
+            total_freqs: plan.freqs() as u64,
+            sample: req.sample.max(1),
+            iterations,
+            health,
+        }
+    }
+}
+
+impl SpectrumSink for DensitySink {
+    #[inline]
+    fn slot(&mut self, _f: usize) -> &mut [f64] {
+        &mut self.scratch
+    }
+
+    fn commit(&mut self, _f: usize, ki: usize, kj: usize) {
+        let w = self.weight(ki, kj);
+        self.solved += 1;
+        self.covered += w;
+        let nb = self.bins.len();
+        let inv = if self.hi > 0.0 { nb as f64 / self.hi } else { 0.0 };
+        for i in 0..self.scratch.len() {
+            let v = self.scratch[i];
+            if v < self.min {
+                self.min = v;
+            }
+            let b = ((v * inv) as usize).min(nb - 1);
+            self.bins[b] += w;
+        }
+    }
+
+    /// Mirrors are pre-counted by [`Self::weight`] at commit time.
+    #[inline]
+    fn mirror(&mut self, _src: usize, _dst: usize) {}
+}

@@ -17,7 +17,7 @@ pub mod stride;
 pub mod svd;
 pub mod symbol;
 
-pub use spectrum::{FullSvd, Spectrum, SpectrumHealth, TopKSvd};
+pub use spectrum::{FullSvd, SpectralDensity, Spectrum, SpectrumHealth, TopKSvd};
 pub use stride::{strided_plan, strided_singular_values, strided_symbol_at};
 pub use svd::{
     singular_values, singular_values_timed, svd_full, tile_singular_values, BlockSolver, Fold,

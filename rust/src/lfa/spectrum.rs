@@ -329,7 +329,7 @@ impl FullSvd {
 /// Partial (top-k) SVD of a convolution: per frequency, the `k` largest
 /// singular values with their left/right singular vectors — the output of
 /// the engine's warm-started Krylov (Lanczos) sweep
-/// (`SpectralPlan::execute_topk_factors`). The rank-`k` truncation
+/// (`SpectralPlan::topk_svd`). The rank-`k` truncation
 /// `U_k Σ_k V_kᴴ` it spans is the Eckart–Young-optimal rank-`k`
 /// approximation of each symbol, which is all that low-rank compression
 /// needs — at `O(n·m·c²k)` instead of the full `O(n·m·c³)`.
@@ -368,6 +368,145 @@ impl TopKSvd {
             }
         }
         us.matmul(&v.hermitian())
+    }
+}
+
+/// Streaming singular-value **density**: a weighted histogram of the
+/// operator's `n·m·rank` singular values over `[0, σ_max]`, produced by
+/// the engine's density sweep (`SpectralPlan::density`) without ever
+/// materializing the full spectrum — `O(bins)` state for an
+/// `O(n·m·rank)`-value population, the regime the asymptotic-distribution
+/// results (Yi 2020) address.
+///
+/// **Accuracy contract.** `sigma_max` is *exact* (a dedicated warm top-1
+/// Krylov pass over the whole dual grid, top-k-grade accuracy). The bulk
+/// is a census when `sample == 1`; for `sample > 1` only every
+/// `sample`-th frequency row/column is solved and the histogram is an
+/// estimate whose distribution-free 95% CDF error band is
+/// [`Self::cdf_epsilon`] (Dvoretzky–Kiefer–Wolfowitz on the binned
+/// count). `sigma_min_sampled` is the smallest *sampled* value — a Krylov
+/// extremes pass cannot certify the small end, so it is labeled sampled
+/// even in a census of a folded grid's solved half (where it is exact by
+/// the mirror symmetry `σ(−θ) = σ(θ)`).
+#[derive(Clone, Debug)]
+pub struct SpectralDensity {
+    /// Coarse dual-grid rows.
+    pub n: usize,
+    /// Coarse dual-grid columns.
+    pub m: usize,
+    /// Singular values per frequency (the block rank).
+    pub per_freq: usize,
+    /// Weighted counts over `bins.len()` equal-width bins spanning
+    /// `[0, hi]`; values ≥ `hi` clamp into the last bin.
+    pub bins: Vec<u64>,
+    /// Histogram upper edge (= the exact `sigma_max`).
+    pub hi: f64,
+    /// Exact largest singular value (dedicated whole-grid top-1 pass).
+    pub sigma_max: f64,
+    /// Smallest singular value seen among sampled frequencies.
+    pub sigma_min_sampled: f64,
+    /// Frequencies actually solved by the density sweep.
+    pub solved_freqs: u64,
+    /// Frequencies accounted for in `bins` including conjugate-mirror
+    /// weights (`== n·m` for a census).
+    pub covered_freqs: u64,
+    /// Total dual-grid frequencies (`n·m`).
+    pub total_freqs: u64,
+    /// Sub-lattice step the sweep used (1 = census).
+    pub sample: u32,
+    /// Solver iteration steps spent (extremes pass).
+    pub iterations: u64,
+    /// Aggregated convergence evidence from both passes — the same health
+    /// rules as any spectrum (degraded densities are refused by caches).
+    pub health: SpectrumHealth,
+}
+
+impl SpectralDensity {
+    /// Total weighted count of binned singular values
+    /// (`covered_freqs · per_freq`).
+    pub fn count(&self) -> u64 {
+        self.bins.iter().sum()
+    }
+
+    /// Fraction of the dual grid the histogram accounts for (mirror
+    /// weights included): 1.0 for a census.
+    pub fn sampled_fraction(&self) -> f64 {
+        if self.total_freqs == 0 {
+            return 1.0;
+        }
+        self.covered_freqs as f64 / self.total_freqs as f64
+    }
+
+    /// Distribution-free 95% error band on the empirical CDF when the
+    /// grid was sub-sampled (Dvoretzky–Kiefer–Wolfowitz:
+    /// `ε = √(ln 40 / 2N)` for `N` sampled values): the true CDF lies
+    /// within `±ε` of the histogram's, so quantiles are bracketed by
+    /// [`Self::quantile_bounds`]. A census has no sampling error — 0.0.
+    pub fn cdf_epsilon(&self) -> f64 {
+        if self.covered_freqs >= self.total_freqs {
+            return 0.0;
+        }
+        let n = self.count();
+        if n == 0 {
+            return 1.0;
+        }
+        (40.0f64.ln() / (2.0 * n as f64)).sqrt()
+    }
+
+    /// The `q`-quantile (`q` from the bottom: `quantile(0.5)` is the
+    /// median singular value) estimated from the histogram by a CDF walk
+    /// with linear interpolation inside the crossing bin — accurate to
+    /// one bin width (`hi / bins.len()`). The clamped ends return the
+    /// known support directly — `0.0` and `hi` (the *exact* σ_max from
+    /// the extremes pass) — rather than the extreme *sampled* bins, so
+    /// [`Self::quantile_bounds`] stays an honest bracket when `q ± ε`
+    /// runs off either end: past the last sampled value the empirical
+    /// CDF carries no information, but no singular value exceeds σ_max.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 || self.bins.is_empty() {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        if q <= 0.0 {
+            return 0.0;
+        }
+        if q >= 1.0 {
+            return self.hi;
+        }
+        let width = self.hi / self.bins.len() as f64;
+        let target = q * total as f64;
+        let mut below = 0u64;
+        for (b, &c) in self.bins.iter().enumerate() {
+            let upto = below + c;
+            if (upto as f64) >= target {
+                let frac = if c == 0 { 1.0 } else { (target - below as f64) / c as f64 };
+                return (b as f64 + frac.clamp(0.0, 1.0)) * width;
+            }
+            below = upto;
+        }
+        self.hi
+    }
+
+    /// Quantile bracket honoring the sampling error bar:
+    /// `(quantile(q − ε), quantile(q + ε))` with `ε =`
+    /// [`Self::cdf_epsilon`]. For a census both ends collapse onto
+    /// [`Self::quantile`].
+    pub fn quantile_bounds(&self, q: f64) -> (f64, f64) {
+        let eps = self.cdf_epsilon();
+        (self.quantile(q - eps), self.quantile(q + eps))
+    }
+
+    /// Whether any contributing frequency ended degraded — same rule as
+    /// [`Spectrum`]'s ([`SpectrumHealth::is_degraded`]).
+    pub fn is_degraded(&self) -> bool {
+        self.health.is_degraded()
+    }
+
+    /// Approximate heap + inline footprint, the unit the result caches
+    /// budget by.
+    pub fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<Self>() + self.bins.len() * std::mem::size_of::<u64>()
     }
 }
 
@@ -552,5 +691,62 @@ mod tests {
                 assert!((got - want).abs() == 0.0, "({i},{j})");
             }
         }
+    }
+
+    fn density(bins: Vec<u64>, hi: f64, covered: u64, total: u64) -> SpectralDensity {
+        let count: u64 = bins.iter().sum();
+        SpectralDensity {
+            n: 1,
+            m: total as usize,
+            per_freq: if covered > 0 { (count / covered.max(1)) as usize } else { 1 },
+            bins,
+            hi,
+            sigma_max: hi,
+            sigma_min_sampled: 0.0,
+            solved_freqs: covered,
+            covered_freqs: covered,
+            total_freqs: total,
+            sample: if covered >= total { 1 } else { 2 },
+            iterations: 0,
+            health: SpectrumHealth::default(),
+        }
+    }
+
+    #[test]
+    fn density_quantiles_walk_the_cdf() {
+        // 4 bins over [0, 8]: counts 1, 1, 1, 1 — a uniform staircase.
+        let d = density(vec![1, 1, 1, 1], 8.0, 4, 4);
+        assert_eq!(d.count(), 4);
+        assert_eq!(d.sampled_fraction(), 1.0);
+        assert_eq!(d.cdf_epsilon(), 0.0, "census has no sampling error");
+        assert_eq!(d.quantile(0.0), 0.0);
+        assert_eq!(d.quantile(1.0), 8.0);
+        // quantile(0.5) → 2 of 4 values, crossing ends exactly at bin 1's
+        // upper edge: (1 + 1.0)·2.0 = 4.0.
+        assert!((d.quantile(0.5) - 4.0).abs() < 1e-12);
+        assert!((d.quantile(0.25) - 2.0).abs() < 1e-12);
+        let (lo, hi) = d.quantile_bounds(0.5);
+        assert_eq!((lo, hi), (d.quantile(0.5), d.quantile(0.5)));
+    }
+
+    #[test]
+    fn density_sampling_reports_dkw_band() {
+        let d = density(vec![10, 10, 10, 10], 4.0, 20, 80);
+        assert_eq!(d.sampled_fraction(), 0.25);
+        let eps = d.cdf_epsilon();
+        let want = (40.0f64.ln() / 80.0).sqrt();
+        assert!((eps - want).abs() < 1e-12, "{eps} vs {want}");
+        let (lo, hi) = d.quantile_bounds(0.5);
+        assert!(lo < d.quantile(0.5) && d.quantile(0.5) < hi);
+        assert!(!d.is_degraded());
+        assert!(d.approx_bytes() >= 4 * 8);
+    }
+
+    #[test]
+    fn density_empty_and_zero_edge_cases() {
+        let d = density(vec![0, 0], 0.0, 0, 4);
+        assert_eq!(d.count(), 0);
+        assert_eq!(d.quantile(0.5), 0.0);
+        assert_eq!(d.cdf_epsilon(), 1.0, "no data: the band is vacuous");
     }
 }

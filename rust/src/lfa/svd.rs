@@ -13,7 +13,7 @@
 use super::spectrum::{FullSvd, Spectrum, SpectrumHealth};
 use super::symbol::{BlockLayout, SymbolGrid};
 use crate::conv::ConvKernel;
-use crate::engine::{SpectralPlan, Workspace};
+use crate::engine::{SpectralPlan, SpectrumRequest, Workspace};
 use crate::linalg::jacobi_svd;
 use crate::numeric::{C64, CMat};
 use std::sync::Mutex;
@@ -266,7 +266,7 @@ fn svd_pass_range(
 
 /// Full SVD with per-frequency factors `U_k, Σ_k, V_k`.
 pub fn svd_full(kernel: &ConvKernel, n: usize, m: usize, opts: LfaOptions) -> FullSvd {
-    SpectralPlan::new(kernel, n, m, opts).execute_full()
+    SpectralPlan::new(kernel, n, m, opts).full_svd()
 }
 
 /// Full SVD from an existing symbol grid.
@@ -321,11 +321,14 @@ pub fn tile_singular_values(
     row_hi: usize,
     solver: BlockSolver,
 ) -> Vec<f64> {
-    let plan =
-        SpectralPlan::new(kernel, n, m, LfaOptions { solver, threads: 1, ..Default::default() });
+    // Folding is off: a tile is an arbitrary row range of the full grid,
+    // and its caller stitches tiles without a mirror pass — every column
+    // of every requested row must be solved directly.
+    let opts = LfaOptions { solver, threads: 1, folding: Fold::Off, ..Default::default() };
+    let plan = SpectralPlan::new(kernel, n, m, opts);
     let r = kernel.c_out.min(kernel.c_in_total());
     let mut values = vec![0.0f64; (row_hi - row_lo) * m * r];
-    plan.execute_rows_pooled(row_lo, row_hi, &mut values);
+    plan.execute_request_rows_pooled(SpectrumRequest::Full, row_lo, row_hi, &mut values);
     values
 }
 

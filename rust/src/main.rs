@@ -13,13 +13,16 @@ use conv_svd_lfa::baselines::{explicit_svd, fft_svd, FftLayoutPolicy};
 use conv_svd_lfa::cli::{Cli, HELP};
 use conv_svd_lfa::conv::{Boundary, ConvKernel};
 use conv_svd_lfa::coordinator::{Backend, ServiceConfig, SpectralService};
-use conv_svd_lfa::engine::{ModelPlan, SpectralCache, SpectrumRequest};
-use conv_svd_lfa::error::{Error, Result};
+use conv_svd_lfa::engine::{DensityRequest, ModelPlan, SpectralCache, SpectrumRequest};
+use conv_svd_lfa::error::Result;
 use conv_svd_lfa::lfa::{self, BlockSolver, Fold, LfaOptions, Precision};
 use conv_svd_lfa::model::zoo;
 use conv_svd_lfa::model::ModelConfig;
 use conv_svd_lfa::numeric::Pcg64;
-use conv_svd_lfa::report::{commas, secs, Table};
+use conv_svd_lfa::report::{
+    cache_line, channels_desc, commas, density_table, disk_line, freqs_solved_line,
+    model_health_report, secs, Table,
+};
 use conv_svd_lfa::runtime::load_manifest;
 #[cfg(feature = "pjrt")]
 use conv_svd_lfa::runtime::PjrtEngine;
@@ -152,58 +155,6 @@ fn load_model(name_or_path: &str) -> Result<ModelConfig> {
     ))
 }
 
-/// The truthful `frequencies solved: S/T …` report line shared by both
-/// audit commands: `S` sums what each layer *actually* decomposed —
-/// folded native layers their fundamental domain, PJRT-routed/unfolded
-/// layers the full grid, cache-served layers nothing — so mixed runs
-/// report a correct ratio instead of assuming every layer folded. The
-/// label is derived from per-layer *outcomes*, not configuration flags:
-/// `folded_layers` counts layers that actually solved a folded domain,
-/// `cached_layers` counts layers served from the result cache, and the
-/// saving is attributed to whichever contributed ("fold", "cache", or
-/// "fold + cache"). `S == T` means nothing was reduced — every solved
-/// layer swept its full grid (fold disabled or PJRT-routed).
-fn freqs_solved_line(solved: usize, total: usize, cached_layers: usize, folded: usize) -> String {
-    if solved == 0 && total > 0 {
-        format!("frequencies solved: 0/{total} (all served from cache)")
-    } else if solved == total {
-        // The outcome, not the flag: every solved layer swept its full
-        // grid — because folding was off, or because PJRT routing (which
-        // always sweeps the full grid) made it inapplicable.
-        format!("frequencies solved: {total}/{total} (full grid)")
-    } else {
-        let label = match (folded > 0, cached_layers > 0) {
-            (true, true) => "fold + cache",
-            (false, true) => "cache",
-            _ => "fold",
-        };
-        format!(
-            "frequencies solved: {solved}/{total} ({label} {:.2}x)",
-            total as f64 / solved.max(1) as f64
-        )
-    }
-}
-
-/// The `c` column of the audit-model tables: operator channel dims —
-/// total input width (grouped kernels store the per-group width), the
-/// adjoint's swapped shape for transposed layers — plus a structure tag:
-/// `g4` grouped, `d2` dilated, `T` transposed.
-fn channels_desc(k: &ConvKernel) -> String {
-    let (ci, co) =
-        if k.transposed { (k.c_out, k.c_in_total()) } else { (k.c_in_total(), k.c_out) };
-    let mut s = format!("{ci}→{co}");
-    if k.groups > 1 {
-        s.push_str(&format!(" g{}", k.groups));
-    }
-    if k.dilation > 1 {
-        s.push_str(&format!(" d{}", k.dilation));
-    }
-    if k.transposed {
-        s.push('ᵀ');
-    }
-    s
-}
-
 /// The `--precision {f64,f32,f32-refined}` option shared by the analyze
 /// and audit commands (default f64).
 fn precision_opt(cli: &Cli) -> Result<Precision> {
@@ -226,55 +177,10 @@ fn cache_budget(cli: &Cli) -> Result<Option<usize>> {
     Ok(Some(cli.opt_parse("cache-bytes", 0usize)?))
 }
 
-/// The `cache: H hits / M misses / E evictions` report line.
-fn cache_line(stats: Option<conv_svd_lfa::engine::CacheStats>) -> String {
-    match stats {
-        Some(s) => format!(
-            "cache: {} hits / {} misses / {} evictions ({} entries, {}/{} bytes)",
-            s.hits, s.misses, s.evictions, s.entries, s.bytes, s.capacity
-        ),
-        None => "cache: off".into(),
-    }
-}
-
 /// The `--disk-cache-dir DIR` option shared by the audit commands and the
 /// daemon: the persistent spill tier below the in-memory result cache.
 fn disk_cache_dir(cli: &Cli) -> Option<std::path::PathBuf> {
     cli.opt("disk-cache-dir").map(std::path::PathBuf::from)
-}
-
-/// The `health:` report line + strict-health gate shared by the
-/// audit-model sweeps, which run off the [`ModelPlan`] directly (no
-/// coordinator service, so the aggregate comes from the merged per-layer
-/// certificates instead of the metrics snapshot). Degraded spectra are
-/// served flagged — and were refused by the result cache — unless
-/// `--strict-health` turns them into the typed error.
-fn model_health_report(spectra: &conv_svd_lfa::engine::ModelSpectra, strict: bool) -> Result<()> {
-    let h = spectra.health();
-    println!(
-        "health: {} certified / {} retried / {} escalations / {} degraded freqs",
-        h.converged_freqs, h.retried_freqs, h.escalations, h.degraded_freqs
-    );
-    if spectra.is_degraded() {
-        let names = spectra.degraded_layers().join(", ");
-        if strict {
-            return Err(Error::degraded_spectrum(names, h.degraded_freqs as usize));
-        }
-        println!(
-            "warning: degraded spectra served flagged, never cached: {names} \
-             (re-run with --strict-health to fail instead)"
-        );
-    }
-    Ok(())
-}
-
-/// The `disk: …` report line, printed when the disk tier is active.
-fn disk_line(stats: Option<conv_svd_lfa::engine::CacheStats>) -> Option<String> {
-    let s = stats?;
-    Some(format!(
-        "disk: {} hits / {} misses / {} spills / {} corruptions",
-        s.disk_hits, s.disk_misses, s.disk_spills, s.disk_corruptions
-    ))
 }
 
 fn cmd_audit(cli: &Cli) -> Result<()> {
@@ -310,6 +216,21 @@ fn cmd_audit(cli: &Cli) -> Result<()> {
     }
     let threads: usize = cli.opt_parse("threads", 0)?;
     let top_k: usize = cli.opt_parse("top-k", 0)?;
+    // The streaming-density mode: `--density B` histograms the whole
+    // singular-value population into B bins instead of materializing it;
+    // `--density-sample S` additionally solves only every S-th dual-grid
+    // row/column (~1/S² of the SVD work, with DKW error bars).
+    let density_bins: u32 = cli.opt_parse("density", 0u32)?;
+    let density_sample: u32 = cli.opt_parse("density-sample", 1u32)?;
+    if density_sample != 1 && density_bins == 0 {
+        bail!("--density-sample requires --density B");
+    }
+    if density_bins > 0 && top_k > 0 {
+        bail!(
+            "--density conflicts with --top-k: the density sweep runs its \
+             own exact top-1 extremes pass"
+        );
+    }
     let folding = if cli.flag("no-fold") { Fold::Off } else { Fold::Auto };
     let request =
         if top_k > 0 { SpectrumRequest::TopK(top_k) } else { SpectrumRequest::Full };
@@ -335,6 +256,23 @@ fn cmd_audit(cli: &Cli) -> Result<()> {
         strict_health: cli.flag("strict-health"),
         ..Default::default()
     })?;
+    if density_bins > 0 {
+        if backend == Backend::Pjrt {
+            svc.shutdown();
+            bail!(
+                "--density runs on the native engine (AOT artifacts bake \
+                 in the full SVD); drop --backend pjrt"
+            );
+        }
+        let result = audit_density(
+            cli,
+            &svc,
+            &model,
+            DensityRequest { bins: density_bins, sample: density_sample },
+        );
+        svc.shutdown();
+        return result;
+    }
     let reports = svc.audit_model_with(&model, request)?;
     if top_k > 0 {
         println!(
@@ -429,6 +367,65 @@ fn cmd_audit(cli: &Cli) -> Result<()> {
         println!("csv: {}", path.display());
     }
     svc.shutdown();
+    Ok(())
+}
+
+/// The `audit --density B` report: per-layer streaming singular-value
+/// histograms off the service's density sweep — exact extremes from the
+/// warm top-1 pass, sampled bulk with 95% DKW error bars, results keyed
+/// and cached like spectra.
+fn audit_density(
+    cli: &Cli,
+    svc: &SpectralService,
+    model: &ModelConfig,
+    req: DensityRequest,
+) -> Result<()> {
+    let audit = svc.audit_model_density(model, req)?;
+    println!(
+        "model {} — singular-value density audit: {} bins, sample {} \
+         ({} layer(s), sweep {})",
+        model.name,
+        req.bins,
+        req.sample.max(1),
+        audit.layers.len(),
+        secs(audit.elapsed)
+    );
+    let table = density_table(&audit.layers);
+    print!("{}", table.render());
+    let covered: u64 = audit.layers.iter().map(|l| l.density.covered_freqs).sum();
+    let total: u64 = audit.layers.iter().map(|l| l.density.total_freqs).sum();
+    // A cache-served layer keeps its original solved count inside the
+    // stored density; only layers that actually swept solved anything now.
+    let solved: u64 =
+        audit.layers.iter().filter(|l| !l.cached).map(|l| l.density.solved_freqs).sum();
+    let cached = audit.layers.iter().filter(|l| l.cached).count();
+    println!(
+        "coverage: {covered}/{total} frequencies binned — {solved} solved \
+         this run, {cached} layer(s) served from cache"
+    );
+    let degraded: Vec<&str> = audit
+        .layers
+        .iter()
+        .filter(|l| l.density.is_degraded())
+        .map(|l| l.name.as_str())
+        .collect();
+    if !degraded.is_empty() {
+        println!(
+            "warning: degraded densities served flagged, never cached: {} \
+             (re-run with --strict-health to fail instead)",
+            degraded.join(", ")
+        );
+    }
+    println!("{}", cache_line(svc.cache_stats()));
+    if disk_cache_dir(cli).is_some() {
+        if let Some(line) = disk_line(svc.cache_stats()) {
+            println!("{line}");
+        }
+    }
+    if cli.flag("csv") {
+        let path = table.save_csv(&format!("audit_density_{}", model.name))?;
+        println!("csv: {}", path.display());
+    }
     Ok(())
 }
 

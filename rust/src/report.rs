@@ -1,6 +1,12 @@
 //! Plain-text table + CSV reporting shared by the CLI, examples and
-//! benches (every paper table/figure regenerator prints through this).
+//! benches (every paper table/figure regenerator prints through this) —
+//! plus the report *lines* shared by the CLI audit commands and the
+//! daemon's `STATS` reply (cache traffic, fold accounting, health gates,
+//! density tables), so both front ends describe the same run the same way.
 
+use crate::conv::ConvKernel;
+use crate::engine::{CacheStats, LayerDensity, ModelSpectra};
+use crate::error::{Error, Result};
 use std::fmt::Write as _;
 
 /// A simple aligned-column table.
@@ -90,6 +96,166 @@ pub fn secs(d: std::time::Duration) -> String {
     }
 }
 
+/// The truthful `frequencies solved: S/T …` report line shared by the
+/// audit commands: `S` sums what each layer *actually* decomposed —
+/// folded native layers their fundamental domain, PJRT-routed/unfolded
+/// layers the full grid, cache-served layers nothing — so mixed runs
+/// report a correct ratio instead of assuming every layer folded. The
+/// label is derived from per-layer *outcomes*, not configuration flags:
+/// `folded_layers` counts layers that actually solved a folded domain,
+/// `cached_layers` counts layers served from the result cache, and the
+/// saving is attributed to whichever contributed ("fold", "cache", or
+/// "fold + cache"). `S == T` means nothing was reduced — every solved
+/// layer swept its full grid (fold disabled or PJRT-routed).
+pub fn freqs_solved_line(
+    solved: usize,
+    total: usize,
+    cached_layers: usize,
+    folded: usize,
+) -> String {
+    if solved == 0 && total > 0 {
+        format!("frequencies solved: 0/{total} (all served from cache)")
+    } else if solved == total {
+        // The outcome, not the flag: every solved layer swept its full
+        // grid — because folding was off, or because PJRT routing (which
+        // always sweeps the full grid) made it inapplicable.
+        format!("frequencies solved: {total}/{total} (full grid)")
+    } else {
+        let label = match (folded > 0, cached_layers > 0) {
+            (true, true) => "fold + cache",
+            (false, true) => "cache",
+            _ => "fold",
+        };
+        format!(
+            "frequencies solved: {solved}/{total} ({label} {:.2}x)",
+            total as f64 / solved.max(1) as f64
+        )
+    }
+}
+
+/// The `c` column of the audit-model tables: operator channel dims —
+/// total input width (grouped kernels store the per-group width), the
+/// adjoint's swapped shape for transposed layers — plus a structure tag:
+/// `g4` grouped, `d2` dilated, `T` transposed.
+pub fn channels_desc(k: &ConvKernel) -> String {
+    let (ci, co) =
+        if k.transposed { (k.c_out, k.c_in_total()) } else { (k.c_in_total(), k.c_out) };
+    let mut s = format!("{ci}→{co}");
+    if k.groups > 1 {
+        s.push_str(&format!(" g{}", k.groups));
+    }
+    if k.dilation > 1 {
+        s.push_str(&format!(" d{}", k.dilation));
+    }
+    if k.transposed {
+        s.push('ᵀ');
+    }
+    s
+}
+
+/// The `cache: H hits / M misses / E evictions` report line.
+pub fn cache_line(stats: Option<CacheStats>) -> String {
+    match stats {
+        Some(s) => format!(
+            "cache: {} hits / {} misses / {} evictions ({} entries, {}/{} bytes)",
+            s.hits, s.misses, s.evictions, s.entries, s.bytes, s.capacity
+        ),
+        None => "cache: off".into(),
+    }
+}
+
+/// The `disk: …` report line, printed when the disk tier is active.
+pub fn disk_line(stats: Option<CacheStats>) -> Option<String> {
+    let s = stats?;
+    Some(format!(
+        "disk: {} hits / {} misses / {} spills / {} corruptions",
+        s.disk_hits, s.disk_misses, s.disk_spills, s.disk_corruptions
+    ))
+}
+
+/// The cache counters as a `key=value` list — the daemon's `STATS` reply
+/// body and the machine-readable twin of [`cache_line`] + [`disk_line`].
+/// `densities` counts the streamed histogram entries the cache holds next
+/// to full spectra.
+pub fn stats_kv(stats: Option<CacheStats>) -> String {
+    match stats {
+        Some(s) => format!(
+            "hits={} misses={} evictions={} entries={} densities={} bytes={} \
+             disk_hits={} disk_misses={} disk_spills={} disk_corruptions={}",
+            s.hits,
+            s.misses,
+            s.evictions,
+            s.entries,
+            s.density_entries,
+            s.bytes,
+            s.disk_hits,
+            s.disk_misses,
+            s.disk_spills,
+            s.disk_corruptions
+        ),
+        None => "cache=off".to_string(),
+    }
+}
+
+/// The `health:` report line + strict-health gate shared by the
+/// audit-model sweeps, which run off the [`crate::engine::ModelPlan`]
+/// directly (no coordinator service, so the aggregate comes from the
+/// merged per-layer certificates instead of the metrics snapshot).
+/// Degraded spectra are served flagged — and were refused by the result
+/// cache — unless `strict` turns them into the typed error.
+pub fn model_health_report(spectra: &ModelSpectra, strict: bool) -> Result<()> {
+    let h = spectra.health();
+    println!(
+        "health: {} certified / {} retried / {} escalations / {} degraded freqs",
+        h.converged_freqs, h.retried_freqs, h.escalations, h.degraded_freqs
+    );
+    if spectra.is_degraded() {
+        let names = spectra.degraded_layers().join(", ");
+        if strict {
+            return Err(Error::degraded_spectrum(names, h.degraded_freqs as usize));
+        }
+        println!(
+            "warning: degraded spectra served flagged, never cached: {names} \
+             (re-run with --strict-health to fail instead)"
+        );
+    }
+    Ok(())
+}
+
+/// The per-layer table of a density audit: exact extremes from the top-1
+/// pass (`σ_max`), sampled statistics from the histogram (`σ_min*` and
+/// the quantiles carry the `*` because they come from the sampled bulk),
+/// and the coverage column that makes the accuracy contract visible —
+/// solved/total frequencies plus the 95% DKW half-width `±ε` on every
+/// CDF read.
+pub fn density_table(layers: &[LayerDensity]) -> Table {
+    let mut t = Table::new([
+        "layer", "grid", "bins", "σ_max", "σ_min*", "q50*", "q90*", "q99*", "coverage", "±ε",
+        "source",
+    ]);
+    for l in layers {
+        let d = &l.density;
+        t.row([
+            l.name.clone(),
+            format!("{}x{}", d.n, d.m),
+            d.bins.len().to_string(),
+            format!("{:.4}", d.sigma_max),
+            format!("{:.4}", d.sigma_min_sampled),
+            format!("{:.4}", d.quantile(0.50)),
+            format!("{:.4}", d.quantile(0.90)),
+            format!("{:.4}", d.quantile(0.99)),
+            format!("{}/{} ({:.0}%)", d.covered_freqs, d.total_freqs, 100.0 * d.sampled_fraction()),
+            if d.cdf_epsilon() == 0.0 {
+                "exact".to_string()
+            } else {
+                format!("{:.3}", d.cdf_epsilon())
+            },
+            if l.cached { "cache".into() } else { format!("sample={}", d.sample) },
+        ]);
+    }
+    t
+}
+
 /// Human-readable large counts (`4,294,967,296`).
 pub fn commas(n: u128) -> String {
     let s = n.to_string();
@@ -145,5 +311,42 @@ mod tests {
     fn arity_checked() {
         let mut t = Table::new(["a", "b"]);
         t.row(["only-one"]);
+    }
+
+    #[test]
+    fn stats_kv_covers_every_tier() {
+        assert_eq!(stats_kv(None), "cache=off");
+        let s = CacheStats { hits: 3, misses: 1, density_entries: 2, ..Default::default() };
+        let kv = stats_kv(Some(s));
+        assert!(kv.starts_with("hits=3 misses=1 "), "unexpected: {kv}");
+        assert!(kv.contains("densities=2"), "density tier must be reported: {kv}");
+        assert!(kv.contains("disk_corruptions=0"), "disk tier must be reported: {kv}");
+    }
+
+    #[test]
+    fn freqs_solved_attributes_the_saving() {
+        assert!(freqs_solved_line(0, 10, 2, 0).contains("all served from cache"));
+        assert!(freqs_solved_line(10, 10, 0, 0).contains("full grid"));
+        assert!(freqs_solved_line(5, 10, 0, 1).contains("fold 2.00x"));
+        assert!(freqs_solved_line(5, 10, 1, 1).contains("fold + cache"));
+        assert!(freqs_solved_line(5, 10, 1, 0).contains("(cache 2.00x"));
+    }
+
+    #[test]
+    fn density_table_shows_the_accuracy_contract() {
+        use crate::engine::{DensityRequest, LayerDensity, SpectralPlan};
+        let mut rng = crate::numeric::Pcg64::seeded(5);
+        let k = crate::conv::ConvKernel::random_he(2, 2, 3, 3, &mut rng);
+        let plan = SpectralPlan::new(&k, 8, 8, crate::lfa::LfaOptions::default());
+        let d = plan.density(DensityRequest { bins: 16, sample: 2 });
+        let layers = vec![LayerDensity {
+            name: "c1".into(),
+            density: std::sync::Arc::new(d),
+            cached: false,
+        }];
+        let s = density_table(&layers).render();
+        assert!(s.contains("c1"), "layer name missing: {s}");
+        assert!(s.contains("sample=2"), "sampling stride missing: {s}");
+        assert!(s.contains("coverage"), "coverage column missing: {s}");
     }
 }

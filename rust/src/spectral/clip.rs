@@ -42,7 +42,7 @@ pub fn clip_spectral_norm(
 
 /// Clip against an existing plan (the plan's kernel is the layer clipped).
 pub fn clip_with_plan(plan: &SpectralPlan, cap: f64) -> ClipResult {
-    let svd = plan.execute_full();
+    let svd = plan.full_svd();
     let kernel = plan.kernel();
     let sigma_before = svd.sigma.sigma_max();
     let clipped_count = svd.sigma.values.iter().filter(|&&s| s > cap).count();

@@ -5,7 +5,7 @@
 //! act on data without ever leaving the `O(n·m·c²)`-per-application regime —
 //! the global singular vectors `F_k U_k` are applied implicitly via FFTs.
 //! The symbol grids consumed here come from the planned `FullSvd` path
-//! (`SpectralPlan::execute_full` → `map_singular_values` and friends).
+//! (`SpectralPlan::full_svd` → `map_singular_values` and friends).
 
 use crate::fft::{Direction, FftPlan};
 use crate::lfa::SymbolGrid;

@@ -31,7 +31,7 @@ pub fn compress(
     r: usize,
     opts: LfaOptions,
 ) -> LowRankConv {
-    let svd = SpectralPlan::new(kernel, n, m, opts).execute_full();
+    let svd = SpectralPlan::new(kernel, n, m, opts).full_svd();
     compress_from_svd(&svd, r)
 }
 
@@ -47,7 +47,7 @@ pub fn compress_topk(
     r: usize,
     opts: LfaOptions,
 ) -> LowRankConv {
-    let svd = SpectralPlan::new(kernel, n, m, opts).execute_topk_factors(r);
+    let svd = SpectralPlan::new(kernel, n, m, opts).topk_svd(r);
     compress_from_topk(&svd)
 }
 
@@ -133,7 +133,7 @@ pub fn rank_sweep(
     m: usize,
     opts: LfaOptions,
 ) -> Vec<(usize, f64, f64)> {
-    let svd = SpectralPlan::new(kernel, n, m, opts).execute_full();
+    let svd = SpectralPlan::new(kernel, n, m, opts).full_svd();
     let rmax = svd.sigma.rank_per_freq();
     (1..=rmax)
         .map(|r| {

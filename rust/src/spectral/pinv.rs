@@ -27,7 +27,7 @@ pub fn pseudo_inverse(
     rcond: f64,
     opts: LfaOptions,
 ) -> PseudoInverse {
-    let svd = SpectralPlan::new(kernel, n, m, opts).execute_full();
+    let svd = SpectralPlan::new(kernel, n, m, opts).full_svd();
     pseudo_inverse_from_svd(&svd, rcond)
 }
 

@@ -1,12 +1,17 @@
 //! Acceptance check for the engine's allocation discipline: after a plan's
 //! first (warm-up) execution has populated the workspace pool,
-//! `execute_into` on a caller-provided buffer performs **zero heap
+//! `execute_request_into` on a caller-provided buffer performs **zero heap
 //! allocation** — the per-frequency hot loop only touches preallocated
-//! scratch. Verified with a counting global allocator; this file holds only
-//! these tests so unrelated parallel tests cannot perturb the counter.
+//! scratch, and the sink indirection of the unified sweep
+//! (`sweep_with`, `density`) adds none of its own. Verified with a
+//! counting global allocator; this file holds only these tests so
+//! unrelated parallel tests cannot perturb the counter.
 
 use conv_svd_lfa::conv::ConvKernel;
-use conv_svd_lfa::engine::{ModelPlan, SpectralCache, SpectralPlan, SpectrumRequest};
+use conv_svd_lfa::engine::{
+    DensityRequest, DensitySink, FullAssembly, ModelPlan, SpectralCache, SpectralPlan,
+    SpectrumRequest, SweepOptions,
+};
 use conv_svd_lfa::lfa::{BlockSolver, Fold, LfaOptions, Precision};
 use conv_svd_lfa::model::ModelConfig;
 use conv_svd_lfa::numeric::Pcg64;
@@ -48,28 +53,29 @@ fn assert_zero_alloc_after_warmup(
     let opts = LfaOptions { solver, threads: 1, folding, precision, ..Default::default() };
     let plan = SpectralPlan::with_stride(&kernel, 8, 8, stride, opts);
     let mut out = vec![0.0f64; plan.values_len()];
+    let full = SpectrumRequest::Full;
+    let opts = SweepOptions::default();
     // Warm-up: the pool may grow its spine / solver scratch once.
-    plan.execute_into(&mut out);
+    plan.execute_request_into(full, opts, &mut out);
     let before = ALLOCS.load(Ordering::SeqCst);
-    plan.execute_into(&mut out);
-    plan.execute_into(&mut out);
+    plan.execute_request_into(full, opts, &mut out);
+    plan.execute_request_into(full, opts, &mut out);
     let after = ALLOCS.load(Ordering::SeqCst);
     assert_eq!(
         after - before,
         0,
         "{solver:?} stride {stride} {folding:?} {precision:?}: {} allocation(s) in \
-         warmed-up execute_into",
+         warmed-up execute_request_into",
         after - before
     );
     assert!(out.iter().all(|v| v.is_finite() && *v >= 0.0));
 }
 
 /// Top-k discipline: after one warm-up sweep has sized the Krylov
-/// scratch, the warm-started `execute_topk_into` hot loop — symbol fill,
-/// Lanczos steps with full reorthogonalization, the tridiagonal solves,
-/// the completion probe, the warm-hint carry between frequencies —
-/// performs zero heap
-/// allocation, for both warm and per-frequency-cold sweeps.
+/// scratch, the warm-started `TopK(k)` hot loop — symbol fill, Lanczos
+/// steps with full reorthogonalization, the tridiagonal solves, the
+/// completion probe, the warm-hint carry between frequencies — performs
+/// zero heap allocation, for both warm and per-frequency-cold sweeps.
 fn assert_topk_zero_alloc_after_warmup(
     stride: usize,
     k: usize,
@@ -80,21 +86,81 @@ fn assert_topk_zero_alloc_after_warmup(
     let kernel = ConvKernel::random_he(4, 4, 3, 3, &mut rng);
     let opts = LfaOptions { threads: 1, folding, precision, ..Default::default() };
     let plan = SpectralPlan::with_stride(&kernel, 8, 8, stride, opts);
+    let request = SpectrumRequest::TopK(k);
     let mut out = vec![0.0f64; plan.topk_values_len(k)];
     // Warm-up: the pool may grow its spine / Krylov scratch once.
-    plan.execute_topk_into(k, &mut out);
+    plan.execute_request_into(request, SweepOptions::default(), &mut out);
     let before = ALLOCS.load(Ordering::SeqCst);
-    plan.execute_topk_into(k, &mut out);
-    plan.execute_topk_into_threads(k, 1, false, &mut out);
+    plan.execute_request_into(request, SweepOptions::default(), &mut out);
+    plan.execute_request_into(request, SweepOptions { threads: Some(1), cold_start: true }, &mut out);
     let after = ALLOCS.load(Ordering::SeqCst);
     assert_eq!(
         after - before,
         0,
         "topk k={k} stride {stride} {folding:?} {precision:?}: {} allocation(s) in \
-         warmed-up execute_topk_into",
+         warmed-up TopK execute_request_into",
         after - before
     );
     assert!(out.iter().all(|v| v.is_finite() && *v >= 0.0));
+}
+
+/// Sink discipline: the unified sweep's sink indirection is free. A
+/// warmed-up `sweep_with` into a [`FullAssembly`] strip — the exact
+/// code path `execute_request_into` drives per worker — performs zero
+/// heap allocation per frequency, and so does a warmed-up census
+/// [`DensitySink`] sweep re-using a preallocated histogram (the
+/// `density()` convenience allocates its result object; the hot loop
+/// behind it must not).
+fn assert_sink_zero_alloc_after_warmup() {
+    let mut rng = Pcg64::seeded(8300);
+    let kernel = ConvKernel::random_he(4, 4, 3, 3, &mut rng);
+    let plan =
+        SpectralPlan::new(&kernel, 8, 8, LfaOptions { threads: 1, ..Default::default() });
+    let mut out = vec![0.0f64; plan.values_len()];
+    // Warm-up sizes the pool once.
+    {
+        let mut sink = FullAssembly::strip(&plan, 0, &mut out);
+        plan.sweep_with(SpectrumRequest::Full, &mut sink);
+    }
+    let before = ALLOCS.load(Ordering::SeqCst);
+    {
+        let mut sink = FullAssembly::strip(&plan, 0, &mut out);
+        plan.sweep_with(SpectrumRequest::Full, &mut sink);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "{} allocation(s) in a warmed-up sweep_with(FullAssembly)",
+        after - before
+    );
+    // The density sink itself: histogram commits + mirror weighting stay
+    // allocation-free once the sink's buffers exist.
+    let mut sink = DensitySink::new(&plan, 32, 10.0);
+    plan.sweep_with(SpectrumRequest::Full, &mut sink);
+    let before = ALLOCS.load(Ordering::SeqCst);
+    plan.sweep_with(SpectrumRequest::Full, &mut sink);
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "{} allocation(s) in a warmed-up sweep_with(DensitySink)",
+        after - before
+    );
+    // End-to-end guard at the API surface: a repeat `density()` census
+    // allocates only its result object (bins vector + health ledger),
+    // never per frequency — bounded by a small constant, not the grid.
+    let req = DensityRequest { bins: 32, sample: 1 };
+    let _ = plan.density(req);
+    let before = ALLOCS.load(Ordering::SeqCst);
+    let d = plan.density(req);
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert!(
+        after - before <= 16,
+        "{} allocation(s) in a warmed-up density() census — per-frequency leak?",
+        after - before
+    );
+    assert!(d.count() > 0);
 }
 
 /// Whole-model discipline: a warmed-up serial `ModelPlan::execute_into` —
@@ -183,6 +249,7 @@ fn execute_is_allocation_free_after_warmup() {
     assert_topk_zero_alloc_after_warmup(1, 2, Fold::Auto, Precision::F32);
     assert_topk_zero_alloc_after_warmup(2, 1, Fold::Off, Precision::F32);
     assert_topk_zero_alloc_after_warmup(1, 2, Fold::Auto, Precision::F32Refined);
+    assert_sink_zero_alloc_after_warmup();
     assert_model_zero_alloc_after_warmup();
     assert_cache_hit_zero_alloc();
 }

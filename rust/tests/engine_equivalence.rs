@@ -7,7 +7,10 @@
 //! bitwise identical.
 
 use conv_svd_lfa::conv::ConvKernel;
-use conv_svd_lfa::engine::{NativeSerial, NativeThreaded, SpectralBackend, SpectralPlan};
+use conv_svd_lfa::engine::{
+    FullAssembly, NativeSerial, NativeThreaded, SpectralBackend, SpectralPlan, SpectrumRequest,
+    SweepOptions,
+};
 use conv_svd_lfa::lfa::symbol::symbol_at;
 use conv_svd_lfa::lfa::{self, BlockLayout, BlockSolver, Fold, LfaOptions, Precision};
 use conv_svd_lfa::linalg::{jacobi_eig, jacobi_svd};
@@ -140,9 +143,9 @@ fn one_plan_executes_many_times_identically() {
     let first = plan.execute();
     let second = plan.execute();
     assert_eq!(first.values, second.values, "plan reuse must be bitwise reproducible");
-    // execute_into on a caller buffer agrees too.
+    // The request-driven driver on a caller buffer agrees too.
     let mut buf = vec![0.0f64; plan.values_len()];
-    plan.execute_into(&mut buf);
+    plan.execute_request_into(SpectrumRequest::Full, SweepOptions::default(), &mut buf);
     assert_eq!(buf, first.values);
 }
 
@@ -163,7 +166,8 @@ fn backends_agree_with_plan_execute() {
 #[test]
 fn tile_execution_stitches_to_full_grid() {
     // Raw row-range tiling is the *unfolded* contract (every row solved
-    // independently) — pin it against an unfolded plan.
+    // independently); `lfa::tile_singular_values` is its public face —
+    // pin its stitched output against an unfolded whole-grid plan.
     let mut rng = Pcg64::seeded(7006);
     let k = ConvKernel::random_he(3, 3, 3, 3, &mut rng);
     let plan = SpectralPlan::new(
@@ -176,8 +180,8 @@ fn tile_execution_stitches_to_full_grid() {
     let r = plan.rank();
     let mut stitched = vec![0.0f64; plan.values_len()];
     for (lo, hi) in [(0usize, 2usize), (2, 3), (3, 9)] {
-        let chunk = &mut stitched[lo * 5 * r..hi * 5 * r];
-        plan.execute_rows_pooled(lo, hi, chunk);
+        let chunk = lfa::tile_singular_values(&k, 9, 5, lo, hi, BlockSolver::Jacobi);
+        stitched[lo * 5 * r..hi * 5 * r].copy_from_slice(&chunk);
     }
     assert_eq!(stitched, full.values);
 }
@@ -248,7 +252,7 @@ fn folded_matches_unfolded_across_the_full_matrix() {
 /// layout and folding. Plans with equal signatures are shared objects.
 #[test]
 fn cached_paths_match_direct_execution_across_the_matrix() {
-    use conv_svd_lfa::engine::{SpectralCache, SpectrumRequest};
+    use conv_svd_lfa::engine::SpectralCache;
     use std::sync::Arc;
     let cache = SpectralCache::new();
     let mut rng = Pcg64::seeded(7010);
@@ -406,6 +410,130 @@ fn self_paired_frequencies_are_solved_once() {
             for (x, y) in a.at(f).iter().zip(b.at(f)) {
                 assert!((x - y).abs() < 1e-12, "{n}x{m} f={f}");
             }
+        }
+    }
+}
+
+/// The differential matrix of the sink-driven driver refactor: every
+/// public entry point is a thin wrapper over one request-driven sweep, so
+/// the spectra they produce are **bit-identical** (`f64::to_bits`) —
+/// `execute()` vs `execute_request_into(Full)` vs a caller-supplied
+/// [`FullAssembly`] sink through `sweep_with`, and `execute_topk(k)` vs
+/// `execute_request_into(TopK(k))` — across fold × precision × structure
+/// (dense / grouped / depthwise / dilated / transposed) × threads.
+#[test]
+fn sink_driven_entry_points_are_bit_identical_across_the_matrix() {
+    let mut rng = Pcg64::seeded(7013);
+    let kernels: Vec<(&str, ConvKernel)> = vec![
+        ("dense", ConvKernel::random_he(4, 3, 3, 3, &mut rng)),
+        ("grouped g2", ConvKernel::random_he(4, 2, 3, 3, &mut rng).with_groups(2)),
+        ("depthwise", ConvKernel::random_he(4, 1, 3, 3, &mut rng).with_groups(4)),
+        ("dilated d2", ConvKernel::random_he(3, 3, 3, 3, &mut rng).with_dilation(2)),
+        ("transposed", ConvKernel::random_he(4, 3, 3, 3, &mut rng).with_transposed(true)),
+    ];
+    for (name, k) in &kernels {
+        for folding in [Fold::Auto, Fold::Off] {
+            for precision in [Precision::F64, Precision::F32, Precision::F32Refined] {
+                for threads in [1usize, 3] {
+                    let opts = LfaOptions { threads, folding, precision, ..Default::default() };
+                    let plan = SpectralPlan::new(k, 8, 8, opts);
+                    let tag = format!("{name} {folding:?} {precision:?} x{threads}");
+                    let spectrum = plan.execute();
+                    let mut buf = vec![0.0f64; plan.values_len()];
+                    plan.execute_request_into(
+                        SpectrumRequest::Full,
+                        SweepOptions::default(),
+                        &mut buf,
+                    );
+                    for (a, b) in spectrum.values.iter().zip(&buf) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: execute vs request_into");
+                    }
+                    // Caller-supplied sink: the serial whole-domain sweep
+                    // must land on the same bits (compare on the serial
+                    // plan — sweep_with is single-threaded by contract).
+                    if threads == 1 {
+                        let mut sunk = vec![0.0f64; plan.values_len()];
+                        let mut sink = FullAssembly::strip(&plan, 0, &mut sunk);
+                        plan.sweep_with(SpectrumRequest::Full, &mut sink);
+                        drop(sink);
+                        for (a, b) in spectrum.values.iter().zip(&sunk) {
+                            assert_eq!(a.to_bits(), b.to_bits(), "{tag}: execute vs sweep_with");
+                        }
+                    }
+                    // TopK rides the same driver with the same bits.
+                    let top = plan.execute_topk(2);
+                    let mut tbuf = vec![0.0f64; plan.topk_values_len(2)];
+                    plan.execute_request_into(
+                        SpectrumRequest::TopK(2),
+                        SweepOptions::default(),
+                        &mut tbuf,
+                    );
+                    for (a, b) in top.spectrum.values.iter().zip(&tbuf) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: topk vs request_into");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The factor arm of the differential matrix: `full_svd()` and
+/// `topk_svd(k)` ride the same unified sweep, so across fold × structure
+/// their sigma tracks `execute()` to ≤ 1e-12·σ_max, the reconstructed
+/// products `UΣVᴴ` of folded and unfolded factor sweeps agree to the same
+/// bound (factors are phase-ambiguous; the product is not), and the dense
+/// reconstruction matches the direct trig symbol.
+#[test]
+fn factor_paths_track_the_unified_driver_across_fold_and_structure() {
+    let mut rng = Pcg64::seeded(7014);
+    let kernels: Vec<(&str, ConvKernel)> = vec![
+        ("dense", ConvKernel::random_he(3, 2, 3, 3, &mut rng)),
+        ("grouped g2", ConvKernel::random_he(4, 2, 3, 3, &mut rng).with_groups(2)),
+        ("transposed", ConvKernel::random_he(3, 2, 3, 3, &mut rng).with_transposed(true)),
+    ];
+    let (n, m) = (6usize, 6usize);
+    for (name, k) in &kernels {
+        let base = LfaOptions { threads: 1, ..Default::default() };
+        let folded = SpectralPlan::new(k, n, m, base);
+        let unfolded =
+            SpectralPlan::new(k, n, m, LfaOptions { folding: Fold::Off, ..base });
+        let spectrum = folded.execute();
+        let scale = spectrum.sigma_max().max(1.0);
+        let fa = folded.full_svd();
+        let fb = unfolded.full_svd();
+        for (j, (a, b)) in spectrum.values.iter().zip(&fa.sigma.values).enumerate() {
+            assert!((a - b).abs() <= 1e-12 * scale, "{name}: sigma[{j}] {a} vs {b}");
+        }
+        for f in 0..folded.freqs() {
+            let ra = fa.symbol(f);
+            let rb = fb.symbol(f);
+            assert!(
+                ra.max_abs_diff(&rb) <= 1e-12 * scale,
+                "{name} f={f}: folded vs unfolded reconstruction"
+            );
+        }
+        if *name == "dense" {
+            for ki in 0..n {
+                for kj in 0..m {
+                    let recon = fa.symbol(ki * m + kj);
+                    let want = symbol_at(k, n, m, ki, kj);
+                    assert!(
+                        recon.max_abs_diff(&want) <= 1e-10 * scale,
+                        "{name} ({ki},{kj}): reconstruction vs direct symbol"
+                    );
+                }
+            }
+        }
+        // TopK factors carry the Krylov tolerance on the truncation.
+        let ta = folded.topk_svd(2);
+        let tb = unfolded.topk_svd(2);
+        for f in 0..folded.freqs() {
+            let ra = ta.truncated_symbol(f);
+            let rb = tb.truncated_symbol(f);
+            assert!(
+                ra.max_abs_diff(&rb) <= 2e-8 * scale,
+                "{name} f={f}: topk truncated reconstruction"
+            );
         }
     }
 }

@@ -247,6 +247,82 @@ fn daemon_protocol_end_to_end() {
     handle.wait();
 }
 
+/// `SUBMIT … density=B` jobs ride the same queue: the `DONE` reply
+/// carries the density tail (bins/sample/coverage/epsilon), repeat
+/// submissions are served from the cache's density tier, a different
+/// histogram shape is a different key, and the option parsing is typed.
+#[test]
+fn daemon_density_jobs_end_to_end() {
+    let _guard = chaos_guard();
+    let tmp = TempDir::new("density");
+    let model = write_model(&tmp);
+    let handle = serve(daemon(ServiceConfig::default(), |_| {})).unwrap();
+    let mut c = Client::connect(handle.addr());
+
+    // Typed option validation, before anything queues.
+    assert!(
+        c.send(&format!("SUBMIT t1 {model} density=0"))
+            .starts_with("ERR bad-request bad density"),
+        "zero bins must be rejected"
+    );
+    assert!(
+        c.send(&format!("SUBMIT t1 {model} density-sample=2"))
+            .starts_with("ERR bad-request density-sample requires"),
+        "a sampling stride without density=B must be rejected"
+    );
+    assert!(
+        c.send(&format!("SUBMIT t1 {model} density=32 top-k=1"))
+            .starts_with("ERR bad-request density conflicts"),
+        "density and top-k must be mutually exclusive"
+    );
+
+    // Cold census: full coverage, no sampling error, nothing cached.
+    let id = field(&c.send(&format!("SUBMIT t1 {model} density=32")), "id").to_string();
+    let done = c.send(&format!("WAIT {id}"));
+    assert!(done.starts_with("DONE id="), "unexpected: {done}");
+    assert_eq!(field(&done, "layers"), "2");
+    assert_eq!(field(&done, "density_bins"), "32");
+    assert_eq!(field(&done, "sample"), "1");
+    assert_eq!(field(&done, "coverage"), "1.000", "a census covers the whole grid");
+    assert_eq!(field(&done, "epsilon"), "0.0000", "a census carries no sampling error");
+    assert_eq!(field(&done, "cached"), "0");
+
+    // Warm repeat: both layers served from the density cache tier, the
+    // exact σ_max byte-identical to the cold run's.
+    let id2 = field(&c.send(&format!("SUBMIT t1 {model} density=32")), "id").to_string();
+    let done2 = c.send(&format!("WAIT {id2}"));
+    assert_eq!(field(&done2, "cached"), "2", "repeat must hit the density tier: {done2}");
+    assert_eq!(field(&done2, "solved"), "0");
+    assert_eq!(field(&done2, "sigma_max"), field(&done, "sigma_max"));
+
+    // A sampled sweep is a *different* content address — it must not be
+    // served from the census entry, and its error bar is visible.
+    let id3 =
+        field(&c.send(&format!("SUBMIT t2 {model} density=32 density-sample=2")), "id").to_string();
+    let done3 = c.send(&format!("WAIT {id3}"));
+    assert!(done3.starts_with("DONE id="), "unexpected: {done3}");
+    assert_eq!(field(&done3, "cached"), "0", "sampled request must miss the census entry");
+    assert_eq!(field(&done3, "sample"), "2");
+    assert!(
+        field(&done3, "coverage").parse::<f64>().unwrap() < 1.0,
+        "a sub-lattice sweep must report partial coverage: {done3}"
+    );
+    assert!(
+        field(&done3, "epsilon").parse::<f64>().unwrap() > 0.0,
+        "a sampled histogram must carry a DKW error bar: {done3}"
+    );
+
+    // The shared STATS formatter reports the density tier.
+    let stats = c.send("STATS");
+    assert!(stats.starts_with("STATS hits="), "unexpected: {stats}");
+    assert!(stats.contains("densities="), "STATS must report the density tier: {stats}");
+    let densities: usize = field(&stats, "densities").parse().unwrap();
+    assert!(densities >= 4, "census + sampled entries for both layers: {stats}");
+
+    assert_eq!(c.send("SHUTDOWN"), "OK shutting-down");
+    handle.wait();
+}
+
 /// A client vanishing mid-request leaves the daemon — and other clients'
 /// jobs — untouched.
 #[test]

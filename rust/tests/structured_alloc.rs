@@ -1,14 +1,14 @@
 //! Allocation discipline of the structured (block-diagonal / dilated /
 //! adjoint) engine paths: after a warm-up execution has populated the
 //! workspace pool — including the per-group merge buffer the grouped
-//! top-k sweep uses — `execute_into` / `execute_topk_into` on structured
-//! plans perform **zero heap allocation**, exactly like the dense paths
+//! top-k sweep uses — `execute_request_into` on structured plans performs
+//! **zero heap allocation**, exactly like the dense paths
 //! pinned in `engine_alloc.rs`. Kept in its own file (with its own
 //! counting global allocator) so unrelated parallel tests cannot perturb
 //! the counter windows.
 
 use conv_svd_lfa::conv::ConvKernel;
-use conv_svd_lfa::engine::SpectralPlan;
+use conv_svd_lfa::engine::{SpectralPlan, SpectrumRequest, SweepOptions};
 use conv_svd_lfa::lfa::{Fold, LfaOptions};
 use conv_svd_lfa::numeric::Pcg64;
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -50,29 +50,31 @@ fn assert_structured_zero_alloc(tag: &str, k: &ConvKernel, folding: Fold) {
     let opts = LfaOptions { threads: 1, folding, ..Default::default() };
     let plan = SpectralPlan::new(k, 8, 8, opts);
     let mut out = vec![0.0f64; plan.values_len()];
+    let full = SpectrumRequest::Full;
     // Warm-up: the pool (and the grouped merge buffer) may grow once.
-    plan.execute_into(&mut out);
+    plan.execute_request_into(full, SweepOptions::default(), &mut out);
     let before = ALLOCS.load(Ordering::SeqCst);
-    plan.execute_into(&mut out);
-    plan.execute_into(&mut out);
+    plan.execute_request_into(full, SweepOptions::default(), &mut out);
+    plan.execute_request_into(full, SweepOptions::default(), &mut out);
     let after = ALLOCS.load(Ordering::SeqCst);
     assert_eq!(
         after - before,
         0,
-        "{tag} {folding:?}: {} allocation(s) in warmed-up structured execute_into",
+        "{tag} {folding:?}: {} allocation(s) in warmed-up structured execute_request_into",
         after - before
     );
     assert!(out.iter().all(|v| v.is_finite() && *v >= 0.0));
 
     let mut tout = vec![0.0f64; plan.topk_values_len(2)];
-    plan.execute_topk_into(2, &mut tout);
+    let topk = SpectrumRequest::TopK(2);
+    plan.execute_request_into(topk, SweepOptions::default(), &mut tout);
     let before = ALLOCS.load(Ordering::SeqCst);
-    plan.execute_topk_into(2, &mut tout);
+    plan.execute_request_into(topk, SweepOptions::default(), &mut tout);
     let after = ALLOCS.load(Ordering::SeqCst);
     assert_eq!(
         after - before,
         0,
-        "{tag} {folding:?}: {} allocation(s) in warmed-up structured execute_topk_into",
+        "{tag} {folding:?}: {} allocation(s) in warmed-up structured TopK sweep",
         after - before
     );
     assert!(tout.iter().all(|v| v.is_finite() && *v >= 0.0));

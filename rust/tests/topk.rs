@@ -8,7 +8,7 @@
 
 use conv_svd_lfa::conv::ConvKernel;
 use conv_svd_lfa::coordinator::SpectralService;
-use conv_svd_lfa::engine::{ModelPlan, SpectralPlan, SpectrumRequest};
+use conv_svd_lfa::engine::{ModelPlan, SpectralPlan, SpectrumRequest, SweepOptions};
 use conv_svd_lfa::lfa::{BlockLayout, LfaOptions};
 use conv_svd_lfa::model::ModelConfig;
 use conv_svd_lfa::numeric::Pcg64;
@@ -85,16 +85,21 @@ fn warm_and_cold_sweeps_agree_and_warm_is_cheaper() {
     let opts = LfaOptions { threads: 1, ..Default::default() };
     let plan = SpectralPlan::new(&kernel, 6, 6, opts);
     let warm = plan.execute_topk(2);
-    let cold = plan.execute_topk_cold(2);
+    let mut cold_values = vec![0.0f64; plan.topk_values_len(2)];
+    let (cold_iterations, _) = plan.execute_request_into(
+        SpectrumRequest::TopK(2),
+        SweepOptions::cold(),
+        &mut cold_values,
+    );
     let scale = warm.spectrum.sigma_max();
-    for (a, b) in warm.spectrum.values.iter().zip(&cold.spectrum.values) {
+    for (a, b) in warm.spectrum.values.iter().zip(&cold_values) {
         assert!((a - b).abs() <= 2.0 * REL_TOL * scale, "{a} vs {b}");
     }
     assert!(
-        warm.iterations < cold.iterations,
+        warm.iterations < cold_iterations,
         "warm {} !< cold {}",
         warm.iterations,
-        cold.iterations
+        cold_iterations
     );
 }
 
